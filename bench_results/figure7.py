@@ -1,0 +1,16 @@
+#!/usr/bin/env python3
+import matplotlib.pyplot as plt
+labels = ['BurTorch tape, eager', 'Boxed-dyn eager tape', 'Micrograd-style Rc graph (scaled from 20K)', 'XLA graph mode via PJRT (scaled from 2K)']
+values = [1.9588711925e-1, 3.0745091615e-1, 2.595159971833333e0, 7.695056843888888e1]
+fig, ax = plt.subplots(figsize=(10, 5))
+bars = ax.bar(range(len(values)), values)
+ax.set_yscale('log')
+ax.set_xticks(range(len(labels)))
+ax.set_xticklabels(labels, rotation=30, ha='right', fontsize=8)
+ax.set_ylabel('mWh (log)')
+ax.set_title('Figure 7 — total energy, 200K iterations (simulated power model)')
+for b, v in zip(bars, values):
+    ax.text(b.get_x() + b.get_width()/2, v, f'{v:.3g}', ha='center', va='bottom', fontsize=7)
+plt.tight_layout()
+plt.savefig('figure.png', dpi=150)
+plt.show()

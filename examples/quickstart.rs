@@ -1,0 +1,90 @@
+//! Quickstart: the paper's Figure 1 and Figure 2/4 graphs, end to end.
+//!
+//! Demonstrates the PyTorch/Micrograd-parity API (paper Appendix F.8),
+//! exact gradient values, DOT export of the computation graph (Figures
+//! 1/2), matplotlib script generation (F.6), and the rewind mechanism.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use burtorch::tape::Builder;
+use burtorch::viz;
+
+fn main() {
+    // ---- Figure 1: the tiny 10-node graph --------------------------------
+    // g = f/2, f = e², e = c − d, d = a·b + b³, c = a + b; a = −41, b = 2.
+    println!("== paper Figure 1 (tiny graph) ==");
+    let gb = Builder::<f64>::new();
+    let a = gb.value(-41.0).named("a");
+    let b = gb.value(2.0).named("b");
+    let c = (a + b).named("c");
+    let d = (a * b + b.pow3()).named("d");
+    let e = (c - d).named("e");
+    let f = e.sqr().named("f");
+    let g = (f / 2.0).named("g");
+    g.backward();
+    println!("g      = {} (expected 612.5)", g.value());
+    println!("dg/da  = {} (expected -35)", a.grad());
+    println!("dg/db  = {} (expected 1050)", b.grad());
+    assert_eq!(g.value(), 612.5);
+    assert_eq!(a.grad(), -35.0);
+    assert_eq!(b.grad(), 1050.0);
+
+    // DOT export (paper: buildDotGraph; render with `dot -Tpng`).
+    let dot = gb.with_tape(|t| viz::build_dot_graph(t, Some(g.id)));
+    std::fs::create_dir_all("bench_results").ok();
+    std::fs::write("bench_results/figure1.dot", &dot).ok();
+    println!("figure1.dot written ({} bytes)", dot.len());
+
+    // ---- Figure 2/4: the 32-node micrograd expression ---------------------
+    // The exact listing of paper Figure 4 — operator-for-operator.
+    println!("\n== paper Figure 2 / Listing 4 (small graph) ==");
+    let gb = Builder::<f64>::new();
+    let a = gb.value(-4.0).named("a");
+    let b = gb.value(2.0).named("b");
+    let mut c = a + b;
+    let mut d = a * b + b.pow3();
+    c += c + 1.0;
+    c += gb.c(1.0) + c - a;
+    d += d * 2.0 + (b + a).relu();
+    d += gb.c(3.0) * d + (b - a).relu();
+    let e = c - d;
+    let f = e.sqr();
+    let mut g2 = f / 2.0;
+    g2 += gb.c(10.0) / f;
+    g2.backward();
+    println!("g      = {:.14} (micrograd: 24.70408163265306)", g2.value());
+    println!("dg/da  = {:.14} (micrograd: 138.83381924198252)", a.grad());
+    println!("dg/db  = {:.14} (micrograd: 645.5772594752186)", b.grad());
+    assert!((g2.value() - 24.70408163265306).abs() < 1e-10);
+    assert!((a.grad() - 138.83381924198252).abs() < 1e-9);
+    assert!((b.grad() - 645.5772594752186).abs() < 1e-9);
+    let dot2 = gb.with_tape(|t| viz::build_dot_graph(t, Some(g2.id)));
+    std::fs::write("bench_results/figure2.dot", &dot2).ok();
+    println!("figure2.dot written");
+
+    // ---- matplotlib generation (paper F.6) --------------------------------
+    let script = viz::generate_plot("tanh and its derivative region", -3.0, 3.0, 61, |x| x.tanh());
+    std::fs::write("bench_results/plot_tanh.py", &script).ok();
+    println!("plot_tanh.py written (run it with python+matplotlib)");
+
+    // ---- rewind: serialized oracles keep memory flat -----------------------
+    println!("\n== rewind mechanism ==");
+    let gb = Builder::<f64>::new();
+    let w = gb.value(3.0);
+    let base = gb.mark();
+    for sample in 0..3 {
+        let x = gb.value(1.0 + sample as f64);
+        let loss = (w * x).sqr();
+        loss.backward();
+        println!(
+            "sample {sample}: loss={} dw={} tape_nodes={}",
+            loss.value(),
+            w.grad(),
+            gb.len()
+        );
+        gb.rewind(base);
+    }
+    println!("after rewind: tape_nodes={} (just the parameter)", gb.len());
+    assert_eq!(gb.len(), 1);
+    println!("\nquickstart OK");
+}

@@ -1,0 +1,99 @@
+"""AOT lowering: jit → stablehlo → XlaComputation → HLO **text**.
+
+HLO text (NOT `.serialize()`): jax ≥ 0.5 emits protos with 64-bit
+instruction ids which xla_extension 0.5.1 (the version the Rust `xla`
+crate binds) rejects; the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Artifacts produced (all with return_tuple=True):
+
+    tiny_graph.hlo.txt              (a, b)            -> (g, da, db)
+    small_graph.hlo.txt             (a, b)            -> (g, da, db)
+    mlp_e{E}_b{B}.hlo.txt           (flat, xb, yb, lr) -> (new_flat, loss)
+    gpt_b{B}.hlo.txt                (flat, xb, yb, lr) -> (new_flat, loss)
+
+Run: `cd python && python -m compile.aot --out ../artifacts`
+A stamp file records inputs so `make artifacts` is a no-op when fresh.
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+MLP_HIDDEN = [4, 16, 32, 64, 128, 512, 1024]
+MLP_BATCH = [1, 64]
+GPT_BATCH = [1, 2, 4, 8, 16, 32, 64]
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax lowering to HLO text via an XlaComputation."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def write(out_dir: str, name: str, text: str) -> None:
+    path = os.path.join(out_dir, name)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {name} ({len(text) / 1024:.0f} KiB)")
+
+
+def lower_scalar_graphs(out_dir: str) -> None:
+    s = jax.ShapeDtypeStruct((), jnp.float32)
+    write(out_dir, "tiny_graph.hlo.txt", to_hlo_text(jax.jit(model.tiny_graph).lower(s, s)))
+    write(out_dir, "small_graph.hlo.txt", to_hlo_text(jax.jit(model.small_graph).lower(s, s)))
+
+
+def lower_mlp(out_dir: str) -> None:
+    for e in MLP_HIDDEN:
+        d = model.num_params(model.mlp_shapes(e))
+        for b in MLP_BATCH:
+            flat = jax.ShapeDtypeStruct((d,), jnp.float32)
+            xb = jax.ShapeDtypeStruct((b, model.MLP_BLOCK), jnp.int32)
+            yb = jax.ShapeDtypeStruct((b,), jnp.int32)
+            lr = jax.ShapeDtypeStruct((), jnp.float32)
+            fn = jax.jit(lambda fl, x, y, g, e=e: model.mlp_train_step(fl, x, y, g, e))
+            write(out_dir, f"mlp_e{e}_b{b}.hlo.txt", to_hlo_text(fn.lower(flat, xb, yb, lr)))
+
+
+def lower_gpt(out_dir: str) -> None:
+    d = model.num_params(model.gpt_shapes())
+    for b in GPT_BATCH:
+        flat = jax.ShapeDtypeStruct((d,), jnp.float32)
+        xb = jax.ShapeDtypeStruct((b, model.GPT_BLOCK), jnp.int32)
+        yb = jax.ShapeDtypeStruct((b, model.GPT_BLOCK), jnp.int32)
+        lr = jax.ShapeDtypeStruct((), jnp.float32)
+        fn = jax.jit(model.gpt_train_step)
+        write(out_dir, f"gpt_b{b}.hlo.txt", to_hlo_text(fn.lower(flat, xb, yb, lr)))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", choices=["scalar", "mlp", "gpt"], default=None)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    if args.only in (None, "scalar"):
+        lower_scalar_graphs(args.out)
+    if args.only in (None, "mlp"):
+        lower_mlp(args.out)
+    if args.only in (None, "gpt"):
+        lower_gpt(args.out)
+
+    with open(os.path.join(args.out, ".stamp"), "w") as f:
+        f.write("ok\n")
+    print("artifacts complete", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

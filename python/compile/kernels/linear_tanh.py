@@ -1,0 +1,158 @@
+"""L1 Pallas kernels: fused linear+tanh layer (forward AND backward).
+
+The compute hot-spot of the paper's §2.4 char-MLP workload is the hidden
+layer `h = tanh(x @ W + b)`. On the framework-baseline side (L2 JAX model)
+we implement it as Pallas kernels glued with `jax.custom_vjp`, so both the
+forward and the backward pass run through kernel code that lowers into the
+same AOT HLO the Rust runtime executes.
+
+TPU adaptation notes (DESIGN.md §Hardware-Adaptation): the paper is
+CPU-only, but these kernels are written TPU-idiomatically — the whole
+(b × in) / (in × out) tiles are mapped into VMEM via trivial BlockSpecs
+(the largest workload tile, b=64 × in=1024 × out=1024 fp32, is
+64·1024 + 1024·1024 + 64·1024 floats ≈ 4.5 MB < 16 MB VMEM), matmuls hit
+the MXU via `jnp.dot` with `preferred_element_type=float32`, and the
+tanh/bias epilogue is fused so the pre-activation never round-trips to
+HBM. `interpret=True` everywhere: the CPU PJRT plugin cannot execute
+Mosaic custom-calls (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True  # CPU PJRT: interpret-mode lowering only.
+
+
+def _fwd_kernel(x_ref, w_ref, b_ref, h_ref):
+    """h = tanh(x @ W + b); one fused VMEM-resident tile."""
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    h_ref[...] = jnp.tanh(acc + b_ref[...][None, :])
+
+
+def _bwd_kernel(x_ref, w_ref, h_ref, g_ref, dx_ref, dw_ref, db_ref):
+    """Backward through tanh∘affine.
+
+    gz = g * (1 - h^2)   (tanh', reusing the stored output h)
+    dx = gz @ W^T ; dW = x^T @ gz ; db = sum_rows gz
+    """
+    h = h_ref[...]
+    gz = g_ref[...] * (1.0 - h * h)
+    dx_ref[...] = jnp.dot(gz, w_ref[...].T, preferred_element_type=jnp.float32)
+    dw_ref[...] = jnp.dot(x_ref[...].T, gz, preferred_element_type=jnp.float32)
+    db_ref[...] = jnp.sum(gz, axis=0)
+
+
+def linear_tanh_fwd_p(x, w, b):
+    """Pallas forward: tanh(x @ W + b)."""
+    batch, _ = x.shape
+    out = w.shape[1]
+    return pl.pallas_call(
+        _fwd_kernel,
+        out_shape=jax.ShapeDtypeStruct((batch, out), jnp.float32),
+        interpret=INTERPRET,
+    )(x, w, b)
+
+
+def linear_tanh_bwd_p(x, w, h, g):
+    """Pallas backward: (dx, dW, db) given the saved (x, W, h) and cotangent g."""
+    batch, inp = x.shape
+    out = w.shape[1]
+    return pl.pallas_call(
+        _bwd_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((batch, inp), jnp.float32),
+            jax.ShapeDtypeStruct((inp, out), jnp.float32),
+            jax.ShapeDtypeStruct((out,), jnp.float32),
+        ),
+        interpret=INTERPRET,
+    )(x, w, h, g)
+
+
+@jax.custom_vjp
+def linear_tanh(x, w, b):
+    """Fused linear+tanh with Pallas forward and backward kernels."""
+    return linear_tanh_fwd_p(x, w, b)
+
+
+def _vjp_fwd(x, w, b):
+    h = linear_tanh_fwd_p(x, w, b)
+    return h, (x, w, h)
+
+
+def _vjp_bwd(res, g):
+    x, w, h = res
+    dx, dw, db = linear_tanh_bwd_p(x, w, h, g)
+    return dx, dw, db
+
+
+linear_tanh.defvjp(_vjp_fwd, _vjp_bwd)
+
+
+def _softmax_xent_kernel(z_ref, onehot_ref, loss_ref, p_ref):
+    """Fused stable softmax cross-entropy over a (b, V) logits tile.
+
+    Emits the per-row loss and the softmax probabilities (saved for the
+    backward pass: dz = (p - onehot) / b outside).
+    """
+    z = z_ref[...]
+    m = jnp.max(z, axis=-1, keepdims=True)
+    e = jnp.exp(z - m)
+    s = jnp.sum(e, axis=-1, keepdims=True)
+    p = e / s
+    p_ref[...] = p
+    lse = jnp.log(s) + m
+    loss_ref[...] = (lse[:, 0] - jnp.sum(z * onehot_ref[...], axis=-1))
+
+
+def softmax_xent_p(z, onehot):
+    """Pallas fused softmax-CE: returns (per-row loss, probabilities)."""
+    b, v = z.shape
+    return pl.pallas_call(
+        _softmax_xent_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+            jax.ShapeDtypeStruct((b, v), jnp.float32),
+        ),
+        interpret=INTERPRET,
+    )(z, onehot)
+
+
+@jax.custom_vjp
+def softmax_xent(z, onehot):
+    """Mean cross-entropy from logits with a Pallas kernel on both passes."""
+    loss, _ = softmax_xent_p(z, onehot)
+    return jnp.mean(loss)
+
+
+def _xent_fwd(z, onehot):
+    loss, p = softmax_xent_p(z, onehot)
+    return jnp.mean(loss), (p, onehot)
+
+
+def _xent_bwd(res, g):
+    p, onehot = res
+    b = p.shape[0]
+    dz = g * (p - onehot) / b
+    return dz, None
+
+
+softmax_xent.defvjp(_xent_fwd, _xent_bwd)
+
+
+@functools.lru_cache(maxsize=None)
+def vmem_report(batch: int, inp: int, out: int) -> str:
+    """Analytic VMEM footprint + MXU utilization estimate for the fused
+    linear kernel at a given tile (DESIGN.md §Perf; interpret=True gives
+    no hardware timings, so the estimate is structural)."""
+    floats = batch * inp + inp * out + 2 * batch * out + out
+    vmem_mb = floats * 4 / 2**20
+    # MXU: 128x128 systolic; utilization ≈ product of dim fills (capped 1).
+    fill = min(batch / 128.0, 1.0) * min(inp / 128.0, 1.0) * min(out / 128.0, 1.0)
+    return (
+        f"tile b={batch} in={inp} out={out}: VMEM ≈ {vmem_mb:.2f} MiB "
+        f"(<16 MiB: {'OK' if vmem_mb < 16 else 'SPLIT NEEDED'}), "
+        f"MXU fill ≈ {min(fill, 1.0):.2%}"
+    )

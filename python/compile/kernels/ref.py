@@ -1,0 +1,32 @@
+"""Pure-jnp oracles for the Pallas kernels (the CORE correctness signal).
+
+Every kernel in `linear_tanh.py` has an exact reference here; pytest
+(`python/tests/test_kernel.py`) sweeps shapes and dtypes and asserts
+allclose between kernel and oracle, for values AND gradients.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def linear_tanh_ref(x, w, b):
+    """tanh(x @ W + b) — plain jnp."""
+    return jnp.tanh(x @ w + b[None, :])
+
+
+def linear_tanh_bwd_ref(x, w, h, g):
+    """Reference backward of tanh∘affine given saved h and cotangent g."""
+    gz = g * (1.0 - h * h)
+    return gz @ w.T, x.T @ gz, jnp.sum(gz, axis=0)
+
+
+def softmax_xent_ref(z, onehot):
+    """Mean stable cross-entropy from logits."""
+    logp = jax.nn.log_softmax(z, axis=-1)
+    return -jnp.mean(jnp.sum(logp * onehot, axis=-1))
+
+
+def softmax_xent_grad_ref(z, onehot):
+    """d mean-CE / d z = (softmax(z) - onehot) / b."""
+    p = jax.nn.softmax(z, axis=-1)
+    return (p - onehot) / z.shape[0]

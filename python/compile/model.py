@@ -1,0 +1,260 @@
+"""L2: the paper's models as jitted JAX train steps (framework baseline).
+
+Every model takes its parameters as ONE flat f32[d] vector — the same
+contiguous-buffer convention as the Rust engine (paper E.9) — so the Rust
+runtime's PJRT interface is a single buffer in, a single buffer out:
+
+    train_step(flat_params, xb, yb, lr) -> (new_flat_params, loss)
+
+The char-MLP's hidden layer runs through the Pallas `linear_tanh` kernel
+(forward and backward), and both models compute their loss through the
+Pallas `softmax_xent` kernel, so the L1 kernels lower into every AOT
+artifact the Rust coordinator executes.
+
+Flat layouts (offsets in floats, row-major):
+
+char-MLP (paper §2.4; V=27, E=64, T=16, hidden e):
+    emb   (V, E)
+    w1    (T·E, e)      # [in, out] — NB: transpose of the Rust [out][in]
+    b1    (e,)
+    w2    (e, V)
+    b2    (V,)
+
+GPT (paper §2.5; V=65, T=8, D=24, L=6, H=6):
+    tok_emb (V, D); pos_emb (T, D)
+    per layer: ln1_g (D), ln1_b (D), wq (D,D), wk (D,D), wv (D,D),
+               proj_w (D,D), proj_b (D), ln2_g (D), ln2_b (D),
+               fc1_w (D,4D), fc1_b (4D), fc2_w (4D,D), fc2_b (D)
+    lm_head_w (D, V); lm_head_b (V)
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.linear_tanh import linear_tanh, softmax_xent
+
+# ---------------------------------------------------------------------------
+# char MLP (paper §2.4)
+# ---------------------------------------------------------------------------
+
+MLP_VOCAB = 27
+MLP_EMB = 64
+MLP_BLOCK = 16
+
+
+def mlp_shapes(hidden: int):
+    """Ordered (name, shape) layout of the flat parameter vector."""
+    t_in = MLP_BLOCK * MLP_EMB
+    return [
+        ("emb", (MLP_VOCAB, MLP_EMB)),
+        ("w1", (t_in, hidden)),
+        ("b1", (hidden,)),
+        ("w2", (hidden, MLP_VOCAB)),
+        ("b2", (MLP_VOCAB,)),
+    ]
+
+
+def num_params(shapes) -> int:
+    """Total float count of a layout."""
+    total = 0
+    for _, shp in shapes:
+        n = 1
+        for d in shp:
+            n *= d
+        total += n
+    return total
+
+
+def unflatten(flat, shapes):
+    """Slice a flat vector into the named arrays of a layout."""
+    out = {}
+    off = 0
+    for name, shp in shapes:
+        n = 1
+        for d in shp:
+            n *= d
+        out[name] = flat[off : off + n].reshape(shp)
+        off += n
+    return out
+
+
+def mlp_loss(flat, xb, yb, hidden: int):
+    """Mean CE of the char MLP on a batch. xb: (b, 16) i32, yb: (b,) i32."""
+    p = unflatten(flat, mlp_shapes(hidden))
+    e = p["emb"][xb]  # (b, 16, 64) gather
+    x = e.reshape(e.shape[0], -1)  # (b, 1024)
+    h = linear_tanh(x, p["w1"], p["b1"])  # Pallas kernel (fwd+bwd)
+    logits = h @ p["w2"] + p["b2"][None, :]
+    onehot = jax.nn.one_hot(yb, MLP_VOCAB, dtype=jnp.float32)
+    return softmax_xent(logits, onehot)  # Pallas kernel (fwd+bwd)
+
+
+def mlp_train_step(flat, xb, yb, lr, hidden: int):
+    """One SGD step; returns (new_flat, loss)."""
+    loss, grad = jax.value_and_grad(mlp_loss)(flat, xb, yb, hidden)
+    return (flat - lr * grad, loss)
+
+
+# ---------------------------------------------------------------------------
+# GPT-3-like decoder (paper §2.5)
+# ---------------------------------------------------------------------------
+
+GPT_VOCAB = 65
+GPT_BLOCK = 8
+GPT_D = 24
+GPT_LAYERS = 6
+GPT_HEADS = 6
+
+
+def gpt_shapes(d=GPT_D, layers=GPT_LAYERS, vocab=GPT_VOCAB, block=GPT_BLOCK):
+    """Ordered layout of the GPT flat parameter vector (mirrors the Rust
+    allocation order; weight matrices are [in, out] here)."""
+    shapes = [("tok_emb", (vocab, d)), ("pos_emb", (block, d))]
+    for l in range(layers):
+        shapes += [
+            (f"l{l}.ln1_g", (d,)),
+            (f"l{l}.ln1_b", (d,)),
+            (f"l{l}.wq", (d, d)),
+            (f"l{l}.wk", (d, d)),
+            (f"l{l}.wv", (d, d)),
+            (f"l{l}.proj_w", (d, d)),
+            (f"l{l}.proj_b", (d,)),
+            (f"l{l}.ln2_g", (d,)),
+            (f"l{l}.ln2_b", (d,)),
+            (f"l{l}.fc1_w", (d, 4 * d)),
+            (f"l{l}.fc1_b", (4 * d,)),
+            (f"l{l}.fc2_w", (4 * d, d)),
+            (f"l{l}.fc2_b", (d,)),
+        ]
+    shapes += [("lm_head_w", (d, vocab)), ("lm_head_b", (vocab,))]
+    return shapes
+
+
+def _layernorm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def gpt_logits(flat, xb, d=GPT_D, layers=GPT_LAYERS, heads=GPT_HEADS):
+    """Logits (b, T, V) for token windows xb (b, T) i32."""
+    p = unflatten(flat, gpt_shapes(d=d, layers=layers))
+    b, t = xb.shape
+    hd = d // heads
+    x = p["tok_emb"][xb] + p["pos_emb"][None, :t, :]
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+    for l in range(layers):
+        n = _layernorm(x, p[f"l{l}.ln1_g"], p[f"l{l}.ln1_b"])
+        q = (n @ p[f"l{l}.wq"]).reshape(b, t, heads, hd).transpose(0, 2, 1, 3)
+        k = (n @ p[f"l{l}.wk"]).reshape(b, t, heads, hd).transpose(0, 2, 1, 3)
+        v = (n @ p[f"l{l}.wv"]).reshape(b, t, heads, hd).transpose(0, 2, 1, 3)
+        att = (q @ k.transpose(0, 1, 3, 2)) / jnp.sqrt(jnp.float32(hd))
+        att = jnp.where(mask[None, None, :, :], att, -jnp.inf)
+        att = jax.nn.softmax(att, axis=-1)
+        y = (att @ v).transpose(0, 2, 1, 3).reshape(b, t, d)
+        x = x + y @ p[f"l{l}.proj_w"] + p[f"l{l}.proj_b"]
+        n2 = _layernorm(x, p[f"l{l}.ln2_g"], p[f"l{l}.ln2_b"])
+        h = jax.nn.relu(n2 @ p[f"l{l}.fc1_w"] + p[f"l{l}.fc1_b"])
+        x = x + h @ p[f"l{l}.fc2_w"] + p[f"l{l}.fc2_b"]
+    return x @ p["lm_head_w"] + p["lm_head_b"]
+
+
+def gpt_loss(flat, xb, yb, d=GPT_D, layers=GPT_LAYERS, heads=GPT_HEADS):
+    """Mean next-token CE over all positions (Pallas softmax-xent)."""
+    logits = gpt_logits(flat, xb, d=d, layers=layers, heads=heads)
+    bt = logits.shape[0] * logits.shape[1]
+    z = logits.reshape(bt, GPT_VOCAB)
+    onehot = jax.nn.one_hot(yb.reshape(bt), GPT_VOCAB, dtype=jnp.float32)
+    return softmax_xent(z, onehot)
+
+
+def gpt_train_step(flat, xb, yb, lr, d=GPT_D, layers=GPT_LAYERS, heads=GPT_HEADS):
+    """One SGD step; returns (new_flat, loss)."""
+    loss, grad = jax.value_and_grad(gpt_loss)(flat, xb, yb, d=d, layers=layers, heads=heads)
+    return (flat - lr * grad, loss)
+
+
+# ---------------------------------------------------------------------------
+# Tiny / small scalar graphs (paper §2.1, §2.2) — framework-baseline form
+# ---------------------------------------------------------------------------
+
+
+def tiny_graph(a, b):
+    """Paper Figure 1: returns (g, dg/da, dg/db)."""
+
+    def f(a, b):
+        c = a + b
+        d = a * b + b**3
+        e = c - d
+        return e**2 / 2.0
+
+    g = f(a, b)
+    da, db = jax.grad(f, argnums=(0, 1))(a, b)
+    return (g, da, db)
+
+
+def small_graph(a, b):
+    """Paper Figure 2 (micrograd README expression): (g, dg/da, dg/db)."""
+
+    def f(a, b):
+        c = a + b
+        d = a * b + b**3
+        c = c + c + 1.0
+        c = c + 1.0 + c - a
+        d = d + d * 2.0 + jax.nn.relu(b + a)
+        d = d + 3.0 * d + jax.nn.relu(b - a)
+        e = c - d
+        f_ = e**2
+        g = f_ / 2.0
+        g = g + 10.0 / f_
+        return g
+
+    g = f(a, b)
+    da, db = jax.grad(f, argnums=(0, 1))(a, b)
+    return (g, da, db)
+
+
+# ---------------------------------------------------------------------------
+# Initialization (mirrors the Rust engine's schemes)
+# ---------------------------------------------------------------------------
+
+
+def init_mlp_flat(hidden: int, seed: int = 0):
+    """N(0,1) embeddings, U(±1/√in) linear weights, zero biases."""
+    shapes = mlp_shapes(hidden)
+    key = jax.random.PRNGKey(seed)
+    parts = []
+    for name, shp in shapes:
+        key, sub = jax.random.split(key)
+        if name == "emb":
+            parts.append(jax.random.normal(sub, shp, jnp.float32).reshape(-1))
+        elif name.startswith("w"):
+            bound = 1.0 / jnp.sqrt(jnp.float32(shp[0]))
+            parts.append(
+                jax.random.uniform(sub, shp, jnp.float32, -bound, bound).reshape(-1)
+            )
+        else:
+            parts.append(jnp.zeros(shp, jnp.float32).reshape(-1))
+    return jnp.concatenate(parts)
+
+
+def init_gpt_flat(seed: int = 0, d=GPT_D, layers=GPT_LAYERS):
+    """N(0, 0.02) embeddings, U(±1/√in) weights, 0/1 biases/LN like Rust."""
+    shapes = gpt_shapes(d=d, layers=layers)
+    key = jax.random.PRNGKey(seed)
+    parts = []
+    for name, shp in shapes:
+        key, sub = jax.random.split(key)
+        short = name.split(".")[-1]
+        if "emb" in name:
+            parts.append(0.02 * jax.random.normal(sub, shp, jnp.float32).reshape(-1))
+        elif short.endswith("_g"):
+            parts.append(jnp.ones(shp, jnp.float32).reshape(-1))
+        elif short.endswith("_b") and len(shp) == 1:
+            parts.append(jnp.zeros(shp, jnp.float32).reshape(-1))
+        else:
+            bound = 1.0 / jnp.sqrt(jnp.float32(shp[0]))
+            parts.append(
+                jax.random.uniform(sub, shp, jnp.float32, -bound, bound).reshape(-1)
+            )
+    return jnp.concatenate(parts)

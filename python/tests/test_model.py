@@ -1,0 +1,141 @@
+"""L2 correctness: the JAX models (shapes, parameter counts, training)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+# ---------------------------------------------------------------------------
+# parameter counts must match the paper (and the Rust engine)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "hidden,d",
+    [(4, 5_963), (16, 18_587), (32, 35_419), (64, 69_083),
+     (128, 136_411), (512, 540_379), (1024, 1_079_003)],
+)
+def test_mlp_param_grid_matches_paper_tables_5_6(hidden, d):
+    assert model.num_params(model.mlp_shapes(hidden)) == d
+
+
+def test_gpt_param_count_matches_paper():
+    assert model.num_params(model.gpt_shapes()) == 46_289
+
+
+# ---------------------------------------------------------------------------
+# char MLP
+# ---------------------------------------------------------------------------
+
+
+def test_mlp_init_and_loss_near_log_vocab():
+    flat = model.init_mlp_flat(16, seed=0)
+    xb = jnp.zeros((4, 16), jnp.int32)
+    yb = jnp.arange(4, dtype=jnp.int32)
+    loss = model.mlp_loss(flat, xb, yb, 16)
+    # At random init the CE should be in the vicinity of ln(27) ≈ 3.3.
+    assert 1.5 < float(loss) < 6.0
+
+
+def test_mlp_train_step_reduces_loss_on_fixed_batch():
+    flat = model.init_mlp_flat(16, seed=1)
+    xb = jnp.array(np.random.RandomState(0).randint(0, 27, (8, 16)), jnp.int32)
+    yb = jnp.array(np.random.RandomState(1).randint(0, 27, (8,)), jnp.int32)
+    lr = jnp.float32(0.5)
+    step = jax.jit(lambda f, x, y, g: model.mlp_train_step(f, x, y, g, 16))
+    losses = []
+    for _ in range(20):
+        flat, loss = step(flat, xb, yb, lr)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.8, losses
+
+
+def test_mlp_unflatten_roundtrip():
+    shapes = model.mlp_shapes(4)
+    d = model.num_params(shapes)
+    flat = jnp.arange(d, dtype=jnp.float32)
+    parts = model.unflatten(flat, shapes)
+    # Repack and compare.
+    repacked = jnp.concatenate([parts[name].reshape(-1) for name, _ in shapes])
+    np.testing.assert_array_equal(repacked, flat)
+    assert parts["emb"].shape == (27, 64)
+    assert parts["w1"].shape == (1024, 4)
+
+
+# ---------------------------------------------------------------------------
+# GPT
+# ---------------------------------------------------------------------------
+
+
+def test_gpt_logits_shape():
+    flat = model.init_gpt_flat(seed=0)
+    xb = jnp.zeros((2, 8), jnp.int32)
+    logits = model.gpt_logits(flat, xb)
+    assert logits.shape == (2, 8, 65)
+
+
+def test_gpt_loss_near_log_vocab_at_init():
+    flat = model.init_gpt_flat(seed=0)
+    xb = jnp.array(np.random.RandomState(2).randint(0, 65, (2, 8)), jnp.int32)
+    yb = jnp.array(np.random.RandomState(3).randint(0, 65, (2, 8)), jnp.int32)
+    loss = float(model.gpt_loss(flat, xb, yb))
+    assert abs(loss - np.log(65.0)) < 0.5
+
+
+def test_gpt_causality():
+    # Changing future tokens must not change logits at position 0.
+    flat = model.init_gpt_flat(seed=4)
+    xb1 = jnp.array([[1, 2, 3, 4, 5, 6, 7, 8]], jnp.int32)
+    xb2 = jnp.array([[1, 60, 61, 62, 63, 64, 1, 2]], jnp.int32)
+    l1 = model.gpt_logits(flat, xb1)[0, 0]
+    l2 = model.gpt_logits(flat, xb2)[0, 0]
+    np.testing.assert_allclose(l1, l2, rtol=1e-6, atol=1e-6)
+
+
+def test_gpt_train_step_reduces_loss():
+    flat = model.init_gpt_flat(seed=5)
+    xb = jnp.array(np.random.RandomState(6).randint(0, 65, (4, 8)), jnp.int32)
+    yb = jnp.roll(xb, -1, axis=1)
+    lr = jnp.float32(0.05)
+    step = jax.jit(model.gpt_train_step)
+    first = None
+    for i in range(10):
+        flat, loss = step(flat, xb, yb, lr)
+        if i == 0:
+            first = float(loss)
+    assert float(loss) < first
+
+
+def test_gpt_shapes_order_is_stable():
+    names = [n for n, _ in model.gpt_shapes()]
+    assert names[0] == "tok_emb"
+    assert names[1] == "pos_emb"
+    assert names[2] == "l0.ln1_g"
+    assert names[-1] == "lm_head_b"
+    assert "l5.fc2_b" in names
+
+
+# ---------------------------------------------------------------------------
+# scalar graphs — exact parity with the Rust engine's reference values
+# ---------------------------------------------------------------------------
+
+
+def test_tiny_graph_matches_figure1():
+    g, da, db = model.tiny_graph(jnp.float32(-41.0), jnp.float32(2.0))
+    assert float(g) == 612.5
+    assert float(da) == -35.0
+    assert float(db) == 1050.0
+
+
+def test_small_graph_matches_micrograd_reference():
+    g, da, db = model.small_graph(jnp.float32(-4.0), jnp.float32(2.0))
+    np.testing.assert_allclose(float(g), 24.70408163265306, rtol=1e-5)
+    np.testing.assert_allclose(float(da), 138.83381924198252, rtol=1e-5)
+    np.testing.assert_allclose(float(db), 645.5772594752186, rtol=1e-5)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -1,0 +1,209 @@
+//! Ablations over the DESIGN.md-called-out design choices:
+//!
+//!   A. simple backward vs backwardWithScratchStorage — full-cone loss
+//!      (scratch pays marking overhead) vs late-layer partial-derivative
+//!      query (scratch wins asymptotically; paper §4).
+//!   B. fused dotParamRange layers vs generic innerProductWithBias layers.
+//!   C. fused crossEntropyLogits vs Table-8 composed softmax-CE.
+//!   D. FP32 vs FP64 oracles on the same model.
+//!   E. pre-allocated tape + rewind vs fresh allocation per oracle.
+//!   F. SoA tape vs Rc-object graph (construction+backward of the MLP
+//!      oracle shape).
+//!
+//! Run: `cargo bench --bench ablations`
+
+use burtorch::bench::{run, Table};
+use burtorch::data::names_dataset;
+use burtorch::nn::{CeMode, CharMlp, CharMlpConfig};
+use burtorch::rng::Rng;
+use burtorch::tape::{Scratch, Tape, Value};
+
+fn main() {
+    let ds = names_dataset(300, 16, 55);
+    let ex = ds.examples[10].clone();
+
+    // ---- A. scratch vs simple backward ------------------------------------
+    {
+        let mut table = Table::new("Ablation A — backward variant (char MLP e=64 oracle)");
+        let cfg = CharMlpConfig::paper(64);
+
+        let mut tape = Tape::<f32>::new();
+        let mut rng = Rng::new(1);
+        let model = CharMlp::new(&mut tape, cfg, &mut rng);
+        table.push(run("simple backward (full-tape reverse scan)", 5, 300, |_| {
+            let loss = model.loss(&mut tape, &ex.context, ex.target, CeMode::Fused);
+            tape.backward(loss);
+            let g = tape.grad(model.params.first);
+            tape.rewind(model.base);
+            g
+        }));
+
+        let mut tape2 = Tape::<f32>::new();
+        let mut rng2 = Rng::new(1);
+        let model2 = CharMlp::new(&mut tape2, cfg, &mut rng2);
+        let mut scratch = Scratch::with_capacity(100_000);
+        table.push(run("scratch backward (cone marking)", 5, 300, |_| {
+            let loss = model2.loss(&mut tape2, &ex.context, ex.target, CeMode::Fused);
+            tape2.backward_with_scratch(loss, &mut scratch);
+            let g = tape2.grad(model2.params.first);
+            tape2.rewind(model2.base);
+            g
+        }));
+
+        // Partial-derivative query: gradient of the loss wrt ONLY the
+        // output layer (late in the graph) — the §4 scenario.
+        let mut tape3 = Tape::<f32>::new();
+        let mut rng3 = Rng::new(1);
+        let model3 = CharMlp::new(&mut tape3, cfg, &mut rng3);
+        let mut scratch3 = Scratch::with_capacity(100_000);
+        // Build once; query the cone of a late node repeatedly.
+        let loss3 = model3.loss(&mut tape3, &ex.context, ex.target, CeMode::Fused);
+        table.push(run("scratch backward, late-node cone (reuse graph)", 5, 300, |_| {
+            tape3.backward_with_scratch(loss3, &mut scratch3);
+            tape3.grad(loss3)
+        }));
+        let mut tape4 = Tape::<f32>::new();
+        let mut rng4 = Rng::new(1);
+        let model4 = CharMlp::new(&mut tape4, cfg, &mut rng4);
+        let loss4 = model4.loss(&mut tape4, &ex.context, ex.target, CeMode::Fused);
+        table.push(run("simple backward, same reuse (scans whole tape)", 5, 300, |_| {
+            tape4.backward(loss4);
+            tape4.grad(loss4)
+        }));
+        table.emit("ablation_a_backward");
+    }
+
+    // ---- B. fused layer op vs generic inner product ------------------------
+    {
+        let mut table = Table::new("Ablation B — dotParamRange vs innerProductWithBias (e=64 layer-1)");
+        let e = 64usize;
+        let in_dim = 1024usize;
+
+        let mut tape = Tape::<f64>::new();
+        let w0 = {
+            let mut rng = Rng::new(2);
+            let vals: Vec<f64> = (0..in_dim * e + e).map(|_| rng.uniform_in(-0.03, 0.03)).collect();
+            tape.leaves(&vals)
+        };
+        let xs: Vec<Value> = {
+            let mut rng = Rng::new(3);
+            (0..in_dim).map(|_| tape.leaf(rng.normal())).collect()
+        };
+        let base = tape.mark();
+
+        table.push(run("fused dotParamRange (shared view)", 5, 200, |_| {
+            let view = tape.share_ids(&xs);
+            let mut last = Value(0);
+            for u in 0..e {
+                let row = Value(w0.0 + (u * in_dim) as u32);
+                let bias = Value(w0.0 + (in_dim * e + u) as u32);
+                last = tape.dot_param_range(view, in_dim, row, bias);
+            }
+            let out = tape.value(last);
+            tape.rewind(base);
+            out
+        }));
+
+        table.push(run("generic innerProductWithBias (per-unit id copies)", 5, 200, |_| {
+            let mut last = Value(0);
+            for u in 0..e {
+                let ws: Vec<Value> =
+                    (0..in_dim).map(|j| Value(w0.0 + (u * in_dim + j) as u32)).collect();
+                let bias = Value(w0.0 + (in_dim * e + u) as u32);
+                last = tape.inner_product_bias(&xs, &ws, bias);
+            }
+            let out = tape.value(last);
+            tape.rewind(base);
+            out
+        }));
+        table.emit("ablation_b_layer_op");
+    }
+
+    // ---- C. fused vs composed cross-entropy --------------------------------
+    {
+        let mut table = Table::new("Ablation C — crossEntropyLogits (fused) vs composed softmax-CE");
+        let cfg = CharMlpConfig::paper(16);
+        let mut tape = Tape::<f32>::new();
+        let mut rng = Rng::new(4);
+        let model = CharMlp::new(&mut tape, cfg, &mut rng);
+        table.push(run("fused CE oracle", 5, 500, |_| {
+            let loss = model.loss(&mut tape, &ex.context, ex.target, CeMode::Fused);
+            tape.backward(loss);
+            let g = tape.grad(model.params.first);
+            tape.rewind(model.base);
+            g
+        }));
+        table.push(run("composed CE oracle (paper Table-8 primitives)", 5, 500, |_| {
+            let loss = model.loss(&mut tape, &ex.context, ex.target, CeMode::Composed);
+            tape.backward(loss);
+            let g = tape.grad(model.params.first);
+            tape.rewind(model.base);
+            g
+        }));
+        table.emit("ablation_c_ce");
+    }
+
+    // ---- D. FP32 vs FP64 ----------------------------------------------------
+    {
+        let mut table = Table::new("Ablation D — FP32 vs FP64 oracle (char MLP e=64)");
+        let cfg = CharMlpConfig::paper(64);
+
+        let mut t32 = Tape::<f32>::new();
+        let mut rng = Rng::new(5);
+        let m32 = CharMlp::new(&mut t32, cfg, &mut rng);
+        table.push(run("FP32 oracle", 5, 300, |_| {
+            let loss = m32.loss(&mut t32, &ex.context, ex.target, CeMode::Fused);
+            t32.backward(loss);
+            let g = t32.grad(m32.params.first);
+            t32.rewind(m32.base);
+            g
+        }));
+
+        let mut t64 = Tape::<f64>::new();
+        let mut rng = Rng::new(5);
+        let m64 = CharMlp::new(&mut t64, cfg, &mut rng);
+        table.push(run("FP64 oracle", 5, 300, |_| {
+            let loss = m64.loss(&mut t64, &ex.context, ex.target, CeMode::Fused);
+            t64.backward(loss);
+            let g = t64.grad(m64.params.first);
+            t64.rewind(m64.base);
+            g
+        }));
+        table.emit("ablation_d_dtype");
+    }
+
+    // ---- E. prealloc+rewind vs fresh tape per oracle ------------------------
+    {
+        let mut table = Table::new("Ablation E — pre-allocated tape + rewind vs fresh allocation");
+        let cfg = CharMlpConfig::paper(16);
+
+        let mut tape = Tape::<f32>::new();
+        let mut rng = Rng::new(6);
+        let model = CharMlp::new(&mut tape, cfg, &mut rng);
+        // Warm the capacity once.
+        {
+            let l = model.loss(&mut tape, &ex.context, ex.target, CeMode::Fused);
+            tape.backward(l);
+            tape.rewind(model.base);
+        }
+        table.push(run("rewind (steady-state zero allocation)", 5, 500, |_| {
+            let loss = model.loss(&mut tape, &ex.context, ex.target, CeMode::Fused);
+            tape.backward(loss);
+            let g = tape.grad(model.params.first);
+            tape.rewind(model.base);
+            g
+        }));
+
+        table.push(run("fresh tape + model per oracle (alloc-heavy)", 5, 500, |_| {
+            let mut t = Tape::<f32>::new();
+            let mut r = Rng::new(6);
+            let m = CharMlp::new(&mut t, cfg, &mut r);
+            let loss = m.loss(&mut t, &ex.context, ex.target, CeMode::Fused);
+            t.backward(loss);
+            t.grad(m.params.first)
+        }));
+        table.emit("ablation_e_prealloc");
+    }
+
+    println!("ablations complete — see bench_results/ablation_*.txt");
+}

@@ -1,0 +1,185 @@
+//! Paper Table 3: backpropagation over 20K iterations of the *small*
+//! 32-node graph (Figure 2, the micrograd expression), FP64, with the
+//! paper's full column set: compute time, min time, CPU clocks, peak
+//! private and resident memory.
+//!
+//! Run: `cargo bench --bench table3_small_graph`
+
+use burtorch::baselines::dynamic::DynTape;
+use burtorch::baselines::micrograd::MgValue;
+use burtorch::bench::{run, Table};
+use burtorch::metrics::MemInfo;
+use burtorch::tape::{Scratch, Tape, Value};
+
+const ITERS: u64 = 20_000;
+const TRIALS: usize = 5;
+
+/// Build the Figure 2 expression on the raw tape; returns (a, b, g).
+fn build_tape(t: &mut Tape<f64>) -> (Value, Value, Value) {
+    let a = t.leaf(-4.0);
+    let b = t.leaf(2.0);
+    let mut c = t.add(a, b);
+    let ab = t.mul(a, b);
+    let b3 = t.pow3(b);
+    let mut d = t.add(ab, b3);
+    // c += c + 1
+    let one = t.leaf(1.0);
+    let cc = t.add(c, c);
+    let cc1 = t.add(cc, one);
+    c = cc1;
+    // c += 1 + c - a
+    let one2 = t.leaf(1.0);
+    let t1 = t.add(one2, c);
+    let t2 = t.sub(t1, a);
+    c = t.add(c, t2);
+    // d += d*2 + relu(b+a)
+    let d2 = t.mul_const(d, 2.0);
+    let ba = t.add(b, a);
+    let rba = t.relu(ba);
+    let s1 = t.add(d2, rba);
+    d = t.add(d, s1);
+    // d += 3*d + relu(b-a)
+    let d3 = t.mul_const(d, 3.0);
+    let bma = t.sub(b, a);
+    let rbma = t.relu(bma);
+    let s2 = t.add(d3, rbma);
+    d = t.add(d, s2);
+    let e = t.sub(c, d);
+    let f = t.sqr(e);
+    let mut g = t.mul_const(f, 0.5);
+    // g += 10 / f
+    let ten = t.leaf(10.0);
+    let q = t.div(ten, f);
+    g = t.add(g, q);
+    (a, b, g)
+}
+
+fn main() {
+    let mem0 = MemInfo::snapshot();
+    let mut table = Table::new(
+        "Table 3 — small graph (Fig 2, 32 nodes), 20K fwd+bwd iterations, FP64",
+    );
+
+    {
+        let mut tape = Tape::<f64>::with_capacity(64, 0);
+        let base = tape.mark();
+        table.push(run("BurTorch tape, eager [simple backward]", TRIALS, ITERS, |_| {
+            let (a, b, g) = build_tape(&mut tape);
+            tape.backward(g);
+            let out = (tape.grad(a), tape.grad(b));
+            tape.rewind(base);
+            out
+        }));
+    }
+
+    {
+        let mut tape = Tape::<f64>::with_capacity(64, 0);
+        let mut scratch = Scratch::with_capacity(64);
+        let base = tape.mark();
+        table.push(run("BurTorch tape, eager [scratch backward]", TRIALS, ITERS, |_| {
+            let (a, b, g) = build_tape(&mut tape);
+            tape.backward_with_scratch(g, &mut scratch);
+            let out = (tape.grad(a), tape.grad(b));
+            tape.rewind(base);
+            out
+        }));
+    }
+
+    {
+        let mut tape = DynTape::new();
+        table.push(run("Boxed-dyn eager tape [framework-eager class]", TRIALS, ITERS, |_| {
+            tape.truncate(0);
+            let a = tape.leaf(-4.0);
+            let b = tape.leaf(2.0);
+            let mut c = tape.add(a, b);
+            let ab = tape.mul(a, b);
+            let b3 = tape.pow3(b);
+            let mut d = tape.add(ab, b3);
+            let one = tape.leaf(1.0);
+            let cc = tape.add(c, c);
+            c = tape.add(cc, one);
+            let one2 = tape.leaf(1.0);
+            let t1 = tape.add(one2, c);
+            let t2 = tape.sub(t1, a);
+            c = tape.add(c, t2);
+            let d2 = tape.mul_const(d, 2.0);
+            let ba = tape.add(b, a);
+            let rba = tape.relu(ba);
+            let s1 = tape.add(d2, rba);
+            d = tape.add(d, s1);
+            let d3 = tape.mul_const(d, 3.0);
+            let bma = tape.sub(b, a);
+            let rbma = tape.relu(bma);
+            let s2 = tape.add(d3, rbma);
+            d = tape.add(d, s2);
+            let e = tape.sub(c, d);
+            let f = tape.sqr(e);
+            let half = tape.mul_const(f, 0.5);
+            let ten = tape.leaf(10.0);
+            let q = tape.div(ten, f);
+            let g = tape.add(half, q);
+            tape.backward(g);
+            (tape.grad(a), tape.grad(b))
+        }));
+    }
+
+    table.push(run("Micrograd-style Rc graph [python-object class]", TRIALS, ITERS, |_| {
+        let a = MgValue::new(-4.0);
+        let b = MgValue::new(2.0);
+        let mut c = &a + &b;
+        let ab = &a * &b;
+        let b3 = b.pow3();
+        let mut d = &ab + &b3;
+        let one = MgValue::new(1.0);
+        c = &(&c + &c) + &one;
+        let one2 = MgValue::new(1.0);
+        c = &(&c + &(&(&one2 + &c) - &a)) + &MgValue::new(0.0);
+        let two = MgValue::new(2.0);
+        let ba = (&b + &a).relu();
+        d = &(&d + &(&d * &two)) + &ba;
+        let three = MgValue::new(3.0);
+        let bma = (&b - &a).relu();
+        d = &(&d + &(&three * &d)) + &bma;
+        let e = &c - &d;
+        let f = e.sqr();
+        let two2 = MgValue::new(2.0);
+        let mut g = &f / &two2;
+        let ten = MgValue::new(10.0);
+        g = &g + &(&ten / &f);
+        g.backward();
+        (a.grad(), b.grad())
+    }));
+
+    // XLA graph-mode row (scaled).
+    let pjrt_iters: u64 = 2_000;
+    let path = burtorch::runtime::artifact_path("small_graph.hlo.txt");
+    if path.exists() {
+        let mut engine = burtorch::runtime::Engine::cpu().expect("pjrt");
+        engine.load("small_graph", &path).expect("compile");
+        let mut row = run("XLA graph mode via PJRT [graph-mode class]", 3, pjrt_iters, |_| {
+            engine
+                .run_f32("small_graph", &[(&[-4.0f32], &[]), (&[2.0f32], &[])])
+                .expect("execute")
+        });
+        let scale = ITERS as f64 / pjrt_iters as f64;
+        row.mean_s *= scale;
+        row.std_s *= scale;
+        row.min_s *= scale;
+        row.iters = ITERS;
+        row.name += " (scaled from 2K iters)";
+        table.push(row);
+    } else {
+        table.note("XLA row skipped: artifacts missing (run `make artifacts`)");
+    }
+
+    let mem1 = MemInfo::snapshot();
+    table.note(&format!(
+        "process VmPeak before/after: {:.1}/{:.1} MB, VmHWM {:.1}/{:.1} MB (paper BurTorch row: 0.6 MB private / 3.9 MB resident)",
+        mem0.vm_peak_mb(),
+        mem1.vm_peak_mb(),
+        mem0.vm_hwm_mb(),
+        mem1.vm_hwm_mb()
+    ));
+    table.note("paper reference: BurTorch 0.0082 s; Micrograd ×132.8; PyTorch eager ×677; TF eager ×3019; JAX graph ×144.9 (Windows)");
+    table.emit("table3_small_graph");
+}

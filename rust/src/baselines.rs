@@ -1,0 +1,514 @@
+//! Eager-framework baselines (see DESIGN.md Substitutions).
+//!
+//! The paper benchmarks BurTorch against Micrograd, PyTorch/TF/JAX eager,
+//! and graph-mode runtimes. The Python rows cannot run offline, so this
+//! module reproduces the two *mechanisms* behind their overhead natively:
+//!
+//! - [`micrograd`]: a faithful port of Micrograd's design — one
+//!   heap-allocated, reference-counted node per op with interior
+//!   mutability, child pointers and a recursive topological sort before
+//!   every backward. This is the "eager framework object graph" cost
+//!   model (allocation + pointer chasing + per-node bookkeeping).
+//! - [`dynamic`]: a boxed-closure eager tape — each op pushes a
+//!   `Box<dyn Fn>` backward thunk (how several autograd libraries and
+//!   LibTorch-style eager cores dispatch). Cheaper than `micrograd`, still
+//!   an allocation and an indirect call per op.
+//!
+//! The XLA/PJRT graph-mode baseline lives in [`crate::runtime`].
+
+pub mod micrograd {
+    //! Micrograd-style Rc<RefCell> autodiff (Karpathy 2020, ported 1:1).
+
+    use std::cell::RefCell;
+    use std::collections::HashSet;
+    use std::ops::{Add, Div, Mul, Neg, Sub};
+    use std::rc::Rc;
+
+    /// Inner node: value, grad, local backward contributions.
+    pub struct Inner {
+        /// Forward value.
+        pub data: f64,
+        /// Accumulated gradient.
+        pub grad: f64,
+        /// (child, local_grad) pairs: ∂self/∂child.
+        prev: Vec<(MgValue, f64)>,
+    }
+
+    /// A micrograd `Value`: shared mutable heap node.
+    #[derive(Clone)]
+    pub struct MgValue(pub Rc<RefCell<Inner>>);
+
+    impl MgValue {
+        /// New leaf.
+        pub fn new(data: f64) -> MgValue {
+            MgValue(Rc::new(RefCell::new(Inner {
+                data,
+                grad: 0.0,
+                prev: Vec::new(),
+            })))
+        }
+
+        fn from_op(data: f64, prev: Vec<(MgValue, f64)>) -> MgValue {
+            MgValue(Rc::new(RefCell::new(Inner {
+                data,
+                grad: 0.0,
+                prev,
+            })))
+        }
+
+        /// Forward value.
+        pub fn data(&self) -> f64 {
+            self.0.borrow().data
+        }
+
+        /// Gradient (after backward).
+        pub fn grad(&self) -> f64 {
+            self.0.borrow().grad
+        }
+
+        /// tanh activation.
+        pub fn tanh(&self) -> MgValue {
+            let t = self.data().tanh();
+            MgValue::from_op(t, vec![(self.clone(), 1.0 - t * t)])
+        }
+
+        /// ReLU activation.
+        pub fn relu(&self) -> MgValue {
+            let d = self.data();
+            let out = if d > 0.0 { d } else { 0.0 };
+            MgValue::from_op(out, vec![(self.clone(), if d > 0.0 { 1.0 } else { 0.0 })])
+        }
+
+        /// x².
+        pub fn sqr(&self) -> MgValue {
+            let d = self.data();
+            MgValue::from_op(d * d, vec![(self.clone(), 2.0 * d)])
+        }
+
+        /// x³.
+        pub fn pow3(&self) -> MgValue {
+            let d = self.data();
+            MgValue::from_op(d * d * d, vec![(self.clone(), 3.0 * d * d)])
+        }
+
+        /// exp(x).
+        pub fn exp(&self) -> MgValue {
+            let e = self.data().exp();
+            MgValue::from_op(e, vec![(self.clone(), e)])
+        }
+
+        /// Multiply by a plain constant.
+        pub fn mul_const(&self, c: f64) -> MgValue {
+            MgValue::from_op(self.data() * c, vec![(self.clone(), c)])
+        }
+
+        /// Backward: recursive topo sort then reverse accumulation —
+        /// exactly Micrograd's algorithm (the recursion the paper's MISRA
+        /// discussion calls out).
+        pub fn backward(&self) {
+            let mut topo: Vec<MgValue> = Vec::new();
+            let mut visited: HashSet<usize> = HashSet::new();
+            fn build(v: &MgValue, topo: &mut Vec<MgValue>, visited: &mut HashSet<usize>) {
+                let key = Rc::as_ptr(&v.0) as usize;
+                if visited.insert(key) {
+                    for (child, _) in v.0.borrow().prev.iter() {
+                        build(child, topo, visited);
+                    }
+                    topo.push(v.clone());
+                }
+            }
+            build(self, &mut topo, &mut visited);
+            self.0.borrow_mut().grad = 1.0;
+            for v in topo.iter().rev() {
+                let (g, prev): (f64, Vec<(MgValue, f64)>) = {
+                    let inner = v.0.borrow();
+                    (inner.grad, inner.prev.clone())
+                };
+                for (child, local) in prev {
+                    child.0.borrow_mut().grad += g * local;
+                }
+            }
+        }
+
+        /// Zero all gradients in the cone of `self`.
+        pub fn zero_grad(&self) {
+            let mut visited: HashSet<usize> = HashSet::new();
+            fn walk(v: &MgValue, visited: &mut HashSet<usize>) {
+                let key = Rc::as_ptr(&v.0) as usize;
+                if visited.insert(key) {
+                    v.0.borrow_mut().grad = 0.0;
+                    for (child, _) in v.0.borrow().prev.iter() {
+                        walk(child, visited);
+                    }
+                }
+            }
+            walk(self, &mut visited);
+        }
+    }
+
+    impl Add for &MgValue {
+        type Output = MgValue;
+        fn add(self, rhs: &MgValue) -> MgValue {
+            MgValue::from_op(
+                self.data() + rhs.data(),
+                vec![(self.clone(), 1.0), (rhs.clone(), 1.0)],
+            )
+        }
+    }
+    impl Sub for &MgValue {
+        type Output = MgValue;
+        fn sub(self, rhs: &MgValue) -> MgValue {
+            MgValue::from_op(
+                self.data() - rhs.data(),
+                vec![(self.clone(), 1.0), (rhs.clone(), -1.0)],
+            )
+        }
+    }
+    impl Mul for &MgValue {
+        type Output = MgValue;
+        fn mul(self, rhs: &MgValue) -> MgValue {
+            MgValue::from_op(
+                self.data() * rhs.data(),
+                vec![(self.clone(), rhs.data()), (rhs.clone(), self.data())],
+            )
+        }
+    }
+    impl Div for &MgValue {
+        type Output = MgValue;
+        fn div(self, rhs: &MgValue) -> MgValue {
+            let (a, b) = (self.data(), rhs.data());
+            MgValue::from_op(
+                a / b,
+                vec![(self.clone(), 1.0 / b), (rhs.clone(), -a / (b * b))],
+            )
+        }
+    }
+    impl Neg for &MgValue {
+        type Output = MgValue;
+        fn neg(self) -> MgValue {
+            MgValue::from_op(-self.data(), vec![(self.clone(), -1.0)])
+        }
+    }
+}
+
+pub mod dynamic {
+    //! Boxed-closure eager tape: per-op heap allocation + dynamic dispatch.
+
+    /// Tape of boxed backward thunks.
+    pub struct DynTape {
+        vals: Vec<f64>,
+        grads: Vec<f64>,
+        backs: Vec<Box<dyn Fn(&mut [f64], &[f64])>>,
+    }
+
+    /// Node handle.
+    #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+    pub struct DynValue(pub usize);
+
+    impl Default for DynTape {
+        fn default() -> Self {
+            Self::new()
+        }
+    }
+
+    impl DynTape {
+        /// Empty tape.
+        pub fn new() -> DynTape {
+            DynTape {
+                vals: Vec::new(),
+                grads: Vec::new(),
+                backs: Vec::new(),
+            }
+        }
+
+        /// Number of nodes.
+        pub fn len(&self) -> usize {
+            self.vals.len()
+        }
+
+        /// True if empty.
+        pub fn is_empty(&self) -> bool {
+            self.vals.is_empty()
+        }
+
+        fn push(&mut self, v: f64, back: Box<dyn Fn(&mut [f64], &[f64])>) -> DynValue {
+            let id = self.vals.len();
+            self.vals.push(v);
+            self.grads.push(0.0);
+            self.backs.push(back);
+            DynValue(id)
+        }
+
+        /// New leaf.
+        pub fn leaf(&mut self, v: f64) -> DynValue {
+            self.push(v, Box::new(|_, _| {}))
+        }
+
+        /// Forward value.
+        pub fn value(&self, v: DynValue) -> f64 {
+            self.vals[v.0]
+        }
+
+        /// Gradient after backward.
+        pub fn grad(&self, v: DynValue) -> f64 {
+            self.grads[v.0]
+        }
+
+        /// x + y.
+        pub fn add(&mut self, x: DynValue, y: DynValue) -> DynValue {
+            let id = self.vals.len();
+            self.push(
+                self.vals[x.0] + self.vals[y.0],
+                Box::new(move |g, _| {
+                    let gi = g[id];
+                    g[x.0] += gi;
+                    g[y.0] += gi;
+                }),
+            )
+        }
+
+        /// x − y.
+        pub fn sub(&mut self, x: DynValue, y: DynValue) -> DynValue {
+            let id = self.vals.len();
+            self.push(
+                self.vals[x.0] - self.vals[y.0],
+                Box::new(move |g, _| {
+                    let gi = g[id];
+                    g[x.0] += gi;
+                    g[y.0] -= gi;
+                }),
+            )
+        }
+
+        /// x · y.
+        pub fn mul(&mut self, x: DynValue, y: DynValue) -> DynValue {
+            let id = self.vals.len();
+            self.push(
+                self.vals[x.0] * self.vals[y.0],
+                Box::new(move |g, v| {
+                    let gi = g[id];
+                    g[x.0] += gi * v[y.0];
+                    g[y.0] += gi * v[x.0];
+                }),
+            )
+        }
+
+        /// x / y.
+        pub fn div(&mut self, x: DynValue, y: DynValue) -> DynValue {
+            let id = self.vals.len();
+            self.push(
+                self.vals[x.0] / self.vals[y.0],
+                Box::new(move |g, v| {
+                    let gi = g[id];
+                    g[x.0] += gi / v[y.0];
+                    g[y.0] -= gi * v[x.0] / (v[y.0] * v[y.0]);
+                }),
+            )
+        }
+
+        /// x².
+        pub fn sqr(&mut self, x: DynValue) -> DynValue {
+            let id = self.vals.len();
+            self.push(
+                self.vals[x.0] * self.vals[x.0],
+                Box::new(move |g, v| {
+                    g[x.0] += g[id] * 2.0 * v[x.0];
+                }),
+            )
+        }
+
+        /// x³.
+        pub fn pow3(&mut self, x: DynValue) -> DynValue {
+            let id = self.vals.len();
+            let d = self.vals[x.0];
+            self.push(
+                d * d * d,
+                Box::new(move |g, v| {
+                    g[x.0] += g[id] * 3.0 * v[x.0] * v[x.0];
+                }),
+            )
+        }
+
+        /// relu(x).
+        pub fn relu(&mut self, x: DynValue) -> DynValue {
+            let id = self.vals.len();
+            let d = self.vals[x.0];
+            self.push(
+                if d > 0.0 { d } else { 0.0 },
+                Box::new(move |g, v| {
+                    if v[x.0] > 0.0 {
+                        g[x.0] += g[id];
+                    }
+                }),
+            )
+        }
+
+        /// x · c.
+        pub fn mul_const(&mut self, x: DynValue, c: f64) -> DynValue {
+            let id = self.vals.len();
+            self.push(
+                self.vals[x.0] * c,
+                Box::new(move |g, _| {
+                    g[x.0] += g[id] * c;
+                }),
+            )
+        }
+
+        /// Reverse pass from `root`.
+        pub fn backward(&mut self, root: DynValue) {
+            for g in self.grads.iter_mut() {
+                *g = 0.0;
+            }
+            self.grads[root.0] = 1.0;
+            for i in (0..=root.0).rev() {
+                (self.backs[i])(&mut self.grads, &self.vals);
+            }
+        }
+
+        /// Truncate to `n` nodes (rewind analog, for fair batch loops).
+        pub fn truncate(&mut self, n: usize) {
+            self.vals.truncate(n);
+            self.grads.truncate(n);
+            self.backs.truncate(n);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::dynamic::DynTape;
+    use super::micrograd::MgValue;
+
+    #[test]
+    fn micrograd_figure1_matches_tape_engine() {
+        let a = MgValue::new(-41.0);
+        let b = MgValue::new(2.0);
+        let c = &a + &b;
+        let ab = &a * &b;
+        let b3 = b.pow3();
+        let d = &ab + &b3;
+        let e = &c - &d;
+        let f = e.sqr();
+        let g = f.mul_const(0.5);
+        assert_eq!(g.data(), 612.5);
+        g.backward();
+        assert_eq!(a.grad(), -35.0);
+        assert_eq!(b.grad(), 1050.0);
+    }
+
+    #[test]
+    fn micrograd_readme_expression() {
+        let a = MgValue::new(-4.0);
+        let b = MgValue::new(2.0);
+        let mut c = &a + &b;
+        let ab = &a * &b;
+        let b3 = b.pow3();
+        let mut d = &ab + &b3;
+        let one = MgValue::new(1.0);
+        c = &(&c + &c) + &one;
+        let one2 = MgValue::new(1.0);
+        c = &(&(&one2 + &c) + &c) - &a;
+        let two = MgValue::new(2.0);
+        let ba = (&b + &a).relu();
+        d = &(&d + &(&d * &two)) + &ba;
+        let three = MgValue::new(3.0);
+        let bma = (&b - &a).relu();
+        d = &(&d + &(&three * &d)) + &bma;
+        let e = &c - &d;
+        let f = e.sqr();
+        let two2 = MgValue::new(2.0);
+        let mut g = &f / &two2;
+        let ten = MgValue::new(10.0);
+        g = &g + &(&ten / &f);
+        assert!((g.data() - 24.70408163265306).abs() < 1e-9);
+        g.backward();
+        assert!((a.grad() - 138.83381924198252).abs() < 1e-9);
+        assert!((b.grad() - 645.5772594752186).abs() < 1e-9);
+    }
+
+    #[test]
+    fn micrograd_grad_accumulates_until_zeroed() {
+        let x = MgValue::new(3.0);
+        let y = x.sqr();
+        y.backward();
+        assert_eq!(x.grad(), 6.0);
+        y.zero_grad();
+        y.backward();
+        assert_eq!(x.grad(), 6.0, "zero_grad resets accumulation");
+    }
+
+    #[test]
+    fn dyn_tape_figure1() {
+        let mut t = DynTape::new();
+        let a = t.leaf(-41.0);
+        let b = t.leaf(2.0);
+        let c = t.add(a, b);
+        let ab = t.mul(a, b);
+        let b3 = t.pow3(b);
+        let d = t.add(ab, b3);
+        let e = t.sub(c, d);
+        let f = t.sqr(e);
+        let g = t.mul_const(f, 0.5);
+        assert_eq!(t.value(g), 612.5);
+        t.backward(g);
+        assert_eq!(t.grad(a), -35.0);
+        assert_eq!(t.grad(b), 1050.0);
+    }
+
+    #[test]
+    fn dyn_tape_truncate_reuses_leaves() {
+        let mut t = DynTape::new();
+        let x = t.leaf(2.0);
+        let base = t.len();
+        for _ in 0..3 {
+            let y = t.sqr(x);
+            t.backward(y);
+            assert_eq!(t.grad(x), 4.0);
+            t.truncate(base);
+        }
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn all_three_engines_agree_on_division_chain() {
+        // h = (x·y + y³ − x) / y at x=1.7, y=-0.9.
+        let (x0, y0) = (1.7, -0.9);
+        // tape engine
+        let mut tp = crate::tape::Tape::<f64>::new();
+        let x = tp.leaf(x0);
+        let y = tp.leaf(y0);
+        let xy = tp.mul(x, y);
+        let y3 = tp.pow3(y);
+        let s = tp.add(xy, y3);
+        let n = tp.sub(s, x);
+        let h = tp.div(n, y);
+        tp.backward(h);
+        let (gx_t, gy_t) = (tp.grad(x), tp.grad(y));
+
+        // micrograd
+        let xm = MgValue::new(x0);
+        let ym = MgValue::new(y0);
+        let xym = &xm * &ym;
+        let y3m = ym.pow3();
+        let sm = &xym + &y3m;
+        let nm = &sm - &xm;
+        let hm = &nm / &ym;
+        hm.backward();
+
+        // dyn tape
+        let mut dt = DynTape::new();
+        let xd = dt.leaf(x0);
+        let yd = dt.leaf(y0);
+        let xyd = dt.mul(xd, yd);
+        let y3d = dt.pow3(yd);
+        let sd = dt.add(xyd, y3d);
+        let nd = dt.sub(sd, xd);
+        let hd = dt.div(nd, yd);
+        dt.backward(hd);
+
+        assert!((gx_t - xm.grad()).abs() < 1e-12);
+        assert!((gy_t - ym.grad()).abs() < 1e-12);
+        assert!((gx_t - dt.grad(xd)).abs() < 1e-12);
+        assert!((gy_t - dt.grad(yd)).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,181 @@
+//! Measurement harness used by every `rust/benches/*` binary.
+//!
+//! Reproduces the paper's protocol: each experiment runs `trials`
+//! independent launches of a fixed iteration count and reports
+//! mean ± std of the *total* time per launch (paper §2: "mean and standard
+//! deviation of five independent runs"), plus minimum time, CPU clocks,
+//! and peak memory. criterion is unavailable offline; this harness is
+//! closer to the paper's methodology anyway.
+
+use crate::metrics::{cpu_ticks, mean_std, MemInfo, Timer};
+
+/// One measured experiment row (maps onto the paper's table columns).
+#[derive(Debug, Clone)]
+pub struct Row {
+    /// Label, e.g. "BurTorch, Eager [tape]".
+    pub name: String,
+    /// Mean total time per launch, seconds.
+    pub mean_s: f64,
+    /// Sample std across launches, seconds.
+    pub std_s: f64,
+    /// Minimum total time across launches, seconds.
+    pub min_s: f64,
+    /// Total CPU clocks across one launch (ticks), from rdtsc.
+    pub ticks: u64,
+    /// Peak private virtual memory after the run, MB.
+    pub vm_peak_mb: f64,
+    /// Peak resident memory after the run, MB.
+    pub vm_hwm_mb: f64,
+    /// Iterations per launch (for per-iteration derivations).
+    pub iters: u64,
+}
+
+impl Row {
+    /// Mean time per iteration in milliseconds.
+    pub fn ms_per_iter(&self) -> f64 {
+        self.mean_s * 1e3 / self.iters as f64
+    }
+
+    /// Mean time per iteration in microseconds.
+    pub fn us_per_iter(&self) -> f64 {
+        self.mean_s * 1e6 / self.iters as f64
+    }
+}
+
+/// Run `iters` iterations of `body`, `trials` times; returns a [`Row`].
+/// `body` receives the iteration index and must return a value that is
+/// black-boxed to keep the optimizer honest.
+pub fn run<R>(name: &str, trials: usize, iters: u64, mut body: impl FnMut(u64) -> R) -> Row {
+    // Warmup launch (not recorded) — pages in code/data, trains branch
+    // predictors; the paper's first launch plays the same role.
+    for i in 0..iters.min(1000) {
+        std::hint::black_box(body(i));
+    }
+
+    let mut totals = Vec::with_capacity(trials);
+    let mut ticks_total = 0u64;
+    for t in 0..trials {
+        let t0 = cpu_ticks();
+        let timer = Timer::new();
+        for i in 0..iters {
+            std::hint::black_box(body(i));
+        }
+        totals.push(timer.seconds());
+        if t == 0 {
+            ticks_total = cpu_ticks().wrapping_sub(t0);
+        }
+    }
+    let (mean_s, std_s) = mean_std(&totals);
+    let min_s = totals.iter().cloned().fold(f64::INFINITY, f64::min);
+    let mem = MemInfo::snapshot();
+    Row {
+        name: name.to_string(),
+        mean_s,
+        std_s,
+        min_s,
+        ticks: ticks_total,
+        vm_peak_mb: mem.vm_peak_mb(),
+        vm_hwm_mb: mem.vm_hwm_mb(),
+        iters,
+    }
+}
+
+/// A table of rows with a baseline for "Relative to BurTorch" columns.
+pub struct Table {
+    /// Table title (e.g. "Table 2 — tiny graph, 100K iterations").
+    pub title: String,
+    /// Measured rows; row 0 is the baseline (BurTorch).
+    pub rows: Vec<Row>,
+    /// Free-form notes printed under the table.
+    pub notes: Vec<String>,
+}
+
+impl Table {
+    /// New table with a title.
+    pub fn new(title: &str) -> Table {
+        Table {
+            title: title.to_string(),
+            rows: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    /// Append a measured row.
+    pub fn push(&mut self, row: Row) {
+        self.rows.push(row);
+    }
+
+    /// Append a note line.
+    pub fn note(&mut self, s: &str) {
+        self.notes.push(s.to_string());
+    }
+
+    /// Render the table in the paper's format (absolute + relative).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("\n=== {} ===\n", self.title));
+        let base = self.rows.first().map(|r| r.mean_s).unwrap_or(1.0);
+        out.push_str(&format!(
+            "{:<44} {:>14} {:>10} {:>12} {:>12} {:>10} {:>10}\n",
+            "Framework/Engine", "Time (s)", "± std", "min (s)", "Mticks", "VmPeak MB", "rel"
+        ));
+        for r in &self.rows {
+            out.push_str(&format!(
+                "{:<44} {:>14.6} {:>10.6} {:>12.6} {:>12.1} {:>10.1} {:>9.1}x\n",
+                r.name,
+                r.mean_s,
+                r.std_s,
+                r.min_s,
+                r.ticks as f64 / 1e6,
+                r.vm_peak_mb,
+                r.mean_s / base,
+            ));
+        }
+        for n in &self.notes {
+            out.push_str(&format!("  note: {n}\n"));
+        }
+        out
+    }
+
+    /// Print to stdout and append to `bench_results/<slug>.txt`.
+    pub fn emit(&self, slug: &str) {
+        let text = self.render();
+        println!("{text}");
+        let _ = std::fs::create_dir_all("bench_results");
+        let _ = std::fs::write(format!("bench_results/{slug}.txt"), &text);
+    }
+}
+
+/// Black-box helper re-export (keeps bench code std-only).
+#[inline(always)]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_produces_sane_row() {
+        let row = run("probe", 3, 100, |i| i * 2);
+        assert_eq!(row.iters, 100);
+        assert!(row.mean_s >= 0.0);
+        assert!(row.min_s <= row.mean_s + row.std_s + 1e-9);
+        assert!(row.ms_per_iter() >= 0.0);
+        assert!(row.us_per_iter() >= row.ms_per_iter());
+    }
+
+    #[test]
+    fn table_renders_relative_column() {
+        let mut t = Table::new("probe table");
+        t.push(run("base", 2, 50, |i| i));
+        t.push(run("other", 2, 50, |i| i + 1));
+        t.note("a note");
+        let s = t.render();
+        assert!(s.contains("probe table"));
+        assert!(s.contains("base"));
+        assert!(s.contains("a note"));
+        assert!(s.contains("rel"));
+    }
+}

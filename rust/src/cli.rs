@@ -1,0 +1,139 @@
+//! Hand-rolled CLI argument parsing (no external dependencies — the
+//! BurTorch philosophy, and the offline registry carries no clap anyway).
+//!
+//! Grammar: `burtorch <command> [--key value]... [--flag]...`
+//! Unknown keys are collected verbatim so commands can forward them into
+//! the config system as overrides.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Cli {
+    /// The subcommand (first positional).
+    pub command: String,
+    /// Remaining positionals.
+    pub positionals: Vec<String>,
+    /// `--key value` options.
+    pub options: BTreeMap<String, String>,
+    /// Bare `--flag`s.
+    pub flags: Vec<String>,
+}
+
+impl Cli {
+    /// Parse from an iterator of args (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Cli {
+        let mut cli = Cli::default();
+        let mut iter = args.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(key) = arg.strip_prefix("--") {
+                // `--key=value` or `--key value` or bare flag.
+                if let Some((k, v)) = key.split_once('=') {
+                    cli.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    cli.options.insert(key.to_string(), v);
+                } else {
+                    cli.flags.push(key.to_string());
+                }
+            } else if cli.command.is_empty() {
+                cli.command = arg;
+            } else {
+                cli.positionals.push(arg);
+            }
+        }
+        cli
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Cli {
+        Cli::parse(std::env::args().skip(1))
+    }
+
+    /// Option lookup.
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    /// Option with default.
+    pub fn opt_or(&self, key: &str, default: &str) -> String {
+        self.opt(key).unwrap_or(default).to_string()
+    }
+
+    /// Integer option with default; panics with a clear message on junk.
+    pub fn int_or(&self, key: &str, default: i64) -> i64 {
+        match self.opt(key) {
+            None => default,
+            Some(s) => s
+                .parse()
+                .unwrap_or_else(|_| panic!("--{key} expects an integer, got '{s}'")),
+        }
+    }
+
+    /// Float option with default.
+    pub fn float_or(&self, key: &str, default: f64) -> f64 {
+        match self.opt(key) {
+            None => default,
+            Some(s) => s
+                .parse()
+                .unwrap_or_else(|_| panic!("--{key} expects a number, got '{s}'")),
+        }
+    }
+
+    /// Is a bare flag present?
+    pub fn has_flag(&self, flag: &str) -> bool {
+        self.flags.iter().any(|f| f == flag)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(words: &[&str]) -> Cli {
+        Cli::parse(words.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn parses_command_options_flags() {
+        let c = parse(&[
+            "train", "extra", "--model", "gpt", "--steps=100", "--verbose",
+        ]);
+        assert_eq!(c.command, "train");
+        assert_eq!(c.opt("model"), Some("gpt"));
+        assert_eq!(c.int_or("steps", 0), 100);
+        assert!(c.has_flag("verbose"));
+        assert_eq!(c.positionals, vec!["extra"]);
+    }
+
+    #[test]
+    fn negative_numbers_are_values_not_flags() {
+        let c = parse(&["bench", "--lr", "0.5"]);
+        assert!((c.float_or("lr", 0.0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let c = parse(&["info"]);
+        assert_eq!(c.int_or("steps", 42), 42);
+        assert_eq!(c.opt_or("model", "mlp"), "mlp");
+        assert!(!c.has_flag("x"));
+    }
+
+    #[test]
+    fn trailing_flag_is_flag() {
+        let c = parse(&["run", "--fast"]);
+        assert!(c.has_flag("fast"));
+        assert_eq!(c.opt("fast"), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "expects an integer")]
+    fn junk_integer_panics() {
+        parse(&["x", "--steps", "many"]).int_or("steps", 0);
+    }
+}

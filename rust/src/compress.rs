@@ -1,0 +1,429 @@
+//! Gradient compression operators and the distributed algorithms that use
+//! them (paper §4: EF21, MARINA, RandK/RandSeqK, sparsification).
+//!
+//! Compressors are mappings C: ℝᵈ → ℝᵈ producing sparse/quantized
+//! messages. The paper argues BurTorch's partial-derivative-granularity
+//! oracles couple naturally with RandK-style compressors (compute only
+//! the needed coordinates); [`Compressor::support`] exposes exactly that
+//! coordinate set so the trainer can call `backward_with_scratch` +
+//! subset harvesting.
+
+use crate::rng::Rng;
+
+/// A (possibly randomized) compression operator.
+pub trait Compressor {
+    /// Compress `x` into `out` (same length; `out` is zeroed first).
+    fn compress(&mut self, x: &[f64], out: &mut [f64]);
+
+    /// The coordinate support the *next* call to [`Compressor::compress`]
+    /// will read, if it is input-independent (RandK-style). Returns `None`
+    /// for input-dependent compressors (TopK). Used to restrict gradient
+    /// computation to [∇f(x)]_S (paper §4).
+    fn presample_support(&mut self, _d: usize) -> Option<Vec<usize>> {
+        None
+    }
+
+    /// Human-readable name.
+    fn name(&self) -> &'static str;
+}
+
+/// Identity (no compression).
+pub struct Identity;
+
+impl Compressor for Identity {
+    fn compress(&mut self, x: &[f64], out: &mut [f64]) {
+        out.copy_from_slice(x);
+    }
+    fn name(&self) -> &'static str {
+        "identity"
+    }
+}
+
+/// RandK: keep k uniformly random coordinates. With `unbiased = true`
+/// the kept values are scaled by d/k (E[C(x)] = x, the variance-bounded
+/// form used by MARINA); with `unbiased = false` the values are kept
+/// unscaled, making C a *contractive* compressor (‖C(x)−x‖² ≤ (1−k/d)‖x‖²),
+/// the form EF21's analysis requires.
+pub struct RandK {
+    /// Kept coordinates per round.
+    pub k: usize,
+    /// Unbiased (scaled) vs contractive (unscaled) variant.
+    pub unbiased: bool,
+    rng: Rng,
+    pending: Option<Vec<usize>>,
+}
+
+impl RandK {
+    /// New unbiased (d/k-scaled) RandK compressor.
+    pub fn new(k: usize, seed: u64) -> RandK {
+        RandK {
+            k,
+            unbiased: true,
+            rng: Rng::new(seed),
+            pending: None,
+        }
+    }
+
+    /// New contractive (unscaled) RandK — the EF21-compatible variant.
+    pub fn contractive(k: usize, seed: u64) -> RandK {
+        RandK {
+            k,
+            unbiased: false,
+            rng: Rng::new(seed),
+            pending: None,
+        }
+    }
+}
+
+impl Compressor for RandK {
+    fn compress(&mut self, x: &[f64], out: &mut [f64]) {
+        out.iter_mut().for_each(|o| *o = 0.0);
+        let d = x.len();
+        let support = self
+            .pending
+            .take()
+            .unwrap_or_else(|| self.rng.sample_distinct(d, self.k.min(d)));
+        let scale = if self.unbiased {
+            d as f64 / support.len() as f64
+        } else {
+            1.0
+        };
+        for &i in &support {
+            out[i] = scale * x[i];
+        }
+    }
+
+    fn presample_support(&mut self, d: usize) -> Option<Vec<usize>> {
+        let s = self.rng.sample_distinct(d, self.k.min(d));
+        self.pending = Some(s.clone());
+        Some(s)
+    }
+
+    fn name(&self) -> &'static str {
+        "randk"
+    }
+}
+
+/// RandSeqK (Burlachenko & Richtárik 2024): keep a *contiguous* run of k
+/// coordinates starting at a uniform offset — groups spatially close
+/// coordinates for coalesced memory access.
+pub struct RandSeqK {
+    /// Kept run length.
+    pub k: usize,
+    rng: Rng,
+    pending: Option<usize>,
+}
+
+impl RandSeqK {
+    /// New RandSeqK compressor.
+    pub fn new(k: usize, seed: u64) -> RandSeqK {
+        RandSeqK {
+            k,
+            rng: Rng::new(seed),
+            pending: None,
+        }
+    }
+}
+
+impl Compressor for RandSeqK {
+    fn compress(&mut self, x: &[f64], out: &mut [f64]) {
+        out.iter_mut().for_each(|o| *o = 0.0);
+        let d = x.len();
+        let k = self.k.min(d);
+        let start = self.pending.take().unwrap_or_else(|| self.rng.below_usize(d));
+        let scale = d as f64 / k as f64;
+        for j in 0..k {
+            let i = (start + j) % d;
+            out[i] = scale * x[i];
+        }
+    }
+
+    fn presample_support(&mut self, d: usize) -> Option<Vec<usize>> {
+        let start = self.rng.below_usize(d);
+        self.pending = Some(start);
+        let k = self.k.min(d);
+        Some((0..k).map(|j| (start + j) % d).collect())
+    }
+
+    fn name(&self) -> &'static str {
+        "randseqk"
+    }
+}
+
+/// TopK: keep the k largest-magnitude coordinates (biased; needs EF).
+pub struct TopK {
+    /// Kept coordinates.
+    pub k: usize,
+}
+
+impl Compressor for TopK {
+    fn compress(&mut self, x: &[f64], out: &mut [f64]) {
+        out.iter_mut().for_each(|o| *o = 0.0);
+        let k = self.k.min(x.len());
+        let mut idx: Vec<usize> = (0..x.len()).collect();
+        idx.select_nth_unstable_by(k.saturating_sub(1), |&a, &b| {
+            x[b].abs().partial_cmp(&x[a].abs()).unwrap()
+        });
+        for &i in &idx[..k] {
+            out[i] = x[i];
+        }
+    }
+    fn name(&self) -> &'static str {
+        "topk"
+    }
+}
+
+/// Natural compression: round to the nearest power of two (exponent-only
+/// messages; unbiased variant with stochastic rounding).
+pub struct Natural {
+    rng: Rng,
+}
+
+impl Natural {
+    /// New natural compressor.
+    pub fn new(seed: u64) -> Natural {
+        Natural { rng: Rng::new(seed) }
+    }
+}
+
+impl Compressor for Natural {
+    fn compress(&mut self, x: &[f64], out: &mut [f64]) {
+        for (o, &v) in out.iter_mut().zip(x) {
+            if v == 0.0 || !v.is_finite() {
+                *o = 0.0;
+                continue;
+            }
+            let a = v.abs();
+            let lo = 2f64.powf(a.log2().floor());
+            let hi = lo * 2.0;
+            // Stochastic rounding keeps it unbiased: P(hi) = (a-lo)/(hi-lo).
+            let p_hi = (a - lo) / (hi - lo);
+            let mag = if self.rng.bernoulli(p_hi) { hi } else { lo };
+            *o = mag * v.signum();
+        }
+    }
+    fn name(&self) -> &'static str {
+        "natural"
+    }
+}
+
+// ---- distributed algorithms over compressors -------------------------------
+
+/// EF21 (Richtárik et al. 2024) single-node state: maintains gᵢ and sends
+/// cᵢ = C(∇fᵢ(x) − gᵢ); the server aggregates gᵢ + cᵢ.
+pub struct Ef21Worker {
+    /// Local shift gᵢ.
+    pub g: Vec<f64>,
+}
+
+impl Ef21Worker {
+    /// Fresh worker state of dimension d.
+    pub fn new(d: usize) -> Ef21Worker {
+        Ef21Worker { g: vec![0.0; d] }
+    }
+
+    /// Produce the compressed message for the current local gradient and
+    /// update the local shift. Returns the message c = C(∇f − g).
+    pub fn round(&mut self, grad: &[f64], c: &mut dyn Compressor, msg: &mut [f64]) {
+        let diff: Vec<f64> = grad.iter().zip(&self.g).map(|(a, b)| a - b).collect();
+        c.compress(&diff, msg);
+        for (gi, &m) in self.g.iter_mut().zip(msg.iter()) {
+            *gi += m;
+        }
+    }
+}
+
+/// MARINA (Gorbunov et al. 2021) message: with probability p send the full
+/// gradient, otherwise send C(∇f(x⁺) − ∇f(x)).
+pub struct MarinaWorker {
+    rng: Rng,
+    /// Probability of a full sync.
+    pub p_full: f64,
+}
+
+impl MarinaWorker {
+    /// New worker.
+    pub fn new(p_full: f64, seed: u64) -> MarinaWorker {
+        MarinaWorker {
+            rng: Rng::new(seed),
+            p_full,
+        }
+    }
+
+    /// Decide this round's message type.
+    pub fn full_round(&mut self) -> bool {
+        self.rng.bernoulli(self.p_full)
+    }
+
+    /// Compressed difference message (the common case). The caller supplies
+    /// the gradients at the two iterates — the paper notes BurTorch computes
+    /// ∇f at two points "effectively out of the box".
+    pub fn diff_message(
+        &mut self,
+        grad_new: &[f64],
+        grad_old: &[f64],
+        c: &mut dyn Compressor,
+        msg: &mut [f64],
+    ) {
+        let diff: Vec<f64> = grad_new.iter().zip(grad_old).map(|(a, b)| a - b).collect();
+        c.compress(&diff, msg);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vec_d(d: usize) -> Vec<f64> {
+        (0..d).map(|i| (i as f64 - 3.0) * 0.5).collect()
+    }
+
+    #[test]
+    fn identity_is_identity() {
+        let x = vec_d(8);
+        let mut out = vec![0.0; 8];
+        Identity.compress(&x, &mut out);
+        assert_eq!(out, x);
+    }
+
+    #[test]
+    fn randk_keeps_k_and_is_unbiased_in_expectation() {
+        let d = 16;
+        let x = vec_d(d);
+        let mut c = RandK::new(4, 7);
+        let mut acc = vec![0.0; d];
+        let rounds = 20_000;
+        let mut out = vec![0.0; d];
+        for _ in 0..rounds {
+            c.compress(&x, &mut out);
+            let nnz = out.iter().filter(|v| **v != 0.0).count();
+            assert!(nnz <= 4);
+            for i in 0..d {
+                acc[i] += out[i];
+            }
+        }
+        for i in 0..d {
+            let mean = acc[i] / rounds as f64;
+            assert!(
+                (mean - x[i]).abs() < 0.15,
+                "coordinate {i}: E[C(x)]={mean} x={}",
+                x[i]
+            );
+        }
+    }
+
+    #[test]
+    fn randk_presampled_support_is_honored() {
+        let d = 10;
+        let mut c = RandK::new(3, 11);
+        let support = c.presample_support(d).unwrap();
+        let x = vec_d(d);
+        let mut out = vec![0.0; d];
+        c.compress(&x, &mut out);
+        for i in 0..d {
+            if support.contains(&i) {
+                assert!(out[i] != 0.0 || x[i] == 0.0);
+            } else {
+                assert_eq!(out[i], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn randseqk_support_is_contiguous_mod_d() {
+        let mut c = RandSeqK::new(4, 13);
+        let s = c.presample_support(10).unwrap();
+        assert_eq!(s.len(), 4);
+        for w in s.windows(2) {
+            assert_eq!(w[1], (w[0] + 1) % 10);
+        }
+    }
+
+    #[test]
+    fn topk_keeps_largest() {
+        let x = vec![0.1, -5.0, 0.2, 3.0, -0.05];
+        let mut out = vec![0.0; 5];
+        TopK { k: 2 }.compress(&x, &mut out);
+        assert_eq!(out, vec![0.0, -5.0, 0.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    fn natural_rounds_to_powers_of_two_unbiasedly() {
+        let mut c = Natural::new(17);
+        let x = vec![0.75; 1];
+        let mut acc = 0.0;
+        let mut out = vec![0.0; 1];
+        for _ in 0..20_000 {
+            c.compress(&x, &mut out);
+            assert!(out[0] == 0.5 || out[0] == 1.0, "got {}", out[0]);
+            acc += out[0];
+        }
+        let mean = acc / 20_000.0;
+        assert!((mean - 0.75).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn contractive_randk_never_amplifies() {
+        let mut c = RandK::contractive(3, 23);
+        let x = vec_d(10);
+        let mut out = vec![0.0; 10];
+        for _ in 0..50 {
+            c.compress(&x, &mut out);
+            let nx: f64 = x.iter().map(|v| v * v).sum();
+            let diff: f64 = x.iter().zip(&out).map(|(a, b)| (a - b) * (a - b)).sum();
+            assert!(diff <= nx + 1e-12, "contraction violated");
+        }
+    }
+
+    #[test]
+    fn ef21_with_contractive_randk_converges() {
+        let grad = vec_d(16);
+        let mut w = Ef21Worker::new(16);
+        let mut c = RandK::contractive(4, 29);
+        let mut msg = vec![0.0; 16];
+        for _ in 0..200 {
+            w.round(&grad, &mut c, &mut msg);
+        }
+        for i in 0..16 {
+            assert!((w.g[i] - grad[i]).abs() < 1e-6, "shift not converged at {i}");
+        }
+    }
+
+    #[test]
+    fn ef21_converges_to_true_gradient_on_fixed_point() {
+        // With a fixed gradient, EF21's shift g must converge to it even
+        // under aggressive TopK compression.
+        let grad = vec_d(12);
+        let mut w = Ef21Worker::new(12);
+        let mut c = TopK { k: 3 };
+        let mut msg = vec![0.0; 12];
+        for _ in 0..40 {
+            w.round(&grad, &mut c, &mut msg);
+        }
+        for i in 0..12 {
+            assert!(
+                (w.g[i] - grad[i]).abs() < 1e-9,
+                "shift failed to converge at {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn marina_full_round_rate_matches_p() {
+        let mut w = MarinaWorker::new(0.25, 19);
+        let n = 40_000;
+        let fulls = (0..n).filter(|_| w.full_round()).count();
+        let rate = fulls as f64 / n as f64;
+        assert!((rate - 0.25).abs() < 0.01, "rate={rate}");
+    }
+
+    #[test]
+    fn marina_diff_message_compresses_the_difference() {
+        let mut w = MarinaWorker::new(0.0, 21);
+        let g_new = vec![1.0, 2.0, 3.0];
+        let g_old = vec![0.5, 2.0, 1.0];
+        let mut msg = vec![0.0; 3];
+        w.diff_message(&g_new, &g_old, &mut Identity, &mut msg);
+        assert_eq!(msg, vec![0.5, 0.0, 2.0]);
+    }
+}

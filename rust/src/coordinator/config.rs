@@ -1,0 +1,336 @@
+//! Configuration system: a TOML-subset parser with zero dependencies.
+//!
+//! Supports what training configs actually need: `[sections]`,
+//! `key = value` with string / integer / float / boolean / flat-array
+//! values, `#` comments. Values are addressed as `"section.key"`.
+//! CLI `--key value` pairs override file entries (see `cli`).
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+
+/// Parsed configuration: flat `section.key → value` map.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    map: BTreeMap<String, Value>,
+}
+
+/// A config value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    /// Quoted string.
+    Str(String),
+    /// Integer.
+    Int(i64),
+    /// Float.
+    Float(f64),
+    /// Boolean.
+    Bool(bool),
+    /// Flat array of values.
+    Array(Vec<Value>),
+}
+
+/// Configuration errors with line information.
+#[derive(Debug)]
+pub struct ConfigError {
+    /// 1-based line number (0 = not line-specific).
+    pub line: usize,
+    /// Message.
+    pub msg: String,
+}
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.line > 0 {
+            write!(f, "config line {}: {}", self.line, self.msg)
+        } else {
+            write!(f, "config: {}", self.msg)
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+/// Which model a training run drives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelKind {
+    /// The §2.4 char MLP.
+    CharMlp,
+    /// The §2.5 GPT-3-like model.
+    Gpt,
+}
+
+impl ModelKind {
+    /// Parse from a config string.
+    pub fn parse(s: &str) -> Result<ModelKind, ConfigError> {
+        match s {
+            "mlp" | "char_mlp" | "charmlp" => Ok(ModelKind::CharMlp),
+            "gpt" => Ok(ModelKind::Gpt),
+            other => Err(ConfigError {
+                line: 0,
+                msg: format!("unknown model kind '{other}' (expected mlp|gpt)"),
+            }),
+        }
+    }
+}
+
+impl Config {
+    /// Empty config.
+    pub fn new() -> Config {
+        Config::default()
+    }
+
+    /// Parse from TOML-subset text.
+    pub fn parse(text: &str) -> Result<Config, ConfigError> {
+        let mut map = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or_else(|| ConfigError {
+                    line: lineno + 1,
+                    msg: "unterminated section header".into(),
+                })?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (key, val) = line.split_once('=').ok_or_else(|| ConfigError {
+                line: lineno + 1,
+                msg: format!("expected key = value, got '{line}'"),
+            })?;
+            let key = key.trim();
+            if key.is_empty() {
+                return Err(ConfigError {
+                    line: lineno + 1,
+                    msg: "empty key".into(),
+                });
+            }
+            let value = parse_value(val.trim(), lineno + 1)?;
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            map.insert(full, value);
+        }
+        Ok(Config { map })
+    }
+
+    /// Load from a file.
+    pub fn load(path: &Path) -> Result<Config, ConfigError> {
+        let text = std::fs::read_to_string(path).map_err(|e| ConfigError {
+            line: 0,
+            msg: format!("cannot read {}: {e}", path.display()),
+        })?;
+        Config::parse(&text)
+    }
+
+    /// Set/override a value (CLI overrides use string parsing).
+    pub fn set_str(&mut self, key: &str, raw: &str) -> Result<(), ConfigError> {
+        let value = parse_value(raw, 0)?;
+        self.map.insert(key.to_string(), value);
+        Ok(())
+    }
+
+    /// Raw lookup.
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.map.get(key)
+    }
+
+    /// String lookup with default.
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        match self.map.get(key) {
+            Some(Value::Str(s)) => s.clone(),
+            Some(v) => format!("{v:?}"),
+            None => default.to_string(),
+        }
+    }
+
+    /// Integer lookup with default (floats truncate).
+    pub fn int_or(&self, key: &str, default: i64) -> i64 {
+        match self.map.get(key) {
+            Some(Value::Int(i)) => *i,
+            Some(Value::Float(f)) => *f as i64,
+            _ => default,
+        }
+    }
+
+    /// Float lookup with default (ints widen).
+    pub fn float_or(&self, key: &str, default: f64) -> f64 {
+        match self.map.get(key) {
+            Some(Value::Float(f)) => *f,
+            Some(Value::Int(i)) => *i as f64,
+            _ => default,
+        }
+    }
+
+    /// Bool lookup with default.
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        match self.map.get(key) {
+            Some(Value::Bool(b)) => *b,
+            _ => default,
+        }
+    }
+
+    /// Array-of-int lookup.
+    pub fn ints(&self, key: &str) -> Option<Vec<i64>> {
+        match self.map.get(key) {
+            Some(Value::Array(xs)) => xs
+                .iter()
+                .map(|v| match v {
+                    Value::Int(i) => Some(*i),
+                    _ => None,
+                })
+                .collect(),
+            _ => None,
+        }
+    }
+
+    /// All keys (sorted — BTreeMap).
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.map.keys().map(|s| s.as_str())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, line: usize) -> Result<Value, ConfigError> {
+    let err = |msg: String| ConfigError { line, msg };
+    if s.is_empty() {
+        return Err(err("empty value".into()));
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| err("unterminated string".into()))?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| err("unterminated array".into()))?;
+        let mut items = Vec::new();
+        let trimmed = inner.trim();
+        if !trimmed.is_empty() {
+            for part in trimmed.split(',') {
+                items.push(parse_value(part.trim(), line)?);
+            }
+        }
+        return Ok(Value::Array(items));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    // Bare words are accepted as strings (ergonomic CLI overrides).
+    if s.chars().all(|c| c.is_alphanumeric() || c == '_' || c == '-' || c == '.') {
+        return Ok(Value::Str(s.to_string()));
+    }
+    Err(err(format!("cannot parse value '{s}'")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# training config
+model = "gpt"
+
+[train]
+steps = 3000
+lr = 0.05          # learning rate
+batch = 1
+use_fused_ce = true
+hidden_sizes = [4, 16, 32]
+
+[data]
+corpus = "shakespeare"
+min_chars = 50000
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.str_or("model", ""), "gpt");
+        assert_eq!(c.int_or("train.steps", 0), 3000);
+        assert!((c.float_or("train.lr", 0.0) - 0.05).abs() < 1e-12);
+        assert!(c.bool_or("train.use_fused_ce", false));
+        assert_eq!(c.ints("train.hidden_sizes"), Some(vec![4, 16, 32]));
+        assert_eq!(c.str_or("data.corpus", ""), "shakespeare");
+    }
+
+    #[test]
+    fn defaults_apply_for_missing_keys() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.int_or("nope", 7), 7);
+        assert_eq!(c.float_or("nope", 1.5), 1.5);
+        assert!(!c.bool_or("nope", false));
+        assert_eq!(c.str_or("nope", "x"), "x");
+    }
+
+    #[test]
+    fn cli_overrides_replace_values() {
+        let mut c = Config::parse(SAMPLE).unwrap();
+        c.set_str("train.steps", "42").unwrap();
+        assert_eq!(c.int_or("train.steps", 0), 42);
+        c.set_str("train.lr", "0.001").unwrap();
+        assert!((c.float_or("train.lr", 0.0) - 0.001).abs() < 1e-15);
+    }
+
+    #[test]
+    fn comments_inside_strings_are_preserved() {
+        let c = Config::parse("name = \"a#b\"").unwrap();
+        assert_eq!(c.str_or("name", ""), "a#b");
+    }
+
+    #[test]
+    fn int_widens_to_float() {
+        let c = Config::parse("lr = 1").unwrap();
+        assert_eq!(c.float_or("lr", 0.0), 1.0);
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = Config::parse("a = 1\nbad line\n").unwrap_err();
+        assert_eq!(err.line, 2);
+        let err2 = Config::parse("[unterminated\n").unwrap_err();
+        assert_eq!(err2.line, 1);
+        let err3 = Config::parse("x = \"oops\n").unwrap_err();
+        assert_eq!(err3.line, 1);
+    }
+
+    #[test]
+    fn model_kind_parses() {
+        assert_eq!(ModelKind::parse("mlp").unwrap(), ModelKind::CharMlp);
+        assert_eq!(ModelKind::parse("gpt").unwrap(), ModelKind::Gpt);
+        assert!(ModelKind::parse("resnet").is_err());
+    }
+
+    #[test]
+    fn empty_array_parses() {
+        let c = Config::parse("xs = []").unwrap();
+        assert_eq!(c.ints("xs"), Some(vec![]));
+    }
+}

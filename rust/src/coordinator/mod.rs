@@ -1,0 +1,15 @@
+//! The training coordinator: config system, trainer loop, reporting, and
+//! the federated-learning simulation driver (paper §4 scenarios).
+//!
+//! BurTorch's L3 role in this reproduction: the paper's contribution *is*
+//! the engine, so the coordinator is a clean driver — config parsing, the
+//! serialized-oracle SGD loop with rewind-based batching, loss-curve
+//! logging, and the federated/compression simulation that exercises §4.
+
+mod config;
+mod fed;
+mod trainer;
+
+pub use config::{Config, ConfigError, ModelKind};
+pub use fed::{FedConfig, FedSummary, run_federated};
+pub use trainer::{TrainReport, Trainer, TrainerOptions};

@@ -1,0 +1,320 @@
+//! The serialized-oracle training loop (paper contribution 4).
+//!
+//! One tape, parameters at the base; for each batch the trainer computes
+//! sample oracles ∇f_i(x) **sequentially**, accumulating leaf gradients
+//! into a flat buffer and rewinding the tape after every sample, so peak
+//! activation memory is `max_i MEM(∇f_i)` instead of `Σ_i MEM(∇f_i)`.
+
+use crate::data::{BatchSampler, CharCorpus, Example};
+use crate::metrics::{mean_std, MemInfo, Timer};
+use crate::nn::{CeMode, CharMlp, Gpt};
+use crate::optim::Sgd;
+use crate::scalar::Scalar;
+use crate::tape::{Scratch, Tape};
+
+/// Options for a training run.
+#[derive(Clone, Debug)]
+pub struct TrainerOptions {
+    /// SGD steps.
+    pub steps: usize,
+    /// Batch size b (oracles per step).
+    pub batch: usize,
+    /// Learning rate γ.
+    pub lr: f64,
+    /// Cross-entropy construction.
+    pub ce: CeMode,
+    /// Use `backwardWithScratchStorage` instead of simple backward.
+    pub scratch_backward: bool,
+    /// Log the loss every `log_every` steps (0 = never).
+    pub log_every: usize,
+    /// RNG seed for batch sampling.
+    pub seed: u64,
+}
+
+impl Default for TrainerOptions {
+    fn default() -> Self {
+        TrainerOptions {
+            steps: 100,
+            batch: 1,
+            lr: 0.1,
+            ce: CeMode::Fused,
+            scratch_backward: false,
+            log_every: 0,
+            seed: 0,
+        }
+    }
+}
+
+/// Result of a training run (feeds EXPERIMENTS.md).
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    /// (step, loss) samples of the loss curve.
+    pub loss_curve: Vec<(usize, f64)>,
+    /// Mean per-step compute time (ms), batch preparation excluded.
+    pub compute_ms_mean: f64,
+    /// Std of per-step compute time (ms).
+    pub compute_ms_std: f64,
+    /// Peak private virtual memory at the end (MB).
+    pub vm_peak_mb: f64,
+    /// Peak tape length observed (activation memory proxy).
+    pub peak_tape_nodes: usize,
+    /// Final loss (mean of last 10 logged values).
+    pub final_loss: f64,
+}
+
+/// Generic trainer driving a model's per-sample oracle.
+pub struct Trainer {
+    opts: TrainerOptions,
+}
+
+impl Trainer {
+    /// New trainer.
+    pub fn new(opts: TrainerOptions) -> Trainer {
+        Trainer { opts }
+    }
+
+    /// Train the §2.4 char MLP on example windows.
+    pub fn train_char_mlp<T: Scalar>(
+        &self,
+        tape: &mut Tape<T>,
+        model: &CharMlp,
+        examples: &[Example],
+    ) -> TrainReport {
+        let o = &self.opts;
+        let d = model.num_params();
+        let mut sampler = BatchSampler::new(examples.len(), o.batch, o.seed);
+        let mut opt = Sgd::new(d, o.lr, 0.0);
+        let mut grad_acc = vec![0.0f64; d];
+        let mut scratch = Scratch::new();
+        let mut times = Vec::with_capacity(o.steps);
+        let mut curve = Vec::new();
+        let mut peak_nodes = 0usize;
+
+        for step in 0..o.steps {
+            let batch = sampler.next_batch(); // preparation excluded from timing
+            let timer = Timer::new();
+            grad_acc.iter_mut().for_each(|g| *g = 0.0);
+            let mut loss_sum = 0.0;
+            for &idx in &batch {
+                let ex = &examples[idx];
+                let loss = model.loss(tape, &ex.context, ex.target, o.ce);
+                loss_sum += tape.value(loss).to_f64();
+                if o.scratch_backward {
+                    tape.backward_with_scratch(loss, &mut scratch);
+                } else {
+                    tape.backward_above(loss, model.base);
+                }
+                let first = model.params.first.idx();
+                for (k, g) in tape.grads_range(model.params.first, d).iter().enumerate() {
+                    grad_acc[k] += g.to_f64();
+                }
+                let _ = first;
+                peak_nodes = peak_nodes.max(tape.len());
+                tape.rewind(model.base);
+            }
+            let inv_b = 1.0 / o.batch as f64;
+            grad_acc.iter_mut().for_each(|g| *g *= inv_b);
+            opt.step(
+                tape.values_range_mut(model.params.first, d),
+                &grad_acc,
+            );
+            times.push(timer.seconds() * 1e3);
+            let mean_loss = loss_sum * inv_b;
+            if o.log_every > 0 && step % o.log_every == 0 {
+                curve.push((step, mean_loss));
+            } else if o.log_every == 0 && (step == 0 || step + 1 == o.steps) {
+                curve.push((step, mean_loss));
+            }
+        }
+        finish_report(times, curve, peak_nodes)
+    }
+
+    /// Train the §2.5 GPT on corpus windows.
+    pub fn train_gpt<T: Scalar>(
+        &self,
+        tape: &mut Tape<T>,
+        model: &Gpt,
+        corpus: &CharCorpus,
+    ) -> TrainReport {
+        let o = &self.opts;
+        let d = model.num_params();
+        let mut sampler = BatchSampler::new(corpus.num_windows(), o.batch, o.seed);
+        let mut opt = Sgd::new(d, o.lr, 0.0);
+        let mut grad_acc = vec![0.0f64; d];
+        let mut scratch = Scratch::new();
+        let mut times = Vec::with_capacity(o.steps);
+        let mut curve = Vec::new();
+        let mut peak_nodes = 0usize;
+
+        for step in 0..o.steps {
+            let batch = sampler.next_batch();
+            let timer = Timer::new();
+            grad_acc.iter_mut().for_each(|g| *g = 0.0);
+            let mut loss_sum = 0.0;
+            for &w in &batch {
+                let (x, y) = corpus.window(w);
+                let (x, y) = (x.to_vec(), y.to_vec());
+                let loss = model.loss(tape, &x, &y, o.ce);
+                loss_sum += tape.value(loss).to_f64();
+                if o.scratch_backward {
+                    tape.backward_with_scratch(loss, &mut scratch);
+                } else {
+                    tape.backward_above(loss, model.base);
+                }
+                for (k, g) in tape.grads_range(model.params.first, d).iter().enumerate() {
+                    grad_acc[k] += g.to_f64();
+                }
+                peak_nodes = peak_nodes.max(tape.len());
+                tape.rewind(model.base);
+            }
+            let inv_b = 1.0 / o.batch as f64;
+            grad_acc.iter_mut().for_each(|g| *g *= inv_b);
+            opt.step(tape.values_range_mut(model.params.first, d), &grad_acc);
+            times.push(timer.seconds() * 1e3);
+            let mean_loss = loss_sum * inv_b;
+            if o.log_every > 0 && step % o.log_every == 0 {
+                curve.push((step, mean_loss));
+            } else if o.log_every == 0 && (step == 0 || step + 1 == o.steps) {
+                curve.push((step, mean_loss));
+            }
+        }
+        finish_report(times, curve, peak_nodes)
+    }
+}
+
+fn finish_report(
+    times_ms: Vec<f64>,
+    curve: Vec<(usize, f64)>,
+    peak_nodes: usize,
+) -> TrainReport {
+    let (mean, std) = mean_std(&times_ms);
+    let mem = MemInfo::snapshot();
+    let tail: Vec<f64> = curve
+        .iter()
+        .rev()
+        .take(10)
+        .map(|&(_, l)| l)
+        .collect();
+    let final_loss = if tail.is_empty() {
+        f64::NAN
+    } else {
+        tail.iter().sum::<f64>() / tail.len() as f64
+    };
+    TrainReport {
+        loss_curve: curve,
+        compute_ms_mean: mean,
+        compute_ms_std: std,
+        vm_peak_mb: mem.vm_peak_mb(),
+        peak_tape_nodes: peak_nodes,
+        final_loss,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::names_dataset;
+    use crate::nn::{CharMlpConfig, GptConfig};
+    use crate::rng::Rng;
+
+    #[test]
+    fn mlp_training_reduces_loss() {
+        let ds = names_dataset(300, 16, 1);
+        let mut tape = Tape::<f64>::new();
+        let mut rng = Rng::new(2);
+        let model = CharMlp::new(&mut tape, CharMlpConfig::paper(16), &mut rng);
+        let trainer = Trainer::new(TrainerOptions {
+            steps: 120,
+            batch: 8,
+            lr: 0.3,
+            ce: CeMode::Fused,
+            log_every: 10,
+            ..Default::default()
+        });
+        let report = trainer.train_char_mlp(&mut tape, &model, &ds.examples);
+        let first = report.loss_curve.first().unwrap().1;
+        let last = report.final_loss;
+        assert!(
+            last < first * 0.9,
+            "loss must drop: {first:.3} -> {last:.3}"
+        );
+        assert!(report.compute_ms_mean > 0.0);
+    }
+
+    #[test]
+    fn peak_tape_nodes_is_batch_independent() {
+        // The serialized-oracle design: peak activation memory must not
+        // scale with batch size (paper Tables 6/7 memory columns).
+        let ds = names_dataset(200, 16, 3);
+        let run = |batch: usize| {
+            let mut tape = Tape::<f32>::new();
+            let mut rng = Rng::new(4);
+            let model = CharMlp::new(&mut tape, CharMlpConfig::paper(4), &mut rng);
+            let trainer = Trainer::new(TrainerOptions {
+                steps: 3,
+                batch,
+                lr: 0.1,
+                ..Default::default()
+            });
+            trainer
+                .train_char_mlp(&mut tape, &model, &ds.examples)
+                .peak_tape_nodes
+        };
+        let p1 = run(1);
+        let p16 = run(16);
+        assert_eq!(p1, p16, "activation peak must not grow with b");
+    }
+
+    #[test]
+    fn scratch_and_simple_backward_produce_same_training() {
+        let ds = names_dataset(100, 16, 5);
+        let run = |scratch: bool| {
+            let mut tape = Tape::<f64>::new();
+            let mut rng = Rng::new(6);
+            let model = CharMlp::new(&mut tape, CharMlpConfig::paper(4), &mut rng);
+            let trainer = Trainer::new(TrainerOptions {
+                steps: 10,
+                batch: 2,
+                lr: 0.2,
+                scratch_backward: scratch,
+                log_every: 1,
+                ..Default::default()
+            });
+            let r = trainer.train_char_mlp(&mut tape, &model, &ds.examples);
+            r.loss_curve
+        };
+        let a = run(false);
+        let b = run(true);
+        for ((s1, l1), (s2, l2)) in a.iter().zip(&b) {
+            assert_eq!(s1, s2);
+            assert!(
+                (l1 - l2).abs() < 1e-9,
+                "backward variants diverged: {l1} vs {l2}"
+            );
+        }
+    }
+
+    #[test]
+    fn gpt_smoke_training_step_runs() {
+        let corpus = CharCorpus::shakespeare(2_000, 8);
+        let mut tape = Tape::<f32>::new();
+        let mut rng = Rng::new(7);
+        let cfg = GptConfig {
+            n_layer: 1,
+            d_model: 8,
+            n_head: 2,
+            ..GptConfig::paper()
+        };
+        let model = Gpt::new(&mut tape, cfg, &mut rng);
+        let trainer = Trainer::new(TrainerOptions {
+            steps: 3,
+            batch: 2,
+            lr: 0.05,
+            log_every: 1,
+            ..Default::default()
+        });
+        let r = trainer.train_gpt(&mut tape, &model, &corpus);
+        assert_eq!(r.loss_curve.len(), 3);
+        assert!(r.loss_curve.iter().all(|(_, l)| l.is_finite()));
+    }
+}

@@ -1,0 +1,102 @@
+//! Uniform batch subsampling (paper Eq. 2: S ⊆ [n], |S| = b, u.a.r.).
+
+use crate::rng::Rng;
+
+/// One supervised training example: a fixed-length context and the next
+/// token (the names-model window of paper §2.4).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Example {
+    /// `block_size` token ids of left-padded context.
+    pub context: Vec<u32>,
+    /// The token to predict.
+    pub target: u32,
+}
+
+/// SGD-NICE sampler: each call draws a fresh subset S of size b uniformly
+/// at random from all subsets of [n] (paper Eq. 2 / §4 on Prox-SGD).
+pub struct BatchSampler {
+    n: usize,
+    b: usize,
+    rng: Rng,
+}
+
+impl BatchSampler {
+    /// Sampler over a dataset of `n` examples with batch size `b`.
+    pub fn new(n: usize, b: usize, seed: u64) -> BatchSampler {
+        assert!(b >= 1 && b <= n, "batch size {b} out of range for n={n}");
+        BatchSampler {
+            n,
+            b,
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// Draw the next batch of example indices (distinct, uniform).
+    pub fn next_batch(&mut self) -> Vec<usize> {
+        self.rng.sample_distinct(self.n, self.b)
+    }
+
+    /// Batch size b.
+    pub fn batch_size(&self) -> usize {
+        self.b
+    }
+
+    /// Population size n.
+    pub fn population(&self) -> usize {
+        self.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batches_are_distinct_and_in_range() {
+        let mut s = BatchSampler::new(100, 16, 7);
+        for _ in 0..50 {
+            let b = s.next_batch();
+            assert_eq!(b.len(), 16);
+            let mut sorted = b.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), 16);
+            assert!(b.iter().all(|&i| i < 100));
+        }
+    }
+
+    #[test]
+    fn b_equals_one_is_single_oracle() {
+        let mut s = BatchSampler::new(10, 1, 3);
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..200 {
+            let b = s.next_batch();
+            assert_eq!(b.len(), 1);
+            seen.insert(b[0]);
+        }
+        assert_eq!(seen.len(), 10, "uniform sampling must visit all of [n]");
+    }
+
+    #[test]
+    fn full_batch_is_permutation_of_population() {
+        let mut s = BatchSampler::new(8, 8, 5);
+        let mut b = s.next_batch();
+        b.sort_unstable();
+        assert_eq!(b, (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn oversized_batch_panics() {
+        BatchSampler::new(4, 5, 1);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = BatchSampler::new(1000, 64, 11);
+        let mut b = BatchSampler::new(1000, 64, 11);
+        for _ in 0..10 {
+            assert_eq!(a.next_batch(), b.next_batch());
+        }
+    }
+}

@@ -1,0 +1,272 @@
+//! The Shakespeare character corpus (paper §2.5; Karpathy's char-rnn
+//! tiny-Shakespeare).
+//!
+//! The original 1.1 MB file is unavailable offline; we embed ~8 KB of
+//! genuine public-domain Shakespeare in the same "SPEAKER:\nline" format
+//! and tile it to the requested length. The GPT experiment only needs the
+//! right vocabulary size (V = 65, padded if necessary) and character
+//! statistics — see DESIGN.md Substitutions.
+
+use super::tokenizer::CharTokenizer;
+
+/// Embedded public-domain Shakespeare excerpts (char-rnn formatting).
+const EMBEDDED: &str = "\
+First Citizen:
+Before we proceed any further, hear me speak.
+
+All:
+Speak, speak.
+
+First Citizen:
+You are all resolved rather to die than to famish?
+
+All:
+Resolved. resolved.
+
+First Citizen:
+First, you know Caius Marcius is chief enemy to the people.
+
+All:
+We know't, we know't.
+
+First Citizen:
+Let us kill him, and we'll have corn at our own price.
+Is't a verdict?
+
+All:
+No more talking on't; let it be done: away, away!
+
+Second Citizen:
+One word, good citizens.
+
+First Citizen:
+We are accounted poor citizens, the patricians good.
+What authority surfeits on would relieve us: if they
+would yield us but the superfluity, while it were
+wholesome, we might guess they relieved us humanely;
+but they think we are too dear: the leanness that
+afflicts us, the object of our misery, is as an
+inventory to particularise their abundance; our
+sufferance is a gain to them. Let us revenge this with
+our pikes, ere we become rakes: for the gods know I
+speak this in hunger for bread, not in thirst for revenge.
+
+HAMLET:
+To be, or not to be, that is the question:
+Whether 'tis nobler in the mind to suffer
+The slings and arrows of outrageous fortune,
+Or to take arms against a sea of troubles
+And by opposing end them. To die: to sleep;
+No more; and by a sleep to say we end
+The heart-ache and the thousand natural shocks
+That flesh is heir to, 'tis a consummation
+Devoutly to be wish'd. To die, to sleep;
+To sleep: perchance to dream: ay, there's the rub;
+For in that sleep of death what dreams may come
+When we have shuffled off this mortal coil,
+Must give us pause: there's the respect
+That makes calamity of so long life;
+For who would bear the whips and scorns of time,
+The oppressor's wrong, the proud man's contumely,
+The pangs of despised love, the law's delay,
+The insolence of office and the spurns
+That patient merit of the unworthy takes,
+When he himself might his quietus make
+With a bare bodkin? who would fardels bear,
+To grunt and sweat under a weary life,
+But that the dread of something after death,
+The undiscover'd country from whose bourn
+No traveller returns, puzzles the will
+And makes us rather bear those ills we have
+Than fly to others that we know not of?
+Thus conscience does make cowards of us all;
+And thus the native hue of resolution
+Is sicklied o'er with the pale cast of thought,
+And enterprises of great pith and moment
+With this regard their currents turn awry,
+And lose the name of action.
+
+MACBETH:
+To-morrow, and to-morrow, and to-morrow,
+Creeps in this petty pace from day to day
+To the last syllable of recorded time,
+And all our yesterdays have lighted fools
+The way to dusty death. Out, out, brief candle!
+Life's but a walking shadow, a poor player
+That struts and frets his hour upon the stage
+And then is heard no more: it is a tale
+Told by an idiot, full of sound and fury,
+Signifying nothing.
+
+ROMEO:
+But, soft! what light through yonder window breaks?
+It is the east, and Juliet is the sun.
+Arise, fair sun, and kill the envious moon,
+Who is already sick and pale with grief,
+That thou her maid art far more fair than she:
+Be not her maid, since she is envious;
+Her vestal livery is but sick and green
+And none but fools do wear it; cast it off.
+It is my lady, O, it is my love!
+O, that she knew she were!
+
+JULIET:
+O Romeo, Romeo! wherefore art thou Romeo?
+Deny thy father and refuse thy name;
+Or, if thou wilt not, be but sworn my love,
+And I'll no longer be a Capulet.
+
+PORTIA:
+The quality of mercy is not strain'd,
+It droppeth as the gentle rain from heaven
+Upon the place beneath: it is twice blest;
+It blesseth him that gives and him that takes:
+'Tis mightiest in the mightiest: it becomes
+The throned monarch better than his crown;
+His sceptre shows the force of temporal power,
+The attribute to awe and majesty,
+Wherein doth sit the dread and fear of kings;
+But mercy is above this sceptred sway;
+It is enthroned in the hearts of kings,
+It is an attribute to God himself;
+And earthly power doth then show likest God's
+When mercy seasons justice.
+
+KING HENRY V:
+Once more unto the breach, dear friends, once more;
+Or close the wall up with our English dead.
+In peace there's nothing so becomes a man
+As modest stillness and humility:
+But when the blast of war blows in our ears,
+Then imitate the action of the tiger;
+Stiffen the sinews, summon up the blood,
+Disguise fair nature with hard-favour'd rage;
+Then lend the eye a terrible aspect.
+
+JAQUES:
+All the world's a stage,
+And all the men and women merely players:
+They have their exits and their entrances;
+And one man in his time plays many parts,
+His acts being seven ages. At first the infant,
+Mewling and puking in the nurse's arms.
+And then the whining school-boy, with his satchel
+And shining morning face, creeping like snail
+Unwillingly to school. And then the lover,
+Sighing like furnace, with a woeful ballad
+Made to his mistress' eyebrow. Then a soldier,
+Full of strange oaths and bearded like the pard,
+Jealous in honour, sudden and quick in quarrel,
+Seeking the bubble reputation
+Even in the cannon's mouth.
+
+PROSPERO:
+Our revels now are ended. These our actors,
+As I foretold you, were all spirits and
+Are melted into air, into thin air:
+And, like the baseless fabric of this vision,
+The cloud-capp'd towers, the gorgeous palaces,
+The solemn temples, the great globe itself,
+Yea, all which it inherit, shall dissolve
+And, like this insubstantial pageant faded,
+Leave not a rack behind. We are such stuff
+As dreams are made on, and our little life
+Is rounded with a sleep.
+
+MARK ANTONY:
+Friends, Romans, countrymen, lend me your ears;
+I come to bury Caesar, not to praise him.
+The evil that men do lives after them;
+The good is oft interred with their bones;
+So let it be with Caesar. The noble Brutus
+Hath told you Caesar was ambitious:
+If it were so, it was a grievous fault,
+And grievously hath Caesar answer'd it.
+";
+
+/// Return the embedded corpus tiled to at least `min_chars` characters.
+pub fn shakespeare_text(min_chars: usize) -> String {
+    let mut s = String::with_capacity(min_chars + EMBEDDED.len());
+    while s.len() < min_chars {
+        s.push_str(EMBEDDED);
+    }
+    if s.is_empty() {
+        s.push_str(EMBEDDED);
+    }
+    s
+}
+
+/// A tokenized character corpus with next-token training windows.
+pub struct CharCorpus {
+    /// The tokenizer (vocab padded to 65 like the paper's GPT setup).
+    pub tokenizer: CharTokenizer,
+    /// Tokenized text.
+    pub tokens: Vec<u32>,
+    /// Context length.
+    pub block_size: usize,
+}
+
+impl CharCorpus {
+    /// Build the paper's GPT-3-like corpus: `min_chars` of Shakespeare,
+    /// vocabulary padded to 65, context length `block_size` (paper: 8).
+    pub fn shakespeare(min_chars: usize, block_size: usize) -> CharCorpus {
+        let text = shakespeare_text(min_chars);
+        let tokenizer = CharTokenizer::from_text(&text, 65);
+        let tokens = tokenizer.encode(&text);
+        CharCorpus {
+            tokenizer,
+            tokens,
+            block_size,
+        }
+    }
+
+    /// Number of valid training windows.
+    pub fn num_windows(&self) -> usize {
+        self.tokens.len().saturating_sub(self.block_size)
+    }
+
+    /// The `i`-th window: `block_size` input tokens and `block_size`
+    /// next-token targets (GPT-style dense supervision).
+    pub fn window(&self, i: usize) -> (&[u32], &[u32]) {
+        let x = &self.tokens[i..i + self.block_size];
+        let y = &self.tokens[i + 1..i + 1 + self.block_size];
+        (x, y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_vocab_is_65_like_the_paper() {
+        let c = CharCorpus::shakespeare(10_000, 8);
+        assert_eq!(c.tokenizer.vocab(), 65);
+    }
+
+    #[test]
+    fn tiling_reaches_requested_length() {
+        let c = shakespeare_text(50_000);
+        assert!(c.len() >= 50_000);
+        assert!(c.contains("To be, or not to be"));
+    }
+
+    #[test]
+    fn windows_are_shifted_by_one() {
+        let c = CharCorpus::shakespeare(5_000, 8);
+        let (x, y) = c.window(10);
+        assert_eq!(x.len(), 8);
+        assert_eq!(y.len(), 8);
+        assert_eq!(x[1..], y[..7]);
+        assert!(c.num_windows() > 1_000);
+    }
+
+    #[test]
+    fn embedded_text_is_ascii_ish() {
+        // char-rnn’s tiny-Shakespeare is pure ASCII; ours must be too so
+        // that byte and char counts agree for the tokenizer padding.
+        assert!(EMBEDDED.is_ascii());
+        let distinct: std::collections::BTreeSet<char> = EMBEDDED.chars().collect();
+        assert!(distinct.len() <= 65, "vocab must fit the paper's V = 65, got {}", distinct.len());
+    }
+}

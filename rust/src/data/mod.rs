@@ -1,0 +1,21 @@
+//! Data substrate: char-level tokenizers, embedded corpora, and the
+//! uniform batch sampler of the paper's Eq. (2) (SGD-NICE subsampling).
+//!
+//! The paper trains on (a) the `makemore` names dataset (Karpathy 2023b;
+//! 27-token vocabulary: 26 letters + one combined start/end/pad token) and
+//! (b) the tiny-Shakespeare corpus (Karpathy 2015; 65-token vocabulary).
+//! Neither file ships in this offline environment, so `names` embeds a
+//! genuine list of common names extended by a Markov-chain generator, and
+//! `corpus` embeds public-domain Shakespeare text — see DESIGN.md
+//! Substitutions: dataset *content* does not affect any latency/memory
+//! claim, only the vocabulary/shape must match, which it does.
+
+mod batch;
+mod corpus;
+mod names;
+mod tokenizer;
+
+pub use batch::{BatchSampler, Example};
+pub use corpus::{shakespeare_text, CharCorpus};
+pub use names::{names_dataset, NamesDataset};
+pub use tokenizer::CharTokenizer;

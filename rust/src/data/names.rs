@@ -1,0 +1,215 @@
+//! The names dataset (paper §2.4; Karpathy's `makemore` names.txt).
+//!
+//! The original file (32K names, yielding n = 228,146 training windows at
+//! block size 16) is not available offline, so we embed 256 genuine common
+//! names and extend them with a deterministic order-2 Markov generator
+//! trained on the embedded list. The resulting dataset has the same
+//! alphabet, the same length statistics, and can be sized to the paper's
+//! n — see DESIGN.md Substitutions.
+
+use super::batch::Example;
+use super::tokenizer::CharTokenizer;
+use crate::rng::Rng;
+
+/// 256 common lowercase names (seed set for the Markov extension).
+pub const SEED_NAMES: &[&str] = &[
+    "emma", "olivia", "ava", "isabella", "sophia", "charlotte", "mia", "amelia", "harper",
+    "evelyn", "abigail", "emily", "elizabeth", "mila", "ella", "avery", "sofia", "camila",
+    "aria", "scarlett", "victoria", "madison", "luna", "grace", "chloe", "penelope", "layla",
+    "riley", "zoey", "nora", "lily", "eleanor", "hannah", "lillian", "addison", "aubrey",
+    "ellie", "stella", "natalie", "zoe", "leah", "hazel", "violet", "aurora", "savannah",
+    "audrey", "brooklyn", "bella", "claire", "skylar", "lucy", "paisley", "everly", "anna",
+    "caroline", "nova", "genesis", "emilia", "kennedy", "samantha", "maya", "willow", "kinsley",
+    "naomi", "aaliyah", "elena", "sarah", "ariana", "allison", "gabriella", "alice", "madelyn",
+    "cora", "ruby", "eva", "serenity", "autumn", "adeline", "hailey", "gianna", "valentina",
+    "isla", "eliana", "quinn", "nevaeh", "ivy", "sadie", "piper", "lydia", "alexa", "josephine",
+    "emery", "julia", "delilah", "arianna", "vivian", "kaylee", "sophie", "brielle", "madeline",
+    "liam", "noah", "william", "james", "oliver", "benjamin", "elijah", "lucas", "mason",
+    "logan", "alexander", "ethan", "jacob", "michael", "daniel", "henry", "jackson", "sebastian",
+    "aiden", "matthew", "samuel", "david", "joseph", "carter", "owen", "wyatt", "john", "jack",
+    "luke", "jayden", "dylan", "grayson", "levi", "isaac", "gabriel", "julian", "mateo",
+    "anthony", "jaxon", "lincoln", "joshua", "christopher", "andrew", "theodore", "caleb",
+    "ryan", "asher", "nathan", "thomas", "leo", "isaiah", "charles", "josiah", "hudson",
+    "christian", "hunter", "connor", "eli", "ezra", "aaron", "landon", "adrian", "jonathan",
+    "nolan", "jeremiah", "easton", "elias", "colton", "cameron", "carson", "robert", "angel",
+    "maverick", "nicholas", "dominic", "jaxson", "greyson", "adam", "ian", "austin", "santiago",
+    "jordan", "cooper", "brayden", "roman", "evan", "ezekiel", "xavier", "jose", "jace",
+    "jameson", "leonardo", "bryson", "axel", "everett", "parker", "kayden", "miles", "sawyer",
+    "jason", "declan", "weston", "micah", "ayden", "wesley", "luca", "vincent", "damian",
+    "zachary", "silas", "gavin", "chase", "kai", "emmett", "harrison", "nathaniel", "kingston",
+    "cole", "tyler", "bennett", "bentley", "ryker", "tristan", "brandon", "kevin", "luis",
+    "marcus", "felix", "oscar", "simon", "arthur", "finn", "theo", "abel", "edward", "george",
+    "philip", "walter", "hector", "ivan", "peter", "victor", "yusuf", "omar", "amir", "dante",
+    "enzo", "hugo", "jasper", "karl", "lorenzo", "marco", "nico", "otto", "pablo", "quentin",
+    "rafael", "stefan", "tobias", "ulysses", "vance", "wade", "xander", "yosef", "zane",
+    "amara", "bianca", "celeste", "daphne", "esme", "freya", "gemma", "iris",
+];
+
+/// The names dataset: tokenized windows of (context → next char).
+pub struct NamesDataset {
+    /// The tokenizer (vocab 27).
+    pub tokenizer: CharTokenizer,
+    /// All names (seed + generated).
+    pub names: Vec<String>,
+    /// All (context, target) training windows.
+    pub examples: Vec<Example>,
+    /// Context length used to build the windows.
+    pub block_size: usize,
+}
+
+/// Build the dataset: `total_names` names (seed set + Markov-generated),
+/// sliding windows of length `block_size` with `.`-padding, exactly the
+/// `makemore` construction the paper uses (block size 16 in §2.4).
+pub fn names_dataset(total_names: usize, block_size: usize, seed: u64) -> NamesDataset {
+    let tokenizer = CharTokenizer::names();
+    let mut names: Vec<String> = SEED_NAMES.iter().map(|s| s.to_string()).collect();
+    if total_names > names.len() {
+        let gen = MarkovNames::fit(SEED_NAMES);
+        let mut rng = Rng::new(seed);
+        while names.len() < total_names {
+            let name = gen.sample(&mut rng);
+            if name.len() >= 2 {
+                names.push(name);
+            }
+        }
+    } else {
+        names.truncate(total_names);
+    }
+
+    let mut examples = Vec::new();
+    for name in &names {
+        // "....emma." style: start with an all-pad context, slide through
+        // the name, predicting each char then the terminating '.'.
+        let mut context = vec![0u32; block_size];
+        for ch in name.chars().chain(std::iter::once('.')) {
+            let target = tokenizer.encode_char(ch);
+            examples.push(Example {
+                context: context.clone(),
+                target,
+            });
+            context.rotate_left(1);
+            *context.last_mut().unwrap() = target;
+        }
+    }
+    NamesDataset {
+        tokenizer,
+        names,
+        examples,
+        block_size,
+    }
+}
+
+/// Order-2 character Markov chain fitted on the seed names — used only to
+/// extend the dataset to paper scale; statistics mimic real names.
+struct MarkovNames {
+    /// counts[prev2*27 + prev1][next] (27³ table, dense).
+    counts: Vec<[u32; 27]>,
+}
+
+impl MarkovNames {
+    fn fit(names: &[&str]) -> MarkovNames {
+        let tk = CharTokenizer::names();
+        let mut counts = vec![[0u32; 27]; 27 * 27];
+        for name in names {
+            let ids: Vec<u32> = std::iter::repeat(0)
+                .take(2)
+                .chain(name.chars().map(|c| tk.encode_char(c)))
+                .chain(std::iter::once(0))
+                .collect();
+            for w in ids.windows(3) {
+                counts[(w[0] * 27 + w[1]) as usize][w[2] as usize] += 1;
+            }
+        }
+        MarkovNames { counts }
+    }
+
+    fn sample(&self, rng: &mut Rng) -> String {
+        let tk = CharTokenizer::names();
+        let (mut p2, mut p1) = (0u32, 0u32);
+        let mut out = String::new();
+        for _ in 0..20 {
+            let row = &self.counts[(p2 * 27 + p1) as usize];
+            let total: u32 = row.iter().sum();
+            if total == 0 {
+                break;
+            }
+            let mut pick = rng.below(total as u64) as u32;
+            let mut next = 0u32;
+            for (i, &c) in row.iter().enumerate() {
+                if pick < c {
+                    next = i as u32;
+                    break;
+                }
+                pick -= c;
+            }
+            if next == 0 {
+                break;
+            }
+            out.push(tk.decode_id(next));
+            p2 = p1;
+            p1 = next;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seed_names_are_lowercase_alpha() {
+        for n in SEED_NAMES {
+            assert!(n.chars().all(|c| c.is_ascii_lowercase()), "{n}");
+            assert!(n.len() >= 2);
+        }
+        assert!(SEED_NAMES.len() >= 256);
+    }
+
+    #[test]
+    fn dataset_windows_match_makemore_construction() {
+        let ds = names_dataset(1, 3, 0);
+        // First name is "emma": windows ... -> e, ..e -> m, .em -> m,
+        // emm -> a, mma -> .
+        assert_eq!(ds.examples.len(), 5);
+        let tk = &ds.tokenizer;
+        assert_eq!(ds.examples[0].context, vec![0, 0, 0]);
+        assert_eq!(ds.examples[0].target, tk.encode_char('e'));
+        assert_eq!(ds.examples[4].target, 0, "final target is the end token");
+        assert_eq!(
+            ds.examples[3].context,
+            vec![
+                tk.encode_char('e'),
+                tk.encode_char('m'),
+                tk.encode_char('m')
+            ]
+        );
+    }
+
+    #[test]
+    fn generated_names_extend_dataset_deterministically() {
+        let a = names_dataset(600, 16, 42);
+        let b = names_dataset(600, 16, 42);
+        assert_eq!(a.names.len(), 600);
+        assert_eq!(a.names, b.names, "same seed ⇒ same dataset");
+        // Generated names are in-vocabulary.
+        for n in &a.names {
+            for c in n.chars() {
+                assert!(a.tokenizer.contains(c), "{n}: {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn example_counts_scale_with_names() {
+        let small = names_dataset(100, 16, 1).examples.len();
+        let large = names_dataset(400, 16, 1).examples.len();
+        assert!(large > 3 * small);
+    }
+
+    #[test]
+    fn block_size_is_respected() {
+        let ds = names_dataset(50, 16, 3);
+        assert!(ds.examples.iter().all(|e| e.context.len() == 16));
+    }
+}

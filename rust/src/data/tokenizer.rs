@@ -1,0 +1,130 @@
+//! Character-level tokenizer.
+//!
+//! Both paper workloads tokenize at the character level: the names model
+//! uses `.` (index 0) as the combined start/end/padding token plus `a..z`
+//! (vocab 27); the GPT model uses the distinct characters of the corpus
+//! (vocab 65 for tiny-Shakespeare).
+
+use std::collections::BTreeMap;
+
+/// Bidirectional char ↔ token-id mapping.
+#[derive(Debug, Clone)]
+pub struct CharTokenizer {
+    /// Sorted unique characters; index = token id.
+    chars: Vec<char>,
+    /// Reverse map.
+    ids: BTreeMap<char, u32>,
+}
+
+impl CharTokenizer {
+    /// Build from the distinct characters of `text` (sorted, so ids are
+    /// stable across runs). Optionally pad the vocabulary to `min_vocab`
+    /// with unused sentinel slots, as the paper does to reach V = 65.
+    pub fn from_text(text: &str, min_vocab: usize) -> CharTokenizer {
+        let mut chars: Vec<char> = {
+            let mut set: Vec<char> = text.chars().collect();
+            set.sort_unstable();
+            set.dedup();
+            set
+        };
+        let mut pad_code = 0xE000u32; // private use area: never collides
+        while chars.len() < min_vocab {
+            chars.push(char::from_u32(pad_code).unwrap());
+            pad_code += 1;
+        }
+        let ids = chars
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| (c, i as u32))
+            .collect();
+        CharTokenizer { chars, ids }
+    }
+
+    /// The names-model tokenizer: `.` then `a..z` (vocab 27, paper §2.4).
+    pub fn names() -> CharTokenizer {
+        let mut chars = vec!['.'];
+        chars.extend('a'..='z');
+        let ids = chars
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| (c, i as u32))
+            .collect();
+        CharTokenizer { chars, ids }
+    }
+
+    /// Vocabulary size V.
+    pub fn vocab(&self) -> usize {
+        self.chars.len()
+    }
+
+    /// Encode one char; panics on out-of-vocabulary input.
+    pub fn encode_char(&self, c: char) -> u32 {
+        *self
+            .ids
+            .get(&c)
+            .unwrap_or_else(|| panic!("char {c:?} not in vocabulary"))
+    }
+
+    /// Encode a string.
+    pub fn encode(&self, s: &str) -> Vec<u32> {
+        s.chars().map(|c| self.encode_char(c)).collect()
+    }
+
+    /// Decode one token id.
+    pub fn decode_id(&self, id: u32) -> char {
+        self.chars[id as usize]
+    }
+
+    /// Decode a token sequence.
+    pub fn decode(&self, ids: &[u32]) -> String {
+        ids.iter().map(|&i| self.decode_id(i)).collect()
+    }
+
+    /// True if `c` is in vocabulary.
+    pub fn contains(&self, c: char) -> bool {
+        self.ids.contains_key(&c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_tokenizer_matches_paper_vocab() {
+        let t = CharTokenizer::names();
+        assert_eq!(t.vocab(), 27, "26 letters + start/end/pad (paper §2.4)");
+        assert_eq!(t.encode_char('.'), 0);
+        assert_eq!(t.encode_char('a'), 1);
+        assert_eq!(t.encode_char('z'), 26);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let t = CharTokenizer::names();
+        let ids = t.encode(".emma.");
+        assert_eq!(t.decode(&ids), ".emma.");
+    }
+
+    #[test]
+    fn from_text_sorts_and_dedups() {
+        let t = CharTokenizer::from_text("banana", 0);
+        assert_eq!(t.vocab(), 3); // a, b, n
+        assert_eq!(t.encode("ban"), vec![1, 0, 2]);
+    }
+
+    #[test]
+    fn from_text_pads_vocabulary() {
+        let t = CharTokenizer::from_text("ab", 65);
+        assert_eq!(t.vocab(), 65, "paper GPT experiment pads to V = 65");
+        // Original chars keep low ids.
+        assert_eq!(t.encode_char('a'), 0);
+        assert_eq!(t.encode_char('b'), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "not in vocabulary")]
+    fn oov_panics() {
+        CharTokenizer::names().encode_char('!');
+    }
+}

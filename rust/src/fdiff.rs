@@ -1,0 +1,177 @@
+//! Finite-difference gradient oracles (paper §1.1, Eq. 4).
+//!
+//! The paper motivates AD by contrasting it with the forward finite
+//! difference scheme — here we implement central and forward differences
+//! both as (a) the paper's pedagogical baseline and (b) the ground truth
+//! for gradient-checking every op and every model in the test suite.
+
+use crate::scalar::Scalar;
+use crate::tape::{Tape, Value};
+
+/// Forward difference: (f(x + ε·eᵢ) − f(x)) / ε for every coordinate.
+/// Requires d+1 evaluations of `f` (the ×d overhead the paper cites).
+pub fn forward_diff<F: FnMut(&[f64]) -> f64>(f: &mut F, x: &[f64], eps: f64) -> Vec<f64> {
+    let f0 = f(x);
+    let mut xp = x.to_vec();
+    let mut g = Vec::with_capacity(x.len());
+    for i in 0..x.len() {
+        let xi = xp[i];
+        xp[i] = xi + eps;
+        g.push((f(&xp) - f0) / eps);
+        xp[i] = xi;
+    }
+    g
+}
+
+/// Central difference: (f(x + ε·eᵢ) − f(x − ε·eᵢ)) / 2ε — O(ε²) error,
+/// 2d evaluations.
+pub fn central_diff<F: FnMut(&[f64]) -> f64>(f: &mut F, x: &[f64], eps: f64) -> Vec<f64> {
+    let mut xp = x.to_vec();
+    let mut g = Vec::with_capacity(x.len());
+    for i in 0..x.len() {
+        let xi = xp[i];
+        xp[i] = xi + eps;
+        let fp = f(&xp);
+        xp[i] = xi - eps;
+        let fm = f(&xp);
+        xp[i] = xi;
+        g.push((fp - fm) / (2.0 * eps));
+    }
+    g
+}
+
+/// Directional derivative ⟨∇f(x), s⟩ by central difference along `s`.
+pub fn directional_diff<F: FnMut(&[f64]) -> f64>(
+    f: &mut F,
+    x: &[f64],
+    s: &[f64],
+    eps: f64,
+) -> f64 {
+    assert_eq!(x.len(), s.len());
+    let xp: Vec<f64> = x.iter().zip(s).map(|(&a, &d)| a + eps * d).collect();
+    let xm: Vec<f64> = x.iter().zip(s).map(|(&a, &d)| a - eps * d).collect();
+    (f(&xp) - f(&xm)) / (2.0 * eps)
+}
+
+/// Result of a gradient check.
+#[derive(Debug, Clone)]
+pub struct GradCheck {
+    /// Max |ad − fd| / max(1, |ad|, |fd|) over all coordinates.
+    pub max_rel_err: f64,
+    /// Index where the max occurred.
+    pub argmax: usize,
+    /// AD gradient at argmax.
+    pub ad: f64,
+    /// FD gradient at argmax.
+    pub fd: f64,
+}
+
+impl GradCheck {
+    /// True when the relative error is below `tol`.
+    pub fn ok(&self, tol: f64) -> bool {
+        self.max_rel_err < tol
+    }
+}
+
+/// Check a tape-built function against central differences.
+///
+/// `build` receives a fresh tape plus leaf ids for `x` and must return the
+/// scalar root. AD gradients of the leaves are compared against central
+/// differences of the same construction evaluated at perturbed points.
+pub fn gradcheck<F>(x: &[f64], eps: f64, mut build: F) -> GradCheck
+where
+    F: FnMut(&mut Tape<f64>, &[Value]) -> Value,
+{
+    // AD gradient.
+    let mut tape = Tape::new();
+    let leaves: Vec<Value> = x.iter().map(|&v| tape.leaf(v)).collect();
+    let root = build(&mut tape, &leaves);
+    tape.backward(root);
+    let ad: Vec<f64> = leaves.iter().map(|&l| tape.grad(l)).collect();
+
+    // FD gradient through the same builder.
+    let mut eval = |xs: &[f64]| -> f64 {
+        let mut t = Tape::new();
+        let ls: Vec<Value> = xs.iter().map(|&v| t.leaf(v)).collect();
+        let r = build(&mut t, &ls);
+        t.value(r).to_f64()
+    };
+    let fd = central_diff(&mut eval, x, eps);
+
+    let mut worst = GradCheck {
+        max_rel_err: 0.0,
+        argmax: 0,
+        ad: ad.first().copied().unwrap_or(0.0),
+        fd: fd.first().copied().unwrap_or(0.0),
+    };
+    for i in 0..x.len() {
+        let denom = 1.0f64.max(ad[i].abs()).max(fd[i].abs());
+        let rel = (ad[i] - fd[i]).abs() / denom;
+        if rel > worst.max_rel_err {
+            worst = GradCheck {
+                max_rel_err: rel,
+                argmax: i,
+                ad: ad[i],
+                fd: fd[i],
+            };
+        }
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn central_diff_of_quadratic_is_exact_to_eps2() {
+        let mut f = |x: &[f64]| x[0] * x[0] + 3.0 * x[1];
+        let g = central_diff(&mut f, &[2.0, 5.0], 1e-5);
+        assert!((g[0] - 4.0).abs() < 1e-8);
+        assert!((g[1] - 3.0).abs() < 1e-8);
+    }
+
+    #[test]
+    fn forward_diff_has_first_order_error() {
+        let mut f = |x: &[f64]| x[0] * x[0];
+        let eps = 1e-3;
+        let g = forward_diff(&mut f, &[1.0], eps);
+        // f(x+e)-f(x) / e = 2x + e ⇒ error ≈ eps.
+        assert!((g[0] - 2.0 - eps).abs() < 1e-6);
+    }
+
+    #[test]
+    fn directional_matches_full_gradient_dot() {
+        let mut f = |x: &[f64]| x[0] * x[1] + x[1].sin();
+        let x = [1.5, -0.5];
+        let s = [0.6, 0.8];
+        let d = directional_diff(&mut f, &x, &s, 1e-6);
+        let expect = x[1] * s[0] + (x[0] + x[1].cos()) * s[1];
+        assert!((d - expect).abs() < 1e-8, "d={d} expect={expect}");
+    }
+
+    #[test]
+    fn gradcheck_passes_on_figure1() {
+        let gc = gradcheck(&[-41.0, 2.0], 1e-6, |t, xs| {
+            let (a, b) = (xs[0], xs[1]);
+            let c = t.add(a, b);
+            let ab = t.mul(a, b);
+            let b3 = t.pow3(b);
+            let d = t.add(ab, b3);
+            let e = t.sub(c, d);
+            let f = t.sqr(e);
+            t.mul_const(f, 0.5)
+        });
+        assert!(gc.ok(1e-6), "{gc:?}");
+    }
+
+    #[test]
+    fn gradcheck_catches_wrong_gradient() {
+        // Deliberately compare d/dx of x² against FD of x³ — must fail.
+        let mut eval_cubic = |xs: &[f64]| xs[0].powi(3);
+        let fd = central_diff(&mut eval_cubic, &[2.0], 1e-6);
+        let ad_of_square = 2.0 * 2.0;
+        let rel = (fd[0] - ad_of_square).abs() / fd[0].abs().max(1.0);
+        assert!(rel > 0.1, "sanity: mismatch must be detectable");
+    }
+}

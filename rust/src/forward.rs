@@ -1,0 +1,207 @@
+//! Forward-accumulation-mode AD via dual numbers (paper §1.1, Rall 1981).
+//!
+//! The paper notes forward mode is the memory-optimal way to compute a
+//! single directional derivative ⟨∇f(x), s⟩: one pass, no stored
+//! activations, cost within [2, 5/2]× of evaluating f. We provide it both
+//! as a correctness cross-check for the reverse-mode tape and as a
+//! building block for randomized / sketched gradient estimators (§4).
+
+use std::ops::{Add, Div, Mul, Neg, Sub};
+
+/// Dual number x + ẋ·ε with ε² = 0.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Dual {
+    /// Primal value.
+    pub v: f64,
+    /// Tangent (directional derivative accumulator).
+    pub t: f64,
+}
+
+impl Dual {
+    /// Constant (zero tangent).
+    pub fn c(v: f64) -> Dual {
+        Dual { v, t: 0.0 }
+    }
+
+    /// Variable seeded with tangent `t` (component of the direction s).
+    pub fn var(v: f64, t: f64) -> Dual {
+        Dual { v, t }
+    }
+
+    pub fn relu(self) -> Dual {
+        if self.v > 0.0 {
+            self
+        } else {
+            Dual { v: 0.0, t: 0.0 }
+        }
+    }
+    pub fn tanh(self) -> Dual {
+        let y = self.v.tanh();
+        Dual {
+            v: y,
+            t: self.t * (1.0 - y * y),
+        }
+    }
+    pub fn exp(self) -> Dual {
+        let y = self.v.exp();
+        Dual { v: y, t: self.t * y }
+    }
+    pub fn ln(self) -> Dual {
+        Dual {
+            v: self.v.ln(),
+            t: self.t / self.v,
+        }
+    }
+    pub fn neg_log(self) -> Dual {
+        Dual {
+            v: -self.v.ln(),
+            t: -self.t / self.v,
+        }
+    }
+    pub fn sigmoid(self) -> Dual {
+        let s = 1.0 / (1.0 + (-self.v).exp());
+        Dual {
+            v: s,
+            t: self.t * s * (1.0 - s),
+        }
+    }
+    pub fn sqr(self) -> Dual {
+        Dual {
+            v: self.v * self.v,
+            t: 2.0 * self.v * self.t,
+        }
+    }
+    pub fn pow3(self) -> Dual {
+        Dual {
+            v: self.v.powi(3),
+            t: 3.0 * self.v * self.v * self.t,
+        }
+    }
+    pub fn sqrt(self) -> Dual {
+        let y = self.v.sqrt();
+        Dual {
+            v: y,
+            t: self.t / (2.0 * y),
+        }
+    }
+    pub fn inv(self) -> Dual {
+        let y = 1.0 / self.v;
+        Dual {
+            v: y,
+            t: -self.t * y * y,
+        }
+    }
+}
+
+impl Add for Dual {
+    type Output = Dual;
+    fn add(self, r: Dual) -> Dual {
+        Dual {
+            v: self.v + r.v,
+            t: self.t + r.t,
+        }
+    }
+}
+impl Sub for Dual {
+    type Output = Dual;
+    fn sub(self, r: Dual) -> Dual {
+        Dual {
+            v: self.v - r.v,
+            t: self.t - r.t,
+        }
+    }
+}
+impl Mul for Dual {
+    type Output = Dual;
+    fn mul(self, r: Dual) -> Dual {
+        Dual {
+            v: self.v * r.v,
+            t: self.t * r.v + self.v * r.t,
+        }
+    }
+}
+impl Div for Dual {
+    type Output = Dual;
+    fn div(self, r: Dual) -> Dual {
+        Dual {
+            v: self.v / r.v,
+            t: (self.t * r.v - self.v * r.t) / (r.v * r.v),
+        }
+    }
+}
+impl Neg for Dual {
+    type Output = Dual;
+    fn neg(self) -> Dual {
+        Dual {
+            v: -self.v,
+            t: -self.t,
+        }
+    }
+}
+
+/// Directional derivative ⟨∇f(x), s⟩ in one forward pass.
+pub fn jvp<F: Fn(&[Dual]) -> Dual>(f: F, x: &[f64], s: &[f64]) -> (f64, f64) {
+    assert_eq!(x.len(), s.len());
+    let duals: Vec<Dual> = x
+        .iter()
+        .zip(s)
+        .map(|(&v, &t)| Dual::var(v, t))
+        .collect();
+    let out = f(&duals);
+    (out.v, out.t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dual_arithmetic_product_rule() {
+        let x = Dual::var(3.0, 1.0);
+        let y = Dual::c(4.0);
+        let p = x * y + x.sqr();
+        assert_eq!(p.v, 21.0);
+        assert_eq!(p.t, 4.0 + 6.0); // d/dx (xy + x²) = y + 2x
+    }
+
+    #[test]
+    fn quotient_rule() {
+        let x = Dual::var(2.0, 1.0);
+        let y = Dual::c(5.0);
+        let q = y / x;
+        assert_eq!(q.v, 2.5);
+        assert!((q.t + 5.0 / 4.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn jvp_matches_reverse_mode_on_figure1() {
+        // f(a,b) from paper Figure 1; reverse gives ∇f = (−35, 1050).
+        let f = |xs: &[Dual]| {
+            let (a, b) = (xs[0], xs[1]);
+            let c = a + b;
+            let d = a * b + b.pow3();
+            let e = c - d;
+            e.sqr() * Dual::c(0.5)
+        };
+        let (v, jv) = jvp(f, &[-41.0, 2.0], &[1.0, 0.0]);
+        assert_eq!(v, 612.5);
+        assert_eq!(jv, -35.0);
+        let (_, jv_b) = jvp(f, &[-41.0, 2.0], &[0.0, 1.0]);
+        assert_eq!(jv_b, 1050.0);
+        // Arbitrary direction = linear combination.
+        let (_, jv_dir) = jvp(f, &[-41.0, 2.0], &[2.0, -1.0]);
+        assert_eq!(jv_dir, 2.0 * -35.0 - 1050.0);
+    }
+
+    #[test]
+    fn transcendental_chain() {
+        let f = |xs: &[Dual]| xs[0].tanh().exp().ln().sigmoid();
+        let x = 0.4f64;
+        let (_, jv) = jvp(f, &[x], &[1.0]);
+        // f = sigmoid(tanh(x)) since ln∘exp = id.
+        let t = x.tanh();
+        let s = 1.0 / (1.0 + (-t).exp());
+        let expect = s * (1.0 - s) * (1.0 - t * t);
+        assert!((jv - expect).abs() < 1e-14);
+    }
+}

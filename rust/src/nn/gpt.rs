@@ -1,0 +1,335 @@
+//! The GPT-3-like decoder model (paper §2.5).
+//!
+//! Miniaturized GPT-3 configuration from the paper: n_layer = 6 blocks,
+//! k_heads = 6, k_block_size = 8, d_model = 24, V = 65, FP32, trained with
+//! SGD — 46,289 trainable parameters (we reproduce the count exactly; see
+//! the `param_count_matches_paper` test).
+
+use super::{
+    cross_entropy_composed, cross_entropy_fused, Act, CeMode, LayerNorm, Linear, ParamAlloc,
+    ParamRange, TransformerBlock,
+};
+use crate::rng::Rng;
+use crate::scalar::Scalar;
+use crate::tape::{Mark, Tape, Value};
+
+/// GPT configuration (paper §2.5 "GPT-3-like model: configuration").
+#[derive(Clone, Copy, Debug)]
+pub struct GptConfig {
+    /// Vocabulary size V (paper: 65).
+    pub vocab: usize,
+    /// Context length / block size (paper: 8).
+    pub block_size: usize,
+    /// Embedding width d_model (paper: 24).
+    pub d_model: usize,
+    /// Number of transformer blocks (paper: 6).
+    pub n_layer: usize,
+    /// Heads per block (paper: 6).
+    pub n_head: usize,
+    /// Include a final LayerNorm before the LM head. The paper's 46,289
+    /// parameter count corresponds to `false`; `gpt.py` upstream uses
+    /// `true` (adds 2·d_model params).
+    pub final_ln: bool,
+}
+
+impl GptConfig {
+    /// The paper's exact configuration (46,289 parameters).
+    pub fn paper() -> GptConfig {
+        GptConfig {
+            vocab: 65,
+            block_size: 8,
+            d_model: 24,
+            n_layer: 6,
+            n_head: 6,
+            final_ln: false,
+        }
+    }
+
+    /// A scaled configuration (used by the end-to-end example to stress a
+    /// larger graph).
+    pub fn scaled(d_model: usize, n_layer: usize, n_head: usize, block_size: usize) -> GptConfig {
+        GptConfig {
+            vocab: 65,
+            block_size,
+            d_model,
+            n_layer,
+            n_head,
+            final_ln: true,
+        }
+    }
+}
+
+/// The scalar-granularity GPT model.
+pub struct Gpt {
+    /// Configuration.
+    pub cfg: GptConfig,
+    /// Token embedding table, `vocab × d_model`.
+    pub tok_emb: ParamRange,
+    /// Positional embedding table, `block_size × d_model`.
+    pub pos_emb: ParamRange,
+    /// Transformer blocks.
+    pub blocks: Vec<TransformerBlock>,
+    /// Optional final LayerNorm.
+    pub ln_f: Option<LayerNorm>,
+    /// LM head, `d_model → vocab` (with bias).
+    pub lm_head: Linear,
+    /// Whole contiguous trainable range.
+    pub params: ParamRange,
+    /// Tape checkpoint taken right after construction — rewinding to this
+    /// mark drops all per-sample activations (the paper's batch trick).
+    pub base: Mark,
+}
+
+impl Gpt {
+    /// Build the model, allocating all parameters contiguously.
+    pub fn new<T: Scalar>(tape: &mut Tape<T>, cfg: GptConfig, rng: &mut Rng) -> Gpt {
+        let zero = tape.leaf(T::ZERO); // non-trainable bias anchor
+        let mut pa = ParamAlloc::new(tape);
+        let std = 0.02; // GPT-2-style init
+        let tok_emb = pa.normal(cfg.vocab * cfg.d_model, std, rng);
+        let pos_emb = pa.normal(cfg.block_size * cfg.d_model, std, rng);
+        let blocks: Vec<TransformerBlock> = (0..cfg.n_layer)
+            .map(|_| TransformerBlock::new(&mut pa, cfg.d_model, cfg.n_head, zero, rng))
+            .collect();
+        let ln_f = cfg.final_ln.then(|| LayerNorm::new(&mut pa, cfg.d_model));
+        let lm_head = Linear::new(&mut pa, cfg.d_model, cfg.vocab, Act::Identity, rng);
+        let params = pa.range();
+        let base = tape.mark();
+        Gpt {
+            cfg,
+            tok_emb,
+            pos_emb,
+            blocks,
+            ln_f,
+            lm_head,
+            params,
+            base,
+        }
+    }
+
+    /// Trainable parameter count d.
+    pub fn num_params(&self) -> usize {
+        self.params.len
+    }
+
+    /// Logits for every position of one tokenized window.
+    /// Returns `block_size` vectors of `vocab` logits node ids each.
+    pub fn forward_logits<T: Scalar>(
+        &self,
+        tape: &mut Tape<T>,
+        tokens: &[u32],
+    ) -> Vec<Vec<Value>> {
+        let cfg = &self.cfg;
+        assert!(tokens.len() <= cfg.block_size, "window exceeds block size");
+        // x[p] = tok_emb[token] + pos_emb[p], elementwise (paper §2.5
+        // "Input": embeddings added elementwise, no transformation).
+        let mut x: Vec<Vec<Value>> = Vec::with_capacity(tokens.len());
+        for (p, &tok) in tokens.iter().enumerate() {
+            let te = self.tok_emb.first.0 + (tok as usize * cfg.d_model) as u32;
+            let pe = self.pos_emb.first.0 + (p * cfg.d_model) as u32;
+            x.push(
+                (0..cfg.d_model as u32)
+                    .map(|j| tape.add(Value(te + j), Value(pe + j)))
+                    .collect(),
+            );
+        }
+        for blk in &self.blocks {
+            x = blk.forward(tape, &x);
+        }
+        if let Some(ln) = &self.ln_f {
+            x = x.iter().map(|xs| ln.forward(tape, xs)).collect();
+        }
+        x.iter().map(|xs| self.lm_head.forward(tape, xs)).collect()
+    }
+
+    /// Mean next-token cross-entropy over all positions of one window —
+    /// the f_i(x) of Eq. (1) for this workload.
+    pub fn loss<T: Scalar>(
+        &self,
+        tape: &mut Tape<T>,
+        tokens: &[u32],
+        targets: &[u32],
+        ce: CeMode,
+    ) -> Value {
+        assert_eq!(tokens.len(), targets.len());
+        let logits = self.forward_logits(tape, tokens);
+        let losses: Vec<Value> = logits
+            .iter()
+            .zip(targets)
+            .map(|(zs, &y)| match ce {
+                CeMode::Composed => cross_entropy_composed(tape, zs, y as usize),
+                CeMode::Fused => cross_entropy_fused(tape, zs, y as usize),
+            })
+            .collect();
+        tape.reduce_mean(&losses)
+    }
+
+    /// Greedy/temperature sampling of `n` tokens after a prompt.
+    pub fn generate<T: Scalar>(
+        &self,
+        tape: &mut Tape<T>,
+        prompt: &[u32],
+        n: usize,
+        temperature: f64,
+        rng: &mut Rng,
+    ) -> Vec<u32> {
+        let mut tokens: Vec<u32> = prompt.to_vec();
+        for _ in 0..n {
+            let ctx_start = tokens.len().saturating_sub(self.cfg.block_size);
+            let ctx = &tokens[ctx_start..];
+            let m = tape.mark();
+            let logits = self.forward_logits(tape, ctx);
+            let last = logits.last().expect("nonempty context");
+            // Softmax with temperature in plain f64 (inference path).
+            let zs: Vec<f64> = last.iter().map(|&v| tape.value(v).to_f64()).collect();
+            tape.rewind(m);
+            let mx = zs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let ws: Vec<f64> = zs
+                .iter()
+                .map(|z| ((z - mx) / temperature.max(1e-6)).exp())
+                .collect();
+            let total: f64 = ws.iter().sum();
+            let mut pick = rng.uniform() * total;
+            let mut choice = 0u32;
+            for (i, w) in ws.iter().enumerate() {
+                if pick < *w {
+                    choice = i as u32;
+                    break;
+                }
+                pick -= w;
+            }
+            tokens.push(choice);
+        }
+        tokens[prompt.len()..].to_vec()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_count_matches_paper() {
+        let mut t = Tape::<f32>::new();
+        let mut rng = Rng::new(41);
+        let gpt = Gpt::new(&mut t, GptConfig::paper(), &mut rng);
+        assert_eq!(
+            gpt.num_params(),
+            46_289,
+            "paper §2.5: 46,289 trainable parameters"
+        );
+    }
+
+    #[test]
+    fn final_ln_adds_2d_params() {
+        let mut t = Tape::<f32>::new();
+        let mut rng = Rng::new(42);
+        let mut cfg = GptConfig::paper();
+        cfg.final_ln = true;
+        let gpt = Gpt::new(&mut t, cfg, &mut rng);
+        assert_eq!(gpt.num_params(), 46_289 + 48);
+    }
+
+    #[test]
+    fn loss_is_near_log_vocab_at_init() {
+        let mut t = Tape::<f64>::new();
+        let mut rng = Rng::new(43);
+        let gpt = Gpt::new(&mut t, GptConfig::paper(), &mut rng);
+        let tokens: Vec<u32> = (0..8).map(|i| (i * 7) % 65).collect();
+        let targets: Vec<u32> = (0..8).map(|i| (i * 11 + 3) % 65).collect();
+        let loss = gpt.loss(&mut t, &tokens, &targets, CeMode::Fused);
+        let lv = t.value(loss);
+        let expected = (65.0f64).ln();
+        assert!(
+            (lv - expected).abs() < 0.5,
+            "init loss {lv} should be ≈ ln(65) = {expected}"
+        );
+    }
+
+    #[test]
+    fn composed_and_fused_loss_agree() {
+        let mut t = Tape::<f64>::new();
+        let mut rng = Rng::new(44);
+        let cfg = GptConfig {
+            n_layer: 2,
+            ..GptConfig::paper()
+        };
+        let gpt = Gpt::new(&mut t, cfg, &mut rng);
+        let tokens: Vec<u32> = vec![1, 5, 9, 13];
+        let targets: Vec<u32> = vec![5, 9, 13, 17];
+        let m = t.mark();
+        let l1 = gpt.loss(&mut t, &tokens, &targets, CeMode::Fused);
+        let v1 = t.value(l1);
+        t.rewind(m);
+        let l2 = gpt.loss(&mut t, &tokens, &targets, CeMode::Composed);
+        let v2 = t.value(l2);
+        assert!((v1 - v2).abs() < 1e-10, "{v1} vs {v2}");
+    }
+
+    #[test]
+    fn rewind_between_oracles_keeps_tape_flat() {
+        let mut t = Tape::<f32>::new();
+        let mut rng = Rng::new(45);
+        let cfg = GptConfig {
+            n_layer: 1,
+            ..GptConfig::paper()
+        };
+        let gpt = Gpt::new(&mut t, cfg, &mut rng);
+        let tokens: Vec<u32> = vec![1, 2, 3, 4, 5, 6, 7, 8];
+        let targets: Vec<u32> = vec![2, 3, 4, 5, 6, 7, 8, 9];
+        let mut sizes = Vec::new();
+        for _ in 0..3 {
+            let loss = gpt.loss(&mut t, &tokens, &targets, CeMode::Fused);
+            t.backward(loss);
+            sizes.push(t.len());
+            t.rewind(gpt.base);
+        }
+        assert_eq!(sizes[0], sizes[1]);
+        assert_eq!(sizes[1], sizes[2], "activation memory must not grow");
+        assert_eq!(t.len(), gpt.base.node_count());
+    }
+
+    #[test]
+    fn one_sgd_step_reduces_loss_on_fixed_batch() {
+        let mut t = Tape::<f64>::new();
+        let mut rng = Rng::new(46);
+        let cfg = GptConfig {
+            n_layer: 1,
+            d_model: 8,
+            n_head: 2,
+            ..GptConfig::paper()
+        };
+        let gpt = Gpt::new(&mut t, cfg, &mut rng);
+        let tokens: Vec<u32> = vec![3, 1, 4, 1, 5, 9, 2, 6];
+        let targets: Vec<u32> = vec![1, 4, 1, 5, 9, 2, 6, 5];
+        let loss = gpt.loss(&mut t, &tokens, &targets, CeMode::Fused);
+        let before = t.value(loss);
+        t.backward(loss);
+        let lr = 0.5;
+        let grads: Vec<f64> = gpt.params.iter().map(|p| t.grad(p)).collect();
+        for (p, g) in gpt.params.iter().zip(&grads) {
+            let v = t.value(p);
+            t.set_value(p, v - lr * g);
+        }
+        t.rewind(gpt.base);
+        let loss2 = gpt.loss(&mut t, &tokens, &targets, CeMode::Fused);
+        let after = t.value(loss2);
+        assert!(after < before, "SGD step must reduce loss: {before} -> {after}");
+    }
+
+    #[test]
+    fn generate_returns_in_vocab_tokens() {
+        let mut t = Tape::<f32>::new();
+        let mut rng = Rng::new(47);
+        let cfg = GptConfig {
+            n_layer: 1,
+            ..GptConfig::paper()
+        };
+        let gpt = Gpt::new(&mut t, cfg, &mut rng);
+        let out = gpt.generate(&mut t, &[1, 2, 3], 10, 1.0, &mut rng);
+        assert_eq!(out.len(), 10);
+        assert!(out.iter().all(|&tok| tok < 65));
+        // Generation must not leak activations.
+        assert_eq!(t.len(), gpt.base.node_count());
+    }
+}

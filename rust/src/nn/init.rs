@@ -1,0 +1,134 @@
+//! Parameter initialization (paper F.1: "best-practice layer parameter
+//! initialization").
+
+use super::ParamRange;
+use crate::rng::Rng;
+use crate::scalar::Scalar;
+use crate::tape::{Tape, Value};
+
+/// Xavier/Glorot std for a (fan_in, fan_out) linear map.
+pub fn xavier_std(fan_in: usize, fan_out: usize) -> f64 {
+    (2.0 / (fan_in + fan_out) as f64).sqrt()
+}
+
+/// Kaiming/He std for a fan_in linear map (ReLU networks).
+pub fn kaiming_std(fan_in: usize) -> f64 {
+    (2.0 / fan_in as f64).sqrt()
+}
+
+/// Allocator for contiguous parameter leaves.
+pub struct ParamAlloc<'t, T: Scalar> {
+    tape: &'t mut Tape<T>,
+    first: Option<Value>,
+    len: usize,
+}
+
+impl<'t, T: Scalar> ParamAlloc<'t, T> {
+    /// Start allocating parameters on `tape`. All parameters allocated
+    /// through one `ParamAlloc` form a single contiguous range.
+    pub fn new(tape: &'t mut Tape<T>) -> Self {
+        ParamAlloc {
+            tape,
+            first: None,
+            len: 0,
+        }
+    }
+
+    fn note(&mut self, first: Value, n: usize) {
+        if self.first.is_none() {
+            self.first = Some(first);
+        }
+        self.len += n;
+    }
+
+    /// `n` parameters ~ N(0, std²).
+    pub fn normal(&mut self, n: usize, std: f64, rng: &mut Rng) -> ParamRange {
+        let first = Value(self.tape.len() as u32);
+        for _ in 0..n {
+            let v = T::from_f64(rng.normal_ms(0.0, std));
+            self.tape.leaf(v);
+        }
+        self.note(first, n);
+        ParamRange { first, len: n }
+    }
+
+    /// `n` parameters ~ U(−a, a).
+    pub fn uniform(&mut self, n: usize, a: f64, rng: &mut Rng) -> ParamRange {
+        let first = Value(self.tape.len() as u32);
+        for _ in 0..n {
+            let v = T::from_f64(rng.uniform_in(-a, a));
+            self.tape.leaf(v);
+        }
+        self.note(first, n);
+        ParamRange { first, len: n }
+    }
+
+    /// `n` parameters all equal to `c` (biases, LayerNorm γ/β).
+    pub fn constant(&mut self, n: usize, c: f64) -> ParamRange {
+        let first = Value(self.tape.len() as u32);
+        for _ in 0..n {
+            self.tape.leaf(T::from_f64(c));
+        }
+        self.note(first, n);
+        ParamRange { first, len: n }
+    }
+
+    /// The full contiguous range allocated so far.
+    pub fn range(&self) -> ParamRange {
+        ParamRange {
+            first: self.first.unwrap_or(Value(0)),
+            len: self.len,
+        }
+    }
+
+    /// Borrow the tape (for chained layer constructors).
+    pub fn tape(&mut self) -> &mut Tape<T> {
+        self.tape
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn std_formulas() {
+        assert!((xavier_std(100, 100) - 0.1).abs() < 1e-9);
+        assert!((kaiming_std(50) - 0.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn alloc_is_contiguous_across_calls() {
+        let mut t = Tape::<f64>::new();
+        let mut rng = Rng::new(1);
+        let mut pa = ParamAlloc::new(&mut t);
+        let a = pa.normal(10, 0.1, &mut rng);
+        let b = pa.constant(5, 0.0);
+        let all = pa.range();
+        assert_eq!(a.first, Value(0));
+        assert_eq!(b.first, Value(10));
+        assert_eq!(all.len, 15);
+        assert_eq!(all.first, Value(0));
+    }
+
+    #[test]
+    fn normal_init_has_requested_scale() {
+        let mut t = Tape::<f64>::new();
+        let mut rng = Rng::new(2);
+        let mut pa = ParamAlloc::new(&mut t);
+        let r = pa.normal(10_000, 0.02, &mut rng);
+        let vals: Vec<f64> = r.iter().map(|v| t.value(v)).collect();
+        let mean = vals.iter().sum::<f64>() / vals.len() as f64;
+        let var = vals.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / vals.len() as f64;
+        assert!(mean.abs() < 0.002, "mean={mean}");
+        assert!((var.sqrt() - 0.02).abs() < 0.002, "std={}", var.sqrt());
+    }
+
+    #[test]
+    fn constant_init_exact() {
+        let mut t = Tape::<f64>::new();
+        let mut pa = ParamAlloc::new(&mut t);
+        let r = pa.constant(4, 1.0);
+        assert!(r.iter().all(|v| t.value(v) == 1.0));
+    }
+}

@@ -1,0 +1,130 @@
+//! Layer normalization at scalar granularity (paper §2.5 item (c)).
+//!
+//! Built from Table 8/10 primitives: `reduceMean` for μ, `sub` per dim,
+//! `reduceMeanSquares` of the centered values for the biased variance,
+//! `invSqrt(var + ε)` for the scale, then per-dim `mul`/`mul`/`add` with
+//! the affine γ/β parameters.
+
+use super::{ParamAlloc, ParamRange};
+use crate::scalar::Scalar;
+use crate::tape::{Tape, Value};
+
+/// LayerNorm with learned affine (γ initialized to 1, β to 0).
+pub struct LayerNorm {
+    /// Scale parameters γ, length `dim`.
+    pub gamma: ParamRange,
+    /// Shift parameters β, length `dim`.
+    pub beta: ParamRange,
+    /// Normalized width.
+    pub dim: usize,
+    /// Numerical floor added to the variance (PyTorch default 1e-5).
+    pub eps: f64,
+}
+
+impl LayerNorm {
+    /// New LayerNorm over `dim` features.
+    pub fn new<T: Scalar>(pa: &mut ParamAlloc<'_, T>, dim: usize) -> LayerNorm {
+        let gamma = pa.constant(dim, 1.0);
+        let beta = pa.constant(dim, 0.0);
+        LayerNorm {
+            gamma,
+            beta,
+            dim,
+            eps: 1e-5,
+        }
+    }
+
+    /// Normalize `xs` (length `dim`); returns `dim` output nodes.
+    pub fn forward<T: Scalar>(&self, tape: &mut Tape<T>, xs: &[Value]) -> Vec<Value> {
+        assert_eq!(xs.len(), self.dim, "layernorm width mismatch");
+        let mu = tape.reduce_mean(xs);
+        // Centered values (contiguous run — later consumers may dot_range).
+        let centered: Vec<Value> = xs.iter().map(|&x| tape.sub(x, mu)).collect();
+        let var = tape.reduce_mean_squares(&centered);
+        let eps = tape.leaf(T::from_f64(self.eps));
+        let var_eps = tape.add(var, eps);
+        let scale = tape.inv_sqrt(var_eps);
+        centered
+            .iter()
+            .enumerate()
+            .map(|(j, &c)| {
+                let normed = tape.mul(c, scale);
+                let scaled = tape.mul(normed, self.gamma.at(j));
+                tape.add(scaled, self.beta.at(j))
+            })
+            .collect()
+    }
+
+    /// Parameter count (2 · dim).
+    pub fn num_params(&self) -> usize {
+        self.gamma.len + self.beta.len
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fdiff::gradcheck;
+
+    fn make_ln(dim: usize) -> (Tape<f64>, LayerNorm) {
+        let mut t = Tape::new();
+        let mut pa = ParamAlloc::new(&mut t);
+        let ln = LayerNorm::new(&mut pa, dim);
+        (t, ln)
+    }
+
+    #[test]
+    fn output_has_zero_mean_unit_var_with_default_affine() {
+        let (mut t, ln) = make_ln(5);
+        let xs: Vec<Value> = [3.0, -1.0, 4.0, 1.0, 5.0].iter().map(|&v| t.leaf(v)).collect();
+        let out = ln.forward(&mut t, &xs);
+        let vals: Vec<f64> = out.iter().map(|&o| t.value(o)).collect();
+        let mean: f64 = vals.iter().sum::<f64>() / 5.0;
+        let var: f64 = vals.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / 5.0;
+        assert!(mean.abs() < 1e-12, "mean={mean}");
+        assert!((var - 1.0).abs() < 1e-4, "var={var} (eps-shifted)");
+    }
+
+    #[test]
+    fn affine_parameters_apply() {
+        let (mut t, ln) = make_ln(3);
+        t.set_value(ln.gamma.at(0), 2.0);
+        t.set_value(ln.beta.at(0), 10.0);
+        let xs: Vec<Value> = [1.0, 2.0, 3.0].iter().map(|&v| t.leaf(v)).collect();
+        let out = ln.forward(&mut t, &xs);
+        // Plain LN of [1,2,3] gives [-√1.5⁻¹·1, 0, ...]: x̂₀ = (1−2)/√(2/3).
+        let x0 = (1.0 - 2.0) / (2.0f64 / 3.0 + 1e-5).sqrt();
+        assert!((t.value(out[0]) - (2.0 * x0 + 10.0)).abs() < 1e-9);
+        assert!((t.value(out[1]) - 0.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn layernorm_gradcheck() {
+        // Differentiate through LN wrt inputs AND γ/β.
+        let gc = gradcheck(&[0.5, -1.5, 2.5, 1.3, 0.7, -0.2, 0.4, 0.9, -0.6], 1e-6, |t, xs| {
+            // xs = [x0,x1,x2, g0,g1,g2, b0,b1,b2]
+            let x = &xs[0..3];
+            let mu = t.reduce_mean(x);
+            let centered: Vec<Value> = x.iter().map(|&v| t.sub(v, mu)).collect();
+            let var = t.reduce_mean_squares(&centered);
+            let eps = t.leaf(1e-5);
+            let ve = t.add(var, eps);
+            let scale = t.inv_sqrt(ve);
+            let outs: Vec<Value> = (0..3)
+                .map(|j| {
+                    let n = t.mul(centered[j], scale);
+                    let s = t.mul(n, xs[3 + j]);
+                    t.add(s, xs[6 + j])
+                })
+                .collect();
+            t.reduce_sum_squares(&outs)
+        });
+        assert!(gc.ok(1e-5), "{gc:?}");
+    }
+
+    #[test]
+    fn param_count() {
+        let (_t, ln) = make_ln(24);
+        assert_eq!(ln.num_params(), 48, "paper GPT config: 2·24 per LN");
+    }
+}

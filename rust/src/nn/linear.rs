@@ -1,0 +1,213 @@
+//! Neuron and Linear layers (paper Appendix F.1).
+//!
+//! A [`Linear`] stores its weights as a contiguous `[out][in]` row-major
+//! parameter run plus a bias run, and emits **one fused `dotParamRange`
+//! node per output unit** — the paper's unrolled `innerProductWithBias`
+//! ILP workhorse. The input ids are published once per forward call via
+//! [`crate::tape::Tape::share_ids`] (the "memory view": a split tensor is
+//! passed without physical concatenation).
+
+use super::{Act, ParamAlloc, ParamRange};
+use crate::rng::Rng;
+use crate::scalar::Scalar;
+use crate::tape::{Tape, Value};
+
+/// A single neuron: ⟨w, x⟩ + b followed by an activation (paper F.1).
+pub struct Neuron {
+    /// Weight run of length `in_dim`.
+    pub w: ParamRange,
+    /// Bias (single parameter).
+    pub b: Value,
+    /// Activation.
+    pub act: Act,
+}
+
+impl Neuron {
+    /// New neuron with U(−1/√fan_in, 1/√fan_in) weights, zero bias.
+    pub fn new<T: Scalar>(
+        pa: &mut ParamAlloc<'_, T>,
+        in_dim: usize,
+        act: Act,
+        rng: &mut Rng,
+    ) -> Neuron {
+        let bound = 1.0 / (in_dim as f64).sqrt();
+        let w = pa.uniform(in_dim, bound, rng);
+        let b = pa.constant(1, 0.0).first;
+        Neuron { w, b, act }
+    }
+
+    /// Forward over explicit input nodes.
+    pub fn forward<T: Scalar>(&self, tape: &mut Tape<T>, xs: &[Value]) -> Value {
+        assert_eq!(xs.len(), self.w.len);
+        let xs_at = tape.share_ids(xs);
+        let pre = tape.dot_param_range(xs_at, xs.len(), self.w.first, self.b);
+        self.act.apply(tape, pre)
+    }
+}
+
+/// Dense layer: `out_dim` fused inner products over a shared input view.
+pub struct Linear {
+    /// Row-major weights, `out_dim × in_dim`.
+    pub w: ParamRange,
+    /// Biases, `out_dim` (always allocated; init 0; `bias=false` layers
+    /// simply freeze them by masking — see `Gpt`).
+    pub b: ParamRange,
+    /// Input width.
+    pub in_dim: usize,
+    /// Output width.
+    pub out_dim: usize,
+    /// Activation.
+    pub act: Act,
+}
+
+impl Linear {
+    /// New layer with U(−1/√in, 1/√in) weights and zero biases
+    /// (PyTorch's `nn.Linear` default, which the paper baselines use).
+    pub fn new<T: Scalar>(
+        pa: &mut ParamAlloc<'_, T>,
+        in_dim: usize,
+        out_dim: usize,
+        act: Act,
+        rng: &mut Rng,
+    ) -> Linear {
+        let bound = 1.0 / (in_dim as f64).sqrt();
+        let w = pa.uniform(in_dim * out_dim, bound, rng);
+        let b = pa.constant(out_dim, 0.0);
+        Linear {
+            w,
+            b,
+            in_dim,
+            out_dim,
+            act,
+        }
+    }
+
+    /// Forward from explicit input nodes; returns one node per output unit.
+    pub fn forward<T: Scalar>(&self, tape: &mut Tape<T>, xs: &[Value]) -> Vec<Value> {
+        assert_eq!(xs.len(), self.in_dim, "linear layer input width mismatch");
+        let xs_at = tape.share_ids(xs);
+        self.forward_shared(tape, xs_at)
+    }
+
+    /// Forward from an already-shared input view (avoids republishing the
+    /// ids when several layers consume the same inputs).
+    pub fn forward_shared<T: Scalar>(&self, tape: &mut Tape<T>, xs_at: u32) -> Vec<Value> {
+        let mut out = Vec::with_capacity(self.out_dim);
+        for u in 0..self.out_dim {
+            let w_row = Value(self.w.first.0 + (u * self.in_dim) as u32);
+            let pre = tape.dot_param_range(xs_at, self.in_dim, w_row, self.b.at(u));
+            out.push(self.act.apply(tape, pre));
+        }
+        out
+    }
+
+    /// Total parameter count (weights + biases).
+    pub fn num_params(&self) -> usize {
+        self.w.len + self.b.len
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fdiff::gradcheck;
+
+    #[test]
+    fn neuron_computes_affine_plus_activation() {
+        let mut t = Tape::<f64>::new();
+        let mut rng = Rng::new(3);
+        let mut pa = ParamAlloc::new(&mut t);
+        let n = Neuron::new(&mut pa, 2, Act::Identity, &mut rng);
+        let (wr, b) = (n.w, n.b);
+        // Overwrite params for a deterministic check.
+        t.set_value(wr.at(0), 2.0);
+        t.set_value(wr.at(1), -1.0);
+        t.set_value(b, 0.5);
+        let x0 = t.leaf(3.0);
+        let x1 = t.leaf(4.0);
+        let y = n.forward(&mut t, &[x0, x1]);
+        assert_eq!(t.value(y), 2.0 * 3.0 - 4.0 + 0.5);
+    }
+
+    #[test]
+    fn linear_matches_manual_matvec() {
+        let mut t = Tape::<f64>::new();
+        let mut rng = Rng::new(4);
+        let mut pa = ParamAlloc::new(&mut t);
+        let l = Linear::new(&mut pa, 3, 2, Act::Identity, &mut rng);
+        let w = [[1.0, 2.0, 3.0], [-1.0, 0.0, 1.0]];
+        for u in 0..2 {
+            for j in 0..3 {
+                t.set_value(Value(l.w.first.0 + (u * 3 + j) as u32), w[u][j]);
+            }
+            t.set_value(l.b.at(u), 0.25);
+        }
+        let xs: Vec<Value> = [1.0, -2.0, 0.5].iter().map(|&v| t.leaf(v)).collect();
+        let out = l.forward(&mut t, &xs);
+        assert_eq!(out.len(), 2);
+        assert!((t.value(out[0]) - (1.0 - 4.0 + 1.5 + 0.25)).abs() < 1e-12);
+        assert!((t.value(out[1]) - (-1.0 + 0.5 + 0.25)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn linear_gradients_pass_fdiff_check() {
+        // Check d loss / d (w, b, x) for loss = Σ tanh(Wx + b).
+        let gc = gradcheck(&[0.3, -0.7, 0.9, 0.2, -0.1, 0.4, 0.8, -0.5], 1e-6, |t, xs| {
+            // xs = [w00,w01,w10,w11, b0,b1, x0,x1]
+            let (w, b, x) = (&xs[0..4], &xs[4..6], &xs[6..8]);
+            let mut outs = Vec::new();
+            for u in 0..2 {
+                let ip = t.inner_product_bias(&[x[0], x[1]], &[w[2 * u], w[2 * u + 1]], b[u]);
+                outs.push(t.tanh(ip));
+            }
+            t.reduce_sum(&outs)
+        });
+        assert!(gc.ok(1e-6), "{gc:?}");
+    }
+
+    #[test]
+    fn dot_param_range_layer_grads_match_generic_inner_product() {
+        // Build the same 2x3 layer twice: fused dotParamRange vs generic
+        // innerProductWithBias; gradients must agree exactly.
+        let build = |fused: bool| -> (Vec<f64>, f64) {
+            let mut t = Tape::<f64>::new();
+            let mut rng = Rng::new(5);
+            let mut pa = ParamAlloc::new(&mut t);
+            let l = Linear::new(&mut pa, 3, 2, Act::Tanh, &mut rng);
+            let xs: Vec<Value> = [0.1, -0.2, 0.3].iter().map(|&v| t.leaf(v)).collect();
+            let outs = if fused {
+                l.forward(&mut t, &xs)
+            } else {
+                let mut o = Vec::new();
+                for u in 0..2 {
+                    let wrow: Vec<Value> = (0..3).map(|j| l.w.at(u * 3 + j)).collect();
+                    let ip = t.inner_product_bias(&xs, &wrow, l.b.at(u));
+                    o.push(t.tanh(ip));
+                }
+                o
+            };
+            let loss = t.reduce_sum(&outs);
+            t.backward(loss);
+            let grads: Vec<f64> = (0..8).map(|i| t.grad(Value(i))).collect();
+            (grads, t.value(loss))
+        };
+        let (g1, v1) = build(true);
+        let (g2, v2) = build(false);
+        assert_eq!(v1, v2);
+        assert_eq!(g1, g2);
+    }
+
+    #[test]
+    fn forward_shared_reuses_one_view() {
+        let mut t = Tape::<f64>::new();
+        let mut rng = Rng::new(6);
+        let mut pa = ParamAlloc::new(&mut t);
+        let l = Linear::new(&mut pa, 4, 8, Act::Identity, &mut rng);
+        let xs: Vec<Value> = (0..4).map(|i| t.leaf(i as f64)).collect();
+        let aux_before = t.aux_len();
+        let xs_at = t.share_ids(&xs);
+        let _ = l.forward_shared(&mut t, xs_at);
+        // One shared view (4 ids) + 3 meta entries per unit.
+        assert_eq!(t.aux_len() - aux_before, 4 + 8 * 3);
+    }
+}

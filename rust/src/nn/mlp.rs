@@ -1,0 +1,291 @@
+//! The medium-graph workloads: a generic [`Mlp`] (paper F.1) and the
+//! Bengio-style character model [`CharMlp`] (paper §2.4, Karpathy's
+//! `makemore` MLP).
+//!
+//! CharMlp reproduces the paper's parameter grid exactly (Tables 5/6):
+//! embeddings 27×64, context 16, two layers; d ranges from 5,963 (e = 4)
+//! to 1,079,003 (e = 1024) — asserted in tests.
+
+use super::{cross_entropy_composed, cross_entropy_fused, Act, CeMode, Linear, ParamAlloc, ParamRange};
+use crate::rng::Rng;
+use crate::scalar::Scalar;
+use crate::tape::{Mark, Tape, Value};
+
+/// Generic multi-layer perceptron over explicit scalar inputs.
+pub struct Mlp {
+    /// Layers in order.
+    pub layers: Vec<Linear>,
+    /// Whole contiguous parameter range.
+    pub params: ParamRange,
+}
+
+impl Mlp {
+    /// MLP with the given layer widths, tanh hidden activations and an
+    /// identity output layer: `dims = [in, h1, ..., out]`.
+    pub fn new<T: Scalar>(tape: &mut Tape<T>, dims: &[usize], rng: &mut Rng) -> Mlp {
+        assert!(dims.len() >= 2);
+        let mut pa = ParamAlloc::new(tape);
+        let mut layers = Vec::new();
+        for w in 0..dims.len() - 1 {
+            let act = if w + 2 == dims.len() {
+                Act::Identity
+            } else {
+                Act::Tanh
+            };
+            layers.push(Linear::new(&mut pa, dims[w], dims[w + 1], act, rng));
+        }
+        let params = pa.range();
+        Mlp { layers, params }
+    }
+
+    /// Forward over input nodes.
+    pub fn forward<T: Scalar>(&self, tape: &mut Tape<T>, xs: &[Value]) -> Vec<Value> {
+        let mut cur: Vec<Value> = xs.to_vec();
+        for l in &self.layers {
+            cur = l.forward(tape, &cur);
+        }
+        cur
+    }
+
+    /// Trainable parameter count.
+    pub fn num_params(&self) -> usize {
+        self.params.len
+    }
+}
+
+/// Configuration of the §2.4 character model.
+#[derive(Clone, Copy, Debug)]
+pub struct CharMlpConfig {
+    /// Vocabulary (paper: 27).
+    pub vocab: usize,
+    /// Embedding width (paper: 64).
+    pub emb_dim: usize,
+    /// Context length (paper: 16).
+    pub block_size: usize,
+    /// Hidden units e (paper grid: 4, 16, 32, 64, 128, 512, 1024).
+    pub hidden: usize,
+}
+
+impl CharMlpConfig {
+    /// The paper's configuration for a given hidden width e.
+    pub fn paper(hidden: usize) -> CharMlpConfig {
+        CharMlpConfig {
+            vocab: 27,
+            emb_dim: 64,
+            block_size: 16,
+            hidden,
+        }
+    }
+
+    /// Trainable parameter count d for this configuration.
+    pub fn num_params(&self) -> usize {
+        let input = self.block_size * self.emb_dim;
+        self.vocab * self.emb_dim                // embeddings
+            + input * self.hidden + self.hidden  // layer 1
+            + self.hidden * self.vocab + self.vocab // layer 2
+    }
+}
+
+/// The Bengio-style autoregressive character model (paper §2.4).
+pub struct CharMlp {
+    /// Configuration.
+    pub cfg: CharMlpConfig,
+    /// Embedding table, `vocab × emb_dim` (parameters — lookups are
+    /// memory views over this table, no copies).
+    pub emb: ParamRange,
+    /// Hidden layer (block·emb → e, tanh).
+    pub l1: Linear,
+    /// Output layer (e → vocab, identity logits).
+    pub l2: Linear,
+    /// Whole contiguous parameter range.
+    pub params: ParamRange,
+    /// Post-construction checkpoint for rewinding per-sample activations.
+    pub base: Mark,
+}
+
+impl CharMlp {
+    /// Build the model with Xavier-ish init (matching makemore's scale).
+    pub fn new<T: Scalar>(tape: &mut Tape<T>, cfg: CharMlpConfig, rng: &mut Rng) -> CharMlp {
+        let mut pa = ParamAlloc::new(tape);
+        let emb = pa.normal(cfg.vocab * cfg.emb_dim, 1.0, rng);
+        let input = cfg.block_size * cfg.emb_dim;
+        let l1 = Linear::new(&mut pa, input, cfg.hidden, Act::Tanh, rng);
+        let l2 = Linear::new(&mut pa, cfg.hidden, cfg.vocab, Act::Identity, rng);
+        let params = pa.range();
+        let base = tape.mark();
+        CharMlp {
+            cfg,
+            emb,
+            l1,
+            l2,
+            params,
+            base,
+        }
+    }
+
+    /// Trainable parameter count d.
+    pub fn num_params(&self) -> usize {
+        self.params.len
+    }
+
+    /// Logits for one context window. The embedding "lookup" passes
+    /// parameter ids directly into the layer-1 inner products — the
+    /// paper's no-copy memory-view gather.
+    pub fn forward_logits<T: Scalar>(&self, tape: &mut Tape<T>, context: &[u32]) -> Vec<Value> {
+        assert_eq!(context.len(), self.cfg.block_size);
+        let mut xs: Vec<Value> = Vec::with_capacity(self.cfg.block_size * self.cfg.emb_dim);
+        for &tok in context {
+            let row = self.emb.first.0 + (tok as usize * self.cfg.emb_dim) as u32;
+            xs.extend((0..self.cfg.emb_dim as u32).map(|j| Value(row + j)));
+        }
+        let hidden = self.l1.forward(tape, &xs);
+        self.l2.forward(tape, &hidden)
+    }
+
+    /// Single-sample loss f_i(x): CE of the next character.
+    pub fn loss<T: Scalar>(
+        &self,
+        tape: &mut Tape<T>,
+        context: &[u32],
+        target: u32,
+        ce: CeMode,
+    ) -> Value {
+        let logits = self.forward_logits(tape, context);
+        match ce {
+            CeMode::Composed => cross_entropy_composed(tape, &logits, target as usize),
+            CeMode::Fused => cross_entropy_fused(tape, &logits, target as usize),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_parameter_grid_matches_tables_5_and_6() {
+        // (e, d) pairs straight from paper Tables 5/6.
+        let grid = [
+            (4, 5_963),
+            (16, 18_587),
+            (32, 35_419),
+            (64, 69_083),
+            (128, 136_411),
+            (512, 540_379),
+            (1024, 1_079_003),
+        ];
+        for (e, d) in grid {
+            assert_eq!(
+                CharMlpConfig::paper(e).num_params(),
+                d,
+                "hidden width e = {e}"
+            );
+        }
+    }
+
+    #[test]
+    fn constructed_model_matches_config_count() {
+        let mut t = Tape::<f32>::new();
+        let mut rng = Rng::new(51);
+        let m = CharMlp::new(&mut t, CharMlpConfig::paper(4), &mut rng);
+        assert_eq!(m.num_params(), 5_963);
+        assert_eq!(t.len(), 5_963, "only parameters live on the fresh tape");
+    }
+
+    #[test]
+    fn logits_shape_and_loss_at_init() {
+        let mut t = Tape::<f64>::new();
+        let mut rng = Rng::new(52);
+        let m = CharMlp::new(&mut t, CharMlpConfig::paper(16), &mut rng);
+        let ctx: Vec<u32> = vec![0; 16];
+        let logits = m.forward_logits(&mut t, &ctx);
+        assert_eq!(logits.len(), 27);
+        let loss = m.loss(&mut t, &ctx, 5, CeMode::Composed);
+        assert!(t.value(loss) > 0.0);
+        assert!(t.value(loss).is_finite());
+    }
+
+    #[test]
+    fn sample_oracle_then_rewind_is_memory_flat() {
+        let mut t = Tape::<f32>::new();
+        let mut rng = Rng::new(53);
+        let m = CharMlp::new(&mut t, CharMlpConfig::paper(32), &mut rng);
+        let ctx: Vec<u32> = (0..16).map(|i| i % 27).collect();
+        let mut len_after = Vec::new();
+        for step in 0..4 {
+            let loss = m.loss(&mut t, &ctx, (step % 27) as u32, CeMode::Fused);
+            t.backward(loss);
+            len_after.push(t.len());
+            t.rewind(m.base);
+        }
+        assert!(len_after.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    fn sgd_on_repeated_sample_memorizes_it() {
+        let mut t = Tape::<f64>::new();
+        let mut rng = Rng::new(54);
+        let m = CharMlp::new(&mut t, CharMlpConfig::paper(16), &mut rng);
+        let ctx: Vec<u32> = vec![1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15, 16];
+        let target = 7u32;
+        let mut first = f64::NAN;
+        let mut last = f64::NAN;
+        for step in 0..30 {
+            let loss = m.loss(&mut t, &ctx, target, CeMode::Fused);
+            let lv = t.value(loss);
+            if step == 0 {
+                first = lv;
+            }
+            last = lv;
+            t.backward(loss);
+            for p in m.params.iter() {
+                let g = t.grad(p);
+                let v = t.value(p);
+                t.set_value(p, v - 0.1 * g);
+            }
+            t.rewind(m.base);
+        }
+        assert!(
+            last < first * 0.5,
+            "loss should at least halve when memorizing one sample: {first} -> {last}"
+        );
+    }
+
+    #[test]
+    fn generic_mlp_forward_and_grads() {
+        let mut t = Tape::<f64>::new();
+        let mut rng = Rng::new(55);
+        let mlp = Mlp::new(&mut t, &[3, 8, 2], &mut rng);
+        assert_eq!(mlp.num_params(), 3 * 8 + 8 + 8 * 2 + 2);
+        let xs: Vec<Value> = [0.1, -0.4, 0.7].iter().map(|&v| t.leaf(v)).collect();
+        let out = mlp.forward(&mut t, &xs);
+        assert_eq!(out.len(), 2);
+        let loss = t.reduce_sum_squares(&out);
+        t.backward(loss);
+        let gsum: f64 = mlp.params.iter().map(|p| t.grad(p).abs()).sum();
+        assert!(gsum > 0.0);
+    }
+
+    #[test]
+    fn embedding_rows_are_shared_views() {
+        // Two occurrences of the same token reference identical param ids —
+        // so their embedding gradient accumulates (×2 for a doubled token).
+        let mut t = Tape::<f64>::new();
+        let mut rng = Rng::new(56);
+        let m = CharMlp::new(&mut t, CharMlpConfig::paper(4), &mut rng);
+        let mut ctx = vec![0u32; 16];
+        ctx[0] = 3;
+        let loss1 = m.loss(&mut t, &ctx, 1, CeMode::Fused);
+        t.backward(loss1);
+        let row3 = m.emb.first.0 + 3 * 64;
+        let g_single: f64 = (0..64).map(|j| t.grad(Value(row3 + j)).abs()).sum();
+        assert!(g_single > 0.0, "token-3 row must receive gradient");
+        t.rewind(m.base);
+        // With token 3 absent the row gets no gradient.
+        let ctx0 = vec![0u32; 16];
+        let loss2 = m.loss(&mut t, &ctx0, 1, CeMode::Fused);
+        t.backward(loss2);
+        let g_absent: f64 = (0..64).map(|j| t.grad(Value(row3 + j)).abs()).sum();
+        assert_eq!(g_absent, 0.0);
+    }
+}

@@ -1,0 +1,122 @@
+//! Neural-network layers at scalar granularity (paper §2.4, §2.5, F.1).
+//!
+//! Every layer allocates its parameters as **contiguous leaf runs at the
+//! tape base** (so the whole model is one flat `[first, first+d)` buffer —
+//! paper E.9), then builds per-sample activation nodes that are discarded
+//! by `rewind` between gradient oracles (contribution 4).
+//!
+//! Layers follow the paper's inventory: [`Neuron`], [`Linear`], [`Mlp`]
+//! (Appendix F.1), the Bengio-style char model [`CharMlp`] (§2.4), and the
+//! GPT-3-like decoder [`Gpt`] (§2.5) built from [`LayerNorm`],
+//! [`CausalSelfAttention`] and [`TransformerBlock`].
+
+mod attention;
+mod block;
+mod gpt;
+mod init;
+mod layernorm;
+mod linear;
+mod mlp;
+mod softmax;
+
+pub use attention::CausalSelfAttention;
+pub use block::TransformerBlock;
+pub use gpt::{Gpt, GptConfig};
+pub use init::{kaiming_std, xavier_std, ParamAlloc};
+pub use layernorm::LayerNorm;
+pub use linear::{Linear, Neuron};
+pub use mlp::{CharMlp, CharMlpConfig, Mlp};
+pub use softmax::{cross_entropy_composed, cross_entropy_fused, softmax_composed, CeMode};
+
+use crate::scalar::Scalar;
+use crate::tape::{Tape, Value};
+
+/// Activation applied elementwise after a linear map (paper F.1: Sigmoid,
+/// ReLU, Tanh or identity).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Act {
+    /// No activation.
+    Identity,
+    /// Hyperbolic tangent.
+    Tanh,
+    /// Rectified linear unit.
+    Relu,
+    /// Logistic sigmoid.
+    Sigmoid,
+}
+
+impl Act {
+    /// Apply the activation to a node (identity returns the node itself —
+    /// zero cost, no extra tape entry).
+    #[inline]
+    pub fn apply<T: Scalar>(self, tape: &mut Tape<T>, x: Value) -> Value {
+        match self {
+            Act::Identity => x,
+            Act::Tanh => tape.tanh(x),
+            Act::Relu => tape.relu(x),
+            Act::Sigmoid => tape.sigmoid(x),
+        }
+    }
+}
+
+/// A contiguous run of parameter leaves `[first, first + len)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ParamRange {
+    /// First parameter node.
+    pub first: Value,
+    /// Number of parameters.
+    pub len: usize,
+}
+
+impl ParamRange {
+    /// The `i`-th parameter id.
+    #[inline]
+    pub fn at(self, i: usize) -> Value {
+        debug_assert!(i < self.len);
+        Value(self.first.0 + i as u32)
+    }
+
+    /// Iterate over all parameter ids.
+    pub fn iter(self) -> impl Iterator<Item = Value> {
+        (self.first.0..self.first.0 + self.len as u32).map(Value)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn act_identity_creates_no_node() {
+        let mut t = Tape::<f64>::new();
+        let x = t.leaf(1.0);
+        let before = t.len();
+        let y = Act::Identity.apply(&mut t, x);
+        assert_eq!(y, x);
+        assert_eq!(t.len(), before);
+    }
+
+    #[test]
+    fn act_variants_compute_expected_values() {
+        let mut t = Tape::<f64>::new();
+        let x = t.leaf(-0.5);
+        let r = Act::Relu.apply(&mut t, x);
+        assert_eq!(t.value(r), 0.0);
+        let th = Act::Tanh.apply(&mut t, x);
+        assert!((t.value(th) - (-0.5f64).tanh()).abs() < 1e-15);
+        let s = Act::Sigmoid.apply(&mut t, x);
+        assert!((t.value(s) - 1.0 / (1.0 + 0.5f64.exp())).abs() < 1e-15);
+    }
+
+    #[test]
+    fn param_range_indexing() {
+        let r = ParamRange {
+            first: Value(10),
+            len: 3,
+        };
+        assert_eq!(r.at(0), Value(10));
+        assert_eq!(r.at(2), Value(12));
+        let ids: Vec<u32> = r.iter().map(|v| v.0).collect();
+        assert_eq!(ids, vec![10, 11, 12]);
+    }
+}

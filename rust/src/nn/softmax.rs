@@ -1,0 +1,157 @@
+//! Softmax and cross-entropy at scalar granularity (paper §2.5 "Output").
+//!
+//! Two constructions:
+//! - **composed** (paper-parity): built only from Table 8 primitives —
+//!   `exp` per logit, `reduceSum`, `div`, `negativeLog`. This is how the
+//!   paper expresses CE(p, p̂) = −Σ pᵢ log p̂ᵢ with a one-hot target.
+//! - **fused** (BurTorch extension, ablated in `benches/ablations`): the
+//!   single `crossEntropyLogits` node with stable logsumexp — 1 node
+//!   instead of V+3 and numerically robust for large logits.
+
+use crate::scalar::Scalar;
+use crate::tape::{Tape, Value};
+
+/// Which cross-entropy construction a model should emit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CeMode {
+    /// Table-8 primitive composition (paper parity).
+    Composed,
+    /// Single fused node with stable logsumexp.
+    Fused,
+}
+
+/// Softmax probabilities as V nodes (composed from primitives).
+pub fn softmax_composed<T: Scalar>(tape: &mut Tape<T>, logits: &[Value]) -> Vec<Value> {
+    let exps: Vec<Value> = logits.iter().map(|&z| tape.exp(z)).collect();
+    let den = tape.reduce_sum(&exps);
+    exps.iter().map(|&e| tape.div(e, den)).collect()
+}
+
+/// Cross-entropy −log p̂_target from logits, composed from primitives.
+/// Only the target's probability node is materialized (V exp nodes, one
+/// reduceSum, one div, one negativeLog).
+pub fn cross_entropy_composed<T: Scalar>(
+    tape: &mut Tape<T>,
+    logits: &[Value],
+    target: usize,
+) -> Value {
+    assert!(target < logits.len());
+    let exps: Vec<Value> = logits.iter().map(|&z| tape.exp(z)).collect();
+    let den = tape.reduce_sum(&exps);
+    let p = tape.div(exps[target], den);
+    tape.neg_log(p)
+}
+
+/// Cross-entropy as one fused node over a contiguous logits range.
+/// `logits` must be consecutive ids (true for a Linear's Identity outputs
+/// when no other nodes interleave; callers assert).
+pub fn cross_entropy_fused<T: Scalar>(
+    tape: &mut Tape<T>,
+    logits: &[Value],
+    target: usize,
+) -> Value {
+    assert!(target < logits.len());
+    let contiguous = logits
+        .windows(2)
+        .all(|w| w[1].raw() == w[0].raw() + 1);
+    assert!(contiguous, "fused CE requires a contiguous logits range");
+    tape.ce_logits_range(logits[0], logits.len(), target)
+}
+
+/// Cross-entropy with mode selection.
+pub fn cross_entropy<T: Scalar>(
+    tape: &mut Tape<T>,
+    logits: &[Value],
+    target: usize,
+    mode: CeMode,
+) -> Value {
+    match mode {
+        CeMode::Composed => cross_entropy_composed(tape, logits, target),
+        CeMode::Fused => cross_entropy_fused(tape, logits, target),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fdiff::gradcheck;
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut t = Tape::<f64>::new();
+        let logits: Vec<Value> = [0.5, -1.0, 2.0, 0.0].iter().map(|&v| t.leaf(v)).collect();
+        let probs = softmax_composed(&mut t, &logits);
+        let total: f64 = probs.iter().map(|&p| t.value(p)).sum();
+        assert!((total - 1.0).abs() < 1e-12);
+        assert!(probs.iter().all(|&p| t.value(p) > 0.0));
+    }
+
+    #[test]
+    fn composed_and_fused_ce_agree() {
+        let zs = [0.3, -0.8, 1.5, 0.1];
+        let mut t1 = Tape::<f64>::new();
+        let l1 = t1.leaves(&zs);
+        let ids1: Vec<Value> = (0..4).map(|k| Value(l1.0 + k)).collect();
+        let c = cross_entropy_composed(&mut t1, &ids1, 2);
+
+        let mut t2 = Tape::<f64>::new();
+        let l2 = t2.leaves(&zs);
+        let ids2: Vec<Value> = (0..4).map(|k| Value(l2.0 + k)).collect();
+        let f = cross_entropy_fused(&mut t2, &ids2, 2);
+
+        assert!((t1.value(c) - t2.value(f)).abs() < 1e-12);
+        t1.backward(c);
+        t2.backward(f);
+        for k in 0..4 {
+            assert!(
+                (t1.grad(ids1[k]) - t2.grad(ids2[k])).abs() < 1e-12,
+                "grad mismatch at {k}"
+            );
+        }
+    }
+
+    #[test]
+    fn fused_ce_is_stable_for_huge_logits() {
+        let mut t = Tape::<f64>::new();
+        let l = t.leaves(&[1000.0, 999.0, 998.0]);
+        let ids: Vec<Value> = (0..3).map(|k| Value(l.0 + k)).collect();
+        let f = cross_entropy_fused(&mut t, &ids, 0);
+        assert!(t.value(f).is_finite());
+        assert!(t.value(f) < 1.0);
+        t.backward(f);
+        assert!(ids.iter().all(|&z| t.grad(z).is_finite()));
+    }
+
+    #[test]
+    fn ce_gradcheck_composed() {
+        let gc = gradcheck(&[0.4, -0.3, 0.9], 1e-6, |t, xs| {
+            cross_entropy_composed(t, xs, 1)
+        });
+        assert!(gc.ok(1e-6), "{gc:?}");
+    }
+
+    #[test]
+    fn ce_loss_decreases_when_target_logit_grows() {
+        let mut small = Tape::<f64>::new();
+        let a = small.leaves(&[0.0, 0.0]);
+        let ids: Vec<Value> = vec![Value(a.0), Value(a.0 + 1)];
+        let l_small = cross_entropy_composed(&mut small, &ids, 0);
+        let v_small = small.value(l_small);
+
+        let mut big = Tape::<f64>::new();
+        let b = big.leaves(&[3.0, 0.0]);
+        let ids2: Vec<Value> = vec![Value(b.0), Value(b.0 + 1)];
+        let l_big = cross_entropy_composed(&mut big, &ids2, 0);
+        assert!(big.value(l_big) < v_small);
+    }
+
+    #[test]
+    #[should_panic(expected = "contiguous")]
+    fn fused_ce_rejects_non_contiguous() {
+        let mut t = Tape::<f64>::new();
+        let a = t.leaf(0.0);
+        let _gap = t.leaf(9.0);
+        let b = t.leaf(1.0);
+        cross_entropy_fused(&mut t, &[a, b], 0);
+    }
+}

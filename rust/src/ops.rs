@@ -1,0 +1,341 @@
+//! Op codes and their metadata (paper Appendix F.4, Table 8).
+//!
+//! Every node on the tape carries one [`Op`]. The forward/backward
+//! *semantics* live next to the tape's dispatch loops (`tape::mod` /
+//! `tape::backward`) so the compiler sees one tight match per loop; this
+//! module owns the enumeration, arities, mnemonics, and display metadata
+//! used by the serializer and the DOT/matplotlib generators.
+
+/// Operation code of a tape node. `#[repr(u8)]` keeps the op array dense
+/// (1 byte per node) — part of the paper's contiguous-memory design.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum Op {
+    // ---- leaves -------------------------------------------------------
+    /// Input / variable / constant node (paper: `leaf`).
+    Leaf = 0,
+
+    // ---- unary [s] ----------------------------------------------------
+    /// max(0, x) (paper: `relu`).
+    Relu,
+    /// tanh(x) (paper: `tanh`).
+    Tanh,
+    /// exp(x) (paper: `exp`).
+    Exp,
+    /// −ln(x) (paper: `negativeLog`).
+    NegLog,
+    /// 1/(1+exp(−x)) (paper: `sigmoid`).
+    Sigmoid,
+    /// 1/x (paper: `inv`).
+    Inv,
+    /// x² (paper: `sqr`).
+    Sqr,
+    /// x³ (paper: `pow3`).
+    Cub,
+    /// ln(x) (paper: `logarithm`).
+    Log,
+    /// √x (paper: `sqrt`).
+    Sqrt,
+    /// 1/√x (paper: `invSqrt`).
+    InvSqrt,
+    /// −x (sugar the listings need; lowered as mulByConstant(−1) in the
+    /// paper, kept explicit here so DOT dumps read naturally).
+    NegOp,
+
+    // ---- binary [bin] -------------------------------------------------
+    /// x + y (paper: `add`).
+    Add,
+    /// x − y (paper: `sub`).
+    Sub,
+    /// x · y (paper: `mul`).
+    Mul,
+    /// x · c for compile-time constant c (paper: `mulByConstant`).
+    MulConst,
+    /// x / y (paper: `div`).
+    Div,
+    /// (x + y)/2 (paper: `mean`).
+    Mean2,
+    /// x² + y² (paper: `addSquares`).
+    AddSquares,
+    /// (x² + y²)/2 (paper: `meanSquares`).
+    MeanSquares,
+    /// −(x + y)/2 (paper: `negativeMean`).
+    NegMean2,
+
+    // ---- varying [var] (args in the aux pool) --------------------------
+    /// Σ xᵢ (paper: `reduceSum`).
+    ReduceSum,
+    /// x₁ − Σ_{i≥2} xᵢ (paper: `reduceSub`).
+    ReduceSub,
+    /// Π xᵢ (paper: `reduceMul`).
+    ReduceMul,
+    /// (1/n) Σ xᵢ (paper: `reduceMean`).
+    ReduceMean,
+    /// Σ xᵢ² (paper: `reduceSumOfSquares`).
+    ReduceSumSquares,
+    /// (1/n) Σ xᵢ² (paper: `reduceMeanSquares`).
+    ReduceMeanSquares,
+    /// −(1/n) Σ xᵢ (paper: `reduceNegativeMean`).
+    ReduceNegMean,
+    /// ⟨x, y⟩ over 2n aux args (paper: `innerProduct`).
+    InnerProduct,
+    /// ⟨x, y⟩ + b over 2n+1 aux args (paper: `innerProductWithBias`).
+    InnerProductBias,
+
+    // ---- fused contiguous-range variants (BurTorch-specific) ----------
+    /// ⟨val[x0..x0+n], val[w0..w0+n]⟩ — arguments are two *contiguous id
+    /// ranges*, no aux indirection. This is the engine's cache-friendly
+    /// fast path for dense layers whose inputs are consecutive nodes.
+    DotRange,
+    /// DotRange + bias node.
+    DotRangeBias,
+    /// Fused softmax cross-entropy over a contiguous logits range with a
+    /// fixed target index: logsumexp(z) − z_y. Used only by the ablation
+    /// benches; the paper-parity models compose exp/reduceSum/div/negLog.
+    CeLogitsRange,
+    /// ⟨x, w⟩ + b where x-ids are arbitrary (shared aux run — the paper's
+    /// "memory view" trick: a split tensor passed without concatenation)
+    /// and w is a contiguous parameter range. The workhorse of every
+    /// linear layer: aux layout `[n, w0, bias]` at `b`, x-ids at `a`.
+    DotParamRange,
+    /// ⟨val[w0..w0+n], val[x0 + k·stride]⟩ — contiguous weights against a
+    /// constant-stride id sequence. Added in the §Perf pass for the
+    /// attention value-gather: removes all per-dim id materialization.
+    /// aux layout `[w0, n, stride]` at `b`; `a` = x0.
+    DotStrided,
+}
+
+/// Argument shape of an op, for validation, serialization and viz.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Arity {
+    /// No inputs.
+    Leaf,
+    /// One input in `a`.
+    Unary,
+    /// Two inputs in `a`, `b`.
+    Binary,
+    /// One input in `a`, constant payload index in `b`.
+    UnaryConst,
+    /// `b` inputs starting at aux offset `a`.
+    Varying,
+    /// `2·b` aux entries at offset `a`: interleaved-as-split x-ids then y-ids.
+    VaryingPairs,
+    /// `2·b + 1` aux entries at offset `a` (pairs + bias id).
+    VaryingPairsBias,
+    /// Contiguous ranges: `a` = x start, `b` = packed (w start, n) in aux.
+    Range,
+}
+
+impl Op {
+    /// Argument shape for this op.
+    pub const fn arity(self) -> Arity {
+        match self {
+            Op::Leaf => Arity::Leaf,
+            Op::Relu
+            | Op::Tanh
+            | Op::Exp
+            | Op::NegLog
+            | Op::Sigmoid
+            | Op::Inv
+            | Op::Sqr
+            | Op::Cub
+            | Op::Log
+            | Op::Sqrt
+            | Op::InvSqrt
+            | Op::NegOp => Arity::Unary,
+            Op::Add
+            | Op::Sub
+            | Op::Mul
+            | Op::Div
+            | Op::Mean2
+            | Op::AddSquares
+            | Op::MeanSquares
+            | Op::NegMean2 => Arity::Binary,
+            Op::MulConst => Arity::UnaryConst,
+            Op::ReduceSum
+            | Op::ReduceSub
+            | Op::ReduceMul
+            | Op::ReduceMean
+            | Op::ReduceSumSquares
+            | Op::ReduceMeanSquares
+            | Op::ReduceNegMean => Arity::Varying,
+            Op::InnerProduct => Arity::VaryingPairs,
+            Op::InnerProductBias => Arity::VaryingPairsBias,
+            Op::DotRange
+            | Op::DotRangeBias
+            | Op::CeLogitsRange
+            | Op::DotParamRange
+            | Op::DotStrided => Arity::Range,
+        }
+    }
+
+    /// Paper mnemonic (Table 8 first column) — used by DOT dumps.
+    pub const fn mnemonic(self) -> &'static str {
+        match self {
+            Op::Leaf => "leaf",
+            Op::Relu => "relu",
+            Op::Tanh => "tanh",
+            Op::Exp => "exp",
+            Op::NegLog => "negativeLog",
+            Op::Sigmoid => "sigmoid",
+            Op::Inv => "inv",
+            Op::Sqr => "sqr",
+            Op::Cub => "pow3",
+            Op::Log => "logarithm",
+            Op::Sqrt => "sqrt",
+            Op::InvSqrt => "invSqrt",
+            Op::NegOp => "neg",
+            Op::Add => "+",
+            Op::Sub => "-",
+            Op::Mul => "*",
+            Op::MulConst => "mulByConstant",
+            Op::Div => "/",
+            Op::Mean2 => "mean",
+            Op::AddSquares => "addSquares",
+            Op::MeanSquares => "meanSquares",
+            Op::NegMean2 => "negativeMean",
+            Op::ReduceSum => "reduceSum",
+            Op::ReduceSub => "reduceSub",
+            Op::ReduceMul => "reduceMul",
+            Op::ReduceMean => "reduceMean",
+            Op::ReduceSumSquares => "reduceSumOfSquares",
+            Op::ReduceMeanSquares => "reduceMeanSquares",
+            Op::ReduceNegMean => "reduceNegativeMean",
+            Op::InnerProduct => "innerProduct",
+            Op::InnerProductBias => "innerProductWithBias",
+            Op::DotRange => "dotRange",
+            Op::DotRangeBias => "dotRangeWithBias",
+            Op::CeLogitsRange => "crossEntropyLogits",
+            Op::DotParamRange => "dotParamRange",
+            Op::DotStrided => "dotStrided",
+        }
+    }
+
+    /// Paper internal name (Table 8 third column).
+    pub const fn internal_name(self) -> &'static str {
+        match self {
+            Op::Leaf => "eLeaf",
+            Op::Relu => "eRelu",
+            Op::Tanh => "eTanh",
+            Op::Exp => "eExp",
+            Op::NegLog => "eNegLog",
+            Op::Sigmoid => "eSigmoid",
+            Op::Inv => "eInv",
+            Op::Sqr => "eSqr",
+            Op::Cub => "eCub",
+            Op::Log => "eLog",
+            Op::Sqrt => "eSqrt",
+            Op::InvSqrt => "eInvSqrt",
+            Op::NegOp => "eNeg",
+            Op::Add => "eBinaryAdd",
+            Op::Sub => "eBinarySub",
+            Op::Mul => "eBinaryMult",
+            Op::MulConst => "eBinaryMultByConst",
+            Op::Div => "eBinaryDiv",
+            Op::Mean2 => "eBinaryMean",
+            Op::AddSquares => "eBinaryAddSquares",
+            Op::MeanSquares => "eBinaryMeanSquares",
+            Op::NegMean2 => "eBinaryNegativeMean",
+            Op::ReduceSum => "eAddVarying",
+            Op::ReduceSub => "eSubVarying",
+            Op::ReduceMul => "eMulVarying",
+            Op::ReduceMean => "eMeanVarying",
+            Op::ReduceSumSquares => "eSumOfSquaresVarying",
+            Op::ReduceMeanSquares => "eMeanSquaresVarying",
+            Op::ReduceNegMean => "eNegativeMeanVarying",
+            Op::InnerProduct => "eInnerProductNoBias",
+            Op::InnerProductBias => "eInnerProductWithBias",
+            Op::DotRange => "eDotRange",
+            Op::DotRangeBias => "eDotRangeWithBias",
+            Op::CeLogitsRange => "eCrossEntropyLogits",
+            Op::DotParamRange => "eDotParamRange",
+            Op::DotStrided => "eDotStrided",
+        }
+    }
+
+    /// Stable numeric tag for serialization.
+    pub const fn tag(self) -> u8 {
+        self as u8
+    }
+
+    /// Inverse of [`Op::tag`]; `None` for unknown tags (corrupt files).
+    pub fn from_tag(tag: u8) -> Option<Op> {
+        use Op::*;
+        const ALL: &[Op] = &[
+            Leaf,
+            Relu,
+            Tanh,
+            Exp,
+            NegLog,
+            Sigmoid,
+            Inv,
+            Sqr,
+            Cub,
+            Log,
+            Sqrt,
+            InvSqrt,
+            NegOp,
+            Add,
+            Sub,
+            Mul,
+            MulConst,
+            Div,
+            Mean2,
+            AddSquares,
+            MeanSquares,
+            NegMean2,
+            ReduceSum,
+            ReduceSub,
+            ReduceMul,
+            ReduceMean,
+            ReduceSumSquares,
+            ReduceMeanSquares,
+            ReduceNegMean,
+            InnerProduct,
+            InnerProductBias,
+            DotRange,
+            DotRangeBias,
+            CeLogitsRange,
+            DotParamRange,
+            DotStrided,
+        ];
+        ALL.get(tag as usize).copied()
+    }
+
+    /// Number of distinct op codes (serializer bound checks).
+    pub const COUNT: usize = Op::DotStrided as usize + 1;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tags_round_trip() {
+        for tag in 0..Op::COUNT as u8 {
+            let op = Op::from_tag(tag).expect("tag in range");
+            assert_eq!(op.tag(), tag);
+        }
+        assert_eq!(Op::from_tag(Op::COUNT as u8), None);
+        assert_eq!(Op::from_tag(255), None);
+    }
+
+    #[test]
+    fn arity_table_is_consistent() {
+        assert_eq!(Op::Leaf.arity(), Arity::Leaf);
+        assert_eq!(Op::Tanh.arity(), Arity::Unary);
+        assert_eq!(Op::Add.arity(), Arity::Binary);
+        assert_eq!(Op::MulConst.arity(), Arity::UnaryConst);
+        assert_eq!(Op::ReduceSum.arity(), Arity::Varying);
+        assert_eq!(Op::InnerProduct.arity(), Arity::VaryingPairs);
+        assert_eq!(Op::InnerProductBias.arity(), Arity::VaryingPairsBias);
+        assert_eq!(Op::DotRangeBias.arity(), Arity::Range);
+    }
+
+    #[test]
+    fn mnemonics_match_paper_table8() {
+        assert_eq!(Op::NegLog.mnemonic(), "negativeLog");
+        assert_eq!(Op::ReduceSumSquares.internal_name(), "eSumOfSquaresVarying");
+        assert_eq!(Op::InnerProductBias.internal_name(), "eInnerProductWithBias");
+    }
+}

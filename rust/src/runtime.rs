@@ -1,0 +1,223 @@
+//! PJRT runtime: loads AOT-compiled JAX/Pallas artifacts (HLO text) and
+//! executes them from Rust — the throughput-oriented **framework
+//! graph-mode baseline** of the paper's tables, and the proof that the
+//! three layers (Pallas kernel → JAX model → Rust driver) compose.
+//!
+//! Interchange is HLO *text*, not serialized protos: jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! Python never runs on this path: `make artifacts` produced the files
+//! once at build time.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+/// A compiled executable plus its artifact metadata.
+pub struct LoadedGraph {
+    /// Compiled PJRT executable.
+    pub exe: xla::PjRtLoadedExecutable,
+    /// Artifact path (for reporting).
+    pub path: PathBuf,
+}
+
+/// The PJRT engine: one CPU client plus a cache of compiled artifacts.
+pub struct Engine {
+    client: xla::PjRtClient,
+    graphs: HashMap<String, LoadedGraph>,
+}
+
+impl Engine {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Engine {
+            client,
+            graphs: HashMap::new(),
+        })
+    }
+
+    /// Platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text artifact under a cache key.
+    pub fn load(&mut self, key: &str, path: &Path) -> Result<()> {
+        if self.graphs.contains_key(key) {
+            return Ok(());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))?;
+        self.graphs.insert(
+            key.to_string(),
+            LoadedGraph {
+                exe,
+                path: path.to_path_buf(),
+            },
+        );
+        Ok(())
+    }
+
+    /// True if `key` has been loaded.
+    pub fn has(&self, key: &str) -> bool {
+        self.graphs.contains_key(key)
+    }
+
+    /// Execute a loaded artifact on f32 buffers. `inputs` are (data, dims)
+    /// pairs; the result is the flattened tuple of f32 outputs.
+    ///
+    /// The artifacts are lowered with `return_tuple=True`, so the single
+    /// output is a tuple literal; we decompose and flatten it.
+    pub fn run_f32(&self, key: &str, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        let g = self
+            .graphs
+            .get(key)
+            .ok_or_else(|| anyhow!("artifact '{key}' not loaded"))?;
+        let mut lits: Vec<xla::Literal> = Vec::with_capacity(inputs.len());
+        for (data, dims) in inputs {
+            lits.push(make_f32_literal(data, dims)?);
+        }
+        let result = g
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow!("execute '{key}': {e:?}"))?;
+        let mut out_lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let parts = out_lit
+            .decompose_tuple()
+            .map_err(|e| anyhow!("decompose tuple: {e:?}"))?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            out.push(
+                p.to_vec::<f32>()
+                    .map_err(|e| anyhow!("output to_vec: {e:?}"))?,
+            );
+        }
+        Ok(out)
+    }
+
+    /// Execute with mixed f32/i32 inputs (token ids are i32 in the JAX
+    /// models). `inputs` entries are either F32 or I32 buffers.
+    pub fn run_mixed(&self, key: &str, inputs: &[Input<'_>]) -> Result<Vec<Vec<f32>>> {
+        let g = self
+            .graphs
+            .get(key)
+            .ok_or_else(|| anyhow!("artifact '{key}' not loaded"))?;
+        let mut lits: Vec<xla::Literal> = Vec::with_capacity(inputs.len());
+        for inp in inputs {
+            lits.push(inp.to_literal()?);
+        }
+        let result = g
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow!("execute '{key}': {e:?}"))?;
+        let mut out_lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let parts = out_lit
+            .decompose_tuple()
+            .map_err(|e| anyhow!("decompose tuple: {e:?}"))?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            out.push(
+                p.to_vec::<f32>()
+                    .map_err(|e| anyhow!("output to_vec: {e:?}"))?,
+            );
+        }
+        Ok(out)
+    }
+}
+
+/// One typed input buffer for [`Engine::run_mixed`].
+pub enum Input<'a> {
+    /// f32 tensor with dims.
+    F32(&'a [f32], &'a [usize]),
+    /// i32 tensor with dims.
+    I32(&'a [i32], &'a [usize]),
+}
+
+impl<'a> Input<'a> {
+    fn to_literal(&self) -> Result<xla::Literal> {
+        match self {
+            Input::F32(data, dims) => make_f32_literal(data, dims),
+            Input::I32(data, dims) => {
+                if dims.is_empty() {
+                    return Ok(xla::Literal::scalar(data[0]));
+                }
+                let l = xla::Literal::vec1(data);
+                if dims.len() == 1 {
+                    Ok(l)
+                } else {
+                    let d: Vec<i64> = dims.iter().map(|&x| x as i64).collect();
+                    l.reshape(&d).map_err(|e| anyhow!("reshape: {e:?}"))
+                }
+            }
+        }
+    }
+}
+
+/// Build an f32 literal; empty dims ⇒ rank-0 scalar.
+fn make_f32_literal(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    if dims.is_empty() {
+        return Ok(xla::Literal::scalar(data[0]));
+    }
+    let l = xla::Literal::vec1(data);
+    if dims.len() == 1 {
+        Ok(l)
+    } else {
+        let d: Vec<i64> = dims.iter().map(|&x| x as i64).collect();
+        l.reshape(&d).map_err(|e| anyhow!("reshape input: {e:?}"))
+    }
+}
+
+/// Default artifacts directory (relative to the repo root / CWD).
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("BURTORCH_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// Convenience: does an artifact file exist?
+pub fn artifact_path(name: &str) -> PathBuf {
+    artifacts_dir().join(name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // PJRT-dependent tests live in rust/tests/runtime_integration.rs and
+    // skip gracefully when artifacts are missing; here we only test the
+    // pure helpers.
+
+    #[test]
+    fn artifacts_dir_honors_env() {
+        let prev = std::env::var_os("BURTORCH_ARTIFACTS");
+        std::env::set_var("BURTORCH_ARTIFACTS", "/tmp/afdir");
+        assert_eq!(artifacts_dir(), PathBuf::from("/tmp/afdir"));
+        match prev {
+            Some(v) => std::env::set_var("BURTORCH_ARTIFACTS", v),
+            None => std::env::remove_var("BURTORCH_ARTIFACTS"),
+        }
+    }
+
+    #[test]
+    fn artifact_path_joins() {
+        std::env::remove_var("BURTORCH_ARTIFACTS");
+        assert_eq!(
+            artifact_path("model.hlo.txt"),
+            PathBuf::from("artifacts/model.hlo.txt")
+        );
+    }
+}

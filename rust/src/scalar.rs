@@ -1,0 +1,246 @@
+//! Scalar abstraction (paper Appendix F.3).
+//!
+//! BurTorch computes on plain machine scalars. The paper supports FP32,
+//! FP64 (and, with C++23, FP16/BF16/FP128); here the engine is generic over
+//! [`Scalar`], implemented for `f32` and `f64`. The trait carries exactly
+//! the operations Table 8 needs plus exact little-endian (de)serialization
+//! for the Table 4 save/load path.
+
+use std::fmt::{Debug, Display};
+use std::ops::{Add, AddAssign, Div, DivAssign, Mul, MulAssign, Neg, Sub, SubAssign};
+
+/// A floating-point scalar the tape can differentiate through.
+pub trait Scalar:
+    Copy
+    + PartialOrd
+    + PartialEq
+    + Default
+    + Debug
+    + Display
+    + Send
+    + Sync
+    + 'static
+    + Add<Output = Self>
+    + Sub<Output = Self>
+    + Mul<Output = Self>
+    + Div<Output = Self>
+    + Neg<Output = Self>
+    + AddAssign
+    + SubAssign
+    + MulAssign
+    + DivAssign
+{
+    /// Additive identity.
+    const ZERO: Self;
+    /// Multiplicative identity.
+    const ONE: Self;
+    /// The constant 2.
+    const TWO: Self;
+    /// The constant 1/2.
+    const HALF: Self;
+    /// Serialized size in bytes (4 for f32, 8 for f64).
+    const BYTES: usize;
+    /// Human-readable dtype name ("fp32" / "fp64").
+    const DTYPE: &'static str;
+
+    /// Lossy conversion from f64 (exact for f64, rounded for f32).
+    fn from_f64(x: f64) -> Self;
+    /// Widening conversion to f64 (exact for both supported types).
+    fn to_f64(self) -> f64;
+    /// Conversion from a usize count (used by mean-style reductions).
+    fn from_usize(n: usize) -> Self {
+        Self::from_f64(n as f64)
+    }
+
+    fn tanh(self) -> Self;
+    fn exp(self) -> Self;
+    fn ln(self) -> Self;
+    fn sqrt(self) -> Self;
+    fn abs(self) -> Self;
+    fn powi(self, n: i32) -> Self;
+    /// Fused multiply-add `self * a + b` (lowered to an FMA instruction
+    /// where the target supports it — the ILP workhorse of `innerProduct`).
+    fn mul_add(self, a: Self, b: Self) -> Self;
+    fn max(self, other: Self) -> Self;
+    fn min(self, other: Self) -> Self;
+    fn is_finite(self) -> bool;
+
+    /// Exact little-endian encoding (Table 4: raw payload bytes).
+    fn write_le(self, out: &mut Vec<u8>);
+    /// Exact little-endian decoding; `buf.len()` must be ≥ `BYTES`.
+    fn read_le(buf: &[u8]) -> Self;
+}
+
+impl Scalar for f32 {
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+    const TWO: Self = 2.0;
+    const HALF: Self = 0.5;
+    const BYTES: usize = 4;
+    const DTYPE: &'static str = "fp32";
+
+    #[inline(always)]
+    fn from_f64(x: f64) -> Self {
+        x as f32
+    }
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    #[inline(always)]
+    fn tanh(self) -> Self {
+        f32::tanh(self)
+    }
+    #[inline(always)]
+    fn exp(self) -> Self {
+        f32::exp(self)
+    }
+    #[inline(always)]
+    fn ln(self) -> Self {
+        f32::ln(self)
+    }
+    #[inline(always)]
+    fn sqrt(self) -> Self {
+        f32::sqrt(self)
+    }
+    #[inline(always)]
+    fn abs(self) -> Self {
+        f32::abs(self)
+    }
+    #[inline(always)]
+    fn powi(self, n: i32) -> Self {
+        f32::powi(self, n)
+    }
+    #[inline(always)]
+    fn mul_add(self, a: Self, b: Self) -> Self {
+        f32::mul_add(self, a, b)
+    }
+    #[inline(always)]
+    fn max(self, other: Self) -> Self {
+        f32::max(self, other)
+    }
+    #[inline(always)]
+    fn min(self, other: Self) -> Self {
+        f32::min(self, other)
+    }
+    #[inline(always)]
+    fn is_finite(self) -> bool {
+        f32::is_finite(self)
+    }
+    #[inline]
+    fn write_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+    #[inline]
+    fn read_le(buf: &[u8]) -> Self {
+        f32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]])
+    }
+}
+
+impl Scalar for f64 {
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+    const TWO: Self = 2.0;
+    const HALF: Self = 0.5;
+    const BYTES: usize = 8;
+    const DTYPE: &'static str = "fp64";
+
+    #[inline(always)]
+    fn from_f64(x: f64) -> Self {
+        x
+    }
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self
+    }
+    #[inline(always)]
+    fn tanh(self) -> Self {
+        f64::tanh(self)
+    }
+    #[inline(always)]
+    fn exp(self) -> Self {
+        f64::exp(self)
+    }
+    #[inline(always)]
+    fn ln(self) -> Self {
+        f64::ln(self)
+    }
+    #[inline(always)]
+    fn sqrt(self) -> Self {
+        f64::sqrt(self)
+    }
+    #[inline(always)]
+    fn abs(self) -> Self {
+        f64::abs(self)
+    }
+    #[inline(always)]
+    fn powi(self, n: i32) -> Self {
+        f64::powi(self, n)
+    }
+    #[inline(always)]
+    fn mul_add(self, a: Self, b: Self) -> Self {
+        f64::mul_add(self, a, b)
+    }
+    #[inline(always)]
+    fn max(self, other: Self) -> Self {
+        f64::max(self, other)
+    }
+    #[inline(always)]
+    fn min(self, other: Self) -> Self {
+        f64::min(self, other)
+    }
+    #[inline(always)]
+    fn is_finite(self) -> bool {
+        f64::is_finite(self)
+    }
+    #[inline]
+    fn write_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+    #[inline]
+    fn read_le(buf: &[u8]) -> Self {
+        f64::from_le_bytes([
+            buf[0], buf[1], buf[2], buf[3], buf[4], buf[5], buf[6], buf[7],
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f64_roundtrip_is_exact() {
+        let xs = [0.0f64, -1.5, std::f64::consts::PI, 1e-300, -1e300];
+        for &x in &xs {
+            let mut buf = Vec::new();
+            x.write_le(&mut buf);
+            assert_eq!(buf.len(), f64::BYTES);
+            assert_eq!(f64::read_le(&buf), x);
+        }
+    }
+
+    #[test]
+    fn f32_roundtrip_is_exact() {
+        let xs = [0.0f32, -1.5, std::f32::consts::E, 1e-30, -1e30];
+        for &x in &xs {
+            let mut buf = Vec::new();
+            x.write_le(&mut buf);
+            assert_eq!(buf.len(), f32::BYTES);
+            assert_eq!(f32::read_le(&buf), x);
+        }
+    }
+
+    #[test]
+    fn constants_are_consistent() {
+        assert_eq!(f32::HALF * f32::TWO, f32::ONE);
+        assert_eq!(f64::HALF * f64::TWO, f64::ONE);
+        assert_eq!(f64::from_usize(7), 7.0);
+    }
+
+    #[test]
+    fn mul_add_matches_separate_ops_for_exact_cases() {
+        assert_eq!(2.0f64.mul_add(3.0, 4.0), 10.0);
+        assert_eq!(2.0f32.mul_add(3.0, 4.0), 10.0);
+    }
+}

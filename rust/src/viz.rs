@@ -1,0 +1,229 @@
+//! Visualization (paper Appendix E.8 and F.6).
+//!
+//! BurTorch does not embed plotting into the runtime; instead it *generates
+//! Python/Matplotlib scripts as strings* (and DOT graphs), exactly as the
+//! paper describes: "dynamically generates Python scripts to leverage tools
+//! like Matplotlib" and "computation graphs … exported in DOT format".
+
+use crate::scalar::Scalar;
+use crate::tape::{Tape, Value};
+
+// ---- DOT export (paper: buildDotGraph; Figures 1 and 2) --------------------
+
+/// Render the cone of `root` (or the whole tape if `root` is `None`) as a
+/// DOT digraph. Nodes show: name (if any), mnemonic, value, gradient and
+/// raw index — the fields the paper's Figure 1 boxes contain.
+pub fn build_dot_graph<T: Scalar>(tape: &Tape<T>, root: Option<Value>) -> String {
+    let mut out = String::from("digraph burtorch {\n  rankdir=LR;\n  node [shape=record, fontsize=10];\n");
+    let n = match root {
+        Some(r) => r.idx() + 1,
+        None => tape.len(),
+    };
+    for i in 0..n {
+        let v = Value(i as u32);
+        let name = tape.name_of(v).unwrap_or("");
+        let label = format!(
+            "{{{}|op: {}|val: {:.6}|grad: {:.6}|idx: {}}}",
+            if name.is_empty() { "·" } else { name },
+            tape.op_of(v).mnemonic(),
+            tape.value(v).to_f64(),
+            tape.grad(v).to_f64(),
+            i
+        );
+        out.push_str(&format!("  n{i} [label=\"{label}\"];\n"));
+        for arg in tape.args_of(v) {
+            out.push_str(&format!("  n{} -> n{i};\n", arg.idx()));
+        }
+    }
+    out.push_str("}\n");
+    out
+}
+
+/// String form of a single compute node (paper: `asString`).
+pub fn node_as_string<T: Scalar>(tape: &Tape<T>, v: Value) -> String {
+    let args: Vec<String> = tape
+        .args_of(v)
+        .iter()
+        .map(|a| format!("n{}", a.raw()))
+        .collect();
+    format!(
+        "n{} = {}({}) -> val {:.6}, grad {:.6}",
+        v.raw(),
+        tape.op_of(v).mnemonic(),
+        args.join(", "),
+        tape.value(v).to_f64(),
+        tape.grad(v).to_f64()
+    )
+}
+
+// ---- Matplotlib script generation (paper F.6) ------------------------------
+
+/// Generate a Matplotlib script plotting `f` sampled on `[x_start, x_end]`
+/// (paper: `generatePlot`).
+pub fn generate_plot(
+    title: &str,
+    x_start: f64,
+    x_end: f64,
+    samples: usize,
+    f: impl Fn(f64) -> f64,
+) -> String {
+    assert!(samples >= 2);
+    let mut xs = Vec::with_capacity(samples);
+    let mut ys = Vec::with_capacity(samples);
+    for k in 0..samples {
+        let x = x_start + (x_end - x_start) * (k as f64) / ((samples - 1) as f64);
+        xs.push(x);
+        ys.push(f(x));
+    }
+    let mut s = String::from("#!/usr/bin/env python3\nimport matplotlib.pyplot as plt\n");
+    s.push_str(&format!("xs = {}\n", py_list(&xs)));
+    s.push_str(&format!("ys = {}\n", py_list(&ys)));
+    s.push_str("plt.plot(xs, ys)\nplt.grid(True)\n");
+    s.push_str(&format!("plt.title({})\n", py_str(title)));
+    s.push_str("plt.show()\n");
+    s
+}
+
+/// Generate a basic heatmap script from a row-major matrix
+/// (paper: `generateHeatMapBasic`).
+pub fn generate_heatmap_basic(title: &str, rows: usize, cols: usize, data: &[f64]) -> String {
+    assert_eq!(data.len(), rows * cols);
+    let mut s = String::from("#!/usr/bin/env python3\nimport matplotlib.pyplot as plt\n");
+    s.push_str("m = [\n");
+    for r in 0..rows {
+        s.push_str(&format!("  {},\n", py_list(&data[r * cols..(r + 1) * cols])));
+    }
+    s.push_str("]\n");
+    s.push_str("plt.imshow(m, aspect='auto')\nplt.colorbar()\n");
+    s.push_str(&format!("plt.title({})\n", py_str(title)));
+    s.push_str("plt.show()\n");
+    s
+}
+
+/// Generate a heatmap with per-cell text annotations (paper:
+/// `generateHeatMap` with itemGetter/counterGetter).
+pub fn generate_heatmap<FItem, FCount>(
+    title: &str,
+    rows: usize,
+    cols: usize,
+    data: &[f64],
+    item: FItem,
+    counter: FCount,
+) -> String
+where
+    FItem: Fn(usize, usize) -> String,
+    FCount: Fn(usize, usize) -> String,
+{
+    let mut s = generate_heatmap_basic(title, rows, cols, data);
+    // Insert annotations before plt.show().
+    let show = s.rfind("plt.show()").unwrap();
+    let mut ann = String::new();
+    for r in 0..rows {
+        for c in 0..cols {
+            ann.push_str(&format!(
+                "plt.text({c}, {r}, {}, ha='center', va='center', fontsize=7)\n",
+                py_str(&format!("{}\\n{}", item(r, c), counter(r, c)))
+            ));
+        }
+    }
+    s.insert_str(show, &ann);
+    s
+}
+
+/// Generate the grouped-bar chart used by the paper's Figures 3/5/6/7:
+/// one bar per framework, log-scale y, value labels on top.
+pub fn generate_bar_chart(title: &str, ylabel: &str, labels: &[&str], values: &[f64]) -> String {
+    assert_eq!(labels.len(), values.len());
+    let mut s = String::from("#!/usr/bin/env python3\nimport matplotlib.pyplot as plt\n");
+    let quoted: Vec<String> = labels.iter().map(|l| py_str(l)).collect();
+    s.push_str(&format!("labels = [{}]\n", quoted.join(", ")));
+    s.push_str(&format!("values = {}\n", py_list(values)));
+    s.push_str("fig, ax = plt.subplots(figsize=(10, 5))\n");
+    s.push_str("bars = ax.bar(range(len(values)), values)\n");
+    s.push_str("ax.set_yscale('log')\n");
+    s.push_str("ax.set_xticks(range(len(labels)))\n");
+    s.push_str("ax.set_xticklabels(labels, rotation=30, ha='right', fontsize=8)\n");
+    s.push_str(&format!("ax.set_ylabel({})\n", py_str(ylabel)));
+    s.push_str(&format!("ax.set_title({})\n", py_str(title)));
+    s.push_str("for b, v in zip(bars, values):\n");
+    s.push_str("    ax.text(b.get_x() + b.get_width()/2, v, f'{v:.3g}', ha='center', va='bottom', fontsize=7)\n");
+    s.push_str("plt.tight_layout()\nplt.savefig('figure.png', dpi=150)\nplt.show()\n");
+    s
+}
+
+fn py_list(xs: &[f64]) -> String {
+    let items: Vec<String> = xs.iter().map(|x| format!("{x:e}")).collect();
+    format!("[{}]", items.join(", "))
+}
+
+fn py_str(s: &str) -> String {
+    format!("'{}'", s.replace('\\', "\\\\").replace('\'', "\\'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tape::Tape;
+
+    #[test]
+    fn dot_contains_nodes_and_edges() {
+        let mut t = Tape::<f64>::new();
+        let a = t.leaf(-41.0);
+        t.set_name(a, "a");
+        let b = t.leaf(2.0);
+        t.set_name(b, "b");
+        let c = t.add(a, b);
+        t.backward(c);
+        let dot = build_dot_graph(&t, Some(c));
+        assert!(dot.starts_with("digraph burtorch"));
+        assert!(dot.contains("n0 -> n2"));
+        assert!(dot.contains("n1 -> n2"));
+        assert!(dot.contains("op: +"));
+        assert!(dot.contains('a'));
+    }
+
+    #[test]
+    fn node_as_string_lists_args() {
+        let mut t = Tape::<f64>::new();
+        let a = t.leaf(1.0);
+        let b = t.leaf(2.0);
+        let c = t.mul(a, b);
+        let s = node_as_string(&t, c);
+        assert!(s.contains("n2 = *(n0, n1)"), "{s}");
+    }
+
+    #[test]
+    fn plot_script_is_valid_python_shape() {
+        let s = generate_plot("tanh", -2.0, 2.0, 11, |x| x.tanh());
+        assert!(s.contains("import matplotlib.pyplot"));
+        assert!(s.contains("plt.plot(xs, ys)"));
+        assert_eq!(s.matches("plt.show()").count(), 1);
+        // 11 samples on both axes.
+        assert_eq!(s.matches(',').count() >= 20, true);
+    }
+
+    #[test]
+    fn heatmap_scripts_contain_data_and_annotations() {
+        let basic = generate_heatmap_basic("hm", 2, 2, &[1.0, 2.0, 3.0, 4.0]);
+        assert!(basic.contains("plt.imshow"));
+        let full = generate_heatmap(
+            "hm",
+            2,
+            2,
+            &[1.0, 2.0, 3.0, 4.0],
+            |r, c| format!("v{r}{c}"),
+            |r, c| format!("#{}", r * 2 + c),
+        );
+        assert!(full.contains("plt.text"));
+        assert!(full.contains("v01"));
+        assert!(full.contains("#3"));
+    }
+
+    #[test]
+    fn bar_chart_quotes_labels() {
+        let s = generate_bar_chart("Figure 3", "seconds", &["BurTorch", "it's"], &[0.01, 10.0]);
+        assert!(s.contains("'BurTorch'"));
+        assert!(s.contains("it\\'s"));
+        assert!(s.contains("set_yscale('log')"));
+    }
+}

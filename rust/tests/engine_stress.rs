@@ -1,0 +1,191 @@
+//! Stress and concurrency tests: the paper's thread-safety claims (F.9.5,
+//! F.9.6), deep-graph robustness (no recursion ⇒ no stack overflow), and
+//! large-tape integrity.
+
+use std::thread;
+
+use burtorch::data::names_dataset;
+use burtorch::nn::{CeMode, CharMlp, CharMlpConfig};
+use burtorch::rng::Rng;
+use burtorch::tape::{Tape, Value};
+
+#[test]
+fn deep_chain_does_not_overflow_stack() {
+    // 200K-deep dependency chain: recursive backward (micrograd-style)
+    // would blow the stack; the paper's non-recursive design must not.
+    let mut t = Tape::<f64>::new();
+    let mut x = t.leaf(0.5);
+    for i in 0..200_000 {
+        x = if i % 2 == 0 {
+            t.tanh(x)
+        } else {
+            t.mul_const(x, 1.0001)
+        };
+    }
+    t.backward(x);
+    let g = t.grad(Value(0));
+    assert!(g.is_finite());
+    assert!(g.abs() <= 1.1, "chain of contractions keeps |g| ≤ ~1: {g}");
+}
+
+#[test]
+fn wide_fanout_accumulates_exactly() {
+    // One leaf feeding 50K nodes: grad must be the exact sum of partials.
+    let mut t = Tape::<f64>::new();
+    let x = t.leaf(2.0);
+    let mut terms = Vec::new();
+    for _ in 0..50_000 {
+        terms.push(t.mul_const(x, 1.0)); // d/dx = 1 each
+    }
+    let s = t.reduce_sum(&terms);
+    t.backward(s);
+    assert_eq!(t.grad(x), 50_000.0);
+}
+
+#[test]
+fn tapes_are_send_one_tape_per_thread() {
+    // Paper F.9.5/F.9.6: BurTorch supports multithreaded use. Our model:
+    // one tape per OS thread (shared-nothing), gradients merged by the
+    // coordinator — every thread must compute the identical oracle.
+    let handles: Vec<_> = (0..4)
+        .map(|tid| {
+            thread::spawn(move || {
+                let mut t = Tape::<f64>::new();
+                let a = t.leaf(-41.0);
+                let b = t.leaf(2.0);
+                let c = t.add(a, b);
+                let ab = t.mul(a, b);
+                let b3 = t.pow3(b);
+                let d = t.add(ab, b3);
+                let e = t.sub(c, d);
+                let f = t.sqr(e);
+                let g = t.mul_const(f, 0.5);
+                t.backward(g);
+                (tid, t.grad(a), t.grad(b))
+            })
+        })
+        .collect();
+    for h in handles {
+        let (_tid, ga, gb) = h.join().expect("thread ok");
+        assert_eq!(ga, -35.0);
+        assert_eq!(gb, 1050.0);
+    }
+}
+
+#[test]
+fn data_parallel_oracles_match_sequential_batch() {
+    // 4 threads × 2 oracles each ≡ one thread × 8 oracles (same samples,
+    // same params): the shared-nothing decomposition is exact.
+    let ds = names_dataset(100, 16, 9);
+    let cfg = CharMlpConfig::paper(4);
+    let d = cfg.num_params();
+    let picks: Vec<usize> = (0..8).map(|i| i * 7 % ds.examples.len()).collect();
+
+    // Sequential reference.
+    let mut seq = vec![0.0f64; d];
+    {
+        let mut t = Tape::<f64>::new();
+        let mut rng = Rng::new(33);
+        let m = CharMlp::new(&mut t, cfg, &mut rng);
+        for &i in &picks {
+            let ex = &ds.examples[i];
+            let loss = m.loss(&mut t, &ex.context, ex.target, CeMode::Fused);
+            t.backward(loss);
+            for (k, g) in t.grads_range(m.params.first, d).iter().enumerate() {
+                seq[k] += *g;
+            }
+            t.rewind(m.base);
+        }
+    }
+
+    // Parallel: each thread its own tape + identically-initialized model.
+    let chunks: Vec<Vec<usize>> = picks.chunks(2).map(|c| c.to_vec()).collect();
+    let handles: Vec<_> = chunks
+        .into_iter()
+        .map(|chunk| {
+            let examples: Vec<_> = chunk.iter().map(|&i| ds.examples[i].clone()).collect();
+            thread::spawn(move || {
+                let mut t = Tape::<f64>::new();
+                let mut rng = Rng::new(33); // same init stream
+                let m = CharMlp::new(&mut t, cfg, &mut rng);
+                let mut acc = vec![0.0f64; m.num_params()];
+                for ex in &examples {
+                    let loss = m.loss(&mut t, &ex.context, ex.target, CeMode::Fused);
+                    t.backward(loss);
+                    for (k, g) in t.grads_range(m.params.first, acc.len()).iter().enumerate() {
+                        acc[k] += *g;
+                    }
+                    t.rewind(m.base);
+                }
+                acc
+            })
+        })
+        .collect();
+    let mut par = vec![0.0f64; d];
+    for h in handles {
+        for (k, g) in h.join().expect("thread ok").iter().enumerate() {
+            par[k] += *g;
+        }
+    }
+    for k in 0..d {
+        assert!(
+            (seq[k] - par[k]).abs() < 1e-12,
+            "coordinate {k}: sequential {} vs parallel {}",
+            seq[k],
+            par[k]
+        );
+    }
+}
+
+#[test]
+fn million_node_tape_roundtrip_and_backward() {
+    // Build ~1M nodes, snapshot, restore, and check gradients match.
+    let mut t = Tape::<f32>::with_capacity(1_050_000, 0);
+    let x = t.leaf(0.1);
+    let y = t.leaf(0.2);
+    let mut cur = t.add(x, y);
+    for i in 0..1_000_000u32 {
+        cur = match i % 4 {
+            0 => t.tanh(cur),
+            1 => t.add(cur, x),
+            2 => t.mul_const(cur, 0.999),
+            _ => t.sub(cur, y),
+        };
+    }
+    t.backward(cur);
+    let (gx, gy) = (t.grad(x), t.grad(y));
+    assert!(gx.is_finite() && gy.is_finite());
+
+    let snap = burtorch::serialize::snapshot(&t);
+    let mut t2: Tape<f32> = burtorch::serialize::restore(&snap).expect("restore");
+    t2.backward(cur);
+    assert_eq!(t2.grad(x), gx);
+    assert_eq!(t2.grad(y), gy);
+}
+
+#[test]
+fn repeated_rewind_never_leaks_capacity() {
+    // 10K oracle cycles: capacity must stabilize after the first (the
+    // MISRA zero-allocation steady state).
+    let ds = names_dataset(50, 16, 13);
+    let mut t = Tape::<f32>::new();
+    let mut rng = Rng::new(14);
+    let m = CharMlp::new(&mut t, CharMlpConfig::paper(4), &mut rng);
+    // Warm one cycle.
+    let ex = &ds.examples[0];
+    let loss = m.loss(&mut t, &ex.context, ex.target, CeMode::Fused);
+    t.backward(loss);
+    t.rewind(m.base);
+    let cap_after_warm = t.memory_bytes();
+    for i in 0..10_000 {
+        let ex = &ds.examples[i % ds.examples.len()];
+        let loss = m.loss(&mut t, &ex.context, ex.target, CeMode::Fused);
+        t.backward_above(loss, m.base);
+        t.rewind(m.base);
+    }
+    assert_eq!(
+        t.memory_bytes(),
+        cap_after_warm,
+        "steady-state training must not grow the tape's memory"
+    );
+}

@@ -1,0 +1,250 @@
+//! Exhaustive finite-difference gradient checks: every Table 8/9/10 op,
+//! every nn layer, and the full models (the "exact AD" claim of §1.1).
+
+use burtorch::fdiff::gradcheck;
+use burtorch::nn::{
+    cross_entropy_composed, Act, CharMlp, CharMlpConfig, CeMode, Gpt, GptConfig, Linear,
+    ParamAlloc,
+};
+use burtorch::rng::Rng;
+use burtorch::tape::{Tape, Value};
+
+const TOL: f64 = 2e-5;
+
+#[test]
+fn unary_ops_gradcheck() {
+    // Domains chosen to keep each op well-conditioned.
+    let cases: Vec<(&str, f64, fn(&mut Tape<f64>, Value) -> Value)> = vec![
+        ("relu+", 1.3, |t, x| t.relu(x)),
+        ("relu-", -0.7, |t, x| t.relu(x)),
+        ("tanh", 0.4, |t, x| t.tanh(x)),
+        ("exp", 0.9, |t, x| t.exp(x)),
+        ("neglog", 1.7, |t, x| t.neg_log(x)),
+        ("sigmoid", -0.3, |t, x| t.sigmoid(x)),
+        ("inv", 2.1, |t, x| t.inv(x)),
+        ("sqr", -1.2, |t, x| t.sqr(x)),
+        ("pow3", 0.8, |t, x| t.pow3(x)),
+        ("log", 3.5, |t, x| t.log(x)),
+        ("sqrt", 2.4, |t, x| t.sqrt(x)),
+        ("invsqrt", 1.9, |t, x| t.inv_sqrt(x)),
+        ("neg", 0.6, |t, x| t.neg(x)),
+    ];
+    for (name, x0, f) in cases {
+        let gc = gradcheck(&[x0], 1e-6, |t, xs| f(t, xs[0]));
+        assert!(gc.ok(TOL), "{name}: {gc:?}");
+    }
+}
+
+#[test]
+fn binary_ops_gradcheck() {
+    let cases: Vec<(&str, fn(&mut Tape<f64>, Value, Value) -> Value)> = vec![
+        ("add", |t, x, y| t.add(x, y)),
+        ("sub", |t, x, y| t.sub(x, y)),
+        ("mul", |t, x, y| t.mul(x, y)),
+        ("div", |t, x, y| t.div(x, y)),
+        ("mean2", |t, x, y| t.mean2(x, y)),
+        ("addsquares", |t, x, y| t.add_squares(x, y)),
+        ("meansquares", |t, x, y| t.mean_squares2(x, y)),
+        ("negmean", |t, x, y| t.neg_mean2(x, y)),
+    ];
+    for (name, f) in cases {
+        let gc = gradcheck(&[1.4, -2.3], 1e-6, |t, xs| f(t, xs[0], xs[1]));
+        assert!(gc.ok(TOL), "{name}: {gc:?}");
+    }
+    let gc = gradcheck(&[1.4], 1e-6, |t, xs| t.mul_const(xs[0], -2.5));
+    assert!(gc.ok(TOL), "mulconst: {gc:?}");
+}
+
+#[test]
+fn varying_ops_gradcheck() {
+    type F = fn(&mut Tape<f64>, &[Value]) -> Value;
+    let cases: Vec<(&str, F)> = vec![
+        ("reducesum", |t, xs| t.reduce_sum(xs)),
+        ("reducesub", |t, xs| t.reduce_sub(xs)),
+        ("reducemul", |t, xs| t.reduce_mul(xs)),
+        ("reducemean", |t, xs| t.reduce_mean(xs)),
+        ("reducesumsq", |t, xs| t.reduce_sum_squares(xs)),
+        ("reducemeansq", |t, xs| t.reduce_mean_squares(xs)),
+        ("reducenegmean", |t, xs| t.reduce_neg_mean(xs)),
+        ("varbiased", |t, xs| t.variance_biased(xs)),
+        ("variance", |t, xs| t.variance(xs)),
+    ];
+    let x0 = [1.2, -0.7, 2.4, 0.3, -1.8];
+    for (name, f) in cases {
+        let gc = gradcheck(&x0, 1e-6, |t, xs| f(t, xs));
+        assert!(gc.ok(TOL), "{name}: {gc:?}");
+    }
+}
+
+#[test]
+fn inner_product_family_gradcheck() {
+    // innerProduct / WithBias / dotRange / dotRangeBias / dotParamRange
+    let x0 = [0.5, -1.1, 0.8, 1.3, -0.4, 0.9, 0.25];
+    let gc = gradcheck(&x0, 1e-6, |t, xs| {
+        t.inner_product(&xs[0..3], &xs[3..6])
+    });
+    assert!(gc.ok(TOL), "innerproduct: {gc:?}");
+
+    let gc = gradcheck(&x0, 1e-6, |t, xs| {
+        t.inner_product_bias(&xs[0..3], &xs[3..6], xs[6])
+    });
+    assert!(gc.ok(TOL), "innerproductbias: {gc:?}");
+
+    let gc = gradcheck(&x0, 1e-6, |t, xs| {
+        // leaves are contiguous by construction in gradcheck
+        t.dot_range(xs[0], xs[3], 3)
+    });
+    assert!(gc.ok(TOL), "dotrange: {gc:?}");
+
+    let gc = gradcheck(&x0, 1e-6, |t, xs| {
+        t.dot_range_bias(xs[0], xs[3], 3, xs[6])
+    });
+    assert!(gc.ok(TOL), "dotrangebias: {gc:?}");
+
+    let gc = gradcheck(&x0, 1e-6, |t, xs| {
+        let view = t.share_ids(&xs[0..3]);
+        t.dot_param_range(view, 3, xs[3], xs[6])
+    });
+    assert!(gc.ok(TOL), "dotparamrange: {gc:?}");
+}
+
+#[test]
+fn ce_ops_gradcheck() {
+    let x0 = [0.4, -0.9, 1.6, 0.1];
+    let gc = gradcheck(&x0, 1e-6, |t, xs| cross_entropy_composed(t, xs, 2));
+    assert!(gc.ok(TOL), "ce composed: {gc:?}");
+    let gc = gradcheck(&x0, 1e-6, |t, xs| t.ce_logits_range(xs[0], 4, 2));
+    assert!(gc.ok(TOL), "ce fused: {gc:?}");
+}
+
+#[test]
+fn linear_layer_full_jacobian_gradcheck() {
+    // All parameters of a 3→2 tanh layer + inputs in one check.
+    let mut rng = Rng::new(77);
+    let vals: Vec<f64> = (0..11).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+    let gc = gradcheck(&vals, 1e-6, |t, xs| {
+        // [w(6), b(2), x(3)]
+        let mut outs = Vec::new();
+        let view = t.share_ids(&xs[8..11]);
+        for u in 0..2 {
+            // weight rows: xs[0..3] and xs[3..6]
+            let pre = t.dot_param_range(view, 3, xs[3 * u], xs[6 + u]);
+            outs.push(t.tanh(pre));
+        }
+        t.reduce_sum_squares(&outs)
+    });
+    assert!(gc.ok(TOL), "linear jacobian: {gc:?}");
+}
+
+#[test]
+fn char_mlp_parameter_gradcheck_sampled() {
+    // FD over every parameter of the e=4 model is 12K evals — sample 40
+    // random coordinates instead and check them against AD exactly.
+    let mut tape = Tape::<f64>::new();
+    let mut rng = Rng::new(81);
+    let model = CharMlp::new(&mut tape, CharMlpConfig::paper(4), &mut rng);
+    let ctx: Vec<u32> = (0..16).map(|i| (i * 3) % 27).collect();
+    let target = 13u32;
+
+    let loss = model.loss(&mut tape, &ctx, target, CeMode::Composed);
+    tape.backward(loss);
+    let d = model.num_params();
+
+    let mut check_rng = Rng::new(82);
+    for _ in 0..40 {
+        let i = check_rng.below_usize(d);
+        let p = model.params.at(i);
+        let ad = tape.grad(p);
+        let eps = 1e-5;
+        let orig = tape.value(p);
+
+        tape.rewind(model.base);
+        tape.set_value(p, orig + eps);
+        let lp = model.loss(&mut tape, &ctx, target, CeMode::Composed);
+        let fplus = tape.value(lp);
+        tape.rewind(model.base);
+        tape.set_value(p, orig - eps);
+        let lm = model.loss(&mut tape, &ctx, target, CeMode::Composed);
+        let fminus = tape.value(lm);
+        tape.rewind(model.base);
+        tape.set_value(p, orig);
+
+        let fd = (fplus - fminus) / (2.0 * eps);
+        let denom = 1.0f64.max(ad.abs()).max(fd.abs());
+        assert!(
+            (ad - fd).abs() / denom < 1e-4,
+            "param {i}: ad={ad} fd={fd}"
+        );
+    }
+}
+
+#[test]
+fn gpt_parameter_gradcheck_sampled() {
+    let mut tape = Tape::<f64>::new();
+    let mut rng = Rng::new(91);
+    let cfg = GptConfig {
+        n_layer: 1,
+        d_model: 8,
+        n_head: 2,
+        block_size: 4,
+        ..GptConfig::paper()
+    };
+    let model = Gpt::new(&mut tape, cfg, &mut rng);
+    let tokens: Vec<u32> = vec![3, 14, 15, 9];
+    let targets: Vec<u32> = vec![14, 15, 9, 26];
+
+    let loss = model.loss(&mut tape, &tokens, &targets, CeMode::Fused);
+    tape.backward(loss);
+    let d = model.num_params();
+
+    let mut check_rng = Rng::new(92);
+    for _ in 0..25 {
+        let i = check_rng.below_usize(d);
+        let p = model.params.at(i);
+        let ad = tape.grad(p);
+        let eps = 1e-5;
+        let orig = tape.value(p);
+
+        tape.rewind(model.base);
+        tape.set_value(p, orig + eps);
+        let lp = model.loss(&mut tape, &tokens, &targets, CeMode::Fused);
+        let fplus = tape.value(lp);
+        tape.rewind(model.base);
+        tape.set_value(p, orig - eps);
+        let lm = model.loss(&mut tape, &tokens, &targets, CeMode::Fused);
+        let fminus = tape.value(lm);
+        tape.rewind(model.base);
+        tape.set_value(p, orig);
+
+        let fd = (fplus - fminus) / (2.0 * eps);
+        let denom = 1.0f64.max(ad.abs()).max(fd.abs());
+        assert!(
+            (ad - fd).abs() / denom < 1e-4,
+            "param {i}: ad={ad} fd={fd}"
+        );
+    }
+}
+
+#[test]
+fn layer_through_builder_linear_composition() {
+    // A two-layer MLP via the Linear abstraction vs hand-built graph.
+    let mut tape = Tape::<f64>::new();
+    let mut rng = Rng::new(95);
+    let mut pa = ParamAlloc::new(&mut tape);
+    let l1 = Linear::new(&mut pa, 2, 3, Act::Tanh, &mut rng);
+    let l2 = Linear::new(&mut pa, 3, 1, Act::Identity, &mut rng);
+    let x0 = tape.leaf(0.7);
+    let x1 = tape.leaf(-0.2);
+    let h = l1.forward(&mut tape, &[x0, x1]);
+    let out = l2.forward(&mut tape, &h);
+    tape.backward(out[0]);
+    // Manual forward check.
+    let wv = |r: burtorch::nn::ParamRange, i: usize| tape.value(r.at(i));
+    let mut manual = 0.0;
+    for u in 0..3 {
+        let pre = wv(l1.w, 2 * u) * 0.7 + wv(l1.w, 2 * u + 1) * -0.2 + wv(l1.b, u);
+        manual += pre.tanh() * wv(l2.w, u);
+    }
+    manual += wv(l2.b, 0);
+    assert!((tape.value(out[0]) - manual).abs() < 1e-12);
+}

@@ -1,0 +1,309 @@
+//! End-to-end training integration: the full coordinator stack (data →
+//! model → serialized oracles → optimizer) on both paper workloads, plus
+//! failure-injection checks.
+
+use burtorch::coordinator::{run_federated, FedConfig, Trainer, TrainerOptions};
+use burtorch::data::{names_dataset, CharCorpus};
+use burtorch::nn::{CeMode, CharMlp, CharMlpConfig, Gpt, GptConfig};
+use burtorch::optim::{AdamW, Page, Prox, ProxSgd, Sgd};
+use burtorch::rng::Rng;
+use burtorch::tape::Tape;
+
+#[test]
+fn char_mlp_reaches_reasonable_loss() {
+    // ln(27) ≈ 3.30 at init; a trained char model should land well below.
+    let ds = names_dataset(500, 16, 7);
+    let mut tape = Tape::<f32>::new();
+    let mut rng = Rng::new(8);
+    let model = CharMlp::new(&mut tape, CharMlpConfig::paper(32), &mut rng);
+    let trainer = Trainer::new(TrainerOptions {
+        steps: 1200,
+        batch: 8,
+        lr: 0.1,
+        ce: CeMode::Fused,
+        log_every: 50,
+        ..Default::default()
+    });
+    let r = trainer.train_char_mlp(&mut tape, &model, &ds.examples);
+    assert!(
+        r.final_loss < 2.9,
+        "final loss {:.3} should be well under ln(27)=3.30",
+        r.final_loss
+    );
+}
+
+#[test]
+fn gpt_loss_decreases_over_training() {
+    let corpus = CharCorpus::shakespeare(5_000, 8);
+    let mut tape = Tape::<f32>::new();
+    let mut rng = Rng::new(21);
+    let cfg = GptConfig {
+        n_layer: 2,
+        ..GptConfig::paper()
+    };
+    let model = Gpt::new(&mut tape, cfg, &mut rng);
+    let trainer = Trainer::new(TrainerOptions {
+        steps: 60,
+        batch: 2,
+        lr: 0.3,
+        ce: CeMode::Fused,
+        log_every: 5,
+        ..Default::default()
+    });
+    let r = trainer.train_gpt(&mut tape, &model, &corpus);
+    let first = r.loss_curve.first().unwrap().1;
+    assert!(
+        r.final_loss < first,
+        "{first:.3} -> {:.3}",
+        r.final_loss
+    );
+}
+
+#[test]
+fn fp32_and_fp64_training_agree_qualitatively() {
+    let ds = names_dataset(150, 16, 9);
+    let run = |steps: usize| -> (f64, f64) {
+        let mut t32 = Tape::<f32>::new();
+        let mut rng = Rng::new(10);
+        let m32 = CharMlp::new(&mut t32, CharMlpConfig::paper(4), &mut rng);
+        let tr = Trainer::new(TrainerOptions {
+            steps,
+            batch: 4,
+            lr: 0.2,
+            log_every: 1,
+            ..Default::default()
+        });
+        let r32 = tr.train_char_mlp(&mut t32, &m32, &ds.examples);
+
+        let mut t64 = Tape::<f64>::new();
+        let mut rng = Rng::new(10);
+        let m64 = CharMlp::new(&mut t64, CharMlpConfig::paper(4), &mut rng);
+        let r64 = tr.train_char_mlp(&mut t64, &m64, &ds.examples);
+        (r32.final_loss, r64.final_loss)
+    };
+    let (l32, l64) = run(30);
+    assert!(
+        (l32 - l64).abs() < 0.05,
+        "fp32 {l32:.4} vs fp64 {l64:.4} drifted"
+    );
+}
+
+#[test]
+fn page_optimizer_trains_the_mlp() {
+    // §4: PAGE with b=1 oracles — full refresh prob 0.1, diff steps
+    // computed at two iterates for the SAME sample (the BurTorch-native
+    // two-point oracle).
+    let ds = names_dataset(120, 16, 31);
+    let mut tape = Tape::<f64>::new();
+    let mut rng = Rng::new(32);
+    let model = CharMlp::new(&mut tape, CharMlpConfig::paper(4), &mut rng);
+    let d = model.num_params();
+    let mut page = Page::new(d, 0.02, 0.25, 33);
+    let mut sample_rng = Rng::new(34);
+
+    let oracle = |tape: &mut Tape<f64>, model: &CharMlp, idx: usize, out: &mut [f64]| {
+        let ex = &ds.examples[idx];
+        let loss = tape_loss(tape, model, &ex.context, ex.target);
+        tape.backward(loss);
+        for (k, g) in tape
+            .grads_range(model.params.first, out.len())
+            .iter()
+            .enumerate()
+        {
+            out[k] = *g;
+        }
+        let lv = tape.value(loss);
+        tape.rewind(model.base);
+        lv
+    };
+    fn tape_loss(
+        tape: &mut Tape<f64>,
+        model: &CharMlp,
+        ctx: &[u32],
+        target: u32,
+    ) -> burtorch::tape::Value {
+        model.loss(tape, ctx, target, CeMode::Fused)
+    }
+
+    let mut grad = vec![0.0; d];
+    let mut grad_old = vec![0.0; d];
+    let mut first_loss = None;
+    let mut last_loss = 0.0;
+    let mut prev_params: Vec<f64> = Vec::new();
+
+    for _step in 0..80 {
+        let idx = sample_rng.below_usize(ds.examples.len());
+        if page.wants_full() {
+            // "Full" oracle = larger batch estimate.
+            grad.iter_mut().for_each(|g| *g = 0.0);
+            let mut loss_sum = 0.0;
+            for _ in 0..8 {
+                let i = sample_rng.below_usize(ds.examples.len());
+                let mut gi = vec![0.0; d];
+                loss_sum += oracle(&mut tape, &model, i, &mut gi);
+                for k in 0..d {
+                    grad[k] += gi[k] / 8.0;
+                }
+            }
+            last_loss = loss_sum / 8.0;
+            first_loss.get_or_insert(last_loss);
+            prev_params = tape.values_range(model.params.first, d).to_vec();
+            page.step_full(tape.values_range_mut(model.params.first, d), &grad);
+        } else {
+            // Same-sample gradients at the new and old iterates, averaged
+            // over a small diff-batch (two-point oracles, §4).
+            let bp = 4;
+            let mut diff = vec![0.0; d];
+            let cur = tape.values_range(model.params.first, d).to_vec();
+            for _ in 0..bp {
+                let i = sample_rng.below_usize(ds.examples.len());
+                let mut g_new = vec![0.0; d];
+                last_loss = oracle(&mut tape, &model, i, &mut g_new);
+                tape.values_range_mut(model.params.first, d)
+                    .copy_from_slice(&prev_params);
+                oracle(&mut tape, &model, i, &mut grad_old);
+                tape.values_range_mut(model.params.first, d)
+                    .copy_from_slice(&cur);
+                for k in 0..d {
+                    diff[k] += (g_new[k] - grad_old[k]) / bp as f64;
+                }
+            }
+            let _ = idx;
+            prev_params = cur;
+            page.step_diff(tape.values_range_mut(model.params.first, d), &diff);
+        }
+    }
+    assert!(
+        last_loss < first_loss.unwrap(),
+        "PAGE failed to reduce loss: {:?} -> {last_loss}",
+        first_loss
+    );
+}
+
+#[test]
+fn prox_sgd_l1_produces_sparse_models() {
+    let ds = names_dataset(100, 16, 41);
+    let mut tape = Tape::<f64>::new();
+    let mut rng = Rng::new(42);
+    let model = CharMlp::new(&mut tape, CharMlpConfig::paper(4), &mut rng);
+    let d = model.num_params();
+    let opt = ProxSgd::new(0.1, Prox::L1(0.05));
+    let mut sample_rng = Rng::new(43);
+    for _ in 0..60 {
+        let ex = &ds.examples[sample_rng.below_usize(ds.examples.len())];
+        let loss = model.loss(&mut tape, &ex.context, ex.target, CeMode::Fused);
+        tape.backward(loss);
+        let grads: Vec<f64> = tape.grads_range(model.params.first, d).to_vec();
+        tape.rewind(model.base);
+        opt.step(tape.values_range_mut(model.params.first, d), &grads);
+    }
+    let zeros = tape
+        .values_range(model.params.first, d)
+        .iter()
+        .filter(|v| **v == 0.0)
+        .count();
+    assert!(
+        zeros > d / 4,
+        "L1 prox should zero a large fraction: {zeros}/{d}"
+    );
+}
+
+#[test]
+fn adamw_trains_faster_than_sgd_on_gpt_short_run() {
+    let corpus = CharCorpus::shakespeare(3_000, 8);
+    let run = |use_adam: bool| -> f64 {
+        let mut tape = Tape::<f32>::new();
+        let mut rng = Rng::new(51);
+        let cfg = GptConfig {
+            n_layer: 1,
+            d_model: 16,
+            n_head: 2,
+            ..GptConfig::paper()
+        };
+        let model = Gpt::new(&mut tape, cfg, &mut rng);
+        let d = model.num_params();
+        let mut sgd = Sgd::new(d, 0.1, 0.0);
+        let mut adam = AdamW::new(d, 0.003);
+        let mut sample_rng = Rng::new(52);
+        let mut last = 0.0;
+        for _ in 0..40 {
+            let w = sample_rng.below_usize(corpus.num_windows());
+            let (x, y) = corpus.window(w);
+            let (x, y) = (x.to_vec(), y.to_vec());
+            let loss = model.loss(&mut tape, &x, &y, CeMode::Fused);
+            last = tape.value(loss) as f64;
+            tape.backward(loss);
+            let grads: Vec<f64> = tape
+                .grads_range(model.params.first, d)
+                .iter()
+                .map(|g| *g as f64)
+                .collect();
+            tape.rewind(model.base);
+            if use_adam {
+                adam.step(tape.values_range_mut(model.params.first, d), &grads);
+            } else {
+                sgd.step(tape.values_range_mut(model.params.first, d), &grads);
+            }
+        }
+        last
+    };
+    let sgd_loss = run(false);
+    let adam_loss = run(true);
+    // Both must be finite and trained; Adam usually (not always) wins on
+    // transformers — assert only sanity plus finiteness to avoid flakes.
+    assert!(sgd_loss.is_finite() && adam_loss.is_finite());
+    assert!(adam_loss < 4.4 && sgd_loss < 4.4);
+}
+
+#[test]
+fn federated_beats_no_training_and_respects_budget() {
+    let cfg = FedConfig {
+        clients: 4,
+        rounds: 30,
+        local_batch: 8,
+        lr: 0.15,
+        hidden: 4,
+        names_per_client: 40,
+        seed: 61,
+    };
+    let d = CharMlpConfig::paper(4).num_params();
+    let k = d / 4;
+    let s = run_federated(&cfg, move |c| {
+        Box::new(burtorch::compress::RandK::contractive(k, 62 + c as u64))
+    });
+    assert!(s.final_loss < s.initial_loss);
+    assert!(s.floats_sent <= cfg.clients * cfg.rounds * k);
+}
+
+#[test]
+fn failure_injection_nan_inputs_do_not_poison_params_silently() {
+    // Feed a NaN context embedding index edge: target out of softmax range
+    // panics; NaN parameter values propagate to a NaN loss that the
+    // trainer surfaces rather than hides.
+    let mut tape = Tape::<f64>::new();
+    let mut rng = Rng::new(71);
+    let model = CharMlp::new(&mut tape, CharMlpConfig::paper(4), &mut rng);
+    tape.set_value(model.params.at(0), f64::NAN);
+    let ctx: Vec<u32> = vec![0; 16];
+    let loss = model.loss(&mut tape, &ctx, 1, CeMode::Fused);
+    assert!(
+        tape.value(loss).is_nan(),
+        "NaN params must surface as NaN loss, not silently clamp"
+    );
+}
+
+#[test]
+fn oversized_context_panics_cleanly() {
+    let mut tape = Tape::<f32>::new();
+    let mut rng = Rng::new(72);
+    let cfg = GptConfig {
+        n_layer: 1,
+        ..GptConfig::paper()
+    };
+    let model = Gpt::new(&mut tape, cfg, &mut rng);
+    let too_long: Vec<u32> = vec![1; 9]; // block_size is 8
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        model.forward_logits(&mut tape, &too_long)
+    }));
+    assert!(result.is_err(), "must reject windows beyond block_size");
+}
