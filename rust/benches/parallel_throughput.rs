@@ -1,0 +1,152 @@
+//! Data-parallel training throughput: samples/sec vs thread count on the
+//! paper's Table 5/6 char-MLP workload (§2.4, hidden e = 64, d = 69,083,
+//! FP32, batch 64).
+//!
+//! Every row runs the *same* deterministic lane/tree reduction, so the
+//! loss trajectories are bitwise identical across thread counts — the
+//! bench asserts that before reporting speedups. Results are emitted both
+//! as the usual paper-style table (`bench_results/parallel_throughput.txt`)
+//! and as JSON (`bench_results/parallel_throughput.json`) so later PRs
+//! have a machine-readable perf trajectory.
+//!
+//! Run: `cargo bench --bench parallel_throughput`
+//! (set BURTORCH_FAST=1 for a shorter run).
+
+use burtorch::bench::{json_num, write_json_result, Row, Table};
+use burtorch::coordinator::{Trainer, TrainerOptions};
+use burtorch::data::names_dataset;
+use burtorch::metrics::MemInfo;
+use burtorch::nn::{CeMode, CharMlp, CharMlpConfig};
+use burtorch::rng::Rng;
+use burtorch::tape::Tape;
+
+struct ThreadRow {
+    threads: usize,
+    ms_per_step: f64,
+    std_ms: f64,
+    samples_per_sec: f64,
+    speedup: f64,
+    peak_tape_nodes: usize,
+}
+
+fn main() {
+    let fast = std::env::var_os("BURTORCH_FAST").is_some();
+    let hidden = 64usize;
+    let batch = 64usize;
+    let steps = if fast { 8 } else { 40 };
+    let cfg = CharMlpConfig::paper(hidden);
+    let d = cfg.num_params();
+    let ds = names_dataset(2_000, 16, 0);
+
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let mut thread_counts: Vec<usize> = vec![1, 2, 4, 8]
+        .into_iter()
+        .filter(|&t| t == 1 || t <= 2 * cores)
+        .collect();
+    thread_counts.dedup();
+
+    println!(
+        "parallel throughput: char MLP e={hidden} (d={d}), batch={batch}, steps={steps}, \
+         {cores} cores available"
+    );
+
+    let mut rows: Vec<ThreadRow> = Vec::new();
+    let mut reference_curve: Option<Vec<(usize, f64)>> = None;
+    let mut table = Table::new(&format!(
+        "Parallel throughput — char MLP e={hidden} (d={d}), b={batch}, FP32"
+    ));
+
+    for &threads in &thread_counts {
+        let mut tape = Tape::<f32>::new();
+        let mut rng = Rng::new(1);
+        let model = CharMlp::new(&mut tape, cfg, &mut rng);
+        let trainer = Trainer::new(TrainerOptions {
+            steps,
+            batch,
+            lr: 0.1,
+            ce: CeMode::Fused,
+            log_every: 1,
+            seed: 7,
+            threads,
+            ..Default::default()
+        });
+        let report = trainer.train_char_mlp(&mut tape, &model, &ds.examples);
+
+        // Determinism gate: identical loss curve for every thread count.
+        match &reference_curve {
+            None => reference_curve = Some(report.loss_curve.clone()),
+            Some(reference) => {
+                for ((s1, l1), (s2, l2)) in reference.iter().zip(&report.loss_curve) {
+                    assert_eq!(s1, s2);
+                    assert_eq!(
+                        l1.to_bits(),
+                        l2.to_bits(),
+                        "threads={threads} diverged at step {s1}: {l1} vs {l2}"
+                    );
+                }
+            }
+        }
+
+        let ms = report.compute_ms_mean;
+        let samples_per_sec = batch as f64 / (ms / 1e3);
+        let base_ms = rows.first().map(|r: &ThreadRow| r.ms_per_step).unwrap_or(ms);
+        let row = ThreadRow {
+            threads,
+            ms_per_step: ms,
+            std_ms: report.compute_ms_std,
+            samples_per_sec,
+            speedup: base_ms / ms,
+            peak_tape_nodes: report.peak_tape_nodes,
+        };
+        println!(
+            "  threads={:>2}: {:>8.3} ms/step  {:>10.0} samples/s  speedup {:>5.2}x",
+            row.threads, row.ms_per_step, row.samples_per_sec, row.speedup
+        );
+        let mem = MemInfo::snapshot();
+        table.push(Row {
+            name: format!("BurTorch parallel, threads={threads}"),
+            mean_s: ms / 1e3,
+            std_s: report.compute_ms_std / 1e3,
+            min_s: ms / 1e3,
+            ticks: 0,
+            vm_peak_mb: mem.vm_peak_mb(),
+            vm_hwm_mb: mem.vm_hwm_mb(),
+            iters: steps as u64,
+        });
+        rows.push(row);
+    }
+
+    table.note("loss curves bitwise identical across all thread counts (asserted)");
+    table.note("samples/sec = batch / mean step time; speedup relative to threads=1");
+    table.emit_with_json("parallel_throughput_table");
+
+    // Compact JSON for the perf trajectory.
+    let mut json = String::new();
+    json.push_str("{\n");
+    json.push_str("  \"bench\": \"parallel_throughput\",\n");
+    json.push_str(&format!(
+        "  \"workload\": {{\"model\": \"char_mlp\", \"hidden\": {hidden}, \"d\": {d}, \
+         \"batch\": {batch}, \"steps\": {steps}}},\n"
+    ));
+    json.push_str(&format!("  \"cores_available\": {cores},\n"));
+    json.push_str("  \"deterministic_across_threads\": true,\n");
+    json.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"threads\": {}, \"ms_per_step\": {}, \"std_ms\": {}, \
+             \"samples_per_sec\": {}, \"speedup\": {}, \"peak_tape_nodes\": {}}}{}\n",
+            r.threads,
+            json_num(r.ms_per_step),
+            json_num(r.std_ms),
+            json_num(r.samples_per_sec),
+            json_num(r.speedup),
+            r.peak_tape_nodes,
+            if i + 1 == rows.len() { "" } else { "," },
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    write_json_result("parallel_throughput", &json);
+    println!("wrote bench_results/parallel_throughput.json");
+}

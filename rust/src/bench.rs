@@ -137,12 +137,87 @@ impl Table {
         out
     }
 
+    /// Render the table as a JSON document (machine-readable twin of
+    /// [`Table::render`], consumed by `bench_results/` plot scripts and
+    /// cross-PR perf-trajectory tooling).
+    pub fn render_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str(&format!("  \"title\": \"{}\",\n", json_escape(&self.title)));
+        out.push_str("  \"rows\": [\n");
+        for (i, r) in self.rows.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"name\": \"{}\", \"mean_s\": {}, \"std_s\": {}, \"min_s\": {}, \
+                 \"ticks\": {}, \"vm_peak_mb\": {}, \"vm_hwm_mb\": {}, \"iters\": {}}}{}\n",
+                json_escape(&r.name),
+                json_num(r.mean_s),
+                json_num(r.std_s),
+                json_num(r.min_s),
+                r.ticks,
+                json_num(r.vm_peak_mb),
+                json_num(r.vm_hwm_mb),
+                r.iters,
+                if i + 1 == self.rows.len() { "" } else { "," },
+            ));
+        }
+        out.push_str("  ],\n");
+        out.push_str("  \"notes\": [");
+        for (i, n) in self.notes.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            out.push_str(&format!("\"{}\"", json_escape(n)));
+        }
+        out.push_str("]\n}\n");
+        out
+    }
+
     /// Print to stdout and append to `bench_results/<slug>.txt`.
     pub fn emit(&self, slug: &str) {
         let text = self.render();
         println!("{text}");
         let _ = std::fs::create_dir_all("bench_results");
         let _ = std::fs::write(format!("bench_results/{slug}.txt"), &text);
+    }
+
+    /// Like [`Table::emit`], but additionally writes the JSON twin to
+    /// `bench_results/<slug>.json`.
+    pub fn emit_with_json(&self, slug: &str) {
+        self.emit(slug);
+        let _ = std::fs::write(format!("bench_results/{slug}.json"), self.render_json());
+    }
+}
+
+/// Write a free-form JSON document into `bench_results/<slug>.json`
+/// (benches that don't fit the [`Table`] shape, e.g. throughput scans).
+pub fn write_json_result(slug: &str, json: &str) {
+    let _ = std::fs::create_dir_all("bench_results");
+    let _ = std::fs::write(format!("bench_results/{slug}.json"), json);
+}
+
+/// Minimal JSON string escaping (quotes, backslashes, control chars).
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Format a float as a JSON number (JSON has no NaN/Inf; map them to null).
+pub fn json_num(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "null".to_string()
     }
 }
 
@@ -164,6 +239,33 @@ mod tests {
         assert!(row.min_s <= row.mean_s + row.std_s + 1e-9);
         assert!(row.ms_per_iter() >= 0.0);
         assert!(row.us_per_iter() >= row.ms_per_iter());
+    }
+
+    #[test]
+    fn json_escape_handles_specials() {
+        assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(json_escape("plain"), "plain");
+    }
+
+    #[test]
+    fn json_num_maps_nonfinite_to_null() {
+        assert_eq!(json_num(1.5), "1.5");
+        assert_eq!(json_num(f64::NAN), "null");
+        assert_eq!(json_num(f64::INFINITY), "null");
+    }
+
+    #[test]
+    fn render_json_is_structurally_sound() {
+        let mut t = Table::new("json probe");
+        t.push(run("base", 2, 10, |i| i));
+        t.note("note \"quoted\"");
+        let s = t.render_json();
+        assert!(s.contains("\"title\": \"json probe\""));
+        assert!(s.contains("\"name\": \"base\""));
+        assert!(s.contains("\\\"quoted\\\""));
+        // Balanced braces/brackets (cheap well-formedness probe).
+        assert_eq!(s.matches('{').count(), s.matches('}').count());
+        assert_eq!(s.matches('[').count(), s.matches(']').count());
     }
 
     #[test]

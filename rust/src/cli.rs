@@ -74,6 +74,11 @@ impl Cli {
         }
     }
 
+    /// Non-negative count option with default (negatives clamp to 0).
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.int_or(key, default as i64).max(0) as usize
+    }
+
     /// Float option with default.
     pub fn float_or(&self, key: &str, default: f64) -> f64 {
         match self.opt(key) {
@@ -122,6 +127,14 @@ mod tests {
         assert_eq!(c.int_or("steps", 42), 42);
         assert_eq!(c.opt_or("model", "mlp"), "mlp");
         assert!(!c.has_flag("x"));
+    }
+
+    #[test]
+    fn usize_option_clamps_negatives() {
+        let c = parse(&["train", "--threads", "-3"]);
+        assert_eq!(c.usize_or("threads", 1), 0);
+        assert_eq!(parse(&["train"]).usize_or("threads", 4), 4);
+        assert_eq!(parse(&["train", "--threads", "8"]).usize_or("threads", 1), 8);
     }
 
     #[test]

@@ -158,6 +158,12 @@ impl Config {
         }
     }
 
+    /// Non-negative count lookup with default (negatives clamp to 0) —
+    /// the shape of knobs like `train.threads` or `train.lanes`.
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.int_or(key, default as i64).max(0) as usize
+    }
+
     /// Float lookup with default (ints widen).
     pub fn float_or(&self, key: &str, default: f64) -> f64 {
         match self.map.get(key) {
@@ -303,6 +309,14 @@ min_chars = 50000
     fn comments_inside_strings_are_preserved() {
         let c = Config::parse("name = \"a#b\"").unwrap();
         assert_eq!(c.str_or("name", ""), "a#b");
+    }
+
+    #[test]
+    fn usize_lookup_clamps_and_defaults() {
+        let c = Config::parse("threads = 4\nbad = -2").unwrap();
+        assert_eq!(c.usize_or("threads", 1), 4);
+        assert_eq!(c.usize_or("bad", 1), 0);
+        assert_eq!(c.usize_or("missing", 7), 7);
     }
 
     #[test]

@@ -1,16 +1,22 @@
-//! The serialized-oracle training loop (paper contribution 4).
+//! The serialized-oracle training loop (paper contribution 4), now
+//! driven through the data-parallel minibatch gradient engine.
 //!
-//! One tape, parameters at the base; for each batch the trainer computes
-//! sample oracles ∇f_i(x) **sequentially**, accumulating leaf gradients
-//! into a flat buffer and rewinding the tape after every sample, so peak
-//! activation memory is `max_i MEM(∇f_i)` instead of `Σ_i MEM(∇f_i)`.
+//! One *main* tape holds the authoritative parameters at its base. Each
+//! step the engine computes the per-sample oracles ∇f_i(x) of the batch
+//! with rewind-batching — sequentially on the main tape when
+//! `threads = 1`, or sharded across replica tapes when `threads > 1` —
+//! and combines them with a deterministic fixed-order tree reduction
+//! (see [`crate::parallel`]). Peak activation memory stays
+//! `W · max_i MEM(∇f_i)` for `W` workers, independent of batch size, and
+//! the numbers are bitwise identical for every thread count.
 
 use crate::data::{BatchSampler, CharCorpus, Example};
 use crate::metrics::{mean_std, MemInfo, Timer};
-use crate::nn::{CeMode, CharMlp, Gpt};
+use crate::nn::{CeMode, CharMlp, Gpt, ParamRange};
 use crate::optim::Sgd;
+use crate::parallel::{MinibatchGradEngine, ParallelOptions, DEFAULT_LANES};
 use crate::scalar::Scalar;
-use crate::tape::{Scratch, Tape};
+use crate::tape::{Mark, Tape, Value};
 
 /// Options for a training run.
 #[derive(Clone, Debug)]
@@ -29,6 +35,14 @@ pub struct TrainerOptions {
     pub log_every: usize,
     /// RNG seed for batch sampling.
     pub seed: u64,
+    /// Worker threads for the minibatch gradient engine (1 = serial).
+    /// Any value produces bitwise-identical training trajectories; the
+    /// knob trades cores for wall-clock only.
+    pub threads: usize,
+    /// Reduction width of the deterministic tree reduction. Part of the
+    /// numeric spec — change it and the (still deterministic) rounding
+    /// changes. Defaults to [`DEFAULT_LANES`].
+    pub lanes: usize,
 }
 
 impl Default for TrainerOptions {
@@ -41,6 +55,8 @@ impl Default for TrainerOptions {
             scratch_backward: false,
             log_every: 0,
             seed: 0,
+            threads: 1,
+            lanes: DEFAULT_LANES,
         }
     }
 }
@@ -56,7 +72,7 @@ pub struct TrainReport {
     pub compute_ms_std: f64,
     /// Peak private virtual memory at the end (MB).
     pub vm_peak_mb: f64,
-    /// Peak tape length observed (activation memory proxy).
+    /// Peak tape length observed across all workers (activation proxy).
     pub peak_tape_nodes: usize,
     /// Final loss (mean of last 10 logged values).
     pub final_loss: f64,
@@ -80,53 +96,11 @@ impl Trainer {
         model: &CharMlp,
         examples: &[Example],
     ) -> TrainReport {
-        let o = &self.opts;
-        let d = model.num_params();
-        let mut sampler = BatchSampler::new(examples.len(), o.batch, o.seed);
-        let mut opt = Sgd::new(d, o.lr, 0.0);
-        let mut grad_acc = vec![0.0f64; d];
-        let mut scratch = Scratch::new();
-        let mut times = Vec::with_capacity(o.steps);
-        let mut curve = Vec::new();
-        let mut peak_nodes = 0usize;
-
-        for step in 0..o.steps {
-            let batch = sampler.next_batch(); // preparation excluded from timing
-            let timer = Timer::new();
-            grad_acc.iter_mut().for_each(|g| *g = 0.0);
-            let mut loss_sum = 0.0;
-            for &idx in &batch {
-                let ex = &examples[idx];
-                let loss = model.loss(tape, &ex.context, ex.target, o.ce);
-                loss_sum += tape.value(loss).to_f64();
-                if o.scratch_backward {
-                    tape.backward_with_scratch(loss, &mut scratch);
-                } else {
-                    tape.backward_above(loss, model.base);
-                }
-                let first = model.params.first.idx();
-                for (k, g) in tape.grads_range(model.params.first, d).iter().enumerate() {
-                    grad_acc[k] += g.to_f64();
-                }
-                let _ = first;
-                peak_nodes = peak_nodes.max(tape.len());
-                tape.rewind(model.base);
-            }
-            let inv_b = 1.0 / o.batch as f64;
-            grad_acc.iter_mut().for_each(|g| *g *= inv_b);
-            opt.step(
-                tape.values_range_mut(model.params.first, d),
-                &grad_acc,
-            );
-            times.push(timer.seconds() * 1e3);
-            let mean_loss = loss_sum * inv_b;
-            if o.log_every > 0 && step % o.log_every == 0 {
-                curve.push((step, mean_loss));
-            } else if o.log_every == 0 && (step == 0 || step + 1 == o.steps) {
-                curve.push((step, mean_loss));
-            }
-        }
-        finish_report(times, curve, peak_nodes)
+        let ce = self.opts.ce;
+        self.run_loop(tape, model.base, model.params, examples.len(), &|tape, idx| {
+            let ex = &examples[idx];
+            model.loss(tape, &ex.context, ex.target, ce)
+        })
     }
 
     /// Train the §2.5 GPT on corpus windows.
@@ -136,42 +110,62 @@ impl Trainer {
         model: &Gpt,
         corpus: &CharCorpus,
     ) -> TrainReport {
+        let ce = self.opts.ce;
+        self.run_loop(
+            tape,
+            model.base,
+            model.params,
+            corpus.num_windows(),
+            &|tape, w| {
+                let (x, y) = corpus.window(w);
+                model.loss(tape, x, y, ce)
+            },
+        )
+    }
+
+    /// The shared SGD loop: sample a batch, hand it to the gradient
+    /// engine, average, apply. Batch preparation is excluded from the
+    /// per-step timing (paper protocol).
+    fn run_loop<T: Scalar, F>(
+        &self,
+        tape: &mut Tape<T>,
+        base: Mark,
+        params: ParamRange,
+        n_examples: usize,
+        oracle: &F,
+    ) -> TrainReport
+    where
+        F: Fn(&mut Tape<T>, usize) -> Value + Sync,
+    {
         let o = &self.opts;
-        let d = model.num_params();
-        let mut sampler = BatchSampler::new(corpus.num_windows(), o.batch, o.seed);
+        let d = params.len;
+        let mut sampler = BatchSampler::new(n_examples, o.batch, o.seed);
         let mut opt = Sgd::new(d, o.lr, 0.0);
         let mut grad_acc = vec![0.0f64; d];
-        let mut scratch = Scratch::new();
+        let mut engine = MinibatchGradEngine::new(
+            tape,
+            base,
+            params,
+            ParallelOptions {
+                threads: o.threads,
+                lanes: o.lanes,
+                scratch_backward: o.scratch_backward,
+            },
+        );
         let mut times = Vec::with_capacity(o.steps);
         let mut curve = Vec::new();
         let mut peak_nodes = 0usize;
 
         for step in 0..o.steps {
-            let batch = sampler.next_batch();
+            let batch = sampler.next_batch(); // preparation excluded from timing
             let timer = Timer::new();
-            grad_acc.iter_mut().for_each(|g| *g = 0.0);
-            let mut loss_sum = 0.0;
-            for &w in &batch {
-                let (x, y) = corpus.window(w);
-                let (x, y) = (x.to_vec(), y.to_vec());
-                let loss = model.loss(tape, &x, &y, o.ce);
-                loss_sum += tape.value(loss).to_f64();
-                if o.scratch_backward {
-                    tape.backward_with_scratch(loss, &mut scratch);
-                } else {
-                    tape.backward_above(loss, model.base);
-                }
-                for (k, g) in tape.grads_range(model.params.first, d).iter().enumerate() {
-                    grad_acc[k] += g.to_f64();
-                }
-                peak_nodes = peak_nodes.max(tape.len());
-                tape.rewind(model.base);
-            }
+            let stats = engine.accumulate(tape, &batch, oracle, &mut grad_acc);
+            peak_nodes = peak_nodes.max(stats.peak_nodes);
             let inv_b = 1.0 / o.batch as f64;
             grad_acc.iter_mut().for_each(|g| *g *= inv_b);
-            opt.step(tape.values_range_mut(model.params.first, d), &grad_acc);
+            opt.step(tape.values_range_mut(params.first, d), &grad_acc);
             times.push(timer.seconds() * 1e3);
-            let mean_loss = loss_sum * inv_b;
+            let mean_loss = stats.loss_sum * inv_b;
             if o.log_every > 0 && step % o.log_every == 0 {
                 curve.push((step, mean_loss));
             } else if o.log_every == 0 && (step == 0 || step + 1 == o.steps) {
@@ -295,6 +289,40 @@ mod tests {
     }
 
     #[test]
+    fn thread_counts_produce_identical_loss_curves() {
+        // The headline determinism contract at the trainer level: the
+        // loss curve (and therefore the whole parameter trajectory) is
+        // bitwise identical for serial and parallel runs.
+        let ds = names_dataset(120, 16, 9);
+        let run = |threads: usize| {
+            let mut tape = Tape::<f32>::new();
+            let mut rng = Rng::new(8);
+            let model = CharMlp::new(&mut tape, CharMlpConfig::paper(4), &mut rng);
+            let trainer = Trainer::new(TrainerOptions {
+                steps: 6,
+                batch: 8,
+                lr: 0.2,
+                log_every: 1,
+                threads,
+                ..Default::default()
+            });
+            trainer.train_char_mlp(&mut tape, &model, &ds.examples).loss_curve
+        };
+        let serial = run(1);
+        for threads in [2usize, 4] {
+            let par = run(threads);
+            for ((s1, l1), (s2, l2)) in serial.iter().zip(&par) {
+                assert_eq!(s1, s2);
+                assert_eq!(
+                    l1.to_bits(),
+                    l2.to_bits(),
+                    "threads={threads} step={s1}: {l1} vs {l2}"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn gpt_smoke_training_step_runs() {
         let corpus = CharCorpus::shakespeare(2_000, 8);
         let mut tape = Tape::<f32>::new();
@@ -311,6 +339,7 @@ mod tests {
             batch: 2,
             lr: 0.05,
             log_every: 1,
+            threads: 2,
             ..Default::default()
         });
         let r = trainer.train_gpt(&mut tape, &model, &corpus);

@@ -15,6 +15,10 @@
 //! - [`ops`] — op-level forward/backward semantics (paper Tables 8–10).
 //! - [`nn`] — Neuron/Linear/MLP/Embedding/LayerNorm/Attention/GPT built on
 //!   scalar nodes (paper §2.4, §2.5, Appendix F.1).
+//! - [`parallel`] — the data-parallel minibatch gradient engine: replica
+//!   tapes per worker (safe because the SoA tape is `Send`), rewind-batched
+//!   per-sample oracles, and a deterministic fixed-order lane/tree
+//!   reduction that is bitwise identical for 1, 2, or N threads.
 //! - [`optim`] — SGD / momentum / AdamW / PAGE / prox-SGD (paper §4).
 //! - [`compress`] — RandK/TopK/RandSeqK compressors, EF21, MARINA (paper §4).
 //! - [`data`] — char-level tokenizers and the embedded corpora.
@@ -44,6 +48,7 @@ pub mod metrics;
 pub mod nn;
 pub mod ops;
 pub mod optim;
+pub mod parallel;
 pub mod randomized;
 pub mod rng;
 pub mod runtime;

@@ -49,7 +49,9 @@ fn print_help() {
          \n\
          COMMANDS:\n\
            train     --model mlp|gpt --steps N --batch B --lr G [--hidden E]\n\
-                     [--config file.toml] [--scratch] [--composed-ce]\n\
+                     [--threads W] [--lanes L] [--config file.toml]\n\
+                     [--scratch] [--composed-ce]\n\
+                     (--threads 0 = all cores; any W gives bitwise-identical runs)\n\
            fed       --clients N --rounds R --compressor identity|randk|topk\n\
            demo      [--small]   (Figure 1 / Figure 2 graphs + DOT)\n\
            sample    --steps N --tokens T   (train tiny GPT, then generate)\n\
@@ -59,6 +61,19 @@ fn print_help() {
 }
 
 fn trainer_options(cli: &Cli, cfg: &Config) -> TrainerOptions {
+    // `--threads 0` means "one worker per available core"; negative
+    // values are invalid and clamp to the serial path (1), not to 0.
+    let raw_threads = cli.int_or("threads", cfg.int_or("train.threads", 1));
+    let threads = match raw_threads {
+        0 => std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1),
+        t if t < 0 => {
+            eprintln!("warning: --threads {t} is invalid; using 1 (serial)");
+            1
+        }
+        t => t as usize,
+    };
     TrainerOptions {
         steps: cli.int_or("steps", cfg.int_or("train.steps", 200)) as usize,
         batch: cli.int_or("batch", cfg.int_or("train.batch", 1)) as usize,
@@ -71,6 +86,12 @@ fn trainer_options(cli: &Cli, cfg: &Config) -> TrainerOptions {
         scratch_backward: cli.has_flag("scratch"),
         log_every: cli.int_or("log-every", 10) as usize,
         seed: cli.int_or("seed", 0) as u64,
+        threads,
+        lanes: cli.usize_or(
+            "lanes",
+            cfg.usize_or("train.lanes", burtorch::parallel::DEFAULT_LANES),
+        )
+        .max(1),
     }
 }
 
@@ -94,8 +115,8 @@ fn cmd_train(cli: &Cli) -> i32 {
         .unwrap_or(ModelKind::CharMlp);
     let trainer = Trainer::new(opts.clone());
     println!(
-        "training {kind:?}: steps={} batch={} lr={}",
-        opts.steps, opts.batch, opts.lr
+        "training {kind:?}: steps={} batch={} lr={} threads={}",
+        opts.steps, opts.batch, opts.lr, opts.threads
     );
     match kind {
         ModelKind::CharMlp => {

@@ -6,6 +6,40 @@
 //! module owns the enumeration, arities, mnemonics, and display metadata
 //! used by the serializer and the DOT/matplotlib generators.
 
+use crate::scalar::Scalar;
+
+/// 4-wide ILP dot product over two equal-length slices, seeded with
+/// `init` (the bias, or `T::ZERO`).
+///
+/// Four independent FMA accumulators break the latency chain of a single
+/// serial `mul_add` fold — the paper's unrolled `innerProductWithBias`
+/// trick (Appendix F.2). The combination order is fixed as
+/// `(s0 + s1) + (s2 + s3) + init`, then a serial fold over the ≤3
+/// remainder lanes; **every** fused dot kernel in the engine (forward
+/// `innerProduct`/`dotRange`/`dotParamRange` and their bias variants)
+/// uses this exact association, so the fused ops stay bitwise consistent
+/// with each other and with the data-parallel trainer's replica tapes.
+#[inline(always)]
+pub fn dot_ilp4<T: Scalar>(xs: &[T], ws: &[T], init: T) -> T {
+    debug_assert_eq!(xs.len(), ws.len());
+    let n = xs.len();
+    let (mut s0, mut s1, mut s2, mut s3) = (T::ZERO, T::ZERO, T::ZERO, T::ZERO);
+    let mut k = 0usize;
+    while k + 4 <= n {
+        s0 = xs[k].mul_add(ws[k], s0);
+        s1 = xs[k + 1].mul_add(ws[k + 1], s1);
+        s2 = xs[k + 2].mul_add(ws[k + 2], s2);
+        s3 = xs[k + 3].mul_add(ws[k + 3], s3);
+        k += 4;
+    }
+    let mut s = (s0 + s1) + (s2 + s3) + init;
+    while k < n {
+        s = xs[k].mul_add(ws[k], s);
+        k += 1;
+    }
+    s
+}
+
 /// Operation code of a tape node. `#[repr(u8)]` keeps the op array dense
 /// (1 byte per node) — part of the paper's contiguous-memory design.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -330,6 +364,33 @@ mod tests {
         assert_eq!(Op::InnerProduct.arity(), Arity::VaryingPairs);
         assert_eq!(Op::InnerProductBias.arity(), Arity::VaryingPairsBias);
         assert_eq!(Op::DotRangeBias.arity(), Arity::Range);
+    }
+
+    #[test]
+    fn dot_ilp4_matches_reference_fold() {
+        // Cover the unrolled body, the remainder lanes, and the empty case.
+        for n in 0..13usize {
+            let xs: Vec<f64> = (0..n).map(|i| 0.5 + i as f64 * 0.25).collect();
+            let ws: Vec<f64> = (0..n).map(|i| -1.0 + i as f64 * 0.5).collect();
+            let got = dot_ilp4(&xs, &ws, 0.125);
+            let want: f64 = 0.125 + xs.iter().zip(&ws).map(|(x, w)| x * w).sum::<f64>();
+            assert!(
+                (got - want).abs() < 1e-12,
+                "n={n}: {got} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn dot_ilp4_association_is_fixed() {
+        // The association must be (s0+s1)+(s2+s3)+init then serial
+        // remainder — spot-check n=4 bitwise against the hand expansion.
+        let xs = [1.0e16f64, 1.0, -1.0e16, 3.0];
+        let ws = [1.0f64, 1.0, 1.0, 1.0];
+        let expect = (xs[0].mul_add(1.0, 0.0) + xs[1].mul_add(1.0, 0.0))
+            + (xs[2].mul_add(1.0, 0.0) + xs[3].mul_add(1.0, 0.0))
+            + 0.5;
+        assert_eq!(dot_ilp4(&xs, &ws, 0.5), expect);
     }
 
     #[test]

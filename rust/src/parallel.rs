@@ -1,0 +1,570 @@
+//! Data-parallel minibatch gradient engine: replica tapes + deterministic
+//! fixed-order tree reduction.
+//!
+//! The serialized-oracle trainer (paper contribution 4) computes the
+//! per-sample oracles ∇f_i(x) of a minibatch strictly sequentially on one
+//! core. Those oracles are embarrassingly parallel — each needs only the
+//! current parameter vector — and Rust's ownership model makes the
+//! obvious decomposition safe without locks: give every worker its **own
+//! replica tape** (a deep copy of the parameter prefix, same node ids),
+//! let it run rewind-batched oracles over its shard, and combine the
+//! shard sums at the end. No `Rc`-graph engine can do this (the graph is
+//! not `Send`); BurTorch's flat SoA tape is trivially `Send`.
+//!
+//! ## Determinism contract
+//!
+//! Floating-point addition is not associative, so a naive "each thread
+//! sums its shard" scheme produces different bits for different thread
+//! counts. This engine fixes the summation **shape** independently of the
+//! thread count:
+//!
+//! 1. The batch is split into `L` **lanes** (`L = min(lanes, b)`, default
+//!    [`DEFAULT_LANES`]); lane `l` owns the contiguous slot range
+//!    `[l·b/L, (l+1)·b/L)` and left-folds its samples' gradients, in slot
+//!    order, into its own flat `f64` buffer.
+//! 2. Lanes are combined by a **fixed gap-doubling binary tree**
+//!    (`lane[i] += lane[i+gap]` for `gap = 1, 2, 4, …`), always on the
+//!    coordinator thread.
+//!
+//! Workers are assigned whole lanes, so *which* thread computes a lane
+//! never changes the lane's contents, and the tree never changes shape:
+//! results are bitwise identical for 1, 2, or N threads, across runs, and
+//! match the serial path (which is exactly this engine at `threads = 1`,
+//! running inline on the main tape with no replicas and no spawns).
+//!
+//! Per-sample gradients themselves are bitwise reproducible across
+//! replicas because [`crate::tape::Tape::clone_prefix`] copies the prefix
+//! exactly (same ids, same values, same aux/consts), the model builds the
+//! identical node sequence on every tape, and every fused dot kernel uses
+//! one fixed ILP association (see [`crate::ops::dot_ilp4`]).
+//!
+//! ## Memory discipline
+//!
+//! Replicas and lane buffers are allocated once at engine construction;
+//! replica tapes grow to the per-sample activation peak during the first
+//! step (or up front via [`MinibatchGradEngine::reserve_activation`]) and
+//! are only rewound afterwards — the zero-heap-allocation steady state of
+//! the serial engine is preserved per worker. Peak activation memory is
+//! `W · max_i MEM(∇f_i)` for `W` workers, still independent of batch size.
+
+use std::thread;
+
+use crate::nn::ParamRange;
+use crate::scalar::Scalar;
+use crate::tape::{Mark, Scratch, Tape, Value};
+
+/// Default reduction width: the fixed number of lanes the minibatch is
+/// split into. Chosen ≥ any sensible worker count on the paper's hardware
+/// so threads divide lanes evenly, and small enough that lane buffers
+/// (`lanes · d` doubles) stay cheap for the Table 5/6 grid.
+pub const DEFAULT_LANES: usize = 16;
+
+/// Engine configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ParallelOptions {
+    /// Worker count (1 = serial path, inline on the main tape).
+    pub threads: usize,
+    /// Reduction width. **Part of the numeric spec**: changing it changes
+    /// the (deterministic) rounding, so it is a config knob rather than
+    /// something derived from the machine.
+    pub lanes: usize,
+    /// Use `backwardWithScratchStorage` instead of `backward_above`
+    /// (each worker owns a private [`Scratch`]).
+    pub scratch_backward: bool,
+}
+
+impl Default for ParallelOptions {
+    fn default() -> Self {
+        ParallelOptions {
+            threads: 1,
+            lanes: DEFAULT_LANES,
+            scratch_backward: false,
+        }
+    }
+}
+
+/// Per-step statistics returned by [`MinibatchGradEngine::accumulate`].
+#[derive(Clone, Copy, Debug)]
+pub struct StepStats {
+    /// Tree-reduced sum of per-sample losses (caller divides by b).
+    pub loss_sum: f64,
+    /// Max tape length observed across all workers (activation proxy).
+    pub peak_nodes: usize,
+}
+
+/// One reduction lane: a flat gradient accumulator plus its loss fold.
+struct Lane {
+    grad: Vec<f64>,
+    loss: f64,
+    peak_nodes: usize,
+}
+
+/// The data-parallel minibatch gradient engine. See module docs.
+pub struct MinibatchGradEngine<T: Scalar> {
+    threads: usize,
+    lanes: usize,
+    scratch_backward: bool,
+    base: Mark,
+    params: ParamRange,
+    /// Replica tapes for workers 1..threads (worker 0 is the coordinator
+    /// thread driving the caller's main tape).
+    replicas: Vec<Tape<T>>,
+    /// One scratch per worker (index 0 = coordinator).
+    scratches: Vec<Scratch>,
+    lane_bufs: Vec<Lane>,
+}
+
+impl<T: Scalar> MinibatchGradEngine<T> {
+    /// Build an engine over a model whose parameters live in `params` at
+    /// the base of `tape`, with `base` the post-construction mark (every
+    /// node below it must be a leaf — the same precondition as
+    /// `backward_above`). Allocates `threads − 1` replica tapes and
+    /// `lanes` gradient buffers of `params.len` doubles.
+    pub fn new(tape: &Tape<T>, base: Mark, params: ParamRange, opts: ParallelOptions) -> Self {
+        let threads = opts.threads.max(1);
+        let lanes = opts.lanes.max(1);
+        let replicas: Vec<Tape<T>> = (1..threads).map(|_| tape.clone_prefix(base)).collect();
+        let scratches: Vec<Scratch> = (0..threads).map(|_| Scratch::new()).collect();
+        let lane_bufs: Vec<Lane> = (0..lanes)
+            .map(|_| Lane {
+                grad: vec![0.0; params.len],
+                loss: 0.0,
+                peak_nodes: 0,
+            })
+            .collect();
+        MinibatchGradEngine {
+            threads,
+            lanes,
+            scratch_backward: opts.scratch_backward,
+            base,
+            params,
+            replicas,
+            scratches,
+            lane_bufs,
+        }
+    }
+
+    /// Worker count.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Reduction width.
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Pre-size every replica (and every scratch) for a per-sample
+    /// activation peak of `nodes` tape nodes and `aux` argument-pool
+    /// entries, so even the *first* step allocates nothing in the worker
+    /// loops.
+    pub fn reserve_activation(&mut self, nodes: usize, aux: usize) {
+        for r in &mut self.replicas {
+            r.reserve(nodes, aux);
+        }
+        for s in &mut self.scratches {
+            s.reserve(self.base.node_count() + nodes);
+        }
+    }
+
+    /// Capacity snapshot `(nodes, aux, consts)` of every replica tape —
+    /// observability for the zero-steady-state-allocation tests.
+    pub fn replica_capacities(&self) -> Vec<(usize, usize, usize)> {
+        self.replicas.iter().map(|r| r.capacities()).collect()
+    }
+
+    /// Compute the **sum** (not mean) of ∇f_i over `batch` into
+    /// `grad_out`, using the deterministic lane/tree reduction. `oracle`
+    /// builds one sample's loss on whatever tape it is handed — it runs
+    /// concurrently on replica tapes, so it must not mutate shared state.
+    ///
+    /// `tape` is the main tape holding the authoritative parameters; its
+    /// current values are synced into every replica before the shards
+    /// run, and it is always left rewound to `base`.
+    pub fn accumulate<F>(
+        &mut self,
+        tape: &mut Tape<T>,
+        batch: &[usize],
+        oracle: &F,
+        grad_out: &mut [f64],
+    ) -> StepStats
+    where
+        F: Fn(&mut Tape<T>, usize) -> Value + Sync,
+    {
+        let b = batch.len();
+        assert!(b > 0, "empty minibatch");
+        assert_eq!(grad_out.len(), self.params.len, "grad_out length mismatch");
+        let lanes_used = self.lanes.min(b);
+        let workers = self.threads.min(lanes_used);
+        let base = self.base;
+        let params = self.params;
+        let use_scratch = self.scratch_backward;
+
+        // Disjoint field borrows, split once so the scoped-thread closures
+        // capture plain locals.
+        let lane_bufs: &mut [Lane] = &mut self.lane_bufs[..lanes_used];
+        let replicas: &mut [Tape<T>] = &mut self.replicas;
+        let scratches: &mut [Scratch] = &mut self.scratches;
+
+        // Reset the lanes that will run this step.
+        for lane in lane_bufs.iter_mut() {
+            lane.grad.iter_mut().for_each(|g| *g = 0.0);
+            lane.loss = 0.0;
+            lane.peak_nodes = 0;
+        }
+
+        if workers == 1 {
+            // Serial path: identical lane structure, no replicas, no
+            // spawns — this *is* the reference numeric behavior.
+            run_lanes(
+                tape,
+                &mut scratches[0],
+                base,
+                params,
+                batch,
+                lanes_used,
+                0,
+                lane_bufs,
+                oracle,
+                use_scratch,
+            );
+        } else {
+            // Sync authoritative parameter values into the replicas that
+            // will actually run (workers − 1 of them; the coordinator
+            // drives the main tape).
+            let src = tape.values_range(params.first, params.len);
+            for r in replicas[..workers - 1].iter_mut() {
+                r.copy_values_from(params.first, src);
+            }
+
+            // Contiguous lane chunks per worker: worker w owns lanes
+            // [w·L/W, (w+1)·L/W). The assignment affects scheduling only,
+            // never lane contents.
+            let bounds: Vec<usize> = (0..=workers).map(|w| w * lanes_used / workers).collect();
+            let mut chunks: Vec<&mut [Lane]> = Vec::with_capacity(workers);
+            let mut rest: &mut [Lane] = lane_bufs;
+            for w in 0..workers {
+                let take = bounds[w + 1] - bounds[w];
+                let (head, tail) = rest.split_at_mut(take);
+                chunks.push(head);
+                rest = tail;
+            }
+
+            let (scratch0, scratch_rest) = scratches.split_at_mut(1);
+            let mut chunk_iter = chunks.into_iter();
+            let main_chunk = chunk_iter.next().expect("workers >= 1");
+
+            thread::scope(|s| {
+                for (w, ((chunk, replica), scratch)) in chunk_iter
+                    .zip(replicas.iter_mut())
+                    .zip(scratch_rest.iter_mut())
+                    .enumerate()
+                {
+                    let lane0 = bounds[w + 1];
+                    s.spawn(move || {
+                        run_lanes(
+                            replica,
+                            scratch,
+                            base,
+                            params,
+                            batch,
+                            lanes_used,
+                            lane0,
+                            chunk,
+                            oracle,
+                            use_scratch,
+                        );
+                    });
+                }
+                // The coordinator doubles as worker 0 on the main tape.
+                run_lanes(
+                    tape,
+                    &mut scratch0[0],
+                    base,
+                    params,
+                    batch,
+                    lanes_used,
+                    0,
+                    main_chunk,
+                    oracle,
+                    use_scratch,
+                );
+            });
+        }
+
+        // Fixed gap-doubling binary tree over the lanes — the shape
+        // depends only on `lanes_used`, never on the thread count.
+        let lane_bufs: &mut [Lane] = &mut self.lane_bufs[..lanes_used];
+        let mut peak_nodes = 0usize;
+        for lane in lane_bufs.iter() {
+            peak_nodes = peak_nodes.max(lane.peak_nodes);
+        }
+        let mut gap = 1usize;
+        while gap < lanes_used {
+            let mut i = 0usize;
+            while i + gap < lanes_used {
+                let (left, right) = lane_bufs.split_at_mut(i + gap);
+                let (dst, srcl) = (&mut left[i], &right[0]);
+                for (d, s) in dst.grad.iter_mut().zip(&srcl.grad) {
+                    *d += *s;
+                }
+                dst.loss += srcl.loss;
+                i += 2 * gap;
+            }
+            gap *= 2;
+        }
+        grad_out.copy_from_slice(&lane_bufs[0].grad);
+        StepStats {
+            loss_sum: lane_bufs[0].loss,
+            peak_nodes,
+        }
+    }
+}
+
+/// Run the lanes `[lane0, lane0 + lanes.len())` of the current step on
+/// one tape: for every owned batch slot, build the sample loss, fold it
+/// into the lane, backprop, fold the parameter gradient run into the lane
+/// buffer, rewind. `lanes_total` fixes the slot partition.
+#[allow(clippy::too_many_arguments)]
+fn run_lanes<T: Scalar, F>(
+    tape: &mut Tape<T>,
+    scratch: &mut Scratch,
+    base: Mark,
+    params: ParamRange,
+    batch: &[usize],
+    lanes_total: usize,
+    lane0: usize,
+    lanes: &mut [Lane],
+    oracle: &F,
+    use_scratch: bool,
+) where
+    F: Fn(&mut Tape<T>, usize) -> Value + Sync,
+{
+    let b = batch.len();
+    for (off, lane) in lanes.iter_mut().enumerate() {
+        let l = lane0 + off;
+        let (slot0, slot1) = (l * b / lanes_total, (l + 1) * b / lanes_total);
+        for slot in slot0..slot1 {
+            let loss = oracle(tape, batch[slot]);
+            lane.loss += tape.value(loss).to_f64();
+            if use_scratch {
+                tape.backward_with_scratch(loss, scratch);
+            } else {
+                tape.backward_above(loss, base);
+            }
+            let grads = tape.grads_range(params.first, params.len);
+            for (acc, g) in lane.grad.iter_mut().zip(grads) {
+                *acc += g.to_f64();
+            }
+            lane.peak_nodes = lane.peak_nodes.max(tape.len());
+            tape.rewind(base);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tiny least-squares model: params w ∈ R^4 at the tape base,
+    /// f_i(w) = (⟨w, x_i⟩ − y_i)² over a fixed synthetic dataset.
+    struct LsqProblem {
+        xs: Vec<[f64; 4]>,
+        ys: Vec<f64>,
+    }
+
+    impl LsqProblem {
+        fn new(n: usize) -> LsqProblem {
+            let mut xs = Vec::with_capacity(n);
+            let mut ys = Vec::with_capacity(n);
+            for i in 0..n {
+                let f = i as f64;
+                xs.push([(f * 0.3).sin(), (f * 0.7).cos(), 0.1 * f, 1.0]);
+                ys.push((f * 0.2).sin() * 2.0);
+            }
+            LsqProblem { xs, ys }
+        }
+
+        fn setup(&self) -> (Tape<f64>, Mark, ParamRange) {
+            let mut tape = Tape::new();
+            let first = tape.leaves(&[0.5, -0.25, 0.125, 0.0]);
+            let params = ParamRange { first, len: 4 };
+            let base = tape.mark();
+            (tape, base, params)
+        }
+
+        fn oracle(&self) -> impl Fn(&mut Tape<f64>, usize) -> Value + Sync + '_ {
+            move |tape: &mut Tape<f64>, i: usize| {
+                let x: Vec<Value> = self.xs[i].iter().map(|&v| tape.leaf(v)).collect();
+                let w: Vec<Value> = (0..4).map(|k| Value(k as u32)).collect();
+                let pred = tape.inner_product(&w, &x);
+                let y = tape.leaf(self.ys[i]);
+                let e = tape.sub(pred, y);
+                tape.sqr(e)
+            }
+        }
+    }
+
+    fn grad_with_threads(threads: usize, batch: &[usize]) -> (Vec<f64>, f64) {
+        let prob = LsqProblem::new(64);
+        let (mut tape, base, params) = prob.setup();
+        let mut engine = MinibatchGradEngine::new(
+            &tape,
+            base,
+            params,
+            ParallelOptions {
+                threads,
+                ..Default::default()
+            },
+        );
+        let mut grad = vec![0.0; params.len];
+        let stats = engine.accumulate(&mut tape, batch, &prob.oracle(), &mut grad);
+        (grad, stats.loss_sum)
+    }
+
+    #[test]
+    fn thread_counts_agree_bitwise() {
+        let batch: Vec<usize> = (0..23).map(|i| (i * 5) % 64).collect();
+        let (g1, l1) = grad_with_threads(1, &batch);
+        for threads in [2usize, 3, 4, 8] {
+            let (gt, lt) = grad_with_threads(threads, &batch);
+            assert_eq!(l1.to_bits(), lt.to_bits(), "loss differs at {threads} threads");
+            for (a, b) in g1.iter().zip(&gt) {
+                assert_eq!(a.to_bits(), b.to_bits(), "grad differs at {threads} threads");
+            }
+        }
+    }
+
+    #[test]
+    fn repeated_runs_agree_bitwise() {
+        let batch: Vec<usize> = (0..16).collect();
+        let (g_a, l_a) = grad_with_threads(4, &batch);
+        let (g_b, l_b) = grad_with_threads(4, &batch);
+        assert_eq!(l_a.to_bits(), l_b.to_bits());
+        assert_eq!(
+            g_a.iter().map(|g| g.to_bits()).collect::<Vec<_>>(),
+            g_b.iter().map(|g| g.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn gradient_sum_matches_manual_fold() {
+        // With one lane the reduction degenerates to the plain serial
+        // left fold — cross-check against a hand-rolled loop.
+        let prob = LsqProblem::new(16);
+        let (mut tape, base, params) = prob.setup();
+        let mut engine = MinibatchGradEngine::new(
+            &tape,
+            base,
+            params,
+            ParallelOptions {
+                threads: 1,
+                lanes: 1,
+                scratch_backward: false,
+            },
+        );
+        let batch: Vec<usize> = (0..8).collect();
+        let mut grad = vec![0.0; 4];
+        let stats = engine.accumulate(&mut tape, &batch, &prob.oracle(), &mut grad);
+
+        let (mut tape2, base2, _params2) = prob.setup();
+        let oracle = prob.oracle();
+        let mut manual = vec![0.0; 4];
+        let mut loss_sum = 0.0;
+        for &i in &batch {
+            let loss = oracle(&mut tape2, i);
+            loss_sum += tape2.value(loss);
+            tape2.backward_above(loss, base2);
+            for k in 0..4 {
+                manual[k] += tape2.grad(Value(k as u32));
+            }
+            tape2.rewind(base2);
+        }
+        assert_eq!(stats.loss_sum.to_bits(), loss_sum.to_bits());
+        for k in 0..4 {
+            assert_eq!(grad[k].to_bits(), manual[k].to_bits());
+        }
+    }
+
+    #[test]
+    fn lanes_partition_covers_every_slot_once() {
+        // The slot partition must be exact for awkward (b, lanes) pairs.
+        for b in 1..=40usize {
+            for lanes in 1..=16usize {
+                let l = lanes.min(b);
+                let mut seen = vec![0usize; b];
+                for lane in 0..l {
+                    for slot in lane * b / l..(lane + 1) * b / l {
+                        seen[slot] += 1;
+                    }
+                }
+                assert!(seen.iter().all(|&c| c == 1), "b={b} lanes={l}: {seen:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn small_batches_use_fewer_lanes_than_configured() {
+        let batch = [3usize, 9];
+        let (g2, _) = grad_with_threads(8, &batch); // b=2 → 2 lanes, 2 workers
+        let (g1, _) = grad_with_threads(1, &batch);
+        assert_eq!(
+            g1.iter().map(|g| g.to_bits()).collect::<Vec<_>>(),
+            g2.iter().map(|g| g.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn scratch_backward_workers_match_backward_above() {
+        let prob = LsqProblem::new(32);
+        let batch: Vec<usize> = (0..12).collect();
+        let run = |scratch: bool| {
+            let (mut tape, base, params) = prob.setup();
+            let mut engine = MinibatchGradEngine::new(
+                &tape,
+                base,
+                params,
+                ParallelOptions {
+                    threads: 3,
+                    lanes: DEFAULT_LANES,
+                    scratch_backward: scratch,
+                },
+            );
+            let mut grad = vec![0.0; 4];
+            engine.accumulate(&mut tape, &batch, &prob.oracle(), &mut grad);
+            grad
+        };
+        let a = run(false);
+        let b = run(true);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-12, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn steady_state_keeps_replica_capacities_stable() {
+        let prob = LsqProblem::new(64);
+        let (mut tape, base, params) = prob.setup();
+        let mut engine = MinibatchGradEngine::new(
+            &tape,
+            base,
+            params,
+            ParallelOptions {
+                threads: 4,
+                ..Default::default()
+            },
+        );
+        let batch: Vec<usize> = (0..32).collect();
+        let mut grad = vec![0.0; 4];
+        // Warmup step grows replicas to the activation peak…
+        engine.accumulate(&mut tape, &batch, &prob.oracle(), &mut grad);
+        let caps = engine.replica_capacities();
+        let main_caps = tape.capacities();
+        // …after which no step may allocate tape storage again.
+        for _ in 0..5 {
+            engine.accumulate(&mut tape, &batch, &prob.oracle(), &mut grad);
+        }
+        assert_eq!(engine.replica_capacities(), caps);
+        assert_eq!(tape.capacities(), main_caps);
+    }
+}

@@ -47,6 +47,12 @@ impl Scratch {
         }
     }
 
+    /// Pre-size the visited bitset for a tape of `nodes` nodes, so the
+    /// first scratch backward of a steady-state loop allocates nothing.
+    pub fn reserve(&mut self, nodes: usize) {
+        self.ensure(nodes);
+    }
+
     #[inline(always)]
     fn ensure(&mut self, nodes: usize) {
         let words = nodes.div_ceil(64);
@@ -85,6 +91,56 @@ impl Scratch {
 }
 
 impl<T: Scalar> Tape<T> {
+    /// 4× unrolled backward scatter for the contiguous-range dot kernels
+    /// (`DotRange` / `DotRangeBias`): `grad[x0+k] += g·w[k]`,
+    /// `grad[w0+k] += g·x[k]`. Plain unrolling — per-k operation order is
+    /// preserved, so results are bitwise identical to the rolled loop
+    /// even when the two ranges overlap.
+    ///
+    /// # Safety
+    /// Caller must guarantee `x0 + n` and `w0 + n` are within the tape
+    /// (the tape's topological invariant provides this for real nodes).
+    #[inline(always)]
+    unsafe fn dot_range_backward_unrolled(&mut self, x0: usize, w0: usize, n: usize, g: T) {
+        let mut k = 0usize;
+        while k + 4 <= n {
+            let (xv0, wv0) = (
+                *self.val.get_unchecked(x0 + k),
+                *self.val.get_unchecked(w0 + k),
+            );
+            *self.grad.get_unchecked_mut(x0 + k) += g * wv0;
+            *self.grad.get_unchecked_mut(w0 + k) += g * xv0;
+            let (xv1, wv1) = (
+                *self.val.get_unchecked(x0 + k + 1),
+                *self.val.get_unchecked(w0 + k + 1),
+            );
+            *self.grad.get_unchecked_mut(x0 + k + 1) += g * wv1;
+            *self.grad.get_unchecked_mut(w0 + k + 1) += g * xv1;
+            let (xv2, wv2) = (
+                *self.val.get_unchecked(x0 + k + 2),
+                *self.val.get_unchecked(w0 + k + 2),
+            );
+            *self.grad.get_unchecked_mut(x0 + k + 2) += g * wv2;
+            *self.grad.get_unchecked_mut(w0 + k + 2) += g * xv2;
+            let (xv3, wv3) = (
+                *self.val.get_unchecked(x0 + k + 3),
+                *self.val.get_unchecked(w0 + k + 3),
+            );
+            *self.grad.get_unchecked_mut(x0 + k + 3) += g * wv3;
+            *self.grad.get_unchecked_mut(w0 + k + 3) += g * xv3;
+            k += 4;
+        }
+        while k < n {
+            let (xv, wv) = (
+                *self.val.get_unchecked(x0 + k),
+                *self.val.get_unchecked(w0 + k),
+            );
+            *self.grad.get_unchecked_mut(x0 + k) += g * wv;
+            *self.grad.get_unchecked_mut(w0 + k) += g * xv;
+            k += 1;
+        }
+    }
+
     /// Accumulate `g · ∂node/∂args` into the argument gradients of node `i`.
     ///
     /// This is the single dispatch point shared by every backward variant;
@@ -294,12 +350,41 @@ impl<T: Scalar> Tape<T> {
             Op::InnerProduct => unsafe {
                 let s = *self.a.get_unchecked(i) as usize;
                 let n = *self.b.get_unchecked(i) as usize;
-                for k in 0..n {
+                // 4× unrolled scatter. Per-k operation order is preserved
+                // (plain unrolling, no accumulator splitting), so the
+                // result is bitwise identical to the rolled loop even when
+                // ids repeat across lanes.
+                let mut k = 0usize;
+                while k + 4 <= n {
+                    let x0 = *self.aux.get_unchecked(s + k) as usize;
+                    let y0 = *self.aux.get_unchecked(s + n + k) as usize;
+                    let (xv0, yv0) = (*self.val.get_unchecked(x0), *self.val.get_unchecked(y0));
+                    *self.grad.get_unchecked_mut(x0) += g * yv0;
+                    *self.grad.get_unchecked_mut(y0) += g * xv0;
+                    let x1 = *self.aux.get_unchecked(s + k + 1) as usize;
+                    let y1 = *self.aux.get_unchecked(s + n + k + 1) as usize;
+                    let (xv1, yv1) = (*self.val.get_unchecked(x1), *self.val.get_unchecked(y1));
+                    *self.grad.get_unchecked_mut(x1) += g * yv1;
+                    *self.grad.get_unchecked_mut(y1) += g * xv1;
+                    let x2 = *self.aux.get_unchecked(s + k + 2) as usize;
+                    let y2 = *self.aux.get_unchecked(s + n + k + 2) as usize;
+                    let (xv2, yv2) = (*self.val.get_unchecked(x2), *self.val.get_unchecked(y2));
+                    *self.grad.get_unchecked_mut(x2) += g * yv2;
+                    *self.grad.get_unchecked_mut(y2) += g * xv2;
+                    let x3 = *self.aux.get_unchecked(s + k + 3) as usize;
+                    let y3 = *self.aux.get_unchecked(s + n + k + 3) as usize;
+                    let (xv3, yv3) = (*self.val.get_unchecked(x3), *self.val.get_unchecked(y3));
+                    *self.grad.get_unchecked_mut(x3) += g * yv3;
+                    *self.grad.get_unchecked_mut(y3) += g * xv3;
+                    k += 4;
+                }
+                while k < n {
                     let x = *self.aux.get_unchecked(s + k) as usize;
                     let y = *self.aux.get_unchecked(s + n + k) as usize;
                     let (xv, yv) = (*self.val.get_unchecked(x), *self.val.get_unchecked(y));
                     *self.grad.get_unchecked_mut(x) += g * yv;
                     *self.grad.get_unchecked_mut(y) += g * xv;
+                    k += 1;
                 }
             },
             Op::InnerProductBias => {
@@ -320,38 +405,65 @@ impl<T: Scalar> Tape<T> {
                 let meta = *self.b.get_unchecked(i) as usize;
                 let w0 = *self.aux.get_unchecked(meta) as usize;
                 let n = *self.aux.get_unchecked(meta + 1) as usize;
-                for k in 0..n {
-                    let xv = *self.val.get_unchecked(x0 + k);
-                    let wv = *self.val.get_unchecked(w0 + k);
-                    *self.grad.get_unchecked_mut(x0 + k) += g * wv;
-                    *self.grad.get_unchecked_mut(w0 + k) += g * xv;
-                }
+                self.dot_range_backward_unrolled(x0, w0, n, g);
             },
-            Op::DotRangeBias => {
-                let x0 = self.a[i] as usize;
-                let meta = self.b[i] as usize;
-                let w0 = self.aux[meta] as usize;
-                let n = self.aux[meta + 1] as usize;
-                let bias = self.aux[meta + 2] as usize;
-                for k in 0..n {
-                    let (xv, wv) = (self.val[x0 + k], self.val[w0 + k]);
-                    self.grad[x0 + k] += g * wv;
-                    self.grad[w0 + k] += g * xv;
-                }
-                self.grad[bias] += g;
-            }
+            Op::DotRangeBias => unsafe {
+                let x0 = *self.a.get_unchecked(i) as usize;
+                let meta = *self.b.get_unchecked(i) as usize;
+                let w0 = *self.aux.get_unchecked(meta) as usize;
+                let n = *self.aux.get_unchecked(meta + 1) as usize;
+                let bias = *self.aux.get_unchecked(meta + 2) as usize;
+                self.dot_range_backward_unrolled(x0, w0, n, g);
+                *self.grad.get_unchecked_mut(bias) += g;
+            },
             Op::DotParamRange => unsafe {
                 let xs_at = *self.a.get_unchecked(i) as usize;
                 let meta = *self.b.get_unchecked(i) as usize;
                 let n = *self.aux.get_unchecked(meta) as usize;
                 let w0 = *self.aux.get_unchecked(meta + 1) as usize;
                 let bias = *self.aux.get_unchecked(meta + 2) as usize;
-                for k in 0..n {
+                // 4× unrolled gather-scatter; per-k order preserved so
+                // repeated x-ids (shared embedding rows) accumulate in
+                // exactly the rolled loop's order.
+                let mut k = 0usize;
+                while k + 4 <= n {
+                    let x0i = *self.aux.get_unchecked(xs_at + k) as usize;
+                    let (xv0, wv0) = (
+                        *self.val.get_unchecked(x0i),
+                        *self.val.get_unchecked(w0 + k),
+                    );
+                    *self.grad.get_unchecked_mut(x0i) += g * wv0;
+                    *self.grad.get_unchecked_mut(w0 + k) += g * xv0;
+                    let x1i = *self.aux.get_unchecked(xs_at + k + 1) as usize;
+                    let (xv1, wv1) = (
+                        *self.val.get_unchecked(x1i),
+                        *self.val.get_unchecked(w0 + k + 1),
+                    );
+                    *self.grad.get_unchecked_mut(x1i) += g * wv1;
+                    *self.grad.get_unchecked_mut(w0 + k + 1) += g * xv1;
+                    let x2i = *self.aux.get_unchecked(xs_at + k + 2) as usize;
+                    let (xv2, wv2) = (
+                        *self.val.get_unchecked(x2i),
+                        *self.val.get_unchecked(w0 + k + 2),
+                    );
+                    *self.grad.get_unchecked_mut(x2i) += g * wv2;
+                    *self.grad.get_unchecked_mut(w0 + k + 2) += g * xv2;
+                    let x3i = *self.aux.get_unchecked(xs_at + k + 3) as usize;
+                    let (xv3, wv3) = (
+                        *self.val.get_unchecked(x3i),
+                        *self.val.get_unchecked(w0 + k + 3),
+                    );
+                    *self.grad.get_unchecked_mut(x3i) += g * wv3;
+                    *self.grad.get_unchecked_mut(w0 + k + 3) += g * xv3;
+                    k += 4;
+                }
+                while k < n {
                     let x = *self.aux.get_unchecked(xs_at + k) as usize;
                     let xv = *self.val.get_unchecked(x);
                     let wv = *self.val.get_unchecked(w0 + k);
                     *self.grad.get_unchecked_mut(x) += g * wv;
                     *self.grad.get_unchecked_mut(w0 + k) += g * xv;
+                    k += 1;
                 }
                 *self.grad.get_unchecked_mut(bias) += g;
             },

@@ -104,6 +104,28 @@ impl<T: Scalar> Builder<T> {
         f(&mut self.tape.borrow_mut())
     }
 
+    /// Fused ⟨x, y⟩ over `Var` slices (paper: `innerProduct`), routed
+    /// through the 4-wide ILP-unrolled kernel.
+    pub fn inner_product<'g>(&'g self, xs: &[Var<'g, T>], ys: &[Var<'g, T>]) -> Var<'g, T> {
+        let xi: Vec<Value> = xs.iter().map(|v| v.id).collect();
+        let yi: Vec<Value> = ys.iter().map(|v| v.id).collect();
+        let id = self.tape.borrow_mut().inner_product(&xi, &yi);
+        Var { g: self, id }
+    }
+
+    /// Fused ⟨x, y⟩ + b (paper: `innerProductWithBias`).
+    pub fn inner_product_bias<'g>(
+        &'g self,
+        xs: &[Var<'g, T>],
+        ys: &[Var<'g, T>],
+        bias: Var<'g, T>,
+    ) -> Var<'g, T> {
+        let xi: Vec<Value> = xs.iter().map(|v| v.id).collect();
+        let yi: Vec<Value> = ys.iter().map(|v| v.id).collect();
+        let id = self.tape.borrow_mut().inner_product_bias(&xi, &yi, bias.id);
+        Var { g: self, id }
+    }
+
     /// Consume the builder, returning the tape.
     pub fn into_tape(self) -> Tape<T> {
         self.tape.into_inner()
@@ -393,6 +415,22 @@ mod tests {
         r.backward();
         // d(x^-1/2)/dx = -1/2 x^-3/2 = -1/16 at x=4
         assert!((y.grad() + 1.0 / 16.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn builder_inner_product_matches_manual_sum() {
+        let g = Builder::<f64>::new();
+        let xs: Vec<_> = [1.0, 2.0, 3.0, 4.0, 5.0].iter().map(|&v| g.value(v)).collect();
+        let ys: Vec<_> = [2.0, 2.0, 2.0, 2.0, 2.0].iter().map(|&v| g.value(v)).collect();
+        let ip = g.inner_product(&xs, &ys);
+        assert_eq!(ip.value(), 30.0);
+        let b = g.value(0.5);
+        let ipb = g.inner_product_bias(&xs, &ys, b);
+        assert_eq!(ipb.value(), 30.5);
+        ipb.backward();
+        assert_eq!(xs[0].grad(), 2.0);
+        assert_eq!(ys[4].grad(), 5.0);
+        assert_eq!(b.grad(), 1.0);
     }
 
     #[test]

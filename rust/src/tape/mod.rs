@@ -104,6 +104,11 @@ impl<T: Scalar> Tape<T> {
 
     /// Tape with pre-allocated node and aux capacity (MISRA-style: all
     /// memory up front, zero allocation in the training loop).
+    ///
+    /// `consts` (mulByConstant payloads) is pre-allocated too — one
+    /// payload per 64 nodes covers every workload in the repo — so the
+    /// zero-heap-allocation steady-state claim holds for graphs that use
+    /// constant multiplies (mean reductions, scaled losses).
     pub fn with_capacity(nodes: usize, aux: usize) -> Self {
         Tape {
             val: Vec::with_capacity(nodes),
@@ -112,9 +117,32 @@ impl<T: Scalar> Tape<T> {
             a: Vec::with_capacity(nodes),
             b: Vec::with_capacity(nodes),
             aux: Vec::with_capacity(aux),
-            consts: Vec::new(),
+            consts: Vec::with_capacity(nodes.div_ceil(64).max(8)),
             names: Vec::new(),
         }
+    }
+
+    /// Reserve *additional* headroom without adding nodes: `nodes` more
+    /// node slots and `aux` more argument-pool slots (plus proportional
+    /// `consts` headroom, since `mulByConstant` pushes a payload per
+    /// node). Used by the data-parallel engine to pre-size replica tapes
+    /// to the observed per-sample activation peak so steady-state workers
+    /// never allocate.
+    pub fn reserve(&mut self, nodes: usize, aux: usize) {
+        self.val.reserve(nodes);
+        self.grad.reserve(nodes);
+        self.op.reserve(nodes);
+        self.a.reserve(nodes);
+        self.b.reserve(nodes);
+        self.aux.reserve(aux);
+        self.consts.reserve(nodes.div_ceil(64).max(8));
+    }
+
+    /// Current capacities `(nodes, aux, consts)` — the observability hook
+    /// for the zero-steady-state-allocation tests: capture once after
+    /// warmup, assert unchanged after further steps.
+    pub fn capacities(&self) -> (usize, usize, usize) {
+        (self.val.capacity(), self.aux.capacity(), self.consts.capacity())
     }
 
     /// Number of nodes currently on the tape.
@@ -322,6 +350,38 @@ impl<T: Scalar> Tape<T> {
             consts,
             names: Vec::new(),
         }
+    }
+
+    /// Deep-copy the tape prefix up to `m` into a fresh tape — replica
+    /// construction for the data-parallel engine (`crate::parallel`).
+    ///
+    /// The replica carries bitwise-identical values, ops, argument slots,
+    /// aux entries and constant payloads for every pre-mark node, and
+    /// zeroed gradients. Because node ids are positional, every `Value`,
+    /// `ParamRange` or `Mark` that was valid below `m` on the source tape
+    /// is valid — and means the same thing — on the replica, so a model
+    /// struct built against the source drives the replica unchanged.
+    pub fn clone_prefix(&self, m: Mark) -> Tape<T> {
+        let n = m.nodes as usize;
+        debug_assert!(n <= self.val.len(), "clone_prefix beyond tape end");
+        Tape {
+            val: self.val[..n].to_vec(),
+            grad: vec![T::ZERO; n],
+            op: self.op[..n].to_vec(),
+            a: self.a[..n].to_vec(),
+            b: self.b[..n].to_vec(),
+            aux: self.aux[..m.aux as usize].to_vec(),
+            consts: self.consts[..m.consts as usize].to_vec(),
+            names: self.names[..m.names as usize].to_vec(),
+        }
+    }
+
+    /// Bulk-overwrite the values of the contiguous id range starting at
+    /// `first` from a flat slice (the per-step parameter sync from the
+    /// main tape into a replica). Pure memcpy: no allocation, no nodes
+    /// created or destroyed.
+    pub fn copy_values_from(&mut self, first: Value, src: &[T]) {
+        self.val[first.idx()..first.idx() + src.len()].copy_from_slice(src);
     }
 
     /// Attach a debug name to a node (viz only; zero cost when unused).
@@ -649,14 +709,36 @@ impl<T: Scalar> Tape<T> {
         self.push(Op::ReduceNegMean, a, n, -(s / T::from_usize(xs.len())))
     }
 
-    /// ⟨x, y⟩ as a single fused node (paper: `innerProduct`). The unrolled
-    /// FMA loop is the engine's ILP workhorse (Appendix F.2).
+    /// 4-wide ILP gather-dot over two id slices, seeded with `init` —
+    /// the indirect-operand twin of [`crate::ops::dot_ilp4`], with the
+    /// identical `(s0+s1)+(s2+s3)+init` association so the aux-id and
+    /// contiguous-range fused kernels agree bitwise.
+    #[inline(always)]
+    fn gather_dot_ilp4(&self, xs: &[Value], ys: &[Value], init: T) -> T {
+        debug_assert_eq!(xs.len(), ys.len());
+        let n = xs.len();
+        let (mut s0, mut s1, mut s2, mut s3) = (T::ZERO, T::ZERO, T::ZERO, T::ZERO);
+        let mut k = 0usize;
+        while k + 4 <= n {
+            s0 = self.val[xs[k].idx()].mul_add(self.val[ys[k].idx()], s0);
+            s1 = self.val[xs[k + 1].idx()].mul_add(self.val[ys[k + 1].idx()], s1);
+            s2 = self.val[xs[k + 2].idx()].mul_add(self.val[ys[k + 2].idx()], s2);
+            s3 = self.val[xs[k + 3].idx()].mul_add(self.val[ys[k + 3].idx()], s3);
+            k += 4;
+        }
+        let mut s = (s0 + s1) + (s2 + s3) + init;
+        while k < n {
+            s = self.val[xs[k].idx()].mul_add(self.val[ys[k].idx()], s);
+            k += 1;
+        }
+        s
+    }
+
+    /// ⟨x, y⟩ as a single fused node (paper: `innerProduct`). The
+    /// 4-accumulator FMA loop is the engine's ILP workhorse (Appendix F.2).
     pub fn inner_product(&mut self, xs: &[Value], ys: &[Value]) -> Value {
         assert_eq!(xs.len(), ys.len(), "innerProduct length mismatch");
-        let mut s = T::ZERO;
-        for (x, y) in xs.iter().zip(ys) {
-            s = self.val[x.idx()].mul_add(self.val[y.idx()], s);
-        }
+        let s = self.gather_dot_ilp4(xs, ys, T::ZERO);
         let start = self.aux.len() as u32;
         self.aux.extend(xs.iter().map(|v| v.0));
         self.aux.extend(ys.iter().map(|v| v.0));
@@ -666,10 +748,7 @@ impl<T: Scalar> Tape<T> {
     /// ⟨x, y⟩ + b (paper: `innerProductWithBias`).
     pub fn inner_product_bias(&mut self, xs: &[Value], ys: &[Value], bias: Value) -> Value {
         assert_eq!(xs.len(), ys.len(), "innerProductWithBias length mismatch");
-        let mut s = self.val[bias.idx()];
-        for (x, y) in xs.iter().zip(ys) {
-            s = self.val[x.idx()].mul_add(self.val[y.idx()], s);
-        }
+        let s = self.gather_dot_ilp4(xs, ys, self.val[bias.idx()]);
         let start = self.aux.len() as u32;
         self.aux.extend(xs.iter().map(|v| v.0));
         self.aux.extend(ys.iter().map(|v| v.0));
@@ -680,17 +759,15 @@ impl<T: Scalar> Tape<T> {
     // fused range ops -----------------------------------------------------
 
     /// ⟨val[x0..x0+n], val[w0..w0+n]⟩ over two contiguous id ranges —
-    /// the cache-friendly fast path (no aux id indirection per element).
+    /// the cache-friendly fast path (no aux id indirection per element),
+    /// 4-wide ILP-unrolled via [`crate::ops::dot_ilp4`].
     pub fn dot_range(&mut self, x0: Value, w0: Value, n: usize) -> Value {
         debug_assert!(x0.idx() + n <= self.len() && w0.idx() + n <= self.len());
-        let mut s = T::ZERO;
-        let (xs, ws) = (
+        let s = crate::ops::dot_ilp4(
             &self.val[x0.idx()..x0.idx() + n],
             &self.val[w0.idx()..w0.idx() + n],
+            T::ZERO,
         );
-        for i in 0..n {
-            s = xs[i].mul_add(ws[i], s);
-        }
         let meta = self.aux.len() as u32;
         self.aux.push(w0.0);
         self.aux.push(n as u32);
@@ -700,16 +777,11 @@ impl<T: Scalar> Tape<T> {
     /// `dot_range` + bias node.
     pub fn dot_range_bias(&mut self, x0: Value, w0: Value, n: usize, bias: Value) -> Value {
         debug_assert!(x0.idx() + n <= self.len() && w0.idx() + n <= self.len());
-        let mut s = self.val[bias.idx()];
-        {
-            let (xs, ws) = (
-                &self.val[x0.idx()..x0.idx() + n],
-                &self.val[w0.idx()..w0.idx() + n],
-            );
-            for i in 0..n {
-                s = xs[i].mul_add(ws[i], s);
-            }
-        }
+        let s = crate::ops::dot_ilp4(
+            &self.val[x0.idx()..x0.idx() + n],
+            &self.val[w0.idx()..w0.idx() + n],
+            self.val[bias.idx()],
+        );
         let meta = self.aux.len() as u32;
         self.aux.push(w0.0);
         self.aux.push(n as u32);
@@ -1045,6 +1117,81 @@ mod tests {
             g.leaf(i as f32);
         }
         assert_eq!(g.val.capacity(), base);
+    }
+
+    #[test]
+    fn with_capacity_preallocates_consts() {
+        let g: Tape<f64> = Tape::with_capacity(1024, 64);
+        let (_, _, consts_cap) = g.capacities();
+        assert!(consts_cap >= 16, "consts must be pre-allocated: {consts_cap}");
+    }
+
+    #[test]
+    fn clone_prefix_replicates_params_and_structure() {
+        let mut g = t();
+        let p = g.leaves(&[1.0, 2.0, 3.0]);
+        let c = g.mul_const(Value(p.0), 2.0); // exercises the consts region
+        g.set_name(c, "c");
+        let base = g.mark();
+        // Post-mark activity must not leak into the replica.
+        let x = g.leaf(9.0);
+        let _y = g.reduce_sum(&[x, c]);
+
+        let rep = g.clone_prefix(base);
+        assert_eq!(rep.len(), base.node_count());
+        assert_eq!(rep.value(p), 1.0);
+        assert_eq!(rep.value(c), 2.0);
+        assert_eq!(rep.raw_consts_len(), 1);
+        assert_eq!(rep.name_of(c), Some("c"));
+        // Same ids mean the same nodes: build the same activation on the
+        // replica and on the rewound source; results agree bitwise.
+        let mut src = g;
+        src.rewind(base);
+        let mut rep = rep;
+        let (mut roots, mut tapes): (Vec<Value>, Vec<&mut Tape<f64>>) =
+            (Vec::new(), vec![&mut src, &mut rep]);
+        for tp in tapes.iter_mut() {
+            let a = tp.leaf(0.25);
+            let d = tp.dot_range(Value(p.0), Value(p.0), 3);
+            let r = tp.mul(a, d);
+            roots.push(r);
+        }
+        assert_eq!(roots[0], roots[1], "replica must mirror node ids");
+        src.backward(roots[0]);
+        rep.backward(roots[1]);
+        for i in 0..src.len() {
+            assert_eq!(src.grad(Value(i as u32)), rep.grad(Value(i as u32)));
+        }
+    }
+
+    #[test]
+    fn copy_values_from_overwrites_range() {
+        let mut g = t();
+        let p = g.leaves(&[1.0, 2.0, 3.0, 4.0]);
+        g.copy_values_from(Value(p.0 + 1), &[20.0, 30.0]);
+        assert_eq!(g.value(Value(p.0)), 1.0);
+        assert_eq!(g.value(Value(p.0 + 1)), 20.0);
+        assert_eq!(g.value(Value(p.0 + 2)), 30.0);
+        assert_eq!(g.value(Value(p.0 + 3)), 4.0);
+    }
+
+    #[test]
+    fn unrolled_dot_range_matches_gather_inner_product_bitwise() {
+        // Contiguous-range and aux-id fused dots share one association;
+        // verify bitwise agreement across the unroll boundary (n = 1..10).
+        for n in 1..=10usize {
+            let mut g = t();
+            let xs_vals: Vec<f64> = (0..n).map(|i| 0.3 + 0.7 * i as f64).collect();
+            let ws_vals: Vec<f64> = (0..n).map(|i| -0.9 + 0.4 * i as f64).collect();
+            let x0 = g.leaves(&xs_vals);
+            let w0 = g.leaves(&ws_vals);
+            let b = g.leaf(0.125);
+            let d = g.dot_range_bias(x0, w0, n, b);
+            let xs: Vec<Value> = (0..n as u32).map(|k| Value(x0.0 + k)).collect();
+            let ws: Vec<Value> = (0..n as u32).map(|k| Value(w0.0 + k)).collect();
+            let ip = g.inner_product_bias(&xs, &ws, b);
+            assert_eq!(g.value(d), g.value(ip), "n={n}");
+        }
     }
 
     #[test]

