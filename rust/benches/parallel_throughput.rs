@@ -1,13 +1,17 @@
 //! Data-parallel training throughput: samples/sec vs thread count on the
 //! paper's Table 5/6 char-MLP workload (§2.4, hidden e = 64, d = 69,083,
-//! FP32, batch 64).
+//! FP32, batch 64), plus a reduction-compression sweep at the widest
+//! thread count.
 //!
-//! Every row runs the *same* deterministic lane/tree reduction, so the
-//! loss trajectories are bitwise identical across thread counts — the
-//! bench asserts that before reporting speedups. Results are emitted both
-//! as the usual paper-style table (`bench_results/parallel_throughput.txt`)
-//! and as JSON (`bench_results/parallel_throughput.json`) so later PRs
-//! have a machine-readable perf trajectory.
+//! Every dense row runs the *same* deterministic lane/tree reduction
+//! through one persistent worker pool per run, so the loss trajectories
+//! are bitwise identical across thread counts — the bench asserts that
+//! before reporting speedups. The compression sweep reports the step-time
+//! and final-loss cost of RandK/TopK/EF21 on the lane→tree edge. Results
+//! are emitted both as the usual paper-style table
+//! (`bench_results/parallel_throughput.txt`) and as JSON
+//! (`bench_results/parallel_throughput.json`) so later PRs have a
+//! machine-readable perf trajectory.
 //!
 //! Run: `cargo bench --bench parallel_throughput`
 //! (set BURTORCH_FAST=1 for a shorter run).
@@ -17,6 +21,7 @@ use burtorch::coordinator::{Trainer, TrainerOptions};
 use burtorch::data::names_dataset;
 use burtorch::metrics::MemInfo;
 use burtorch::nn::{CeMode, CharMlp, CharMlpConfig};
+use burtorch::parallel::ReductionCompression;
 use burtorch::rng::Rng;
 use burtorch::tape::Tape;
 
@@ -118,8 +123,76 @@ fn main() {
         rows.push(row);
     }
 
+    // Compression sweep at the widest thread count that ran: what does
+    // sparsifying the lane→tree edge cost (or save) per step?
+    let sweep_threads = *thread_counts.last().unwrap_or(&1);
+    let k = 64usize;
+    let compression_modes = [
+        ReductionCompression::None,
+        ReductionCompression::RandK { k, seed: 7 },
+        ReductionCompression::TopK { k },
+        ReductionCompression::Ef21 { k, seed: 7 },
+    ];
+    struct CompressRow {
+        name: String,
+        ms_per_step: f64,
+        std_ms: f64,
+        final_loss: f64,
+    }
+    let mut compress_rows: Vec<CompressRow> = Vec::new();
+    println!("compression sweep (threads={sweep_threads}, k={k}):");
+    for compression in compression_modes {
+        let mut tape = Tape::<f32>::new();
+        let mut rng = Rng::new(1);
+        let model = CharMlp::new(&mut tape, cfg, &mut rng);
+        let trainer = Trainer::new(TrainerOptions {
+            steps,
+            batch,
+            lr: 0.1,
+            ce: CeMode::Fused,
+            log_every: 1,
+            seed: 7,
+            threads: sweep_threads,
+            compression,
+            ..Default::default()
+        });
+        let report = trainer.train_char_mlp(&mut tape, &model, &ds.examples);
+        if compression == ReductionCompression::None {
+            // The dense sweep row must reproduce the thread-sweep numbers.
+            if let Some(reference) = &reference_curve {
+                for ((s1, l1), (s2, l2)) in reference.iter().zip(&report.loss_curve) {
+                    assert_eq!(s1, s2);
+                    assert_eq!(l1.to_bits(), l2.to_bits(), "dense sweep row diverged");
+                }
+            }
+        }
+        let row = CompressRow {
+            name: compression.to_string(),
+            ms_per_step: report.compute_ms_mean,
+            std_ms: report.compute_ms_std,
+            final_loss: report.final_loss,
+        };
+        println!(
+            "  {:>10}: {:>8.3} ms/step  final loss {:.4}",
+            row.name, row.ms_per_step, row.final_loss
+        );
+        let mem = MemInfo::snapshot();
+        table.push(Row {
+            name: format!("BurTorch threads={sweep_threads}, compress={}", row.name),
+            mean_s: row.ms_per_step / 1e3,
+            std_s: row.std_ms / 1e3,
+            min_s: row.ms_per_step / 1e3,
+            ticks: 0,
+            vm_peak_mb: mem.vm_peak_mb(),
+            vm_hwm_mb: mem.vm_hwm_mb(),
+            iters: steps as u64,
+        });
+        compress_rows.push(row);
+    }
+
     table.note("loss curves bitwise identical across all thread counts (asserted)");
     table.note("samples/sec = batch / mean step time; speedup relative to threads=1");
+    table.note("compress=none is bitwise identical to the thread sweep (asserted)");
     table.emit_with_json("parallel_throughput_table");
 
     // Compact JSON for the perf trajectory.
@@ -146,7 +219,21 @@ fn main() {
             if i + 1 == rows.len() { "" } else { "," },
         ));
     }
-    json.push_str("  ]\n}\n");
+    json.push_str("  ],\n");
+    json.push_str(&format!(
+        "  \"compression\": {{\"threads\": {sweep_threads}, \"k\": {k}, \"rows\": [\n"
+    ));
+    for (i, r) in compress_rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"mode\": \"{}\", \"ms_per_step\": {}, \"std_ms\": {}, \"final_loss\": {}}}{}\n",
+            r.name,
+            json_num(r.ms_per_step),
+            json_num(r.std_ms),
+            json_num(r.final_loss),
+            if i + 1 == compress_rows.len() { "" } else { "," },
+        ));
+    }
+    json.push_str("  ]}\n}\n");
     write_json_result("parallel_throughput", &json);
     println!("wrote bench_results/parallel_throughput.json");
 }

@@ -17,7 +17,7 @@
 //! The XLA/PJRT graph-mode baseline lives in [`crate::runtime`].
 
 pub mod micrograd {
-    //! Micrograd-style Rc<RefCell> autodiff (Karpathy 2020, ported 1:1).
+    //! Micrograd-style `Rc<RefCell>` autodiff (Karpathy 2020, ported 1:1).
 
     use std::cell::RefCell;
     use std::collections::HashSet;

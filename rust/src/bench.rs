@@ -12,7 +12,7 @@ use crate::metrics::{cpu_ticks, mean_std, MemInfo, Timer};
 /// One measured experiment row (maps onto the paper's table columns).
 #[derive(Debug, Clone)]
 pub struct Row {
-    /// Label, e.g. "BurTorch, Eager [tape]".
+    /// Label, e.g. `"BurTorch, Eager [tape]"`.
     pub name: String,
     /// Mean total time per launch, seconds.
     pub mean_s: f64,

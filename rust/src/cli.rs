@@ -4,6 +4,19 @@
 //! Grammar: `burtorch <command> [--key value]... [--flag]...`
 //! Unknown keys are collected verbatim so commands can forward them into
 //! the config system as overrides.
+//!
+//! # Examples
+//!
+//! ```
+//! use burtorch::cli::Cli;
+//!
+//! let args = ["train", "--threads", "4", "--compress", "randk:k=64", "--scratch"];
+//! let cli = Cli::parse(args.iter().map(|s| s.to_string()));
+//! assert_eq!(cli.command, "train");
+//! assert_eq!(cli.usize_or("threads", 1), 4);
+//! assert_eq!(cli.opt("compress"), Some("randk:k=64"));
+//! assert!(cli.has_flag("scratch"));
+//! ```
 
 use std::collections::BTreeMap;
 

@@ -4,9 +4,45 @@
 //! Compressors are mappings C: ℝᵈ → ℝᵈ producing sparse/quantized
 //! messages. The paper argues BurTorch's partial-derivative-granularity
 //! oracles couple naturally with RandK-style compressors (compute only
-//! the needed coordinates); [`Compressor::support`] exposes exactly that
-//! coordinate set so the trainer can call `backward_with_scratch` +
-//! subset harvesting.
+//! the needed coordinates); [`Compressor::presample_support`] exposes
+//! exactly that coordinate set so the trainer can call
+//! `backward_with_scratch` + subset harvesting.
+//!
+//! Two subsystems consume these operators: the federated simulation
+//! ([`crate::coordinator::run_federated`]) compresses client→server
+//! messages, and the data-parallel engine ([`crate::parallel`]) plugs
+//! them into its lane→tree reduction edge behind
+//! [`crate::parallel::ReductionCompression`].
+//!
+//! # Examples
+//!
+//! Every compressor writes a same-length sparse image of its input:
+//!
+//! ```
+//! use burtorch::compress::{Compressor, TopK};
+//!
+//! let mut out = vec![0.0; 5];
+//! TopK { k: 2 }.compress(&[0.1, -5.0, 0.2, 3.0, -0.05], &mut out);
+//! assert_eq!(out, vec![0.0, -5.0, 0.0, 3.0, 0.0]);
+//! ```
+//!
+//! EF21 wraps a contractive compressor with error feedback, so its shift
+//! converges to a fixed gradient even under aggressive sparsification:
+//!
+//! ```
+//! use burtorch::compress::{Ef21Worker, TopK};
+//!
+//! let grad = [1.0, -2.0, 0.5];
+//! let mut worker = Ef21Worker::new(3);
+//! let mut c = TopK { k: 1 };
+//! let mut msg = vec![0.0; 3];
+//! for _ in 0..10 {
+//!     worker.round(&grad, &mut c, &mut msg);
+//! }
+//! for (g, target) in worker.g.iter().zip(&grad) {
+//!     assert!((g - target).abs() < 1e-9);
+//! }
+//! ```
 
 use crate::rng::Rng;
 
@@ -225,8 +261,30 @@ impl Ef21Worker {
     /// Produce the compressed message for the current local gradient and
     /// update the local shift. Returns the message c = C(∇f − g).
     pub fn round(&mut self, grad: &[f64], c: &mut dyn Compressor, msg: &mut [f64]) {
-        let diff: Vec<f64> = grad.iter().zip(&self.g).map(|(a, b)| a - b).collect();
-        c.compress(&diff, msg);
+        let mut diff = vec![0.0; grad.len()];
+        self.round_with_scratch(grad, c, msg, &mut diff);
+    }
+
+    /// Like [`Ef21Worker::round`], but with a caller-provided scratch for
+    /// the difference vector ∇f − g, so the EF21 wrapper itself allocates
+    /// nothing per round (used by the per-lane reduction compression in
+    /// [`crate::parallel`]). Note the *inner* compressor may still
+    /// allocate internally — RandK's sampled support and TopK's index
+    /// scratch do today (see the ROADMAP item on allocation-free
+    /// compressor kernels).
+    pub fn round_with_scratch(
+        &mut self,
+        grad: &[f64],
+        c: &mut dyn Compressor,
+        msg: &mut [f64],
+        diff: &mut [f64],
+    ) {
+        debug_assert_eq!(diff.len(), grad.len(), "diff scratch length mismatch");
+        debug_assert_eq!(msg.len(), grad.len(), "msg buffer length mismatch");
+        for ((d, a), b) in diff.iter_mut().zip(grad).zip(&self.g) {
+            *d = a - b;
+        }
+        c.compress(diff, msg);
         for (gi, &m) in self.g.iter_mut().zip(msg.iter()) {
             *gi += m;
         }
@@ -406,6 +464,29 @@ mod tests {
                 "shift failed to converge at {i}"
             );
         }
+    }
+
+    #[test]
+    fn ef21_round_with_scratch_matches_round() {
+        let grad = vec_d(10);
+        let run_scratch = |use_scratch: bool| {
+            let mut w = Ef21Worker::new(10);
+            let mut c = RandK::contractive(3, 31);
+            let mut msg = vec![0.0; 10];
+            let mut diff = vec![0.0; 10];
+            for _ in 0..25 {
+                if use_scratch {
+                    w.round_with_scratch(&grad, &mut c, &mut msg, &mut diff);
+                } else {
+                    w.round(&grad, &mut c, &mut msg);
+                }
+            }
+            (w.g, msg)
+        };
+        let (g_a, m_a) = run_scratch(false);
+        let (g_b, m_b) = run_scratch(true);
+        assert_eq!(g_a, g_b);
+        assert_eq!(m_a, m_b);
     }
 
     #[test]

@@ -3,7 +3,26 @@
 //! Supports what training configs actually need: `[sections]`,
 //! `key = value` with string / integer / float / boolean / flat-array
 //! values, `#` comments. Values are addressed as `"section.key"`.
-//! CLI `--key value` pairs override file entries (see `cli`).
+//! CLI `--key value` pairs override file entries (see [`crate::cli`]).
+//!
+//! The training keys the `burtorch train` command reads are
+//! `train.steps`, `train.batch`, `train.lr`, `train.threads`,
+//! `train.lanes`, and `train.compress` (a
+//! [`crate::parallel::ReductionCompression`] spec such as `"randk:k=64"`),
+//! plus `model.hidden`, `data.names`, and `data.min_chars`.
+//!
+//! # Examples
+//!
+//! ```
+//! use burtorch::coordinator::Config;
+//!
+//! let cfg = Config::parse(
+//!     "[train]\nthreads = 4\ncompress = \"topk:k=32\"  # reduction edge",
+//! )
+//! .unwrap();
+//! assert_eq!(cfg.usize_or("train.threads", 1), 4);
+//! assert_eq!(cfg.str_or("train.compress", "none"), "topk:k=32");
+//! ```
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -333,6 +352,25 @@ min_chars = 50000
         assert_eq!(err2.line, 1);
         let err3 = Config::parse("x = \"oops\n").unwrap_err();
         assert_eq!(err3.line, 1);
+    }
+
+    #[test]
+    fn compress_key_feeds_the_reduction_compression_parser() {
+        use crate::parallel::ReductionCompression;
+        let c = Config::parse("[train]\ncompress = \"ef21:k=16\"").unwrap();
+        let spec = c.str_or("train.compress", "none");
+        assert_eq!(
+            ReductionCompression::parse(&spec, 9).unwrap(),
+            ReductionCompression::Ef21 { k: 16, seed: 9 }
+        );
+        // Overrides arrive as quoted strings (':' and '=' are not
+        // bare-word characters).
+        let mut c = Config::new();
+        c.set_str("train.compress", "\"randk:k=8\"").unwrap();
+        assert_eq!(
+            ReductionCompression::parse(&c.str_or("train.compress", "none"), 0).unwrap(),
+            ReductionCompression::RandK { k: 8, seed: 0 }
+        );
     }
 
     #[test]

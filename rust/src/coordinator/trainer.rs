@@ -4,17 +4,27 @@
 //! One *main* tape holds the authoritative parameters at its base. Each
 //! step the engine computes the per-sample oracles ∇f_i(x) of the batch
 //! with rewind-batching — sequentially on the main tape when
-//! `threads = 1`, or sharded across replica tapes when `threads > 1` —
-//! and combines them with a deterministic fixed-order tree reduction
-//! (see [`crate::parallel`]). Peak activation memory stays
-//! `W · max_i MEM(∇f_i)` for `W` workers, independent of batch size, and
-//! the numbers are bitwise identical for every thread count.
+//! `threads = 1`, or sharded across a persistent worker pool when
+//! `threads > 1` — and combines them with a deterministic fixed-order
+//! tree reduction (see [`crate::parallel`]), optionally compressed on the
+//! lane→tree edge ([`TrainerOptions::compression`]). Peak activation
+//! memory stays `W · max_i MEM(∇f_i)` for `W` workers, independent of
+//! batch size, and with compression off the numbers are bitwise identical
+//! for every thread count.
+//!
+//! By default each training run spawns its own pool (once, not per step);
+//! the `*_pooled` entry points accept a shared [`WorkerPool`] so
+//! back-to-back sessions reuse one set of threads.
+
+use std::sync::Arc;
 
 use crate::data::{BatchSampler, CharCorpus, Example};
 use crate::metrics::{mean_std, MemInfo, Timer};
 use crate::nn::{CeMode, CharMlp, Gpt, ParamRange};
 use crate::optim::Sgd;
-use crate::parallel::{MinibatchGradEngine, ParallelOptions, DEFAULT_LANES};
+use crate::parallel::{
+    MinibatchGradEngine, ParallelOptions, ReductionCompression, WorkerPool, DEFAULT_LANES,
+};
 use crate::scalar::Scalar;
 use crate::tape::{Mark, Tape, Value};
 
@@ -43,6 +53,11 @@ pub struct TrainerOptions {
     /// numeric spec — change it and the (still deterministic) rounding
     /// changes. Defaults to [`DEFAULT_LANES`].
     pub lanes: usize,
+    /// Lane→tree gradient compression. [`ReductionCompression::None`]
+    /// (default) keeps training bitwise identical to the dense engine;
+    /// the other modes are deterministic for a fixed seed and invariant
+    /// to the thread count, but change the optimizer trajectory.
+    pub compression: ReductionCompression,
 }
 
 impl Default for TrainerOptions {
@@ -57,6 +72,7 @@ impl Default for TrainerOptions {
             seed: 0,
             threads: 1,
             lanes: DEFAULT_LANES,
+            compression: ReductionCompression::None,
         }
     }
 }
@@ -89,26 +105,79 @@ impl Trainer {
         Trainer { opts }
     }
 
-    /// Train the §2.4 char MLP on example windows.
+    /// Train the §2.4 char MLP on example windows. Spawns a private
+    /// worker pool for the run when `threads > 1` (once, not per step).
     pub fn train_char_mlp<T: Scalar>(
         &self,
         tape: &mut Tape<T>,
         model: &CharMlp,
         examples: &[Example],
     ) -> TrainReport {
-        let ce = self.opts.ce;
-        self.run_loop(tape, model.base, model.params, examples.len(), &|tape, idx| {
-            let ex = &examples[idx];
-            model.loss(tape, &ex.context, ex.target, ce)
-        })
+        self.char_mlp_loop(tape, model, examples, None)
     }
 
-    /// Train the §2.5 GPT on corpus windows.
+    /// [`Trainer::train_char_mlp`] on a caller-provided persistent pool,
+    /// so back-to-back training sessions reuse one set of worker threads
+    /// (the pool must have at least `threads − 1` workers).
+    pub fn train_char_mlp_pooled<T: Scalar>(
+        &self,
+        tape: &mut Tape<T>,
+        model: &CharMlp,
+        examples: &[Example],
+        pool: &Arc<WorkerPool>,
+    ) -> TrainReport {
+        self.char_mlp_loop(tape, model, examples, Some(Arc::clone(pool)))
+    }
+
+    fn char_mlp_loop<T: Scalar>(
+        &self,
+        tape: &mut Tape<T>,
+        model: &CharMlp,
+        examples: &[Example],
+        pool: Option<Arc<WorkerPool>>,
+    ) -> TrainReport {
+        let ce = self.opts.ce;
+        self.run_loop(
+            tape,
+            model.base,
+            model.params,
+            examples.len(),
+            &|tape, idx| {
+                let ex = &examples[idx];
+                model.loss(tape, &ex.context, ex.target, ce)
+            },
+            pool,
+        )
+    }
+
+    /// Train the §2.5 GPT on corpus windows. Spawns a private worker pool
+    /// for the run when `threads > 1` (once, not per step).
     pub fn train_gpt<T: Scalar>(
         &self,
         tape: &mut Tape<T>,
         model: &Gpt,
         corpus: &CharCorpus,
+    ) -> TrainReport {
+        self.gpt_loop(tape, model, corpus, None)
+    }
+
+    /// [`Trainer::train_gpt`] on a caller-provided persistent pool.
+    pub fn train_gpt_pooled<T: Scalar>(
+        &self,
+        tape: &mut Tape<T>,
+        model: &Gpt,
+        corpus: &CharCorpus,
+        pool: &Arc<WorkerPool>,
+    ) -> TrainReport {
+        self.gpt_loop(tape, model, corpus, Some(Arc::clone(pool)))
+    }
+
+    fn gpt_loop<T: Scalar>(
+        &self,
+        tape: &mut Tape<T>,
+        model: &Gpt,
+        corpus: &CharCorpus,
+        pool: Option<Arc<WorkerPool>>,
     ) -> TrainReport {
         let ce = self.opts.ce;
         self.run_loop(
@@ -120,6 +189,7 @@ impl Trainer {
                 let (x, y) = corpus.window(w);
                 model.loss(tape, x, y, ce)
             },
+            pool,
         )
     }
 
@@ -133,6 +203,7 @@ impl Trainer {
         params: ParamRange,
         n_examples: usize,
         oracle: &F,
+        pool: Option<Arc<WorkerPool>>,
     ) -> TrainReport
     where
         F: Fn(&mut Tape<T>, usize) -> Value + Sync,
@@ -142,7 +213,7 @@ impl Trainer {
         let mut sampler = BatchSampler::new(n_examples, o.batch, o.seed);
         let mut opt = Sgd::new(d, o.lr, 0.0);
         let mut grad_acc = vec![0.0f64; d];
-        let mut engine = MinibatchGradEngine::new(
+        let mut engine = MinibatchGradEngine::with_pool(
             tape,
             base,
             params,
@@ -150,7 +221,9 @@ impl Trainer {
                 threads: o.threads,
                 lanes: o.lanes,
                 scratch_backward: o.scratch_backward,
+                compression: o.compression,
             },
+            pool,
         );
         let mut times = Vec::with_capacity(o.steps);
         let mut curve = Vec::new();
@@ -320,6 +393,41 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn compressed_training_is_deterministic_and_learns() {
+        // EF21 on the reduction edge changes the trajectory (vs dense) but
+        // must stay deterministic and still reduce the loss.
+        let ds = names_dataset(200, 16, 12);
+        let run = |compression: ReductionCompression, threads: usize| {
+            let mut tape = Tape::<f32>::new();
+            let mut rng = Rng::new(13);
+            let model = CharMlp::new(&mut tape, CharMlpConfig::paper(4), &mut rng);
+            let trainer = Trainer::new(TrainerOptions {
+                steps: 40,
+                batch: 8,
+                lr: 0.2,
+                log_every: 1,
+                threads,
+                compression,
+                ..Default::default()
+            });
+            trainer.train_char_mlp(&mut tape, &model, &ds.examples)
+        };
+        let ef21 = ReductionCompression::Ef21 { k: 64, seed: 0 };
+        let a = run(ef21, 2);
+        let b = run(ef21, 4);
+        for ((s1, l1), (s2, l2)) in a.loss_curve.iter().zip(&b.loss_curve) {
+            assert_eq!(s1, s2);
+            assert_eq!(l1.to_bits(), l2.to_bits(), "EF21 diverged at step {s1}");
+        }
+        let first = a.loss_curve.first().unwrap().1;
+        assert!(
+            a.final_loss < first,
+            "EF21 training must still learn: {first:.3} -> {:.3}",
+            a.final_loss
+        );
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! Uniform batch subsampling (paper Eq. 2: S ⊆ [n], |S| = b, u.a.r.).
+//! Uniform batch subsampling (paper Eq. 2: `S ⊆ [n]`, `|S| = b`, u.a.r.).
 
 use crate::rng::Rng;
 
@@ -13,7 +13,7 @@ pub struct Example {
 }
 
 /// SGD-NICE sampler: each call draws a fresh subset S of size b uniformly
-/// at random from all subsets of [n] (paper Eq. 2 / §4 on Prox-SGD).
+/// at random from all subsets of `[n]` (paper Eq. 2 / §4 on Prox-SGD).
 pub struct BatchSampler {
     n: usize,
     b: usize,

@@ -102,7 +102,7 @@ pub fn names_dataset(total_names: usize, block_size: usize, seed: u64) -> NamesD
 /// Order-2 character Markov chain fitted on the seed names — used only to
 /// extend the dataset to paper scale; statistics mimic real names.
 struct MarkovNames {
-    /// counts[prev2*27 + prev1][next] (27³ table, dense).
+    /// `counts[prev2*27 + prev1][next]` (27³ table, dense).
     counts: Vec<[u32; 27]>,
 }
 

@@ -4,6 +4,65 @@
 //! *BurTorch: Revisiting Training from First Principles by Coupling
 //! Autodiff, Math Optimization, and Systems* (Burlachenko & Richtárik, 2025).
 //!
+//! ## Architecture
+//!
+//! Training flows through four layers, bottom to top:
+//!
+//! 1. **[`tape`]** — the autodiff substrate: an append-only Wengert list
+//!    in structure-of-arrays form. Construction order *is* topological
+//!    order, so backward is one non-recursive reverse scan, and
+//!    [`Tape::mark`]/[`Tape::rewind`] discard a sample's activations in
+//!    O(1) while the parameters at the tape base survive.
+//! 2. **[`ops`] / [`nn`]** — op semantics and the scalar-granularity
+//!    layers (MLP, GPT) built from them, including the fused ILP-unrolled
+//!    dot kernels that share one fixed association
+//!    ([`ops::dot_ilp4`]).
+//! 3. **[`parallel`]** — the data-parallel minibatch gradient engine: a
+//!    persistent [`parallel::WorkerPool`] drives replica tapes through a
+//!    deterministic lane/tree reduction, with optional gradient
+//!    compression ([`parallel::ReductionCompression`]) on the lane→tree
+//!    edge.
+//! 4. **[`coordinator`]** — config parsing, the serialized-oracle SGD
+//!    loop ([`coordinator::Trainer`]), and the federated simulation.
+//!
+//! ## The zero-steady-state-allocation discipline
+//!
+//! Every per-step buffer in the hot path is allocated once and reused:
+//! tapes pre-allocate ([`Tape::with_capacity`], [`Tape::reserve`]) and are
+//! rewound rather than freed; backward scratch ([`tape::Scratch`]), lane
+//! buffers, chunk bounds, and compressor state live for the length of a
+//! run; worker threads are spawned once per run (or shared across runs)
+//! and re-synchronized with a reusable barrier. After a one-step warmup,
+//! training performs **zero heap allocations and zero thread spawns per
+//! step** — observable via [`Tape::capacities`] and asserted by the
+//! `steady_state_*` tests.
+//!
+//! ## Determinism guarantees
+//!
+//! Training is bitwise reproducible: the lane/tree reduction fixes the
+//! floating-point summation shape independently of the thread count, so a
+//! run's loss curve and final parameters are identical for 1, 2, or N
+//! threads, across repeated runs, and (with compression off) identical to
+//! the serial engine. Compressed reductions hold their RNG/error-feedback
+//! state per *lane*, not per thread, so they are equally deterministic
+//! for a fixed seed. See [`parallel`] for the full contract.
+//!
+//! ## Example
+//!
+//! ```
+//! use burtorch::tape::Tape;
+//!
+//! // g(a, b) = (a + b)² — eager construction, one reverse scan.
+//! let mut tape = Tape::<f64>::new();
+//! let a = tape.leaf(3.0);
+//! let b = tape.leaf(-1.0);
+//! let s = tape.add(a, b);
+//! let g = tape.sqr(s);
+//! tape.backward(g);
+//! assert_eq!(tape.value(g), 4.0);
+//! assert_eq!(tape.grad(a), 4.0); // ∂g/∂a = 2(a + b)
+//! ```
+//!
 //! The crate is organized exactly like the paper's system inventory
 //! (see DESIGN.md):
 //!
@@ -15,10 +74,12 @@
 //! - [`ops`] — op-level forward/backward semantics (paper Tables 8–10).
 //! - [`nn`] — Neuron/Linear/MLP/Embedding/LayerNorm/Attention/GPT built on
 //!   scalar nodes (paper §2.4, §2.5, Appendix F.1).
-//! - [`parallel`] — the data-parallel minibatch gradient engine: replica
-//!   tapes per worker (safe because the SoA tape is `Send`), rewind-batched
-//!   per-sample oracles, and a deterministic fixed-order lane/tree
-//!   reduction that is bitwise identical for 1, 2, or N threads.
+//! - [`parallel`] — the data-parallel minibatch gradient engine: a
+//!   persistent worker pool over replica tapes (safe because the SoA tape
+//!   is `Send`), rewind-batched per-sample oracles, a deterministic
+//!   fixed-order lane/tree reduction that is bitwise identical for 1, 2,
+//!   or N threads, and optional RandK/TopK/EF21 compression on the
+//!   reduction edge.
 //! - [`optim`] — SGD / momentum / AdamW / PAGE / prox-SGD (paper §4).
 //! - [`compress`] — RandK/TopK/RandSeqK compressors, EF21, MARINA (paper §4).
 //! - [`data`] — char-level tokenizers and the embedded corpora.

@@ -15,6 +15,7 @@ use burtorch::coordinator::{run_federated, Config, FedConfig, ModelKind, Trainer
 use burtorch::data::{names_dataset, CharCorpus};
 use burtorch::metrics::MemInfo;
 use burtorch::nn::{CeMode, CharMlp, CharMlpConfig, Gpt, GptConfig};
+use burtorch::parallel::ReductionCompression;
 use burtorch::rng::Rng;
 use burtorch::tape::{Builder, Tape};
 use burtorch::viz;
@@ -50,8 +51,11 @@ fn print_help() {
          COMMANDS:\n\
            train     --model mlp|gpt --steps N --batch B --lr G [--hidden E]\n\
                      [--threads W] [--lanes L] [--config file.toml]\n\
+                     [--compress none|randk:k=64|topk:k=64|ef21[:k=N]]\n\
                      [--scratch] [--composed-ce]\n\
-                     (--threads 0 = all cores; any W gives bitwise-identical runs)\n\
+                     (--threads 0 = all cores; any W gives bitwise-identical\n\
+                      runs with --compress none; compressed runs are\n\
+                      deterministic per seed and thread-invariant too)\n\
            fed       --clients N --rounds R --compressor identity|randk|topk\n\
            demo      [--small]   (Figure 1 / Figure 2 graphs + DOT)\n\
            sample    --steps N --tokens T   (train tiny GPT, then generate)\n\
@@ -74,6 +78,18 @@ fn trainer_options(cli: &Cli, cfg: &Config) -> TrainerOptions {
         }
         t => t as usize,
     };
+    let seed = cli.int_or("seed", 0) as u64;
+    // `--compress` (CLI) / `train.compress` (config): what compresses each
+    // lane buffer on the reduction edge. The training seed doubles as the
+    // base seed of the per-lane compression streams.
+    let spec = cli.opt_or("compress", &cfg.str_or("train.compress", "none"));
+    let compression = match ReductionCompression::parse(&spec, seed) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: --compress: {e}");
+            std::process::exit(2);
+        }
+    };
     TrainerOptions {
         steps: cli.int_or("steps", cfg.int_or("train.steps", 200)) as usize,
         batch: cli.int_or("batch", cfg.int_or("train.batch", 1)) as usize,
@@ -85,13 +101,14 @@ fn trainer_options(cli: &Cli, cfg: &Config) -> TrainerOptions {
         },
         scratch_backward: cli.has_flag("scratch"),
         log_every: cli.int_or("log-every", 10) as usize,
-        seed: cli.int_or("seed", 0) as u64,
+        seed,
         threads,
         lanes: cli.usize_or(
             "lanes",
             cfg.usize_or("train.lanes", burtorch::parallel::DEFAULT_LANES),
         )
         .max(1),
+        compression,
     }
 }
 
@@ -115,8 +132,8 @@ fn cmd_train(cli: &Cli) -> i32 {
         .unwrap_or(ModelKind::CharMlp);
     let trainer = Trainer::new(opts.clone());
     println!(
-        "training {kind:?}: steps={} batch={} lr={} threads={}",
-        opts.steps, opts.batch, opts.lr, opts.threads
+        "training {kind:?}: steps={} batch={} lr={} threads={} compress={}",
+        opts.steps, opts.batch, opts.lr, opts.threads, opts.compression
     );
     match kind {
         ModelKind::CharMlp => {

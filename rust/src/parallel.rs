@@ -1,5 +1,6 @@
-//! Data-parallel minibatch gradient engine: replica tapes + deterministic
-//! fixed-order tree reduction.
+//! Data-parallel minibatch gradient engine: a persistent worker pool over
+//! replica tapes, feeding a deterministic fixed-order tree reduction with
+//! optional gradient compression on the lane→tree edge.
 //!
 //! The serialized-oracle trainer (paper contribution 4) computes the
 //! per-sample oracles ∇f_i(x) of a minibatch strictly sequentially on one
@@ -10,6 +11,22 @@
 //! let it run rewind-batched oracles over its shard, and combine the
 //! shard sums at the end. No `Rc`-graph engine can do this (the graph is
 //! not `Send`); BurTorch's flat SoA tape is trivially `Send`.
+//!
+//! ## Persistent worker pool
+//!
+//! BurTorch's thesis is that per-step overheads dominate small graphs, so
+//! the engine must not reintroduce them: a [`WorkerPool`] spawns its OS
+//! threads **once** (per training run, or shared across runs) and drives
+//! every subsequent step through a reusable [`std::sync::Barrier`] — two
+//! barrier crossings per step, zero `clone`/`spawn`/`join` syscalls, zero
+//! heap allocation. The coordinator doubles as worker 0 between the two
+//! crossings, so `threads = N` uses exactly `N` cores.
+//!
+//! Worker `w` owns replica `w − 1` for the lifetime of the pool, and the
+//! replica's storage is **allocated on worker `w`'s own thread** (the
+//! deep copy in [`MinibatchGradEngine::with_pool`] and any growth during
+//! the first step both happen there), so first-touch page placement puts
+//! each replica on its worker's NUMA node instead of the coordinator's.
 //!
 //! ## Determinism contract
 //!
@@ -30,7 +47,7 @@
 //! never changes the lane's contents, and the tree never changes shape:
 //! results are bitwise identical for 1, 2, or N threads, across runs, and
 //! match the serial path (which is exactly this engine at `threads = 1`,
-//! running inline on the main tape with no replicas and no spawns).
+//! running inline on the main tape with no replicas and no pool).
 //!
 //! Per-sample gradients themselves are bitwise reproducible across
 //! replicas because [`crate::tape::Tape::clone_prefix`] copies the prefix
@@ -38,17 +55,42 @@
 //! identical node sequence on every tape, and every fused dot kernel uses
 //! one fixed ILP association (see [`crate::ops::dot_ilp4`]).
 //!
+//! ## Gradient compression on the lane→tree edge
+//!
+//! With compression off ([`ReductionCompression::None`], the default) the
+//! reduction moves dense `d`-float lane buffers and training is bitwise
+//! identical to the uncompressed engine. [`ParallelOptions::compression`]
+//! plugs the [`crate::compress`] operators into the reduction edge: after
+//! a lane finishes its fold (still on the worker that owns it), the lane
+//! buffer is replaced by its compressed image before entering the tree —
+//! RandK (unbiased, d/k-scaled), TopK (biased, largest-magnitude), or
+//! EF21 error feedback over contractive RandK. All compressor state —
+//! RNG streams and EF21 shifts — is held **per lane**, seeded from the
+//! lane index, so compressed runs inherit the full determinism contract:
+//! same seed ⇒ same bits, for any thread count. Losses are never
+//! compressed; the loss fold stays exact in every mode.
+//!
 //! ## Memory discipline
 //!
-//! Replicas and lane buffers are allocated once at engine construction;
-//! replica tapes grow to the per-sample activation peak during the first
-//! step (or up front via [`MinibatchGradEngine::reserve_activation`]) and
-//! are only rewound afterwards — the zero-heap-allocation steady state of
-//! the serial engine is preserved per worker. Peak activation memory is
-//! `W · max_i MEM(∇f_i)` for `W` workers, still independent of batch size.
+//! Replicas, lane buffers, chunk bounds and compressor state are
+//! allocated once at engine construction; replica tapes grow to the
+//! per-sample activation peak during the first step (or up front via
+//! [`MinibatchGradEngine::reserve_activation`]) and are only rewound
+//! afterwards — the zero-heap-allocation steady state of the serial
+//! engine is preserved per worker, and the pool dispatch itself performs
+//! no allocation. Peak activation memory is `W · max_i MEM(∇f_i)` for `W`
+//! workers, still independent of batch size. (The RandK/TopK operators
+//! currently allocate small index scratch internally per call; the
+//! default `None` path is allocation-free.)
 
+use std::cell::UnsafeCell;
+use std::fmt;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Barrier, Mutex};
 use std::thread;
 
+use crate::compress::{Compressor, Ef21Worker, RandK, TopK};
 use crate::nn::ParamRange;
 use crate::scalar::Scalar;
 use crate::tape::{Mark, Scratch, Tape, Value};
@@ -58,6 +100,359 @@ use crate::tape::{Mark, Scratch, Tape, Value};
 /// so threads divide lanes evenly, and small enough that lane buffers
 /// (`lanes · d` doubles) stay cheap for the Table 5/6 grid.
 pub const DEFAULT_LANES: usize = 16;
+
+// ---------------------------------------------------------------------------
+// Reduction compression config
+// ---------------------------------------------------------------------------
+
+/// What (if anything) compresses each lane's gradient buffer before it
+/// enters the tree reduction. See the module docs for placement and the
+/// determinism argument.
+///
+/// `None` is **part of the numeric spec**: it keeps training bitwise
+/// identical to the uncompressed engine. The other modes trade gradient
+/// fidelity for reduction bandwidth (`k ≪ d` nonzeros per lane instead
+/// of `d` floats), the federated-style local-worker scenario of paper §4.
+///
+/// # Examples
+///
+/// ```
+/// use burtorch::parallel::ReductionCompression;
+///
+/// assert_eq!(
+///     ReductionCompression::parse("randk:k=32", 7).unwrap(),
+///     ReductionCompression::RandK { k: 32, seed: 7 },
+/// );
+/// assert_eq!(
+///     ReductionCompression::parse("ef21", 0).unwrap(),
+///     ReductionCompression::Ef21 { k: 64, seed: 0 },
+/// );
+/// assert_eq!(
+///     ReductionCompression::parse("none", 3).unwrap(),
+///     ReductionCompression::None,
+/// );
+/// assert!(ReductionCompression::parse("zipk", 0).is_err());
+/// assert_eq!(ReductionCompression::TopK { k: 8 }.to_string(), "topk:k=8");
+/// ```
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReductionCompression {
+    /// Dense reduction — bitwise identical to the uncompressed engine.
+    None,
+    /// Unbiased RandK: keep `k` uniform coordinates per lane, scaled by
+    /// `d/k` so `E[C(g)] = g`. Per-lane RNG streams derive from `seed`.
+    RandK {
+        /// Kept coordinates per lane per step.
+        k: usize,
+        /// Base seed for the per-lane RNG streams.
+        seed: u64,
+    },
+    /// TopK: keep the `k` largest-magnitude coordinates per lane (biased;
+    /// input-deterministic, so no seed is involved).
+    TopK {
+        /// Kept coordinates per lane per step.
+        k: usize,
+    },
+    /// EF21 error feedback (Richtárik et al. 2024) over contractive
+    /// (unscaled) RandK: each lane maintains a shift `g_l` and sends
+    /// `g_l ← g_l + C(grad_l − g_l)` into the tree, so the compression
+    /// error is corrected over steps instead of accumulating.
+    Ef21 {
+        /// Kept coordinates per lane per step in the inner compressor.
+        k: usize,
+        /// Base seed for the per-lane RNG streams.
+        seed: u64,
+    },
+}
+
+impl ReductionCompression {
+    /// Default `k` when a spec omits it (`--compress randk` ≡ `randk:k=64`).
+    pub const DEFAULT_K: usize = 64;
+
+    /// Parse a CLI/config spec: `none`, `randk[:k=N]`, `topk[:k=N]`,
+    /// `ef21[:k=N]`. `seed` becomes the base seed of the seeded modes
+    /// (typically the training seed, so `--seed` governs both batch
+    /// sampling and compression streams).
+    pub fn parse(spec: &str, seed: u64) -> Result<ReductionCompression, String> {
+        let mut parts = spec.trim().split(':');
+        let name = parts.next().unwrap_or("").trim();
+        let mut k: Option<usize> = None;
+        for p in parts {
+            let p = p.trim();
+            if let Some(v) = p.strip_prefix("k=") {
+                let parsed: usize = v
+                    .parse()
+                    .map_err(|_| format!("bad k '{v}' in compress spec '{spec}'"))?;
+                if parsed == 0 {
+                    return Err(format!("k must be >= 1 in compress spec '{spec}'"));
+                }
+                k = Some(parsed);
+            } else {
+                return Err(format!(
+                    "unknown parameter '{p}' in compress spec '{spec}' (expected k=N)"
+                ));
+            }
+        }
+        match name {
+            "none" | "" => {
+                if k.is_some() {
+                    Err(format!("'none' takes no parameters (got '{spec}')"))
+                } else {
+                    Ok(ReductionCompression::None)
+                }
+            }
+            "randk" => Ok(ReductionCompression::RandK {
+                k: k.unwrap_or(Self::DEFAULT_K),
+                seed,
+            }),
+            "topk" => Ok(ReductionCompression::TopK {
+                k: k.unwrap_or(Self::DEFAULT_K),
+            }),
+            "ef21" => Ok(ReductionCompression::Ef21 {
+                k: k.unwrap_or(Self::DEFAULT_K),
+                seed,
+            }),
+            other => Err(format!(
+                "unknown compressor '{other}' (expected none|randk|topk|ef21)"
+            )),
+        }
+    }
+}
+
+impl fmt::Display for ReductionCompression {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ReductionCompression::None => write!(f, "none"),
+            ReductionCompression::RandK { k, .. } => write!(f, "randk:k={k}"),
+            ReductionCompression::TopK { k } => write!(f, "topk:k={k}"),
+            ReductionCompression::Ef21 { k, .. } => write!(f, "ef21:k={k}"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Persistent worker pool
+// ---------------------------------------------------------------------------
+
+/// A lifetime-erased pointer to the current step's job. Published by the
+/// coordinator strictly before the step's first barrier crossing and read
+/// by workers strictly after it, so the barrier provides the necessary
+/// happens-before edge; the second crossing guarantees the referent is
+/// still alive for every dereference.
+#[derive(Clone, Copy)]
+struct ErasedJob(*const (dyn Fn(usize) + Sync));
+
+// SAFETY: the pointer is only dereferenced between the two barrier
+// crossings of the step that published it, while the referent (a stack
+// closure in `WorkerPool::run`) is provably alive.
+unsafe impl Send for ErasedJob {}
+unsafe impl Sync for ErasedJob {}
+
+/// Erase the job's lifetime so it can sit in the pool's shared slot.
+///
+/// # Safety
+/// The caller must not let workers dereference the result after the
+/// referent dies — upheld by the end-of-step barrier in [`WorkerPool::run`].
+unsafe fn erase_job<'a>(job: &'a (dyn Fn(usize) + Sync + 'a)) -> ErasedJob {
+    ErasedJob(std::mem::transmute::<
+        *const (dyn Fn(usize) + Sync + 'a),
+        *const (dyn Fn(usize) + Sync + 'static),
+    >(job as *const (dyn Fn(usize) + Sync + 'a)))
+}
+
+/// The shared slot the coordinator publishes each step's job into.
+struct JobCell(UnsafeCell<Option<ErasedJob>>);
+
+// SAFETY: writes (coordinator) and reads (workers) are separated by
+// barrier crossings — never concurrent.
+unsafe impl Sync for JobCell {}
+
+/// A propagatable panic payload (what [`catch_unwind`] returns).
+type PanicPayload = Box<dyn std::any::Any + Send + 'static>;
+
+struct PoolShared {
+    /// `workers + 1` participants (the coordinator is one of them); used
+    /// twice per step: release into the job, then wait for completion.
+    barrier: Barrier,
+    job: JobCell,
+    shutdown: AtomicBool,
+    /// First worker panic of the current step, payload preserved so the
+    /// coordinator can re-raise it (matching what `std::thread::scope`
+    /// would have done).
+    panic: Mutex<Option<PanicPayload>>,
+}
+
+/// A persistent pool of worker threads driven by a reusable step barrier.
+///
+/// Threads are spawned once (in [`WorkerPool::new`]) and live until the
+/// pool is dropped; each [`WorkerPool::run`] call is one *step*: the job
+/// closure is invoked with worker index `0` on the calling thread (the
+/// coordinator doubles as worker 0) and with indices `1..=workers` on the
+/// pool threads, concurrently. `run` returns only after every index
+/// finished, so the job may borrow stack data. Steady-state steps perform
+/// **zero thread spawns and zero heap allocations** — the per-step cost is
+/// two barrier crossings.
+///
+/// The pool is engine-agnostic (jobs are plain `Fn(usize)`), so one pool
+/// can be shared across several [`MinibatchGradEngine`]s or back-to-back
+/// training runs — see [`MinibatchGradEngine::with_pool`].
+///
+/// A worker index identifies the same OS thread for the pool's lifetime,
+/// which is what makes first-touch NUMA placement of per-worker state
+/// (replica tapes) meaningful.
+///
+/// # Examples
+///
+/// ```
+/// use std::sync::atomic::{AtomicUsize, Ordering};
+/// use burtorch::parallel::WorkerPool;
+///
+/// let pool = WorkerPool::new(3);
+/// assert_eq!(pool.workers(), 3);
+/// let sum = AtomicUsize::new(0);
+/// // Indices 0 (coordinator) through 3 all run the job: 0+1+2+3 = 6.
+/// pool.run(&|w| {
+///     sum.fetch_add(w, Ordering::Relaxed);
+/// });
+/// assert_eq!(sum.load(Ordering::Relaxed), 6);
+/// // The same pool serves any number of steps without respawning.
+/// pool.run(&|_| {});
+/// ```
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    handles: Vec<thread::JoinHandle<()>>,
+    /// Serializes steps: one `run` at a time may drive the barrier.
+    gate: Mutex<()>,
+}
+
+impl WorkerPool {
+    /// Spawn `workers` long-lived threads. `workers = 0` is valid: the
+    /// pool degenerates to running jobs inline on the caller (index 0).
+    pub fn new(workers: usize) -> WorkerPool {
+        let shared = Arc::new(PoolShared {
+            barrier: Barrier::new(workers + 1),
+            job: JobCell(UnsafeCell::new(None)),
+            shutdown: AtomicBool::new(false),
+            panic: Mutex::new(None),
+        });
+        let handles = (1..=workers)
+            .map(|w| {
+                let shared = Arc::clone(&shared);
+                thread::Builder::new()
+                    .name(format!("burtorch-pool-{w}"))
+                    .spawn(move || worker_loop(&shared, w))
+                    .expect("failed to spawn pool worker")
+            })
+            .collect();
+        WorkerPool {
+            shared,
+            handles,
+            gate: Mutex::new(()),
+        }
+    }
+
+    /// Number of pool threads (excluding the coordinator).
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Run one step: `job(0)` on the calling thread, `job(w)` for
+    /// `w ∈ 1..=workers` on the pool threads, all concurrently. Returns
+    /// after every invocation completed. If any invocation panicked, the
+    /// step fully drains (keeping the pool reusable) and the original
+    /// panic payload is re-raised on the caller — the same surfacing
+    /// `std::thread::scope` would give.
+    pub fn run<F: Fn(usize) + Sync>(&self, job: &F) {
+        if self.handles.is_empty() {
+            job(0);
+            return;
+        }
+        let _step = self.gate.lock().unwrap_or_else(|e| e.into_inner());
+        // SAFETY: the job outlives the step — both barrier crossings below
+        // happen before `run` returns, and workers only dereference the
+        // slot between them.
+        unsafe { *self.shared.job.0.get() = Some(erase_job(job)) };
+        self.shared.barrier.wait(); // release workers into the step
+        let local = catch_unwind(AssertUnwindSafe(|| job(0)));
+        self.shared.barrier.wait(); // all workers done; job borrows end here
+        // SAFETY: workers are parked at the next step's first barrier —
+        // nobody reads the slot until the next publish.
+        unsafe { *self.shared.job.0.get() = None };
+        // Drain the worker slot unconditionally so a payload can never
+        // leak into a later step, then re-raise (coordinator's own panic
+        // takes precedence).
+        let worker_panic = self
+            .shared
+            .panic
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .take();
+        if let Err(p) = local {
+            resume_unwind(p);
+        }
+        if let Some(p) = worker_panic {
+            resume_unwind(p);
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        if self.handles.is_empty() {
+            return;
+        }
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        // Complete one release-crossing so parked workers observe shutdown.
+        self.shared.barrier.wait();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &PoolShared, index: usize) {
+    loop {
+        shared.barrier.wait();
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        // SAFETY: published before the crossing we just passed; alive
+        // until the completion crossing below.
+        let job = unsafe { *shared.job.0.get() }.expect("pool step without a published job");
+        let ran = catch_unwind(AssertUnwindSafe(|| {
+            let job: &(dyn Fn(usize) + Sync) = unsafe { &*job.0 };
+            job(index);
+        }));
+        if let Err(payload) = ran {
+            // Keep the first payload; later ones are dropped (matching
+            // `std::thread::scope`, which also re-raises one).
+            let mut slot = shared.panic.lock().unwrap_or_else(|e| e.into_inner());
+            slot.get_or_insert(payload);
+        }
+        shared.barrier.wait();
+    }
+}
+
+/// A raw pointer that may cross threads. Used to hand each pool worker
+/// exclusive access to *its* element of an engine-owned buffer; the
+/// disjointness argument lives at each use site.
+struct PtrSend<P>(*mut P);
+
+// Manual impls: `derive` would add a `P: Clone`/`P: Copy` bound, but the
+// pointer is Copy regardless of the pointee.
+impl<P> Clone for PtrSend<P> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<P> Copy for PtrSend<P> {}
+
+// SAFETY: every use derives disjoint &mut regions per worker index.
+unsafe impl<P> Send for PtrSend<P> {}
+unsafe impl<P> Sync for PtrSend<P> {}
+
+// ---------------------------------------------------------------------------
+// Engine
+// ---------------------------------------------------------------------------
 
 /// Engine configuration.
 #[derive(Clone, Copy, Debug)]
@@ -71,6 +466,9 @@ pub struct ParallelOptions {
     /// Use `backwardWithScratchStorage` instead of `backward_above`
     /// (each worker owns a private [`Scratch`]).
     pub scratch_backward: bool,
+    /// Lane→tree compression. [`ReductionCompression::None`] (default)
+    /// keeps training bitwise identical to the uncompressed engine.
+    pub compression: ReductionCompression,
 }
 
 impl Default for ParallelOptions {
@@ -79,6 +477,7 @@ impl Default for ParallelOptions {
             threads: 1,
             lanes: DEFAULT_LANES,
             scratch_backward: false,
+            compression: ReductionCompression::None,
         }
     }
 }
@@ -86,50 +485,211 @@ impl Default for ParallelOptions {
 /// Per-step statistics returned by [`MinibatchGradEngine::accumulate`].
 #[derive(Clone, Copy, Debug)]
 pub struct StepStats {
-    /// Tree-reduced sum of per-sample losses (caller divides by b).
+    /// Tree-reduced sum of per-sample losses (caller divides by b). The
+    /// loss fold is exact in every compression mode.
     pub loss_sum: f64,
     /// Max tape length observed across all workers (activation proxy).
     pub peak_nodes: usize,
 }
 
-/// One reduction lane: a flat gradient accumulator plus its loss fold.
+/// Per-lane compression state. Held by the lane — not the worker — so the
+/// stream a lane consumes is independent of which thread computes it.
+struct LaneCompress {
+    op: LaneCompressor,
+    /// Compressed-message scratch (d floats, allocated once).
+    msg: Vec<f64>,
+}
+
+enum LaneCompressor {
+    RandK(RandK),
+    TopK(TopK),
+    Ef21 {
+        inner: RandK,
+        state: Ef21Worker,
+        /// Difference-vector scratch for the allocation-free EF21 round.
+        diff: Vec<f64>,
+    },
+}
+
+impl LaneCompress {
+    fn new(cfg: ReductionCompression, lane: usize, d: usize) -> Option<LaneCompress> {
+        // Per-lane streams: decorrelate lanes from one base seed with a
+        // splitmix-style odd multiplier. The mapping depends only on the
+        // lane index, never on thread assignment.
+        let lane_seed = |seed: u64| seed ^ (lane as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let op = match cfg {
+            ReductionCompression::None => return None,
+            ReductionCompression::RandK { k, seed } => {
+                LaneCompressor::RandK(RandK::new(k, lane_seed(seed)))
+            }
+            ReductionCompression::TopK { k } => LaneCompressor::TopK(TopK { k }),
+            ReductionCompression::Ef21 { k, seed } => LaneCompressor::Ef21 {
+                inner: RandK::contractive(k, lane_seed(seed)),
+                state: Ef21Worker::new(d),
+                diff: vec![0.0; d],
+            },
+        };
+        Some(LaneCompress {
+            op,
+            msg: vec![0.0; d],
+        })
+    }
+
+    /// Replace `grad` by its compressed image (EF21: by the updated shift,
+    /// which is the lane's contribution to the EF21 gradient estimate).
+    fn apply(&mut self, grad: &mut [f64]) {
+        match &mut self.op {
+            LaneCompressor::RandK(c) => {
+                c.compress(grad, &mut self.msg);
+                grad.copy_from_slice(&self.msg);
+            }
+            LaneCompressor::TopK(c) => {
+                c.compress(grad, &mut self.msg);
+                grad.copy_from_slice(&self.msg);
+            }
+            LaneCompressor::Ef21 { inner, state, diff } => {
+                state.round_with_scratch(grad, inner, &mut self.msg, diff);
+                grad.copy_from_slice(&state.g);
+            }
+        }
+    }
+}
+
+/// One reduction lane: a flat gradient accumulator plus its loss fold and
+/// (optionally) its compression state.
 struct Lane {
     grad: Vec<f64>,
     loss: f64,
     peak_nodes: usize,
+    compress: Option<LaneCompress>,
 }
 
 /// The data-parallel minibatch gradient engine. See module docs.
+///
+/// # Examples
+///
+/// ```
+/// use burtorch::nn::ParamRange;
+/// use burtorch::parallel::{MinibatchGradEngine, ParallelOptions};
+/// use burtorch::tape::Tape;
+///
+/// let mut tape = Tape::<f64>::new();
+/// let first = tape.leaves(&[0.5, -0.25]);
+/// let params = ParamRange { first, len: 2 };
+/// let base = tape.mark();
+/// let mut engine = MinibatchGradEngine::new(
+///     &tape,
+///     base,
+///     params,
+///     ParallelOptions { threads: 2, ..Default::default() },
+/// );
+/// // Per-sample oracle: f_i(w) = ⟨w, (1, i)⟩².
+/// let oracle = |t: &mut Tape<f64>, i: usize| {
+///     let x0 = t.leaves(&[1.0, i as f64]);
+///     let p = t.dot_range(x0, first, 2);
+///     t.sqr(p)
+/// };
+/// let mut grad = vec![0.0; 2];
+/// let stats = engine.accumulate(&mut tape, &[0, 1, 2, 3], &oracle, &mut grad);
+/// assert!(stats.loss_sum > 0.0);
+/// ```
 pub struct MinibatchGradEngine<T: Scalar> {
     threads: usize,
     lanes: usize,
     scratch_backward: bool,
     base: Mark,
     params: ParamRange,
+    /// The persistent pool driving workers `1..threads` (None when
+    /// `threads == 1`). May be shared with other engines / runs.
+    pool: Option<Arc<WorkerPool>>,
     /// Replica tapes for workers 1..threads (worker 0 is the coordinator
-    /// thread driving the caller's main tape).
+    /// thread driving the caller's main tape). Replica `w − 1` is always
+    /// run — and was allocated — by pool worker `w`.
     replicas: Vec<Tape<T>>,
     /// One scratch per worker (index 0 = coordinator).
     scratches: Vec<Scratch>,
     lane_bufs: Vec<Lane>,
+    /// Reusable per-step chunk bounds (`workers + 1` entries) so the
+    /// dispatch allocates nothing in steady state.
+    bounds: Vec<usize>,
+    /// Staging buffer for the per-step parameter broadcast: the
+    /// coordinator snapshots the authoritative values here once, and each
+    /// worker copies *its own* replica's parameter range from it at the
+    /// top of the step — the writes into replica pages stay on the node
+    /// that first-touched them, and the copies overlap across workers
+    /// instead of serializing on the coordinator.
+    param_stage: Vec<T>,
 }
 
 impl<T: Scalar> MinibatchGradEngine<T> {
     /// Build an engine over a model whose parameters live in `params` at
     /// the base of `tape`, with `base` the post-construction mark (every
     /// node below it must be a leaf — the same precondition as
-    /// `backward_above`). Allocates `threads − 1` replica tapes and
-    /// `lanes` gradient buffers of `params.len` doubles.
+    /// `backward_above`). Spawns a private [`WorkerPool`] of `threads − 1`
+    /// workers (none for the serial path) and allocates `lanes` gradient
+    /// buffers of `params.len` doubles. To share one pool across several
+    /// engines or training runs, use [`MinibatchGradEngine::with_pool`].
     pub fn new(tape: &Tape<T>, base: Mark, params: ParamRange, opts: ParallelOptions) -> Self {
+        Self::with_pool(tape, base, params, opts, None)
+    }
+
+    /// Like [`MinibatchGradEngine::new`], but running on a caller-provided
+    /// persistent pool (`None` spawns a private one when `threads > 1`).
+    /// The pool must have at least `threads − 1` workers; a larger pool is
+    /// fine — the surplus workers idle through each step's barrier.
+    ///
+    /// Replica tapes are deep-copied **on their owning worker threads**,
+    /// not on the coordinator: worker `w` performs the `clone_prefix` for
+    /// replica `w − 1`, so first-touch page placement puts every replica's
+    /// SoA storage on the NUMA node of the thread that will run it for the
+    /// lifetime of the pool (ROADMAP: NUMA first-touch item).
+    pub fn with_pool(
+        tape: &Tape<T>,
+        base: Mark,
+        params: ParamRange,
+        opts: ParallelOptions,
+        pool: Option<Arc<WorkerPool>>,
+    ) -> Self {
         let threads = opts.threads.max(1);
         let lanes = opts.lanes.max(1);
-        let replicas: Vec<Tape<T>> = (1..threads).map(|_| tape.clone_prefix(base)).collect();
+        let pool = if threads > 1 {
+            let pool = pool.unwrap_or_else(|| Arc::new(WorkerPool::new(threads - 1)));
+            assert!(
+                pool.workers() + 1 >= threads,
+                "pool has {} workers but threads = {threads} needs at least {}",
+                pool.workers(),
+                threads - 1
+            );
+            Some(pool)
+        } else {
+            None
+        };
+
+        // Replica construction runs as a pool step so each deep copy
+        // executes on the worker thread that owns the replica: the copy's
+        // writes fault the pages in on that worker's NUMA node (first
+        // touch), and the worker→replica mapping is fixed for the pool's
+        // lifetime, so the locality persists across training steps.
+        let mut replicas: Vec<Tape<T>> = (1..threads).map(|_| Tape::new()).collect();
+        if let Some(pool) = &pool {
+            let n_rep = replicas.len();
+            let rep = PtrSend(replicas.as_mut_ptr());
+            let src: &Tape<T> = tape;
+            pool.run(&|w| {
+                if (1..=n_rep).contains(&w) {
+                    // SAFETY: worker w writes slot w-1 only — disjoint.
+                    unsafe { *rep.0.add(w - 1) = src.clone_prefix(base) };
+                }
+            });
+        }
+
         let scratches: Vec<Scratch> = (0..threads).map(|_| Scratch::new()).collect();
         let lane_bufs: Vec<Lane> = (0..lanes)
-            .map(|_| Lane {
+            .map(|l| Lane {
                 grad: vec![0.0; params.len],
                 loss: 0.0,
                 peak_nodes: 0,
+                compress: LaneCompress::new(opts.compression, l, params.len),
             })
             .collect();
         MinibatchGradEngine {
@@ -138,9 +698,16 @@ impl<T: Scalar> MinibatchGradEngine<T> {
             scratch_backward: opts.scratch_backward,
             base,
             params,
+            pool,
             replicas,
             scratches,
             lane_bufs,
+            bounds: Vec::with_capacity(threads + 1),
+            param_stage: if threads > 1 {
+                vec![T::ZERO; params.len]
+            } else {
+                Vec::new()
+            },
         }
     }
 
@@ -154,16 +721,39 @@ impl<T: Scalar> MinibatchGradEngine<T> {
         self.lanes
     }
 
+    /// The persistent pool this engine dispatches on (`None` for the
+    /// serial path). Clone the `Arc` to share it with another engine.
+    pub fn worker_pool(&self) -> Option<&Arc<WorkerPool>> {
+        self.pool.as_ref()
+    }
+
     /// Pre-size every replica (and every scratch) for a per-sample
     /// activation peak of `nodes` tape nodes and `aux` argument-pool
     /// entries, so even the *first* step allocates nothing in the worker
-    /// loops.
+    /// loops. Like construction, the replica growth runs on each replica's
+    /// owning worker thread to preserve first-touch placement.
     pub fn reserve_activation(&mut self, nodes: usize, aux: usize) {
-        for r in &mut self.replicas {
-            r.reserve(nodes, aux);
-        }
-        for s in &mut self.scratches {
-            s.reserve(self.base.node_count() + nodes);
+        let scratch_nodes = self.base.node_count() + nodes;
+        if let Some(pool) = self.pool.clone() {
+            let n_rep = self.replicas.len();
+            let rep = PtrSend(self.replicas.as_mut_ptr());
+            let scr = PtrSend(self.scratches.as_mut_ptr());
+            pool.run(&|w| {
+                if (1..=n_rep).contains(&w) {
+                    // SAFETY: worker w touches replica w-1 / scratch w only.
+                    unsafe {
+                        (*rep.0.add(w - 1)).reserve(nodes, aux);
+                        (*scr.0.add(w)).reserve(scratch_nodes);
+                    }
+                } else if w == 0 {
+                    // SAFETY: index 0 is this (coordinator) thread's scratch.
+                    unsafe { (*scr.0).reserve(scratch_nodes) };
+                }
+            });
+        } else {
+            for s in &mut self.scratches {
+                s.reserve(scratch_nodes);
+            }
         }
     }
 
@@ -174,9 +764,10 @@ impl<T: Scalar> MinibatchGradEngine<T> {
     }
 
     /// Compute the **sum** (not mean) of ∇f_i over `batch` into
-    /// `grad_out`, using the deterministic lane/tree reduction. `oracle`
-    /// builds one sample's loss on whatever tape it is handed — it runs
-    /// concurrently on replica tapes, so it must not mutate shared state.
+    /// `grad_out`, using the deterministic lane/tree reduction (with the
+    /// configured lane compression, if any). `oracle` builds one sample's
+    /// loss on whatever tape it is handed — it runs concurrently on
+    /// replica tapes, so it must not mutate shared state.
     ///
     /// `tape` is the main tape holding the authoritative parameters; its
     /// current values are synced into every replica before the shards
@@ -200,95 +791,78 @@ impl<T: Scalar> MinibatchGradEngine<T> {
         let params = self.params;
         let use_scratch = self.scratch_backward;
 
-        // Disjoint field borrows, split once so the scoped-thread closures
-        // capture plain locals.
-        let lane_bufs: &mut [Lane] = &mut self.lane_bufs[..lanes_used];
-        let replicas: &mut [Tape<T>] = &mut self.replicas;
-        let scratches: &mut [Scratch] = &mut self.scratches;
-
         // Reset the lanes that will run this step.
-        for lane in lane_bufs.iter_mut() {
+        for lane in self.lane_bufs[..lanes_used].iter_mut() {
             lane.grad.iter_mut().for_each(|g| *g = 0.0);
             lane.loss = 0.0;
             lane.peak_nodes = 0;
         }
 
         if workers == 1 {
-            // Serial path: identical lane structure, no replicas, no
-            // spawns — this *is* the reference numeric behavior.
+            // Serial path: identical lane structure, no replicas, no pool
+            // crossings — this *is* the reference numeric behavior.
             run_lanes(
                 tape,
-                &mut scratches[0],
+                &mut self.scratches[0],
                 base,
                 params,
                 batch,
                 lanes_used,
                 0,
-                lane_bufs,
+                &mut self.lane_bufs[..lanes_used],
                 oracle,
                 use_scratch,
             );
         } else {
-            // Sync authoritative parameter values into the replicas that
-            // will actually run (workers − 1 of them; the coordinator
-            // drives the main tape).
-            let src = tape.values_range(params.first, params.len);
-            for r in replicas[..workers - 1].iter_mut() {
-                r.copy_values_from(params.first, src);
-            }
+            // Broadcast the authoritative parameter values: snapshot them
+            // into the staging buffer once, and let each worker copy its
+            // own replica's range at the top of the step. The replica
+            // writes happen on the thread that first-touched the pages
+            // (locality preserved) and overlap across workers instead of
+            // serializing on the coordinator. The stage is immutable for
+            // the whole step, so workers can read it while the coordinator
+            // mutates the main tape.
+            self.param_stage
+                .copy_from_slice(tape.values_range(params.first, params.len));
 
             // Contiguous lane chunks per worker: worker w owns lanes
             // [w·L/W, (w+1)·L/W). The assignment affects scheduling only,
-            // never lane contents.
-            let bounds: Vec<usize> = (0..=workers).map(|w| w * lanes_used / workers).collect();
-            let mut chunks: Vec<&mut [Lane]> = Vec::with_capacity(workers);
-            let mut rest: &mut [Lane] = lane_bufs;
-            for w in 0..workers {
-                let take = bounds[w + 1] - bounds[w];
-                let (head, tail) = rest.split_at_mut(take);
-                chunks.push(head);
-                rest = tail;
-            }
+            // never lane contents. `bounds` is reused across steps.
+            self.bounds.clear();
+            self.bounds.extend((0..=workers).map(|w| w * lanes_used / workers));
 
-            let (scratch0, scratch_rest) = scratches.split_at_mut(1);
-            let mut chunk_iter = chunks.into_iter();
-            let main_chunk = chunk_iter.next().expect("workers >= 1");
-
-            thread::scope(|s| {
-                for (w, ((chunk, replica), scratch)) in chunk_iter
-                    .zip(replicas.iter_mut())
-                    .zip(scratch_rest.iter_mut())
-                    .enumerate()
-                {
-                    let lane0 = bounds[w + 1];
-                    s.spawn(move || {
-                        run_lanes(
-                            replica,
-                            scratch,
-                            base,
-                            params,
-                            batch,
-                            lanes_used,
-                            lane0,
-                            chunk,
-                            oracle,
-                            use_scratch,
-                        );
-                    });
+            let pool = Arc::clone(self.pool.as_ref().expect("threads > 1 requires a pool"));
+            let bounds: &[usize] = &self.bounds;
+            let stage: &[T] = &self.param_stage;
+            let lane_ptr = PtrSend(self.lane_bufs.as_mut_ptr());
+            let rep_ptr = PtrSend(self.replicas.as_mut_ptr());
+            let scr_ptr = PtrSend(self.scratches.as_mut_ptr());
+            let main_ptr = PtrSend(tape as *mut Tape<T>);
+            pool.run(&|w| {
+                if w >= workers {
+                    return; // surplus pool worker this step
                 }
-                // The coordinator doubles as worker 0 on the main tape.
-                run_lanes(
-                    tape,
-                    &mut scratch0[0],
-                    base,
-                    params,
-                    batch,
-                    lanes_used,
-                    0,
-                    main_chunk,
-                    oracle,
-                    use_scratch,
-                );
+                let (lo, hi) = (bounds[w], bounds[w + 1]);
+                // SAFETY: worker w exclusively owns the main tape (w == 0,
+                // and index 0 runs on the coordinator thread that holds the
+                // &mut) or replica w-1; scratch w; and lanes [lo, hi) — all
+                // index-disjoint across workers, all outliving the step
+                // because `run` returns only after every worker finished.
+                unsafe {
+                    let wtape: &mut Tape<T> = if w == 0 {
+                        &mut *main_ptr.0
+                    } else {
+                        let replica = &mut *rep_ptr.0.add(w - 1);
+                        replica.copy_values_from(params.first, stage);
+                        replica
+                    };
+                    let scratch = &mut *scr_ptr.0.add(w);
+                    let chunk = std::slice::from_raw_parts_mut(lane_ptr.0.add(lo), hi - lo);
+                    run_lanes(
+                        wtape, scratch, base, params, batch, lanes_used, lo, chunk, oracle,
+                        use_scratch,
+                    );
+                }
             });
         }
 
@@ -324,7 +898,9 @@ impl<T: Scalar> MinibatchGradEngine<T> {
 /// Run the lanes `[lane0, lane0 + lanes.len())` of the current step on
 /// one tape: for every owned batch slot, build the sample loss, fold it
 /// into the lane, backprop, fold the parameter gradient run into the lane
-/// buffer, rewind. `lanes_total` fixes the slot partition.
+/// buffer, rewind; then (if configured) compress the finished lane buffer
+/// in place, still on the thread that owns the lane this step.
+/// `lanes_total` fixes the slot partition.
 #[allow(clippy::too_many_arguments)]
 fn run_lanes<T: Scalar, F>(
     tape: &mut Tape<T>,
@@ -359,12 +935,16 @@ fn run_lanes<T: Scalar, F>(
             lane.peak_nodes = lane.peak_nodes.max(tape.len());
             tape.rewind(base);
         }
+        if let Some(cs) = lane.compress.as_mut() {
+            cs.apply(&mut lane.grad);
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::AtomicUsize;
 
     /// Tiny least-squares model: params w ∈ R^4 at the tape base,
     /// f_i(w) = (⟨w, x_i⟩ − y_i)² over a fixed synthetic dataset.
@@ -405,21 +985,67 @@ mod tests {
         }
     }
 
-    fn grad_with_threads(threads: usize, batch: &[usize]) -> (Vec<f64>, f64) {
+    fn grad_with_opts(opts: ParallelOptions, batch: &[usize]) -> (Vec<f64>, f64) {
         let prob = LsqProblem::new(64);
         let (mut tape, base, params) = prob.setup();
-        let mut engine = MinibatchGradEngine::new(
-            &tape,
-            base,
-            params,
+        let mut engine = MinibatchGradEngine::new(&tape, base, params, opts);
+        let mut grad = vec![0.0; params.len];
+        let stats = engine.accumulate(&mut tape, batch, &prob.oracle(), &mut grad);
+        (grad, stats.loss_sum)
+    }
+
+    fn grad_with_threads(threads: usize, batch: &[usize]) -> (Vec<f64>, f64) {
+        grad_with_opts(
             ParallelOptions {
                 threads,
                 ..Default::default()
             },
-        );
-        let mut grad = vec![0.0; params.len];
-        let stats = engine.accumulate(&mut tape, batch, &prob.oracle(), &mut grad);
-        (grad, stats.loss_sum)
+            batch,
+        )
+    }
+
+    #[test]
+    fn worker_pool_runs_every_index_each_step() {
+        let pool = WorkerPool::new(4);
+        for _ in 0..5 {
+            let mask = AtomicUsize::new(0);
+            pool.run(&|w| {
+                mask.fetch_or(1 << w, Ordering::SeqCst);
+            });
+            assert_eq!(mask.load(Ordering::SeqCst), 0b11111);
+        }
+    }
+
+    #[test]
+    fn worker_pool_with_zero_workers_runs_inline() {
+        let pool = WorkerPool::new(0);
+        let hits = AtomicUsize::new(0);
+        pool.run(&|w| {
+            assert_eq!(w, 0);
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn worker_pool_survives_a_panicking_job() {
+        let pool = WorkerPool::new(2);
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(&|w| {
+                if w == 1 {
+                    panic!("boom");
+                }
+            });
+        }));
+        let payload = caught.expect_err("worker panic must surface on the caller");
+        // The original payload is preserved, not replaced by a generic one.
+        assert_eq!(payload.downcast_ref::<&str>(), Some(&"boom"));
+        // The pool remains usable for further steps and drops cleanly.
+        let hits = AtomicUsize::new(0);
+        pool.run(&|_| {
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 3);
     }
 
     #[test]
@@ -448,6 +1074,59 @@ mod tests {
     }
 
     #[test]
+    fn steps_reuse_the_same_pool_without_respawning() {
+        // Many accumulate calls on one engine must keep driving the same
+        // pool object (steady-state steps never spawn threads).
+        let prob = LsqProblem::new(32);
+        let (mut tape, base, params) = prob.setup();
+        let mut engine = MinibatchGradEngine::new(
+            &tape,
+            base,
+            params,
+            ParallelOptions {
+                threads: 3,
+                ..Default::default()
+            },
+        );
+        let pool_ptr = Arc::as_ptr(engine.worker_pool().expect("pool must exist"));
+        let batch: Vec<usize> = (0..12).collect();
+        let mut grad = vec![0.0; 4];
+        for _ in 0..10 {
+            engine.accumulate(&mut tape, &batch, &prob.oracle(), &mut grad);
+            assert_eq!(Arc::as_ptr(engine.worker_pool().unwrap()), pool_ptr);
+        }
+    }
+
+    #[test]
+    fn shared_pool_serves_multiple_engines() {
+        // One oversized pool, two engines with different thread counts:
+        // results still match the serial reference bitwise.
+        let pool = Arc::new(WorkerPool::new(7));
+        let batch: Vec<usize> = (0..17).collect();
+        let (g_serial, l_serial) = grad_with_threads(1, &batch);
+        for threads in [2usize, 4, 8] {
+            let prob = LsqProblem::new(64);
+            let (mut tape, base, params) = prob.setup();
+            let mut engine = MinibatchGradEngine::with_pool(
+                &tape,
+                base,
+                params,
+                ParallelOptions {
+                    threads,
+                    ..Default::default()
+                },
+                Some(Arc::clone(&pool)),
+            );
+            let mut grad = vec![0.0; 4];
+            let stats = engine.accumulate(&mut tape, &batch, &prob.oracle(), &mut grad);
+            assert_eq!(l_serial.to_bits(), stats.loss_sum.to_bits());
+            for (a, b) in g_serial.iter().zip(&grad) {
+                assert_eq!(a.to_bits(), b.to_bits(), "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
     fn gradient_sum_matches_manual_fold() {
         // With one lane the reduction degenerates to the plain serial
         // left fold — cross-check against a hand-rolled loop.
@@ -460,7 +1139,7 @@ mod tests {
             ParallelOptions {
                 threads: 1,
                 lanes: 1,
-                scratch_backward: false,
+                ..Default::default()
             },
         );
         let batch: Vec<usize> = (0..8).collect();
@@ -528,6 +1207,7 @@ mod tests {
                     threads: 3,
                     lanes: DEFAULT_LANES,
                     scratch_backward: scratch,
+                    ..Default::default()
                 },
             );
             let mut grad = vec![0.0; 4];
@@ -566,5 +1246,171 @@ mod tests {
         }
         assert_eq!(engine.replica_capacities(), caps);
         assert_eq!(tape.capacities(), main_caps);
+    }
+
+    #[test]
+    fn compression_none_matches_default_bitwise() {
+        let batch: Vec<usize> = (0..20).collect();
+        let (g_default, l_default) = grad_with_threads(4, &batch);
+        let (g_none, l_none) = grad_with_opts(
+            ParallelOptions {
+                threads: 4,
+                compression: ReductionCompression::None,
+                ..Default::default()
+            },
+            &batch,
+        );
+        assert_eq!(l_default.to_bits(), l_none.to_bits());
+        assert_eq!(
+            g_default.iter().map(|g| g.to_bits()).collect::<Vec<_>>(),
+            g_none.iter().map(|g| g.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn compressed_modes_are_thread_invariant_and_repeatable() {
+        let batch: Vec<usize> = (0..24).collect();
+        for compression in [
+            ReductionCompression::RandK { k: 2, seed: 5 },
+            ReductionCompression::TopK { k: 2 },
+            ReductionCompression::Ef21 { k: 2, seed: 5 },
+        ] {
+            let run = |threads: usize| {
+                grad_with_opts(
+                    ParallelOptions {
+                        threads,
+                        compression,
+                        ..Default::default()
+                    },
+                    &batch,
+                )
+            };
+            let (g1, l1) = run(1);
+            for threads in [2usize, 4] {
+                let (gt, lt) = run(threads);
+                assert_eq!(l1.to_bits(), lt.to_bits(), "{compression} loss, {threads} threads");
+                for (a, b) in g1.iter().zip(&gt) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{compression} at {threads} threads");
+                }
+            }
+            // Same config, fresh engine: identical stream, identical bits.
+            let (g_again, _) = run(4);
+            assert_eq!(
+                g1.iter().map(|g| g.to_bits()).collect::<Vec<_>>(),
+                g_again.iter().map(|g| g.to_bits()).collect::<Vec<_>>()
+            );
+        }
+    }
+
+    #[test]
+    fn compression_keeps_loss_exact() {
+        let batch: Vec<usize> = (0..16).collect();
+        let (_, l_dense) = grad_with_threads(2, &batch);
+        for compression in [
+            ReductionCompression::RandK { k: 1, seed: 9 },
+            ReductionCompression::TopK { k: 1 },
+            ReductionCompression::Ef21 { k: 1, seed: 9 },
+        ] {
+            let (_, l_comp) = grad_with_opts(
+                ParallelOptions {
+                    threads: 2,
+                    compression,
+                    ..Default::default()
+                },
+                &batch,
+            );
+            assert_eq!(l_dense.to_bits(), l_comp.to_bits(), "{compression}");
+        }
+    }
+
+    #[test]
+    fn topk_lane_compression_sparsifies_the_reduced_gradient() {
+        // k = 1 with a single lane: the reduced gradient has exactly one
+        // nonzero — the largest-magnitude coordinate of the dense sum.
+        let batch: Vec<usize> = (0..8).collect();
+        let (dense, _) = grad_with_opts(
+            ParallelOptions {
+                threads: 1,
+                lanes: 1,
+                ..Default::default()
+            },
+            &batch,
+        );
+        let (sparse, _) = grad_with_opts(
+            ParallelOptions {
+                threads: 1,
+                lanes: 1,
+                compression: ReductionCompression::TopK { k: 1 },
+                ..Default::default()
+            },
+            &batch,
+        );
+        let nnz = sparse.iter().filter(|v| **v != 0.0).count();
+        assert_eq!(nnz, 1);
+        let argmax = (0..dense.len())
+            .max_by(|&a, &b| dense[a].abs().partial_cmp(&dense[b].abs()).unwrap())
+            .unwrap();
+        assert_eq!(sparse[argmax].to_bits(), dense[argmax].to_bits());
+    }
+
+    #[test]
+    fn ef21_shifts_converge_to_the_dense_gradient_on_a_fixed_batch() {
+        // Repeated accumulate over the same batch at a fixed parameter
+        // point: EF21's per-lane shifts must drive the reduced estimate to
+        // the true dense gradient.
+        let prob = LsqProblem::new(16);
+        let (mut tape, base, params) = prob.setup();
+        let batch: Vec<usize> = (0..16).collect();
+        let (dense, _) = grad_with_threads(1, &batch);
+        let mut engine = MinibatchGradEngine::new(
+            &tape,
+            base,
+            params,
+            ParallelOptions {
+                threads: 2,
+                compression: ReductionCompression::Ef21 { k: 1, seed: 3 },
+                ..Default::default()
+            },
+        );
+        let mut grad = vec![0.0; 4];
+        for _ in 0..400 {
+            engine.accumulate(&mut tape, &batch, &prob.oracle(), &mut grad);
+        }
+        for (est, exact) in grad.iter().zip(&dense) {
+            assert!(
+                (est - exact).abs() < 1e-8,
+                "EF21 estimate {est} did not converge to {exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn compress_spec_parsing_round_trips() {
+        assert_eq!(
+            ReductionCompression::parse("topk:k=8", 0).unwrap(),
+            ReductionCompression::TopK { k: 8 }
+        );
+        assert_eq!(
+            ReductionCompression::parse("randk", 11).unwrap(),
+            ReductionCompression::RandK {
+                k: ReductionCompression::DEFAULT_K,
+                seed: 11
+            }
+        );
+        assert_eq!(
+            ReductionCompression::parse(" ef21:k=3 ", 2).unwrap(),
+            ReductionCompression::Ef21 { k: 3, seed: 2 }
+        );
+        assert!(ReductionCompression::parse("randk:k=0", 0).is_err());
+        assert!(ReductionCompression::parse("randk:q=4", 0).is_err());
+        assert!(ReductionCompression::parse("none:k=4", 0).is_err());
+        for c in [
+            ReductionCompression::None,
+            ReductionCompression::RandK { k: 4, seed: 1 },
+            ReductionCompression::TopK { k: 4 },
+            ReductionCompression::Ef21 { k: 4, seed: 1 },
+        ] {
+            assert_eq!(ReductionCompression::parse(&c.to_string(), 1).unwrap(), c);
+        }
     }
 }

@@ -64,6 +64,29 @@ impl Mark {
 }
 
 /// The autodiff tape. See module docs.
+///
+/// # Examples
+///
+/// The rewind mechanism that makes serialized minibatching memory-flat:
+/// parameters live below a [`Mark`], per-sample activations above it are
+/// discarded in O(1) after every backward pass.
+///
+/// ```
+/// use burtorch::tape::Tape;
+///
+/// let mut tape = Tape::<f64>::new();
+/// let w = tape.leaves(&[0.5, -2.0]);       // parameters at the base
+/// let base = tape.mark();
+/// for i in 0..3 {
+///     let x = tape.leaves(&[1.0, i as f64]); // per-sample activations…
+///     let loss = tape.dot_range(x, w, 2);
+///     tape.backward_above(loss, base);
+///     let g = tape.grads_range(w, 2);
+///     assert_eq!(g[1], i as f64);            // ∂⟨w,x⟩/∂w₁ = x₁
+///     tape.rewind(base);                     // …vanish before the next
+/// }
+/// assert_eq!(tape.len(), base.node_count()); // only the parameters remain
+/// ```
 pub struct Tape<T: Scalar> {
     pub(crate) val: Vec<T>,
     pub(crate) grad: Vec<T>,

@@ -5,10 +5,13 @@
 //! The engine's contract: training is **bitwise identical** for any
 //! thread count — same losses, same parameters — because the summation
 //! shape (lane partition + fixed tree) is independent of how lanes are
-//! scheduled onto threads. These tests check the contract end-to-end
-//! through the real trainer, property-test it over random workloads, and
-//! gradcheck the unrolled kernels against central differences across the
-//! unroll boundary.
+//! scheduled onto the persistent worker pool. These tests check the
+//! contract end-to-end through the real trainer, property-test it over
+//! random workloads, gradcheck the unrolled kernels against central
+//! differences across the unroll boundary, and pin the
+//! zero-steady-state-allocation discipline (including the
+//! `reserve_activation` pre-sizing path, which runs on the pool so
+//! replica pages are first-touched by their owning workers).
 
 use burtorch::coordinator::{Trainer, TrainerOptions};
 use burtorch::data::names_dataset;
@@ -234,5 +237,43 @@ fn steady_state_training_allocates_no_tape_storage() {
         engine.replica_capacities(),
         replica_caps,
         "replica tape reallocated"
+    );
+}
+
+#[test]
+fn reserve_activation_makes_even_the_first_step_allocation_free() {
+    // `reserve_activation` dispatches the replica growth onto the worker
+    // pool (first-touch placement); with a generous budget, not even the
+    // warmup step may grow any replica tape.
+    let ds = names_dataset(80, 16, 31);
+    let mut tape = Tape::<f32>::with_capacity(16_384, 16_384);
+    let mut rng = Rng::new(32);
+    let model = CharMlp::new(&mut tape, CharMlpConfig::paper(4), &mut rng);
+    let mut engine = MinibatchGradEngine::new(
+        &tape,
+        model.base,
+        model.params,
+        ParallelOptions {
+            threads: 3,
+            ..Default::default()
+        },
+    );
+    engine.reserve_activation(16_384, 16_384);
+    let reserved_caps = engine.replica_capacities();
+    let d = model.num_params();
+    let mut grad = vec![0.0; d];
+    let ce = CeMode::Fused;
+    let oracle = |tape: &mut Tape<f32>, i: usize| {
+        let ex = &ds.examples[i];
+        model.loss(tape, &ex.context, ex.target, ce)
+    };
+    let batch: Vec<usize> = (0..12).collect();
+    for _ in 0..3 {
+        engine.accumulate(&mut tape, &batch, &oracle, &mut grad);
+    }
+    assert_eq!(
+        engine.replica_capacities(),
+        reserved_caps,
+        "replicas grew past the reserve_activation budget"
     );
 }

@@ -1,0 +1,174 @@
+//! Lifecycle suite for the persistent worker pool and the reduction-edge
+//! compression config.
+//!
+//! The contracts under test:
+//!
+//! - One [`WorkerPool`] serves multiple back-to-back training sessions,
+//!   and pooled training is bitwise identical to the serial reference
+//!   path (`threads = 1`, inline on the main tape) — which is the numeric
+//!   behavior the pre-pool scoped-thread engine guaranteed.
+//! - `compression = None` (the default) is bitwise invariant: explicit
+//!   `None`, the default options, and every thread count in {1, 2, 4}
+//!   produce identical loss trajectories and final parameters.
+//! - EF21 on the reduction edge is deterministic: the same seed produces
+//!   the same bits across independent runs, and the per-lane state makes
+//!   it thread-invariant too.
+
+use std::sync::Arc;
+
+use burtorch::coordinator::{Trainer, TrainerOptions};
+use burtorch::data::names_dataset;
+use burtorch::nn::{CharMlp, CharMlpConfig};
+use burtorch::parallel::{ReductionCompression, WorkerPool};
+use burtorch::rng::Rng;
+use burtorch::tape::Tape;
+
+/// Train a small char MLP; returns (loss-curve, final parameter bits).
+fn train(
+    threads: usize,
+    compression: ReductionCompression,
+    pool: Option<&Arc<WorkerPool>>,
+    seed: u64,
+) -> (Vec<(usize, f64)>, Vec<u32>) {
+    let ds = names_dataset(150, 16, seed);
+    let mut tape = Tape::<f32>::new();
+    let mut rng = Rng::new(seed ^ 0x5EED);
+    let model = CharMlp::new(&mut tape, CharMlpConfig::paper(4), &mut rng);
+    let trainer = Trainer::new(TrainerOptions {
+        steps: 6,
+        batch: 8,
+        lr: 0.2,
+        log_every: 1,
+        seed,
+        threads,
+        compression,
+        ..Default::default()
+    });
+    let report = match pool {
+        Some(pool) => trainer.train_char_mlp_pooled(&mut tape, &model, &ds.examples, pool),
+        None => trainer.train_char_mlp(&mut tape, &model, &ds.examples),
+    };
+    let params: Vec<u32> = tape
+        .values_range(model.params.first, model.num_params())
+        .iter()
+        .map(|v| v.to_bits())
+        .collect();
+    (report.loss_curve, params)
+}
+
+fn assert_bitwise_eq(
+    a: &(Vec<(usize, f64)>, Vec<u32>),
+    b: &(Vec<(usize, f64)>, Vec<u32>),
+    what: &str,
+) {
+    assert_eq!(a.0.len(), b.0.len(), "{what}: curve length");
+    for ((s1, l1), (s2, l2)) in a.0.iter().zip(&b.0) {
+        assert_eq!(s1, s2, "{what}: step index");
+        assert_eq!(l1.to_bits(), l2.to_bits(), "{what}: loss at step {s1}");
+    }
+    assert_eq!(a.1, b.1, "{what}: final parameters");
+}
+
+#[test]
+fn back_to_back_sessions_through_one_pool_match_the_serial_path() {
+    // Workers are spawned exactly once here; two full training sessions
+    // ride the same pool and must both reproduce the serial reference
+    // bitwise (the pre-pool engine's guarantee, transitively).
+    let pool = Arc::new(WorkerPool::new(3));
+    let none = ReductionCompression::None;
+    let serial_a = train(1, none, None, 3);
+    let serial_b = train(1, none, None, 41);
+    let pooled_a = train(4, none, Some(&pool), 3);
+    let pooled_b = train(4, none, Some(&pool), 41);
+    assert_bitwise_eq(&serial_a, &pooled_a, "session A (seed 3)");
+    assert_bitwise_eq(&serial_b, &pooled_b, "session B (seed 41)");
+    // The pool is still healthy for a third session after the first two.
+    let pooled_again = train(2, none, Some(&pool), 3);
+    assert_bitwise_eq(&serial_a, &pooled_again, "session C (pool reuse)");
+}
+
+#[test]
+fn compression_none_is_bitwise_invariant_across_threads() {
+    // The acceptance criterion: with compression = None, the trajectory is
+    // bitwise identical for threads ∈ {1, 2, 4}, and explicit None equals
+    // the default options.
+    let explicit = train(1, ReductionCompression::None, None, 7);
+    for threads in [1usize, 2, 4] {
+        let run = train(threads, ReductionCompression::None, None, 7);
+        assert_bitwise_eq(&explicit, &run, &format!("None @ {threads} threads"));
+    }
+    // Default TrainerOptions carry compression = None.
+    assert_eq!(
+        TrainerOptions::default().compression,
+        ReductionCompression::None
+    );
+}
+
+#[test]
+fn ef21_is_deterministic_for_a_fixed_seed() {
+    let ef21 = ReductionCompression::Ef21 { k: 16, seed: 7 };
+    let a = train(2, ef21, None, 7);
+    let b = train(2, ef21, None, 7);
+    assert_bitwise_eq(&a, &b, "EF21 same seed, same bits");
+}
+
+#[test]
+fn ef21_is_thread_invariant() {
+    // EF21 state lives per lane, not per worker: scheduling lanes onto
+    // 1, 2, or 4 threads must not change a single bit.
+    let ef21 = ReductionCompression::Ef21 { k: 16, seed: 11 };
+    let serial = train(1, ef21, None, 11);
+    for threads in [2usize, 4] {
+        let par = train(threads, ef21, None, 11);
+        assert_bitwise_eq(&serial, &par, &format!("EF21 @ {threads} threads"));
+    }
+}
+
+#[test]
+fn randk_compression_is_deterministic_and_changes_the_trajectory() {
+    let randk = ReductionCompression::RandK { k: 16, seed: 5 };
+    let a = train(2, randk, None, 5);
+    let b = train(2, randk, None, 5);
+    assert_bitwise_eq(&a, &b, "RandK same seed, same bits");
+    // Sanity: compression actually engages (the trajectory differs from
+    // the dense reduction).
+    let dense = train(2, ReductionCompression::None, None, 5);
+    assert_ne!(
+        a.1, dense.1,
+        "RandK k=16 should perturb the parameter trajectory"
+    );
+}
+
+#[test]
+fn one_pool_serves_mlp_and_gpt_sessions() {
+    // Cross-model pool reuse: the pool is engine-agnostic, so an MLP
+    // session and a GPT session can share threads within one process.
+    use burtorch::data::CharCorpus;
+    use burtorch::nn::{Gpt, GptConfig};
+
+    let pool = Arc::new(WorkerPool::new(1));
+    let mlp = train(2, ReductionCompression::None, Some(&pool), 9);
+    assert!(!mlp.0.is_empty());
+
+    let corpus = CharCorpus::shakespeare(2_000, 8);
+    let mut tape = Tape::<f32>::new();
+    let mut rng = Rng::new(7);
+    let cfg = GptConfig {
+        n_layer: 1,
+        d_model: 8,
+        n_head: 2,
+        ..GptConfig::paper()
+    };
+    let model = Gpt::new(&mut tape, cfg, &mut rng);
+    let trainer = Trainer::new(TrainerOptions {
+        steps: 2,
+        batch: 2,
+        lr: 0.05,
+        log_every: 1,
+        threads: 2,
+        ..Default::default()
+    });
+    let r = trainer.train_gpt_pooled(&mut tape, &model, &corpus, &pool);
+    assert_eq!(r.loss_curve.len(), 2);
+    assert!(r.loss_curve.iter().all(|(_, l)| l.is_finite()));
+}
