@@ -1,7 +1,8 @@
 //! Data-parallel training throughput: samples/sec vs thread count on the
 //! paper's Table 5/6 char-MLP workload (§2.4, hidden e = 64, d = 69,083,
 //! FP32, batch 64), plus a reduction-compression sweep at the widest
-//! thread count.
+//! thread count and an eager-vs-replay execution-mode sweep (the
+//! record-once / replay-many engine of `--exec replay`).
 //!
 //! Every dense row runs the *same* deterministic lane/tree reduction
 //! through one persistent worker pool per run, so the loss trajectories
@@ -17,7 +18,7 @@
 //! (set BURTORCH_FAST=1 for a shorter run).
 
 use burtorch::bench::{json_num, write_json_result, Row, Table};
-use burtorch::coordinator::{Trainer, TrainerOptions};
+use burtorch::coordinator::{ExecMode, Trainer, TrainerOptions};
 use burtorch::data::names_dataset;
 use burtorch::metrics::MemInfo;
 use burtorch::nn::{CeMode, CharMlp, CharMlpConfig};
@@ -190,9 +191,81 @@ fn main() {
         compress_rows.push(row);
     }
 
+    // Execution-mode sweep: what does skipping per-sample graph
+    // re-construction buy? Replay must track the eager loss curve
+    // bitwise (asserted) — the delta is pure steady-state overhead.
+    struct ExecRow {
+        exec: ExecMode,
+        threads: usize,
+        ms_per_step: f64,
+        std_ms: f64,
+        speedup_vs_eager: f64,
+    }
+    let mut exec_rows: Vec<ExecRow> = Vec::new();
+    println!("execution-mode sweep (eager vs replay):");
+    for &threads in &[1usize, sweep_threads] {
+        let mut eager_ms = f64::NAN;
+        for exec in [ExecMode::Eager, ExecMode::Replay] {
+            let mut tape = Tape::<f32>::new();
+            let mut rng = Rng::new(1);
+            let model = CharMlp::new(&mut tape, cfg, &mut rng);
+            let trainer = Trainer::new(TrainerOptions {
+                steps,
+                batch,
+                lr: 0.1,
+                ce: CeMode::Fused,
+                log_every: 1,
+                seed: 7,
+                threads,
+                exec,
+                ..Default::default()
+            });
+            let report = trainer.train_char_mlp(&mut tape, &model, &ds.examples);
+            if let Some(reference) = &reference_curve {
+                for ((s1, l1), (s2, l2)) in reference.iter().zip(&report.loss_curve) {
+                    assert_eq!(s1, s2);
+                    assert_eq!(
+                        l1.to_bits(),
+                        l2.to_bits(),
+                        "exec={exec} threads={threads} diverged at step {s1}"
+                    );
+                }
+            }
+            let ms = report.compute_ms_mean;
+            if exec == ExecMode::Eager {
+                eager_ms = ms;
+            }
+            let row = ExecRow {
+                exec,
+                threads,
+                ms_per_step: ms,
+                std_ms: report.compute_ms_std,
+                speedup_vs_eager: eager_ms / ms,
+            };
+            let exec_name = row.exec.to_string();
+            println!(
+                "  threads={:>2} exec={:>6}: {:>8.3} ms/step  vs eager {:>5.2}x",
+                row.threads, exec_name, row.ms_per_step, row.speedup_vs_eager
+            );
+            let mem = MemInfo::snapshot();
+            table.push(Row {
+                name: format!("BurTorch threads={threads}, exec={exec}"),
+                mean_s: ms / 1e3,
+                std_s: report.compute_ms_std / 1e3,
+                min_s: ms / 1e3,
+                ticks: 0,
+                vm_peak_mb: mem.vm_peak_mb(),
+                vm_hwm_mb: mem.vm_hwm_mb(),
+                iters: steps as u64,
+            });
+            exec_rows.push(row);
+        }
+    }
+
     table.note("loss curves bitwise identical across all thread counts (asserted)");
     table.note("samples/sec = batch / mean step time; speedup relative to threads=1");
     table.note("compress=none is bitwise identical to the thread sweep (asserted)");
+    table.note("exec=replay is bitwise identical to eager (asserted); delta = graph-construction tax");
     table.emit_with_json("parallel_throughput_table");
 
     // Compact JSON for the perf trajectory.
@@ -231,6 +304,20 @@ fn main() {
             json_num(r.std_ms),
             json_num(r.final_loss),
             if i + 1 == compress_rows.len() { "" } else { "," },
+        ));
+    }
+    json.push_str("  ]},\n");
+    json.push_str("  \"exec\": {\"rows\": [\n");
+    for (i, r) in exec_rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"exec\": \"{}\", \"threads\": {}, \"ms_per_step\": {}, \"std_ms\": {}, \
+             \"speedup_vs_eager\": {}}}{}\n",
+            r.exec,
+            r.threads,
+            json_num(r.ms_per_step),
+            json_num(r.std_ms),
+            json_num(r.speedup_vs_eager),
+            if i + 1 == exec_rows.len() { "" } else { "," },
         ));
     }
     json.push_str("  ]}\n}\n");

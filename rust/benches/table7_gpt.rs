@@ -25,17 +25,25 @@ fn main() {
     let d = model.num_params();
     assert_eq!(d, 46_289);
 
+    // The replay column's model lives across the whole batch sweep, just
+    // like the eager column's (both keep training as b grows), so the
+    // per-b eager/replay ratio compares like with like.
+    let mut rtape = Tape::<f32>::new();
+    let mut rrng = Rng::new(3);
+    let rmodel = Gpt::new(&mut rtape, GptConfig::paper(), &mut rrng);
+    let mut rsession: Option<_> = None;
+
     let mut out = String::from(
         "\n=== Table 7 — GPT-3-like model (46,289 params), FP32, 1 core ===\n",
     );
     out.push_str(&format!(
-        "{:<6} {:>22} {:>14} {:>20} {:>12}\n",
-        "b", "native step (ms)", "tape MB", "XLA step (ms)", "XLA/native"
+        "{:<6} {:>22} {:>22} {:>14} {:>20} {:>12}\n",
+        "b", "eager step (ms)", "replay step (ms)", "tape MB", "XLA step (ms)", "XLA/eager"
     ));
 
     for &b in &batches {
         let steps = if b <= 8 { 30 } else { 10 };
-        // ---- native serialized oracles --------------------------------
+        // ---- native serialized oracles (eager) ------------------------
         let mut sample_rng = Rng::new(7);
         let mut grad = vec![0.0f64; d];
         let mut times = Vec::with_capacity(steps);
@@ -64,6 +72,50 @@ fn main() {
         }
         let (native_ms, native_std) = mean_std(&times);
         let tape_mb = tape.memory_bytes() as f64 / (1024.0 * 1024.0);
+
+        // ---- native replay (record-once / replay-many) ----------------
+        let replay_ms = {
+            let mut sample_rng = Rng::new(7); // same windows as the eager column
+            let mut grad = vec![0.0f64; d];
+            let mut times = Vec::with_capacity(steps);
+            for _ in 0..steps {
+                let ws: Vec<usize> = (0..b)
+                    .map(|_| sample_rng.below_usize(corpus.num_windows()))
+                    .collect();
+                let t = Timer::new();
+                grad.iter_mut().for_each(|g| *g = 0.0);
+                for &w in &ws {
+                    let (x, y) = corpus.window(w);
+                    let root = match &rsession {
+                        Some((rec, binds)) => {
+                            rmodel.rebind_sample(&mut rtape, binds, x, y);
+                            rtape.replay_forward(rec);
+                            rec.root()
+                        }
+                        None => {
+                            let (rec, binds) =
+                                rmodel.record_sample(&mut rtape, x, y, CeMode::Fused);
+                            let root = rec.root();
+                            rsession = Some((rec, binds));
+                            root
+                        }
+                    };
+                    // Same backward variant as the eager column, so the
+                    // delta isolates the graph-construction tax.
+                    rtape.backward(root);
+                    for (k, g) in rtape.grads_range(rmodel.params.first, d).iter().enumerate() {
+                        grad[k] += *g as f64;
+                    }
+                }
+                let inv_b = 1.0 / b as f64;
+                let params = rtape.values_range_mut(rmodel.params.first, d);
+                for (p, g) in params.iter_mut().zip(&grad) {
+                    *p -= (0.05 * g * inv_b) as f32;
+                }
+                times.push(t.seconds() * 1e3);
+            }
+            mean_std(&times).0
+        };
 
         // ---- XLA artifact ------------------------------------------------
         let key = format!("gpt_b{b}");
@@ -102,13 +154,17 @@ fn main() {
         };
 
         println!(
-            "b={b:<3} native {native_ms:>9.3} ± {native_std:>7.3} ms | tape {tape_mb:>6.1} MB | XLA {xla_ms:>9.3} ± {xla_std:>6.3} ms"
+            "b={b:<3} eager {native_ms:>9.3} ± {native_std:>7.3} ms | replay {replay_ms:>9.3} ms \
+             ({:.2}x) | tape {tape_mb:>6.1} MB | XLA {xla_ms:>9.3} ± {xla_std:>6.3} ms",
+            native_ms / replay_ms
         );
         out.push_str(&format!(
-            "{:<6} {:>13.3} ± {:>6.3} {:>14.1} {:>12.3} ± {:>5.3} {:>11.1}x\n",
+            "{:<6} {:>13.3} ± {:>6.3} {:>14.3} ({:>4.2}x) {:>14.1} {:>12.3} ± {:>5.3} {:>11.1}x\n",
             b,
             native_ms,
             native_std,
+            replay_ms,
+            native_ms / replay_ms,
             tape_mb,
             xla_ms,
             xla_std,
@@ -123,7 +179,8 @@ fn main() {
         mem.vm_hwm_mb()
     ));
     out.push_str("paper reference (Win): BurTorch b=1 0.515 ms / 16.7 MB; PyTorch b=1 11.7 ms / 1300 MB (×20 speed, ×80 mem);\n");
-    out.push_str("paper crossover: PyTorch overtakes at b≈32–64 (×1.4 at b=64) — compare the XLA/native column trend.\n");
+    out.push_str("paper crossover: PyTorch overtakes at b≈32–64 (×1.4 at b=64) — compare the XLA/eager column trend.\n");
+    out.push_str("replay = record-once/replay-many (--exec replay): bitwise-identical training with no per-sample graph re-construction.\n");
     println!("{out}");
     std::fs::create_dir_all("bench_results").ok();
     std::fs::write("bench_results/table7_gpt.txt", &out).ok();

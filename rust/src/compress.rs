@@ -22,7 +22,7 @@
 //! use burtorch::compress::{Compressor, TopK};
 //!
 //! let mut out = vec![0.0; 5];
-//! TopK { k: 2 }.compress(&[0.1, -5.0, 0.2, 3.0, -0.05], &mut out);
+//! TopK::new(2).compress(&[0.1, -5.0, 0.2, 3.0, -0.05], &mut out);
 //! assert_eq!(out, vec![0.0, -5.0, 0.0, 3.0, 0.0]);
 //! ```
 //!
@@ -34,7 +34,7 @@
 //!
 //! let grad = [1.0, -2.0, 0.5];
 //! let mut worker = Ef21Worker::new(3);
-//! let mut c = TopK { k: 1 };
+//! let mut c = TopK::new(1);
 //! let mut msg = vec![0.0; 3];
 //! for _ in 0..10 {
 //!     worker.round(&grad, &mut c, &mut msg);
@@ -80,6 +80,10 @@ impl Compressor for Identity {
 /// form used by MARINA); with `unbiased = false` the values are kept
 /// unscaled, making C a *contractive* compressor (‖C(x)−x‖² ≤ (1−k/d)‖x‖²),
 /// the form EF21's analysis requires.
+///
+/// The sampled support lives in a per-compressor scratch buffer that is
+/// reused across rounds, so steady-state compression allocates nothing
+/// (the zero-steady-state-allocation bar of the lane reduction path).
 pub struct RandK {
     /// Kept coordinates per round.
     pub k: usize,
@@ -87,6 +91,8 @@ pub struct RandK {
     pub unbiased: bool,
     rng: Rng,
     pending: Option<Vec<usize>>,
+    /// Reused sampled-support scratch (grown once, never per round).
+    support: Vec<usize>,
 }
 
 impl RandK {
@@ -97,6 +103,7 @@ impl RandK {
             unbiased: true,
             rng: Rng::new(seed),
             pending: None,
+            support: Vec::new(),
         }
     }
 
@@ -107,7 +114,14 @@ impl RandK {
             unbiased: false,
             rng: Rng::new(seed),
             pending: None,
+            support: Vec::new(),
         }
+    }
+
+    /// Capacity of the internal support scratch — observability for the
+    /// zero-steady-state-allocation tests (stable once warm).
+    pub fn scratch_capacity(&self) -> usize {
+        self.support.capacity()
     }
 }
 
@@ -115,16 +129,27 @@ impl Compressor for RandK {
     fn compress(&mut self, x: &[f64], out: &mut [f64]) {
         out.iter_mut().for_each(|o| *o = 0.0);
         let d = x.len();
-        let support = self
-            .pending
-            .take()
-            .unwrap_or_else(|| self.rng.sample_distinct(d, self.k.min(d)));
+        // A presampled support (the federated subset-oracle path) takes
+        // precedence; otherwise sample into the reused scratch — same
+        // draw sequence as `sample_distinct`, no allocation once warm.
+        let support: &[usize] = match self.pending.take() {
+            Some(s) => {
+                self.support.clear();
+                self.support.extend_from_slice(&s);
+                &self.support
+            }
+            None => {
+                self.rng
+                    .sample_distinct_into(d, self.k.min(d), &mut self.support);
+                &self.support
+            }
+        };
         let scale = if self.unbiased {
             d as f64 / support.len() as f64
         } else {
             1.0
         };
-        for &i in &support {
+        for &i in support {
             out[i] = scale * x[i];
         }
     }
@@ -187,20 +212,43 @@ impl Compressor for RandSeqK {
 }
 
 /// TopK: keep the k largest-magnitude coordinates (biased; needs EF).
+///
+/// The index permutation lives in a per-compressor scratch buffer (one
+/// `usize` per coordinate) that is refilled — not reallocated — every
+/// round, so steady-state compression allocates nothing.
 pub struct TopK {
     /// Kept coordinates.
     pub k: usize,
+    /// Reused index scratch for the selection (refilled each round).
+    idx: Vec<usize>,
+}
+
+impl TopK {
+    /// New TopK compressor keeping `k` coordinates.
+    pub fn new(k: usize) -> TopK {
+        TopK { k, idx: Vec::new() }
+    }
+
+    /// Capacity of the internal index scratch — observability for the
+    /// zero-steady-state-allocation tests (stable once warm).
+    pub fn scratch_capacity(&self) -> usize {
+        self.idx.capacity()
+    }
 }
 
 impl Compressor for TopK {
     fn compress(&mut self, x: &[f64], out: &mut [f64]) {
         out.iter_mut().for_each(|o| *o = 0.0);
         let k = self.k.min(x.len());
-        let mut idx: Vec<usize> = (0..x.len()).collect();
-        idx.select_nth_unstable_by(k.saturating_sub(1), |&a, &b| {
+        if k == 0 {
+            return;
+        }
+        self.idx.clear();
+        self.idx.extend(0..x.len());
+        self.idx.select_nth_unstable_by(k - 1, |&a, &b| {
             x[b].abs().partial_cmp(&x[a].abs()).unwrap()
         });
-        for &i in &idx[..k] {
+        for &i in &self.idx[..k] {
             out[i] = x[i];
         }
     }
@@ -268,10 +316,9 @@ impl Ef21Worker {
     /// Like [`Ef21Worker::round`], but with a caller-provided scratch for
     /// the difference vector ∇f − g, so the EF21 wrapper itself allocates
     /// nothing per round (used by the per-lane reduction compression in
-    /// [`crate::parallel`]). Note the *inner* compressor may still
-    /// allocate internally — RandK's sampled support and TopK's index
-    /// scratch do today (see the ROADMAP item on allocation-free
-    /// compressor kernels).
+    /// [`crate::parallel`]). The [`RandK`]/[`TopK`] inner compressors
+    /// reuse per-compressor scratch too, so the whole compressed round is
+    /// allocation-free once warm.
     pub fn round_with_scratch(
         &mut self,
         grad: &[f64],
@@ -401,8 +448,48 @@ mod tests {
     fn topk_keeps_largest() {
         let x = vec![0.1, -5.0, 0.2, 3.0, -0.05];
         let mut out = vec![0.0; 5];
-        TopK { k: 2 }.compress(&x, &mut out);
+        TopK::new(2).compress(&x, &mut out);
         assert_eq!(out, vec![0.0, -5.0, 0.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    fn randk_and_topk_scratch_is_allocation_stable_once_warm() {
+        let x = vec_d(64);
+        let mut out = vec![0.0; 64];
+
+        let mut r = RandK::new(8, 3);
+        r.compress(&x, &mut out);
+        let rc = r.scratch_capacity();
+        assert!(rc >= 8, "support scratch must be warm after one round");
+        for _ in 0..100 {
+            r.compress(&x, &mut out);
+        }
+        assert_eq!(r.scratch_capacity(), rc, "RandK scratch regrew");
+
+        let mut t = TopK::new(8);
+        t.compress(&x, &mut out);
+        let tc = t.scratch_capacity();
+        assert!(tc >= 64, "index scratch must cover every coordinate");
+        for _ in 0..100 {
+            t.compress(&x, &mut out);
+        }
+        assert_eq!(t.scratch_capacity(), tc, "TopK scratch regrew");
+    }
+
+    #[test]
+    fn scratch_reuse_does_not_change_the_randk_stream() {
+        // The in-place sampling must consume the RNG exactly like the
+        // allocating variant did, so compressed trajectories are stable.
+        let x = vec_d(32);
+        let mut a = RandK::new(4, 17);
+        let mut b = RandK::new(4, 17);
+        let mut out_a = vec![0.0; 32];
+        let mut out_b = vec![0.0; 32];
+        for _ in 0..50 {
+            a.compress(&x, &mut out_a);
+            b.compress(&x, &mut out_b);
+            assert_eq!(out_a, out_b);
+        }
     }
 
     #[test]
@@ -453,7 +540,7 @@ mod tests {
         // under aggressive TopK compression.
         let grad = vec_d(12);
         let mut w = Ef21Worker::new(12);
-        let mut c = TopK { k: 3 };
+        let mut c = TopK::new(3);
         let mut msg = vec![0.0; 12];
         for _ in 0..40 {
             w.round(&grad, &mut c, &mut msg);

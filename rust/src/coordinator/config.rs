@@ -7,9 +7,10 @@
 //!
 //! The training keys the `burtorch train` command reads are
 //! `train.steps`, `train.batch`, `train.lr`, `train.threads`,
-//! `train.lanes`, and `train.compress` (a
+//! `train.lanes`, `train.compress` (a
 //! [`crate::parallel::ReductionCompression`] spec such as `"randk:k=64"`),
-//! plus `model.hidden`, `data.names`, and `data.min_chars`.
+//! and `train.exec` (an [`crate::coordinator::ExecMode`]: `"eager"` or
+//! `"replay"`), plus `model.hidden`, `data.names`, and `data.min_chars`.
 //!
 //! # Examples
 //!
@@ -370,6 +371,23 @@ min_chars = 50000
         assert_eq!(
             ReductionCompression::parse(&c.str_or("train.compress", "none"), 0).unwrap(),
             ReductionCompression::RandK { k: 8, seed: 0 }
+        );
+    }
+
+    #[test]
+    fn exec_key_feeds_the_exec_mode_parser() {
+        use crate::coordinator::ExecMode;
+        let c = Config::parse("[train]\nexec = \"replay\"").unwrap();
+        assert_eq!(
+            ExecMode::parse(&c.str_or("train.exec", "eager")).unwrap(),
+            ExecMode::Replay
+        );
+        // Bare words work for CLI overrides too.
+        let mut c = Config::new();
+        c.set_str("train.exec", "replay").unwrap();
+        assert_eq!(
+            ExecMode::parse(&c.str_or("train.exec", "eager")).unwrap(),
+            ExecMode::Replay
         );
     }
 

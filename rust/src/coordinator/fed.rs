@@ -227,7 +227,7 @@ mod tests {
         let cfg = small_cfg();
         let d = CharMlpConfig::paper(cfg.hidden).num_params();
         let k = d / 20;
-        let s = run_federated(&cfg, move |_| Box::new(TopK { k }));
+        let s = run_federated(&cfg, move |_| Box::new(TopK::new(k)));
         assert!(
             s.floats_sent <= cfg.clients * cfg.rounds * k,
             "TopK must cap message mass"

@@ -12,4 +12,4 @@ mod trainer;
 
 pub use config::{Config, ConfigError, ModelKind};
 pub use fed::{FedConfig, FedSummary, run_federated};
-pub use trainer::{TrainReport, Trainer, TrainerOptions};
+pub use trainer::{ExecMode, TrainReport, Trainer, TrainerOptions};

@@ -15,18 +15,66 @@
 //! By default each training run spawns its own pool (once, not per step);
 //! the `*_pooled` entry points accept a shared [`WorkerPool`] so
 //! back-to-back sessions reuse one set of threads.
+//!
+//! [`TrainerOptions::exec`] selects the execution mode of the steady
+//! state: [`ExecMode::Eager`] re-records every sample's graph (paper
+//! baseline), [`ExecMode::Replay`] records each worker tape's first
+//! sample once and then only rebinds inputs and re-sweeps the frozen
+//! arrays — bitwise identical, with zero graph construction per step.
 
+use std::fmt;
 use std::sync::Arc;
 
 use crate::data::{BatchSampler, CharCorpus, Example};
 use crate::metrics::{mean_std, MemInfo, Timer};
-use crate::nn::{CeMode, CharMlp, Gpt, ParamRange};
+use crate::nn::{CeMode, CharMlp, CharMlpBinds, Gpt, GptBinds, ParamRange};
 use crate::optim::Sgd;
 use crate::parallel::{
-    MinibatchGradEngine, ParallelOptions, ReductionCompression, WorkerPool, DEFAULT_LANES,
+    MinibatchGradEngine, ParallelOptions, ReductionCompression, ReplaySessions, SampleOracle,
+    WorkerPool, DEFAULT_LANES,
 };
 use crate::scalar::Scalar;
-use crate::tape::{Mark, Tape, Value};
+use crate::tape::{Mark, Recording, Tape, Value};
+
+/// How the steady-state loop executes each sample's graph.
+///
+/// - `Eager` re-records the graph through the builder every sample and
+///   rewinds it away (the paper's baseline behavior).
+/// - `Replay` records each worker tape's first sample once, then drives
+///   every later sample by rebinding the recorded input slots and
+///   re-sweeping the frozen arrays in place — no appends, no rewinds,
+///   no per-step allocation. Bitwise identical to `Eager` for any seed,
+///   thread count and compression mode; requires a static per-sample
+///   topology (both bundled models qualify — their windows are fixed
+///   length). See [`crate::tape::Recording`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Rebuild every sample's graph eagerly (record + rewind).
+    #[default]
+    Eager,
+    /// Record once per worker tape, replay thereafter.
+    Replay,
+}
+
+impl ExecMode {
+    /// Parse a CLI/config spec: `eager` or `replay`.
+    pub fn parse(spec: &str) -> Result<ExecMode, String> {
+        match spec.trim() {
+            "eager" | "" => Ok(ExecMode::Eager),
+            "replay" => Ok(ExecMode::Replay),
+            other => Err(format!("unknown exec mode '{other}' (expected eager|replay)")),
+        }
+    }
+}
+
+impl fmt::Display for ExecMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ExecMode::Eager => write!(f, "eager"),
+            ExecMode::Replay => write!(f, "replay"),
+        }
+    }
+}
 
 /// Options for a training run.
 #[derive(Clone, Debug)]
@@ -58,6 +106,10 @@ pub struct TrainerOptions {
     /// the other modes are deterministic for a fixed seed and invariant
     /// to the thread count, but change the optimizer trajectory.
     pub compression: ReductionCompression,
+    /// Execution mode of the steady-state loop ([`ExecMode::Eager`] by
+    /// default). [`ExecMode::Replay`] is bitwise identical and skips the
+    /// per-sample graph re-construction entirely.
+    pub exec: ExecMode,
 }
 
 impl Default for TrainerOptions {
@@ -73,6 +125,7 @@ impl Default for TrainerOptions {
             threads: 1,
             lanes: DEFAULT_LANES,
             compression: ReductionCompression::None,
+            exec: ExecMode::Eager,
         }
     }
 }
@@ -136,18 +189,12 @@ impl Trainer {
         examples: &[Example],
         pool: Option<Arc<WorkerPool>>,
     ) -> TrainReport {
-        let ce = self.opts.ce;
-        self.run_loop(
-            tape,
-            model.base,
-            model.params,
-            examples.len(),
-            &|tape, idx| {
-                let ex = &examples[idx];
-                model.loss(tape, &ex.context, ex.target, ce)
-            },
-            pool,
-        )
+        let oracle = CharMlpOracle {
+            model,
+            examples,
+            ce: self.opts.ce,
+        };
+        self.run_loop(tape, model.base, model.params, examples.len(), &oracle, pool)
     }
 
     /// Train the §2.5 GPT on corpus windows. Spawns a private worker pool
@@ -179,35 +226,28 @@ impl Trainer {
         corpus: &CharCorpus,
         pool: Option<Arc<WorkerPool>>,
     ) -> TrainReport {
-        let ce = self.opts.ce;
-        self.run_loop(
-            tape,
-            model.base,
-            model.params,
-            corpus.num_windows(),
-            &|tape, w| {
-                let (x, y) = corpus.window(w);
-                model.loss(tape, x, y, ce)
-            },
-            pool,
-        )
+        let oracle = GptOracle {
+            model,
+            corpus,
+            ce: self.opts.ce,
+        };
+        self.run_loop(tape, model.base, model.params, corpus.num_windows(), &oracle, pool)
     }
 
     /// The shared SGD loop: sample a batch, hand it to the gradient
-    /// engine, average, apply. Batch preparation is excluded from the
-    /// per-step timing (paper protocol).
-    fn run_loop<T: Scalar, F>(
+    /// engine (eager or replay, per [`TrainerOptions::exec`]), average,
+    /// apply. Batch preparation is excluded from the per-step timing
+    /// (paper protocol). In replay mode each worker tape records on the
+    /// first sample it processes and replays for the rest of the run.
+    fn run_loop<T: Scalar, O: SampleOracle<T>>(
         &self,
         tape: &mut Tape<T>,
         base: Mark,
         params: ParamRange,
         n_examples: usize,
-        oracle: &F,
+        oracle: &O,
         pool: Option<Arc<WorkerPool>>,
-    ) -> TrainReport
-    where
-        F: Fn(&mut Tape<T>, usize) -> Value + Sync,
-    {
+    ) -> TrainReport {
         let o = &self.opts;
         let d = params.len;
         let mut sampler = BatchSampler::new(n_examples, o.batch, o.seed);
@@ -225,6 +265,10 @@ impl Trainer {
             },
             pool,
         );
+        let mut sessions: Option<ReplaySessions<O::Rec>> = match o.exec {
+            ExecMode::Eager => None,
+            ExecMode::Replay => Some(ReplaySessions::new(engine.threads())),
+        };
         let mut times = Vec::with_capacity(o.steps);
         let mut curve = Vec::new();
         let mut peak_nodes = 0usize;
@@ -232,7 +276,10 @@ impl Trainer {
         for step in 0..o.steps {
             let batch = sampler.next_batch(); // preparation excluded from timing
             let timer = Timer::new();
-            let stats = engine.accumulate(tape, &batch, oracle, &mut grad_acc);
+            let stats = match sessions.as_mut() {
+                None => engine.accumulate(tape, &batch, oracle, &mut grad_acc),
+                Some(s) => engine.accumulate_replay(tape, &batch, oracle, s, &mut grad_acc),
+            };
             peak_nodes = peak_nodes.max(stats.peak_nodes);
             let inv_b = 1.0 / o.batch as f64;
             grad_acc.iter_mut().for_each(|g| *g *= inv_b);
@@ -246,6 +293,60 @@ impl Trainer {
             }
         }
         finish_report(times, curve, peak_nodes)
+    }
+}
+
+/// Replay-capable sample oracle over the char-MLP workload: `build` is
+/// exactly the eager `model.loss` call; `record`/`rebind` expose the
+/// embedding gather view and CE target as rebindable slots.
+struct CharMlpOracle<'a> {
+    model: &'a CharMlp,
+    examples: &'a [Example],
+    ce: CeMode,
+}
+
+impl<'a, T: Scalar> SampleOracle<T> for CharMlpOracle<'a> {
+    type Rec = CharMlpBinds;
+
+    fn build(&self, tape: &mut Tape<T>, idx: usize) -> Value {
+        let ex = &self.examples[idx];
+        self.model.loss(tape, &ex.context, ex.target, self.ce)
+    }
+
+    fn record(&self, tape: &mut Tape<T>, idx: usize) -> Option<(Recording, CharMlpBinds)> {
+        let ex = &self.examples[idx];
+        Some(self.model.record_sample(tape, &ex.context, ex.target, self.ce))
+    }
+
+    fn rebind(&self, tape: &mut Tape<T>, binds: &CharMlpBinds, idx: usize) {
+        let ex = &self.examples[idx];
+        self.model.rebind_sample(tape, binds, &ex.context, ex.target);
+    }
+}
+
+/// Replay-capable sample oracle over the GPT corpus-window workload.
+struct GptOracle<'a> {
+    model: &'a Gpt,
+    corpus: &'a CharCorpus,
+    ce: CeMode,
+}
+
+impl<'a, T: Scalar> SampleOracle<T> for GptOracle<'a> {
+    type Rec = GptBinds;
+
+    fn build(&self, tape: &mut Tape<T>, idx: usize) -> Value {
+        let (x, y) = self.corpus.window(idx);
+        self.model.loss(tape, x, y, self.ce)
+    }
+
+    fn record(&self, tape: &mut Tape<T>, idx: usize) -> Option<(Recording, GptBinds)> {
+        let (x, y) = self.corpus.window(idx);
+        Some(self.model.record_sample(tape, x, y, self.ce))
+    }
+
+    fn rebind(&self, tape: &mut Tape<T>, binds: &GptBinds, idx: usize) {
+        let (x, y) = self.corpus.window(idx);
+        self.model.rebind_sample(tape, binds, x, y);
     }
 }
 
@@ -428,6 +529,54 @@ mod tests {
             "EF21 training must still learn: {first:.3} -> {:.3}",
             a.final_loss
         );
+    }
+
+    #[test]
+    fn replay_training_matches_eager_bitwise() {
+        let ds = names_dataset(150, 16, 21);
+        let run = |exec: ExecMode, threads: usize| {
+            let mut tape = Tape::<f32>::new();
+            let mut rng = Rng::new(10);
+            let model = CharMlp::new(&mut tape, CharMlpConfig::paper(4), &mut rng);
+            let trainer = Trainer::new(TrainerOptions {
+                steps: 8,
+                batch: 6,
+                lr: 0.2,
+                log_every: 1,
+                threads,
+                exec,
+                ..Default::default()
+            });
+            let curve = trainer.train_char_mlp(&mut tape, &model, &ds.examples).loss_curve;
+            let params: Vec<u32> = model
+                .params
+                .iter()
+                .map(|p| tape.value(p).to_bits())
+                .collect();
+            (curve, params)
+        };
+        let (eager_curve, eager_params) = run(ExecMode::Eager, 1);
+        for threads in [1usize, 2] {
+            let (replay_curve, replay_params) = run(ExecMode::Replay, threads);
+            for ((s1, l1), (s2, l2)) in eager_curve.iter().zip(&replay_curve) {
+                assert_eq!(s1, s2);
+                assert_eq!(
+                    l1.to_bits(),
+                    l2.to_bits(),
+                    "replay threads={threads} diverged at step {s1}"
+                );
+            }
+            assert_eq!(eager_params, replay_params, "post-training parameters diverged");
+        }
+    }
+
+    #[test]
+    fn exec_mode_parses_and_displays() {
+        assert_eq!(ExecMode::parse("eager").unwrap(), ExecMode::Eager);
+        assert_eq!(ExecMode::parse(" replay ").unwrap(), ExecMode::Replay);
+        assert!(ExecMode::parse("jit").is_err());
+        assert_eq!(ExecMode::Replay.to_string(), "replay");
+        assert_eq!(ExecMode::default(), ExecMode::Eager);
     }
 
     #[test]

@@ -25,6 +25,33 @@
 //! 4. **[`coordinator`]** — config parsing, the serialized-oracle SGD
 //!    loop ([`coordinator::Trainer`]), and the federated simulation.
 //!
+//! ## Execution modes: eager vs replay
+//!
+//! The steady-state training loop runs in one of two modes
+//! ([`coordinator::ExecMode`], CLI `--exec eager|replay`):
+//!
+//! - **Eager** (default) re-records every sample's graph through the
+//!   builder — append every op, run backward, `rewind` it all away. This
+//!   is the paper's baseline behavior and the reference numeric path.
+//! - **Replay** exploits that the SoA tape *is already* a captured
+//!   program: the first sample each worker tape processes is recorded
+//!   into a frozen [`tape::Recording`], and every later sample only
+//!   *rebinds* its inputs (leaf values, embedding-gather id runs,
+//!   cross-entropy targets) and re-evaluates the frozen arrays in place
+//!   with [`Tape::replay_forward`] — no `Vec` pushes, no builder
+//!   branching, no capacity checks, no rewinds. The existing backward
+//!   scan is reused unchanged.
+//!
+//! Replay is **bitwise identical** to eager for any seed, thread count
+//! and compression mode (every op re-evaluates through the same shared
+//! kernel its eager constructor used), so it is purely a performance
+//! knob — the jit-style capture win without a compiler. A recording
+//! assumes a static per-sample topology: control flow that changes the
+//! graph shape (variable-length windows, data-dependent structure) must
+//! stay eager. Both bundled workloads (fixed-window char MLP and GPT)
+//! qualify; see `tests/replay_equivalence.rs` for the equivalence and
+//! zero-allocation proofs.
+//!
 //! ## The zero-steady-state-allocation discipline
 //!
 //! Every per-step buffer in the hot path is allocated once and reused:
@@ -68,8 +95,9 @@
 //!
 //! - [`tape`] — the scalar-granularity autodiff engine: an append-only
 //!   Wengert list with structure-of-arrays storage, non-recursive backward,
-//!   scratch-storage backward, and the rewind mechanism that makes
-//!   per-sample serialized batching memory-flat.
+//!   scratch-storage backward, the rewind mechanism that makes
+//!   per-sample serialized batching memory-flat, and the record-once /
+//!   replay-many static-graph replay engine ([`tape::Recording`]).
 //! - [`scalar`] — the FP32/FP64 scalar abstraction (paper Appendix F.3).
 //! - [`ops`] — op-level forward/backward semantics (paper Tables 8–10).
 //! - [`nn`] — Neuron/Linear/MLP/Embedding/LayerNorm/Attention/GPT built on
@@ -120,4 +148,4 @@ pub mod testkit;
 pub mod viz;
 
 pub use scalar::Scalar;
-pub use tape::{Builder, Mark, Tape, Value};
+pub use tape::{Builder, Mark, Recording, Tape, Value};

@@ -11,7 +11,9 @@
 
 use burtorch::cli::Cli;
 use burtorch::compress::{Identity, RandK, TopK};
-use burtorch::coordinator::{run_federated, Config, FedConfig, ModelKind, Trainer, TrainerOptions};
+use burtorch::coordinator::{
+    run_federated, Config, ExecMode, FedConfig, ModelKind, Trainer, TrainerOptions,
+};
 use burtorch::data::{names_dataset, CharCorpus};
 use burtorch::metrics::MemInfo;
 use burtorch::nn::{CeMode, CharMlp, CharMlpConfig, Gpt, GptConfig};
@@ -52,10 +54,13 @@ fn print_help() {
            train     --model mlp|gpt --steps N --batch B --lr G [--hidden E]\n\
                      [--threads W] [--lanes L] [--config file.toml]\n\
                      [--compress none|randk:k=64|topk:k=64|ef21[:k=N]]\n\
-                     [--scratch] [--composed-ce]\n\
+                     [--exec eager|replay] [--scratch] [--composed-ce]\n\
                      (--threads 0 = all cores; any W gives bitwise-identical\n\
                       runs with --compress none; compressed runs are\n\
-                      deterministic per seed and thread-invariant too)\n\
+                      deterministic per seed and thread-invariant too;\n\
+                      --exec replay records each worker's sample graph once\n\
+                      and replays it — bitwise identical, no per-step\n\
+                      graph construction)\n\
            fed       --clients N --rounds R --compressor identity|randk|topk\n\
            demo      [--small]   (Figure 1 / Figure 2 graphs + DOT)\n\
            sample    --steps N --tokens T   (train tiny GPT, then generate)\n\
@@ -90,6 +95,16 @@ fn trainer_options(cli: &Cli, cfg: &Config) -> TrainerOptions {
             std::process::exit(2);
         }
     };
+    // `--exec` (CLI) / `train.exec` (config): eager rebuilds every sample
+    // graph; replay records once per worker tape and re-sweeps in place.
+    let exec_spec = cli.opt_or("exec", &cfg.str_or("train.exec", "eager"));
+    let exec = match ExecMode::parse(&exec_spec) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("error: --exec: {e}");
+            std::process::exit(2);
+        }
+    };
     TrainerOptions {
         steps: cli.int_or("steps", cfg.int_or("train.steps", 200)) as usize,
         batch: cli.int_or("batch", cfg.int_or("train.batch", 1)) as usize,
@@ -109,6 +124,7 @@ fn trainer_options(cli: &Cli, cfg: &Config) -> TrainerOptions {
         )
         .max(1),
         compression,
+        exec,
     }
 }
 
@@ -132,8 +148,8 @@ fn cmd_train(cli: &Cli) -> i32 {
         .unwrap_or(ModelKind::CharMlp);
     let trainer = Trainer::new(opts.clone());
     println!(
-        "training {kind:?}: steps={} batch={} lr={} threads={} compress={}",
-        opts.steps, opts.batch, opts.lr, opts.threads, opts.compression
+        "training {kind:?}: steps={} batch={} lr={} threads={} compress={} exec={}",
+        opts.steps, opts.batch, opts.lr, opts.threads, opts.compression, opts.exec
     );
     match kind {
         ModelKind::CharMlp => {
@@ -189,7 +205,7 @@ fn cmd_fed(cli: &Cli) -> i32 {
     println!("federated: {} clients, {} rounds, compressor={kind} (k={k}, d={d})", cfg.clients, cfg.rounds);
     let summary = match kind.as_str() {
         "identity" => run_federated(&cfg, |_| Box::new(Identity)),
-        "topk" => run_federated(&cfg, move |_| Box::new(TopK { k })),
+        "topk" => run_federated(&cfg, move |_| Box::new(TopK::new(k))),
         _ => run_federated(&cfg, move |c| Box::new(RandK::contractive(k, 7 + c as u64))),
     };
     println!(

@@ -6,12 +6,12 @@
 //! the `param_count_matches_paper` test).
 
 use super::{
-    cross_entropy_composed, cross_entropy_fused, Act, CeMode, LayerNorm, Linear, ParamAlloc,
-    ParamRange, TransformerBlock,
+    cross_entropy_recorded, Act, CeBind, CeMode, LayerNorm, Linear, ParamAlloc, ParamRange,
+    TransformerBlock,
 };
 use crate::rng::Rng;
 use crate::scalar::Scalar;
-use crate::tape::{Mark, Tape, Value};
+use crate::tape::{Mark, Recording, Tape, Value};
 
 /// GPT configuration (paper §2.5 "GPT-3-like model: configuration").
 #[derive(Clone, Copy, Debug)]
@@ -57,6 +57,17 @@ impl GptConfig {
             final_ln: true,
         }
     }
+}
+
+/// The rebind slots of a recorded [`Gpt`] window: where in the frozen
+/// graph the per-sample inputs live. See [`Gpt::loss_with_binds`].
+#[derive(Clone, Debug)]
+pub struct GptBinds {
+    /// First of the window's `block · d_model` consecutive token+position
+    /// input adds; the token-embedding side is their `a` slot.
+    pub first_add: Value,
+    /// One CE target binding per position.
+    pub ce: Vec<CeBind>,
 }
 
 /// The scalar-granularity GPT model.
@@ -112,17 +123,20 @@ impl Gpt {
         self.params.len
     }
 
-    /// Logits for every position of one tokenized window.
-    /// Returns `block_size` vectors of `vocab` logits node ids each.
-    pub fn forward_logits<T: Scalar>(
+    /// Shared forward body: build all position logits and return the id
+    /// of the first token+position `add` node (the per-sample rebind
+    /// anchor — the window's `block · d_model` input adds are consecutive
+    /// nodes starting there).
+    fn forward_logits_inner<T: Scalar>(
         &self,
         tape: &mut Tape<T>,
         tokens: &[u32],
-    ) -> Vec<Vec<Value>> {
+    ) -> (Vec<Vec<Value>>, Value) {
         let cfg = &self.cfg;
         assert!(tokens.len() <= cfg.block_size, "window exceeds block size");
         // x[p] = tok_emb[token] + pos_emb[p], elementwise (paper §2.5
         // "Input": embeddings added elementwise, no transformation).
+        let first_add = Value(tape.len() as u32);
         let mut x: Vec<Vec<Value>> = Vec::with_capacity(tokens.len());
         for (p, &tok) in tokens.iter().enumerate() {
             let te = self.tok_emb.first.0 + (tok as usize * cfg.d_model) as u32;
@@ -139,7 +153,18 @@ impl Gpt {
         if let Some(ln) = &self.ln_f {
             x = x.iter().map(|xs| ln.forward(tape, xs)).collect();
         }
-        x.iter().map(|xs| self.lm_head.forward(tape, xs)).collect()
+        let logits = x.iter().map(|xs| self.lm_head.forward(tape, xs)).collect();
+        (logits, first_add)
+    }
+
+    /// Logits for every position of one tokenized window.
+    /// Returns `block_size` vectors of `vocab` logits node ids each.
+    pub fn forward_logits<T: Scalar>(
+        &self,
+        tape: &mut Tape<T>,
+        tokens: &[u32],
+    ) -> Vec<Vec<Value>> {
+        self.forward_logits_inner(tape, tokens).0
     }
 
     /// Mean next-token cross-entropy over all positions of one window —
@@ -151,17 +176,82 @@ impl Gpt {
         targets: &[u32],
         ce: CeMode,
     ) -> Value {
+        self.loss_with_binds(tape, tokens, targets, ce).0
+    }
+
+    /// [`Gpt::loss`] plus the rebind slots the replay engine needs: the
+    /// token-embedding add anchor of the window gather and one CE target
+    /// binding per position. Same code path as `loss`, so recording
+    /// through this entry point is bitwise identical to the eager oracle.
+    pub fn loss_with_binds<T: Scalar>(
+        &self,
+        tape: &mut Tape<T>,
+        tokens: &[u32],
+        targets: &[u32],
+        ce: CeMode,
+    ) -> (Value, GptBinds) {
         assert_eq!(tokens.len(), targets.len());
-        let logits = self.forward_logits(tape, tokens);
+        let (logits, first_add) = self.forward_logits_inner(tape, tokens);
+        let mut ce_binds = Vec::with_capacity(targets.len());
         let losses: Vec<Value> = logits
             .iter()
             .zip(targets)
-            .map(|(zs, &y)| match ce {
-                CeMode::Composed => cross_entropy_composed(tape, zs, y as usize),
-                CeMode::Fused => cross_entropy_fused(tape, zs, y as usize),
+            .map(|(zs, &y)| {
+                let (l, b) = cross_entropy_recorded(tape, zs, y as usize, ce);
+                ce_binds.push(b);
+                l
             })
             .collect();
-        tape.reduce_mean(&losses)
+        let loss = tape.reduce_mean(&losses);
+        (loss, GptBinds { first_add, ce: ce_binds })
+    }
+
+    /// Record one window's graph for replay: build it eagerly on top of
+    /// `self.base` and freeze it into a [`Recording`] plus rebind slots.
+    pub fn record_sample<T: Scalar>(
+        &self,
+        tape: &mut Tape<T>,
+        tokens: &[u32],
+        targets: &[u32],
+        ce: CeMode,
+    ) -> (Recording, GptBinds) {
+        debug_assert_eq!(
+            tape.len(),
+            self.base.node_count(),
+            "recording must start from the parameter base"
+        );
+        let (loss, binds) = self.loss_with_binds(tape, tokens, targets, ce);
+        (Recording::capture(tape, self.base, loss), binds)
+    }
+
+    /// Rewrite a recorded window's inputs to new `(tokens, targets)`:
+    /// redirect each position's token-embedding gather (the `a` slots of
+    /// the consecutive input adds — positional embeddings are static) and
+    /// rebind every position's CE target. Allocation-free.
+    pub fn rebind_sample<T: Scalar>(
+        &self,
+        tape: &mut Tape<T>,
+        binds: &GptBinds,
+        tokens: &[u32],
+        targets: &[u32],
+    ) {
+        assert_eq!(tokens.len(), targets.len());
+        assert_eq!(
+            tokens.len(),
+            binds.ce.len(),
+            "replayed window length differs from the recording (topology change)"
+        );
+        let d = self.cfg.d_model;
+        for (p, &tok) in tokens.iter().enumerate() {
+            let te = self.tok_emb.first.0 + (tok as usize * d) as u32;
+            let a0 = binds.first_add.0 + (p * d) as u32;
+            for j in 0..d as u32 {
+                tape.rebind_arg_a(Value(a0 + j), Value(te + j));
+            }
+        }
+        for (bind, &y) in binds.ce.iter().zip(targets) {
+            bind.rebind(tape, y as usize);
+        }
     }
 
     /// Greedy/temperature sampling of `n` tokens after a prompt.
@@ -315,6 +405,53 @@ mod tests {
         let loss2 = gpt.loss(&mut t, &tokens, &targets, CeMode::Fused);
         let after = t.value(loss2);
         assert!(after < before, "SGD step must reduce loss: {before} -> {after}");
+    }
+
+    #[test]
+    fn replayed_windows_match_eager_oracles_bitwise() {
+        for ce in [CeMode::Fused, CeMode::Composed] {
+            let mut t = Tape::<f64>::new();
+            let mut rng = Rng::new(48);
+            let cfg = GptConfig {
+                n_layer: 2,
+                d_model: 8,
+                n_head: 2,
+                ..GptConfig::paper()
+            };
+            let gpt = Gpt::new(&mut t, cfg, &mut rng);
+            let windows: Vec<(Vec<u32>, Vec<u32>)> = (0..3)
+                .map(|s| {
+                    (
+                        (0..8).map(|i| ((i * 5 + s * 13) % 65) as u32).collect(),
+                        (0..8).map(|i| ((i * 7 + s * 3 + 1) % 65) as u32).collect(),
+                    )
+                })
+                .collect();
+
+            let mut eager: Vec<(u64, Vec<u64>)> = Vec::new();
+            for (x, y) in &windows {
+                let loss = gpt.loss(&mut t, x, y, ce);
+                t.backward_above(loss, gpt.base);
+                let lv = t.value(loss).to_bits();
+                let gs: Vec<u64> = gpt.params.iter().map(|p| t.grad(p).to_bits()).collect();
+                eager.push((lv, gs));
+                t.rewind(gpt.base);
+            }
+
+            let (rec, binds) = gpt.record_sample(&mut t, &windows[0].0, &windows[0].1, ce);
+            let frozen = t.len();
+            for (k, (x, y)) in windows.iter().enumerate() {
+                if k > 0 {
+                    gpt.rebind_sample(&mut t, &binds, x, y);
+                    t.replay_forward(&rec);
+                }
+                assert_eq!(t.len(), frozen, "replay appended nodes");
+                t.backward_above(rec.root(), rec.base());
+                assert_eq!(t.value(rec.root()).to_bits(), eager[k].0, "{ce:?} loss @ {k}");
+                let gs: Vec<u64> = gpt.params.iter().map(|p| t.grad(p).to_bits()).collect();
+                assert_eq!(gs, eager[k].1, "{ce:?} grads @ {k}");
+            }
+        }
     }
 
     #[test]

@@ -6,10 +6,12 @@
 //! embeddings 27×64, context 16, two layers; d ranges from 5,963 (e = 4)
 //! to 1,079,003 (e = 1024) — asserted in tests.
 
-use super::{cross_entropy_composed, cross_entropy_fused, Act, CeMode, Linear, ParamAlloc, ParamRange};
+use super::{
+    cross_entropy_recorded, Act, CeBind, CeMode, Linear, ParamAlloc, ParamRange,
+};
 use crate::rng::Rng;
 use crate::scalar::Scalar;
-use crate::tape::{Mark, Tape, Value};
+use crate::tape::{Mark, Recording, Tape, Value};
 
 /// Generic multi-layer perceptron over explicit scalar inputs.
 pub struct Mlp {
@@ -128,18 +130,31 @@ impl CharMlp {
         self.params.len
     }
 
-    /// Logits for one context window. The embedding "lookup" passes
-    /// parameter ids directly into the layer-1 inner products — the
-    /// paper's no-copy memory-view gather.
-    pub fn forward_logits<T: Scalar>(&self, tape: &mut Tape<T>, context: &[u32]) -> Vec<Value> {
+    /// Shared forward body: build the logits and return the aux offset of
+    /// the layer-1 input view (the per-sample rebind slot). Both the
+    /// plain and the recording entry points run exactly this code, so the
+    /// emitted node sequence — and therefore every value — is identical.
+    fn forward_logits_inner<T: Scalar>(
+        &self,
+        tape: &mut Tape<T>,
+        context: &[u32],
+    ) -> (Vec<Value>, u32) {
         assert_eq!(context.len(), self.cfg.block_size);
         let mut xs: Vec<Value> = Vec::with_capacity(self.cfg.block_size * self.cfg.emb_dim);
         for &tok in context {
             let row = self.emb.first.0 + (tok as usize * self.cfg.emb_dim) as u32;
             xs.extend((0..self.cfg.emb_dim as u32).map(|j| Value(row + j)));
         }
-        let hidden = self.l1.forward(tape, &xs);
-        self.l2.forward(tape, &hidden)
+        let xs_at = tape.share_ids(&xs);
+        let hidden = self.l1.forward_shared(tape, xs_at);
+        (self.l2.forward(tape, &hidden), xs_at)
+    }
+
+    /// Logits for one context window. The embedding "lookup" passes
+    /// parameter ids directly into the layer-1 inner products — the
+    /// paper's no-copy memory-view gather.
+    pub fn forward_logits<T: Scalar>(&self, tape: &mut Tape<T>, context: &[u32]) -> Vec<Value> {
+        self.forward_logits_inner(tape, context).0
     }
 
     /// Single-sample loss f_i(x): CE of the next character.
@@ -150,12 +165,77 @@ impl CharMlp {
         target: u32,
         ce: CeMode,
     ) -> Value {
-        let logits = self.forward_logits(tape, context);
-        match ce {
-            CeMode::Composed => cross_entropy_composed(tape, &logits, target as usize),
-            CeMode::Fused => cross_entropy_fused(tape, &logits, target as usize),
-        }
+        self.loss_with_binds(tape, context, target, ce).0
     }
+
+    /// [`CharMlp::loss`] plus the rebind slots the replay engine needs:
+    /// the aux offset of the embedding gather view and the CE target
+    /// binding. The graph is built by the same code path as `loss`, so
+    /// recording through this entry point is bitwise identical to the
+    /// eager oracle.
+    pub fn loss_with_binds<T: Scalar>(
+        &self,
+        tape: &mut Tape<T>,
+        context: &[u32],
+        target: u32,
+        ce: CeMode,
+    ) -> (Value, CharMlpBinds) {
+        let (logits, xs_at) = self.forward_logits_inner(tape, context);
+        let (loss, ce_bind) = cross_entropy_recorded(tape, &logits, target as usize, ce);
+        (loss, CharMlpBinds { xs_at, ce: ce_bind })
+    }
+
+    /// Record one sample's graph for replay: build it eagerly on top of
+    /// `self.base` (the tape must currently sit exactly at the base) and
+    /// freeze it into a [`Recording`] plus its rebind slots.
+    pub fn record_sample<T: Scalar>(
+        &self,
+        tape: &mut Tape<T>,
+        context: &[u32],
+        target: u32,
+        ce: CeMode,
+    ) -> (Recording, CharMlpBinds) {
+        debug_assert_eq!(
+            tape.len(),
+            self.base.node_count(),
+            "recording must start from the parameter base"
+        );
+        let (loss, binds) = self.loss_with_binds(tape, context, target, ce);
+        (Recording::capture(tape, self.base, loss), binds)
+    }
+
+    /// Rewrite a recorded sample's inputs to a new `(context, target)`:
+    /// redirect the embedding gather view row by row and rebind the CE
+    /// target. Allocation-free; call before [`Tape::replay_forward`].
+    pub fn rebind_sample<T: Scalar>(
+        &self,
+        tape: &mut Tape<T>,
+        binds: &CharMlpBinds,
+        context: &[u32],
+        target: u32,
+    ) {
+        assert_eq!(
+            context.len(),
+            self.cfg.block_size,
+            "replayed window length differs from the recording (topology change)"
+        );
+        let e = self.cfg.emb_dim;
+        for (t, &tok) in context.iter().enumerate() {
+            let row = self.emb.first.0 + (tok as usize * e) as u32;
+            tape.rebind_aux_range(binds.xs_at + (t * e) as u32, Value(row), e);
+        }
+        binds.ce.rebind(tape, target as usize);
+    }
+}
+
+/// The rebind slots of a recorded [`CharMlp`] sample: where in the frozen
+/// graph the per-sample inputs live. See [`CharMlp::loss_with_binds`].
+#[derive(Clone, Copy, Debug)]
+pub struct CharMlpBinds {
+    /// Aux offset of the `block_size · emb_dim` embedding-row id view.
+    pub xs_at: u32,
+    /// Target binding of the cross-entropy head.
+    pub ce: CeBind,
 }
 
 #[cfg(test)]
@@ -264,6 +344,44 @@ mod tests {
         t.backward(loss);
         let gsum: f64 = mlp.params.iter().map(|p| t.grad(p).abs()).sum();
         assert!(gsum > 0.0);
+    }
+
+    #[test]
+    fn replayed_samples_match_eager_oracles_bitwise() {
+        for ce in [CeMode::Fused, CeMode::Composed] {
+            let mut rng = Rng::new(57);
+            let mut t = Tape::<f64>::new();
+            let m = CharMlp::new(&mut t, CharMlpConfig::paper(4), &mut rng);
+            let samples: Vec<(Vec<u32>, u32)> = (0..4)
+                .map(|s| ((0..16).map(|i| ((i * 3 + s * 5) % 27) as u32).collect(), (s * 7 % 27) as u32))
+                .collect();
+
+            // Eager reference: rewind batching.
+            let mut eager: Vec<(u64, Vec<u64>)> = Vec::new();
+            for (ctx, tgt) in &samples {
+                let loss = m.loss(&mut t, ctx, *tgt, ce);
+                t.backward_above(loss, m.base);
+                let lv = t.value(loss).to_bits();
+                let gs: Vec<u64> = m.params.iter().map(|p| t.grad(p).to_bits()).collect();
+                eager.push((lv, gs));
+                t.rewind(m.base);
+            }
+
+            // Replay path: record sample 0, rebind + replay the rest.
+            let (rec, binds) = m.record_sample(&mut t, &samples[0].0, samples[0].1, ce);
+            let frozen = t.len();
+            for (k, (ctx, tgt)) in samples.iter().enumerate() {
+                if k > 0 {
+                    m.rebind_sample(&mut t, &binds, ctx, *tgt);
+                    t.replay_forward(&rec);
+                }
+                assert_eq!(t.len(), frozen, "replay appended nodes");
+                t.backward_above(rec.root(), rec.base());
+                assert_eq!(t.value(rec.root()).to_bits(), eager[k].0, "{ce:?} loss @ {k}");
+                let gs: Vec<u64> = m.params.iter().map(|p| t.grad(p).to_bits()).collect();
+                assert_eq!(gs, eager[k].1, "{ce:?} grads @ {k}");
+            }
+        }
     }
 
     #[test]

@@ -21,12 +21,15 @@ mod softmax;
 
 pub use attention::CausalSelfAttention;
 pub use block::TransformerBlock;
-pub use gpt::{Gpt, GptConfig};
+pub use gpt::{Gpt, GptBinds, GptConfig};
 pub use init::{kaiming_std, xavier_std, ParamAlloc};
 pub use layernorm::LayerNorm;
 pub use linear::{Linear, Neuron};
-pub use mlp::{CharMlp, CharMlpConfig, Mlp};
-pub use softmax::{cross_entropy_composed, cross_entropy_fused, softmax_composed, CeMode};
+pub use mlp::{CharMlp, CharMlpBinds, CharMlpConfig, Mlp};
+pub use softmax::{
+    cross_entropy, cross_entropy_composed, cross_entropy_fused, cross_entropy_recorded,
+    softmax_composed, CeBind, CeMode,
+};
 
 use crate::scalar::Scalar;
 use crate::tape::{Tape, Value};

@@ -11,6 +11,46 @@
 use crate::scalar::Scalar;
 use crate::tape::{Tape, Value};
 
+/// Rebindable handle to a recorded cross-entropy: which slot of the
+/// frozen graph carries the sample's target class. Produced by
+/// [`cross_entropy_recorded`]; consumed by the replay path (see
+/// [`crate::tape::Recording`]).
+///
+/// Both CE constructions have target-independent *topology* — the fused
+/// node stores the target as an aux index, and the composed form
+/// materializes only the target's probability through one `div` node
+/// whose first argument selects among the (consecutive) `exp` nodes — so
+/// a recorded sample graph replays any target after one slot rewrite.
+#[derive(Clone, Copy, Debug)]
+pub enum CeBind {
+    /// Fused `crossEntropyLogits` node; the target lives in its aux meta.
+    Fused {
+        /// The CE node.
+        node: Value,
+    },
+    /// Composed CE; the target selects the `div` node's numerator among
+    /// the consecutive per-class `exp` nodes.
+    Composed {
+        /// The `div` node computing the target's probability.
+        div: Value,
+        /// First of the consecutive per-class `exp` nodes.
+        exps_first: Value,
+    },
+}
+
+impl CeBind {
+    /// Rewrite the recorded target to `target` (before replaying).
+    #[inline]
+    pub fn rebind<T: Scalar>(&self, tape: &mut Tape<T>, target: usize) {
+        match *self {
+            CeBind::Fused { node } => tape.rebind_ce_target(node, target),
+            CeBind::Composed { div, exps_first } => {
+                tape.rebind_arg_a(div, Value(exps_first.0 + target as u32))
+            }
+        }
+    }
+}
+
 /// Which cross-entropy construction a model should emit.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum CeMode {
@@ -35,11 +75,44 @@ pub fn cross_entropy_composed<T: Scalar>(
     logits: &[Value],
     target: usize,
 ) -> Value {
+    cross_entropy_recorded(tape, logits, target, CeMode::Composed).0
+}
+
+/// Cross-entropy in either mode, additionally returning the [`CeBind`]
+/// that lets a recorded graph replay a different target. Emits the exact
+/// node sequence of [`cross_entropy_composed`] / [`cross_entropy_fused`],
+/// so recording through this function is bitwise identical to the eager
+/// constructions.
+pub fn cross_entropy_recorded<T: Scalar>(
+    tape: &mut Tape<T>,
+    logits: &[Value],
+    target: usize,
+    mode: CeMode,
+) -> (Value, CeBind) {
     assert!(target < logits.len());
-    let exps: Vec<Value> = logits.iter().map(|&z| tape.exp(z)).collect();
-    let den = tape.reduce_sum(&exps);
-    let p = tape.div(exps[target], den);
-    tape.neg_log(p)
+    match mode {
+        CeMode::Fused => {
+            let node = cross_entropy_fused(tape, logits, target);
+            (node, CeBind::Fused { node })
+        }
+        CeMode::Composed => {
+            let exps: Vec<Value> = logits.iter().map(|&z| tape.exp(z)).collect();
+            debug_assert!(
+                exps.windows(2).all(|w| w[1].raw() == w[0].raw() + 1),
+                "per-class exp nodes must be consecutive for target rebinding"
+            );
+            let den = tape.reduce_sum(&exps);
+            let p = tape.div(exps[target], den);
+            let loss = tape.neg_log(p);
+            (
+                loss,
+                CeBind::Composed {
+                    div: p,
+                    exps_first: exps[0],
+                },
+            )
+        }
+    }
 }
 
 /// Cross-entropy as one fused node over a contiguous logits range.
@@ -143,6 +216,36 @@ mod tests {
         let ids2: Vec<Value> = vec![Value(b.0), Value(b.0 + 1)];
         let l_big = cross_entropy_composed(&mut big, &ids2, 0);
         assert!(big.value(l_big) < v_small);
+    }
+
+    #[test]
+    fn recorded_ce_rebinds_targets_in_both_modes() {
+        use crate::tape::Recording;
+        for mode in [CeMode::Fused, CeMode::Composed] {
+            let mut t = Tape::<f64>::new();
+            let z = t.leaves(&[0.4, -1.2, 2.0, 0.3]);
+            let base = t.mark();
+            // Post-base logit copies so the whole CE lives in the segment.
+            let ids: Vec<Value> = (0..4).map(|k| t.mul_const(Value(z.0 + k), 1.0)).collect();
+            let (loss, bind) = cross_entropy_recorded(&mut t, &ids, 1, mode);
+            let rec = Recording::capture(&t, base, loss);
+            for target in [0usize, 2, 3, 1] {
+                bind.rebind(&mut t, target);
+                t.replay_forward(&rec);
+                let got = t.value(rec.root());
+                // Eager reference on a fresh tape.
+                let mut t2 = Tape::<f64>::new();
+                let z2 = t2.leaves(&[0.4, -1.2, 2.0, 0.3]);
+                let ids2: Vec<Value> =
+                    (0..4).map(|k| t2.mul_const(Value(z2.0 + k), 1.0)).collect();
+                let want = cross_entropy(&mut t2, &ids2, target, mode);
+                assert_eq!(
+                    got.to_bits(),
+                    t2.value(want).to_bits(),
+                    "mode {mode:?} target {target}"
+                );
+            }
+        }
     }
 
     #[test]

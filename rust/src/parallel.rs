@@ -70,6 +70,23 @@
 //! same seed ⇒ same bits, for any thread count. Losses are never
 //! compressed; the loss fold stays exact in every mode.
 //!
+//! ## Execution modes: eager vs replay
+//!
+//! [`MinibatchGradEngine::accumulate`] drives the classic eager path:
+//! every sample re-records its graph through the builder and is thrown
+//! away by `rewind`. [`MinibatchGradEngine::accumulate_replay`] drives
+//! the record-once / replay-many path instead: the **first sample each
+//! worker tape processes is recorded** (eagerly, on the worker's own
+//! thread — so the recorded segment's pages are first-touch allocated
+//! exactly like the replica prefix), and every subsequent sample on that
+//! tape only rebinds its inputs ([`SampleOracle::rebind`]) and re-sweeps
+//! the frozen arrays with [`Tape::replay_forward`] — no appends, no
+//! rewinds, no builder dispatch. Because replay re-evaluates the
+//! identical node sequence with the identical kernels, the two modes are
+//! **bitwise identical** for any thread count and any compression mode;
+//! see `tests/replay_equivalence.rs`. Do not mix the two entry points on
+//! one engine: an eager `rewind` would truncate the live recordings.
+//!
 //! ## Memory discipline
 //!
 //! Replicas, lane buffers, chunk bounds and compressor state are
@@ -78,10 +95,10 @@
 //! [`MinibatchGradEngine::reserve_activation`]) and are only rewound
 //! afterwards — the zero-heap-allocation steady state of the serial
 //! engine is preserved per worker, and the pool dispatch itself performs
-//! no allocation. Peak activation memory is `W · max_i MEM(∇f_i)` for `W`
-//! workers, still independent of batch size. (The RandK/TopK operators
-//! currently allocate small index scratch internally per call; the
-//! default `None` path is allocation-free.)
+//! no allocation. The RandK/TopK operators reuse per-compressor index
+//! scratch, so compressed lanes meet the same bar. Peak activation memory
+//! is `W · max_i MEM(∇f_i)` for `W` workers, still independent of batch
+//! size.
 
 use std::cell::UnsafeCell;
 use std::fmt;
@@ -93,7 +110,7 @@ use std::thread;
 use crate::compress::{Compressor, Ef21Worker, RandK, TopK};
 use crate::nn::ParamRange;
 use crate::scalar::Scalar;
-use crate::tape::{Mark, Scratch, Tape, Value};
+use crate::tape::{Mark, Recording, Scratch, Tape, Value};
 
 /// Default reduction width: the fixed number of lanes the minibatch is
 /// split into. Chosen ≥ any sensible worker count on the paper's hardware
@@ -226,6 +243,101 @@ impl fmt::Display for ReductionCompression {
             ReductionCompression::TopK { k } => write!(f, "topk:k={k}"),
             ReductionCompression::Ef21 { k, .. } => write!(f, "ef21:k={k}"),
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sample oracles
+// ---------------------------------------------------------------------------
+
+/// A per-sample gradient oracle the engine can drive in either execution
+/// mode. `build` is the eager contract (construct sample `idx`'s loss on
+/// whatever tape it is handed); `record`/`rebind` additionally let the
+/// replay path freeze one sample's graph and rewrite only its inputs for
+/// every later sample.
+///
+/// Every `Fn(&mut Tape<T>, usize) -> Value + Sync` closure is a
+/// [`SampleOracle`] via a blanket impl (eager-only: its `record` returns
+/// `None`), so existing closure-based callers work unchanged. Model-aware
+/// oracles (see `coordinator::Trainer`) implement `record` in terms of
+/// `CharMlp::record_sample` / `Gpt::record_sample`.
+///
+/// Oracles run concurrently on replica tapes; they must not mutate shared
+/// state.
+pub trait SampleOracle<T: Scalar>: Sync {
+    /// Per-tape replay state: where the recorded graph's sample inputs
+    /// live (rebind slots). `Send` because it crosses into pool workers.
+    type Rec: Send;
+
+    /// Eagerly build sample `idx`'s loss graph on `tape` and return the
+    /// loss root. The eager execution path, and the recording pass.
+    fn build(&self, tape: &mut Tape<T>, idx: usize) -> Value;
+
+    /// Record sample `idx`: build it eagerly on top of the parameter base
+    /// and freeze the segment. Returns `None` when the oracle cannot
+    /// replay (data-dependent topology, or a plain closure) — the replay
+    /// entry point treats that as a hard error.
+    fn record(&self, tape: &mut Tape<T>, idx: usize) -> Option<(Recording, Self::Rec)> {
+        let _ = (tape, idx);
+        None
+    }
+
+    /// Rewrite the recorded graph's input slots to sample `idx`'s data
+    /// (before [`Tape::replay_forward`]). Must be allocation-free.
+    fn rebind(&self, tape: &mut Tape<T>, rec: &Self::Rec, idx: usize) {
+        let _ = (tape, rec, idx);
+        unreachable!("rebind called on an oracle that never records");
+    }
+}
+
+impl<T: Scalar, F> SampleOracle<T> for F
+where
+    F: Fn(&mut Tape<T>, usize) -> Value + Sync,
+{
+    type Rec = ();
+
+    fn build(&self, tape: &mut Tape<T>, idx: usize) -> Value {
+        self(tape, idx)
+    }
+}
+
+/// One worker tape's replay state: the frozen [`Recording`] plus the
+/// oracle's rebind slots. `None` until that tape records its first sample.
+type SessionSlot<R> = Option<(Recording, R)>;
+
+/// Per-worker-tape replay state for [`MinibatchGradEngine::accumulate_replay`]:
+/// slot `w` holds worker `w`'s recording (worker 0 is the coordinator's
+/// main tape) once that tape has processed its first sample. Owned by the
+/// caller so it can outlive individual `accumulate_replay` calls — the
+/// whole point is recording once per training run.
+pub struct ReplaySessions<R> {
+    slots: Vec<SessionSlot<R>>,
+}
+
+impl<R> ReplaySessions<R> {
+    /// Empty sessions for an engine of `threads` worker tapes
+    /// (`engine.threads()`).
+    pub fn new(threads: usize) -> ReplaySessions<R> {
+        ReplaySessions {
+            slots: (0..threads.max(1)).map(|_| None).collect(),
+        }
+    }
+
+    /// How many worker tapes have recorded so far.
+    pub fn recorded_count(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Number of session slots (== the engine's thread count).
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Standard companion to [`ReplaySessions::len`] (slot count — use
+    /// [`ReplaySessions::recorded_count`] to ask whether anything has
+    /// been recorded yet).
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
     }
 }
 
@@ -522,7 +634,7 @@ impl LaneCompress {
             ReductionCompression::RandK { k, seed } => {
                 LaneCompressor::RandK(RandK::new(k, lane_seed(seed)))
             }
-            ReductionCompression::TopK { k } => LaneCompressor::TopK(TopK { k }),
+            ReductionCompression::TopK { k } => LaneCompressor::TopK(TopK::new(k)),
             ReductionCompression::Ef21 { k, seed } => LaneCompressor::Ef21 {
                 inner: RandK::contractive(k, lane_seed(seed)),
                 state: Ef21Worker::new(d),
@@ -763,6 +875,26 @@ impl<T: Scalar> MinibatchGradEngine<T> {
         self.replicas.iter().map(|r| r.capacities()).collect()
     }
 
+    /// Capacity snapshot `(msg, compressor scratch)` of every lane's
+    /// compression state — observability for the compressed
+    /// zero-steady-state-allocation tests. Empty when compression is off.
+    pub fn lane_compress_capacities(&self) -> Vec<(usize, usize)> {
+        self.lane_bufs
+            .iter()
+            .filter_map(|l| l.compress.as_ref())
+            .map(|c| {
+                let inner = match &c.op {
+                    LaneCompressor::RandK(r) => r.scratch_capacity(),
+                    LaneCompressor::TopK(t) => t.scratch_capacity(),
+                    LaneCompressor::Ef21 { inner, diff, .. } => {
+                        inner.scratch_capacity() + diff.capacity()
+                    }
+                };
+                (c.msg.capacity(), inner)
+            })
+            .collect()
+    }
+
     /// Compute the **sum** (not mean) of ∇f_i over `batch` into
     /// `grad_out`, using the deterministic lane/tree reduction (with the
     /// configured lane compression, if any). `oracle` builds one sample's
@@ -771,16 +903,65 @@ impl<T: Scalar> MinibatchGradEngine<T> {
     ///
     /// `tape` is the main tape holding the authoritative parameters; its
     /// current values are synced into every replica before the shards
-    /// run, and it is always left rewound to `base`.
-    pub fn accumulate<F>(
+    /// run, and it is always left rewound to `base`. This is the **eager**
+    /// execution mode; see [`MinibatchGradEngine::accumulate_replay`] for
+    /// record-once / replay-many.
+    pub fn accumulate<O>(
         &mut self,
         tape: &mut Tape<T>,
         batch: &[usize],
-        oracle: &F,
+        oracle: &O,
         grad_out: &mut [f64],
     ) -> StepStats
     where
-        F: Fn(&mut Tape<T>, usize) -> Value + Sync,
+        O: SampleOracle<T>,
+    {
+        self.accumulate_impl(tape, batch, oracle, None, grad_out)
+    }
+
+    /// [`MinibatchGradEngine::accumulate`] in **replay** mode: the first
+    /// sample each worker tape sees is recorded (on the worker's own
+    /// thread), every later sample rebinds its inputs into the frozen
+    /// graph and re-sweeps it in place — zero appends, zero rewinds, zero
+    /// heap allocations in steady state, bitwise identical to eager.
+    ///
+    /// `sessions` must come from [`ReplaySessions::new`] with this
+    /// engine's thread count and must be passed to every step of the run
+    /// (the recordings live on the worker tapes across steps). Panics if
+    /// the oracle cannot record (see [`SampleOracle::record`]). Do not
+    /// interleave eager `accumulate` calls on the same engine — the eager
+    /// rewind would truncate the live recordings.
+    pub fn accumulate_replay<O>(
+        &mut self,
+        tape: &mut Tape<T>,
+        batch: &[usize],
+        oracle: &O,
+        sessions: &mut ReplaySessions<O::Rec>,
+        grad_out: &mut [f64],
+    ) -> StepStats
+    where
+        O: SampleOracle<T>,
+    {
+        assert_eq!(
+            sessions.len(),
+            self.threads,
+            "ReplaySessions sized for {} threads but the engine runs {}",
+            sessions.len(),
+            self.threads
+        );
+        self.accumulate_impl(tape, batch, oracle, Some(&mut sessions.slots), grad_out)
+    }
+
+    fn accumulate_impl<O>(
+        &mut self,
+        tape: &mut Tape<T>,
+        batch: &[usize],
+        oracle: &O,
+        sessions: Option<&mut [SessionSlot<O::Rec>]>,
+        grad_out: &mut [f64],
+    ) -> StepStats
+    where
+        O: SampleOracle<T>,
     {
         let b = batch.len();
         assert!(b > 0, "empty minibatch");
@@ -812,6 +993,7 @@ impl<T: Scalar> MinibatchGradEngine<T> {
                 &mut self.lane_bufs[..lanes_used],
                 oracle,
                 use_scratch,
+                sessions.map(|s| &mut s[0]),
             );
         } else {
             // Broadcast the authoritative parameter values: snapshot them
@@ -838,6 +1020,8 @@ impl<T: Scalar> MinibatchGradEngine<T> {
             let rep_ptr = PtrSend(self.replicas.as_mut_ptr());
             let scr_ptr = PtrSend(self.scratches.as_mut_ptr());
             let main_ptr = PtrSend(tape as *mut Tape<T>);
+            let sess_ptr: Option<PtrSend<SessionSlot<O::Rec>>> =
+                sessions.map(|s| PtrSend(s.as_mut_ptr()));
             pool.run(&|w| {
                 if w >= workers {
                     return; // surplus pool worker this step
@@ -845,9 +1029,10 @@ impl<T: Scalar> MinibatchGradEngine<T> {
                 let (lo, hi) = (bounds[w], bounds[w + 1]);
                 // SAFETY: worker w exclusively owns the main tape (w == 0,
                 // and index 0 runs on the coordinator thread that holds the
-                // &mut) or replica w-1; scratch w; and lanes [lo, hi) — all
-                // index-disjoint across workers, all outliving the step
-                // because `run` returns only after every worker finished.
+                // &mut) or replica w-1; scratch w; session slot w; and
+                // lanes [lo, hi) — all index-disjoint across workers, all
+                // outliving the step because `run` returns only after
+                // every worker finished.
                 unsafe {
                     let wtape: &mut Tape<T> = if w == 0 {
                         &mut *main_ptr.0
@@ -858,9 +1043,14 @@ impl<T: Scalar> MinibatchGradEngine<T> {
                     };
                     let scratch = &mut *scr_ptr.0.add(w);
                     let chunk = std::slice::from_raw_parts_mut(lane_ptr.0.add(lo), hi - lo);
+                    // A worker records on its own thread (first sample of
+                    // its first step), so the recorded segment's pages are
+                    // first-touch allocated on the worker's NUMA node just
+                    // like the replica prefix.
+                    let session = sess_ptr.map(|p| &mut *p.0.add(w));
                     run_lanes(
                         wtape, scratch, base, params, batch, lanes_used, lo, chunk, oracle,
-                        use_scratch,
+                        use_scratch, session,
                     );
                 }
             });
@@ -896,13 +1086,14 @@ impl<T: Scalar> MinibatchGradEngine<T> {
 }
 
 /// Run the lanes `[lane0, lane0 + lanes.len())` of the current step on
-/// one tape: for every owned batch slot, build the sample loss, fold it
-/// into the lane, backprop, fold the parameter gradient run into the lane
-/// buffer, rewind; then (if configured) compress the finished lane buffer
-/// in place, still on the thread that owns the lane this step.
+/// one tape: for every owned batch slot, produce the sample loss (eager
+/// build + rewind, or record/rebind + replay when `session` is given),
+/// fold it into the lane, backprop, fold the parameter gradient run into
+/// the lane buffer; then (if configured) compress the finished lane
+/// buffer in place, still on the thread that owns the lane this step.
 /// `lanes_total` fixes the slot partition.
 #[allow(clippy::too_many_arguments)]
-fn run_lanes<T: Scalar, F>(
+fn run_lanes<T: Scalar, O>(
     tape: &mut Tape<T>,
     scratch: &mut Scratch,
     base: Mark,
@@ -911,29 +1102,53 @@ fn run_lanes<T: Scalar, F>(
     lanes_total: usize,
     lane0: usize,
     lanes: &mut [Lane],
-    oracle: &F,
+    oracle: &O,
     use_scratch: bool,
+    mut session: Option<&mut SessionSlot<O::Rec>>,
 ) where
-    F: Fn(&mut Tape<T>, usize) -> Value + Sync,
+    O: SampleOracle<T>,
 {
     let b = batch.len();
     for (off, lane) in lanes.iter_mut().enumerate() {
         let l = lane0 + off;
         let (slot0, slot1) = (l * b / lanes_total, (l + 1) * b / lanes_total);
         for slot in slot0..slot1 {
-            let loss = oracle(tape, batch[slot]);
-            lane.loss += tape.value(loss).to_f64();
+            let idx = batch[slot];
+            let root = match session.as_deref_mut() {
+                // Eager: rebuild the graph, discard it below after use.
+                None => oracle.build(tape, idx),
+                // Replay steady state: rebind inputs, re-sweep in place.
+                Some(Some((rec, binds))) => {
+                    oracle.rebind(tape, binds, idx);
+                    tape.replay_forward(rec);
+                    rec.root()
+                }
+                // Replay, first sample on this tape: record it. Runs on
+                // the thread that owns the tape (first-touch locality).
+                Some(slot_ref @ None) => {
+                    let (rec, binds) = oracle.record(tape, idx).expect(
+                        "replay execution requires a replay-capable oracle \
+                         (SampleOracle::record returned None)",
+                    );
+                    let root = rec.root();
+                    *slot_ref = Some((rec, binds));
+                    root
+                }
+            };
+            lane.loss += tape.value(root).to_f64();
             if use_scratch {
-                tape.backward_with_scratch(loss, scratch);
+                tape.backward_with_scratch(root, scratch);
             } else {
-                tape.backward_above(loss, base);
+                tape.backward_above(root, base);
             }
             let grads = tape.grads_range(params.first, params.len);
             for (acc, g) in lane.grad.iter_mut().zip(grads) {
                 *acc += g.to_f64();
             }
             lane.peak_nodes = lane.peak_nodes.max(tape.len());
-            tape.rewind(base);
+            if session.is_none() {
+                tape.rewind(base);
+            }
         }
         if let Some(cs) = lane.compress.as_mut() {
             cs.apply(&mut lane.grad);
@@ -1380,6 +1595,202 @@ mod tests {
             assert!(
                 (est - exact).abs() < 1e-8,
                 "EF21 estimate {est} did not converge to {exact}"
+            );
+        }
+    }
+
+    /// Replay-capable wrapper around [`LsqProblem`]: same node sequence
+    /// as the closure oracle, plus record/rebind (inputs are the four x
+    /// leaves and the y leaf).
+    struct LsqOracle<'a>(&'a LsqProblem);
+
+    impl<'a> LsqOracle<'a> {
+        fn build_inner(&self, tape: &mut Tape<f64>, i: usize) -> (Value, (Value, Value)) {
+            let x: Vec<Value> = self.0.xs[i].iter().map(|&v| tape.leaf(v)).collect();
+            let w: Vec<Value> = (0..4).map(|k| Value(k as u32)).collect();
+            let pred = tape.inner_product(&w, &x);
+            let y = tape.leaf(self.0.ys[i]);
+            let e = tape.sub(pred, y);
+            (tape.sqr(e), (x[0], y))
+        }
+    }
+
+    impl<'a> SampleOracle<f64> for LsqOracle<'a> {
+        type Rec = (Value, Value);
+
+        fn build(&self, tape: &mut Tape<f64>, i: usize) -> Value {
+            self.build_inner(tape, i).0
+        }
+
+        fn record(&self, tape: &mut Tape<f64>, i: usize) -> Option<(Recording, (Value, Value))> {
+            let base = tape.mark(); // the engine hands us the tape at base
+            let (root, binds) = self.build_inner(tape, i);
+            Some((Recording::capture(tape, base, root), binds))
+        }
+
+        fn rebind(&self, tape: &mut Tape<f64>, &(x0, y): &(Value, Value), i: usize) {
+            for (k, &v) in self.0.xs[i].iter().enumerate() {
+                tape.set_value(Value(x0.0 + k as u32), v);
+            }
+            tape.set_value(y, self.0.ys[i]);
+        }
+    }
+
+    #[test]
+    fn replay_matches_eager_bitwise_across_threads_and_steps() {
+        let prob = LsqProblem::new(64);
+        let batch: Vec<usize> = (0..23).map(|i| (i * 5) % 64).collect();
+        let (g_eager, l_eager) = grad_with_threads(1, &batch);
+        for threads in [1usize, 2, 4] {
+            let (mut tape, base, params) = prob.setup();
+            let mut engine = MinibatchGradEngine::new(
+                &tape,
+                base,
+                params,
+                ParallelOptions {
+                    threads,
+                    ..Default::default()
+                },
+            );
+            let oracle = LsqOracle(&prob);
+            let mut sessions = ReplaySessions::new(engine.threads());
+            let mut grad = vec![0.0; 4];
+            // Step 1 records (per worker tape), step 2+ replays; the
+            // parameter point is fixed, so every step must reproduce the
+            // eager reference bitwise.
+            for step in 0..3 {
+                let stats =
+                    engine.accumulate_replay(&mut tape, &batch, &oracle, &mut sessions, &mut grad);
+                assert_eq!(
+                    l_eager.to_bits(),
+                    stats.loss_sum.to_bits(),
+                    "threads={threads} step={step}"
+                );
+                for (a, b) in g_eager.iter().zip(&grad) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "threads={threads} step={step}");
+                }
+            }
+            assert!(sessions.recorded_count() >= 1);
+            assert!(sessions.recorded_count() <= engine.threads());
+        }
+    }
+
+    #[test]
+    fn replay_steady_state_freezes_tape_extent_and_capacity() {
+        let prob = LsqProblem::new(32);
+        let (mut tape, base, params) = prob.setup();
+        let mut engine = MinibatchGradEngine::new(
+            &tape,
+            base,
+            params,
+            ParallelOptions {
+                threads: 2,
+                ..Default::default()
+            },
+        );
+        let oracle = LsqOracle(&prob);
+        let mut sessions = ReplaySessions::new(engine.threads());
+        let batch: Vec<usize> = (0..16).collect();
+        let mut grad = vec![0.0; 4];
+        engine.accumulate_replay(&mut tape, &batch, &oracle, &mut sessions, &mut grad);
+        let len = tape.len();
+        let caps = tape.capacities();
+        let rep_caps = engine.replica_capacities();
+        for _ in 0..5 {
+            engine.accumulate_replay(&mut tape, &batch, &oracle, &mut sessions, &mut grad);
+        }
+        assert_eq!(tape.len(), len, "replay appended to the main tape");
+        assert_eq!(tape.capacities(), caps, "main tape reallocated");
+        assert_eq!(engine.replica_capacities(), rep_caps, "replica reallocated");
+    }
+
+    #[test]
+    fn replay_with_compression_matches_eager_compressed_bitwise() {
+        let prob = LsqProblem::new(48);
+        let batch: Vec<usize> = (0..24).collect();
+        for compression in [
+            ReductionCompression::RandK { k: 2, seed: 5 },
+            ReductionCompression::TopK { k: 2 },
+            ReductionCompression::Ef21 { k: 2, seed: 5 },
+        ] {
+            let steps = 3;
+            // Eager reference: per-step grads (compressor state evolves).
+            let (mut te, be, pe) = prob.setup();
+            let mut eng_e = MinibatchGradEngine::new(
+                &te,
+                be,
+                pe,
+                ParallelOptions {
+                    threads: 2,
+                    compression,
+                    ..Default::default()
+                },
+            );
+            let mut eager_grads = Vec::new();
+            let mut ge = vec![0.0; 4];
+            for _ in 0..steps {
+                eng_e.accumulate(&mut te, &batch, &prob.oracle(), &mut ge);
+                eager_grads.push(ge.iter().map(|g| g.to_bits()).collect::<Vec<_>>());
+            }
+            // Replay run: must track the eager compressed stream exactly.
+            let (mut tr, br, pr) = prob.setup();
+            let mut eng_r = MinibatchGradEngine::new(
+                &tr,
+                br,
+                pr,
+                ParallelOptions {
+                    threads: 2,
+                    compression,
+                    ..Default::default()
+                },
+            );
+            let oracle = LsqOracle(&prob);
+            let mut sessions = ReplaySessions::new(eng_r.threads());
+            let mut gr = vec![0.0; 4];
+            for (step, want) in eager_grads.iter().enumerate() {
+                eng_r.accumulate_replay(&mut tr, &batch, &oracle, &mut sessions, &mut gr);
+                let got: Vec<u64> = gr.iter().map(|g| g.to_bits()).collect();
+                assert_eq!(&got, want, "{compression} step {step}");
+            }
+        }
+    }
+
+    #[test]
+    fn compressed_steady_state_keeps_all_scratch_capacities_stable() {
+        // PR 2 follow-on: with per-compressor scratch threaded through,
+        // compressed steps must hit the same zero-steady-state-allocation
+        // bar as the dense path.
+        let prob = LsqProblem::new(64);
+        let batch: Vec<usize> = (0..32).collect();
+        for compression in [
+            ReductionCompression::RandK { k: 2, seed: 9 },
+            ReductionCompression::TopK { k: 2 },
+            ReductionCompression::Ef21 { k: 2, seed: 9 },
+        ] {
+            let (mut tape, base, params) = prob.setup();
+            let mut engine = MinibatchGradEngine::new(
+                &tape,
+                base,
+                params,
+                ParallelOptions {
+                    threads: 2,
+                    compression,
+                    ..Default::default()
+                },
+            );
+            let mut grad = vec![0.0; 4];
+            engine.accumulate(&mut tape, &batch, &prob.oracle(), &mut grad); // warmup
+            let caps = engine.replica_capacities();
+            let comp_caps = engine.lane_compress_capacities();
+            assert!(!comp_caps.is_empty(), "{compression}: no compressed lanes");
+            for _ in 0..5 {
+                engine.accumulate(&mut tape, &batch, &prob.oracle(), &mut grad);
+            }
+            assert_eq!(engine.replica_capacities(), caps, "{compression}");
+            assert_eq!(
+                engine.lane_compress_capacities(),
+                comp_caps,
+                "{compression}: compressor scratch reallocated"
             );
         }
     }

@@ -124,8 +124,18 @@ impl Rng {
     /// (SGD-NICE subsampling, paper Eq. 2). Uses Floyd's algorithm:
     /// O(k) expected time, no O(n) allocation.
     pub fn sample_distinct(&mut self, n: usize, k: usize) -> Vec<usize> {
-        assert!(k <= n, "cannot sample {k} distinct from {n}");
         let mut out: Vec<usize> = Vec::with_capacity(k);
+        self.sample_distinct_into(n, k, &mut out);
+        out
+    }
+
+    /// [`Rng::sample_distinct`] into a caller-provided buffer: identical
+    /// draw sequence and result, but `out` is cleared and reused, so a
+    /// warm buffer makes repeated sampling allocation-free (the
+    /// steady-state contract of the RandK reduction compressor).
+    pub fn sample_distinct_into(&mut self, n: usize, k: usize, out: &mut Vec<usize>) {
+        assert!(k <= n, "cannot sample {k} distinct from {n}");
+        out.clear();
         for j in (n - k)..n {
             let t = self.below_usize(j + 1);
             if out.contains(&t) {
@@ -134,7 +144,6 @@ impl Rng {
                 out.push(t);
             }
         }
-        out
     }
 
     /// Fisher–Yates shuffle.
@@ -226,6 +235,23 @@ mod tests {
             s.dedup();
             assert_eq!(s.len(), k, "duplicates found");
         }
+    }
+
+    #[test]
+    fn sample_distinct_into_matches_allocating_variant_and_reuses_buffer() {
+        let mut a = Rng::new(41);
+        let mut b = Rng::new(41);
+        let mut buf = Vec::new();
+        let mut cap_after_first = 0usize;
+        for round in 0..20 {
+            let want = a.sample_distinct(50, 8);
+            b.sample_distinct_into(50, 8, &mut buf);
+            assert_eq!(buf, want, "round {round}");
+            if round == 0 {
+                cap_after_first = buf.capacity();
+            }
+        }
+        assert_eq!(buf.capacity(), cap_after_first, "warm buffer must not regrow");
     }
 
     #[test]

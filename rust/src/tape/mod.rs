@@ -21,9 +21,11 @@
 
 mod backward;
 mod builder;
+mod replay;
 
 pub use backward::Scratch;
 pub use builder::{Builder, Var};
+pub use replay::Recording;
 
 use crate::ops::{Arity, Op};
 use crate::scalar::Scalar;
@@ -732,50 +734,58 @@ impl<T: Scalar> Tape<T> {
         self.push(Op::ReduceNegMean, a, n, -(s / T::from_usize(xs.len())))
     }
 
-    /// 4-wide ILP gather-dot over two id slices, seeded with `init` —
-    /// the indirect-operand twin of [`crate::ops::dot_ilp4`], with the
+    /// 4-wide ILP gather-dot over a published aux run, seeded with `init`:
+    /// x-ids at `aux[s..s+n)`, y-ids at `aux[s+n..s+2n)`. The
+    /// indirect-operand twin of [`crate::ops::dot_ilp4`], with the
     /// identical `(s0+s1)+(s2+s3)+init` association so the aux-id and
-    /// contiguous-range fused kernels agree bitwise.
+    /// contiguous-range fused kernels agree bitwise. Shared by the eager
+    /// `innerProduct` constructors and the replay interpreter
+    /// ([`Tape::replay_forward`]), so both execution modes evaluate the
+    /// op with the same arithmetic.
     #[inline(always)]
-    fn gather_dot_ilp4(&self, xs: &[Value], ys: &[Value], init: T) -> T {
-        debug_assert_eq!(xs.len(), ys.len());
-        let n = xs.len();
+    pub(crate) fn gather_dot_aux_ilp4(&self, s: usize, n: usize, init: T) -> T {
+        debug_assert!(s + 2 * n <= self.aux.len());
         let (mut s0, mut s1, mut s2, mut s3) = (T::ZERO, T::ZERO, T::ZERO, T::ZERO);
         let mut k = 0usize;
         while k + 4 <= n {
-            s0 = self.val[xs[k].idx()].mul_add(self.val[ys[k].idx()], s0);
-            s1 = self.val[xs[k + 1].idx()].mul_add(self.val[ys[k + 1].idx()], s1);
-            s2 = self.val[xs[k + 2].idx()].mul_add(self.val[ys[k + 2].idx()], s2);
-            s3 = self.val[xs[k + 3].idx()].mul_add(self.val[ys[k + 3].idx()], s3);
+            s0 = self.val[self.aux[s + k] as usize]
+                .mul_add(self.val[self.aux[s + n + k] as usize], s0);
+            s1 = self.val[self.aux[s + k + 1] as usize]
+                .mul_add(self.val[self.aux[s + n + k + 1] as usize], s1);
+            s2 = self.val[self.aux[s + k + 2] as usize]
+                .mul_add(self.val[self.aux[s + n + k + 2] as usize], s2);
+            s3 = self.val[self.aux[s + k + 3] as usize]
+                .mul_add(self.val[self.aux[s + n + k + 3] as usize], s3);
             k += 4;
         }
-        let mut s = (s0 + s1) + (s2 + s3) + init;
+        let mut acc = (s0 + s1) + (s2 + s3) + init;
         while k < n {
-            s = self.val[xs[k].idx()].mul_add(self.val[ys[k].idx()], s);
+            acc = self.val[self.aux[s + k] as usize]
+                .mul_add(self.val[self.aux[s + n + k] as usize], acc);
             k += 1;
         }
-        s
+        acc
     }
 
     /// ⟨x, y⟩ as a single fused node (paper: `innerProduct`). The
     /// 4-accumulator FMA loop is the engine's ILP workhorse (Appendix F.2).
     pub fn inner_product(&mut self, xs: &[Value], ys: &[Value]) -> Value {
         assert_eq!(xs.len(), ys.len(), "innerProduct length mismatch");
-        let s = self.gather_dot_ilp4(xs, ys, T::ZERO);
         let start = self.aux.len() as u32;
         self.aux.extend(xs.iter().map(|v| v.0));
         self.aux.extend(ys.iter().map(|v| v.0));
+        let s = self.gather_dot_aux_ilp4(start as usize, xs.len(), T::ZERO);
         self.push(Op::InnerProduct, start, xs.len() as u32, s)
     }
 
     /// ⟨x, y⟩ + b (paper: `innerProductWithBias`).
     pub fn inner_product_bias(&mut self, xs: &[Value], ys: &[Value], bias: Value) -> Value {
         assert_eq!(xs.len(), ys.len(), "innerProductWithBias length mismatch");
-        let s = self.gather_dot_ilp4(xs, ys, self.val[bias.idx()]);
         let start = self.aux.len() as u32;
         self.aux.extend(xs.iter().map(|v| v.0));
         self.aux.extend(ys.iter().map(|v| v.0));
         self.aux.push(bias.0);
+        let s = self.gather_dot_aux_ilp4(start as usize, xs.len(), self.val[bias.idx()]);
         self.push(Op::InnerProductBias, start, xs.len() as u32, s)
     }
 
@@ -812,11 +822,12 @@ impl<T: Scalar> Tape<T> {
         self.push(Op::DotRangeBias, x0.0, meta, s)
     }
 
-    /// Fused softmax cross-entropy `logsumexp(z) − z_target` over a
-    /// contiguous logits range (ablation op; see `ops::Op::CeLogitsRange`).
-    pub fn ce_logits_range(&mut self, z0: Value, n: usize, target: usize) -> Value {
-        debug_assert!(target < n);
-        let zs = &self.val[z0.idx()..z0.idx() + n];
+    /// Stable-logsumexp cross-entropy value over a contiguous logits
+    /// range — the single forward semantics of `Op::CeLogitsRange`, shared
+    /// by the eager constructor and the replay interpreter.
+    #[inline(always)]
+    pub(crate) fn eval_ce_logits(&self, z0: usize, n: usize, target: usize) -> T {
+        let zs = &self.val[z0..z0 + n];
         // Numerically stable logsumexp.
         let mut m = zs[0];
         for &z in &zs[1..] {
@@ -827,7 +838,14 @@ impl<T: Scalar> Tape<T> {
             s += (z - m).exp();
         }
         let lse = m + s.ln();
-        let loss = lse - zs[target];
+        lse - zs[target]
+    }
+
+    /// Fused softmax cross-entropy `logsumexp(z) − z_target` over a
+    /// contiguous logits range (ablation op; see `ops::Op::CeLogitsRange`).
+    pub fn ce_logits_range(&mut self, z0: Value, n: usize, target: usize) -> Value {
+        debug_assert!(target < n);
+        let loss = self.eval_ce_logits(z0.idx(), n, target);
         let meta = self.aux.len() as u32;
         self.aux.push(n as u32);
         self.aux.push(target as u32);
@@ -843,19 +861,20 @@ impl<T: Scalar> Tape<T> {
         start
     }
 
-    /// ⟨x, w⟩ + b where the x-ids live at `xs_at` (from [`Tape::share_ids`],
-    /// length `n`) and `w` is the contiguous parameter range starting at
-    /// `w0`. One node per output unit; the x view is shared.
-    pub fn dot_param_range(&mut self, xs_at: u32, n: usize, w0: Value, bias: Value) -> Value {
-        debug_assert!(xs_at as usize + n <= self.aux.len());
-        debug_assert!(w0.idx() + n <= self.len());
+    /// Forward value of a `DotParamRange` node — shared by the eager
+    /// constructor and the replay interpreter so both execution modes run
+    /// the identical ILP loop.
+    #[inline(always)]
+    pub(crate) fn eval_dot_param_range(&self, xs_at: usize, n: usize, w0: usize, bias: usize) -> T {
+        debug_assert!(xs_at + n <= self.aux.len());
+        debug_assert!(w0 + n <= self.len());
         // SAFETY: debug-asserted bounds above; the tape invariant keeps all
         // ids < len. Four independent accumulators break the FMA latency
         // chain (the paper's unrolled-inner-product ILP trick, F.2).
-        let s = unsafe {
-            let xs = self.aux.as_ptr().add(xs_at as usize);
+        unsafe {
+            let xs = self.aux.as_ptr().add(xs_at);
             let vals = self.val.as_ptr();
-            let ws = vals.add(w0.idx());
+            let ws = vals.add(w0);
             let (mut s0, mut s1, mut s2, mut s3) = (T::ZERO, T::ZERO, T::ZERO, T::ZERO);
             let mut k = 0usize;
             while k + 4 <= n {
@@ -865,13 +884,20 @@ impl<T: Scalar> Tape<T> {
                 s3 = (*vals.add(*xs.add(k + 3) as usize)).mul_add(*ws.add(k + 3), s3);
                 k += 4;
             }
-            let mut s = (s0 + s1) + (s2 + s3) + self.val[bias.idx()];
+            let mut s = (s0 + s1) + (s2 + s3) + self.val[bias];
             while k < n {
                 s = (*vals.add(*xs.add(k) as usize)).mul_add(*ws.add(k), s);
                 k += 1;
             }
             s
-        };
+        }
+    }
+
+    /// ⟨x, w⟩ + b where the x-ids live at `xs_at` (from [`Tape::share_ids`],
+    /// length `n`) and `w` is the contiguous parameter range starting at
+    /// `w0`. One node per output unit; the x view is shared.
+    pub fn dot_param_range(&mut self, xs_at: u32, n: usize, w0: Value, bias: Value) -> Value {
+        let s = self.eval_dot_param_range(xs_at as usize, n, w0.idx(), bias.idx());
         let meta = self.aux.len() as u32;
         self.aux.push(n as u32);
         self.aux.push(w0.0);
@@ -879,22 +905,30 @@ impl<T: Scalar> Tape<T> {
         self.push(Op::DotParamRange, xs_at, meta, s)
     }
 
-    /// ⟨val[w0..w0+n], val[x0 + k·stride] for k in 0..n⟩ — contiguous
-    /// weights against a constant-stride id sequence (§Perf pass; used by
-    /// the attention value gather, where v columns sit at a fixed stride).
-    pub fn dot_strided(&mut self, w0: Value, x0: Value, stride: usize, n: usize) -> Value {
-        debug_assert!(w0.idx() + n <= self.len());
-        debug_assert!(n == 0 || x0.idx() + (n - 1) * stride < self.len());
+    /// Forward value of a `DotStrided` node — shared by the eager
+    /// constructor and the replay interpreter.
+    #[inline(always)]
+    pub(crate) fn eval_dot_strided(&self, w0: usize, x0: usize, stride: usize, n: usize) -> T {
+        debug_assert!(w0 + n <= self.len());
+        debug_assert!(n == 0 || x0 + (n - 1) * stride < self.len());
         let mut s = T::ZERO;
         // SAFETY: bounds debug-asserted above; ids < len by tape invariant.
         unsafe {
             for k in 0..n {
                 s = self
                     .val
-                    .get_unchecked(w0.idx() + k)
-                    .mul_add(*self.val.get_unchecked(x0.idx() + k * stride), s);
+                    .get_unchecked(w0 + k)
+                    .mul_add(*self.val.get_unchecked(x0 + k * stride), s);
             }
         }
+        s
+    }
+
+    /// ⟨val[w0..w0+n], val[x0 + k·stride] for k in 0..n⟩ — contiguous
+    /// weights against a constant-stride id sequence (§Perf pass; used by
+    /// the attention value gather, where v columns sit at a fixed stride).
+    pub fn dot_strided(&mut self, w0: Value, x0: Value, stride: usize, n: usize) -> Value {
+        let s = self.eval_dot_strided(w0.idx(), x0.idx(), stride, n);
         let meta = self.aux.len() as u32;
         self.aux.push(w0.0);
         self.aux.push(n as u32);

@@ -1,0 +1,594 @@
+//! Record-once / replay-many execution: a static-graph replay engine for
+//! the steady-state training loop.
+//!
+//! The eager path re-*records* the identical graph topology every sample:
+//! each oracle call re-appends every op, argument slot and aux index, and
+//! [`Tape::rewind`] throws it all away. That per-step graph-construction
+//! tax is exactly what eager frameworks pay and what jit-style capture
+//! amortizes — and because the SoA tape *is already* the captured
+//! program, BurTorch can have the capture win without a compiler:
+//!
+//! 1. **Record** one sample's graph above the parameter base into a
+//!    frozen [`Recording`] (the existing `op`/`a`/`b`/`aux`/`consts` SoA
+//!    slices stay on the tape; the recording is just the extent plus the
+//!    root).
+//! 2. **Rebind** the next sample's inputs into the recorded slots —
+//!    leaf values via [`Tape::set_value`], gathered id runs via
+//!    [`Tape::rebind_aux_range`], argument slots via
+//!    [`Tape::rebind_arg_a`], fused-CE targets via
+//!    [`Tape::rebind_ce_target`].
+//! 3. **Replay** with [`Tape::replay_forward`]: a tight non-appending
+//!    forward sweep `val[i] = eval(op[i], …)` over the frozen arrays — no
+//!    `Vec` pushes, no builder branching, no capacity checks.
+//! 4. Reuse the existing backward scan unchanged
+//!    ([`Tape::backward_above`] / [`Tape::backward_with_scratch`]).
+//!
+//! Replay is **bitwise identical** to eager execution: every op is
+//! re-evaluated by the same shared kernel the eager constructor used
+//! (`dot_ilp4`, `gather_dot_aux_ilp4`, `eval_dot_param_range`,
+//! `eval_dot_strided`, `eval_ce_logits`) or by the same scalar formula,
+//! over the same node ids, in the same construction order.
+//!
+//! ## When a recording is invalidated
+//!
+//! A recording assumes the graph **topology** is static across samples:
+//! same ops, same node count, same aux shapes. Anything data-dependent in
+//! the *structure* — a context window of a different length, control flow
+//! that adds or skips nodes, a loss composed over a different number of
+//! positions — invalidates it; such oracles must stay on the eager path.
+//! Data-dependent *values* are fine (ops like `CeLogitsRange` recompute
+//! their internal max/logsumexp from the current values on every sweep).
+
+use super::{Mark, Tape, Value};
+use crate::ops::Op;
+use crate::scalar::Scalar;
+
+/// A frozen sample graph on the tape: the extent `[base, end)` recorded
+/// above the parameter base, plus the loss root. The recorded nodes stay
+/// resident on the tape; the `Recording` itself is three small indices,
+/// `Copy`, and valid for any tape holding the identical prefix (replica
+/// tapes built with [`Tape::clone_prefix`] and driven by the same model
+/// record bitwise-identical segments).
+///
+/// # Examples
+///
+/// Record one sample, then drive further samples by rebinding the input
+/// leaves and replaying in place — zero appends, zero allocations:
+///
+/// ```
+/// use burtorch::tape::{Recording, Tape};
+///
+/// let mut tape = Tape::<f64>::new();
+/// let w = tape.leaves(&[0.5, -2.0]);           // parameters at the base
+/// let base = tape.mark();
+/// // Recording pass: build one sample eagerly. loss = ⟨w, x⟩².
+/// let x = tape.leaves(&[1.0, 0.0]);            // rebindable input leaves
+/// let dot = tape.dot_range(x, w, 2);
+/// let loss = tape.sqr(dot);
+/// let rec = Recording::capture(&tape, base, loss);
+/// assert_eq!(rec.node_count(), 4);
+///
+/// let len = tape.len();
+/// for k in 0..3u32 {
+///     tape.set_value(x, 1.0 + k as f64);       // rebind the inputs…
+///     tape.replay_forward(&rec);               // …and re-evaluate in place
+///     let expect = (0.5 * (1.0 + k as f64)).powi(2);
+///     assert_eq!(tape.value(rec.root()), expect);
+///     tape.backward_above(rec.root(), rec.base());
+///     assert_eq!(tape.len(), len, "replay never appends");
+/// }
+/// ```
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Recording {
+    base: Mark,
+    end: Mark,
+    root: Value,
+}
+
+impl Recording {
+    /// Freeze the segment `[base, current extent)` as a recording with
+    /// loss root `root`. Call immediately after eagerly building one
+    /// sample's graph on top of `base`.
+    ///
+    /// Panics if `root` does not lie inside the recorded segment.
+    pub fn capture<T: Scalar>(tape: &Tape<T>, base: Mark, root: Value) -> Recording {
+        let end = tape.mark();
+        assert!(
+            base.nodes <= end.nodes && base.aux <= end.aux && base.consts <= end.consts,
+            "recording base is ahead of the tape"
+        );
+        assert!(
+            root.0 >= base.nodes && root.0 < end.nodes,
+            "recording root {} outside the recorded segment [{}, {})",
+            root.0,
+            base.nodes,
+            end.nodes
+        );
+        Recording { base, end, root }
+    }
+
+    /// The parameter-base mark the recording sits on (the backward floor).
+    pub fn base(&self) -> Mark {
+        self.base
+    }
+
+    /// The tape extent at capture time.
+    pub fn end(&self) -> Mark {
+        self.end
+    }
+
+    /// The recorded loss root.
+    pub fn root(&self) -> Value {
+        self.root
+    }
+
+    /// Number of recorded (per-sample) nodes.
+    pub fn node_count(&self) -> usize {
+        (self.end.nodes - self.base.nodes) as usize
+    }
+}
+
+impl<T: Scalar> Tape<T> {
+    /// Re-evaluate the recorded segment in place: one tight forward sweep
+    /// `val[i] = eval(op[i], …)` over the frozen SoA arrays. Performs
+    /// **zero appends and zero heap allocations** — this is the
+    /// steady-state fast path of `--exec replay`.
+    ///
+    /// Every op is evaluated by the same kernel (or the same scalar
+    /// formula) its eager constructor used, so a replayed sweep is
+    /// bitwise identical to rewinding and re-recording the graph eagerly.
+    ///
+    /// The caller must have rebound the sample's inputs first (leaf
+    /// values, gathered aux ids, argument slots, CE targets); leaves are
+    /// skipped so rebound input values survive the sweep.
+    pub fn replay_forward(&mut self, rec: &Recording) {
+        let lo = rec.base.nodes as usize;
+        let hi = rec.end.nodes as usize;
+        // Real assert (once per sweep, not per node): the unchecked fused
+        // kernels below rely on every recorded id being < len, so a
+        // recording replayed on a rewound tape must panic, not read OOB.
+        assert!(hi <= self.len(), "recording extends past the live tape");
+        for i in lo..hi {
+            let v = match self.op[i] {
+                // Rebound inputs (and recorded constants) keep their value.
+                Op::Leaf => continue,
+                Op::Relu => {
+                    let x = self.val[self.a[i] as usize];
+                    if x > T::ZERO {
+                        x
+                    } else {
+                        T::ZERO
+                    }
+                }
+                Op::Tanh => self.val[self.a[i] as usize].tanh(),
+                Op::Exp => self.val[self.a[i] as usize].exp(),
+                Op::NegLog => -self.val[self.a[i] as usize].ln(),
+                Op::Sigmoid => {
+                    let x = self.val[self.a[i] as usize];
+                    T::ONE / (T::ONE + (-x).exp())
+                }
+                Op::Inv => T::ONE / self.val[self.a[i] as usize],
+                Op::Sqr => {
+                    let x = self.val[self.a[i] as usize];
+                    x * x
+                }
+                Op::Cub => {
+                    let x = self.val[self.a[i] as usize];
+                    x * x * x
+                }
+                Op::Log => self.val[self.a[i] as usize].ln(),
+                Op::Sqrt => self.val[self.a[i] as usize].sqrt(),
+                Op::InvSqrt => T::ONE / self.val[self.a[i] as usize].sqrt(),
+                Op::NegOp => -self.val[self.a[i] as usize],
+                Op::Add => self.val[self.a[i] as usize] + self.val[self.b[i] as usize],
+                Op::Sub => self.val[self.a[i] as usize] - self.val[self.b[i] as usize],
+                Op::Mul => self.val[self.a[i] as usize] * self.val[self.b[i] as usize],
+                Op::MulConst => self.val[self.a[i] as usize] * self.consts[self.b[i] as usize],
+                Op::Div => self.val[self.a[i] as usize] / self.val[self.b[i] as usize],
+                Op::Mean2 => {
+                    (self.val[self.a[i] as usize] + self.val[self.b[i] as usize]) * T::HALF
+                }
+                Op::AddSquares => {
+                    let (x, y) = (self.val[self.a[i] as usize], self.val[self.b[i] as usize]);
+                    x * x + y * y
+                }
+                Op::MeanSquares => {
+                    let (x, y) = (self.val[self.a[i] as usize], self.val[self.b[i] as usize]);
+                    (x * x + y * y) * T::HALF
+                }
+                Op::NegMean2 => {
+                    -(self.val[self.a[i] as usize] + self.val[self.b[i] as usize]) * T::HALF
+                }
+                Op::ReduceSum => {
+                    let (s, n) = (self.a[i] as usize, self.b[i] as usize);
+                    let mut acc = T::ZERO;
+                    for k in s..s + n {
+                        acc += self.val[self.aux[k] as usize];
+                    }
+                    acc
+                }
+                Op::ReduceSub => {
+                    let (s, n) = (self.a[i] as usize, self.b[i] as usize);
+                    let mut acc = self.val[self.aux[s] as usize];
+                    for k in s + 1..s + n {
+                        acc -= self.val[self.aux[k] as usize];
+                    }
+                    acc
+                }
+                Op::ReduceMul => {
+                    let (s, n) = (self.a[i] as usize, self.b[i] as usize);
+                    let mut acc = T::ONE;
+                    for k in s..s + n {
+                        acc *= self.val[self.aux[k] as usize];
+                    }
+                    acc
+                }
+                Op::ReduceMean => {
+                    let (s, n) = (self.a[i] as usize, self.b[i] as usize);
+                    let mut acc = T::ZERO;
+                    for k in s..s + n {
+                        acc += self.val[self.aux[k] as usize];
+                    }
+                    acc / T::from_usize(n)
+                }
+                Op::ReduceSumSquares => {
+                    let (s, n) = (self.a[i] as usize, self.b[i] as usize);
+                    let mut acc = T::ZERO;
+                    for k in s..s + n {
+                        let x = self.val[self.aux[k] as usize];
+                        acc = x.mul_add(x, acc);
+                    }
+                    acc
+                }
+                Op::ReduceMeanSquares => {
+                    let (s, n) = (self.a[i] as usize, self.b[i] as usize);
+                    let mut acc = T::ZERO;
+                    for k in s..s + n {
+                        let x = self.val[self.aux[k] as usize];
+                        acc = x.mul_add(x, acc);
+                    }
+                    acc / T::from_usize(n)
+                }
+                Op::ReduceNegMean => {
+                    let (s, n) = (self.a[i] as usize, self.b[i] as usize);
+                    let mut acc = T::ZERO;
+                    for k in s..s + n {
+                        acc += self.val[self.aux[k] as usize];
+                    }
+                    -(acc / T::from_usize(n))
+                }
+                Op::InnerProduct => {
+                    let (s, n) = (self.a[i] as usize, self.b[i] as usize);
+                    self.gather_dot_aux_ilp4(s, n, T::ZERO)
+                }
+                Op::InnerProductBias => {
+                    let (s, n) = (self.a[i] as usize, self.b[i] as usize);
+                    let bias = self.aux[s + 2 * n] as usize;
+                    self.gather_dot_aux_ilp4(s, n, self.val[bias])
+                }
+                Op::DotRange => {
+                    let x0 = self.a[i] as usize;
+                    let meta = self.b[i] as usize;
+                    let w0 = self.aux[meta] as usize;
+                    let n = self.aux[meta + 1] as usize;
+                    crate::ops::dot_ilp4(
+                        &self.val[x0..x0 + n],
+                        &self.val[w0..w0 + n],
+                        T::ZERO,
+                    )
+                }
+                Op::DotRangeBias => {
+                    let x0 = self.a[i] as usize;
+                    let meta = self.b[i] as usize;
+                    let w0 = self.aux[meta] as usize;
+                    let n = self.aux[meta + 1] as usize;
+                    let bias = self.aux[meta + 2] as usize;
+                    crate::ops::dot_ilp4(
+                        &self.val[x0..x0 + n],
+                        &self.val[w0..w0 + n],
+                        self.val[bias],
+                    )
+                }
+                Op::CeLogitsRange => {
+                    let z0 = self.a[i] as usize;
+                    let meta = self.b[i] as usize;
+                    let n = self.aux[meta] as usize;
+                    let target = self.aux[meta + 1] as usize;
+                    self.eval_ce_logits(z0, n, target)
+                }
+                Op::DotParamRange => {
+                    let xs_at = self.a[i] as usize;
+                    let meta = self.b[i] as usize;
+                    let n = self.aux[meta] as usize;
+                    let w0 = self.aux[meta + 1] as usize;
+                    let bias = self.aux[meta + 2] as usize;
+                    self.eval_dot_param_range(xs_at, n, w0, bias)
+                }
+                Op::DotStrided => {
+                    let x0 = self.a[i] as usize;
+                    let meta = self.b[i] as usize;
+                    let w0 = self.aux[meta] as usize;
+                    let n = self.aux[meta + 1] as usize;
+                    let stride = self.aux[meta + 2] as usize;
+                    self.eval_dot_strided(w0, x0, stride, n)
+                }
+            };
+            self.val[i] = v;
+        }
+    }
+
+    // ---- input rebinding --------------------------------------------------
+
+    /// Rewrite one aux entry to a new node id — rebinding a single
+    /// gathered operand of a recorded varying/fused op.
+    ///
+    /// The bounds checks are real (not debug-only): rebound ids feed the
+    /// unchecked fused kernels in [`Tape::replay_forward`], so a bad id
+    /// (e.g. an out-of-vocab token) must panic here — on the cold rebind
+    /// path — rather than read out of bounds during the hot sweep.
+    #[inline(always)]
+    pub fn rebind_aux_id(&mut self, at: u32, id: Value) {
+        assert!((at as usize) < self.aux.len(), "aux rebind out of range");
+        assert!(id.idx() < self.len(), "rebound id past the live tape");
+        self.aux[at as usize] = id.0;
+    }
+
+    /// Rewrite `n` aux entries starting at `at` to the consecutive ids
+    /// `first, first+1, …` — the embedding-row rebind: a recorded gather
+    /// view (published via [`Tape::share_ids`]) is redirected to a new
+    /// contiguous parameter run without any allocation.
+    ///
+    /// Bounds are real asserts (two compares per call, not per element):
+    /// see [`Tape::rebind_aux_id`] for why.
+    #[inline]
+    pub fn rebind_aux_range(&mut self, at: u32, first: Value, n: usize) {
+        assert!(at as usize + n <= self.aux.len(), "aux rebind out of range");
+        assert!(first.idx() + n <= self.len(), "rebound run past the live tape");
+        for k in 0..n {
+            self.aux[at as usize + k] = first.0 + k as u32;
+        }
+    }
+
+    /// Rewrite the first-argument slot of a recorded node — rebinding a
+    /// direct operand (e.g. the token-embedding side of a GPT input add,
+    /// or the target-probability input of a composed cross-entropy).
+    /// The replacement must respect the topological invariant; the assert
+    /// is real (`arg < node < len` keeps the unchecked kernels sound).
+    #[inline(always)]
+    pub fn rebind_arg_a(&mut self, node: Value, arg: Value) {
+        assert!(node.idx() < self.len(), "rebind target past the live tape");
+        assert!(arg.0 < node.0, "rebind would break topological order");
+        self.a[node.idx()] = arg.0;
+    }
+
+    /// Rewrite the target index of a recorded fused cross-entropy node
+    /// ([`Tape::ce_logits_range`]).
+    #[inline]
+    pub fn rebind_ce_target(&mut self, node: Value, target: usize) {
+        let i = node.idx();
+        assert!(
+            matches!(self.op[i], Op::CeLogitsRange),
+            "rebind_ce_target on a non-CE node"
+        );
+        let meta = self.b[i] as usize;
+        assert!(
+            target < self.aux[meta] as usize,
+            "CE target {target} out of range"
+        );
+        self.aux[meta + 1] = target as u32;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tape::Scratch;
+
+    /// Build a graph exercising every op whose inputs are two rebindable
+    /// leaves; returns (x0, root). Deterministic topology: node ids are
+    /// identical across rebuilds.
+    fn omni_graph(t: &mut Tape<f64>, base_vals: [f64; 2]) -> (Value, Value) {
+        let x = t.leaves(&base_vals);
+        let x0 = x;
+        let x1 = Value(x.0 + 1);
+        // Keep everything strictly positive where ln/sqrt need it.
+        let sx0 = t.sqr(x0);
+        let pos = t.add_squares(x0, x1);
+        let shifted = {
+            let c = t.mul_const(pos, 1.0);
+            t.add(c, sx0)
+        };
+        let u1 = t.relu(x0);
+        let u2 = t.tanh(x1);
+        let u3 = t.exp(x0);
+        let u4 = t.neg_log(shifted);
+        let u5 = t.sigmoid(x1);
+        let u6 = t.inv(shifted);
+        let u7 = t.pow3(x0);
+        let u8 = t.log(shifted);
+        let u9 = t.sqrt(shifted);
+        let u10 = t.inv_sqrt(shifted);
+        let u11 = t.neg(x1);
+        let b1 = t.sub(u1, u2);
+        let b2 = t.mul(u3, u5);
+        let b3 = t.div(u4, shifted);
+        let b4 = t.mean2(u6, u7);
+        let b5 = t.mean_squares2(u8, u9);
+        let b6 = t.neg_mean2(u10, u11);
+        let all = [b1, b2, b3, b4, b5, b6];
+        let r1 = t.reduce_sum(&all);
+        let r2 = t.reduce_sub(&all);
+        let r3 = t.reduce_mul(&[u5, u9, u10]);
+        let r4 = t.reduce_mean(&all);
+        let r5 = t.reduce_sum_squares(&all);
+        let r6 = t.reduce_mean_squares(&all);
+        let r7 = t.reduce_neg_mean(&all);
+        let ip = t.inner_product(&[r1, r2, r3], &[r4, r5, r6]);
+        let ipb = t.inner_product_bias(&[r1, r2], &[r3, r4], r7);
+        let dr = t.dot_range(r1, r4, 3);
+        let drb = t.dot_range_bias(r1, r4, 3, ip);
+        let view = t.share_ids(&[r1, r2, r3, r4, r5]);
+        let dpr = t.dot_param_range(view, 5, r2, ipb);
+        let ds = t.dot_strided(r1, b1, 2, 3);
+        let logits_first = t.add(dr, drb);
+        let _l2 = t.add(dpr, ds);
+        let _l3 = t.mul_const(logits_first, 0.5);
+        let ce = t.ce_logits_range(logits_first, 3, 1);
+        let tail = t.reduce_sum(&[ip, ipb, dpr, ds, ce]);
+        let root = t.tanh(tail);
+        (x0, root)
+    }
+
+    #[test]
+    fn replay_matches_eager_rebuild_bitwise_across_all_ops() {
+        let samples = [[0.7, -0.3], [1.3, 0.9], [-0.2, 2.1], [0.05, -1.7]];
+
+        // Reference: rebuild eagerly per sample (rewind batching).
+        let mut eager = Tape::<f64>::new();
+        let w = eager.leaves(&[0.25, -0.5]); // a dummy parameter base
+        let base = eager.mark();
+        let _ = w;
+        let mut eager_vals: Vec<Vec<u64>> = Vec::new();
+        let mut eager_grads: Vec<Vec<u64>> = Vec::new();
+        for s in samples {
+            let (_x0, root) = omni_graph(&mut eager, s);
+            eager_vals.push((0..eager.len()).map(|i| eager.value(Value(i as u32)).to_bits()).collect());
+            eager.backward_above(root, base);
+            eager_grads.push((0..eager.len()).map(|i| eager.grad(Value(i as u32)).to_bits()).collect());
+            eager.rewind(base);
+        }
+
+        // Replay: record the first sample, rebind + replay the rest.
+        let mut rt = Tape::<f64>::new();
+        let _w = rt.leaves(&[0.25, -0.5]);
+        let rbase = rt.mark();
+        let (x0, root) = omni_graph(&mut rt, samples[0]);
+        let rec = Recording::capture(&rt, rbase, root);
+        let frozen_len = rt.len();
+        for (k, s) in samples.iter().enumerate() {
+            if k > 0 {
+                rt.set_value(x0, s[0]);
+                rt.set_value(Value(x0.0 + 1), s[1]);
+                rt.replay_forward(&rec);
+            }
+            assert_eq!(rt.len(), frozen_len, "replay appended nodes");
+            let vals: Vec<u64> =
+                (0..rt.len()).map(|i| rt.value(Value(i as u32)).to_bits()).collect();
+            assert_eq!(vals, eager_vals[k], "forward values diverged at sample {k}");
+            rt.backward_above(rec.root(), rec.base());
+            let grads: Vec<u64> =
+                (0..rt.len()).map(|i| rt.grad(Value(i as u32)).to_bits()).collect();
+            assert_eq!(grads, eager_grads[k], "gradients diverged at sample {k}");
+        }
+    }
+
+    #[test]
+    fn replay_steps_do_not_touch_capacities() {
+        let mut t = Tape::<f64>::new();
+        let _w = t.leaves(&[1.0, 2.0]);
+        let base = t.mark();
+        let (x0, root) = omni_graph(&mut t, [0.4, 0.6]);
+        let rec = Recording::capture(&t, base, root);
+        let caps = t.capacities();
+        let aux_len = t.aux_len();
+        let mut scratch = Scratch::with_capacity(t.len());
+        for k in 0..10 {
+            t.set_value(x0, 0.1 + k as f64 * 0.3);
+            t.replay_forward(&rec);
+            t.backward_with_scratch(rec.root(), &mut scratch);
+        }
+        assert_eq!(t.capacities(), caps, "replay must not reallocate");
+        assert_eq!(t.aux_len(), aux_len, "replay must not grow the aux pool");
+    }
+
+    #[test]
+    fn rebind_aux_range_redirects_a_gather_view() {
+        let mut t = Tape::<f64>::new();
+        let p = t.leaves(&[1.0, 2.0, 3.0, 10.0, 20.0, 30.0]);
+        let base = t.mark();
+        let view = t.share_ids(&[p, Value(p.0 + 1), Value(p.0 + 2)]);
+        let bias = Value(p.0); // reuse a param as bias for simplicity
+        let d = t.dot_param_range(view, 3, p, bias);
+        let rec = Recording::capture(&t, base, d);
+        // ⟨(1,2,3), (1,2,3)⟩ + 1 = 15.
+        assert_eq!(t.value(d), 15.0);
+        // Redirect the view at rows 3..6: ⟨(10,20,30), (1,2,3)⟩ + 1 = 141.
+        t.rebind_aux_range(view, Value(p.0 + 3), 3);
+        t.replay_forward(&rec);
+        assert_eq!(t.value(rec.root()), 141.0);
+    }
+
+    #[test]
+    fn rebind_ce_target_changes_the_fused_loss() {
+        let mut t = Tape::<f64>::new();
+        let z = t.leaves(&[0.0, 1.0, 2.0]);
+        let base = t.mark();
+        let logits = Value(z.0);
+        // CE needs contiguous post-base logits; rebuild them above base.
+        let l0 = t.mul_const(logits, 1.0);
+        let _l1 = t.mul_const(Value(logits.0 + 1), 1.0);
+        let _l2 = t.mul_const(Value(logits.0 + 2), 1.0);
+        let ce = t.ce_logits_range(l0, 3, 0);
+        let rec = Recording::capture(&t, base, ce);
+        let loss_t0 = t.value(ce);
+        t.rebind_ce_target(ce, 2);
+        t.replay_forward(&rec);
+        let loss_t2 = t.value(rec.root());
+        // Larger logit at the target ⇒ smaller loss.
+        assert!(loss_t2 < loss_t0, "{loss_t2} vs {loss_t0}");
+        // And it matches an eager rebuild with target 2.
+        let mut t2 = Tape::<f64>::new();
+        let z2 = t2.leaves(&[0.0, 1.0, 2.0]);
+        let l0b = t2.mul_const(z2, 1.0);
+        let _ = t2.mul_const(Value(z2.0 + 1), 1.0);
+        let _ = t2.mul_const(Value(z2.0 + 2), 1.0);
+        let ce2 = t2.ce_logits_range(l0b, 3, 2);
+        assert_eq!(t2.value(ce2).to_bits(), loss_t2.to_bits());
+    }
+
+    #[test]
+    fn rebind_arg_a_redirects_a_direct_operand() {
+        let mut t = Tape::<f64>::new();
+        let p = t.leaves(&[3.0, 7.0]);
+        let base = t.mark();
+        let y = t.sqr(p);
+        let rec = Recording::capture(&t, base, y);
+        assert_eq!(t.value(y), 9.0);
+        t.rebind_arg_a(y, Value(p.0 + 1));
+        t.replay_forward(&rec);
+        assert_eq!(t.value(rec.root()), 49.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside the recorded segment")]
+    fn capture_rejects_pre_base_root() {
+        let mut t = Tape::<f64>::new();
+        let w = t.leaf(1.0);
+        let base = t.mark();
+        let _x = t.leaf(2.0);
+        Recording::capture(&t, base, w);
+    }
+
+    #[test]
+    fn recording_is_reusable_after_parameter_updates() {
+        // The SGD pattern: params change between replays; the recording
+        // keeps tracking the current parameter values.
+        let mut t = Tape::<f64>::new();
+        let w = t.leaf(2.0);
+        let base = t.mark();
+        let x = t.leaf(3.0);
+        let y = t.mul(w, x);
+        let loss = t.sqr(y);
+        let rec = Recording::capture(&t, base, loss);
+        for step in 0..5 {
+            t.set_value(x, 1.0 + step as f64);
+            t.replay_forward(&rec);
+            let wx = t.value(w) * t.value(x);
+            assert_eq!(t.value(rec.root()), wx * wx);
+            t.backward_above(rec.root(), rec.base());
+            let g = t.grad(w);
+            let wv = t.value(w);
+            t.set_value(w, wv - 0.01 * g);
+        }
+    }
+}

@@ -1,0 +1,237 @@
+//! Eager ↔ replay equivalence suite: `--exec replay` must be a pure
+//! performance knob. Same seed ⇒ bitwise-identical loss curves and
+//! post-training parameters for the char MLP and the GPT, for any thread
+//! count and any compression mode — and a steady-state replay step must
+//! allocate nothing and append nothing after recording.
+
+use burtorch::coordinator::{ExecMode, Trainer, TrainerOptions};
+use burtorch::data::{names_dataset, CharCorpus};
+use burtorch::nn::{CeMode, CharMlp, CharMlpBinds, CharMlpConfig, Gpt, GptConfig};
+use burtorch::parallel::{
+    MinibatchGradEngine, ParallelOptions, ReductionCompression, ReplaySessions, SampleOracle,
+};
+use burtorch::rng::Rng;
+use burtorch::tape::{Recording, Tape, Value};
+
+fn curves_bitwise_equal(a: &[(usize, f64)], b: &[(usize, f64)], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: curve lengths differ");
+    for ((s1, l1), (s2, l2)) in a.iter().zip(b) {
+        assert_eq!(s1, s2, "{what}: steps differ");
+        assert_eq!(l1.to_bits(), l2.to_bits(), "{what}: step {s1}: {l1} vs {l2}");
+    }
+}
+
+/// Train the char MLP, returning (loss curve, post-training param bits).
+fn train_mlp(
+    exec: ExecMode,
+    threads: usize,
+    compression: ReductionCompression,
+) -> (Vec<(usize, f64)>, Vec<u32>) {
+    let ds = names_dataset(200, 16, 31);
+    let mut tape = Tape::<f32>::new();
+    let mut rng = Rng::new(12);
+    let model = CharMlp::new(&mut tape, CharMlpConfig::paper(4), &mut rng);
+    let trainer = Trainer::new(TrainerOptions {
+        steps: 10,
+        batch: 8,
+        lr: 0.2,
+        ce: CeMode::Fused,
+        log_every: 1,
+        seed: 5,
+        threads,
+        compression,
+        exec,
+        ..Default::default()
+    });
+    let report = trainer.train_char_mlp(&mut tape, &model, &ds.examples);
+    let params: Vec<u32> = model.params.iter().map(|p| tape.value(p).to_bits()).collect();
+    (report.loss_curve, params)
+}
+
+/// Train the small GPT, returning (loss curve, post-training param bits).
+fn train_gpt(
+    exec: ExecMode,
+    threads: usize,
+    compression: ReductionCompression,
+) -> (Vec<(usize, f64)>, Vec<u32>) {
+    let corpus = CharCorpus::shakespeare(3_000, 8);
+    let mut tape = Tape::<f32>::new();
+    let mut rng = Rng::new(14);
+    let cfg = GptConfig {
+        n_layer: 1,
+        d_model: 8,
+        n_head: 2,
+        ..GptConfig::paper()
+    };
+    let model = Gpt::new(&mut tape, cfg, &mut rng);
+    let trainer = Trainer::new(TrainerOptions {
+        steps: 5,
+        batch: 4,
+        lr: 0.05,
+        ce: CeMode::Fused,
+        log_every: 1,
+        seed: 9,
+        threads,
+        compression,
+        exec,
+        ..Default::default()
+    });
+    let report = trainer.train_gpt(&mut tape, &model, &corpus);
+    let params: Vec<u32> = model.params.iter().map(|p| tape.value(p).to_bits()).collect();
+    (report.loss_curve, params)
+}
+
+#[test]
+fn char_mlp_replay_is_bitwise_identical_across_threads_and_compression() {
+    for compression in [
+        ReductionCompression::None,
+        ReductionCompression::Ef21 { k: 64, seed: 5 },
+    ] {
+        let (eager_curve, eager_params) = train_mlp(ExecMode::Eager, 1, compression);
+        for threads in [1usize, 2, 4] {
+            let (curve, params) = train_mlp(ExecMode::Replay, threads, compression);
+            curves_bitwise_equal(
+                &eager_curve,
+                &curve,
+                &format!("mlp replay threads={threads} compress={compression}"),
+            );
+            assert_eq!(
+                eager_params, params,
+                "mlp params diverged: threads={threads} compress={compression}"
+            );
+        }
+    }
+}
+
+#[test]
+fn gpt_replay_is_bitwise_identical_across_threads_and_compression() {
+    for compression in [
+        ReductionCompression::None,
+        ReductionCompression::Ef21 { k: 64, seed: 9 },
+    ] {
+        let (eager_curve, eager_params) = train_gpt(ExecMode::Eager, 1, compression);
+        for threads in [1usize, 2, 4] {
+            let (curve, params) = train_gpt(ExecMode::Replay, threads, compression);
+            curves_bitwise_equal(
+                &eager_curve,
+                &curve,
+                &format!("gpt replay threads={threads} compress={compression}"),
+            );
+            assert_eq!(
+                eager_params, params,
+                "gpt params diverged: threads={threads} compress={compression}"
+            );
+        }
+    }
+}
+
+#[test]
+fn gpt_replay_composed_ce_matches_eager_too() {
+    // The composed CE rebinds through the div node's argument slot — a
+    // different mechanism than the fused aux rewrite; cover it end to end.
+    let run = |exec: ExecMode| {
+        let corpus = CharCorpus::shakespeare(2_000, 8);
+        let mut tape = Tape::<f32>::new();
+        let mut rng = Rng::new(15);
+        let cfg = GptConfig {
+            n_layer: 1,
+            d_model: 8,
+            n_head: 2,
+            ..GptConfig::paper()
+        };
+        let model = Gpt::new(&mut tape, cfg, &mut rng);
+        let trainer = Trainer::new(TrainerOptions {
+            steps: 4,
+            batch: 2,
+            lr: 0.05,
+            ce: CeMode::Composed,
+            log_every: 1,
+            seed: 3,
+            threads: 2,
+            exec,
+            ..Default::default()
+        });
+        trainer.train_gpt(&mut tape, &model, &corpus).loss_curve
+    };
+    curves_bitwise_equal(&run(ExecMode::Eager), &run(ExecMode::Replay), "gpt composed CE");
+}
+
+/// Engine-level replay oracle over the char MLP (the trainer's internal
+/// oracle is private; the public model API is enough to build one).
+struct MlpOracle<'a> {
+    model: &'a CharMlp,
+    contexts: Vec<Vec<u32>>,
+    targets: Vec<u32>,
+}
+
+impl<'a> SampleOracle<f32> for MlpOracle<'a> {
+    type Rec = CharMlpBinds;
+
+    fn build(&self, tape: &mut Tape<f32>, idx: usize) -> Value {
+        self.model
+            .loss(tape, &self.contexts[idx], self.targets[idx], CeMode::Fused)
+    }
+
+    fn record(&self, tape: &mut Tape<f32>, idx: usize) -> Option<(Recording, CharMlpBinds)> {
+        Some(self.model.record_sample(
+            tape,
+            &self.contexts[idx],
+            self.targets[idx],
+            CeMode::Fused,
+        ))
+    }
+
+    fn rebind(&self, tape: &mut Tape<f32>, binds: &CharMlpBinds, idx: usize) {
+        self.model
+            .rebind_sample(tape, binds, &self.contexts[idx], self.targets[idx]);
+    }
+}
+
+#[test]
+fn steady_state_replay_steps_allocate_nothing_and_append_nothing() {
+    let mut tape = Tape::<f32>::new();
+    let mut rng = Rng::new(22);
+    let model = CharMlp::new(&mut tape, CharMlpConfig::paper(4), &mut rng);
+    let oracle = MlpOracle {
+        model: &model,
+        contexts: (0..32)
+            .map(|s| (0..16).map(|i| ((i * 3 + s) % 27) as u32).collect())
+            .collect(),
+        targets: (0..32).map(|s| (s % 27) as u32).collect(),
+    };
+    let mut engine = MinibatchGradEngine::new(
+        &tape,
+        model.base,
+        model.params,
+        ParallelOptions {
+            threads: 2,
+            ..Default::default()
+        },
+    );
+    let mut sessions = ReplaySessions::new(engine.threads());
+    let d = model.num_params();
+    let mut grad = vec![0.0f64; d];
+    let batch: Vec<usize> = (0..16).collect();
+
+    // Warmup step: records on every worker tape that runs.
+    engine.accumulate_replay(&mut tape, &batch, &oracle, &mut sessions, &mut grad);
+    assert!(sessions.recorded_count() >= 1);
+    let len = tape.len();
+    let aux = tape.aux_len();
+    let caps = tape.capacities();
+    let rep_caps = engine.replica_capacities();
+
+    // Steady state: replay must neither append nor reallocate, on the
+    // main tape or on any replica.
+    for step in 0..6 {
+        engine.accumulate_replay(&mut tape, &batch, &oracle, &mut sessions, &mut grad);
+        assert_eq!(tape.len(), len, "step {step}: replay appended nodes");
+        assert_eq!(tape.aux_len(), aux, "step {step}: replay grew the aux pool");
+        assert_eq!(tape.capacities(), caps, "step {step}: main tape reallocated");
+        assert_eq!(
+            engine.replica_capacities(),
+            rep_caps,
+            "step {step}: a replica reallocated"
+        );
+    }
+}
