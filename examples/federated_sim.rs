@@ -21,6 +21,7 @@ fn main() {
         hidden: 4,
         names_per_client: 60,
         seed: 5,
+        ..Default::default()
     };
     let d = CharMlpConfig::paper(cfg.hidden).num_params();
     println!(

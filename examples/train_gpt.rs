@@ -10,7 +10,7 @@ use burtorch::coordinator::{Trainer, TrainerOptions};
 use burtorch::data::CharCorpus;
 use burtorch::nn::{CeMode, Gpt, GptConfig};
 use burtorch::rng::Rng;
-use burtorch::tape::Tape;
+use burtorch::tape::{ProgramCache, Tape};
 
 fn main() {
     let steps: usize = std::env::args()
@@ -68,15 +68,25 @@ fn main() {
         report.final_loss
     );
 
-    // Text generation from the trained model.
-    println!("\n--- generated text (temperature 0.8) ---");
+    // Text generation from the trained model, under replay: one recorded
+    // logits program per window length (the prompt fills the block, so a
+    // single shape serves the whole run) and every token after the warmup
+    // is two tight array sweeps — no graph construction.
+    println!("\n--- generated text (temperature 0.8, replayed) ---");
     let prompt: Vec<u32> = corpus.tokens[..8].to_vec();
     let mut gen_rng = Rng::new(17);
-    let out = model.generate(&mut tape, &prompt, 300, 0.8, &mut gen_rng);
+    let mut gen_cache = ProgramCache::new();
+    let out = model.generate_cached(&mut tape, &prompt, 300, 0.8, &mut gen_rng, &mut gen_cache);
     println!(
         "{}{}",
         corpus.tokenizer.decode(&prompt),
         corpus.tokenizer.decode(&out)
+    );
+    println!(
+        "generation cache: {} shape(s), {} record(s), {} replay hit(s)",
+        gen_cache.len(),
+        gen_cache.misses(),
+        gen_cache.hits()
     );
 
     // Machine-readable record for EXPERIMENTS.md.

@@ -192,17 +192,23 @@ fn main() {
     }
 
     // Execution-mode sweep: what does skipping per-sample graph
-    // re-construction buy? Replay must track the eager loss curve
-    // bitwise (asserted) — the delta is pure steady-state overhead.
+    // re-construction *and* backward interpretation buy? The eager row is
+    // the builder + reverse-scan-interpreter baseline; the replay row is
+    // the full compiled path (frozen forward + StepProgram backward — the
+    // `--exec replay` steady state). Replay must track the eager loss
+    // curve bitwise (asserted) — the delta is pure steady-state overhead.
     struct ExecRow {
         exec: ExecMode,
+        /// Which backward drives the row: the reverse-scan "interpreter"
+        /// (eager) or the "compiled" StepProgram instruction list (replay).
+        backward: &'static str,
         threads: usize,
         ms_per_step: f64,
         std_ms: f64,
         speedup_vs_eager: f64,
     }
     let mut exec_rows: Vec<ExecRow> = Vec::new();
-    println!("execution-mode sweep (eager vs replay):");
+    println!("execution-mode sweep (eager/interpreter vs replay/compiled):");
     for &threads in &[1usize, sweep_threads] {
         let mut eager_ms = f64::NAN;
         for exec in [ExecMode::Eager, ExecMode::Replay] {
@@ -237,6 +243,10 @@ fn main() {
             }
             let row = ExecRow {
                 exec,
+                backward: match exec {
+                    ExecMode::Eager => "interpreter",
+                    ExecMode::Replay => "compiled",
+                },
                 threads,
                 ms_per_step: ms,
                 std_ms: report.compute_ms_std,
@@ -244,12 +254,15 @@ fn main() {
             };
             let exec_name = row.exec.to_string();
             println!(
-                "  threads={:>2} exec={:>6}: {:>8.3} ms/step  vs eager {:>5.2}x",
-                row.threads, exec_name, row.ms_per_step, row.speedup_vs_eager
+                "  threads={:>2} exec={:>6} backward={:>11}: {:>8.3} ms/step  vs eager {:>5.2}x",
+                row.threads, exec_name, row.backward, row.ms_per_step, row.speedup_vs_eager
             );
             let mem = MemInfo::snapshot();
             table.push(Row {
-                name: format!("BurTorch threads={threads}, exec={exec}"),
+                name: format!(
+                    "BurTorch threads={threads}, exec={exec}, backward={}",
+                    row.backward
+                ),
                 mean_s: ms / 1e3,
                 std_s: report.compute_ms_std / 1e3,
                 min_s: ms / 1e3,
@@ -265,7 +278,8 @@ fn main() {
     table.note("loss curves bitwise identical across all thread counts (asserted)");
     table.note("samples/sec = batch / mean step time; speedup relative to threads=1");
     table.note("compress=none is bitwise identical to the thread sweep (asserted)");
-    table.note("exec=replay is bitwise identical to eager (asserted); delta = graph-construction tax");
+    table.note("exec=replay (compiled StepProgram backward) is bitwise identical to eager (asserted);");
+    table.note("delta = graph-construction tax + backward-interpretation tax");
     table.emit_with_json("parallel_throughput_table");
 
     // Compact JSON for the perf trajectory.
@@ -310,9 +324,10 @@ fn main() {
     json.push_str("  \"exec\": {\"rows\": [\n");
     for (i, r) in exec_rows.iter().enumerate() {
         json.push_str(&format!(
-            "    {{\"exec\": \"{}\", \"threads\": {}, \"ms_per_step\": {}, \"std_ms\": {}, \
-             \"speedup_vs_eager\": {}}}{}\n",
+            "    {{\"exec\": \"{}\", \"backward\": \"{}\", \"threads\": {}, \"ms_per_step\": {}, \
+             \"std_ms\": {}, \"speedup_vs_eager\": {}}}{}\n",
             r.exec,
+            r.backward,
             r.threads,
             json_num(r.ms_per_step),
             json_num(r.std_ms),

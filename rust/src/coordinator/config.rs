@@ -9,8 +9,11 @@
 //! `train.steps`, `train.batch`, `train.lr`, `train.threads`,
 //! `train.lanes`, `train.compress` (a
 //! [`crate::parallel::ReductionCompression`] spec such as `"randk:k=64"`),
-//! and `train.exec` (an [`crate::coordinator::ExecMode`]: `"eager"` or
-//! `"replay"`), plus `model.hidden`, `data.names`, and `data.min_chars`.
+//! `train.exec` (an [`crate::coordinator::ExecMode`]: `"eager"` or
+//! `"replay"` — replay drives the compiled `StepProgram` path), and
+//! `train.pin_cores` (bool: pin pool workers to cores; needs the
+//! `affinity` cargo feature), plus `model.hidden`, `data.names`, and
+//! `data.min_chars`.
 //!
 //! # Examples
 //!
@@ -389,6 +392,13 @@ min_chars = 50000
             ExecMode::parse(&c.str_or("train.exec", "eager")).unwrap(),
             ExecMode::Replay
         );
+    }
+
+    #[test]
+    fn pin_cores_key_reads_as_bool() {
+        let c = Config::parse("[train]\npin_cores = true").unwrap();
+        assert!(c.bool_or("train.pin_cores", false));
+        assert!(!Config::new().bool_or("train.pin_cores", false));
     }
 
     #[test]

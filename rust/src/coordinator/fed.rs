@@ -7,12 +7,22 @@
 //! aggregating the compressed messages. This exercises, end to end:
 //! cheap b=1 oracles, compression at partial-derivative granularity, and
 //! the flat parameter buffer that makes messages zero-copy.
+//!
+//! Client oracles run through the shared per-tape
+//! [`crate::tape::SampleExecutor`] — the same abstraction the trainer's
+//! lane loop uses — so [`FedConfig::exec`] switches every client between
+//! eager execution and record-once/replay-many with a compiled backward
+//! ([`crate::tape::StepProgram`]), bitwise identically: exactly the
+//! mobile/IoT scenario the paper targets, where a client replays one
+//! frozen per-sample program for its whole local epoch.
 
 use crate::compress::{Compressor, Ef21Worker};
 use crate::data::{names_dataset, Example};
-use crate::nn::{CeMode, CharMlp, CharMlpConfig};
+use crate::nn::{CeMode, CharMlp, CharMlpBinds, CharMlpConfig};
 use crate::rng::Rng;
-use crate::tape::Tape;
+use crate::tape::{ExecMode, SampleExecutor, Tape};
+
+use super::trainer::CharMlpOracle;
 
 /// Federated simulation parameters.
 #[derive(Clone, Debug)]
@@ -31,6 +41,10 @@ pub struct FedConfig {
     pub names_per_client: usize,
     /// RNG seed.
     pub seed: u64,
+    /// How each client executes its local oracles: eager rebuilds, or
+    /// record-once/replay-many with the compiled backward — bitwise
+    /// identical either way.
+    pub exec: ExecMode,
 }
 
 impl Default for FedConfig {
@@ -43,6 +57,7 @@ impl Default for FedConfig {
             hidden: 4,
             names_per_client: 50,
             seed: 0,
+            exec: ExecMode::Eager,
         }
     }
 }
@@ -102,9 +117,12 @@ pub fn run_federated(
     let mut init_rng = Rng::new(cfg.seed ^ 0xBEEF);
     let server_model = CharMlp::new(&mut server_tape, model_cfg, &mut init_rng);
 
-    // Client state: tape + model (identical init) + EF21 worker + compressor.
+    // Client state: tape + model (identical init) + executor (mode-driven:
+    // under replay it holds the client's recording + compiled program
+    // across all rounds) + EF21 worker + compressor.
     let mut client_tapes: Vec<Tape<f64>> = Vec::new();
     let mut client_models: Vec<CharMlp> = Vec::new();
+    let mut client_execs: Vec<SampleExecutor<CharMlpBinds>> = Vec::new();
     let mut workers: Vec<Ef21Worker> = Vec::new();
     let mut compressors: Vec<Box<dyn Compressor>> = Vec::new();
     for c in 0..cfg.clients {
@@ -113,6 +131,7 @@ pub fn run_federated(
         let m = CharMlp::new(&mut t, model_cfg, &mut r);
         client_tapes.push(t);
         client_models.push(m);
+        client_execs.push(SampleExecutor::new(cfg.exec));
         workers.push(Ef21Worker::new(d));
         compressors.push(make_compressor(c));
     }
@@ -148,17 +167,23 @@ pub fn run_federated(
             tape.values_range_mut(model.params.first, d)
                 .copy_from_slice(&server_params);
 
-            // Local serialized oracles.
+            // Local serialized oracles, one executor-driven path for both
+            // modes: eager rebuild+interpret+rewind, or rebind+replay with
+            // the compiled backward (first oracle of round 0 records).
             let shard = &shards[c];
+            let oracle = CharMlpOracle {
+                model,
+                examples: shard,
+                ce: CeMode::Fused,
+            };
             let mut grad = vec![0.0f64; d];
             for _ in 0..cfg.local_batch {
-                let ex = &shard[rng.below_usize(shard.len())];
-                let loss = model.loss(tape, &ex.context, ex.target, CeMode::Fused);
-                tape.backward(loss);
-                for (k, g) in tape.grads_range(model.params.first, d).iter().enumerate() {
-                    grad[k] += *g;
-                }
-                tape.rewind(model.base);
+                let idx = rng.below_usize(shard.len());
+                client_execs[c].run_sample(tape, &oracle, idx, model.base, None, |tape, _| {
+                    for (k, g) in tape.grads_range(model.params.first, d).iter().enumerate() {
+                        grad[k] += *g;
+                    }
+                });
             }
             grad.iter_mut()
                 .for_each(|g| *g /= cfg.local_batch as f64);
@@ -207,6 +232,33 @@ mod tests {
             hidden: 4,
             names_per_client: 30,
             seed: 11,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn replay_clients_match_eager_bitwise() {
+        // `exec` must be a pure performance knob for the simulator too:
+        // the per-client compiled programs reproduce the eager loss curve
+        // bit for bit.
+        let run = |exec: ExecMode| {
+            let cfg = FedConfig {
+                exec,
+                rounds: 6,
+                ..small_cfg()
+            };
+            run_federated(&cfg, |_| Box::new(Identity)).curve
+        };
+        let eager = run(ExecMode::Eager);
+        let replay = run(ExecMode::Replay);
+        assert_eq!(eager.len(), replay.len());
+        for ((r1, l1), (r2, l2)) in eager.iter().zip(&replay) {
+            assert_eq!(r1, r2);
+            assert_eq!(
+                l1.to_bits(),
+                l2.to_bits(),
+                "federated replay diverged at round {r1}: {l1} vs {l2}"
+            );
         }
     }
 

@@ -19,10 +19,14 @@
 //! [`TrainerOptions::exec`] selects the execution mode of the steady
 //! state: [`ExecMode::Eager`] re-records every sample's graph (paper
 //! baseline), [`ExecMode::Replay`] records each worker tape's first
-//! sample once and then only rebinds inputs and re-sweeps the frozen
-//! arrays — bitwise identical, with zero graph construction per step.
+//! sample once, compiles its reverse sweep into a
+//! [`crate::tape::StepProgram`], and then drives every later sample as
+//! two tight array sweeps — bitwise identical, with zero graph
+//! construction and zero per-node opcode dispatch per step. The trainer
+//! has exactly **one** step path either way: the mode lives in the
+//! engine's per-worker [`crate::tape::SampleExecutor`]s
+//! ([`ReplaySessions::with_mode`]), not in trainer branching.
 
-use std::fmt;
 use std::sync::Arc;
 
 use crate::data::{BatchSampler, CharCorpus, Example};
@@ -36,45 +40,9 @@ use crate::parallel::{
 use crate::scalar::Scalar;
 use crate::tape::{Mark, Recording, Tape, Value};
 
-/// How the steady-state loop executes each sample's graph.
-///
-/// - `Eager` re-records the graph through the builder every sample and
-///   rewinds it away (the paper's baseline behavior).
-/// - `Replay` records each worker tape's first sample once, then drives
-///   every later sample by rebinding the recorded input slots and
-///   re-sweeping the frozen arrays in place — no appends, no rewinds,
-///   no per-step allocation. Bitwise identical to `Eager` for any seed,
-///   thread count and compression mode; requires a static per-sample
-///   topology (both bundled models qualify — their windows are fixed
-///   length). See [`crate::tape::Recording`].
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
-pub enum ExecMode {
-    /// Rebuild every sample's graph eagerly (record + rewind).
-    #[default]
-    Eager,
-    /// Record once per worker tape, replay thereafter.
-    Replay,
-}
-
-impl ExecMode {
-    /// Parse a CLI/config spec: `eager` or `replay`.
-    pub fn parse(spec: &str) -> Result<ExecMode, String> {
-        match spec.trim() {
-            "eager" | "" => Ok(ExecMode::Eager),
-            "replay" => Ok(ExecMode::Replay),
-            other => Err(format!("unknown exec mode '{other}' (expected eager|replay)")),
-        }
-    }
-}
-
-impl fmt::Display for ExecMode {
-    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        match self {
-            ExecMode::Eager => write!(f, "eager"),
-            ExecMode::Replay => write!(f, "replay"),
-        }
-    }
-}
+// The execution mode lives with the executor in `tape::exec`; re-export
+// it here so coordinator callers keep their historical import path.
+pub use crate::tape::ExecMode;
 
 /// Options for a training run.
 #[derive(Clone, Debug)]
@@ -107,9 +75,14 @@ pub struct TrainerOptions {
     /// to the thread count, but change the optimizer trajectory.
     pub compression: ReductionCompression,
     /// Execution mode of the steady-state loop ([`ExecMode::Eager`] by
-    /// default). [`ExecMode::Replay`] is bitwise identical and skips the
-    /// per-sample graph re-construction entirely.
+    /// default). [`ExecMode::Replay`] is bitwise identical and skips both
+    /// the per-sample graph re-construction and the backward interpreter
+    /// (compiled [`crate::tape::StepProgram`] per worker tape).
     pub exec: ExecMode,
+    /// Pin pool workers to cores (`affinity` cargo feature; no-op
+    /// otherwise) so first-touch NUMA placement of replica state survives
+    /// OS migration. Placement only — never changes results.
+    pub pin_cores: bool,
 }
 
 impl Default for TrainerOptions {
@@ -126,6 +99,7 @@ impl Default for TrainerOptions {
             lanes: DEFAULT_LANES,
             compression: ReductionCompression::None,
             exec: ExecMode::Eager,
+            pin_cores: false,
         }
     }
 }
@@ -235,10 +209,13 @@ impl Trainer {
     }
 
     /// The shared SGD loop: sample a batch, hand it to the gradient
-    /// engine (eager or replay, per [`TrainerOptions::exec`]), average,
-    /// apply. Batch preparation is excluded from the per-step timing
-    /// (paper protocol). In replay mode each worker tape records on the
-    /// first sample it processes and replays for the rest of the run.
+    /// engine through the **single** mode-agnostic step entry point
+    /// ([`MinibatchGradEngine::accumulate_with`] — the per-worker
+    /// executors created from [`TrainerOptions::exec`] decide how each
+    /// sample runs), average, apply. Batch preparation is excluded from
+    /// the per-step timing (paper protocol). In replay mode each worker
+    /// tape records + compiles on the first sample it processes and
+    /// replays for the rest of the run.
     fn run_loop<T: Scalar, O: SampleOracle<T>>(
         &self,
         tape: &mut Tape<T>,
@@ -262,13 +239,12 @@ impl Trainer {
                 lanes: o.lanes,
                 scratch_backward: o.scratch_backward,
                 compression: o.compression,
+                pin_cores: o.pin_cores,
             },
             pool,
         );
-        let mut sessions: Option<ReplaySessions<O::Rec>> = match o.exec {
-            ExecMode::Eager => None,
-            ExecMode::Replay => Some(ReplaySessions::new(engine.threads())),
-        };
+        let mut sessions: ReplaySessions<O::Rec> =
+            ReplaySessions::with_mode(o.exec, engine.threads());
         let mut times = Vec::with_capacity(o.steps);
         let mut curve = Vec::new();
         let mut peak_nodes = 0usize;
@@ -276,10 +252,7 @@ impl Trainer {
         for step in 0..o.steps {
             let batch = sampler.next_batch(); // preparation excluded from timing
             let timer = Timer::new();
-            let stats = match sessions.as_mut() {
-                None => engine.accumulate(tape, &batch, oracle, &mut grad_acc),
-                Some(s) => engine.accumulate_replay(tape, &batch, oracle, s, &mut grad_acc),
-            };
+            let stats = engine.accumulate_with(tape, &batch, oracle, &mut sessions, &mut grad_acc);
             peak_nodes = peak_nodes.max(stats.peak_nodes);
             let inv_b = 1.0 / o.batch as f64;
             grad_acc.iter_mut().for_each(|g| *g *= inv_b);
@@ -298,11 +271,13 @@ impl Trainer {
 
 /// Replay-capable sample oracle over the char-MLP workload: `build` is
 /// exactly the eager `model.loss` call; `record`/`rebind` expose the
-/// embedding gather view and CE target as rebindable slots.
-struct CharMlpOracle<'a> {
-    model: &'a CharMlp,
-    examples: &'a [Example],
-    ce: CeMode,
+/// embedding gather view and CE target as rebindable slots. `pub(crate)`
+/// so the federated simulator drives its per-client executors through
+/// the same oracle instead of a hand-rolled loop.
+pub(crate) struct CharMlpOracle<'a> {
+    pub(crate) model: &'a CharMlp,
+    pub(crate) examples: &'a [Example],
+    pub(crate) ce: CeMode,
 }
 
 impl<'a, T: Scalar> SampleOracle<T> for CharMlpOracle<'a> {
@@ -568,15 +543,6 @@ mod tests {
             }
             assert_eq!(eager_params, replay_params, "post-training parameters diverged");
         }
-    }
-
-    #[test]
-    fn exec_mode_parses_and_displays() {
-        assert_eq!(ExecMode::parse("eager").unwrap(), ExecMode::Eager);
-        assert_eq!(ExecMode::parse(" replay ").unwrap(), ExecMode::Replay);
-        assert!(ExecMode::parse("jit").is_err());
-        assert_eq!(ExecMode::Replay.to_string(), "replay");
-        assert_eq!(ExecMode::default(), ExecMode::Eager);
     }
 
     #[test]

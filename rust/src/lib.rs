@@ -25,32 +25,44 @@
 //! 4. **[`coordinator`]** — config parsing, the serialized-oracle SGD
 //!    loop ([`coordinator::Trainer`]), and the federated simulation.
 //!
-//! ## Execution modes: eager vs replay
+//! ## Execution modes: eager vs compiled replay
 //!
 //! The steady-state training loop runs in one of two modes
-//! ([`coordinator::ExecMode`], CLI `--exec eager|replay`):
+//! ([`coordinator::ExecMode`], CLI `--exec eager|replay`), and every
+//! layer — the parallel engine's lane loop, the trainer's step, the
+//! federated simulator's client oracles — drives them through the same
+//! per-tape [`tape::SampleExecutor`] (one code path, the mode is data):
 //!
 //! - **Eager** (default) re-records every sample's graph through the
-//!   builder — append every op, run backward, `rewind` it all away. This
-//!   is the paper's baseline behavior and the reference numeric path.
+//!   builder — append every op, run the reverse-scan *interpreter*,
+//!   `rewind` it all away. This is the paper's baseline behavior and the
+//!   reference numeric path.
 //! - **Replay** exploits that the SoA tape *is already* a captured
 //!   program: the first sample each worker tape processes is recorded
-//!   into a frozen [`tape::Recording`], and every later sample only
-//!   *rebinds* its inputs (leaf values, embedding-gather id runs,
-//!   cross-entropy targets) and re-evaluates the frozen arrays in place
-//!   with [`Tape::replay_forward`] — no `Vec` pushes, no builder
-//!   branching, no capacity checks, no rewinds. The existing backward
-//!   scan is reused unchanged.
+//!   into a frozen [`tape::Recording`] **and its reverse sweep is
+//!   compiled into a [`tape::StepProgram`]** — a dense, leaf-free
+//!   backward instruction list with the aux-meta of every fused kernel
+//!   pre-resolved and a precomputed grad-zeroing extent. Every later
+//!   sample only *rebinds* its inputs (leaf values, embedding-gather id
+//!   runs, cross-entropy targets) and runs two tight array sweeps in
+//!   place: [`Tape::replay_forward`] and [`tape::StepProgram::backward`]
+//!   — no `Vec` pushes, no builder branching, no capacity checks, no
+//!   rewinds, no per-node opcode/arity decode, no full-tape `zero_grad`.
 //!
 //! Replay is **bitwise identical** to eager for any seed, thread count
-//! and compression mode (every op re-evaluates through the same shared
-//! kernel its eager constructor used), so it is purely a performance
-//! knob — the jit-style capture win without a compiler. A recording
-//! assumes a static per-sample topology: control flow that changes the
-//! graph shape (variable-length windows, data-dependent structure) must
-//! stay eager. Both bundled workloads (fixed-window char MLP and GPT)
-//! qualify; see `tests/replay_equivalence.rs` for the equivalence and
-//! zero-allocation proofs.
+//! and compression mode: the replayed forward re-evaluates through the
+//! same shared kernel its eager constructor used, and the compiled
+//! backward calls the interpreter's own adjoint kernels (`Tape::adj_*`)
+//! with identically resolved operands in the identical order. It is
+//! purely a performance knob — the jit-style capture win without a
+//! compiler. A single recording assumes a static per-sample topology;
+//! *ragged* workloads get a shape-keyed [`tape::ProgramCache`] instead
+//! (one stacked program per graph shape): `Gpt::generate_cached` replays
+//! its growing context windows (one logits program per window length),
+//! and the federated simulator's per-client oracles replay under
+//! `fed --exec replay`. See `tests/replay_equivalence.rs` and
+//! `tests/program_cache.rs` for the equivalence, zero-allocation and
+//! zero-dispatch proofs.
 //!
 //! ## The zero-steady-state-allocation discipline
 //!
@@ -96,8 +108,11 @@
 //! - [`tape`] — the scalar-granularity autodiff engine: an append-only
 //!   Wengert list with structure-of-arrays storage, non-recursive backward,
 //!   scratch-storage backward, the rewind mechanism that makes
-//!   per-sample serialized batching memory-flat, and the record-once /
-//!   replay-many static-graph replay engine ([`tape::Recording`]).
+//!   per-sample serialized batching memory-flat, the record-once /
+//!   replay-many static-graph replay engine ([`tape::Recording`]), the
+//!   compiled backward + shape-keyed program cache
+//!   ([`tape::StepProgram`], [`tape::ProgramCache`]), and the unified
+//!   sample executor ([`tape::SampleExecutor`]).
 //! - [`scalar`] — the FP32/FP64 scalar abstraction (paper Appendix F.3).
 //! - [`ops`] — op-level forward/backward semantics (paper Tables 8–10).
 //! - [`nn`] — Neuron/Linear/MLP/Embedding/LayerNorm/Attention/GPT built on
@@ -148,4 +163,4 @@ pub mod testkit;
 pub mod viz;
 
 pub use scalar::Scalar;
-pub use tape::{Builder, Mark, Recording, Tape, Value};
+pub use tape::{Builder, Mark, ProgramCache, Recording, StepProgram, Tape, Value};

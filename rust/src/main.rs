@@ -55,13 +55,17 @@ fn print_help() {
                      [--threads W] [--lanes L] [--config file.toml]\n\
                      [--compress none|randk:k=64|topk:k=64|ef21[:k=N]]\n\
                      [--exec eager|replay] [--scratch] [--composed-ce]\n\
+                     [--pin-cores]\n\
                      (--threads 0 = all cores; any W gives bitwise-identical\n\
                       runs with --compress none; compressed runs are\n\
                       deterministic per seed and thread-invariant too;\n\
-                      --exec replay records each worker's sample graph once\n\
-                      and replays it — bitwise identical, no per-step\n\
-                      graph construction)\n\
+                      --exec replay records each worker's sample graph once,\n\
+                      compiles its backward, and replays it — bitwise\n\
+                      identical, no per-step graph construction or opcode\n\
+                      dispatch; --pin-cores pins pool workers to cores,\n\
+                      requires building with --features affinity)\n\
            fed       --clients N --rounds R --compressor identity|randk|topk\n\
+                     [--exec eager|replay]\n\
            demo      [--small]   (Figure 1 / Figure 2 graphs + DOT)\n\
            sample    --steps N --tokens T   (train tiny GPT, then generate)\n\
            artifacts [--dir artifacts]      (PJRT smoke-run of AOT graphs)\n\
@@ -105,6 +109,15 @@ fn trainer_options(cli: &Cli, cfg: &Config) -> TrainerOptions {
             std::process::exit(2);
         }
     };
+    // `--pin-cores` (CLI) / `train.pin_cores` (config): pin pool workers
+    // to cores so first-touch NUMA placement survives OS migration.
+    let pin_cores = cli.has_flag("pin-cores") || cfg.bool_or("train.pin_cores", false);
+    if pin_cores && !cfg!(all(feature = "affinity", target_os = "linux")) {
+        eprintln!(
+            "note: core pinning requested but this build cannot pin (needs the \
+             'affinity' feature on Linux); pinning will be a no-op"
+        );
+    }
     TrainerOptions {
         steps: cli.int_or("steps", cfg.int_or("train.steps", 200)) as usize,
         batch: cli.int_or("batch", cfg.int_or("train.batch", 1)) as usize,
@@ -125,6 +138,7 @@ fn trainer_options(cli: &Cli, cfg: &Config) -> TrainerOptions {
         .max(1),
         compression,
         exec,
+        pin_cores,
     }
 }
 
@@ -190,6 +204,15 @@ fn print_report(r: &burtorch::coordinator::TrainReport) {
 }
 
 fn cmd_fed(cli: &Cli) -> i32 {
+    // `--exec replay` runs every client's local oracles through its
+    // compiled per-sample program — bitwise identical to eager.
+    let exec = match ExecMode::parse(&cli.opt_or("exec", "eager")) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("error: --exec: {e}");
+            return 2;
+        }
+    };
     let cfg = FedConfig {
         clients: cli.int_or("clients", 4) as usize,
         rounds: cli.int_or("rounds", 20) as usize,
@@ -198,11 +221,15 @@ fn cmd_fed(cli: &Cli) -> i32 {
         hidden: cli.int_or("hidden", 4) as usize,
         names_per_client: cli.int_or("names-per-client", 50) as usize,
         seed: cli.int_or("seed", 0) as u64,
+        exec,
     };
     let d = CharMlpConfig::paper(cfg.hidden).num_params();
     let kind = cli.opt_or("compressor", "randk");
     let k = cli.int_or("k", (d / 20).max(1) as i64) as usize;
-    println!("federated: {} clients, {} rounds, compressor={kind} (k={k}, d={d})", cfg.clients, cfg.rounds);
+    println!(
+        "federated: {} clients, {} rounds, compressor={kind} (k={k}, d={d}), exec={}",
+        cfg.clients, cfg.rounds, cfg.exec
+    );
     let summary = match kind.as_str() {
         "identity" => run_federated(&cfg, |_| Box::new(Identity)),
         "topk" => run_federated(&cfg, move |_| Box::new(TopK::new(k))),

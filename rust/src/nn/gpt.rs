@@ -11,7 +11,7 @@ use super::{
 };
 use crate::rng::Rng;
 use crate::scalar::Scalar;
-use crate::tape::{Mark, Recording, Tape, Value};
+use crate::tape::{Mark, ProgramCache, Recording, StepProgram, Tape, Value};
 
 /// GPT configuration (paper §2.5 "GPT-3-like model: configuration").
 #[derive(Clone, Copy, Debug)]
@@ -68,6 +68,20 @@ pub struct GptBinds {
     pub first_add: Value,
     /// One CE target binding per position.
     pub ce: Vec<CeBind>,
+}
+
+/// The rebind slots of a recorded forward-only (logits) window — the
+/// generation path's counterpart of [`GptBinds`]: no loss, no targets,
+/// just the token gather plus where the last position's logits live.
+/// See [`Gpt::record_logits`] / [`Gpt::generate_cached`].
+#[derive(Clone, Copy, Debug)]
+pub struct GptGenBinds {
+    /// First of the window's consecutive token+position input adds.
+    pub first_add: Value,
+    /// Recorded window length (the shape key).
+    pub window: usize,
+    /// First of the `vocab` consecutive logit nodes of the last position.
+    pub logits0: Value,
 }
 
 /// The scalar-granularity GPT model.
@@ -224,10 +238,24 @@ impl Gpt {
         (Recording::capture(tape, self.base, loss), binds)
     }
 
+    /// Redirect every position's token-embedding gather of a recorded
+    /// window (the `a` slots of the consecutive input adds — positional
+    /// embeddings are static). Shared by the training and generation
+    /// rebind paths. Allocation-free.
+    fn rebind_tokens<T: Scalar>(&self, tape: &mut Tape<T>, first_add: Value, tokens: &[u32]) {
+        let d = self.cfg.d_model;
+        for (p, &tok) in tokens.iter().enumerate() {
+            let te = self.tok_emb.first.0 + (tok as usize * d) as u32;
+            let a0 = first_add.0 + (p * d) as u32;
+            for j in 0..d as u32 {
+                tape.rebind_arg_a(Value(a0 + j), Value(te + j));
+            }
+        }
+    }
+
     /// Rewrite a recorded window's inputs to new `(tokens, targets)`:
-    /// redirect each position's token-embedding gather (the `a` slots of
-    /// the consecutive input adds — positional embeddings are static) and
-    /// rebind every position's CE target. Allocation-free.
+    /// redirect each position's token-embedding gather and rebind every
+    /// position's CE target. Allocation-free.
     pub fn rebind_sample<T: Scalar>(
         &self,
         tape: &mut Tape<T>,
@@ -241,20 +269,73 @@ impl Gpt {
             binds.ce.len(),
             "replayed window length differs from the recording (topology change)"
         );
-        let d = self.cfg.d_model;
-        for (p, &tok) in tokens.iter().enumerate() {
-            let te = self.tok_emb.first.0 + (tok as usize * d) as u32;
-            let a0 = binds.first_add.0 + (p * d) as u32;
-            for j in 0..d as u32 {
-                tape.rebind_arg_a(Value(a0 + j), Value(te + j));
-            }
-        }
+        self.rebind_tokens(tape, binds.first_add, tokens);
         for (bind, &y) in binds.ce.iter().zip(targets) {
             bind.rebind(tape, y as usize);
         }
     }
 
-    /// Greedy/temperature sampling of `n` tokens after a prompt.
+    /// Record one window's graph **at the current tape top** (not the
+    /// parameter base) and compile its reverse sweep: the stacked-program
+    /// entry point behind the shape-keyed [`ProgramCache`], one program
+    /// per window length. The compiled backward zeroes the parameter
+    /// prefix plus its own segment only, skipping sibling shapes' buried
+    /// segments, so ragged workloads replay too.
+    pub fn record_sample_stacked<T: Scalar>(
+        &self,
+        tape: &mut Tape<T>,
+        tokens: &[u32],
+        targets: &[u32],
+        ce: CeMode,
+    ) -> (StepProgram, GptBinds) {
+        let floor = tape.mark();
+        let (loss, binds) = self.loss_with_binds(tape, tokens, targets, ce);
+        let rec = Recording::capture(tape, floor, loss);
+        (StepProgram::compile(tape, rec, self.base), binds)
+    }
+
+    /// Record a forward-only (logits) window at the current tape top —
+    /// the generation path's recording: no loss head, the root is the
+    /// last position's last logit. Returns the frozen segment plus the
+    /// rebind slots ([`GptGenBinds`]).
+    pub fn record_logits<T: Scalar>(
+        &self,
+        tape: &mut Tape<T>,
+        tokens: &[u32],
+    ) -> (Recording, GptGenBinds) {
+        assert!(!tokens.is_empty(), "cannot record an empty window");
+        let floor = tape.mark();
+        let (logits, first_add) = self.forward_logits_inner(tape, tokens);
+        let last = logits.last().expect("nonempty window");
+        debug_assert!(
+            last.windows(2).all(|p| p[1].raw() == p[0].raw() + 1),
+            "lm-head logits must be consecutive nodes"
+        );
+        let root = *last.last().expect("nonempty vocab");
+        let rec = Recording::capture(tape, floor, root);
+        (
+            rec,
+            GptGenBinds {
+                first_add,
+                window: tokens.len(),
+                logits0: last[0],
+            },
+        )
+    }
+
+    /// Rewrite a recorded logits window to new `tokens` (before
+    /// [`Tape::replay_forward`]). Allocation-free.
+    pub fn rebind_logits<T: Scalar>(&self, tape: &mut Tape<T>, binds: &GptGenBinds, tokens: &[u32]) {
+        assert_eq!(
+            tokens.len(),
+            binds.window,
+            "replayed window length differs from the recording (topology change)"
+        );
+        self.rebind_tokens(tape, binds.first_add, tokens);
+    }
+
+    /// Greedy/temperature sampling of `n` tokens after a prompt — the
+    /// eager path: every window rebuilds its graph and is rewound away.
     pub fn generate<T: Scalar>(
         &self,
         tape: &mut Tape<T>,
@@ -273,25 +354,83 @@ impl Gpt {
             // Softmax with temperature in plain f64 (inference path).
             let zs: Vec<f64> = last.iter().map(|&v| tape.value(v).to_f64()).collect();
             tape.rewind(m);
-            let mx = zs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
-            let ws: Vec<f64> = zs
-                .iter()
-                .map(|z| ((z - mx) / temperature.max(1e-6)).exp())
-                .collect();
-            let total: f64 = ws.iter().sum();
-            let mut pick = rng.uniform() * total;
-            let mut choice = 0u32;
-            for (i, w) in ws.iter().enumerate() {
-                if pick < *w {
-                    choice = i as u32;
-                    break;
-                }
-                pick -= w;
-            }
-            tokens.push(choice);
+            tokens.push(sample_token(&zs, temperature, rng));
         }
         tokens[prompt.len()..].to_vec()
     }
+
+    /// [`Gpt::generate`] under replay: generation windows grow per token
+    /// (a *ragged* workload), so each distinct window length gets one
+    /// recorded logits program in the shape-keyed `cache` — a miss
+    /// records a stacked segment once (cold), a hit rebinds the tokens
+    /// and re-sweeps the frozen arrays with zero appends. After every
+    /// length ≤ `block_size` has been seen, steady-state generation never
+    /// touches the graph builder again; the cache (and its recorded
+    /// segments) can be reused across calls on the same tape.
+    ///
+    /// Token-for-token identical to [`Gpt::generate`] for the same RNG:
+    /// replayed logits are bitwise equal to eagerly rebuilt ones.
+    pub fn generate_cached<T: Scalar>(
+        &self,
+        tape: &mut Tape<T>,
+        prompt: &[u32],
+        n: usize,
+        temperature: f64,
+        rng: &mut Rng,
+        cache: &mut ProgramCache<(Recording, GptGenBinds)>,
+    ) -> Vec<u32> {
+        let mut tokens: Vec<u32> = prompt.to_vec();
+        let vocab = self.cfg.vocab;
+        for _ in 0..n {
+            let ctx_start = tokens.len().saturating_sub(self.cfg.block_size);
+            let key = (tokens.len() - ctx_start) as u64;
+            // One cache scan per token; the entry is two small Copy values,
+            // so the cache borrow ends before the tape work starts.
+            let logits0 = match cache.lookup(key).map(|e| *e) {
+                // Hit: rebind the window's tokens, one frozen sweep.
+                Some((rec, binds)) => {
+                    self.rebind_logits(tape, &binds, &tokens[ctx_start..]);
+                    tape.replay_forward(&rec);
+                    binds.logits0
+                }
+                // Miss: record this window length once (the recording pass
+                // already computed the logits eagerly).
+                None => {
+                    let (rec, binds) = self.record_logits(tape, &tokens[ctx_start..]);
+                    let logits0 = binds.logits0;
+                    cache.insert(key, (rec, binds));
+                    logits0
+                }
+            };
+            let zs: Vec<f64> = (0..vocab)
+                .map(|j| tape.value(Value(logits0.0 + j as u32)).to_f64())
+                .collect();
+            tokens.push(sample_token(&zs, temperature, rng));
+        }
+        tokens[prompt.len()..].to_vec()
+    }
+}
+
+/// Temperature softmax + CDF sampling over raw logits, in plain f64 —
+/// the single sampling routine shared by the eager and cached generation
+/// paths, so they draw identical tokens from identical logits.
+fn sample_token(zs: &[f64], temperature: f64, rng: &mut Rng) -> u32 {
+    let mx = zs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let ws: Vec<f64> = zs
+        .iter()
+        .map(|z| ((z - mx) / temperature.max(1e-6)).exp())
+        .collect();
+    let total: f64 = ws.iter().sum();
+    let mut pick = rng.uniform() * total;
+    let mut choice = 0u32;
+    for (i, w) in ws.iter().enumerate() {
+        if pick < *w {
+            choice = i as u32;
+            break;
+        }
+        pick -= w;
+    }
+    choice
 }
 
 #[cfg(test)]
@@ -452,6 +591,106 @@ mod tests {
                 assert_eq!(gs, eager[k].1, "{ce:?} grads @ {k}");
             }
         }
+    }
+
+    #[test]
+    fn cached_generation_matches_eager_token_for_token() {
+        let mut t = Tape::<f64>::new();
+        let mut rng = Rng::new(61);
+        let cfg = GptConfig {
+            n_layer: 1,
+            d_model: 8,
+            n_head: 2,
+            ..GptConfig::paper()
+        };
+        let gpt = Gpt::new(&mut t, cfg, &mut rng);
+        let prompt = [1u32, 2, 3];
+        let n = 12;
+        // Eager reference first: it rewinds fully, leaving the parameters
+        // untouched for the cached run.
+        let mut rng_e = Rng::new(99);
+        let eager = gpt.generate(&mut t, &prompt, n, 0.8, &mut rng_e);
+        assert_eq!(t.len(), gpt.base.node_count());
+
+        let mut cache = ProgramCache::new();
+        let mut rng_c = Rng::new(99);
+        let cached = gpt.generate_cached(&mut t, &prompt, n, 0.8, &mut rng_c, &mut cache);
+        assert_eq!(eager, cached, "replayed generation must match eagerly");
+        // Window lengths 3..=8: six shapes recorded, the rest replayed.
+        assert_eq!(cache.len(), 6);
+        assert_eq!(cache.misses(), 6);
+        assert_eq!(cache.hits(), n as u64 - 6);
+
+        // Steady state: a second generation is all hits and appends nothing.
+        let frozen = t.len();
+        let mut rng_e2 = Rng::new(123);
+        let mut rng_c2 = Rng::new(123);
+        let cached2 = gpt.generate_cached(&mut t, &prompt, n, 0.8, &mut rng_c2, &mut cache);
+        assert_eq!(t.len(), frozen, "steady-state generation appended nodes");
+        assert_eq!(cache.misses(), 6, "no new shapes after warmup");
+        let eager2 = gpt.generate(&mut t, &prompt, n, 0.8, &mut rng_e2);
+        assert_eq!(eager2, cached2);
+    }
+
+    #[test]
+    fn stacked_programs_replay_ragged_windows_bitwise() {
+        // Two window lengths on one tape: each gets its own stacked
+        // program; gradients must match a per-length eager rebuild.
+        let mk = || {
+            let mut t = Tape::<f64>::new();
+            let mut rng = Rng::new(62);
+            let cfg = GptConfig {
+                n_layer: 1,
+                d_model: 8,
+                n_head: 2,
+                ..GptConfig::paper()
+            };
+            let gpt = Gpt::new(&mut t, cfg, &mut rng);
+            (t, gpt)
+        };
+        let windows: Vec<(Vec<u32>, Vec<u32>)> = vec![
+            (vec![1, 2, 3], vec![2, 3, 4]),
+            (vec![5, 6, 7, 8, 9], vec![6, 7, 8, 9, 10]),
+            (vec![3, 1, 4], vec![1, 5, 9]),
+            (vec![2, 7, 1, 8, 2], vec![7, 1, 8, 2, 8]),
+        ];
+
+        // Eager reference.
+        let (mut te, ge) = mk();
+        let mut want: Vec<(u64, Vec<u64>)> = Vec::new();
+        for (x, y) in &windows {
+            let loss = ge.loss(&mut te, x, y, CeMode::Fused);
+            te.backward_above(loss, ge.base);
+            want.push((
+                te.value(loss).to_bits(),
+                ge.params.iter().map(|p| te.grad(p).to_bits()).collect(),
+            ));
+            te.rewind(ge.base);
+        }
+
+        // Stacked programs through the shape-keyed cache.
+        let (mut tr, gr) = mk();
+        let mut cache: ProgramCache<(StepProgram, GptBinds)> = ProgramCache::new();
+        for (k, (x, y)) in windows.iter().enumerate() {
+            let key = x.len() as u64;
+            let root = if cache.contains(key) {
+                let (prog, binds) = &*cache.lookup(key).expect("cached");
+                gr.rebind_sample(&mut tr, binds, x, y);
+                tr.replay_forward(&prog.recording());
+                prog.backward(&mut tr);
+                prog.root()
+            } else {
+                let recorded = gr.record_sample_stacked(&mut tr, x, y, CeMode::Fused);
+                let (prog, _) = &*cache.insert(key, recorded);
+                prog.backward(&mut tr);
+                prog.root()
+            };
+            assert_eq!(tr.value(root).to_bits(), want[k].0, "loss @ window {k}");
+            let gs: Vec<u64> = gr.params.iter().map(|p| tr.grad(p).to_bits()).collect();
+            assert_eq!(gs, want[k].1, "grads @ window {k}");
+        }
+        assert_eq!(cache.len(), 2, "one program per window length");
+        assert_eq!((cache.misses(), cache.hits()), (2, 2));
     }
 
     #[test]

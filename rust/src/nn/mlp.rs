@@ -11,7 +11,7 @@ use super::{
 };
 use crate::rng::Rng;
 use crate::scalar::Scalar;
-use crate::tape::{Mark, Recording, Tape, Value};
+use crate::tape::{Mark, Recording, StepProgram, Tape, Value};
 
 /// Generic multi-layer perceptron over explicit scalar inputs.
 pub struct Mlp {
@@ -202,6 +202,26 @@ impl CharMlp {
         );
         let (loss, binds) = self.loss_with_binds(tape, context, target, ce);
         (Recording::capture(tape, self.base, loss), binds)
+    }
+
+    /// Record one sample's graph **at the current tape top** (not the
+    /// parameter base) and compile its reverse sweep into a
+    /// [`StepProgram`] — the stacked-program entry point for callers that
+    /// keep several recordings alive on one tape (e.g. a
+    /// [`crate::tape::ProgramCache`] shared with other shapes, or a
+    /// recording made after generation segments). The compiled backward
+    /// zeroes the parameter prefix plus its own segment only.
+    pub fn record_sample_stacked<T: Scalar>(
+        &self,
+        tape: &mut Tape<T>,
+        context: &[u32],
+        target: u32,
+        ce: CeMode,
+    ) -> (StepProgram, CharMlpBinds) {
+        let floor = tape.mark();
+        let (loss, binds) = self.loss_with_binds(tape, context, target, ce);
+        let rec = Recording::capture(tape, floor, loss);
+        (StepProgram::compile(tape, rec, self.base), binds)
     }
 
     /// Rewrite a recorded sample's inputs to a new `(context, target)`:

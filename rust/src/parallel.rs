@@ -70,21 +70,29 @@
 //! same seed ⇒ same bits, for any thread count. Losses are never
 //! compressed; the loss fold stays exact in every mode.
 //!
-//! ## Execution modes: eager vs replay
+//! ## Execution modes: one lane loop, one executor
 //!
-//! [`MinibatchGradEngine::accumulate`] drives the classic eager path:
-//! every sample re-records its graph through the builder and is thrown
-//! away by `rewind`. [`MinibatchGradEngine::accumulate_replay`] drives
-//! the record-once / replay-many path instead: the **first sample each
-//! worker tape processes is recorded** (eagerly, on the worker's own
-//! thread — so the recorded segment's pages are first-touch allocated
-//! exactly like the replica prefix), and every subsequent sample on that
-//! tape only rebinds its inputs ([`SampleOracle::rebind`]) and re-sweeps
-//! the frozen arrays with [`Tape::replay_forward`] — no appends, no
-//! rewinds, no builder dispatch. Because replay re-evaluates the
-//! identical node sequence with the identical kernels, the two modes are
-//! **bitwise identical** for any thread count and any compression mode;
-//! see `tests/replay_equivalence.rs`. Do not mix the two entry points on
+//! The lane loop is mode-agnostic: every sample goes through a
+//! [`SampleExecutor`] (from [`crate::tape`]), which owns the tape's
+//! execution mode and, under replay, its compiled
+//! [`crate::tape::StepProgram`]. [`MinibatchGradEngine::accumulate`]
+//! drives the classic eager path (stateless executors: build through the
+//! builder, interpret backward, rewind).
+//! [`MinibatchGradEngine::accumulate_replay`] — or the mode-agnostic
+//! [`MinibatchGradEngine::accumulate_with`] — drives persistent
+//! executors instead: the **first sample each worker tape processes is
+//! recorded and its reverse sweep compiled** (eagerly, on the worker's
+//! own thread — so the recorded segment's pages *and* the compiled
+//! instruction list are first-touch allocated exactly like the replica
+//! prefix), and every subsequent sample on that tape only rebinds its
+//! inputs ([`SampleOracle::rebind`]) and runs two tight array sweeps:
+//! [`Tape::replay_forward`] plus the compiled backward — no appends, no
+//! rewinds, no builder dispatch, no per-node opcode interpretation.
+//! Because replay re-evaluates the identical node sequence with the
+//! identical kernels (the compiled backward calls the interpreter's own
+//! adjoint kernels), the two modes are **bitwise identical** for any
+//! thread count and any compression mode; see
+//! `tests/replay_equivalence.rs`. Do not mix the two entry points on
 //! one engine: an eager `rewind` would truncate the live recordings.
 //!
 //! ## Memory discipline
@@ -110,7 +118,11 @@ use std::thread;
 use crate::compress::{Compressor, Ef21Worker, RandK, TopK};
 use crate::nn::ParamRange;
 use crate::scalar::Scalar;
-use crate::tape::{Mark, Recording, Scratch, Tape, Value};
+use crate::tape::{ExecMode, Mark, SampleExecutor, Scratch, StepProgram, Tape};
+
+// The oracle contract lives with the executor in `tape::exec`; re-export
+// it here so engine callers keep their historical import path.
+pub use crate::tape::SampleOracle;
 
 /// Default reduction width: the fixed number of lanes the minibatch is
 /// split into. Chosen ≥ any sensible worker count on the paper's hardware
@@ -247,97 +259,63 @@ impl fmt::Display for ReductionCompression {
 }
 
 // ---------------------------------------------------------------------------
-// Sample oracles
+// Per-worker executors
 // ---------------------------------------------------------------------------
 
-/// A per-sample gradient oracle the engine can drive in either execution
-/// mode. `build` is the eager contract (construct sample `idx`'s loss on
-/// whatever tape it is handed); `record`/`rebind` additionally let the
-/// replay path freeze one sample's graph and rewrite only its inputs for
-/// every later sample.
+/// Per-worker-tape execution state for the engine: slot `w` holds worker
+/// `w`'s [`SampleExecutor`] (worker 0 is the coordinator's main tape) —
+/// under replay, that executor carries the tape's recording and compiled
+/// [`StepProgram`] once its first sample has been processed. Owned by the
+/// caller so it can outlive individual step calls — the whole point is
+/// recording once per training run.
 ///
-/// Every `Fn(&mut Tape<T>, usize) -> Value + Sync` closure is a
-/// [`SampleOracle`] via a blanket impl (eager-only: its `record` returns
-/// `None`), so existing closure-based callers work unchanged. Model-aware
-/// oracles (see `coordinator::Trainer`) implement `record` in terms of
-/// `CharMlp::record_sample` / `Gpt::record_sample`.
-///
-/// Oracles run concurrently on replica tapes; they must not mutate shared
-/// state.
-pub trait SampleOracle<T: Scalar>: Sync {
-    /// Per-tape replay state: where the recorded graph's sample inputs
-    /// live (rebind slots). `Send` because it crosses into pool workers.
-    type Rec: Send;
-
-    /// Eagerly build sample `idx`'s loss graph on `tape` and return the
-    /// loss root. The eager execution path, and the recording pass.
-    fn build(&self, tape: &mut Tape<T>, idx: usize) -> Value;
-
-    /// Record sample `idx`: build it eagerly on top of the parameter base
-    /// and freeze the segment. Returns `None` when the oracle cannot
-    /// replay (data-dependent topology, or a plain closure) — the replay
-    /// entry point treats that as a hard error.
-    fn record(&self, tape: &mut Tape<T>, idx: usize) -> Option<(Recording, Self::Rec)> {
-        let _ = (tape, idx);
-        None
-    }
-
-    /// Rewrite the recorded graph's input slots to sample `idx`'s data
-    /// (before [`Tape::replay_forward`]). Must be allocation-free.
-    fn rebind(&self, tape: &mut Tape<T>, rec: &Self::Rec, idx: usize) {
-        let _ = (tape, rec, idx);
-        unreachable!("rebind called on an oracle that never records");
-    }
-}
-
-impl<T: Scalar, F> SampleOracle<T> for F
-where
-    F: Fn(&mut Tape<T>, usize) -> Value + Sync,
-{
-    type Rec = ();
-
-    fn build(&self, tape: &mut Tape<T>, idx: usize) -> Value {
-        self(tape, idx)
-    }
-}
-
-/// One worker tape's replay state: the frozen [`Recording`] plus the
-/// oracle's rebind slots. `None` until that tape records its first sample.
-type SessionSlot<R> = Option<(Recording, R)>;
-
-/// Per-worker-tape replay state for [`MinibatchGradEngine::accumulate_replay`]:
-/// slot `w` holds worker `w`'s recording (worker 0 is the coordinator's
-/// main tape) once that tape has processed its first sample. Owned by the
-/// caller so it can outlive individual `accumulate_replay` calls — the
-/// whole point is recording once per training run.
+/// Created with [`ReplaySessions::new`] (replay mode, historical name) or
+/// [`ReplaySessions::with_mode`] for the mode-agnostic trainer path.
 pub struct ReplaySessions<R> {
-    slots: Vec<SessionSlot<R>>,
+    execs: Vec<SampleExecutor<R>>,
 }
 
 impl<R> ReplaySessions<R> {
-    /// Empty sessions for an engine of `threads` worker tapes
+    /// Replay-mode sessions for an engine of `threads` worker tapes
     /// (`engine.threads()`).
     pub fn new(threads: usize) -> ReplaySessions<R> {
+        ReplaySessions::with_mode(ExecMode::Replay, threads)
+    }
+
+    /// Sessions driving the given execution mode (eager executors are
+    /// stateless; replay executors record + compile per worker tape).
+    pub fn with_mode(mode: ExecMode, threads: usize) -> ReplaySessions<R> {
         ReplaySessions {
-            slots: (0..threads.max(1)).map(|_| None).collect(),
+            execs: (0..threads.max(1)).map(|_| SampleExecutor::new(mode)).collect(),
         }
     }
 
-    /// How many worker tapes have recorded so far.
+    /// The execution mode these sessions drive.
+    pub fn mode(&self) -> ExecMode {
+        self.execs[0].mode()
+    }
+
+    /// How many worker tapes have recorded (and compiled) so far.
     pub fn recorded_count(&self) -> usize {
-        self.slots.iter().filter(|s| s.is_some()).count()
+        self.execs.iter().filter(|e| e.recorded()).count()
+    }
+
+    /// The compiled programs recorded so far — observability for the
+    /// zero-dispatch assertions (instruction counts, zeroing extents).
+    pub fn programs(&self) -> impl Iterator<Item = &StepProgram> {
+        self.execs.iter().filter_map(|e| e.program())
     }
 
     /// Number of session slots (== the engine's thread count).
     pub fn len(&self) -> usize {
-        self.slots.len()
+        self.execs.len()
     }
 
     /// Standard companion to [`ReplaySessions::len`] (slot count — use
     /// [`ReplaySessions::recorded_count`] to ask whether anything has
     /// been recorded yet).
     pub fn is_empty(&self) -> bool {
-        self.slots.is_empty()
+        self.execs.is_empty()
     }
 }
 
@@ -440,6 +418,20 @@ impl WorkerPool {
     /// Spawn `workers` long-lived threads. `workers = 0` is valid: the
     /// pool degenerates to running jobs inline on the caller (index 0).
     pub fn new(workers: usize) -> WorkerPool {
+        WorkerPool::with_options(workers, false)
+    }
+
+    /// [`WorkerPool::new`] with optional core pinning: when `pin_cores`
+    /// is set, pool worker `w` pins itself to CPU `w mod cores` before
+    /// entering its step loop, so the first-touch NUMA placement of
+    /// per-worker state (replica tapes, recorded segments, compiled
+    /// instruction lists) survives OS migration for the pool's lifetime.
+    /// Worker 0 — the coordinator, i.e. the calling thread — is never
+    /// pinned; it belongs to the application.
+    ///
+    /// Pinning requires the `affinity` cargo feature on Linux; otherwise
+    /// the request is a no-op (see [`pin_current_thread`]).
+    pub fn with_options(workers: usize, pin_cores: bool) -> WorkerPool {
         let shared = Arc::new(PoolShared {
             barrier: Barrier::new(workers + 1),
             job: JobCell(UnsafeCell::new(None)),
@@ -451,7 +443,15 @@ impl WorkerPool {
                 let shared = Arc::clone(&shared);
                 thread::Builder::new()
                     .name(format!("burtorch-pool-{w}"))
-                    .spawn(move || worker_loop(&shared, w))
+                    .spawn(move || {
+                        if pin_cores {
+                            let cores = thread::available_parallelism()
+                                .map(|n| n.get())
+                                .unwrap_or(1);
+                            let _ = pin_current_thread(w % cores);
+                        }
+                        worker_loop(&shared, w)
+                    })
                     .expect("failed to spawn pool worker")
             })
             .collect();
@@ -544,6 +544,39 @@ fn worker_loop(shared: &PoolShared, index: usize) {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Core pinning (ROADMAP PR 2 follow-on)
+// ---------------------------------------------------------------------------
+
+/// Pin the calling thread to logical CPU `cpu`. Returns `true` when the
+/// affinity mask was applied.
+///
+/// Real implementation behind the `affinity` cargo feature on Linux — a
+/// direct `sched_setaffinity(2)` call (the symbol comes from the libc
+/// that `std` already links; no external crate, per the zero-dependency
+/// policy). Everywhere else this is a no-op returning `false`, so callers
+/// can request pinning unconditionally.
+#[cfg(all(feature = "affinity", target_os = "linux"))]
+pub fn pin_current_thread(cpu: usize) -> bool {
+    // Fixed-size 1024-bit mask (glibc's cpu_set_t default width).
+    let cpu = cpu % 1024;
+    let mut mask = [0u64; 16];
+    mask[cpu / 64] = 1u64 << (cpu % 64);
+    extern "C" {
+        fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
+    }
+    // SAFETY: pid 0 targets the calling thread; the mask pointer and its
+    // byte size describe a live, correctly-aligned buffer.
+    unsafe { sched_setaffinity(0, std::mem::size_of_val(&mask), mask.as_ptr()) == 0 }
+}
+
+/// Stub: core pinning is compiled out (enable the `affinity` feature on
+/// Linux). Always returns `false`.
+#[cfg(not(all(feature = "affinity", target_os = "linux")))]
+pub fn pin_current_thread(_cpu: usize) -> bool {
+    false
+}
+
 /// A raw pointer that may cross threads. Used to hand each pool worker
 /// exclusive access to *its* element of an engine-owned buffer; the
 /// disjointness argument lives at each use site.
@@ -575,12 +608,18 @@ pub struct ParallelOptions {
     /// the (deterministic) rounding, so it is a config knob rather than
     /// something derived from the machine.
     pub lanes: usize,
-    /// Use `backwardWithScratchStorage` instead of `backward_above`
-    /// (each worker owns a private [`Scratch`]).
+    /// Use `backwardWithScratchStorage` instead of `backward_above` in
+    /// the **eager** interpreter (each worker owns a private [`Scratch`]).
+    /// Replay supersedes this knob with the compiled program backward.
     pub scratch_backward: bool,
     /// Lane→tree compression. [`ReductionCompression::None`] (default)
     /// keeps training bitwise identical to the uncompressed engine.
     pub compression: ReductionCompression,
+    /// Pin pool workers to cores (`affinity` feature; no-op otherwise) so
+    /// first-touch NUMA placement of replica state survives OS migration.
+    /// Only applies when the engine spawns its own pool — a caller-
+    /// provided shared pool keeps whatever pinning it was created with.
+    pub pin_cores: bool,
 }
 
 impl Default for ParallelOptions {
@@ -590,6 +629,7 @@ impl Default for ParallelOptions {
             lanes: DEFAULT_LANES,
             scratch_backward: false,
             compression: ReductionCompression::None,
+            pin_cores: false,
         }
     }
 }
@@ -765,7 +805,8 @@ impl<T: Scalar> MinibatchGradEngine<T> {
         let threads = opts.threads.max(1);
         let lanes = opts.lanes.max(1);
         let pool = if threads > 1 {
-            let pool = pool.unwrap_or_else(|| Arc::new(WorkerPool::new(threads - 1)));
+            let pool = pool
+                .unwrap_or_else(|| Arc::new(WorkerPool::with_options(threads - 1, opts.pin_cores)));
             assert!(
                 pool.workers() + 1 >= threads,
                 "pool has {} workers but threads = {threads} needs at least {}",
@@ -920,10 +961,11 @@ impl<T: Scalar> MinibatchGradEngine<T> {
     }
 
     /// [`MinibatchGradEngine::accumulate`] in **replay** mode: the first
-    /// sample each worker tape sees is recorded (on the worker's own
-    /// thread), every later sample rebinds its inputs into the frozen
-    /// graph and re-sweeps it in place — zero appends, zero rewinds, zero
-    /// heap allocations in steady state, bitwise identical to eager.
+    /// sample each worker tape sees is recorded and compiled (on the
+    /// worker's own thread), every later sample rebinds its inputs into
+    /// the frozen graph and runs the two compiled sweeps in place — zero
+    /// appends, zero rewinds, zero heap allocations and zero per-node
+    /// opcode dispatch in steady state, bitwise identical to eager.
     ///
     /// `sessions` must come from [`ReplaySessions::new`] with this
     /// engine's thread count and must be passed to every step of the run
@@ -942,6 +984,25 @@ impl<T: Scalar> MinibatchGradEngine<T> {
     where
         O: SampleOracle<T>,
     {
+        self.accumulate_with(tape, batch, oracle, sessions, grad_out)
+    }
+
+    /// The mode-agnostic step entry point: drives whatever execution mode
+    /// `sessions` was created with ([`ReplaySessions::with_mode`]) through
+    /// the single executor-based lane loop. This is the trainer's one step
+    /// path; [`MinibatchGradEngine::accumulate`] and
+    /// [`MinibatchGradEngine::accumulate_replay`] are conveniences over it.
+    pub fn accumulate_with<O>(
+        &mut self,
+        tape: &mut Tape<T>,
+        batch: &[usize],
+        oracle: &O,
+        sessions: &mut ReplaySessions<O::Rec>,
+        grad_out: &mut [f64],
+    ) -> StepStats
+    where
+        O: SampleOracle<T>,
+    {
         assert_eq!(
             sessions.len(),
             self.threads,
@@ -949,7 +1010,7 @@ impl<T: Scalar> MinibatchGradEngine<T> {
             sessions.len(),
             self.threads
         );
-        self.accumulate_impl(tape, batch, oracle, Some(&mut sessions.slots), grad_out)
+        self.accumulate_impl(tape, batch, oracle, Some(&mut sessions.execs), grad_out)
     }
 
     fn accumulate_impl<O>(
@@ -957,7 +1018,7 @@ impl<T: Scalar> MinibatchGradEngine<T> {
         tape: &mut Tape<T>,
         batch: &[usize],
         oracle: &O,
-        sessions: Option<&mut [SessionSlot<O::Rec>]>,
+        sessions: Option<&mut [SampleExecutor<O::Rec>]>,
         grad_out: &mut [f64],
     ) -> StepStats
     where
@@ -1020,7 +1081,7 @@ impl<T: Scalar> MinibatchGradEngine<T> {
             let rep_ptr = PtrSend(self.replicas.as_mut_ptr());
             let scr_ptr = PtrSend(self.scratches.as_mut_ptr());
             let main_ptr = PtrSend(tape as *mut Tape<T>);
-            let sess_ptr: Option<PtrSend<SessionSlot<O::Rec>>> =
+            let sess_ptr: Option<PtrSend<SampleExecutor<O::Rec>>> =
                 sessions.map(|s| PtrSend(s.as_mut_ptr()));
             pool.run(&|w| {
                 if w >= workers {
@@ -1043,8 +1104,9 @@ impl<T: Scalar> MinibatchGradEngine<T> {
                     };
                     let scratch = &mut *scr_ptr.0.add(w);
                     let chunk = std::slice::from_raw_parts_mut(lane_ptr.0.add(lo), hi - lo);
-                    // A worker records on its own thread (first sample of
-                    // its first step), so the recorded segment's pages are
+                    // A worker records + compiles on its own thread (first
+                    // sample of its first step), so the recorded segment's
+                    // pages and the compiled instruction list are
                     // first-touch allocated on the worker's NUMA node just
                     // like the replica prefix.
                     let session = sess_ptr.map(|p| &mut *p.0.add(w));
@@ -1086,12 +1148,14 @@ impl<T: Scalar> MinibatchGradEngine<T> {
 }
 
 /// Run the lanes `[lane0, lane0 + lanes.len())` of the current step on
-/// one tape: for every owned batch slot, produce the sample loss (eager
-/// build + rewind, or record/rebind + replay when `session` is given),
-/// fold it into the lane, backprop, fold the parameter gradient run into
-/// the lane buffer; then (if configured) compress the finished lane
-/// buffer in place, still on the thread that owns the lane this step.
-/// `lanes_total` fixes the slot partition.
+/// one tape: every owned batch slot goes through the worker's
+/// [`SampleExecutor`] — the *single* per-sample code path for eager,
+/// record, and replay execution — which produces the loss, runs the
+/// matching backward pass, and hands the tape to the fold sink below
+/// (loss + parameter-gradient fold into the lane buffer, peak tracking);
+/// then (if configured) the finished lane buffer is compressed in place,
+/// still on the thread that owns the lane this step. `lanes_total` fixes
+/// the slot partition.
 #[allow(clippy::too_many_arguments)]
 fn run_lanes<T: Scalar, O>(
     tape: &mut Tape<T>,
@@ -1104,51 +1168,32 @@ fn run_lanes<T: Scalar, O>(
     lanes: &mut [Lane],
     oracle: &O,
     use_scratch: bool,
-    mut session: Option<&mut SessionSlot<O::Rec>>,
+    session: Option<&mut SampleExecutor<O::Rec>>,
 ) where
     O: SampleOracle<T>,
 {
+    // Callers without persistent per-worker state (the legacy eager entry
+    // point) get a stateless eager executor on this worker's stack.
+    let mut local = SampleExecutor::eager();
+    let exec: &mut SampleExecutor<O::Rec> = match session {
+        Some(e) => e,
+        None => &mut local,
+    };
     let b = batch.len();
     for (off, lane) in lanes.iter_mut().enumerate() {
         let l = lane0 + off;
         let (slot0, slot1) = (l * b / lanes_total, (l + 1) * b / lanes_total);
         for slot in slot0..slot1 {
             let idx = batch[slot];
-            let root = match session.as_deref_mut() {
-                // Eager: rebuild the graph, discard it below after use.
-                None => oracle.build(tape, idx),
-                // Replay steady state: rebind inputs, re-sweep in place.
-                Some(Some((rec, binds))) => {
-                    oracle.rebind(tape, binds, idx);
-                    tape.replay_forward(rec);
-                    rec.root()
+            let scratch = if use_scratch { Some(&mut *scratch) } else { None };
+            exec.run_sample(tape, oracle, idx, base, scratch, |tape, root| {
+                lane.loss += tape.value(root).to_f64();
+                let grads = tape.grads_range(params.first, params.len);
+                for (acc, g) in lane.grad.iter_mut().zip(grads) {
+                    *acc += g.to_f64();
                 }
-                // Replay, first sample on this tape: record it. Runs on
-                // the thread that owns the tape (first-touch locality).
-                Some(slot_ref @ None) => {
-                    let (rec, binds) = oracle.record(tape, idx).expect(
-                        "replay execution requires a replay-capable oracle \
-                         (SampleOracle::record returned None)",
-                    );
-                    let root = rec.root();
-                    *slot_ref = Some((rec, binds));
-                    root
-                }
-            };
-            lane.loss += tape.value(root).to_f64();
-            if use_scratch {
-                tape.backward_with_scratch(root, scratch);
-            } else {
-                tape.backward_above(root, base);
-            }
-            let grads = tape.grads_range(params.first, params.len);
-            for (acc, g) in lane.grad.iter_mut().zip(grads) {
-                *acc += g.to_f64();
-            }
-            lane.peak_nodes = lane.peak_nodes.max(tape.len());
-            if session.is_none() {
-                tape.rewind(base);
-            }
+                lane.peak_nodes = lane.peak_nodes.max(tape.len());
+            });
         }
         if let Some(cs) = lane.compress.as_mut() {
             cs.apply(&mut lane.grad);
@@ -1159,6 +1204,7 @@ fn run_lanes<T: Scalar, O>(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tape::{Recording, Value};
     use std::sync::atomic::AtomicUsize;
 
     /// Tiny least-squares model: params w ∈ R^4 at the tape base,
@@ -1229,6 +1275,37 @@ mod tests {
             });
             assert_eq!(mask.load(Ordering::SeqCst), 0b11111);
         }
+    }
+
+    #[test]
+    fn pin_current_thread_is_safe_to_call() {
+        // With the `affinity` feature on Linux this actually pins; in the
+        // default build it is a documented no-op returning false. Either
+        // way the call must not crash, and a pinned pool must produce the
+        // same bits as an unpinned one (pinning is pure placement).
+        let _ = pin_current_thread(0);
+        let batch: Vec<usize> = (0..12).collect();
+        let (g_plain, l_plain) = grad_with_threads(2, &batch);
+        let prob = LsqProblem::new(64);
+        let (mut tape, base, params) = prob.setup();
+        let mut engine = MinibatchGradEngine::with_pool(
+            &tape,
+            base,
+            params,
+            ParallelOptions {
+                threads: 2,
+                pin_cores: true,
+                ..Default::default()
+            },
+            None,
+        );
+        let mut grad = vec![0.0; 4];
+        let stats = engine.accumulate(&mut tape, &batch, &prob.oracle(), &mut grad);
+        assert_eq!(l_plain.to_bits(), stats.loss_sum.to_bits());
+        assert_eq!(
+            g_plain.iter().map(|g| g.to_bits()).collect::<Vec<_>>(),
+            grad.iter().map(|g| g.to_bits()).collect::<Vec<_>>()
+        );
     }
 
     #[test]
@@ -1672,6 +1749,16 @@ mod tests {
             }
             assert!(sessions.recorded_count() >= 1);
             assert!(sessions.recorded_count() <= engine.threads());
+            // Every recorded tape carries a compiled, leaf-free program:
+            // the steady-state backward is exactly instruction_count kernel
+            // calls, strictly fewer than the recorded node count.
+            for prog in sessions.programs() {
+                assert!(prog.instruction_count() > 0);
+                assert!(
+                    prog.instruction_count() < prog.node_count(),
+                    "leaves must be excluded from the compiled sweep"
+                );
+            }
         }
     }
 

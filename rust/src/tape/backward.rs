@@ -91,11 +91,494 @@ impl Scratch {
 }
 
 impl<T: Scalar> Tape<T> {
-    /// 4× unrolled backward scatter for the contiguous-range dot kernels
-    /// (`DotRange` / `DotRangeBias`): `grad[x0+k] += g·w[k]`,
+    // ---- operand accessors -------------------------------------------------
+    //
+    // The backward sweeps (interpreter and compiled) visit node `i` only
+    // for `i < len`, and the constructor invariants keep every stored
+    // operand/meta index in range, so operand loads skip the bounds
+    // checks — exactly the unchecked loads the interpreter arms always
+    // used, now shared with the program executor.
+
+    /// Unchecked load of node `i`'s `a` slot.
+    #[inline(always)]
+    pub(crate) fn arg_a(&self, i: usize) -> usize {
+        debug_assert!(i < self.len());
+        // SAFETY: i < len (caller loop bound / program compile assert).
+        unsafe { *self.a.get_unchecked(i) as usize }
+    }
+
+    /// Unchecked load of node `i`'s `b` slot.
+    #[inline(always)]
+    pub(crate) fn arg_b(&self, i: usize) -> usize {
+        debug_assert!(i < self.len());
+        // SAFETY: i < len (caller loop bound / program compile assert).
+        unsafe { *self.b.get_unchecked(i) as usize }
+    }
+
+    /// Unchecked load of aux entry `k`.
+    #[inline(always)]
+    pub(crate) fn aux_at(&self, k: usize) -> usize {
+        debug_assert!(k < self.aux.len());
+        // SAFETY: every stored aux offset/meta is in range by the
+        // constructor invariants (and rebinds re-assert their bounds).
+        unsafe { *self.aux.get_unchecked(k) as usize }
+    }
+
+    // ---- shared adjoint kernels -------------------------------------------
+    //
+    // One kernel per op family, shared verbatim by the reverse-scan
+    // interpreter ([`Tape::accumulate`]) and the compiled
+    // [`crate::tape::StepProgram`] executor. Because both paths call the
+    // *same* function with the same resolved operands, compiled-backward
+    // gradients are bitwise identical to the interpreter by construction —
+    // there is exactly one place each adjoint formula lives.
+
+    /// Adjoint of `relu`: pass `g` through where the input was positive.
+    #[inline(always)]
+    pub(crate) fn adj_relu(&mut self, x: usize, g: T) {
+        // SAFETY: x is a tape-invariant argument id (< len).
+        unsafe {
+            if *self.val.get_unchecked(x) > T::ZERO {
+                *self.grad.get_unchecked_mut(x) += g;
+            }
+        }
+    }
+
+    /// Adjoint of `tanh`: d = 1 − tanh² — reuses the stored *output* at `i`.
+    #[inline(always)]
+    pub(crate) fn adj_tanh(&mut self, x: usize, i: usize, g: T) {
+        // SAFETY: x < i < len by the tape invariant.
+        unsafe {
+            let t = *self.val.get_unchecked(i);
+            *self.grad.get_unchecked_mut(x) += g * (T::ONE - t * t);
+        }
+    }
+
+    /// Adjoint of `exp`: d = exp(x) — the stored output at `i`.
+    #[inline(always)]
+    pub(crate) fn adj_exp(&mut self, x: usize, i: usize, g: T) {
+        // SAFETY: x < i < len by the tape invariant.
+        unsafe {
+            *self.grad.get_unchecked_mut(x) += g * *self.val.get_unchecked(i);
+        }
+    }
+
+    /// Adjoint of `negativeLog`: d = −1/x.
+    #[inline(always)]
+    pub(crate) fn adj_neg_log(&mut self, x: usize, g: T) {
+        self.grad[x] += -g / self.val[x];
+    }
+
+    /// Adjoint of `sigmoid`: d = s(1−s) — reuses the stored output.
+    #[inline(always)]
+    pub(crate) fn adj_sigmoid(&mut self, x: usize, i: usize, g: T) {
+        let s = self.val[i];
+        self.grad[x] += g * s * (T::ONE - s);
+    }
+
+    /// Adjoint of `inv`: val = 1/x ⇒ d = −1/x² = −val².
+    #[inline(always)]
+    pub(crate) fn adj_inv(&mut self, x: usize, i: usize, g: T) {
+        let v = self.val[i];
+        self.grad[x] += -g * v * v;
+    }
+
+    /// Adjoint of `sqr`: d = 2x.
+    #[inline(always)]
+    pub(crate) fn adj_sqr(&mut self, x: usize, g: T) {
+        self.grad[x] += g * T::TWO * self.val[x];
+    }
+
+    /// Adjoint of `pow3`: d = 3x².
+    #[inline(always)]
+    pub(crate) fn adj_cub(&mut self, x: usize, g: T) {
+        let xv = self.val[x];
+        self.grad[x] += g * T::from_f64(3.0) * xv * xv;
+    }
+
+    /// Adjoint of `logarithm`: d = 1/x.
+    #[inline(always)]
+    pub(crate) fn adj_log(&mut self, x: usize, g: T) {
+        self.grad[x] += g / self.val[x];
+    }
+
+    /// Adjoint of `sqrt`: val = √x ⇒ d = 1/(2·val).
+    #[inline(always)]
+    pub(crate) fn adj_sqrt(&mut self, x: usize, i: usize, g: T) {
+        self.grad[x] += g / (T::TWO * self.val[i]);
+    }
+
+    /// Adjoint of `invSqrt`: val = x^(−1/2) ⇒ d = −(1/2)·val³.
+    #[inline(always)]
+    pub(crate) fn adj_inv_sqrt(&mut self, x: usize, i: usize, g: T) {
+        let v = self.val[i];
+        self.grad[x] += -g * T::HALF * v * v * v;
+    }
+
+    /// Adjoint of `neg`.
+    #[inline(always)]
+    pub(crate) fn adj_neg(&mut self, x: usize, g: T) {
+        self.grad[x] -= g;
+    }
+
+    /// Adjoint of `add`.
+    #[inline(always)]
+    pub(crate) fn adj_add(&mut self, x: usize, y: usize, g: T) {
+        // SAFETY: x, y < len by the tape invariant.
+        unsafe {
+            *self.grad.get_unchecked_mut(x) += g;
+            *self.grad.get_unchecked_mut(y) += g;
+        }
+    }
+
+    /// Adjoint of `sub`.
+    #[inline(always)]
+    pub(crate) fn adj_sub(&mut self, x: usize, y: usize, g: T) {
+        // SAFETY: x, y < len by the tape invariant.
+        unsafe {
+            *self.grad.get_unchecked_mut(x) += g;
+            *self.grad.get_unchecked_mut(y) -= g;
+        }
+    }
+
+    /// Adjoint of `mul`.
+    #[inline(always)]
+    pub(crate) fn adj_mul(&mut self, x: usize, y: usize, g: T) {
+        // SAFETY: x, y < len by the tape invariant.
+        unsafe {
+            let (xv, yv) = (*self.val.get_unchecked(x), *self.val.get_unchecked(y));
+            *self.grad.get_unchecked_mut(x) += g * yv;
+            *self.grad.get_unchecked_mut(y) += g * xv;
+        }
+    }
+
+    /// Adjoint of `mulByConstant` (`ci` indexes the consts pool).
+    #[inline(always)]
+    pub(crate) fn adj_mul_const(&mut self, x: usize, ci: usize, g: T) {
+        let c = self.consts[ci];
+        self.grad[x] += g * c;
+    }
+
+    /// Adjoint of `div`: val = x/y ⇒ ∂x = 1/y, ∂y = −x/y² = −val/y.
+    #[inline(always)]
+    pub(crate) fn adj_div(&mut self, x: usize, y: usize, i: usize, g: T) {
+        // SAFETY: x, y < i < len by the tape invariant.
+        unsafe {
+            let yv = *self.val.get_unchecked(y);
+            *self.grad.get_unchecked_mut(x) += g / yv;
+            *self.grad.get_unchecked_mut(y) += -g * *self.val.get_unchecked(i) / yv;
+        }
+    }
+
+    /// Adjoint of `mean`.
+    #[inline(always)]
+    pub(crate) fn adj_mean2(&mut self, x: usize, y: usize, g: T) {
+        let gh = g * T::HALF;
+        self.grad[x] += gh;
+        self.grad[y] += gh;
+    }
+
+    /// Adjoint of `addSquares`.
+    #[inline(always)]
+    pub(crate) fn adj_add_squares(&mut self, x: usize, y: usize, g: T) {
+        self.grad[x] += g * T::TWO * self.val[x];
+        self.grad[y] += g * T::TWO * self.val[y];
+    }
+
+    /// Adjoint of `meanSquares`.
+    #[inline(always)]
+    pub(crate) fn adj_mean_squares2(&mut self, x: usize, y: usize, g: T) {
+        self.grad[x] += g * self.val[x];
+        self.grad[y] += g * self.val[y];
+    }
+
+    /// Adjoint of `negativeMean`.
+    #[inline(always)]
+    pub(crate) fn adj_neg_mean2(&mut self, x: usize, y: usize, g: T) {
+        let gh = g * T::HALF;
+        self.grad[x] -= gh;
+        self.grad[y] -= gh;
+    }
+
+    /// Adjoint of `reduceSum` over the aux run `[s, s+n)`.
+    #[inline(always)]
+    pub(crate) fn adj_reduce_sum(&mut self, s: usize, n: usize, g: T) {
+        // SAFETY: the aux run and every id in it obey the tape invariant.
+        unsafe {
+            for k in s..s + n {
+                let x = *self.aux.get_unchecked(k) as usize;
+                *self.grad.get_unchecked_mut(x) += g;
+            }
+        }
+    }
+
+    /// Adjoint of `reduceSub`.
+    #[inline(always)]
+    pub(crate) fn adj_reduce_sub(&mut self, s: usize, n: usize, g: T) {
+        let first = self.aux[s] as usize;
+        self.grad[first] += g;
+        for k in s + 1..s + n {
+            let x = self.aux[k] as usize;
+            self.grad[x] -= g;
+        }
+    }
+
+    /// Adjoint of `reduceMul` — robust product rule: zeros are handled
+    /// without dividing by them.
+    #[inline(always)]
+    pub(crate) fn adj_reduce_mul(&mut self, s: usize, n: usize, i: usize, g: T) {
+        let mut zeros = 0usize;
+        let mut zero_at = 0usize;
+        let mut prod_nz = T::ONE;
+        for k in s..s + n {
+            let xv = self.val[self.aux[k] as usize];
+            if xv == T::ZERO {
+                zeros += 1;
+                zero_at = k;
+            } else {
+                prod_nz *= xv;
+            }
+        }
+        match zeros {
+            0 => {
+                let p = self.val[i];
+                for k in s..s + n {
+                    let x = self.aux[k] as usize;
+                    self.grad[x] += g * p / self.val[x];
+                }
+            }
+            1 => {
+                let x = self.aux[zero_at] as usize;
+                self.grad[x] += g * prod_nz;
+            }
+            _ => {} // two or more zeros: all partials are zero
+        }
+    }
+
+    /// Adjoint of `reduceMean`.
+    #[inline(always)]
+    pub(crate) fn adj_reduce_mean(&mut self, s: usize, n: usize, g: T) {
+        let gn = g / T::from_usize(n);
+        // SAFETY: the aux run and every id in it obey the tape invariant.
+        unsafe {
+            for k in s..s + n {
+                let x = *self.aux.get_unchecked(k) as usize;
+                *self.grad.get_unchecked_mut(x) += gn;
+            }
+        }
+    }
+
+    /// Adjoint of `reduceSumOfSquares`.
+    #[inline(always)]
+    pub(crate) fn adj_reduce_sum_squares(&mut self, s: usize, n: usize, g: T) {
+        let g2 = g * T::TWO;
+        for k in s..s + n {
+            let x = self.aux[k] as usize;
+            self.grad[x] += g2 * self.val[x];
+        }
+    }
+
+    /// Adjoint of `reduceMeanSquares`.
+    #[inline(always)]
+    pub(crate) fn adj_reduce_mean_squares(&mut self, s: usize, n: usize, g: T) {
+        let g2n = g * T::TWO / T::from_usize(n);
+        for k in s..s + n {
+            let x = self.aux[k] as usize;
+            self.grad[x] += g2n * self.val[x];
+        }
+    }
+
+    /// Adjoint of `reduceNegativeMean`.
+    #[inline(always)]
+    pub(crate) fn adj_reduce_neg_mean(&mut self, s: usize, n: usize, g: T) {
+        let gn = g / T::from_usize(n);
+        for k in s..s + n {
+            let x = self.aux[k] as usize;
+            self.grad[x] -= gn;
+        }
+    }
+
+    /// Adjoint of `innerProduct`: 4× unrolled gather-scatter over the aux
+    /// pairs at `[s, s+2n)`. Per-k operation order is preserved (plain
+    /// unrolling, no accumulator splitting), so the result is bitwise
+    /// identical to the rolled loop even when ids repeat across lanes.
+    #[inline(always)]
+    pub(crate) fn adj_inner_product(&mut self, s: usize, n: usize, g: T) {
+        // SAFETY: the aux run and every id in it obey the tape invariant.
+        unsafe {
+            let mut k = 0usize;
+            while k + 4 <= n {
+                let x0 = *self.aux.get_unchecked(s + k) as usize;
+                let y0 = *self.aux.get_unchecked(s + n + k) as usize;
+                let (xv0, yv0) = (*self.val.get_unchecked(x0), *self.val.get_unchecked(y0));
+                *self.grad.get_unchecked_mut(x0) += g * yv0;
+                *self.grad.get_unchecked_mut(y0) += g * xv0;
+                let x1 = *self.aux.get_unchecked(s + k + 1) as usize;
+                let y1 = *self.aux.get_unchecked(s + n + k + 1) as usize;
+                let (xv1, yv1) = (*self.val.get_unchecked(x1), *self.val.get_unchecked(y1));
+                *self.grad.get_unchecked_mut(x1) += g * yv1;
+                *self.grad.get_unchecked_mut(y1) += g * xv1;
+                let x2 = *self.aux.get_unchecked(s + k + 2) as usize;
+                let y2 = *self.aux.get_unchecked(s + n + k + 2) as usize;
+                let (xv2, yv2) = (*self.val.get_unchecked(x2), *self.val.get_unchecked(y2));
+                *self.grad.get_unchecked_mut(x2) += g * yv2;
+                *self.grad.get_unchecked_mut(y2) += g * xv2;
+                let x3 = *self.aux.get_unchecked(s + k + 3) as usize;
+                let y3 = *self.aux.get_unchecked(s + n + k + 3) as usize;
+                let (xv3, yv3) = (*self.val.get_unchecked(x3), *self.val.get_unchecked(y3));
+                *self.grad.get_unchecked_mut(x3) += g * yv3;
+                *self.grad.get_unchecked_mut(y3) += g * xv3;
+                k += 4;
+            }
+            while k < n {
+                let x = *self.aux.get_unchecked(s + k) as usize;
+                let y = *self.aux.get_unchecked(s + n + k) as usize;
+                let (xv, yv) = (*self.val.get_unchecked(x), *self.val.get_unchecked(y));
+                *self.grad.get_unchecked_mut(x) += g * yv;
+                *self.grad.get_unchecked_mut(y) += g * xv;
+                k += 1;
+            }
+        }
+    }
+
+    /// Adjoint of `innerProductWithBias`: rolled pair scatter + bias.
+    #[inline(always)]
+    pub(crate) fn adj_inner_product_bias(&mut self, s: usize, n: usize, g: T) {
+        for k in 0..n {
+            let x = self.aux[s + k] as usize;
+            let y = self.aux[s + n + k] as usize;
+            let (xv, yv) = (self.val[x], self.val[y]);
+            self.grad[x] += g * yv;
+            self.grad[y] += g * xv;
+        }
+        let bias = self.aux[s + 2 * n] as usize;
+        self.grad[bias] += g;
+    }
+
+    /// Adjoint of `dotRange`: 4× unrolled backward scatter for the
+    /// contiguous-range dot kernels: `grad[x0+k] += g·w[k]`,
     /// `grad[w0+k] += g·x[k]`. Plain unrolling — per-k operation order is
     /// preserved, so results are bitwise identical to the rolled loop
     /// even when the two ranges overlap.
+    #[inline(always)]
+    pub(crate) fn adj_dot_range(&mut self, x0: usize, w0: usize, n: usize, g: T) {
+        debug_assert!(x0 + n <= self.len() && w0 + n <= self.len());
+        // SAFETY: `x0 + n` and `w0 + n` are within the tape — the tape's
+        // topological invariant provides this for real nodes, and the
+        // program compiler re-asserts it for compiled instructions.
+        unsafe { self.dot_range_backward_unrolled(x0, w0, n, g) }
+    }
+
+    /// Adjoint of `dotRangeWithBias` = `dotRange` + bias pass-through.
+    #[inline(always)]
+    pub(crate) fn adj_dot_range_bias(&mut self, x0: usize, w0: usize, n: usize, bias: usize, g: T) {
+        debug_assert!(x0 + n <= self.len() && w0 + n <= self.len() && bias < self.len());
+        // SAFETY: see adj_dot_range.
+        unsafe {
+            self.dot_range_backward_unrolled(x0, w0, n, g);
+            *self.grad.get_unchecked_mut(bias) += g;
+        }
+    }
+
+    /// Adjoint of `dotParamRange`: 4× unrolled gather-scatter over the
+    /// x-id view at `xs_at` against the contiguous weight run at `w0`,
+    /// plus the bias. Per-k order preserved so repeated x-ids (shared
+    /// embedding rows) accumulate in exactly the rolled loop's order.
+    #[inline(always)]
+    pub(crate) fn adj_dot_param_range(
+        &mut self,
+        xs_at: usize,
+        n: usize,
+        w0: usize,
+        bias: usize,
+        g: T,
+    ) {
+        debug_assert!(xs_at + n <= self.aux.len() && w0 + n <= self.len() && bias < self.len());
+        // SAFETY: bounds debug-asserted above; ids < len by the tape
+        // invariant (and by the real asserts on the rebind entry points).
+        unsafe {
+            let mut k = 0usize;
+            while k + 4 <= n {
+                let x0i = *self.aux.get_unchecked(xs_at + k) as usize;
+                let (xv0, wv0) = (
+                    *self.val.get_unchecked(x0i),
+                    *self.val.get_unchecked(w0 + k),
+                );
+                *self.grad.get_unchecked_mut(x0i) += g * wv0;
+                *self.grad.get_unchecked_mut(w0 + k) += g * xv0;
+                let x1i = *self.aux.get_unchecked(xs_at + k + 1) as usize;
+                let (xv1, wv1) = (
+                    *self.val.get_unchecked(x1i),
+                    *self.val.get_unchecked(w0 + k + 1),
+                );
+                *self.grad.get_unchecked_mut(x1i) += g * wv1;
+                *self.grad.get_unchecked_mut(w0 + k + 1) += g * xv1;
+                let x2i = *self.aux.get_unchecked(xs_at + k + 2) as usize;
+                let (xv2, wv2) = (
+                    *self.val.get_unchecked(x2i),
+                    *self.val.get_unchecked(w0 + k + 2),
+                );
+                *self.grad.get_unchecked_mut(x2i) += g * wv2;
+                *self.grad.get_unchecked_mut(w0 + k + 2) += g * xv2;
+                let x3i = *self.aux.get_unchecked(xs_at + k + 3) as usize;
+                let (xv3, wv3) = (
+                    *self.val.get_unchecked(x3i),
+                    *self.val.get_unchecked(w0 + k + 3),
+                );
+                *self.grad.get_unchecked_mut(x3i) += g * wv3;
+                *self.grad.get_unchecked_mut(w0 + k + 3) += g * xv3;
+                k += 4;
+            }
+            while k < n {
+                let x = *self.aux.get_unchecked(xs_at + k) as usize;
+                let xv = *self.val.get_unchecked(x);
+                let wv = *self.val.get_unchecked(w0 + k);
+                *self.grad.get_unchecked_mut(x) += g * wv;
+                *self.grad.get_unchecked_mut(w0 + k) += g * xv;
+                k += 1;
+            }
+            *self.grad.get_unchecked_mut(bias) += g;
+        }
+    }
+
+    /// Adjoint of `dotStrided`.
+    #[inline(always)]
+    pub(crate) fn adj_dot_strided(&mut self, x0: usize, w0: usize, n: usize, stride: usize, g: T) {
+        debug_assert!(w0 + n <= self.len());
+        debug_assert!(n == 0 || x0 + (n - 1) * stride < self.len());
+        // SAFETY: bounds debug-asserted above; ids < len by tape invariant.
+        unsafe {
+            for k in 0..n {
+                let x = x0 + k * stride;
+                let xv = *self.val.get_unchecked(x);
+                let wv = *self.val.get_unchecked(w0 + k);
+                *self.grad.get_unchecked_mut(x) += g * wv;
+                *self.grad.get_unchecked_mut(w0 + k) += g * xv;
+            }
+        }
+    }
+
+    /// Adjoint of the fused `crossEntropyLogits`:
+    /// loss = logsumexp(z) − z_t ⇒ ∂z_j = softmax_j − 1[j = t].
+    #[inline(always)]
+    pub(crate) fn adj_ce_logits(&mut self, z0: usize, n: usize, target: usize, g: T) {
+        let mut m = self.val[z0];
+        for k in 1..n {
+            m = m.max(self.val[z0 + k]);
+        }
+        let mut den = T::ZERO;
+        for k in 0..n {
+            den += (self.val[z0 + k] - m).exp();
+        }
+        for k in 0..n {
+            let p = (self.val[z0 + k] - m).exp() / den;
+            self.grad[z0 + k] += g * p;
+        }
+        self.grad[z0 + target] -= g;
+    }
+
+    /// 4× unrolled backward scatter body shared by `adj_dot_range` and
+    /// `adj_dot_range_bias`.
     ///
     /// # Safety
     /// Caller must guarantee `x0 + n` and `w0 + n` are within the tape
@@ -143,363 +626,184 @@ impl<T: Scalar> Tape<T> {
 
     /// Accumulate `g · ∂node/∂args` into the argument gradients of node `i`.
     ///
-    /// This is the single dispatch point shared by every backward variant;
+    /// This is the reverse-scan *interpreter*: it decodes `op[i]` on every
+    /// visit, then runs the shared decoded dispatch.
     /// `#[inline(always)]` lets each caller's loop specialize it.
     #[inline(always)]
     fn accumulate(&mut self, i: usize, g: T) {
-        match self.op[i] {
+        self.accumulate_decoded(i, self.op[i], g);
+    }
+
+    /// Dispatch one already-decoded op's adjoint: resolve its operands
+    /// (arg slots live; aux-meta chased here, per visit) and call the
+    /// matching shared kernel. Shared by the interpreter (which reads
+    /// `op[i]` each visit) and the compiled
+    /// [`crate::tape::StepProgram`] executor, whose instructions carry the
+    /// pre-decoded kind — the program overrides only the fused range arms
+    /// with operands resolved once at capture time and delegates every
+    /// other op here, so the non-fused dispatch lives in exactly one place.
+    #[inline(always)]
+    pub(crate) fn accumulate_decoded(&mut self, i: usize, op: Op, g: T) {
+        debug_assert_eq!(self.op[i], op, "decoded op diverged from the tape");
+        match op {
             Op::Leaf => {}
-            Op::Relu => unsafe {
-                let x = *self.a.get_unchecked(i) as usize;
-                if *self.val.get_unchecked(x) > T::ZERO {
-                    *self.grad.get_unchecked_mut(x) += g;
-                }
-            },
-            Op::Tanh => unsafe {
-                // d tanh = 1 − tanh² — reuses the stored *output*.
-                let x = *self.a.get_unchecked(i) as usize;
-                let t = *self.val.get_unchecked(i);
-                *self.grad.get_unchecked_mut(x) += g * (T::ONE - t * t);
-            },
-            Op::Exp => unsafe {
-                let x = *self.a.get_unchecked(i) as usize;
-                *self.grad.get_unchecked_mut(x) += g * *self.val.get_unchecked(i);
-            },
+            Op::Relu => {
+                let x = self.arg_a(i);
+                self.adj_relu(x, g);
+            }
+            Op::Tanh => {
+                let x = self.arg_a(i);
+                self.adj_tanh(x, i, g);
+            }
+            Op::Exp => {
+                let x = self.arg_a(i);
+                self.adj_exp(x, i, g);
+            }
             Op::NegLog => {
-                let x = self.a[i] as usize;
-                self.grad[x] += -g / self.val[x];
+                let x = self.arg_a(i);
+                self.adj_neg_log(x, g);
             }
             Op::Sigmoid => {
-                let x = self.a[i] as usize;
-                let s = self.val[i];
-                self.grad[x] += g * s * (T::ONE - s);
+                let x = self.arg_a(i);
+                self.adj_sigmoid(x, i, g);
             }
             Op::Inv => {
-                // val = 1/x ⇒ d = −1/x² = −val².
-                let x = self.a[i] as usize;
-                let v = self.val[i];
-                self.grad[x] += -g * v * v;
+                let x = self.arg_a(i);
+                self.adj_inv(x, i, g);
             }
             Op::Sqr => {
-                let x = self.a[i] as usize;
-                self.grad[x] += g * T::TWO * self.val[x];
+                let x = self.arg_a(i);
+                self.adj_sqr(x, g);
             }
             Op::Cub => {
-                let x = self.a[i] as usize;
-                let xv = self.val[x];
-                self.grad[x] += g * T::from_f64(3.0) * xv * xv;
+                let x = self.arg_a(i);
+                self.adj_cub(x, g);
             }
             Op::Log => {
-                let x = self.a[i] as usize;
-                self.grad[x] += g / self.val[x];
+                let x = self.arg_a(i);
+                self.adj_log(x, g);
             }
             Op::Sqrt => {
-                // val = √x ⇒ d = 1/(2√x) = 1/(2·val).
-                let x = self.a[i] as usize;
-                self.grad[x] += g / (T::TWO * self.val[i]);
+                let x = self.arg_a(i);
+                self.adj_sqrt(x, i, g);
             }
             Op::InvSqrt => {
-                // val = x^(−1/2) ⇒ d = −(1/2)·x^(−3/2) = −(1/2)·val³.
-                let x = self.a[i] as usize;
-                let v = self.val[i];
-                self.grad[x] += -g * T::HALF * v * v * v;
+                let x = self.arg_a(i);
+                self.adj_inv_sqrt(x, i, g);
             }
             Op::NegOp => {
-                let x = self.a[i] as usize;
-                self.grad[x] -= g;
+                let x = self.arg_a(i);
+                self.adj_neg(x, g);
             }
-            Op::Add => unsafe {
-                let x = *self.a.get_unchecked(i) as usize;
-                let y = *self.b.get_unchecked(i) as usize;
-                *self.grad.get_unchecked_mut(x) += g;
-                *self.grad.get_unchecked_mut(y) += g;
-            },
-            Op::Sub => unsafe {
-                let x = *self.a.get_unchecked(i) as usize;
-                let y = *self.b.get_unchecked(i) as usize;
-                *self.grad.get_unchecked_mut(x) += g;
-                *self.grad.get_unchecked_mut(y) -= g;
-            },
-            Op::Mul => unsafe {
-                let x = *self.a.get_unchecked(i) as usize;
-                let y = *self.b.get_unchecked(i) as usize;
-                let (xv, yv) = (*self.val.get_unchecked(x), *self.val.get_unchecked(y));
-                *self.grad.get_unchecked_mut(x) += g * yv;
-                *self.grad.get_unchecked_mut(y) += g * xv;
-            },
+            Op::Add => {
+                let (x, y) = (self.arg_a(i), self.arg_b(i));
+                self.adj_add(x, y, g);
+            }
+            Op::Sub => {
+                let (x, y) = (self.arg_a(i), self.arg_b(i));
+                self.adj_sub(x, y, g);
+            }
+            Op::Mul => {
+                let (x, y) = (self.arg_a(i), self.arg_b(i));
+                self.adj_mul(x, y, g);
+            }
             Op::MulConst => {
-                let x = self.a[i] as usize;
-                let c = self.consts[self.b[i] as usize];
-                self.grad[x] += g * c;
+                let (x, ci) = (self.arg_a(i), self.arg_b(i));
+                self.adj_mul_const(x, ci, g);
             }
-            Op::Div => unsafe {
-                // val = x/y ⇒ ∂x = 1/y, ∂y = −x/y² = −val/y.
-                let x = *self.a.get_unchecked(i) as usize;
-                let y = *self.b.get_unchecked(i) as usize;
-                let yv = *self.val.get_unchecked(y);
-                *self.grad.get_unchecked_mut(x) += g / yv;
-                *self.grad.get_unchecked_mut(y) += -g * *self.val.get_unchecked(i) / yv;
-            },
+            Op::Div => {
+                let (x, y) = (self.arg_a(i), self.arg_b(i));
+                self.adj_div(x, y, i, g);
+            }
             Op::Mean2 => {
-                let (x, y) = (self.a[i] as usize, self.b[i] as usize);
-                let gh = g * T::HALF;
-                self.grad[x] += gh;
-                self.grad[y] += gh;
+                let (x, y) = (self.arg_a(i), self.arg_b(i));
+                self.adj_mean2(x, y, g);
             }
             Op::AddSquares => {
-                let (x, y) = (self.a[i] as usize, self.b[i] as usize);
-                self.grad[x] += g * T::TWO * self.val[x];
-                self.grad[y] += g * T::TWO * self.val[y];
+                let (x, y) = (self.arg_a(i), self.arg_b(i));
+                self.adj_add_squares(x, y, g);
             }
             Op::MeanSquares => {
-                let (x, y) = (self.a[i] as usize, self.b[i] as usize);
-                self.grad[x] += g * self.val[x];
-                self.grad[y] += g * self.val[y];
+                let (x, y) = (self.arg_a(i), self.arg_b(i));
+                self.adj_mean_squares2(x, y, g);
             }
             Op::NegMean2 => {
-                let (x, y) = (self.a[i] as usize, self.b[i] as usize);
-                let gh = g * T::HALF;
-                self.grad[x] -= gh;
-                self.grad[y] -= gh;
+                let (x, y) = (self.arg_a(i), self.arg_b(i));
+                self.adj_neg_mean2(x, y, g);
             }
-            Op::ReduceSum => unsafe {
-                let s = *self.a.get_unchecked(i) as usize;
-                let n = *self.b.get_unchecked(i) as usize;
-                for k in s..s + n {
-                    let x = *self.aux.get_unchecked(k) as usize;
-                    *self.grad.get_unchecked_mut(x) += g;
-                }
-            },
+            Op::ReduceSum => {
+                let (s, n) = (self.arg_a(i), self.arg_b(i));
+                self.adj_reduce_sum(s, n, g);
+            }
             Op::ReduceSub => {
-                let s = self.a[i] as usize;
-                let n = self.b[i] as usize;
-                let first = self.aux[s] as usize;
-                self.grad[first] += g;
-                for k in s + 1..s + n {
-                    let x = self.aux[k] as usize;
-                    self.grad[x] -= g;
-                }
+                let (s, n) = (self.arg_a(i), self.arg_b(i));
+                self.adj_reduce_sub(s, n, g);
             }
             Op::ReduceMul => {
-                // Robust product rule: handle zeros without dividing by them.
-                let s = self.a[i] as usize;
-                let n = self.b[i] as usize;
-                let mut zeros = 0usize;
-                let mut zero_at = 0usize;
-                let mut prod_nz = T::ONE;
-                for k in s..s + n {
-                    let xv = self.val[self.aux[k] as usize];
-                    if xv == T::ZERO {
-                        zeros += 1;
-                        zero_at = k;
-                    } else {
-                        prod_nz *= xv;
-                    }
-                }
-                match zeros {
-                    0 => {
-                        let p = self.val[i];
-                        for k in s..s + n {
-                            let x = self.aux[k] as usize;
-                            self.grad[x] += g * p / self.val[x];
-                        }
-                    }
-                    1 => {
-                        let x = self.aux[zero_at] as usize;
-                        self.grad[x] += g * prod_nz;
-                    }
-                    _ => {} // two or more zeros: all partials are zero
-                }
+                let (s, n) = (self.arg_a(i), self.arg_b(i));
+                self.adj_reduce_mul(s, n, i, g);
             }
-            Op::ReduceMean => unsafe {
-                let s = *self.a.get_unchecked(i) as usize;
-                let n = *self.b.get_unchecked(i) as usize;
-                let gn = g / T::from_usize(n);
-                for k in s..s + n {
-                    let x = *self.aux.get_unchecked(k) as usize;
-                    *self.grad.get_unchecked_mut(x) += gn;
-                }
-            },
+            Op::ReduceMean => {
+                let (s, n) = (self.arg_a(i), self.arg_b(i));
+                self.adj_reduce_mean(s, n, g);
+            }
             Op::ReduceSumSquares => {
-                let s = self.a[i] as usize;
-                let n = self.b[i] as usize;
-                let g2 = g * T::TWO;
-                for k in s..s + n {
-                    let x = self.aux[k] as usize;
-                    self.grad[x] += g2 * self.val[x];
-                }
+                let (s, n) = (self.arg_a(i), self.arg_b(i));
+                self.adj_reduce_sum_squares(s, n, g);
             }
             Op::ReduceMeanSquares => {
-                let s = self.a[i] as usize;
-                let n = self.b[i] as usize;
-                let g2n = g * T::TWO / T::from_usize(n);
-                for k in s..s + n {
-                    let x = self.aux[k] as usize;
-                    self.grad[x] += g2n * self.val[x];
-                }
+                let (s, n) = (self.arg_a(i), self.arg_b(i));
+                self.adj_reduce_mean_squares(s, n, g);
             }
             Op::ReduceNegMean => {
-                let s = self.a[i] as usize;
-                let n = self.b[i] as usize;
-                let gn = g / T::from_usize(n);
-                for k in s..s + n {
-                    let x = self.aux[k] as usize;
-                    self.grad[x] -= gn;
-                }
+                let (s, n) = (self.arg_a(i), self.arg_b(i));
+                self.adj_reduce_neg_mean(s, n, g);
             }
-            Op::InnerProduct => unsafe {
-                let s = *self.a.get_unchecked(i) as usize;
-                let n = *self.b.get_unchecked(i) as usize;
-                // 4× unrolled scatter. Per-k operation order is preserved
-                // (plain unrolling, no accumulator splitting), so the
-                // result is bitwise identical to the rolled loop even when
-                // ids repeat across lanes.
-                let mut k = 0usize;
-                while k + 4 <= n {
-                    let x0 = *self.aux.get_unchecked(s + k) as usize;
-                    let y0 = *self.aux.get_unchecked(s + n + k) as usize;
-                    let (xv0, yv0) = (*self.val.get_unchecked(x0), *self.val.get_unchecked(y0));
-                    *self.grad.get_unchecked_mut(x0) += g * yv0;
-                    *self.grad.get_unchecked_mut(y0) += g * xv0;
-                    let x1 = *self.aux.get_unchecked(s + k + 1) as usize;
-                    let y1 = *self.aux.get_unchecked(s + n + k + 1) as usize;
-                    let (xv1, yv1) = (*self.val.get_unchecked(x1), *self.val.get_unchecked(y1));
-                    *self.grad.get_unchecked_mut(x1) += g * yv1;
-                    *self.grad.get_unchecked_mut(y1) += g * xv1;
-                    let x2 = *self.aux.get_unchecked(s + k + 2) as usize;
-                    let y2 = *self.aux.get_unchecked(s + n + k + 2) as usize;
-                    let (xv2, yv2) = (*self.val.get_unchecked(x2), *self.val.get_unchecked(y2));
-                    *self.grad.get_unchecked_mut(x2) += g * yv2;
-                    *self.grad.get_unchecked_mut(y2) += g * xv2;
-                    let x3 = *self.aux.get_unchecked(s + k + 3) as usize;
-                    let y3 = *self.aux.get_unchecked(s + n + k + 3) as usize;
-                    let (xv3, yv3) = (*self.val.get_unchecked(x3), *self.val.get_unchecked(y3));
-                    *self.grad.get_unchecked_mut(x3) += g * yv3;
-                    *self.grad.get_unchecked_mut(y3) += g * xv3;
-                    k += 4;
-                }
-                while k < n {
-                    let x = *self.aux.get_unchecked(s + k) as usize;
-                    let y = *self.aux.get_unchecked(s + n + k) as usize;
-                    let (xv, yv) = (*self.val.get_unchecked(x), *self.val.get_unchecked(y));
-                    *self.grad.get_unchecked_mut(x) += g * yv;
-                    *self.grad.get_unchecked_mut(y) += g * xv;
-                    k += 1;
-                }
-            },
+            Op::InnerProduct => {
+                let (s, n) = (self.arg_a(i), self.arg_b(i));
+                self.adj_inner_product(s, n, g);
+            }
             Op::InnerProductBias => {
-                let s = self.a[i] as usize;
-                let n = self.b[i] as usize;
-                for k in 0..n {
-                    let x = self.aux[s + k] as usize;
-                    let y = self.aux[s + n + k] as usize;
-                    let (xv, yv) = (self.val[x], self.val[y]);
-                    self.grad[x] += g * yv;
-                    self.grad[y] += g * xv;
-                }
-                let bias = self.aux[s + 2 * n] as usize;
-                self.grad[bias] += g;
+                let (s, n) = (self.arg_a(i), self.arg_b(i));
+                self.adj_inner_product_bias(s, n, g);
             }
-            Op::DotRange => unsafe {
-                let x0 = *self.a.get_unchecked(i) as usize;
-                let meta = *self.b.get_unchecked(i) as usize;
-                let w0 = *self.aux.get_unchecked(meta) as usize;
-                let n = *self.aux.get_unchecked(meta + 1) as usize;
-                self.dot_range_backward_unrolled(x0, w0, n, g);
-            },
-            Op::DotRangeBias => unsafe {
-                let x0 = *self.a.get_unchecked(i) as usize;
-                let meta = *self.b.get_unchecked(i) as usize;
-                let w0 = *self.aux.get_unchecked(meta) as usize;
-                let n = *self.aux.get_unchecked(meta + 1) as usize;
-                let bias = *self.aux.get_unchecked(meta + 2) as usize;
-                self.dot_range_backward_unrolled(x0, w0, n, g);
-                *self.grad.get_unchecked_mut(bias) += g;
-            },
-            Op::DotParamRange => unsafe {
-                let xs_at = *self.a.get_unchecked(i) as usize;
-                let meta = *self.b.get_unchecked(i) as usize;
-                let n = *self.aux.get_unchecked(meta) as usize;
-                let w0 = *self.aux.get_unchecked(meta + 1) as usize;
-                let bias = *self.aux.get_unchecked(meta + 2) as usize;
-                // 4× unrolled gather-scatter; per-k order preserved so
-                // repeated x-ids (shared embedding rows) accumulate in
-                // exactly the rolled loop's order.
-                let mut k = 0usize;
-                while k + 4 <= n {
-                    let x0i = *self.aux.get_unchecked(xs_at + k) as usize;
-                    let (xv0, wv0) = (
-                        *self.val.get_unchecked(x0i),
-                        *self.val.get_unchecked(w0 + k),
-                    );
-                    *self.grad.get_unchecked_mut(x0i) += g * wv0;
-                    *self.grad.get_unchecked_mut(w0 + k) += g * xv0;
-                    let x1i = *self.aux.get_unchecked(xs_at + k + 1) as usize;
-                    let (xv1, wv1) = (
-                        *self.val.get_unchecked(x1i),
-                        *self.val.get_unchecked(w0 + k + 1),
-                    );
-                    *self.grad.get_unchecked_mut(x1i) += g * wv1;
-                    *self.grad.get_unchecked_mut(w0 + k + 1) += g * xv1;
-                    let x2i = *self.aux.get_unchecked(xs_at + k + 2) as usize;
-                    let (xv2, wv2) = (
-                        *self.val.get_unchecked(x2i),
-                        *self.val.get_unchecked(w0 + k + 2),
-                    );
-                    *self.grad.get_unchecked_mut(x2i) += g * wv2;
-                    *self.grad.get_unchecked_mut(w0 + k + 2) += g * xv2;
-                    let x3i = *self.aux.get_unchecked(xs_at + k + 3) as usize;
-                    let (xv3, wv3) = (
-                        *self.val.get_unchecked(x3i),
-                        *self.val.get_unchecked(w0 + k + 3),
-                    );
-                    *self.grad.get_unchecked_mut(x3i) += g * wv3;
-                    *self.grad.get_unchecked_mut(w0 + k + 3) += g * xv3;
-                    k += 4;
-                }
-                while k < n {
-                    let x = *self.aux.get_unchecked(xs_at + k) as usize;
-                    let xv = *self.val.get_unchecked(x);
-                    let wv = *self.val.get_unchecked(w0 + k);
-                    *self.grad.get_unchecked_mut(x) += g * wv;
-                    *self.grad.get_unchecked_mut(w0 + k) += g * xv;
-                    k += 1;
-                }
-                *self.grad.get_unchecked_mut(bias) += g;
-            },
-            Op::DotStrided => unsafe {
-                let x0 = *self.a.get_unchecked(i) as usize;
-                let meta = *self.b.get_unchecked(i) as usize;
-                let w0 = *self.aux.get_unchecked(meta) as usize;
-                let n = *self.aux.get_unchecked(meta + 1) as usize;
-                let stride = *self.aux.get_unchecked(meta + 2) as usize;
-                for k in 0..n {
-                    let x = x0 + k * stride;
-                    let xv = *self.val.get_unchecked(x);
-                    let wv = *self.val.get_unchecked(w0 + k);
-                    *self.grad.get_unchecked_mut(x) += g * wv;
-                    *self.grad.get_unchecked_mut(w0 + k) += g * xv;
-                }
-            },
+            Op::DotRange => {
+                let x0 = self.arg_a(i);
+                let meta = self.arg_b(i);
+                let w0 = self.aux_at(meta);
+                let n = self.aux_at(meta + 1);
+                self.adj_dot_range(x0, w0, n, g);
+            }
+            Op::DotRangeBias => {
+                let x0 = self.arg_a(i);
+                let meta = self.arg_b(i);
+                let w0 = self.aux_at(meta);
+                let n = self.aux_at(meta + 1);
+                let bias = self.aux_at(meta + 2);
+                self.adj_dot_range_bias(x0, w0, n, bias, g);
+            }
+            Op::DotParamRange => {
+                let xs_at = self.arg_a(i);
+                let meta = self.arg_b(i);
+                let n = self.aux_at(meta);
+                let w0 = self.aux_at(meta + 1);
+                let bias = self.aux_at(meta + 2);
+                self.adj_dot_param_range(xs_at, n, w0, bias, g);
+            }
+            Op::DotStrided => {
+                let x0 = self.arg_a(i);
+                let meta = self.arg_b(i);
+                let w0 = self.aux_at(meta);
+                let n = self.aux_at(meta + 1);
+                let stride = self.aux_at(meta + 2);
+                self.adj_dot_strided(x0, w0, n, stride, g);
+            }
             Op::CeLogitsRange => {
-                // loss = logsumexp(z) − z_t ⇒ ∂z_j = softmax_j − 1[j = t].
-                let z0 = self.a[i] as usize;
-                let meta = self.b[i] as usize;
-                let n = self.aux[meta] as usize;
-                let target = self.aux[meta + 1] as usize;
-                let mut m = self.val[z0];
-                for k in 1..n {
-                    m = m.max(self.val[z0 + k]);
-                }
-                let mut den = T::ZERO;
-                for k in 0..n {
-                    den += (self.val[z0 + k] - m).exp();
-                }
-                for k in 0..n {
-                    let p = (self.val[z0 + k] - m).exp() / den;
-                    self.grad[z0 + k] += g * p;
-                }
-                self.grad[z0 + target] -= g;
+                let z0 = self.arg_a(i);
+                let meta = self.arg_b(i);
+                let n = self.aux_at(meta);
+                let target = self.aux_at(meta + 1);
+                self.adj_ce_logits(z0, n, target, g);
             }
         }
     }
@@ -671,7 +975,7 @@ impl<T: Scalar> Tape<T> {
             }
             Arity::Range => {
                 let x0 = self.a[i];
-                let meta = self.b[i] as usize;
+                let meta = self.arg_b(i);
                 match self.op[i] {
                     Op::DotRange => {
                         let w0 = self.aux[meta];
@@ -697,7 +1001,7 @@ impl<T: Scalar> Tape<T> {
                         }
                     }
                     Op::DotParamRange => {
-                        let n = self.aux[meta] as usize;
+                        let n = self.aux_at(meta);
                         let w0 = self.aux[meta + 1];
                         f(self.aux[meta + 2], scratch);
                         for k in 0..n {
@@ -707,8 +1011,8 @@ impl<T: Scalar> Tape<T> {
                     }
                     Op::DotStrided => {
                         let w0 = self.aux[meta];
-                        let n = self.aux[meta + 1] as usize;
-                        let stride = self.aux[meta + 2] as usize;
+                        let n = self.aux_at(meta + 1);
+                        let stride = self.aux_at(meta + 2);
                         for k in 0..n {
                             f(w0 + k as u32, scratch);
                             f(x0 + (k * stride) as u32, scratch);

@@ -1,0 +1,348 @@
+//! The unified sample executor: one code path for eager, record, and
+//! replay execution of per-sample gradient oracles.
+//!
+//! Before this module, the execution-mode logic was forked three ways:
+//! the parallel engine's lane loop branched eager/record/replay per
+//! sample, the trainer branched eager/replay per step, and the federated
+//! simulator had its own hand-rolled eager loop. [`SampleExecutor`]
+//! collapses all of that: it owns a tape's execution mode and (under
+//! replay) its compiled [`StepProgram`], and [`SampleExecutor::run_sample`]
+//! drives one sample end to end —
+//!
+//! - **Eager**: build the graph through the builder, backward with the
+//!   interpreter ([`Tape::backward_above`], or the scratch variant when a
+//!   [`Scratch`] is supplied), hand the tape to the caller's sink, rewind.
+//! - **Replay, first sample**: record eagerly via
+//!   [`SampleOracle::record`], compile the reverse sweep into a
+//!   [`StepProgram`] (on the calling thread — pool workers get
+//!   first-touch locality for the instruction list too), then fall
+//!   through to the compiled backward.
+//! - **Replay, steady state**: rebind inputs ([`SampleOracle::rebind`]),
+//!   re-sweep the frozen forward arrays ([`Tape::replay_forward`]), run
+//!   the compiled backward ([`StepProgram::backward`]) — two tight array
+//!   sweeps, zero appends, zero allocations, zero per-node graph decode.
+//!
+//! Replay always uses the compiled backward (it supersedes the
+//! scratch-backward knob, which remains an eager-interpreter variant),
+//! and is bitwise identical to the eager default because the program
+//! executor calls the interpreter's own adjoint kernels.
+
+use std::fmt;
+
+use super::{Mark, Recording, Scratch, StepProgram, Tape, Value};
+use crate::scalar::Scalar;
+
+/// How the steady-state loop executes each sample's graph.
+///
+/// - `Eager` re-records the graph through the builder every sample and
+///   rewinds it away (the paper's baseline behavior), with the
+///   reverse-scan interpreter driving backward.
+/// - `Replay` records each tape's first sample once, compiles its reverse
+///   sweep into a [`StepProgram`], then drives every later sample by
+///   rebinding the recorded input slots and running two tight array
+///   sweeps in place — no appends, no rewinds, no per-step allocation,
+///   no per-node opcode interpretation. Bitwise identical to `Eager` for
+///   any seed, thread count and compression mode; requires a static
+///   per-sample topology (ragged workloads go through
+///   [`crate::tape::ProgramCache`], one program per shape).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Rebuild every sample's graph eagerly (record + rewind).
+    #[default]
+    Eager,
+    /// Record and compile once per tape, replay thereafter.
+    Replay,
+}
+
+impl ExecMode {
+    /// Parse a CLI/config spec: `eager` or `replay`.
+    pub fn parse(spec: &str) -> Result<ExecMode, String> {
+        match spec.trim() {
+            "eager" | "" => Ok(ExecMode::Eager),
+            "replay" => Ok(ExecMode::Replay),
+            other => Err(format!("unknown exec mode '{other}' (expected eager|replay)")),
+        }
+    }
+}
+
+impl fmt::Display for ExecMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ExecMode::Eager => write!(f, "eager"),
+            ExecMode::Replay => write!(f, "replay"),
+        }
+    }
+}
+
+/// A per-sample gradient oracle the executor can drive in either mode.
+/// `build` is the eager contract (construct sample `idx`'s loss on
+/// whatever tape it is handed); `record`/`rebind` additionally let the
+/// replay path freeze one sample's graph and rewrite only its inputs for
+/// every later sample.
+///
+/// Every `Fn(&mut Tape<T>, usize) -> Value + Sync` closure is a
+/// [`SampleOracle`] via a blanket impl (eager-only: its `record` returns
+/// `None`), so closure-based callers work unchanged. Model-aware oracles
+/// (see `coordinator::Trainer`) implement `record` in terms of
+/// `CharMlp::record_sample` / `Gpt::record_sample`.
+///
+/// Oracles run concurrently on replica tapes; they must not mutate shared
+/// state.
+pub trait SampleOracle<T: Scalar>: Sync {
+    /// Per-tape replay state: where the recorded graph's sample inputs
+    /// live (rebind slots). `Send` because it crosses into pool workers.
+    type Rec: Send;
+
+    /// Eagerly build sample `idx`'s loss graph on `tape` and return the
+    /// loss root. The eager execution path, and the recording pass.
+    fn build(&self, tape: &mut Tape<T>, idx: usize) -> Value;
+
+    /// Record sample `idx`: build it eagerly on top of the parameter base
+    /// and freeze the segment. Returns `None` when the oracle cannot
+    /// replay (data-dependent topology, or a plain closure) — the replay
+    /// executor treats that as a hard error.
+    fn record(&self, tape: &mut Tape<T>, idx: usize) -> Option<(Recording, Self::Rec)> {
+        let _ = (tape, idx);
+        None
+    }
+
+    /// Rewrite the recorded graph's input slots to sample `idx`'s data
+    /// (before [`Tape::replay_forward`]). Must be allocation-free.
+    fn rebind(&self, tape: &mut Tape<T>, rec: &Self::Rec, idx: usize) {
+        let _ = (tape, rec, idx);
+        unreachable!("rebind called on an oracle that never records");
+    }
+}
+
+impl<T: Scalar, F> SampleOracle<T> for F
+where
+    F: Fn(&mut Tape<T>, usize) -> Value + Sync,
+{
+    type Rec = ();
+
+    fn build(&self, tape: &mut Tape<T>, idx: usize) -> Value {
+        self(tape, idx)
+    }
+}
+
+/// Per-tape sample executor. One executor owns one tape's execution mode
+/// and, under replay, the tape's compiled program + rebind slots; it
+/// lives as long as the recordings do (a training run). See module docs.
+#[derive(Debug)]
+pub struct SampleExecutor<R> {
+    mode: ExecMode,
+    session: Option<(StepProgram, R)>,
+}
+
+impl<R> SampleExecutor<R> {
+    /// Executor in the given mode, nothing recorded yet.
+    pub fn new(mode: ExecMode) -> SampleExecutor<R> {
+        SampleExecutor {
+            mode,
+            session: None,
+        }
+    }
+
+    /// Stateless eager executor (build + interpret + rewind every sample).
+    pub fn eager() -> SampleExecutor<R> {
+        SampleExecutor::new(ExecMode::Eager)
+    }
+
+    /// This executor's mode.
+    pub fn mode(&self) -> ExecMode {
+        self.mode
+    }
+
+    /// Has this executor's tape recorded its program yet?
+    pub fn recorded(&self) -> bool {
+        self.session.is_some()
+    }
+
+    /// The compiled program, once recorded (observability for the
+    /// zero-dispatch assertions in tests and benches).
+    pub fn program(&self) -> Option<&StepProgram> {
+        self.session.as_ref().map(|(p, _)| p)
+    }
+
+    /// Drive one sample end to end on `tape`: produce the loss root per
+    /// the executor's mode, run the matching backward pass, call
+    /// `sink(tape, root)` so the caller can harvest the loss value and
+    /// gradients, then do end-of-sample bookkeeping (the eager rewind to
+    /// `floor`; replay tapes are never rewound).
+    ///
+    /// `floor` is the parameter base: every node below it must be a leaf
+    /// under eager execution (the `backward_above` precondition). When
+    /// `scratch` is supplied, eager backward uses
+    /// [`Tape::backward_with_scratch`] (with the below-floor gradients
+    /// zeroed first, so parameters outside the sample's cone cannot leak
+    /// stale values into the caller's fold); replay ignores it — the
+    /// compiled program *is* the replay backward.
+    pub fn run_sample<T, O, S>(
+        &mut self,
+        tape: &mut Tape<T>,
+        oracle: &O,
+        idx: usize,
+        floor: Mark,
+        scratch: Option<&mut Scratch>,
+        sink: S,
+    ) where
+        T: Scalar,
+        O: SampleOracle<T, Rec = R>,
+        S: FnOnce(&mut Tape<T>, Value),
+    {
+        match self.mode {
+            ExecMode::Eager => {
+                let root = oracle.build(tape, idx);
+                match scratch {
+                    Some(s) => {
+                        // Scratch backward zeroes only the root's cone, so
+                        // parameters outside this sample's cone would carry
+                        // the previous sample's gradients into the caller's
+                        // fold. The O(params) prefix memset keeps the fold
+                        // exact; it is dominated by the fold itself, which
+                        // reads every parameter gradient anyway.
+                        tape.zero_grad_below(floor);
+                        tape.backward_with_scratch(root, s);
+                    }
+                    None => tape.backward_above(root, floor),
+                }
+                sink(tape, root);
+                tape.rewind(floor);
+            }
+            ExecMode::Replay => {
+                if self.session.is_none() {
+                    // First sample on this tape: record eagerly, compile
+                    // the reverse sweep. Runs on the thread that owns the
+                    // tape (first-touch locality for the instruction list,
+                    // like the recorded segment and the replica prefix).
+                    let (rec, binds) = oracle.record(tape, idx).expect(
+                        "replay execution requires a replay-capable oracle \
+                         (SampleOracle::record returned None)",
+                    );
+                    let prog = StepProgram::compile(tape, rec, rec.base());
+                    self.session = Some((prog, binds));
+                } else {
+                    // Steady state: rebind inputs, frozen forward sweep.
+                    let (prog, binds) = self.session.as_ref().expect("session checked");
+                    oracle.rebind(tape, binds, idx);
+                    tape.replay_forward(&prog.recording());
+                }
+                let (prog, _) = self.session.as_ref().expect("session ensured");
+                prog.backward(tape);
+                sink(tape, prog.root());
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exec_mode_parses_and_displays() {
+        assert_eq!(ExecMode::parse("eager").unwrap(), ExecMode::Eager);
+        assert_eq!(ExecMode::parse(" replay ").unwrap(), ExecMode::Replay);
+        assert!(ExecMode::parse("jit").is_err());
+        assert_eq!(ExecMode::Replay.to_string(), "replay");
+        assert_eq!(ExecMode::default(), ExecMode::Eager);
+    }
+
+    /// Oracle over a fixed set of scalar inputs: loss_i = (w·x_i)².
+    struct SqOracle {
+        xs: Vec<f64>,
+    }
+
+    impl SampleOracle<f64> for SqOracle {
+        type Rec = Value;
+
+        fn build(&self, tape: &mut Tape<f64>, idx: usize) -> Value {
+            let x = tape.leaf(self.xs[idx]);
+            let y = tape.mul(Value(0), x);
+            tape.sqr(y)
+        }
+
+        fn record(&self, tape: &mut Tape<f64>, idx: usize) -> Option<(Recording, Value)> {
+            let base = tape.mark();
+            let x = tape.leaf(self.xs[idx]);
+            let y = tape.mul(Value(0), x);
+            let loss = tape.sqr(y);
+            Some((Recording::capture(tape, base, loss), x))
+        }
+
+        fn rebind(&self, tape: &mut Tape<f64>, &x: &Value, idx: usize) {
+            tape.set_value(x, self.xs[idx]);
+        }
+    }
+
+    #[test]
+    fn executor_modes_agree_bitwise_and_replay_never_rewinds() {
+        let oracle = SqOracle {
+            xs: vec![1.5, -2.0, 0.25, 3.0],
+        };
+        let run = |mode: ExecMode| -> (Vec<u64>, usize) {
+            let mut tape = Tape::<f64>::new();
+            let _w = tape.leaf(0.75);
+            let base = tape.mark();
+            let mut exec: SampleExecutor<Value> = SampleExecutor::new(mode);
+            let mut grads = Vec::new();
+            for idx in 0..4 {
+                exec.run_sample(&mut tape, &oracle, idx, base, None, |t, root| {
+                    let _ = t.value(root);
+                    grads.push(t.grad(Value(0)).to_bits());
+                });
+            }
+            (grads, tape.len())
+        };
+        let (eager, eager_len) = run(ExecMode::Eager);
+        let (replay, replay_len) = run(ExecMode::Replay);
+        assert_eq!(eager, replay, "executor modes must be bitwise identical");
+        assert_eq!(eager_len, 1, "eager rewinds to the base");
+        assert!(replay_len > 1, "replay keeps the recorded segment");
+    }
+
+    #[test]
+    fn eager_scratch_path_zeroes_below_floor() {
+        // Two params; each sample touches only one of them. Under scratch
+        // backward the untouched param's gradient must read zero, not the
+        // previous sample's value.
+        struct OneOf;
+        impl SampleOracle<f64> for OneOf {
+            type Rec = ();
+            fn build(&self, tape: &mut Tape<f64>, idx: usize) -> Value {
+                let x = tape.leaf(2.0);
+                let w = Value((idx % 2) as u32);
+                let y = tape.mul(w, x);
+                tape.sqr(y)
+            }
+        }
+        let mut tape = Tape::<f64>::new();
+        let _w = tape.leaves(&[3.0, 5.0]);
+        let base = tape.mark();
+        let mut scratch = Scratch::new();
+        let mut exec: SampleExecutor<()> = SampleExecutor::eager();
+        let mut seen = Vec::new();
+        for idx in 0..2 {
+            exec.run_sample(&mut tape, &OneOf, idx, base, Some(&mut scratch), |t, _| {
+                seen.push((t.grad(Value(0)), t.grad(Value(1))));
+            });
+        }
+        // Sample 0 touches w0 (2w·x² = 24), sample 1 touches w1 (40).
+        assert_eq!(seen[0], (24.0, 0.0));
+        assert_eq!(seen[1], (0.0, 40.0), "stale w0 grad must be zeroed");
+    }
+
+    #[test]
+    #[should_panic(expected = "replay-capable oracle")]
+    fn replay_with_a_closure_oracle_panics() {
+        let mut tape = Tape::<f64>::new();
+        let _w = tape.leaf(1.0);
+        let base = tape.mark();
+        let oracle = |t: &mut Tape<f64>, _i: usize| {
+            let x = t.leaf(2.0);
+            t.sqr(x)
+        };
+        let mut exec: SampleExecutor<()> = SampleExecutor::new(ExecMode::Replay);
+        exec.run_sample(&mut tape, &oracle, 0, base, None, |_, _| {});
+    }
+}

@@ -21,10 +21,14 @@
 
 mod backward;
 mod builder;
+mod exec;
+mod program;
 mod replay;
 
 pub use backward::Scratch;
 pub use builder::{Builder, Var};
+pub use exec::{ExecMode, SampleExecutor, SampleOracle};
+pub use program::{ProgramCache, StepProgram};
 pub use replay::Recording;
 
 use crate::ops::{Arity, Op};
@@ -459,6 +463,17 @@ impl<T: Scalar> Tape<T> {
     /// Reset gradients of all live nodes to zero.
     pub fn zero_grad(&mut self) {
         for g in self.grad.iter_mut() {
+            *g = T::ZERO;
+        }
+    }
+
+    /// Reset the gradients of every node strictly below `m` — the
+    /// parameter-prefix zeroing used by the scratch-backward path (whose
+    /// cone-restricted zeroing covers only nodes reachable from the root,
+    /// so parameters outside the cone — e.g. embedding rows absent from a
+    /// sample — would otherwise carry stale gradients into the next fold).
+    pub fn zero_grad_below(&mut self, m: Mark) {
+        for g in self.grad[..m.nodes as usize].iter_mut() {
             *g = T::ZERO;
         }
     }
@@ -986,6 +1001,67 @@ impl<T: Scalar> Tape<T> {
     #[inline]
     pub fn div_inplace(&mut self, x: &mut Value, y: Value) {
         *x = self.div(*x, y);
+    }
+}
+
+/// Test-only graph builders shared by the replay and program suites.
+#[cfg(test)]
+pub(crate) mod testgraph {
+    use super::{Tape, Value};
+
+    /// Build a graph exercising every op whose inputs are two rebindable
+    /// leaves; returns (x0, root). Deterministic topology: node ids are
+    /// identical across rebuilds.
+    pub(crate) fn omni_graph(t: &mut Tape<f64>, base_vals: [f64; 2]) -> (Value, Value) {
+        let x = t.leaves(&base_vals);
+        let x0 = x;
+        let x1 = Value(x.0 + 1);
+        // Keep everything strictly positive where ln/sqrt need it.
+        let sx0 = t.sqr(x0);
+        let pos = t.add_squares(x0, x1);
+        let shifted = {
+            let c = t.mul_const(pos, 1.0);
+            t.add(c, sx0)
+        };
+        let u1 = t.relu(x0);
+        let u2 = t.tanh(x1);
+        let u3 = t.exp(x0);
+        let u4 = t.neg_log(shifted);
+        let u5 = t.sigmoid(x1);
+        let u6 = t.inv(shifted);
+        let u7 = t.pow3(x0);
+        let u8 = t.log(shifted);
+        let u9 = t.sqrt(shifted);
+        let u10 = t.inv_sqrt(shifted);
+        let u11 = t.neg(x1);
+        let b1 = t.sub(u1, u2);
+        let b2 = t.mul(u3, u5);
+        let b3 = t.div(u4, shifted);
+        let b4 = t.mean2(u6, u7);
+        let b5 = t.mean_squares2(u8, u9);
+        let b6 = t.neg_mean2(u10, u11);
+        let all = [b1, b2, b3, b4, b5, b6];
+        let r1 = t.reduce_sum(&all);
+        let r2 = t.reduce_sub(&all);
+        let r3 = t.reduce_mul(&[u5, u9, u10]);
+        let r4 = t.reduce_mean(&all);
+        let r5 = t.reduce_sum_squares(&all);
+        let r6 = t.reduce_mean_squares(&all);
+        let r7 = t.reduce_neg_mean(&all);
+        let ip = t.inner_product(&[r1, r2, r3], &[r4, r5, r6]);
+        let ipb = t.inner_product_bias(&[r1, r2], &[r3, r4], r7);
+        let dr = t.dot_range(r1, r4, 3);
+        let drb = t.dot_range_bias(r1, r4, 3, ip);
+        let view = t.share_ids(&[r1, r2, r3, r4, r5]);
+        let dpr = t.dot_param_range(view, 5, r2, ipb);
+        let ds = t.dot_strided(r1, b1, 2, 3);
+        let logits_first = t.add(dr, drb);
+        let _l2 = t.add(dpr, ds);
+        let _l3 = t.mul_const(logits_first, 0.5);
+        let ce = t.ce_logits_range(logits_first, 3, 1);
+        let tail = t.reduce_sum(&[ip, ipb, dpr, ds, ce]);
+        let root = t.tanh(tail);
+        (x0, root)
     }
 }
 

@@ -1,0 +1,618 @@
+//! The compiled step program: a [`Recording`] whose *reverse* sweep has
+//! also been frozen at capture time.
+//!
+//! PR 3's replay engine removed per-step graph construction from the
+//! forward sweep, but every replayed sample still paid the reverse-scan
+//! *interpreter* in `tape::backward`: a per-node `Op` decode, per-node
+//! `Arity` branching, an aux-meta chase for every fused dot, a visit to
+//! every recorded leaf, and a full-tape `zero_grad`. That is exactly the
+//! graph-interpretation tax eager engines pay on every step (Paszke et
+//! al., 2019) — and for a static graph it is all computable once.
+//!
+//! [`StepProgram::compile`] walks the recorded segment one time and emits
+//! a dense, **leaf-free** backward instruction list in reverse topological
+//! order, with the aux-meta of every fused kernel (`w0`, `n`, `stride`,
+//! bias id) pre-resolved, plus a precomputed grad-zeroing extent. A
+//! compiled step is then two tight array sweeps:
+//!
+//! 1. [`Tape::replay_forward`] over the frozen SoA arrays (PR 3), and
+//! 2. [`StepProgram::backward`]: memset the zeroing extent, seed the
+//!    root, and drive the instruction list straight into the **shared
+//!    adjoint kernels** (`Tape::adj_*` — the very functions the
+//!    interpreter's `match` delegates to), so compiled gradients are
+//!    bitwise identical to the interpreter **by construction**.
+//!
+//! What stays *live-read* per instruction (one indexed load, no decode):
+//! the rebindable slots — a node's `a`/`b` argument ids (rewritten by
+//! [`Tape::rebind_arg_a`]), aux id runs (rewritten by
+//! [`Tape::rebind_aux_range`]), and the fused-CE target (rewritten by
+//! [`Tape::rebind_ce_target`]) — so every input rebinding the replay
+//! engine supports keeps working under the compiled program.
+//!
+//! ## Stacked programs and the shape-keyed cache
+//!
+//! Unlike `backward_above`, the compiled sweep never *scans* the region
+//! below its recording base — it only scatters into it — so nothing below
+//! the base needs to be a leaf. That lifts the one restriction that kept
+//! ragged workloads eager: programs for different graph *shapes* (e.g.
+//! GPT windows of different lengths) can be recorded **stacked** on one
+//! tape, each above the previous extent, and a [`ProgramCache`] keyed by
+//! shape picks the right one per sample. The zeroing extent of a stacked
+//! program covers the parameter prefix plus its own segment, skipping
+//! buried sibling segments entirely.
+
+use super::{Mark, Recording, Tape, Value};
+use crate::ops::Op;
+use crate::scalar::Scalar;
+
+/// One pre-decoded backward instruction: the node index, its op kind, and
+/// up to three operands resolved from the aux-meta at compile time.
+///
+/// Operand meaning per op (everything else leaves them zero):
+///
+/// | op              | `p0` | `p1`   | `p2`     |
+/// |-----------------|------|--------|----------|
+/// | `DotRange`      | w0   | n      | —        |
+/// | `DotRangeBias`  | w0   | n      | bias     |
+/// | `DotParamRange` | n    | w0     | bias     |
+/// | `DotStrided`    | w0   | n      | stride   |
+/// | `CeLogitsRange` | n    | meta   | —        |
+///
+/// The CE *target* is deliberately not resolved — it lives at
+/// `aux[meta + 1]` and is read live so [`Tape::rebind_ce_target`] keeps
+/// working between replays.
+#[derive(Clone, Copy, Debug)]
+struct BackInstr {
+    /// Node index the instruction backpropagates through.
+    node: u32,
+    /// Pre-resolved operands (see table above).
+    p0: u32,
+    p1: u32,
+    p2: u32,
+    /// Pre-decoded op kind; never [`Op::Leaf`].
+    op: Op,
+}
+
+/// A [`Recording`] plus its compiled reverse sweep. See the module docs.
+///
+/// # Examples
+///
+/// Record one sample, compile it, then drive further samples with two
+/// tight sweeps — zero appends, zero per-node graph decode:
+///
+/// ```
+/// use burtorch::tape::{Recording, StepProgram, Tape};
+///
+/// let mut tape = Tape::<f64>::new();
+/// let w = tape.leaves(&[0.5, -2.0]);           // parameters at the base
+/// let base = tape.mark();
+/// let x = tape.leaves(&[1.0, 0.0]);            // rebindable input leaves
+/// let dot = tape.dot_range(x, w, 2);
+/// let loss = tape.sqr(dot);
+/// let rec = Recording::capture(&tape, base, loss);
+/// let prog = StepProgram::compile(&tape, rec, base);
+/// assert_eq!(prog.instruction_count(), 2);     // sqr + dot; leaves excluded
+///
+/// for k in 0..3u32 {
+///     let xv = 1.0 + k as f64;
+///     tape.set_value(x, xv);                   // rebind the input…
+///     tape.replay_forward(&prog.recording());  // …frozen forward sweep…
+///     prog.backward(&mut tape);                // …compiled backward sweep
+///     // loss = (0.5·x₀)² ⇒ ∂/∂w₀ = 2·(0.5·x₀)·x₀ = x₀².
+///     assert_eq!(tape.grad(w), xv * xv);
+/// }
+/// ```
+#[derive(Clone, Debug)]
+pub struct StepProgram {
+    rec: Recording,
+    /// Gradients below this mark (the parameter prefix) are zeroed before
+    /// every sweep; buried sibling segments between it and the recording
+    /// base are skipped — they are neither scanned nor scattered into.
+    zero_floor: Mark,
+    /// Dense leaf-free reverse-order instruction list.
+    instrs: Vec<BackInstr>,
+}
+
+impl StepProgram {
+    /// Compile the reverse sweep of `rec` on `tape`. `zero_floor` is the
+    /// mark below which gradients must be zeroed before each sweep —
+    /// normally the recording base itself; for a *stacked* program (one
+    /// recorded above older segments, see [`ProgramCache`]) it is the
+    /// parameter-prefix mark, which must not exceed the recording base.
+    ///
+    /// Compilation is the cold path: it runs once per graph shape, and —
+    /// when invoked from a pool worker (the engine's record step) — on
+    /// the thread that owns the tape, so the instruction pages are
+    /// first-touch allocated next to the replica they drive.
+    pub fn compile<T: Scalar>(tape: &Tape<T>, rec: Recording, zero_floor: Mark) -> StepProgram {
+        assert!(
+            zero_floor.nodes <= rec.base().nodes,
+            "zero floor {} is above the recording base {}",
+            zero_floor.nodes,
+            rec.base().nodes
+        );
+        let end = rec.end().nodes as usize;
+        assert!(end <= tape.len(), "recording extends past the live tape");
+        let lo = rec.base().nodes as usize;
+        let root = rec.root().idx();
+        // Stacked programs (zero_floor < base) rely on an implicit
+        // contract: the recorded segment may reference the parameter
+        // prefix and itself, but never a buried sibling segment — the
+        // sweep neither zeroes nor scans `[zero_floor, base)`, so a
+        // reference into it would silently corrupt gradients. Enforce the
+        // contract here, on the cold path, so a violating recording
+        // panics at compile instead. (The model rebind entry points only
+        // redirect operands to parameter rows and recorded CE slots, so a
+        // recording that passes here stays valid across rebinds.)
+        if zero_floor.nodes < rec.base().nodes {
+            for i in lo..end {
+                for arg in tape.args_of(Value(i as u32)) {
+                    assert!(
+                        arg.0 < zero_floor.nodes || arg.0 >= rec.base().nodes,
+                        "stacked recording references buried node {} \
+                         (zero floor {}, recording base {})",
+                        arg.0,
+                        zero_floor.nodes,
+                        rec.base().nodes
+                    );
+                }
+            }
+        }
+        let mut instrs: Vec<BackInstr> = Vec::with_capacity(root + 1 - lo);
+        for i in (lo..=root).rev() {
+            let op = tape.op[i];
+            if matches!(op, Op::Leaf) {
+                continue;
+            }
+            // Resolve the aux-meta indirection once. These are structural
+            // (never rebound), so freezing them is sound; the real asserts
+            // here guard the unchecked scatter kernels on the hot path.
+            let (p0, p1, p2) = match op {
+                Op::DotRange => {
+                    let meta = tape.b[i] as usize;
+                    let (w0, n) = (tape.aux[meta], tape.aux[meta + 1]);
+                    assert!(w0 as usize + n as usize <= end, "dotRange weights out of range");
+                    (w0, n, 0)
+                }
+                Op::DotRangeBias => {
+                    let meta = tape.b[i] as usize;
+                    let (w0, n) = (tape.aux[meta], tape.aux[meta + 1]);
+                    let bias = tape.aux[meta + 2];
+                    assert!(w0 as usize + n as usize <= end, "dotRange weights out of range");
+                    assert!((bias as usize) < end, "bias id out of range");
+                    (w0, n, bias)
+                }
+                Op::DotParamRange => {
+                    let meta = tape.b[i] as usize;
+                    let (n, w0) = (tape.aux[meta], tape.aux[meta + 1]);
+                    let bias = tape.aux[meta + 2];
+                    assert!(w0 as usize + n as usize <= end, "weight run out of range");
+                    assert!((bias as usize) < end, "bias id out of range");
+                    (n, w0, bias)
+                }
+                Op::DotStrided => {
+                    let meta = tape.b[i] as usize;
+                    let (w0, n) = (tape.aux[meta], tape.aux[meta + 1]);
+                    let stride = tape.aux[meta + 2];
+                    assert!(w0 as usize + n as usize <= end, "weight run out of range");
+                    (w0, n, stride)
+                }
+                Op::CeLogitsRange => {
+                    let meta = tape.b[i] as usize;
+                    let n = tape.aux[meta];
+                    assert!(tape.a[i] as usize + n as usize <= end, "logits out of range");
+                    (n, meta as u32, 0)
+                }
+                _ => (0, 0, 0),
+            };
+            instrs.push(BackInstr {
+                node: i as u32,
+                p0,
+                p1,
+                p2,
+                op,
+            });
+        }
+        StepProgram {
+            rec,
+            zero_floor,
+            instrs,
+        }
+    }
+
+    /// The frozen forward segment (pass to [`Tape::replay_forward`]).
+    pub fn recording(&self) -> Recording {
+        self.rec
+    }
+
+    /// The recorded loss root.
+    pub fn root(&self) -> Value {
+        self.rec.root()
+    }
+
+    /// The recording base (the floor of the backward sweep).
+    pub fn base(&self) -> Mark {
+        self.rec.base()
+    }
+
+    /// The mark below which gradients are zeroed each sweep.
+    pub fn zero_floor(&self) -> Mark {
+        self.zero_floor
+    }
+
+    /// Number of compiled backward instructions (= non-leaf nodes in
+    /// `[base, root]`). The per-step backward work is exactly this many
+    /// kernel calls — no leaf visits, no nodes above the root.
+    pub fn instruction_count(&self) -> usize {
+        self.instrs.len()
+    }
+
+    /// Number of recorded (per-sample) nodes in the forward segment.
+    pub fn node_count(&self) -> usize {
+        self.rec.node_count()
+    }
+
+    /// Run the compiled reverse sweep: zero the precomputed extent (the
+    /// parameter prefix plus the recorded segment — never the full tape),
+    /// seed ∂root/∂root = 1, then drive the instruction list through the
+    /// shared adjoint kernels. Performs zero heap allocations and touches
+    /// no node outside the extent.
+    ///
+    /// Bitwise identical to `Tape::backward_above(root, base)` whenever
+    /// that call is legal (every pre-base node a leaf and the tape extent
+    /// equal to the recording's): both zero the same gradients, visit the
+    /// same nodes in the same order, skip the same zero-gradient nodes,
+    /// and run the same kernel per node.
+    pub fn backward<T: Scalar>(&self, tape: &mut Tape<T>) {
+        let end = self.rec.end().nodes as usize;
+        // Real assert (once per sweep): the instructions index `grad`/`val`
+        // up to `end`, so a program replayed on a rewound tape must panic,
+        // not read out of bounds.
+        assert!(end <= tape.len(), "program extends past the live tape");
+        let zf = self.zero_floor.nodes as usize;
+        let base = self.rec.base().nodes as usize;
+        for g in tape.grad[..zf].iter_mut() {
+            *g = T::ZERO;
+        }
+        for g in tape.grad[base..end].iter_mut() {
+            *g = T::ZERO;
+        }
+        tape.grad[self.rec.root().idx()] = T::ONE;
+        for ins in &self.instrs {
+            let i = ins.node as usize;
+            // Same skip the interpreter applies: a node whose accumulated
+            // gradient is exactly zero contributes nothing downstream.
+            let g = tape.grad[i];
+            if g == T::ZERO {
+                continue;
+            }
+            match ins.op {
+                Op::Leaf => unreachable!("leaves are never compiled"),
+                // The fused range ops are where compilation pays: their
+                // aux-meta (w0/n/stride/bias) was chased once at capture
+                // and rides in the instruction.
+                Op::DotRange => {
+                    let x0 = tape.arg_a(i);
+                    tape.adj_dot_range(x0, ins.p0 as usize, ins.p1 as usize, g);
+                }
+                Op::DotRangeBias => {
+                    let x0 = tape.arg_a(i);
+                    tape.adj_dot_range_bias(
+                        x0,
+                        ins.p0 as usize,
+                        ins.p1 as usize,
+                        ins.p2 as usize,
+                        g,
+                    );
+                }
+                Op::DotParamRange => {
+                    let xs_at = tape.arg_a(i);
+                    tape.adj_dot_param_range(
+                        xs_at,
+                        ins.p0 as usize,
+                        ins.p1 as usize,
+                        ins.p2 as usize,
+                        g,
+                    );
+                }
+                Op::DotStrided => {
+                    let x0 = tape.arg_a(i);
+                    tape.adj_dot_strided(
+                        x0,
+                        ins.p0 as usize,
+                        ins.p1 as usize,
+                        ins.p2 as usize,
+                        g,
+                    );
+                }
+                Op::CeLogitsRange => {
+                    let z0 = tape.arg_a(i);
+                    // The target is rebindable — read it live.
+                    let target = tape.aux_at(ins.p1 as usize + 1);
+                    tape.adj_ce_logits(z0, ins.p0 as usize, target, g);
+                }
+                // Every non-fused op has no meta indirection to skip: its
+                // operands are the live `a`/`b` slots either way, so the
+                // compiled path shares the interpreter's decoded dispatch
+                // verbatim (one source of truth for ~30 arms).
+                other => tape.accumulate_decoded(i, other, g),
+            }
+        }
+    }
+}
+
+/// A shape-keyed program cache: one entry per graph topology (the key is
+/// whatever identifies the shape — for GPT ragged windows, the window
+/// length). Misses run the caller's record closure (cold path: appends a
+/// stacked segment to the tape and compiles it); hits are a linear scan
+/// of a handful of keys and allocate nothing.
+///
+/// The payload is generic so forward-only workloads (generation caches a
+/// `(Recording, binds)` pair) and full training programs
+/// (`(StepProgram, binds)`) share one cache type.
+///
+/// # Examples
+///
+/// ```
+/// use burtorch::tape::ProgramCache;
+///
+/// let mut cache: ProgramCache<String> = ProgramCache::new();
+/// let v = cache.get_or_insert_with(8, || "window-8".to_string());
+/// assert_eq!(*v, "window-8");
+/// cache.get_or_insert_with(8, || unreachable!("hit never records"));
+/// assert_eq!((cache.misses(), cache.hits()), (1, 1));
+/// ```
+#[derive(Debug)]
+pub struct ProgramCache<P> {
+    keys: Vec<u64>,
+    entries: Vec<P>,
+    hits: u64,
+    misses: u64,
+}
+
+// Manual impl: a derive would needlessly bound `P: Default`.
+impl<P> Default for ProgramCache<P> {
+    fn default() -> Self {
+        ProgramCache::new()
+    }
+}
+
+impl<P> ProgramCache<P> {
+    /// Empty cache.
+    pub fn new() -> ProgramCache<P> {
+        ProgramCache {
+            keys: Vec::new(),
+            entries: Vec::new(),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Number of cached shapes.
+    pub fn len(&self) -> usize {
+        self.keys.len()
+    }
+
+    /// True when nothing has been recorded yet.
+    pub fn is_empty(&self) -> bool {
+        self.keys.is_empty()
+    }
+
+    /// Lookups that found an existing entry.
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Lookups that had to record.
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// Does the cache hold an entry for `key`? (Does not count as a hit.)
+    pub fn contains(&self, key: u64) -> bool {
+        self.keys.contains(&key)
+    }
+
+    /// Fetch the entry for `key` if it exists, counting a hit. Callers
+    /// whose *work* differs between hit and miss (rebind+replay vs
+    /// record) branch on this — one scan, no pre-`contains` probe:
+    ///
+    /// ```text
+    /// match cache.lookup(key) {
+    ///     Some(entry) => { /* rebind + replay */ }
+    ///     None => { let e = record(); cache.insert(key, e); }
+    /// }
+    /// ```
+    pub fn lookup(&mut self, key: u64) -> Option<&mut P> {
+        match self.keys.iter().position(|&k| k == key) {
+            Some(pos) => {
+                self.hits += 1;
+                Some(&mut self.entries[pos])
+            }
+            None => None,
+        }
+    }
+
+    /// Record a new shape, counting a miss. The key must not be cached
+    /// yet (pair with [`ProgramCache::lookup`]).
+    pub fn insert(&mut self, key: u64, entry: P) -> &mut P {
+        debug_assert!(!self.keys.contains(&key), "shape {key} recorded twice");
+        self.misses += 1;
+        self.keys.push(key);
+        self.entries.push(entry);
+        self.entries.last_mut().expect("just pushed")
+    }
+
+    /// Fetch the entry for `key`, running `record` to create it on a miss
+    /// — the convenience for callers whose work is identical either way.
+    pub fn get_or_insert_with<F: FnOnce() -> P>(&mut self, key: u64, record: F) -> &mut P {
+        match self.keys.iter().position(|&k| k == key) {
+            Some(pos) => {
+                self.hits += 1;
+                &mut self.entries[pos]
+            }
+            None => self.insert(key, record()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tape::testgraph::omni_graph;
+
+    #[test]
+    fn compiled_backward_matches_interpreter_bitwise_across_all_ops() {
+        let samples = [[0.7, -0.3], [1.3, 0.9], [-0.2, 2.1], [0.05, -1.7]];
+
+        // Interpreter reference: replay + backward_above per sample.
+        let mut it = Tape::<f64>::new();
+        let _w = it.leaves(&[0.25, -0.5]);
+        let ibase = it.mark();
+        let (ix0, iroot) = omni_graph(&mut it, samples[0]);
+        let irec = Recording::capture(&it, ibase, iroot);
+        let mut want: Vec<Vec<u64>> = Vec::new();
+        for s in samples {
+            it.set_value(ix0, s[0]);
+            it.set_value(Value(ix0.0 + 1), s[1]);
+            it.replay_forward(&irec);
+            it.backward_above(irec.root(), irec.base());
+            want.push((0..it.len()).map(|i| it.grad(Value(i as u32)).to_bits()).collect());
+        }
+
+        // Compiled program on an identical tape.
+        let mut t = Tape::<f64>::new();
+        let _w = t.leaves(&[0.25, -0.5]);
+        let base = t.mark();
+        let (x0, root) = omni_graph(&mut t, samples[0]);
+        let rec = Recording::capture(&t, base, root);
+        let prog = StepProgram::compile(&t, rec, base);
+        for (k, s) in samples.iter().enumerate() {
+            t.set_value(x0, s[0]);
+            t.set_value(Value(x0.0 + 1), s[1]);
+            t.replay_forward(&prog.recording());
+            prog.backward(&mut t);
+            let got: Vec<u64> =
+                (0..t.len()).map(|i| t.grad(Value(i as u32)).to_bits()).collect();
+            assert_eq!(got, want[k], "compiled backward diverged at sample {k}");
+        }
+    }
+
+    #[test]
+    fn instruction_list_is_dense_and_leaf_free() {
+        let mut t = Tape::<f64>::new();
+        let _w = t.leaves(&[0.25, -0.5]);
+        let base = t.mark();
+        let (_x0, root) = omni_graph(&mut t, [0.4, 0.6]);
+        let rec = Recording::capture(&t, base, root);
+        let prog = StepProgram::compile(&t, rec, base);
+        let non_leaf = (base.node_count()..=root.idx())
+            .filter(|&i| !matches!(t.op_of(Value(i as u32)), crate::ops::Op::Leaf))
+            .count();
+        assert_eq!(prog.instruction_count(), non_leaf);
+        assert!(prog.instruction_count() < prog.node_count(), "leaves must be excluded");
+    }
+
+    #[test]
+    fn compiled_backward_allocates_and_appends_nothing() {
+        let mut t = Tape::<f64>::new();
+        let _w = t.leaves(&[1.0, 2.0]);
+        let base = t.mark();
+        let (x0, root) = omni_graph(&mut t, [0.4, 0.6]);
+        let rec = Recording::capture(&t, base, root);
+        let prog = StepProgram::compile(&t, rec, base);
+        let caps = t.capacities();
+        let len = t.len();
+        let aux = t.aux_len();
+        for k in 0..10 {
+            t.set_value(x0, 0.1 + k as f64 * 0.3);
+            t.replay_forward(&prog.recording());
+            prog.backward(&mut t);
+        }
+        assert_eq!(t.capacities(), caps, "compiled step must not reallocate");
+        assert_eq!(t.len(), len, "compiled step must not append nodes");
+        assert_eq!(t.aux_len(), aux, "compiled step must not grow the aux pool");
+    }
+
+    #[test]
+    fn stacked_program_skips_buried_segments_and_matches_fresh_build() {
+        // Params, then a buried decoy segment, then the recorded segment:
+        // the program's zero extent covers params + its own segment only.
+        let mut t = Tape::<f64>::new();
+        let w = t.leaf(3.0);
+        let params = t.mark();
+        // Buried segment (e.g. an older shape's recording).
+        let dx = t.leaf(2.0);
+        let decoy = t.mul(w, dx);
+        let _decoy2 = t.sqr(decoy);
+        // Recorded segment: loss = (w·x)², x rebindable.
+        let floor = t.mark();
+        let x = t.leaf(5.0);
+        let y = t.mul(w, x);
+        let loss = t.sqr(y);
+        let rec = Recording::capture(&t, floor, loss);
+        let prog = StepProgram::compile(&t, rec, params);
+        // Poison the buried grads: the sweep must neither read nor clear them.
+        t.grad[decoy.idx()] = 123.0;
+        t.replay_forward(&prog.recording());
+        prog.backward(&mut t);
+        // ∂(w·x)²/∂w = 2·w·x² = 2·3·25 = 150.
+        assert_eq!(t.grad(w), 150.0);
+        assert_eq!(t.grad(decoy), 123.0, "buried segment must be untouched");
+        // And again after a rebind (grads re-zeroed, no stale carryover).
+        t.set_value(x, 1.0);
+        t.replay_forward(&prog.recording());
+        prog.backward(&mut t);
+        assert_eq!(t.grad(w), 6.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "buried node")]
+    fn compile_rejects_stacked_recordings_that_reference_buried_segments() {
+        let mut t = Tape::<f64>::new();
+        let w = t.leaf(3.0);
+        let params = t.mark();
+        let buried = t.sqr(w); // an older segment below the new recording
+        let floor = t.mark();
+        let x = t.leaf(5.0);
+        let y = t.mul(buried, x); // illegal: reads the buried node
+        let loss = t.sqr(y);
+        let rec = Recording::capture(&t, floor, loss);
+        let _ = StepProgram::compile(&t, rec, params);
+    }
+
+    #[test]
+    #[should_panic(expected = "past the live tape")]
+    fn backward_on_a_rewound_tape_panics() {
+        let mut t = Tape::<f64>::new();
+        let _w = t.leaf(1.0);
+        let base = t.mark();
+        let x = t.leaf(2.0);
+        let loss = t.sqr(x);
+        let rec = Recording::capture(&t, base, loss);
+        let prog = StepProgram::compile(&t, rec, base);
+        t.rewind(base);
+        prog.backward(&mut t);
+    }
+
+    #[test]
+    fn cache_counts_hits_and_misses_per_shape() {
+        let mut cache: ProgramCache<u32> = ProgramCache::new();
+        assert!(cache.is_empty());
+        for &k in &[3u64, 5, 3, 8, 5, 3] {
+            cache.get_or_insert_with(k, || k as u32 * 10);
+        }
+        assert_eq!(cache.len(), 3);
+        assert_eq!(cache.misses(), 3);
+        assert_eq!(cache.hits(), 3);
+        assert!(cache.contains(8));
+        assert!(!cache.contains(9));
+        assert_eq!(*cache.get_or_insert_with(8, || unreachable!()), 80);
+        // The split lookup/insert pair keeps the same books: lookup counts
+        // a hit only when it finds the shape, insert counts the miss.
+        assert_eq!(cache.lookup(9), None);
+        assert_eq!(*cache.insert(9, 90), 90);
+        assert_eq!(*cache.lookup(9).expect("just inserted"), 90);
+        assert_eq!((cache.misses(), cache.hits()), (4, 5));
+    }
+}

@@ -326,6 +326,16 @@ impl<T: Scalar> Tape<T> {
     /// unchecked fused kernels in [`Tape::replay_forward`], so a bad id
     /// (e.g. an out-of-vocab token) must panic here — on the cold rebind
     /// path — rather than read out of bounds during the hot sweep.
+    ///
+    /// Rebind invariant for **stacked** programs (every `rebind_*` entry
+    /// point): a recording compiled with a zero floor below its base
+    /// (see [`crate::tape::StepProgram::compile`]) must only be rebound
+    /// to ids below that floor (parameters) or inside its own segment —
+    /// never into a buried sibling segment, whose gradients the compiled
+    /// sweep neither zeroes nor scans. The compile-time check enforces
+    /// this for the recorded graph; rebinds must preserve it (the model
+    /// rebind helpers do — they only redirect to parameter rows and
+    /// recorded per-sample slots).
     #[inline(always)]
     pub fn rebind_aux_id(&mut self, at: u32, id: Value) {
         assert!((at as usize) < self.aux.len(), "aux rebind out of range");
@@ -382,62 +392,8 @@ impl<T: Scalar> Tape<T> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tape::testgraph::omni_graph;
     use crate::tape::Scratch;
-
-    /// Build a graph exercising every op whose inputs are two rebindable
-    /// leaves; returns (x0, root). Deterministic topology: node ids are
-    /// identical across rebuilds.
-    fn omni_graph(t: &mut Tape<f64>, base_vals: [f64; 2]) -> (Value, Value) {
-        let x = t.leaves(&base_vals);
-        let x0 = x;
-        let x1 = Value(x.0 + 1);
-        // Keep everything strictly positive where ln/sqrt need it.
-        let sx0 = t.sqr(x0);
-        let pos = t.add_squares(x0, x1);
-        let shifted = {
-            let c = t.mul_const(pos, 1.0);
-            t.add(c, sx0)
-        };
-        let u1 = t.relu(x0);
-        let u2 = t.tanh(x1);
-        let u3 = t.exp(x0);
-        let u4 = t.neg_log(shifted);
-        let u5 = t.sigmoid(x1);
-        let u6 = t.inv(shifted);
-        let u7 = t.pow3(x0);
-        let u8 = t.log(shifted);
-        let u9 = t.sqrt(shifted);
-        let u10 = t.inv_sqrt(shifted);
-        let u11 = t.neg(x1);
-        let b1 = t.sub(u1, u2);
-        let b2 = t.mul(u3, u5);
-        let b3 = t.div(u4, shifted);
-        let b4 = t.mean2(u6, u7);
-        let b5 = t.mean_squares2(u8, u9);
-        let b6 = t.neg_mean2(u10, u11);
-        let all = [b1, b2, b3, b4, b5, b6];
-        let r1 = t.reduce_sum(&all);
-        let r2 = t.reduce_sub(&all);
-        let r3 = t.reduce_mul(&[u5, u9, u10]);
-        let r4 = t.reduce_mean(&all);
-        let r5 = t.reduce_sum_squares(&all);
-        let r6 = t.reduce_mean_squares(&all);
-        let r7 = t.reduce_neg_mean(&all);
-        let ip = t.inner_product(&[r1, r2, r3], &[r4, r5, r6]);
-        let ipb = t.inner_product_bias(&[r1, r2], &[r3, r4], r7);
-        let dr = t.dot_range(r1, r4, 3);
-        let drb = t.dot_range_bias(r1, r4, 3, ip);
-        let view = t.share_ids(&[r1, r2, r3, r4, r5]);
-        let dpr = t.dot_param_range(view, 5, r2, ipb);
-        let ds = t.dot_strided(r1, b1, 2, 3);
-        let logits_first = t.add(dr, drb);
-        let _l2 = t.add(dpr, ds);
-        let _l3 = t.mul_const(logits_first, 0.5);
-        let ce = t.ce_logits_range(logits_first, 3, 1);
-        let tail = t.reduce_sum(&[ip, ipb, dpr, ds, ce]);
-        let root = t.tanh(tail);
-        (x0, root)
-    }
 
     #[test]
     fn replay_matches_eager_rebuild_bitwise_across_all_ops() {

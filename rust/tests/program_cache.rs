@@ -1,0 +1,278 @@
+//! Compiled-backward + shape-keyed program-cache suite.
+//!
+//! Three contracts, end to end:
+//!
+//! 1. **Compiled ≡ interpreter.** A replayed step's gradients come from a
+//!    precompiled, leaf-free instruction list ([`StepProgram`]) — they
+//!    must be bitwise equal to the reverse-scan interpreter for the real
+//!    models, and the steady-state step must neither append, allocate,
+//!    nor re-record.
+//! 2. **Ragged workloads replay.** One stacked program per graph shape
+//!    through [`ProgramCache`]: per-window-length GPT training programs,
+//!    and generation (`Gpt::generate_cached`) token-for-token equal to
+//!    eager generation.
+//! 3. **Executors everywhere.** The engine-level matrix (threads ×
+//!    compression × models) lives in `tests/replay_equivalence.rs`,
+//!    which now exercises the compiled backward on every replay run;
+//!    this file adds the structure assertions those runs rely on.
+
+use burtorch::nn::{CeMode, CharMlp, CharMlpBinds, CharMlpConfig, Gpt, GptBinds, GptConfig};
+use burtorch::parallel::{MinibatchGradEngine, ParallelOptions, ReplaySessions, SampleOracle};
+use burtorch::rng::Rng;
+use burtorch::tape::{ExecMode, ProgramCache, Recording, SampleExecutor, StepProgram, Tape, Value};
+
+/// Engine-level replay oracle over the char MLP (mirrors the trainer's
+/// private oracle through the public model API).
+struct MlpOracle<'a> {
+    model: &'a CharMlp,
+    contexts: Vec<Vec<u32>>,
+    targets: Vec<u32>,
+}
+
+impl SampleOracle<f32> for MlpOracle<'_> {
+    type Rec = CharMlpBinds;
+
+    fn build(&self, tape: &mut Tape<f32>, idx: usize) -> Value {
+        self.model
+            .loss(tape, &self.contexts[idx], self.targets[idx], CeMode::Fused)
+    }
+
+    fn record(&self, tape: &mut Tape<f32>, idx: usize) -> Option<(Recording, CharMlpBinds)> {
+        Some(self.model.record_sample(
+            tape,
+            &self.contexts[idx],
+            self.targets[idx],
+            CeMode::Fused,
+        ))
+    }
+
+    fn rebind(&self, tape: &mut Tape<f32>, binds: &CharMlpBinds, idx: usize) {
+        self.model
+            .rebind_sample(tape, binds, &self.contexts[idx], self.targets[idx]);
+    }
+}
+
+#[test]
+fn steady_state_replay_drives_a_compiled_leaf_free_program() {
+    let mut tape = Tape::<f32>::new();
+    let mut rng = Rng::new(71);
+    let model = CharMlp::new(&mut tape, CharMlpConfig::paper(4), &mut rng);
+    let oracle = MlpOracle {
+        model: &model,
+        contexts: (0..24)
+            .map(|s| (0..16).map(|i| ((i * 3 + s) % 27) as u32).collect())
+            .collect(),
+        targets: (0..24).map(|s| (s % 27) as u32).collect(),
+    };
+    let mut engine = MinibatchGradEngine::new(
+        &tape,
+        model.base,
+        model.params,
+        ParallelOptions {
+            threads: 2,
+            ..Default::default()
+        },
+    );
+    let mut sessions = ReplaySessions::new(engine.threads());
+    let mut grad = vec![0.0f64; model.num_params()];
+    let batch: Vec<usize> = (0..12).collect();
+    engine.accumulate_replay(&mut tape, &batch, &oracle, &mut sessions, &mut grad);
+
+    // Every recorded tape compiled a program whose backward is exactly
+    // `instruction_count` kernel calls: leaves are excluded (the sample
+    // graph contains no recorded leaves here, but the count must still be
+    // bounded by the segment), and the zeroing extent is the recorded
+    // extent — never the parameter-only prefix, never past the end.
+    assert!(sessions.recorded_count() >= 1);
+    for prog in sessions.programs() {
+        assert!(prog.instruction_count() > 0);
+        assert!(prog.instruction_count() <= prog.node_count());
+        assert_eq!(
+            prog.zero_floor().node_count(),
+            model.base.node_count(),
+            "engine programs zero the parameter prefix"
+        );
+    }
+
+    // Steady state: no appends, no reallocation, no re-recording.
+    let len = tape.len();
+    let caps = tape.capacities();
+    let recorded = sessions.recorded_count();
+    for _ in 0..4 {
+        engine.accumulate_replay(&mut tape, &batch, &oracle, &mut sessions, &mut grad);
+    }
+    assert_eq!(tape.len(), len);
+    assert_eq!(tape.capacities(), caps);
+    assert_eq!(sessions.recorded_count(), recorded, "no re-recording");
+}
+
+#[test]
+fn ragged_gpt_windows_replay_bitwise_through_the_cache() {
+    // Interleaved window lengths {2, 4, 6, 8} — the federated/generation
+    // shape profile. Eager reference vs one stacked program per length.
+    let mk = || {
+        let mut t = Tape::<f64>::new();
+        let mut rng = Rng::new(72);
+        let cfg = GptConfig {
+            n_layer: 1,
+            d_model: 8,
+            n_head: 2,
+            ..GptConfig::paper()
+        };
+        let gpt = Gpt::new(&mut t, cfg, &mut rng);
+        (t, gpt)
+    };
+    let windows: Vec<(Vec<u32>, Vec<u32>)> = (0..12)
+        .map(|s| {
+            let w = 2 + 2 * (s % 4);
+            (
+                (0..w).map(|i| ((i * 5 + s * 13) % 65) as u32).collect(),
+                (0..w).map(|i| ((i * 7 + s * 3 + 1) % 65) as u32).collect(),
+            )
+        })
+        .collect();
+
+    let (mut te, ge) = mk();
+    let mut want: Vec<(u64, Vec<u64>)> = Vec::new();
+    for (x, y) in &windows {
+        let loss = ge.loss(&mut te, x, y, CeMode::Fused);
+        te.backward_above(loss, ge.base);
+        want.push((
+            te.value(loss).to_bits(),
+            ge.params.iter().map(|p| te.grad(p).to_bits()).collect(),
+        ));
+        te.rewind(ge.base);
+    }
+
+    let (mut tr, gr) = mk();
+    let mut cache: ProgramCache<(StepProgram, GptBinds)> = ProgramCache::new();
+    let mut steady_len = 0usize;
+    for (k, (x, y)) in windows.iter().enumerate() {
+        let key = x.len() as u64;
+        let root = if cache.contains(key) {
+            let (prog, binds) = &*cache.lookup(key).expect("cached");
+            gr.rebind_sample(&mut tr, binds, x, y);
+            tr.replay_forward(&prog.recording());
+            prog.backward(&mut tr);
+            prog.root()
+        } else {
+            let recorded = gr.record_sample_stacked(&mut tr, x, y, CeMode::Fused);
+            let (prog, _) = &*cache.insert(key, recorded);
+            prog.backward(&mut tr);
+            prog.root()
+        };
+        assert_eq!(tr.value(root).to_bits(), want[k].0, "loss @ {k}");
+        let gs: Vec<u64> = gr.params.iter().map(|p| tr.grad(p).to_bits()).collect();
+        assert_eq!(gs, want[k].1, "grads @ {k}");
+        if k == 3 {
+            // All four shapes recorded by now.
+            steady_len = tr.len();
+        }
+        if k > 3 {
+            assert_eq!(tr.len(), steady_len, "steady state appended nodes @ {k}");
+        }
+    }
+    assert_eq!(cache.len(), 4, "one program per window length");
+    assert_eq!(cache.misses(), 4);
+    assert_eq!(cache.hits(), windows.len() as u64 - 4);
+}
+
+#[test]
+fn cached_generation_is_replayed_and_token_identical() {
+    let mut t = Tape::<f32>::new();
+    let mut rng = Rng::new(73);
+    let cfg = GptConfig {
+        n_layer: 1,
+        ..GptConfig::paper()
+    };
+    let gpt = Gpt::new(&mut t, cfg, &mut rng);
+    let prompt = [2u32, 4, 8];
+    let n = 15;
+    let mut rng_e = Rng::new(7);
+    let eager = gpt.generate(&mut t, &prompt, n, 0.9, &mut rng_e);
+    assert_eq!(t.len(), gpt.base.node_count(), "eager generation rewinds fully");
+
+    let mut cache = ProgramCache::new();
+    let mut rng_c = Rng::new(7);
+    let cached = gpt.generate_cached(&mut t, &prompt, n, 0.9, &mut rng_c, &mut cache);
+    assert_eq!(eager, cached, "generation must be token-for-token identical");
+    // Window lengths 3..=8 → six shapes; the remaining tokens replay.
+    assert_eq!(cache.len(), 6);
+    assert_eq!((cache.misses(), cache.hits()), (6, n as u64 - 6));
+
+    // Steady state: another generation is pure replay — all hits, zero
+    // appends, zero reallocation.
+    let len = t.len();
+    let caps = t.capacities();
+    let mut rng_c2 = Rng::new(8);
+    let _ = gpt.generate_cached(&mut t, &prompt, n, 0.9, &mut rng_c2, &mut cache);
+    assert_eq!(t.len(), len, "steady-state generation appended nodes");
+    assert_eq!(t.capacities(), caps, "steady-state generation reallocated");
+    assert_eq!(cache.misses(), 6, "no new shapes after warmup");
+}
+
+#[test]
+fn per_client_executors_replay_the_mlp_bitwise() {
+    // The fed-style pattern at the raw executor level: one executor per
+    // client tape, random sample order, replay ≡ eager bitwise.
+    let ds_ctx: Vec<Vec<u32>> = (0..20)
+        .map(|s| (0..16).map(|i| ((i * 5 + s * 3) % 27) as u32).collect())
+        .collect();
+    let ds_tgt: Vec<u32> = (0..20).map(|s| ((s * 11) % 27) as u32).collect();
+    let order: Vec<usize> = (0..30).map(|i| (i * 7) % 20).collect();
+    let run = |mode: ExecMode| -> Vec<Vec<u64>> {
+        let mut tape = Tape::<f64>::new();
+        let mut rng = Rng::new(74);
+        let model = CharMlp::new(&mut tape, CharMlpConfig::paper(4), &mut rng);
+        let oracle = MlpOracleF64 {
+            model: &model,
+            contexts: &ds_ctx,
+            targets: &ds_tgt,
+        };
+        let mut exec: SampleExecutor<CharMlpBinds> = SampleExecutor::new(mode);
+        let mut out = Vec::new();
+        for &idx in &order {
+            exec.run_sample(&mut tape, &oracle, idx, model.base, None, |t, _root| {
+                out.push(
+                    model
+                        .params
+                        .iter()
+                        .map(|p| t.grad(p).to_bits())
+                        .collect::<Vec<u64>>(),
+                );
+            });
+        }
+        out
+    };
+    assert_eq!(run(ExecMode::Eager), run(ExecMode::Replay));
+}
+
+/// f64 twin of [`MlpOracle`] borrowing its dataset.
+struct MlpOracleF64<'a> {
+    model: &'a CharMlp,
+    contexts: &'a [Vec<u32>],
+    targets: &'a [u32],
+}
+
+impl SampleOracle<f64> for MlpOracleF64<'_> {
+    type Rec = CharMlpBinds;
+
+    fn build(&self, tape: &mut Tape<f64>, idx: usize) -> Value {
+        self.model
+            .loss(tape, &self.contexts[idx], self.targets[idx], CeMode::Fused)
+    }
+
+    fn record(&self, tape: &mut Tape<f64>, idx: usize) -> Option<(Recording, CharMlpBinds)> {
+        Some(self.model.record_sample(
+            tape,
+            &self.contexts[idx],
+            self.targets[idx],
+            CeMode::Fused,
+        ))
+    }
+
+    fn rebind(&self, tape: &mut Tape<f64>, binds: &CharMlpBinds, idx: usize) {
+        self.model
+            .rebind_sample(tape, binds, &self.contexts[idx], self.targets[idx]);
+    }
+}

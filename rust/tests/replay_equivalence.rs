@@ -3,6 +3,15 @@
 //! post-training parameters for the char MLP and the GPT, for any thread
 //! count and any compression mode — and a steady-state replay step must
 //! allocate nothing and append nothing after recording.
+//!
+//! Since the `StepProgram` refactor, every replay run in this file also
+//! exercises the **compiled backward**: replay-mode executors drive a
+//! precompiled leaf-free instruction list instead of the reverse-scan
+//! interpreter, so each eager↔replay bitwise assertion below doubles as
+//! an interpreter↔compiled gradient-equivalence proof across CharMlp and
+//! Gpt, threads {1, 2, 4}, and compress none|ef21. Structure assertions
+//! (instruction counts, zeroing extents, cache behavior) live in
+//! `tests/program_cache.rs`.
 
 use burtorch::coordinator::{ExecMode, Trainer, TrainerOptions};
 use burtorch::data::{names_dataset, CharCorpus};

@@ -265,6 +265,7 @@ fn federated_beats_no_training_and_respects_budget() {
         hidden: 4,
         names_per_client: 40,
         seed: 61,
+        ..Default::default()
     };
     let d = CharMlpConfig::paper(4).num_params();
     let k = d / 4;
