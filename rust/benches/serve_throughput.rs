@@ -1,0 +1,206 @@
+//! Batched inference serving throughput: sessions/sec and tokens/sec vs
+//! lane count through the `serve::ServeEngine`, on the paper's GPT-3-like
+//! configuration (§2.5, d = 46,289, FP32).
+//!
+//! The workload is a fixed fleet of concurrent generation requests with
+//! mixed prompt lengths (so the shape-grouped scheduler and the
+//! per-window program cache both matter). Every lane count serves the
+//! identical request set, and the bench asserts the outputs are
+//! token-for-token identical across lane counts — the serving
+//! determinism contract — before reporting speedups. A second sweep
+//! serves the same fleet through an LRU-bounded cache
+//! (`--cache-cap`-style) to price eviction + tape compaction.
+//!
+//! Results are emitted as a paper-style table
+//! (`bench_results/serve_throughput.txt`) and as JSON
+//! (`bench_results/serve_throughput.json`).
+//!
+//! Run: `cargo bench --bench serve_throughput`
+//! (set BURTORCH_FAST=1 for a shorter run).
+
+use burtorch::bench::{json_num, write_json_result, Table};
+use burtorch::metrics::Timer;
+use burtorch::nn::{Gpt, GptConfig};
+use burtorch::rng::Rng;
+use burtorch::serve::{Request, ServeEngine, ServeOptions, ServeStats};
+use burtorch::tape::Tape;
+
+struct LaneRow {
+    lanes: usize,
+    cache_cap: usize,
+    wall_s: f64,
+    tokens_per_sec: f64,
+    sessions_per_sec: f64,
+    speedup: f64,
+    stats: ServeStats,
+}
+
+fn requests(n_sessions: usize, tokens_each: usize) -> Vec<Request> {
+    (0..n_sessions)
+        .map(|i| Request {
+            id: i as u64,
+            prompt: (0..1 + (i % 6) as u32).map(|k| 1 + (k * 7 + i as u32) % 64).collect(),
+            max_new_tokens: tokens_each,
+            temperature: 0.8,
+            seed: 900 + i as u64 * 13,
+        })
+        .collect()
+}
+
+fn serve_once(
+    lanes: usize,
+    cache_cap: usize,
+    reqs: &[Request],
+) -> (f64, Vec<Vec<u32>>, ServeStats) {
+    let mut tape = Tape::<f32>::new();
+    let mut rng = Rng::new(5);
+    let model = Gpt::new(&mut tape, GptConfig::paper(), &mut rng);
+    let mut engine = ServeEngine::new(
+        tape,
+        model,
+        ServeOptions {
+            lanes,
+            cache_cap,
+            max_active: 0,
+        },
+    );
+    for r in reqs {
+        engine.submit(r.clone());
+    }
+    let timer = Timer::new();
+    let mut done = engine.run_to_completion();
+    let wall = timer.seconds();
+    done.sort_by_key(|s| s.id());
+    let outputs = done.iter().map(|s| s.output().to_vec()).collect();
+    (wall, outputs, engine.stats())
+}
+
+fn main() {
+    let fast = std::env::var_os("BURTORCH_FAST").is_some();
+    let n_sessions = if fast { 8 } else { 32 };
+    let tokens_each = if fast { 16 } else { 64 };
+    let reqs = requests(n_sessions, tokens_each);
+    let total_tokens = (n_sessions * tokens_each) as f64;
+
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let mut lane_counts: Vec<usize> = vec![1, 2, 4, 8]
+        .into_iter()
+        .filter(|&l| l == 1 || l <= 2 * cores)
+        .collect();
+    lane_counts.dedup();
+
+    println!(
+        "serve throughput: GPT paper config (d = 46,289), {n_sessions} sessions × \
+         {tokens_each} tokens, {cores} cores available"
+    );
+
+    let mut rows: Vec<LaneRow> = Vec::new();
+    let mut reference: Option<Vec<Vec<u32>>> = None;
+    for &lanes in &lane_counts {
+        let (wall, outputs, stats) = serve_once(lanes, 0, &reqs);
+        match &reference {
+            None => reference = Some(outputs),
+            Some(want) => assert_eq!(
+                want, &outputs,
+                "lanes={lanes} diverged from single-lane serving"
+            ),
+        }
+        let base = rows.first().map(|r: &LaneRow| r.wall_s).unwrap_or(wall);
+        rows.push(LaneRow {
+            lanes,
+            cache_cap: 0,
+            wall_s: wall,
+            tokens_per_sec: total_tokens / wall,
+            sessions_per_sec: n_sessions as f64 / wall,
+            speedup: base / wall,
+            stats,
+        });
+        println!(
+            "  lanes={lanes:>2}  wall {wall:>7.3}s  {:>9.1} tok/s  {:>7.2} sessions/s  hits {} misses {}",
+            total_tokens / wall,
+            n_sessions as f64 / wall,
+            stats.cache_hits,
+            stats.cache_misses,
+        );
+    }
+
+    // Bounded-cache sweep at the widest lane count: the price of LRU
+    // eviction + segment compaction under shape churn.
+    let widest = *lane_counts.last().expect("nonempty");
+    for cap in [2usize, 4] {
+        let (wall, outputs, stats) = serve_once(widest, cap, &reqs);
+        assert_eq!(
+            reference.as_ref().expect("reference set"),
+            &outputs,
+            "cache-cap={cap} changed tokens"
+        );
+        rows.push(LaneRow {
+            lanes: widest,
+            cache_cap: cap,
+            wall_s: wall,
+            tokens_per_sec: total_tokens / wall,
+            sessions_per_sec: n_sessions as f64 / wall,
+            speedup: rows[0].wall_s / wall,
+            stats,
+        });
+        println!(
+            "  lanes={widest:>2} cap={cap}  wall {wall:>7.3}s  {:>9.1} tok/s  evictions {} compactions {}",
+            total_tokens / wall,
+            stats.cache_evictions,
+            stats.compactions,
+        );
+    }
+
+    let mut table = Table::new("Serve throughput — GPT paper config, FP32, mixed prompt lengths");
+    table.note(&format!(
+        "{n_sessions} sessions × {tokens_each} tokens; outputs asserted identical across all rows"
+    ));
+    for r in &rows {
+        let cap = if r.cache_cap == 0 { "∞".to_string() } else { r.cache_cap.to_string() };
+        table.note(&format!(
+            "lanes {:>2} cap {:>2}: {:>8.1} tok/s, {:>6.2} sessions/s, {:.2}× vs 1 lane, \
+             hits {} misses {} evictions {} compactions {}",
+            r.lanes,
+            cap,
+            r.tokens_per_sec,
+            r.sessions_per_sec,
+            r.speedup,
+            r.stats.cache_hits,
+            r.stats.cache_misses,
+            r.stats.cache_evictions,
+            r.stats.compactions,
+        ));
+    }
+    table.emit("serve_throughput");
+
+    let mut json = String::from("{\n");
+    json.push_str("  \"bench\": \"serve_throughput\",\n  \"status\": \"measured\",\n");
+    json.push_str(&format!(
+        "  \"workload\": {{\"model\": \"gpt_paper\", \"d\": 46289, \"sessions\": {n_sessions}, \"tokens_each\": {tokens_each}}},\n"
+    ));
+    json.push_str(&format!("  \"cores_available\": {cores},\n"));
+    json.push_str("  \"deterministic_across_lanes\": true,\n  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"lanes\": {}, \"cache_cap\": {}, \"wall_s\": {}, \"tokens_per_sec\": {}, \
+             \"sessions_per_sec\": {}, \"speedup\": {}, \"cache_hits\": {}, \"cache_misses\": {}, \
+             \"cache_evictions\": {}, \"compactions\": {}, \"peak_tape_nodes\": {}}}{}\n",
+            r.lanes,
+            r.cache_cap,
+            json_num(r.wall_s),
+            json_num(r.tokens_per_sec),
+            json_num(r.sessions_per_sec),
+            json_num(r.speedup),
+            r.stats.cache_hits,
+            r.stats.cache_misses,
+            r.stats.cache_evictions,
+            r.stats.compactions,
+            r.stats.peak_tape_nodes,
+            if i + 1 == rows.len() { "" } else { "," },
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    write_json_result("serve_throughput", &json);
+}

@@ -29,13 +29,13 @@
 
 use std::sync::Arc;
 
-use crate::data::{BatchSampler, CharCorpus, Example};
+use crate::data::{BatchSampler, CharCorpus, Example, PrefetchSampler};
 use crate::metrics::{mean_std, MemInfo, Timer};
 use crate::nn::{CeMode, CharMlp, CharMlpBinds, Gpt, GptBinds, ParamRange};
 use crate::optim::Sgd;
 use crate::parallel::{
     MinibatchGradEngine, ParallelOptions, ReductionCompression, ReplaySessions, SampleOracle,
-    WorkerPool, DEFAULT_LANES,
+    StepSideJob, WorkerPool, DEFAULT_LANES,
 };
 use crate::scalar::Scalar;
 use crate::tape::{Mark, Recording, Tape, Value};
@@ -227,7 +227,13 @@ impl Trainer {
     ) -> TrainReport {
         let o = &self.opts;
         let d = params.len;
-        let mut sampler = BatchSampler::new(n_examples, o.batch, o.seed);
+        // Async batch prefetch: index generation for batch k+1 runs on a
+        // pool worker while step k computes (the stream is bitwise
+        // identical to the synchronous sampler either way — see
+        // `PrefetchSampler`). On the serial path the side job would not
+        // overlap anything, so the synchronous fallback in `advance`
+        // keeps batch prep off the timed compute section instead.
+        let mut prefetch = PrefetchSampler::new(BatchSampler::new(n_examples, o.batch, o.seed));
         let mut opt = Sgd::new(d, o.lr, 0.0);
         let mut grad_acc = vec![0.0f64; d];
         let mut engine = MinibatchGradEngine::with_pool(
@@ -248,16 +254,37 @@ impl Trainer {
         let mut times = Vec::with_capacity(o.steps);
         let mut curve = Vec::new();
         let mut peak_nodes = 0usize;
+        // Hand the prefetch job to the engine only when the step actually
+        // runs on pool workers: the engine collapses to its serial path
+        // when `min(threads, lanes, batch) == 1`, and there the side job
+        // would execute inline inside the timed section with nothing to
+        // hide behind — the synchronous fallback in `advance` keeps that
+        // prep off the clock instead (the paper protocol excludes pure
+        // preparation). With overlap on, the timed section measures the
+        // step's true critical path: index generation hides behind lane
+        // compute, and only a remainder that outlasts the lanes (the
+        // sampler is O(batch), lanes are O(batch · model)) could extend
+        // the barrier window being timed.
+        let overlap = engine.threads().min(engine.lanes().min(o.batch)) > 1;
 
         for step in 0..o.steps {
-            let batch = sampler.next_batch(); // preparation excluded from timing
+            let side: Option<&dyn StepSideJob> =
+                overlap.then_some(&prefetch as &dyn StepSideJob);
             let timer = Timer::new();
-            let stats = engine.accumulate_with(tape, &batch, oracle, &mut sessions, &mut grad_acc);
+            let stats = engine.accumulate_with_side(
+                tape,
+                prefetch.current(),
+                oracle,
+                &mut sessions,
+                side,
+                &mut grad_acc,
+            );
             peak_nodes = peak_nodes.max(stats.peak_nodes);
             let inv_b = 1.0 / o.batch as f64;
             grad_acc.iter_mut().for_each(|g| *g *= inv_b);
             opt.step(tape.values_range_mut(params.first, d), &grad_acc);
             times.push(timer.seconds() * 1e3);
+            prefetch.advance(); // swap buffers; synchronous prep (if any) stays off the clock
             let mean_loss = stats.loss_sum * inv_b;
             if o.log_every > 0 && step % o.log_every == 0 {
                 curve.push((step, mean_loss));

@@ -1,5 +1,11 @@
-//! Uniform batch subsampling (paper Eq. 2: `S ⊆ [n]`, `|S| = b`, u.a.r.).
+//! Uniform batch subsampling (paper Eq. 2: `S ⊆ [n]`, `|S| = b`, u.a.r.)
+//! plus the double-buffered async prefetch wrapper that takes index
+//! generation off the coordinator's critical path.
 
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use crate::parallel::StepSideJob;
 use crate::rng::Rng;
 
 /// One supervised training example: a fixed-length context and the next
@@ -44,6 +50,114 @@ impl BatchSampler {
     /// Population size n.
     pub fn population(&self) -> usize {
         self.n
+    }
+}
+
+/// Double-buffered async batch prefetch: wraps a [`BatchSampler`] so that
+/// batch *k+1*'s indices are generated **while step *k* computes**,
+/// hosted by the training engine's existing worker pool instead of the
+/// coordinator (ROADMAP "async batch prefetch" item).
+///
+/// The type is a [`StepSideJob`]: the engine hands it to every pool
+/// worker once per step ([`crate::parallel::MinibatchGradEngine::accumulate_with_side`]),
+/// the first worker to free up claims it atomically and fills the staging
+/// buffer, and the coordinator swaps the buffers between steps with
+/// [`PrefetchSampler::advance`]. If no worker claimed the job (serial
+/// runs, or an engine driven without the side hook), `advance` generates
+/// the batch synchronously — so the **index stream is bitwise identical
+/// to driving the underlying [`BatchSampler`] directly**, prefetched or
+/// not: `next_batch` is called exactly once per step, in step order, on
+/// whatever thread, and the sampler's RNG stream is all that matters.
+///
+/// # Examples
+///
+/// ```
+/// use burtorch::data::{BatchSampler, PrefetchSampler};
+///
+/// let mut sync = BatchSampler::new(100, 8, 7);
+/// let mut pf = PrefetchSampler::new(BatchSampler::new(100, 8, 7));
+/// for _ in 0..5 {
+///     assert_eq!(pf.current(), sync.next_batch().as_slice());
+///     pf.advance(); // nobody claimed the side job: fills synchronously
+/// }
+/// ```
+pub struct PrefetchSampler {
+    /// Sampler + staging buffer for batch k+1. Written by at most one
+    /// claimant per step (the atomic claim below) and read by the
+    /// coordinator only after the step's pool barrier — the barrier
+    /// crossing is the happens-before edge.
+    inner: UnsafeCell<PrefetchInner>,
+    /// Per-step claim: `false` → the next `try_run` fills the buffer.
+    claimed: AtomicBool,
+    /// Batch k, handed to the engine.
+    cur: Vec<usize>,
+}
+
+struct PrefetchInner {
+    sampler: BatchSampler,
+    next: Vec<usize>,
+}
+
+// SAFETY: `inner` is mutated either through the exclusive atomic claim
+// (one winner per step, other threads never touch it) or through `&mut
+// self` in `advance`, which the borrow checker already serializes against
+// every shared borrow; `cur` is only ever accessed through `&self`/`&mut
+// self` normally.
+unsafe impl Sync for PrefetchSampler {}
+
+impl PrefetchSampler {
+    /// Wrap a sampler; the first batch is generated synchronously so
+    /// [`PrefetchSampler::current`] is immediately valid.
+    pub fn new(mut sampler: BatchSampler) -> PrefetchSampler {
+        let cur = sampler.next_batch();
+        PrefetchSampler {
+            inner: UnsafeCell::new(PrefetchInner {
+                sampler,
+                next: Vec::new(),
+            }),
+            claimed: AtomicBool::new(false),
+            cur,
+        }
+    }
+
+    /// The current step's batch indices.
+    pub fn current(&self) -> &[usize] {
+        &self.cur
+    }
+
+    /// Batch size b of the underlying sampler.
+    pub fn batch_size(&self) -> usize {
+        self.cur.len()
+    }
+
+    /// Swap the prefetched batch in as the current one (between steps,
+    /// after the engine call returned). If no worker claimed the side job
+    /// this step, the batch is generated synchronously here — same
+    /// stream, just without the overlap.
+    pub fn advance(&mut self) {
+        let claimed = self.claimed.load(Ordering::Acquire);
+        let inner = self.inner.get_mut();
+        if !claimed {
+            inner.next = inner.sampler.next_batch();
+        }
+        std::mem::swap(&mut self.cur, &mut inner.next);
+        self.claimed.store(false, Ordering::Release);
+    }
+}
+
+impl StepSideJob for PrefetchSampler {
+    fn try_run(&self) {
+        if self
+            .claimed
+            .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+        {
+            // SAFETY: winning the claim grants exclusive access to
+            // `inner` until `advance` resets the flag; the coordinator
+            // only reads it after the step's closing pool barrier.
+            let inner = unsafe { &mut *self.inner.get() };
+            inner.next = inner.sampler.next_batch();
+        }
     }
 }
 
@@ -98,5 +212,34 @@ mod tests {
         for _ in 0..10 {
             assert_eq!(a.next_batch(), b.next_batch());
         }
+    }
+
+    #[test]
+    fn prefetched_stream_is_bitwise_identical_to_synchronous_sampling() {
+        use crate::parallel::WorkerPool;
+
+        let mut sync = BatchSampler::new(500, 16, 42);
+        let want: Vec<Vec<usize>> = (0..24).map(|_| sync.next_batch()).collect();
+
+        // Mix every claim path: pool-worker claim, coordinator claim, and
+        // no claim at all (synchronous fallback in `advance`). The stream
+        // must not depend on which thread generated which batch.
+        let pool = WorkerPool::new(3);
+        let mut pf = PrefetchSampler::new(BatchSampler::new(500, 16, 42));
+        assert_eq!(pf.batch_size(), 16);
+        let mut got: Vec<Vec<usize>> = Vec::new();
+        for step in 0..24 {
+            got.push(pf.current().to_vec());
+            match step % 3 {
+                0 => pool.run(&|_| pf.try_run()), // all workers race for the claim
+                1 => {
+                    pf.try_run();
+                    pf.try_run(); // repeat calls are no-ops
+                }
+                _ => {} // unclaimed: advance fills synchronously
+            }
+            pf.advance();
+        }
+        assert_eq!(got, want, "prefetched batches diverged from the sampler");
     }
 }

@@ -15,7 +15,7 @@ mod corpus;
 mod names;
 mod tokenizer;
 
-pub use batch::{BatchSampler, Example};
+pub use batch::{BatchSampler, Example, PrefetchSampler};
 pub use corpus::{shakespeare_text, CharCorpus};
 pub use names::{names_dataset, NamesDataset};
 pub use tokenizer::CharTokenizer;

@@ -64,6 +64,27 @@
 //! `tests/program_cache.rs` for the equivalence, zero-allocation and
 //! zero-dispatch proofs.
 //!
+//! ## Serving
+//!
+//! The same replay machinery powers the *inference* side ([`serve`], CLI
+//! `burtorch serve`): a [`serve::ServeEngine`] admits concurrent
+//! generation requests ([`serve::Session`] owns each request's prompt,
+//! temperature, and private RNG stream), groups active sessions by
+//! context-window length, and fans each shape group across persistent
+//! worker-pool lanes — every lane owns a replica tape plus a shape-keyed
+//! cache of recorded logits programs, so steady-state token generation
+//! is a rebind plus two tight array sweeps, never graph construction.
+//! Batched serving is **bitwise identical** to running each session
+//! alone through `Gpt::generate_cached` (same seed ⇒ same tokens, for
+//! any lane count and admission order). For long-lived processes the
+//! [`tape::ProgramCache`] takes an LRU capacity bound
+//! ([`tape::ProgramCache::bounded`]), and evicted programs' dead tape
+//! segments are reclaimed by compaction (`Gpt::compact_gen_cache`:
+//! rewind to the parameter base, re-record only the live shapes), so
+//! neither the cache nor the tape grows without bound. Servers boot from
+//! a `train --params` checkpoint ([`serialize::save_params_range`])
+//! instead of a fresh init.
+//!
 //! ## The zero-steady-state-allocation discipline
 //!
 //! Every per-step buffer in the hot path is allocated once and reused:
@@ -126,7 +147,10 @@
 //! - [`optim`] — SGD / momentum / AdamW / PAGE / prox-SGD (paper §4).
 //! - [`compress`] — RandK/TopK/RandSeqK compressors, EF21, MARINA (paper §4).
 //! - [`data`] — char-level tokenizers and the embedded corpora.
-//! - [`serialize`] — raw-payload graph save/load (paper §2.3, Table 4).
+//! - [`serialize`] — raw-payload graph save/load (paper §2.3, Table 4)
+//!   and self-describing parameter checkpoints.
+//! - [`serve`] — the batched inference serving subsystem: sessions,
+//!   shape-grouping scheduler, and the multi-lane [`serve::ServeEngine`].
 //! - [`viz`] — DOT graph export and matplotlib script generation (F.6).
 //! - [`metrics`] — timers, CPU clocks, peak memory, the energy model.
 //! - [`baselines`] — the eager-framework stand-ins the paper benchmarks
@@ -158,6 +182,7 @@ pub mod rng;
 pub mod runtime;
 pub mod scalar;
 pub mod serialize;
+pub mod serve;
 pub mod tape;
 pub mod testkit;
 pub mod viz;

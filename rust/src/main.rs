@@ -5,9 +5,12 @@
 //!   train      — train the char MLP or the GPT-3-like model natively
 //!   fed        — run the federated/compression simulation (§4)
 //!   demo       — the Figure 1/Figure 2 graphs, values + DOT dump
-//!   sample     — generate text from a freshly trained GPT
+//!   sample     — generate text from a trained GPT (checkpoint or fresh)
+//!   serve      — batched multi-session inference from a checkpoint
 //!   artifacts  — load every AOT artifact through PJRT and smoke-run it
 //!   info       — engine/build information
+
+use std::path::Path;
 
 use burtorch::cli::Cli;
 use burtorch::compress::{Identity, RandK, TopK};
@@ -15,10 +18,11 @@ use burtorch::coordinator::{
     run_federated, Config, ExecMode, FedConfig, ModelKind, Trainer, TrainerOptions,
 };
 use burtorch::data::{names_dataset, CharCorpus};
-use burtorch::metrics::MemInfo;
+use burtorch::metrics::{MemInfo, Timer};
 use burtorch::nn::{CeMode, CharMlp, CharMlpConfig, Gpt, GptConfig};
 use burtorch::parallel::ReductionCompression;
 use burtorch::rng::Rng;
+use burtorch::serve::{parse_requests, ServeEngine, ServeOptions};
 use burtorch::tape::{Builder, Tape};
 use burtorch::viz;
 
@@ -29,48 +33,61 @@ fn main() {
         "fed" => cmd_fed(&cli),
         "demo" => cmd_demo(&cli),
         "sample" => cmd_sample(&cli),
+        "serve" => cmd_serve(&cli),
         "artifacts" => cmd_artifacts(&cli),
         "info" => cmd_info(),
         "" | "help" | "-h" | "--help" => {
-            print_help();
+            println!("{}", usage());
             0
         }
         other => {
-            eprintln!("unknown command '{other}'\n");
-            print_help();
+            // Unknown subcommands are an error: usage goes to stderr and
+            // the exit code is non-zero so scripts fail loudly.
+            eprintln!("unknown command '{other}'\n\n{}", usage());
             2
         }
     };
     std::process::exit(code);
 }
 
-fn print_help() {
-    println!(
-        "burtorch — latency-first CPU backpropagation (paper reproduction)\n\
-         \n\
-         USAGE: burtorch <command> [--key value]...\n\
-         \n\
-         COMMANDS:\n\
-           train     --model mlp|gpt --steps N --batch B --lr G [--hidden E]\n\
-                     [--threads W] [--lanes L] [--config file.toml]\n\
-                     [--compress none|randk:k=64|topk:k=64|ef21[:k=N]]\n\
-                     [--exec eager|replay] [--scratch] [--composed-ce]\n\
-                     [--pin-cores]\n\
-                     (--threads 0 = all cores; any W gives bitwise-identical\n\
-                      runs with --compress none; compressed runs are\n\
-                      deterministic per seed and thread-invariant too;\n\
-                      --exec replay records each worker's sample graph once,\n\
-                      compiles its backward, and replays it — bitwise\n\
-                      identical, no per-step graph construction or opcode\n\
-                      dispatch; --pin-cores pins pool workers to cores,\n\
-                      requires building with --features affinity)\n\
-           fed       --clients N --rounds R --compressor identity|randk|topk\n\
-                     [--exec eager|replay]\n\
-           demo      [--small]   (Figure 1 / Figure 2 graphs + DOT)\n\
-           sample    --steps N --tokens T   (train tiny GPT, then generate)\n\
-           artifacts [--dir artifacts]      (PJRT smoke-run of AOT graphs)\n\
-           info"
-    );
+fn usage() -> &'static str {
+    "burtorch — latency-first CPU backpropagation (paper reproduction)\n\
+     \n\
+     USAGE: burtorch <command> [--key value]...\n\
+     \n\
+     COMMANDS:\n\
+       train     --model mlp|gpt --steps N --batch B --lr G [--hidden E]\n\
+                 [--threads W] [--lanes L] [--config file.toml]\n\
+                 [--compress none|randk:k=64|topk:k=64|ef21[:k=N]]\n\
+                 [--exec eager|replay] [--scratch] [--composed-ce]\n\
+                 [--pin-cores] [--params w.bin]\n\
+                 (--threads 0 = all cores; any W gives bitwise-identical\n\
+                  runs with --compress none; compressed runs are\n\
+                  deterministic per seed and thread-invariant too;\n\
+                  --exec replay records each worker's sample graph once,\n\
+                  compiles its backward, and replays it — bitwise\n\
+                  identical, no per-step graph construction or opcode\n\
+                  dispatch; --pin-cores pins pool workers to cores,\n\
+                  requires building with --features affinity;\n\
+                  --params writes a parameter checkpoint at the end)\n\
+       fed       --clients N --rounds R --compressor identity|randk|topk\n\
+                 [--exec eager|replay]\n\
+                 (--exec replay drives each client's local oracles through\n\
+                  its compiled per-sample program — bitwise ≡ eager)\n\
+       demo      [--small]   (Figure 1 / Figure 2 graphs + DOT)\n\
+       sample    --steps N --tokens T [--params w.bin]\n\
+                 (trains a tiny GPT then generates; with --params it\n\
+                  loads the checkpoint and skips training)\n\
+       serve     --requests FILE [--params w.bin] [--lanes L]\n\
+                 [--cache-cap N] [--max-active M] [--seed S]\n\
+                 (batched multi-session inference; requests come one per\n\
+                  line as 'seed|max_new_tokens|temperature|prompt', read\n\
+                  from FILE or stdin; --lanes fans sessions across worker\n\
+                  lanes, --cache-cap bounds each lane's program cache\n\
+                  with LRU eviction + tape compaction; batched output is\n\
+                  bitwise identical to serving each request alone)\n\
+       artifacts [--dir artifacts]      (PJRT smoke-run of AOT graphs)\n\
+       info"
 }
 
 fn trainer_options(cli: &Cli, cfg: &Config) -> TrainerOptions {
@@ -176,6 +193,9 @@ fn cmd_train(cli: &Cli) -> i32 {
             println!("model: d = {} parameters, n = {} windows", model.num_params(), ds.examples.len());
             let r = trainer.train_char_mlp(&mut tape, &model, &ds.examples);
             print_report(&r);
+            if let Some(path) = cli.opt("params") {
+                return save_checkpoint(path, model.save_params(&tape, Path::new(path)));
+            }
         }
         ModelKind::Gpt => {
             let corpus = CharCorpus::shakespeare(
@@ -188,9 +208,41 @@ fn cmd_train(cli: &Cli) -> i32 {
             println!("model: d = {} parameters, {} windows", model.num_params(), corpus.num_windows());
             let r = trainer.train_gpt(&mut tape, &model, &corpus);
             print_report(&r);
+            if let Some(path) = cli.opt("params") {
+                return save_checkpoint(path, model.save_params(&tape, Path::new(path)));
+            }
         }
     }
     0
+}
+
+/// Load a `--params` checkpoint into a GPT, reporting the outcome.
+/// Returns `true` when the weights are in place.
+fn load_gpt_checkpoint(model: &Gpt, tape: &mut Tape<f32>, path: &str) -> bool {
+    match model.load_params(tape, Path::new(path)) {
+        Ok(()) => {
+            println!("loaded {} params from {path}", model.num_params());
+            true
+        }
+        Err(e) => {
+            eprintln!("error: --params {path}: {e}");
+            false
+        }
+    }
+}
+
+/// Report the outcome of a `--params` checkpoint write.
+fn save_checkpoint(path: &str, result: Result<usize, burtorch::serialize::SerializeError>) -> i32 {
+    match result {
+        Ok(bytes) => {
+            println!("wrote parameter checkpoint: {path} ({bytes} bytes)");
+            0
+        }
+        Err(e) => {
+            eprintln!("error: --params {path}: {e}");
+            1
+        }
+    }
 }
 
 fn print_report(r: &burtorch::coordinator::TrainReport) {
@@ -296,19 +348,136 @@ fn cmd_sample(cli: &Cli) -> i32 {
     let mut tape = Tape::<f32>::new();
     let mut rng = Rng::new(3);
     let model = Gpt::new(&mut tape, GptConfig::paper(), &mut rng);
-    let trainer = Trainer::new(TrainerOptions {
-        steps,
-        batch: cli.int_or("batch", 4) as usize,
-        lr: cli.float_or("lr", 0.25),
-        log_every: (steps / 10).max(1),
-        ..Default::default()
-    });
-    let r = trainer.train_gpt(&mut tape, &model, &corpus);
-    print_report(&r);
+    // `--params` boots from a `train --params` checkpoint and skips the
+    // in-process training entirely.
+    match cli.opt("params") {
+        Some(path) => {
+            if !load_gpt_checkpoint(&model, &mut tape, path) {
+                return 1;
+            }
+        }
+        None => {
+            let trainer = Trainer::new(TrainerOptions {
+                steps,
+                batch: cli.int_or("batch", 4) as usize,
+                lr: cli.float_or("lr", 0.25),
+                log_every: (steps / 10).max(1),
+                ..Default::default()
+            });
+            let r = trainer.train_gpt(&mut tape, &model, &corpus);
+            print_report(&r);
+        }
+    }
     let prompt: Vec<u32> = corpus.tokens[..8.min(corpus.tokens.len())].to_vec();
     let out = model.generate(&mut tape, &prompt, tokens, 0.8, &mut rng);
     println!("--- sample ---");
     println!("{}{}", corpus.tokenizer.decode(&prompt), corpus.tokenizer.decode(&out));
+    0
+}
+
+fn cmd_serve(cli: &Cli) -> i32 {
+    let lanes = cli.usize_or("lanes", 1).max(1);
+    let cache_cap = cli.usize_or("cache-cap", 0);
+    let max_active = cli.usize_or("max-active", 0);
+    // Only the tokenizer is needed from the corpus; the char set (and
+    // therefore every token id) is independent of the tiling length, so
+    // a small corpus builds the same vocabulary training used.
+    let corpus = CharCorpus::shakespeare(cli.int_or("min-chars", 1_000) as usize, 8);
+    // Validate the cheap inputs first: a bad requests file fails before
+    // the model is built or a checkpoint is loaded.
+    let text = match cli.opt("requests") {
+        Some(path) => match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("error: cannot read requests file '{path}': {e}");
+                return 1;
+            }
+        },
+        None => {
+            let mut buf = String::new();
+            use std::io::Read as _;
+            if let Err(e) = std::io::stdin().read_to_string(&mut buf) {
+                eprintln!("error: reading requests from stdin: {e}");
+                return 1;
+            }
+            buf
+        }
+    };
+    let requests = match parse_requests(&text, &corpus.tokenizer) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    if requests.is_empty() {
+        eprintln!("no requests to serve");
+        return 0;
+    }
+    let n_requests = requests.len();
+    let mut tape = Tape::<f32>::new();
+    let mut rng = Rng::new(cli.int_or("seed", 3) as u64);
+    let model = Gpt::new(&mut tape, GptConfig::paper(), &mut rng);
+    match cli.opt("params") {
+        Some(path) => {
+            if !load_gpt_checkpoint(&model, &mut tape, path) {
+                return 1;
+            }
+        }
+        None => eprintln!(
+            "warning: no --params checkpoint given; serving a randomly \
+             initialized model (train one with `burtorch train --model gpt \
+             --params w.bin`)"
+        ),
+    }
+    println!(
+        "serving {n_requests} request(s): lanes={lanes} cache-cap={} max-active={}",
+        if cache_cap == 0 { "unbounded".to_string() } else { cache_cap.to_string() },
+        if max_active == 0 { "unlimited".to_string() } else { max_active.to_string() },
+    );
+    let mut engine = ServeEngine::new(
+        tape,
+        model,
+        ServeOptions {
+            lanes,
+            cache_cap,
+            max_active,
+        },
+    );
+    // Echo each prompt→completion pair; decode through the same tokenizer.
+    let prompts: Vec<String> = requests
+        .iter()
+        .map(|r| corpus.tokenizer.decode(&r.prompt))
+        .collect();
+    for r in requests {
+        engine.submit(r);
+    }
+    let timer = Timer::new();
+    let done = engine.run_to_completion();
+    let wall = timer.seconds();
+    for s in &done {
+        println!(
+            "[{}] {}{}",
+            s.id(),
+            prompts[s.id() as usize],
+            corpus.tokenizer.decode(s.output())
+        );
+    }
+    let st = engine.stats();
+    let rate = |x: u64| if wall > 0.0 { x as f64 / wall } else { f64::INFINITY };
+    println!(
+        "served {} session(s), {} tokens in {} steps over {:.3} s | {:.1} tok/s | {:.2} sessions/s",
+        st.completed, st.tokens, st.steps, wall, rate(st.tokens), rate(st.completed),
+    );
+    println!(
+        "cache: {} live program(s) | hits {} | misses {} | evictions {} | compactions {} | peak tape nodes {}",
+        st.cached_programs,
+        st.cache_hits,
+        st.cache_misses,
+        st.cache_evictions,
+        st.compactions,
+        st.peak_tape_nodes,
+    );
     0
 }
 

@@ -5,12 +5,15 @@
 //! SGD — 46,289 trainable parameters (we reproduce the count exactly; see
 //! the `param_count_matches_paper` test).
 
+use std::path::Path;
+
 use super::{
     cross_entropy_recorded, Act, CeBind, CeMode, LayerNorm, Linear, ParamAlloc, ParamRange,
     TransformerBlock,
 };
 use crate::rng::Rng;
 use crate::scalar::Scalar;
+use crate::serialize::{load_params_range, save_params_range, SerializeError};
 use crate::tape::{Mark, ProgramCache, Recording, StepProgram, Tape, Value};
 
 /// GPT configuration (paper §2.5 "GPT-3-like model: configuration").
@@ -135,6 +138,29 @@ impl Gpt {
     /// Trainable parameter count d.
     pub fn num_params(&self) -> usize {
         self.params.len
+    }
+
+    /// Save the model's flat parameter buffer as a self-describing
+    /// checkpoint (see [`crate::serialize::save_params_range`]); returns
+    /// bytes written. The `serve` CLI boots from such a checkpoint
+    /// instead of a fresh init.
+    pub fn save_params<T: Scalar>(
+        &self,
+        tape: &Tape<T>,
+        path: &Path,
+    ) -> Result<usize, SerializeError> {
+        save_params_range(tape, self.params.first, self.params.len, path)
+    }
+
+    /// Load a checkpoint written by [`Gpt::save_params`] into this
+    /// model's parameter leaves; rejects dtype or parameter-count
+    /// mismatches (a checkpoint never loads into a different model).
+    pub fn load_params<T: Scalar>(
+        &self,
+        tape: &mut Tape<T>,
+        path: &Path,
+    ) -> Result<(), SerializeError> {
+        load_params_range(tape, self.params.first, self.params.len, path)
     }
 
     /// Shared forward body: build all position logits and return the id
@@ -359,6 +385,41 @@ impl Gpt {
         tokens[prompt.len()..].to_vec()
     }
 
+    /// Advance one autoregressive step through the shape-keyed cache:
+    /// fetch the context window's logits program (hit: rebind the tokens
+    /// and re-sweep the frozen segment; miss: record a stacked segment
+    /// once) and leave the last position's logits computed on the tape,
+    /// returning the first logit's node id. The **single** per-token
+    /// engine shared by [`Gpt::generate_cached`] and the batched serving
+    /// lanes (`crate::serve`), so the two paths produce bitwise-identical
+    /// logits by construction.
+    pub fn cached_logits<T: Scalar>(
+        &self,
+        tape: &mut Tape<T>,
+        cache: &mut ProgramCache<(Recording, GptGenBinds)>,
+        ctx: &[u32],
+    ) -> Value {
+        let key = ctx.len() as u64;
+        // One cache scan per token; the entry is two small Copy values,
+        // so the cache borrow ends before the tape work starts.
+        match cache.lookup(key).map(|e| *e) {
+            // Hit: rebind the window's tokens, one frozen sweep.
+            Some((rec, binds)) => {
+                self.rebind_logits(tape, &binds, ctx);
+                tape.replay_forward(&rec);
+                binds.logits0
+            }
+            // Miss: record this window length once (the recording pass
+            // already computed the logits eagerly).
+            None => {
+                let (rec, binds) = self.record_logits(tape, ctx);
+                let logits0 = binds.logits0;
+                cache.insert(key, (rec, binds));
+                logits0
+            }
+        }
+    }
+
     /// [`Gpt::generate`] under replay: generation windows grow per token
     /// (a *ragged* workload), so each distinct window length gets one
     /// recorded logits program in the shape-keyed `cache` — a miss
@@ -383,25 +444,7 @@ impl Gpt {
         let vocab = self.cfg.vocab;
         for _ in 0..n {
             let ctx_start = tokens.len().saturating_sub(self.cfg.block_size);
-            let key = (tokens.len() - ctx_start) as u64;
-            // One cache scan per token; the entry is two small Copy values,
-            // so the cache borrow ends before the tape work starts.
-            let logits0 = match cache.lookup(key).map(|e| *e) {
-                // Hit: rebind the window's tokens, one frozen sweep.
-                Some((rec, binds)) => {
-                    self.rebind_logits(tape, &binds, &tokens[ctx_start..]);
-                    tape.replay_forward(&rec);
-                    binds.logits0
-                }
-                // Miss: record this window length once (the recording pass
-                // already computed the logits eagerly).
-                None => {
-                    let (rec, binds) = self.record_logits(tape, &tokens[ctx_start..]);
-                    let logits0 = binds.logits0;
-                    cache.insert(key, (rec, binds));
-                    logits0
-                }
-            };
+            let logits0 = self.cached_logits(tape, cache, &tokens[ctx_start..]);
             let zs: Vec<f64> = (0..vocab)
                 .map(|j| tape.value(Value(logits0.0 + j as u32)).to_f64())
                 .collect();
@@ -409,12 +452,41 @@ impl Gpt {
         }
         tokens[prompt.len()..].to_vec()
     }
+
+    /// Compact a logits-program cache's tape: rewind to the parameter
+    /// base (discarding every stacked segment, live or dead) and
+    /// re-record one fresh segment per *live* cached shape, remapping
+    /// each program's base to its new position. Values recorded with the
+    /// placeholder tokens are irrelevant — every replay rebinds the real
+    /// tokens and re-sweeps the whole segment, so compaction never
+    /// changes a generated token.
+    ///
+    /// Call this when LRU evictions ([`ProgramCache::bounded`]) have left
+    /// enough dead segments buried in the stacked region; `tape` must
+    /// hold nothing above `self.base` except this cache's recordings
+    /// (they are destroyed and rebuilt). This is what bounds the tape of
+    /// a long-lived serving process (see `crate::serve`).
+    pub fn compact_gen_cache<T: Scalar>(
+        &self,
+        tape: &mut Tape<T>,
+        cache: &mut ProgramCache<(Recording, GptGenBinds)>,
+    ) {
+        tape.rewind(self.base);
+        cache.rebuild_in_place(|key, entry| {
+            let window = key as usize;
+            debug_assert!(window >= 1 && window <= self.cfg.block_size);
+            let placeholder = vec![0u32; window];
+            *entry = self.record_logits(tape, &placeholder);
+        });
+    }
 }
 
 /// Temperature softmax + CDF sampling over raw logits, in plain f64 —
 /// the single sampling routine shared by the eager and cached generation
-/// paths, so they draw identical tokens from identical logits.
-fn sample_token(zs: &[f64], temperature: f64, rng: &mut Rng) -> u32 {
+/// paths **and** the batched serving engine (`crate::serve`), so every
+/// path draws identical tokens from identical logits. One RNG draw per
+/// token; `temperature` is clamped below at 1e-6.
+pub fn sample_token(zs: &[f64], temperature: f64, rng: &mut Rng) -> u32 {
     let mx = zs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
     let ws: Vec<f64> = zs
         .iter()
@@ -630,6 +702,86 @@ mod tests {
         assert_eq!(cache.misses(), 6, "no new shapes after warmup");
         let eager2 = gpt.generate(&mut t, &prompt, n, 0.8, &mut rng_e2);
         assert_eq!(eager2, cached2);
+    }
+
+    #[test]
+    fn bounded_cache_generation_with_compaction_matches_eager() {
+        let mut t = Tape::<f64>::new();
+        let mut rng = Rng::new(63);
+        let cfg = GptConfig {
+            n_layer: 1,
+            d_model: 8,
+            n_head: 2,
+            ..GptConfig::paper()
+        };
+        let gpt = Gpt::new(&mut t, cfg, &mut rng);
+        let prompt = [1u32, 2, 3];
+        let n = 12;
+        let mut rng_e = Rng::new(77);
+        let eager = gpt.generate(&mut t, &prompt, n, 0.8, &mut rng_e);
+
+        // Capacity 2 < the 6 distinct window lengths (3..=8): evictions
+        // churn mid-generation, yet every token must match eager.
+        let mut cache = ProgramCache::bounded(2);
+        let mut rng_c = Rng::new(77);
+        let cached = gpt.generate_cached(&mut t, &prompt, n, 0.8, &mut rng_c, &mut cache);
+        assert_eq!(eager, cached, "bounded-cache generation diverged");
+        assert!(cache.evictions() > 0, "cap 2 over 6 shapes must evict");
+        assert!(cache.len() <= 2);
+
+        // Compaction reclaims the dead segments: afterwards the stacked
+        // region holds exactly the live programs' nodes.
+        let before = t.len();
+        gpt.compact_gen_cache(&mut t, &mut cache);
+        assert!(t.len() < before, "compaction must shrink the tape");
+        let live: usize = cache.entries().map(|(_, (rec, _))| rec.node_count()).sum();
+        assert_eq!(t.len() - gpt.base.node_count(), live);
+
+        // Replay through the rebuilt (base-remapped) programs is still
+        // bitwise identical to eager.
+        let mut rng_e2 = Rng::new(99);
+        let mut rng_c2 = Rng::new(99);
+        let cached2 = gpt.generate_cached(&mut t, &prompt, n, 0.8, &mut rng_c2, &mut cache);
+        let eager2 = gpt.generate(&mut t, &prompt, n, 0.8, &mut rng_e2);
+        assert_eq!(eager2, cached2, "post-compaction replay diverged");
+    }
+
+    #[test]
+    fn param_checkpoint_restores_generation_exactly() {
+        let dir = std::env::temp_dir().join("burtorch_gpt_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("gpt.bin");
+        let cfg = GptConfig {
+            n_layer: 1,
+            d_model: 8,
+            n_head: 2,
+            ..GptConfig::paper()
+        };
+        let mut t = Tape::<f32>::new();
+        let mut rng = Rng::new(64);
+        let gpt = Gpt::new(&mut t, cfg, &mut rng);
+        gpt.save_params(&t, &path).unwrap();
+        let mut rng_g = Rng::new(5);
+        let want = gpt.generate(&mut t, &[1, 2], 8, 0.9, &mut rng_g);
+
+        // A differently-initialized model restores the exact weights.
+        let mut t2 = Tape::<f32>::new();
+        let mut rng2 = Rng::new(999);
+        let gpt2 = Gpt::new(&mut t2, cfg, &mut rng2);
+        gpt2.load_params(&mut t2, &path).unwrap();
+        assert_eq!(
+            t.values_range(gpt.params.first, gpt.params.len),
+            t2.values_range(gpt2.params.first, gpt2.params.len),
+        );
+        let mut rng_g2 = Rng::new(5);
+        let got = gpt2.generate(&mut t2, &[1, 2], 8, 0.9, &mut rng_g2);
+        assert_eq!(want, got, "checkpointed model must generate identically");
+
+        // A different architecture (different d) is rejected.
+        let mut t3 = Tape::<f32>::new();
+        let mut rng3 = Rng::new(1);
+        let gpt3 = Gpt::new(&mut t3, GptConfig::paper(), &mut rng3);
+        assert!(gpt3.load_params(&mut t3, &path).is_err());
     }
 
     #[test]

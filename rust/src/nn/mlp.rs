@@ -6,11 +6,14 @@
 //! embeddings 27×64, context 16, two layers; d ranges from 5,963 (e = 4)
 //! to 1,079,003 (e = 1024) — asserted in tests.
 
+use std::path::Path;
+
 use super::{
     cross_entropy_recorded, Act, CeBind, CeMode, Linear, ParamAlloc, ParamRange,
 };
 use crate::rng::Rng;
 use crate::scalar::Scalar;
+use crate::serialize::{load_params_range, save_params_range, SerializeError};
 use crate::tape::{Mark, Recording, StepProgram, Tape, Value};
 
 /// Generic multi-layer perceptron over explicit scalar inputs.
@@ -128,6 +131,27 @@ impl CharMlp {
     /// Trainable parameter count d.
     pub fn num_params(&self) -> usize {
         self.params.len
+    }
+
+    /// Save the model's flat parameter buffer as a self-describing
+    /// checkpoint (see [`crate::serialize::save_params_range`]); returns
+    /// bytes written.
+    pub fn save_params<T: Scalar>(
+        &self,
+        tape: &Tape<T>,
+        path: &Path,
+    ) -> Result<usize, SerializeError> {
+        save_params_range(tape, self.params.first, self.params.len, path)
+    }
+
+    /// Load a checkpoint written by [`CharMlp::save_params`]; rejects
+    /// dtype or parameter-count mismatches.
+    pub fn load_params<T: Scalar>(
+        &self,
+        tape: &mut Tape<T>,
+        path: &Path,
+    ) -> Result<(), SerializeError> {
+        load_params_range(tape, self.params.first, self.params.len, path)
     }
 
     /// Shared forward body: build the logits and return the aux offset of

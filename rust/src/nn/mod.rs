@@ -21,7 +21,7 @@ mod softmax;
 
 pub use attention::CausalSelfAttention;
 pub use block::TransformerBlock;
-pub use gpt::{Gpt, GptBinds, GptConfig, GptGenBinds};
+pub use gpt::{sample_token, Gpt, GptBinds, GptConfig, GptGenBinds};
 pub use init::{kaiming_std, xavier_std, ParamAlloc};
 pub use layernorm::LayerNorm;
 pub use linear::{Linear, Neuron};

@@ -579,8 +579,9 @@ pub fn pin_current_thread(_cpu: usize) -> bool {
 
 /// A raw pointer that may cross threads. Used to hand each pool worker
 /// exclusive access to *its* element of an engine-owned buffer; the
-/// disjointness argument lives at each use site.
-struct PtrSend<P>(*mut P);
+/// disjointness argument lives at each use site. `pub(crate)` so the
+/// serving engine's lane fan-out (`crate::serve`) reuses the same idiom.
+pub(crate) struct PtrSend<P>(pub(crate) *mut P);
 
 // Manual impls: `derive` would add a `P: Clone`/`P: Copy` bound, but the
 // pointer is Copy regardless of the pointee.
@@ -594,6 +595,23 @@ impl<P> Copy for PtrSend<P> {}
 // SAFETY: every use derives disjoint &mut regions per worker index.
 unsafe impl<P> Send for PtrSend<P> {}
 unsafe impl<P> Sync for PtrSend<P> {}
+
+/// A unit of work the engine runs **at most once per step**, concurrently
+/// with the lane compute: every pool worker calls
+/// [`StepSideJob::try_run`] after finishing its lane chunk (surplus
+/// workers that own no lanes this step call it immediately, giving full
+/// overlap), so the implementation must claim the work atomically and
+/// make repeat calls no-ops. On the serial path (`threads = 1`) the job
+/// runs inline after the lanes — no overlap, same semantics.
+///
+/// The canonical host is async batch prefetch
+/// ([`crate::data::PrefetchSampler`]): batch *k+1*'s indices materialize
+/// on a pool worker while step *k*'s gradients are still being computed,
+/// taking the sampler off the coordinator's critical path.
+pub trait StepSideJob: Sync {
+    /// Run the step's side work if no other worker has claimed it yet.
+    fn try_run(&self);
+}
 
 // ---------------------------------------------------------------------------
 // Engine
@@ -957,7 +975,7 @@ impl<T: Scalar> MinibatchGradEngine<T> {
     where
         O: SampleOracle<T>,
     {
-        self.accumulate_impl(tape, batch, oracle, None, grad_out)
+        self.accumulate_impl(tape, batch, oracle, None, None, grad_out)
     }
 
     /// [`MinibatchGradEngine::accumulate`] in **replay** mode: the first
@@ -1003,6 +1021,28 @@ impl<T: Scalar> MinibatchGradEngine<T> {
     where
         O: SampleOracle<T>,
     {
+        self.accumulate_with_side(tape, batch, oracle, sessions, None, grad_out)
+    }
+
+    /// [`MinibatchGradEngine::accumulate_with`] plus an optional
+    /// [`StepSideJob`]: work executed at most once per step, concurrently
+    /// with the lane compute, by the first pool worker that frees up
+    /// (surplus workers pick it up immediately). This is how the trainer
+    /// hosts async batch prefetch on the existing pool — batch *k+1*'s
+    /// indices are generated while step *k* computes, with zero extra
+    /// threads and zero extra barrier crossings.
+    pub fn accumulate_with_side<O>(
+        &mut self,
+        tape: &mut Tape<T>,
+        batch: &[usize],
+        oracle: &O,
+        sessions: &mut ReplaySessions<O::Rec>,
+        side: Option<&dyn StepSideJob>,
+        grad_out: &mut [f64],
+    ) -> StepStats
+    where
+        O: SampleOracle<T>,
+    {
         assert_eq!(
             sessions.len(),
             self.threads,
@@ -1010,7 +1050,7 @@ impl<T: Scalar> MinibatchGradEngine<T> {
             sessions.len(),
             self.threads
         );
-        self.accumulate_impl(tape, batch, oracle, Some(&mut sessions.execs), grad_out)
+        self.accumulate_impl(tape, batch, oracle, Some(&mut sessions.execs), side, grad_out)
     }
 
     fn accumulate_impl<O>(
@@ -1019,6 +1059,7 @@ impl<T: Scalar> MinibatchGradEngine<T> {
         batch: &[usize],
         oracle: &O,
         sessions: Option<&mut [SampleExecutor<O::Rec>]>,
+        side: Option<&dyn StepSideJob>,
         grad_out: &mut [f64],
     ) -> StepStats
     where
@@ -1042,7 +1083,9 @@ impl<T: Scalar> MinibatchGradEngine<T> {
 
         if workers == 1 {
             // Serial path: identical lane structure, no replicas, no pool
-            // crossings — this *is* the reference numeric behavior.
+            // crossings — this *is* the reference numeric behavior. A side
+            // job still runs (after the lanes; there is nothing to
+            // overlap with on one thread).
             run_lanes(
                 tape,
                 &mut self.scratches[0],
@@ -1056,6 +1099,9 @@ impl<T: Scalar> MinibatchGradEngine<T> {
                 use_scratch,
                 sessions.map(|s| &mut s[0]),
             );
+            if let Some(job) = side {
+                job.try_run();
+            }
         } else {
             // Broadcast the authoritative parameter values: snapshot them
             // into the staging buffer once, and let each worker copy its
@@ -1085,7 +1131,12 @@ impl<T: Scalar> MinibatchGradEngine<T> {
                 sessions.map(|s| PtrSend(s.as_mut_ptr()));
             pool.run(&|w| {
                 if w >= workers {
-                    return; // surplus pool worker this step
+                    // Surplus pool worker this step: the ideal side-job
+                    // host — it overlaps the entire lane compute.
+                    if let Some(job) = side {
+                        job.try_run();
+                    }
+                    return;
                 }
                 let (lo, hi) = (bounds[w], bounds[w + 1]);
                 // SAFETY: worker w exclusively owns the main tape (w == 0,
@@ -1114,6 +1165,11 @@ impl<T: Scalar> MinibatchGradEngine<T> {
                         wtape, scratch, base, params, batch, lanes_used, lo, chunk, oracle,
                         use_scratch, session,
                     );
+                }
+                // First worker to finish its lanes claims the side job;
+                // the rest find it taken and fall through to the barrier.
+                if let Some(job) = side {
+                    job.try_run();
                 }
             });
         }
@@ -1338,6 +1394,67 @@ mod tests {
             hits.fetch_add(1, Ordering::SeqCst);
         });
         assert_eq!(hits.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn side_job_runs_at_most_once_per_step_and_never_perturbs_results() {
+        struct CountingJob {
+            claimed: AtomicBool,
+            runs: AtomicUsize,
+        }
+        impl StepSideJob for CountingJob {
+            fn try_run(&self) {
+                if self
+                    .claimed
+                    .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
+                    .is_ok()
+                {
+                    self.runs.fetch_add(1, Ordering::SeqCst);
+                }
+            }
+        }
+        let prob = LsqProblem::new(64);
+        let batch: Vec<usize> = (0..16).collect();
+        for threads in [1usize, 2, 4] {
+            let (g_ref, l_ref) = grad_with_threads(threads, &batch);
+            let (mut tape, base, params) = prob.setup();
+            let mut engine = MinibatchGradEngine::new(
+                &tape,
+                base,
+                params,
+                ParallelOptions {
+                    threads,
+                    ..Default::default()
+                },
+            );
+            let mut sessions: ReplaySessions<()> =
+                ReplaySessions::with_mode(ExecMode::Eager, engine.threads());
+            let job = CountingJob {
+                claimed: AtomicBool::new(false),
+                runs: AtomicUsize::new(0),
+            };
+            let mut grad = vec![0.0; params.len];
+            for step in 0..3usize {
+                let stats = engine.accumulate_with_side(
+                    &mut tape,
+                    &batch,
+                    &prob.oracle(),
+                    &mut sessions,
+                    Some(&job),
+                    &mut grad,
+                );
+                assert_eq!(
+                    job.runs.load(Ordering::SeqCst),
+                    step + 1,
+                    "exactly one run per step at threads={threads}"
+                );
+                job.claimed.store(false, Ordering::SeqCst);
+                assert_eq!(stats.loss_sum.to_bits(), l_ref.to_bits());
+                let bits: Vec<u64> = grad.iter().map(|g| g.to_bits()).collect();
+                let want: Vec<u64> = g_ref.iter().map(|g| g.to_bits()).collect();
+                assert_eq!(bits, want, "side job must not perturb gradients");
+            }
+        }
     }
 
     #[test]

@@ -29,6 +29,14 @@ pub enum SerializeError {
     Malformed(&'static str),
     /// Snapshot dtype does not match the tape's scalar type.
     DtypeMismatch,
+    /// Parameter checkpoint holds a different number of scalars than the
+    /// model expects (`expected`, `got`).
+    CountMismatch {
+        /// Scalars the loading model expects.
+        expected: u64,
+        /// Scalars the checkpoint holds.
+        got: u64,
+    },
 }
 
 impl From<std::io::Error> for SerializeError {
@@ -43,6 +51,12 @@ impl std::fmt::Display for SerializeError {
             SerializeError::Io(e) => write!(f, "io error: {e}"),
             SerializeError::Malformed(m) => write!(f, "malformed payload: {m}"),
             SerializeError::DtypeMismatch => write!(f, "snapshot dtype mismatch"),
+            SerializeError::CountMismatch { expected, got } => {
+                write!(
+                    f,
+                    "parameter count mismatch: model expects {expected}, checkpoint holds {got}"
+                )
+            }
         }
     }
 }
@@ -143,6 +157,69 @@ pub fn load_values_subset<T: Scalar>(
         tape.set_value(v, T::read_le(chunk));
     }
     Ok(())
+}
+
+// ---- parameter checkpoints --------------------------------------------------
+
+const PARAM_MAGIC: &[u8; 8] = b"BURPARM\x01";
+
+/// Save a model's flat parameter buffer — the `n` consecutive leaves
+/// starting at `first` — as a self-describing checkpoint: an 8-byte
+/// magic, a dtype byte, a u64 scalar count, then the raw little-endian
+/// payload. Unlike the raw [`save_values_range`] format, the header lets
+/// [`load_params_range`] reject a checkpoint whose dtype or parameter
+/// count does not match the loading model. Returns bytes written.
+pub fn save_params_range<T: Scalar>(
+    tape: &Tape<T>,
+    first: Value,
+    n: usize,
+    path: &Path,
+) -> Result<usize, SerializeError> {
+    let mut out = Vec::with_capacity(17 + n * T::BYTES);
+    out.extend_from_slice(PARAM_MAGIC);
+    out.push(T::BYTES as u8);
+    out.extend_from_slice(&(n as u64).to_le_bytes());
+    for &v in tape.values_range(first, n) {
+        v.write_le(&mut out);
+    }
+    File::create(path)?.write_all(&out)?;
+    Ok(out.len())
+}
+
+/// Load a parameter checkpoint written by [`save_params_range`] into the
+/// `n` consecutive leaves starting at `first`. Rejects a bad magic or a
+/// truncated payload ([`SerializeError::Malformed`]), a dtype mismatch
+/// ([`SerializeError::DtypeMismatch`]), and a scalar count different from
+/// `n` ([`SerializeError::CountMismatch`]) — a checkpoint never loads
+/// into a model of a different size.
+pub fn load_params_range<T: Scalar>(
+    tape: &mut Tape<T>,
+    first: Value,
+    n: usize,
+    path: &Path,
+) -> Result<(), SerializeError> {
+    let mut bytes = Vec::new();
+    File::open(path)?.read_to_end(&mut bytes)?;
+    if bytes.len() < 17 {
+        return Err(SerializeError::Malformed("short param header"));
+    }
+    if &bytes[..8] != PARAM_MAGIC {
+        return Err(SerializeError::Malformed("bad param magic"));
+    }
+    if bytes[8] as usize != T::BYTES {
+        return Err(SerializeError::DtypeMismatch);
+    }
+    let got = u64::from_le_bytes(bytes[9..17].try_into().expect("8 bytes"));
+    if got != n as u64 {
+        return Err(SerializeError::CountMismatch {
+            expected: n as u64,
+            got,
+        });
+    }
+    if bytes.len() != 17 + n * T::BYTES {
+        return Err(SerializeError::Malformed("param payload length mismatch"));
+    }
+    decode_values_range(tape, first, n, &bytes[17..])
 }
 
 // ---- whole-graph snapshot ---------------------------------------------------
@@ -376,6 +453,58 @@ mod tests {
         ));
         assert!(matches!(
             restore::<f64>(&snap[..10]),
+            Err(SerializeError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn param_checkpoint_roundtrips_and_rejects_mismatches() {
+        let dir = std::env::temp_dir().join("burtorch_param_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("params.bin");
+
+        let mut t = Tape::<f64>::new();
+        let first = t.leaves(&[1.5, -2.25, 0.0, 42.0]);
+        let written = save_params_range(&t, first, 4, &path).unwrap();
+        assert_eq!(written, 17 + 4 * 8, "header + payload bytes");
+
+        // Roundtrip restores the exact bits.
+        for k in 0..4 {
+            t.set_value(Value(first.0 + k), 9.0);
+        }
+        load_params_range(&mut t, first, 4, &path).unwrap();
+        assert_eq!(t.values_range(first, 4), &[1.5, -2.25, 0.0, 42.0]);
+
+        // Count mismatch: a 3-param model must not load a 4-param file.
+        let mut t3 = Tape::<f64>::new();
+        let f3 = t3.leaves(&[0.0, 0.0, 0.0]);
+        assert!(matches!(
+            load_params_range(&mut t3, f3, 3, &path),
+            Err(SerializeError::CountMismatch { expected: 3, got: 4 })
+        ));
+
+        // Dtype mismatch: an f32 tape must not load an f64 checkpoint.
+        let mut tf = Tape::<f32>::new();
+        let ff = tf.leaves(&[0.0f32; 4]);
+        assert!(matches!(
+            load_params_range(&mut tf, ff, 4, &path),
+            Err(SerializeError::DtypeMismatch)
+        ));
+
+        // Truncated/corrupt files are rejected.
+        let bytes = std::fs::read(&path).unwrap();
+        let short = dir.join("short.bin");
+        std::fs::write(&short, &bytes[..bytes.len() - 1]).unwrap();
+        assert!(matches!(
+            load_params_range(&mut t, first, 4, &short),
+            Err(SerializeError::Malformed(_))
+        ));
+        let bad = dir.join("bad.bin");
+        let mut corrupt = bytes.clone();
+        corrupt[0] = b'X';
+        std::fs::write(&bad, &corrupt).unwrap();
+        assert!(matches!(
+            load_params_range(&mut t, first, 4, &bad),
             Err(SerializeError::Malformed(_))
         ));
     }

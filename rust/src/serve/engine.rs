@@ -1,0 +1,429 @@
+//! The batched inference engine: shape-grouped sessions fanned across
+//! worker-pool lanes, each lane replaying frozen logits programs out of
+//! its own LRU-bounded [`ProgramCache`].
+//!
+//! ## Execution model
+//!
+//! Each [`ServeEngine::step`] is one scheduler tick: admit pending
+//! sessions, group the active set by context-window length, flatten the
+//! groups (window ascending, admission order within a group) into a work
+//! list, and split that list into contiguous chunks — one per lane. Lane
+//! 0 runs on the calling thread; lanes `1..L` run on a persistent
+//! [`WorkerPool`] spawned once at engine construction. Keeping a shape
+//! group contiguous means consecutive sessions on a lane usually share a
+//! window length, so the lane replays **one** frozen program for many
+//! sessions back to back — per-token cost is a rebind plus two tight
+//! array sweeps, never graph construction.
+//!
+//! ## Why batching cannot change the tokens
+//!
+//! Every lane owns a replica tape ([`Tape::clone_prefix`] of the
+//! parameter prefix — same node ids, same values), graph recording is
+//! deterministic, and replayed sweeps are bitwise identical to eager
+//! construction (the replay contract of `tape::replay`). Sampling state
+//! lives in the [`Session`], not the lane. So each generated token is a
+//! pure function of `(parameters, session prompt, session seed,
+//! temperature)` — lane count, admission order, and batch composition
+//! drop out, and batched serving equals running every session alone
+//! through `Gpt::generate_cached` token for token
+//! (`tests/serve_determinism.rs`).
+//!
+//! ## Long-lived processes: bounded caches and compaction
+//!
+//! With `cache_cap = N`, each lane's program cache never holds more than
+//! `N` programs (LRU eviction). Evicted programs leave dead segments on
+//! the lane tape; once the dead fraction of the stacked region reaches
+//! half, the lane compacts — rewinds to the parameter base and re-records
+//! only the live programs (`Gpt::compact_gen_cache`) — so a lane tape's
+//! length stays bounded by ~2× the live program mass no matter how many
+//! distinct shapes a long-lived server sees.
+
+use crate::nn::Gpt;
+use crate::parallel::{PtrSend, WorkerPool};
+use crate::scalar::Scalar;
+use crate::tape::{ProgramCache, Recording, Tape, Value};
+
+use super::scheduler::Scheduler;
+use super::session::{Request, Session};
+
+/// Lane-cache payload: a frozen logits recording plus its rebind slots.
+type GenProgram = (Recording, crate::nn::GptGenBinds);
+
+/// Serving configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeOptions {
+    /// Worker lanes (1 = everything on the calling thread). Lanes `1..L`
+    /// run on a persistent pool spawned once per engine.
+    pub lanes: usize,
+    /// Per-lane program-cache capacity (0 = unbounded). A bounded cache
+    /// LRU-evicts and triggers tape segment compaction — required for
+    /// long-lived processes over unbounded shape sets.
+    pub cache_cap: usize,
+    /// Maximum concurrently active sessions (0 = unlimited).
+    pub max_active: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            lanes: 1,
+            cache_cap: 0,
+            max_active: 0,
+        }
+    }
+}
+
+/// Aggregate serving statistics (cache counters are summed over lanes).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServeStats {
+    /// Tokens generated.
+    pub tokens: u64,
+    /// Scheduler ticks executed.
+    pub steps: u64,
+    /// Sessions completed.
+    pub completed: u64,
+    /// Program-cache hits (sum over lanes).
+    pub cache_hits: u64,
+    /// Program-cache misses, i.e. recordings (sum over lanes).
+    pub cache_misses: u64,
+    /// LRU evictions (sum over lanes; 0 when `cache_cap = 0`).
+    pub cache_evictions: u64,
+    /// Tape compactions (sum over lanes).
+    pub compactions: u64,
+    /// Live cached programs right now (sum over lanes).
+    pub cached_programs: usize,
+    /// Peak tape length observed on any lane.
+    pub peak_tape_nodes: usize,
+}
+
+/// One serving lane: a replica tape plus its shape-keyed program cache.
+struct ServeLane<T: Scalar> {
+    tape: Tape<T>,
+    cache: ProgramCache<GenProgram>,
+    /// Reusable vocab-sized logits staging buffer — the per-token read
+    /// of the last position's logits allocates nothing in steady state.
+    zs: Vec<f64>,
+    compactions: u64,
+    peak_nodes: usize,
+}
+
+impl<T: Scalar> ServeLane<T> {
+    fn new(tape: Tape<T>, cache_cap: usize, vocab: usize) -> ServeLane<T> {
+        ServeLane {
+            tape,
+            cache: if cache_cap == 0 {
+                ProgramCache::new()
+            } else {
+                ProgramCache::bounded(cache_cap)
+            },
+            zs: Vec::with_capacity(vocab),
+            compactions: 0,
+            peak_nodes: 0,
+        }
+    }
+}
+
+/// The multi-session batched inference engine. See the module docs.
+///
+/// # Examples
+///
+/// ```
+/// use burtorch::nn::{Gpt, GptConfig};
+/// use burtorch::rng::Rng;
+/// use burtorch::serve::{Request, ServeEngine, ServeOptions};
+/// use burtorch::tape::Tape;
+///
+/// let mut tape = Tape::<f32>::new();
+/// let mut rng = Rng::new(7);
+/// let cfg = GptConfig { n_layer: 1, d_model: 8, n_head: 2, ..GptConfig::paper() };
+/// let model = Gpt::new(&mut tape, cfg, &mut rng);
+/// let mut engine = ServeEngine::new(tape, model, ServeOptions::default());
+/// engine.submit(Request { id: 1, prompt: vec![5, 6], max_new_tokens: 4, temperature: 0.8, seed: 11 });
+/// let done = engine.run_to_completion();
+/// assert_eq!(done.len(), 1);
+/// assert_eq!(done[0].output().len(), 4);
+/// assert!(engine.stats().tokens >= 4);
+/// ```
+pub struct ServeEngine<T: Scalar> {
+    model: Gpt,
+    lanes: Vec<ServeLane<T>>,
+    /// Pool driving lanes `1..L` (None for the single-lane engine).
+    pool: Option<WorkerPool>,
+    sched: Scheduler,
+    /// Reusable per-tick work list: unfinished active-session indices in
+    /// `(window, admission)` order — the flattened shape groups.
+    work: Vec<usize>,
+    /// Reusable per-tick lane chunk bounds (`n_lanes + 1` entries).
+    bounds: Vec<usize>,
+    tokens: u64,
+    steps: u64,
+    completed: u64,
+}
+
+impl<T: Scalar> ServeEngine<T> {
+    /// Build an engine over a model whose parameters live at the base of
+    /// `tape`. The tape is rewound to the parameter base (any leftover
+    /// activations or training recordings are discarded), becomes lane
+    /// 0, and is replicated once per additional lane; a persistent
+    /// [`WorkerPool`] of `lanes − 1` threads is spawned for the engine's
+    /// lifetime.
+    pub fn new(mut tape: Tape<T>, model: Gpt, opts: ServeOptions) -> ServeEngine<T> {
+        let n_lanes = opts.lanes.max(1);
+        let vocab = model.cfg.vocab;
+        tape.rewind(model.base);
+        let mut lanes = Vec::with_capacity(n_lanes);
+        for _ in 1..n_lanes {
+            lanes.push(ServeLane::new(tape.clone_prefix(model.base), opts.cache_cap, vocab));
+        }
+        lanes.insert(0, ServeLane::new(tape, opts.cache_cap, vocab));
+        let pool = (n_lanes > 1).then(|| WorkerPool::new(n_lanes - 1));
+        ServeEngine {
+            model,
+            lanes,
+            pool,
+            sched: Scheduler::new(opts.max_active),
+            work: Vec::new(),
+            bounds: Vec::new(),
+            tokens: 0,
+            steps: 0,
+            completed: 0,
+        }
+    }
+
+    /// The served model.
+    pub fn model(&self) -> &Gpt {
+        &self.model
+    }
+
+    /// Worker lanes.
+    pub fn lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Submit a generation request (admitted on the next step).
+    pub fn submit(&mut self, req: Request) {
+        self.sched.submit(Session::new(req));
+    }
+
+    /// Sessions currently queued or in flight.
+    pub fn in_flight(&self) -> usize {
+        self.sched.active_len() + self.sched.pending_len()
+    }
+
+    /// Run one scheduler tick: admit pending requests, advance every
+    /// active session by one token (shape-grouped, fanned across lanes),
+    /// and return the sessions that completed this tick.
+    pub fn step(&mut self) -> Vec<Session> {
+        self.sched.admit();
+        let block = self.model.cfg.block_size;
+        // Work list: every unfinished active session, ordered by (window
+        // length, admission index) — exactly the flattened shape groups
+        // of `Scheduler::shape_groups`. Contiguous chunking then keeps
+        // same-shape sessions on the same lane, so a lane replays one
+        // frozen program many times back to back. `work` and `bounds`
+        // are engine-owned and reused: a steady-state tick allocates
+        // nothing on the coordinator.
+        self.work.clear();
+        {
+            let sessions = self.sched.active_sessions();
+            for (i, s) in sessions.iter().enumerate() {
+                if !s.is_done() {
+                    self.work.push(i);
+                }
+            }
+            self.work.sort_unstable_by_key(|&i| (sessions[i].window(block), i));
+        }
+        let n_work = self.work.len();
+        if n_work > 0 {
+            let n_lanes = self.lanes.len().min(n_work);
+            self.bounds.clear();
+            self.bounds.extend((0..=n_lanes).map(|l| l * n_work / n_lanes));
+            let model = &self.model;
+            let work_ref: &[usize] = &self.work;
+            let bounds_ref: &[usize] = &self.bounds;
+            let sessions = self.sched.active_sessions_mut();
+            if n_lanes == 1 {
+                let lane = &mut self.lanes[0];
+                for &si in work_ref {
+                    advance_session(model, lane, &mut sessions[si]);
+                }
+            } else {
+                let pool = self.pool.as_ref().expect("multi-lane engine has a pool");
+                let lane_ptr = PtrSend(self.lanes.as_mut_ptr());
+                let sess_ptr = PtrSend(sessions.as_mut_ptr());
+                pool.run(&|l| {
+                    if l >= n_lanes {
+                        return;
+                    }
+                    // SAFETY: lane l is touched by worker l only, and the
+                    // work chunks are disjoint index sets into the active
+                    // sessions (each active session appears at most once
+                    // in `work`), so every &mut below is exclusive; both
+                    // buffers outlive the step because `run` returns only
+                    // after every worker finished.
+                    unsafe {
+                        let lane = &mut *lane_ptr.0.add(l);
+                        for &si in &work_ref[bounds_ref[l]..bounds_ref[l + 1]] {
+                            advance_session(model, lane, &mut *sess_ptr.0.add(si));
+                        }
+                    }
+                });
+            }
+            self.tokens += n_work as u64;
+        }
+        self.steps += 1;
+        let done = self.sched.drain_done();
+        self.completed += done.len() as u64;
+        done
+    }
+
+    /// Drive [`ServeEngine::step`] until every submitted session has
+    /// completed; returns the completions in completion order (admission
+    /// order within a tick).
+    pub fn run_to_completion(&mut self) -> Vec<Session> {
+        let mut done = Vec::new();
+        while !self.sched.is_idle() {
+            done.extend(self.step());
+        }
+        done
+    }
+
+    /// Aggregate statistics so far.
+    pub fn stats(&self) -> ServeStats {
+        let mut s = ServeStats {
+            tokens: self.tokens,
+            steps: self.steps,
+            completed: self.completed,
+            ..ServeStats::default()
+        };
+        for lane in &self.lanes {
+            s.cache_hits += lane.cache.hits();
+            s.cache_misses += lane.cache.misses();
+            s.cache_evictions += lane.cache.evictions();
+            s.compactions += lane.compactions;
+            s.cached_programs += lane.cache.len();
+            s.peak_tape_nodes = s.peak_tape_nodes.max(lane.peak_nodes);
+        }
+        s
+    }
+}
+
+/// Advance one session by one token on one lane: compact the lane tape
+/// if evictions have left it half dead, run the window's logits through
+/// the **same** per-token engine as `Gpt::generate_cached`
+/// ([`Gpt::cached_logits`] — hit: rebind + replay; miss: record), read
+/// the last position's logits into the lane's reusable staging buffer,
+/// and let the session sample with its own RNG stream.
+fn advance_session<T: Scalar>(model: &Gpt, lane: &mut ServeLane<T>, sess: &mut Session) {
+    let block = model.cfg.block_size;
+    maybe_compact(model, lane);
+    let logits0 = model.cached_logits(&mut lane.tape, &mut lane.cache, sess.context(block));
+    lane.peak_nodes = lane.peak_nodes.max(lane.tape.len());
+    lane.zs.clear();
+    for j in 0..model.cfg.vocab {
+        lane.zs.push(lane.tape.value(Value(logits0.0 + j as u32)).to_f64());
+    }
+    sess.push_logits(&lane.zs);
+    sess.tick();
+}
+
+/// Compact the lane when at least half of its stacked region is dead
+/// (segments of LRU-evicted programs). Keeps `tape.len()` bounded by the
+/// parameter prefix plus ~2× the live program mass, independent of how
+/// many shapes the lane has ever recorded.
+fn maybe_compact<T: Scalar>(model: &Gpt, lane: &mut ServeLane<T>) {
+    let base = model.base.node_count();
+    let stacked = lane.tape.len() - base;
+    if stacked == 0 {
+        return;
+    }
+    let live: usize = lane.cache.entries().map(|(_, (rec, _))| rec.node_count()).sum();
+    let dead = stacked - live;
+    if dead > 0 && dead * 2 >= stacked {
+        model.compact_gen_cache(&mut lane.tape, &mut lane.cache);
+        lane.compactions += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::GptConfig;
+    use crate::rng::Rng;
+
+    fn tiny() -> (Tape<f64>, Gpt) {
+        let mut tape = Tape::<f64>::new();
+        let mut rng = Rng::new(71);
+        let cfg = GptConfig {
+            n_layer: 1,
+            d_model: 8,
+            n_head: 2,
+            ..GptConfig::paper()
+        };
+        let model = Gpt::new(&mut tape, cfg, &mut rng);
+        (tape, model)
+    }
+
+    fn req(id: u64, prompt: Vec<u32>, n: usize, seed: u64) -> Request {
+        Request {
+            id,
+            prompt,
+            max_new_tokens: n,
+            temperature: 0.8,
+            seed,
+        }
+    }
+
+    #[test]
+    fn engine_completes_all_sessions_and_counts_tokens() {
+        let (tape, model) = tiny();
+        let mut eng = ServeEngine::new(tape, model, ServeOptions::default());
+        eng.submit(req(1, vec![1, 2], 5, 10));
+        eng.submit(req(2, vec![3], 3, 20));
+        eng.submit(req(3, vec![4, 5, 6], 0, 30)); // completes without compute
+        let done = eng.run_to_completion();
+        assert_eq!(done.len(), 3);
+        let mut by_id: Vec<(u64, usize)> =
+            done.iter().map(|s| (s.id(), s.output().len())).collect();
+        by_id.sort_unstable();
+        assert_eq!(by_id, vec![(1, 5), (2, 3), (3, 0)]);
+        let st = eng.stats();
+        assert_eq!(st.tokens, 8);
+        assert_eq!(st.completed, 3);
+        assert_eq!(st.cache_hits + st.cache_misses, st.tokens);
+        assert_eq!(eng.in_flight(), 0);
+    }
+
+    #[test]
+    fn concurrency_bound_staggers_admission_without_changing_outputs() {
+        let ids: Vec<(u64, Vec<u32>, usize, u64)> = vec![
+            (1, vec![1, 2], 6, 10),
+            (2, vec![3], 4, 20),
+            (3, vec![9, 8, 7], 5, 30),
+            (4, vec![2], 6, 40),
+        ];
+        let run = |max_active: usize| -> Vec<(u64, Vec<u32>)> {
+            let (tape, model) = tiny();
+            let mut eng = ServeEngine::new(
+                tape,
+                model,
+                ServeOptions {
+                    max_active,
+                    ..ServeOptions::default()
+                },
+            );
+            for (id, p, n, seed) in &ids {
+                eng.submit(req(*id, p.clone(), *n, *seed));
+            }
+            let mut done: Vec<(u64, Vec<u32>)> = eng
+                .run_to_completion()
+                .into_iter()
+                .map(|s| (s.id(), s.output().to_vec()))
+                .collect();
+            done.sort();
+            done
+        };
+        assert_eq!(run(0), run(1), "admission staggering must not change tokens");
+        assert_eq!(run(0), run(2));
+    }
+}

@@ -1,0 +1,149 @@
+//! Batched autoregressive inference serving — the production-facing
+//! front end over the replay engine.
+//!
+//! Training-side subsystems (the parallel engine, replay, the compiled
+//! backward) eliminated per-step graph construction; this module points
+//! the same machinery at the *serving* regime, where per-request overhead
+//! dominates even harder: a token-serving loop evaluates thousands of
+//! tiny forward graphs per second, exactly the small-graph latency
+//! territory of the paper's thesis. Three layers:
+//!
+//! - [`Session`] ([`session`]) — one request's complete sampling state:
+//!   prompt, generated prefix, temperature, and a private RNG stream
+//!   seeded from the request. Tokens depend only on `(parameters,
+//!   prompt, seed, temperature)`.
+//! - [`Scheduler`] ([`scheduler`]) — admission (bounded concurrency) and
+//!   **shape grouping**: active sessions bucketed by context-window
+//!   length, so one frozen logits program serves a whole group.
+//! - [`ServeEngine`] ([`engine`]) — the step loop: shape groups fanned
+//!   across persistent worker-pool lanes, each lane owning a replica
+//!   tape and an LRU-bounded `ProgramCache` of recorded logits programs,
+//!   with tape segment compaction keeping long-lived processes bounded.
+//!
+//! ## Determinism contract
+//!
+//! Batched serving is **bitwise identical** to running each session
+//! alone through `Gpt::generate_cached` — same seed ⇒ same token stream,
+//! for any lane count, any admission order, any cache capacity, and any
+//! compaction schedule (`tests/serve_determinism.rs`). The argument is
+//! compositional: replica tapes carry identical parameters at identical
+//! node ids, replayed logits are bitwise equal to eagerly built ones
+//! (the replay contract), and each session samples from its own RNG.
+//!
+//! ## CLI
+//!
+//! `burtorch serve --requests FILE --params w.bin [--lanes L]
+//! [--cache-cap N]` reads one request per line (see [`parse_requests`]
+//! for the format), boots the model from a checkpoint written by `train
+//! --params`, and reports per-session completions plus latency and
+//! throughput statistics.
+
+pub mod engine;
+pub mod scheduler;
+pub mod session;
+
+pub use engine::{ServeEngine, ServeOptions, ServeStats};
+pub use scheduler::Scheduler;
+pub use session::{Request, Session};
+
+use crate::data::CharTokenizer;
+
+/// Parse the serve request-file format: one request per line,
+///
+/// ```text
+/// seed|max_new_tokens|temperature|prompt text
+/// ```
+///
+/// Blank lines and lines starting with `#` are skipped; the prompt is
+/// everything after the third `|` (verbatim, so it may itself contain
+/// `|`) and is encoded with the given character tokenizer. Returns a
+/// descriptive error for malformed lines or out-of-vocabulary prompt
+/// characters. Request ids are assigned sequentially from 0.
+///
+/// # Examples
+///
+/// ```
+/// use burtorch::data::CharTokenizer;
+/// use burtorch::serve::parse_requests;
+///
+/// let tok = CharTokenizer::from_text("abc ", 0);
+/// let reqs = parse_requests("# a comment\n7|12|0.8|abc a\n\n9|4|1.0|b c\n", &tok).unwrap();
+/// assert_eq!(reqs.len(), 2);
+/// assert_eq!(reqs[0].seed, 7);
+/// assert_eq!(reqs[0].max_new_tokens, 12);
+/// assert_eq!(reqs[0].prompt.len(), 5);
+/// assert_eq!(reqs[1].id, 1);
+/// assert!(parse_requests("1|2|0.5|zzz", &tok).is_err()); // OOV prompt
+/// ```
+pub fn parse_requests(text: &str, tok: &CharTokenizer) -> Result<Vec<Request>, String> {
+    let mut out = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim_end_matches('\r');
+        if line.trim().is_empty() || line.trim_start().starts_with('#') {
+            continue;
+        }
+        let mut parts = line.splitn(4, '|');
+        let err = |what: &str| format!("request line {}: {what}: '{line}'", lineno + 1);
+        let seed: u64 = parts
+            .next()
+            .ok_or_else(|| err("missing seed"))?
+            .trim()
+            .parse()
+            .map_err(|_| err("bad seed (expected u64)"))?;
+        let max_new_tokens: usize = parts
+            .next()
+            .ok_or_else(|| err("missing token count"))?
+            .trim()
+            .parse()
+            .map_err(|_| err("bad token count (expected usize)"))?;
+        let temperature: f64 = parts
+            .next()
+            .ok_or_else(|| err("missing temperature"))?
+            .trim()
+            .parse()
+            .map_err(|_| err("bad temperature (expected f64)"))?;
+        let prompt_text = parts.next().ok_or_else(|| err("missing prompt"))?;
+        if prompt_text.is_empty() {
+            return Err(err("empty prompt"));
+        }
+        let mut prompt = Vec::with_capacity(prompt_text.len());
+        for c in prompt_text.chars() {
+            if !tok.contains(c) {
+                return Err(err(&format!("prompt char {c:?} not in vocabulary")));
+            }
+            prompt.push(tok.encode_char(c));
+        }
+        out.push(Request {
+            id: out.len() as u64,
+            prompt,
+            max_new_tokens,
+            temperature,
+            seed,
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_requests_reports_malformed_lines_with_line_numbers() {
+        let tok = CharTokenizer::from_text("ab", 0);
+        assert!(parse_requests("", &tok).unwrap().is_empty());
+        let e = parse_requests("1|2|0.5", &tok).unwrap_err();
+        assert!(e.contains("line 1") && e.contains("missing prompt"), "{e}");
+        let e = parse_requests("# ok\nx|2|0.5|ab", &tok).unwrap_err();
+        assert!(e.contains("line 2") && e.contains("bad seed"), "{e}");
+        let e = parse_requests("1|2|hot|ab", &tok).unwrap_err();
+        assert!(e.contains("bad temperature"), "{e}");
+    }
+
+    #[test]
+    fn prompts_may_contain_the_separator() {
+        let tok = CharTokenizer::from_text("ab|", 0);
+        let reqs = parse_requests("3|2|1.0|a|b", &tok).unwrap();
+        assert_eq!(reqs[0].prompt.len(), 3, "prompt keeps its own '|'");
+    }
+}

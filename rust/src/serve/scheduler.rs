@@ -1,0 +1,188 @@
+//! Admission and shape-grouping of concurrent generation sessions.
+//!
+//! Every scheduler tick advances each active session by exactly one
+//! token. Because a replayed logits program is keyed by window length
+//! (see `Gpt::generate_cached`), the scheduler's job is to present the
+//! active set as **shape groups** — all sessions currently at the same
+//! window length, in admission order — so a lane replays one frozen
+//! program for the whole group instead of juggling shapes per session.
+//!
+//! Scheduling decisions (admission order, grouping, lane assignment) can
+//! never change the generated tokens: sessions own their sampling state
+//! (see [`Session`]). The scheduler therefore only shapes *throughput*.
+
+use std::collections::VecDeque;
+
+use super::session::Session;
+
+/// Admits sessions and groups the active set by context-window length.
+pub struct Scheduler {
+    /// Submitted but not yet admitted.
+    queue: VecDeque<Session>,
+    /// In-flight sessions, in admission order.
+    active: Vec<Session>,
+    /// Maximum concurrently active sessions (0 = unlimited).
+    max_active: usize,
+}
+
+impl Scheduler {
+    /// New scheduler admitting at most `max_active` concurrent sessions
+    /// (0 = no limit).
+    pub fn new(max_active: usize) -> Scheduler {
+        Scheduler {
+            queue: VecDeque::new(),
+            active: Vec::new(),
+            max_active,
+        }
+    }
+
+    /// Enqueue a session for admission.
+    pub fn submit(&mut self, session: Session) {
+        self.queue.push_back(session);
+    }
+
+    /// Admit queued sessions up to the concurrency bound, in submission
+    /// order.
+    pub fn admit(&mut self) {
+        while !self.queue.is_empty()
+            && (self.max_active == 0 || self.active.len() < self.max_active)
+        {
+            self.active.push(self.queue.pop_front().expect("nonempty queue"));
+        }
+    }
+
+    /// Sessions currently in flight.
+    pub fn active_len(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Sessions waiting for admission.
+    pub fn pending_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Nothing queued and nothing in flight.
+    pub fn is_idle(&self) -> bool {
+        self.queue.is_empty() && self.active.is_empty()
+    }
+
+    /// The active sessions, in admission order.
+    pub fn active_sessions(&self) -> &[Session] {
+        &self.active
+    }
+
+    /// Mutable view of the active sessions (indexed by the positions
+    /// returned from [`Scheduler::shape_groups`]).
+    pub fn active_sessions_mut(&mut self) -> &mut [Session] {
+        &mut self.active
+    }
+
+    /// Group the unfinished active sessions by current window length:
+    /// returns `(window, active-indices)` pairs sorted by window length
+    /// ascending, indices in admission order within each group. Finished
+    /// sessions are excluded (they are drained by
+    /// [`Scheduler::drain_done`]).
+    ///
+    /// This is the observability/API form of the grouping; the serving
+    /// engine's hot loop derives the identical `(window, admission)`
+    /// ordering into a reusable flat work list instead of allocating
+    /// nested groups per tick.
+    pub fn shape_groups(&self, block_size: usize) -> Vec<(usize, Vec<usize>)> {
+        let mut groups: Vec<(usize, Vec<usize>)> = Vec::new();
+        for (i, s) in self.active.iter().enumerate() {
+            if s.is_done() {
+                continue;
+            }
+            let w = s.window(block_size);
+            match groups.iter_mut().find(|(gw, _)| *gw == w) {
+                Some((_, idxs)) => idxs.push(i),
+                None => groups.push((w, vec![i])),
+            }
+        }
+        groups.sort_by_key(|(w, _)| *w);
+        groups
+    }
+
+    /// Remove and return every finished active session, preserving the
+    /// admission order of both the finished and the surviving sessions.
+    /// One stable O(active) partition pass; allocation-free (and
+    /// move-free) when nothing finished — the common tick.
+    pub fn drain_done(&mut self) -> Vec<Session> {
+        if !self.active.iter().any(|s| s.is_done()) {
+            return Vec::new();
+        }
+        let mut done = Vec::new();
+        for s in std::mem::take(&mut self.active) {
+            if s.is_done() {
+                done.push(s);
+            } else {
+                self.active.push(s);
+            }
+        }
+        done
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::session::Request;
+
+    fn sess(id: u64, prompt_len: usize, n: usize) -> Session {
+        Session::new(Request {
+            id,
+            prompt: (0..prompt_len as u32).collect(),
+            max_new_tokens: n,
+            temperature: 1.0,
+            seed: id,
+        })
+    }
+
+    #[test]
+    fn admission_respects_the_concurrency_bound() {
+        let mut s = Scheduler::new(2);
+        for id in 0..5 {
+            s.submit(sess(id, 3, 1));
+        }
+        s.admit();
+        assert_eq!((s.active_len(), s.pending_len()), (2, 3));
+        // Draining a finished session frees a slot for the next admit.
+        let logits = vec![0.0; 4];
+        s.active_sessions_mut()[0].push_logits(&logits);
+        let done = s.drain_done();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].id(), 0);
+        s.admit();
+        assert_eq!((s.active_len(), s.pending_len()), (2, 2));
+        // Admission order is preserved: survivor 1, then newcomer 2.
+        let ids: Vec<u64> = s.active_sessions_mut().iter().map(|x| x.id()).collect();
+        assert_eq!(ids, vec![1, 2]);
+    }
+
+    #[test]
+    fn shape_groups_sort_by_window_and_keep_admission_order() {
+        let mut s = Scheduler::new(0);
+        s.submit(sess(0, 5, 1)); // window 5
+        s.submit(sess(1, 2, 1)); // window 2
+        s.submit(sess(2, 5, 1)); // window 5
+        s.submit(sess(3, 12, 1)); // clipped to block 8
+        s.submit(sess(4, 2, 0)); // already done: excluded
+        s.admit();
+        let groups = s.shape_groups(8);
+        assert_eq!(
+            groups,
+            vec![(2, vec![1]), (5, vec![0, 2]), (8, vec![3])],
+        );
+    }
+
+    #[test]
+    fn unlimited_scheduler_admits_everything() {
+        let mut s = Scheduler::new(0);
+        for id in 0..7 {
+            s.submit(sess(id, 1, 1));
+        }
+        s.admit();
+        assert_eq!(s.active_len(), 7);
+        assert!(!s.is_idle());
+    }
+}

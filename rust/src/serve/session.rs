@@ -1,0 +1,207 @@
+//! Per-request generation state: a [`Request`] describes what a client
+//! wants, a [`Session`] carries everything needed to advance that request
+//! one token at a time.
+//!
+//! The crucial property is **scheduling independence**: a session owns
+//! its entire sampling state — the token prefix it has built and a
+//! private RNG stream seeded from the request — so the tokens it produces
+//! depend only on `(model parameters, prompt, seed, temperature)` and
+//! never on which lane computed its logits, how many other sessions ran
+//! in the same batch, or in what order requests were admitted. That is
+//! what makes batched serving bitwise identical to running each session
+//! alone through `Gpt::generate_cached`.
+
+use crate::nn::sample_token;
+use crate::rng::Rng;
+
+/// A generation request submitted to the serving engine.
+#[derive(Clone, Debug)]
+pub struct Request {
+    /// Caller-chosen identifier, echoed on the completed session.
+    pub id: u64,
+    /// Prompt token ids (must be non-empty; tokens beyond the model's
+    /// block size simply fall out of the context window).
+    pub prompt: Vec<u32>,
+    /// How many tokens to generate.
+    pub max_new_tokens: usize,
+    /// Softmax temperature (clamped below at 1e-6 by the sampler).
+    pub temperature: f64,
+    /// Seed of the session's private sampling RNG.
+    pub seed: u64,
+}
+
+/// One in-flight autoregressive generation session: the request's prompt
+/// plus everything generated so far, and the private RNG that samples
+/// each next token. Advanced exclusively through
+/// [`Session::push_logits`], so the eager, cached, and batched serving
+/// paths all draw tokens through the one shared [`sample_token`] routine.
+///
+/// # Examples
+///
+/// ```
+/// use burtorch::serve::{Request, Session};
+///
+/// let mut s = Session::new(Request {
+///     id: 7,
+///     prompt: vec![1, 2, 3],
+///     max_new_tokens: 2,
+///     temperature: 1.0,
+///     seed: 42,
+/// });
+/// assert_eq!(s.window(8), 3);          // whole prompt fits the block
+/// assert!(!s.is_done());
+/// s.push_logits(&[0.0, 1.0, 0.0]);     // one sampled token appended
+/// s.push_logits(&[0.5, 0.5, 0.5]);
+/// assert!(s.is_done());
+/// assert_eq!(s.output().len(), 2);
+/// assert_eq!(s.tokens().len(), 5);     // prompt + generated
+/// ```
+#[derive(Clone, Debug)]
+pub struct Session {
+    id: u64,
+    prompt_len: usize,
+    tokens: Vec<u32>,
+    max_new_tokens: usize,
+    temperature: f64,
+    rng: Rng,
+    /// Scheduler ticks this session has been live for (latency proxy:
+    /// one tick = one token for every active session).
+    ticks: u64,
+}
+
+impl Session {
+    /// Start a session for `req`. Panics on an empty prompt — there is
+    /// nothing to condition the first token on.
+    pub fn new(req: Request) -> Session {
+        assert!(!req.prompt.is_empty(), "request {} has an empty prompt", req.id);
+        Session {
+            id: req.id,
+            prompt_len: req.prompt.len(),
+            tokens: req.prompt,
+            max_new_tokens: req.max_new_tokens,
+            temperature: req.temperature,
+            rng: Rng::new(req.seed),
+            ticks: 0,
+        }
+    }
+
+    /// The request's identifier.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Prompt plus everything generated so far.
+    pub fn tokens(&self) -> &[u32] {
+        &self.tokens
+    }
+
+    /// The generated completion (excludes the prompt).
+    pub fn output(&self) -> &[u32] {
+        &self.tokens[self.prompt_len..]
+    }
+
+    /// Number of tokens generated so far.
+    pub fn generated(&self) -> usize {
+        self.tokens.len() - self.prompt_len
+    }
+
+    /// Has the session produced all requested tokens?
+    pub fn is_done(&self) -> bool {
+        self.generated() >= self.max_new_tokens
+    }
+
+    /// Scheduler ticks this session was live for (a latency proxy).
+    pub fn ticks(&self) -> u64 {
+        self.ticks
+    }
+
+    /// Current context-window length under a model block size — the shape
+    /// key the scheduler groups sessions by.
+    pub fn window(&self, block_size: usize) -> usize {
+        self.tokens.len().min(block_size)
+    }
+
+    /// The current context window (the last `window` tokens).
+    pub fn context(&self, block_size: usize) -> &[u32] {
+        &self.tokens[self.tokens.len() - self.window(block_size)..]
+    }
+
+    /// Count one scheduler tick against this session.
+    pub(crate) fn tick(&mut self) {
+        self.ticks += 1;
+    }
+
+    /// Sample the next token from raw last-position logits with this
+    /// session's own temperature and RNG stream, append it, and return
+    /// it. The single advancement point of every serving path.
+    pub fn push_logits(&mut self, logits: &[f64]) -> u32 {
+        debug_assert!(!self.is_done(), "advancing a finished session");
+        let tok = sample_token(logits, self.temperature, &mut self.rng);
+        self.tokens.push(tok);
+        tok
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(prompt: Vec<u32>, n: usize, seed: u64) -> Request {
+        Request {
+            id: 1,
+            prompt,
+            max_new_tokens: n,
+            temperature: 0.8,
+            seed,
+        }
+    }
+
+    #[test]
+    fn window_clips_to_block_size() {
+        let s = Session::new(req((0..12).collect(), 4, 9));
+        assert_eq!(s.window(8), 8);
+        assert_eq!(s.context(8), &[4, 5, 6, 7, 8, 9, 10, 11]);
+        let short = Session::new(req(vec![3, 1], 4, 9));
+        assert_eq!(short.window(8), 2);
+        assert_eq!(short.context(8), &[3, 1]);
+    }
+
+    #[test]
+    fn sampling_is_deterministic_per_seed_and_independent_of_other_sessions() {
+        let logits: Vec<f64> = (0..16).map(|i| (i as f64 * 0.37).sin()).collect();
+        let run = |seed: u64| -> Vec<u32> {
+            let mut s = Session::new(req(vec![1], 6, seed));
+            while !s.is_done() {
+                s.push_logits(&logits);
+            }
+            s.output().to_vec()
+        };
+        assert_eq!(run(11), run(11), "same seed must replay the same stream");
+        // Interleaving two sessions draws from disjoint RNG streams.
+        let mut a = Session::new(req(vec![1], 6, 11));
+        let mut b = Session::new(req(vec![2], 6, 77));
+        while !a.is_done() || !b.is_done() {
+            if !b.is_done() {
+                b.push_logits(&logits);
+            }
+            if !a.is_done() {
+                a.push_logits(&logits);
+            }
+        }
+        assert_eq!(a.output(), run(11).as_slice());
+        assert_eq!(b.output(), run(77).as_slice());
+    }
+
+    #[test]
+    fn zero_token_requests_complete_immediately() {
+        let s = Session::new(req(vec![5], 0, 3));
+        assert!(s.is_done());
+        assert!(s.output().is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "empty prompt")]
+    fn empty_prompt_is_rejected() {
+        Session::new(req(vec![], 4, 0));
+    }
+}

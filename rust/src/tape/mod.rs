@@ -18,6 +18,13 @@
 //!   activation memory `max_i MEM(∇f_i)` instead of `Σ_i` (contribution 4).
 //! - **Pre-allocated buffers.** `with_capacity` + rewinding means the
 //!   steady-state training loop performs zero heap allocation (MISRA 4.12).
+//! - **Bounded program caches.** The shape-keyed [`ProgramCache`] of
+//!   stacked replay programs takes an optional LRU capacity bound
+//!   ([`ProgramCache::bounded`]) for long-lived processes over unbounded
+//!   shape sets; dead segments left by eviction are reclaimed by
+//!   rewinding to the parameter base and re-recording the live shapes
+//!   through [`ProgramCache::rebuild_in_place`] (see
+//!   `nn::Gpt::compact_gen_cache` and the `serve` module).
 
 mod backward;
 mod builder;

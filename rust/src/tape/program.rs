@@ -351,6 +351,26 @@ impl StepProgram {
 /// `(Recording, binds)` pair) and full training programs
 /// (`(StepProgram, binds)`) share one cache type.
 ///
+/// ## Bounded (LRU) caches and segment compaction
+///
+/// By default the cache is unbounded: every distinct shape stays cached
+/// forever — fine when the key space is small (GPT window lengths are
+/// `≤ block_size`). A long-lived server handling arbitrary shapes wants
+/// [`ProgramCache::bounded`] instead: inserts beyond the capacity evict
+/// the least-recently-used shape first (recency is bumped by
+/// [`ProgramCache::lookup`] / [`ProgramCache::get_or_insert_with`] hits
+/// and by inserts), so the cache never holds more than `cap` programs.
+///
+/// Eviction alone does not shrink the *tape*: an evicted program's
+/// recorded segment stays buried in the stacked region as garbage. The
+/// owner of the tape reclaims it by **compaction** — rewind to the
+/// parameter base and re-record only the live shapes via
+/// [`ProgramCache::rebuild_in_place`] (see `Gpt::compact_gen_cache`),
+/// which rebuilds the stacked tape with every surviving program's base
+/// remapped to its new position. [`ProgramCache::entries`] exposes the
+/// live payloads so callers can measure the dead fraction and decide
+/// when to compact.
+///
 /// # Examples
 ///
 /// ```
@@ -362,12 +382,34 @@ impl StepProgram {
 /// cache.get_or_insert_with(8, || unreachable!("hit never records"));
 /// assert_eq!((cache.misses(), cache.hits()), (1, 1));
 /// ```
+///
+/// An LRU-bounded cache never exceeds its capacity:
+///
+/// ```
+/// use burtorch::tape::ProgramCache;
+///
+/// let mut cache: ProgramCache<u32> = ProgramCache::bounded(2);
+/// cache.insert(3, 30);
+/// cache.insert(5, 50);
+/// assert!(cache.lookup(3).is_some()); // 3 is now most recently used
+/// cache.insert(8, 80);                // evicts 5, the LRU shape
+/// assert_eq!(cache.len(), 2);
+/// assert!(cache.contains(3) && cache.contains(8) && !cache.contains(5));
+/// assert_eq!(cache.evictions(), 1);
+/// ```
 #[derive(Debug)]
 pub struct ProgramCache<P> {
     keys: Vec<u64>,
     entries: Vec<P>,
+    /// Last-touched clock value per entry (parallel to `keys`).
+    stamps: Vec<u64>,
+    /// Monotone recency clock, bumped by every touch.
+    clock: u64,
+    /// Maximum live entries (`None` = unbounded).
+    cap: Option<usize>,
     hits: u64,
     misses: u64,
+    evictions: u64,
 }
 
 // Manual impl: a derive would needlessly bound `P: Default`.
@@ -378,14 +420,34 @@ impl<P> Default for ProgramCache<P> {
 }
 
 impl<P> ProgramCache<P> {
-    /// Empty cache.
+    /// Empty unbounded cache.
     pub fn new() -> ProgramCache<P> {
         ProgramCache {
             keys: Vec::new(),
             entries: Vec::new(),
+            stamps: Vec::new(),
+            clock: 0,
+            cap: None,
             hits: 0,
             misses: 0,
+            evictions: 0,
         }
+    }
+
+    /// Empty cache holding at most `cap` programs: an insert beyond the
+    /// bound evicts the least-recently-used shape first. `cap` must be at
+    /// least 1.
+    pub fn bounded(cap: usize) -> ProgramCache<P> {
+        assert!(cap >= 1, "cache capacity must be at least 1");
+        ProgramCache {
+            cap: Some(cap),
+            ..ProgramCache::new()
+        }
+    }
+
+    /// The capacity bound (`None` = unbounded).
+    pub fn capacity_bound(&self) -> Option<usize> {
+        self.cap
     }
 
     /// Number of cached shapes.
@@ -408,6 +470,48 @@ impl<P> ProgramCache<P> {
         self.misses
     }
 
+    /// Entries evicted by the LRU bound (0 for an unbounded cache).
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    /// Iterate over the live `(key, payload)` pairs in storage order —
+    /// the observability hook for compaction policies (e.g. summing
+    /// `Recording::node_count` of the live programs to compute the dead
+    /// fraction of the stacked tape region).
+    pub fn entries(&self) -> impl Iterator<Item = (u64, &P)> + '_ {
+        self.keys.iter().copied().zip(self.entries.iter())
+    }
+
+    /// Rebuild every live payload in place (storage order, which is
+    /// deterministic): the compaction workhorse. The caller rewinds the
+    /// tape to the parameter base first, then `rebuild(key, entry)`
+    /// re-records shape `key`'s segment at the new tape top and
+    /// overwrites `entry` — remapping the program's base without touching
+    /// keys, recency stamps, or the hit/miss/eviction counters.
+    pub fn rebuild_in_place<F: FnMut(u64, &mut P)>(&mut self, mut rebuild: F) {
+        for (k, e) in self.keys.iter().zip(self.entries.iter_mut()) {
+            rebuild(*k, e);
+        }
+    }
+
+    /// Drop the least-recently-used entry.
+    fn evict_lru(&mut self) {
+        debug_assert!(!self.keys.is_empty());
+        let mut pos = 0usize;
+        for (i, &s) in self.stamps.iter().enumerate() {
+            if s < self.stamps[pos] {
+                pos = i;
+            }
+        }
+        // swap_remove keeps the three parallel vectors aligned and is
+        // O(1); storage order changes, recency order does not.
+        self.keys.swap_remove(pos);
+        self.entries.swap_remove(pos);
+        self.stamps.swap_remove(pos);
+        self.evictions += 1;
+    }
+
     /// Does the cache hold an entry for `key`? (Does not count as a hit.)
     pub fn contains(&self, key: u64) -> bool {
         self.keys.contains(&key)
@@ -427,6 +531,8 @@ impl<P> ProgramCache<P> {
         match self.keys.iter().position(|&k| k == key) {
             Some(pos) => {
                 self.hits += 1;
+                self.clock += 1;
+                self.stamps[pos] = self.clock;
                 Some(&mut self.entries[pos])
             }
             None => None,
@@ -434,12 +540,20 @@ impl<P> ProgramCache<P> {
     }
 
     /// Record a new shape, counting a miss. The key must not be cached
-    /// yet (pair with [`ProgramCache::lookup`]).
+    /// yet (pair with [`ProgramCache::lookup`]). On a bounded cache at
+    /// capacity, the least-recently-used shape is evicted first.
     pub fn insert(&mut self, key: u64, entry: P) -> &mut P {
         debug_assert!(!self.keys.contains(&key), "shape {key} recorded twice");
+        if let Some(cap) = self.cap {
+            while self.keys.len() >= cap {
+                self.evict_lru();
+            }
+        }
         self.misses += 1;
+        self.clock += 1;
         self.keys.push(key);
         self.entries.push(entry);
+        self.stamps.push(self.clock);
         self.entries.last_mut().expect("just pushed")
     }
 
@@ -449,6 +563,8 @@ impl<P> ProgramCache<P> {
         match self.keys.iter().position(|&k| k == key) {
             Some(pos) => {
                 self.hits += 1;
+                self.clock += 1;
+                self.stamps[pos] = self.clock;
                 &mut self.entries[pos]
             }
             None => self.insert(key, record()),
@@ -614,5 +730,53 @@ mod tests {
         assert_eq!(*cache.insert(9, 90), 90);
         assert_eq!(*cache.lookup(9).expect("just inserted"), 90);
         assert_eq!((cache.misses(), cache.hits()), (4, 5));
+    }
+
+    #[test]
+    fn bounded_cache_evicts_least_recently_used_and_keeps_counters() {
+        let mut cache: ProgramCache<u32> = ProgramCache::bounded(2);
+        assert_eq!(cache.capacity_bound(), Some(2));
+        cache.insert(1, 10);
+        cache.insert(2, 20);
+        assert_eq!(cache.lookup(1), Some(&mut 10)); // 1 becomes MRU
+        cache.insert(3, 30); // evicts 2 (LRU)
+        assert_eq!(cache.len(), 2);
+        assert!(cache.contains(1) && cache.contains(3) && !cache.contains(2));
+        assert_eq!(cache.evictions(), 1);
+        // A re-miss on the evicted shape counts as a miss and evicts the
+        // current LRU (1 was touched before 3 was inserted, so 1 goes).
+        assert_eq!(cache.lookup(2), None);
+        cache.insert(2, 21);
+        assert!(!cache.contains(1) && cache.contains(2) && cache.contains(3));
+        assert_eq!((cache.misses(), cache.hits(), cache.evictions()), (4, 1, 2));
+        // The bound holds over an arbitrary shape churn.
+        for k in 10..40u64 {
+            cache.get_or_insert_with(k, || k as u32);
+            assert!(cache.len() <= 2);
+        }
+        assert_eq!(cache.evictions(), 2 + 30);
+    }
+
+    #[test]
+    fn rebuild_in_place_preserves_keys_recency_and_counters() {
+        let mut cache: ProgramCache<u32> = ProgramCache::bounded(3);
+        for k in [4u64, 7, 9] {
+            cache.insert(k, k as u32);
+        }
+        assert!(cache.lookup(4).is_some()); // 4 is MRU; 7 is LRU
+        let (h, m, e) = (cache.hits(), cache.misses(), cache.evictions());
+        let mut seen = Vec::new();
+        cache.rebuild_in_place(|k, v| {
+            seen.push(k);
+            *v = k as u32 * 100;
+        });
+        assert_eq!(seen.len(), 3);
+        assert_eq!((cache.hits(), cache.misses(), cache.evictions()), (h, m, e));
+        assert_eq!(*cache.lookup(9).expect("kept"), 900);
+        // Recency survived the rebuild: inserting one more evicts 7.
+        cache.insert(11, 1);
+        assert!(!cache.contains(7) && cache.contains(4) && cache.contains(9));
+        let live: Vec<u64> = cache.entries().map(|(k, _)| k).collect();
+        assert_eq!(live.len(), 3);
     }
 }

@@ -1,0 +1,265 @@
+//! The serving subsystem's three contracts (ISSUE 5 acceptance criteria):
+//!
+//! 1. **Batched ≡ sequential.** Batched serving is bitwise identical to
+//!    running each session alone through `Gpt::generate_cached` — same
+//!    seed ⇒ same token stream — for lane counts {1, 2, 4}, mixed prompt
+//!    lengths, and any request admission order.
+//! 2. **Bounded caches stay bounded.** With `cache_cap = N` a lane never
+//!    holds more than N programs, LRU eviction churns under > N distinct
+//!    window lengths, segment compaction keeps the tape length bounded —
+//!    and none of it changes a single token.
+//! 3. **Checkpoint round-trip.** `train --params` followed by serving
+//!    from the checkpoint produces the same tokens as in-process
+//!    generation from the trained model.
+
+use std::collections::BTreeMap;
+
+use burtorch::coordinator::{Trainer, TrainerOptions};
+use burtorch::data::CharCorpus;
+use burtorch::nn::{CharMlp, CharMlpConfig, Gpt, GptConfig};
+use burtorch::rng::Rng;
+use burtorch::serve::{Request, ServeEngine, ServeOptions};
+use burtorch::tape::{ProgramCache, Tape};
+
+fn tiny_cfg() -> GptConfig {
+    GptConfig {
+        n_layer: 1,
+        d_model: 8,
+        n_head: 2,
+        ..GptConfig::paper()
+    }
+}
+
+/// Deterministic model construction: the same seed yields bitwise-equal
+/// parameters on every call, so reference and serving tapes agree.
+fn tiny_gpt(seed: u64) -> (Tape<f32>, Gpt) {
+    let mut tape = Tape::<f32>::new();
+    let mut rng = Rng::new(seed);
+    let model = Gpt::new(&mut tape, tiny_cfg(), &mut rng);
+    (tape, model)
+}
+
+/// (id, prompt, max_new_tokens, temperature, seed) — mixed prompt
+/// lengths, including one longer than the block size.
+fn mixed_requests() -> Vec<(u64, Vec<u32>, usize, f64, u64)> {
+    vec![
+        (1, vec![1, 2, 3], 10, 0.8, 101),
+        (2, vec![7], 12, 1.0, 202),
+        (3, vec![4, 5, 6, 7, 8, 9, 10, 11, 12], 8, 0.6, 303),
+        (4, vec![2, 3], 10, 0.9, 404),
+        (5, vec![1, 1, 1, 1, 1], 6, 1.2, 505),
+        (6, vec![60, 2], 9, 0.7, 606),
+    ]
+}
+
+/// Run each request alone through `generate_cached` (fresh cache per
+/// request, tape rewound between requests) — the sequential reference.
+fn sequential_reference(
+    requests: &[(u64, Vec<u32>, usize, f64, u64)],
+) -> BTreeMap<u64, Vec<u32>> {
+    let (mut tape, model) = tiny_gpt(2024);
+    let mut expected = BTreeMap::new();
+    for (id, prompt, n, temp, seed) in requests {
+        let mut cache = ProgramCache::new();
+        let mut rng = Rng::new(*seed);
+        let out = model.generate_cached(&mut tape, prompt, *n, *temp, &mut rng, &mut cache);
+        expected.insert(*id, out);
+        tape.rewind(model.base);
+    }
+    expected
+}
+
+fn serve_all(
+    requests: &[(u64, Vec<u32>, usize, f64, u64)],
+    opts: ServeOptions,
+) -> (BTreeMap<u64, Vec<u32>>, burtorch::serve::ServeStats) {
+    let (tape, model) = tiny_gpt(2024);
+    let mut engine = ServeEngine::new(tape, model, opts);
+    for (id, prompt, n, temp, seed) in requests {
+        engine.submit(Request {
+            id: *id,
+            prompt: prompt.clone(),
+            max_new_tokens: *n,
+            temperature: *temp,
+            seed: *seed,
+        });
+    }
+    let done = engine.run_to_completion();
+    let outputs = done.into_iter().map(|s| (s.id(), s.output().to_vec())).collect();
+    (outputs, engine.stats())
+}
+
+#[test]
+fn batched_serving_matches_sequential_generation_across_lane_counts() {
+    let requests = mixed_requests();
+    let expected = sequential_reference(&requests);
+    for lanes in [1usize, 2, 4] {
+        let (outputs, stats) = serve_all(
+            &requests,
+            ServeOptions {
+                lanes,
+                ..ServeOptions::default()
+            },
+        );
+        assert_eq!(outputs, expected, "lanes={lanes} diverged from sequential");
+        assert_eq!(stats.completed, requests.len() as u64);
+        let tokens: usize = requests.iter().map(|(_, _, n, _, _)| n).sum();
+        assert_eq!(stats.tokens, tokens as u64);
+        // Every token is exactly one cache lookup-or-record.
+        assert_eq!(stats.cache_hits + stats.cache_misses, stats.tokens);
+        assert_eq!(stats.cache_evictions, 0, "unbounded caches never evict");
+    }
+}
+
+#[test]
+fn admission_order_and_concurrency_bound_never_change_tokens() {
+    let requests = mixed_requests();
+    let expected = sequential_reference(&requests);
+    let mut reversed = requests.clone();
+    reversed.reverse();
+    for (reqs, max_active) in [(&reversed, 0usize), (&requests, 2), (&reversed, 3)] {
+        let (outputs, _) = serve_all(
+            reqs,
+            ServeOptions {
+                lanes: 2,
+                max_active,
+                ..ServeOptions::default()
+            },
+        );
+        assert_eq!(
+            outputs, expected,
+            "admission order / max_active={max_active} changed tokens"
+        );
+    }
+}
+
+#[test]
+fn lru_bounded_cache_with_compaction_stays_bounded_and_bitwise_identical() {
+    // A churny workload: staggered admission (max_active = 2) re-walks
+    // the growing window lengths session after session, so a capacity-2
+    // cache evicts continuously while the block holds up to 8 shapes.
+    let requests: Vec<(u64, Vec<u32>, usize, f64, u64)> = (0..24)
+        .map(|i| {
+            let plen = 1 + (i as usize % 5);
+            (
+                100 + i,
+                (0..plen as u32).map(|k| 1 + k * 3).collect(),
+                12,
+                0.9,
+                1_000 + i * 17,
+            )
+        })
+        .collect();
+    let expected = sequential_reference(&requests);
+
+    let cap = 2usize;
+    let (outputs, stats) = serve_all(
+        &requests,
+        ServeOptions {
+            lanes: 1,
+            cache_cap: cap,
+            max_active: 2,
+        },
+    );
+    assert_eq!(outputs, expected, "eviction/compaction changed tokens");
+
+    // The bound held: never more than `cap` live programs, with real
+    // eviction and compaction churn, and consistent counters.
+    assert!(stats.cached_programs <= cap, "cap violated: {stats:?}");
+    assert!(stats.cache_evictions > 20, "workload must churn: {stats:?}");
+    assert!(stats.compactions > 0, "compaction never ran: {stats:?}");
+    assert_eq!(stats.cache_hits + stats.cache_misses, stats.tokens);
+
+    // Tape length stayed bounded: the compaction policy caps the stacked
+    // region at (2·cap + 1) max-size segments — the acceptance bound for
+    // a long-lived process.
+    let (mut scratch, probe) = tiny_gpt(2024);
+    let base = probe.base.node_count();
+    let (rec_max, _) = probe.record_logits(&mut scratch, &[0u32; 8]);
+    let seg_max = rec_max.node_count();
+    scratch.rewind(probe.base);
+    let (rec_min, _) = probe.record_logits(&mut scratch, &[0u32]);
+    let seg_min = rec_min.node_count();
+    let bound = base + (2 * cap + 1) * seg_max;
+    assert!(
+        stats.peak_tape_nodes <= bound,
+        "tape grew past the compaction bound: peak {} > {bound}",
+        stats.peak_tape_nodes
+    );
+    // And the bound was load-bearing: an append-forever tape (LRU without
+    // compaction records one segment per miss and reclaims nothing) would
+    // have exceeded the observed peak by construction.
+    assert!(
+        stats.cache_misses as usize * seg_min > stats.peak_tape_nodes - base,
+        "workload too small to distinguish bounded from unbounded growth \
+         (misses {} × seg_min {seg_min} vs stacked peak {})",
+        stats.cache_misses,
+        stats.peak_tape_nodes - base
+    );
+}
+
+#[test]
+fn checkpoint_roundtrip_serving_matches_in_process_generation() {
+    let dir = std::env::temp_dir().join("burtorch_serve_ckpt_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("gpt_trained.bin");
+
+    // Train a tiny GPT in process, checkpoint it.
+    let corpus = CharCorpus::shakespeare(2_000, 8);
+    let mut tape = Tape::<f32>::new();
+    let mut rng = Rng::new(7);
+    let model = Gpt::new(&mut tape, tiny_cfg(), &mut rng);
+    let trainer = Trainer::new(TrainerOptions {
+        steps: 3,
+        batch: 2,
+        lr: 0.05,
+        ..Default::default()
+    });
+    trainer.train_gpt(&mut tape, &model, &corpus);
+    model.save_params(&tape, &path).unwrap();
+
+    // In-process reference from the trained model.
+    let prompt = vec![1u32, 2, 3];
+    let (n, temp, seed) = (12usize, 0.8f64, 99u64);
+    let mut cache = ProgramCache::new();
+    let mut gen_rng = Rng::new(seed);
+    let want = model.generate_cached(&mut tape, &prompt, n, temp, &mut gen_rng, &mut cache);
+
+    // A separately (differently) initialized server boots from the
+    // checkpoint and serves the same tokens.
+    let (mut tape2, model2) = tiny_gpt(31_337);
+    model2.load_params(&mut tape2, &path).unwrap();
+    assert_eq!(
+        tape.values_range(model.params.first, model.params.len),
+        tape2.values_range(model2.params.first, model2.params.len),
+        "checkpoint must restore the exact trained weights"
+    );
+    let opts = ServeOptions {
+        lanes: 2,
+        ..ServeOptions::default()
+    };
+    let mut engine = ServeEngine::new(tape2, model2, opts);
+    engine.submit(Request {
+        id: 0,
+        prompt,
+        max_new_tokens: n,
+        temperature: temp,
+        seed,
+    });
+    let done = engine.run_to_completion();
+    assert_eq!(done.len(), 1);
+    assert_eq!(done[0].output(), want.as_slice(), "served tokens diverged from in-process");
+
+    // Mismatched models reject the checkpoint outright.
+    let mut mlp_tape = Tape::<f32>::new();
+    let mut mlp_rng = Rng::new(1);
+    let mlp = CharMlp::new(&mut mlp_tape, CharMlpConfig::paper(4), &mut mlp_rng);
+    assert!(mlp.load_params(&mut mlp_tape, &path).is_err(), "wrong d must be rejected");
+    let mut t64 = Tape::<f64>::new();
+    let mut r64 = Rng::new(7);
+    let g64 = Gpt::new(&mut t64, tiny_cfg(), &mut r64);
+    assert!(
+        g64.load_params(&mut t64, &path).is_err(),
+        "an f64 tape must reject an f32 checkpoint"
+    );
+}
