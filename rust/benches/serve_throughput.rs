@@ -43,6 +43,7 @@ fn requests(n_sessions: usize, tokens_each: usize) -> Vec<Request> {
             max_new_tokens: tokens_each,
             temperature: 0.8,
             seed: 900 + i as u64 * 13,
+            deadline_ms: None,
         })
         .collect()
 }
@@ -61,7 +62,7 @@ fn serve_once(
         ServeOptions {
             lanes,
             cache_cap,
-            max_active: 0,
+            ..ServeOptions::default()
         },
     );
     for r in reqs {

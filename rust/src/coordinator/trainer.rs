@@ -27,9 +27,11 @@
 //! engine's per-worker [`crate::tape::SampleExecutor`]s
 //! ([`ReplaySessions::with_mode`]), not in trainer branching.
 
+use std::path::Path;
 use std::sync::Arc;
 
 use crate::data::{BatchSampler, CharCorpus, Example, PrefetchSampler};
+use crate::serialize::{self, TrainState};
 use crate::metrics::{mean_std, MemInfo, Timer};
 use crate::nn::{CeMode, CharMlp, CharMlpBinds, Gpt, GptBinds, ParamRange};
 use crate::optim::Sgd;
@@ -83,6 +85,19 @@ pub struct TrainerOptions {
     /// otherwise) so first-touch NUMA placement of replica state survives
     /// OS migration. Placement only — never changes results.
     pub pin_cores: bool,
+    /// Write a crash-safe snapshot — params checkpoint plus `BURSTAT`
+    /// sidecar (step counter + sampler RNG state) — every N steps
+    /// (0 = never). Requires [`TrainerOptions::checkpoint`].
+    pub checkpoint_every: usize,
+    /// Snapshot path; the sidecar lands at `<path>.state`. Both files are
+    /// written atomically (temp file + rename), so a crash mid-snapshot
+    /// leaves the previous snapshot intact.
+    pub checkpoint: Option<String>,
+    /// Resume from the snapshot at [`TrainerOptions::checkpoint`] instead
+    /// of starting at step 0. The resumed run continues **bitwise
+    /// identical** to the uninterrupted one — same parameter trajectory,
+    /// same batches — for any thread count and either exec mode.
+    pub resume: bool,
 }
 
 impl Default for TrainerOptions {
@@ -100,6 +115,9 @@ impl Default for TrainerOptions {
             compression: ReductionCompression::None,
             exec: ExecMode::Eager,
             pin_cores: false,
+            checkpoint_every: 0,
+            checkpoint: None,
+            resume: false,
         }
     }
 }
@@ -233,7 +251,34 @@ impl Trainer {
         // `PrefetchSampler`). On the serial path the side job would not
         // overlap anything, so the synchronous fallback in `advance`
         // keeps batch prep off the timed compute section instead.
-        let mut prefetch = PrefetchSampler::new(BatchSampler::new(n_examples, o.batch, o.seed));
+        //
+        // On `--resume` the sampler is rebuilt mid-stream from the
+        // BURSTAT sidecar (RNG state + in-flight batch) and the params
+        // are loaded from the checkpoint, so the resumed trajectory is
+        // bitwise identical to the uninterrupted one. Snapshot failures
+        // panic with context rather than silently dropping durability.
+        let (mut prefetch, start_step) = if o.resume {
+            let path = o
+                .checkpoint
+                .as_deref()
+                .expect("TrainerOptions::resume requires a checkpoint path");
+            let ckpt = Path::new(path);
+            let state = serialize::load_train_state(&serialize::train_state_path(ckpt))
+                .unwrap_or_else(|e| panic!("resume: train state for '{path}': {e}"));
+            serialize::load_params_range(tape, params.first, d, ckpt)
+                .unwrap_or_else(|e| panic!("resume: params '{path}': {e}"));
+            let batch: Vec<usize> = state.batch.iter().map(|&i| i as usize).collect();
+            let sampler = BatchSampler::from_state(n_examples, o.batch, state.sampler_rng);
+            (
+                PrefetchSampler::resume(sampler, batch),
+                state.next_step as usize,
+            )
+        } else {
+            (
+                PrefetchSampler::new(BatchSampler::new(n_examples, o.batch, o.seed)),
+                0,
+            )
+        };
         let mut opt = Sgd::new(d, o.lr, 0.0);
         let mut grad_acc = vec![0.0f64; d];
         let mut engine = MinibatchGradEngine::with_pool(
@@ -267,7 +312,7 @@ impl Trainer {
         // the barrier window being timed.
         let overlap = engine.threads().min(engine.lanes().min(o.batch)) > 1;
 
-        for step in 0..o.steps {
+        for step in start_step..o.steps {
             let side: Option<&dyn StepSideJob> =
                 overlap.then_some(&prefetch as &dyn StepSideJob);
             let timer = Timer::new();
@@ -285,6 +330,26 @@ impl Trainer {
             opt.step(tape.values_range_mut(params.first, d), &grad_acc);
             times.push(timer.seconds() * 1e3);
             prefetch.advance(); // swap buffers; synchronous prep (if any) stays off the clock
+            // Periodic crash-safe snapshot: params + sidecar, both
+            // atomic. Taken after the optimizer step and the prefetch
+            // swap, so the snapshot is exactly the between-steps state —
+            // params after steps 0..=step, batch for step+1 in flight.
+            // (SGD here runs with momentum 0, so the optimizer itself is
+            // stateless and needs nothing in the sidecar.)
+            if o.checkpoint_every > 0 && (step + 1) % o.checkpoint_every == 0 {
+                if let Some(path) = &o.checkpoint {
+                    let ckpt = Path::new(path);
+                    serialize::save_params_range(tape, params.first, d, ckpt)
+                        .unwrap_or_else(|e| panic!("checkpoint: params '{path}': {e}"));
+                    let state = TrainState {
+                        next_step: (step + 1) as u64,
+                        sampler_rng: prefetch.sampler_rng_state(),
+                        batch: prefetch.current().iter().map(|&i| i as u64).collect(),
+                    };
+                    serialize::save_train_state(&state, &serialize::train_state_path(ckpt))
+                        .unwrap_or_else(|e| panic!("checkpoint: train state '{path}': {e}"));
+                }
+            }
             let mean_loss = stats.loss_sum * inv_b;
             if o.log_every > 0 && step % o.log_every == 0 {
                 curve.push((step, mean_loss));
@@ -570,6 +635,49 @@ mod tests {
             }
             assert_eq!(eager_params, replay_params, "post-training parameters diverged");
         }
+    }
+
+    #[test]
+    fn resume_from_mid_training_snapshot_is_bitwise_identical() {
+        let dir = std::env::temp_dir().join("burtorch_trainer_resume_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let ckpt = dir.join("mid.bin").to_string_lossy().into_owned();
+
+        let ds = names_dataset(150, 16, 33);
+        let run = |mutate: &dyn Fn(&mut TrainerOptions)| -> Vec<u64> {
+            let mut opts = TrainerOptions {
+                steps: 10,
+                batch: 4,
+                lr: 0.2,
+                seed: 5,
+                ..Default::default()
+            };
+            mutate(&mut opts);
+            let mut tape = Tape::<f32>::new();
+            let mut rng = Rng::new(77);
+            let model = CharMlp::new(&mut tape, CharMlpConfig::paper(4), &mut rng);
+            Trainer::new(opts).train_char_mlp(&mut tape, &model, &ds.examples);
+            model.params.iter().map(|p| tape.value(p).to_bits() as u64).collect()
+        };
+
+        let uninterrupted = run(&|_| {});
+        // "Crash" after 6 steps, snapshotting every 3 — the last snapshot
+        // holds the state between steps 5 and 6.
+        let c = ckpt.clone();
+        run(&move |o| {
+            o.steps = 6;
+            o.checkpoint_every = 3;
+            o.checkpoint = Some(c.clone());
+        });
+        let c = ckpt.clone();
+        let resumed = run(&move |o| {
+            o.checkpoint = Some(c.clone());
+            o.resume = true;
+        });
+        assert_eq!(
+            resumed, uninterrupted,
+            "resumed run must reproduce the uninterrupted parameters bit-for-bit"
+        );
     }
 
     #[test]

@@ -51,6 +51,25 @@ impl BatchSampler {
     pub fn population(&self) -> usize {
         self.n
     }
+
+    /// The sampler RNG's raw state — what a mid-training checkpoint
+    /// stores ([`crate::serialize::TrainState::sampler_rng`]) so a
+    /// resumed run draws the identical index stream.
+    pub fn rng_state(&self) -> [u64; 4] {
+        self.rng.state()
+    }
+
+    /// Rebuild a sampler mid-stream from a checkpointed RNG state: the
+    /// next [`BatchSampler::next_batch`] returns exactly what the
+    /// original sampler would have returned next.
+    pub fn from_state(n: usize, b: usize, state: [u64; 4]) -> BatchSampler {
+        assert!(b >= 1 && b <= n, "batch size {b} out of range for n={n}");
+        BatchSampler {
+            n,
+            b,
+            rng: Rng::from_state(state),
+        }
+    }
 }
 
 /// Double-buffered async batch prefetch: wraps a [`BatchSampler`] so that
@@ -118,6 +137,36 @@ impl PrefetchSampler {
             claimed: AtomicBool::new(false),
             cur,
         }
+    }
+
+    /// Resume constructor: wrap a sampler restored mid-stream (see
+    /// [`BatchSampler::from_state`]) with the checkpointed in-flight
+    /// batch as the current one. The current batch must come from the
+    /// checkpoint rather than a fresh draw because the saved RNG state is
+    /// already *past* the draw that produced it — the prefetch pipeline
+    /// draws batch k+1 while step k computes. The resumed index stream is
+    /// bitwise identical to the uninterrupted one.
+    pub fn resume(sampler: BatchSampler, current: Vec<usize>) -> PrefetchSampler {
+        assert_eq!(
+            current.len(),
+            sampler.batch_size(),
+            "resumed batch length must match the sampler's batch size"
+        );
+        PrefetchSampler {
+            inner: UnsafeCell::new(PrefetchInner {
+                sampler,
+                next: Vec::new(),
+            }),
+            claimed: AtomicBool::new(false),
+            cur: current,
+        }
+    }
+
+    /// The sampler RNG's raw state. Meaningful between steps only (after
+    /// [`PrefetchSampler::advance`], before the next engine call hands
+    /// the side job out) — exactly when the trainer checkpoints.
+    pub fn sampler_rng_state(&mut self) -> [u64; 4] {
+        self.inner.get_mut().sampler.rng_state()
     }
 
     /// The current step's batch indices.
@@ -212,6 +261,32 @@ mod tests {
         for _ in 0..10 {
             assert_eq!(a.next_batch(), b.next_batch());
         }
+    }
+
+    #[test]
+    fn resumed_prefetch_stream_is_bitwise_identical() {
+        // Uninterrupted reference: 20 batches.
+        let mut sync = BatchSampler::new(300, 8, 5);
+        let want: Vec<Vec<usize>> = (0..20).map(|_| sync.next_batch()).collect();
+
+        // Run 7 steps, "checkpoint" (RNG state + in-flight batch), resume.
+        let mut pf = PrefetchSampler::new(BatchSampler::new(300, 8, 5));
+        let mut got: Vec<Vec<usize>> = Vec::new();
+        for _ in 0..7 {
+            got.push(pf.current().to_vec());
+            pf.advance();
+        }
+        let state = pf.sampler_rng_state();
+        let in_flight = pf.current().to_vec();
+        drop(pf);
+
+        let mut resumed =
+            PrefetchSampler::resume(BatchSampler::from_state(300, 8, state), in_flight);
+        for _ in 7..20 {
+            got.push(resumed.current().to_vec());
+            resumed.advance();
+        }
+        assert_eq!(got, want, "resume must splice seamlessly into the stream");
     }
 
     #[test]

@@ -85,6 +85,33 @@
 //! a `train --params` checkpoint ([`serialize::save_params_range`])
 //! instead of a fresh init.
 //!
+//! ## Fault tolerance
+//!
+//! Robustness rides on the same determinism contracts rather than
+//! relaxing them. Training writes **crash-safe snapshots**
+//! (`--checkpoint-every N`): a versioned, CRC32-checksummed `BURPARM v2`
+//! parameter checkpoint plus a `BURSTAT` sidecar (step counter, sampler
+//! RNG state, in-flight batch), both published atomically via temp-file +
+//! rename ([`serialize::write_file_atomic`]), so a crash at any byte
+//! leaves the previous snapshot intact; `--resume` continues **bitwise
+//! identical** to the uninterrupted run for any thread count and either
+//! exec mode. A damaged checkpoint never loads — typed
+//! [`serialize::SerializeError`] rejection, tape untouched — and
+//! `burtorch params inspect` reports header fields and checksum status
+//! without loading. On the serving side, a panicking lane is caught at
+//! the dispatch boundary ([`parallel::WorkerPool::run_catching`]),
+//! quarantined, and healed from the parameter master before the next
+//! tick; because sessions own their sampling state, the degraded run's
+//! completions are bitwise identical to a never-faulted one. Requests
+//! carry optional wall-clock deadlines (expired sessions return
+//! truncated-but-well-formed prefixes tagged `deadline`), the admission
+//! queue is bounded (overflow is shed with an explicit `evicted`
+//! completion), and unservable requests become per-request `error`
+//! completions instead of aborting the batch
+//! ([`serve::SessionStatus`]). All of it is driven deterministically by
+//! the seeded fault-injection harness ([`testkit::FaultPlan`]) in
+//! `tests/fault_tolerance.rs`.
+//!
 //! ## The zero-steady-state-allocation discipline
 //!
 //! Every per-step buffer in the hot path is allocated once and reused:

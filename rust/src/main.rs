@@ -22,7 +22,7 @@ use burtorch::metrics::{MemInfo, Timer};
 use burtorch::nn::{CeMode, CharMlp, CharMlpConfig, Gpt, GptConfig};
 use burtorch::parallel::ReductionCompression;
 use burtorch::rng::Rng;
-use burtorch::serve::{parse_requests, ServeEngine, ServeOptions};
+use burtorch::serve::{parse_requests, ParsedRequest, ServeEngine, ServeOptions, SessionStatus};
 use burtorch::tape::{Builder, Tape};
 use burtorch::viz;
 
@@ -34,6 +34,7 @@ fn main() {
         "demo" => cmd_demo(&cli),
         "sample" => cmd_sample(&cli),
         "serve" => cmd_serve(&cli),
+        "params" => cmd_params(&cli),
         "artifacts" => cmd_artifacts(&cli),
         "info" => cmd_info(),
         "" | "help" | "-h" | "--help" => {
@@ -61,6 +62,7 @@ fn usage() -> &'static str {
                  [--compress none|randk:k=64|topk:k=64|ef21[:k=N]]\n\
                  [--exec eager|replay] [--scratch] [--composed-ce]\n\
                  [--pin-cores] [--params w.bin]\n\
+                 [--checkpoint-every N] [--resume]\n\
                  (--threads 0 = all cores; any W gives bitwise-identical\n\
                   runs with --compress none; compressed runs are\n\
                   deterministic per seed and thread-invariant too;\n\
@@ -69,7 +71,12 @@ fn usage() -> &'static str {
                   identical, no per-step graph construction or opcode\n\
                   dispatch; --pin-cores pins pool workers to cores,\n\
                   requires building with --features affinity;\n\
-                  --params writes a parameter checkpoint at the end)\n\
+                  --params writes a parameter checkpoint at the end;\n\
+                  --checkpoint-every N also snapshots params + sampler\n\
+                  state to --params / --params.state every N steps,\n\
+                  atomically and CRC-protected; --resume restarts from\n\
+                  that snapshot and finishes bitwise identical to the\n\
+                  uninterrupted run)\n\
        fed       --clients N --rounds R --compressor identity|randk|topk\n\
                  [--exec eager|replay]\n\
                  (--exec replay drives each client's local oracles through\n\
@@ -80,12 +87,20 @@ fn usage() -> &'static str {
                   loads the checkpoint and skips training)\n\
        serve     --requests FILE [--params w.bin] [--lanes L]\n\
                  [--cache-cap N] [--max-active M] [--seed S]\n\
+                 [--max-queue Q] [--deadline-ms D] [--max-tokens T]\n\
                  (batched multi-session inference; requests come one per\n\
                   line as 'seed|max_new_tokens|temperature|prompt', read\n\
                   from FILE or stdin; --lanes fans sessions across worker\n\
                   lanes, --cache-cap bounds each lane's program cache\n\
                   with LRU eviction + tape compaction; batched output is\n\
-                  bitwise identical to serving each request alone)\n\
+                  bitwise identical to serving each request alone; every\n\
+                  completion is tagged ok|deadline|evicted|error —\n\
+                  --max-queue sheds submissions past the admission-queue\n\
+                  bound, --deadline-ms applies a default wall-clock\n\
+                  budget, --max-tokens caps any request's token budget;\n\
+                  a lane fault is quarantined and healed, the rest of\n\
+                  the batch serves on, bit-identical)\n\
+       params    inspect <file>   (print checkpoint header + checksum)\n\
        artifacts [--dir artifacts]      (PJRT smoke-run of AOT graphs)\n\
        info"
 }
@@ -135,6 +150,17 @@ fn trainer_options(cli: &Cli, cfg: &Config) -> TrainerOptions {
              'affinity' feature on Linux); pinning will be a no-op"
         );
     }
+    // `--checkpoint-every N` snapshots params + sampler state every N
+    // steps (to --params and --params.state, atomically); `--resume`
+    // restarts from that snapshot, bitwise identical to an uninterrupted
+    // run. Both need --params to name the checkpoint file.
+    let checkpoint_every = cli.usize_or("checkpoint-every", 0);
+    let resume = cli.has_flag("resume");
+    let checkpoint = cli.opt("params").map(String::from);
+    if (checkpoint_every > 0 || resume) && checkpoint.is_none() {
+        eprintln!("error: --checkpoint-every/--resume need --params to name the checkpoint file");
+        std::process::exit(2);
+    }
     TrainerOptions {
         steps: cli.int_or("steps", cfg.int_or("train.steps", 200)) as usize,
         batch: cli.int_or("batch", cfg.int_or("train.batch", 1)) as usize,
@@ -156,6 +182,9 @@ fn trainer_options(cli: &Cli, cfg: &Config) -> TrainerOptions {
         compression,
         exec,
         pin_cores,
+        checkpoint_every,
+        checkpoint,
+        resume,
     }
 }
 
@@ -379,6 +408,9 @@ fn cmd_serve(cli: &Cli) -> i32 {
     let lanes = cli.usize_or("lanes", 1).max(1);
     let cache_cap = cli.usize_or("cache-cap", 0);
     let max_active = cli.usize_or("max-active", 0);
+    let max_queue = cli.usize_or("max-queue", 0);
+    let max_tokens = cli.usize_or("max-tokens", 0);
+    let deadline_ms = cli.opt("deadline-ms").map(|_| cli.int_or("deadline-ms", 0) as u64);
     // Only the tokenizer is needed from the corpus; the char set (and
     // therefore every token id) is independent of the tiling length, so
     // a small corpus builds the same vocabulary training used.
@@ -431,9 +463,10 @@ fn cmd_serve(cli: &Cli) -> i32 {
         ),
     }
     println!(
-        "serving {n_requests} request(s): lanes={lanes} cache-cap={} max-active={}",
+        "serving {n_requests} request(s): lanes={lanes} cache-cap={} max-active={} max-queue={}",
         if cache_cap == 0 { "unbounded".to_string() } else { cache_cap.to_string() },
         if max_active == 0 { "unlimited".to_string() } else { max_active.to_string() },
+        if max_queue == 0 { "unbounded".to_string() } else { max_queue.to_string() },
     );
     let mut engine = ServeEngine::new(
         tape,
@@ -442,26 +475,49 @@ fn cmd_serve(cli: &Cli) -> i32 {
             lanes,
             cache_cap,
             max_active,
+            max_queue,
+            deadline_ms,
+            max_tokens,
         },
     );
     // Echo each prompt→completion pair; decode through the same tokenizer.
+    // Ids are assigned sequentially over all parsed lines, so index by id.
     let prompts: Vec<String> = requests
         .iter()
-        .map(|r| corpus.tokenizer.decode(&r.prompt))
+        .map(|pr| match pr {
+            ParsedRequest::Ok(r) => corpus.tokenizer.decode(&r.prompt),
+            ParsedRequest::Invalid { .. } => String::new(),
+        })
         .collect();
-    for r in requests {
-        engine.submit(r);
+    for pr in requests {
+        let id = match &pr {
+            ParsedRequest::Ok(r) => r.id,
+            ParsedRequest::Invalid { id, .. } => *id,
+        };
+        if !engine.submit_parsed(pr) {
+            // Explicit per-request rejection line, at submission time.
+            eprintln!("rejected request {id} (completion below carries its status)");
+        }
     }
     let timer = Timer::new();
     let done = engine.run_to_completion();
     let wall = timer.seconds();
     for s in &done {
-        println!(
-            "[{}] {}{}",
-            s.id(),
-            prompts[s.id() as usize],
-            corpus.tokenizer.decode(s.output())
-        );
+        match s.status() {
+            SessionStatus::Ok | SessionStatus::Deadline => println!(
+                "[{}] {} {}{}",
+                s.id(),
+                s.status().as_str(),
+                prompts[s.id() as usize],
+                corpus.tokenizer.decode(s.output())
+            ),
+            SessionStatus::Evicted | SessionStatus::Error => println!(
+                "[{}] {} — {}",
+                s.id(),
+                s.status().as_str(),
+                s.note().unwrap_or("no detail")
+            ),
+        }
     }
     let st = engine.stats();
     let rate = |x: u64| if wall > 0.0 { x as f64 / wall } else { f64::INFINITY };
@@ -478,7 +534,64 @@ fn cmd_serve(cli: &Cli) -> i32 {
         st.compactions,
         st.peak_tape_nodes,
     );
+    if st.quarantines > 0 || st.shed > 0 {
+        println!(
+            "faults: {} lane quarantine(s) healed | {} request(s) shed",
+            st.quarantines, st.shed
+        );
+    }
     0
+}
+
+/// `burtorch params inspect <file>`: print a checkpoint's header fields
+/// and checksum status without loading it into a tape. Exit code 0 only
+/// when the file is structurally sound *and* the checksum verifies.
+fn cmd_params(cli: &Cli) -> i32 {
+    let sub = cli.positionals.first().map(String::as_str);
+    if sub != Some("inspect") || cli.positionals.len() != 2 {
+        eprintln!("usage: burtorch params inspect <file>");
+        return 2;
+    }
+    let path = Path::new(&cli.positionals[1]);
+    match burtorch::serialize::inspect_params(path) {
+        Ok(h) => {
+            println!("file:     {}", path.display());
+            println!("format:   BURPARM v{}", h.version);
+            println!(
+                "dtype:    {} bytes/param ({})",
+                h.dtype_bytes,
+                match h.dtype_bytes {
+                    4 => "fp32",
+                    8 => "fp64",
+                    _ => "unknown",
+                }
+            );
+            println!("params:   {}", h.count);
+            match h.checksum_ok() {
+                Some(true) => {
+                    let crc = h.stored_crc.expect("v2 header carries a crc");
+                    println!("checksum: crc32 {crc:#010x} OK");
+                    0
+                }
+                Some(false) => {
+                    println!(
+                        "checksum: MISMATCH (stored {:#010x}, computed {:#010x}) — payload corrupt",
+                        h.stored_crc.expect("v2"),
+                        h.computed_crc.expect("v2"),
+                    );
+                    1
+                }
+                None => {
+                    println!("checksum: none (legacy v1 checkpoint)");
+                    0
+                }
+            }
+        }
+        Err(e) => {
+            eprintln!("error: {}: {e}", path.display());
+            1
+        }
+    }
 }
 
 fn cmd_artifacts(cli: &Cli) -> i32 {

@@ -357,7 +357,7 @@ struct JobCell(UnsafeCell<Option<ErasedJob>>);
 unsafe impl Sync for JobCell {}
 
 /// A propagatable panic payload (what [`catch_unwind`] returns).
-type PanicPayload = Box<dyn std::any::Any + Send + 'static>;
+pub type PanicPayload = Box<dyn std::any::Any + Send + 'static>;
 
 struct PoolShared {
     /// `workers + 1` participants (the coordinator is one of them); used
@@ -365,10 +365,10 @@ struct PoolShared {
     barrier: Barrier,
     job: JobCell,
     shutdown: AtomicBool,
-    /// First worker panic of the current step, payload preserved so the
-    /// coordinator can re-raise it (matching what `std::thread::scope`
-    /// would have done).
-    panic: Mutex<Option<PanicPayload>>,
+    /// Worker panics of the current step, `(worker index, payload)`,
+    /// preserved so the coordinator can re-raise ([`WorkerPool::run`]) or
+    /// hand them to fault-tolerant callers ([`WorkerPool::run_catching`]).
+    panic: Mutex<Vec<(usize, PanicPayload)>>,
 }
 
 /// A persistent pool of worker threads driven by a reusable step barrier.
@@ -436,7 +436,7 @@ impl WorkerPool {
             barrier: Barrier::new(workers + 1),
             job: JobCell(UnsafeCell::new(None)),
             shutdown: AtomicBool::new(false),
-            panic: Mutex::new(None),
+            panic: Mutex::new(Vec::new()),
         });
         let handles = (1..=workers)
             .map(|w| {
@@ -474,14 +474,42 @@ impl WorkerPool {
     /// panic payload is re-raised on the caller — the same surfacing
     /// `std::thread::scope` would give.
     pub fn run<F: Fn(usize) + Sync>(&self, job: &F) {
+        let mut panics = self.run_catching(job);
+        // Re-raise the coordinator's own panic first (index 0), matching
+        // the historical surfacing; otherwise the first worker payload.
+        if let Some(pos) = panics.iter().position(|(w, _)| *w == 0) {
+            resume_unwind(panics.swap_remove(pos).1);
+        }
+        if !panics.is_empty() {
+            resume_unwind(panics.swap_remove(0).1);
+        }
+    }
+
+    /// [`WorkerPool::run`] for fault-tolerant callers: instead of
+    /// re-raising, every panicking invocation is returned as `(worker
+    /// index, panic payload)` — an empty vec means a clean step. The step
+    /// still fully drains before returning (every worker reaches the
+    /// closing barrier), so the pool stays reusable and the job's borrows
+    /// end here, exactly as in `run`.
+    ///
+    /// The pool's worker threads themselves **survive** a panicking job —
+    /// each wraps the job in `catch_unwind` inside its step loop — so no
+    /// OS-thread respawn is needed: worker `w` keeps its identity (and
+    /// its first-touch NUMA placement) across faults. What a panic *does*
+    /// poison is the per-worker state the job was mutating; rebuilding
+    /// that is the caller's responsibility (see the serving engine's lane
+    /// quarantine).
+    pub fn run_catching<F: Fn(usize) + Sync>(&self, job: &F) -> Vec<(usize, PanicPayload)> {
         if self.handles.is_empty() {
-            job(0);
-            return;
+            return match catch_unwind(AssertUnwindSafe(|| job(0))) {
+                Ok(()) => Vec::new(),
+                Err(p) => vec![(0, p)],
+            };
         }
         let _step = self.gate.lock().unwrap_or_else(|e| e.into_inner());
         // SAFETY: the job outlives the step — both barrier crossings below
-        // happen before `run` returns, and workers only dereference the
-        // slot between them.
+        // happen before `run_catching` returns, and workers only
+        // dereference the slot between them.
         unsafe { *self.shared.job.0.get() = Some(erase_job(job)) };
         self.shared.barrier.wait(); // release workers into the step
         let local = catch_unwind(AssertUnwindSafe(|| job(0)));
@@ -490,20 +518,14 @@ impl WorkerPool {
         // nobody reads the slot until the next publish.
         unsafe { *self.shared.job.0.get() = None };
         // Drain the worker slot unconditionally so a payload can never
-        // leak into a later step, then re-raise (coordinator's own panic
-        // takes precedence).
-        let worker_panic = self
-            .shared
-            .panic
-            .lock()
-            .unwrap_or_else(|e| e.into_inner())
-            .take();
+        // leak into a later step.
+        let mut panics = std::mem::take(
+            &mut *self.shared.panic.lock().unwrap_or_else(|e| e.into_inner()),
+        );
         if let Err(p) = local {
-            resume_unwind(p);
+            panics.insert(0, (0, p));
         }
-        if let Some(p) = worker_panic {
-            resume_unwind(p);
-        }
+        panics
     }
 }
 
@@ -535,10 +557,12 @@ fn worker_loop(shared: &PoolShared, index: usize) {
             job(index);
         }));
         if let Err(payload) = ran {
-            // Keep the first payload; later ones are dropped (matching
+            // Record every payload with its worker index so fault-aware
+            // callers can quarantine exactly the poisoned lanes; `run`
+            // re-raises the first and drops the rest (matching
             // `std::thread::scope`, which also re-raises one).
             let mut slot = shared.panic.lock().unwrap_or_else(|e| e.into_inner());
-            slot.get_or_insert(payload);
+            slot.push((index, payload));
         }
         shared.barrier.wait();
     }
@@ -1394,6 +1418,45 @@ mod tests {
             hits.fetch_add(1, Ordering::SeqCst);
         });
         assert_eq!(hits.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn run_catching_reports_panics_per_worker_and_keeps_the_pool_alive() {
+        let pool = WorkerPool::new(3);
+        // Two workers panic; the step drains and both are reported with
+        // their indices and original payloads.
+        let mut panics = pool.run_catching(&|w| {
+            if w == 1 || w == 3 {
+                panic!("lane {w} down");
+            }
+        });
+        panics.sort_by_key(|(w, _)| *w);
+        let idx: Vec<usize> = panics.iter().map(|(w, _)| *w).collect();
+        assert_eq!(idx, vec![1, 3]);
+        for (w, p) in panics {
+            let msg = p.downcast_ref::<String>().expect("formatted payload");
+            assert_eq!(msg, &format!("lane {w} down"));
+        }
+        // A clean step reports nothing and the threads are all still there.
+        assert!(pool.run_catching(&|_| {}).is_empty());
+        let hits = AtomicUsize::new(0);
+        pool.run(&|_| {
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 4);
+        // The coordinator's own panic is caught too, as index 0.
+        let panics = pool.run_catching(&|w| {
+            if w == 0 {
+                panic!("coordinator");
+            }
+        });
+        assert_eq!(panics.len(), 1);
+        assert_eq!(panics[0].0, 0);
+        // Zero-worker pools catch inline.
+        let inline = WorkerPool::new(0);
+        let panics = inline.run_catching(&|_| panic!("inline"));
+        assert_eq!(panics.len(), 1);
+        assert_eq!(panics[0].1.downcast_ref::<&str>(), Some(&"inline"));
     }
 
     #[test]

@@ -11,10 +11,24 @@
 //! - **snapshot**: a tiny self-describing container (magic, dtype, counts)
 //!   for whole-graph checkpoints, still orders of magnitude leaner than
 //!   pickle/SavedModel.
+//!
+//! ## Crash safety
+//!
+//! Parameter checkpoints (`BURPARM` **v2**) carry a format-version byte
+//! and a CRC32 over the payload, and are published with a temp-file +
+//! atomic-rename write ([`write_file_atomic`]): a reader either sees the
+//! complete previous checkpoint or the complete new one, never a torn
+//! file, and any post-write corruption (bit flips, truncation) is caught
+//! at load time as a typed [`SerializeError`]. Mid-training coordinator
+//! state (step counter + data-sampler RNG state) travels in a `BURSTAT`
+//! sidecar ([`TrainState`]) so `--resume` continues bitwise identical to
+//! an uninterrupted run. Legacy v1 `BURPARM` files (no checksum) still
+//! load. The raw Table 4 writers stay un-fsynced on purpose — they time
+//! the paper's minimal save path, not a durability path.
 
 use std::fs::File;
 use std::io::{Read, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use crate::ops::Op;
 use crate::scalar::Scalar;
@@ -37,6 +51,19 @@ pub enum SerializeError {
         /// Scalars the checkpoint holds.
         got: u64,
     },
+    /// The stored CRC32 does not match the payload — the file was
+    /// corrupted after it was written (bit flip, partial overwrite).
+    ChecksumMismatch {
+        /// CRC32 recorded in the header.
+        expected: u32,
+        /// CRC32 of the payload actually on disk.
+        got: u32,
+    },
+    /// The file carries a format version this build cannot read.
+    UnsupportedVersion {
+        /// Version byte found in the header.
+        got: u8,
+    },
 }
 
 impl From<std::io::Error> for SerializeError {
@@ -56,6 +83,16 @@ impl std::fmt::Display for SerializeError {
                     f,
                     "parameter count mismatch: model expects {expected}, checkpoint holds {got}"
                 )
+            }
+            SerializeError::ChecksumMismatch { expected, got } => {
+                write!(
+                    f,
+                    "checksum mismatch: header says {expected:#010x}, payload hashes to {got:#010x} \
+                     (the file was corrupted after it was written)"
+                )
+            }
+            SerializeError::UnsupportedVersion { got } => {
+                write!(f, "unsupported checkpoint format version {got}")
             }
         }
     }
@@ -159,39 +196,130 @@ pub fn load_values_subset<T: Scalar>(
     Ok(())
 }
 
+// ---- CRC32 (hand-rolled, zero-dependency) -----------------------------------
+
+/// 256-entry lookup table for the reflected IEEE 802.3 polynomial
+/// `0xEDB88320`, generated at compile time — the standard table-driven
+/// CRC32 (zlib/PNG/gzip compatible), hand-rolled because the crate
+/// carries no dependencies.
+static CRC32_TABLE: [u32; 256] = crc32_table();
+
+const fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0usize;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+/// CRC32 (IEEE) of `bytes` — the integrity check of every framed
+/// checkpoint format in this module.
+///
+/// # Examples
+///
+/// The checksum round-trips and catches single-byte corruption:
+///
+/// ```
+/// use burtorch::serialize::crc32;
+///
+/// // The standard check vector for CRC-32/ISO-HDLC.
+/// assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+///
+/// let mut payload = vec![0x17u8; 64];
+/// let stored = crc32(&payload);
+/// assert_eq!(crc32(&payload), stored); // round-trip: unchanged bytes verify
+/// payload[40] ^= 0x01;                 // one flipped bit...
+/// assert_ne!(crc32(&payload), stored); // ...is detected
+/// ```
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC32_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+// ---- crash-safe writes ------------------------------------------------------
+
+/// Write `bytes` to `path` crash-safely: the bytes land in a sibling
+/// `<path>.tmp` file first (same directory, so the final step is a
+/// same-filesystem rename), are fsynced, and are then published with one
+/// atomic `rename(2)`. A crash at any point leaves either the complete
+/// previous file or the complete new one — never a torn checkpoint.
+pub fn write_file_atomic(path: &Path, bytes: &[u8]) -> Result<(), SerializeError> {
+    let mut tmp_os = path.as_os_str().to_owned();
+    tmp_os.push(".tmp");
+    let tmp = PathBuf::from(tmp_os);
+    {
+        let mut f = File::create(&tmp)?;
+        f.write_all(bytes)?;
+        // Flush file contents to stable storage before the rename makes
+        // the new name visible; otherwise a power cut could publish a
+        // name pointing at unwritten blocks.
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
 // ---- parameter checkpoints --------------------------------------------------
 
-const PARAM_MAGIC: &[u8; 8] = b"BURPARM\x01";
+const PARAM_MAGIC: &[u8; 7] = b"BURPARM";
+/// Current `BURPARM` format version (v2 = versioned + CRC32).
+pub const PARAM_VERSION: u8 = 2;
+/// v2 header: magic(7) + version(1) + dtype(1) + count(8) + crc32(4).
+const PARAM_HEADER_V2: usize = 21;
+/// v1 header: magic-with-version-byte(8) + dtype(1) + count(8).
+const PARAM_HEADER_V1: usize = 17;
 
 /// Save a model's flat parameter buffer — the `n` consecutive leaves
-/// starting at `first` — as a self-describing checkpoint: an 8-byte
-/// magic, a dtype byte, a u64 scalar count, then the raw little-endian
-/// payload. Unlike the raw [`save_values_range`] format, the header lets
-/// [`load_params_range`] reject a checkpoint whose dtype or parameter
-/// count does not match the loading model. Returns bytes written.
+/// starting at `first` — as a self-describing **v2** checkpoint: a 7-byte
+/// magic, a format-version byte, a dtype byte, a u64 scalar count, a
+/// CRC32 over the payload, then the raw little-endian payload. The file
+/// is published via [`write_file_atomic`], so a crash mid-save never
+/// leaves a torn checkpoint behind. Unlike the raw [`save_values_range`]
+/// format, the header lets [`load_params_range`] reject a checkpoint
+/// whose dtype or parameter count does not match the loading model — and
+/// the CRC catches any corruption that happened after the write. Returns
+/// bytes written.
 pub fn save_params_range<T: Scalar>(
     tape: &Tape<T>,
     first: Value,
     n: usize,
     path: &Path,
 ) -> Result<usize, SerializeError> {
-    let mut out = Vec::with_capacity(17 + n * T::BYTES);
+    let mut payload = Vec::with_capacity(n * T::BYTES);
+    for &v in tape.values_range(first, n) {
+        v.write_le(&mut payload);
+    }
+    let mut out = Vec::with_capacity(PARAM_HEADER_V2 + payload.len());
     out.extend_from_slice(PARAM_MAGIC);
+    out.push(PARAM_VERSION);
     out.push(T::BYTES as u8);
     out.extend_from_slice(&(n as u64).to_le_bytes());
-    for &v in tape.values_range(first, n) {
-        v.write_le(&mut out);
-    }
-    File::create(path)?.write_all(&out)?;
+    out.extend_from_slice(&crc32(&payload).to_le_bytes());
+    out.extend_from_slice(&payload);
+    write_file_atomic(path, &out)?;
     Ok(out.len())
 }
 
 /// Load a parameter checkpoint written by [`save_params_range`] into the
 /// `n` consecutive leaves starting at `first`. Rejects a bad magic or a
 /// truncated payload ([`SerializeError::Malformed`]), a dtype mismatch
-/// ([`SerializeError::DtypeMismatch`]), and a scalar count different from
-/// `n` ([`SerializeError::CountMismatch`]) — a checkpoint never loads
-/// into a model of a different size.
+/// ([`SerializeError::DtypeMismatch`]), a scalar count different from `n`
+/// ([`SerializeError::CountMismatch`]), a corrupted payload
+/// ([`SerializeError::ChecksumMismatch`]), and an unknown format version
+/// ([`SerializeError::UnsupportedVersion`]) — a damaged or mismatched
+/// checkpoint never loads, and on any error the tape is untouched.
+/// Legacy v1 files (8-byte magic `BURPARM\x01`, no checksum) still load.
 pub fn load_params_range<T: Scalar>(
     tape: &mut Tape<T>,
     first: Value,
@@ -200,26 +328,245 @@ pub fn load_params_range<T: Scalar>(
 ) -> Result<(), SerializeError> {
     let mut bytes = Vec::new();
     File::open(path)?.read_to_end(&mut bytes)?;
-    if bytes.len() < 17 {
+    let (header, payload) = check_param_header::<T>(&bytes, Some(n as u64))?;
+    debug_assert_eq!(header.count, n as u64);
+    decode_values_range(tape, first, n, payload)
+}
+
+/// Parsed and validated `BURPARM` header fields (see [`inspect_params`]).
+#[derive(Clone, Copy, Debug)]
+pub struct ParamHeader {
+    /// Format version byte (1 = legacy, 2 = current).
+    pub version: u8,
+    /// Bytes per scalar (4 = f32, 8 = f64).
+    pub dtype_bytes: u8,
+    /// Number of parameter scalars in the payload.
+    pub count: u64,
+    /// CRC32 stored in the header (v2 only).
+    pub stored_crc: Option<u32>,
+    /// CRC32 computed over the payload on disk (v2 only).
+    pub computed_crc: Option<u32>,
+}
+
+impl ParamHeader {
+    /// Does the stored checksum match the payload? `None` when the format
+    /// version carries no checksum (v1).
+    pub fn checksum_ok(&self) -> Option<bool> {
+        match (self.stored_crc, self.computed_crc) {
+            (Some(a), Some(b)) => Some(a == b),
+            _ => None,
+        }
+    }
+}
+
+/// Validate a `BURPARM` byte buffer: magic, version, dtype, count (when
+/// `expect_count` is given), framing, and — for v2 — the payload CRC.
+/// Returns the parsed header plus the payload slice.
+fn check_param_header<T: Scalar>(
+    bytes: &[u8],
+    expect_count: Option<u64>,
+) -> Result<(ParamHeader, &[u8]), SerializeError> {
+    if bytes.len() < 8 {
         return Err(SerializeError::Malformed("short param header"));
     }
-    if &bytes[..8] != PARAM_MAGIC {
+    if &bytes[..7] != PARAM_MAGIC {
         return Err(SerializeError::Malformed("bad param magic"));
     }
-    if bytes[8] as usize != T::BYTES {
+    let version = bytes[7];
+    let header_len = match version {
+        1 => PARAM_HEADER_V1,
+        2 => PARAM_HEADER_V2,
+        got => return Err(SerializeError::UnsupportedVersion { got }),
+    };
+    if bytes.len() < header_len {
+        return Err(SerializeError::Malformed("short param header"));
+    }
+    let dtype_bytes = bytes[8];
+    if dtype_bytes as usize != T::BYTES {
         return Err(SerializeError::DtypeMismatch);
     }
-    let got = u64::from_le_bytes(bytes[9..17].try_into().expect("8 bytes"));
-    if got != n as u64 {
-        return Err(SerializeError::CountMismatch {
-            expected: n as u64,
-            got,
-        });
+    let count = u64::from_le_bytes(bytes[9..17].try_into().expect("8 bytes"));
+    if let Some(expected) = expect_count {
+        if count != expected {
+            return Err(SerializeError::CountMismatch { expected, got: count });
+        }
     }
-    if bytes.len() != 17 + n * T::BYTES {
+    let payload_len = (count as usize)
+        .checked_mul(T::BYTES)
+        .ok_or(SerializeError::Malformed("param count overflows"))?;
+    if bytes.len() != header_len + payload_len {
         return Err(SerializeError::Malformed("param payload length mismatch"));
     }
-    decode_values_range(tape, first, n, &bytes[17..])
+    let payload = &bytes[header_len..];
+    let (stored_crc, computed_crc) = if version == 2 {
+        let stored = u32::from_le_bytes(bytes[17..21].try_into().expect("4 bytes"));
+        let computed = crc32(payload);
+        if stored != computed {
+            return Err(SerializeError::ChecksumMismatch {
+                expected: stored,
+                got: computed,
+            });
+        }
+        (Some(stored), Some(computed))
+    } else {
+        (None, None)
+    };
+    Ok((
+        ParamHeader {
+            version,
+            dtype_bytes,
+            count,
+            stored_crc,
+            computed_crc,
+        },
+        payload,
+    ))
+}
+
+/// Read a checkpoint's header fields and checksum status *without*
+/// loading it into a model — the engine behind `burtorch params inspect`.
+/// Unlike [`load_params_range`], a checksum failure is reported as data
+/// (`stored_crc ≠ computed_crc`, [`ParamHeader::checksum_ok`] =
+/// `Some(false)`) rather than an error, so operators can see exactly what
+/// is wrong with a damaged file; structural damage (bad magic,
+/// truncation, unknown version) still errors.
+pub fn inspect_params(path: &Path) -> Result<ParamHeader, SerializeError> {
+    let mut bytes = Vec::new();
+    File::open(path)?.read_to_end(&mut bytes)?;
+    if bytes.len() < 8 {
+        return Err(SerializeError::Malformed("short param header"));
+    }
+    if &bytes[..7] != PARAM_MAGIC {
+        return Err(SerializeError::Malformed("bad param magic"));
+    }
+    let version = bytes[7];
+    let header_len = match version {
+        1 => PARAM_HEADER_V1,
+        2 => PARAM_HEADER_V2,
+        got => return Err(SerializeError::UnsupportedVersion { got }),
+    };
+    if bytes.len() < header_len {
+        return Err(SerializeError::Malformed("short param header"));
+    }
+    let dtype_bytes = bytes[8];
+    let count = u64::from_le_bytes(bytes[9..17].try_into().expect("8 bytes"));
+    let expected_len = header_len
+        .checked_add(
+            (count as usize)
+                .checked_mul(dtype_bytes as usize)
+                .ok_or(SerializeError::Malformed("param count overflows"))?,
+        )
+        .ok_or(SerializeError::Malformed("param count overflows"))?;
+    if bytes.len() != expected_len {
+        return Err(SerializeError::Malformed("param payload length mismatch"));
+    }
+    let (stored_crc, computed_crc) = if version == 2 {
+        let stored = u32::from_le_bytes(bytes[17..21].try_into().expect("4 bytes"));
+        (Some(stored), Some(crc32(&bytes[header_len..])))
+    } else {
+        (None, None)
+    };
+    Ok(ParamHeader {
+        version,
+        dtype_bytes,
+        count,
+        stored_crc,
+        computed_crc,
+    })
+}
+
+// ---- mid-training state sidecar (BURSTAT) -----------------------------------
+
+const STATE_MAGIC: &[u8; 7] = b"BURSTAT";
+const STATE_VERSION: u8 = 1;
+
+/// The coordinator state a training run needs — beyond the parameters —
+/// to resume bitwise identically: the step to continue from, the batch
+/// sampler's RNG state *after* drawing the `current` batch, and the
+/// `current` batch itself. The batch must be stored explicitly because
+/// the prefetch pipeline draws batch *k+1* while step *k* computes: the
+/// saved RNG state is already past the draw that produced `current`, so
+/// it cannot be re-derived.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TrainState {
+    /// First step the resumed run executes (steps `0..next_step` are done).
+    pub next_step: u64,
+    /// xoshiro256++ state of the batch sampler's RNG.
+    pub sampler_rng: [u64; 4],
+    /// The in-flight batch for step `next_step` (example indices).
+    pub batch: Vec<u64>,
+}
+
+/// Conventional sidecar path for a params checkpoint: `<params>.state`.
+pub fn train_state_path(params: &Path) -> PathBuf {
+    let mut os = params.as_os_str().to_owned();
+    os.push(".state");
+    PathBuf::from(os)
+}
+
+/// Save a [`TrainState`] sidecar: `BURSTAT` magic, version byte, CRC32
+/// over the payload, then the payload (step counter, sampler RNG state,
+/// batch length, batch indices — all u64 LE). Written atomically, like
+/// the params file it rides along with. Returns bytes written.
+pub fn save_train_state(state: &TrainState, path: &Path) -> Result<usize, SerializeError> {
+    let mut payload = Vec::with_capacity(8 * (6 + state.batch.len()));
+    payload.extend_from_slice(&state.next_step.to_le_bytes());
+    for w in state.sampler_rng {
+        payload.extend_from_slice(&w.to_le_bytes());
+    }
+    payload.extend_from_slice(&(state.batch.len() as u64).to_le_bytes());
+    for &i in &state.batch {
+        payload.extend_from_slice(&i.to_le_bytes());
+    }
+    let mut out = Vec::with_capacity(12 + payload.len());
+    out.extend_from_slice(STATE_MAGIC);
+    out.push(STATE_VERSION);
+    out.extend_from_slice(&crc32(&payload).to_le_bytes());
+    out.extend_from_slice(&payload);
+    write_file_atomic(path, &out)?;
+    Ok(out.len())
+}
+
+/// Load a [`TrainState`] sidecar written by [`save_train_state`], with
+/// the same typed rejection of truncation, corruption, and unknown
+/// versions as the params loader.
+pub fn load_train_state(path: &Path) -> Result<TrainState, SerializeError> {
+    let mut bytes = Vec::new();
+    File::open(path)?.read_to_end(&mut bytes)?;
+    if bytes.len() < 12 {
+        return Err(SerializeError::Malformed("short train-state header"));
+    }
+    if &bytes[..7] != STATE_MAGIC {
+        return Err(SerializeError::Malformed("bad train-state magic"));
+    }
+    if bytes[7] != STATE_VERSION {
+        return Err(SerializeError::UnsupportedVersion { got: bytes[7] });
+    }
+    let stored = u32::from_le_bytes(bytes[8..12].try_into().expect("4 bytes"));
+    let payload = &bytes[12..];
+    let computed = crc32(payload);
+    if stored != computed {
+        return Err(SerializeError::ChecksumMismatch {
+            expected: stored,
+            got: computed,
+        });
+    }
+    let mut r = Reader { buf: payload, pos: 0 };
+    let next_step = r.u64()?;
+    let sampler_rng = [r.u64()?, r.u64()?, r.u64()?, r.u64()?];
+    let batch_len = r.u64()? as usize;
+    if payload.len() != 8 * (6 + batch_len) {
+        return Err(SerializeError::Malformed("train-state payload length mismatch"));
+    }
+    let mut batch = Vec::with_capacity(batch_len);
+    for _ in 0..batch_len {
+        batch.push(r.u64()?);
+    }
+    Ok(TrainState {
+        next_step,
+        sampler_rng,
+        batch,
+    })
 }
 
 // ---- whole-graph snapshot ---------------------------------------------------
@@ -299,10 +646,11 @@ pub fn restore<T: Scalar>(bytes: &[u8]) -> Result<Tape<T>, SerializeError> {
     Ok(Tape::from_raw_parts(vals, ops, a, b, aux, consts))
 }
 
-/// Save a snapshot to disk; returns bytes written.
+/// Save a snapshot to disk (atomically — see [`write_file_atomic`]);
+/// returns bytes written.
 pub fn save_snapshot<T: Scalar>(tape: &Tape<T>, path: &Path) -> Result<usize, SerializeError> {
     let bytes = snapshot(tape);
-    File::create(path)?.write_all(&bytes)?;
+    write_file_atomic(path, &bytes)?;
     Ok(bytes.len())
 }
 
@@ -466,7 +814,7 @@ mod tests {
         let mut t = Tape::<f64>::new();
         let first = t.leaves(&[1.5, -2.25, 0.0, 42.0]);
         let written = save_params_range(&t, first, 4, &path).unwrap();
-        assert_eq!(written, 17 + 4 * 8, "header + payload bytes");
+        assert_eq!(written, 21 + 4 * 8, "v2 header + payload bytes");
 
         // Roundtrip restores the exact bits.
         for k in 0..4 {
@@ -507,6 +855,171 @@ mod tests {
             load_params_range(&mut t, first, 4, &bad),
             Err(SerializeError::Malformed(_))
         ));
+    }
+
+    #[test]
+    fn crc32_matches_reference_vectors() {
+        // CRC-32/ISO-HDLC reference values (zlib-compatible).
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+    }
+
+    #[test]
+    fn corrupted_checkpoints_are_rejected_with_typed_errors() {
+        let dir = std::env::temp_dir().join("burtorch_ckpt_corruption_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("params.bin");
+
+        let mut t = Tape::<f64>::new();
+        let first = t.leaves(&[3.25, -0.5, 8.0]);
+        save_params_range(&t, first, 3, &path).unwrap();
+        let good = std::fs::read(&path).unwrap();
+
+        // A flipped payload byte fails the CRC — typed, never loaded.
+        let mut flipped = good.clone();
+        let last = flipped.len() - 1;
+        flipped[last] ^= 0x40;
+        let bad = dir.join("flipped.bin");
+        std::fs::write(&bad, &flipped).unwrap();
+        t.set_value(first, 999.0);
+        assert!(matches!(
+            load_params_range(&mut t, first, 3, &bad),
+            Err(SerializeError::ChecksumMismatch { .. })
+        ));
+        assert_eq!(t.value(first), 999.0, "a rejected load must not touch the tape");
+
+        // Truncation at any byte is malformed (header or payload).
+        for cut in [4usize, 20, good.len() - 3] {
+            let short = dir.join("short.bin");
+            std::fs::write(&short, &good[..cut]).unwrap();
+            assert!(
+                matches!(
+                    load_params_range(&mut t, first, 3, &short),
+                    Err(SerializeError::Malformed(_))
+                ),
+                "truncation at byte {cut} must be malformed"
+            );
+        }
+
+        // An unknown version byte is rejected as such.
+        let mut vnext = good.clone();
+        vnext[7] = 9;
+        let vpath = dir.join("vnext.bin");
+        std::fs::write(&vpath, &vnext).unwrap();
+        assert!(matches!(
+            load_params_range(&mut t, first, 3, &vpath),
+            Err(SerializeError::UnsupportedVersion { got: 9 })
+        ));
+
+        // No temp file lingers after an atomic save.
+        assert!(!dir.join("params.bin.tmp").exists(), "tmp must be renamed away");
+    }
+
+    #[test]
+    fn legacy_v1_checkpoints_still_load() {
+        let dir = std::env::temp_dir().join("burtorch_ckpt_v1_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("v1.bin");
+
+        // Hand-assemble the v1 layout: "BURPARM\x01" + dtype + count + payload.
+        let vals = [1.0f64, -2.0, 0.125];
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"BURPARM\x01");
+        bytes.push(8);
+        bytes.extend_from_slice(&3u64.to_le_bytes());
+        for v in vals {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(&path, &bytes).unwrap();
+
+        let mut t = Tape::<f64>::new();
+        let first = t.leaves(&[0.0, 0.0, 0.0]);
+        load_params_range(&mut t, first, 3, &path).unwrap();
+        assert_eq!(t.values_range(first, 3), &vals);
+
+        let info = inspect_params(&path).unwrap();
+        assert_eq!((info.version, info.dtype_bytes, info.count), (1, 8, 3));
+        assert_eq!(info.checksum_ok(), None, "v1 carries no checksum");
+    }
+
+    #[test]
+    fn inspect_reports_header_and_checksum_status() {
+        let dir = std::env::temp_dir().join("burtorch_ckpt_inspect_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("params.bin");
+
+        let mut t = Tape::<f32>::new();
+        let first = t.leaves(&[1.0f32, 2.0, 3.0, 4.0, 5.0]);
+        save_params_range(&t, first, 5, &path).unwrap();
+
+        let info = inspect_params(&path).unwrap();
+        assert_eq!((info.version, info.dtype_bytes, info.count), (PARAM_VERSION, 4, 5));
+        assert_eq!(info.checksum_ok(), Some(true));
+
+        // Inspect reports a bad checksum as data, not an error.
+        let mut bytes = std::fs::read(&path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xFF;
+        let bad = dir.join("bad.bin");
+        std::fs::write(&bad, &bytes).unwrap();
+        let info = inspect_params(&bad).unwrap();
+        assert_eq!(info.checksum_ok(), Some(false));
+        assert_ne!(info.stored_crc, info.computed_crc);
+
+        // Structural damage still errors.
+        assert!(inspect_params(&dir.join("missing.bin")).is_err());
+        let trunc = dir.join("trunc.bin");
+        std::fs::write(&trunc, &std::fs::read(&path).unwrap()[..10]).unwrap();
+        assert!(matches!(
+            inspect_params(&trunc),
+            Err(SerializeError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn train_state_roundtrips_and_rejects_corruption() {
+        let dir = std::env::temp_dir().join("burtorch_train_state_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let params = dir.join("w.bin");
+        let path = train_state_path(&params);
+        assert!(path.to_string_lossy().ends_with("w.bin.state"));
+
+        let state = TrainState {
+            next_step: 1234,
+            sampler_rng: [1, u64::MAX, 0xDEAD_BEEF, 42],
+            batch: vec![7, 0, 99, 3],
+        };
+        save_train_state(&state, &path).unwrap();
+        assert_eq!(load_train_state(&path).unwrap(), state);
+
+        let good = std::fs::read(&path).unwrap();
+        let mut flipped = good.clone();
+        flipped[20] ^= 0x08;
+        let bad = dir.join("bad.state");
+        std::fs::write(&bad, &flipped).unwrap();
+        assert!(matches!(
+            load_train_state(&bad),
+            Err(SerializeError::ChecksumMismatch { .. })
+        ));
+        let short = dir.join("short.state");
+        std::fs::write(&short, &good[..good.len() - 8]).unwrap();
+        assert!(matches!(
+            load_train_state(&short),
+            Err(SerializeError::ChecksumMismatch { .. }) | Err(SerializeError::Malformed(_))
+        ));
+        assert!(load_train_state(&dir.join("none.state")).is_err());
+    }
+
+    #[test]
+    fn atomic_write_replaces_existing_content_completely() {
+        let dir = std::env::temp_dir().join("burtorch_atomic_write_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("target.bin");
+        write_file_atomic(&path, b"first version, longer").unwrap();
+        write_file_atomic(&path, b"second").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"second");
+        assert!(!dir.join("target.bin.tmp").exists());
     }
 
     #[test]

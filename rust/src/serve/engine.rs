@@ -37,14 +37,44 @@
 //! only the live programs (`Gpt::compact_gen_cache`) — so a lane tape's
 //! length stays bounded by ~2× the live program mass no matter how many
 //! distinct shapes a long-lived server sees.
+//!
+//! ## Fault tolerance: lane quarantine and graceful degradation
+//!
+//! A panic inside a lane (tape machinery, replay, compaction — or one
+//! injected by a [`FaultPlan`]) is caught at the dispatch boundary
+//! ([`WorkerPool::run_catching`], or an inline `catch_unwind` on the
+//! single-lane path). The lane is **quarantined**: its replica tape and
+//! program cache are presumed corrupt and are rebuilt at the start of
+//! the next tick — rewind to the parameter base, restore the parameter
+//! values from the engine's pristine master copy, clear the cache. The
+//! engine keeps serving throughout; sessions the dead lane did not
+//! advance simply get their token on the next tick from a healthy (or
+//! healed) lane. Because sessions own all sampling state, a faulted run's
+//! outputs are **bitwise identical** to a never-faulted run — faults cost
+//! latency, never correctness (`tests/fault_tolerance.rs`).
+//!
+//! ## Deadlines and backpressure
+//!
+//! Each request may carry a wall-clock deadline; an expired session is
+//! finished where it stands with status `deadline` — its output is a
+//! well-formed prefix of the un-deadlined completion. The admission queue
+//! is optionally bounded: a submission past the bound is shed immediately
+//! as a synthetic `evicted` completion instead of growing the queue
+//! without limit. [`ServeOptions::max_tokens`] caps any request's token
+//! budget at admission.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::time::Instant;
 
 use crate::nn::Gpt;
 use crate::parallel::{PtrSend, WorkerPool};
 use crate::scalar::Scalar;
 use crate::tape::{ProgramCache, Recording, Tape, Value};
+use crate::testkit::FaultPlan;
 
 use super::scheduler::Scheduler;
-use super::session::{Request, Session};
+use super::session::{Request, Session, SessionStatus};
+use super::ParsedRequest;
 
 /// Lane-cache payload: a frozen logits recording plus its rebind slots.
 type GenProgram = (Recording, crate::nn::GptGenBinds);
@@ -61,6 +91,20 @@ pub struct ServeOptions {
     pub cache_cap: usize,
     /// Maximum concurrently active sessions (0 = unlimited).
     pub max_active: usize,
+    /// Admission-queue bound (0 = unbounded). The bound counts sessions
+    /// that would still be *waiting* after the next admission tick —
+    /// free `max_active` slots extend it, so an idle server never sheds.
+    /// Submissions past the bound are shed as synthetic `evicted`
+    /// completions — explicit backpressure instead of unbounded memory
+    /// growth.
+    pub max_queue: usize,
+    /// Default wall-clock deadline in milliseconds applied to requests
+    /// that carry none (`None` = no default; requests without deadlines
+    /// run to their token budget).
+    pub deadline_ms: Option<u64>,
+    /// Hard cap on any request's `max_new_tokens` (0 = unlimited). A
+    /// clamped request still completes with status `ok`.
+    pub max_tokens: usize,
 }
 
 impl Default for ServeOptions {
@@ -69,6 +113,9 @@ impl Default for ServeOptions {
             lanes: 1,
             cache_cap: 0,
             max_active: 0,
+            max_queue: 0,
+            deadline_ms: None,
+            max_tokens: 0,
         }
     }
 }
@@ -94,6 +141,10 @@ pub struct ServeStats {
     pub cached_programs: usize,
     /// Peak tape length observed on any lane.
     pub peak_tape_nodes: usize,
+    /// Lane faults caught and quarantined (each heals on the next tick).
+    pub quarantines: u64,
+    /// Requests shed at submission (queue full or fault-plan rejection).
+    pub shed: u64,
 }
 
 /// One serving lane: a replica tape plus its shape-keyed program cache.
@@ -105,6 +156,9 @@ struct ServeLane<T: Scalar> {
     zs: Vec<f64>,
     compactions: u64,
     peak_nodes: usize,
+    /// Set when a fault was caught on this lane: the tape and cache are
+    /// presumed corrupt and must be rebuilt before the lane runs again.
+    poisoned: bool,
 }
 
 impl<T: Scalar> ServeLane<T> {
@@ -119,6 +173,7 @@ impl<T: Scalar> ServeLane<T> {
             zs: Vec::with_capacity(vocab),
             compactions: 0,
             peak_nodes: 0,
+            poisoned: false,
         }
     }
 }
@@ -138,7 +193,7 @@ impl<T: Scalar> ServeLane<T> {
 /// let cfg = GptConfig { n_layer: 1, d_model: 8, n_head: 2, ..GptConfig::paper() };
 /// let model = Gpt::new(&mut tape, cfg, &mut rng);
 /// let mut engine = ServeEngine::new(tape, model, ServeOptions::default());
-/// engine.submit(Request { id: 1, prompt: vec![5, 6], max_new_tokens: 4, temperature: 0.8, seed: 11 });
+/// engine.submit(Request { id: 1, prompt: vec![5, 6], max_new_tokens: 4, temperature: 0.8, seed: 11, deadline_ms: None });
 /// let done = engine.run_to_completion();
 /// assert_eq!(done.len(), 1);
 /// assert_eq!(done[0].output().len(), 4);
@@ -155,9 +210,30 @@ pub struct ServeEngine<T: Scalar> {
     work: Vec<usize>,
     /// Reusable per-tick lane chunk bounds (`n_lanes + 1` entries).
     bounds: Vec<usize>,
+    /// Pristine copy of the parameter-prefix values, captured at
+    /// construction — the heal source for quarantined lanes.
+    param_master: Vec<T>,
+    /// Synthetic completions (shed/errored requests) awaiting return by
+    /// the next [`ServeEngine::step`].
+    pending_shed: Vec<Session>,
+    /// Default deadline applied to requests that carry none.
+    default_deadline_ms: Option<u64>,
+    /// Engine-wide cap on per-request token budgets (0 = unlimited).
+    max_tokens: usize,
+    /// True once any live request carries a deadline — gates the
+    /// per-tick clock reads and deadline sweep off the no-deadline path.
+    any_deadlines: bool,
+    /// Injected fault schedule (tests); `None` in production.
+    fault_plan: Option<FaultPlan>,
+    /// Injected clock for deterministic deadline tests; `None` = wall
+    /// clock (milliseconds since engine construction).
+    clock: Option<Box<dyn Fn() -> u64>>,
+    started: Instant,
     tokens: u64,
     steps: u64,
     completed: u64,
+    quarantines: u64,
+    shed_count: u64,
 }
 
 impl<T: Scalar> ServeEngine<T> {
@@ -177,16 +253,49 @@ impl<T: Scalar> ServeEngine<T> {
         }
         lanes.insert(0, ServeLane::new(tape, opts.cache_cap, vocab));
         let pool = (n_lanes > 1).then(|| WorkerPool::new(n_lanes - 1));
+        let param_master: Vec<T> = {
+            let t = &lanes[0].tape;
+            (0..model.base.node_count()).map(|i| t.value(Value(i as u32))).collect()
+        };
         ServeEngine {
             model,
             lanes,
             pool,
-            sched: Scheduler::new(opts.max_active),
+            sched: Scheduler::with_queue_bound(opts.max_active, opts.max_queue),
             work: Vec::new(),
             bounds: Vec::new(),
+            param_master,
+            pending_shed: Vec::new(),
+            default_deadline_ms: opts.deadline_ms,
+            max_tokens: opts.max_tokens,
+            any_deadlines: false,
+            fault_plan: None,
+            clock: None,
+            started: Instant::now(),
             tokens: 0,
             steps: 0,
             completed: 0,
+            quarantines: 0,
+            shed_count: 0,
+        }
+    }
+
+    /// Install a deterministic fault schedule (tests only; `None` is the
+    /// production state and costs one branch per dispatch).
+    pub fn set_fault_plan(&mut self, plan: FaultPlan) {
+        self.fault_plan = Some(plan);
+    }
+
+    /// Replace the wall clock with an injected one (milliseconds). Lets
+    /// deadline tests advance time deterministically.
+    pub fn set_clock(&mut self, clock: impl Fn() -> u64 + 'static) {
+        self.clock = Some(Box::new(clock));
+    }
+
+    fn now_ms(&self) -> u64 {
+        match &self.clock {
+            Some(f) => f(),
+            None => self.started.elapsed().as_millis() as u64,
         }
     }
 
@@ -200,21 +309,92 @@ impl<T: Scalar> ServeEngine<T> {
         self.lanes.len()
     }
 
-    /// Submit a generation request (admitted on the next step).
-    pub fn submit(&mut self, req: Request) {
-        self.sched.submit(Session::new(req));
+    /// Submit a generation request (admitted on the next step). Returns
+    /// `false` when the request was shed — admission queue full, or a
+    /// fault plan rejected it — in which case a synthetic `evicted`
+    /// completion is returned by the next [`ServeEngine::step`] so every
+    /// submission still yields exactly one completion.
+    pub fn submit(&mut self, mut req: Request) -> bool {
+        if req.deadline_ms.is_none() {
+            req.deadline_ms = self.default_deadline_ms;
+        }
+        if let Some(plan) = &self.fault_plan {
+            if plan.rejects(req.id) {
+                self.pending_shed
+                    .push(Session::rejected(req.id, "rejected by fault plan"));
+                self.shed_count += 1;
+                return false;
+            }
+        }
+        self.any_deadlines |= req.deadline_ms.is_some();
+        let mut sess = Session::new(req);
+        sess.clamp_max_tokens(self.max_tokens);
+        match self.sched.submit(sess) {
+            Ok(()) => true,
+            Err(s) => {
+                let bound = self.sched.queue_bound();
+                self.pending_shed.push(Session::rejected(
+                    s.id(),
+                    format!("admission queue full ({bound} pending)"),
+                ));
+                self.shed_count += 1;
+                false
+            }
+        }
     }
 
-    /// Sessions currently queued or in flight.
+    /// Submit one outcome of request parsing: a valid request goes
+    /// through [`ServeEngine::submit`]; an invalid one (e.g.
+    /// out-of-vocabulary prompt) becomes an immediate `error` completion
+    /// instead of aborting the batch.
+    pub fn submit_parsed(&mut self, parsed: ParsedRequest) -> bool {
+        match parsed {
+            ParsedRequest::Ok(req) => self.submit(req),
+            ParsedRequest::Invalid { id, reason } => {
+                self.pending_shed.push(Session::errored(id, reason));
+                false
+            }
+        }
+    }
+
+    /// Sessions currently queued or in flight (shed requests awaiting
+    /// their synthetic completion count too — every submission drains
+    /// through [`ServeEngine::step`] exactly once).
     pub fn in_flight(&self) -> usize {
-        self.sched.active_len() + self.sched.pending_len()
+        self.sched.active_len() + self.sched.pending_len() + self.pending_shed.len()
     }
 
-    /// Run one scheduler tick: admit pending requests, advance every
-    /// active session by one token (shape-grouped, fanned across lanes),
-    /// and return the sessions that completed this tick.
+    /// Run one scheduler tick: heal any quarantined lanes, admit pending
+    /// requests, expire sessions past their deadlines, advance every
+    /// remaining active session by one token (shape-grouped, fanned
+    /// across lanes, lane faults caught and quarantined), and return the
+    /// sessions that completed this tick — including synthetic
+    /// completions for requests shed since the last tick.
     pub fn step(&mut self) -> Vec<Session> {
-        self.sched.admit();
+        let mut done = std::mem::take(&mut self.pending_shed);
+        for lane in &mut self.lanes {
+            if lane.poisoned {
+                heal_lane(&self.model, lane, &self.param_master);
+            }
+        }
+        let n_admitted = self.sched.admit();
+        if self.any_deadlines {
+            let now = self.now_ms();
+            let n_active = self.sched.active_len();
+            let sessions = self.sched.active_sessions_mut();
+            for s in &mut sessions[n_active - n_admitted..] {
+                s.set_admitted_at(now);
+            }
+            for s in sessions.iter_mut() {
+                if !s.is_done() && s.past_deadline(now) {
+                    let budget = s.deadline_ms().unwrap_or(0);
+                    s.finish(
+                        SessionStatus::Deadline,
+                        Some(format!("deadline of {budget}ms exceeded")),
+                    );
+                }
+            }
+        }
         let block = self.model.cfg.block_size;
         // Work list: every unfinished active session, ordered by (window
         // length, admission index) — exactly the flattened shape groups
@@ -241,17 +421,38 @@ impl<T: Scalar> ServeEngine<T> {
             let model = &self.model;
             let work_ref: &[usize] = &self.work;
             let bounds_ref: &[usize] = &self.bounds;
+            let step_no = self.steps;
+            // Only consult the plan when lane panics are scheduled; the
+            // production path is a single `None` check.
+            let plan = self
+                .fault_plan
+                .as_ref()
+                .filter(|p| !p.lane_panics.is_empty());
             let sessions = self.sched.active_sessions_mut();
+            // Token accounting must survive a mid-tick fault: count what
+            // was actually generated, not what was scheduled.
+            let gen_before: usize = work_ref.iter().map(|&i| sessions[i].generated()).sum();
+            let mut faulted: Vec<usize> = Vec::new();
             if n_lanes == 1 {
                 let lane = &mut self.lanes[0];
-                for &si in work_ref {
-                    advance_session(model, lane, &mut sessions[si]);
+                let outcome = catch_unwind(AssertUnwindSafe(|| {
+                    for (k, &si) in work_ref.iter().enumerate() {
+                        if let Some(p) = plan {
+                            if p.should_panic(0, step_no, k) {
+                                panic!("injected fault: lane 0, step {step_no}");
+                            }
+                        }
+                        advance_session(model, lane, &mut sessions[si]);
+                    }
+                }));
+                if outcome.is_err() {
+                    faulted.push(0);
                 }
             } else {
                 let pool = self.pool.as_ref().expect("multi-lane engine has a pool");
                 let lane_ptr = PtrSend(self.lanes.as_mut_ptr());
                 let sess_ptr = PtrSend(sessions.as_mut_ptr());
-                pool.run(&|l| {
+                let panics = pool.run_catching(&|l| {
                     if l >= n_lanes {
                         return;
                     }
@@ -259,30 +460,46 @@ impl<T: Scalar> ServeEngine<T> {
                     // work chunks are disjoint index sets into the active
                     // sessions (each active session appears at most once
                     // in `work`), so every &mut below is exclusive; both
-                    // buffers outlive the step because `run` returns only
-                    // after every worker finished.
+                    // buffers outlive the step because `run_catching`
+                    // returns only after every worker finished. A panic
+                    // fires only *between* session advancements (the tape
+                    // machinery raises before `push_logits` mutates the
+                    // session), so caught faults never leave a session
+                    // half-advanced.
                     unsafe {
                         let lane = &mut *lane_ptr.0.add(l);
-                        for &si in &work_ref[bounds_ref[l]..bounds_ref[l + 1]] {
+                        let chunk = &work_ref[bounds_ref[l]..bounds_ref[l + 1]];
+                        for (k, &si) in chunk.iter().enumerate() {
+                            if let Some(p) = plan {
+                                if p.should_panic(l, step_no, k) {
+                                    panic!("injected fault: lane {l}, step {step_no}");
+                                }
+                            }
                             advance_session(model, lane, &mut *sess_ptr.0.add(si));
                         }
                     }
                 });
+                faulted.extend(panics.into_iter().map(|(l, _)| l).filter(|&l| l < n_lanes));
             }
-            self.tokens += n_work as u64;
+            let gen_after: usize = work_ref.iter().map(|&i| sessions[i].generated()).sum();
+            self.tokens += (gen_after - gen_before) as u64;
+            for l in faulted {
+                self.lanes[l].poisoned = true;
+                self.quarantines += 1;
+            }
         }
         self.steps += 1;
-        let done = self.sched.drain_done();
+        done.extend(self.sched.drain_done());
         self.completed += done.len() as u64;
         done
     }
 
     /// Drive [`ServeEngine::step`] until every submitted session has
     /// completed; returns the completions in completion order (admission
-    /// order within a tick).
+    /// order within a tick, shed completions first).
     pub fn run_to_completion(&mut self) -> Vec<Session> {
         let mut done = Vec::new();
-        while !self.sched.is_idle() {
+        while !self.sched.is_idle() || !self.pending_shed.is_empty() {
             done.extend(self.step());
         }
         done
@@ -294,6 +511,8 @@ impl<T: Scalar> ServeEngine<T> {
             tokens: self.tokens,
             steps: self.steps,
             completed: self.completed,
+            quarantines: self.quarantines,
+            shed: self.shed_count,
             ..ServeStats::default()
         };
         for lane in &self.lanes {
@@ -325,6 +544,24 @@ fn advance_session<T: Scalar>(model: &Gpt, lane: &mut ServeLane<T>, sess: &mut S
     }
     sess.push_logits(&lane.zs);
     sess.tick();
+}
+
+/// Rebuild a quarantined lane from scratch: rewind the tape to the
+/// parameter base (a plain truncation, so it is safe even when the fault
+/// struck mid-append and left the stacked region inconsistent), restore
+/// every parameter value from the engine's pristine master copy (defense
+/// in depth — serving never writes the prefix, but a quarantined lane is
+/// trusted about nothing), and drop every cached program (their recorded
+/// tape bases died with the rewind). The heal is O(params + tape) and
+/// happens off the fault path, at the start of the next tick.
+fn heal_lane<T: Scalar>(model: &Gpt, lane: &mut ServeLane<T>, master: &[T]) {
+    lane.tape.rewind(model.base);
+    for (i, &v) in master.iter().enumerate() {
+        lane.tape.set_value(Value(i as u32), v);
+    }
+    lane.cache.clear();
+    lane.zs.clear();
+    lane.poisoned = false;
 }
 
 /// Compact the lane when at least half of its stacked region is dead
@@ -371,6 +608,7 @@ mod tests {
             max_new_tokens: n,
             temperature: 0.8,
             seed,
+            deadline_ms: None,
         }
     }
 
@@ -425,5 +663,128 @@ mod tests {
         };
         assert_eq!(run(0), run(1), "admission staggering must not change tokens");
         assert_eq!(run(0), run(2));
+    }
+
+    #[test]
+    fn bounded_queue_sheds_with_evicted_status_and_serves_the_rest() {
+        let (tape, model) = tiny();
+        let mut eng = ServeEngine::new(
+            tape,
+            model,
+            ServeOptions {
+                max_active: 1,
+                max_queue: 1,
+                ..ServeOptions::default()
+            },
+        );
+        assert!(eng.submit(req(1, vec![1], 3, 10)));
+        assert!(eng.submit(req(2, vec![2], 3, 20)));
+        assert!(!eng.submit(req(3, vec![3], 3, 30)), "queue bound of 1 hit");
+        assert_eq!(eng.in_flight(), 3, "the shed completion still drains");
+        let done = eng.run_to_completion();
+        assert_eq!(done.len(), 3);
+        let shed: Vec<&Session> = done
+            .iter()
+            .filter(|s| s.status() == SessionStatus::Evicted)
+            .collect();
+        assert_eq!(shed.len(), 1);
+        assert_eq!(shed[0].id(), 3);
+        assert!(shed[0].note().expect("reason").contains("queue full"));
+        assert!(shed[0].output().is_empty());
+        for s in &done {
+            if s.id() != 3 {
+                assert_eq!(s.status(), SessionStatus::Ok);
+                assert_eq!(s.output().len(), 3);
+            }
+        }
+        assert_eq!(eng.stats().shed, 1);
+    }
+
+    #[test]
+    fn deadline_truncates_to_a_bitwise_prefix_of_the_undeadlined_run() {
+        // Reference: no deadline.
+        let (tape, model) = tiny();
+        let mut free = ServeEngine::new(tape, model, ServeOptions::default());
+        free.submit(req(1, vec![1, 2], 8, 10));
+        let full = free.run_to_completion().remove(0).output().to_vec();
+
+        // Deadlined: injected clock advances 1ms per call; admission
+        // stamps t=1, sweep at t=2,3,... expires the 3ms budget before
+        // tick 4's token.
+        let (tape, model) = tiny();
+        let mut eng = ServeEngine::new(tape, model, ServeOptions::default());
+        let t = std::rc::Rc::new(std::cell::Cell::new(0u64));
+        let tc = t.clone();
+        eng.set_clock(move || {
+            tc.set(tc.get() + 1);
+            tc.get()
+        });
+        let mut r = req(1, vec![1, 2], 8, 10);
+        r.deadline_ms = Some(3);
+        eng.submit(r);
+        let done = eng.run_to_completion();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].status(), SessionStatus::Deadline);
+        let out = done[0].output();
+        assert!(!out.is_empty() && out.len() < 8, "truncated: {}", out.len());
+        assert_eq!(out, &full[..out.len()], "output is a bitwise prefix");
+    }
+
+    #[test]
+    fn max_tokens_cap_clamps_every_request() {
+        let (tape, model) = tiny();
+        let mut eng = ServeEngine::new(
+            tape,
+            model,
+            ServeOptions {
+                max_tokens: 2,
+                ..ServeOptions::default()
+            },
+        );
+        eng.submit(req(1, vec![1], 9, 10));
+        eng.submit(req(2, vec![2], 1, 20));
+        let mut done = eng.run_to_completion();
+        done.sort_by_key(|s| s.id());
+        assert_eq!(done[0].output().len(), 2, "clamped to the cap");
+        assert_eq!(done[1].output().len(), 1, "under the cap: untouched");
+        assert!(done.iter().all(|s| s.status() == SessionStatus::Ok));
+    }
+
+    #[test]
+    fn injected_lane_fault_quarantines_heals_and_keeps_outputs_bitwise() {
+        use crate::testkit::FaultPlan;
+        let reqs = |eng: &mut ServeEngine<f64>| {
+            for id in 0..6u64 {
+                eng.submit(req(id, vec![1 + id as u32 % 4], 6, 100 + id));
+            }
+        };
+        let collect = |mut eng: ServeEngine<f64>| -> Vec<(u64, Vec<u32>)> {
+            let mut done: Vec<(u64, Vec<u32>)> = eng
+                .run_to_completion()
+                .into_iter()
+                .map(|s| (s.id(), s.output().to_vec()))
+                .collect();
+            done.sort();
+            done
+        };
+        let opts = ServeOptions {
+            lanes: 3,
+            ..ServeOptions::default()
+        };
+        let (tape, model) = tiny();
+        let mut clean = ServeEngine::new(tape, model, opts);
+        reqs(&mut clean);
+        let want = collect(clean);
+
+        let (tape, model) = tiny();
+        let mut faulty = ServeEngine::new(tape, model, opts);
+        faulty.set_fault_plan(FaultPlan::default().panic_lane(1, 2, 1).panic_lane(2, 4, 0));
+        reqs(&mut faulty);
+        for _ in 0..3 {
+            faulty.step(); // steps 0..=2; lane 1 dies at step 2 after one session
+        }
+        assert_eq!(faulty.stats().quarantines, 1);
+        let got = collect(faulty);
+        assert_eq!(got, want, "degraded output must be bitwise identical");
     }
 }

@@ -44,9 +44,28 @@ pub mod session;
 
 pub use engine::{ServeEngine, ServeOptions, ServeStats};
 pub use scheduler::Scheduler;
-pub use session::{Request, Session};
+pub use session::{Request, Session, SessionStatus};
 
 use crate::data::CharTokenizer;
+
+/// One outcome of request parsing: either a well-formed [`Request`], or
+/// a request-shaped line whose *content* was invalid (e.g. a prompt
+/// character outside the model's vocabulary). Invalid requests keep
+/// their id and a reason so the engine can report them as per-request
+/// `error` completions ([`ServeEngine::submit_parsed`]) instead of one
+/// bad line aborting the whole batch.
+#[derive(Clone, Debug)]
+pub enum ParsedRequest {
+    /// The line parsed into a servable request.
+    Ok(Request),
+    /// The line was structurally fine but unservable; `reason` says why.
+    Invalid {
+        /// The id the request would have had.
+        id: u64,
+        /// What made it unservable.
+        reason: String,
+    },
+}
 
 /// Parse the serve request-file format: one request per line,
 ///
@@ -56,70 +75,101 @@ use crate::data::CharTokenizer;
 ///
 /// Blank lines and lines starting with `#` are skipped; the prompt is
 /// everything after the third `|` (verbatim, so it may itself contain
-/// `|`) and is encoded with the given character tokenizer. Returns a
-/// descriptive error for malformed lines or out-of-vocabulary prompt
-/// characters. Request ids are assigned sequentially from 0.
+/// `|`) and is encoded with the given character tokenizer. Request ids
+/// are assigned sequentially from 0.
+///
+/// Two failure tiers: a **malformed line** (missing field, or a field
+/// that does not parse) aborts with an error naming the 1-based line
+/// number and the offending field; a structurally fine line whose prompt
+/// is unservable (out-of-vocabulary character, empty prompt) becomes
+/// [`ParsedRequest::Invalid`] so the rest of the batch still runs.
 ///
 /// # Examples
 ///
 /// ```
 /// use burtorch::data::CharTokenizer;
-/// use burtorch::serve::parse_requests;
+/// use burtorch::serve::{parse_requests, ParsedRequest};
 ///
 /// let tok = CharTokenizer::from_text("abc ", 0);
 /// let reqs = parse_requests("# a comment\n7|12|0.8|abc a\n\n9|4|1.0|b c\n", &tok).unwrap();
 /// assert_eq!(reqs.len(), 2);
-/// assert_eq!(reqs[0].seed, 7);
-/// assert_eq!(reqs[0].max_new_tokens, 12);
-/// assert_eq!(reqs[0].prompt.len(), 5);
-/// assert_eq!(reqs[1].id, 1);
-/// assert!(parse_requests("1|2|0.5|zzz", &tok).is_err()); // OOV prompt
+/// match &reqs[0] {
+///     ParsedRequest::Ok(r) => {
+///         assert_eq!((r.seed, r.max_new_tokens, r.prompt.len()), (7, 12, 5));
+///     }
+///     _ => unreachable!(),
+/// }
+/// // An out-of-vocabulary prompt no longer aborts the batch:
+/// let mixed = parse_requests("1|2|0.5|zzz\n3|2|1.0|ab", &tok).unwrap();
+/// assert!(matches!(&mixed[0], ParsedRequest::Invalid { id: 0, .. }));
+/// assert!(matches!(&mixed[1], ParsedRequest::Ok(_)));
+/// // A malformed field still fails the parse, naming line and field:
+/// let e = parse_requests("1|two|0.5|ab", &tok).unwrap_err();
+/// assert!(e.contains("line 1") && e.contains("field 'max_new_tokens'"));
 /// ```
-pub fn parse_requests(text: &str, tok: &CharTokenizer) -> Result<Vec<Request>, String> {
+pub fn parse_requests(text: &str, tok: &CharTokenizer) -> Result<Vec<ParsedRequest>, String> {
     let mut out = Vec::new();
     for (lineno, raw) in text.lines().enumerate() {
         let line = raw.trim_end_matches('\r');
         if line.trim().is_empty() || line.trim_start().starts_with('#') {
             continue;
         }
+        let id = out.len() as u64;
         let mut parts = line.splitn(4, '|');
         let err = |what: &str| format!("request line {}: {what}: '{line}'", lineno + 1);
         let seed: u64 = parts
             .next()
-            .ok_or_else(|| err("missing seed"))?
+            .ok_or_else(|| err("missing field 'seed'"))?
             .trim()
             .parse()
-            .map_err(|_| err("bad seed (expected u64)"))?;
+            .map_err(|_| err("field 'seed': expected a u64"))?;
         let max_new_tokens: usize = parts
             .next()
-            .ok_or_else(|| err("missing token count"))?
+            .ok_or_else(|| err("missing field 'max_new_tokens'"))?
             .trim()
             .parse()
-            .map_err(|_| err("bad token count (expected usize)"))?;
+            .map_err(|_| err("field 'max_new_tokens': expected a usize"))?;
         let temperature: f64 = parts
             .next()
-            .ok_or_else(|| err("missing temperature"))?
+            .ok_or_else(|| err("missing field 'temperature'"))?
             .trim()
             .parse()
-            .map_err(|_| err("bad temperature (expected f64)"))?;
-        let prompt_text = parts.next().ok_or_else(|| err("missing prompt"))?;
+            .map_err(|_| err("field 'temperature': expected an f64"))?;
+        let prompt_text = parts.next().ok_or_else(|| err("missing field 'prompt'"))?;
         if prompt_text.is_empty() {
-            return Err(err("empty prompt"));
+            out.push(ParsedRequest::Invalid {
+                id,
+                reason: format!("request line {}: field 'prompt' is empty", lineno + 1),
+            });
+            continue;
         }
         let mut prompt = Vec::with_capacity(prompt_text.len());
+        let mut bad_char = None;
         for c in prompt_text.chars() {
             if !tok.contains(c) {
-                return Err(err(&format!("prompt char {c:?} not in vocabulary")));
+                bad_char = Some(c);
+                break;
             }
             prompt.push(tok.encode_char(c));
         }
-        out.push(Request {
-            id: out.len() as u64,
+        if let Some(c) = bad_char {
+            out.push(ParsedRequest::Invalid {
+                id,
+                reason: format!(
+                    "request line {}: prompt char {c:?} not in vocabulary",
+                    lineno + 1
+                ),
+            });
+            continue;
+        }
+        out.push(ParsedRequest::Ok(Request {
+            id,
             prompt,
             max_new_tokens,
             temperature,
             seed,
-        });
+            deadline_ms: None,
+        }));
     }
     Ok(out)
 }
@@ -129,21 +179,48 @@ mod tests {
     use super::*;
 
     #[test]
-    fn parse_requests_reports_malformed_lines_with_line_numbers() {
+    fn parse_requests_reports_malformed_lines_with_line_and_field() {
         let tok = CharTokenizer::from_text("ab", 0);
         assert!(parse_requests("", &tok).unwrap().is_empty());
         let e = parse_requests("1|2|0.5", &tok).unwrap_err();
-        assert!(e.contains("line 1") && e.contains("missing prompt"), "{e}");
+        assert!(e.contains("line 1") && e.contains("field 'prompt'"), "{e}");
         let e = parse_requests("# ok\nx|2|0.5|ab", &tok).unwrap_err();
-        assert!(e.contains("line 2") && e.contains("bad seed"), "{e}");
+        assert!(e.contains("line 2") && e.contains("field 'seed'"), "{e}");
         let e = parse_requests("1|2|hot|ab", &tok).unwrap_err();
-        assert!(e.contains("bad temperature"), "{e}");
+        assert!(e.contains("field 'temperature'"), "{e}");
+        let e = parse_requests("1|two|0.5|ab", &tok).unwrap_err();
+        assert!(e.contains("field 'max_new_tokens'"), "{e}");
+    }
+
+    #[test]
+    fn unservable_prompts_become_invalid_requests_not_batch_failures() {
+        let tok = CharTokenizer::from_text("ab", 0);
+        let reqs = parse_requests("1|2|0.5|az\n\n2|3|1.0|ba\n3|1|1.0|", &tok).unwrap();
+        assert_eq!(reqs.len(), 3);
+        match &reqs[0] {
+            ParsedRequest::Invalid { id, reason } => {
+                assert_eq!(*id, 0);
+                assert!(reason.contains("line 1") && reason.contains("'z'"), "{reason}");
+            }
+            other => panic!("expected Invalid, got {other:?}"),
+        }
+        assert!(matches!(&reqs[1], ParsedRequest::Ok(r) if r.id == 1));
+        match &reqs[2] {
+            ParsedRequest::Invalid { id, reason } => {
+                assert_eq!(*id, 2);
+                assert!(reason.contains("line 4") && reason.contains("empty"), "{reason}");
+            }
+            other => panic!("expected Invalid, got {other:?}"),
+        }
     }
 
     #[test]
     fn prompts_may_contain_the_separator() {
         let tok = CharTokenizer::from_text("ab|", 0);
         let reqs = parse_requests("3|2|1.0|a|b", &tok).unwrap();
-        assert_eq!(reqs[0].prompt.len(), 3, "prompt keeps its own '|'");
+        match &reqs[0] {
+            ParsedRequest::Ok(r) => assert_eq!(r.prompt.len(), 3, "prompt keeps its own '|'"),
+            other => panic!("expected Ok, got {other:?}"),
+        }
     }
 }

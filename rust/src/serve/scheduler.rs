@@ -23,32 +23,67 @@ pub struct Scheduler {
     active: Vec<Session>,
     /// Maximum concurrently active sessions (0 = unlimited).
     max_active: usize,
+    /// Maximum queued-but-not-admitted sessions (0 = unbounded). When the
+    /// bound is hit, [`Scheduler::submit`] sheds the new arrival instead
+    /// of growing without bound — explicit backpressure.
+    max_queue: usize,
 }
 
 impl Scheduler {
     /// New scheduler admitting at most `max_active` concurrent sessions
-    /// (0 = no limit).
+    /// (0 = no limit), with an unbounded admission queue.
     pub fn new(max_active: usize) -> Scheduler {
+        Scheduler::with_queue_bound(max_active, 0)
+    }
+
+    /// New scheduler with both a concurrency bound and an admission-queue
+    /// bound (either may be 0 = unlimited).
+    pub fn with_queue_bound(max_active: usize, max_queue: usize) -> Scheduler {
         Scheduler {
             queue: VecDeque::new(),
             active: Vec::new(),
             max_active,
+            max_queue,
         }
     }
 
-    /// Enqueue a session for admission.
-    pub fn submit(&mut self, session: Session) {
+    /// The admission-queue bound (0 = unbounded).
+    pub fn queue_bound(&self) -> usize {
+        self.max_queue
+    }
+
+    /// Enqueue a session for admission. The queue bound counts sessions
+    /// that would still be *waiting* after the next admission tick, so
+    /// free concurrency slots extend it: an idle server never sheds a
+    /// request just because its backlog bound is small. (With unlimited
+    /// concurrency nothing waits past one tick, so the bound never
+    /// sheds.) At the bound the session is handed back unchanged as
+    /// `Err` — the caller decides how to report the shed (the engine
+    /// turns it into an `evicted` completion).
+    pub fn submit(&mut self, session: Session) -> Result<(), Session> {
+        if self.max_queue > 0 && self.max_active > 0 {
+            let free = self.max_active.saturating_sub(self.active.len());
+            if self.queue.len() >= self.max_queue + free {
+                return Err(session);
+            }
+        }
         self.queue.push_back(session);
+        Ok(())
     }
 
     /// Admit queued sessions up to the concurrency bound, in submission
-    /// order.
-    pub fn admit(&mut self) {
+    /// order. Returns how many were admitted this call — the newly
+    /// admitted sessions are the last `n` of
+    /// [`Scheduler::active_sessions`], so the engine can stamp their
+    /// admission time.
+    pub fn admit(&mut self) -> usize {
+        let before = self.active.len();
         while !self.queue.is_empty()
             && (self.max_active == 0 || self.active.len() < self.max_active)
         {
             self.active.push(self.queue.pop_front().expect("nonempty queue"));
         }
+        self.active.len() - before
     }
 
     /// Sessions currently in flight.
@@ -135,6 +170,7 @@ mod tests {
             max_new_tokens: n,
             temperature: 1.0,
             seed: id,
+            deadline_ms: None,
         })
     }
 
@@ -142,9 +178,9 @@ mod tests {
     fn admission_respects_the_concurrency_bound() {
         let mut s = Scheduler::new(2);
         for id in 0..5 {
-            s.submit(sess(id, 3, 1));
+            s.submit(sess(id, 3, 1)).expect("unbounded queue");
         }
-        s.admit();
+        assert_eq!(s.admit(), 2);
         assert_eq!((s.active_len(), s.pending_len()), (2, 3));
         // Draining a finished session frees a slot for the next admit.
         let logits = vec![0.0; 4];
@@ -152,7 +188,7 @@ mod tests {
         let done = s.drain_done();
         assert_eq!(done.len(), 1);
         assert_eq!(done[0].id(), 0);
-        s.admit();
+        assert_eq!(s.admit(), 1);
         assert_eq!((s.active_len(), s.pending_len()), (2, 2));
         // Admission order is preserved: survivor 1, then newcomer 2.
         let ids: Vec<u64> = s.active_sessions_mut().iter().map(|x| x.id()).collect();
@@ -162,11 +198,11 @@ mod tests {
     #[test]
     fn shape_groups_sort_by_window_and_keep_admission_order() {
         let mut s = Scheduler::new(0);
-        s.submit(sess(0, 5, 1)); // window 5
-        s.submit(sess(1, 2, 1)); // window 2
-        s.submit(sess(2, 5, 1)); // window 5
-        s.submit(sess(3, 12, 1)); // clipped to block 8
-        s.submit(sess(4, 2, 0)); // already done: excluded
+        let _ = s.submit(sess(0, 5, 1)); // window 5
+        let _ = s.submit(sess(1, 2, 1)); // window 2
+        let _ = s.submit(sess(2, 5, 1)); // window 5
+        let _ = s.submit(sess(3, 12, 1)); // clipped to block 8
+        let _ = s.submit(sess(4, 2, 0)); // already done: excluded
         s.admit();
         let groups = s.shape_groups(8);
         assert_eq!(
@@ -179,10 +215,66 @@ mod tests {
     fn unlimited_scheduler_admits_everything() {
         let mut s = Scheduler::new(0);
         for id in 0..7 {
-            s.submit(sess(id, 1, 1));
+            s.submit(sess(id, 1, 1)).expect("unbounded queue");
         }
-        s.admit();
+        assert_eq!(s.admit(), 7);
         assert_eq!(s.active_len(), 7);
         assert!(!s.is_idle());
+    }
+
+    #[test]
+    fn bounded_queue_sheds_overflow_and_hands_the_session_back() {
+        let mut s = Scheduler::with_queue_bound(1, 2);
+        assert_eq!(s.queue_bound(), 2);
+        // One free concurrency slot + two queue slots: three fit.
+        for id in 0..3 {
+            assert!(s.submit(sess(id, 1, 1)).is_ok());
+        }
+        let shed = s.submit(sess(3, 1, 1)).expect_err("backlog is full");
+        assert_eq!(shed.id(), 3, "the rejected session comes back intact");
+        assert_eq!(s.pending_len(), 3);
+        // Admission consumes the slot; the bound now counts the queue alone.
+        assert_eq!(s.admit(), 1);
+        assert!(s.submit(sess(4, 1, 1)).is_err(), "no free slot, queue at bound");
+        // Finishing the active session restores one slot of headroom.
+        let logits = vec![0.0; 4];
+        s.active_sessions_mut()[0].push_logits(&logits);
+        let done = s.drain_done();
+        assert_eq!(done.len(), 1);
+        assert!(s.submit(sess(5, 1, 1)).is_ok(), "freed slot extends the bound");
+    }
+
+    #[test]
+    fn admission_edge_cases_hold() {
+        // Empty scheduler: admit is a no-op and the scheduler is idle.
+        let mut empty = Scheduler::new(3);
+        assert_eq!(empty.admit(), 0);
+        assert!(empty.is_idle());
+        assert!(empty.shape_groups(8).is_empty());
+        assert!(empty.drain_done().is_empty());
+
+        // All-identical window lengths collapse to one shape group in
+        // admission order.
+        let mut same = Scheduler::new(0);
+        for id in 0..4 {
+            same.submit(sess(id, 3, 1)).expect("unbounded");
+        }
+        same.admit();
+        assert_eq!(same.shape_groups(8), vec![(3, vec![0, 1, 2, 3])]);
+
+        // A session finishing in the same tick another is admitted: the
+        // freed slot is reused immediately and order is preserved.
+        let mut s = Scheduler::new(1);
+        for id in 0..2 {
+            s.submit(sess(id, 2, 1)).expect("unbounded");
+        }
+        s.admit();
+        let logits = vec![0.0; 4];
+        s.active_sessions_mut()[0].push_logits(&logits);
+        let done = s.drain_done();
+        assert_eq!(s.admit(), 1);
+        assert_eq!(done[0].id(), 0);
+        assert_eq!(s.active_sessions()[0].id(), 1);
+        assert_eq!((s.active_len(), s.pending_len()), (1, 0));
     }
 }

@@ -28,6 +28,42 @@ pub struct Request {
     pub temperature: f64,
     /// Seed of the session's private sampling RNG.
     pub seed: u64,
+    /// Optional wall-clock budget in milliseconds, measured from
+    /// admission. A session past its deadline is finished where it stands
+    /// (truncated but well-formed) with status [`SessionStatus::Deadline`].
+    /// `None` means no deadline (the engine may substitute a default).
+    pub deadline_ms: Option<u64>,
+}
+
+/// How a session ended (or why it never ran). Reported alongside the
+/// completion so callers can tell a full completion from a truncated or
+/// shed one — every request submitted to the engine comes back with
+/// exactly one session carrying one of these.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SessionStatus {
+    /// Ran to its requested token count.
+    Ok,
+    /// Truncated by its wall-clock deadline; the output is a well-formed
+    /// prefix of what the un-deadlined run would have produced.
+    Deadline,
+    /// Shed before running (admission queue full, or rejected by a fault
+    /// plan); the output is empty.
+    Evicted,
+    /// The request itself was invalid (e.g. out-of-vocabulary prompt);
+    /// the output is empty and `note` explains why.
+    Error,
+}
+
+impl SessionStatus {
+    /// Stable lowercase tag for CLI/report lines.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SessionStatus::Ok => "ok",
+            SessionStatus::Deadline => "deadline",
+            SessionStatus::Evicted => "evicted",
+            SessionStatus::Error => "error",
+        }
+    }
 }
 
 /// One in-flight autoregressive generation session: the request's prompt
@@ -47,6 +83,7 @@ pub struct Request {
 ///     max_new_tokens: 2,
 ///     temperature: 1.0,
 ///     seed: 42,
+///     deadline_ms: None,
 /// });
 /// assert_eq!(s.window(8), 3);          // whole prompt fits the block
 /// assert!(!s.is_done());
@@ -67,6 +104,13 @@ pub struct Session {
     /// Scheduler ticks this session has been live for (latency proxy:
     /// one tick = one token for every active session).
     ticks: u64,
+    status: SessionStatus,
+    note: Option<String>,
+    deadline_ms: Option<u64>,
+    admitted_at_ms: Option<u64>,
+    /// Set by [`Session::finish`]: the session is done regardless of how
+    /// many tokens it has produced (deadline truncation, shedding).
+    forced_done: bool,
 }
 
 impl Session {
@@ -82,6 +126,41 @@ impl Session {
             temperature: req.temperature,
             rng: Rng::new(req.seed),
             ticks: 0,
+            status: SessionStatus::Ok,
+            note: None,
+            deadline_ms: req.deadline_ms,
+            admitted_at_ms: None,
+            forced_done: false,
+        }
+    }
+
+    /// A synthetic, already-finished session for a request shed before it
+    /// ever ran (admission queue full). Carries no tokens.
+    pub fn rejected(id: u64, reason: impl Into<String>) -> Session {
+        Session::finished_stub(id, SessionStatus::Evicted, reason.into())
+    }
+
+    /// A synthetic, already-finished session for a request that was
+    /// invalid on arrival (e.g. out-of-vocabulary prompt). Carries no
+    /// tokens; `reason` says what was wrong.
+    pub fn errored(id: u64, reason: impl Into<String>) -> Session {
+        Session::finished_stub(id, SessionStatus::Error, reason.into())
+    }
+
+    fn finished_stub(id: u64, status: SessionStatus, reason: String) -> Session {
+        Session {
+            id,
+            prompt_len: 0,
+            tokens: Vec::new(),
+            max_new_tokens: 0,
+            temperature: 1.0,
+            rng: Rng::new(0),
+            ticks: 0,
+            status,
+            note: Some(reason),
+            deadline_ms: None,
+            admitted_at_ms: None,
+            forced_done: true,
         }
     }
 
@@ -105,9 +184,65 @@ impl Session {
         self.tokens.len() - self.prompt_len
     }
 
-    /// Has the session produced all requested tokens?
+    /// Has the session produced all requested tokens (or been finished
+    /// early by a deadline or shed)?
     pub fn is_done(&self) -> bool {
-        self.generated() >= self.max_new_tokens
+        self.forced_done || self.generated() >= self.max_new_tokens
+    }
+
+    /// How the session ended ([`SessionStatus::Ok`] while still running).
+    pub fn status(&self) -> SessionStatus {
+        self.status
+    }
+
+    /// Human-readable detail for non-`Ok` statuses (why it was shed or
+    /// what was invalid).
+    pub fn note(&self) -> Option<&str> {
+        self.note.as_deref()
+    }
+
+    /// The request's wall-clock budget in milliseconds, if any.
+    pub fn deadline_ms(&self) -> Option<u64> {
+        self.deadline_ms
+    }
+
+    /// Engine-clock timestamp (ms) at which the session was admitted to a
+    /// lane; `None` while still queued.
+    pub fn admitted_at_ms(&self) -> Option<u64> {
+        self.admitted_at_ms
+    }
+
+    /// Stamp the admission time (engine clock, ms). Deadlines are
+    /// measured from this point.
+    pub(crate) fn set_admitted_at(&mut self, now_ms: u64) {
+        self.admitted_at_ms = Some(now_ms);
+    }
+
+    /// Is the session past its deadline at engine time `now_ms`? Never
+    /// true for sessions without a deadline or not yet admitted.
+    pub(crate) fn past_deadline(&self, now_ms: u64) -> bool {
+        match (self.deadline_ms, self.admitted_at_ms) {
+            (Some(budget), Some(at)) => now_ms.saturating_sub(at) >= budget,
+            _ => false,
+        }
+    }
+
+    /// Finish the session where it stands with the given status. The
+    /// tokens generated so far remain valid — a deadline-truncated output
+    /// is a bitwise prefix of the un-deadlined completion.
+    pub(crate) fn finish(&mut self, status: SessionStatus, note: Option<String>) {
+        self.forced_done = true;
+        self.status = status;
+        self.note = note;
+    }
+
+    /// Clamp the requested token count to `cap` (engine-level `max_tokens`
+    /// bound; `cap == 0` means unlimited). A clamped session still ends
+    /// with status `Ok` — the bound is part of the service contract.
+    pub(crate) fn clamp_max_tokens(&mut self, cap: usize) {
+        if cap > 0 && self.max_new_tokens > cap {
+            self.max_new_tokens = cap;
+        }
     }
 
     /// Scheduler ticks this session was live for (a latency proxy).
@@ -153,6 +288,7 @@ mod tests {
             max_new_tokens: n,
             temperature: 0.8,
             seed,
+            deadline_ms: None,
         }
     }
 
@@ -203,5 +339,54 @@ mod tests {
     #[should_panic(expected = "empty prompt")]
     fn empty_prompt_is_rejected() {
         Session::new(req(vec![], 4, 0));
+    }
+
+    #[test]
+    fn deadline_finishes_a_session_where_it_stands() {
+        let logits = vec![0.1, 0.9, 0.3];
+        let mut r = req(vec![1], 10, 5);
+        r.deadline_ms = Some(100);
+        let mut s = Session::new(r);
+        assert!(!s.past_deadline(50), "not admitted yet: no deadline");
+        s.set_admitted_at(10);
+        assert!(!s.past_deadline(109));
+        assert!(s.past_deadline(110), "budget is inclusive at the boundary");
+        s.push_logits(&logits);
+        s.push_logits(&logits);
+        s.finish(SessionStatus::Deadline, None);
+        assert!(s.is_done());
+        assert_eq!(s.status(), SessionStatus::Deadline);
+        assert_eq!(s.output().len(), 2, "tokens generated so far are kept");
+    }
+
+    #[test]
+    fn synthetic_sessions_are_born_finished_with_status_and_note() {
+        let shed = Session::rejected(9, "queue full (4 pending)");
+        assert!(shed.is_done());
+        assert_eq!(shed.status(), SessionStatus::Evicted);
+        assert_eq!(shed.status().as_str(), "evicted");
+        assert_eq!(shed.note(), Some("queue full (4 pending)"));
+        assert!(shed.output().is_empty());
+        let bad = Session::errored(3, "prompt char 'z' not in vocabulary");
+        assert_eq!(bad.status(), SessionStatus::Error);
+        assert!(bad.is_done() && bad.tokens().is_empty());
+    }
+
+    #[test]
+    fn max_tokens_clamp_caps_the_request_without_changing_status() {
+        let mut s = Session::new(req(vec![1], 10, 5));
+        s.clamp_max_tokens(2);
+        let logits = vec![0.1, 0.9, 0.3];
+        s.push_logits(&logits);
+        assert!(!s.is_done());
+        s.push_logits(&logits);
+        assert!(s.is_done());
+        assert_eq!(s.status(), SessionStatus::Ok);
+        // cap == 0 means unlimited: no change.
+        let mut t = Session::new(req(vec![1], 3, 5));
+        t.clamp_max_tokens(0);
+        t.push_logits(&logits);
+        t.push_logits(&logits);
+        assert!(!t.is_done());
     }
 }

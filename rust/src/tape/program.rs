@@ -495,6 +495,18 @@ impl<P> ProgramCache<P> {
         }
     }
 
+    /// Drop every cached program while keeping the capacity bound and the
+    /// lifetime hit/miss/eviction counters. Used when a serving lane is
+    /// quarantined after a fault: the lane's tape is rebuilt from the
+    /// parameter prefix, which invalidates every recorded program base,
+    /// so the cache must start over (cleared entries do not count as
+    /// evictions — nothing was displaced by demand).
+    pub fn clear(&mut self) {
+        self.keys.clear();
+        self.entries.clear();
+        self.stamps.clear();
+    }
+
     /// Drop the least-recently-used entry.
     fn evict_lru(&mut self) {
         debug_assert!(!self.keys.is_empty());
@@ -755,6 +767,26 @@ mod tests {
             assert!(cache.len() <= 2);
         }
         assert_eq!(cache.evictions(), 2 + 30);
+    }
+
+    #[test]
+    fn clear_drops_entries_but_keeps_bound_and_counters() {
+        let mut cache: ProgramCache<u32> = ProgramCache::bounded(2);
+        cache.insert(1, 10);
+        cache.insert(2, 20);
+        cache.insert(3, 30); // evicts 1
+        assert!(cache.lookup(2).is_some());
+        let (h, m, e) = (cache.hits(), cache.misses(), cache.evictions());
+        cache.clear();
+        assert!(cache.is_empty());
+        assert_eq!(cache.capacity_bound(), Some(2));
+        assert_eq!((cache.hits(), cache.misses(), cache.evictions()), (h, m, e));
+        // The cache is fully usable again and the bound still holds.
+        cache.insert(2, 21);
+        cache.insert(4, 40);
+        cache.insert(5, 50);
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.evictions(), e + 1);
     }
 
     #[test]

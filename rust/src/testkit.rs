@@ -109,6 +109,116 @@ fn name_seed(name: &str) -> u64 {
     h
 }
 
+// ---------------------------------------------------------------------------
+// Deterministic fault injection
+// ---------------------------------------------------------------------------
+
+/// Panic a specific serving lane at a specific step, after it has already
+/// advanced a given number of sessions that tick — one entry of a
+/// [`FaultPlan`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LanePanic {
+    /// Which lane (0 = the coordinator lane) blows up.
+    pub lane: usize,
+    /// Engine step counter value (0-based) at which it blows up.
+    pub step: u64,
+    /// How many sessions the lane advances before panicking — `0` panics
+    /// before any work, so every session in the lane's chunk is left one
+    /// token behind; the fault always fires *between* session
+    /// advancements, never mid-advance, mirroring where real tape faults
+    /// surface (inside the machinery, before any session state mutates).
+    pub after_sessions: usize,
+}
+
+/// A deterministic chaos schedule for the fault-tolerance tests: injected
+/// lane panics and forced admission rejections, plus file-corruption
+/// helpers for checkpoint tests. Always compiled (integration tests
+/// cannot see `#[cfg(test)]` items); the production cost is one `Option`
+/// check per lane dispatch.
+///
+/// Faults are exact — lane K panics at step N, request S is shed — so a
+/// faulted run is exactly reproducible, which is what lets the tests
+/// assert the degraded output is **bitwise identical** to a never-faulted
+/// run.
+///
+/// # Examples
+///
+/// ```
+/// use burtorch::testkit::{FaultPlan, LanePanic};
+///
+/// let plan = FaultPlan::default()
+///     .panic_lane(1, 3, 0)   // lane 1 dies at step 3 before any work
+///     .reject_session(42);   // request id 42 is shed at submission
+/// assert!(plan.should_panic(1, 3, 0));
+/// assert!(!plan.should_panic(1, 3, 1)); // already past the trigger
+/// assert!(!plan.should_panic(0, 3, 0)); // other lanes unaffected
+/// assert!(plan.rejects(42) && !plan.rejects(7));
+/// assert_eq!(plan, FaultPlan::default().panic_lane(1, 3, 0).reject_session(42));
+/// ```
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Scheduled lane panics.
+    pub lane_panics: Vec<LanePanic>,
+    /// Request ids to shed at submission regardless of queue occupancy
+    /// (simulates admission-control failure).
+    pub reject_ids: Vec<u64>,
+}
+
+impl FaultPlan {
+    /// Schedule lane `lane` to panic at engine step `step` after
+    /// advancing `after_sessions` sessions that tick. Builder-style.
+    pub fn panic_lane(mut self, lane: usize, step: u64, after_sessions: usize) -> FaultPlan {
+        self.lane_panics.push(LanePanic {
+            lane,
+            step,
+            after_sessions,
+        });
+        self
+    }
+
+    /// Shed the request with id `id` at submission. Builder-style.
+    pub fn reject_session(mut self, id: u64) -> FaultPlan {
+        self.reject_ids.push(id);
+        self
+    }
+
+    /// Should `lane` panic now, having advanced `advanced` sessions at
+    /// engine step `step`? Exact match only — the trigger fires once.
+    pub fn should_panic(&self, lane: usize, step: u64, advanced: usize) -> bool {
+        self.lane_panics
+            .iter()
+            .any(|p| p.lane == lane && p.step == step && p.after_sessions == advanced)
+    }
+
+    /// Is request `id` scheduled for forced rejection?
+    pub fn rejects(&self, id: u64) -> bool {
+        self.reject_ids.contains(&id)
+    }
+
+    /// Any faults scheduled at all? (Engines skip the per-dispatch checks
+    /// entirely when not.)
+    pub fn is_empty(&self) -> bool {
+        self.lane_panics.is_empty() && self.reject_ids.is_empty()
+    }
+}
+
+/// Truncate the file at `path` to `len` bytes — simulates a crash midway
+/// through a (non-atomic) checkpoint write.
+pub fn truncate_file(path: &std::path::Path, len: u64) -> std::io::Result<()> {
+    let f = std::fs::OpenOptions::new().write(true).open(path)?;
+    f.set_len(len)
+}
+
+/// Flip one bit of the byte at `offset` in the file at `path` — simulates
+/// on-disk corruption a checksum must catch.
+pub fn flip_byte(path: &std::path::Path, offset: u64) -> std::io::Result<()> {
+    let mut bytes = std::fs::read(path)?;
+    let i = offset as usize;
+    assert!(i < bytes.len(), "offset {i} past end of {} byte file", bytes.len());
+    bytes[i] ^= 0x01;
+    std::fs::write(path, bytes)
+}
+
 /// Assert two floats are within `tol` relative error (scaled by magnitude).
 pub fn assert_close(a: f64, b: f64, tol: f64, ctx: &str) {
     let denom = 1.0f64.max(a.abs()).max(b.abs());
@@ -155,6 +265,28 @@ mod tests {
             true
         });
         assert_eq!(first, second);
+    }
+
+    #[test]
+    fn fault_plan_triggers_are_exact_and_file_helpers_corrupt_in_place() {
+        let plan = FaultPlan::default().panic_lane(2, 5, 1).reject_session(7);
+        assert!(!plan.is_empty());
+        assert!(plan.should_panic(2, 5, 1));
+        for (l, s, a) in [(2, 5, 0), (2, 4, 1), (1, 5, 1), (2, 6, 1)] {
+            assert!(!plan.should_panic(l, s as u64, a), "({l},{s},{a})");
+        }
+        assert!(plan.rejects(7) && !plan.rejects(8));
+        assert!(FaultPlan::default().is_empty());
+
+        let dir = std::env::temp_dir().join("burtorch_faultkit_test");
+        std::fs::create_dir_all(&dir).expect("tempdir");
+        let path = dir.join("victim.bin");
+        std::fs::write(&path, [1u8, 2, 3, 4, 5]).expect("write");
+        flip_byte(&path, 2).expect("flip");
+        assert_eq!(std::fs::read(&path).expect("read"), vec![1, 2, 2, 4, 5]);
+        truncate_file(&path, 2).expect("truncate");
+        assert_eq!(std::fs::read(&path).expect("read"), vec![1, 2]);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

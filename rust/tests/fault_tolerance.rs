@@ -1,0 +1,408 @@
+//! Fault-tolerance acceptance suite (ISSUE 6):
+//!
+//! 1. **Crash-safe training.** Mid-training snapshots (params + BURSTAT
+//!    sampler sidecar) resume **bitwise identical** to an uninterrupted
+//!    run, for thread counts {1, 2, 4} × exec modes {eager, replay}.
+//! 2. **Checkpoint integrity.** Truncated, bit-flipped, and
+//!    version-bumped checkpoints are rejected with typed errors and are
+//!    never loaded into a tape (the tape is untouched on failure).
+//! 3. **Lane quarantine.** A lane panic mid-batch is caught, the lane is
+//!    quarantined and healed, and every completion — including sessions
+//!    re-admitted from the dead lane — is bitwise identical to a
+//!    never-faulted run.
+//! 4. **Deadlines & backpressure.** Deadline-expired sessions come back
+//!    truncated-but-well-formed (`deadline`), shed submissions come back
+//!    `evicted` with a reason, and the rest of the batch is unaffected.
+//!
+//! All faults are injected through the deterministic
+//! [`burtorch::testkit::FaultPlan`] harness, so every failure here
+//! reproduces exactly.
+
+use burtorch::coordinator::{ExecMode, Trainer, TrainerOptions};
+use burtorch::nn::{CharMlp, CharMlpConfig, Gpt, GptConfig};
+use burtorch::rng::Rng;
+use burtorch::serialize::{self, SerializeError};
+use burtorch::serve::{Request, ServeEngine, ServeOptions, SessionStatus};
+use burtorch::tape::Tape;
+use burtorch::testkit::{flip_byte, truncate_file, FaultPlan};
+
+fn tempdir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("burtorch_ft_{name}"));
+    std::fs::create_dir_all(&dir).expect("tempdir");
+    dir
+}
+
+// ---------------------------------------------------------------------------
+// 1. Crash-safe training: resume ≡ uninterrupted, all threads × exec modes
+// ---------------------------------------------------------------------------
+
+#[test]
+fn resume_is_bitwise_identical_for_all_thread_counts_and_exec_modes() {
+    let dir = tempdir("resume_matrix");
+    let ds = burtorch::data::names_dataset(120, 16, 9);
+    let run = |threads: usize, exec: ExecMode, mutate: &dyn Fn(&mut TrainerOptions)| -> Vec<u32> {
+        let mut opts = TrainerOptions {
+            steps: 10,
+            batch: 4,
+            lr: 0.2,
+            seed: 11,
+            threads,
+            exec,
+            ..Default::default()
+        };
+        mutate(&mut opts);
+        let mut tape = Tape::<f32>::new();
+        let mut rng = Rng::new(42);
+        let model = CharMlp::new(&mut tape, CharMlpConfig::paper(4), &mut rng);
+        Trainer::new(opts).train_char_mlp(&mut tape, &model, &ds.examples);
+        model.params.iter().map(|p| tape.value(p).to_bits()).collect()
+    };
+    for (threads, exec) in [
+        (1usize, ExecMode::Eager),
+        (2, ExecMode::Eager),
+        (4, ExecMode::Eager),
+        (1, ExecMode::Replay),
+        (2, ExecMode::Replay),
+        (4, ExecMode::Replay),
+    ] {
+        let tag = format!("{threads}_{exec:?}");
+        let ckpt = dir.join(format!("mid_{tag}.bin")).to_string_lossy().into_owned();
+        let uninterrupted = run(threads, exec, &|_| {});
+        // "Crash" after 6 of 10 steps, snapshotting every 3: the last
+        // snapshot holds the exact between-steps state after step 5.
+        let c = ckpt.clone();
+        run(threads, exec, &move |o| {
+            o.steps = 6;
+            o.checkpoint_every = 3;
+            o.checkpoint = Some(c.clone());
+        });
+        let c = ckpt.clone();
+        let resumed = run(threads, exec, &move |o| {
+            o.checkpoint = Some(c.clone());
+            o.resume = true;
+        });
+        assert_eq!(
+            resumed, uninterrupted,
+            "threads={threads} exec={exec:?}: resume diverged from uninterrupted run"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2. Checkpoint integrity: typed rejection, tape never touched
+// ---------------------------------------------------------------------------
+
+fn tiny_gpt(seed: u64) -> (Tape<f32>, Gpt) {
+    let mut tape = Tape::<f32>::new();
+    let mut rng = Rng::new(seed);
+    let cfg = GptConfig {
+        n_layer: 1,
+        d_model: 8,
+        n_head: 2,
+        ..GptConfig::paper()
+    };
+    let model = Gpt::new(&mut tape, cfg, &mut rng);
+    (tape, model)
+}
+
+#[test]
+fn corrupted_checkpoints_are_rejected_typed_and_never_loaded() {
+    let dir = tempdir("corrupt");
+    let path = dir.join("w.bin");
+    let (tape, model) = tiny_gpt(3);
+    model.save_params(&tape, &path).expect("save");
+    let pristine = std::fs::read(&path).expect("read");
+    let header = serialize::inspect_params(&path).expect("inspect");
+    assert_eq!(header.version, serialize::PARAM_VERSION);
+    assert_eq!(header.checksum_ok(), Some(true));
+
+    // A tape about to receive the load; its pre-load values are the
+    // witness that failed loads never mutate it.
+    let (mut victim, vmodel) = tiny_gpt(77);
+    let before = victim.values_range(vmodel.params.first, vmodel.params.len).to_vec();
+
+    // Bit flip deep in the payload → ChecksumMismatch, tape untouched.
+    flip_byte(&path, (pristine.len() - 5) as u64).expect("flip");
+    match vmodel.load_params(&mut victim, &path) {
+        Err(SerializeError::ChecksumMismatch { expected, got }) => assert_ne!(expected, got),
+        other => panic!("expected ChecksumMismatch, got {other:?}"),
+    }
+    assert_eq!(
+        serialize::inspect_params(&path).expect("inspect").checksum_ok(),
+        Some(false),
+        "inspect must report the corruption as data, not an error"
+    );
+    assert_eq!(
+        victim.values_range(vmodel.params.first, vmodel.params.len),
+        before.as_slice(),
+        "a failed load must leave the tape untouched"
+    );
+
+    // Truncation (crash mid-write of a non-atomic writer) → Malformed.
+    std::fs::write(&path, &pristine).expect("restore");
+    truncate_file(&path, (pristine.len() / 2) as u64).expect("truncate");
+    assert!(
+        matches!(vmodel.load_params(&mut victim, &path), Err(SerializeError::Malformed(_))),
+        "truncated checkpoint must be Malformed"
+    );
+
+    // Unknown format version → UnsupportedVersion with the bad byte.
+    std::fs::write(&path, &pristine).expect("restore");
+    let mut bumped = pristine.clone();
+    bumped[7] = 9;
+    std::fs::write(&path, &bumped).expect("bump");
+    assert!(
+        matches!(
+            vmodel.load_params(&mut victim, &path),
+            Err(SerializeError::UnsupportedVersion { got: 9 })
+        ),
+        "future format version must be rejected, not misparsed"
+    );
+    assert_eq!(
+        victim.values_range(vmodel.params.first, vmodel.params.len),
+        before.as_slice(),
+    );
+}
+
+#[test]
+fn corrupted_train_state_sidecars_are_rejected() {
+    let dir = tempdir("sidecar");
+    let params = dir.join("w.bin");
+    let state_path = serialize::train_state_path(&params);
+    let state = serialize::TrainState {
+        next_step: 6,
+        sampler_rng: [1, 2, 3, 4],
+        batch: vec![5, 9, 2, 7],
+    };
+    serialize::save_train_state(&state, &state_path).expect("save");
+    assert_eq!(serialize::load_train_state(&state_path).expect("load"), state);
+
+    let len = std::fs::metadata(&state_path).expect("meta").len();
+    flip_byte(&state_path, len - 3).expect("flip");
+    assert!(
+        matches!(
+            serialize::load_train_state(&state_path),
+            Err(SerializeError::ChecksumMismatch { .. })
+        ),
+        "bit-flipped sidecar must fail its CRC"
+    );
+    serialize::save_train_state(&state, &state_path).expect("rewrite");
+    truncate_file(&state_path, len / 2).expect("truncate");
+    assert!(
+        serialize::load_train_state(&state_path).is_err(),
+        "truncated sidecar must be rejected"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// 3. Lane quarantine: degraded serving is bitwise identical
+// ---------------------------------------------------------------------------
+
+fn fleet() -> Vec<Request> {
+    (0..8u64)
+        .map(|i| Request {
+            id: i,
+            prompt: (0..1 + (i % 4) as u32).map(|k| 1 + k * 5 + i as u32 % 7).collect(),
+            max_new_tokens: 10,
+            temperature: 0.9,
+            seed: 500 + i * 31,
+            deadline_ms: None,
+        })
+        .collect()
+}
+
+fn serve_with_plan(lanes: usize, plan: Option<FaultPlan>) -> (Vec<(u64, Vec<u32>)>, u64) {
+    let (tape, model) = tiny_gpt(2025);
+    let mut eng = ServeEngine::new(
+        tape,
+        model,
+        ServeOptions {
+            lanes,
+            ..ServeOptions::default()
+        },
+    );
+    if let Some(p) = plan {
+        eng.set_fault_plan(p);
+    }
+    for r in fleet() {
+        eng.submit(r);
+    }
+    let mut done: Vec<(u64, Vec<u32>)> = eng
+        .run_to_completion()
+        .into_iter()
+        .map(|s| {
+            assert_eq!(s.status(), SessionStatus::Ok, "faults must not alter statuses");
+            (s.id(), s.output().to_vec())
+        })
+        .collect();
+    done.sort();
+    (done, eng.stats().quarantines)
+}
+
+#[test]
+fn lane_panic_mid_batch_leaves_every_completion_bitwise_identical() {
+    for lanes in [2usize, 4] {
+        let (want, q0) = serve_with_plan(lanes, None);
+        assert_eq!(q0, 0);
+        // Lane 1 dies at step 2 after advancing one session of its chunk;
+        // lane 0 (the coordinator lane) dies at step 5 before any work.
+        let plan = FaultPlan::default().panic_lane(1, 2, 1).panic_lane(0, 5, 0);
+        let (got, quarantines) = serve_with_plan(lanes, Some(plan));
+        assert_eq!(quarantines, 2, "lanes={lanes}: both faults must be caught");
+        assert_eq!(
+            got, want,
+            "lanes={lanes}: degraded serving diverged from the never-faulted run"
+        );
+    }
+}
+
+#[test]
+fn single_lane_fault_is_caught_inline_and_healed() {
+    let (want, _) = serve_with_plan(1, None);
+    let plan = FaultPlan::default().panic_lane(0, 3, 2);
+    let (got, quarantines) = serve_with_plan(1, Some(plan));
+    assert_eq!(quarantines, 1);
+    assert_eq!(got, want, "single-lane quarantine diverged");
+}
+
+// ---------------------------------------------------------------------------
+// 4. Deadlines, shedding, per-request errors, admission edge cases
+// ---------------------------------------------------------------------------
+
+#[test]
+fn shed_and_fault_rejected_requests_come_back_evicted_with_reasons() {
+    let (tape, model) = tiny_gpt(8);
+    let mut eng = ServeEngine::new(
+        tape,
+        model,
+        ServeOptions {
+            max_active: 1,
+            max_queue: 2,
+            ..ServeOptions::default()
+        },
+    );
+    eng.set_fault_plan(FaultPlan::default().reject_session(4));
+    let mut accepted = 0;
+    for r in fleet().into_iter().take(6) {
+        if eng.submit(r) {
+            accepted += 1;
+        }
+    }
+    // id 4 is fault-rejected; ids 0..=2 fill active + queue; 3 and 5 shed.
+    assert_eq!(accepted, 3);
+    let done = eng.run_to_completion();
+    assert_eq!(done.len(), 6, "every submission yields exactly one completion");
+    let statuses: Vec<(u64, SessionStatus)> =
+        done.iter().map(|s| (s.id(), s.status())).collect();
+    for (id, st) in &statuses {
+        let want = if [3, 4, 5].contains(id) {
+            SessionStatus::Evicted
+        } else {
+            SessionStatus::Ok
+        };
+        assert_eq!(st, &want, "id {id}");
+    }
+    let reasons: Vec<&str> = done
+        .iter()
+        .filter(|s| s.status() == SessionStatus::Evicted)
+        .map(|s| s.note().expect("evictions carry a reason"))
+        .collect();
+    assert!(reasons.iter().any(|r| r.contains("queue full")), "{reasons:?}");
+    assert!(reasons.iter().any(|r| r.contains("fault plan")), "{reasons:?}");
+    assert_eq!(eng.stats().shed, 3);
+    // The served sessions are unaffected by the shedding around them.
+    let (reference, _) = serve_with_plan(1, None);
+    for s in done.iter().filter(|s| s.status() == SessionStatus::Ok) {
+        let want = &reference.iter().find(|(id, _)| *id == s.id()).expect("ref").1;
+        assert_eq!(s.output(), want.as_slice(), "id {}", s.id());
+    }
+}
+
+#[test]
+fn deadline_expiry_truncates_to_a_well_formed_prefix() {
+    let (reference, _) = serve_with_plan(1, None);
+    let (tape, model) = tiny_gpt(2025);
+    let mut eng = ServeEngine::new(
+        tape,
+        model,
+        ServeOptions {
+            deadline_ms: Some(4),
+            ..ServeOptions::default()
+        },
+    );
+    // Deterministic clock: 1ms per reading.
+    let t = std::rc::Rc::new(std::cell::Cell::new(0u64));
+    let tc = t.clone();
+    eng.set_clock(move || {
+        tc.set(tc.get() + 1);
+        tc.get()
+    });
+    for r in fleet().into_iter().take(2) {
+        eng.submit(r);
+    }
+    let mut done = eng.run_to_completion();
+    done.sort_by_key(|s| s.id());
+    for s in &done {
+        assert_eq!(s.status(), SessionStatus::Deadline, "id {}", s.id());
+        assert!(s.note().expect("deadline note").contains("deadline"), "id {}", s.id());
+        let out = s.output();
+        assert!(!out.is_empty() && out.len() < 10, "truncated, not empty: {}", out.len());
+        let full = &reference.iter().find(|(id, _)| *id == s.id()).expect("ref").1;
+        assert_eq!(
+            out,
+            &full[..out.len()],
+            "id {}: deadline output must be a bitwise prefix",
+            s.id()
+        );
+    }
+}
+
+#[test]
+fn admission_edge_cases_serve_cleanly() {
+    // Empty request file: parse succeeds with zero requests.
+    let tok = burtorch::data::CharTokenizer::from_text("ab", 0);
+    assert!(burtorch::serve::parse_requests("\n# only comments\n\n", &tok)
+        .expect("empty parse")
+        .is_empty());
+
+    // max_active below the lane count: lanes idle but outputs unchanged,
+    // and a session finishing frees a slot the same step another admits.
+    let (want, _) = serve_with_plan(4, None);
+    let (tape, model) = tiny_gpt(2025);
+    let mut eng = ServeEngine::new(
+        tape,
+        model,
+        ServeOptions {
+            lanes: 4,
+            max_active: 2,
+            ..ServeOptions::default()
+        },
+    );
+    for r in fleet() {
+        eng.submit(r);
+    }
+    let mut done: Vec<(u64, Vec<u32>)> = eng
+        .run_to_completion()
+        .into_iter()
+        .map(|s| (s.id(), s.output().to_vec()))
+        .collect();
+    done.sort();
+    assert_eq!(done, want, "max_active < lanes changed tokens");
+
+    // All-identical window lengths: one shape group, still correct.
+    let (tape, model) = tiny_gpt(2025);
+    let mut eng = ServeEngine::new(tape, model, ServeOptions::default());
+    for i in 0..4u64 {
+        eng.submit(Request {
+            id: i,
+            prompt: vec![1, 2, 3],
+            max_new_tokens: 4,
+            temperature: 0.8,
+            seed: 40 + i,
+            deadline_ms: None,
+        });
+    }
+    let done = eng.run_to_completion();
+    assert_eq!(done.len(), 4);
+    assert!(done.iter().all(|s| s.output().len() == 4));
+}

@@ -82,6 +82,7 @@ fn serve_all(
             max_new_tokens: *n,
             temperature: *temp,
             seed: *seed,
+            deadline_ms: None,
         });
     }
     let done = engine.run_to_completion();
@@ -159,6 +160,7 @@ fn lru_bounded_cache_with_compaction_stays_bounded_and_bitwise_identical() {
             lanes: 1,
             cache_cap: cap,
             max_active: 2,
+            ..ServeOptions::default()
         },
     );
     assert_eq!(outputs, expected, "eviction/compaction changed tokens");
@@ -245,6 +247,7 @@ fn checkpoint_roundtrip_serving_matches_in_process_generation() {
         max_new_tokens: n,
         temperature: temp,
         seed,
+        deadline_ms: None,
     });
     let done = engine.run_to_completion();
     assert_eq!(done.len(), 1);
