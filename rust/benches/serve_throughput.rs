@@ -4,12 +4,22 @@
 //!
 //! The workload is a fixed fleet of concurrent generation requests with
 //! mixed prompt lengths (so the shape-grouped scheduler and the
-//! per-window program cache both matter). Every lane count serves the
-//! identical request set, and the bench asserts the outputs are
-//! token-for-token identical across lane counts — the serving
-//! determinism contract — before reporting speedups. A second sweep
-//! serves the same fleet through an LRU-bounded cache
-//! (`--cache-cap`-style) to price eviction + tape compaction.
+//! per-window program cache both matter). Three sweeps:
+//!
+//! 1. **Lanes** — the same fleet across lane counts, full-window decode.
+//! 2. **Decode mode** — the same fleet and lane counts under incremental
+//!    KV-cache decode (`--decode incremental`): one append-one-token
+//!    program per token instead of a full-window replay, O(window)
+//!    instead of O(window²) per token, with `programs_cached` collapsing
+//!    from one-per-window-length to a handful of full programs plus at
+//!    most `block_size − 1` append programs per lane.
+//! 3. **Bounded cache** — LRU eviction + tape compaction priced at the
+//!    widest lane count, in both modes.
+//!
+//! Every row serves the identical request set, and the bench asserts the
+//! outputs are token-for-token identical across lane counts AND decode
+//! modes — the serving determinism contract plus the incremental-decode
+//! oracle contract — before reporting speedups.
 //!
 //! Results are emitted as a paper-style table
 //! (`bench_results/serve_throughput.txt`) and as JSON
@@ -22,17 +32,25 @@ use burtorch::bench::{json_num, write_json_result, Table};
 use burtorch::metrics::Timer;
 use burtorch::nn::{Gpt, GptConfig};
 use burtorch::rng::Rng;
-use burtorch::serve::{Request, ServeEngine, ServeOptions, ServeStats};
+use burtorch::serve::{DecodeMode, Request, ServeEngine, ServeOptions, ServeStats};
 use burtorch::tape::Tape;
 
 struct LaneRow {
     lanes: usize,
     cache_cap: usize,
+    decode: DecodeMode,
     wall_s: f64,
     tokens_per_sec: f64,
     sessions_per_sec: f64,
     speedup: f64,
     stats: ServeStats,
+}
+
+fn mode_str(m: DecodeMode) -> &'static str {
+    match m {
+        DecodeMode::Full => "full",
+        DecodeMode::Incremental => "incremental",
+    }
 }
 
 fn requests(n_sessions: usize, tokens_each: usize) -> Vec<Request> {
@@ -51,6 +69,7 @@ fn requests(n_sessions: usize, tokens_each: usize) -> Vec<Request> {
 fn serve_once(
     lanes: usize,
     cache_cap: usize,
+    decode: DecodeMode,
     reqs: &[Request],
 ) -> (f64, Vec<Vec<u32>>, ServeStats) {
     let mut tape = Tape::<f32>::new();
@@ -62,6 +81,7 @@ fn serve_once(
         ServeOptions {
             lanes,
             cache_cap,
+            decode,
             ..ServeOptions::default()
         },
     );
@@ -99,75 +119,97 @@ fn main() {
 
     let mut rows: Vec<LaneRow> = Vec::new();
     let mut reference: Option<Vec<Vec<u32>>> = None;
-    for &lanes in &lane_counts {
-        let (wall, outputs, stats) = serve_once(lanes, 0, &reqs);
-        match &reference {
-            None => reference = Some(outputs),
-            Some(want) => assert_eq!(
-                want, &outputs,
-                "lanes={lanes} diverged from single-lane serving"
-            ),
+    // Sweep 1 + 2: lane counts × decode modes; the full-mode single-lane
+    // run is the wall-clock baseline AND the token oracle for every
+    // other row.
+    for &decode in &[DecodeMode::Full, DecodeMode::Incremental] {
+        for &lanes in &lane_counts {
+            let (wall, outputs, stats) = serve_once(lanes, 0, decode, &reqs);
+            match &reference {
+                None => reference = Some(outputs),
+                Some(want) => assert_eq!(
+                    want,
+                    &outputs,
+                    "lanes={lanes} decode={} diverged from the full-window single-lane oracle",
+                    mode_str(decode),
+                ),
+            }
+            let base = rows.first().map(|r: &LaneRow| r.wall_s).unwrap_or(wall);
+            println!(
+                "  {:<11} lanes={lanes:>2}  wall {wall:>7.3}s  {:>9.1} tok/s  {:>7.2} sessions/s  \
+                 programs {}+{}  hits {} misses {}",
+                mode_str(decode),
+                total_tokens / wall,
+                n_sessions as f64 / wall,
+                stats.cached_programs,
+                stats.append_programs,
+                stats.cache_hits,
+                stats.cache_misses,
+            );
+            rows.push(LaneRow {
+                lanes,
+                cache_cap: 0,
+                decode,
+                wall_s: wall,
+                tokens_per_sec: total_tokens / wall,
+                sessions_per_sec: n_sessions as f64 / wall,
+                speedup: base / wall,
+                stats,
+            });
         }
-        let base = rows.first().map(|r: &LaneRow| r.wall_s).unwrap_or(wall);
-        rows.push(LaneRow {
-            lanes,
-            cache_cap: 0,
-            wall_s: wall,
-            tokens_per_sec: total_tokens / wall,
-            sessions_per_sec: n_sessions as f64 / wall,
-            speedup: base / wall,
-            stats,
-        });
-        println!(
-            "  lanes={lanes:>2}  wall {wall:>7.3}s  {:>9.1} tok/s  {:>7.2} sessions/s  hits {} misses {}",
-            total_tokens / wall,
-            n_sessions as f64 / wall,
-            stats.cache_hits,
-            stats.cache_misses,
-        );
     }
 
-    // Bounded-cache sweep at the widest lane count: the price of LRU
-    // eviction + segment compaction under shape churn.
+    // Sweep 3: bounded caches at the widest lane count — the price of
+    // LRU eviction + segment compaction under shape churn, both modes.
     let widest = *lane_counts.last().expect("nonempty");
-    for cap in [2usize, 4] {
-        let (wall, outputs, stats) = serve_once(widest, cap, &reqs);
-        assert_eq!(
-            reference.as_ref().expect("reference set"),
-            &outputs,
-            "cache-cap={cap} changed tokens"
-        );
-        rows.push(LaneRow {
-            lanes: widest,
-            cache_cap: cap,
-            wall_s: wall,
-            tokens_per_sec: total_tokens / wall,
-            sessions_per_sec: n_sessions as f64 / wall,
-            speedup: rows[0].wall_s / wall,
-            stats,
-        });
-        println!(
-            "  lanes={widest:>2} cap={cap}  wall {wall:>7.3}s  {:>9.1} tok/s  evictions {} compactions {}",
-            total_tokens / wall,
-            stats.cache_evictions,
-            stats.compactions,
-        );
+    for &decode in &[DecodeMode::Full, DecodeMode::Incremental] {
+        for cap in [2usize, 4] {
+            let (wall, outputs, stats) = serve_once(widest, cap, decode, &reqs);
+            assert_eq!(
+                reference.as_ref().expect("reference set"),
+                &outputs,
+                "cache-cap={cap} decode={} changed tokens",
+                mode_str(decode),
+            );
+            println!(
+                "  {:<11} lanes={widest:>2} cap={cap}  wall {wall:>7.3}s  {:>9.1} tok/s  \
+                 evictions {} compactions {}",
+                mode_str(decode),
+                total_tokens / wall,
+                stats.cache_evictions,
+                stats.compactions,
+            );
+            rows.push(LaneRow {
+                lanes: widest,
+                cache_cap: cap,
+                decode,
+                wall_s: wall,
+                tokens_per_sec: total_tokens / wall,
+                sessions_per_sec: n_sessions as f64 / wall,
+                speedup: rows[0].wall_s / wall,
+                stats,
+            });
+        }
     }
 
     let mut table = Table::new("Serve throughput — GPT paper config, FP32, mixed prompt lengths");
     table.note(&format!(
-        "{n_sessions} sessions × {tokens_each} tokens; outputs asserted identical across all rows"
+        "{n_sessions} sessions × {tokens_each} tokens; outputs asserted identical across all \
+         rows (lane counts AND decode modes)"
     ));
     for r in &rows {
         let cap = if r.cache_cap == 0 { "∞".to_string() } else { r.cache_cap.to_string() };
         table.note(&format!(
-            "lanes {:>2} cap {:>2}: {:>8.1} tok/s, {:>6.2} sessions/s, {:.2}× vs 1 lane, \
-             hits {} misses {} evictions {} compactions {}",
+            "{:<11} lanes {:>2} cap {:>2}: {:>8.1} tok/s, {:>6.2} sessions/s, {:.2}× vs 1 lane, \
+             programs {}+{} (full+append), hits {} misses {} evictions {} compactions {}",
+            mode_str(r.decode),
             r.lanes,
             cap,
             r.tokens_per_sec,
             r.sessions_per_sec,
             r.speedup,
+            r.stats.cached_programs,
+            r.stats.append_programs,
             r.stats.cache_hits,
             r.stats.cache_misses,
             r.stats.cache_evictions,
@@ -182,18 +224,25 @@ fn main() {
         "  \"workload\": {{\"model\": \"gpt_paper\", \"d\": 46289, \"sessions\": {n_sessions}, \"tokens_each\": {tokens_each}}},\n"
     ));
     json.push_str(&format!("  \"cores_available\": {cores},\n"));
-    json.push_str("  \"deterministic_across_lanes\": true,\n  \"rows\": [\n");
+    json.push_str(
+        "  \"deterministic_across_lanes\": true,\n  \"deterministic_across_decode_modes\": true,\n  \"rows\": [\n",
+    );
     for (i, r) in rows.iter().enumerate() {
         json.push_str(&format!(
-            "    {{\"lanes\": {}, \"cache_cap\": {}, \"wall_s\": {}, \"tokens_per_sec\": {}, \
-             \"sessions_per_sec\": {}, \"speedup\": {}, \"cache_hits\": {}, \"cache_misses\": {}, \
-             \"cache_evictions\": {}, \"compactions\": {}, \"peak_tape_nodes\": {}}}{}\n",
+            "    {{\"lanes\": {}, \"cache_cap\": {}, \"decode\": \"{}\", \"wall_s\": {}, \
+             \"tokens_per_sec\": {}, \"sessions_per_sec\": {}, \"speedup\": {}, \
+             \"programs_cached\": {}, \"append_programs\": {}, \"cache_hits\": {}, \
+             \"cache_misses\": {}, \"cache_evictions\": {}, \"compactions\": {}, \
+             \"peak_tape_nodes\": {}}}{}\n",
             r.lanes,
             r.cache_cap,
+            mode_str(r.decode),
             json_num(r.wall_s),
             json_num(r.tokens_per_sec),
             json_num(r.sessions_per_sec),
             json_num(r.speedup),
+            r.stats.cached_programs,
+            r.stats.append_programs,
             r.stats.cache_hits,
             r.stats.cache_misses,
             r.stats.cache_evictions,

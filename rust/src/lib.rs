@@ -85,6 +85,28 @@
 //! a `train --params` checkpoint ([`serialize::save_params_range`])
 //! instead of a fresh init.
 //!
+//! ## Decode modes
+//!
+//! Serving has two per-token engines ([`serve::DecodeMode`], CLI
+//! `--decode full|incremental`). **Full** — the default and the test
+//! oracle — replays one full-window logits program per token: O(window²)
+//! work per completion, one cached program per window length.
+//! **Incremental** prefills the window once, then replays a single
+//! *append-one-token* program per token: each layer's K/V activations
+//! for the new position are recorded as replay outputs, exported into a
+//! session-owned [`nn::KvCache`], and re-staged into dedicated leaf
+//! slots ([`tape::Tape::stage_values`]) as the *inputs* of the next
+//! step's replay — a cross-step rebind of a recorded region. Per-token
+//! cost drops to O(window), and the program cache collapses to one
+//! append program per context *depth* (at most `block_size − 1` per
+//! lane, ever), so lane cache pressure is O(1) in the request mix. The
+//! two modes are **bitwise equal** token for token — prefix stability of
+//! causal attention, an fma-splice argument at the kernel level, and
+//! lossless f32→f64→f32 staging compose into the exact-equivalence proof
+//! exercised across lanes × cache caps × window lengths in
+//! `tests/decode_equivalence.rs` ([`nn::DecodeState`],
+//! [`nn::Gpt::decode_incremental`]).
+//!
 //! ## Fault tolerance
 //!
 //! Robustness rides on the same determinism contracts rather than

@@ -22,7 +22,9 @@ use burtorch::metrics::{MemInfo, Timer};
 use burtorch::nn::{CeMode, CharMlp, CharMlpConfig, Gpt, GptConfig};
 use burtorch::parallel::ReductionCompression;
 use burtorch::rng::Rng;
-use burtorch::serve::{parse_requests, ParsedRequest, ServeEngine, ServeOptions, SessionStatus};
+use burtorch::serve::{
+    parse_requests, DecodeMode, ParsedRequest, ServeEngine, ServeOptions, SessionStatus,
+};
 use burtorch::tape::{Builder, Tape};
 use burtorch::viz;
 
@@ -88,6 +90,7 @@ fn usage() -> &'static str {
        serve     --requests FILE [--params w.bin] [--lanes L]\n\
                  [--cache-cap N] [--max-active M] [--seed S]\n\
                  [--max-queue Q] [--deadline-ms D] [--max-tokens T]\n\
+                 [--decode full|incremental]\n\
                  (batched multi-session inference; requests come one per\n\
                   line as 'seed|max_new_tokens|temperature|prompt', read\n\
                   from FILE or stdin; --lanes fans sessions across worker\n\
@@ -98,6 +101,10 @@ fn usage() -> &'static str {
                   --max-queue sheds submissions past the admission-queue\n\
                   bound, --deadline-ms applies a default wall-clock\n\
                   budget, --max-tokens caps any request's token budget;\n\
+                  --decode incremental replays one append-one-token\n\
+                  program per token against each session's stored K/V —\n\
+                  O(window) instead of O(window^2) per token, bitwise\n\
+                  the same tokens as the full-window default;\n\
                   a lane fault is quarantined and healed, the rest of\n\
                   the batch serves on, bit-identical)\n\
        params    inspect <file>   (print checkpoint header + checksum)\n\
@@ -407,6 +414,14 @@ fn cmd_sample(cli: &Cli) -> i32 {
 fn cmd_serve(cli: &Cli) -> i32 {
     let lanes = cli.usize_or("lanes", 1).max(1);
     let cache_cap = cli.usize_or("cache-cap", 0);
+    let decode = match cli.opt("decode").unwrap_or("full") {
+        "full" => DecodeMode::Full,
+        "incremental" => DecodeMode::Incremental,
+        other => {
+            eprintln!("error: --decode must be 'full' or 'incremental', got '{other}'");
+            return 2;
+        }
+    };
     let max_active = cli.usize_or("max-active", 0);
     let max_queue = cli.usize_or("max-queue", 0);
     let max_tokens = cli.usize_or("max-tokens", 0);
@@ -463,10 +478,11 @@ fn cmd_serve(cli: &Cli) -> i32 {
         ),
     }
     println!(
-        "serving {n_requests} request(s): lanes={lanes} cache-cap={} max-active={} max-queue={}",
+        "serving {n_requests} request(s): lanes={lanes} cache-cap={} max-active={} max-queue={} decode={}",
         if cache_cap == 0 { "unbounded".to_string() } else { cache_cap.to_string() },
         if max_active == 0 { "unlimited".to_string() } else { max_active.to_string() },
         if max_queue == 0 { "unbounded".to_string() } else { max_queue.to_string() },
+        if decode == DecodeMode::Incremental { "incremental" } else { "full" },
     );
     let mut engine = ServeEngine::new(
         tape,
@@ -478,6 +494,7 @@ fn cmd_serve(cli: &Cli) -> i32 {
             max_queue,
             deadline_ms,
             max_tokens,
+            decode,
         },
     );
     // Echo each prompt→completion pair; decode through the same tokenizer.
@@ -526,8 +543,9 @@ fn cmd_serve(cli: &Cli) -> i32 {
         st.completed, st.tokens, st.steps, wall, rate(st.tokens), rate(st.completed),
     );
     println!(
-        "cache: {} live program(s) | hits {} | misses {} | evictions {} | compactions {} | peak tape nodes {}",
+        "cache: {} full + {} append program(s) | hits {} | misses {} | evictions {} | compactions {} | peak tape nodes {}",
         st.cached_programs,
+        st.append_programs,
         st.cache_hits,
         st.cache_misses,
         st.cache_evictions,

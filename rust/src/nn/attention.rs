@@ -79,6 +79,25 @@ impl CausalSelfAttention {
         tape: &mut Tape<T>,
         x: &[Vec<Value>],
     ) -> Vec<Vec<Value>> {
+        self.forward_with_kv(tape, x).0
+    }
+
+    /// [`forward`](Self::forward), additionally exposing each position's
+    /// K/V activations as `(k0, v0)` pairs — `k0`/`v0` are the first of
+    /// `d_model` consecutive key/value nodes for that position.
+    ///
+    /// This is the K/V-slotted entry point behind incremental decode: a
+    /// runtime records the full-window graph once, then *exports* these
+    /// node ranges after each replay and re-stages them as leaf slots
+    /// that [`forward_append`](Self::forward_append) reads on the next
+    /// step. The graph built here is **node-for-node identical** to
+    /// [`forward`](Self::forward) (which simply delegates), so training
+    /// and the full-window serving oracle are bitwise untouched.
+    pub fn forward_with_kv<T: Scalar>(
+        &self,
+        tape: &mut Tape<T>,
+        x: &[Vec<Value>],
+    ) -> (Vec<Vec<Value>>, Vec<(Value, Value)>) {
         let block = x.len();
         let d = self.d_model;
         // Phase 1: q, k, v for every position. Each projection loop emits
@@ -144,7 +163,121 @@ impl CausalSelfAttention {
             // Memory-view concat: head_outs ids go straight to the proj.
             out.push(self.proj.forward(tape, &head_outs));
         }
-        out
+        let kv = k0.iter().zip(&v0).map(|(&k, &v)| (k, v)).collect();
+        (out, kv)
+    }
+
+    /// Attend **one new query** against a staged K/V prefix — the
+    /// append-one-token decode step.
+    ///
+    /// `x_new` is the new position's `d_model`-wide input; the prefix
+    /// lives in `prefix` staged slots starting at leaf `stage0`, each
+    /// slot holding `[k · d_model | v · d_model]` and slots spaced
+    /// `slot_stride` ids apart (so `slot_stride ≥ 2·d_model`). Returns
+    /// the projected output row plus this position's own `(k0, v0)`
+    /// nodes, which the caller exports back into its K/V store.
+    ///
+    /// **Bitwise contract.** When the staged slots hold exactly the K/V
+    /// values the full-window [`forward`](Self::forward) computes for
+    /// positions `0..prefix`, the returned row is bitwise equal to the
+    /// full window's last row. Scores reuse the same `dot_range` kernel
+    /// over the same values; the output gather splits the oracle's
+    /// strided dot into the same sequential fma chain — `dot_strided`
+    /// over the staged prefix, then one `dot_range_bias` fma folding in
+    /// the new position's value — which is the *identical* operation
+    /// sequence, just read from different node ids.
+    ///
+    /// ```
+    /// use burtorch::nn::{CausalSelfAttention, ParamAlloc};
+    /// use burtorch::rng::Rng;
+    /// use burtorch::tape::{Tape, Value};
+    ///
+    /// let mut t = Tape::<f64>::new();
+    /// let zero = t.leaf(0.0);
+    /// let mut rng = Rng::new(7);
+    /// let mut pa = ParamAlloc::new(&mut t);
+    /// let attn = CausalSelfAttention::new(&mut pa, 4, 2, zero, &mut rng);
+    /// let x: Vec<Vec<Value>> = (0..3)
+    ///     .map(|p| (0..4).map(|j| t.leaf(0.1 * (p * 4 + j) as f64 - 0.2)).collect())
+    ///     .collect();
+    /// let (full, kv) = attn.forward_with_kv(&mut t, &x);
+    ///
+    /// // Stage positions 0..2 as [k|v] leaf slots (slot stride 2·d = 8)…
+    /// let stage0 = Value(t.len() as u32);
+    /// for p in 0..2 {
+    ///     let (k0, v0) = kv[p];
+    ///     let ks: Vec<f64> = (0..4).map(|j| t.value(Value(k0.0 + j))).collect();
+    ///     let vs: Vec<f64> = (0..4).map(|j| t.value(Value(v0.0 + j))).collect();
+    ///     for v in ks.into_iter().chain(vs) {
+    ///         t.leaf(v);
+    ///     }
+    /// }
+    /// // …and attend position 2 alone: bitwise the full window's row 2.
+    /// let (row, _kv2) = attn.forward_append(&mut t, &x[2], stage0, 8, 2);
+    /// for (a, b) in full[2].iter().zip(&row) {
+    ///     assert_eq!(t.value(*a).to_bits(), t.value(*b).to_bits());
+    /// }
+    /// ```
+    pub fn forward_append<T: Scalar>(
+        &self,
+        tape: &mut Tape<T>,
+        x_new: &[Value],
+        stage0: Value,
+        slot_stride: usize,
+        prefix: usize,
+    ) -> (Vec<Value>, (Value, Value)) {
+        let d = self.d_model;
+        debug_assert_eq!(x_new.len(), d);
+        debug_assert!(slot_stride >= 2 * d, "slots must hold [k·d | v·d]");
+        debug_assert!(prefix >= 1, "append implies a non-empty prefix");
+        let view = tape.share_ids(x_new);
+        let q0 = self.project(tape, view, self.wq);
+        let k0 = self.project(tape, view, self.wk);
+        let v0 = self.project(tape, view, self.wv);
+
+        let scale = T::from_f64(self.scale);
+        let mut head_outs: Vec<Value> = Vec::with_capacity(d);
+        let mut scores: Vec<Value> = Vec::with_capacity(prefix + 1);
+        let mut exps: Vec<Value> = Vec::with_capacity(prefix + 1);
+        for h in 0..self.n_head {
+            let off = (h * self.head_dim) as u32;
+            let qh = Value(q0.0 + off);
+            // Scores against the staged keys, then the new position's own.
+            scores.clear();
+            for j in 0..prefix {
+                let kh = Value(stage0.0 + (j * slot_stride) as u32 + off);
+                let s = tape.dot_range(qh, kh, self.head_dim);
+                scores.push(tape.mul_const(s, scale));
+            }
+            let s_self = tape.dot_range(qh, Value(k0.0 + off), self.head_dim);
+            scores.push(tape.mul_const(s_self, scale));
+            exps.clear();
+            for &s in &scores {
+                exps.push(tape.exp(s));
+            }
+            let den = tape.reduce_sum(&exps);
+            let mut w_first = Value(0);
+            let mut w_last = Value(0);
+            for (j, &e) in exps.iter().enumerate() {
+                let w = tape.div(e, den);
+                if j == 0 {
+                    w_first = w;
+                }
+                w_last = w;
+            }
+            // Output dims: the oracle's single strided dot over p+1 value
+            // columns becomes the same fma chain split in two — prefix
+            // terms from the staged slots, final term via one fused fma
+            // seeded with the prefix sum (`dot_range_bias` with n=1).
+            for c in 0..self.head_dim {
+                let vcol = Value(stage0.0 + d as u32 + off + c as u32);
+                let ds = tape.dot_strided(w_first, vcol, slot_stride, prefix);
+                let vc = Value(v0.0 + off + c as u32);
+                head_outs.push(tape.dot_range_bias(w_last, vc, 1, ds));
+            }
+        }
+        let out = self.proj.forward(tape, &head_outs);
+        (out, (k0, v0))
     }
 
     /// One d×d bias-free projection; returns the first of `d_model`
@@ -254,6 +387,52 @@ mod tests {
         let gv: f64 = attn.wv.iter().map(|v| t.grad(v).abs()).sum();
         let gp: f64 = attn.proj.w.iter().map(|v| t.grad(v).abs()).sum();
         assert!(gq > 0.0 && gk > 0.0 && gv > 0.0 && gp > 0.0);
+    }
+
+    #[test]
+    fn forward_append_matches_full_window_rows_bitwise() {
+        let (mut t, attn) = setup(8, 2);
+        let x = embed(&mut t, 4, 8, 29);
+        let (full, kv) = attn.forward_with_kv(&mut t, &x);
+        // For every append depth: stage the prefix K/V as [k|v] leaf
+        // slots, attend the last position alone, compare bitwise.
+        for depth in 2..=4usize {
+            let prefix = depth - 1;
+            let stage0 = Value(t.len() as u32);
+            for p in 0..prefix {
+                let (k0, v0) = kv[p];
+                for j in 0..8u32 {
+                    let v = t.value(Value(k0.0 + j));
+                    t.leaf(v);
+                }
+                for j in 0..8u32 {
+                    let v = t.value(Value(v0.0 + j));
+                    t.leaf(v);
+                }
+            }
+            let (row, (k_new, v_new)) =
+                attn.forward_append(&mut t, &x[prefix], stage0, 16, prefix);
+            for (c, (&a, &b)) in full[prefix].iter().zip(&row).enumerate() {
+                assert_eq!(
+                    t.value(a).to_bits(),
+                    t.value(b).to_bits(),
+                    "depth {depth} dim {c}"
+                );
+            }
+            // The appended position's own K/V match the oracle's too —
+            // that is what the runtime exports into its K/V store.
+            let (ko, vo) = kv[prefix];
+            for j in 0..8u32 {
+                assert_eq!(
+                    t.value(Value(ko.0 + j)).to_bits(),
+                    t.value(Value(k_new.0 + j)).to_bits()
+                );
+                assert_eq!(
+                    t.value(Value(vo.0 + j)).to_bits(),
+                    t.value(Value(v_new.0 + j)).to_bits()
+                );
+            }
+        }
     }
 
     #[test]

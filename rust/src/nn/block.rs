@@ -48,9 +48,21 @@ impl TransformerBlock {
 
     /// x ← x + attn(ln1(x)); x ← x + mlp(ln2(x)).
     pub fn forward<T: Scalar>(&self, tape: &mut Tape<T>, x: &[Vec<Value>]) -> Vec<Vec<Value>> {
+        self.forward_with_kv(tape, x).0
+    }
+
+    /// [`forward`](Self::forward), also returning the attention
+    /// sub-layer's per-position `(k0, v0)` node pairs
+    /// ([`CausalSelfAttention::forward_with_kv`]). The graph is
+    /// node-for-node identical to [`forward`](Self::forward).
+    pub fn forward_with_kv<T: Scalar>(
+        &self,
+        tape: &mut Tape<T>,
+        x: &[Vec<Value>],
+    ) -> (Vec<Vec<Value>>, Vec<(Value, Value)>) {
         // Attention sub-layer.
         let normed: Vec<Vec<Value>> = x.iter().map(|xs| self.ln1.forward(tape, xs)).collect();
-        let attn_out = self.attn.forward(tape, &normed);
+        let (attn_out, kv) = self.attn.forward_with_kv(tape, &normed);
         let x1: Vec<Vec<Value>> = x
             .iter()
             .zip(&attn_out)
@@ -63,14 +75,42 @@ impl TransformerBlock {
             .collect();
 
         // Feed-forward sub-layer.
-        x1.iter()
+        let out = x1
+            .iter()
             .map(|xs| {
                 let n = self.ln2.forward(tape, xs);
                 let h = self.fc1.forward(tape, &n);
                 let m = self.fc2.forward(tape, &h);
                 xs.iter().zip(&m).map(|(&a, &b)| tape.add(a, b)).collect()
             })
-            .collect()
+            .collect();
+        (out, kv)
+    }
+
+    /// The block's append-one-token step: run **one position** through
+    /// the pre-norm pipeline, attending its query against a staged K/V
+    /// prefix ([`CausalSelfAttention::forward_append`]). LayerNorm and
+    /// the feed-forward act per position, so they are reused verbatim —
+    /// only attention needs the staged prefix. Returns the new position's
+    /// output plus its `(k0, v0)` nodes for export.
+    pub fn forward_append<T: Scalar>(
+        &self,
+        tape: &mut Tape<T>,
+        x: &[Value],
+        stage0: Value,
+        slot_stride: usize,
+        prefix: usize,
+    ) -> (Vec<Value>, (Value, Value)) {
+        let normed = self.ln1.forward(tape, x);
+        let (ats, kv) = self
+            .attn
+            .forward_append(tape, &normed, stage0, slot_stride, prefix);
+        let x1: Vec<Value> = x.iter().zip(&ats).map(|(&a, &b)| tape.add(a, b)).collect();
+        let n = self.ln2.forward(tape, &x1);
+        let h = self.fc1.forward(tape, &n);
+        let m = self.fc2.forward(tape, &h);
+        let out = x1.iter().zip(&m).map(|(&a, &b)| tape.add(a, b)).collect();
+        (out, kv)
     }
 
     /// Parameter count of the block.

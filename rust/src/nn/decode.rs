@@ -1,0 +1,693 @@
+//! Incremental KV-cache decode: append-one-token generation proven
+//! bitwise-equal to the full-window oracle.
+//!
+//! [`Gpt::generate_cached`] replays a **full** logits program over the
+//! whole context window for every generated token — O(window²) work per
+//! completion, and one cached program per window length. This module
+//! adds the serving-side fast path: after a single full-window
+//! *prefill*, each later token runs one **append program** that
+//!
+//! 1. rebinds the new token's embedding gather (one `rebind_arg_a` run),
+//! 2. reads the stored K/V prefix from *staging slots* — leaves
+//!    allocated once per tape, re-staged from the session's [`KvCache`]
+//!    before every step ([`Tape::stage_values`]),
+//! 3. attends the one new query against the prefix
+//!    ([`super::CausalSelfAttention::forward_append`]), and
+//! 4. emits one logits row plus the new position's K/V for export.
+//!
+//! Per-token cost drops to a single O(window) attend, and the program
+//! cache collapses from one program per *window length* to one program
+//! per *depth* — the append program's shape depends only on how many
+//! prefix slots it reads, so a lane serves every session at a given
+//! depth with the same frozen segment.
+//!
+//! ## The bitwise argument
+//!
+//! The full-window path stays in place as the **oracle**; the
+//! incremental path must match it bitwise, token for token
+//! (`tests/decode_equivalence.rs`). Three facts compose:
+//!
+//! - **Prefix stability.** With causal attention and absolute positional
+//!   embeddings, position `p`'s hidden state (hence its K/V) is
+//!   identical for every window that starts at position 0 and contains
+//!   `p` — later positions cannot influence earlier ones. So K/V
+//!   exported at one depth can be re-read at the next.
+//! - **Kernel splice.** The oracle's output gather is one sequential-fma
+//!   `dot_strided` over `p+1` value columns; the append path runs the
+//!   *same* fma chain split in two — `dot_strided` over the staged
+//!   prefix, then a single `dot_range_bias` fma seeded with that partial
+//!   sum. Identical operations in identical order on identical values.
+//! - **Lossless staging.** K/V round-trips through the session-owned
+//!   [`KvCache`] as `f64`; widening an `f32` and rounding back is exact.
+//!
+//! Once the context *slides* (`tokens.len() > block_size`), every
+//! position renumbers and the stored prefix is permanently invalid; the
+//! decoder falls back to the full-window program per token — which *is*
+//! the oracle, so equivalence is trivial there.
+
+use super::{Gpt, GptConfig, GptGenBinds};
+use crate::scalar::Scalar;
+use crate::tape::{Mark, ProgramCache, Recording, Tape, Value};
+
+/// One full-window (prefill / slid-window) program: the recording, its
+/// rebind slots, and the frozen window's K/V node ids for export.
+pub type FullProgram = (Recording, GptGenBinds, Vec<Vec<(Value, Value)>>);
+
+/// One append-one-token program: the recording plus its rebind slots.
+pub type AppendProgram = (Recording, AppendBinds);
+
+/// The rebind/export slots of a recorded append-one-token program
+/// (the decode counterpart of [`GptGenBinds`]).
+#[derive(Clone, Debug)]
+pub struct AppendBinds {
+    /// First of the new position's `d_model` consecutive token+position
+    /// input adds (token-embedding gather = their `a` slots).
+    pub first_add: Value,
+    /// Recorded depth = prefix length + 1 (the shape key).
+    pub depth: usize,
+    /// First of the `vocab` consecutive logit nodes of the new position.
+    pub logits0: Value,
+    /// Per layer, the new position's `(k0, v0)` nodes — read back after
+    /// every replay and stored into the session's [`KvCache`].
+    pub kv_new: Vec<(Value, Value)>,
+}
+
+/// Geometry of a tape's K/V staging region: `n_layer` runs of
+/// `n_slots` slots, each slot `[k · d_model | v · d_model]`, allocated
+/// as one contiguous block of leaves directly above the parameter base.
+#[derive(Clone, Copy, Debug)]
+pub struct KvLayout {
+    /// First staging leaf.
+    pub first: Value,
+    /// Transformer depth.
+    pub n_layer: usize,
+    /// Model width.
+    pub d_model: usize,
+    /// Slots per layer = `block_size - 1` (an append step stages at most
+    /// `block_size - 1` prefix positions).
+    pub n_slots: usize,
+}
+
+impl KvLayout {
+    /// Ids between consecutive slots of one layer.
+    #[inline]
+    pub fn slot_stride(&self) -> usize {
+        2 * self.d_model
+    }
+
+    /// Ids between consecutive layers' slot runs.
+    #[inline]
+    pub fn layer_stride(&self) -> usize {
+        self.n_slots * self.slot_stride()
+    }
+
+    /// First staging leaf of `layer`'s slot run.
+    #[inline]
+    pub fn stage0(&self, layer: usize) -> Value {
+        debug_assert!(layer < self.n_layer);
+        Value(self.first.0 + (layer * self.layer_stride()) as u32)
+    }
+
+    /// Total staging leaves.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.n_layer * self.layer_stride()
+    }
+
+    /// True for a degenerate layout (`block_size == 1`: no prefix ever).
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// A session's stored key/value activations, one `[k·d | v·d]` slot per
+/// `(layer, position)` — the state that makes decode incremental.
+///
+/// Values live as `f64` so the cache is scalar-type-agnostic (sessions
+/// are not generic over the tape's scalar); widening `f32 → f64 → f32`
+/// is exact, so staging loses nothing. The buffer is allocated once at
+/// construction and never grows — steady-state decode performs zero
+/// allocations here.
+#[derive(Clone, Debug)]
+pub struct KvCache {
+    vals: Vec<f64>,
+    n_layer: usize,
+    d_model: usize,
+    n_slots: usize,
+    /// Positions stored (`0..=n_slots`).
+    filled: usize,
+    /// Cleared forever once the context window slides: absolute
+    /// positions renumber, so no stored prefix can ever be reused.
+    valid: bool,
+}
+
+impl KvCache {
+    /// Empty cache sized for `cfg` (capacity
+    /// `n_layer · (block_size - 1) · 2 · d_model`, allocated up front).
+    pub fn new(cfg: &GptConfig) -> KvCache {
+        let n_slots = cfg.block_size.saturating_sub(1);
+        KvCache {
+            vals: vec![0.0; cfg.n_layer * n_slots * 2 * cfg.d_model],
+            n_layer: cfg.n_layer,
+            d_model: cfg.d_model,
+            n_slots,
+            filled: 0,
+            valid: true,
+        }
+    }
+
+    /// Positions currently stored.
+    pub fn filled(&self) -> usize {
+        self.filled
+    }
+
+    /// False once the window has slid (prefix permanently unusable).
+    pub fn is_valid(&self) -> bool {
+        self.valid
+    }
+
+    /// Can a context of `len` tokens take the append fast path? Needs a
+    /// valid stored prefix of exactly `len - 1` positions.
+    pub fn usable_for(&self, len: usize) -> bool {
+        self.valid && len >= 2 && self.filled == len - 1 && self.filled <= self.n_slots
+    }
+
+    /// Forget everything and start a fresh (valid) request.
+    pub fn reset(&mut self) {
+        self.filled = 0;
+        self.valid = true;
+    }
+
+    /// Mark the prefix permanently unusable (the window slid).
+    pub fn invalidate(&mut self) {
+        self.filled = 0;
+        self.valid = false;
+    }
+
+    /// One layer's stored prefix (`filled` slots), contiguous — the
+    /// staging source.
+    fn layer_prefix(&self, layer: usize) -> &[f64] {
+        let per = 2 * self.d_model;
+        let at = layer * self.n_slots * per;
+        &self.vals[at..at + self.filled * per]
+    }
+
+    /// Mutable `[k·d | v·d]` slot for `(layer, pos)`.
+    fn slot_mut(&mut self, layer: usize, pos: usize) -> &mut [f64] {
+        debug_assert!(pos < self.n_slots);
+        let per = 2 * self.d_model;
+        let at = (layer * self.n_slots + pos) * per;
+        &mut self.vals[at..at + per]
+    }
+
+    /// Store position `pos`'s K/V for `layer` from tape nodes (`k0`/`v0`
+    /// each the first of `d_model` consecutive nodes). Positions at or
+    /// beyond the slot capacity are skipped — a depth-`block_size`
+    /// append's own K/V can never be re-read (the next token slides).
+    fn store_from_tape<T: Scalar>(
+        &mut self,
+        tape: &Tape<T>,
+        layer: usize,
+        pos: usize,
+        k0: Value,
+        v0: Value,
+    ) {
+        if pos >= self.n_slots {
+            return;
+        }
+        let d = self.d_model;
+        let ks = tape.values_range(k0, d);
+        let vs = tape.values_range(v0, d);
+        let slot = self.slot_mut(layer, pos);
+        for (dst, &s) in slot[..d].iter_mut().zip(ks) {
+            *dst = s.to_f64();
+        }
+        for (dst, &s) in slot[d..].iter_mut().zip(vs) {
+            *dst = s.to_f64();
+        }
+    }
+}
+
+/// Per-tape decode runtime: the staging leaves plus the two program
+/// caches (full-window prefill/oracle programs keyed by window length,
+/// append programs keyed by depth). One per serving lane; sessions move
+/// freely between lanes because their K/V travels with them in the
+/// session-owned [`KvCache`] and is re-staged before every append step.
+#[derive(Debug)]
+pub struct DecodeState {
+    layout: KvLayout,
+    /// Tape mark directly above the staging leaves; recorded programs
+    /// stack above it, compaction rewinds to it (staging survives).
+    base: Mark,
+    /// Full-window programs (prefill + slid-window oracle), LRU-bounded
+    /// like the full-decode lane cache.
+    full: ProgramCache<FullProgram>,
+    /// Append programs, one per depth `2..=block_size` — at most
+    /// `block_size - 1` entries ever, so unbounded is already O(1).
+    append: ProgramCache<AppendProgram>,
+}
+
+impl DecodeState {
+    /// Allocate the staging region on `tape` (which must sit exactly at
+    /// the model's parameter base) and set up empty program caches.
+    /// `cache_cap` bounds the full-window cache (`0` = unbounded),
+    /// mirroring the full-decode lane cache knob.
+    pub fn install<T: Scalar>(tape: &mut Tape<T>, model: &Gpt, cache_cap: usize) -> DecodeState {
+        assert_eq!(
+            tape.len(),
+            model.base.node_count(),
+            "staging must sit directly on the parameter base"
+        );
+        let cfg = &model.cfg;
+        let n_slots = cfg.block_size.saturating_sub(1);
+        let first = Value(tape.len() as u32);
+        for _ in 0..cfg.n_layer * n_slots * 2 * cfg.d_model {
+            tape.leaf(T::ZERO);
+        }
+        let base = tape.mark();
+        DecodeState {
+            layout: KvLayout {
+                first,
+                n_layer: cfg.n_layer,
+                d_model: cfg.d_model,
+                n_slots,
+            },
+            base,
+            full: if cache_cap == 0 {
+                ProgramCache::new()
+            } else {
+                ProgramCache::bounded(cache_cap)
+            },
+            append: ProgramCache::new(),
+        }
+    }
+
+    /// The staging geometry.
+    pub fn layout(&self) -> KvLayout {
+        self.layout
+    }
+
+    /// The mark above the staging leaves (programs stack above it).
+    pub fn base(&self) -> Mark {
+        self.base
+    }
+
+    /// Cached full-window program count.
+    pub fn full_len(&self) -> usize {
+        self.full.len()
+    }
+
+    /// Cached append program count (≤ `block_size - 1`).
+    pub fn append_len(&self) -> usize {
+        self.append.len()
+    }
+
+    /// Sorted window lengths of the live full-window programs.
+    pub fn full_windows(&self) -> Vec<u64> {
+        let mut ws: Vec<u64> = self.full.entries().map(|(k, _)| k).collect();
+        ws.sort_unstable();
+        ws
+    }
+
+    /// Sorted depths of the live append programs.
+    pub fn append_depths(&self) -> Vec<u64> {
+        let mut ds: Vec<u64> = self.append.entries().map(|(k, _)| k).collect();
+        ds.sort_unstable();
+        ds
+    }
+
+    /// Lifetime `(hits, misses, evictions)` summed over both caches.
+    pub fn counters(&self) -> (u64, u64, u64) {
+        (
+            self.full.hits() + self.append.hits(),
+            self.full.misses() + self.append.misses(),
+            self.full.evictions() + self.append.evictions(),
+        )
+    }
+
+    /// Nodes of the live recorded segments (both caches) — the numerator
+    /// of the compaction policy's live fraction.
+    pub fn live_nodes(&self) -> usize {
+        self.full.entries().map(|(_, e)| e.0.node_count()).sum::<usize>()
+            + self.append.entries().map(|(_, e)| e.0.node_count()).sum::<usize>()
+    }
+
+    /// Load the session's stored prefix into the staging leaves — the
+    /// cross-step rebind: one step's exported K/V becomes the next
+    /// step's replay inputs. Pure `set`-values, zero appends.
+    fn stage<T: Scalar>(&self, tape: &mut Tape<T>, kv: &KvCache) {
+        debug_assert_eq!(kv.n_layer, self.layout.n_layer);
+        debug_assert_eq!(kv.d_model, self.layout.d_model);
+        for layer in 0..self.layout.n_layer {
+            tape.stage_values(self.layout.stage0(layer), kv.layer_prefix(layer));
+        }
+    }
+
+    /// Compact the stacked program segments: rewind to the staging base
+    /// (dropping every recorded segment, live or dead) and re-record the
+    /// live shapes of both caches in place. Like
+    /// [`Gpt::compact_gen_cache`], placeholder inputs are irrelevant —
+    /// every replay rebinds real tokens and re-stages real K/V, so
+    /// compaction never changes a served token.
+    pub fn compact<T: Scalar>(&mut self, tape: &mut Tape<T>, model: &Gpt) {
+        tape.rewind(self.base);
+        let layout = self.layout;
+        self.full.rebuild_in_place(|key, entry| {
+            let window = key as usize;
+            debug_assert!(window >= 1 && window <= model.cfg.block_size);
+            let placeholder = vec![0u32; window];
+            *entry = model.record_logits_kv(tape, &placeholder);
+        });
+        self.append.rebuild_in_place(|key, entry| {
+            *entry = model.record_append(tape, &layout, key as usize, 0);
+        });
+    }
+}
+
+impl Gpt {
+    /// Record one append-one-token program at the current tape top: the
+    /// new token's embedding gather at position `depth - 1`, one
+    /// [`super::TransformerBlock::forward_append`] step per layer
+    /// against the staged prefix, final LayerNorm, and one logits row.
+    /// The graph shape depends only on `depth`; the token is a rebind
+    /// slot ([`Gpt::rebind_append`]).
+    pub fn record_append<T: Scalar>(
+        &self,
+        tape: &mut Tape<T>,
+        layout: &KvLayout,
+        depth: usize,
+        tok: u32,
+    ) -> (Recording, AppendBinds) {
+        assert!(
+            depth >= 2 && depth <= self.cfg.block_size,
+            "append depth {depth} out of range (prefill handles depth 1)"
+        );
+        let d = self.cfg.d_model;
+        let prefix = depth - 1;
+        let floor = tape.mark();
+        let first_add = Value(tape.len() as u32);
+        let te = self.tok_emb.first.0 + (tok as usize * d) as u32;
+        let pe = self.pos_emb.first.0 + (prefix * d) as u32;
+        let mut x: Vec<Value> = (0..d as u32)
+            .map(|j| tape.add(Value(te + j), Value(pe + j)))
+            .collect();
+        let mut kv_new = Vec::with_capacity(self.cfg.n_layer);
+        for (li, blk) in self.blocks.iter().enumerate() {
+            let (nx, kvp) =
+                blk.forward_append(tape, &x, layout.stage0(li), layout.slot_stride(), prefix);
+            x = nx;
+            kv_new.push(kvp);
+        }
+        if let Some(ln) = &self.ln_f {
+            x = ln.forward(tape, &x);
+        }
+        let logits = self.lm_head.forward(tape, &x);
+        debug_assert!(
+            logits.windows(2).all(|p| p[1].raw() == p[0].raw() + 1),
+            "lm-head logits must be consecutive nodes"
+        );
+        let root = *logits.last().expect("nonempty vocab");
+        let rec = Recording::capture(tape, floor, root);
+        (
+            rec,
+            AppendBinds {
+                first_add,
+                depth,
+                logits0: logits[0],
+                kv_new,
+            },
+        )
+    }
+
+    /// Redirect a recorded append program's token-embedding gather to a
+    /// new token (before [`Tape::replay_forward`]). Allocation-free.
+    pub fn rebind_append<T: Scalar>(&self, tape: &mut Tape<T>, binds: &AppendBinds, tok: u32) {
+        let d = self.cfg.d_model;
+        let te = self.tok_emb.first.0 + (tok as usize * d) as u32;
+        for j in 0..d as u32 {
+            tape.rebind_arg_a(Value(binds.first_add.0 + j), Value(te + j));
+        }
+    }
+
+    /// One incremental-decode step: leave the last position's logits
+    /// computed on the tape and return the first logit's node id — the
+    /// decode-mode counterpart of [`Gpt::cached_logits`], and bitwise
+    /// equal to it for the same `tokens`.
+    ///
+    /// Dispatch: while the stored prefix covers `tokens[..len-1]` (and
+    /// the window has not slid), replay the depth-`len` **append**
+    /// program — stage the prefix, rebind the one new token, one frozen
+    /// sweep, export the new position's K/V. Otherwise replay the
+    /// **full-window** program (prefill, a moved session, or a slid
+    /// window) and export the whole window's K/V. Steady-state appends
+    /// perform zero tape appends and zero allocations.
+    pub fn decode_logits<T: Scalar>(
+        &self,
+        tape: &mut Tape<T>,
+        state: &mut DecodeState,
+        kv: &mut KvCache,
+        tokens: &[u32],
+    ) -> Value {
+        let block = self.cfg.block_size;
+        let len = tokens.len();
+        assert!(len >= 1, "cannot decode an empty context");
+        if len > block {
+            // Sliding: every absolute position renumbers, permanently.
+            kv.invalidate();
+        }
+        if len <= block && kv.usable_for(len) {
+            // Append fast path at depth == len.
+            state.stage(tape, kv);
+            let tok = tokens[len - 1];
+            match state.append.lookup(len as u64) {
+                Some((rec, binds)) => {
+                    let d = self.cfg.d_model;
+                    let te = self.tok_emb.first.0 + (tok as usize * d) as u32;
+                    for j in 0..d as u32 {
+                        tape.rebind_arg_a(Value(binds.first_add.0 + j), Value(te + j));
+                    }
+                    tape.replay_forward(rec);
+                    for (li, &(k0, v0)) in binds.kv_new.iter().enumerate() {
+                        kv.store_from_tape(tape, li, len - 1, k0, v0);
+                    }
+                    if len - 1 < kv.n_slots {
+                        kv.filled = len;
+                    }
+                    binds.logits0
+                }
+                None => {
+                    let layout = state.layout;
+                    let (rec, binds) = self.record_append(tape, &layout, len, tok);
+                    for (li, &(k0, v0)) in binds.kv_new.iter().enumerate() {
+                        kv.store_from_tape(tape, li, len - 1, k0, v0);
+                    }
+                    if len - 1 < kv.n_slots {
+                        kv.filled = len;
+                    }
+                    let logits0 = binds.logits0;
+                    state.append.insert(len as u64, (rec, binds));
+                    logits0
+                }
+            }
+        } else {
+            // Full-window path: prefill, a prefix mismatch, or a slid
+            // window (where this *is* the oracle, token for token).
+            let w = len.min(block);
+            let ctx = &tokens[len - w..];
+            let (logits0, export) = match state.full.lookup(w as u64) {
+                Some((rec, binds, kv_ids)) => {
+                    let b = *binds;
+                    self.rebind_logits(tape, &b, ctx);
+                    tape.replay_forward(rec);
+                    if len <= block {
+                        kv.reset();
+                        for (li, layer) in kv_ids.iter().enumerate() {
+                            for (p, &(k0, v0)) in layer.iter().enumerate() {
+                                kv.store_from_tape(tape, li, p, k0, v0);
+                            }
+                        }
+                        (b.logits0, true)
+                    } else {
+                        (b.logits0, false)
+                    }
+                }
+                None => {
+                    let (rec, binds, kv_ids) = self.record_logits_kv(tape, ctx);
+                    let logits0 = binds.logits0;
+                    let export = len <= block;
+                    if export {
+                        kv.reset();
+                        for (li, layer) in kv_ids.iter().enumerate() {
+                            for (p, &(k0, v0)) in layer.iter().enumerate() {
+                                kv.store_from_tape(tape, li, p, k0, v0);
+                            }
+                        }
+                    }
+                    state.full.insert(w as u64, (rec, binds, kv_ids));
+                    (logits0, export)
+                }
+            };
+            if export {
+                kv.filled = w.min(kv.n_slots);
+            }
+            logits0
+        }
+    }
+
+    /// [`Gpt::generate_cached`]'s incremental sibling: prefill once with
+    /// the full-window program, then append-step — **bitwise identical**
+    /// token streams for the same RNG, at O(window) instead of
+    /// O(window²) per token. Once the context slides past `block_size`
+    /// it falls back to the full-window oracle per token (stored K/V
+    /// cannot survive position renumbering).
+    ///
+    /// ```
+    /// use burtorch::nn::{DecodeState, Gpt, GptConfig, KvCache};
+    /// use burtorch::rng::Rng;
+    /// use burtorch::tape::{ProgramCache, Tape};
+    ///
+    /// let mut tape = Tape::<f64>::new();
+    /// let mut rng = Rng::new(7);
+    /// let cfg = GptConfig { n_layer: 1, d_model: 8, n_head: 2, ..GptConfig::paper() };
+    /// let model = Gpt::new(&mut tape, cfg, &mut rng);
+    ///
+    /// // The full-window oracle…
+    /// let mut cache = ProgramCache::new();
+    /// let mut rng_a = Rng::new(11);
+    /// let want = model.generate_cached(&mut tape, &[1, 2, 3], 10, 0.8, &mut rng_a, &mut cache);
+    /// tape.rewind(model.base);
+    ///
+    /// // …and the incremental path: same tokens, bitwise.
+    /// let mut state = DecodeState::install(&mut tape, &model, 0);
+    /// let mut kv = KvCache::new(&model.cfg);
+    /// let mut rng_b = Rng::new(11);
+    /// let got = model.decode_incremental(&mut tape, &mut state, &mut kv, &[1, 2, 3], 10, 0.8, &mut rng_b);
+    /// assert_eq!(want, got);
+    /// ```
+    #[allow(clippy::too_many_arguments)]
+    pub fn decode_incremental<T: Scalar>(
+        &self,
+        tape: &mut Tape<T>,
+        state: &mut DecodeState,
+        kv: &mut KvCache,
+        prompt: &[u32],
+        n: usize,
+        temperature: f64,
+        rng: &mut crate::rng::Rng,
+    ) -> Vec<u32> {
+        kv.reset();
+        let vocab = self.cfg.vocab;
+        let mut tokens: Vec<u32> = prompt.to_vec();
+        for _ in 0..n {
+            let logits0 = self.decode_logits(tape, state, kv, &tokens);
+            let zs: Vec<f64> = (0..vocab)
+                .map(|j| tape.value(Value(logits0.0 + j as u32)).to_f64())
+                .collect();
+            tokens.push(super::sample_token(&zs, temperature, rng));
+        }
+        tokens[prompt.len()..].to_vec()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn tiny() -> (Tape<f64>, Gpt) {
+        let mut t = Tape::new();
+        let mut rng = Rng::new(2024);
+        let cfg = GptConfig {
+            n_layer: 2,
+            d_model: 8,
+            n_head: 2,
+            ..GptConfig::paper()
+        };
+        let model = Gpt::new(&mut t, cfg, &mut rng);
+        (t, model)
+    }
+
+    #[test]
+    fn install_allocates_one_slot_per_layer_position() {
+        let (mut t, model) = tiny();
+        let before = t.len();
+        let state = DecodeState::install(&mut t, &model, 0);
+        let lay = state.layout();
+        // 2 layers × 7 slots × 16 ids per slot.
+        assert_eq!(lay.len(), 2 * 7 * 16);
+        assert_eq!(t.len(), before + lay.len());
+        assert_eq!(lay.stage0(1).0, lay.first.0 + 7 * 16);
+        assert_eq!(state.base().node_count(), t.len());
+    }
+
+    #[test]
+    fn incremental_matches_oracle_and_slides_back_to_full() {
+        let (mut t, model) = tiny();
+        // Oracle stream (prompt 3 + 12 tokens crosses block_size 8).
+        let mut cache = ProgramCache::new();
+        let mut rng_a = Rng::new(5);
+        let want = model.generate_cached(&mut t, &[4, 1, 9], 12, 0.9, &mut rng_a, &mut cache);
+        t.rewind(model.base);
+
+        let mut state = DecodeState::install(&mut t, &model, 0);
+        let mut kv = KvCache::new(&model.cfg);
+        let mut rng_b = Rng::new(5);
+        let got = model.decode_incremental(&mut t, &mut state, &mut kv, &[4, 1, 9], 12, 0.9, &mut rng_b);
+        assert_eq!(want, got);
+        // Depths 4..=8 appended; windows 3 (prefill) and 8 (slid) full.
+        assert_eq!(state.append_depths(), vec![4, 5, 6, 7, 8]);
+        assert_eq!(state.full_windows(), vec![3, 8]);
+        assert!(!kv.is_valid(), "sliding must invalidate the prefix");
+    }
+
+    #[test]
+    fn steady_state_appends_nothing_to_the_tape() {
+        let (mut t, model) = tiny();
+        let mut state = DecodeState::install(&mut t, &model, 0);
+        let mut kv = KvCache::new(&model.cfg);
+        // Warm every shape this prompt/stream will touch.
+        let mut rng = Rng::new(6);
+        let _ = model.decode_incremental(&mut t, &mut state, &mut kv, &[2], 12, 0.9, &mut rng);
+        let (nodes, aux, frozen_caps) = (t.len(), t.aux_len(), t.capacities());
+        let programs = (state.full_len(), state.append_len());
+        let mut rng2 = Rng::new(61);
+        let again = model.decode_incremental(&mut t, &mut state, &mut kv, &[2], 12, 0.9, &mut rng2);
+        assert_eq!(t.len(), nodes, "steady-state decode must not append nodes");
+        assert_eq!(t.aux_len(), aux, "steady-state decode must not append aux");
+        assert_eq!(t.capacities(), frozen_caps, "steady-state decode must not allocate");
+        assert_eq!((state.full_len(), state.append_len()), programs);
+        // And it still matches the oracle.
+        let mut oracle_tape_cache = ProgramCache::new();
+        t.rewind(model.base);
+        let mut rng3 = Rng::new(61);
+        let want = model.generate_cached(&mut t, &[2], 12, 0.9, &mut rng3, &mut oracle_tape_cache);
+        assert_eq!(want, again);
+    }
+
+    #[test]
+    fn mid_stream_compaction_never_changes_a_token() {
+        let (mut t, model) = tiny();
+        let mut cache = ProgramCache::new();
+        let mut rng_a = Rng::new(8);
+        let want = model.generate_cached(&mut t, &[3, 7], 10, 0.8, &mut rng_a, &mut cache);
+        t.rewind(model.base);
+
+        let mut state = DecodeState::install(&mut t, &model, 0);
+        let mut kv = KvCache::new(&model.cfg);
+        kv.reset();
+        let mut rng_b = Rng::new(8);
+        let mut tokens = vec![3u32, 7];
+        for step in 0..10 {
+            if step == 4 {
+                state.compact(&mut t, &model);
+            }
+            let logits0 = model.decode_logits(&mut t, &mut state, &mut kv, &tokens);
+            let zs: Vec<f64> = (0..model.cfg.vocab)
+                .map(|j| t.value(Value(logits0.0 + j as u32)))
+                .collect();
+            tokens.push(super::super::sample_token(&zs, 0.8, &mut rng_b));
+        }
+        assert_eq!(&tokens[2..], &want[..]);
+    }
+}

@@ -172,6 +172,21 @@ impl Gpt {
         tape: &mut Tape<T>,
         tokens: &[u32],
     ) -> (Vec<Vec<Value>>, Value) {
+        let (logits, first_add, _) = self.forward_logits_kv_inner(tape, tokens);
+        (logits, first_add)
+    }
+
+    /// [`forward_logits_inner`](Self::forward_logits_inner), also
+    /// collecting each layer's per-position `(k0, v0)` attention nodes
+    /// (`kv[layer][pos]`, see
+    /// [`TransformerBlock::forward_with_kv`]). The graph is
+    /// node-for-node identical — the plain entry point delegates here —
+    /// so exposing K/V costs nothing and changes no training value.
+    pub(super) fn forward_logits_kv_inner<T: Scalar>(
+        &self,
+        tape: &mut Tape<T>,
+        tokens: &[u32],
+    ) -> (Vec<Vec<Value>>, Value, Vec<Vec<(Value, Value)>>) {
         let cfg = &self.cfg;
         assert!(tokens.len() <= cfg.block_size, "window exceeds block size");
         // x[p] = tok_emb[token] + pos_emb[p], elementwise (paper §2.5
@@ -187,14 +202,17 @@ impl Gpt {
                     .collect(),
             );
         }
+        let mut kv = Vec::with_capacity(self.blocks.len());
         for blk in &self.blocks {
-            x = blk.forward(tape, &x);
+            let (nx, layer_kv) = blk.forward_with_kv(tape, &x);
+            x = nx;
+            kv.push(layer_kv);
         }
         if let Some(ln) = &self.ln_f {
             x = x.iter().map(|xs| ln.forward(tape, xs)).collect();
         }
         let logits = x.iter().map(|xs| self.lm_head.forward(tape, xs)).collect();
-        (logits, first_add)
+        (logits, first_add, kv)
     }
 
     /// Logits for every position of one tokenized window.
@@ -329,9 +347,25 @@ impl Gpt {
         tape: &mut Tape<T>,
         tokens: &[u32],
     ) -> (Recording, GptGenBinds) {
+        let (rec, binds, _) = self.record_logits_kv(tape, tokens);
+        (rec, binds)
+    }
+
+    /// [`record_logits`](Self::record_logits) (which delegates here),
+    /// additionally returning the frozen window's K/V node ids —
+    /// `kv[layer][pos]` pairs of first-key/first-value nodes — so a
+    /// decode runtime can *export* the key/value activations after each
+    /// replay of this program and re-stage them as the prefix slots of
+    /// an append-one-token program (`Gpt::decode_logits`). Identical
+    /// graph, identical recording, identical rebind slots.
+    pub fn record_logits_kv<T: Scalar>(
+        &self,
+        tape: &mut Tape<T>,
+        tokens: &[u32],
+    ) -> (Recording, GptGenBinds, Vec<Vec<(Value, Value)>>) {
         assert!(!tokens.is_empty(), "cannot record an empty window");
         let floor = tape.mark();
-        let (logits, first_add) = self.forward_logits_inner(tape, tokens);
+        let (logits, first_add, kv) = self.forward_logits_kv_inner(tape, tokens);
         let last = logits.last().expect("nonempty window");
         debug_assert!(
             last.windows(2).all(|p| p[1].raw() == p[0].raw() + 1),
@@ -346,6 +380,7 @@ impl Gpt {
                 window: tokens.len(),
                 logits0: last[0],
             },
+            kv,
         )
     }
 
@@ -431,6 +466,11 @@ impl Gpt {
     ///
     /// Token-for-token identical to [`Gpt::generate`] for the same RNG:
     /// replayed logits are bitwise equal to eagerly rebuilt ones.
+    ///
+    /// This full-window path is also the **oracle** for incremental
+    /// KV-cache decode: [`Gpt::decode_incremental`] produces the same
+    /// token stream bitwise while paying O(window) instead of O(window²)
+    /// per token (`tests/decode_equivalence.rs`).
     pub fn generate_cached<T: Scalar>(
         &self,
         tape: &mut Tape<T>,

@@ -12,6 +12,7 @@
 
 mod attention;
 mod block;
+mod decode;
 mod gpt;
 mod init;
 mod layernorm;
@@ -21,6 +22,7 @@ mod softmax;
 
 pub use attention::CausalSelfAttention;
 pub use block::TransformerBlock;
+pub use decode::{AppendBinds, AppendProgram, DecodeState, FullProgram, KvCache, KvLayout};
 pub use gpt::{sample_token, Gpt, GptBinds, GptConfig, GptGenBinds};
 pub use init::{kaiming_std, xavier_std, ParamAlloc};
 pub use layernorm::LayerNorm;

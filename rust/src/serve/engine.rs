@@ -28,6 +28,25 @@
 //! through `Gpt::generate_cached` token for token
 //! (`tests/serve_determinism.rs`).
 //!
+//! ## Decode modes: full-window oracle vs incremental KV-cache
+//!
+//! [`ServeOptions::decode`] selects the per-token engine. The default,
+//! [`DecodeMode::Full`], replays one full-window logits program per
+//! token — O(window²) work per completion and one cached program per
+//! window length. [`DecodeMode::Incremental`] installs a [`DecodeState`]
+//! on every lane: each session carries its own [`KvCache`], the lane
+//! re-stages the stored prefix before every step, and steady-state
+//! decode replays a single append-one-token program — O(window) per
+//! token, with one cached append program per **depth** (at most
+//! `block_size − 1` of them per lane, ever). Because an appending
+//! session's window *is* its depth (`window == tokens.len()` until the
+//! context slides), the existing `(window, admission)` work order
+//! already groups sessions by depth — no scheduler change needed. The
+//! session-owned cache is what lets sessions migrate between lanes
+//! freely: any lane can re-stage any session's prefix. The two modes
+//! are bitwise-equal token for token (`tests/decode_equivalence.rs`);
+//! full mode stays on as the oracle.
+//!
 //! ## Long-lived processes: bounded caches and compaction
 //!
 //! With `cache_cap = N`, each lane's program cache never holds more than
@@ -66,7 +85,7 @@
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::time::Instant;
 
-use crate::nn::Gpt;
+use crate::nn::{DecodeState, Gpt, KvCache};
 use crate::parallel::{PtrSend, WorkerPool};
 use crate::scalar::Scalar;
 use crate::tape::{ProgramCache, Recording, Tape, Value};
@@ -78,6 +97,20 @@ use super::ParsedRequest;
 
 /// Lane-cache payload: a frozen logits recording plus its rebind slots.
 type GenProgram = (Recording, crate::nn::GptGenBinds);
+
+/// Per-token decode engine (see the module docs: *Decode modes*).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum DecodeMode {
+    /// Replay one full-window logits program per token — O(window²) per
+    /// completion. The reference path and the oracle the incremental
+    /// mode is tested against.
+    #[default]
+    Full,
+    /// Prefill once full-window, then replay one append-one-token
+    /// program per token against the session's stored K/V prefix —
+    /// O(window) per token, bitwise-equal to [`DecodeMode::Full`].
+    Incremental,
+}
 
 /// Serving configuration.
 #[derive(Clone, Copy, Debug)]
@@ -105,6 +138,9 @@ pub struct ServeOptions {
     /// Hard cap on any request's `max_new_tokens` (0 = unlimited). A
     /// clamped request still completes with status `ok`.
     pub max_tokens: usize,
+    /// Per-token decode engine. [`DecodeMode::Incremental`] serves the
+    /// same tokens at O(window) instead of O(window²) per token.
+    pub decode: DecodeMode,
 }
 
 impl Default for ServeOptions {
@@ -116,12 +152,25 @@ impl Default for ServeOptions {
             max_queue: 0,
             deadline_ms: None,
             max_tokens: 0,
+            decode: DecodeMode::Full,
         }
     }
 }
 
+/// One lane's live program inventory — the shape keys actually cached
+/// right now, in sorted order. In [`DecodeMode::Full`] every program is
+/// a full-window shape; in [`DecodeMode::Incremental`] the full windows
+/// are prefill/slid-window programs and the depths are append programs.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct LanePrograms {
+    /// Window lengths of the lane's cached full-window programs.
+    pub full_windows: Vec<u64>,
+    /// Depths of the lane's cached append programs (empty in full mode).
+    pub append_depths: Vec<u64>,
+}
+
 /// Aggregate serving statistics (cache counters are summed over lanes).
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Debug, Default)]
 pub struct ServeStats {
     /// Tokens generated.
     pub tokens: u64,
@@ -137,8 +186,16 @@ pub struct ServeStats {
     pub cache_evictions: u64,
     /// Tape compactions (sum over lanes).
     pub compactions: u64,
-    /// Live cached programs right now (sum over lanes).
+    /// Live cached full-window programs right now (sum over lanes).
     pub cached_programs: usize,
+    /// Live cached append programs right now (sum over lanes; 0 in
+    /// [`DecodeMode::Full`], at most `lanes · (block_size − 1)` in
+    /// [`DecodeMode::Incremental`]).
+    pub append_programs: usize,
+    /// The decode mode the engine is running.
+    pub decode: DecodeMode,
+    /// Per-lane live program inventory (index = lane).
+    pub lane_programs: Vec<LanePrograms>,
     /// Peak tape length observed on any lane.
     pub peak_tape_nodes: usize,
     /// Lane faults caught and quarantined (each heals on the next tick).
@@ -151,6 +208,11 @@ pub struct ServeStats {
 struct ServeLane<T: Scalar> {
     tape: Tape<T>,
     cache: ProgramCache<GenProgram>,
+    /// Incremental-decode runtime (staging leaves + full/append program
+    /// caches); `Some` iff the engine runs [`DecodeMode::Incremental`].
+    /// `cache` above is unused then — the full-window programs live in
+    /// the [`DecodeState`] so they share its staging-base geometry.
+    decode: Option<DecodeState>,
     /// Reusable vocab-sized logits staging buffer — the per-token read
     /// of the last position's logits allocates nothing in steady state.
     zs: Vec<f64>,
@@ -170,6 +232,7 @@ impl<T: Scalar> ServeLane<T> {
             } else {
                 ProgramCache::bounded(cache_cap)
             },
+            decode: None,
             zs: Vec::with_capacity(vocab),
             compactions: 0,
             peak_nodes: 0,
@@ -220,6 +283,11 @@ pub struct ServeEngine<T: Scalar> {
     default_deadline_ms: Option<u64>,
     /// Engine-wide cap on per-request token budgets (0 = unlimited).
     max_tokens: usize,
+    /// Per-lane program-cache bound, kept so a healed lane's rebuilt
+    /// [`DecodeState`] gets the same full-window cache bound.
+    cache_cap: usize,
+    /// The per-token decode engine every lane runs.
+    decode_mode: DecodeMode,
     /// True once any live request carries a deadline — gates the
     /// per-tick clock reads and deadline sweep off the no-deadline path.
     any_deadlines: bool,
@@ -257,6 +325,14 @@ impl<T: Scalar> ServeEngine<T> {
             let t = &lanes[0].tape;
             (0..model.base.node_count()).map(|i| t.value(Value(i as u32))).collect()
         };
+        if opts.decode == DecodeMode::Incremental {
+            // Staging leaves sit directly above the parameter base on
+            // every lane — identical ids across lanes (and across heals),
+            // so any lane can replay any session's prefix.
+            for lane in &mut lanes {
+                lane.decode = Some(DecodeState::install(&mut lane.tape, &model, opts.cache_cap));
+            }
+        }
         ServeEngine {
             model,
             lanes,
@@ -268,6 +344,8 @@ impl<T: Scalar> ServeEngine<T> {
             pending_shed: Vec::new(),
             default_deadline_ms: opts.deadline_ms,
             max_tokens: opts.max_tokens,
+            cache_cap: opts.cache_cap,
+            decode_mode: opts.decode,
             any_deadlines: false,
             fault_plan: None,
             clock: None,
@@ -374,7 +452,7 @@ impl<T: Scalar> ServeEngine<T> {
         let mut done = std::mem::take(&mut self.pending_shed);
         for lane in &mut self.lanes {
             if lane.poisoned {
-                heal_lane(&self.model, lane, &self.param_master);
+                heal_lane(&self.model, lane, &self.param_master, self.cache_cap);
             }
         }
         let n_admitted = self.sched.admit();
@@ -505,7 +583,11 @@ impl<T: Scalar> ServeEngine<T> {
         done
     }
 
-    /// Aggregate statistics so far.
+    /// Aggregate statistics so far. Cache counters are summed over lanes
+    /// regardless of decode mode: in [`DecodeMode::Incremental`] a
+    /// lane's hits/misses/evictions cover both its full-window and
+    /// append caches, so `cache_hits + cache_misses == tokens` holds in
+    /// both modes (every token is exactly one program lookup).
     pub fn stats(&self) -> ServeStats {
         let mut s = ServeStats {
             tokens: self.tokens,
@@ -513,14 +595,37 @@ impl<T: Scalar> ServeEngine<T> {
             completed: self.completed,
             quarantines: self.quarantines,
             shed: self.shed_count,
+            decode: self.decode_mode,
             ..ServeStats::default()
         };
         for lane in &self.lanes {
-            s.cache_hits += lane.cache.hits();
-            s.cache_misses += lane.cache.misses();
-            s.cache_evictions += lane.cache.evictions();
+            match &lane.decode {
+                Some(state) => {
+                    let (hits, misses, evictions) = state.counters();
+                    s.cache_hits += hits;
+                    s.cache_misses += misses;
+                    s.cache_evictions += evictions;
+                    s.cached_programs += state.full_len();
+                    s.append_programs += state.append_len();
+                    s.lane_programs.push(LanePrograms {
+                        full_windows: state.full_windows(),
+                        append_depths: state.append_depths(),
+                    });
+                }
+                None => {
+                    s.cache_hits += lane.cache.hits();
+                    s.cache_misses += lane.cache.misses();
+                    s.cache_evictions += lane.cache.evictions();
+                    s.cached_programs += lane.cache.len();
+                    let mut ws: Vec<u64> = lane.cache.entries().map(|(k, _)| k).collect();
+                    ws.sort_unstable();
+                    s.lane_programs.push(LanePrograms {
+                        full_windows: ws,
+                        append_depths: Vec::new(),
+                    });
+                }
+            }
             s.compactions += lane.compactions;
-            s.cached_programs += lane.cache.len();
             s.peak_tape_nodes = s.peak_tape_nodes.max(lane.peak_nodes);
         }
         s
@@ -536,7 +641,22 @@ impl<T: Scalar> ServeEngine<T> {
 fn advance_session<T: Scalar>(model: &Gpt, lane: &mut ServeLane<T>, sess: &mut Session) {
     let block = model.cfg.block_size;
     maybe_compact(model, lane);
-    let logits0 = model.cached_logits(&mut lane.tape, &mut lane.cache, sess.context(block));
+    let logits0 = match &mut lane.decode {
+        // Incremental mode: hand the full token context plus the
+        // session's own K/V to the decode dispatcher — append fast path
+        // when the stored prefix covers `tokens[..len-1]`, full-window
+        // (prefill / slid / migrated-session) replay otherwise. A fault
+        // caught mid-`decode_logits` can leave `kv.filled == len` with
+        // the token unpushed; the next advance then fails `usable_for`
+        // and falls back to a full-window replay that re-exports the
+        // prefix, so quarantined ticks still never change a token.
+        Some(state) => {
+            let (tokens, kv_slot) = sess.decode_parts();
+            let kv = kv_slot.get_or_insert_with(|| KvCache::new(&model.cfg));
+            model.decode_logits(&mut lane.tape, state, kv, tokens)
+        }
+        None => model.cached_logits(&mut lane.tape, &mut lane.cache, sess.context(block)),
+    };
     lane.peak_nodes = lane.peak_nodes.max(lane.tape.len());
     lane.zs.clear();
     for j in 0..model.cfg.vocab {
@@ -554,13 +674,21 @@ fn advance_session<T: Scalar>(model: &Gpt, lane: &mut ServeLane<T>, sess: &mut S
 /// trusted about nothing), and drop every cached program (their recorded
 /// tape bases died with the rewind). The heal is O(params + tape) and
 /// happens off the fault path, at the start of the next tick.
-fn heal_lane<T: Scalar>(model: &Gpt, lane: &mut ServeLane<T>, master: &[T]) {
+fn heal_lane<T: Scalar>(model: &Gpt, lane: &mut ServeLane<T>, master: &[T], cache_cap: usize) {
     lane.tape.rewind(model.base);
     for (i, &v) in master.iter().enumerate() {
         lane.tape.set_value(Value(i as u32), v);
     }
     lane.cache.clear();
     lane.zs.clear();
+    if lane.decode.is_some() {
+        // The rewind dropped the staging leaves along with every program
+        // segment; a fresh install re-allocates them at the identical
+        // ids (the layout is a pure function of the model config), so
+        // sessions' stored prefixes re-stage on the healed lane as if
+        // nothing happened.
+        lane.decode = Some(DecodeState::install(&mut lane.tape, model, cache_cap));
+    }
     lane.poisoned = false;
 }
 
@@ -569,16 +697,33 @@ fn heal_lane<T: Scalar>(model: &Gpt, lane: &mut ServeLane<T>, master: &[T]) {
 /// parameter prefix plus ~2× the live program mass, independent of how
 /// many shapes the lane has ever recorded.
 fn maybe_compact<T: Scalar>(model: &Gpt, lane: &mut ServeLane<T>) {
-    let base = model.base.node_count();
-    let stacked = lane.tape.len() - base;
-    if stacked == 0 {
-        return;
-    }
-    let live: usize = lane.cache.entries().map(|(_, (rec, _))| rec.node_count()).sum();
-    let dead = stacked - live;
-    if dead > 0 && dead * 2 >= stacked {
-        model.compact_gen_cache(&mut lane.tape, &mut lane.cache);
-        lane.compactions += 1;
+    match &mut lane.decode {
+        Some(state) => {
+            // Incremental mode stacks programs above the staging base;
+            // live mass spans both the full-window and append caches.
+            let stacked = lane.tape.len() - state.base().node_count();
+            if stacked == 0 {
+                return;
+            }
+            let dead = stacked - state.live_nodes();
+            if dead > 0 && dead * 2 >= stacked {
+                state.compact(&mut lane.tape, model);
+                lane.compactions += 1;
+            }
+        }
+        None => {
+            let base = model.base.node_count();
+            let stacked = lane.tape.len() - base;
+            if stacked == 0 {
+                return;
+            }
+            let live: usize = lane.cache.entries().map(|(_, (rec, _))| rec.node_count()).sum();
+            let dead = stacked - live;
+            if dead > 0 && dead * 2 >= stacked {
+                model.compact_gen_cache(&mut lane.tape, &mut lane.cache);
+                lane.compactions += 1;
+            }
+        }
     }
 }
 
@@ -786,5 +931,94 @@ mod tests {
         assert_eq!(faulty.stats().quarantines, 1);
         let got = collect(faulty);
         assert_eq!(got, want, "degraded output must be bitwise identical");
+    }
+
+    #[test]
+    fn incremental_mode_serves_the_same_tokens_as_full_mode() {
+        let run = |decode: DecodeMode| -> (Vec<(u64, Vec<u32>)>, ServeStats) {
+            let (tape, model) = tiny();
+            let mut eng = ServeEngine::new(
+                tape,
+                model,
+                ServeOptions {
+                    lanes: 2,
+                    decode,
+                    ..ServeOptions::default()
+                },
+            );
+            eng.submit(req(1, vec![1, 2], 9, 10)); // crosses block_size 8
+            eng.submit(req(2, vec![3], 5, 20));
+            eng.submit(req(3, vec![4, 5, 6], 6, 30));
+            let mut done: Vec<(u64, Vec<u32>)> = eng
+                .run_to_completion()
+                .into_iter()
+                .map(|s| (s.id(), s.output().to_vec()))
+                .collect();
+            done.sort();
+            (done, eng.stats())
+        };
+        let (full, full_st) = run(DecodeMode::Full);
+        let (inc, inc_st) = run(DecodeMode::Incremental);
+        assert_eq!(full, inc, "decode modes must agree token for token");
+        assert_eq!(full_st.decode, DecodeMode::Full);
+        assert_eq!(inc_st.decode, DecodeMode::Incremental);
+        assert_eq!(full_st.tokens, inc_st.tokens);
+        // Every token is exactly one program lookup in both modes.
+        assert_eq!(inc_st.cache_hits + inc_st.cache_misses, inc_st.tokens);
+        assert_eq!(full_st.append_programs, 0);
+        assert!(inc_st.append_programs >= 1);
+        // Per-lane inventory: full mode caches only windows; incremental
+        // lanes never hold more than block_size − 1 append depths.
+        let block = GptConfig::paper().block_size;
+        assert_eq!(inc_st.lane_programs.len(), 2);
+        for lp in &full_st.lane_programs {
+            assert!(lp.append_depths.is_empty());
+        }
+        for lp in &inc_st.lane_programs {
+            assert!(lp.append_depths.len() <= block - 1);
+            assert!(lp.append_depths.iter().all(|&d| d >= 2 && d <= block as u64));
+            assert!(lp.full_windows.iter().all(|&w| w >= 1 && w <= block as u64));
+        }
+        let per_lane: usize = inc_st.lane_programs.iter().map(|lp| lp.append_depths.len()).sum();
+        assert_eq!(per_lane, inc_st.append_programs);
+    }
+
+    #[test]
+    fn incremental_lane_fault_heals_and_keeps_outputs_bitwise() {
+        use crate::testkit::FaultPlan;
+        let reqs = |eng: &mut ServeEngine<f64>| {
+            for id in 0..6u64 {
+                eng.submit(req(id, vec![1 + id as u32 % 4], 6, 100 + id));
+            }
+        };
+        let collect = |mut eng: ServeEngine<f64>| -> Vec<(u64, Vec<u32>)> {
+            let mut done: Vec<(u64, Vec<u32>)> = eng
+                .run_to_completion()
+                .into_iter()
+                .map(|s| (s.id(), s.output().to_vec()))
+                .collect();
+            done.sort();
+            done
+        };
+        let opts = ServeOptions {
+            lanes: 3,
+            decode: DecodeMode::Incremental,
+            ..ServeOptions::default()
+        };
+        let (tape, model) = tiny();
+        let mut clean = ServeEngine::new(tape, model, opts);
+        reqs(&mut clean);
+        let want = collect(clean);
+
+        let (tape, model) = tiny();
+        let mut faulty = ServeEngine::new(tape, model, opts);
+        faulty.set_fault_plan(FaultPlan::default().panic_lane(1, 2, 1).panic_lane(2, 4, 0));
+        reqs(&mut faulty);
+        for _ in 0..3 {
+            faulty.step();
+        }
+        assert_eq!(faulty.stats().quarantines, 1);
+        let got = collect(faulty);
+        assert_eq!(got, want, "healed incremental lanes must stay bitwise");
     }
 }

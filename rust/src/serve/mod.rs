@@ -24,25 +24,39 @@
 //!
 //! Batched serving is **bitwise identical** to running each session
 //! alone through `Gpt::generate_cached` — same seed ⇒ same token stream,
-//! for any lane count, any admission order, any cache capacity, and any
-//! compaction schedule (`tests/serve_determinism.rs`). The argument is
-//! compositional: replica tapes carry identical parameters at identical
-//! node ids, replayed logits are bitwise equal to eagerly built ones
-//! (the replay contract), and each session samples from its own RNG.
+//! for any lane count, any admission order, any cache capacity, any
+//! compaction schedule, and **either decode mode**
+//! (`tests/serve_determinism.rs`, `tests/decode_equivalence.rs`). The
+//! argument is compositional: replica tapes carry identical parameters
+//! at identical node ids, replayed logits are bitwise equal to eagerly
+//! built ones (the replay contract), and each session samples from its
+//! own RNG.
+//!
+//! ## Decode modes
+//!
+//! [`ServeOptions::decode`] picks the per-token engine:
+//! [`DecodeMode::Full`] (default) replays one full-window program per
+//! token; [`DecodeMode::Incremental`] prefills the window once, then
+//! replays one append-one-token program against the session's stored
+//! K/V prefix — O(window) instead of O(window²) per token, bitwise-equal
+//! streams. Sessions own their K/V ([`Session`] carries a
+//! `nn::KvCache`), so shape grouping and lane migration are unchanged:
+//! an appending session's window *is* its depth, and any lane can
+//! re-stage any session's prefix.
 //!
 //! ## CLI
 //!
 //! `burtorch serve --requests FILE --params w.bin [--lanes L]
-//! [--cache-cap N]` reads one request per line (see [`parse_requests`]
-//! for the format), boots the model from a checkpoint written by `train
-//! --params`, and reports per-session completions plus latency and
-//! throughput statistics.
+//! [--cache-cap N] [--decode full|incremental]` reads one request per
+//! line (see [`parse_requests`] for the format), boots the model from a
+//! checkpoint written by `train --params`, and reports per-session
+//! completions plus latency and throughput statistics.
 
 pub mod engine;
 pub mod scheduler;
 pub mod session;
 
-pub use engine::{ServeEngine, ServeOptions, ServeStats};
+pub use engine::{DecodeMode, LanePrograms, ServeEngine, ServeOptions, ServeStats};
 pub use scheduler::Scheduler;
 pub use session::{Request, Session, SessionStatus};
 

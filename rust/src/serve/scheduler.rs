@@ -7,6 +7,13 @@
 //! window length, in admission order — so a lane replays one frozen
 //! program for the whole group instead of juggling shapes per session.
 //!
+//! The same grouping serves **both decode modes** unchanged: an
+//! incremental append program is keyed by *depth* (context length), and
+//! until the window slides an appending session's window equals its
+//! depth — so window groups *are* depth groups, and a lane replays one
+//! frozen append program per group exactly as it replays one full-window
+//! program in full mode.
+//!
 //! Scheduling decisions (admission order, grouping, lane assignment) can
 //! never change the generated tokens: sessions own their sampling state
 //! (see [`Session`]). The scheduler therefore only shapes *throughput*.

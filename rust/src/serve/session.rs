@@ -11,7 +11,7 @@
 //! what makes batched serving bitwise identical to running each session
 //! alone through `Gpt::generate_cached`.
 
-use crate::nn::sample_token;
+use crate::nn::{sample_token, KvCache};
 use crate::rng::Rng;
 
 /// A generation request submitted to the serving engine.
@@ -111,6 +111,12 @@ pub struct Session {
     /// Set by [`Session::finish`]: the session is done regardless of how
     /// many tokens it has produced (deadline truncation, shedding).
     forced_done: bool,
+    /// Stored K/V activations under incremental decode
+    /// ([`crate::serve::DecodeMode::Incremental`]); `None` under full
+    /// decode or before the first incremental step. The cache travels
+    /// *with* the session, so a session can hop lanes freely — the lane
+    /// re-stages it before every append step.
+    pub(crate) kv: Option<KvCache>,
 }
 
 impl Session {
@@ -131,6 +137,7 @@ impl Session {
             deadline_ms: req.deadline_ms,
             admitted_at_ms: None,
             forced_done: false,
+            kv: None,
         }
     }
 
@@ -161,6 +168,7 @@ impl Session {
             deadline_ms: None,
             admitted_at_ms: None,
             forced_done: true,
+            kv: None,
         }
     }
 
@@ -264,6 +272,13 @@ impl Session {
     /// Count one scheduler tick against this session.
     pub(crate) fn tick(&mut self) {
         self.ticks += 1;
+    }
+
+    /// Split-borrow accessor for the incremental decode step: the full
+    /// token context (immutable) alongside the K/V slot (mutable), so
+    /// the engine can hold both across one `Gpt::decode_logits` call.
+    pub(crate) fn decode_parts(&mut self) -> (&[u32], &mut Option<KvCache>) {
+        (&self.tokens, &mut self.kv)
     }
 
     /// Sample the next token from raw last-position logits with this

@@ -38,6 +38,17 @@
 //! positions — invalidates it; such oracles must stay on the eager path.
 //! Data-dependent *values* are fine (ops like `CeLogitsRange` recompute
 //! their internal max/logsumexp from the current values on every sweep).
+//!
+//! ## Cross-step staging (recorded outputs as the next sweep's inputs)
+//!
+//! A forward-only recording may read any node **below** its base —
+//! parameters, and also plain leaves a runtime rewrites between sweeps
+//! ([`Tape::stage_values`]; replay skips leaves, so staged values
+//! survive). This turns a recorded region into rebindable *state*: one
+//! sweep's outputs are exported ([`Tape::values_range`]) and staged back
+//! as a later sweep's inputs. Incremental KV-cache decode is built on
+//! exactly this contract — each append program reads the previous steps'
+//! exported K/V from staging leaves (`crate::nn::DecodeState`).
 
 use super::{Mark, Tape, Value};
 use crate::ops::Op;
@@ -371,6 +382,35 @@ impl<T: Scalar> Tape<T> {
         self.a[node.idx()] = arg.0;
     }
 
+    /// Overwrite the values of `vals.len()` consecutive **leaves**
+    /// starting at `first` from an `f64` slice — the cross-step staging
+    /// primitive behind incremental KV-cache decode
+    /// (`crate::nn::DecodeState`).
+    ///
+    /// A recording may read any node *below* its base, including leaves
+    /// a runtime mutates between sweeps; since [`Tape::replay_forward`]
+    /// skips leaves, staged values survive the sweep. That closes the
+    /// cross-step loop: one step's recorded K/V *outputs* are exported
+    /// (`Tape::values_range`), carried in a session-owned store, and
+    /// staged back as the next step's replay *inputs* — rebinding a
+    /// recorded region across steps without touching graph structure.
+    /// Conversion through `f64` is lossless for both scalar types
+    /// (`f32` widens exactly and rounds back to itself).
+    ///
+    /// Zero appends, zero allocations; real bounds check (one compare),
+    /// leaf-ness checked in debug builds.
+    #[inline]
+    pub fn stage_values(&mut self, first: Value, vals: &[f64]) {
+        debug_assert!(
+            (0..vals.len()).all(|k| matches!(self.op[first.idx() + k], Op::Leaf)),
+            "stage_values target run must be leaves"
+        );
+        let dst = self.values_range_mut(first, vals.len());
+        for (d, &s) in dst.iter_mut().zip(vals) {
+            *d = T::from_f64(s);
+        }
+    }
+
     /// Rewrite the target index of a recorded fused cross-entropy node
     /// ([`Tape::ce_logits_range`]).
     #[inline]
@@ -394,6 +434,36 @@ mod tests {
     use super::*;
     use crate::tape::testgraph::omni_graph;
     use crate::tape::Scratch;
+
+    #[test]
+    fn staged_leaves_feed_a_recording_across_sweeps() {
+        // The cross-step K/V contract in miniature: a program recorded
+        // above staging leaves re-reads whatever was staged since the
+        // last sweep, and exporting its outputs back into the staging
+        // slots chains steps together — zero appends throughout.
+        let mut t = Tape::<f64>::new();
+        let w = t.leaves(&[0.5, 2.0]); // "parameters"
+        let stage = t.leaves(&[0.0, 0.0]); // staging slots (below base)
+        let base = t.mark();
+        let d = t.dot_range(stage, w, 2); // 0.5·s0 + 2·s1
+        let y0 = t.sqr(d);
+        let y1 = t.add(d, y0);
+        let rec = Recording::capture(&t, base, y1);
+        let frozen = t.len();
+
+        // Step 1: stage an input, sweep, export the two outputs.
+        t.stage_values(stage, &[1.0, 2.0]);
+        t.replay_forward(&rec);
+        assert_eq!(t.value(y0), 4.5 * 4.5);
+        let out: Vec<f64> = t.values_range(y0, 2).to_vec();
+
+        // Step 2: the previous outputs become this sweep's inputs.
+        t.stage_values(stage, &out);
+        t.replay_forward(&rec);
+        let expect_d = 0.5 * (4.5 * 4.5) + 2.0 * (4.5 * 4.5 + 4.5);
+        assert_eq!(t.value(d), expect_d);
+        assert_eq!(t.len(), frozen, "staging or replay appended nodes");
+    }
 
     #[test]
     fn replay_matches_eager_rebuild_bitwise_across_all_ops() {

@@ -1,0 +1,321 @@
+//! Incremental KV-cache decode vs the full-window oracle (ISSUE 7
+//! acceptance criteria):
+//!
+//! 1. **Bitwise equivalence.** `Gpt::decode_incremental` (and serving
+//!    under `DecodeMode::Incremental`) produces the same token stream as
+//!    `Gpt::generate_cached`, token for token, for every prompt length
+//!    `1..=block_size` (and past it — the slide falls back to the
+//!    oracle's own full-window program), lane counts {1, 2, 4}, cache
+//!    caps {∞, 1, 2}, and any admission order.
+//! 2. **Steady-state appends are free.** Once every shape is warm, an
+//!    append step performs zero tape appends and zero allocations, and
+//!    the append cache holds **exactly one program per depth** — at most
+//!    `block_size − 1`, independent of the request mix.
+//! 3. **Mid-stream compaction is invisible.** Compacting the decode
+//!    tape between tokens (`DecodeState::compact`, or engine compaction
+//!    driven by LRU churn on a capacity-1 cache) never changes a token.
+//! 4. **Observability.** `ServeEngine::stats()` reports the decode mode
+//!    and each lane's live program inventory (full windows + append
+//!    depths), and the per-token lookup invariant
+//!    `cache_hits + cache_misses == tokens` holds in both modes.
+
+use std::collections::BTreeMap;
+
+use burtorch::nn::{DecodeState, Gpt, GptConfig, KvCache};
+use burtorch::rng::Rng;
+use burtorch::serve::{DecodeMode, Request, ServeEngine, ServeOptions, ServeStats};
+use burtorch::tape::{ProgramCache, Tape, Value};
+
+fn tiny_cfg() -> GptConfig {
+    GptConfig {
+        n_layer: 2,
+        d_model: 8,
+        n_head: 2,
+        ..GptConfig::paper()
+    }
+}
+
+fn tiny_gpt(seed: u64) -> (Tape<f32>, Gpt) {
+    let mut tape = Tape::<f32>::new();
+    let mut rng = Rng::new(seed);
+    let model = Gpt::new(&mut tape, tiny_cfg(), &mut rng);
+    (tape, model)
+}
+
+/// (id, prompt, max_new_tokens, temperature, seed) — one prompt per
+/// window length `1..=block_size`, plus one longer than the block.
+fn window_sweep_requests() -> Vec<(u64, Vec<u32>, usize, f64, u64)> {
+    let mut reqs: Vec<(u64, Vec<u32>, usize, f64, u64)> = (1..=8usize)
+        .map(|plen| {
+            let prompt: Vec<u32> = (0..plen as u32).map(|k| 1 + (k * 7) % 60).collect();
+            (plen as u64, prompt, 12, 0.9, 1_000 + plen as u64 * 13)
+        })
+        .collect();
+    reqs.push((9, (0..10u32).map(|k| 2 + k % 50).collect(), 8, 0.7, 2_024));
+    reqs
+}
+
+/// Each request alone through the full-window oracle.
+fn oracle_reference(requests: &[(u64, Vec<u32>, usize, f64, u64)]) -> BTreeMap<u64, Vec<u32>> {
+    let (mut tape, model) = tiny_gpt(77);
+    let mut expected = BTreeMap::new();
+    for (id, prompt, n, temp, seed) in requests {
+        let mut cache = ProgramCache::new();
+        let mut rng = Rng::new(*seed);
+        let out = model.generate_cached(&mut tape, prompt, *n, *temp, &mut rng, &mut cache);
+        expected.insert(*id, out);
+        tape.rewind(model.base);
+    }
+    expected
+}
+
+fn serve_all(
+    requests: &[(u64, Vec<u32>, usize, f64, u64)],
+    opts: ServeOptions,
+) -> (BTreeMap<u64, Vec<u32>>, ServeStats) {
+    let (tape, model) = tiny_gpt(77);
+    let mut engine = ServeEngine::new(tape, model, opts);
+    for (id, prompt, n, temp, seed) in requests {
+        engine.submit(Request {
+            id: *id,
+            prompt: prompt.clone(),
+            max_new_tokens: *n,
+            temperature: *temp,
+            seed: *seed,
+            deadline_ms: None,
+        });
+    }
+    let done = engine.run_to_completion();
+    let outputs = done.into_iter().map(|s| (s.id(), s.output().to_vec())).collect();
+    (outputs, engine.stats())
+}
+
+/// Criterion 1, single-tape form: for every prompt length `1..=block`
+/// the incremental stream equals the oracle stream bitwise, including
+/// the fall-back-to-full tokens after the window slides.
+#[test]
+fn incremental_matches_oracle_for_every_window_length() {
+    let (mut tape, model) = tiny_gpt(77);
+    let block = model.cfg.block_size;
+    for plen in 1..=block {
+        let prompt: Vec<u32> = (0..plen as u32).map(|k| 3 + (k * 5) % 60).collect();
+        let n = 12; // crosses the slide for every plen
+        let mut cache = ProgramCache::new();
+        let mut rng_a = Rng::new(900 + plen as u64);
+        let want = model.generate_cached(&mut tape, &prompt, n, 0.8, &mut rng_a, &mut cache);
+        tape.rewind(model.base);
+
+        let mut state = DecodeState::install(&mut tape, &model, 0);
+        let mut kv = KvCache::new(&model.cfg);
+        let mut rng_b = Rng::new(900 + plen as u64);
+        let got =
+            model.decode_incremental(&mut tape, &mut state, &mut kv, &prompt, n, 0.8, &mut rng_b);
+        assert_eq!(want, got, "plen {plen}: incremental diverged from the oracle");
+        tape.rewind(model.base);
+    }
+}
+
+/// Criterion 1, serving form: the full lanes × cache-cap matrix serves
+/// the window sweep bitwise-equal to the oracle, and criterion 4's
+/// observability assertions hold throughout.
+#[test]
+fn serving_matrix_lanes_by_cache_cap_is_bitwise_oracle() {
+    let requests = window_sweep_requests();
+    let expected = oracle_reference(&requests);
+    let block = tiny_cfg().block_size;
+    for lanes in [1usize, 2, 4] {
+        for cache_cap in [0usize, 1, 2] {
+            let (outputs, stats) = serve_all(
+                &requests,
+                ServeOptions {
+                    lanes,
+                    cache_cap,
+                    decode: DecodeMode::Incremental,
+                    ..ServeOptions::default()
+                },
+            );
+            let tag = format!("lanes={lanes} cap={cache_cap}");
+            assert_eq!(outputs, expected, "{tag}: tokens diverged from the oracle");
+            assert_eq!(stats.decode, DecodeMode::Incremental, "{tag}");
+            // Every token is exactly one lookup on exactly one cache.
+            assert_eq!(stats.cache_hits + stats.cache_misses, stats.tokens, "{tag}");
+            // Append cache pressure is O(1) in the request mix: at most
+            // one program per depth 2..=block per lane.
+            assert!(stats.append_programs <= lanes * (block - 1), "{tag}: {stats:?}");
+            assert_eq!(stats.lane_programs.len(), lanes, "{tag}");
+            let mut append_total = 0;
+            for (l, lp) in stats.lane_programs.iter().enumerate() {
+                assert!(
+                    lp.append_depths.windows(2).all(|p| p[0] < p[1]),
+                    "{tag} lane {l}: depths not strictly sorted: {lp:?}"
+                );
+                assert!(
+                    lp.append_depths.iter().all(|&d| d >= 2 && d <= block as u64),
+                    "{tag} lane {l}: depth out of range: {lp:?}"
+                );
+                assert!(
+                    lp.full_windows.iter().all(|&w| w >= 1 && w <= block as u64),
+                    "{tag} lane {l}: window out of range: {lp:?}"
+                );
+                if cache_cap > 0 {
+                    assert!(lp.full_windows.len() <= cache_cap, "{tag} lane {l}: {lp:?}");
+                }
+                append_total += lp.append_depths.len();
+            }
+            assert_eq!(append_total, stats.append_programs, "{tag}");
+        }
+    }
+}
+
+/// Criterion 1: admission order and concurrency staggering drop out of
+/// the token streams in incremental mode, exactly as in full mode.
+#[test]
+fn admission_order_and_staggering_never_change_incremental_tokens() {
+    let requests = window_sweep_requests();
+    let expected = oracle_reference(&requests);
+    let mut reversed = requests.clone();
+    reversed.reverse();
+    for (reqs, max_active) in [(&reversed, 0usize), (&requests, 2), (&reversed, 3)] {
+        let (outputs, _) = serve_all(
+            reqs,
+            ServeOptions {
+                lanes: 2,
+                max_active,
+                decode: DecodeMode::Incremental,
+                ..ServeOptions::default()
+            },
+        );
+        assert_eq!(
+            outputs, expected,
+            "admission order / max_active={max_active} changed incremental tokens"
+        );
+    }
+}
+
+/// Criterion 2: once every shape is warm, a whole completion's worth of
+/// append steps adds zero nodes, zero aux entries, and zero capacity
+/// growth, and the append cache holds exactly one program per depth.
+#[test]
+fn steady_state_append_steps_are_allocation_free_with_one_program_per_depth() {
+    let (mut tape, model) = tiny_gpt(77);
+    let block = model.cfg.block_size;
+    let mut state = DecodeState::install(&mut tape, &model, 0);
+    let mut kv = KvCache::new(&model.cfg);
+    // Warm every shape this stream touches: prefill at window 1, appends
+    // at depths 2..=block, slid full windows at `block`.
+    let mut rng = Rng::new(41);
+    let _ = model.decode_incremental(&mut tape, &mut state, &mut kv, &[5], 12, 0.9, &mut rng);
+    // Exactly one append program per depth — the full `2..=block` ladder.
+    let want_depths: Vec<u64> = (2..=block as u64).collect();
+    assert_eq!(state.append_depths(), want_depths, "one program per depth");
+    assert_eq!(state.full_windows(), vec![1, block as u64], "prefill + slid window");
+
+    let frozen = (tape.len(), tape.aux_len(), tape.capacities());
+    let programs = (state.full_len(), state.append_len());
+    let mut rng2 = Rng::new(4_242);
+    let again = model.decode_incremental(&mut tape, &mut state, &mut kv, &[5], 12, 0.9, &mut rng2);
+    assert_eq!(
+        (tape.len(), tape.aux_len(), tape.capacities()),
+        frozen,
+        "steady-state decode must append and allocate nothing"
+    );
+    assert_eq!((state.full_len(), state.append_len()), programs);
+    assert_eq!(state.append_depths(), want_depths);
+
+    // And the warm stream is still the oracle stream.
+    tape.rewind(model.base);
+    let mut cache = ProgramCache::new();
+    let mut rng3 = Rng::new(4_242);
+    let want = model.generate_cached(&mut tape, &[5], 12, 0.9, &mut rng3, &mut cache);
+    assert_eq!(want, again);
+}
+
+/// Criterion 3, tape form: compacting between every few tokens — with
+/// real dead segments created by evicting full-window programs out of a
+/// capacity-1 cache — never changes a token.
+#[test]
+fn compaction_between_tokens_is_bitwise_invisible() {
+    let (mut tape, model) = tiny_gpt(77);
+    let mut cache = ProgramCache::new();
+    let mut rng_a = Rng::new(17);
+    let want = model.generate_cached(&mut tape, &[2, 9, 4], 11, 0.8, &mut rng_a, &mut cache);
+    tape.rewind(model.base);
+
+    // Capacity-1 full cache: the slide evicts the prefill program and
+    // leaves dead tape for compaction to reclaim.
+    let mut state = DecodeState::install(&mut tape, &model, 1);
+    let mut kv = KvCache::new(&model.cfg);
+    let mut rng_b = Rng::new(17);
+    let mut tokens = vec![2u32, 9, 4];
+    for step in 0..11 {
+        if step % 3 == 2 {
+            state.compact(&mut tape, &model);
+        }
+        let logits0 = model.decode_logits(&mut tape, &mut state, &mut kv, &tokens);
+        let zs: Vec<f64> = (0..model.cfg.vocab)
+            .map(|j| tape.value(Value(logits0.0 + j as u32)) as f64)
+            .collect();
+        tokens.push(burtorch::nn::sample_token(&zs, 0.8, &mut rng_b));
+    }
+    assert_eq!(&tokens[3..], &want[..], "compaction changed a token");
+}
+
+/// Criterion 3, engine form: a capacity-1 full cache under a staggered
+/// multi-window workload churns evictions and fires engine compaction on
+/// the decode tape — and every output is still the oracle's.
+#[test]
+fn engine_compaction_churn_under_cap_one_stays_bitwise() {
+    let requests: Vec<(u64, Vec<u32>, usize, f64, u64)> = (0..16)
+        .map(|i| {
+            let plen = 1 + (i as usize % 5);
+            (
+                100 + i,
+                (0..plen as u32).map(|k| 1 + (k * 3) % 60).collect(),
+                12,
+                0.9,
+                3_000 + i * 29,
+            )
+        })
+        .collect();
+    let expected = oracle_reference(&requests);
+    let (outputs, stats) = serve_all(
+        &requests,
+        ServeOptions {
+            lanes: 1,
+            cache_cap: 1,
+            max_active: 2,
+            decode: DecodeMode::Incremental,
+            ..ServeOptions::default()
+        },
+    );
+    assert_eq!(outputs, expected, "eviction/compaction churn changed tokens");
+    assert!(stats.cache_evictions > 0, "workload must churn: {stats:?}");
+    assert!(stats.compactions > 0, "compaction never fired: {stats:?}");
+    assert!(stats.cached_programs <= 1, "full-cache cap violated: {stats:?}");
+    assert_eq!(stats.cache_hits + stats.cache_misses, stats.tokens);
+}
+
+/// The O(window²) → O(window) story, measured structurally: per-token
+/// replayed nodes. The oracle replays a full-window program whose size
+/// grows with the window; a warm append step replays one fixed
+/// depth-program an order smaller at the top of the ladder.
+#[test]
+fn append_programs_are_asymptotically_smaller_than_full_windows() {
+    let (mut tape, model) = tiny_gpt(77);
+    let block = model.cfg.block_size;
+    // Full-window program at the largest window.
+    let (rec_full, _) = model.record_logits(&mut tape, &vec![0u32; block]);
+    let full_nodes = rec_full.node_count();
+    tape.rewind(model.base);
+    // Append program at the same depth.
+    let mut state = DecodeState::install(&mut tape, &model, 0);
+    let mut kv = KvCache::new(&model.cfg);
+    let mut rng = Rng::new(9);
+    let _ = model.decode_incremental(&mut tape, &mut state, &mut kv, &[1], block, 0.9, &mut rng);
+    let append_nodes = state.live_nodes() / state.append_len().max(1);
+    assert!(
+        append_nodes * 2 < full_nodes,
+        "append program ({append_nodes} nodes avg) should be far smaller \
+         than the window-{block} oracle program ({full_nodes} nodes)"
+    );
+}

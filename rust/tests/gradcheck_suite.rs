@@ -3,8 +3,8 @@
 
 use burtorch::fdiff::gradcheck;
 use burtorch::nn::{
-    cross_entropy_composed, Act, CharMlp, CharMlpConfig, CeMode, Gpt, GptConfig, Linear,
-    ParamAlloc,
+    cross_entropy_composed, Act, CausalSelfAttention, CharMlp, CharMlpConfig, CeMode, Gpt,
+    GptConfig, Linear, ParamAlloc,
 };
 use burtorch::rng::Rng;
 use burtorch::tape::{Tape, Value};
@@ -221,6 +221,92 @@ fn gpt_parameter_gradcheck_sampled() {
         assert!(
             (ad - fd).abs() / denom < 1e-4,
             "param {i}: ad={ad} fd={fd}"
+        );
+    }
+}
+
+#[test]
+fn attention_kv_refactor_keeps_training_bitwise() {
+    // The K/V-slotted entry point behind incremental decode
+    // (`forward_with_kv`) must leave the training graph untouched: same
+    // node count, bitwise node values, bitwise gradients everywhere —
+    // the exported K/V pairs are node ids into the existing graph, not
+    // extra nodes.
+    let build = |with_kv: bool| -> (Tape<f64>, CausalSelfAttention) {
+        let mut t = Tape::<f64>::new();
+        let zero = t.leaf(0.0);
+        let mut rng = Rng::new(123);
+        let mut pa = ParamAlloc::new(&mut t);
+        let attn = CausalSelfAttention::new(&mut pa, 8, 2, zero, &mut rng);
+        let mut erng = Rng::new(321);
+        let x: Vec<Vec<Value>> = (0..4)
+            .map(|_| (0..8).map(|_| t.leaf(erng.normal() * 0.5)).collect())
+            .collect();
+        let y = if with_kv {
+            attn.forward_with_kv(&mut t, &x).0
+        } else {
+            attn.forward(&mut t, &x)
+        };
+        let flat: Vec<Value> = y.into_iter().flatten().collect();
+        let loss = t.reduce_sum_squares(&flat);
+        t.backward(loss);
+        (t, attn)
+    };
+    let (t_a, attn_a) = build(false);
+    let (t_b, _) = build(true);
+    assert_eq!(t_a.len(), t_b.len(), "graphs must be node-for-node identical");
+    for i in 0..t_a.len() {
+        let v = Value(i as u32);
+        assert_eq!(t_a.value(v).to_bits(), t_b.value(v).to_bits(), "value at node {i}");
+        assert_eq!(t_a.grad(v).to_bits(), t_b.grad(v).to_bits(), "grad at node {i}");
+    }
+    // In particular, every trainable attention parameter's gradient.
+    for p in attn_a.wq.iter().chain(attn_a.wk.iter()).chain(attn_a.wv.iter()) {
+        assert_eq!(t_a.grad(p).to_bits(), t_b.grad(p).to_bits());
+    }
+}
+
+#[test]
+fn forward_append_gradcheck_against_central_differences() {
+    use burtorch::fdiff::central_diff;
+    // FD over [staged k|v slots (prefix × 2d), x_new (d)] of the
+    // append-one-token attention step: the decode graph is a real
+    // differentiable graph with correct adjoints, not an inference-only
+    // special case — gradients flow through the staged prefix exactly
+    // as they would through live K/V nodes.
+    let d = 4usize;
+    let prefix = 2usize;
+    let n_staged = 2 * d * prefix;
+    let build_loss = |vals: &[f64]| -> (Tape<f64>, Vec<Value>, Value) {
+        let mut t = Tape::<f64>::new();
+        let zero = t.leaf(0.0);
+        let mut rng = Rng::new(47);
+        let mut pa = ParamAlloc::new(&mut t);
+        let attn = CausalSelfAttention::new(&mut pa, d, 2, zero, &mut rng);
+        let stage0 = Value(t.len() as u32);
+        let mut leaves: Vec<Value> = vals[..n_staged].iter().map(|&v| t.leaf(v)).collect();
+        let x_new: Vec<Value> = vals[n_staged..].iter().map(|&v| t.leaf(v)).collect();
+        leaves.extend(&x_new);
+        let (row, _kv) = attn.forward_append(&mut t, &x_new, stage0, 2 * d, prefix);
+        let loss = t.reduce_sum_squares(&row);
+        (t, leaves, loss)
+    };
+    let mut vrng = Rng::new(48);
+    let vals: Vec<f64> = (0..n_staged + d).map(|_| vrng.uniform_in(-0.8, 0.8)).collect();
+    let mut f = |v: &[f64]| {
+        let (t, _, loss) = build_loss(v);
+        t.value(loss)
+    };
+    let fd = central_diff(&mut f, &vals, 1e-6);
+    let (mut t, leaves, loss) = build_loss(&vals);
+    t.backward(loss);
+    for (i, &id) in leaves.iter().enumerate() {
+        let ad = t.grad(id);
+        let denom = 1.0f64.max(ad.abs()).max(fd[i].abs());
+        assert!(
+            (ad - fd[i]).abs() / denom < 1e-4,
+            "coord {i}: ad={ad} fd={}",
+            fd[i]
         );
     }
 }

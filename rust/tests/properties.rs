@@ -302,6 +302,160 @@ fn prop_serializer_roundtrips_random_graphs() {
     });
 }
 
+/// Serving invariant under randomized schedules: every completion of an
+/// **incremental-decode** engine is either the exact oracle stream
+/// (`Gpt::generate_cached` alone with the same seed) or a well-formed
+/// prefix of it (deadline truncation) or empty (shed/rejected) — across
+/// random lane counts, cache caps (evictions + compaction churn),
+/// staggered admissions, injected deadlines on a deterministic clock,
+/// and fault-plan lane panics with quarantine/heal cycles.
+#[test]
+fn prop_incremental_serving_is_the_oracle_stream_or_a_prefix() {
+    use burtorch::nn::{Gpt, GptConfig};
+    use burtorch::serve::{DecodeMode, Request, ServeEngine, ServeOptions, SessionStatus};
+    use burtorch::tape::ProgramCache;
+    use burtorch::testkit::FaultPlan;
+
+    let cfg = GptConfig {
+        n_layer: 1,
+        d_model: 8,
+        n_head: 2,
+        ..GptConfig::paper()
+    };
+    prop_check_msg("incremental serve ≡ oracle|prefix", 100, |g| {
+        let model_seed = 500 + g.usize_in(0, 4) as u64;
+        let n_req = g.usize_in(1, 6);
+        let reqs: Vec<Request> = (0..n_req)
+            .map(|i| {
+                let plen = g.usize_in(1, 10);
+                Request {
+                    id: i as u64,
+                    prompt: (0..plen).map(|_| g.usize_in(0, 65) as u32).collect(),
+                    max_new_tokens: g.usize_in(0, 14),
+                    temperature: g.f64_in(0.5, 1.5),
+                    seed: 10_000 + g.usize_in(0, 1 << 16) as u64,
+                    // A few-ms budget on a clock that ticks 1 ms per
+                    // read: real mid-stream truncation, deterministic.
+                    deadline_ms: if g.bool_p(0.3) {
+                        Some(1 + g.usize_in(0, 30) as u64)
+                    } else {
+                        None
+                    },
+                }
+            })
+            .collect();
+
+        // Oracle streams: each request alone, full budget, no engine.
+        let mut tape = Tape::<f32>::new();
+        let mut rng = Rng::new(model_seed);
+        let model = Gpt::new(&mut tape, cfg, &mut rng);
+        let oracle: Vec<Vec<u32>> = reqs
+            .iter()
+            .map(|r| {
+                let mut cache = ProgramCache::new();
+                let mut gen_rng = Rng::new(r.seed);
+                let out = model.generate_cached(
+                    &mut tape,
+                    &r.prompt,
+                    r.max_new_tokens,
+                    r.temperature,
+                    &mut gen_rng,
+                    &mut cache,
+                );
+                tape.rewind(model.base);
+                out
+            })
+            .collect();
+
+        // A randomized engine over the same model parameters.
+        let mut tape2 = Tape::<f32>::new();
+        let mut rng2 = Rng::new(model_seed);
+        let model2 = Gpt::new(&mut tape2, cfg, &mut rng2);
+        let lanes = g.usize_in(1, 5);
+        let mut engine = ServeEngine::new(
+            tape2,
+            model2,
+            ServeOptions {
+                lanes,
+                cache_cap: [0usize, 1, 2][g.usize_in(0, 3)],
+                max_active: g.usize_in(0, 4),
+                decode: DecodeMode::Incremental,
+                ..ServeOptions::default()
+            },
+        );
+        if reqs.iter().any(|r| r.deadline_ms.is_some()) {
+            let t = std::rc::Rc::new(std::cell::Cell::new(0u64));
+            engine.set_clock(move || {
+                t.set(t.get() + 1);
+                t.get()
+            });
+        }
+        let mut plan = FaultPlan::default();
+        let mut injected = false;
+        for _ in 0..g.usize_in(0, 3) {
+            plan = plan.panic_lane(
+                g.usize_in(0, lanes),
+                g.usize_in(0, 6) as u64,
+                g.usize_in(0, 2),
+            );
+            injected = true;
+        }
+        if g.bool_p(0.15) {
+            plan = plan.reject_session(g.usize_in(0, n_req) as u64);
+            injected = true;
+        }
+        if injected {
+            engine.set_fault_plan(plan);
+        }
+        for r in &reqs {
+            engine.submit(r.clone());
+        }
+        let done = engine.run_to_completion();
+
+        if done.len() != n_req {
+            return Err(format!("{} completions for {n_req} requests", done.len()));
+        }
+        let mut seen = vec![false; n_req];
+        for s in &done {
+            let id = s.id() as usize;
+            if std::mem::replace(&mut seen[id], true) {
+                return Err(format!("request {id} completed twice"));
+            }
+            let want = &oracle[id];
+            match s.status() {
+                SessionStatus::Ok => {
+                    if s.output() != want.as_slice() {
+                        return Err(format!(
+                            "request {id}: ok-completion diverged from the oracle \
+                             (got {:?}, want {want:?})",
+                            s.output()
+                        ));
+                    }
+                }
+                SessionStatus::Deadline => {
+                    let out = s.output();
+                    if out.len() >= want.len() || out != &want[..out.len()] {
+                        return Err(format!(
+                            "request {id}: deadline output is not a proper oracle \
+                             prefix (got {out:?}, oracle {want:?})"
+                        ));
+                    }
+                }
+                SessionStatus::Evicted | SessionStatus::Error => {
+                    if !s.output().is_empty() {
+                        return Err(format!("request {id}: shed completion has tokens"));
+                    }
+                }
+            }
+        }
+        let stats = engine.stats();
+        if stats.cache_hits + stats.cache_misses != stats.tokens {
+            return Err(format!("lookup invariant broken: {stats:?}"));
+        }
+        Ok(())
+    });
+}
+
 /// Mini smoke for the RNG seed stability across processes (the harness
 /// promises bit-reproducibility in EXPERIMENTS.md).
 #[test]
