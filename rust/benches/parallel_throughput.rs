@@ -19,6 +19,7 @@
 
 use burtorch::bench::{json_num, write_json_result, Row, Table};
 use burtorch::coordinator::{ExecMode, Trainer, TrainerOptions};
+use burtorch::kernels::default_backend;
 use burtorch::data::names_dataset;
 use burtorch::metrics::MemInfo;
 use burtorch::nn::{CeMode, CharMlp, CharMlpConfig};
@@ -120,6 +121,7 @@ fn main() {
             vm_peak_mb: mem.vm_peak_mb(),
             vm_hwm_mb: mem.vm_hwm_mb(),
             iters: steps as u64,
+            kernel: default_backend().as_str(),
         });
         rows.push(row);
     }
@@ -187,6 +189,7 @@ fn main() {
             vm_peak_mb: mem.vm_peak_mb(),
             vm_hwm_mb: mem.vm_hwm_mb(),
             iters: steps as u64,
+            kernel: default_backend().as_str(),
         });
         compress_rows.push(row);
     }
@@ -270,6 +273,7 @@ fn main() {
                 vm_peak_mb: mem.vm_peak_mb(),
                 vm_hwm_mb: mem.vm_hwm_mb(),
                 iters: steps as u64,
+                kernel: default_backend().as_str(),
             });
             exec_rows.push(row);
         }

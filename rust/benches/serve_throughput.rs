@@ -4,7 +4,7 @@
 //!
 //! The workload is a fixed fleet of concurrent generation requests with
 //! mixed prompt lengths (so the shape-grouped scheduler and the
-//! per-window program cache both matter). Three sweeps:
+//! per-window program cache both matter). Four sweeps:
 //!
 //! 1. **Lanes** — the same fleet across lane counts, full-window decode.
 //! 2. **Decode mode** — the same fleet and lane counts under incremental
@@ -15,11 +15,17 @@
 //!    most `block_size − 1` append programs per lane.
 //! 3. **Bounded cache** — LRU eviction + tape compaction priced at the
 //!    widest lane count, in both modes.
+//! 4. **Kernel backend** — the same fleet under a forced scalar and (when
+//!    the CPU has AVX2+FMA) forced simd backend, both decode modes, at
+//!    the widest lane count. Per the kernel-backend contract the served
+//!    tokens must be identical — the sweep prices the backends, it cannot
+//!    differentiate their outputs.
 //!
 //! Every row serves the identical request set, and the bench asserts the
-//! outputs are token-for-token identical across lane counts AND decode
-//! modes — the serving determinism contract plus the incremental-decode
-//! oracle contract — before reporting speedups.
+//! outputs are token-for-token identical across lane counts, decode
+//! modes AND kernel backends — the serving determinism contract, the
+//! incremental-decode oracle contract, and the bitwise kernel contract —
+//! before reporting speedups.
 //!
 //! Results are emitted as a paper-style table
 //! (`bench_results/serve_throughput.txt`) and as JSON
@@ -29,6 +35,7 @@
 //! (set BURTORCH_FAST=1 for a shorter run).
 
 use burtorch::bench::{json_num, write_json_result, Table};
+use burtorch::kernels::{simd_available, KernelChoice};
 use burtorch::metrics::Timer;
 use burtorch::nn::{Gpt, GptConfig};
 use burtorch::rng::Rng;
@@ -39,6 +46,7 @@ struct LaneRow {
     lanes: usize,
     cache_cap: usize,
     decode: DecodeMode,
+    kernel: &'static str,
     wall_s: f64,
     tokens_per_sec: f64,
     sessions_per_sec: f64,
@@ -70,8 +78,9 @@ fn serve_once(
     lanes: usize,
     cache_cap: usize,
     decode: DecodeMode,
+    kernel: KernelChoice,
     reqs: &[Request],
-) -> (f64, Vec<Vec<u32>>, ServeStats) {
+) -> (f64, Vec<Vec<u32>>, ServeStats, &'static str) {
     let mut tape = Tape::<f32>::new();
     let mut rng = Rng::new(5);
     let model = Gpt::new(&mut tape, GptConfig::paper(), &mut rng);
@@ -82,6 +91,7 @@ fn serve_once(
             lanes,
             cache_cap,
             decode,
+            kernel,
             ..ServeOptions::default()
         },
     );
@@ -93,7 +103,8 @@ fn serve_once(
     let wall = timer.seconds();
     done.sort_by_key(|s| s.id());
     let outputs = done.iter().map(|s| s.output().to_vec()).collect();
-    (wall, outputs, engine.stats())
+    let resolved = kernel.resolve().as_str();
+    (wall, outputs, engine.stats(), resolved)
 }
 
 fn main() {
@@ -121,10 +132,12 @@ fn main() {
     let mut reference: Option<Vec<Vec<u32>>> = None;
     // Sweep 1 + 2: lane counts × decode modes; the full-mode single-lane
     // run is the wall-clock baseline AND the token oracle for every
-    // other row.
+    // other row. These sweeps run on the auto-resolved kernel backend
+    // (what a default `serve` invocation gets).
     for &decode in &[DecodeMode::Full, DecodeMode::Incremental] {
         for &lanes in &lane_counts {
-            let (wall, outputs, stats) = serve_once(lanes, 0, decode, &reqs);
+            let (wall, outputs, stats, kernel) =
+                serve_once(lanes, 0, decode, KernelChoice::Auto, &reqs);
             match &reference {
                 None => reference = Some(outputs),
                 Some(want) => assert_eq!(
@@ -150,6 +163,7 @@ fn main() {
                 lanes,
                 cache_cap: 0,
                 decode,
+                kernel,
                 wall_s: wall,
                 tokens_per_sec: total_tokens / wall,
                 sessions_per_sec: n_sessions as f64 / wall,
@@ -164,7 +178,8 @@ fn main() {
     let widest = *lane_counts.last().expect("nonempty");
     for &decode in &[DecodeMode::Full, DecodeMode::Incremental] {
         for cap in [2usize, 4] {
-            let (wall, outputs, stats) = serve_once(widest, cap, decode, &reqs);
+            let (wall, outputs, stats, kernel) =
+                serve_once(widest, cap, decode, KernelChoice::Auto, &reqs);
             assert_eq!(
                 reference.as_ref().expect("reference set"),
                 &outputs,
@@ -183,6 +198,43 @@ fn main() {
                 lanes: widest,
                 cache_cap: cap,
                 decode,
+                kernel,
+                wall_s: wall,
+                tokens_per_sec: total_tokens / wall,
+                sessions_per_sec: n_sessions as f64 / wall,
+                speedup: rows[0].wall_s / wall,
+                stats,
+            });
+        }
+    }
+
+    // Sweep 4: forced kernel backends at the widest lane count, both
+    // decode modes. The assert is the point: scalar and simd must serve
+    // token-for-token identical streams (the bitwise kernel contract),
+    // so the rows may differ in wall-clock only.
+    let mut kernel_choices = vec![KernelChoice::Scalar];
+    if simd_available() {
+        kernel_choices.push(KernelChoice::Simd);
+    }
+    for &choice in &kernel_choices {
+        for &decode in &[DecodeMode::Full, DecodeMode::Incremental] {
+            let (wall, outputs, stats, kernel) = serve_once(widest, 0, decode, choice, &reqs);
+            assert_eq!(
+                reference.as_ref().expect("reference set"),
+                &outputs,
+                "kernel={kernel} decode={} changed tokens",
+                mode_str(decode),
+            );
+            println!(
+                "  {:<11} lanes={widest:>2} kernel={kernel:<6}  wall {wall:>7.3}s  {:>9.1} tok/s",
+                mode_str(decode),
+                total_tokens / wall,
+            );
+            rows.push(LaneRow {
+                lanes: widest,
+                cache_cap: 0,
+                decode,
+                kernel,
                 wall_s: wall,
                 tokens_per_sec: total_tokens / wall,
                 sessions_per_sec: n_sessions as f64 / wall,
@@ -195,16 +247,18 @@ fn main() {
     let mut table = Table::new("Serve throughput — GPT paper config, FP32, mixed prompt lengths");
     table.note(&format!(
         "{n_sessions} sessions × {tokens_each} tokens; outputs asserted identical across all \
-         rows (lane counts AND decode modes)"
+         rows (lane counts, decode modes AND kernel backends)"
     ));
     for r in &rows {
         let cap = if r.cache_cap == 0 { "∞".to_string() } else { r.cache_cap.to_string() };
         table.note(&format!(
-            "{:<11} lanes {:>2} cap {:>2}: {:>8.1} tok/s, {:>6.2} sessions/s, {:.2}× vs 1 lane, \
-             programs {}+{} (full+append), hits {} misses {} evictions {} compactions {}",
+            "{:<11} lanes {:>2} cap {:>2} kernel {:<6}: {:>8.1} tok/s, {:>6.2} sessions/s, \
+             {:.2}× vs 1 lane, programs {}+{} (full+append), hits {} misses {} evictions {} \
+             compactions {}",
             mode_str(r.decode),
             r.lanes,
             cap,
+            r.kernel,
             r.tokens_per_sec,
             r.sessions_per_sec,
             r.speedup,
@@ -225,18 +279,19 @@ fn main() {
     ));
     json.push_str(&format!("  \"cores_available\": {cores},\n"));
     json.push_str(
-        "  \"deterministic_across_lanes\": true,\n  \"deterministic_across_decode_modes\": true,\n  \"rows\": [\n",
+        "  \"deterministic_across_lanes\": true,\n  \"deterministic_across_decode_modes\": true,\n  \"deterministic_across_kernels\": true,\n  \"rows\": [\n",
     );
     for (i, r) in rows.iter().enumerate() {
         json.push_str(&format!(
-            "    {{\"lanes\": {}, \"cache_cap\": {}, \"decode\": \"{}\", \"wall_s\": {}, \
-             \"tokens_per_sec\": {}, \"sessions_per_sec\": {}, \"speedup\": {}, \
+            "    {{\"lanes\": {}, \"cache_cap\": {}, \"decode\": \"{}\", \"kernel\": \"{}\", \
+             \"wall_s\": {}, \"tokens_per_sec\": {}, \"sessions_per_sec\": {}, \"speedup\": {}, \
              \"programs_cached\": {}, \"append_programs\": {}, \"cache_hits\": {}, \
              \"cache_misses\": {}, \"cache_evictions\": {}, \"compactions\": {}, \
              \"peak_tape_nodes\": {}}}{}\n",
             r.lanes,
             r.cache_cap,
             mode_str(r.decode),
+            r.kernel,
             json_num(r.wall_s),
             json_num(r.tokens_per_sec),
             json_num(r.sessions_per_sec),

@@ -16,58 +16,80 @@
 use burtorch::baselines::dynamic::DynTape;
 use burtorch::baselines::micrograd::MgValue;
 use burtorch::bench::{run, Table};
+use burtorch::kernels::{simd_available, KernelChoice};
 use burtorch::tape::{Scratch, Tape};
 use burtorch::viz;
 
 const ITERS: u64 = 100_000;
 const TRIALS: usize = 5;
 
+/// Kernel backends to measure: scalar always, simd when the CPU has it.
+fn backends() -> Vec<KernelChoice> {
+    if simd_available() {
+        vec![KernelChoice::Scalar, KernelChoice::Simd]
+    } else {
+        vec![KernelChoice::Scalar]
+    }
+}
+
 fn main() {
     let mut table = Table::new(
         "Table 2 — tiny graph (Fig 1), 100K fwd+bwd iterations, FP64, 1 core",
     );
 
-    // 1. BurTorch tape, simple backward, rewind per iteration.
-    {
+    // 1. BurTorch tape, simple backward, rewind per iteration. One row
+    // per kernel backend — the tiny graph has no fused-dot ops, so this
+    // doubles as a null check that the dispatch refactor costs nothing.
+    for choice in backends() {
         let mut tape = Tape::<f64>::with_capacity(16, 0);
+        let kernel = tape.set_kernel(choice);
         let base = tape.mark();
-        table.push(run("BurTorch tape, eager [simple backward]", TRIALS, ITERS, |_| {
-            let a = tape.leaf(-41.0);
-            let b = tape.leaf(2.0);
-            let c = tape.add(a, b);
-            let ab = tape.mul(a, b);
-            let b3 = tape.pow3(b);
-            let d = tape.add(ab, b3);
-            let e = tape.sub(c, d);
-            let f = tape.sqr(e);
-            let g = tape.mul_const(f, 0.5);
-            tape.backward(g);
-            let out = (tape.grad(a), tape.grad(b));
-            tape.rewind(base);
-            out
-        }));
+        let name = format!("BurTorch tape, eager [simple backward, {kernel}]");
+        table.push(
+            run(&name, TRIALS, ITERS, |_| {
+                let a = tape.leaf(-41.0);
+                let b = tape.leaf(2.0);
+                let c = tape.add(a, b);
+                let ab = tape.mul(a, b);
+                let b3 = tape.pow3(b);
+                let d = tape.add(ab, b3);
+                let e = tape.sub(c, d);
+                let f = tape.sqr(e);
+                let g = tape.mul_const(f, 0.5);
+                tape.backward(g);
+                let out = (tape.grad(a), tape.grad(b));
+                tape.rewind(base);
+                out
+            })
+            .with_kernel(kernel.as_str()),
+        );
     }
 
-    // 2. Scratch-storage backward.
-    {
+    // 2. Scratch-storage backward, per kernel backend.
+    for choice in backends() {
         let mut tape = Tape::<f64>::with_capacity(16, 0);
+        let kernel = tape.set_kernel(choice);
         let mut scratch = Scratch::with_capacity(16);
         let base = tape.mark();
-        table.push(run("BurTorch tape, eager [scratch backward]", TRIALS, ITERS, |_| {
-            let a = tape.leaf(-41.0);
-            let b = tape.leaf(2.0);
-            let c = tape.add(a, b);
-            let ab = tape.mul(a, b);
-            let b3 = tape.pow3(b);
-            let d = tape.add(ab, b3);
-            let e = tape.sub(c, d);
-            let f = tape.sqr(e);
-            let g = tape.mul_const(f, 0.5);
-            tape.backward_with_scratch(g, &mut scratch);
-            let out = (tape.grad(a), tape.grad(b));
-            tape.rewind(base);
-            out
-        }));
+        let name = format!("BurTorch tape, eager [scratch backward, {kernel}]");
+        table.push(
+            run(&name, TRIALS, ITERS, |_| {
+                let a = tape.leaf(-41.0);
+                let b = tape.leaf(2.0);
+                let c = tape.add(a, b);
+                let ab = tape.mul(a, b);
+                let b3 = tape.pow3(b);
+                let d = tape.add(ab, b3);
+                let e = tape.sub(c, d);
+                let f = tape.sqr(e);
+                let g = tape.mul_const(f, 0.5);
+                tape.backward_with_scratch(g, &mut scratch);
+                let out = (tape.grad(a), tape.grad(b));
+                tape.rewind(base);
+                out
+            })
+            .with_kernel(kernel.as_str()),
+        );
     }
 
     // 3. Boxed-closure eager tape.
@@ -127,7 +149,7 @@ fn main() {
 
     table.note("paper reference (same experiment): BurTorch 0.007 s (Win/4.48 GHz), 0.011 s (Linux/3.2 GHz), 0.0118 s (macOS/2.3 GHz)");
     table.note("paper reference: Micrograd ×227 (Win), TF-Lite ×84, PyTorch eager ×1488, JAX eager ×41860, JAX graph ×797");
-    table.emit("table2_tiny_graph");
+    table.emit_with_json("table2_tiny_graph");
 
     // Figure 3/5/6: the bar chart for this host's rows.
     let labels: Vec<String> = table.rows.iter().map(|r| r.name.clone()).collect();

@@ -2,14 +2,20 @@
 //! summary: the §2.4 char-MLP grid — d from 5,963 to 1,079,003, batch
 //! b ∈ {1, 64}, FP32, single core.
 //!
-//! Columns per (e, b): init time (model construction + 1 oracle), compute
-//! time per SGD step (mean ± std), peak memory; for BurTorch-native AND
-//! the XLA graph-mode artifact (JAX/PyTorch stand-in).
+//! Columns per (e, b, kernel): init time (model construction + 1 oracle),
+//! compute time per SGD step (mean ± std), peak memory; for
+//! BurTorch-native (one row per kernel backend — scalar always, simd when
+//! the CPU has AVX2+FMA) AND the XLA graph-mode artifact (JAX/PyTorch
+//! stand-in; measured once per (e, b) — the backend knob does not apply
+//! to it — and repeated on each backend row so the ratio column stays
+//! per-kernel).
 //!
 //! Run: `cargo bench --bench table5_6_mlp` (set BURTORCH_FAST=1 to skip
 //! the two largest configs).
 
+use burtorch::bench::{json_num, write_json_result};
 use burtorch::data::names_dataset;
+use burtorch::kernels::{simd_available, KernelChoice};
 use burtorch::metrics::{mean_std, MemInfo, Timer};
 use burtorch::nn::{CeMode, CharMlp, CharMlpConfig};
 use burtorch::rng::Rng;
@@ -20,6 +26,7 @@ struct GridRow {
     e: usize,
     d: usize,
     b: usize,
+    kernel: &'static str,
     native_init_ms: f64,
     native_ms: f64,
     native_std: f64,
@@ -35,6 +42,15 @@ fn steps_for(e: usize, b: usize) -> usize {
         (_, 1) => 40,
         (e, _) if e <= 128 => 30,
         _ => 8,
+    }
+}
+
+/// Kernel backends to measure: scalar always, simd when the CPU has it.
+fn backends() -> Vec<KernelChoice> {
+    if simd_available() {
+        vec![KernelChoice::Scalar, KernelChoice::Simd]
+    } else {
+        vec![KernelChoice::Scalar]
     }
 }
 
@@ -55,58 +71,15 @@ fn main() {
             let d = cfg.num_params();
             let steps = steps_for(e, b);
 
-            // ---- BurTorch native ------------------------------------------
-            // Init time: construction + one full oracle (paper definition:
-            // "end-to-end time for training with 1 iteration").
-            let t_init = Timer::new();
-            let mut tape = Tape::<f32>::new();
-            let mut rng = Rng::new(5);
-            let model = CharMlp::new(&mut tape, cfg, &mut rng);
-            {
-                let ex = &ds.examples[0];
-                let loss = model.loss(&mut tape, &ex.context, ex.target, CeMode::Fused);
-                tape.backward(loss);
-                tape.rewind(model.base);
-            }
-            let native_init_ms = t_init.seconds() * 1e3;
-
-            // Compute time per step (batch prep excluded).
-            let mut sample_rng = Rng::new(6);
-            let mut grad = vec![0.0f64; d];
-            let mut times = Vec::with_capacity(steps);
-            for _ in 0..steps {
-                let idxs: Vec<usize> = (0..b)
-                    .map(|_| sample_rng.below_usize(ds.examples.len()))
-                    .collect();
-                let t = Timer::new();
-                grad.iter_mut().for_each(|g| *g = 0.0);
-                for &i in &idxs {
-                    let ex = &ds.examples[i];
-                    let loss = model.loss(&mut tape, &ex.context, ex.target, CeMode::Fused);
-                    tape.backward(loss);
-                    for (k, g) in tape.grads_range(model.params.first, d).iter().enumerate() {
-                        grad[k] += *g as f64;
-                    }
-                    tape.rewind(model.base);
-                }
-                let inv_b = 1.0 / b as f64;
-                let params = tape.values_range_mut(model.params.first, d);
-                for (p, g) in params.iter_mut().zip(&grad) {
-                    *p -= (0.1 * g * inv_b) as f32;
-                }
-                times.push(t.seconds() * 1e3);
-            }
-            let (native_ms, native_std) = mean_std(&times);
-            let native_mem_mb = (tape.memory_bytes() as f64) / (1024.0 * 1024.0);
-
-            // ---- XLA graph-mode artifact ----------------------------------
+            // ---- XLA graph-mode artifact (once per (e, b)) ----------------
             let key = format!("mlp_e{e}_b{b}");
             let (xla_ms, xla_std) = match engine.as_mut() {
                 Some(eng) if artifact_path(&format!("{key}.hlo.txt")).exists() => {
                     eng.load(&key, &artifact_path(&format!("{key}.hlo.txt")))
                         .expect("compile");
+                    let mut xrng = Rng::new(5);
                     let mut flat: Vec<f32> =
-                        (0..d).map(|_| rng.uniform_in(-0.05, 0.05) as f32).collect();
+                        (0..d).map(|_| xrng.uniform_in(-0.05, 0.05) as f32).collect();
                     let lr = [0.1f32];
                     let xla_steps = steps.min(60).max(5);
                     let mut times = Vec::with_capacity(xla_steps);
@@ -135,20 +108,69 @@ fn main() {
                 _ => (f64::NAN, f64::NAN),
             };
 
-            println!(
-                "e={e:<5} d={d:<9} b={b:<3} | native init {native_init_ms:>8.2} ms, step {native_ms:>9.3} ± {native_std:>7.3} ms, tape mem {native_mem_mb:>7.1} MB | XLA step {xla_ms:>9.3} ± {xla_std:>7.3} ms"
-            );
-            rows.push(GridRow {
-                e,
-                d,
-                b,
-                native_init_ms,
-                native_ms,
-                native_std,
-                native_mem_mb,
-                xla_ms,
-                xla_std,
-            });
+            // ---- BurTorch native, one row per kernel backend --------------
+            for choice in backends() {
+                // Init time: construction + one full oracle (paper
+                // definition: "end-to-end time for training with 1
+                // iteration").
+                let t_init = Timer::new();
+                let mut tape = Tape::<f32>::new();
+                let kernel = tape.set_kernel(choice).as_str();
+                let mut rng = Rng::new(5);
+                let model = CharMlp::new(&mut tape, cfg, &mut rng);
+                {
+                    let ex = &ds.examples[0];
+                    let loss = model.loss(&mut tape, &ex.context, ex.target, CeMode::Fused);
+                    tape.backward(loss);
+                    tape.rewind(model.base);
+                }
+                let native_init_ms = t_init.seconds() * 1e3;
+
+                // Compute time per step (batch prep excluded).
+                let mut sample_rng = Rng::new(6);
+                let mut grad = vec![0.0f64; d];
+                let mut times = Vec::with_capacity(steps);
+                for _ in 0..steps {
+                    let idxs: Vec<usize> = (0..b)
+                        .map(|_| sample_rng.below_usize(ds.examples.len()))
+                        .collect();
+                    let t = Timer::new();
+                    grad.iter_mut().for_each(|g| *g = 0.0);
+                    for &i in &idxs {
+                        let ex = &ds.examples[i];
+                        let loss = model.loss(&mut tape, &ex.context, ex.target, CeMode::Fused);
+                        tape.backward(loss);
+                        for (k, g) in tape.grads_range(model.params.first, d).iter().enumerate() {
+                            grad[k] += *g as f64;
+                        }
+                        tape.rewind(model.base);
+                    }
+                    let inv_b = 1.0 / b as f64;
+                    let params = tape.values_range_mut(model.params.first, d);
+                    for (p, g) in params.iter_mut().zip(&grad) {
+                        *p -= (0.1 * g * inv_b) as f32;
+                    }
+                    times.push(t.seconds() * 1e3);
+                }
+                let (native_ms, native_std) = mean_std(&times);
+                let native_mem_mb = (tape.memory_bytes() as f64) / (1024.0 * 1024.0);
+
+                println!(
+                    "e={e:<5} d={d:<9} b={b:<3} kernel={kernel:<6} | native init {native_init_ms:>8.2} ms, step {native_ms:>9.3} ± {native_std:>7.3} ms, tape mem {native_mem_mb:>7.1} MB | XLA step {xla_ms:>9.3} ± {xla_std:>7.3} ms"
+                );
+                rows.push(GridRow {
+                    e,
+                    d,
+                    b,
+                    kernel,
+                    native_init_ms,
+                    native_ms,
+                    native_std,
+                    native_mem_mb,
+                    xla_ms,
+                    xla_std,
+                });
+            }
         }
     }
 
@@ -161,14 +183,15 @@ fn main() {
             if b == 1 { 5 } else { 6 }
         ));
         out.push_str(&format!(
-            "{:<6} {:>10} {:>14} {:>22} {:>14} {:>20} {:>10}\n",
-            "e", "d", "init (ms)", "native step (ms)", "tape MB", "XLA step (ms)", "XLA/native"
+            "{:<6} {:>10} {:>7} {:>14} {:>22} {:>14} {:>20} {:>10}\n",
+            "e", "d", "kernel", "init (ms)", "native step (ms)", "tape MB", "XLA step (ms)", "XLA/native"
         ));
         for r in rows.iter().filter(|r| r.b == b) {
             out.push_str(&format!(
-                "{:<6} {:>10} {:>14.2} {:>13.3} ± {:>6.3} {:>14.1} {:>12.3} ± {:>5.3} {:>9.1}x\n",
+                "{:<6} {:>10} {:>7} {:>14.2} {:>13.3} ± {:>6.3} {:>14.1} {:>12.3} ± {:>5.3} {:>9.1}x\n",
                 r.e,
                 r.d,
+                r.kernel,
                 r.native_init_ms,
                 r.native_ms,
                 r.native_std,
@@ -187,7 +210,8 @@ fn main() {
     out.push_str("paper reference b=1 (Win): e=4 PyTorch ×45 slower than BurTorch; e=1024 ×1.2; init ×354..×100; mem ×74..×25\n");
 
     // Table 1 summary (paper's headline): speedups at b=1 at the paper's
-    // "small/medium/large/larger" dimensions.
+    // "small/medium/large/larger" dimensions (scalar rows — the paper's
+    // engine is the scalar kernels).
     out.push_str("\n=== Table 1 — summary (this host, XLA graph-mode as the framework) ===\n");
     for (label, e) in [
         ("small  d≈6K", 4usize),
@@ -195,7 +219,10 @@ fn main() {
         ("large  d≈600K", 512),
         ("larger d≈1M", 1024),
     ] {
-        if let Some(r) = rows.iter().find(|r| r.e == e && r.b == 1) {
+        if let Some(r) = rows
+            .iter()
+            .find(|r| r.e == e && r.b == 1 && r.kernel == "scalar")
+        {
             if r.xla_ms.is_finite() {
                 out.push_str(&format!(
                     "{label}: compute speedup ×{:.1}, init (native) {:.1} ms\n",
@@ -209,4 +236,27 @@ fn main() {
     println!("{out}");
     std::fs::create_dir_all("bench_results").ok();
     std::fs::write("bench_results/table5_6_mlp.txt", &out).ok();
+
+    // Machine-readable twin: one JSON row per (e, b, kernel).
+    let mut json = String::from("{\n  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"e\": {}, \"d\": {}, \"b\": {}, \"kernel\": \"{}\", \
+             \"native_init_ms\": {}, \"native_ms\": {}, \"native_std\": {}, \
+             \"native_mem_mb\": {}, \"xla_ms\": {}, \"xla_std\": {}}}{}\n",
+            r.e,
+            r.d,
+            r.b,
+            r.kernel,
+            json_num(r.native_init_ms),
+            json_num(r.native_ms),
+            json_num(r.native_std),
+            json_num(r.native_mem_mb),
+            json_num(r.xla_ms),
+            json_num(r.xla_std),
+            if i + 1 == rows.len() { "" } else { "," },
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    write_json_result("table5_6_mlp", &json);
 }

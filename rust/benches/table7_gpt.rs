@@ -5,48 +5,268 @@
 //! The paper's headline: BurTorch ×20 faster at b=1 with ×100 less
 //! memory; the framework catches up at b=64 (×1.4 faster per batch).
 //!
+//! The native columns run once per kernel backend (scalar always, simd
+//! when the CPU has AVX2+FMA); the XLA column is measured on the first
+//! backend pass only (the knob does not apply to it) and reused.
+//!
 //! Run: `cargo bench --bench table7_gpt`
 
+use burtorch::bench::{json_num, write_json_result};
 use burtorch::data::CharCorpus;
+use burtorch::kernels::{simd_available, KernelChoice};
 use burtorch::metrics::{mean_std, MemInfo, Timer};
 use burtorch::nn::{CeMode, Gpt, GptBinds, GptConfig};
 use burtorch::rng::Rng;
 use burtorch::runtime::{artifact_path, Engine, Input};
 use burtorch::tape::{StepProgram, Tape};
 
+struct BatchRow {
+    b: usize,
+    kernel: &'static str,
+    eager_ms: f64,
+    eager_std: f64,
+    replay_ms: f64,
+    compiled_ms: f64,
+    tape_mb: f64,
+    xla_ms: f64,
+    xla_std: f64,
+}
+
+/// Kernel backends to measure: scalar always, simd when the CPU has it.
+fn backends() -> Vec<KernelChoice> {
+    if simd_available() {
+        vec![KernelChoice::Scalar, KernelChoice::Simd]
+    } else {
+        vec![KernelChoice::Scalar]
+    }
+}
+
 fn main() {
     let batches = [1usize, 2, 4, 8, 16, 32, 64];
     let corpus = CharCorpus::shakespeare(20_000, 8);
     let mut engine = Engine::cpu().ok();
+    let mut rows: Vec<BatchRow> = Vec::new();
+    // XLA time per batch size, measured once on the first backend pass.
+    let mut xla_by_b: Vec<(f64, f64)> = Vec::new();
 
-    let mut tape = Tape::<f32>::new();
-    let mut rng = Rng::new(3);
-    let model = Gpt::new(&mut tape, GptConfig::paper(), &mut rng);
-    let d = model.num_params();
-    assert_eq!(d, 46_289);
+    for (pass, &choice) in backends().iter().enumerate() {
+        let mut tape = Tape::<f32>::new();
+        let kernel = tape.set_kernel(choice).as_str();
+        let mut rng = Rng::new(3);
+        let model = Gpt::new(&mut tape, GptConfig::paper(), &mut rng);
+        let d = model.num_params();
+        assert_eq!(d, 46_289);
 
-    // The replay columns' models live across the whole batch sweep, just
-    // like the eager column's (all keep training as b grows), so the
-    // per-b ratios compare like with like. Two replay variants isolate
-    // the two taxes the engine removes: `replay` keeps the frozen forward
-    // but still interprets backward; `replay+prog` additionally drives
-    // the compiled `StepProgram` backward (the `--exec replay` path).
-    let mut rtape = Tape::<f32>::new();
-    let mut rrng = Rng::new(3);
-    let rmodel = Gpt::new(&mut rtape, GptConfig::paper(), &mut rrng);
-    let mut rsession: Option<_> = None;
+        // The replay columns' models live across the whole batch sweep,
+        // just like the eager column's (all keep training as b grows), so
+        // the per-b ratios compare like with like. Two replay variants
+        // isolate the two taxes the engine removes: `replay` keeps the
+        // frozen forward but still interprets backward; `replay+prog`
+        // additionally drives the compiled `StepProgram` backward (the
+        // `--exec replay` path).
+        let mut rtape = Tape::<f32>::new();
+        rtape.set_kernel(choice);
+        let mut rrng = Rng::new(3);
+        let rmodel = Gpt::new(&mut rtape, GptConfig::paper(), &mut rrng);
+        let mut rsession: Option<_> = None;
 
-    let mut ctape = Tape::<f32>::new();
-    let mut crng = Rng::new(3);
-    let cmodel = Gpt::new(&mut ctape, GptConfig::paper(), &mut crng);
-    let mut csession: Option<(StepProgram, GptBinds)> = None;
+        let mut ctape = Tape::<f32>::new();
+        ctape.set_kernel(choice);
+        let mut crng = Rng::new(3);
+        let cmodel = Gpt::new(&mut ctape, GptConfig::paper(), &mut crng);
+        let mut csession: Option<(StepProgram, GptBinds)> = None;
+
+        for (bi, &b) in batches.iter().enumerate() {
+            let steps = if b <= 8 { 30 } else { 10 };
+            // ---- native serialized oracles (eager) ------------------------
+            let mut sample_rng = Rng::new(7);
+            let mut grad = vec![0.0f64; d];
+            let mut times = Vec::with_capacity(steps);
+            for _ in 0..steps {
+                let ws: Vec<usize> = (0..b)
+                    .map(|_| sample_rng.below_usize(corpus.num_windows()))
+                    .collect();
+                let t = Timer::new();
+                grad.iter_mut().for_each(|g| *g = 0.0);
+                for &w in &ws {
+                    let (x, y) = corpus.window(w);
+                    let (x, y) = (x.to_vec(), y.to_vec());
+                    let loss = model.loss(&mut tape, &x, &y, CeMode::Fused);
+                    tape.backward(loss);
+                    for (k, g) in tape.grads_range(model.params.first, d).iter().enumerate() {
+                        grad[k] += *g as f64;
+                    }
+                    tape.rewind(model.base);
+                }
+                let inv_b = 1.0 / b as f64;
+                let params = tape.values_range_mut(model.params.first, d);
+                for (p, g) in params.iter_mut().zip(&grad) {
+                    *p -= (0.05 * g * inv_b) as f32;
+                }
+                times.push(t.seconds() * 1e3);
+            }
+            let (eager_ms, eager_std) = mean_std(&times);
+            let tape_mb = tape.memory_bytes() as f64 / (1024.0 * 1024.0);
+
+            // ---- native replay (record-once / replay-many) ----------------
+            let replay_ms = {
+                let mut sample_rng = Rng::new(7); // same windows as the eager column
+                let mut grad = vec![0.0f64; d];
+                let mut times = Vec::with_capacity(steps);
+                for _ in 0..steps {
+                    let ws: Vec<usize> = (0..b)
+                        .map(|_| sample_rng.below_usize(corpus.num_windows()))
+                        .collect();
+                    let t = Timer::new();
+                    grad.iter_mut().for_each(|g| *g = 0.0);
+                    for &w in &ws {
+                        let (x, y) = corpus.window(w);
+                        let root = match &rsession {
+                            Some((rec, binds)) => {
+                                rmodel.rebind_sample(&mut rtape, binds, x, y);
+                                rtape.replay_forward(rec);
+                                rec.root()
+                            }
+                            None => {
+                                let (rec, binds) =
+                                    rmodel.record_sample(&mut rtape, x, y, CeMode::Fused);
+                                let root = rec.root();
+                                rsession = Some((rec, binds));
+                                root
+                            }
+                        };
+                        // Same backward variant as the eager column, so the
+                        // delta isolates the graph-construction tax.
+                        rtape.backward(root);
+                        for (k, g) in rtape.grads_range(rmodel.params.first, d).iter().enumerate()
+                        {
+                            grad[k] += *g as f64;
+                        }
+                    }
+                    let inv_b = 1.0 / b as f64;
+                    let params = rtape.values_range_mut(rmodel.params.first, d);
+                    for (p, g) in params.iter_mut().zip(&grad) {
+                        *p -= (0.05 * g * inv_b) as f32;
+                    }
+                    times.push(t.seconds() * 1e3);
+                }
+                mean_std(&times).0
+            };
+
+            // ---- native replay + compiled backward (the --exec replay path) ---
+            let compiled_ms = {
+                let mut sample_rng = Rng::new(7); // same windows again
+                let mut grad = vec![0.0f64; d];
+                let mut times = Vec::with_capacity(steps);
+                for _ in 0..steps {
+                    let ws: Vec<usize> = (0..b)
+                        .map(|_| sample_rng.below_usize(corpus.num_windows()))
+                        .collect();
+                    let t = Timer::new();
+                    grad.iter_mut().for_each(|g| *g = 0.0);
+                    for &w in &ws {
+                        let (x, y) = corpus.window(w);
+                        match &csession {
+                            Some((prog, binds)) => {
+                                cmodel.rebind_sample(&mut ctape, binds, x, y);
+                                ctape.replay_forward(&prog.recording());
+                            }
+                            None => {
+                                let (rec, binds) =
+                                    cmodel.record_sample(&mut ctape, x, y, CeMode::Fused);
+                                let prog = StepProgram::compile(&ctape, rec, rec.base());
+                                csession = Some((prog, binds));
+                            }
+                        }
+                        // The compiled column: leaf-free instruction list,
+                        // precomputed zeroing extent, shared adjoint kernels.
+                        let (prog, _) = csession.as_ref().expect("just recorded");
+                        prog.backward(&mut ctape);
+                        for (k, g) in ctape.grads_range(cmodel.params.first, d).iter().enumerate()
+                        {
+                            grad[k] += *g as f64;
+                        }
+                    }
+                    let inv_b = 1.0 / b as f64;
+                    let params = ctape.values_range_mut(cmodel.params.first, d);
+                    for (p, g) in params.iter_mut().zip(&grad) {
+                        *p -= (0.05 * g * inv_b) as f32;
+                    }
+                    times.push(t.seconds() * 1e3);
+                }
+                mean_std(&times).0
+            };
+
+            // ---- XLA artifact (first backend pass only) -------------------
+            if pass == 0 {
+                let key = format!("gpt_b{b}");
+                let xla = match engine.as_mut() {
+                    Some(eng) if artifact_path(&format!("{key}.hlo.txt")).exists() => {
+                        eng.load(&key, &artifact_path(&format!("{key}.hlo.txt")))
+                            .expect("compile");
+                        let mut flat: Vec<f32> = {
+                            let mut r = Rng::new(9);
+                            (0..d).map(|_| r.uniform_in(-0.03, 0.03) as f32).collect()
+                        };
+                        let lr = [0.05f32];
+                        let xla_steps = steps.min(20);
+                        let mut times = Vec::with_capacity(xla_steps);
+                        for s in 0..xla_steps {
+                            let xb: Vec<i32> =
+                                (0..b * 8).map(|k| ((k + s) % 65) as i32).collect();
+                            let yb: Vec<i32> =
+                                (0..b * 8).map(|k| ((k + s + 1) % 65) as i32).collect();
+                            let t = Timer::new();
+                            let o = eng
+                                .run_mixed(
+                                    &key,
+                                    &[
+                                        Input::F32(&flat, &[d]),
+                                        Input::I32(&xb, &[b, 8]),
+                                        Input::I32(&yb, &[b, 8]),
+                                        Input::F32(&lr, &[]),
+                                    ],
+                                )
+                                .expect("xla gpt step");
+                            times.push(t.seconds() * 1e3);
+                            flat = o[0].clone();
+                        }
+                        mean_std(&times)
+                    }
+                    _ => (f64::NAN, f64::NAN),
+                };
+                xla_by_b.push(xla);
+            }
+            let (xla_ms, xla_std) = xla_by_b[bi];
+
+            println!(
+                "b={b:<3} kernel={kernel:<6} eager {eager_ms:>9.3} ± {eager_std:>7.3} ms | \
+                 replay {replay_ms:>9.3} ms ({:.2}x) | replay+prog {compiled_ms:>9.3} ms ({:.2}x) \
+                 | tape {tape_mb:>6.1} MB | XLA {xla_ms:>9.3} ± {xla_std:>6.3} ms",
+                eager_ms / replay_ms,
+                eager_ms / compiled_ms
+            );
+            rows.push(BatchRow {
+                b,
+                kernel,
+                eager_ms,
+                eager_std,
+                replay_ms,
+                compiled_ms,
+                tape_mb,
+                xla_ms,
+                xla_std,
+            });
+        }
+    }
 
     let mut out = String::from(
         "\n=== Table 7 — GPT-3-like model (46,289 params), FP32, 1 core ===\n",
     );
     out.push_str(&format!(
-        "{:<6} {:>22} {:>16} {:>18} {:>10} {:>20} {:>12}\n",
+        "{:<6} {:>7} {:>22} {:>16} {:>18} {:>10} {:>20} {:>12}\n",
         "b",
+        "kernel",
         "eager step (ms)",
         "replay (ms)",
         "replay+prog (ms)",
@@ -54,182 +274,21 @@ fn main() {
         "XLA step (ms)",
         "XLA/eager"
     ));
-
-    for &b in &batches {
-        let steps = if b <= 8 { 30 } else { 10 };
-        // ---- native serialized oracles (eager) ------------------------
-        let mut sample_rng = Rng::new(7);
-        let mut grad = vec![0.0f64; d];
-        let mut times = Vec::with_capacity(steps);
-        for _ in 0..steps {
-            let ws: Vec<usize> = (0..b)
-                .map(|_| sample_rng.below_usize(corpus.num_windows()))
-                .collect();
-            let t = Timer::new();
-            grad.iter_mut().for_each(|g| *g = 0.0);
-            for &w in &ws {
-                let (x, y) = corpus.window(w);
-                let (x, y) = (x.to_vec(), y.to_vec());
-                let loss = model.loss(&mut tape, &x, &y, CeMode::Fused);
-                tape.backward(loss);
-                for (k, g) in tape.grads_range(model.params.first, d).iter().enumerate() {
-                    grad[k] += *g as f64;
-                }
-                tape.rewind(model.base);
-            }
-            let inv_b = 1.0 / b as f64;
-            let params = tape.values_range_mut(model.params.first, d);
-            for (p, g) in params.iter_mut().zip(&grad) {
-                *p -= (0.05 * g * inv_b) as f32;
-            }
-            times.push(t.seconds() * 1e3);
-        }
-        let (native_ms, native_std) = mean_std(&times);
-        let tape_mb = tape.memory_bytes() as f64 / (1024.0 * 1024.0);
-
-        // ---- native replay (record-once / replay-many) ----------------
-        let replay_ms = {
-            let mut sample_rng = Rng::new(7); // same windows as the eager column
-            let mut grad = vec![0.0f64; d];
-            let mut times = Vec::with_capacity(steps);
-            for _ in 0..steps {
-                let ws: Vec<usize> = (0..b)
-                    .map(|_| sample_rng.below_usize(corpus.num_windows()))
-                    .collect();
-                let t = Timer::new();
-                grad.iter_mut().for_each(|g| *g = 0.0);
-                for &w in &ws {
-                    let (x, y) = corpus.window(w);
-                    let root = match &rsession {
-                        Some((rec, binds)) => {
-                            rmodel.rebind_sample(&mut rtape, binds, x, y);
-                            rtape.replay_forward(rec);
-                            rec.root()
-                        }
-                        None => {
-                            let (rec, binds) =
-                                rmodel.record_sample(&mut rtape, x, y, CeMode::Fused);
-                            let root = rec.root();
-                            rsession = Some((rec, binds));
-                            root
-                        }
-                    };
-                    // Same backward variant as the eager column, so the
-                    // delta isolates the graph-construction tax.
-                    rtape.backward(root);
-                    for (k, g) in rtape.grads_range(rmodel.params.first, d).iter().enumerate() {
-                        grad[k] += *g as f64;
-                    }
-                }
-                let inv_b = 1.0 / b as f64;
-                let params = rtape.values_range_mut(rmodel.params.first, d);
-                for (p, g) in params.iter_mut().zip(&grad) {
-                    *p -= (0.05 * g * inv_b) as f32;
-                }
-                times.push(t.seconds() * 1e3);
-            }
-            mean_std(&times).0
-        };
-
-        // ---- native replay + compiled backward (the --exec replay path) ---
-        let compiled_ms = {
-            let mut sample_rng = Rng::new(7); // same windows again
-            let mut grad = vec![0.0f64; d];
-            let mut times = Vec::with_capacity(steps);
-            for _ in 0..steps {
-                let ws: Vec<usize> = (0..b)
-                    .map(|_| sample_rng.below_usize(corpus.num_windows()))
-                    .collect();
-                let t = Timer::new();
-                grad.iter_mut().for_each(|g| *g = 0.0);
-                for &w in &ws {
-                    let (x, y) = corpus.window(w);
-                    match &csession {
-                        Some((prog, binds)) => {
-                            cmodel.rebind_sample(&mut ctape, binds, x, y);
-                            ctape.replay_forward(&prog.recording());
-                        }
-                        None => {
-                            let (rec, binds) =
-                                cmodel.record_sample(&mut ctape, x, y, CeMode::Fused);
-                            let prog = StepProgram::compile(&ctape, rec, rec.base());
-                            csession = Some((prog, binds));
-                        }
-                    }
-                    // The compiled column: leaf-free instruction list,
-                    // precomputed zeroing extent, shared adjoint kernels.
-                    let (prog, _) = csession.as_ref().expect("just recorded");
-                    prog.backward(&mut ctape);
-                    for (k, g) in ctape.grads_range(cmodel.params.first, d).iter().enumerate() {
-                        grad[k] += *g as f64;
-                    }
-                }
-                let inv_b = 1.0 / b as f64;
-                let params = ctape.values_range_mut(cmodel.params.first, d);
-                for (p, g) in params.iter_mut().zip(&grad) {
-                    *p -= (0.05 * g * inv_b) as f32;
-                }
-                times.push(t.seconds() * 1e3);
-            }
-            mean_std(&times).0
-        };
-
-        // ---- XLA artifact ------------------------------------------------
-        let key = format!("gpt_b{b}");
-        let (xla_ms, xla_std) = match engine.as_mut() {
-            Some(eng) if artifact_path(&format!("{key}.hlo.txt")).exists() => {
-                eng.load(&key, &artifact_path(&format!("{key}.hlo.txt")))
-                    .expect("compile");
-                let mut flat: Vec<f32> = {
-                    let mut r = Rng::new(9);
-                    (0..d).map(|_| r.uniform_in(-0.03, 0.03) as f32).collect()
-                };
-                let lr = [0.05f32];
-                let xla_steps = steps.min(20);
-                let mut times = Vec::with_capacity(xla_steps);
-                for s in 0..xla_steps {
-                    let xb: Vec<i32> = (0..b * 8).map(|k| ((k + s) % 65) as i32).collect();
-                    let yb: Vec<i32> = (0..b * 8).map(|k| ((k + s + 1) % 65) as i32).collect();
-                    let t = Timer::new();
-                    let o = eng
-                        .run_mixed(
-                            &key,
-                            &[
-                                Input::F32(&flat, &[d]),
-                                Input::I32(&xb, &[b, 8]),
-                                Input::I32(&yb, &[b, 8]),
-                                Input::F32(&lr, &[]),
-                            ],
-                        )
-                        .expect("xla gpt step");
-                    times.push(t.seconds() * 1e3);
-                    flat = o[0].clone();
-                }
-                mean_std(&times)
-            }
-            _ => (f64::NAN, f64::NAN),
-        };
-
-        println!(
-            "b={b:<3} eager {native_ms:>9.3} ± {native_std:>7.3} ms | replay {replay_ms:>9.3} ms \
-             ({:.2}x) | replay+prog {compiled_ms:>9.3} ms ({:.2}x) | tape {tape_mb:>6.1} MB | \
-             XLA {xla_ms:>9.3} ± {xla_std:>6.3} ms",
-            native_ms / replay_ms,
-            native_ms / compiled_ms
-        );
+    for r in &rows {
         out.push_str(&format!(
-            "{:<6} {:>13.3} ± {:>6.3} {:>8.3} ({:>4.2}x) {:>10.3} ({:>4.2}x) {:>10.1} {:>12.3} ± {:>5.3} {:>11.1}x\n",
-            b,
-            native_ms,
-            native_std,
-            replay_ms,
-            native_ms / replay_ms,
-            compiled_ms,
-            native_ms / compiled_ms,
-            tape_mb,
-            xla_ms,
-            xla_std,
-            xla_ms / native_ms
+            "{:<6} {:>7} {:>13.3} ± {:>6.3} {:>8.3} ({:>4.2}x) {:>10.3} ({:>4.2}x) {:>10.1} {:>12.3} ± {:>5.3} {:>11.1}x\n",
+            r.b,
+            r.kernel,
+            r.eager_ms,
+            r.eager_std,
+            r.replay_ms,
+            r.eager_ms / r.replay_ms,
+            r.compiled_ms,
+            r.eager_ms / r.compiled_ms,
+            r.tape_mb,
+            r.xla_ms,
+            r.xla_std,
+            r.xla_ms / r.eager_ms
         ));
     }
 
@@ -243,9 +302,32 @@ fn main() {
     out.push_str("paper crossover: PyTorch overtakes at b≈32–64 (×1.4 at b=64) — compare the XLA/eager column trend.\n");
     out.push_str("replay = record-once/replay-many forward with the interpreter backward; replay+prog additionally drives the\n");
     out.push_str("compiled StepProgram backward (leaf-free instruction list, precomputed zeroing extent) — the actual --exec replay\n");
-    out.push_str("path. All three native columns train bitwise-identically; the deltas isolate the graph-construction tax and the\n");
-    out.push_str("backward-interpretation tax respectively.\n");
+    out.push_str("path. All three native columns train bitwise-identically — across exec modes AND kernel backends (the simd rows\n");
+    out.push_str("reproduce the scalar rows' results exactly); the deltas isolate the graph-construction tax, the\n");
+    out.push_str("backward-interpretation tax, and the vector speedup respectively. XLA is measured once (backend-independent).\n");
     println!("{out}");
     std::fs::create_dir_all("bench_results").ok();
     std::fs::write("bench_results/table7_gpt.txt", &out).ok();
+
+    // Machine-readable twin: one JSON row per (b, kernel).
+    let mut json = String::from("{\n  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"b\": {}, \"kernel\": \"{}\", \"eager_ms\": {}, \"eager_std\": {}, \
+             \"replay_ms\": {}, \"compiled_ms\": {}, \"tape_mb\": {}, \"xla_ms\": {}, \
+             \"xla_std\": {}}}{}\n",
+            r.b,
+            r.kernel,
+            json_num(r.eager_ms),
+            json_num(r.eager_std),
+            json_num(r.replay_ms),
+            json_num(r.compiled_ms),
+            json_num(r.tape_mb),
+            json_num(r.xla_ms),
+            json_num(r.xla_std),
+            if i + 1 == rows.len() { "" } else { "," },
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    write_json_result("table7_gpt", &json);
 }

@@ -28,6 +28,9 @@ pub struct Row {
     pub vm_hwm_mb: f64,
     /// Iterations per launch (for per-iteration derivations).
     pub iters: u64,
+    /// Kernel backend the row ran on (`"scalar"` / `"simd"`), or `""`
+    /// for engines the backend knob does not apply to (baselines, XLA).
+    pub kernel: &'static str,
 }
 
 impl Row {
@@ -39,6 +42,12 @@ impl Row {
     /// Mean time per iteration in microseconds.
     pub fn us_per_iter(&self) -> f64 {
         self.mean_s * 1e6 / self.iters as f64
+    }
+
+    /// Tag the row with the kernel backend it was measured on.
+    pub fn with_kernel(mut self, kernel: &'static str) -> Row {
+        self.kernel = kernel;
+        self
     }
 }
 
@@ -77,6 +86,7 @@ pub fn run<R>(name: &str, trials: usize, iters: u64, mut body: impl FnMut(u64) -
         vm_peak_mb: mem.vm_peak_mb(),
         vm_hwm_mb: mem.vm_hwm_mb(),
         iters,
+        kernel: "",
     }
 }
 
@@ -116,13 +126,14 @@ impl Table {
         out.push_str(&format!("\n=== {} ===\n", self.title));
         let base = self.rows.first().map(|r| r.mean_s).unwrap_or(1.0);
         out.push_str(&format!(
-            "{:<44} {:>14} {:>10} {:>12} {:>12} {:>10} {:>10}\n",
-            "Framework/Engine", "Time (s)", "± std", "min (s)", "Mticks", "VmPeak MB", "rel"
+            "{:<44} {:>7} {:>14} {:>10} {:>12} {:>12} {:>10} {:>10}\n",
+            "Framework/Engine", "kernel", "Time (s)", "± std", "min (s)", "Mticks", "VmPeak MB", "rel"
         ));
         for r in &self.rows {
             out.push_str(&format!(
-                "{:<44} {:>14.6} {:>10.6} {:>12.6} {:>12.1} {:>10.1} {:>9.1}x\n",
+                "{:<44} {:>7} {:>14.6} {:>10.6} {:>12.6} {:>12.1} {:>10.1} {:>9.1}x\n",
                 r.name,
+                if r.kernel.is_empty() { "-" } else { r.kernel },
                 r.mean_s,
                 r.std_s,
                 r.min_s,
@@ -147,9 +158,11 @@ impl Table {
         out.push_str("  \"rows\": [\n");
         for (i, r) in self.rows.iter().enumerate() {
             out.push_str(&format!(
-                "    {{\"name\": \"{}\", \"mean_s\": {}, \"std_s\": {}, \"min_s\": {}, \
-                 \"ticks\": {}, \"vm_peak_mb\": {}, \"vm_hwm_mb\": {}, \"iters\": {}}}{}\n",
+                "    {{\"name\": \"{}\", \"kernel\": \"{}\", \"mean_s\": {}, \"std_s\": {}, \
+                 \"min_s\": {}, \"ticks\": {}, \"vm_peak_mb\": {}, \"vm_hwm_mb\": {}, \
+                 \"iters\": {}}}{}\n",
                 json_escape(&r.name),
+                json_escape(r.kernel),
                 json_num(r.mean_s),
                 json_num(r.std_s),
                 json_num(r.min_s),
@@ -257,11 +270,12 @@ mod tests {
     #[test]
     fn render_json_is_structurally_sound() {
         let mut t = Table::new("json probe");
-        t.push(run("base", 2, 10, |i| i));
+        t.push(run("base", 2, 10, |i| i).with_kernel("scalar"));
         t.note("note \"quoted\"");
         let s = t.render_json();
         assert!(s.contains("\"title\": \"json probe\""));
         assert!(s.contains("\"name\": \"base\""));
+        assert!(s.contains("\"kernel\": \"scalar\""));
         assert!(s.contains("\\\"quoted\\\""));
         // Balanced braces/brackets (cheap well-formedness probe).
         assert_eq!(s.matches('{').count(), s.matches('}').count());

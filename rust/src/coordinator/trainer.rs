@@ -31,6 +31,7 @@ use std::path::Path;
 use std::sync::Arc;
 
 use crate::data::{BatchSampler, CharCorpus, Example, PrefetchSampler};
+use crate::kernels::KernelChoice;
 use crate::serialize::{self, TrainState};
 use crate::metrics::{mean_std, MemInfo, Timer};
 use crate::nn::{CeMode, CharMlp, CharMlpBinds, Gpt, GptBinds, ParamRange};
@@ -98,6 +99,13 @@ pub struct TrainerOptions {
     /// identical** to the uninterrupted one — same parameter trajectory,
     /// same batches — for any thread count and either exec mode.
     pub resume: bool,
+    /// Kernel backend for the fused dot/inner-product/cross-entropy
+    /// families ([`KernelChoice::Auto`] by default: AVX2+FMA when the CPU
+    /// has it, scalar otherwise). Every choice trains **bitwise
+    /// identically** on a given build — the SIMD lanes reproduce the
+    /// scalar kernels' exact operation association — so this knob trades
+    /// nothing but dispatch overhead; see `crate::kernels`.
+    pub kernel: KernelChoice,
 }
 
 impl Default for TrainerOptions {
@@ -118,6 +126,7 @@ impl Default for TrainerOptions {
             checkpoint_every: 0,
             checkpoint: None,
             resume: false,
+            kernel: KernelChoice::Auto,
         }
     }
 }
@@ -245,6 +254,10 @@ impl Trainer {
     ) -> TrainReport {
         let o = &self.opts;
         let d = params.len;
+        // Resolve the kernel backend on the main tape before the engine
+        // clones worker replicas — `clone_prefix` inherits the backend,
+        // so every lane runs the same (bitwise-pinned) kernels.
+        tape.set_kernel(o.kernel);
         // Async batch prefetch: index generation for batch k+1 runs on a
         // pool worker while step k computes (the stream is bitwise
         // identical to the synchronous sampler either way — see

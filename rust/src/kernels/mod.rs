@@ -1,0 +1,494 @@
+//! Pluggable CPU kernel backends for the fused dot/gather/CE family.
+//!
+//! Every fused hot-path kernel in the engine — the forward dot kernels
+//! (`dotRange`, `innerProduct`, `dotParamRange`, `dotStrided`,
+//! `crossEntropyLogits`) and their adjoints — dispatches through the
+//! [`Kernels`] trait. Two backends exist:
+//!
+//! - [`ScalarKernels`] — the portable reference implementation. Its
+//!   bodies are the pre-refactor tape kernels moved here verbatim, so the
+//!   scalar path is byte-for-byte the historical behavior.
+//! - [`SimdKernels`] — an `x86_64` AVX2+FMA implementation
+//!   (`std::arch`, no external crates). Vector bodies exist only where
+//!   they can reproduce the scalar kernel **bitwise**: the 4-accumulator
+//!   dot ([`crate::ops::dot_ilp4`]) maps each scalar accumulator `s0..s3`
+//!   onto one lane of a single 4-wide FMA vector accumulator and
+//!   horizontally reduces in the fixed `(s0 + s1) + (s2 + s3) + init`
+//!   order, and the disjoint-range dot adjoints vectorize the
+//!   `grad += g * v` scatter with separate multiply and add instructions
+//!   (matching the scalar path's two roundings). Everything else —
+//!   gathered ids, strided scatters, serial-association folds,
+//!   transcendental kernels — keeps the scalar body, because no vector
+//!   formulation preserves the operation order; [`dispatch_table`] lists
+//!   the per-family resolution.
+//!
+//! The backend is selected per [`crate::tape::Tape`]
+//! ([`crate::tape::Tape::set_kernel`]) from a [`KernelChoice`]: CLI
+//! `--kernel scalar|simd|auto`, config `train.kernel`, or the
+//! `BURTORCH_KERNEL` environment variable; `auto` (the default) uses the
+//! vector backend when the running CPU reports AVX2+FMA
+//! ([`simd_available`], detected once and cached).
+//!
+//! ## The bitwise contract
+//!
+//! On one build, for one run, `--kernel simd` produces bit-identical
+//! values and gradients to `--kernel scalar` — every equivalence suite
+//! (replay, program, parallel, serve, decode) doubles as a
+//! backend-equivalence matrix, and `tests/kernel_backends.rs` asserts it
+//! kernel-by-kernel. This is *bitwise-per-build*, not bitwise-per-ISA:
+//! a CPU without AVX2 resolves `auto` to scalar and still agrees with a
+//! CPU that has it (both reduce in the same fixed association), but the
+//! crate does not promise bit equality against *other* compilations
+//! (different `target-cpu` flags may fuse or reorder the *non*-kernel
+//! scalar ops differently; the kernels module pins only its own family).
+
+pub mod scalar;
+pub mod simd;
+
+pub use scalar::ScalarKernels;
+pub use simd::SimdKernels;
+
+use crate::scalar::Scalar;
+use std::sync::OnceLock;
+
+/// A resolved kernel backend — what a tape actually dispatches to.
+///
+/// Obtained from a [`KernelChoice`] via [`KernelChoice::resolve`] (which
+/// clamps `Simd` to `Scalar` on CPUs without AVX2+FMA, so holding a
+/// `KernelBackend::Simd` implies the vector path is executable).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelBackend {
+    /// Portable scalar kernels (the pre-refactor reference code).
+    Scalar,
+    /// AVX2+FMA vector kernels, bitwise-pinned to the scalar ones.
+    Simd,
+}
+
+impl KernelBackend {
+    /// Stable lowercase name (CLI/bench/JSON vocabulary).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            KernelBackend::Scalar => "scalar",
+            KernelBackend::Simd => "simd",
+        }
+    }
+}
+
+impl std::fmt::Display for KernelBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// User-facing backend selection (`--kernel`, `train.kernel`,
+/// `BURTORCH_KERNEL`).
+///
+/// ```
+/// use burtorch::kernels::KernelChoice;
+/// assert_eq!(KernelChoice::parse("simd"), Ok(KernelChoice::Simd));
+/// assert_eq!(KernelChoice::parse(" Auto "), Ok(KernelChoice::Auto));
+/// assert!(KernelChoice::parse("gpu").is_err());
+/// assert_eq!(KernelChoice::default(), KernelChoice::Auto);
+/// ```
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum KernelChoice {
+    /// Use the vector backend iff the CPU supports it (the default).
+    #[default]
+    Auto,
+    /// Force the portable scalar kernels.
+    Scalar,
+    /// Request the AVX2+FMA kernels (falls back to scalar — with the
+    /// same results, per the bitwise contract — if the CPU lacks them).
+    Simd,
+}
+
+impl KernelChoice {
+    /// Parse a CLI/config/env spelling. Case-insensitive; surrounding
+    /// whitespace ignored.
+    pub fn parse(s: &str) -> Result<KernelChoice, String> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "auto" => Ok(KernelChoice::Auto),
+            "scalar" => Ok(KernelChoice::Scalar),
+            "simd" => Ok(KernelChoice::Simd),
+            other => Err(format!(
+                "unknown kernel backend '{other}' (expected scalar|simd|auto)"
+            )),
+        }
+    }
+
+    /// Stable lowercase name.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            KernelChoice::Auto => "auto",
+            KernelChoice::Scalar => "scalar",
+            KernelChoice::Simd => "simd",
+        }
+    }
+
+    /// Resolve to an executable backend on this machine: `Scalar` stays
+    /// scalar, `Simd` is clamped to scalar when the CPU lacks AVX2+FMA,
+    /// and `Auto` defers to [`default_backend`] (which also honors the
+    /// `BURTORCH_KERNEL` environment variable).
+    ///
+    /// ```
+    /// use burtorch::kernels::{simd_available, KernelBackend, KernelChoice};
+    /// assert_eq!(KernelChoice::Scalar.resolve(), KernelBackend::Scalar);
+    /// let forced = KernelChoice::Simd.resolve();
+    /// assert_eq!(forced == KernelBackend::Simd, simd_available());
+    /// ```
+    pub fn resolve(self) -> KernelBackend {
+        match self {
+            KernelChoice::Auto => default_backend(),
+            KernelChoice::Scalar => KernelBackend::Scalar,
+            KernelChoice::Simd => {
+                if simd_available() {
+                    KernelBackend::Simd
+                } else {
+                    KernelBackend::Scalar
+                }
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for KernelChoice {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// True when the running CPU supports the AVX2+FMA vector backend.
+/// Detected once ([`std::sync::OnceLock`]) — the hot paths branch on a
+/// cached per-tape [`KernelBackend`], never on cpuid.
+pub fn simd_available() -> bool {
+    static AVAILABLE: OnceLock<bool> = OnceLock::new();
+    *AVAILABLE.get_or_init(|| {
+        #[cfg(target_arch = "x86_64")]
+        {
+            is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            false
+        }
+    })
+}
+
+/// The backend new tapes start with: `BURTORCH_KERNEL` if set to a valid
+/// spelling (an invalid one falls back to `auto` — the env var is a
+/// default, not a command), else `auto` = vector iff [`simd_available`].
+/// Cached after the first call.
+pub fn default_backend() -> KernelBackend {
+    static DEFAULT: OnceLock<KernelBackend> = OnceLock::new();
+    *DEFAULT.get_or_init(|| {
+        let choice = std::env::var("BURTORCH_KERNEL")
+            .ok()
+            .and_then(|v| KernelChoice::parse(&v).ok())
+            .unwrap_or(KernelChoice::Auto);
+        // Resolve inline: `KernelChoice::resolve` routes `Auto` back here.
+        match choice {
+            KernelChoice::Scalar => KernelBackend::Scalar,
+            KernelChoice::Auto | KernelChoice::Simd => {
+                if simd_available() {
+                    KernelBackend::Simd
+                } else {
+                    KernelBackend::Scalar
+                }
+            }
+        }
+    })
+}
+
+/// The fused kernel family as one backend interface.
+///
+/// All methods are associated functions over raw tape storage (`val`,
+/// `grad`, `aux` slices) so a backend has no state and dispatch is a
+/// two-arm match on the tape's cached [`KernelBackend`]. Implementations
+/// must be **bitwise identical** to [`ScalarKernels`] — same operation
+/// order, same rounding count per element — not merely numerically close;
+/// the determinism contracts of the parallel trainer, the replay engine,
+/// and the serving subsystem all sit on top of this family.
+///
+/// ```
+/// use burtorch::kernels::{Kernels, ScalarKernels, SimdKernels};
+/// let xs = [1.0e16f64, 1.0, -1.0e16, 3.0, 0.25];
+/// let ws = [1.0f64; 5];
+/// // Catastrophic cancellation: the result depends on the association,
+/// // so bit equality here means the backends share it exactly.
+/// let s = ScalarKernels::dot(&xs, &ws, 0.5);
+/// let v = SimdKernels::dot(&xs, &ws, 0.5);
+/// assert_eq!(s.to_bits(), v.to_bits());
+/// ```
+pub trait Kernels {
+    /// Forward ⟨xs, ws⟩ + init over two equal-length slices, in the fixed
+    /// `(s0 + s1) + (s2 + s3) + init` 4-accumulator association of
+    /// [`crate::ops::dot_ilp4`] with a serial `mul_add` remainder.
+    fn dot<T: Scalar>(xs: &[T], ws: &[T], init: T) -> T;
+
+    /// Forward `innerProduct`: ⟨val[aux[s..s+n]], val[aux[s+n..s+2n]]⟩ +
+    /// init — the aux-indirected gather twin of [`Kernels::dot`], same
+    /// association.
+    fn gather_dot<T: Scalar>(val: &[T], aux: &[u32], s: usize, n: usize, init: T) -> T;
+
+    /// Forward fused softmax cross-entropy over a logits slice:
+    /// `logsumexp(zs) − zs[target]`, max-subtracted for stability.
+    fn ce_logits<T: Scalar>(zs: &[T], target: usize) -> T;
+
+    /// Forward `dotParamRange`: ⟨val[aux[xs_at..xs_at+n]],
+    /// val[w0..w0+n]⟩ + val[bias] — gathered x-ids against a contiguous
+    /// parameter range, same 4-accumulator association.
+    ///
+    /// # Safety
+    /// `xs_at + n <= aux.len()`, `w0 + n <= val.len()`,
+    /// `bias < val.len()`, and every id in `aux[xs_at..xs_at+n]` must be
+    /// `< val.len()` (the tape's topological invariant).
+    unsafe fn dot_param_range<T: Scalar>(
+        val: &[T],
+        aux: &[u32],
+        xs_at: usize,
+        n: usize,
+        w0: usize,
+        bias: usize,
+    ) -> T;
+
+    /// Forward `dotStrided`: ⟨val[w0..w0+n], val[x0 + k·stride]⟩ as a
+    /// *serial* single-accumulator `mul_add` chain (deliberately not the
+    /// 4-accumulator association — this kernel's contract is the rolled
+    /// fold).
+    ///
+    /// # Safety
+    /// `w0 + n <= val.len()` and, for `n > 0`,
+    /// `x0 + (n - 1) * stride < val.len()`.
+    unsafe fn dot_strided<T: Scalar>(
+        val: &[T],
+        w0: usize,
+        x0: usize,
+        stride: usize,
+        n: usize,
+    ) -> T;
+
+    /// Adjoint of `dotRange`: `grad[x0+k] += g · val[w0+k]` and
+    /// `grad[w0+k] += g · val[x0+k]` for `k in 0..n`, in ascending-`k`
+    /// order with x before w at each `k` (the order is observable when
+    /// the two ranges overlap).
+    ///
+    /// # Safety
+    /// `x0 + n <= val.len()` and `w0 + n <= val.len()`, with
+    /// `grad.len() == val.len()`.
+    unsafe fn adj_dot_range<T: Scalar>(
+        val: &[T],
+        grad: &mut [T],
+        x0: usize,
+        w0: usize,
+        n: usize,
+        g: T,
+    );
+
+    /// Adjoint of `dotRangeWithBias`: [`Kernels::adj_dot_range`], then
+    /// `grad[bias] += g` — the bias lands strictly *after* the range
+    /// scatter in both backends.
+    ///
+    /// # Safety
+    /// The [`Kernels::adj_dot_range`] requirements plus
+    /// `bias < grad.len()`.
+    unsafe fn adj_dot_range_bias<T: Scalar>(
+        val: &[T],
+        grad: &mut [T],
+        x0: usize,
+        w0: usize,
+        n: usize,
+        bias: usize,
+        g: T,
+    ) {
+        debug_assert!(bias < grad.len());
+        Self::adj_dot_range(val, grad, x0, w0, n, g);
+        *grad.get_unchecked_mut(bias) += g;
+    }
+
+    /// Adjoint of `dotParamRange` (gathered x-ids may repeat, so the
+    /// scatter order is part of the contract), then `grad[bias] += g`.
+    ///
+    /// # Safety
+    /// `xs_at + n <= aux.len()`, `w0 + n <= val.len()`,
+    /// `bias < grad.len()`, every gathered id `< val.len()`, and
+    /// `grad.len() == val.len()`.
+    #[allow(clippy::too_many_arguments)]
+    unsafe fn adj_dot_param_range<T: Scalar>(
+        val: &[T],
+        grad: &mut [T],
+        aux: &[u32],
+        xs_at: usize,
+        n: usize,
+        w0: usize,
+        bias: usize,
+        g: T,
+    );
+
+    /// Adjoint of `dotStrided` (strided scatter, rolled order).
+    ///
+    /// # Safety
+    /// `w0 + n <= val.len()` and, for `n > 0`,
+    /// `x0 + (n - 1) * stride < val.len()`, with
+    /// `grad.len() == val.len()`.
+    unsafe fn adj_dot_strided<T: Scalar>(
+        val: &[T],
+        grad: &mut [T],
+        x0: usize,
+        w0: usize,
+        n: usize,
+        stride: usize,
+        g: T,
+    );
+
+    /// Adjoint of `innerProduct` (aux-gathered pairs; ids may repeat
+    /// across and within lanes, so per-k order is part of the contract).
+    ///
+    /// # Safety
+    /// `s + 2n <= aux.len()`, every id in the run `< val.len()`, and
+    /// `grad.len() == val.len()`.
+    unsafe fn adj_inner_product<T: Scalar>(
+        val: &[T],
+        grad: &mut [T],
+        aux: &[u32],
+        s: usize,
+        n: usize,
+        g: T,
+    );
+
+    /// Adjoint of `innerProductWithBias`: checked rolled scatter over the
+    /// pair run, then `grad[bias] += g` with the bias id at
+    /// `aux[s + 2n]`.
+    fn adj_inner_product_bias<T: Scalar>(
+        val: &[T],
+        grad: &mut [T],
+        aux: &[u32],
+        s: usize,
+        n: usize,
+        g: T,
+    );
+
+    /// Adjoint of the fused cross-entropy: `grad[z0+k] += g · p_k` with
+    /// the softmax recomputed max-subtracted, then `grad[z0+target] −= g`.
+    fn adj_ce_logits<T: Scalar>(
+        val: &[T],
+        grad: &mut [T],
+        z0: usize,
+        n: usize,
+        target: usize,
+        g: T,
+    );
+}
+
+/// One row of the per-family dispatch table (the `burtorch kernels`
+/// diagnostic): which body each backend runs for a kernel family.
+#[derive(Clone, Copy, Debug)]
+pub struct DispatchRow {
+    /// Kernel family (paper mnemonics where they exist).
+    pub family: &'static str,
+    /// What [`ScalarKernels`] executes.
+    pub scalar: &'static str,
+    /// What [`SimdKernels`] executes — and *why* when it stays scalar.
+    pub simd: &'static str,
+}
+
+/// The full per-family dispatch resolution. Families where the SIMD
+/// column says "scalar body" run identical code under both backends by
+/// construction; vectorized families are pinned bitwise by
+/// `tests/kernel_backends.rs`.
+pub fn dispatch_table() -> &'static [DispatchRow] {
+    &[
+        DispatchRow {
+            family: "dot (dotRange / dotRangeWithBias forward)",
+            scalar: "4-accumulator ILP mul_add fold",
+            simd: "one 4-lane FMA vector accumulator, fixed-order horizontal reduce",
+        },
+        DispatchRow {
+            family: "gather_dot (innerProduct forward)",
+            scalar: "4-accumulator fold over aux-gathered ids",
+            simd: "scalar body (vector i32 gathers mis-handle ids > i32::MAX)",
+        },
+        DispatchRow {
+            family: "dot_param_range (dotParamRange forward)",
+            scalar: "4-accumulator fold, gathered x-ids vs contiguous weights",
+            simd: "scalar body (gathered x-ids)",
+        },
+        DispatchRow {
+            family: "dot_strided (dotStrided forward)",
+            scalar: "serial single-accumulator mul_add chain",
+            simd: "scalar body (serial association is the kernel's contract)",
+        },
+        DispatchRow {
+            family: "ce_logits (crossEntropyLogits forward)",
+            scalar: "max-subtracted logsumexp",
+            simd: "scalar body (libm exp/ln calls)",
+        },
+        DispatchRow {
+            family: "adj_dot_range (+bias)",
+            scalar: "4x unrolled two-sided scatter, bias after the loop",
+            simd: "vector mul+add scatter when the ranges are disjoint; scalar fallback on overlap",
+        },
+        DispatchRow {
+            family: "adj_dot_param_range",
+            scalar: "4x unrolled gather-scatter, bias after the loop",
+            simd: "scalar body (gathered ids may repeat across lanes)",
+        },
+        DispatchRow {
+            family: "adj_dot_strided",
+            scalar: "rolled strided scatter",
+            simd: "scalar body (strided scatter)",
+        },
+        DispatchRow {
+            family: "adj_inner_product (+bias)",
+            scalar: "4x unrolled / rolled pair scatter",
+            simd: "scalar body (aux-gathered ids may repeat across lanes)",
+        },
+        DispatchRow {
+            family: "adj_ce_logits",
+            scalar: "softmax recompute + scatter",
+            simd: "scalar body (libm exp calls)",
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips_every_spelling() {
+        for c in [KernelChoice::Auto, KernelChoice::Scalar, KernelChoice::Simd] {
+            assert_eq!(KernelChoice::parse(c.as_str()), Ok(c));
+            assert_eq!(format!("{c}"), c.as_str());
+        }
+        assert!(KernelChoice::parse("avx512").is_err());
+        assert_eq!(format!("{}", KernelBackend::Simd), "simd");
+    }
+
+    #[test]
+    fn resolve_never_yields_an_unexecutable_backend() {
+        assert_eq!(KernelChoice::Scalar.resolve(), KernelBackend::Scalar);
+        if !simd_available() {
+            assert_eq!(KernelChoice::Simd.resolve(), KernelBackend::Scalar);
+            assert_eq!(KernelChoice::Auto.resolve(), KernelBackend::Scalar);
+        } else {
+            assert_eq!(KernelChoice::Simd.resolve(), KernelBackend::Simd);
+        }
+        // default_backend is cached: two calls agree.
+        assert_eq!(default_backend(), default_backend());
+    }
+
+    #[test]
+    fn dispatch_table_covers_the_family() {
+        let table = dispatch_table();
+        assert_eq!(table.len(), 10);
+        for row in table {
+            assert!(!row.family.is_empty() && !row.scalar.is_empty() && !row.simd.is_empty());
+        }
+        // Exactly the two vectorized families claim a vector body.
+        let vectorized = table
+            .iter()
+            .filter(|r| !r.simd.starts_with("scalar body"))
+            .count();
+        assert_eq!(vectorized, 2);
+    }
+}

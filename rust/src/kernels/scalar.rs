@@ -1,0 +1,352 @@
+//! The portable scalar backend — the pre-refactor tape kernels, moved
+//! here verbatim.
+//!
+//! Every body in this file is byte-for-byte the code that used to live
+//! inline in `tape::mod` / `tape::backward`, re-parameterized from
+//! `&self` tape fields to raw `val`/`grad`/`aux` slices. That is the
+//! whole point: the scalar path is bitwise unchanged *by construction*,
+//! and [`super::SimdKernels`] is pinned to it by
+//! `tests/kernel_backends.rs`.
+
+use super::Kernels;
+use crate::scalar::Scalar;
+
+/// Reference backend: 4-accumulator ILP loops, plain scalar ISA.
+pub struct ScalarKernels;
+
+impl Kernels for ScalarKernels {
+    #[inline(always)]
+    fn dot<T: Scalar>(xs: &[T], ws: &[T], init: T) -> T {
+        let s = crate::ops::dot_ilp4(xs, ws, init);
+        debug_assert_eq!(
+            s.to_f64().to_bits(),
+            crate::testkit::dot_ilp4_reference(xs, ws, init).to_f64().to_bits(),
+            "dot_ilp4 drifted from the fixed-association reference fold"
+        );
+        s
+    }
+
+    #[inline(always)]
+    fn gather_dot<T: Scalar>(val: &[T], aux: &[u32], s: usize, n: usize, init: T) -> T {
+        debug_assert!(s + 2 * n <= aux.len());
+        let (mut s0, mut s1, mut s2, mut s3) = (T::ZERO, T::ZERO, T::ZERO, T::ZERO);
+        let mut k = 0usize;
+        while k + 4 <= n {
+            s0 = val[aux[s + k] as usize].mul_add(val[aux[s + n + k] as usize], s0);
+            s1 = val[aux[s + k + 1] as usize].mul_add(val[aux[s + n + k + 1] as usize], s1);
+            s2 = val[aux[s + k + 2] as usize].mul_add(val[aux[s + n + k + 2] as usize], s2);
+            s3 = val[aux[s + k + 3] as usize].mul_add(val[aux[s + n + k + 3] as usize], s3);
+            k += 4;
+        }
+        let mut acc = (s0 + s1) + (s2 + s3) + init;
+        while k < n {
+            acc = val[aux[s + k] as usize].mul_add(val[aux[s + n + k] as usize], acc);
+            k += 1;
+        }
+        acc
+    }
+
+    #[inline(always)]
+    fn ce_logits<T: Scalar>(zs: &[T], target: usize) -> T {
+        // Numerically stable logsumexp.
+        let mut m = zs[0];
+        for &z in &zs[1..] {
+            m = m.max(z);
+        }
+        let mut s = T::ZERO;
+        for &z in zs {
+            s += (z - m).exp();
+        }
+        let lse = m + s.ln();
+        lse - zs[target]
+    }
+
+    #[inline(always)]
+    unsafe fn dot_param_range<T: Scalar>(
+        val: &[T],
+        aux: &[u32],
+        xs_at: usize,
+        n: usize,
+        w0: usize,
+        bias: usize,
+    ) -> T {
+        debug_assert!(xs_at + n <= aux.len());
+        debug_assert!(w0 + n <= val.len());
+        // Four independent accumulators break the FMA latency chain (the
+        // paper's unrolled-inner-product ILP trick, F.2).
+        let xs = aux.as_ptr().add(xs_at);
+        let vals = val.as_ptr();
+        let ws = vals.add(w0);
+        let (mut s0, mut s1, mut s2, mut s3) = (T::ZERO, T::ZERO, T::ZERO, T::ZERO);
+        let mut k = 0usize;
+        while k + 4 <= n {
+            s0 = (*vals.add(*xs.add(k) as usize)).mul_add(*ws.add(k), s0);
+            s1 = (*vals.add(*xs.add(k + 1) as usize)).mul_add(*ws.add(k + 1), s1);
+            s2 = (*vals.add(*xs.add(k + 2) as usize)).mul_add(*ws.add(k + 2), s2);
+            s3 = (*vals.add(*xs.add(k + 3) as usize)).mul_add(*ws.add(k + 3), s3);
+            k += 4;
+        }
+        let mut s = (s0 + s1) + (s2 + s3) + val[bias];
+        while k < n {
+            s = (*vals.add(*xs.add(k) as usize)).mul_add(*ws.add(k), s);
+            k += 1;
+        }
+        s
+    }
+
+    #[inline(always)]
+    unsafe fn dot_strided<T: Scalar>(
+        val: &[T],
+        w0: usize,
+        x0: usize,
+        stride: usize,
+        n: usize,
+    ) -> T {
+        debug_assert!(w0 + n <= val.len());
+        debug_assert!(n == 0 || x0 + (n - 1) * stride < val.len());
+        let mut s = T::ZERO;
+        for k in 0..n {
+            s = val.get_unchecked(w0 + k).mul_add(*val.get_unchecked(x0 + k * stride), s);
+        }
+        s
+    }
+
+    /// Plain unrolling — per-k operation order is preserved, so results
+    /// are bitwise identical to the rolled loop even when the two ranges
+    /// overlap.
+    #[inline(always)]
+    unsafe fn adj_dot_range<T: Scalar>(
+        val: &[T],
+        grad: &mut [T],
+        x0: usize,
+        w0: usize,
+        n: usize,
+        g: T,
+    ) {
+        debug_assert!(x0 + n <= val.len() && w0 + n <= val.len());
+        let mut k = 0usize;
+        while k + 4 <= n {
+            let (xv0, wv0) = (*val.get_unchecked(x0 + k), *val.get_unchecked(w0 + k));
+            *grad.get_unchecked_mut(x0 + k) += g * wv0;
+            *grad.get_unchecked_mut(w0 + k) += g * xv0;
+            let (xv1, wv1) = (*val.get_unchecked(x0 + k + 1), *val.get_unchecked(w0 + k + 1));
+            *grad.get_unchecked_mut(x0 + k + 1) += g * wv1;
+            *grad.get_unchecked_mut(w0 + k + 1) += g * xv1;
+            let (xv2, wv2) = (*val.get_unchecked(x0 + k + 2), *val.get_unchecked(w0 + k + 2));
+            *grad.get_unchecked_mut(x0 + k + 2) += g * wv2;
+            *grad.get_unchecked_mut(w0 + k + 2) += g * xv2;
+            let (xv3, wv3) = (*val.get_unchecked(x0 + k + 3), *val.get_unchecked(w0 + k + 3));
+            *grad.get_unchecked_mut(x0 + k + 3) += g * wv3;
+            *grad.get_unchecked_mut(w0 + k + 3) += g * xv3;
+            k += 4;
+        }
+        while k < n {
+            let (xv, wv) = (*val.get_unchecked(x0 + k), *val.get_unchecked(w0 + k));
+            *grad.get_unchecked_mut(x0 + k) += g * wv;
+            *grad.get_unchecked_mut(w0 + k) += g * xv;
+            k += 1;
+        }
+    }
+
+    /// Plain unrolling — per-k operation order is preserved, so the
+    /// result is bitwise identical to the rolled loop even when gathered
+    /// ids repeat across lanes.
+    #[inline(always)]
+    unsafe fn adj_dot_param_range<T: Scalar>(
+        val: &[T],
+        grad: &mut [T],
+        aux: &[u32],
+        xs_at: usize,
+        n: usize,
+        w0: usize,
+        bias: usize,
+        g: T,
+    ) {
+        debug_assert!(xs_at + n <= aux.len() && w0 + n <= val.len() && bias < val.len());
+        let mut k = 0usize;
+        while k + 4 <= n {
+            let x0i = *aux.get_unchecked(xs_at + k) as usize;
+            let (xv0, wv0) = (*val.get_unchecked(x0i), *val.get_unchecked(w0 + k));
+            *grad.get_unchecked_mut(x0i) += g * wv0;
+            *grad.get_unchecked_mut(w0 + k) += g * xv0;
+            let x1i = *aux.get_unchecked(xs_at + k + 1) as usize;
+            let (xv1, wv1) = (*val.get_unchecked(x1i), *val.get_unchecked(w0 + k + 1));
+            *grad.get_unchecked_mut(x1i) += g * wv1;
+            *grad.get_unchecked_mut(w0 + k + 1) += g * xv1;
+            let x2i = *aux.get_unchecked(xs_at + k + 2) as usize;
+            let (xv2, wv2) = (*val.get_unchecked(x2i), *val.get_unchecked(w0 + k + 2));
+            *grad.get_unchecked_mut(x2i) += g * wv2;
+            *grad.get_unchecked_mut(w0 + k + 2) += g * xv2;
+            let x3i = *aux.get_unchecked(xs_at + k + 3) as usize;
+            let (xv3, wv3) = (*val.get_unchecked(x3i), *val.get_unchecked(w0 + k + 3));
+            *grad.get_unchecked_mut(x3i) += g * wv3;
+            *grad.get_unchecked_mut(w0 + k + 3) += g * xv3;
+            k += 4;
+        }
+        while k < n {
+            let x = *aux.get_unchecked(xs_at + k) as usize;
+            let (xv, wv) = (*val.get_unchecked(x), *val.get_unchecked(w0 + k));
+            *grad.get_unchecked_mut(x) += g * wv;
+            *grad.get_unchecked_mut(w0 + k) += g * xv;
+            k += 1;
+        }
+        *grad.get_unchecked_mut(bias) += g;
+    }
+
+    #[inline(always)]
+    unsafe fn adj_dot_strided<T: Scalar>(
+        val: &[T],
+        grad: &mut [T],
+        x0: usize,
+        w0: usize,
+        n: usize,
+        stride: usize,
+        g: T,
+    ) {
+        debug_assert!(w0 + n <= val.len());
+        debug_assert!(n == 0 || x0 + (n - 1) * stride < val.len());
+        for k in 0..n {
+            let x = x0 + k * stride;
+            let xv = *val.get_unchecked(x);
+            let wv = *val.get_unchecked(w0 + k);
+            *grad.get_unchecked_mut(x) += g * wv;
+            *grad.get_unchecked_mut(w0 + k) += g * xv;
+        }
+    }
+
+    /// Per-k operation order is preserved (plain unrolling, no
+    /// accumulator splitting), so the result is bitwise identical to the
+    /// rolled loop even when ids repeat across lanes.
+    #[inline(always)]
+    unsafe fn adj_inner_product<T: Scalar>(
+        val: &[T],
+        grad: &mut [T],
+        aux: &[u32],
+        s: usize,
+        n: usize,
+        g: T,
+    ) {
+        debug_assert!(s + 2 * n <= aux.len());
+        let mut k = 0usize;
+        while k + 4 <= n {
+            let x0 = *aux.get_unchecked(s + k) as usize;
+            let y0 = *aux.get_unchecked(s + n + k) as usize;
+            let (xv0, yv0) = (*val.get_unchecked(x0), *val.get_unchecked(y0));
+            *grad.get_unchecked_mut(x0) += g * yv0;
+            *grad.get_unchecked_mut(y0) += g * xv0;
+            let x1 = *aux.get_unchecked(s + k + 1) as usize;
+            let y1 = *aux.get_unchecked(s + n + k + 1) as usize;
+            let (xv1, yv1) = (*val.get_unchecked(x1), *val.get_unchecked(y1));
+            *grad.get_unchecked_mut(x1) += g * yv1;
+            *grad.get_unchecked_mut(y1) += g * xv1;
+            let x2 = *aux.get_unchecked(s + k + 2) as usize;
+            let y2 = *aux.get_unchecked(s + n + k + 2) as usize;
+            let (xv2, yv2) = (*val.get_unchecked(x2), *val.get_unchecked(y2));
+            *grad.get_unchecked_mut(x2) += g * yv2;
+            *grad.get_unchecked_mut(y2) += g * xv2;
+            let x3 = *aux.get_unchecked(s + k + 3) as usize;
+            let y3 = *aux.get_unchecked(s + n + k + 3) as usize;
+            let (xv3, yv3) = (*val.get_unchecked(x3), *val.get_unchecked(y3));
+            *grad.get_unchecked_mut(x3) += g * yv3;
+            *grad.get_unchecked_mut(y3) += g * xv3;
+            k += 4;
+        }
+        while k < n {
+            let x = *aux.get_unchecked(s + k) as usize;
+            let y = *aux.get_unchecked(s + n + k) as usize;
+            let (xv, yv) = (*val.get_unchecked(x), *val.get_unchecked(y));
+            *grad.get_unchecked_mut(x) += g * yv;
+            *grad.get_unchecked_mut(y) += g * xv;
+            k += 1;
+        }
+    }
+
+    #[inline(always)]
+    fn adj_inner_product_bias<T: Scalar>(
+        val: &[T],
+        grad: &mut [T],
+        aux: &[u32],
+        s: usize,
+        n: usize,
+        g: T,
+    ) {
+        for k in 0..n {
+            let x = aux[s + k] as usize;
+            let y = aux[s + n + k] as usize;
+            let (xv, yv) = (val[x], val[y]);
+            grad[x] += g * yv;
+            grad[y] += g * xv;
+        }
+        let bias = aux[s + 2 * n] as usize;
+        grad[bias] += g;
+    }
+
+    #[inline(always)]
+    fn adj_ce_logits<T: Scalar>(
+        val: &[T],
+        grad: &mut [T],
+        z0: usize,
+        n: usize,
+        target: usize,
+        g: T,
+    ) {
+        let mut m = val[z0];
+        for k in 1..n {
+            m = m.max(val[z0 + k]);
+        }
+        let mut den = T::ZERO;
+        for k in 0..n {
+            den += (val[z0 + k] - m).exp();
+        }
+        for k in 0..n {
+            let p = (val[z0 + k] - m).exp() / den;
+            grad[z0 + k] += g * p;
+        }
+        grad[z0 + target] -= g;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::dot_ilp4_reference;
+
+    #[test]
+    fn dot_matches_reference_fold_across_unroll_and_vector_boundaries() {
+        // Sizes 0..=19 cross the 4-wide unroll boundary and every
+        // remainder phase; values are scale-mixed so the association is
+        // observable.
+        for n in 0..=19usize {
+            let xs: Vec<f64> = (0..n).map(|i| (i as f64 - 7.5) * 1.25e3).collect();
+            let ws: Vec<f64> = (0..n).map(|i| 1.0 / (1.0 + i as f64)).collect();
+            let got = ScalarKernels::dot(&xs, &ws, 0.125);
+            let want = dot_ilp4_reference(&xs, &ws, 0.125);
+            assert_eq!(got.to_bits(), want.to_bits(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn dot_matches_reference_fold_under_catastrophic_cancellation() {
+        // The association-sensitive case from ops::dot_ilp4's unit tests:
+        // a naive serial left fold gives a different answer here.
+        let xs = [1.0e16f64, 1.0, -1.0e16, 3.0];
+        let ws = [1.0f64; 4];
+        let got = ScalarKernels::dot(&xs, &ws, 0.5);
+        assert_eq!(got.to_bits(), dot_ilp4_reference(&xs, &ws, 0.5).to_bits());
+        // Pin the hand expansion too, as ops::dot_ilp4's own tests do.
+        let expect = (xs[0].mul_add(1.0, 0.0) + xs[1].mul_add(1.0, 0.0))
+            + (xs[2].mul_add(1.0, 0.0) + xs[3].mul_add(1.0, 0.0))
+            + 0.5;
+        assert_eq!(got.to_bits(), expect.to_bits());
+    }
+
+    #[test]
+    fn gather_dot_equals_dot_on_identity_gather() {
+        let n = 11usize;
+        let val: Vec<f64> = (0..2 * n).map(|i| 0.3 + i as f64 * 0.7).collect();
+        let aux: Vec<u32> = (0..2 * n as u32).collect();
+        let got = ScalarKernels::gather_dot(&val, &aux, 0, n, 0.25);
+        let want = ScalarKernels::dot(&val[..n], &val[n..], 0.25);
+        assert_eq!(got.to_bits(), want.to_bits());
+    }
+}

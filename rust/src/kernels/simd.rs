@@ -1,0 +1,416 @@
+//! The AVX2+FMA vector backend, bitwise-pinned to [`ScalarKernels`].
+//!
+//! Only two kernel families carry vector bodies, because only they admit
+//! a vector formulation that reproduces the scalar operation order
+//! *exactly* (see [`super::dispatch_table`] for the full resolution):
+//!
+//! - **`dot`** — [`crate::ops::dot_ilp4`] already computes four
+//!   independent accumulators `s0..s3` over interleaved lanes
+//!   (`s_j = Σ_k fma(xs[4k+j], ws[4k+j])`). One 4-wide `vfmadd231pd`
+//!   accumulator computes *the same four sums* in lanes 0..3 — each lane
+//!   sees the same operands, in the same order, with the same single
+//!   rounding per step. Reducing the lanes horizontally in the fixed
+//!   `(l0 + l1) + (l2 + l3) + init` order and folding the ≤3-element
+//!   remainder serially reproduces the scalar result bit for bit.
+//! - **`adj_dot_range`** — the scalar scatter does `grad[i] += g * v`
+//!   as a *separate* multiply and add (two roundings), so the vector body
+//!   uses `vmulpd` + `vaddpd`, **not** a fused multiply-add (one
+//!   rounding, which would differ in the last bit). Within a 4-block each
+//!   `grad` slot is touched exactly once, so the update order only
+//!   matters when the x- and w-ranges alias — the vector path therefore
+//!   runs only when the ranges are disjoint, falling back to the scalar
+//!   body on overlap.
+//!
+//! Everything else (gathered ids, strided scatters, the serial
+//! `dotStrided` fold, the transcendental CE kernels) delegates straight
+//! to [`ScalarKernels`] — identical code, identical bits, by definition.
+//!
+//! Dispatch is compiled per scalar type via `T::BYTES` (8 = f64 → 256-bit
+//! lanes, 4 = f32 → 128-bit lanes, keeping the 4-lane shape that mirrors
+//! the 4-accumulator scalar unroll) and guarded at runtime: every vector
+//! body re-checks [`super::simd_available`] before executing, so calling
+//! [`SimdKernels`] on a CPU without AVX2+FMA is safe and exactly equals
+//! the scalar backend.
+
+use super::{Kernels, ScalarKernels};
+use crate::scalar::Scalar;
+
+/// AVX2+FMA backend. Stateless; safe to use on any CPU (vector bodies
+/// self-check feature support and fall back to [`ScalarKernels`]).
+pub struct SimdKernels;
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    //! The `#[target_feature]` vector bodies. Raw-pointer signatures keep
+    //! the generic dispatch above free of slice re-borrowing; callers
+    //! uphold the bounds the trait documents.
+    use std::arch::x86_64::*;
+
+    /// ⟨xs, ws⟩ + init in the exact `dot_ilp4` association: one 4-lane
+    /// FMA accumulator (lane j = scalar accumulator `s_j`), fixed-order
+    /// horizontal reduce, serial remainder.
+    ///
+    /// # Safety
+    /// `xs` and `ws` must be valid for `n` reads; the CPU must support
+    /// AVX2+FMA.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn dot_f64(xs: *const f64, ws: *const f64, n: usize, init: f64) -> f64 {
+        let mut acc = _mm256_setzero_pd();
+        let mut k = 0usize;
+        while k + 4 <= n {
+            let x = _mm256_loadu_pd(xs.add(k));
+            let w = _mm256_loadu_pd(ws.add(k));
+            acc = _mm256_fmadd_pd(x, w, acc);
+            k += 4;
+        }
+        let mut lanes = [0.0f64; 4];
+        _mm256_storeu_pd(lanes.as_mut_ptr(), acc);
+        let mut s = (lanes[0] + lanes[1]) + (lanes[2] + lanes[3]) + init;
+        while k < n {
+            s = (*xs.add(k)).mul_add(*ws.add(k), s);
+            k += 1;
+        }
+        s
+    }
+
+    /// f32 twin of [`dot_f64`]: 128-bit lanes keep the same 4-lane shape,
+    /// so lane j is still scalar accumulator `s_j`.
+    ///
+    /// # Safety
+    /// As [`dot_f64`].
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn dot_f32(xs: *const f32, ws: *const f32, n: usize, init: f32) -> f32 {
+        let mut acc = _mm_setzero_ps();
+        let mut k = 0usize;
+        while k + 4 <= n {
+            let x = _mm_loadu_ps(xs.add(k));
+            let w = _mm_loadu_ps(ws.add(k));
+            acc = _mm_fmadd_ps(x, w, acc);
+            k += 4;
+        }
+        let mut lanes = [0.0f32; 4];
+        _mm_storeu_ps(lanes.as_mut_ptr(), acc);
+        let mut s = (lanes[0] + lanes[1]) + (lanes[2] + lanes[3]) + init;
+        while k < n {
+            s = (*xs.add(k)).mul_add(*ws.add(k), s);
+            k += 1;
+        }
+        s
+    }
+
+    /// Two-sided dot-range scatter for *disjoint* ranges. Separate
+    /// multiply and add (`vmulpd` + `vaddpd`) match the scalar path's
+    /// `g * v` then `+=` — two roundings, never an FMA.
+    ///
+    /// # Safety
+    /// `val`/`grad` valid for `max(x0, w0) + n` accesses, the two ranges
+    /// disjoint, AVX2+FMA supported.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn adj_dot_range_f64(
+        val: *const f64,
+        grad: *mut f64,
+        x0: usize,
+        w0: usize,
+        n: usize,
+        g: f64,
+    ) {
+        let gv = _mm256_set1_pd(g);
+        let mut k = 0usize;
+        while k + 4 <= n {
+            let xv = _mm256_loadu_pd(val.add(x0 + k));
+            let wv = _mm256_loadu_pd(val.add(w0 + k));
+            let gx = _mm256_loadu_pd(grad.add(x0 + k));
+            let gw = _mm256_loadu_pd(grad.add(w0 + k));
+            _mm256_storeu_pd(grad.add(x0 + k), _mm256_add_pd(gx, _mm256_mul_pd(gv, wv)));
+            _mm256_storeu_pd(grad.add(w0 + k), _mm256_add_pd(gw, _mm256_mul_pd(gv, xv)));
+            k += 4;
+        }
+        while k < n {
+            let (xv, wv) = (*val.add(x0 + k), *val.add(w0 + k));
+            *grad.add(x0 + k) += g * wv;
+            *grad.add(w0 + k) += g * xv;
+            k += 1;
+        }
+    }
+
+    /// f32 twin of [`adj_dot_range_f64`].
+    ///
+    /// # Safety
+    /// As [`adj_dot_range_f64`].
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn adj_dot_range_f32(
+        val: *const f32,
+        grad: *mut f32,
+        x0: usize,
+        w0: usize,
+        n: usize,
+        g: f32,
+    ) {
+        let gv = _mm_set1_ps(g);
+        let mut k = 0usize;
+        while k + 4 <= n {
+            let xv = _mm_loadu_ps(val.add(x0 + k));
+            let wv = _mm_loadu_ps(val.add(w0 + k));
+            let gx = _mm_loadu_ps(grad.add(x0 + k));
+            let gw = _mm_loadu_ps(grad.add(w0 + k));
+            _mm_storeu_ps(grad.add(x0 + k), _mm_add_ps(gx, _mm_mul_ps(gv, wv)));
+            _mm_storeu_ps(grad.add(w0 + k), _mm_add_ps(gw, _mm_mul_ps(gv, xv)));
+            k += 4;
+        }
+        while k < n {
+            let (xv, wv) = (*val.add(x0 + k), *val.add(w0 + k));
+            *grad.add(x0 + k) += g * wv;
+            *grad.add(w0 + k) += g * xv;
+            k += 1;
+        }
+    }
+}
+
+impl Kernels for SimdKernels {
+    #[inline(always)]
+    fn dot<T: Scalar>(xs: &[T], ws: &[T], init: T) -> T {
+        debug_assert_eq!(xs.len(), ws.len());
+        #[cfg(target_arch = "x86_64")]
+        if super::simd_available() {
+            // SAFETY: `T::BYTES` discriminates the two concrete scalar
+            // types, so the pointer casts are exact reinterpretations;
+            // lengths were just asserted equal; feature support was
+            // checked. The f32 init round-trips f32→f64→f32 losslessly.
+            unsafe {
+                if T::BYTES == 8 {
+                    let s = x86::dot_f64(
+                        xs.as_ptr() as *const f64,
+                        ws.as_ptr() as *const f64,
+                        xs.len(),
+                        init.to_f64(),
+                    );
+                    let s = T::from_f64(s);
+                    debug_assert_eq!(
+                        s.to_f64().to_bits(),
+                        crate::testkit::dot_ilp4_reference(xs, ws, init).to_f64().to_bits(),
+                        "vector dot (f64) diverged from the reference fold"
+                    );
+                    return s;
+                }
+                if T::BYTES == 4 {
+                    let s = x86::dot_f32(
+                        xs.as_ptr() as *const f32,
+                        ws.as_ptr() as *const f32,
+                        xs.len(),
+                        init.to_f64() as f32,
+                    );
+                    let s = T::from_f64(s as f64);
+                    debug_assert_eq!(
+                        s.to_f64().to_bits(),
+                        crate::testkit::dot_ilp4_reference(xs, ws, init).to_f64().to_bits(),
+                        "vector dot (f32) diverged from the reference fold"
+                    );
+                    return s;
+                }
+            }
+        }
+        ScalarKernels::dot(xs, ws, init)
+    }
+
+    #[inline(always)]
+    fn gather_dot<T: Scalar>(val: &[T], aux: &[u32], s: usize, n: usize, init: T) -> T {
+        ScalarKernels::gather_dot(val, aux, s, n, init)
+    }
+
+    #[inline(always)]
+    fn ce_logits<T: Scalar>(zs: &[T], target: usize) -> T {
+        ScalarKernels::ce_logits(zs, target)
+    }
+
+    #[inline(always)]
+    unsafe fn dot_param_range<T: Scalar>(
+        val: &[T],
+        aux: &[u32],
+        xs_at: usize,
+        n: usize,
+        w0: usize,
+        bias: usize,
+    ) -> T {
+        ScalarKernels::dot_param_range(val, aux, xs_at, n, w0, bias)
+    }
+
+    #[inline(always)]
+    unsafe fn dot_strided<T: Scalar>(
+        val: &[T],
+        w0: usize,
+        x0: usize,
+        stride: usize,
+        n: usize,
+    ) -> T {
+        ScalarKernels::dot_strided(val, w0, x0, stride, n)
+    }
+
+    #[inline(always)]
+    unsafe fn adj_dot_range<T: Scalar>(
+        val: &[T],
+        grad: &mut [T],
+        x0: usize,
+        w0: usize,
+        n: usize,
+        g: T,
+    ) {
+        debug_assert!(x0 + n <= val.len() && w0 + n <= val.len());
+        #[cfg(target_arch = "x86_64")]
+        {
+            // Vector path only when the two scatter ranges cannot alias:
+            // with disjoint ranges every grad slot is touched exactly
+            // once, so the vector store order is unobservable.
+            let disjoint = x0 + n <= w0 || w0 + n <= x0;
+            if disjoint && super::simd_available() {
+                if T::BYTES == 8 {
+                    x86::adj_dot_range_f64(
+                        val.as_ptr() as *const f64,
+                        grad.as_mut_ptr() as *mut f64,
+                        x0,
+                        w0,
+                        n,
+                        g.to_f64(),
+                    );
+                    return;
+                }
+                if T::BYTES == 4 {
+                    x86::adj_dot_range_f32(
+                        val.as_ptr() as *const f32,
+                        grad.as_mut_ptr() as *mut f32,
+                        x0,
+                        w0,
+                        n,
+                        g.to_f64() as f32,
+                    );
+                    return;
+                }
+            }
+        }
+        ScalarKernels::adj_dot_range(val, grad, x0, w0, n, g)
+    }
+
+    #[inline(always)]
+    unsafe fn adj_dot_param_range<T: Scalar>(
+        val: &[T],
+        grad: &mut [T],
+        aux: &[u32],
+        xs_at: usize,
+        n: usize,
+        w0: usize,
+        bias: usize,
+        g: T,
+    ) {
+        ScalarKernels::adj_dot_param_range(val, grad, aux, xs_at, n, w0, bias, g)
+    }
+
+    #[inline(always)]
+    unsafe fn adj_dot_strided<T: Scalar>(
+        val: &[T],
+        grad: &mut [T],
+        x0: usize,
+        w0: usize,
+        n: usize,
+        stride: usize,
+        g: T,
+    ) {
+        ScalarKernels::adj_dot_strided(val, grad, x0, w0, n, stride, g)
+    }
+
+    #[inline(always)]
+    unsafe fn adj_inner_product<T: Scalar>(
+        val: &[T],
+        grad: &mut [T],
+        aux: &[u32],
+        s: usize,
+        n: usize,
+        g: T,
+    ) {
+        ScalarKernels::adj_inner_product(val, grad, aux, s, n, g)
+    }
+
+    #[inline(always)]
+    fn adj_inner_product_bias<T: Scalar>(
+        val: &[T],
+        grad: &mut [T],
+        aux: &[u32],
+        s: usize,
+        n: usize,
+        g: T,
+    ) {
+        ScalarKernels::adj_inner_product_bias(val, grad, aux, s, n, g)
+    }
+
+    #[inline(always)]
+    fn adj_ce_logits<T: Scalar>(
+        val: &[T],
+        grad: &mut [T],
+        z0: usize,
+        n: usize,
+        target: usize,
+        g: T,
+    ) {
+        ScalarKernels::adj_ce_logits(val, grad, z0, n, target, g)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::dot_ilp4_reference;
+
+    #[test]
+    fn dot_matches_reference_fold_across_unroll_and_vector_boundaries() {
+        // Same boundary sweep as the scalar backend's test: sizes 0..=19
+        // cross the 4-lane vector width and every remainder phase. This
+        // runs the vector body when the host has AVX2+FMA and the scalar
+        // fallback otherwise — bit-equal either way.
+        for n in 0..=19usize {
+            let xs: Vec<f64> = (0..n).map(|i| (i as f64 - 7.5) * 1.25e3).collect();
+            let ws: Vec<f64> = (0..n).map(|i| 1.0 / (1.0 + i as f64)).collect();
+            let got = SimdKernels::dot(&xs, &ws, 0.125);
+            assert_eq!(got.to_bits(), dot_ilp4_reference(&xs, &ws, 0.125).to_bits(), "n={n}");
+
+            let xf: Vec<f32> = xs.iter().map(|&x| x as f32).collect();
+            let wf: Vec<f32> = ws.iter().map(|&w| w as f32).collect();
+            let got32 = SimdKernels::dot(&xf, &wf, 0.125f32);
+            assert_eq!(
+                got32.to_bits(),
+                dot_ilp4_reference(&xf, &wf, 0.125f32).to_bits(),
+                "n={n} (f32)"
+            );
+        }
+    }
+
+    #[test]
+    fn dot_matches_reference_fold_under_catastrophic_cancellation() {
+        let xs = [1.0e16f64, 1.0, -1.0e16, 3.0];
+        let ws = [1.0f64; 4];
+        let got = SimdKernels::dot(&xs, &ws, 0.5);
+        assert_eq!(got.to_bits(), dot_ilp4_reference(&xs, &ws, 0.5).to_bits());
+        assert_eq!(
+            got.to_bits(),
+            ScalarKernels::dot(&xs, &ws, 0.5).to_bits(),
+            "backends disagree on the association-sensitive case"
+        );
+    }
+
+    #[test]
+    fn adj_dot_range_matches_scalar_bitwise_even_on_overlap() {
+        // Disjoint ranges take the vector path (where available); the
+        // deliberately overlapping pair must fall back and still agree.
+        for &(x0, w0, n) in &[(0usize, 16usize, 13usize), (0, 8, 16), (3, 5, 9)] {
+            let len = 40;
+            let val: Vec<f64> = (0..len).map(|i| 0.1 + i as f64 * 0.37).collect();
+            let mut g_simd = vec![0.5f64; len];
+            let mut g_scalar = vec![0.5f64; len];
+            // SAFETY: x0 + n and w0 + n are within `len` for every tuple.
+            unsafe {
+                SimdKernels::adj_dot_range(&val, &mut g_simd, x0, w0, n, 1.75);
+                ScalarKernels::adj_dot_range(&val, &mut g_scalar, x0, w0, n, 1.75);
+            }
+            let a: Vec<u64> = g_simd.iter().map(|v| v.to_bits()).collect();
+            let b: Vec<u64> = g_scalar.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(a, b, "x0={x0} w0={w0} n={n}");
+        }
+    }
+}

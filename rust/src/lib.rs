@@ -156,6 +156,27 @@
 //! state per *lane*, not per thread, so they are equally deterministic
 //! for a fixed seed. See [`parallel`] for the full contract.
 //!
+//! ## Kernel backends
+//!
+//! The fused hot-path kernels — the forward dot/gather/cross-entropy
+//! family and their adjoints — dispatch through the pluggable
+//! [`kernels::Kernels`] trait. [`kernels::ScalarKernels`] is the
+//! portable reference (the historical inline code, moved verbatim);
+//! [`kernels::SimdKernels`] is an `x86_64` AVX2+FMA implementation
+//! whose vector bodies reproduce the scalar kernels' exact operation
+//! order, so on any one build `--kernel simd` is **bitwise identical**
+//! to `--kernel scalar` — values, gradients, loss curves, and served
+//! tokens. The backend is selected per tape
+//! ([`tape::Tape::set_kernel`]) from a [`kernels::KernelChoice`] (CLI
+//! `--kernel scalar|simd|auto`, `BURTORCH_KERNEL` env); `auto` picks the
+//! vector path iff the CPU reports AVX2+FMA
+//! ([`kernels::simd_available`]). The guarantee is bitwise-*per-build*,
+//! not bitwise-per-ISA — see the [`kernels`] module docs for what is and
+//! is not promised, and `tests/kernel_backends.rs` for the
+//! kernel-by-kernel and end-to-end equivalence proofs. The
+//! `burtorch kernels` CLI subcommand prints the detected features and
+//! the per-family dispatch resolution ([`kernels::dispatch_table`]).
+//!
 //! ## Example
 //!
 //! ```
@@ -185,6 +206,8 @@
 //!   sample executor ([`tape::SampleExecutor`]).
 //! - [`scalar`] — the FP32/FP64 scalar abstraction (paper Appendix F.3).
 //! - [`ops`] — op-level forward/backward semantics (paper Tables 8–10).
+//! - [`kernels`] — the pluggable fused-kernel backends (portable scalar
+//!   and bitwise-pinned AVX2/FMA), selected per tape via `--kernel`.
 //! - [`nn`] — Neuron/Linear/MLP/Embedding/LayerNorm/Attention/GPT built on
 //!   scalar nodes (paper §2.4, §2.5, Appendix F.1).
 //! - [`parallel`] — the data-parallel minibatch gradient engine: a
@@ -221,6 +244,7 @@ pub mod coordinator;
 pub mod data;
 pub mod fdiff;
 pub mod forward;
+pub mod kernels;
 pub mod metrics;
 pub mod nn;
 pub mod ops;
@@ -236,5 +260,6 @@ pub mod tape;
 pub mod testkit;
 pub mod viz;
 
+pub use kernels::{KernelBackend, KernelChoice};
 pub use scalar::Scalar;
 pub use tape::{Builder, Mark, ProgramCache, Recording, StepProgram, Tape, Value};

@@ -8,6 +8,7 @@
 //!   sample     — generate text from a trained GPT (checkpoint or fresh)
 //!   serve      — batched multi-session inference from a checkpoint
 //!   artifacts  — load every AOT artifact through PJRT and smoke-run it
+//!   kernels    — CPU features + kernel-backend dispatch table
 //!   info       — engine/build information
 
 use std::path::Path;
@@ -18,6 +19,7 @@ use burtorch::coordinator::{
     run_federated, Config, ExecMode, FedConfig, ModelKind, Trainer, TrainerOptions,
 };
 use burtorch::data::{names_dataset, CharCorpus};
+use burtorch::kernels::{default_backend, dispatch_table, simd_available, KernelChoice};
 use burtorch::metrics::{MemInfo, Timer};
 use burtorch::nn::{CeMode, CharMlp, CharMlpConfig, Gpt, GptConfig};
 use burtorch::parallel::ReductionCompression;
@@ -38,6 +40,7 @@ fn main() {
         "serve" => cmd_serve(&cli),
         "params" => cmd_params(&cli),
         "artifacts" => cmd_artifacts(&cli),
+        "kernels" => cmd_kernels(),
         "info" => cmd_info(),
         "" | "help" | "-h" | "--help" => {
             println!("{}", usage());
@@ -65,6 +68,7 @@ fn usage() -> &'static str {
                  [--exec eager|replay] [--scratch] [--composed-ce]\n\
                  [--pin-cores] [--params w.bin]\n\
                  [--checkpoint-every N] [--resume]\n\
+                 [--kernel scalar|simd|auto]\n\
                  (--threads 0 = all cores; any W gives bitwise-identical\n\
                   runs with --compress none; compressed runs are\n\
                   deterministic per seed and thread-invariant too;\n\
@@ -78,7 +82,9 @@ fn usage() -> &'static str {
                   state to --params / --params.state every N steps,\n\
                   atomically and CRC-protected; --resume restarts from\n\
                   that snapshot and finishes bitwise identical to the\n\
-                  uninterrupted run)\n\
+                  uninterrupted run; --kernel picks the fused-kernel\n\
+                  backend — every choice trains bitwise identically on\n\
+                  a given build, see `burtorch kernels`)\n\
        fed       --clients N --rounds R --compressor identity|randk|topk\n\
                  [--exec eager|replay]\n\
                  (--exec replay drives each client's local oracles through\n\
@@ -90,7 +96,7 @@ fn usage() -> &'static str {
        serve     --requests FILE [--params w.bin] [--lanes L]\n\
                  [--cache-cap N] [--max-active M] [--seed S]\n\
                  [--max-queue Q] [--deadline-ms D] [--max-tokens T]\n\
-                 [--decode full|incremental]\n\
+                 [--decode full|incremental] [--kernel scalar|simd|auto]\n\
                  (batched multi-session inference; requests come one per\n\
                   line as 'seed|max_new_tokens|temperature|prompt', read\n\
                   from FILE or stdin; --lanes fans sessions across worker\n\
@@ -109,6 +115,8 @@ fn usage() -> &'static str {
                   the batch serves on, bit-identical)\n\
        params    inspect <file>   (print checkpoint header + checksum)\n\
        artifacts [--dir artifacts]      (PJRT smoke-run of AOT graphs)\n\
+       kernels   (CPU features, auto-resolved backend, per-family\n\
+                  kernel dispatch table)\n\
        info"
 }
 
@@ -168,6 +176,11 @@ fn trainer_options(cli: &Cli, cfg: &Config) -> TrainerOptions {
         eprintln!("error: --checkpoint-every/--resume need --params to name the checkpoint file");
         std::process::exit(2);
     }
+    // `--kernel` (CLI) / `train.kernel` (config): the fused-kernel
+    // backend. Every choice is bitwise identical on a given build, so a
+    // forced `simd` on a CPU without AVX2+FMA is a hard error rather
+    // than a silent scalar fallback.
+    let kernel = parse_kernel_choice(&cli.opt_or("kernel", &cfg.str_or("train.kernel", "auto")));
     TrainerOptions {
         steps: cli.int_or("steps", cfg.int_or("train.steps", 200)) as usize,
         batch: cli.int_or("batch", cfg.int_or("train.batch", 1)) as usize,
@@ -192,7 +205,26 @@ fn trainer_options(cli: &Cli, cfg: &Config) -> TrainerOptions {
         checkpoint_every,
         checkpoint,
         resume,
+        kernel,
     }
+}
+
+/// Parse a `--kernel` spelling, exiting with code 2 on an unknown value
+/// or when `simd` is forced on a CPU that cannot run it (an explicit
+/// request must not silently degrade — use `auto` for best-available).
+fn parse_kernel_choice(spec: &str) -> KernelChoice {
+    let choice = match KernelChoice::parse(spec) {
+        Ok(k) => k,
+        Err(e) => {
+            eprintln!("error: --kernel: {e}");
+            std::process::exit(2);
+        }
+    };
+    if choice == KernelChoice::Simd && !simd_available() {
+        eprintln!("error: --kernel simd requested but this CPU lacks AVX2+FMA (use --kernel auto)");
+        std::process::exit(2);
+    }
+    choice
 }
 
 fn load_config(cli: &Cli) -> Config {
@@ -426,6 +458,7 @@ fn cmd_serve(cli: &Cli) -> i32 {
     let max_queue = cli.usize_or("max-queue", 0);
     let max_tokens = cli.usize_or("max-tokens", 0);
     let deadline_ms = cli.opt("deadline-ms").map(|_| cli.int_or("deadline-ms", 0) as u64);
+    let kernel = parse_kernel_choice(cli.opt("kernel").unwrap_or("auto"));
     // Only the tokenizer is needed from the corpus; the char set (and
     // therefore every token id) is independent of the tiling length, so
     // a small corpus builds the same vocabulary training used.
@@ -478,11 +511,12 @@ fn cmd_serve(cli: &Cli) -> i32 {
         ),
     }
     println!(
-        "serving {n_requests} request(s): lanes={lanes} cache-cap={} max-active={} max-queue={} decode={}",
+        "serving {n_requests} request(s): lanes={lanes} cache-cap={} max-active={} max-queue={} decode={} kernel={}",
         if cache_cap == 0 { "unbounded".to_string() } else { cache_cap.to_string() },
         if max_active == 0 { "unlimited".to_string() } else { max_active.to_string() },
         if max_queue == 0 { "unbounded".to_string() } else { max_queue.to_string() },
         if decode == DecodeMode::Incremental { "incremental" } else { "full" },
+        kernel.resolve(),
     );
     let mut engine = ServeEngine::new(
         tape,
@@ -495,6 +529,7 @@ fn cmd_serve(cli: &Cli) -> i32 {
             deadline_ms,
             max_tokens,
             decode,
+            kernel,
         },
     );
     // Echo each prompt→completion pair; decode through the same tokenizer.
@@ -648,6 +683,37 @@ fn cmd_artifacts(cli: &Cli) -> i32 {
         }
     }
     println!("{count} artifacts compiled OK");
+    0
+}
+
+/// `burtorch kernels`: the kernel-backend diagnostic — CPU feature
+/// detection, what `auto` resolves to on this machine (including any
+/// `BURTORCH_KERNEL` override), and the per-family dispatch table.
+fn cmd_kernels() -> i32 {
+    println!("kernel backends — fused dot / inner-product / cross-entropy families");
+    #[cfg(target_arch = "x86_64")]
+    println!(
+        "cpu: x86_64 | avx2: {} | fma: {}",
+        std::is_x86_feature_detected!("avx2"),
+        std::is_x86_feature_detected!("fma"),
+    );
+    #[cfg(not(target_arch = "x86_64"))]
+    println!("cpu: non-x86_64 (the SIMD backend targets AVX2+FMA only)");
+    println!("simd backend available: {}", simd_available());
+    match std::env::var("BURTORCH_KERNEL") {
+        Ok(v) => println!("auto resolves to: {} (BURTORCH_KERNEL={v})", default_backend()),
+        Err(_) => println!("auto resolves to: {}", default_backend()),
+    }
+    println!();
+    println!("{:<44} {:<40} simd", "family", "scalar");
+    for row in dispatch_table() {
+        println!("{:<44} {:<40} {}", row.family, row.scalar, row.simd);
+    }
+    println!();
+    println!(
+        "both backends are bitwise identical on a given build; select with\n\
+         --kernel scalar|simd|auto (train, serve) or BURTORCH_KERNEL"
+    );
     0
 }
 

@@ -85,6 +85,7 @@
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::time::Instant;
 
+use crate::kernels::KernelChoice;
 use crate::nn::{DecodeState, Gpt, KvCache};
 use crate::parallel::{PtrSend, WorkerPool};
 use crate::scalar::Scalar;
@@ -141,6 +142,10 @@ pub struct ServeOptions {
     /// Per-token decode engine. [`DecodeMode::Incremental`] serves the
     /// same tokens at O(window) instead of O(window²) per token.
     pub decode: DecodeMode,
+    /// Kernel backend for the fused forward kernels
+    /// ([`KernelChoice::Auto`] by default). Every choice serves bitwise
+    /// identical tokens on a given build; see `crate::kernels`.
+    pub kernel: KernelChoice,
 }
 
 impl Default for ServeOptions {
@@ -153,6 +158,7 @@ impl Default for ServeOptions {
             deadline_ms: None,
             max_tokens: 0,
             decode: DecodeMode::Full,
+            kernel: KernelChoice::Auto,
         }
     }
 }
@@ -315,6 +321,9 @@ impl<T: Scalar> ServeEngine<T> {
         let n_lanes = opts.lanes.max(1);
         let vocab = model.cfg.vocab;
         tape.rewind(model.base);
+        // Resolve the kernel backend before replicating: `clone_prefix`
+        // inherits it, so every lane decodes with the same kernels.
+        tape.set_kernel(opts.kernel);
         let mut lanes = Vec::with_capacity(n_lanes);
         for _ in 1..n_lanes {
             lanes.push(ServeLane::new(tape.clone_prefix(model.base), opts.cache_cap, vocab));

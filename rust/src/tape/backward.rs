@@ -16,6 +16,7 @@
 //!   read — this is what makes gradients-at-coordinate-subset cheap (§4).
 
 use super::{Tape, Value};
+use crate::kernels::{KernelBackend, Kernels, ScalarKernels, SimdKernels};
 use crate::ops::Op;
 use crate::scalar::Scalar;
 
@@ -131,7 +132,10 @@ impl<T: Scalar> Tape<T> {
     // [`crate::tape::StepProgram`] executor. Because both paths call the
     // *same* function with the same resolved operands, compiled-backward
     // gradients are bitwise identical to the interpreter by construction —
-    // there is exactly one place each adjoint formula lives.
+    // there is exactly one place each adjoint formula lives. The fused
+    // dot/inner-product/cross-entropy families additionally dispatch on
+    // the tape's [`crate::kernels::Kernels`] backend; each backend is
+    // bitwise self-consistent across both executors.
 
     /// Adjoint of `relu`: pass `g` through where the input was positive.
     #[inline(always)]
@@ -398,92 +402,84 @@ impl<T: Scalar> Tape<T> {
         }
     }
 
-    /// Adjoint of `innerProduct`: 4× unrolled gather-scatter over the aux
-    /// pairs at `[s, s+2n)`. Per-k operation order is preserved (plain
-    /// unrolling, no accumulator splitting), so the result is bitwise
-    /// identical to the rolled loop even when ids repeat across lanes.
+    /// Adjoint of `innerProduct`: gather-scatter over the aux pairs at
+    /// `[s, s+2n)`, dispatched to the tape's [`crate::kernels::Kernels`]
+    /// backend (both keep the rolled loop's per-k operation order, so the
+    /// result is bitwise stable even when ids repeat across lanes).
     #[inline(always)]
     pub(crate) fn adj_inner_product(&mut self, s: usize, n: usize, g: T) {
         // SAFETY: the aux run and every id in it obey the tape invariant.
         unsafe {
-            let mut k = 0usize;
-            while k + 4 <= n {
-                let x0 = *self.aux.get_unchecked(s + k) as usize;
-                let y0 = *self.aux.get_unchecked(s + n + k) as usize;
-                let (xv0, yv0) = (*self.val.get_unchecked(x0), *self.val.get_unchecked(y0));
-                *self.grad.get_unchecked_mut(x0) += g * yv0;
-                *self.grad.get_unchecked_mut(y0) += g * xv0;
-                let x1 = *self.aux.get_unchecked(s + k + 1) as usize;
-                let y1 = *self.aux.get_unchecked(s + n + k + 1) as usize;
-                let (xv1, yv1) = (*self.val.get_unchecked(x1), *self.val.get_unchecked(y1));
-                *self.grad.get_unchecked_mut(x1) += g * yv1;
-                *self.grad.get_unchecked_mut(y1) += g * xv1;
-                let x2 = *self.aux.get_unchecked(s + k + 2) as usize;
-                let y2 = *self.aux.get_unchecked(s + n + k + 2) as usize;
-                let (xv2, yv2) = (*self.val.get_unchecked(x2), *self.val.get_unchecked(y2));
-                *self.grad.get_unchecked_mut(x2) += g * yv2;
-                *self.grad.get_unchecked_mut(y2) += g * xv2;
-                let x3 = *self.aux.get_unchecked(s + k + 3) as usize;
-                let y3 = *self.aux.get_unchecked(s + n + k + 3) as usize;
-                let (xv3, yv3) = (*self.val.get_unchecked(x3), *self.val.get_unchecked(y3));
-                *self.grad.get_unchecked_mut(x3) += g * yv3;
-                *self.grad.get_unchecked_mut(y3) += g * xv3;
-                k += 4;
-            }
-            while k < n {
-                let x = *self.aux.get_unchecked(s + k) as usize;
-                let y = *self.aux.get_unchecked(s + n + k) as usize;
-                let (xv, yv) = (*self.val.get_unchecked(x), *self.val.get_unchecked(y));
-                *self.grad.get_unchecked_mut(x) += g * yv;
-                *self.grad.get_unchecked_mut(y) += g * xv;
-                k += 1;
+            match self.kernel {
+                KernelBackend::Scalar => {
+                    ScalarKernels::adj_inner_product(&self.val, &mut self.grad, &self.aux, s, n, g)
+                }
+                KernelBackend::Simd => {
+                    SimdKernels::adj_inner_product(&self.val, &mut self.grad, &self.aux, s, n, g)
+                }
             }
         }
     }
 
-    /// Adjoint of `innerProductWithBias`: rolled pair scatter + bias.
+    /// Adjoint of `innerProductWithBias`: rolled pair scatter + bias,
+    /// dispatched to the tape's kernel backend.
     #[inline(always)]
     pub(crate) fn adj_inner_product_bias(&mut self, s: usize, n: usize, g: T) {
-        for k in 0..n {
-            let x = self.aux[s + k] as usize;
-            let y = self.aux[s + n + k] as usize;
-            let (xv, yv) = (self.val[x], self.val[y]);
-            self.grad[x] += g * yv;
-            self.grad[y] += g * xv;
+        match self.kernel {
+            KernelBackend::Scalar => {
+                ScalarKernels::adj_inner_product_bias(&self.val, &mut self.grad, &self.aux, s, n, g)
+            }
+            KernelBackend::Simd => {
+                SimdKernels::adj_inner_product_bias(&self.val, &mut self.grad, &self.aux, s, n, g)
+            }
         }
-        let bias = self.aux[s + 2 * n] as usize;
-        self.grad[bias] += g;
     }
 
-    /// Adjoint of `dotRange`: 4× unrolled backward scatter for the
-    /// contiguous-range dot kernels: `grad[x0+k] += g·w[k]`,
-    /// `grad[w0+k] += g·x[k]`. Plain unrolling — per-k operation order is
-    /// preserved, so results are bitwise identical to the rolled loop
-    /// even when the two ranges overlap.
+    /// Adjoint of `dotRange`: backward scatter for the contiguous-range
+    /// dot kernels, `grad[x0+k] += g·w[k]`, `grad[w0+k] += g·x[k]`,
+    /// dispatched to the tape's kernel backend (both preserve per-k
+    /// operation order, so results are bitwise stable even when the two
+    /// ranges overlap).
     #[inline(always)]
     pub(crate) fn adj_dot_range(&mut self, x0: usize, w0: usize, n: usize, g: T) {
         debug_assert!(x0 + n <= self.len() && w0 + n <= self.len());
         // SAFETY: `x0 + n` and `w0 + n` are within the tape — the tape's
         // topological invariant provides this for real nodes, and the
         // program compiler re-asserts it for compiled instructions.
-        unsafe { self.dot_range_backward_unrolled(x0, w0, n, g) }
+        unsafe {
+            match self.kernel {
+                KernelBackend::Scalar => {
+                    ScalarKernels::adj_dot_range(&self.val, &mut self.grad, x0, w0, n, g)
+                }
+                KernelBackend::Simd => {
+                    SimdKernels::adj_dot_range(&self.val, &mut self.grad, x0, w0, n, g)
+                }
+            }
+        }
     }
 
     /// Adjoint of `dotRangeWithBias` = `dotRange` + bias pass-through.
     #[inline(always)]
     pub(crate) fn adj_dot_range_bias(&mut self, x0: usize, w0: usize, n: usize, bias: usize, g: T) {
         debug_assert!(x0 + n <= self.len() && w0 + n <= self.len() && bias < self.len());
-        // SAFETY: see adj_dot_range.
+        // SAFETY: see adj_dot_range (plus bias < len, asserted above).
         unsafe {
-            self.dot_range_backward_unrolled(x0, w0, n, g);
-            *self.grad.get_unchecked_mut(bias) += g;
+            match self.kernel {
+                KernelBackend::Scalar => {
+                    ScalarKernels::adj_dot_range_bias(&self.val, &mut self.grad, x0, w0, n, bias, g)
+                }
+                KernelBackend::Simd => {
+                    SimdKernels::adj_dot_range_bias(&self.val, &mut self.grad, x0, w0, n, bias, g)
+                }
+            }
         }
     }
 
-    /// Adjoint of `dotParamRange`: 4× unrolled gather-scatter over the
-    /// x-id view at `xs_at` against the contiguous weight run at `w0`,
-    /// plus the bias. Per-k order preserved so repeated x-ids (shared
-    /// embedding rows) accumulate in exactly the rolled loop's order.
+    /// Adjoint of `dotParamRange`: gather-scatter over the x-id view at
+    /// `xs_at` against the contiguous weight run at `w0`, plus the bias,
+    /// dispatched to the tape's kernel backend. Per-k order is preserved
+    /// so repeated x-ids (shared embedding rows) accumulate in exactly
+    /// the rolled loop's order.
     #[inline(always)]
     pub(crate) fn adj_dot_param_range(
         &mut self,
@@ -497,130 +493,61 @@ impl<T: Scalar> Tape<T> {
         // SAFETY: bounds debug-asserted above; ids < len by the tape
         // invariant (and by the real asserts on the rebind entry points).
         unsafe {
-            let mut k = 0usize;
-            while k + 4 <= n {
-                let x0i = *self.aux.get_unchecked(xs_at + k) as usize;
-                let (xv0, wv0) = (
-                    *self.val.get_unchecked(x0i),
-                    *self.val.get_unchecked(w0 + k),
-                );
-                *self.grad.get_unchecked_mut(x0i) += g * wv0;
-                *self.grad.get_unchecked_mut(w0 + k) += g * xv0;
-                let x1i = *self.aux.get_unchecked(xs_at + k + 1) as usize;
-                let (xv1, wv1) = (
-                    *self.val.get_unchecked(x1i),
-                    *self.val.get_unchecked(w0 + k + 1),
-                );
-                *self.grad.get_unchecked_mut(x1i) += g * wv1;
-                *self.grad.get_unchecked_mut(w0 + k + 1) += g * xv1;
-                let x2i = *self.aux.get_unchecked(xs_at + k + 2) as usize;
-                let (xv2, wv2) = (
-                    *self.val.get_unchecked(x2i),
-                    *self.val.get_unchecked(w0 + k + 2),
-                );
-                *self.grad.get_unchecked_mut(x2i) += g * wv2;
-                *self.grad.get_unchecked_mut(w0 + k + 2) += g * xv2;
-                let x3i = *self.aux.get_unchecked(xs_at + k + 3) as usize;
-                let (xv3, wv3) = (
-                    *self.val.get_unchecked(x3i),
-                    *self.val.get_unchecked(w0 + k + 3),
-                );
-                *self.grad.get_unchecked_mut(x3i) += g * wv3;
-                *self.grad.get_unchecked_mut(w0 + k + 3) += g * xv3;
-                k += 4;
+            match self.kernel {
+                KernelBackend::Scalar => ScalarKernels::adj_dot_param_range(
+                    &self.val,
+                    &mut self.grad,
+                    &self.aux,
+                    xs_at,
+                    n,
+                    w0,
+                    bias,
+                    g,
+                ),
+                KernelBackend::Simd => SimdKernels::adj_dot_param_range(
+                    &self.val,
+                    &mut self.grad,
+                    &self.aux,
+                    xs_at,
+                    n,
+                    w0,
+                    bias,
+                    g,
+                ),
             }
-            while k < n {
-                let x = *self.aux.get_unchecked(xs_at + k) as usize;
-                let xv = *self.val.get_unchecked(x);
-                let wv = *self.val.get_unchecked(w0 + k);
-                *self.grad.get_unchecked_mut(x) += g * wv;
-                *self.grad.get_unchecked_mut(w0 + k) += g * xv;
-                k += 1;
-            }
-            *self.grad.get_unchecked_mut(bias) += g;
         }
     }
 
-    /// Adjoint of `dotStrided`.
+    /// Adjoint of `dotStrided`, dispatched to the tape's kernel backend.
     #[inline(always)]
     pub(crate) fn adj_dot_strided(&mut self, x0: usize, w0: usize, n: usize, stride: usize, g: T) {
         debug_assert!(w0 + n <= self.len());
         debug_assert!(n == 0 || x0 + (n - 1) * stride < self.len());
         // SAFETY: bounds debug-asserted above; ids < len by tape invariant.
         unsafe {
-            for k in 0..n {
-                let x = x0 + k * stride;
-                let xv = *self.val.get_unchecked(x);
-                let wv = *self.val.get_unchecked(w0 + k);
-                *self.grad.get_unchecked_mut(x) += g * wv;
-                *self.grad.get_unchecked_mut(w0 + k) += g * xv;
+            match self.kernel {
+                KernelBackend::Scalar => {
+                    ScalarKernels::adj_dot_strided(&self.val, &mut self.grad, x0, w0, n, stride, g)
+                }
+                KernelBackend::Simd => {
+                    SimdKernels::adj_dot_strided(&self.val, &mut self.grad, x0, w0, n, stride, g)
+                }
             }
         }
     }
 
     /// Adjoint of the fused `crossEntropyLogits`:
-    /// loss = logsumexp(z) − z_t ⇒ ∂z_j = softmax_j − 1[j = t].
+    /// loss = logsumexp(z) − z_t ⇒ ∂z_j = softmax_j − 1[j = t];
+    /// dispatched to the tape's kernel backend.
     #[inline(always)]
     pub(crate) fn adj_ce_logits(&mut self, z0: usize, n: usize, target: usize, g: T) {
-        let mut m = self.val[z0];
-        for k in 1..n {
-            m = m.max(self.val[z0 + k]);
-        }
-        let mut den = T::ZERO;
-        for k in 0..n {
-            den += (self.val[z0 + k] - m).exp();
-        }
-        for k in 0..n {
-            let p = (self.val[z0 + k] - m).exp() / den;
-            self.grad[z0 + k] += g * p;
-        }
-        self.grad[z0 + target] -= g;
-    }
-
-    /// 4× unrolled backward scatter body shared by `adj_dot_range` and
-    /// `adj_dot_range_bias`.
-    ///
-    /// # Safety
-    /// Caller must guarantee `x0 + n` and `w0 + n` are within the tape
-    /// (the tape's topological invariant provides this for real nodes).
-    #[inline(always)]
-    unsafe fn dot_range_backward_unrolled(&mut self, x0: usize, w0: usize, n: usize, g: T) {
-        let mut k = 0usize;
-        while k + 4 <= n {
-            let (xv0, wv0) = (
-                *self.val.get_unchecked(x0 + k),
-                *self.val.get_unchecked(w0 + k),
-            );
-            *self.grad.get_unchecked_mut(x0 + k) += g * wv0;
-            *self.grad.get_unchecked_mut(w0 + k) += g * xv0;
-            let (xv1, wv1) = (
-                *self.val.get_unchecked(x0 + k + 1),
-                *self.val.get_unchecked(w0 + k + 1),
-            );
-            *self.grad.get_unchecked_mut(x0 + k + 1) += g * wv1;
-            *self.grad.get_unchecked_mut(w0 + k + 1) += g * xv1;
-            let (xv2, wv2) = (
-                *self.val.get_unchecked(x0 + k + 2),
-                *self.val.get_unchecked(w0 + k + 2),
-            );
-            *self.grad.get_unchecked_mut(x0 + k + 2) += g * wv2;
-            *self.grad.get_unchecked_mut(w0 + k + 2) += g * xv2;
-            let (xv3, wv3) = (
-                *self.val.get_unchecked(x0 + k + 3),
-                *self.val.get_unchecked(w0 + k + 3),
-            );
-            *self.grad.get_unchecked_mut(x0 + k + 3) += g * wv3;
-            *self.grad.get_unchecked_mut(w0 + k + 3) += g * xv3;
-            k += 4;
-        }
-        while k < n {
-            let (xv, wv) = (
-                *self.val.get_unchecked(x0 + k),
-                *self.val.get_unchecked(w0 + k),
-            );
-            *self.grad.get_unchecked_mut(x0 + k) += g * wv;
-            *self.grad.get_unchecked_mut(w0 + k) += g * xv;
-            k += 1;
+        match self.kernel {
+            KernelBackend::Scalar => {
+                ScalarKernels::adj_ce_logits(&self.val, &mut self.grad, z0, n, target, g)
+            }
+            KernelBackend::Simd => {
+                SimdKernels::adj_ce_logits(&self.val, &mut self.grad, z0, n, target, g)
+            }
         }
     }
 

@@ -38,6 +38,7 @@ pub use exec::{ExecMode, SampleExecutor, SampleOracle};
 pub use program::{ProgramCache, StepProgram};
 pub use replay::Recording;
 
+use crate::kernels::{KernelBackend, KernelChoice, Kernels, ScalarKernels, SimdKernels};
 use crate::ops::{Arity, Op};
 use crate::scalar::Scalar;
 
@@ -115,6 +116,11 @@ pub struct Tape<T: Scalar> {
     /// Optional sparse node names (paper F.9.7: can be disabled entirely —
     /// here names cost nothing unless used).
     pub(crate) names: Vec<(u32, String)>,
+    /// Which fused-kernel backend this tape dispatches to
+    /// ([`crate::kernels`]). Cached per tape (not a global) so threaded
+    /// test runners and mixed-backend processes stay race-free; replicas
+    /// inherit it through [`Tape::clone_prefix`].
+    pub(crate) kernel: KernelBackend,
 }
 
 impl<T: Scalar> Default for Tape<T> {
@@ -135,6 +141,7 @@ impl<T: Scalar> Tape<T> {
             aux: Vec::new(),
             consts: Vec::new(),
             names: Vec::new(),
+            kernel: crate::kernels::default_backend(),
         }
     }
 
@@ -155,7 +162,25 @@ impl<T: Scalar> Tape<T> {
             aux: Vec::with_capacity(aux),
             consts: Vec::with_capacity(nodes.div_ceil(64).max(8)),
             names: Vec::new(),
+            kernel: crate::kernels::default_backend(),
         }
+    }
+
+    /// Select the fused-kernel backend this tape dispatches to
+    /// ([`crate::kernels`]); returns the resolved backend (`Simd` is
+    /// clamped to `Scalar` on CPUs without AVX2+FMA). Both backends are
+    /// bitwise identical, so switching is purely a performance knob; it
+    /// can be done at any time, even mid-training. Replicas created by
+    /// [`Tape::clone_prefix`] inherit the setting.
+    pub fn set_kernel(&mut self, choice: KernelChoice) -> KernelBackend {
+        self.kernel = choice.resolve();
+        self.kernel
+    }
+
+    /// The fused-kernel backend this tape currently dispatches to.
+    #[inline]
+    pub fn kernel_backend(&self) -> KernelBackend {
+        self.kernel
     }
 
     /// Reserve *additional* headroom without adding nodes: `nodes` more
@@ -385,6 +410,7 @@ impl<T: Scalar> Tape<T> {
             aux,
             consts,
             names: Vec::new(),
+            kernel: crate::kernels::default_backend(),
         }
     }
 
@@ -409,6 +435,7 @@ impl<T: Scalar> Tape<T> {
             aux: self.aux[..m.aux as usize].to_vec(),
             consts: self.consts[..m.consts as usize].to_vec(),
             names: self.names[..m.names as usize].to_vec(),
+            kernel: self.kernel,
         }
     }
 
@@ -763,30 +790,28 @@ impl<T: Scalar> Tape<T> {
     /// contiguous-range fused kernels agree bitwise. Shared by the eager
     /// `innerProduct` constructors and the replay interpreter
     /// ([`Tape::replay_forward`]), so both execution modes evaluate the
-    /// op with the same arithmetic.
+    /// op with the same arithmetic. Dispatches through the tape's kernel
+    /// backend ([`crate::kernels`]).
     #[inline(always)]
     pub(crate) fn gather_dot_aux_ilp4(&self, s: usize, n: usize, init: T) -> T {
-        debug_assert!(s + 2 * n <= self.aux.len());
-        let (mut s0, mut s1, mut s2, mut s3) = (T::ZERO, T::ZERO, T::ZERO, T::ZERO);
-        let mut k = 0usize;
-        while k + 4 <= n {
-            s0 = self.val[self.aux[s + k] as usize]
-                .mul_add(self.val[self.aux[s + n + k] as usize], s0);
-            s1 = self.val[self.aux[s + k + 1] as usize]
-                .mul_add(self.val[self.aux[s + n + k + 1] as usize], s1);
-            s2 = self.val[self.aux[s + k + 2] as usize]
-                .mul_add(self.val[self.aux[s + n + k + 2] as usize], s2);
-            s3 = self.val[self.aux[s + k + 3] as usize]
-                .mul_add(self.val[self.aux[s + n + k + 3] as usize], s3);
-            k += 4;
+        match self.kernel {
+            KernelBackend::Scalar => ScalarKernels::gather_dot(&self.val, &self.aux, s, n, init),
+            KernelBackend::Simd => SimdKernels::gather_dot(&self.val, &self.aux, s, n, init),
         }
-        let mut acc = (s0 + s1) + (s2 + s3) + init;
-        while k < n {
-            acc = self.val[self.aux[s + k] as usize]
-                .mul_add(self.val[self.aux[s + n + k] as usize], acc);
-            k += 1;
+    }
+
+    /// ⟨val[x0..x0+n], val[w0..w0+n]⟩ + init through the tape's kernel
+    /// backend — the dispatch point of the contiguous-range fused dot,
+    /// shared by the eager `dot_range*` constructors and the replay
+    /// interpreter so every execution mode runs the identical kernel.
+    #[inline(always)]
+    pub(crate) fn dot_val_ranges(&self, x0: usize, w0: usize, n: usize, init: T) -> T {
+        let xs = &self.val[x0..x0 + n];
+        let ws = &self.val[w0..w0 + n];
+        match self.kernel {
+            KernelBackend::Scalar => ScalarKernels::dot(xs, ws, init),
+            KernelBackend::Simd => SimdKernels::dot(xs, ws, init),
         }
-        acc
     }
 
     /// ⟨x, y⟩ as a single fused node (paper: `innerProduct`). The
@@ -818,11 +843,7 @@ impl<T: Scalar> Tape<T> {
     /// 4-wide ILP-unrolled via [`crate::ops::dot_ilp4`].
     pub fn dot_range(&mut self, x0: Value, w0: Value, n: usize) -> Value {
         debug_assert!(x0.idx() + n <= self.len() && w0.idx() + n <= self.len());
-        let s = crate::ops::dot_ilp4(
-            &self.val[x0.idx()..x0.idx() + n],
-            &self.val[w0.idx()..w0.idx() + n],
-            T::ZERO,
-        );
+        let s = self.dot_val_ranges(x0.idx(), w0.idx(), n, T::ZERO);
         let meta = self.aux.len() as u32;
         self.aux.push(w0.0);
         self.aux.push(n as u32);
@@ -832,11 +853,7 @@ impl<T: Scalar> Tape<T> {
     /// `dot_range` + bias node.
     pub fn dot_range_bias(&mut self, x0: Value, w0: Value, n: usize, bias: Value) -> Value {
         debug_assert!(x0.idx() + n <= self.len() && w0.idx() + n <= self.len());
-        let s = crate::ops::dot_ilp4(
-            &self.val[x0.idx()..x0.idx() + n],
-            &self.val[w0.idx()..w0.idx() + n],
-            self.val[bias.idx()],
-        );
+        let s = self.dot_val_ranges(x0.idx(), w0.idx(), n, self.val[bias.idx()]);
         let meta = self.aux.len() as u32;
         self.aux.push(w0.0);
         self.aux.push(n as u32);
@@ -850,17 +867,10 @@ impl<T: Scalar> Tape<T> {
     #[inline(always)]
     pub(crate) fn eval_ce_logits(&self, z0: usize, n: usize, target: usize) -> T {
         let zs = &self.val[z0..z0 + n];
-        // Numerically stable logsumexp.
-        let mut m = zs[0];
-        for &z in &zs[1..] {
-            m = m.max(z);
+        match self.kernel {
+            KernelBackend::Scalar => ScalarKernels::ce_logits(zs, target),
+            KernelBackend::Simd => SimdKernels::ce_logits(zs, target),
         }
-        let mut s = T::ZERO;
-        for &z in zs {
-            s += (z - m).exp();
-        }
-        let lse = m + s.ln();
-        lse - zs[target]
     }
 
     /// Fused softmax cross-entropy `logsumexp(z) − z_target` over a
@@ -890,28 +900,17 @@ impl<T: Scalar> Tape<T> {
     pub(crate) fn eval_dot_param_range(&self, xs_at: usize, n: usize, w0: usize, bias: usize) -> T {
         debug_assert!(xs_at + n <= self.aux.len());
         debug_assert!(w0 + n <= self.len());
-        // SAFETY: debug-asserted bounds above; the tape invariant keeps all
-        // ids < len. Four independent accumulators break the FMA latency
-        // chain (the paper's unrolled-inner-product ILP trick, F.2).
+        // SAFETY: debug-asserted bounds above; the tape invariant keeps
+        // all ids < len.
         unsafe {
-            let xs = self.aux.as_ptr().add(xs_at);
-            let vals = self.val.as_ptr();
-            let ws = vals.add(w0);
-            let (mut s0, mut s1, mut s2, mut s3) = (T::ZERO, T::ZERO, T::ZERO, T::ZERO);
-            let mut k = 0usize;
-            while k + 4 <= n {
-                s0 = (*vals.add(*xs.add(k) as usize)).mul_add(*ws.add(k), s0);
-                s1 = (*vals.add(*xs.add(k + 1) as usize)).mul_add(*ws.add(k + 1), s1);
-                s2 = (*vals.add(*xs.add(k + 2) as usize)).mul_add(*ws.add(k + 2), s2);
-                s3 = (*vals.add(*xs.add(k + 3) as usize)).mul_add(*ws.add(k + 3), s3);
-                k += 4;
+            match self.kernel {
+                KernelBackend::Scalar => {
+                    ScalarKernels::dot_param_range(&self.val, &self.aux, xs_at, n, w0, bias)
+                }
+                KernelBackend::Simd => {
+                    SimdKernels::dot_param_range(&self.val, &self.aux, xs_at, n, w0, bias)
+                }
             }
-            let mut s = (s0 + s1) + (s2 + s3) + self.val[bias];
-            while k < n {
-                s = (*vals.add(*xs.add(k) as usize)).mul_add(*ws.add(k), s);
-                k += 1;
-            }
-            s
         }
     }
 
@@ -933,17 +932,13 @@ impl<T: Scalar> Tape<T> {
     pub(crate) fn eval_dot_strided(&self, w0: usize, x0: usize, stride: usize, n: usize) -> T {
         debug_assert!(w0 + n <= self.len());
         debug_assert!(n == 0 || x0 + (n - 1) * stride < self.len());
-        let mut s = T::ZERO;
         // SAFETY: bounds debug-asserted above; ids < len by tape invariant.
         unsafe {
-            for k in 0..n {
-                s = self
-                    .val
-                    .get_unchecked(w0 + k)
-                    .mul_add(*self.val.get_unchecked(x0 + k * stride), s);
+            match self.kernel {
+                KernelBackend::Scalar => ScalarKernels::dot_strided(&self.val, w0, x0, stride, n),
+                KernelBackend::Simd => SimdKernels::dot_strided(&self.val, w0, x0, stride, n),
             }
         }
-        s
     }
 
     /// ⟨val[w0..w0+n], val[x0 + k·stride] for k in 0..n⟩ — contiguous

@@ -19,8 +19,9 @@
 //! 2. [`StepProgram::backward`]: memset the zeroing extent, seed the
 //!    root, and drive the instruction list straight into the **shared
 //!    adjoint kernels** (`Tape::adj_*` — the very functions the
-//!    interpreter's `match` delegates to), so compiled gradients are
-//!    bitwise identical to the interpreter **by construction**.
+//!    interpreter's `match` delegates to, which in turn dispatch on the
+//!    tape's [`crate::kernels::Kernels`] backend), so compiled gradients
+//!    are bitwise identical to the interpreter **by construction**.
 //!
 //! What stays *live-read* per instruction (one indexed load, no decode):
 //! the rebindable slots — a node's `a`/`b` argument ids (rewritten by

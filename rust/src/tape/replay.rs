@@ -24,10 +24,12 @@
 //!    ([`Tape::backward_above`] / [`Tape::backward_with_scratch`]).
 //!
 //! Replay is **bitwise identical** to eager execution: every op is
-//! re-evaluated by the same shared kernel the eager constructor used
-//! (`dot_ilp4`, `gather_dot_aux_ilp4`, `eval_dot_param_range`,
-//! `eval_dot_strided`, `eval_ce_logits`) or by the same scalar formula,
-//! over the same node ids, in the same construction order.
+//! re-evaluated by the same shared kernel dispatcher the eager
+//! constructor used (`dot_val_ranges`, `gather_dot_aux_ilp4`,
+//! `eval_dot_param_range`, `eval_dot_strided`, `eval_ce_logits` — all
+//! routed through the tape's [`crate::kernels::Kernels`] backend) or by
+//! the same scalar formula, over the same node ids, in the same
+//! construction order.
 //!
 //! ## When a recording is invalidated
 //!
@@ -282,11 +284,7 @@ impl<T: Scalar> Tape<T> {
                     let meta = self.b[i] as usize;
                     let w0 = self.aux[meta] as usize;
                     let n = self.aux[meta + 1] as usize;
-                    crate::ops::dot_ilp4(
-                        &self.val[x0..x0 + n],
-                        &self.val[w0..w0 + n],
-                        T::ZERO,
-                    )
+                    self.dot_val_ranges(x0, w0, n, T::ZERO)
                 }
                 Op::DotRangeBias => {
                     let x0 = self.a[i] as usize;
@@ -294,11 +292,7 @@ impl<T: Scalar> Tape<T> {
                     let w0 = self.aux[meta] as usize;
                     let n = self.aux[meta + 1] as usize;
                     let bias = self.aux[meta + 2] as usize;
-                    crate::ops::dot_ilp4(
-                        &self.val[x0..x0 + n],
-                        &self.val[w0..w0 + n],
-                        self.val[bias],
-                    )
+                    self.dot_val_ranges(x0, w0, n, self.val[bias])
                 }
                 Op::CeLogitsRange => {
                     let z0 = self.a[i] as usize;

@@ -219,6 +219,37 @@ pub fn flip_byte(path: &std::path::Path, offset: u64) -> std::io::Result<()> {
     std::fs::write(path, bytes)
 }
 
+// ---------------------------------------------------------------------------
+// Kernel reference oracles
+// ---------------------------------------------------------------------------
+
+/// Reference fold for the fixed [`crate::ops::dot_ilp4`] association —
+/// the executable form of the contract that used to live only in prose:
+/// four interleaved accumulators (`lane[k % 4]`), combined as
+/// `(l0 + l1) + (l2 + l3) + init`, then a serial `mul_add` fold over the
+/// ≤3 remainder elements.
+///
+/// Deliberately written as a *rolled* loop (no manual unrolling, no
+/// pointer arithmetic, no vector intrinsics) so it shares no code shape
+/// with either production backend; both [`crate::kernels::ScalarKernels`]
+/// and [`crate::kernels::SimdKernels`] must match it **bitwise**, which
+/// their `debug_assert`s and unit tests check at sizes crossing the
+/// unroll/vector-width boundaries.
+pub fn dot_ilp4_reference<T: crate::scalar::Scalar>(xs: &[T], ws: &[T], init: T) -> T {
+    assert_eq!(xs.len(), ws.len());
+    let n = xs.len();
+    let body = n - n % 4;
+    let mut lanes = [T::ZERO; 4];
+    for k in 0..body {
+        lanes[k % 4] = xs[k].mul_add(ws[k], lanes[k % 4]);
+    }
+    let mut s = (lanes[0] + lanes[1]) + (lanes[2] + lanes[3]) + init;
+    for k in body..n {
+        s = xs[k].mul_add(ws[k], s);
+    }
+    s
+}
+
 /// Assert two floats are within `tol` relative error (scaled by magnitude).
 pub fn assert_close(a: f64, b: f64, tol: f64, ctx: &str) {
     let denom = 1.0f64.max(a.abs()).max(b.abs());
@@ -287,6 +318,25 @@ mod tests {
         truncate_file(&path, 2).expect("truncate");
         assert_eq!(std::fs::read(&path).expect("read"), vec![1, 2]);
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn dot_ilp4_reference_matches_production_kernel_bitwise() {
+        for n in 0..=19usize {
+            let xs: Vec<f64> = (0..n).map(|i| (i as f64).mul_add(0.611, -3.3)).collect();
+            let ws: Vec<f64> = (0..n).map(|i| 1.0 - i as f64 * 0.21).collect();
+            assert_eq!(
+                dot_ilp4_reference(&xs, &ws, 0.5).to_bits(),
+                crate::ops::dot_ilp4(&xs, &ws, 0.5).to_bits(),
+                "n={n}"
+            );
+        }
+        let xs = [1.0e16f64, 1.0, -1.0e16, 3.0];
+        let ws = [1.0f64; 4];
+        assert_eq!(
+            dot_ilp4_reference(&xs, &ws, 0.5).to_bits(),
+            crate::ops::dot_ilp4(&xs, &ws, 0.5).to_bits(),
+        );
     }
 
     #[test]
