@@ -7,12 +7,16 @@
 //!      analog of a framework checkpoint format, for the file-size column)
 //!   3. A simulated framework-style save: per-tensor framing with names,
 //!      dtype tags and shapes (the PyTorch-pickle overhead class)
+//!   4. `BURPARM` parameter checkpoints per on-disk dtype — f32 (v2)
+//!      vs bf16/f16 (v3, `--params-dtype`): save/load time and file
+//!      size per dtype (the dtype column; names carry `[dtype]`).
 //!
 //! Run: `cargo bench --bench table4_save_load`
 
 use burtorch::bench::{run, Table};
 use burtorch::serialize::{
-    load_values_subset, save_snapshot, save_values_subset, snapshot,
+    load_params_range, load_values_subset, save_params_range_as, save_snapshot,
+    save_values_subset, snapshot, ParamDtype,
 };
 use burtorch::tape::{Tape, Value};
 
@@ -106,11 +110,61 @@ fn main() {
         snapshot(&tape)
     }));
 
+    // 4. Parameter checkpoints per on-disk dtype. A GPT-scale flat
+    // buffer (46,289 params, matching the paper model) written as
+    // BURPARM v2 (f32 full-width) vs v3 (bf16/f16, 2 B/param) — the
+    // dtype column. Fewer iterations: these files are ~100–180 KB.
+    const D: usize = 46_289;
+    let param_iters = ITERS / 10;
+    let mut ptape = Tape::<f32>::new();
+    let first = ptape.leaf(0.0);
+    for k in 1..D {
+        ptape.leaf((k as f32 * 0.618_034).sin() * 0.05);
+    }
+    let mut dtype_sizes = Vec::new();
+    for dtype in [ParamDtype::Native, ParamDtype::Bf16, ParamDtype::F16] {
+        let path = dir.join(format!("params_{}.bin", dtype.as_str()));
+        let size = save_params_range_as(&ptape, first, D, &path, dtype).expect("save");
+        dtype_sizes.push((dtype.as_str(), size));
+        table.push(run(
+            &format!("BURPARM params SAVE [{}]", dtype.as_str()),
+            TRIALS,
+            param_iters,
+            |_| save_params_range_as(&ptape, first, D, &path, dtype).expect("save"),
+        ));
+        let mut ltape = Tape::<f32>::new();
+        let lfirst = ltape.leaf(0.0);
+        for _ in 1..D {
+            ltape.leaf(0.0);
+        }
+        table.push(run(
+            &format!("BURPARM params LOAD [{}]", dtype.as_str()),
+            TRIALS,
+            param_iters,
+            |_| load_params_range(&mut ltape, lfirst, D, &path).expect("load"),
+        ));
+    }
+
     table.note(&format!(
         "file sizes: raw subset {raw_size} B (paper: 56 B) | snapshot {snap_size} B | framework-style {fw_size} B (paper PyTorch: 2564 B, LibTorch: 3569 B)"
     ));
+    let dtype_note = dtype_sizes
+        .iter()
+        .map(|(name, size)| format!("{name} {size} B"))
+        .collect::<Vec<_>>()
+        .join(" | ");
+    table.note(&format!(
+        "BURPARM checkpoint sizes ({D} params, header 21 B): {dtype_note} — bf16/f16 halve the f32 file; \
+         dtype rows run {param_iters} iterations"
+    ));
     table.note("paper reference: BurTorch save 0.75 s / load 0.08 s; PyTorch save 2.54 s / load 1.36 s (5K iterations, Windows)");
-    table.emit("table4_save_load");
+    table.note("no committed bench_results snapshot yet for the dtype rows — pending a hardware run");
+    table.emit_with_json("table4_save_load");
 
     assert_eq!(raw_size, 56, "paper parity: 7 × FP64 = 56 bytes");
+    let f32_size = dtype_sizes[0].1;
+    for &(name, size) in &dtype_sizes[1..] {
+        assert_eq!(size, 21 + 2 * D, "{name} checkpoint must be 2 B/param + header");
+        assert!(size * 2 < f32_size + 42, "{name} must halve the f32 payload");
+    }
 }

@@ -1,0 +1,190 @@
+//! Quantization drift + throughput harness: the `serve --quantize int8`
+//! decode path vs the full-precision f64 oracle.
+//!
+//! Three questions, answered honestly:
+//!
+//! 1. **Drift** — teacher-forced over a fixed pseudo-random token stream,
+//!    how far do the int8-path logits sit from (a) the *true* f64 oracle
+//!    (same master weights, full precision end to end) and (b) the
+//!    *dequantized-weights* f64 oracle (weights replaced by `scale · q`,
+//!    so only activation precision differs)? Reported per-token
+//!    max-logit-divergence and greedy-argmax agreement for both. The
+//!    hard *bound* lives in `tests/precision.rs` (against oracle (b),
+//!    where 100% greedy agreement is an enforceable contract); this
+//!    bench *measures* oracle (a) drift without asserting it, because
+//!    weight rounding legitimately flips near-tie argmaxes.
+//! 2. **Memory** — bytes of the shared int8 table vs a full-width
+//!    per-lane replica (the `serve` boot cost the mode removes).
+//! 3. **Speed** — tok/s of full-window quantized decode (scalar and
+//!    simd) vs the replay-cached f64 oracle decode.
+//!
+//! The scalar↔simd bitwise contract *inside* the quantized path is
+//! asserted here on every token (it is cheap and load-bearing).
+//!
+//! Run: `cargo bench --bench table_quant`
+
+use burtorch::bench::{json_num, run, write_json_result, Table};
+use burtorch::kernels::{simd_available, KernelBackend};
+use burtorch::nn::{Gpt, GptConfig, GptGenBinds};
+use burtorch::rng::Rng;
+use burtorch::tape::{ProgramCache, Recording, Tape, Value};
+
+/// Teacher-forced stream length (acceptance floor is 256).
+const TOKENS: usize = 512;
+
+/// First-max argmax, the tie-break both paths share.
+fn argmax(zs: &[f64]) -> usize {
+    let mut best = 0;
+    for (j, &z) in zs.iter().enumerate() {
+        if z > zs[best] {
+            best = j;
+        }
+    }
+    best
+}
+
+/// Last-position logits of `model` on `ctx`, through the replay cache.
+fn oracle_logits(
+    model: &Gpt,
+    tape: &mut Tape<f64>,
+    cache: &mut ProgramCache<(Recording, GptGenBinds)>,
+    ctx: &[u32],
+) -> Vec<f64> {
+    let z0 = model.cached_logits(tape, cache, ctx);
+    (0..model.cfg.vocab)
+        .map(|j| tape.value(Value(z0.0 + j as u32)))
+        .collect()
+}
+
+fn main() {
+    // Master model: the seed the serve path would boot from.
+    let mut tape = Tape::<f64>::new();
+    let mut rng = Rng::new(71);
+    let model = Gpt::new(&mut tape, GptConfig::paper(), &mut rng);
+    let qp = model.quantize(&tape);
+
+    // Dequantized-weights oracle: identical weights to the int8 table,
+    // full-precision activations (see `Gpt::load_quantized`).
+    let mut dtape = Tape::<f64>::new();
+    let mut drng = Rng::new(999);
+    let dmodel = Gpt::new(&mut dtape, GptConfig::paper(), &mut drng);
+    dmodel.load_quantized(&mut dtape, &qp);
+
+    let vocab = model.cfg.vocab;
+    let block = model.cfg.block_size;
+    let mut srng = Rng::new(2024);
+    let stream: Vec<u32> = (0..TOKENS).map(|_| srng.below_usize(vocab) as u32).collect();
+    let ctx_at = |t: usize| &stream[(t + 1).saturating_sub(block)..=t];
+
+    // ---- drift sweep ----------------------------------------------------
+    let backend = if simd_available() {
+        KernelBackend::Simd
+    } else {
+        KernelBackend::Scalar
+    };
+    let mut cache = ProgramCache::new();
+    let mut dcache = ProgramCache::new();
+    let (mut max_div, mut agree) = (0f64, 0usize); // vs true f64 oracle
+    let (mut max_div_deq, mut agree_deq) = (0f64, 0usize); // vs dequantized oracle
+    for t in 0..TOKENS {
+        let ctx = ctx_at(t);
+        let zq32 = qp.logits_backend(backend, ctx);
+        let z_scalar = qp.logits_backend(KernelBackend::Scalar, ctx);
+        for (a, b) in zq32.iter().zip(&z_scalar) {
+            assert_eq!(a.to_bits(), b.to_bits(), "scalar≠simd in quantized path @ {t}");
+        }
+        let zq: Vec<f64> = zq32.iter().map(|&z| f64::from(z)).collect();
+        let zo = oracle_logits(&model, &mut tape, &mut cache, ctx);
+        let zd = oracle_logits(&dmodel, &mut dtape, &mut dcache, ctx);
+        let div = |o: &[f64]| {
+            zq.iter()
+                .zip(o)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0f64, f64::max)
+        };
+        max_div = max_div.max(div(&zo));
+        max_div_deq = max_div_deq.max(div(&zd));
+        agree += usize::from(argmax(&zq) == argmax(&zo));
+        agree_deq += usize::from(argmax(&zq) == argmax(&zd));
+    }
+    let pct = |n: usize| 100.0 * n as f64 / TOKENS as f64;
+
+    // ---- memory ---------------------------------------------------------
+    let quant_bytes = qp.bytes();
+    let replica_f64 = model.num_params() * 8;
+    let replica_f32 = model.num_params() * 4;
+
+    // ---- throughput -----------------------------------------------------
+    let trials = 5;
+    let mut table = Table::new("serve weight precision — int8 table vs f64 oracle decode");
+    table.push(
+        run("f64 oracle, replay-cached full-window", trials, TOKENS as u64, |i| {
+            oracle_logits(&model, &mut tape, &mut cache, ctx_at(i as usize % TOKENS))
+        })
+        .with_kernel("scalar"),
+    );
+    table.push(
+        run("int8 quant, full-window", trials, TOKENS as u64, |i| {
+            qp.logits_backend(KernelBackend::Scalar, ctx_at(i as usize % TOKENS))
+        })
+        .with_kernel("scalar"),
+    );
+    if simd_available() {
+        table.push(
+            run("int8 quant, full-window", trials, TOKENS as u64, |i| {
+                qp.logits_backend(KernelBackend::Simd, ctx_at(i as usize % TOKENS))
+            })
+            .with_kernel("simd"),
+        );
+    }
+    let tok_s: Vec<(String, f64)> = table
+        .rows
+        .iter()
+        .map(|r| (format!("{} [{}]", r.name, r.kernel), 1e6 / r.us_per_iter()))
+        .collect();
+    for (name, ts) in &tok_s {
+        table.note(&format!("{name}: {ts:.0} tok/s"));
+    }
+    table.note(&format!(
+        "drift vs true f64 oracle over {TOKENS} teacher-forced tokens: max |Δlogit| {max_div:.3e}, greedy agreement {:.1}%",
+        pct(agree)
+    ));
+    table.note(&format!(
+        "drift vs dequantized-weights f64 oracle: max |Δlogit| {max_div_deq:.3e}, greedy agreement {:.1}% (bounded in tests/precision.rs)",
+        pct(agree_deq)
+    ));
+    table.note(&format!(
+        "shared int8 table {quant_bytes} bytes/process vs {replica_f64} bytes/lane (f64 replica, {:.1}x) or {replica_f32} bytes/lane (f32, {:.1}x)",
+        replica_f64 as f64 / quant_bytes as f64,
+        replica_f32 as f64 / quant_bytes as f64
+    ));
+    table.emit("table_quant");
+
+    // Machine-readable twin: drift + memory + throughput in one document.
+    let mut json = String::from("{\n");
+    json.push_str(&format!("  \"tokens\": {TOKENS},\n"));
+    json.push_str(&format!(
+        "  \"drift_vs_f64_oracle\": {{\"max_logit_divergence\": {}, \"greedy_agreement_pct\": {}}},\n",
+        json_num(max_div),
+        json_num(pct(agree))
+    ));
+    json.push_str(&format!(
+        "  \"drift_vs_dequantized_oracle\": {{\"max_logit_divergence\": {}, \"greedy_agreement_pct\": {}}},\n",
+        json_num(max_div_deq),
+        json_num(pct(agree_deq))
+    ));
+    json.push_str(&format!(
+        "  \"bytes\": {{\"quant_shared\": {quant_bytes}, \"replica_f64_per_lane\": {replica_f64}, \"replica_f32_per_lane\": {replica_f32}}},\n"
+    ));
+    json.push_str("  \"throughput\": [\n");
+    for (i, (name, ts)) in tok_s.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"name\": \"{}\", \"tok_per_s\": {}}}{}\n",
+            burtorch::bench::json_escape(name),
+            json_num(*ts),
+            if i + 1 == tok_s.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    write_json_result("table_quant", &json);
+}

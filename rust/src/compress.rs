@@ -14,6 +14,17 @@
 //! them into its lane→tree reduction edge behind
 //! [`crate::parallel::ReductionCompression`].
 //!
+//! **Relationship to weight precision.** This module compresses the
+//! *gradient transport* edge — a per-step message that error feedback
+//! (EF21) self-corrects over the run. It is orthogonal to the *weight
+//! storage* precision stack: bf16/f16 `BURPARM v3` checkpoints
+//! ([`crate::serialize::save_params_range_as`]) round parameters once
+//! at rest, and the serve-time int8 weight table
+//! ([`crate::kernels::quant`]) rounds them once at boot. The three
+//! compose freely (compressed training → narrow checkpoint → quantized
+//! serving); unifying them behind one precision policy is a ROADMAP
+//! follow-on.
+//!
 //! # Examples
 //!
 //! Every compressor writes a same-length sparse image of its input:

@@ -32,7 +32,7 @@ use std::sync::Arc;
 
 use crate::data::{BatchSampler, CharCorpus, Example, PrefetchSampler};
 use crate::kernels::KernelChoice;
-use crate::serialize::{self, TrainState};
+use crate::serialize::{self, ParamDtype, TrainState};
 use crate::metrics::{mean_std, MemInfo, Timer};
 use crate::nn::{CeMode, CharMlp, CharMlpBinds, Gpt, GptBinds, ParamRange};
 use crate::optim::Sgd;
@@ -106,6 +106,14 @@ pub struct TrainerOptions {
     /// scalar kernels' exact operation association — so this knob trades
     /// nothing but dispatch overhead; see `crate::kernels`.
     pub kernel: KernelChoice,
+    /// Storage dtype of every parameter checkpoint this run writes —
+    /// both the periodic [`TrainerOptions::checkpoint_every`] snapshots
+    /// and the final `--params` save ([`ParamDtype::Native`] by
+    /// default). `Bf16`/`F16` halve the checkpoint (v3 format) by
+    /// rounding each parameter to the narrow dtype on save; loading
+    /// (including `--resume`) widens back deterministically, so the
+    /// precision loss happens exactly once, at save time.
+    pub params_dtype: ParamDtype,
 }
 
 impl Default for TrainerOptions {
@@ -127,6 +135,7 @@ impl Default for TrainerOptions {
             checkpoint: None,
             resume: false,
             kernel: KernelChoice::Auto,
+            params_dtype: ParamDtype::Native,
         }
     }
 }
@@ -352,7 +361,7 @@ impl Trainer {
             if o.checkpoint_every > 0 && (step + 1) % o.checkpoint_every == 0 {
                 if let Some(path) = &o.checkpoint {
                     let ckpt = Path::new(path);
-                    serialize::save_params_range(tape, params.first, d, ckpt)
+                    serialize::save_params_range_as(tape, params.first, d, ckpt, o.params_dtype)
                         .unwrap_or_else(|e| panic!("checkpoint: params '{path}': {e}"));
                     let state = TrainState {
                         next_step: (step + 1) as u64,

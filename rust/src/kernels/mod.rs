@@ -22,6 +22,13 @@
 //!   formulation preserves the operation order; [`dispatch_table`] lists
 //!   the per-family resolution.
 //!
+//! A third, forward-only family rides the same dispatch: the int8
+//! weight-quantized `q8` dots ([`quant`]) behind `--quantize int8`
+//! serving. Unlike the families above they are **not** pinned to the
+//! full-precision kernels (quantization is lossy by construction) — the
+//! contract there is determinism plus scalar≡simd bit equality *within*
+//! the quantized path; see the [`quant`] module docs.
+//!
 //! The backend is selected per [`crate::tape::Tape`]
 //! ([`crate::tape::Tape::set_kernel`]) from a [`KernelChoice`]: CLI
 //! `--kernel scalar|simd|auto`, config `train.kernel`, or the
@@ -42,9 +49,11 @@
 //! (different `target-cpu` flags may fuse or reorder the *non*-kernel
 //! scalar ops differently; the kernels module pins only its own family).
 
+pub mod quant;
 pub mod scalar;
 pub mod simd;
 
+pub use quant::{QuantBlock, QuantLinear, QuantMatrix, QuantizedParams};
 pub use scalar::ScalarKernels;
 pub use simd::SimdKernels;
 
@@ -377,6 +386,25 @@ pub trait Kernels {
         target: usize,
         g: T,
     );
+
+    // --- int8 weight-quantized inference family (forward-only; see
+    // --- [`quant`] for the data model and the drift/bitwise guarantees).
+
+    /// Quantized dot: `⟨xs, q⟩ · scale + bias` with i8 weights widened to
+    /// f32 per element, folded in the fixed **8**-accumulator association
+    /// of [`quant::dot_q8_reference`] (lane `j` takes `k ≡ j mod 8`;
+    /// reduce `((s0+s1)+(s2+s3)) + ((s4+s5)+(s6+s7))`; serial remainder;
+    /// one final `scale.mul_add(acc, bias)`).
+    fn dot_q8(xs: &[f32], q: &[i8], scale: f32, bias: f32) -> f32;
+
+    /// Gathered twin of [`Kernels::dot_q8`]: activations read through an
+    /// id indirection (`val[ids[k]]`), same association.
+    fn gather_dot_q8(val: &[f32], ids: &[u32], q: &[i8], scale: f32, bias: f32) -> f32;
+
+    /// Row-slice twin of [`Kernels::dot_q8`]: the i8 row lives at
+    /// `q[w0..w0+n]` inside a row-major [`quant::QuantMatrix`] payload.
+    fn dot_param_range_q8(xs: &[f32], q: &[i8], w0: usize, n: usize, scale: f32, bias: f32)
+        -> f32;
 }
 
 /// One row of the per-family dispatch table (the `burtorch kernels`
@@ -447,6 +475,21 @@ pub fn dispatch_table() -> &'static [DispatchRow] {
             scalar: "softmax recompute + scatter",
             simd: "scalar body (libm exp calls)",
         },
+        DispatchRow {
+            family: "dot_q8 (int8 weight-quantized dot)",
+            scalar: "8-accumulator i8→f32 widening fold, one final scale·acc+bias fma",
+            simd: "one 8-lane FMA accumulator over cvtepi8-widened weights, fixed-order reduce",
+        },
+        DispatchRow {
+            family: "gather_dot_q8 (gathered activations vs i8 row)",
+            scalar: "8-accumulator fold over id-gathered activations",
+            simd: "scalar body (gathered activation ids)",
+        },
+        DispatchRow {
+            family: "dot_param_range_q8 (contiguous i8 row slice)",
+            scalar: "8-accumulator fold over the row subslice",
+            simd: "8-lane FMA over the row subslice (delegates to dot_q8)",
+        },
     ]
 }
 
@@ -480,15 +523,16 @@ mod tests {
     #[test]
     fn dispatch_table_covers_the_family() {
         let table = dispatch_table();
-        assert_eq!(table.len(), 10);
+        assert_eq!(table.len(), 13);
         for row in table {
             assert!(!row.family.is_empty() && !row.scalar.is_empty() && !row.simd.is_empty());
         }
-        // Exactly the two vectorized families claim a vector body.
+        // Exactly the four vectorized families claim a vector body: dot,
+        // adj_dot_range, dot_q8 and dot_param_range_q8.
         let vectorized = table
             .iter()
             .filter(|r| !r.simd.starts_with("scalar body"))
             .count();
-        assert_eq!(vectorized, 2);
+        assert_eq!(vectorized, 4);
     }
 }

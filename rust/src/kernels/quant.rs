@@ -1,0 +1,640 @@
+//! Int8 weight-quantized inference: per-row symmetric quantization plus
+//! the `q8` dot-kernel family behind [`super::Kernels`].
+//!
+//! The decode-hot weight matrices (q/k/v, attention projection, the two
+//! MLP layers, the LM head) are stored as an i8 payload with one f32
+//! scale per output row: `w[u][j] ≈ scales[u] · q[u][j]` with
+//! `q = clamp(round(w / scale), −127, 127)` and
+//! `scale = max|row| / 127` (an all-zero row quantizes to scale 0 and an
+//! all-zero payload). Everything that is cheap or precision-critical —
+//! embeddings, LayerNorm γ/β, biases — stays full-precision f32, so a
+//! [`QuantizedParams`] cuts weight bytes roughly 8× against an f64
+//! replica while leaving the normalization math exact.
+//!
+//! ## The two guarantees (and the one non-guarantee)
+//!
+//! - **Deterministic**: the quantized forward is plain f32 arithmetic in
+//!   a fixed association — same tokens in, same logits out, on every run
+//!   and every machine with IEEE-754 f32.
+//! - **scalar ≡ simd, bitwise**: [`super::ScalarKernels`] and
+//!   [`super::SimdKernels`] produce bit-identical q8 dots. The scalar
+//!   reference folds **eight** independent f32 accumulators (lane `j`
+//!   takes elements `k ≡ j mod 8`), reduces them in the fixed
+//!   `((s0+s1)+(s2+s3)) + ((s4+s5)+(s6+s7))` order, folds the ≤7-element
+//!   remainder serially, and applies the row scale once at the end via
+//!   `scale.mul_add(acc, bias)`. The AVX2 body maps each scalar
+//!   accumulator onto one lane of a single 8-wide FMA vector (i8 weights
+//!   widened exactly through `cvtepi8_epi32` → `cvtepi32_ps`), so every
+//!   lane sees the same operands in the same order with the same single
+//!   rounding per step.
+//! - **Never bitwise vs the full-precision model**: quantization is
+//!   lossy by construction. The drift harness (`benches/table_quant.rs`)
+//!   measures per-token max-logit divergence and greedy-token agreement
+//!   against the f64 oracle instead of asserting bit equality; the hard
+//!   test bound lives in `tests/precision.rs`.
+//!
+//! The forward math here deliberately mirrors the tape graph the model
+//! builds ([`crate::nn::Gpt`]) — serial LayerNorm sums, softmax without
+//! max subtraction, the serial `dotStrided` fold for the attention
+//! output — so the only drift sources are the i8 weights themselves and
+//! f32-vs-f64 activation rounding.
+
+use super::{KernelBackend, Kernels, ScalarKernels, SimdKernels};
+
+/// The symmetric-quantization clamp bound: i8 range is −128..=127, but
+/// symmetric quantization uses ±127 so that `−scale·127..=scale·127` is
+/// centered (−128 is never emitted).
+pub const Q8_MAX: f32 = 127.0;
+
+// ---------------------------------------------------------------------------
+// reference q8 folds (the scalar bodies, and the bitwise contract)
+// ---------------------------------------------------------------------------
+
+/// ⟨xs, q⟩·scale + bias in the fixed 8-accumulator association — the
+/// reference body [`super::ScalarKernels::dot_q8`] runs and
+/// [`super::SimdKernels::dot_q8`] is pinned to bitwise.
+#[inline(always)]
+pub fn dot_q8_reference(xs: &[f32], q: &[i8], scale: f32, bias: f32) -> f32 {
+    debug_assert_eq!(xs.len(), q.len());
+    let n = xs.len();
+    let mut s = [0.0f32; 8];
+    let mut k = 0usize;
+    while k + 8 <= n {
+        for (j, acc) in s.iter_mut().enumerate() {
+            *acc = xs[k + j].mul_add(q[k + j] as f32, *acc);
+        }
+        k += 8;
+    }
+    let mut acc = ((s[0] + s[1]) + (s[2] + s[3])) + ((s[4] + s[5]) + (s[6] + s[7]));
+    while k < n {
+        acc = xs[k].mul_add(q[k] as f32, acc);
+        k += 1;
+    }
+    scale.mul_add(acc, bias)
+}
+
+/// Gathered twin of [`dot_q8_reference`]: the activations are read
+/// through an id indirection (`val[ids[k]]`), same association, same
+/// final `scale.mul_add(acc, bias)`.
+#[inline(always)]
+pub fn gather_dot_q8_reference(val: &[f32], ids: &[u32], q: &[i8], scale: f32, bias: f32) -> f32 {
+    debug_assert_eq!(ids.len(), q.len());
+    let n = ids.len();
+    let mut s = [0.0f32; 8];
+    let mut k = 0usize;
+    while k + 8 <= n {
+        for (j, acc) in s.iter_mut().enumerate() {
+            *acc = val[ids[k + j] as usize].mul_add(q[k + j] as f32, *acc);
+        }
+        k += 8;
+    }
+    let mut acc = ((s[0] + s[1]) + (s[2] + s[3])) + ((s[4] + s[5]) + (s[6] + s[7]));
+    while k < n {
+        acc = val[ids[k] as usize].mul_add(q[k] as f32, acc);
+        k += 1;
+    }
+    scale.mul_add(acc, bias)
+}
+
+/// Row-slice twin of [`dot_q8_reference`]: the i8 row lives at
+/// `q[w0..w0 + n]` inside a larger payload (the `QuantMatrix` row-major
+/// layout). Delegates to [`dot_q8_reference`] over the subslice.
+#[inline(always)]
+pub fn dot_param_range_q8_reference(
+    xs: &[f32],
+    q: &[i8],
+    w0: usize,
+    n: usize,
+    scale: f32,
+    bias: f32,
+) -> f32 {
+    dot_q8_reference(&xs[..n], &q[w0..w0 + n], scale, bias)
+}
+
+// ---------------------------------------------------------------------------
+// quantization
+// ---------------------------------------------------------------------------
+
+/// Per-row symmetric quantization: `scale = max|row| / 127`,
+/// `q = clamp(round(w / scale), −127, 127)`. An all-zero row yields
+/// `(0.0, all-zero payload)` — dequantizing reproduces the zeros exactly.
+pub fn quantize_row(row: &[f32]) -> (f32, Vec<i8>) {
+    let max_abs = row.iter().fold(0.0f32, |m, &w| m.max(w.abs()));
+    if max_abs == 0.0 {
+        return (0.0, vec![0i8; row.len()]);
+    }
+    let scale = max_abs / Q8_MAX;
+    let q = row
+        .iter()
+        .map(|&w| (w / scale).round().clamp(-Q8_MAX, Q8_MAX) as i8)
+        .collect();
+    (scale, q)
+}
+
+/// A row-major `rows × cols` i8 weight matrix with one f32 scale per row.
+#[derive(Clone, Debug)]
+pub struct QuantMatrix {
+    /// Output rows.
+    pub rows: usize,
+    /// Input columns.
+    pub cols: usize,
+    /// i8 payload, row-major (`rows · cols` entries).
+    pub q: Vec<i8>,
+    /// Per-row dequantization scales (`rows` entries).
+    pub scales: Vec<f32>,
+}
+
+impl QuantMatrix {
+    /// Quantize a row-major `rows × cols` f32 weight buffer.
+    pub fn quantize(rows: usize, cols: usize, w: &[f32]) -> QuantMatrix {
+        assert_eq!(w.len(), rows * cols, "weight buffer shape mismatch");
+        let mut q = Vec::with_capacity(rows * cols);
+        let mut scales = Vec::with_capacity(rows);
+        for r in 0..rows {
+            let (scale, qr) = quantize_row(&w[r * cols..(r + 1) * cols]);
+            scales.push(scale);
+            q.extend_from_slice(&qr);
+        }
+        QuantMatrix { rows, cols, q, scales }
+    }
+
+    /// Bytes held by this matrix (1 per i8 weight + 4 per row scale).
+    pub fn bytes(&self) -> usize {
+        self.q.len() + self.scales.len() * std::mem::size_of::<f32>()
+    }
+
+    /// Dequantize back to a row-major f32 buffer
+    /// (`w[u][j] = scales[u] · q[u][j]`) — what the i8 payload *means*,
+    /// used by the drift tests to build the dequantized-weights oracle.
+    pub fn dequantized(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.q.len());
+        for r in 0..self.rows {
+            let s = self.scales[r];
+            for j in 0..self.cols {
+                out.push(s * self.q[r * self.cols + j] as f32);
+            }
+        }
+        out
+    }
+}
+
+/// A quantized linear layer: i8 weights + full-precision f32 biases.
+#[derive(Clone, Debug)]
+pub struct QuantLinear {
+    /// Quantized weights, `out × in` row-major.
+    pub w: QuantMatrix,
+    /// Full-precision biases, length `out`.
+    pub bias: Vec<f32>,
+}
+
+impl QuantLinear {
+    /// Bytes held (i8 payload + scales + f32 biases).
+    pub fn bytes(&self) -> usize {
+        self.w.bytes() + self.bias.len() * std::mem::size_of::<f32>()
+    }
+}
+
+/// Full-precision LayerNorm affine parameters (γ, β).
+#[derive(Clone, Debug)]
+pub struct LayerNormParams {
+    /// Scale γ, length `d_model`.
+    pub gamma: Vec<f32>,
+    /// Shift β, length `d_model`.
+    pub beta: Vec<f32>,
+}
+
+impl LayerNormParams {
+    fn bytes(&self) -> usize {
+        (self.gamma.len() + self.beta.len()) * std::mem::size_of::<f32>()
+    }
+}
+
+/// One transformer block's quantized parameters.
+#[derive(Clone, Debug)]
+pub struct QuantBlock {
+    /// Pre-attention LayerNorm (full precision).
+    pub ln1: LayerNormParams,
+    /// Query weights, `d_model × d_model`, no bias.
+    pub wq: QuantMatrix,
+    /// Key weights.
+    pub wk: QuantMatrix,
+    /// Value weights.
+    pub wv: QuantMatrix,
+    /// Output projection (with bias).
+    pub proj: QuantLinear,
+    /// Pre-MLP LayerNorm (full precision).
+    pub ln2: LayerNormParams,
+    /// Expansion layer `d → 4d` (ReLU).
+    pub fc1: QuantLinear,
+    /// Contraction layer `4d → d`.
+    pub fc2: QuantLinear,
+}
+
+/// The whole model, quantized for decode: shared read-only by every
+/// serve lane (one `Arc<QuantizedParams>` instead of a per-lane
+/// full-width parameter replica — see `crate::serve`).
+#[derive(Clone, Debug)]
+pub struct QuantizedParams {
+    /// Vocabulary size.
+    pub vocab: usize,
+    /// Context length.
+    pub block_size: usize,
+    /// Model width.
+    pub d_model: usize,
+    /// Number of transformer blocks.
+    pub n_layer: usize,
+    /// Heads per block.
+    pub n_head: usize,
+    /// Per-head width = d_model / n_head.
+    pub head_dim: usize,
+    /// Token embeddings, `vocab × d_model`, full precision.
+    pub tok_emb: Vec<f32>,
+    /// Positional embeddings, `block_size × d_model`, full precision.
+    pub pos_emb: Vec<f32>,
+    /// Per-block quantized parameters.
+    pub blocks: Vec<QuantBlock>,
+    /// Optional final LayerNorm.
+    pub ln_f: Option<LayerNormParams>,
+    /// LM head, `vocab × d_model` (with bias).
+    pub lm_head: QuantLinear,
+}
+
+impl QuantizedParams {
+    /// Total bytes a lane holds when it shares this structure — the
+    /// "bytes/lane" number of the drift harness.
+    pub fn bytes(&self) -> usize {
+        let f = std::mem::size_of::<f32>();
+        let mut b = (self.tok_emb.len() + self.pos_emb.len()) * f;
+        for blk in &self.blocks {
+            b += blk.ln1.bytes() + blk.ln2.bytes();
+            b += blk.wq.bytes() + blk.wk.bytes() + blk.wv.bytes();
+            b += blk.proj.bytes() + blk.fc1.bytes() + blk.fc2.bytes();
+        }
+        if let Some(ln) = &self.ln_f {
+            b += ln.bytes();
+        }
+        b += self.lm_head.bytes();
+        b
+    }
+
+    /// Last-position logits for one token window — the quantized decode
+    /// step, generic over the kernel backend. Deterministic f32; bitwise
+    /// identical across [`ScalarKernels`] and [`SimdKernels`].
+    pub fn logits<K: Kernels>(&self, tokens: &[u32]) -> Vec<f32> {
+        assert!(!tokens.is_empty(), "cannot decode an empty window");
+        assert!(tokens.len() <= self.block_size, "window exceeds block size");
+        let d = self.d_model;
+        // x[p] = tok_emb[token] + pos_emb[p], elementwise.
+        let mut x: Vec<Vec<f32>> = tokens
+            .iter()
+            .enumerate()
+            .map(|(p, &tok)| {
+                let te = &self.tok_emb[tok as usize * d..(tok as usize + 1) * d];
+                let pe = &self.pos_emb[p * d..(p + 1) * d];
+                te.iter().zip(pe).map(|(&a, &b)| a + b).collect()
+            })
+            .collect();
+        for blk in &self.blocks {
+            x = self.block_forward::<K>(blk, &x);
+        }
+        let last = x.last().expect("nonempty window");
+        let final_x: Vec<f32> = match &self.ln_f {
+            Some(ln) => layer_norm(ln, last),
+            None => last.clone(),
+        };
+        linear_q8::<K>(&self.lm_head, &final_x)
+    }
+
+    /// [`logits`](Self::logits) dispatched on a runtime
+    /// [`KernelBackend`] (what the serve engine holds).
+    pub fn logits_backend(&self, backend: KernelBackend, tokens: &[u32]) -> Vec<f32> {
+        match backend {
+            KernelBackend::Scalar => self.logits::<ScalarKernels>(tokens),
+            KernelBackend::Simd => self.logits::<SimdKernels>(tokens),
+        }
+    }
+
+    /// One pre-norm transformer block: x ← x + attn(ln1(x));
+    /// x ← x + mlp(ln2(x)). Mirrors `TransformerBlock::forward`.
+    fn block_forward<K: Kernels>(&self, blk: &QuantBlock, x: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        let d = self.d_model;
+        let block = x.len();
+        // Phase 1: q, k, v projections of the normed inputs (no bias).
+        let mut q = Vec::with_capacity(block);
+        let mut k = Vec::with_capacity(block);
+        let mut v = Vec::with_capacity(block);
+        for xs in x {
+            let n = layer_norm(&blk.ln1, xs);
+            q.push(matvec_q8::<K>(&blk.wq, &n));
+            k.push(matvec_q8::<K>(&blk.wk, &n));
+            v.push(matvec_q8::<K>(&blk.wv, &n));
+        }
+        // Phase 2: causal scores, softmax (no max subtraction — mirrors
+        // the tape's exp/reduce_sum/div composition), strided output fold.
+        let scale = (1.0 / (self.head_dim as f64).sqrt()) as f32;
+        let mut x1 = Vec::with_capacity(block);
+        for (p, xs) in x.iter().enumerate() {
+            let mut head_outs = Vec::with_capacity(d);
+            for h in 0..self.n_head {
+                let off = h * self.head_dim;
+                let qh = &q[p][off..off + self.head_dim];
+                let mut exps = Vec::with_capacity(p + 1);
+                let mut den = 0.0f32;
+                for kj in k.iter().take(p + 1) {
+                    let s = dot4(qh, &kj[off..off + self.head_dim]) * scale;
+                    let e = s.exp();
+                    exps.push(e);
+                    den += e;
+                }
+                for c in 0..self.head_dim {
+                    // Serial mul_add over positions — the dotStrided fold.
+                    let mut s = 0.0f32;
+                    for (j, &e) in exps.iter().enumerate() {
+                        s = (e / den).mul_add(v[j][off + c], s);
+                    }
+                    head_outs.push(s);
+                }
+            }
+            let proj = linear_q8::<K>(&blk.proj, &head_outs);
+            x1.push(xs.iter().zip(&proj).map(|(&a, &b)| a + b).collect::<Vec<f32>>());
+        }
+        // Feed-forward sub-layer with the second residual.
+        x1.iter()
+            .map(|xs| {
+                let n = layer_norm(&blk.ln2, xs);
+                let mut h = linear_q8::<K>(&blk.fc1, &n);
+                for hv in &mut h {
+                    if *hv <= 0.0 {
+                        *hv = 0.0;
+                    }
+                }
+                let m = linear_q8::<K>(&blk.fc2, &h);
+                xs.iter().zip(&m).map(|(&a, &b)| a + b).collect()
+            })
+            .collect()
+    }
+}
+
+/// LayerNorm with the tape's exact association: serial mean, centered
+/// serial mul_add mean-of-squares, `1/√(var + 1e-5)`, then per-dim
+/// `((c · scale) · γ) + β` (three separate roundings, never an FMA).
+fn layer_norm(ln: &LayerNormParams, xs: &[f32]) -> Vec<f32> {
+    let n = xs.len() as f32;
+    let mut s = 0.0f32;
+    for &x in xs {
+        s += x;
+    }
+    let mu = s / n;
+    let centered: Vec<f32> = xs.iter().map(|&x| x - mu).collect();
+    let mut ss = 0.0f32;
+    for &c in &centered {
+        ss = c.mul_add(c, ss);
+    }
+    let var = ss / n;
+    let scale = 1.0 / (var + 1e-5f32).sqrt();
+    centered
+        .iter()
+        .enumerate()
+        .map(|(j, &c)| (c * scale) * ln.gamma[j] + ln.beta[j])
+        .collect()
+}
+
+/// The tape's 4-accumulator `dot_ilp4` association in f32, used for the
+/// full-precision activation·activation attention scores (both operands
+/// are f32 — no i8 involved, so both backends share this body verbatim).
+fn dot4(xs: &[f32], ys: &[f32]) -> f32 {
+    debug_assert_eq!(xs.len(), ys.len());
+    let n = xs.len();
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    let mut k = 0usize;
+    while k + 4 <= n {
+        s0 = xs[k].mul_add(ys[k], s0);
+        s1 = xs[k + 1].mul_add(ys[k + 1], s1);
+        s2 = xs[k + 2].mul_add(ys[k + 2], s2);
+        s3 = xs[k + 3].mul_add(ys[k + 3], s3);
+        k += 4;
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    while k < n {
+        s = xs[k].mul_add(ys[k], s);
+        k += 1;
+    }
+    s
+}
+
+/// Bias-free quantized matvec: one `dot_param_range_q8` per output row.
+fn matvec_q8<K: Kernels>(m: &QuantMatrix, xs: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(xs.len(), m.cols);
+    (0..m.rows)
+        .map(|u| K::dot_param_range_q8(xs, &m.q, u * m.cols, m.cols, m.scales[u], 0.0))
+        .collect()
+}
+
+/// Quantized linear with full-precision bias.
+fn linear_q8<K: Kernels>(l: &QuantLinear, xs: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(xs.len(), l.w.cols);
+    (0..l.w.rows)
+        .map(|u| K::dot_param_range_q8(xs, &l.w.q, u * l.w.cols, l.w.cols, l.w.scales[u], l.bias[u]))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pseudo(seed: u32, n: usize) -> Vec<f32> {
+        // xorshift-ish deterministic floats in about [-1, 1].
+        let mut s = seed.wrapping_mul(2654435761).wrapping_add(12345);
+        (0..n)
+            .map(|_| {
+                s ^= s << 13;
+                s ^= s >> 17;
+                s ^= s << 5;
+                (s as f32 / u32::MAX as f32) * 2.0 - 1.0
+            })
+            .collect()
+    }
+
+    #[test]
+    fn quantize_row_round_trips_within_half_scale() {
+        let row = pseudo(7, 37);
+        let (scale, q) = quantize_row(&row);
+        assert!(scale > 0.0);
+        for (w, &qi) in row.iter().zip(&q) {
+            assert!((-127..=127).contains(&(qi as i32)));
+            let back = scale * qi as f32;
+            assert!(
+                (w - back).abs() <= scale * 0.5 + 1e-6,
+                "w={w} back={back} scale={scale}"
+            );
+        }
+        // The max-magnitude element hits exactly ±127.
+        let max_q = q.iter().map(|&qi| (qi as i32).abs()).max().unwrap();
+        assert_eq!(max_q, 127);
+    }
+
+    #[test]
+    fn quantize_row_handles_all_zero_rows() {
+        let (scale, q) = quantize_row(&[0.0f32; 9]);
+        assert_eq!(scale, 0.0);
+        assert!(q.iter().all(|&qi| qi == 0));
+        // Dequantization reproduces the zeros exactly (0 · 0 = 0).
+        assert!(q.iter().all(|&qi| scale * qi as f32 == 0.0));
+    }
+
+    #[test]
+    fn dot_q8_reference_matches_hand_fold_across_boundaries() {
+        // Sizes 0..=23 cross the 8-wide unroll and every remainder phase.
+        for n in 0..=23usize {
+            let xs = pseudo(11 + n as u32, n);
+            let q: Vec<i8> = (0..n).map(|i| ((i as i32 * 37) % 255 - 127) as i8).collect();
+            let got = dot_q8_reference(&xs, &q, 0.03125, 0.25);
+            // Hand expansion of the documented association.
+            let mut s = [0.0f32; 8];
+            let mut k = 0usize;
+            while k + 8 <= n {
+                for j in 0..8 {
+                    s[j] = xs[k + j].mul_add(q[k + j] as f32, s[j]);
+                }
+                k += 8;
+            }
+            let mut acc =
+                ((s[0] + s[1]) + (s[2] + s[3])) + ((s[4] + s[5]) + (s[6] + s[7]));
+            while k < n {
+                acc = xs[k].mul_add(q[k] as f32, acc);
+                k += 1;
+            }
+            let want = 0.03125f32.mul_add(acc, 0.25);
+            assert_eq!(got.to_bits(), want.to_bits(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn gather_dot_q8_equals_dot_q8_on_identity_gather() {
+        let n = 19usize;
+        let xs = pseudo(3, n);
+        let q: Vec<i8> = (0..n).map(|i| (i as i32 - 9) as i8).collect();
+        let ids: Vec<u32> = (0..n as u32).collect();
+        let a = dot_q8_reference(&xs, &q, 0.5, -1.0);
+        let b = gather_dot_q8_reference(&xs, &ids, &q, 0.5, -1.0);
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+
+    #[test]
+    fn dot_param_range_q8_reads_the_row_slice() {
+        let cols = 13usize;
+        let w = pseudo(5, 3 * cols);
+        let m = QuantMatrix::quantize(3, cols, &w);
+        let xs = pseudo(6, cols);
+        for r in 0..3 {
+            let got =
+                dot_param_range_q8_reference(&xs, &m.q, r * cols, cols, m.scales[r], 0.125);
+            let want =
+                dot_q8_reference(&xs, &m.q[r * cols..(r + 1) * cols], m.scales[r], 0.125);
+            assert_eq!(got.to_bits(), want.to_bits(), "row {r}");
+        }
+    }
+
+    #[test]
+    fn quant_matrix_accounting_and_dequantization() {
+        let (rows, cols) = (4usize, 6usize);
+        let w = pseudo(9, rows * cols);
+        let m = QuantMatrix::quantize(rows, cols, &w);
+        assert_eq!(m.bytes(), rows * cols + rows * 4);
+        let deq = m.dequantized();
+        assert_eq!(deq.len(), rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                let err = (deq[r * cols + c] - w[r * cols + c]).abs();
+                assert!(err <= m.scales[r] * 0.5 + 1e-6, "r={r} c={c}");
+            }
+        }
+    }
+
+    fn tiny_model() -> QuantizedParams {
+        let (vocab, block_size, d, n_layer, n_head) = (5usize, 4usize, 4usize, 2usize, 2usize);
+        let mk_ln = |seed: u32| LayerNormParams {
+            gamma: pseudo(seed, d).iter().map(|g| 1.0 + 0.1 * g).collect(),
+            beta: pseudo(seed + 1, d).iter().map(|b| 0.05 * b).collect(),
+        };
+        let mk_mat = |seed: u32, rows: usize, cols: usize| {
+            QuantMatrix::quantize(rows, cols, &pseudo(seed, rows * cols))
+        };
+        let mk_lin = |seed: u32, rows: usize, cols: usize| QuantLinear {
+            w: mk_mat(seed, rows, cols),
+            bias: pseudo(seed + 100, rows).iter().map(|b| 0.1 * b).collect(),
+        };
+        let blocks = (0..n_layer as u32)
+            .map(|l| QuantBlock {
+                ln1: mk_ln(1000 + l * 50),
+                wq: mk_mat(1010 + l * 50, d, d),
+                wk: mk_mat(1020 + l * 50, d, d),
+                wv: mk_mat(1030 + l * 50, d, d),
+                proj: mk_lin(1040 + l * 50, d, d),
+                ln2: mk_ln(1002 + l * 50),
+                fc1: mk_lin(1050 + l * 50, 4 * d, d),
+                fc2: mk_lin(1060 + l * 50, d, 4 * d),
+            })
+            .collect();
+        QuantizedParams {
+            vocab,
+            block_size,
+            d_model: d,
+            n_layer,
+            n_head,
+            head_dim: d / n_head,
+            tok_emb: pseudo(100, vocab * d),
+            pos_emb: pseudo(200, block_size * d),
+            blocks,
+            ln_f: Some(mk_ln(300)),
+            lm_head: mk_lin(400, vocab, d),
+        }
+    }
+
+    #[test]
+    fn quantized_logits_are_deterministic_and_finite() {
+        let m = tiny_model();
+        let toks = [1u32, 3, 0, 4];
+        let a = m.logits::<ScalarKernels>(&toks);
+        let b = m.logits::<ScalarKernels>(&toks);
+        assert_eq!(a.len(), m.vocab);
+        assert!(a.iter().all(|z| z.is_finite()));
+        let bits = |zs: &[f32]| zs.iter().map(|z| z.to_bits()).collect::<Vec<u32>>();
+        assert_eq!(bits(&a), bits(&b));
+    }
+
+    #[test]
+    fn quantized_logits_agree_bitwise_across_backends() {
+        // The q8 bitwise contract end-to-end: scalar and SIMD backends
+        // produce identical logits for every window length.
+        let m = tiny_model();
+        for len in 1..=4usize {
+            let toks: Vec<u32> = (0..len as u32).map(|i| (i * 3 + 1) % 5).collect();
+            let a = m.logits::<ScalarKernels>(&toks);
+            let b = m.logits::<SimdKernels>(&toks);
+            let ab: Vec<u32> = a.iter().map(|z| z.to_bits()).collect();
+            let bb: Vec<u32> = b.iter().map(|z| z.to_bits()).collect();
+            assert_eq!(ab, bb, "window {len}");
+            let c = m.logits_backend(KernelBackend::Simd, &toks);
+            let cb: Vec<u32> = c.iter().map(|z| z.to_bits()).collect();
+            assert_eq!(ab, cb, "runtime dispatch window {len}");
+        }
+    }
+
+    #[test]
+    fn bytes_counts_every_component() {
+        let m = tiny_model();
+        let d = m.d_model;
+        // Tiny config: embeddings f32, 2 blocks of {2 LN, 3 d×d mats,
+        // 3 quant linears}, final LN, lm_head.
+        let ln = 2 * d * 4;
+        let mat = |r: usize, c: usize| r * c + r * 4;
+        let lin = |r: usize, c: usize| mat(r, c) + r * 4;
+        let per_block = 2 * ln + 3 * mat(d, d) + lin(d, d) + lin(4 * d, d) + lin(d, 4 * d);
+        let want = (m.vocab * d + m.block_size * d) * 4
+            + 2 * per_block
+            + ln
+            + lin(m.vocab, d);
+        assert_eq!(m.bytes(), want);
+    }
+}

@@ -304,6 +304,28 @@ impl Kernels for ScalarKernels {
         }
         grad[z0 + target] -= g;
     }
+
+    #[inline(always)]
+    fn dot_q8(xs: &[f32], q: &[i8], scale: f32, bias: f32) -> f32 {
+        super::quant::dot_q8_reference(xs, q, scale, bias)
+    }
+
+    #[inline(always)]
+    fn gather_dot_q8(val: &[f32], ids: &[u32], q: &[i8], scale: f32, bias: f32) -> f32 {
+        super::quant::gather_dot_q8_reference(val, ids, q, scale, bias)
+    }
+
+    #[inline(always)]
+    fn dot_param_range_q8(
+        xs: &[f32],
+        q: &[i8],
+        w0: usize,
+        n: usize,
+        scale: f32,
+        bias: f32,
+    ) -> f32 {
+        super::quant::dot_param_range_q8_reference(xs, q, w0, n, scale, bias)
+    }
 }
 
 #[cfg(test)]

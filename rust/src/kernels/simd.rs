@@ -1,7 +1,7 @@
 //! The AVX2+FMA vector backend, bitwise-pinned to [`ScalarKernels`].
 //!
-//! Only two kernel families carry vector bodies, because only they admit
-//! a vector formulation that reproduces the scalar operation order
+//! Only three kernel families carry vector bodies, because only they
+//! admit a vector formulation that reproduces the scalar operation order
 //! *exactly* (see [`super::dispatch_table`] for the full resolution):
 //!
 //! - **`dot`** — [`crate::ops::dot_ilp4`] already computes four
@@ -20,6 +20,13 @@
 //!   matters when the x- and w-ranges alias — the vector path therefore
 //!   runs only when the ranges are disjoint, falling back to the scalar
 //!   body on overlap.
+//! - **`dot_q8`** (and `dot_param_range_q8`, which delegates to it) —
+//!   the int8 weight-quantized dot. Its scalar reference
+//!   ([`crate::kernels::quant::dot_q8_reference`]) folds **eight**
+//!   independent f32 accumulators, so one 8-lane `vfmadd231ps`
+//!   accumulator over `cvtepi8_epi32`-widened weights (i8 → f32 is
+//!   exact) reproduces the scalar result bit for bit, lane `j` = scalar
+//!   accumulator `s[j]`.
 //!
 //! Everything else (gathered ids, strided scatters, the serial
 //! `dotStrided` fold, the transcendental CE kernels) delegates straight
@@ -131,6 +138,45 @@ mod x86 {
             *grad.add(w0 + k) += g * xv;
             k += 1;
         }
+    }
+
+    /// Int8 weight-quantized dot in the exact 8-accumulator association
+    /// of [`crate::kernels::quant::dot_q8_reference`]: one 8-lane FMA
+    /// accumulator (lane `j` = scalar accumulator `s[j]`), i8 weights
+    /// widened **exactly** through `cvtepi8_epi32` → `cvtepi32_ps`
+    /// (every i8 is representable in f32, so the widening adds no
+    /// rounding), fixed-order horizontal reduce, serial remainder, one
+    /// final `scale·acc + bias` fma.
+    ///
+    /// # Safety
+    /// `xs` and `q` must be valid for `n` reads; the CPU must support
+    /// AVX2+FMA.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn dot_q8(
+        xs: *const f32,
+        q: *const i8,
+        n: usize,
+        scale: f32,
+        bias: f32,
+    ) -> f32 {
+        let mut acc = _mm256_setzero_ps();
+        let mut k = 0usize;
+        while k + 8 <= n {
+            let x = _mm256_loadu_ps(xs.add(k));
+            let qb = _mm_loadl_epi64(q.add(k) as *const __m128i);
+            let qf = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(qb));
+            acc = _mm256_fmadd_ps(x, qf, acc);
+            k += 8;
+        }
+        let mut lanes = [0.0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        let mut s = ((lanes[0] + lanes[1]) + (lanes[2] + lanes[3]))
+            + ((lanes[4] + lanes[5]) + (lanes[6] + lanes[7]));
+        while k < n {
+            s = (*xs.add(k)).mul_add(*q.add(k) as f32, s);
+            k += 1;
+        }
+        scale.mul_add(s, bias)
     }
 
     /// f32 twin of [`adj_dot_range_f64`].
@@ -351,6 +397,41 @@ impl Kernels for SimdKernels {
     ) {
         ScalarKernels::adj_ce_logits(val, grad, z0, n, target, g)
     }
+
+    #[inline(always)]
+    fn dot_q8(xs: &[f32], q: &[i8], scale: f32, bias: f32) -> f32 {
+        debug_assert_eq!(xs.len(), q.len());
+        #[cfg(target_arch = "x86_64")]
+        if super::simd_available() {
+            // SAFETY: lengths were just asserted equal, feature support
+            // was checked, and both pointers read exactly `len` elements.
+            let s = unsafe { x86::dot_q8(xs.as_ptr(), q.as_ptr(), xs.len(), scale, bias) };
+            debug_assert_eq!(
+                s.to_bits(),
+                super::quant::dot_q8_reference(xs, q, scale, bias).to_bits(),
+                "vector dot_q8 diverged from the 8-accumulator reference fold"
+            );
+            return s;
+        }
+        ScalarKernels::dot_q8(xs, q, scale, bias)
+    }
+
+    #[inline(always)]
+    fn gather_dot_q8(val: &[f32], ids: &[u32], q: &[i8], scale: f32, bias: f32) -> f32 {
+        ScalarKernels::gather_dot_q8(val, ids, q, scale, bias)
+    }
+
+    #[inline(always)]
+    fn dot_param_range_q8(
+        xs: &[f32],
+        q: &[i8],
+        w0: usize,
+        n: usize,
+        scale: f32,
+        bias: f32,
+    ) -> f32 {
+        Self::dot_q8(&xs[..n], &q[w0..w0 + n], scale, bias)
+    }
 }
 
 #[cfg(test)]
@@ -392,6 +473,30 @@ mod tests {
             ScalarKernels::dot(&xs, &ws, 0.5).to_bits(),
             "backends disagree on the association-sensitive case"
         );
+    }
+
+    #[test]
+    fn dot_q8_matches_scalar_bitwise_across_boundaries() {
+        // Sizes 0..=23 cross the 8-lane vector width and every remainder
+        // phase; weights span the full i8 range so the exactness of the
+        // cvtepi8 widening is exercised too.
+        for n in 0..=23usize {
+            let xs: Vec<f32> = (0..n).map(|i| (i as f32 - 11.5) * 3.25e2).collect();
+            let q: Vec<i8> = (0..n)
+                .map(|i| ((i as i32 * 53 + 7) % 255 - 127) as i8)
+                .collect();
+            let got = SimdKernels::dot_q8(&xs, &q, 0.0625, -0.5);
+            let want = ScalarKernels::dot_q8(&xs, &q, 0.0625, -0.5);
+            assert_eq!(got.to_bits(), want.to_bits(), "n={n}");
+        }
+        // The row-slice form agrees through both backends too.
+        let xs: Vec<f32> = (0..13).map(|i| 0.17 * i as f32 - 1.0).collect();
+        let q: Vec<i8> = (0..39).map(|i| (i as i32 % 127 - 63) as i8).collect();
+        for r in 0..3 {
+            let got = SimdKernels::dot_param_range_q8(&xs, &q, r * 13, 13, 0.25, 1.5);
+            let want = ScalarKernels::dot_param_range_q8(&xs, &q, r * 13, 13, 0.25, 1.5);
+            assert_eq!(got.to_bits(), want.to_bits(), "row {r}");
+        }
     }
 
     #[test]

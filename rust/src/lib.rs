@@ -111,8 +111,9 @@
 //!
 //! Robustness rides on the same determinism contracts rather than
 //! relaxing them. Training writes **crash-safe snapshots**
-//! (`--checkpoint-every N`): a versioned, CRC32-checksummed `BURPARM v2`
-//! parameter checkpoint plus a `BURSTAT` sidecar (step counter, sampler
+//! (`--checkpoint-every N`): a versioned, CRC32-checksummed `BURPARM`
+//! (v2 full-width, v3 for `--params-dtype bf16|f16`) parameter
+//! checkpoint plus a `BURSTAT` sidecar (step counter, sampler
 //! RNG state, in-flight batch), both published atomically via temp-file +
 //! rename ([`serialize::write_file_atomic`]), so a crash at any byte
 //! leaves the previous snapshot intact; `--resume` continues **bitwise
@@ -133,6 +134,36 @@
 //! ([`serve::SessionStatus`]). All of it is driven deterministically by
 //! the seeded fault-injection harness ([`testkit::FaultPlan`]) in
 //! `tests/fault_tolerance.rs`.
+//!
+//! ## Precision
+//!
+//! Compute is full-width; low precision enters at two seams with two
+//! distinct guarantees:
+//!
+//! - **Checkpoint storage (`--params-dtype bf16|f16`) — deterministic
+//!   and oracle-checked.** [`serialize::save_params_range_as`] writes a
+//!   `BURPARM v3` checkpoint at 2 bytes/parameter: one
+//!   round-to-nearest-even narrowing at save
+//!   ([`serialize::f32_to_bf16_bits`] / [`serialize::f32_to_f16_bits`]),
+//!   an *exact* widening at load (bf16/f16 ⊂ f32 ⊂ f64), so every tape
+//!   scalar type loads `widen(narrow(w))` bit for bit and `sample`,
+//!   `serve`, and `--resume` accept v3 files transparently. Correct
+//!   rounding (≤ half a narrow ULP, specials preserved) and the pinned
+//!   v3 byte layout are proven in `tests/precision.rs`.
+//! - **Serving weights (`serve --quantize int8`) — drift-bounded,
+//!   never bitwise.** [`nn::Gpt::quantize`] derives one read-only
+//!   per-row symmetric int8 table ([`kernels::QuantizedParams`]) that
+//!   all lanes share (~8× less weight memory than a full-width
+//!   replica). The quantized decode path is deterministic and
+//!   scalar≡simd bitwise *within itself*, but weight rounding
+//!   (|w − s·q| ≤ s/2) makes its logits near — never equal to — the
+//!   full-precision stream; `benches/table_quant.rs` measures the
+//!   drift, and `tests/precision.rs` bounds it against the
+//!   dequantized-weights oracle ([`nn::Gpt::load_quantized`]).
+//!
+//! Orthogonally, [`compress`] quantizes the **gradient transport** edge
+//! during training (RandK/TopK/EF21 on the reduction tree); storage
+//! precision and transport compression compose freely.
 //!
 //! ## The zero-steady-state-allocation discipline
 //!

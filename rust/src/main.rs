@@ -24,8 +24,10 @@ use burtorch::metrics::{MemInfo, Timer};
 use burtorch::nn::{CeMode, CharMlp, CharMlpConfig, Gpt, GptConfig};
 use burtorch::parallel::ReductionCompression;
 use burtorch::rng::Rng;
+use burtorch::serialize::ParamDtype;
 use burtorch::serve::{
-    parse_requests, DecodeMode, ParsedRequest, ServeEngine, ServeOptions, SessionStatus,
+    parse_requests, DecodeMode, ParsedRequest, QuantizeMode, ServeEngine, ServeOptions,
+    SessionStatus,
 };
 use burtorch::tape::{Builder, Tape};
 use burtorch::viz;
@@ -67,6 +69,7 @@ fn usage() -> &'static str {
                  [--compress none|randk:k=64|topk:k=64|ef21[:k=N]]\n\
                  [--exec eager|replay] [--scratch] [--composed-ce]\n\
                  [--pin-cores] [--params w.bin]\n\
+                 [--params-dtype f32|bf16|f16]\n\
                  [--checkpoint-every N] [--resume]\n\
                  [--kernel scalar|simd|auto]\n\
                  (--threads 0 = all cores; any W gives bitwise-identical\n\
@@ -84,7 +87,11 @@ fn usage() -> &'static str {
                   that snapshot and finishes bitwise identical to the\n\
                   uninterrupted run; --kernel picks the fused-kernel\n\
                   backend — every choice trains bitwise identically on\n\
-                  a given build, see `burtorch kernels`)\n\
+                  a given build, see `burtorch kernels`;\n\
+                  --params-dtype stores checkpoints bf16/f16 at half\n\
+                  the bytes — rounded once on save, widened\n\
+                  deterministically on load, accepted transparently by\n\
+                  sample/serve/--resume)\n\
        fed       --clients N --rounds R --compressor identity|randk|topk\n\
                  [--exec eager|replay]\n\
                  (--exec replay drives each client's local oracles through\n\
@@ -97,6 +104,7 @@ fn usage() -> &'static str {
                  [--cache-cap N] [--max-active M] [--seed S]\n\
                  [--max-queue Q] [--deadline-ms D] [--max-tokens T]\n\
                  [--decode full|incremental] [--kernel scalar|simd|auto]\n\
+                 [--quantize none|int8]\n\
                  (batched multi-session inference; requests come one per\n\
                   line as 'seed|max_new_tokens|temperature|prompt', read\n\
                   from FILE or stdin; --lanes fans sessions across worker\n\
@@ -112,8 +120,13 @@ fn usage() -> &'static str {
                   O(window) instead of O(window^2) per token, bitwise\n\
                   the same tokens as the full-window default;\n\
                   a lane fault is quarantined and healed, the rest of\n\
-                  the batch serves on, bit-identical)\n\
-       params    inspect <file>   (print checkpoint header + checksum)\n\
+                  the batch serves on, bit-identical;\n\
+                  --quantize int8 serves per-row int8 weights from one\n\
+                  read-only table shared by every lane — ~8x less\n\
+                  weight RAM, deterministic and backend-bitwise, but\n\
+                  numerically near rather than equal to full precision)\n\
+       params    inspect <file>   (print checkpoint header, dtype,\n\
+                  payload bytes + checksum; non-zero on unknown dtype)\n\
        artifacts [--dir artifacts]      (PJRT smoke-run of AOT graphs)\n\
        kernels   (CPU features, auto-resolved backend, per-family\n\
                   kernel dispatch table)\n\
@@ -181,6 +194,17 @@ fn trainer_options(cli: &Cli, cfg: &Config) -> TrainerOptions {
     // forced `simd` on a CPU without AVX2+FMA is a hard error rather
     // than a silent scalar fallback.
     let kernel = parse_kernel_choice(&cli.opt_or("kernel", &cfg.str_or("train.kernel", "auto")));
+    // `--params-dtype` (CLI) / `train.params_dtype` (config): the storage
+    // dtype of every checkpoint this run writes (periodic snapshots and
+    // the final save). bf16/f16 halve the file; loading widens back.
+    let dtype_spec = cli.opt_or("params-dtype", &cfg.str_or("train.params_dtype", "native"));
+    let params_dtype = match ParamDtype::parse(&dtype_spec) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("error: --params-dtype: {e}");
+            std::process::exit(2);
+        }
+    };
     TrainerOptions {
         steps: cli.int_or("steps", cfg.int_or("train.steps", 200)) as usize,
         batch: cli.int_or("batch", cfg.int_or("train.batch", 1)) as usize,
@@ -206,6 +230,7 @@ fn trainer_options(cli: &Cli, cfg: &Config) -> TrainerOptions {
         checkpoint,
         resume,
         kernel,
+        params_dtype,
     }
 }
 
@@ -262,7 +287,10 @@ fn cmd_train(cli: &Cli) -> i32 {
             let r = trainer.train_char_mlp(&mut tape, &model, &ds.examples);
             print_report(&r);
             if let Some(path) = cli.opt("params") {
-                return save_checkpoint(path, model.save_params(&tape, Path::new(path)));
+                return save_checkpoint(
+                    path,
+                    model.save_params_as(&tape, Path::new(path), opts.params_dtype),
+                );
             }
         }
         ModelKind::Gpt => {
@@ -277,7 +305,10 @@ fn cmd_train(cli: &Cli) -> i32 {
             let r = trainer.train_gpt(&mut tape, &model, &corpus);
             print_report(&r);
             if let Some(path) = cli.opt("params") {
-                return save_checkpoint(path, model.save_params(&tape, Path::new(path)));
+                return save_checkpoint(
+                    path,
+                    model.save_params_as(&tape, Path::new(path), opts.params_dtype),
+                );
             }
         }
     }
@@ -459,6 +490,14 @@ fn cmd_serve(cli: &Cli) -> i32 {
     let max_tokens = cli.usize_or("max-tokens", 0);
     let deadline_ms = cli.opt("deadline-ms").map(|_| cli.int_or("deadline-ms", 0) as u64);
     let kernel = parse_kernel_choice(cli.opt("kernel").unwrap_or("auto"));
+    let quantize = match cli.opt("quantize").unwrap_or("none") {
+        "none" => QuantizeMode::None,
+        "int8" => QuantizeMode::Int8,
+        other => {
+            eprintln!("error: --quantize must be 'none' or 'int8', got '{other}'");
+            return 2;
+        }
+    };
     // Only the tokenizer is needed from the corpus; the char set (and
     // therefore every token id) is independent of the tiling length, so
     // a small corpus builds the same vocabulary training used.
@@ -511,12 +550,13 @@ fn cmd_serve(cli: &Cli) -> i32 {
         ),
     }
     println!(
-        "serving {n_requests} request(s): lanes={lanes} cache-cap={} max-active={} max-queue={} decode={} kernel={}",
+        "serving {n_requests} request(s): lanes={lanes} cache-cap={} max-active={} max-queue={} decode={} kernel={} quantize={}",
         if cache_cap == 0 { "unbounded".to_string() } else { cache_cap.to_string() },
         if max_active == 0 { "unlimited".to_string() } else { max_active.to_string() },
         if max_queue == 0 { "unbounded".to_string() } else { max_queue.to_string() },
         if decode == DecodeMode::Incremental { "incremental" } else { "full" },
         kernel.resolve(),
+        if quantize == QuantizeMode::Int8 { "int8" } else { "none" },
     );
     let mut engine = ServeEngine::new(
         tape,
@@ -530,6 +570,7 @@ fn cmd_serve(cli: &Cli) -> i32 {
             max_tokens,
             decode,
             kernel,
+            quantize,
         },
     );
     // Echo each prompt→completion pair; decode through the same tokenizer.
@@ -587,6 +628,14 @@ fn cmd_serve(cli: &Cli) -> i32 {
         st.compactions,
         st.peak_tape_nodes,
     );
+    if st.quantize == QuantizeMode::Int8 {
+        println!(
+            "quantize: int8 weight table {} bytes shared by {} lane(s) (full-width replica would be {} bytes per lane)",
+            st.quant_bytes,
+            engine.lanes(),
+            engine.model().num_params() * std::mem::size_of::<f32>(),
+        );
+    }
     if st.quarantines > 0 || st.shed > 0 {
         println!(
             "faults: {} lane quarantine(s) healed | {} request(s) shed",
@@ -610,15 +659,20 @@ fn cmd_params(cli: &Cli) -> i32 {
         Ok(h) => {
             println!("file:     {}", path.display());
             println!("format:   BURPARM v{}", h.version);
-            println!(
-                "dtype:    {} bytes/param ({})",
-                h.dtype_bytes,
-                match h.dtype_bytes {
-                    4 => "fp32",
-                    8 => "fp64",
-                    _ => "unknown",
+            // The dtype byte is a code in v3 and a bytes-per-scalar in
+            // v1/v2; `dtype_name`/`elem_bytes` give the unified view. An
+            // unrecognized dtype is an inspection failure — the loader
+            // would reject the file too.
+            match (h.dtype_name(), h.elem_bytes(), h.payload_bytes()) {
+                (Some(name), Some(elem), Some(payload)) => {
+                    println!("dtype:    {name} ({elem} byte(s)/param)");
+                    println!("payload:  {payload} bytes");
                 }
-            );
+                _ => {
+                    eprintln!("error: unknown dtype byte {} in v{} header", h.dtype_bytes, h.version);
+                    return 1;
+                }
+            }
             println!("params:   {}", h.count);
             match h.checksum_ok() {
                 Some(true) => {
@@ -720,7 +774,7 @@ fn cmd_kernels() -> i32 {
 fn cmd_info() -> i32 {
     let mem = MemInfo::snapshot();
     println!("burtorch {} — latency-first CPU backprop", env!("CARGO_PKG_VERSION"));
-    println!("dtype support: fp32, fp64");
+    println!("dtype support: fp32, fp64 (compute); bf16, f16 (checkpoints); int8 (serve --quantize)");
     println!("ops: {} scalar op codes (paper Tables 8–10)", burtorch::ops::Op::COUNT);
     println!("GPT paper config params: {}", GptConfig::paper().vocab * 0 + 46_289);
     println!("process VmPeak: {:.1} MB, VmHWM: {:.1} MB", mem.vm_peak_mb(), mem.vm_hwm_mb());

@@ -11,9 +11,12 @@ use super::{
     cross_entropy_recorded, Act, CeBind, CeMode, LayerNorm, Linear, ParamAlloc, ParamRange,
     TransformerBlock,
 };
+use crate::kernels::quant::{LayerNormParams, QuantBlock, QuantLinear, QuantMatrix, QuantizedParams};
 use crate::rng::Rng;
 use crate::scalar::Scalar;
-use crate::serialize::{load_params_range, save_params_range, SerializeError};
+use crate::serialize::{
+    load_params_range, save_params_range, save_params_range_as, ParamDtype, SerializeError,
+};
 use crate::tape::{Mark, ProgramCache, Recording, StepProgram, Tape, Value};
 
 /// GPT configuration (paper §2.5 "GPT-3-like model: configuration").
@@ -150,6 +153,117 @@ impl Gpt {
         path: &Path,
     ) -> Result<usize, SerializeError> {
         save_params_range(tape, self.params.first, self.params.len, path)
+    }
+
+    /// [`Gpt::save_params`] with an explicit storage dtype: `Native`
+    /// writes the tape's own width (BURPARM v2), `Bf16`/`F16` narrow
+    /// round-to-nearest-even into a half-width v3 checkpoint
+    /// ([`crate::serialize::save_params_range_as`]). Either kind loads
+    /// back through the unchanged [`Gpt::load_params`].
+    pub fn save_params_as<T: Scalar>(
+        &self,
+        tape: &Tape<T>,
+        path: &Path,
+        dtype: ParamDtype,
+    ) -> Result<usize, SerializeError> {
+        save_params_range_as(tape, self.params.first, self.params.len, path, dtype)
+    }
+
+    /// Quantize the decode-hot weight matrices to int8 for serving: one
+    /// shared read-only [`QuantizedParams`] replaces the per-lane
+    /// full-width parameter replica (see `crate::serve`). Per-row
+    /// symmetric quantization of q/k/v, the attention projection, both
+    /// MLP layers and the LM head; embeddings, LayerNorm affines and
+    /// biases stay full-precision f32. Pure read — the tape is untouched.
+    pub fn quantize<T: Scalar>(&self, tape: &Tape<T>) -> QuantizedParams {
+        let vals = |r: ParamRange| -> Vec<f32> {
+            r.iter().map(|v| tape.value(v).to_f64() as f32).collect()
+        };
+        let ln = |g: ParamRange, b: ParamRange| LayerNormParams {
+            gamma: vals(g),
+            beta: vals(b),
+        };
+        let d = self.cfg.d_model;
+        let blocks = self
+            .blocks
+            .iter()
+            .map(|blk| QuantBlock {
+                ln1: ln(blk.ln1.gamma, blk.ln1.beta),
+                wq: QuantMatrix::quantize(d, d, &vals(blk.attn.wq)),
+                wk: QuantMatrix::quantize(d, d, &vals(blk.attn.wk)),
+                wv: QuantMatrix::quantize(d, d, &vals(blk.attn.wv)),
+                proj: QuantLinear {
+                    w: QuantMatrix::quantize(d, d, &vals(blk.attn.proj.w)),
+                    bias: vals(blk.attn.proj.b),
+                },
+                ln2: ln(blk.ln2.gamma, blk.ln2.beta),
+                fc1: QuantLinear {
+                    w: QuantMatrix::quantize(4 * d, d, &vals(blk.fc1.w)),
+                    bias: vals(blk.fc1.b),
+                },
+                fc2: QuantLinear {
+                    w: QuantMatrix::quantize(d, 4 * d, &vals(blk.fc2.w)),
+                    bias: vals(blk.fc2.b),
+                },
+            })
+            .collect();
+        QuantizedParams {
+            vocab: self.cfg.vocab,
+            block_size: self.cfg.block_size,
+            d_model: d,
+            n_layer: self.cfg.n_layer,
+            n_head: self.cfg.n_head,
+            head_dim: d / self.cfg.n_head,
+            tok_emb: vals(self.tok_emb),
+            pos_emb: vals(self.pos_emb),
+            blocks,
+            ln_f: self.ln_f.as_ref().map(|l| ln(l.gamma, l.beta)),
+            lm_head: QuantLinear {
+                w: QuantMatrix::quantize(self.cfg.vocab, d, &vals(self.lm_head.w)),
+                bias: vals(self.lm_head.b),
+            },
+        }
+    }
+
+    /// Write a [`QuantizedParams`] *back* into this model's parameter
+    /// leaves: quantized matrices land as their dequantized values
+    /// (`scale · q`), everything else as the f32 the table stores —
+    /// both widened exactly into `T`. The result is the
+    /// **dequantized-weights oracle**: a full-precision model whose
+    /// weights match the int8 table bit for bit, so any disagreement
+    /// with the quantized decode path isolates f32-vs-f64 *activation*
+    /// rounding from the (much larger) weight rounding. The drift
+    /// harness and `tests/precision.rs` are built on it.
+    pub fn load_quantized<T: Scalar>(&self, tape: &mut Tape<T>, qp: &QuantizedParams) {
+        let set = |tape: &mut Tape<T>, r: ParamRange, vals: &[f32]| {
+            assert_eq!(r.len, vals.len(), "quantized table shape mismatch");
+            for (k, v) in r.iter().enumerate() {
+                tape.set_value(v, T::from_f64(f64::from(vals[k])));
+            }
+        };
+        set(tape, self.tok_emb, &qp.tok_emb);
+        set(tape, self.pos_emb, &qp.pos_emb);
+        for (blk, qb) in self.blocks.iter().zip(&qp.blocks) {
+            set(tape, blk.ln1.gamma, &qb.ln1.gamma);
+            set(tape, blk.ln1.beta, &qb.ln1.beta);
+            set(tape, blk.attn.wq, &qb.wq.dequantized());
+            set(tape, blk.attn.wk, &qb.wk.dequantized());
+            set(tape, blk.attn.wv, &qb.wv.dequantized());
+            set(tape, blk.attn.proj.w, &qb.proj.w.dequantized());
+            set(tape, blk.attn.proj.b, &qb.proj.bias);
+            set(tape, blk.ln2.gamma, &qb.ln2.gamma);
+            set(tape, blk.ln2.beta, &qb.ln2.beta);
+            set(tape, blk.fc1.w, &qb.fc1.w.dequantized());
+            set(tape, blk.fc1.b, &qb.fc1.bias);
+            set(tape, blk.fc2.w, &qb.fc2.w.dequantized());
+            set(tape, blk.fc2.b, &qb.fc2.bias);
+        }
+        if let (Some(l), Some(ql)) = (&self.ln_f, &qp.ln_f) {
+            set(tape, l.gamma, &ql.gamma);
+            set(tape, l.beta, &ql.beta);
+        }
+        set(tape, self.lm_head.w, &qp.lm_head.w.dequantized());
+        set(tape, self.lm_head.b, &qp.lm_head.bias);
     }
 
     /// Load a checkpoint written by [`Gpt::save_params`] into this
@@ -883,6 +997,72 @@ mod tests {
         }
         assert_eq!(cache.len(), 2, "one program per window length");
         assert_eq!((cache.misses(), cache.hits()), (2, 2));
+    }
+
+    #[test]
+    fn quantize_cuts_weight_bytes_and_bounds_per_row_error() {
+        let mut t = Tape::<f64>::new();
+        let mut rng = Rng::new(71);
+        let gpt = Gpt::new(&mut t, GptConfig::paper(), &mut rng);
+        let qp = gpt.quantize(&t);
+        assert_eq!(qp.blocks.len(), gpt.cfg.n_layer);
+        assert_eq!(qp.lm_head.w.rows, gpt.cfg.vocab);
+        assert_eq!(qp.lm_head.w.cols, gpt.cfg.d_model);
+        // A full-width f64 lane replica holds 8 bytes per parameter; the
+        // shared quantized form must be well under half of that (i8
+        // weights + f32 scales/embeddings/affines).
+        let full_replica = gpt.num_params() * 8;
+        assert!(
+            qp.bytes() * 2 < full_replica,
+            "quantized {} vs replica {}",
+            qp.bytes(),
+            full_replica
+        );
+        // Per-row symmetric quantization error bound: |w − s·q| ≤ s/2.
+        let w0 = gpt.blocks[0].attn.wq;
+        let d = gpt.cfg.d_model;
+        let deq = qp.blocks[0].wq.dequantized();
+        for (i, v) in w0.iter().enumerate() {
+            let w = t.value(v) as f32;
+            let s = qp.blocks[0].wq.scales[i / d];
+            assert!((w - deq[i]).abs() <= s * 0.5 + 1e-7, "elem {i}");
+        }
+        // The quantized decode path produces finite logits for the seed.
+        let zs = qp.logits::<crate::kernels::ScalarKernels>(&[1, 2, 3]);
+        assert_eq!(zs.len(), gpt.cfg.vocab);
+        assert!(zs.iter().all(|z| z.is_finite()));
+    }
+
+    #[test]
+    fn load_quantized_writes_back_exactly_what_the_table_stores() {
+        let mut t = Tape::<f64>::new();
+        let mut rng = Rng::new(71);
+        let gpt = Gpt::new(&mut t, GptConfig::paper(), &mut rng);
+        let qp = gpt.quantize(&t);
+        // A differently-seeded model of the same shape becomes the
+        // dequantized-weights oracle once the table is loaded into it.
+        let mut t2 = Tape::<f64>::new();
+        let mut rng2 = Rng::new(999);
+        let gpt2 = Gpt::new(&mut t2, GptConfig::paper(), &mut rng2);
+        gpt2.load_quantized(&mut t2, &qp);
+        // f32 → f64 widening is exact, so every leaf must match the
+        // table bit for bit: full-precision entries directly…
+        for (k, v) in gpt2.tok_emb.iter().enumerate() {
+            assert_eq!(t2.value(v), f64::from(qp.tok_emb[k]), "tok_emb[{k}]");
+        }
+        for (k, v) in gpt2.lm_head.b.iter().enumerate() {
+            assert_eq!(t2.value(v), f64::from(qp.lm_head.bias[k]), "lm_head.b[{k}]");
+        }
+        // …and quantized matrices through scale · q.
+        let deq = qp.blocks[0].wq.dequantized();
+        for (k, v) in gpt2.blocks[0].attn.wq.iter().enumerate() {
+            assert_eq!(t2.value(v), f64::from(deq[k]), "wq[{k}]");
+        }
+        // Re-quantizing the oracle reproduces the identical i8 payload:
+        // round(s·q / s') lands back on q for every row.
+        let qp2 = gpt2.quantize(&t2);
+        assert_eq!(qp2.blocks[0].wq.q, qp.blocks[0].wq.q);
+        assert_eq!(qp2.lm_head.w.q, qp.lm_head.w.q);
     }
 
     #[test]

@@ -13,7 +13,9 @@ use super::{
 };
 use crate::rng::Rng;
 use crate::scalar::Scalar;
-use crate::serialize::{load_params_range, save_params_range, SerializeError};
+use crate::serialize::{
+    load_params_range, save_params_range, save_params_range_as, ParamDtype, SerializeError,
+};
 use crate::tape::{Mark, Recording, StepProgram, Tape, Value};
 
 /// Generic multi-layer perceptron over explicit scalar inputs.
@@ -142,6 +144,19 @@ impl CharMlp {
         path: &Path,
     ) -> Result<usize, SerializeError> {
         save_params_range(tape, self.params.first, self.params.len, path)
+    }
+
+    /// [`CharMlp::save_params`] with an explicit storage dtype: `Native`
+    /// writes the full-width v2 format, `Bf16`/`F16` write the
+    /// half-sized v3 format ([`crate::serialize::save_params_range_as`]).
+    /// Either kind loads back through [`CharMlp::load_params`].
+    pub fn save_params_as<T: Scalar>(
+        &self,
+        tape: &Tape<T>,
+        path: &Path,
+        dtype: ParamDtype,
+    ) -> Result<usize, SerializeError> {
+        save_params_range_as(tape, self.params.first, self.params.len, path, dtype)
     }
 
     /// Load a checkpoint written by [`CharMlp::save_params`]; rejects

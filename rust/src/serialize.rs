@@ -14,8 +14,8 @@
 //!
 //! ## Crash safety
 //!
-//! Parameter checkpoints (`BURPARM` **v2**) carry a format-version byte
-//! and a CRC32 over the payload, and are published with a temp-file +
+//! Parameter checkpoints (`BURPARM` **v2**/**v3**) carry a format-version
+//! byte and a CRC32 over the payload, and are published with a temp-file +
 //! atomic-rename write ([`write_file_atomic`]): a reader either sees the
 //! complete previous checkpoint or the complete new one, never a torn
 //! file, and any post-write corruption (bit flips, truncation) is caught
@@ -25,6 +25,25 @@
 //! an uninterrupted run. Legacy v1 `BURPARM` files (no checksum) still
 //! load. The raw Table 4 writers stay un-fsynced on purpose — they time
 //! the paper's minimal save path, not a durability path.
+//!
+//! ## Low-precision checkpoints (BURPARM v3)
+//!
+//! A **v3** checkpoint replaces the v2 bytes-per-scalar byte with a real
+//! dtype *code* ([`DTYPE_CODE_F32`]…[`DTYPE_CODE_INT8`]) so the payload
+//! width can differ from the loading tape's scalar width. Narrow saves
+//! (`--params-dtype bf16|f16`, [`save_params_range_as`]) round each
+//! parameter to the nearest bf16/f16 value — round-to-nearest-even, the
+//! IEEE default ([`f32_to_bf16_bits`], [`f32_to_f16_bits`]) — halving
+//! checkpoint size vs f32. Loading widens exactly (bf16/f16 ⊂ f32 ⊂
+//! f64), so a narrow checkpoint loads **deterministically**: every
+//! loader, every tape scalar type, every backend sees the identical
+//! widened values, and the per-element narrowing error is bounded by
+//! half a ULP of the narrow format. The f32/f64 writers keep emitting v2
+//! (the formats are byte-identical for full-width payloads); v1/v2 files
+//! load forever. The `int8` code is *reserved*: int8 is a serving-time
+//! weight quantization ([`crate::kernels::quant`]), derived at boot from
+//! a full/half-width checkpoint, never a storage format — a code-5 file
+//! is rejected by the loader and reported by `params inspect`.
 
 use std::fs::File;
 use std::io::{Read, Write};
@@ -64,6 +83,11 @@ pub enum SerializeError {
         /// Version byte found in the header.
         got: u8,
     },
+    /// A v3 header carries a dtype code this build does not know.
+    UnknownDtype {
+        /// Dtype code byte found in the header.
+        code: u8,
+    },
 }
 
 impl From<std::io::Error> for SerializeError {
@@ -93,6 +117,13 @@ impl std::fmt::Display for SerializeError {
             }
             SerializeError::UnsupportedVersion { got } => {
                 write!(f, "unsupported checkpoint format version {got}")
+            }
+            SerializeError::UnknownDtype { code } => {
+                write!(
+                    f,
+                    "unknown parameter dtype code {code} (this build knows \
+                     f32=1, f64=2, bf16=3, f16=4, int8=5)"
+                )
             }
         }
     }
@@ -270,15 +301,186 @@ pub fn write_file_atomic(path: &Path, bytes: &[u8]) -> Result<(), SerializeError
     Ok(())
 }
 
+// ---- low-precision scalar conversions (bf16 / f16) --------------------------
+
+/// Narrow an `f32` to bfloat16 bits with round-to-nearest-even.
+///
+/// bf16 is the top 16 bits of an f32 (same 8-bit exponent, 7-bit
+/// mantissa), so narrowing is a rounding truncation of the low 16
+/// mantissa bits; ties round to the even 16-bit result and an overflowing
+/// round carries naturally into ±inf. NaN is kept NaN (quietened so the
+/// payload bits surviving the truncation can never form an infinity),
+/// ±inf and ±0 map to their bf16 counterparts exactly.
+pub fn f32_to_bf16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        // Keep sign + exponent, force a quiet-bit so the result stays NaN
+        // even when all surviving mantissa bits happen to be zero.
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let upper = (bits >> 16) as u16;
+    let lower = (bits & 0xFFFF) as u32;
+    // Round to nearest, ties to even on the dropped 16 bits.
+    if lower > 0x8000 || (lower == 0x8000 && upper & 1 == 1) {
+        upper.wrapping_add(1) // carries into exponent / inf correctly
+    } else {
+        upper
+    }
+}
+
+/// Widen bfloat16 bits back to `f32` — exact: every bf16 value is an f32.
+pub fn bf16_bits_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+/// Narrow an `f32` to IEEE 754 binary16 bits with round-to-nearest-even,
+/// including gradual underflow to f16 subnormals; NaN stays NaN
+/// (quietened), ±inf/±0 are preserved, and values beyond the f16 range
+/// round to ±inf.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let man = bits & 0x007F_FFFF;
+    if exp == 255 {
+        return if man == 0 {
+            sign | 0x7C00 // ±inf
+        } else {
+            // NaN: keep the top mantissa bits, force the quiet bit.
+            sign | 0x7E00 | ((man >> 13) as u16)
+        };
+    }
+    let e = exp - 127; // unbiased exponent
+    if e > 15 {
+        return sign | 0x7C00; // overflow → ±inf
+    }
+    if e >= -14 {
+        // Normal f16: rebias, truncate 13 mantissa bits with RNE.
+        let mut h = sign | (((e + 15) as u16) << 10) | ((man >> 13) as u16);
+        let rem = man & 0x1FFF;
+        if rem > 0x1000 || (rem == 0x1000 && h & 1 == 1) {
+            h = h.wrapping_add(1); // mantissa carry rolls into the exponent
+        }
+        return h;
+    }
+    if e < -25 {
+        return sign; // underflows past the smallest subnormal → ±0
+    }
+    // Subnormal f16: shift the full significand (hidden bit restored)
+    // right until the exponent hits -14, rounding to nearest even.
+    let full = man | 0x0080_0000;
+    let shift = (-14 - e + 13) as u32;
+    let mut h = sign | ((full >> shift) as u16);
+    let halfway = 1u32 << (shift - 1);
+    let rem = full & ((1u32 << shift) - 1);
+    if rem > halfway || (rem == halfway && h & 1 == 1) {
+        h = h.wrapping_add(1);
+    }
+    h
+}
+
+/// Widen IEEE 754 binary16 bits back to `f32` — exact: every f16 value
+/// (normal, subnormal, ±0, ±inf, NaN) is representable as an f32.
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let man = (h & 0x03FF) as u32;
+    if exp == 0x1F {
+        // inf / NaN: max f32 exponent, mantissa bits shifted into place.
+        return f32::from_bits(sign | 0x7F80_0000 | (man << 13));
+    }
+    if exp == 0 {
+        if man == 0 {
+            return f32::from_bits(sign); // ±0
+        }
+        // Subnormal: normalize into an f32 normal. The leading set bit of
+        // the 10-bit mantissa sits at position p; the value is
+        // man · 2⁻²⁴ = 1.xxx · 2^(p-24), so the f32 exponent is p + 103.
+        let p = 31 - man.leading_zeros();
+        let exp32 = p + 103;
+        let man32 = (man << (23 - p)) & 0x007F_FFFF;
+        return f32::from_bits(sign | (exp32 << 23) | man32);
+    }
+    f32::from_bits(sign | ((exp + 112) << 23) | (man << 13))
+}
+
 // ---- parameter checkpoints --------------------------------------------------
 
 const PARAM_MAGIC: &[u8; 7] = b"BURPARM";
-/// Current `BURPARM` format version (v2 = versioned + CRC32).
+/// Current `BURPARM` format version for full-width (f32/f64) payloads
+/// (v2 = versioned + CRC32; the dtype byte is bytes-per-scalar).
 pub const PARAM_VERSION: u8 = 2;
-/// v2 header: magic(7) + version(1) + dtype(1) + count(8) + crc32(4).
+/// `BURPARM` format version for coded-dtype payloads (bf16/f16 today).
+/// Same 21-byte header layout as v2, but the dtype byte is a *code*
+/// ([`DTYPE_CODE_F32`]…) instead of a bytes-per-scalar width.
+pub const PARAM_VERSION_V3: u8 = 3;
+/// v2/v3 header: magic(7) + version(1) + dtype(1) + count(8) + crc32(4).
 const PARAM_HEADER_V2: usize = 21;
 /// v1 header: magic-with-version-byte(8) + dtype(1) + count(8).
 const PARAM_HEADER_V1: usize = 17;
+
+/// v3 dtype code: IEEE 754 binary32.
+pub const DTYPE_CODE_F32: u8 = 1;
+/// v3 dtype code: IEEE 754 binary64.
+pub const DTYPE_CODE_F64: u8 = 2;
+/// v3 dtype code: bfloat16 (truncated-f32 format).
+pub const DTYPE_CODE_BF16: u8 = 3;
+/// v3 dtype code: IEEE 754 binary16.
+pub const DTYPE_CODE_F16: u8 = 4;
+/// v3 dtype code: int8 — **reserved**. int8 is a serving-time weight
+/// quantization derived from a loaded checkpoint
+/// ([`crate::kernels::quant`]); it is never written as a checkpoint and a
+/// code-5 file is rejected by the loader (the per-row scales it would
+/// need have no slot in the `BURPARM` layout).
+pub const DTYPE_CODE_INT8: u8 = 5;
+
+/// Payload bytes per element for a v3 dtype code; `None` for codes this
+/// build does not know.
+fn dtype_code_elem_bytes(code: u8) -> Option<usize> {
+    match code {
+        DTYPE_CODE_F32 => Some(4),
+        DTYPE_CODE_F64 => Some(8),
+        DTYPE_CODE_BF16 | DTYPE_CODE_F16 => Some(2),
+        DTYPE_CODE_INT8 => Some(1),
+        _ => None,
+    }
+}
+
+/// On-disk precision for a parameter checkpoint (`--params-dtype`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ParamDtype {
+    /// The tape's native scalar width, written as a **v2** checkpoint —
+    /// spelled `f32` on the CLI because the training tape is `Tape<f32>`.
+    #[default]
+    Native,
+    /// bfloat16, written as a **v3** checkpoint (2 bytes/param).
+    Bf16,
+    /// IEEE binary16, written as a **v3** checkpoint (2 bytes/param).
+    F16,
+}
+
+impl ParamDtype {
+    /// Parse a `--params-dtype` argument (`f32` | `bf16` | `f16`).
+    pub fn parse(s: &str) -> Result<ParamDtype, String> {
+        match s {
+            "f32" | "native" => Ok(ParamDtype::Native),
+            "bf16" => Ok(ParamDtype::Bf16),
+            "f16" => Ok(ParamDtype::F16),
+            other => Err(format!(
+                "unknown params dtype '{other}' (expected f32, bf16, or f16)"
+            )),
+        }
+    }
+
+    /// CLI spelling of the dtype.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ParamDtype::Native => "f32",
+            ParamDtype::Bf16 => "bf16",
+            ParamDtype::F16 => "f16",
+        }
+    }
+}
 
 /// Save a model's flat parameter buffer — the `n` consecutive leaves
 /// starting at `first` — as a self-describing **v2** checkpoint: a 7-byte
@@ -311,6 +513,49 @@ pub fn save_params_range<T: Scalar>(
     Ok(out.len())
 }
 
+/// Save a parameter checkpoint at a chosen on-disk precision.
+/// [`ParamDtype::Native`] delegates to [`save_params_range`] (v2,
+/// full-width, bit-exact). `Bf16`/`F16` write a **v3** checkpoint whose
+/// payload holds each parameter narrowed with round-to-nearest-even
+/// ([`f32_to_bf16_bits`] / [`f32_to_f16_bits`]) — 2 bytes per parameter,
+/// half the f32 footprint. `f64` tapes narrow through f32 first (`as`
+/// casts are RNE), so an f64 save can round twice; the training tape is
+/// f32, where the narrowing is a single rounding. Header framing, CRC32,
+/// and atomic-rename semantics are identical to v2. Returns bytes
+/// written.
+pub fn save_params_range_as<T: Scalar>(
+    tape: &Tape<T>,
+    first: Value,
+    n: usize,
+    path: &Path,
+    dtype: ParamDtype,
+) -> Result<usize, SerializeError> {
+    let code = match dtype {
+        ParamDtype::Native => return save_params_range(tape, first, n, path),
+        ParamDtype::Bf16 => DTYPE_CODE_BF16,
+        ParamDtype::F16 => DTYPE_CODE_F16,
+    };
+    let mut payload = Vec::with_capacity(n * 2);
+    for &v in tape.values_range(first, n) {
+        let x = v.to_f64() as f32;
+        let bits = match dtype {
+            ParamDtype::Bf16 => f32_to_bf16_bits(x),
+            ParamDtype::F16 => f32_to_f16_bits(x),
+            ParamDtype::Native => unreachable!(),
+        };
+        payload.extend_from_slice(&bits.to_le_bytes());
+    }
+    let mut out = Vec::with_capacity(PARAM_HEADER_V2 + payload.len());
+    out.extend_from_slice(PARAM_MAGIC);
+    out.push(PARAM_VERSION_V3);
+    out.push(code);
+    out.extend_from_slice(&(n as u64).to_le_bytes());
+    out.extend_from_slice(&crc32(&payload).to_le_bytes());
+    out.extend_from_slice(&payload);
+    write_file_atomic(path, &out)?;
+    Ok(out.len())
+}
+
 /// Load a parameter checkpoint written by [`save_params_range`] into the
 /// `n` consecutive leaves starting at `first`. Rejects a bad magic or a
 /// truncated payload ([`SerializeError::Malformed`]), a dtype mismatch
@@ -319,7 +564,10 @@ pub fn save_params_range<T: Scalar>(
 /// ([`SerializeError::ChecksumMismatch`]), and an unknown format version
 /// ([`SerializeError::UnsupportedVersion`]) — a damaged or mismatched
 /// checkpoint never loads, and on any error the tape is untouched.
-/// Legacy v1 files (8-byte magic `BURPARM\x01`, no checksum) still load.
+/// Legacy v1 files (8-byte magic `BURPARM\x01`, no checksum) still load,
+/// and **v3** bf16/f16 checkpoints load into f32 and f64 tapes alike:
+/// each narrow element widens exactly (bf16/f16 ⊂ f32 ⊂ f64), so the
+/// loaded values are identical on every tape scalar type.
 pub fn load_params_range<T: Scalar>(
     tape: &mut Tape<T>,
     first: Value,
@@ -330,21 +578,45 @@ pub fn load_params_range<T: Scalar>(
     File::open(path)?.read_to_end(&mut bytes)?;
     let (header, payload) = check_param_header::<T>(&bytes, Some(n as u64))?;
     debug_assert_eq!(header.count, n as u64);
+    if header.version == PARAM_VERSION_V3 {
+        match header.dtype_bytes {
+            DTYPE_CODE_BF16 => {
+                for (k, chunk) in payload.chunks_exact(2).take(n).enumerate() {
+                    let wide = bf16_bits_to_f32(u16::from_le_bytes([chunk[0], chunk[1]]));
+                    tape.set_value(Value(first.0 + k as u32), T::from_f64(wide as f64));
+                }
+                return Ok(());
+            }
+            DTYPE_CODE_F16 => {
+                for (k, chunk) in payload.chunks_exact(2).take(n).enumerate() {
+                    let wide = f16_bits_to_f32(u16::from_le_bytes([chunk[0], chunk[1]]));
+                    tape.set_value(Value(first.0 + k as u32), T::from_f64(wide as f64));
+                }
+                return Ok(());
+            }
+            // check_param_header only lets full-width codes through when
+            // they match T::BYTES, so raw decode is correct here.
+            _ => {}
+        }
+    }
     decode_values_range(tape, first, n, payload)
 }
 
 /// Parsed and validated `BURPARM` header fields (see [`inspect_params`]).
 #[derive(Clone, Copy, Debug)]
 pub struct ParamHeader {
-    /// Format version byte (1 = legacy, 2 = current).
+    /// Format version byte (1 = legacy, 2 = full-width, 3 = coded dtype).
     pub version: u8,
-    /// Bytes per scalar (4 = f32, 8 = f64).
+    /// Raw dtype byte: bytes-per-scalar for v1/v2 (4 = f32, 8 = f64), a
+    /// dtype *code* for v3 ([`DTYPE_CODE_F32`]…). Use
+    /// [`ParamHeader::dtype_name`] / [`ParamHeader::elem_bytes`] for the
+    /// version-independent view.
     pub dtype_bytes: u8,
     /// Number of parameter scalars in the payload.
     pub count: u64,
-    /// CRC32 stored in the header (v2 only).
+    /// CRC32 stored in the header (v2/v3 only).
     pub stored_crc: Option<u32>,
-    /// CRC32 computed over the payload on disk (v2 only).
+    /// CRC32 computed over the payload on disk (v2/v3 only).
     pub computed_crc: Option<u32>,
 }
 
@@ -357,11 +629,57 @@ impl ParamHeader {
             _ => None,
         }
     }
+
+    /// Dtype name across all header versions (`f32`/`f64`/`bf16`/`f16`/
+    /// `int8`); `None` when the dtype byte is one this build cannot name.
+    pub fn dtype_name(&self) -> Option<&'static str> {
+        if self.version == PARAM_VERSION_V3 {
+            match self.dtype_bytes {
+                DTYPE_CODE_F32 => Some("f32"),
+                DTYPE_CODE_F64 => Some("f64"),
+                DTYPE_CODE_BF16 => Some("bf16"),
+                DTYPE_CODE_F16 => Some("f16"),
+                DTYPE_CODE_INT8 => Some("int8"),
+                _ => None,
+            }
+        } else {
+            match self.dtype_bytes {
+                4 => Some("f32"),
+                8 => Some("f64"),
+                _ => None,
+            }
+        }
+    }
+
+    /// Payload bytes per element across all header versions; `None` for
+    /// unknown dtype bytes.
+    pub fn elem_bytes(&self) -> Option<usize> {
+        if self.version == PARAM_VERSION_V3 {
+            dtype_code_elem_bytes(self.dtype_bytes)
+        } else {
+            match self.dtype_bytes {
+                4 => Some(4),
+                8 => Some(8),
+                _ => None,
+            }
+        }
+    }
+
+    /// Total payload size in bytes (`count · elem_bytes`); `None` for
+    /// unknown dtype bytes.
+    pub fn payload_bytes(&self) -> Option<u64> {
+        self.elem_bytes().map(|e| self.count * e as u64)
+    }
 }
 
 /// Validate a `BURPARM` byte buffer: magic, version, dtype, count (when
-/// `expect_count` is given), framing, and — for v2 — the payload CRC.
-/// Returns the parsed header plus the payload slice.
+/// `expect_count` is given), framing, and — for v2/v3 — the payload CRC.
+/// Returns the parsed header plus the payload slice. For v3 the dtype
+/// byte is a code: bf16/f16 load into any tape scalar (the payload
+/// widens), full-width codes must match `T::BYTES` exactly, the reserved
+/// int8 code is a [`SerializeError::DtypeMismatch`] (never a loadable
+/// tape payload), and unknown codes are
+/// [`SerializeError::UnknownDtype`].
 fn check_param_header<T: Scalar>(
     bytes: &[u8],
     expect_count: Option<u64>,
@@ -376,15 +694,28 @@ fn check_param_header<T: Scalar>(
     let header_len = match version {
         1 => PARAM_HEADER_V1,
         2 => PARAM_HEADER_V2,
+        3 => PARAM_HEADER_V2, // v3 shares the 21-byte v2 layout
         got => return Err(SerializeError::UnsupportedVersion { got }),
     };
     if bytes.len() < header_len {
         return Err(SerializeError::Malformed("short param header"));
     }
     let dtype_bytes = bytes[8];
-    if dtype_bytes as usize != T::BYTES {
-        return Err(SerializeError::DtypeMismatch);
-    }
+    let elem_bytes = if version == PARAM_VERSION_V3 {
+        let elem = dtype_code_elem_bytes(dtype_bytes)
+            .ok_or(SerializeError::UnknownDtype { code: dtype_bytes })?;
+        match dtype_bytes {
+            DTYPE_CODE_BF16 | DTYPE_CODE_F16 => {}
+            DTYPE_CODE_F32 | DTYPE_CODE_F64 if elem == T::BYTES => {}
+            _ => return Err(SerializeError::DtypeMismatch),
+        }
+        elem
+    } else {
+        if dtype_bytes as usize != T::BYTES {
+            return Err(SerializeError::DtypeMismatch);
+        }
+        T::BYTES
+    };
     let count = u64::from_le_bytes(bytes[9..17].try_into().expect("8 bytes"));
     if let Some(expected) = expect_count {
         if count != expected {
@@ -392,13 +723,13 @@ fn check_param_header<T: Scalar>(
         }
     }
     let payload_len = (count as usize)
-        .checked_mul(T::BYTES)
+        .checked_mul(elem_bytes)
         .ok_or(SerializeError::Malformed("param count overflows"))?;
     if bytes.len() != header_len + payload_len {
         return Err(SerializeError::Malformed("param payload length mismatch"));
     }
     let payload = &bytes[header_len..];
-    let (stored_crc, computed_crc) = if version == 2 {
+    let (stored_crc, computed_crc) = if version >= 2 {
         let stored = u32::from_le_bytes(bytes[17..21].try_into().expect("4 bytes"));
         let computed = crc32(payload);
         if stored != computed {
@@ -442,25 +773,31 @@ pub fn inspect_params(path: &Path) -> Result<ParamHeader, SerializeError> {
     let version = bytes[7];
     let header_len = match version {
         1 => PARAM_HEADER_V1,
-        2 => PARAM_HEADER_V2,
+        2 | 3 => PARAM_HEADER_V2,
         got => return Err(SerializeError::UnsupportedVersion { got }),
     };
     if bytes.len() < header_len {
         return Err(SerializeError::Malformed("short param header"));
     }
     let dtype_bytes = bytes[8];
+    let elem_bytes = if version == PARAM_VERSION_V3 {
+        dtype_code_elem_bytes(dtype_bytes)
+            .ok_or(SerializeError::UnknownDtype { code: dtype_bytes })?
+    } else {
+        dtype_bytes as usize
+    };
     let count = u64::from_le_bytes(bytes[9..17].try_into().expect("8 bytes"));
     let expected_len = header_len
         .checked_add(
             (count as usize)
-                .checked_mul(dtype_bytes as usize)
+                .checked_mul(elem_bytes)
                 .ok_or(SerializeError::Malformed("param count overflows"))?,
         )
         .ok_or(SerializeError::Malformed("param count overflows"))?;
     if bytes.len() != expected_len {
         return Err(SerializeError::Malformed("param payload length mismatch"));
     }
-    let (stored_crc, computed_crc) = if version == 2 {
+    let (stored_crc, computed_crc) = if version >= 2 {
         let stored = u32::from_le_bytes(bytes[17..21].try_into().expect("4 bytes"));
         (Some(stored), Some(crc32(&bytes[header_len..])))
     } else {
@@ -508,6 +845,12 @@ pub fn train_state_path(params: &Path) -> PathBuf {
 /// over the payload, then the payload (step counter, sampler RNG state,
 /// batch length, batch indices — all u64 LE). Written atomically, like
 /// the params file it rides along with. Returns bytes written.
+///
+/// The sidecar has carried this CRC32 + atomic-rename discipline since
+/// the fault-tolerance work; the checkpoint dtype is irrelevant to it —
+/// a `--params-dtype bf16|f16` run's sidecar is byte-identical to a
+/// full-width run's, because the training state holds counters and RNG
+/// words, never parameters.
 pub fn save_train_state(state: &TrainState, path: &Path) -> Result<usize, SerializeError> {
     let mut payload = Vec::with_capacity(8 * (6 + state.batch.len()));
     payload.extend_from_slice(&state.next_step.to_le_bytes());
@@ -854,6 +1197,188 @@ mod tests {
         assert!(matches!(
             load_params_range(&mut t, first, 4, &bad),
             Err(SerializeError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn bf16_f16_conversions_handle_specials_and_ties() {
+        // Specials survive narrowing in both formats.
+        for narrow_widen in [
+            (|x: f32| bf16_bits_to_f32(f32_to_bf16_bits(x))) as fn(f32) -> f32,
+            |x: f32| f16_bits_to_f32(f32_to_f16_bits(x)),
+        ] {
+            assert!(narrow_widen(f32::NAN).is_nan());
+            assert!(narrow_widen(-f32::NAN).is_nan());
+            assert_eq!(narrow_widen(f32::INFINITY), f32::INFINITY);
+            assert_eq!(narrow_widen(f32::NEG_INFINITY), f32::NEG_INFINITY);
+            assert_eq!(narrow_widen(0.0).to_bits(), 0.0f32.to_bits());
+            assert_eq!(narrow_widen(-0.0).to_bits(), (-0.0f32).to_bits());
+            assert_eq!(narrow_widen(1.0), 1.0);
+            assert_eq!(narrow_widen(-2.5), -2.5);
+        }
+
+        // bf16 RNE ties: 1.0 + 2⁻⁸ sits exactly between bf16(1.0) and the
+        // next bf16 up; the tie must go to the even mantissa (1.0).
+        let tie = f32::from_bits(0x3F80_8000);
+        assert_eq!(bf16_bits_to_f32(f32_to_bf16_bits(tie)), 1.0);
+        // One ULP above the tie rounds up.
+        let above = f32::from_bits(0x3F80_8001);
+        assert!(bf16_bits_to_f32(f32_to_bf16_bits(above)) > 1.0);
+        // Odd-mantissa tie rounds up to the even neighbor.
+        let odd_tie = f32::from_bits(0x3F81_8000);
+        assert_eq!(f32_to_bf16_bits(odd_tie), 0x3F82);
+
+        // f16 overflow → inf; f16 subnormal range survives exactly.
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(1.0e6)), f32::INFINITY);
+        let sub = 5.960_464_5e-8; // smallest positive f16 subnormal
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(sub)), sub);
+        assert_eq!(f32_to_f16_bits(1.0e-10), 0, "deep underflow → +0");
+        assert_eq!(f32_to_f16_bits(-1.0e-10), 0x8000, "deep underflow → -0");
+
+        // Every f16 bit pattern widens and narrows back to itself
+        // (NaNs excluded: payloads may be quietened).
+        for h in 0..=u16::MAX {
+            let x = f16_bits_to_f32(h);
+            if x.is_nan() {
+                assert!(f16_bits_to_f32(f32_to_f16_bits(x)).is_nan());
+            } else {
+                assert_eq!(f32_to_f16_bits(x), h, "f16 bits {h:#06x} must round-trip");
+            }
+        }
+        // Same exhaustive check for bf16.
+        for b in 0..=u16::MAX {
+            let x = bf16_bits_to_f32(b);
+            if x.is_nan() {
+                assert!(bf16_bits_to_f32(f32_to_bf16_bits(x)).is_nan());
+            } else {
+                assert_eq!(f32_to_bf16_bits(x), b, "bf16 bits {b:#06x} must round-trip");
+            }
+        }
+    }
+
+    #[test]
+    fn v3_bf16_and_f16_checkpoints_roundtrip_into_both_tape_widths() {
+        let dir = std::env::temp_dir().join("burtorch_param_v3_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let vals = [1.5f32, -2.25, 0.0, 42.0, 1.0e-3, -7.875];
+
+        for dtype in [ParamDtype::Bf16, ParamDtype::F16] {
+            let path = dir.join(format!("params_{}.bin", dtype.as_str()));
+            let mut t = Tape::<f32>::new();
+            let first = t.leaves(&vals);
+            let written = save_params_range_as(&t, first, vals.len(), &path, dtype).unwrap();
+            assert_eq!(written, 21 + vals.len() * 2, "v3 header + 2 B/param");
+
+            // The widened values are what the narrow format represents...
+            let mut t32 = Tape::<f32>::new();
+            let f32_first = t32.leaves(&[0.0f32; 6]);
+            load_params_range(&mut t32, f32_first, vals.len(), &path).unwrap();
+            // ...and the f64 tape loads the *identical* values (exact widening).
+            let mut t64 = Tape::<f64>::new();
+            let f64_first = t64.leaves(&[0.0f64; 6]);
+            load_params_range(&mut t64, f64_first, vals.len(), &path).unwrap();
+            for k in 0..vals.len() {
+                let w32 = t32.value(Value(f32_first.0 + k as u32));
+                let w64 = t64.value(Value(f64_first.0 + k as u32));
+                assert_eq!(w32 as f64, w64, "f32 and f64 tapes must agree");
+                // Exactly-representable values round-trip bit-exactly.
+                if vals[k] == 0.0 || vals[k] == 1.5 || vals[k] == 42.0 {
+                    assert_eq!(w32, vals[k]);
+                }
+            }
+
+            let info = inspect_params(&path).unwrap();
+            assert_eq!(info.version, PARAM_VERSION_V3);
+            assert_eq!(info.dtype_name(), Some(dtype.as_str()));
+            assert_eq!(info.elem_bytes(), Some(2));
+            assert_eq!(info.payload_bytes(), Some(vals.len() as u64 * 2));
+            assert_eq!(info.checksum_ok(), Some(true));
+        }
+
+        // Native delegates to the v2 writer — bit-identical to save_params_range.
+        let mut t = Tape::<f32>::new();
+        let first = t.leaves(&vals);
+        let p_native = dir.join("native.bin");
+        let p_v2 = dir.join("v2.bin");
+        save_params_range_as(&t, first, vals.len(), &p_native, ParamDtype::Native).unwrap();
+        save_params_range(&t, first, vals.len(), &p_v2).unwrap();
+        assert_eq!(std::fs::read(&p_native).unwrap(), std::fs::read(&p_v2).unwrap());
+    }
+
+    #[test]
+    fn v3_golden_header_bytes_are_pinned() {
+        // Golden fixture: two bf16 params [1.0, -2.0]. Any byte change
+        // here is a format break, not a refactor.
+        let dir = std::env::temp_dir().join("burtorch_param_v3_golden");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("golden.bin");
+        let mut t = Tape::<f32>::new();
+        let first = t.leaves(&[1.0f32, -2.0]);
+        save_params_range_as(&t, first, 2, &path, ParamDtype::Bf16).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+
+        let payload = [0x80u8, 0x3F, 0x00, 0xC0]; // bf16 LE: 1.0, -2.0
+        let mut expect = Vec::new();
+        expect.extend_from_slice(b"BURPARM");
+        expect.push(3); // version
+        expect.push(DTYPE_CODE_BF16); // dtype code
+        expect.extend_from_slice(&2u64.to_le_bytes()); // count
+        expect.extend_from_slice(&crc32(&payload).to_le_bytes());
+        expect.extend_from_slice(&payload);
+        assert_eq!(bytes, expect, "v3 golden bytes changed — format break");
+    }
+
+    #[test]
+    fn v3_rejects_reserved_int8_and_unknown_codes() {
+        let dir = std::env::temp_dir().join("burtorch_param_v3_reject");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("p.bin");
+        let mut t = Tape::<f32>::new();
+        let first = t.leaves(&[1.0f32, 2.0]);
+        save_params_range_as(&t, first, 2, &path, ParamDtype::Bf16).unwrap();
+        let good = std::fs::read(&path).unwrap();
+
+        // Reserved int8 code: loader refuses (dtype mismatch), inspect
+        // still names it.
+        let mut int8 = good.clone();
+        int8[8] = DTYPE_CODE_INT8;
+        int8.truncate(21); // 1 B/elem payload
+        int8.extend_from_slice(&[1, 2]);
+        let crc = crc32(&int8[21..]).to_le_bytes();
+        int8[17..21].copy_from_slice(&crc);
+        let p_int8 = dir.join("int8.bin");
+        std::fs::write(&p_int8, &int8).unwrap();
+        assert!(matches!(
+            load_params_range(&mut t, first, 2, &p_int8),
+            Err(SerializeError::DtypeMismatch)
+        ));
+        let info = inspect_params(&p_int8).unwrap();
+        assert_eq!(info.dtype_name(), Some("int8"));
+        assert_eq!(info.elem_bytes(), Some(1));
+
+        // Unknown code: typed rejection from loader and inspect alike.
+        let mut unk = good.clone();
+        unk[8] = 99;
+        let p_unk = dir.join("unk.bin");
+        std::fs::write(&p_unk, &unk).unwrap();
+        assert!(matches!(
+            load_params_range(&mut t, first, 2, &p_unk),
+            Err(SerializeError::UnknownDtype { code: 99 })
+        ));
+        assert!(matches!(
+            inspect_params(&p_unk),
+            Err(SerializeError::UnknownDtype { code: 99 })
+        ));
+
+        // A corrupted v3 payload fails the CRC like v2.
+        let mut flipped = good.clone();
+        let last = flipped.len() - 1;
+        flipped[last] ^= 0x04;
+        let p_bad = dir.join("bad.bin");
+        std::fs::write(&p_bad, &flipped).unwrap();
+        assert!(matches!(
+            load_params_range(&mut t, first, 2, &p_bad),
+            Err(SerializeError::ChecksumMismatch { .. })
         ));
     }
 

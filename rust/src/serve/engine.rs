@@ -47,6 +47,24 @@
 //! are bitwise-equal token for token (`tests/decode_equivalence.rs`);
 //! full mode stays on as the oracle.
 //!
+//! ## Quantized serving: shared int8 weights instead of replica tapes
+//!
+//! [`QuantizeMode::Int8`] trades the per-lane full-width parameter
+//! replica for one engine-wide read-only weight table: every matrix
+//! weight is quantized per-row to int8 with an f32 scale
+//! ([`QuantizedParams`], built once at boot via `Gpt::quantize`), and
+//! every lane holds an `Arc` to the *same* table — the marginal weight
+//! memory per extra lane drops from `8 · num_params` bytes to ~zero,
+//! and the table itself is ~8× smaller than one f64 replica. Decode is
+//! a full-window f32 recompute per token through the q8 kernel family
+//! (`kernels::quant`): deterministic, bitwise identical between the
+//! scalar and AVX2 backends, but **not** bitwise against the
+//! full-precision engine — the drift is measured, not assumed, by
+//! `benches/table_quant.rs` and bounded by `tests/precision.rs`.
+//! Quantized lanes bypass the tape/replay machinery entirely, so the
+//! program-cache counters stay at zero and quarantine heals are
+//! trivially safe (the shared table is immutable).
+//!
 //! ## Long-lived processes: bounded caches and compaction
 //!
 //! With `cache_cap = N`, each lane's program cache never holds more than
@@ -83,9 +101,10 @@
 //! budget at admission.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Arc;
 use std::time::Instant;
 
-use crate::kernels::KernelChoice;
+use crate::kernels::{KernelChoice, QuantizedParams};
 use crate::nn::{DecodeState, Gpt, KvCache};
 use crate::parallel::{PtrSend, WorkerPool};
 use crate::scalar::Scalar;
@@ -111,6 +130,22 @@ pub enum DecodeMode {
     /// program per token against the session's stored K/V prefix —
     /// O(window) per token, bitwise-equal to [`DecodeMode::Full`].
     Incremental,
+}
+
+/// Weight precision the lanes serve with (see the module docs:
+/// *Quantized serving*).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum QuantizeMode {
+    /// Full-width weights: every lane replays programs on its own
+    /// replica tape. The bitwise-deterministic reference path.
+    #[default]
+    None,
+    /// Per-row symmetric int8 weights with f32 scales, one read-only
+    /// table shared by every lane. Deterministic and scalar≡simd
+    /// bitwise, but numerically *near* — never bitwise-equal to — the
+    /// full-precision path. Overrides [`DecodeMode`]: quantized decode
+    /// is always a full-window recompute.
+    Int8,
 }
 
 /// Serving configuration.
@@ -146,6 +181,10 @@ pub struct ServeOptions {
     /// ([`KernelChoice::Auto`] by default). Every choice serves bitwise
     /// identical tokens on a given build; see `crate::kernels`.
     pub kernel: KernelChoice,
+    /// Weight precision ([`QuantizeMode::None`] by default).
+    /// [`QuantizeMode::Int8`] makes lanes share one read-only int8
+    /// weight table instead of full-width replica parameters.
+    pub quantize: QuantizeMode,
 }
 
 impl Default for ServeOptions {
@@ -159,6 +198,7 @@ impl Default for ServeOptions {
             max_tokens: 0,
             decode: DecodeMode::Full,
             kernel: KernelChoice::Auto,
+            quantize: QuantizeMode::None,
         }
     }
 }
@@ -200,6 +240,12 @@ pub struct ServeStats {
     pub append_programs: usize,
     /// The decode mode the engine is running.
     pub decode: DecodeMode,
+    /// The weight precision the engine is serving with.
+    pub quantize: QuantizeMode,
+    /// Bytes of the shared int8 weight table (0 when quantization is
+    /// off). Shared: this is the *total* across all lanes, not a
+    /// per-lane figure — extra lanes add no weight memory.
+    pub quant_bytes: usize,
     /// Per-lane live program inventory (index = lane).
     pub lane_programs: Vec<LanePrograms>,
     /// Peak tape length observed on any lane.
@@ -219,6 +265,11 @@ struct ServeLane<T: Scalar> {
     /// `cache` above is unused then — the full-window programs live in
     /// the [`DecodeState`] so they share its staging-base geometry.
     decode: Option<DecodeState>,
+    /// Shared read-only int8 weight table; `Some` iff the engine runs
+    /// [`QuantizeMode::Int8`]. Every lane's `Arc` points at the *same*
+    /// table, so lanes add no weight memory; the replica tape and both
+    /// program caches above go unused then.
+    quant: Option<Arc<QuantizedParams>>,
     /// Reusable vocab-sized logits staging buffer — the per-token read
     /// of the last position's logits allocates nothing in steady state.
     zs: Vec<f64>,
@@ -239,6 +290,7 @@ impl<T: Scalar> ServeLane<T> {
                 ProgramCache::bounded(cache_cap)
             },
             decode: None,
+            quant: None,
             zs: Vec::with_capacity(vocab),
             compactions: 0,
             peak_nodes: 0,
@@ -324,6 +376,10 @@ impl<T: Scalar> ServeEngine<T> {
         // Resolve the kernel backend before replicating: `clone_prefix`
         // inherits it, so every lane decodes with the same kernels.
         tape.set_kernel(opts.kernel);
+        // Quantize once, before replication, from the master parameter
+        // values; every lane shares this one read-only table.
+        let quant = (opts.quantize == QuantizeMode::Int8)
+            .then(|| Arc::new(model.quantize(&tape)));
         let mut lanes = Vec::with_capacity(n_lanes);
         for _ in 1..n_lanes {
             lanes.push(ServeLane::new(tape.clone_prefix(model.base), opts.cache_cap, vocab));
@@ -334,7 +390,14 @@ impl<T: Scalar> ServeEngine<T> {
             let t = &lanes[0].tape;
             (0..model.base.node_count()).map(|i| t.value(Value(i as u32))).collect()
         };
-        if opts.decode == DecodeMode::Incremental {
+        if let Some(q) = &quant {
+            // Quantized lanes never record or replay programs — the
+            // decode runtime would be dead weight, so Int8 overrides
+            // DecodeMode and each lane just points at the shared table.
+            for lane in &mut lanes {
+                lane.quant = Some(Arc::clone(q));
+            }
+        } else if opts.decode == DecodeMode::Incremental {
             // Staging leaves sit directly above the parameter base on
             // every lane — identical ids across lanes (and across heals),
             // so any lane can replay any session's prefix.
@@ -596,8 +659,13 @@ impl<T: Scalar> ServeEngine<T> {
     /// regardless of decode mode: in [`DecodeMode::Incremental`] a
     /// lane's hits/misses/evictions cover both its full-window and
     /// append caches, so `cache_hits + cache_misses == tokens` holds in
-    /// both modes (every token is exactly one program lookup).
+    /// both modes (every token is exactly one program lookup). Under
+    /// [`QuantizeMode::Int8`] lanes bypass the program machinery
+    /// entirely, so every cache counter stays at zero and
+    /// [`ServeStats::quant_bytes`] reports the shared table size
+    /// instead.
     pub fn stats(&self) -> ServeStats {
+        let quant = self.lanes[0].quant.as_deref();
         let mut s = ServeStats {
             tokens: self.tokens,
             steps: self.steps,
@@ -605,6 +673,8 @@ impl<T: Scalar> ServeEngine<T> {
             quarantines: self.quarantines,
             shed: self.shed_count,
             decode: self.decode_mode,
+            quantize: if quant.is_some() { QuantizeMode::Int8 } else { QuantizeMode::None },
+            quant_bytes: quant.map_or(0, |q| q.bytes()),
             ..ServeStats::default()
         };
         for lane in &self.lanes {
@@ -649,6 +719,18 @@ impl<T: Scalar> ServeEngine<T> {
 /// and let the session sample with its own RNG stream.
 fn advance_session<T: Scalar>(model: &Gpt, lane: &mut ServeLane<T>, sess: &mut Session) {
     let block = model.cfg.block_size;
+    if let Some(qp) = &lane.quant {
+        // Quantized path: full-window f32 recompute through the shared
+        // int8 table — no tape, no programs, nothing to compact. The
+        // f32→f64 widening is exact, so the session samples from
+        // logits that are a pure function of (table, window, backend).
+        let zs32 = qp.logits_backend(lane.tape.kernel_backend(), sess.context(block));
+        lane.zs.clear();
+        lane.zs.extend(zs32.iter().map(|&z| f64::from(z)));
+        sess.push_logits(&lane.zs);
+        sess.tick();
+        return;
+    }
     maybe_compact(model, lane);
     let logits0 = match &mut lane.decode {
         // Incremental mode: hand the full token context plus the
@@ -682,7 +764,9 @@ fn advance_session<T: Scalar>(model: &Gpt, lane: &mut ServeLane<T>, sess: &mut S
 /// in depth — serving never writes the prefix, but a quarantined lane is
 /// trusted about nothing), and drop every cached program (their recorded
 /// tape bases died with the rewind). The heal is O(params + tape) and
-/// happens off the fault path, at the start of the next tick.
+/// happens off the fault path, at the start of the next tick. A
+/// quantized lane's weight table needs no healing: it is an `Arc` to
+/// the engine-wide immutable table, which no lane can corrupt.
 fn heal_lane<T: Scalar>(model: &Gpt, lane: &mut ServeLane<T>, master: &[T], cache_cap: usize) {
     lane.tape.rewind(model.base);
     for (i, &v) in master.iter().enumerate() {
@@ -990,6 +1074,101 @@ mod tests {
         }
         let per_lane: usize = inc_st.lane_programs.iter().map(|lp| lp.append_depths.len()).sum();
         assert_eq!(per_lane, inc_st.append_programs);
+    }
+
+    #[test]
+    fn quantized_serving_shares_one_table_and_is_lane_count_invariant() {
+        let run = |lanes: usize| -> (Vec<(u64, Vec<u32>)>, ServeStats) {
+            let (tape, model) = tiny();
+            let mut eng = ServeEngine::new(
+                tape,
+                model,
+                ServeOptions {
+                    lanes,
+                    quantize: QuantizeMode::Int8,
+                    ..ServeOptions::default()
+                },
+            );
+            eng.submit(req(1, vec![1, 2], 9, 10)); // crosses block_size 8
+            eng.submit(req(2, vec![3], 5, 20));
+            eng.submit(req(3, vec![4, 5, 6], 6, 30));
+            let mut done: Vec<(u64, Vec<u32>)> = eng
+                .run_to_completion()
+                .into_iter()
+                .map(|s| (s.id(), s.output().to_vec()))
+                .collect();
+            done.sort();
+            // Every lane's Arc points at the same allocation.
+            let first = eng.lanes[0].quant.as_ref().expect("quantized lane 0");
+            for lane in &eng.lanes[1..] {
+                let q = lane.quant.as_ref().expect("quantized lane");
+                assert!(Arc::ptr_eq(first, q), "lanes must share one table");
+            }
+            (done, eng.stats())
+        };
+        let (one, st1) = run(1);
+        let (three, st3) = run(3);
+        assert_eq!(one, three, "lane count must not change quantized tokens");
+        assert_eq!(one.iter().map(|(_, o)| o.len()).sum::<usize>(), 20);
+        for st in [&st1, &st3] {
+            assert_eq!(st.quantize, QuantizeMode::Int8);
+            assert!(st.quant_bytes > 0);
+            assert_eq!(st.tokens, 20);
+            // Quantized lanes never touch the program machinery.
+            assert_eq!(st.cache_hits + st.cache_misses, 0);
+            assert_eq!(st.cached_programs + st.append_programs, 0);
+            assert_eq!(st.compactions, 0);
+        }
+        // The shared table is identical across lane counts, so it costs
+        // the same bytes whether the engine runs 1 lane or 3.
+        assert_eq!(st1.quant_bytes, st3.quant_bytes);
+        // Unquantized default reports zero table bytes.
+        let (tape, model) = tiny();
+        let mut plain = ServeEngine::new(tape, model, ServeOptions::default());
+        plain.submit(req(1, vec![1], 1, 10));
+        plain.run_to_completion();
+        let pst = plain.stats();
+        assert_eq!(pst.quantize, QuantizeMode::None);
+        assert_eq!(pst.quant_bytes, 0);
+    }
+
+    #[test]
+    fn quantized_lane_fault_heals_and_keeps_outputs_bitwise() {
+        use crate::testkit::FaultPlan;
+        let reqs = |eng: &mut ServeEngine<f64>| {
+            for id in 0..6u64 {
+                eng.submit(req(id, vec![1 + id as u32 % 4], 6, 100 + id));
+            }
+        };
+        let collect = |mut eng: ServeEngine<f64>| -> Vec<(u64, Vec<u32>)> {
+            let mut done: Vec<(u64, Vec<u32>)> = eng
+                .run_to_completion()
+                .into_iter()
+                .map(|s| (s.id(), s.output().to_vec()))
+                .collect();
+            done.sort();
+            done
+        };
+        let opts = ServeOptions {
+            lanes: 3,
+            quantize: QuantizeMode::Int8,
+            ..ServeOptions::default()
+        };
+        let (tape, model) = tiny();
+        let mut clean = ServeEngine::new(tape, model, opts);
+        reqs(&mut clean);
+        let want = collect(clean);
+
+        let (tape, model) = tiny();
+        let mut faulty = ServeEngine::new(tape, model, opts);
+        faulty.set_fault_plan(FaultPlan::default().panic_lane(1, 2, 1).panic_lane(2, 4, 0));
+        reqs(&mut faulty);
+        for _ in 0..3 {
+            faulty.step();
+        }
+        assert_eq!(faulty.stats().quarantines, 1);
+        let got = collect(faulty);
+        assert_eq!(got, want, "healed quantized lanes must stay bitwise");
     }
 
     #[test]

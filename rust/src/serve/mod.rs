@@ -44,19 +44,32 @@
 //! an appending session's window *is* its depth, and any lane can
 //! re-stage any session's prefix.
 //!
+//! ## Weight precision
+//!
+//! [`ServeOptions::quantize`] picks the weight precision:
+//! [`QuantizeMode::None`] (default) keeps the bitwise-deterministic
+//! replica-tape path above; [`QuantizeMode::Int8`] builds one read-only
+//! per-row int8 weight table at boot (`kernels::quant`) that **every
+//! lane shares** — ~8× less weight memory than a single f64 replica
+//! and no per-lane copy at all. Quantized decode is deterministic and
+//! scalar≡simd bitwise, but its tokens are *near* — not bitwise-equal
+//! to — the full-precision stream; `benches/table_quant.rs` measures
+//! the drift and `tests/precision.rs` bounds it.
+//!
 //! ## CLI
 //!
 //! `burtorch serve --requests FILE --params w.bin [--lanes L]
-//! [--cache-cap N] [--decode full|incremental]` reads one request per
-//! line (see [`parse_requests`] for the format), boots the model from a
-//! checkpoint written by `train --params`, and reports per-session
-//! completions plus latency and throughput statistics.
+//! [--cache-cap N] [--decode full|incremental] [--quantize int8]`
+//! reads one request per line (see [`parse_requests`] for the format),
+//! boots the model from a checkpoint written by `train --params`, and
+//! reports per-session completions plus latency and throughput
+//! statistics.
 
 pub mod engine;
 pub mod scheduler;
 pub mod session;
 
-pub use engine::{DecodeMode, LanePrograms, ServeEngine, ServeOptions, ServeStats};
+pub use engine::{DecodeMode, LanePrograms, QuantizeMode, ServeEngine, ServeOptions, ServeStats};
 pub use scheduler::Scheduler;
 pub use session::{Request, Session, SessionStatus};
 

@@ -41,6 +41,13 @@
 //! Data-dependent *values* are fine (ops like `CeLogitsRange` recompute
 //! their internal max/logsumexp from the current values on every sweep).
 //!
+//! One consumer deliberately sidesteps replay altogether: a serving lane
+//! under `--quantize int8` decodes through the shared
+//! [`crate::kernels::QuantizedParams`] table (plain f32 loops over i8
+//! weights — no tape nodes, no recordings, nothing to rebind or
+//! compact), so the replay machinery here only runs for full-precision
+//! lanes.
+//!
 //! ## Cross-step staging (recorded outputs as the next sweep's inputs)
 //!
 //! A forward-only recording may read any node **below** its base —

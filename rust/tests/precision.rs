@@ -1,0 +1,313 @@
+//! Low-precision contracts (PR 9 acceptance criteria):
+//!
+//! 1. **bf16/f16 narrowing is correct rounding.** `f32_to_bf16_bits` /
+//!    `f32_to_f16_bits` are round-to-nearest-even: the widened result is
+//!    the *nearest* representable narrow value (error ≤ half a narrow
+//!    ULP), and NaN / ±inf / ±0 survive the trip.
+//! 2. **The v3 byte format is pinned.** A golden fixture asserts the
+//!    exact on-disk bytes of a bf16 checkpoint — magic, version, dtype
+//!    code, count, CRC framing, payload order.
+//! 3. **Low-precision checkpoints round-trip deterministically.**
+//!    train → save bf16 → load reproduces `widen(narrow(w))` bit for bit
+//!    on f32 and f64 tapes alike, and a server booted from the file
+//!    generates exactly what the loaded model generates in process.
+//! 4. **int8 quantized decode is drift-bounded.** Against the
+//!    dequantized-weights f64 oracle (`Gpt::load_quantized` — same
+//!    weights as the int8 table, full-precision activations) the
+//!    quantized path agrees on the greedy argmax for **100%** of ≥256
+//!    teacher-forced tokens, with a hard bound on max logit divergence,
+//!    and is scalar≡simd bitwise throughout. (Drift against the *true*
+//!    f64 oracle — where weight rounding may legitimately flip near-tie
+//!    argmaxes — is measured, not asserted, in `benches/table_quant.rs`.)
+
+use burtorch::coordinator::{Trainer, TrainerOptions};
+use burtorch::data::CharCorpus;
+use burtorch::kernels::{simd_available, KernelBackend};
+use burtorch::nn::{Gpt, GptConfig};
+use burtorch::rng::Rng;
+use burtorch::serialize::{
+    bf16_bits_to_f32, crc32, f16_bits_to_f32, f32_to_bf16_bits, f32_to_f16_bits, inspect_params,
+    save_params_range_as, ParamDtype,
+};
+use burtorch::serve::{Request, ServeEngine, ServeOptions};
+use burtorch::tape::{ProgramCache, Tape, Value};
+
+fn tiny_cfg() -> GptConfig {
+    GptConfig {
+        n_layer: 1,
+        d_model: 8,
+        n_head: 2,
+        ..GptConfig::paper()
+    }
+}
+
+fn tiny_gpt(seed: u64) -> (Tape<f32>, Gpt) {
+    let mut tape = Tape::<f32>::new();
+    let mut rng = Rng::new(seed);
+    let model = Gpt::new(&mut tape, tiny_cfg(), &mut rng);
+    (tape, model)
+}
+
+/// A spread of finite f32 probes: every binade from tiny to huge, both
+/// signs, plus awkward fractions — deterministic, no RNG needed.
+fn probe_values() -> Vec<f32> {
+    let mut xs = Vec::new();
+    for e in -40..40 {
+        for m in [1.0f32, 1.1, 1.25, 4.0 / 3.0, 1.5, 1.999] {
+            let x = m * (e as f32).exp2();
+            xs.push(x);
+            xs.push(-x);
+        }
+    }
+    xs.extend([0.0, -0.0, 1.0, -1.0, 0.1, std::f32::consts::PI]);
+    xs
+}
+
+/// Assert `narrowed` is the *nearest* value of the narrow format to `x`:
+/// no representable neighbor (bits ± 1 within the same sign/finite
+/// range) sits strictly closer. This is exactly what round-to-nearest
+/// guarantees, ULP bookkeeping included.
+fn assert_nearest(x: f32, bits: u16, widen: fn(u16) -> f32, fmt: &str) {
+    let r = widen(bits);
+    if !r.is_finite() {
+        return; // overflow to ±inf is checked separately
+    }
+    let err = (f64::from(r) - f64::from(x)).abs();
+    for nb in [bits.wrapping_sub(1), bits.wrapping_add(1)] {
+        let n = widen(nb);
+        if !n.is_finite() || ((n < 0.0) != (r < 0.0) && x != 0.0) {
+            continue; // crossed a sign/inf boundary — not a real neighbor
+        }
+        let nerr = (f64::from(n) - f64::from(x)).abs();
+        assert!(
+            err <= nerr,
+            "{fmt}: {x:e} rounded to {r:e} but neighbor {n:e} is closer"
+        );
+    }
+}
+
+#[test]
+fn bf16_narrowing_is_round_to_nearest_and_preserves_specials() {
+    for x in probe_values() {
+        let bits = f32_to_bf16_bits(x);
+        assert_nearest(x, bits, bf16_bits_to_f32, "bf16");
+        // Half-ULP bound, stated directly: a normal bf16 at exponent E
+        // has ULP 2^(E-7).
+        let r = bf16_bits_to_f32(bits);
+        if r.is_finite() && r != 0.0 && x.abs() >= f32::from_bits(0x0080_0000) {
+            let ulp = (x.abs().log2().floor() - 7.0).exp2() as f64;
+            assert!(
+                (f64::from(r) - f64::from(x)).abs() <= 0.5 * ulp + f64::EPSILON,
+                "bf16 error beyond half-ULP at {x:e}"
+            );
+        }
+    }
+    // Ties round to even: 1.0 + 2^-8 sits exactly between bf16 1.0
+    // (0x3F80, even) and 1.0078125 (0x3F81, odd) — even wins.
+    assert_eq!(f32_to_bf16_bits(f32::from_bits(0x3F80_8000)), 0x3F80);
+    // ...and the odd side of the next tie carries up to even 0x3F82.
+    assert_eq!(f32_to_bf16_bits(f32::from_bits(0x3F81_8000)), 0x3F82);
+    // Specials.
+    assert!(bf16_bits_to_f32(f32_to_bf16_bits(f32::NAN)).is_nan());
+    assert_eq!(f32_to_bf16_bits(f32::INFINITY), 0x7F80);
+    assert_eq!(f32_to_bf16_bits(f32::NEG_INFINITY), 0xFF80);
+    assert_eq!(f32_to_bf16_bits(0.0).to_le_bytes(), [0, 0]);
+    assert_eq!(f32_to_bf16_bits(-0.0), 0x8000, "-0 keeps its sign");
+    assert_eq!(bf16_bits_to_f32(0x8000).to_bits(), (-0.0f32).to_bits());
+    // Overflowing round carries into infinity, not garbage.
+    assert_eq!(f32_to_bf16_bits(f32::MAX), 0x7F80);
+}
+
+#[test]
+fn f16_narrowing_is_round_to_nearest_and_preserves_specials() {
+    for x in probe_values() {
+        let bits = f32_to_f16_bits(x);
+        assert_nearest(x, bits, f16_bits_to_f32, "f16");
+    }
+    // Normal-range half-ULP bound: f16 ULP at exponent E is 2^(E-10).
+    for x in [1.0f32, 0.1, 333.25, 1.0 / 3.0, 60000.0] {
+        let r = f16_bits_to_f32(f32_to_f16_bits(x));
+        let ulp = (x.abs().log2().floor() - 10.0).exp2() as f64;
+        assert!(
+            (f64::from(r) - f64::from(x)).abs() <= 0.5 * ulp + f64::EPSILON,
+            "f16 error beyond half-ULP at {x:e}"
+        );
+    }
+    // Subnormal gradual underflow: 2^-24 is the smallest f16 subnormal.
+    assert_eq!(f16_bits_to_f32(f32_to_f16_bits((-24f32).exp2())), (-24f32).exp2());
+    assert_eq!(f32_to_f16_bits((-26f32).exp2()), 0, "past the smallest subnormal → +0");
+    // Specials.
+    assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+    assert_eq!(f32_to_f16_bits(f32::INFINITY), 0x7C00);
+    assert_eq!(f32_to_f16_bits(f32::NEG_INFINITY), 0xFC00);
+    assert_eq!(f32_to_f16_bits(1e6), 0x7C00, "beyond f16 range → +inf");
+    assert_eq!(f32_to_f16_bits(-0.0), 0x8000);
+    assert_eq!(f16_bits_to_f32(0x8000).to_bits(), (-0.0f32).to_bits());
+}
+
+#[test]
+fn golden_v3_bf16_checkpoint_bytes_are_pinned() {
+    let dir = std::env::temp_dir().join("burtorch_precision_golden");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("golden_v3.bin");
+
+    // Four leaves whose low 16 f32 bits are zero, so bf16 narrowing is
+    // exact and the payload is knowable by hand.
+    let mut tape = Tape::<f32>::new();
+    let first = tape.leaf(1.0); // 0x3F80
+    tape.leaf(-2.5); // 0xC020
+    tape.leaf(0.0); // 0x0000
+    tape.leaf(1.5); // 0x3FC0
+    save_params_range_as(&tape, first, 4, &path, ParamDtype::Bf16).unwrap();
+
+    // magic(7) + version(1) + dtype code(1) + count u64 le(8) +
+    // crc32 le(4) + payload (4 × 2 bytes, little-endian per element).
+    let payload: [u8; 8] = [0x80, 0x3F, 0x20, 0xC0, 0x00, 0x00, 0xC0, 0x3F];
+    let mut want = Vec::new();
+    want.extend_from_slice(b"BURPARM");
+    want.push(3); // PARAM_VERSION_V3
+    want.push(3); // DTYPE_CODE_BF16
+    want.extend_from_slice(&4u64.to_le_bytes());
+    want.extend_from_slice(&crc32(&payload).to_le_bytes());
+    want.extend_from_slice(&payload);
+    assert_eq!(std::fs::read(&path).unwrap(), want, "v3 byte layout drifted");
+
+    // The header inspector agrees with the pinned bytes.
+    let h = inspect_params(&path).unwrap();
+    assert_eq!((h.version, h.dtype_bytes, h.count), (3, 3, 4));
+    assert_eq!(h.dtype_name(), Some("bf16"));
+    assert_eq!(h.payload_bytes(), Some(8));
+    assert_eq!(h.checksum_ok(), Some(true));
+}
+
+#[test]
+fn train_save_bf16_serve_roundtrip_is_deterministic() {
+    let dir = std::env::temp_dir().join("burtorch_precision_roundtrip");
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // Train a tiny GPT, checkpoint it at both narrow dtypes.
+    let corpus = CharCorpus::shakespeare(2_000, 8);
+    let (mut tape, model) = tiny_gpt(7);
+    let trainer = Trainer::new(TrainerOptions {
+        steps: 3,
+        batch: 2,
+        lr: 0.05,
+        ..Default::default()
+    });
+    trainer.train_gpt(&mut tape, &model, &corpus);
+
+    for dtype in [ParamDtype::Bf16, ParamDtype::F16] {
+        let path = dir.join(format!("gpt_{}.bin", dtype.as_str()));
+        model.save_params_as(&tape, &path, dtype).unwrap();
+        // Narrow files are about half an f32 checkpoint.
+        let h = inspect_params(&path).unwrap();
+        assert_eq!(h.elem_bytes(), Some(2));
+        assert_eq!(h.checksum_ok(), Some(true));
+
+        // Loading reproduces widen(narrow(w)) bit for bit…
+        let (mut t2, m2) = tiny_gpt(31_337);
+        m2.load_params(&mut t2, &path).unwrap();
+        for (k, v) in model.params.iter().enumerate() {
+            let w = tape.value(v);
+            let expect = match dtype {
+                ParamDtype::Bf16 => bf16_bits_to_f32(f32_to_bf16_bits(w)),
+                ParamDtype::F16 => f16_bits_to_f32(f32_to_f16_bits(w)),
+                ParamDtype::Native => unreachable!(),
+            };
+            let got = t2.value(Value(m2.params.first.0 + k as u32));
+            assert_eq!(got.to_bits(), expect.to_bits(), "{} param {k}", dtype.as_str());
+        }
+
+        // …identically on an f64 tape (the widening is exact), so
+        // `--resume` and f64 serving see the same weights.
+        let mut t64 = Tape::<f64>::new();
+        let mut r64 = Rng::new(5);
+        let g64 = Gpt::new(&mut t64, tiny_cfg(), &mut r64);
+        g64.load_params(&mut t64, &path).unwrap();
+        for (k, v) in g64.params.iter().enumerate() {
+            let f32_side = t2.value(Value(m2.params.first.0 + k as u32));
+            assert_eq!(t64.value(v), f64::from(f32_side), "f64 load diverged at {k}");
+        }
+
+        // A server booted from the narrow checkpoint serves exactly what
+        // the loaded model generates in process.
+        let prompt = vec![1u32, 2, 3];
+        let (n, temp, seed) = (10usize, 0.8f64, 99u64);
+        let mut cache = ProgramCache::new();
+        let mut gen_rng = Rng::new(seed);
+        let want = m2.generate_cached(&mut t2, &prompt, n, temp, &mut gen_rng, &mut cache);
+        let (mut t3, m3) = tiny_gpt(404);
+        m3.load_params(&mut t3, &path).unwrap();
+        let mut engine = ServeEngine::new(t3, m3, ServeOptions::default());
+        engine.submit(Request {
+            id: 0,
+            prompt,
+            max_new_tokens: n,
+            temperature: temp,
+            seed,
+            deadline_ms: None,
+        });
+        let done = engine.run_to_completion();
+        assert_eq!(done[0].output(), want.as_slice(), "{} serve diverged", dtype.as_str());
+    }
+}
+
+/// First-max argmax — the tie-break every decode path in the repo uses.
+fn argmax(zs: &[f64]) -> usize {
+    let mut best = 0;
+    for (j, &z) in zs.iter().enumerate() {
+        if z > zs[best] {
+            best = j;
+        }
+    }
+    best
+}
+
+#[test]
+fn quant_greedy_decode_agrees_totally_with_dequantized_oracle() {
+    const TOKENS: usize = 288; // acceptance floor is 256
+
+    // Seed model → int8 table; dequantized-weights oracle via
+    // `Gpt::load_quantized` (identical weights, f64 activations).
+    let mut tape = Tape::<f64>::new();
+    let mut rng = Rng::new(71);
+    let model = Gpt::new(&mut tape, GptConfig::paper(), &mut rng);
+    let qp = model.quantize(&tape);
+    let mut dtape = Tape::<f64>::new();
+    let mut drng = Rng::new(999);
+    let dmodel = Gpt::new(&mut dtape, GptConfig::paper(), &mut drng);
+    dmodel.load_quantized(&mut dtape, &qp);
+
+    let vocab = model.cfg.vocab;
+    let block = model.cfg.block_size;
+    let mut srng = Rng::new(2024);
+    let stream: Vec<u32> = (0..TOKENS).map(|_| srng.below_usize(vocab) as u32).collect();
+
+    let mut dcache = ProgramCache::new();
+    let mut max_div = 0f64;
+    for t in 0..TOKENS {
+        let ctx = &stream[(t + 1).saturating_sub(block)..=t];
+        let z_scalar = qp.logits_backend(KernelBackend::Scalar, ctx);
+        if simd_available() {
+            let z_simd = qp.logits_backend(KernelBackend::Simd, ctx);
+            for (j, (a, b)) in z_scalar.iter().zip(&z_simd).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "scalar≠simd at token {t} logit {j}");
+            }
+        }
+        let zq: Vec<f64> = z_scalar.iter().map(|&z| f64::from(z)).collect();
+        let z0 = dmodel.cached_logits(&mut dtape, &mut dcache, ctx);
+        let zd: Vec<f64> = (0..vocab).map(|j| dtape.value(Value(z0.0 + j as u32))).collect();
+        assert_eq!(
+            argmax(&zq),
+            argmax(&zd),
+            "greedy disagreement at token {t} (must be 100% over {TOKENS})"
+        );
+        for (a, b) in zq.iter().zip(&zd) {
+            max_div = max_div.max((a - b).abs());
+        }
+    }
+    // The two paths share weights exactly; all that differs is f32 vs
+    // f64 activation arithmetic, which cannot move a logit this far on
+    // the paper-scale model.
+    assert!(max_div <= 1e-2, "activation drift {max_div:e} exceeds bound");
+}
