@@ -8,7 +8,10 @@
 //! through one persistent worker pool per run, so the loss trajectories
 //! are bitwise identical across thread counts — the bench asserts that
 //! before reporting speedups. The compression sweep reports the step-time
-//! and final-loss cost of RandK/TopK/EF21 on the lane→tree edge. Results
+//! and final-loss cost of RandK/TopK/EF21 on the lane→tree edge. Every
+//! row carries per-step latency percentiles (p50/p90/p99, ns) folded
+//! from the same `Timer` samples as the mean — tail latency is where
+//! reduction stalls and allocator churn show up first. Results
 //! are emitted both as the usual paper-style table
 //! (`bench_results/parallel_throughput.txt`) and as JSON
 //! (`bench_results/parallel_throughput.json`) so later PRs have a
@@ -26,6 +29,7 @@ use burtorch::nn::{CeMode, CharMlp, CharMlpConfig};
 use burtorch::parallel::ReductionCompression;
 use burtorch::rng::Rng;
 use burtorch::tape::Tape;
+use burtorch::telemetry::HistogramSummary;
 
 struct ThreadRow {
     threads: usize,
@@ -34,6 +38,8 @@ struct ThreadRow {
     samples_per_sec: f64,
     speedup: f64,
     peak_tape_nodes: usize,
+    /// Per-step latency distribution (ns), `TrainReport::step_latency`.
+    latency: HistogramSummary,
 }
 
 fn main() {
@@ -106,10 +112,18 @@ fn main() {
             samples_per_sec,
             speedup: base_ms / ms,
             peak_tape_nodes: report.peak_tape_nodes,
+            latency: report.step_latency,
         };
         println!(
-            "  threads={:>2}: {:>8.3} ms/step  {:>10.0} samples/s  speedup {:>5.2}x",
-            row.threads, row.ms_per_step, row.samples_per_sec, row.speedup
+            "  threads={:>2}: {:>8.3} ms/step  {:>10.0} samples/s  speedup {:>5.2}x  \
+             step p50/p90/p99 {:.3}/{:.3}/{:.3} ms",
+            row.threads,
+            row.ms_per_step,
+            row.samples_per_sec,
+            row.speedup,
+            HistogramSummary::ms(row.latency.p50),
+            HistogramSummary::ms(row.latency.p90),
+            HistogramSummary::ms(row.latency.p99),
         );
         let mem = MemInfo::snapshot();
         table.push(Row {
@@ -141,6 +155,7 @@ fn main() {
         ms_per_step: f64,
         std_ms: f64,
         final_loss: f64,
+        latency: HistogramSummary,
     }
     let mut compress_rows: Vec<CompressRow> = Vec::new();
     println!("compression sweep (threads={sweep_threads}, k={k}):");
@@ -174,6 +189,7 @@ fn main() {
             ms_per_step: report.compute_ms_mean,
             std_ms: report.compute_ms_std,
             final_loss: report.final_loss,
+            latency: report.step_latency,
         };
         println!(
             "  {:>10}: {:>8.3} ms/step  final loss {:.4}",
@@ -209,6 +225,7 @@ fn main() {
         ms_per_step: f64,
         std_ms: f64,
         speedup_vs_eager: f64,
+        latency: HistogramSummary,
     }
     let mut exec_rows: Vec<ExecRow> = Vec::new();
     println!("execution-mode sweep (eager/interpreter vs replay/compiled):");
@@ -254,6 +271,7 @@ fn main() {
                 ms_per_step: ms,
                 std_ms: report.compute_ms_std,
                 speedup_vs_eager: eager_ms / ms,
+                latency: report.step_latency,
             };
             let exec_name = row.exec.to_string();
             println!(
@@ -300,12 +318,16 @@ fn main() {
     for (i, r) in rows.iter().enumerate() {
         json.push_str(&format!(
             "    {{\"threads\": {}, \"ms_per_step\": {}, \"std_ms\": {}, \
-             \"samples_per_sec\": {}, \"speedup\": {}, \"peak_tape_nodes\": {}}}{}\n",
+             \"samples_per_sec\": {}, \"speedup\": {}, \"step_p50_ns\": {}, \
+             \"step_p90_ns\": {}, \"step_p99_ns\": {}, \"peak_tape_nodes\": {}}}{}\n",
             r.threads,
             json_num(r.ms_per_step),
             json_num(r.std_ms),
             json_num(r.samples_per_sec),
             json_num(r.speedup),
+            r.latency.p50,
+            r.latency.p90,
+            r.latency.p99,
             r.peak_tape_nodes,
             if i + 1 == rows.len() { "" } else { "," },
         ));
@@ -316,11 +338,15 @@ fn main() {
     ));
     for (i, r) in compress_rows.iter().enumerate() {
         json.push_str(&format!(
-            "    {{\"mode\": \"{}\", \"ms_per_step\": {}, \"std_ms\": {}, \"final_loss\": {}}}{}\n",
+            "    {{\"mode\": \"{}\", \"ms_per_step\": {}, \"std_ms\": {}, \"final_loss\": {}, \
+             \"step_p50_ns\": {}, \"step_p90_ns\": {}, \"step_p99_ns\": {}}}{}\n",
             r.name,
             json_num(r.ms_per_step),
             json_num(r.std_ms),
             json_num(r.final_loss),
+            r.latency.p50,
+            r.latency.p90,
+            r.latency.p99,
             if i + 1 == compress_rows.len() { "" } else { "," },
         ));
     }
@@ -329,13 +355,17 @@ fn main() {
     for (i, r) in exec_rows.iter().enumerate() {
         json.push_str(&format!(
             "    {{\"exec\": \"{}\", \"backward\": \"{}\", \"threads\": {}, \"ms_per_step\": {}, \
-             \"std_ms\": {}, \"speedup_vs_eager\": {}}}{}\n",
+             \"std_ms\": {}, \"speedup_vs_eager\": {}, \"step_p50_ns\": {}, \
+             \"step_p90_ns\": {}, \"step_p99_ns\": {}}}{}\n",
             r.exec,
             r.backward,
             r.threads,
             json_num(r.ms_per_step),
             json_num(r.std_ms),
             json_num(r.speedup_vs_eager),
+            r.latency.p50,
+            r.latency.p90,
+            r.latency.p99,
             if i + 1 == exec_rows.len() { "" } else { "," },
         ));
     }

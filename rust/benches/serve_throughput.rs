@@ -27,6 +27,11 @@
 //! incremental-decode oracle contract, and the bitwise kernel contract —
 //! before reporting speedups.
 //!
+//! Every row also reports per-token latency percentiles (p50/p90/p99,
+//! nanoseconds) from the serving telemetry shards — the bench runs with
+//! [`ServeOptions::metrics`] on, which the telemetry contract proves
+//! bitwise-inert, so the determinism asserts above still hold.
+//!
 //! Results are emitted as a paper-style table
 //! (`bench_results/serve_throughput.txt`) and as JSON
 //! (`bench_results/serve_throughput.json`).
@@ -41,6 +46,7 @@ use burtorch::nn::{Gpt, GptConfig};
 use burtorch::rng::Rng;
 use burtorch::serve::{DecodeMode, Request, ServeEngine, ServeOptions, ServeStats};
 use burtorch::tape::Tape;
+use burtorch::telemetry::HistogramSummary;
 
 struct LaneRow {
     lanes: usize,
@@ -59,6 +65,12 @@ fn mode_str(m: DecodeMode) -> &'static str {
         DecodeMode::Full => "full",
         DecodeMode::Incremental => "incremental",
     }
+}
+
+/// Merged per-token latency summary (always present: the bench serves
+/// with [`ServeOptions::metrics`] on).
+fn lat(stats: &ServeStats) -> HistogramSummary {
+    stats.token_latency.unwrap_or_default()
 }
 
 fn requests(n_sessions: usize, tokens_each: usize) -> Vec<Request> {
@@ -92,6 +104,11 @@ fn serve_once(
             cache_cap,
             decode,
             kernel,
+            // Per-token latency percentiles come from the telemetry
+            // shards — proven bitwise-inert, and the cost (two clock
+            // reads + one array increment per token) is noise against a
+            // d = 46,289 forward pass.
+            metrics: true,
             ..ServeOptions::default()
         },
     );
@@ -148,12 +165,15 @@ fn main() {
                 ),
             }
             let base = rows.first().map(|r: &LaneRow| r.wall_s).unwrap_or(wall);
+            let l = lat(&stats);
             println!(
                 "  {:<11} lanes={lanes:>2}  wall {wall:>7.3}s  {:>9.1} tok/s  {:>7.2} sessions/s  \
-                 programs {}+{}  hits {} misses {}",
+                 token p50 {:.3} ms p99 {:.3} ms  programs {}+{}  hits {} misses {}",
                 mode_str(decode),
                 total_tokens / wall,
                 n_sessions as f64 / wall,
+                HistogramSummary::ms(l.p50),
+                HistogramSummary::ms(l.p99),
                 stats.cached_programs,
                 stats.append_programs,
                 stats.cache_hits,
@@ -251,10 +271,11 @@ fn main() {
     ));
     for r in &rows {
         let cap = if r.cache_cap == 0 { "∞".to_string() } else { r.cache_cap.to_string() };
+        let l = lat(&r.stats);
         table.note(&format!(
             "{:<11} lanes {:>2} cap {:>2} kernel {:<6}: {:>8.1} tok/s, {:>6.2} sessions/s, \
-             {:.2}× vs 1 lane, programs {}+{} (full+append), hits {} misses {} evictions {} \
-             compactions {}",
+             {:.2}× vs 1 lane, token p50/p90/p99 {:.3}/{:.3}/{:.3} ms, programs {}+{} \
+             (full+append), hits {} misses {} evictions {} compactions {}",
             mode_str(r.decode),
             r.lanes,
             cap,
@@ -262,6 +283,9 @@ fn main() {
             r.tokens_per_sec,
             r.sessions_per_sec,
             r.speedup,
+            HistogramSummary::ms(l.p50),
+            HistogramSummary::ms(l.p90),
+            HistogramSummary::ms(l.p99),
             r.stats.cached_programs,
             r.stats.append_programs,
             r.stats.cache_hits,
@@ -282,9 +306,11 @@ fn main() {
         "  \"deterministic_across_lanes\": true,\n  \"deterministic_across_decode_modes\": true,\n  \"deterministic_across_kernels\": true,\n  \"rows\": [\n",
     );
     for (i, r) in rows.iter().enumerate() {
+        let l = lat(&r.stats);
         json.push_str(&format!(
             "    {{\"lanes\": {}, \"cache_cap\": {}, \"decode\": \"{}\", \"kernel\": \"{}\", \
              \"wall_s\": {}, \"tokens_per_sec\": {}, \"sessions_per_sec\": {}, \"speedup\": {}, \
+             \"token_p50_ns\": {}, \"token_p90_ns\": {}, \"token_p99_ns\": {}, \
              \"programs_cached\": {}, \"append_programs\": {}, \"cache_hits\": {}, \
              \"cache_misses\": {}, \"cache_evictions\": {}, \"compactions\": {}, \
              \"peak_tape_nodes\": {}}}{}\n",
@@ -296,6 +322,9 @@ fn main() {
             json_num(r.tokens_per_sec),
             json_num(r.sessions_per_sec),
             json_num(r.speedup),
+            l.p50,
+            l.p90,
+            l.p99,
             r.stats.cached_programs,
             r.stats.append_programs,
             r.stats.cache_hits,

@@ -29,6 +29,7 @@
 
 use std::path::Path;
 use std::sync::Arc;
+use std::time::Instant;
 
 use crate::data::{BatchSampler, CharCorpus, Example, PrefetchSampler};
 use crate::kernels::KernelChoice;
@@ -42,6 +43,10 @@ use crate::parallel::{
 };
 use crate::scalar::Scalar;
 use crate::tape::{Mark, Recording, Tape, Value};
+use crate::telemetry::{
+    self, CounterId, GaugeId, HistId, Histogram, HistogramSummary, Registry, SpanStart,
+    TelemetryConfig, Tracer,
+};
 
 // The execution mode lives with the executor in `tape::exec`; re-export
 // it here so coordinator callers keep their historical import path.
@@ -114,6 +119,14 @@ pub struct TrainerOptions {
     /// (including `--resume`) widens back deterministically, so the
     /// precision loss happens exactly once, at save time.
     pub params_dtype: ParamDtype,
+    /// End-of-run telemetry outputs (`--metrics-json` / `--trace`).
+    /// Disabled by default; when enabled the trainer records step-latency
+    /// histograms, phase spans (lanes / reduce / optim / checkpoint), and
+    /// reduction-payload counters. Telemetry only reads wall clocks and
+    /// writes side buffers — an instrumented run is **bitwise identical**
+    /// to an uninstrumented one for every thread count and exec mode
+    /// (`tests/telemetry.rs` asserts the matrix).
+    pub telemetry: TelemetryConfig,
 }
 
 impl Default for TrainerOptions {
@@ -136,6 +149,47 @@ impl Default for TrainerOptions {
             resume: false,
             kernel: KernelChoice::Auto,
             params_dtype: ParamDtype::Native,
+            telemetry: TelemetryConfig::default(),
+        }
+    }
+}
+
+/// The trainer's telemetry instruments, constructed only when
+/// [`TrainerOptions::telemetry`] enables an output. Everything here is
+/// coordinator-owned (the pool workers are timed in aggregate through
+/// [`crate::parallel::StepStats`]), so no sharding is needed.
+struct TrainTelemetry {
+    reg: Registry,
+    c_steps: CounterId,
+    c_reduce_bytes: CounterId,
+    g_overlap: GaugeId,
+    h_step: HistId,
+    h_ckpt: HistId,
+    tracer: Option<Tracer>,
+}
+
+impl TrainTelemetry {
+    fn new(trace_on: bool) -> TrainTelemetry {
+        let mut reg = Registry::new();
+        TrainTelemetry {
+            c_steps: reg.counter("train.steps"),
+            c_reduce_bytes: reg.counter("train.reduce.bytes"),
+            g_overlap: reg.gauge("train.prefetch.overlap"),
+            h_step: reg.histogram("train.step.ns"),
+            h_ckpt: reg.histogram("train.checkpoint.write.ns"),
+            tracer: trace_on.then(Tracer::new),
+            reg,
+        }
+    }
+
+    /// Write the configured end-of-run outputs (best effort — a failed
+    /// write warns instead of failing the training run).
+    fn finish(&self, cfg: &TelemetryConfig) {
+        if let Some(path) = &cfg.metrics_json {
+            telemetry::write_output(path, "metrics snapshot", &self.reg.to_json());
+        }
+        if let (Some(path), Some(tr)) = (&cfg.trace, &self.tracer) {
+            telemetry::write_output(path, "trace", &tr.to_json());
         }
     }
 }
@@ -155,6 +209,11 @@ pub struct TrainReport {
     pub peak_tape_nodes: usize,
     /// Final loss (mean of last 10 logged values).
     pub final_loss: f64,
+    /// Per-step compute-latency distribution (ns), folded from the same
+    /// `Timer` samples as [`TrainReport::compute_ms_mean`] — always
+    /// populated, no telemetry required (percentiles are bucket-edge
+    /// estimates, within one power-of-two bucket of exact).
+    pub step_latency: HistogramSummary,
 }
 
 /// Generic trainer driving a model's per-sample oracle.
@@ -313,9 +372,13 @@ impl Trainer {
                 scratch_backward: o.scratch_backward,
                 compression: o.compression,
                 pin_cores: o.pin_cores,
+                // Phase timing rides along with telemetry: pure clock
+                // reads on the coordinator, bitwise-inert.
+                timing: o.telemetry.enabled(),
             },
             pool,
         );
+        let mut telem = o.telemetry.enabled().then(|| TrainTelemetry::new(o.telemetry.trace_on()));
         let mut sessions: ReplaySessions<O::Rec> =
             ReplaySessions::with_mode(o.exec, engine.threads());
         let mut times = Vec::with_capacity(o.steps);
@@ -333,10 +396,16 @@ impl Trainer {
         // sampler is O(batch), lanes are O(batch · model)) could extend
         // the barrier window being timed.
         let overlap = engine.threads().min(engine.lanes().min(o.batch)) > 1;
+        if let Some(t) = &mut telem {
+            t.reg.set_gauge(t.g_overlap, i64::from(overlap));
+        }
 
         for step in start_step..o.steps {
             let side: Option<&dyn StepSideJob> =
                 overlap.then_some(&prefetch as &dyn StepSideJob);
+            // Telemetry's own wall-clock stamp (kept apart from `Timer`,
+            // whose protocol excludes checkpoint writes from compute_ms).
+            let step_start = telem.as_ref().map(|_| Instant::now());
             let timer = Timer::new();
             let stats = engine.accumulate_with_side(
                 tape,
@@ -349,7 +418,16 @@ impl Trainer {
             peak_nodes = peak_nodes.max(stats.peak_nodes);
             let inv_b = 1.0 / o.batch as f64;
             grad_acc.iter_mut().for_each(|g| *g *= inv_b);
+            let optim_start = telem
+                .as_ref()
+                .and_then(|t| t.tracer.as_ref())
+                .map(|tr| tr.begin());
             opt.step(tape.values_range_mut(params.first, d), &grad_acc);
+            if let Some(t) = &mut telem {
+                if let (Some(tr), Some(sp)) = (&mut t.tracer, optim_start) {
+                    tr.end("train.optim", "train", sp);
+                }
+            }
             times.push(timer.seconds() * 1e3);
             prefetch.advance(); // swap buffers; synchronous prep (if any) stays off the clock
             // Periodic crash-safe snapshot: params + sidecar, both
@@ -360,6 +438,7 @@ impl Trainer {
             // stateless and needs nothing in the sidecar.)
             if o.checkpoint_every > 0 && (step + 1) % o.checkpoint_every == 0 {
                 if let Some(path) = &o.checkpoint {
+                    let ckpt_start = telem.as_ref().map(|_| Instant::now());
                     let ckpt = Path::new(path);
                     serialize::save_params_range_as(tape, params.first, d, ckpt, o.params_dtype)
                         .unwrap_or_else(|e| panic!("checkpoint: params '{path}': {e}"));
@@ -370,6 +449,30 @@ impl Trainer {
                     };
                     serialize::save_train_state(&state, &serialize::train_state_path(ckpt))
                         .unwrap_or_else(|e| panic!("checkpoint: train state '{path}': {e}"));
+                    if let (Some(t), Some(start)) = (&mut telem, ckpt_start) {
+                        let dur = start.elapsed().as_nanos() as u64;
+                        t.reg.record(t.h_ckpt, dur);
+                        if let Some(tr) = &mut t.tracer {
+                            let ts = tr.offset_ns(SpanStart::at(start));
+                            tr.complete_at("train.checkpoint", "train", ts, dur);
+                        }
+                    }
+                }
+            }
+            // Step bookkeeping: latency histogram + phase spans. The
+            // lanes/reduce placements come from the engine's StepStats
+            // clocks (coordinator-measured), laid back-to-back from the
+            // step's start — readable phase bands in chrome://tracing.
+            if let (Some(t), Some(start)) = (&mut telem, step_start) {
+                let dur = start.elapsed().as_nanos() as u64;
+                t.reg.record(t.h_step, dur);
+                t.reg.add(t.c_steps, 1);
+                t.reg.add(t.c_reduce_bytes, stats.reduce_bytes);
+                if let Some(tr) = &mut t.tracer {
+                    let ts = tr.offset_ns(SpanStart::at(start));
+                    tr.complete_at("train.step", "train", ts, dur);
+                    tr.complete_at("train.lanes", "train", ts, stats.compute_ns);
+                    tr.complete_at("train.reduce", "train", ts + stats.compute_ns, stats.reduce_ns);
                 }
             }
             let mean_loss = stats.loss_sum * inv_b;
@@ -378,6 +481,9 @@ impl Trainer {
             } else if o.log_every == 0 && (step == 0 || step + 1 == o.steps) {
                 curve.push((step, mean_loss));
             }
+        }
+        if let Some(t) = &telem {
+            t.finish(&o.telemetry);
         }
         finish_report(times, curve, peak_nodes)
     }
@@ -445,6 +551,10 @@ fn finish_report(
     peak_nodes: usize,
 ) -> TrainReport {
     let (mean, std) = mean_std(&times_ms);
+    let mut step_hist = Histogram::new();
+    for &ms in &times_ms {
+        step_hist.record_secs(ms / 1e3);
+    }
     let mem = MemInfo::snapshot();
     let tail: Vec<f64> = curve
         .iter()
@@ -464,6 +574,7 @@ fn finish_report(
         vm_peak_mb: mem.vm_peak_mb(),
         peak_tape_nodes: peak_nodes,
         final_loss,
+        step_latency: step_hist.summary(),
     }
 }
 
@@ -700,6 +811,49 @@ mod tests {
             resumed, uninterrupted,
             "resumed run must reproduce the uninterrupted parameters bit-for-bit"
         );
+    }
+
+    #[test]
+    fn telemetry_is_bitwise_inert_and_writes_outputs() {
+        let dir = std::env::temp_dir().join("burtorch_trainer_telemetry_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let metrics = dir.join("metrics.json").to_string_lossy().into_owned();
+        let trace = dir.join("trace.json").to_string_lossy().into_owned();
+
+        let ds = names_dataset(120, 16, 41);
+        let run = |telemetry: TelemetryConfig| -> Vec<u64> {
+            let mut tape = Tape::<f32>::new();
+            let mut rng = Rng::new(9);
+            let model = CharMlp::new(&mut tape, CharMlpConfig::paper(4), &mut rng);
+            let trainer = Trainer::new(TrainerOptions {
+                steps: 5,
+                batch: 4,
+                lr: 0.2,
+                log_every: 1,
+                threads: 2,
+                telemetry,
+                ..Default::default()
+            });
+            let curve = trainer.train_char_mlp(&mut tape, &model, &ds.examples).loss_curve;
+            curve.iter().map(|&(_, l)| l.to_bits()).collect()
+        };
+        let plain = run(TelemetryConfig::default());
+        let instrumented = run(TelemetryConfig {
+            metrics_json: Some(metrics.clone()),
+            trace: Some(trace.clone()),
+        });
+        assert_eq!(plain, instrumented, "telemetry must be bitwise-inert");
+
+        let m = std::fs::read_to_string(&metrics).unwrap();
+        assert!(m.starts_with("{\"schema\":\"burtorch.metrics.v1\""), "{m}");
+        assert!(m.contains("\"train.steps\":5"), "{m}");
+        assert!(m.contains("\"train.step.ns\":"), "{m}");
+        assert!(m.contains("\"train.reduce.bytes\":"), "{m}");
+        let tr = std::fs::read_to_string(&trace).unwrap();
+        assert!(tr.starts_with("{\"traceEvents\":["), "{tr}");
+        assert!(tr.contains("\"name\":\"train.step\""), "{tr}");
+        assert!(tr.contains("\"name\":\"train.reduce\""), "{tr}");
+        assert!(tr.contains("\"name\":\"train.optim\""), "{tr}");
     }
 
     #[test]

@@ -187,6 +187,26 @@
 //! state per *lane*, not per thread, so they are equally deterministic
 //! for a fixed seed. See [`parallel`] for the full contract.
 //!
+//! ## Observability: bitwise-inert telemetry
+//!
+//! The [`telemetry`] layer (CLI `--metrics-json`, `--trace`,
+//! `serve --stats-every N`) surfaces where the time goes — per-token
+//! and per-step latency histograms, queue-wait and time-to-first-token,
+//! phase spans loadable in `chrome://tracing` — under two hard
+//! guarantees. **Bitwise-inert when on**: instrumentation only reads
+//! clocks and writes side buffers, never feeding a measured value back
+//! into tape values, RNG streams, batch order, reduction shape, or
+//! scheduling; an instrumented run is bitwise identical to an
+//! uninstrumented one across thread counts, exec modes, and decode
+//! modes. **Zero-cost when off**: disabled telemetry constructs
+//! nothing, reads no clocks, and adds zero allocations to the
+//! steady-state loops; the enabled path allocates only at construction
+//! (preallocated log₂ buckets ([`telemetry::Histogram`]), bounded trace
+//! buffers) — `record()` itself is allocation-free. Per-lane instrument
+//! shards merge in fixed lane order, so reported aggregates are as
+//! deterministic as the runs they describe. `tests/telemetry.rs` proves
+//! the whole contract.
+//!
 //! ## Kernel backends
 //!
 //! The fused hot-path kernels — the forward dot/gather/cross-entropy
@@ -254,6 +274,8 @@
 //!   and self-describing parameter checkpoints.
 //! - [`serve`] — the batched inference serving subsystem: sessions,
 //!   shape-grouping scheduler, and the multi-lane [`serve::ServeEngine`].
+//! - [`telemetry`] — counters, latency histograms, and Chrome-trace
+//!   spans; bitwise-inert and zero-cost when off (see below).
 //! - [`viz`] — DOT graph export and matplotlib script generation (F.6).
 //! - [`metrics`] — timers, CPU clocks, peak memory, the energy model.
 //! - [`baselines`] — the eager-framework stand-ins the paper benchmarks
@@ -288,6 +310,7 @@ pub mod scalar;
 pub mod serialize;
 pub mod serve;
 pub mod tape;
+pub mod telemetry;
 pub mod testkit;
 pub mod viz;
 

@@ -30,6 +30,7 @@ use burtorch::serve::{
     SessionStatus,
 };
 use burtorch::tape::{Builder, Tape};
+use burtorch::telemetry::{self, HistogramSummary, TelemetryConfig};
 use burtorch::viz;
 
 fn main() {
@@ -72,6 +73,7 @@ fn usage() -> &'static str {
                  [--params-dtype f32|bf16|f16]\n\
                  [--checkpoint-every N] [--resume]\n\
                  [--kernel scalar|simd|auto]\n\
+                 [--metrics-json m.json] [--trace t.json]\n\
                  (--threads 0 = all cores; any W gives bitwise-identical\n\
                   runs with --compress none; compressed runs are\n\
                   deterministic per seed and thread-invariant too;\n\
@@ -91,7 +93,12 @@ fn usage() -> &'static str {
                   --params-dtype stores checkpoints bf16/f16 at half\n\
                   the bytes — rounded once on save, widened\n\
                   deterministically on load, accepted transparently by\n\
-                  sample/serve/--resume)\n\
+                  sample/serve/--resume; --metrics-json writes the\n\
+                  end-of-run burtorch.metrics.v1 snapshot (counters,\n\
+                  gauges, latency histograms), --trace a Chrome\n\
+                  trace-event file for chrome://tracing — both are\n\
+                  bitwise-inert: results are identical with or without\n\
+                  them)\n\
        fed       --clients N --rounds R --compressor identity|randk|topk\n\
                  [--exec eager|replay]\n\
                  (--exec replay drives each client's local oracles through\n\
@@ -105,6 +112,8 @@ fn usage() -> &'static str {
                  [--max-queue Q] [--deadline-ms D] [--max-tokens T]\n\
                  [--decode full|incremental] [--kernel scalar|simd|auto]\n\
                  [--quantize none|int8]\n\
+                 [--metrics-json m.json] [--trace t.json]\n\
+                 [--stats-every N]\n\
                  (batched multi-session inference; requests come one per\n\
                   line as 'seed|max_new_tokens|temperature|prompt', read\n\
                   from FILE or stdin; --lanes fans sessions across worker\n\
@@ -124,9 +133,15 @@ fn usage() -> &'static str {
                   --quantize int8 serves per-row int8 weights from one\n\
                   read-only table shared by every lane — ~8x less\n\
                   weight RAM, deterministic and backend-bitwise, but\n\
-                  numerically near rather than equal to full precision)\n\
-       params    inspect <file>   (print checkpoint header, dtype,\n\
-                  payload bytes + checksum; non-zero on unknown dtype)\n\
+                  numerically near rather than equal to full precision;\n\
+                  --metrics-json/--trace write the bitwise-inert\n\
+                  end-of-run telemetry snapshots, --stats-every N prints\n\
+                  a stderr stats line every N tokens: tok/s, p50/p99\n\
+                  token latency, active/queued, cache hit-rate)\n\
+       params    inspect <file> [--json]   (print checkpoint header,\n\
+                  dtype, payload bytes + checksum; --json emits the same\n\
+                  fields as one stable-schema JSON object for fleet\n\
+                  tooling; non-zero on unknown dtype or bad checksum)\n\
        artifacts [--dir artifacts]      (PJRT smoke-run of AOT graphs)\n\
        kernels   (CPU features, auto-resolved backend, per-family\n\
                   kernel dispatch table)\n\
@@ -231,6 +246,13 @@ fn trainer_options(cli: &Cli, cfg: &Config) -> TrainerOptions {
         resume,
         kernel,
         params_dtype,
+        // `--metrics-json` / `--trace`: end-of-run telemetry snapshots.
+        // Bitwise-inert — the trained parameters are identical with or
+        // without them (see `tests/telemetry.rs`).
+        telemetry: TelemetryConfig {
+            metrics_json: cli.opt("metrics-json").map(String::from),
+            trace: cli.opt("trace").map(String::from),
+        },
     }
 }
 
@@ -498,6 +520,13 @@ fn cmd_serve(cli: &Cli) -> i32 {
             return 2;
         }
     };
+    // Telemetry knobs: `--metrics-json`/`--trace` write end-of-run
+    // snapshots; `--stats-every N` prints a stderr stats line every N
+    // tokens (it needs the latency shards, so it turns metrics on too).
+    // All bitwise-inert — the served tokens are identical either way.
+    let metrics_json = cli.opt("metrics-json").map(String::from);
+    let trace_path = cli.opt("trace").map(String::from);
+    let stats_every = cli.usize_or("stats-every", 0);
     // Only the tokenizer is needed from the corpus; the char set (and
     // therefore every token id) is independent of the tiling length, so
     // a small corpus builds the same vocabulary training used.
@@ -571,6 +600,8 @@ fn cmd_serve(cli: &Cli) -> i32 {
             decode,
             kernel,
             quantize,
+            metrics: metrics_json.is_some() || stats_every > 0,
+            trace: trace_path.is_some(),
         },
     );
     // Echo each prompt→completion pair; decode through the same tokenizer.
@@ -593,7 +624,39 @@ fn cmd_serve(cli: &Cli) -> i32 {
         }
     }
     let timer = Timer::new();
-    let done = engine.run_to_completion();
+    let done = if stats_every == 0 {
+        engine.run_to_completion()
+    } else {
+        // Tick manually so a stats line lands every `stats_every` tokens.
+        let mut done = Vec::new();
+        let mut next_report = stats_every as u64;
+        while engine.in_flight() > 0 {
+            done.extend(engine.step());
+            let st = engine.stats();
+            if st.tokens >= next_report {
+                next_report = st.tokens + stats_every as u64;
+                let secs = timer.seconds();
+                let lookups = st.cache_hits + st.cache_misses;
+                let hit_pct = if lookups > 0 {
+                    100.0 * st.cache_hits as f64 / lookups as f64
+                } else {
+                    0.0
+                };
+                let lat = st.token_latency.unwrap_or_default();
+                eprintln!(
+                    "stats: {} tok | {:.1} tok/s | token p50 {:.3} ms p99 {:.3} ms | active {} queued {} | cache hit {:.1}%",
+                    st.tokens,
+                    if secs > 0.0 { st.tokens as f64 / secs } else { 0.0 },
+                    HistogramSummary::ms(lat.p50),
+                    HistogramSummary::ms(lat.p99),
+                    engine.active(),
+                    engine.queued(),
+                    hit_pct,
+                );
+            }
+        }
+        done
+    };
     let wall = timer.seconds();
     for s in &done {
         match s.status() {
@@ -642,6 +705,14 @@ fn cmd_serve(cli: &Cli) -> i32 {
             st.quarantines, st.shed
         );
     }
+    // End-of-run telemetry snapshots (best effort — a failed write warns
+    // on stderr; it never fails the serve run).
+    if let (Some(path), Some(json)) = (&metrics_json, engine.metrics_json()) {
+        telemetry::write_output(path, "metrics snapshot", &json);
+    }
+    if let (Some(path), Some(json)) = (&trace_path, engine.trace_json()) {
+        telemetry::write_output(path, "trace", &json);
+    }
     0
 }
 
@@ -651,12 +722,20 @@ fn cmd_serve(cli: &Cli) -> i32 {
 fn cmd_params(cli: &Cli) -> i32 {
     let sub = cli.positionals.first().map(String::as_str);
     if sub != Some("inspect") || cli.positionals.len() != 2 {
-        eprintln!("usage: burtorch params inspect <file>");
+        eprintln!("usage: burtorch params inspect <file> [--json]");
         return 2;
     }
     let path = Path::new(&cli.positionals[1]);
     match burtorch::serialize::inspect_params(path) {
         Ok(h) => {
+            // `--json`: one stable-schema object for fleet tooling, with
+            // the same exit semantics as the human output — unknown
+            // dtype or a checksum mismatch is a failure.
+            if cli.has_flag("json") {
+                println!("{}", h.to_json());
+                let bad = h.dtype_name().is_none() || h.checksum_ok() == Some(false);
+                return i32::from(bad);
+            }
             println!("file:     {}", path.display());
             println!("format:   BURPARM v{}", h.version);
             // The dtype byte is a code in v3 and a bytes-per-scalar in

@@ -114,6 +114,7 @@ use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Barrier, Mutex};
 use std::thread;
+use std::time::Instant;
 
 use crate::compress::{Compressor, Ef21Worker, RandK, TopK};
 use crate::nn::ParamRange;
@@ -662,6 +663,13 @@ pub struct ParallelOptions {
     /// Only applies when the engine spawns its own pool — a caller-
     /// provided shared pool keeps whatever pinning it was created with.
     pub pin_cores: bool,
+    /// Measure per-step phase timings (compute / reduce) into
+    /// [`StepStats`]. Timing only *reads* the wall clock on the
+    /// coordinator thread — it never changes lane contents, reduction
+    /// shape, or scheduling, so instrumented steps stay bitwise identical
+    /// to uninstrumented ones. Off by default: the disabled path takes no
+    /// clock reads at all.
+    pub timing: bool,
 }
 
 impl Default for ParallelOptions {
@@ -672,6 +680,7 @@ impl Default for ParallelOptions {
             scratch_backward: false,
             compression: ReductionCompression::None,
             pin_cores: false,
+            timing: false,
         }
     }
 }
@@ -684,6 +693,19 @@ pub struct StepStats {
     pub loss_sum: f64,
     /// Max tape length observed across all workers (activation proxy).
     pub peak_nodes: usize,
+    /// Wall-clock nanoseconds of the lane-compute region (parameter
+    /// broadcast + dispatch + per-sample forward/backward). Zero unless
+    /// [`ParallelOptions::timing`] is on.
+    pub compute_ns: u64,
+    /// Wall-clock nanoseconds of the gap-doubling tree reduction. Zero
+    /// unless [`ParallelOptions::timing`] is on.
+    pub reduce_ns: u64,
+    /// Bytes entering the tree reduction this step — deterministic
+    /// arithmetic, filled regardless of `timing`: a dense lane
+    /// contributes `d × 8` (one f64 per coordinate), a compressed
+    /// lane `min(k, d) × 12` (index u32 + value f64 per kept
+    /// coordinate), times `lanes_used`.
+    pub reduce_bytes: u64,
 }
 
 /// Per-lane compression state. Held by the lane — not the worker — so the
@@ -791,6 +813,13 @@ pub struct MinibatchGradEngine<T: Scalar> {
     threads: usize,
     lanes: usize,
     scratch_backward: bool,
+    /// Fill [`StepStats::compute_ns`]/[`StepStats::reduce_ns`] (clock
+    /// reads on the coordinator only; bitwise-inert).
+    timing: bool,
+    /// Bytes one lane contributes to the tree reduction — precomputed
+    /// from the compression config so [`StepStats::reduce_bytes`] is a
+    /// single multiply per step.
+    lane_reduce_bytes: u64,
     base: Mark,
     params: ParamRange,
     /// The persistent pool driving workers `1..threads` (None when
@@ -887,10 +916,18 @@ impl<T: Scalar> MinibatchGradEngine<T> {
                 compress: LaneCompress::new(opts.compression, l, params.len),
             })
             .collect();
+        let lane_reduce_bytes = match opts.compression {
+            ReductionCompression::None => params.len as u64 * 8,
+            ReductionCompression::RandK { k, .. }
+            | ReductionCompression::TopK { k }
+            | ReductionCompression::Ef21 { k, .. } => k.min(params.len) as u64 * 12,
+        };
         MinibatchGradEngine {
             threads,
             lanes,
             scratch_backward: opts.scratch_backward,
+            timing: opts.timing,
+            lane_reduce_bytes,
             base,
             params,
             pool,
@@ -1105,6 +1142,10 @@ impl<T: Scalar> MinibatchGradEngine<T> {
             lane.peak_nodes = 0;
         }
 
+        // Phase clocks (coordinator-side, read-only): taken only when
+        // `timing` is on so the disabled path performs no clock reads.
+        let t_compute = self.timing.then(Instant::now);
+
         if workers == 1 {
             // Serial path: identical lane structure, no replicas, no pool
             // crossings — this *is* the reference numeric behavior. A side
@@ -1198,6 +1239,9 @@ impl<T: Scalar> MinibatchGradEngine<T> {
             });
         }
 
+        let compute_ns = t_compute.map_or(0, |t| t.elapsed().as_nanos() as u64);
+        let t_reduce = self.timing.then(Instant::now);
+
         // Fixed gap-doubling binary tree over the lanes — the shape
         // depends only on `lanes_used`, never on the thread count.
         let lane_bufs: &mut [Lane] = &mut self.lane_bufs[..lanes_used];
@@ -1223,6 +1267,9 @@ impl<T: Scalar> MinibatchGradEngine<T> {
         StepStats {
             loss_sum: lane_bufs[0].loss,
             peak_nodes,
+            compute_ns,
+            reduce_ns: t_reduce.map_or(0, |t| t.elapsed().as_nanos() as u64),
+            reduce_bytes: self.lane_reduce_bytes * lanes_used as u64,
         }
     }
 }

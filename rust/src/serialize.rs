@@ -670,6 +670,40 @@ impl ParamHeader {
     pub fn payload_bytes(&self) -> Option<u64> {
         self.elem_bytes().map(|e| self.count * e as u64)
     }
+
+    /// Stable-JSON view of the header — the `burtorch params inspect
+    /// --json` payload, in the same hand-rolled fixed-key-order style as
+    /// the telemetry `--metrics-json` snapshot and the bench emitters.
+    /// Unknown dtype bytes serialize as `"dtype":null` (with the raw byte
+    /// preserved in `"dtype_byte"`); v1 checkpoints report
+    /// `"checksum":"none"` with null CRCs.
+    pub fn to_json(&self) -> String {
+        fn opt_num<T: std::fmt::Display>(v: Option<T>) -> String {
+            v.map_or_else(|| "null".to_string(), |v| v.to_string())
+        }
+        let dtype = self
+            .dtype_name()
+            .map_or_else(|| "null".to_string(), |n| format!("\"{n}\""));
+        let checksum = match self.checksum_ok() {
+            Some(true) => "\"ok\"",
+            Some(false) => "\"mismatch\"",
+            None => "\"none\"",
+        };
+        format!(
+            "{{\"schema\":\"burtorch.params.v1\",\"version\":{},\"dtype\":{},\"dtype_byte\":{},\
+             \"elem_bytes\":{},\"params\":{},\"payload_bytes\":{},\"checksum\":{},\
+             \"stored_crc\":{},\"computed_crc\":{}}}",
+            self.version,
+            dtype,
+            self.dtype_bytes,
+            opt_num(self.elem_bytes()),
+            self.count,
+            opt_num(self.payload_bytes()),
+            checksum,
+            opt_num(self.stored_crc),
+            opt_num(self.computed_crc),
+        )
+    }
 }
 
 /// Validate a `BURPARM` byte buffer: magic, version, dtype, count (when
@@ -1500,6 +1534,49 @@ mod tests {
             inspect_params(&trunc),
             Err(SerializeError::Malformed(_))
         ));
+    }
+
+    #[test]
+    fn param_header_json_is_stable_across_modes() {
+        // v2 full-width header with a valid checksum.
+        let h = ParamHeader {
+            version: 2,
+            dtype_bytes: 4,
+            count: 5,
+            stored_crc: Some(0x1234_5678),
+            computed_crc: Some(0x1234_5678),
+        };
+        assert_eq!(
+            h.to_json(),
+            "{\"schema\":\"burtorch.params.v1\",\"version\":2,\"dtype\":\"f32\",\
+             \"dtype_byte\":4,\"elem_bytes\":4,\"params\":5,\"payload_bytes\":20,\
+             \"checksum\":\"ok\",\"stored_crc\":305419896,\"computed_crc\":305419896}"
+        );
+        // Legacy v1: no checksum, nulled CRCs.
+        let v1 = ParamHeader {
+            version: 1,
+            dtype_bytes: 8,
+            count: 2,
+            stored_crc: None,
+            computed_crc: None,
+        };
+        let json = v1.to_json();
+        assert!(json.contains("\"dtype\":\"f64\""), "{json}");
+        assert!(json.contains("\"checksum\":\"none\""), "{json}");
+        assert!(json.contains("\"stored_crc\":null"), "{json}");
+        // Unknown dtype byte: null dtype, raw byte preserved.
+        let unk = ParamHeader {
+            version: PARAM_VERSION_V3,
+            dtype_bytes: 0xEE,
+            count: 1,
+            stored_crc: Some(1),
+            computed_crc: Some(2),
+        };
+        let json = unk.to_json();
+        assert!(json.contains("\"dtype\":null"), "{json}");
+        assert!(json.contains("\"dtype_byte\":238"), "{json}");
+        assert!(json.contains("\"checksum\":\"mismatch\""), "{json}");
+        assert!(json.contains("\"payload_bytes\":null"), "{json}");
     }
 
     #[test]

@@ -99,6 +99,23 @@
 //! as a synthetic `evicted` completion instead of growing the queue
 //! without limit. [`ServeOptions::max_tokens`] caps any request's token
 //! budget at admission.
+//!
+//! ## Observability: bitwise-inert telemetry
+//!
+//! [`ServeOptions::metrics`] / [`ServeOptions::trace`] turn on the
+//! [`crate::telemetry`] layer: per-lane sharded histograms (per-token
+//! latency, time-to-first-token, batch-size distribution), engine-side
+//! queue-wait and admission-depth instruments, and Chrome trace spans
+//! (a `serve.tick` span per scheduler tick, a record/replay-classified
+//! span per token, instants for quarantines and compactions). Lane
+//! shards are merged in **fixed lane order** at snapshot time
+//! ([`ServeEngine::metrics_json`] / [`ServeEngine::trace_json`] /
+//! [`ServeEngine::stats`]), so reported aggregates are deterministic.
+//! Instrumentation reads the **wall clock only** — never the injectable
+//! deadline clock, whose call count deadline tests rely on — and writes
+//! side buffers only, so an instrumented run serves bitwise identical
+//! tokens to an uninstrumented one (`tests/telemetry.rs`). Both options
+//! off (the default) constructs nothing and reads no clocks.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::Arc;
@@ -109,6 +126,9 @@ use crate::nn::{DecodeState, Gpt, KvCache};
 use crate::parallel::{PtrSend, WorkerPool};
 use crate::scalar::Scalar;
 use crate::tape::{ProgramCache, Recording, Tape, Value};
+use crate::telemetry::{
+    CounterId, GaugeId, HistId, Histogram, HistogramSummary, Registry, SpanStart, Tracer,
+};
 use crate::testkit::FaultPlan;
 
 use super::scheduler::Scheduler;
@@ -185,6 +205,15 @@ pub struct ServeOptions {
     /// [`QuantizeMode::Int8`] makes lanes share one read-only int8
     /// weight table instead of full-width replica parameters.
     pub quantize: QuantizeMode,
+    /// Collect metrics (counters, gauges, latency histograms; see the
+    /// module docs: *Observability*). Snapshot with
+    /// [`ServeEngine::metrics_json`]; [`ServeStats`] gains histogram
+    /// summaries. Bitwise-inert: the served tokens are unchanged.
+    pub metrics: bool,
+    /// Buffer Chrome trace events (tick/token spans, quarantine and
+    /// compaction instants). Snapshot with [`ServeEngine::trace_json`].
+    /// Bitwise-inert like [`ServeOptions::metrics`].
+    pub trace: bool,
 }
 
 impl Default for ServeOptions {
@@ -199,6 +228,8 @@ impl Default for ServeOptions {
             decode: DecodeMode::Full,
             kernel: KernelChoice::Auto,
             quantize: QuantizeMode::None,
+            metrics: false,
+            trace: false,
         }
     }
 }
@@ -254,6 +285,18 @@ pub struct ServeStats {
     pub quarantines: u64,
     /// Requests shed at submission (queue full or fault-plan rejection).
     pub shed: u64,
+    /// Per-token latency summary (ns), merged over lane shards in fixed
+    /// lane order. `None` unless the engine runs with
+    /// [`ServeOptions::metrics`] or [`ServeOptions::trace`].
+    pub token_latency: Option<HistogramSummary>,
+    /// Time from submission to a session's first token (ns); telemetry
+    /// runs only.
+    pub ttft: Option<HistogramSummary>,
+    /// Time from submission to admission (ns); telemetry runs only.
+    pub queue_wait: Option<HistogramSummary>,
+    /// Per-lane per-tick batch-size distribution (sessions advanced by
+    /// one lane in one tick); telemetry runs only.
+    pub batch_size: Option<HistogramSummary>,
 }
 
 /// One serving lane: a replica tape plus its shape-keyed program cache.
@@ -278,6 +321,10 @@ struct ServeLane<T: Scalar> {
     /// Set when a fault was caught on this lane: the tape and cache are
     /// presumed corrupt and must be rebuilt before the lane runs again.
     poisoned: bool,
+    /// This lane's private telemetry shard; `Some` iff the engine runs
+    /// with metrics or tracing on. Lane-private by design — no atomics,
+    /// no sharing — and merged in fixed lane order at snapshot time.
+    telem: Option<LaneTelem>,
 }
 
 impl<T: Scalar> ServeLane<T> {
@@ -295,7 +342,82 @@ impl<T: Scalar> ServeLane<T> {
             compactions: 0,
             peak_nodes: 0,
             poisoned: false,
+            telem: None,
         }
+    }
+}
+
+/// One lane's telemetry shard: preallocated histograms plus (when
+/// tracing) a per-lane [`Tracer`] sharing the engine epoch and tagged
+/// with the lane index as `tid`. Taken out of the lane around each
+/// session advancement (a move, not an allocation) so the instruments
+/// and the lane's tape can be borrowed without conflict.
+struct LaneTelem {
+    /// Per-token advancement latency (ns).
+    token_ns: Histogram,
+    /// Submission → first token (ns).
+    ttft_ns: Histogram,
+    /// Sessions this lane advanced per tick it participated in.
+    batch: Histogram,
+    tracer: Option<Tracer>,
+}
+
+impl LaneTelem {
+    /// `trace` is `Some((shared epoch, lane tid))` when span buffering
+    /// is on.
+    fn new(trace: Option<(Instant, u32)>) -> LaneTelem {
+        LaneTelem {
+            token_ns: Histogram::new(),
+            ttft_ns: Histogram::new(),
+            batch: Histogram::new(),
+            tracer: trace.map(|(epoch, tid)| Tracer::with_epoch(epoch, tid)),
+        }
+    }
+}
+
+/// Engine-side (coordinator-thread) telemetry: the named registry for
+/// counters/gauges/queue-wait plus the coordinator's tracer shard
+/// (`tid` = lane count, so lanes and coordinator never collide).
+struct EngineTelem {
+    reg: Registry,
+    c_tokens: CounterId,
+    c_steps: CounterId,
+    c_completed: CounterId,
+    c_quarantines: CounterId,
+    c_shed: CounterId,
+    g_active: GaugeId,
+    g_queued: GaugeId,
+    h_queue_wait: HistId,
+    /// Shared timestamp origin for every tracer shard.
+    epoch: Instant,
+    trace_on: bool,
+    tracer: Option<Tracer>,
+}
+
+impl EngineTelem {
+    fn new(n_lanes: usize, trace_on: bool) -> EngineTelem {
+        let epoch = Instant::now();
+        let mut reg = Registry::new();
+        EngineTelem {
+            c_tokens: reg.counter("serve.tokens"),
+            c_steps: reg.counter("serve.steps"),
+            c_completed: reg.counter("serve.completed"),
+            c_quarantines: reg.counter("serve.quarantines"),
+            c_shed: reg.counter("serve.shed"),
+            g_active: reg.gauge("serve.active"),
+            g_queued: reg.gauge("serve.queue.depth"),
+            h_queue_wait: reg.histogram("serve.queue.wait.ns"),
+            reg,
+            epoch,
+            trace_on,
+            tracer: trace_on.then(|| Tracer::with_epoch(epoch, n_lanes as u32)),
+        }
+    }
+
+    /// The `(epoch, tid)` seed for lane `li`'s tracer shard, `None` when
+    /// tracing is off.
+    fn lane_trace(&self, li: usize) -> Option<(Instant, u32)> {
+        self.trace_on.then_some((self.epoch, li as u32))
     }
 }
 
@@ -354,6 +476,9 @@ pub struct ServeEngine<T: Scalar> {
     /// Injected clock for deterministic deadline tests; `None` = wall
     /// clock (milliseconds since engine construction).
     clock: Option<Box<dyn Fn() -> u64>>,
+    /// Coordinator-side telemetry; `None` (the default) constructs no
+    /// instruments and reads no clocks.
+    telem: Option<EngineTelem>,
     started: Instant,
     tokens: u64,
     steps: u64,
@@ -405,6 +530,12 @@ impl<T: Scalar> ServeEngine<T> {
                 lane.decode = Some(DecodeState::install(&mut lane.tape, &model, opts.cache_cap));
             }
         }
+        let telem = (opts.metrics || opts.trace).then(|| EngineTelem::new(n_lanes, opts.trace));
+        if let Some(t) = &telem {
+            for (li, lane) in lanes.iter_mut().enumerate() {
+                lane.telem = Some(LaneTelem::new(t.lane_trace(li)));
+            }
+        }
         ServeEngine {
             model,
             lanes,
@@ -421,6 +552,7 @@ impl<T: Scalar> ServeEngine<T> {
             any_deadlines: false,
             fault_plan: None,
             clock: None,
+            telem,
             started: Instant::now(),
             tokens: 0,
             steps: 0,
@@ -473,12 +605,20 @@ impl<T: Scalar> ServeEngine<T> {
                 self.pending_shed
                     .push(Session::rejected(req.id, "rejected by fault plan"));
                 self.shed_count += 1;
+                if let Some(t) = &mut self.telem {
+                    t.reg.add(t.c_shed, 1);
+                }
                 return false;
             }
         }
         self.any_deadlines |= req.deadline_ms.is_some();
         let mut sess = Session::new(req);
         sess.clamp_max_tokens(self.max_tokens);
+        if self.telem.is_some() {
+            // Wall clock, not `now_ms`: the injectable deadline clock's
+            // call count is part of deadline-test determinism.
+            sess.stamp_submitted(Instant::now());
+        }
         match self.sched.submit(sess) {
             Ok(()) => true,
             Err(s) => {
@@ -488,6 +628,9 @@ impl<T: Scalar> ServeEngine<T> {
                     format!("admission queue full ({bound} pending)"),
                 ));
                 self.shed_count += 1;
+                if let Some(t) = &mut self.telem {
+                    t.reg.add(t.c_shed, 1);
+                }
                 false
             }
         }
@@ -514,6 +657,17 @@ impl<T: Scalar> ServeEngine<T> {
         self.sched.active_len() + self.sched.pending_len() + self.pending_shed.len()
     }
 
+    /// Sessions currently admitted and generating (the `--stats-every`
+    /// stderr line's "active" column).
+    pub fn active(&self) -> usize {
+        self.sched.active_len()
+    }
+
+    /// Sessions waiting in the admission queue.
+    pub fn queued(&self) -> usize {
+        self.sched.pending_len()
+    }
+
     /// Run one scheduler tick: heal any quarantined lanes, admit pending
     /// requests, expire sessions past their deadlines, advance every
     /// remaining active session by one token (shape-grouped, fanned
@@ -522,12 +676,42 @@ impl<T: Scalar> ServeEngine<T> {
     /// completions for requests shed since the last tick.
     pub fn step(&mut self) -> Vec<Session> {
         let mut done = std::mem::take(&mut self.pending_shed);
-        for lane in &mut self.lanes {
+        // One clock read per tick when tracing; nothing when telemetry
+        // is off.
+        let tick_span: Option<SpanStart> = self
+            .telem
+            .as_ref()
+            .and_then(|t| t.tracer.as_ref())
+            .map(|tr| tr.begin());
+        for (li, lane) in self.lanes.iter_mut().enumerate() {
             if lane.poisoned {
                 heal_lane(&self.model, lane, &self.param_master, self.cache_cap);
+                // A fault that struck mid-advancement can take the
+                // lane's telemetry shard down with it; rebuild it like
+                // everything else on the lane (losing that shard's
+                // buffered data, never the run).
+                if let Some(t) = &self.telem {
+                    if lane.telem.is_none() {
+                        lane.telem = Some(LaneTelem::new(t.lane_trace(li)));
+                    }
+                }
             }
         }
         let n_admitted = self.sched.admit();
+        if let Some(t) = &mut self.telem {
+            if n_admitted > 0 {
+                let now = Instant::now();
+                let n_active = self.sched.active_len();
+                for s in &self.sched.active_sessions()[n_active - n_admitted..] {
+                    if let Some(sub) = s.submitted_at() {
+                        let wait = now.saturating_duration_since(sub).as_nanos() as u64;
+                        t.reg.record(t.h_queue_wait, wait);
+                    }
+                }
+            }
+            t.reg.set_gauge(t.g_active, self.sched.active_len() as i64);
+            t.reg.set_gauge(t.g_queued, self.sched.pending_len() as i64);
+        }
         if self.any_deadlines {
             let now = self.now_ms();
             let n_active = self.sched.active_len();
@@ -585,6 +769,9 @@ impl<T: Scalar> ServeEngine<T> {
             let mut faulted: Vec<usize> = Vec::new();
             if n_lanes == 1 {
                 let lane = &mut self.lanes[0];
+                if let Some(tl) = &mut lane.telem {
+                    tl.batch.record(n_work as u64);
+                }
                 let outcome = catch_unwind(AssertUnwindSafe(|| {
                     for (k, &si) in work_ref.iter().enumerate() {
                         if let Some(p) = plan {
@@ -592,7 +779,7 @@ impl<T: Scalar> ServeEngine<T> {
                                 panic!("injected fault: lane 0, step {step_no}");
                             }
                         }
-                        advance_session(model, lane, &mut sessions[si]);
+                        advance_with_telemetry(model, lane, &mut sessions[si]);
                     }
                 }));
                 if outcome.is_err() {
@@ -619,13 +806,18 @@ impl<T: Scalar> ServeEngine<T> {
                     unsafe {
                         let lane = &mut *lane_ptr.0.add(l);
                         let chunk = &work_ref[bounds_ref[l]..bounds_ref[l + 1]];
+                        if let Some(tl) = &mut lane.telem {
+                            if !chunk.is_empty() {
+                                tl.batch.record(chunk.len() as u64);
+                            }
+                        }
                         for (k, &si) in chunk.iter().enumerate() {
                             if let Some(p) = plan {
                                 if p.should_panic(l, step_no, k) {
                                     panic!("injected fault: lane {l}, step {step_no}");
                                 }
                             }
-                            advance_session(model, lane, &mut *sess_ptr.0.add(si));
+                            advance_with_telemetry(model, lane, &mut *sess_ptr.0.add(si));
                         }
                     }
                 });
@@ -633,14 +825,31 @@ impl<T: Scalar> ServeEngine<T> {
             }
             let gen_after: usize = work_ref.iter().map(|&i| sessions[i].generated()).sum();
             self.tokens += (gen_after - gen_before) as u64;
+            let n_faults = faulted.len() as u64;
             for l in faulted {
                 self.lanes[l].poisoned = true;
                 self.quarantines += 1;
+            }
+            if let Some(t) = &mut self.telem {
+                t.reg.add(t.c_tokens, (gen_after - gen_before) as u64);
+                t.reg.add(t.c_quarantines, n_faults);
+                if let Some(tr) = &mut t.tracer {
+                    for _ in 0..n_faults {
+                        tr.instant("serve.quarantine", "serve");
+                    }
+                }
             }
         }
         self.steps += 1;
         done.extend(self.sched.drain_done());
         self.completed += done.len() as u64;
+        if let Some(t) = &mut self.telem {
+            t.reg.add(t.c_steps, 1);
+            t.reg.add(t.c_completed, done.len() as u64);
+            if let (Some(tr), Some(span)) = (&mut t.tracer, tick_span) {
+                tr.end("serve.tick", "serve", span);
+            }
+        }
         done
     }
 
@@ -658,12 +867,28 @@ impl<T: Scalar> ServeEngine<T> {
     /// Aggregate statistics so far. Cache counters are summed over lanes
     /// regardless of decode mode: in [`DecodeMode::Incremental`] a
     /// lane's hits/misses/evictions cover both its full-window and
-    /// append caches, so `cache_hits + cache_misses == tokens` holds in
-    /// both modes (every token is exactly one program lookup). Under
-    /// [`QuantizeMode::Int8`] lanes bypass the program machinery
-    /// entirely, so every cache counter stays at zero and
-    /// [`ServeStats::quant_bytes`] reports the shared table size
-    /// instead.
+    /// append caches.
+    ///
+    /// The counter invariant is **mode-conditional**:
+    ///
+    /// - [`QuantizeMode::Int8`]: lanes bypass the program machinery
+    ///   entirely, so `cache_hits + cache_misses == 0` always — tokens
+    ///   are served but never looked up, and
+    ///   [`ServeStats::quant_bytes`] reports the shared table size
+    ///   instead.
+    /// - [`QuantizeMode::None`], fault-free (`quarantines == 0`):
+    ///   `cache_hits + cache_misses == tokens` in **both** decode modes
+    ///   — every token is exactly one program lookup.
+    /// - [`QuantizeMode::None`] with quarantines: the equality may
+    ///   drift. A fault caught mid-lookup can count a miss whose token
+    ///   was never delivered, and healing an incremental lane rebuilds
+    ///   its [`DecodeState`] from scratch — discarding that lane's
+    ///   accumulated hit/miss counts (a full-mode lane's
+    ///   [`ProgramCache`] keeps its counters across the heal; only its
+    ///   entries are dropped). Tokens stay bitwise-correct either way;
+    ///   only the *accounting* loosens.
+    ///
+    /// Debug builds assert the applicable invariant.
     pub fn stats(&self) -> ServeStats {
         let quant = self.lanes[0].quant.as_deref();
         let mut s = ServeStats {
@@ -707,8 +932,135 @@ impl<T: Scalar> ServeEngine<T> {
             s.compactions += lane.compactions;
             s.peak_tape_nodes = s.peak_tape_nodes.max(lane.peak_nodes);
         }
+        if let Some(t) = &self.telem {
+            let mut token = Histogram::new();
+            let mut ttft = Histogram::new();
+            let mut batch = Histogram::new();
+            for lane in &self.lanes {
+                if let Some(tl) = &lane.telem {
+                    token.merge_from(&tl.token_ns);
+                    ttft.merge_from(&tl.ttft_ns);
+                    batch.merge_from(&tl.batch);
+                }
+            }
+            s.token_latency = Some(token.summary());
+            s.ttft = Some(ttft.summary());
+            s.batch_size = Some(batch.summary());
+            s.queue_wait = Some(t.reg.hist(t.h_queue_wait).summary());
+        }
+        // The mode-conditional counter invariant (see the doc comment).
+        if s.quantize == QuantizeMode::Int8 {
+            debug_assert_eq!(
+                s.cache_hits + s.cache_misses,
+                0,
+                "quantized lanes must never touch the program caches"
+            );
+        } else if s.quarantines == 0 {
+            debug_assert_eq!(
+                s.cache_hits + s.cache_misses,
+                s.tokens,
+                "fault-free serving: one program lookup per token"
+            );
+        }
         s
     }
+
+    /// End-of-run metrics snapshot as `burtorch.metrics.v1` JSON (the
+    /// `--metrics-json` payload): the engine's counters/gauges/queue-wait
+    /// plus the per-lane histogram shards, merged in **fixed lane order**
+    /// — the snapshot of a given run is deterministic up to the recorded
+    /// latencies themselves. Lane-level cache/compaction totals are
+    /// folded in as counters at snapshot time. `None` unless the engine
+    /// runs with [`ServeOptions::metrics`] or [`ServeOptions::trace`].
+    pub fn metrics_json(&self) -> Option<String> {
+        let t = self.telem.as_ref()?;
+        let mut reg = t.reg.clone();
+        for lane in &self.lanes {
+            if let Some(tl) = &lane.telem {
+                reg.merge_histogram("serve.token.ns", &tl.token_ns);
+                reg.merge_histogram("serve.ttft.ns", &tl.ttft_ns);
+                reg.merge_histogram("serve.batch.size", &tl.batch);
+            }
+        }
+        let s = self.stats();
+        let hits = reg.counter("serve.cache.hits");
+        reg.add(hits, s.cache_hits);
+        let misses = reg.counter("serve.cache.misses");
+        reg.add(misses, s.cache_misses);
+        let evictions = reg.counter("serve.cache.evictions");
+        reg.add(evictions, s.cache_evictions);
+        let compactions = reg.counter("serve.compactions");
+        reg.add(compactions, s.compactions);
+        Some(reg.to_json())
+    }
+
+    /// End-of-run Chrome trace document (the `--trace` payload): the
+    /// coordinator's tick spans and quarantine instants plus every
+    /// lane's token spans and compaction instants, merged in fixed lane
+    /// order. `None` unless the engine runs with
+    /// [`ServeOptions::trace`].
+    pub fn trace_json(&self) -> Option<String> {
+        let t = self.telem.as_ref()?;
+        let root = t.tracer.as_ref()?;
+        let mut merged = root.clone();
+        for lane in &self.lanes {
+            if let Some(tr) = lane.telem.as_ref().and_then(|tl| tl.tracer.as_ref()) {
+                merged.merge(tr);
+            }
+        }
+        Some(merged.to_json())
+    }
+}
+
+/// Program-cache miss count of a lane's active cache — the before/after
+/// probe that classifies a token advancement as a record (miss) or a
+/// replay (hit) for its trace span.
+fn lane_misses<T: Scalar>(lane: &ServeLane<T>) -> u64 {
+    match &lane.decode {
+        Some(state) => state.counters().1,
+        None => lane.cache.misses(),
+    }
+}
+
+/// [`advance_session`] wrapped in the lane's telemetry shard (when one
+/// is installed): times the advancement into the per-token histogram,
+/// records time-to-first-token, and emits a trace span classified as
+/// record vs replay by the cache-miss delta (quantized lanes, which
+/// never look programs up, get their own span name). The shard is moved
+/// out of the lane around the call — a `memcpy`, not an allocation — so
+/// the instruments and the lane's tape never alias. Telemetry off: one
+/// `None` check, no clock reads.
+fn advance_with_telemetry<T: Scalar>(model: &Gpt, lane: &mut ServeLane<T>, sess: &mut Session) {
+    let Some(mut tl) = lane.telem.take() else {
+        advance_session(model, lane, sess);
+        return;
+    };
+    let miss0 = lane_misses(lane);
+    let comp0 = lane.compactions;
+    let start = Instant::now();
+    advance_session(model, lane, sess);
+    let dur_ns = start.elapsed().as_nanos() as u64;
+    tl.token_ns.record(dur_ns);
+    if sess.generated() == 1 {
+        if let Some(sub) = sess.submitted_at() {
+            tl.ttft_ns.record(sub.elapsed().as_nanos() as u64);
+        }
+    }
+    if let Some(tr) = &mut tl.tracer {
+        let name = if lane.quant.is_some() {
+            "serve.token.q8"
+        } else if lane_misses(lane) > miss0 {
+            "serve.token.record"
+        } else {
+            "serve.token.replay"
+        };
+        let ts = tr.offset_ns(SpanStart::at(start));
+        tr.complete_at(name, "serve", ts, dur_ns);
+        if lane.compactions > comp0 {
+            tr.instant("serve.compaction", "serve");
+        }
+    }
+    lane.telem = Some(tl);
 }
 
 /// Advance one session by one token on one lane: compact the lane tape
@@ -1074,6 +1426,55 @@ mod tests {
         }
         let per_lane: usize = inc_st.lane_programs.iter().map(|lp| lp.append_depths.len()).sum();
         assert_eq!(per_lane, inc_st.append_programs);
+    }
+
+    #[test]
+    fn telemetry_is_bitwise_inert_and_snapshots_are_emitted() {
+        let run = |metrics: bool, trace: bool| {
+            let (tape, model) = tiny();
+            let mut eng = ServeEngine::new(
+                tape,
+                model,
+                ServeOptions {
+                    lanes: 2,
+                    metrics,
+                    trace,
+                    ..ServeOptions::default()
+                },
+            );
+            eng.submit(req(1, vec![1, 2], 6, 10));
+            eng.submit(req(2, vec![3], 4, 20));
+            let mut done: Vec<(u64, Vec<u32>)> = eng
+                .run_to_completion()
+                .into_iter()
+                .map(|s| (s.id(), s.output().to_vec()))
+                .collect();
+            done.sort();
+            (done, eng)
+        };
+        let (plain, off) = run(false, false);
+        let (instrumented, on) = run(true, true);
+        assert_eq!(plain, instrumented, "telemetry must not change tokens");
+        assert!(off.metrics_json().is_none() && off.trace_json().is_none());
+
+        let st = on.stats();
+        let tok = st.token_latency.expect("token latency summary");
+        assert_eq!(tok.count, st.tokens, "one latency sample per token");
+        assert_eq!(st.ttft.expect("ttft").count, 2, "one TTFT per session");
+        assert_eq!(st.queue_wait.expect("queue wait").count, 2);
+        assert!(st.batch_size.expect("batch").count >= 1);
+
+        let metrics = on.metrics_json().expect("metrics snapshot");
+        assert!(metrics.starts_with("{\"schema\":\"burtorch.metrics.v1\""), "{metrics}");
+        assert!(metrics.contains(&format!("\"serve.tokens\":{}", st.tokens)), "{metrics}");
+        assert!(metrics.contains("\"serve.queue.wait.ns\":"), "{metrics}");
+        let trace = on.trace_json().expect("trace snapshot");
+        assert!(trace.starts_with("{\"traceEvents\":["), "{trace}");
+        assert!(trace.contains("\"name\":\"serve.tick\""), "{trace}");
+        assert!(
+            trace.contains("serve.token.record") || trace.contains("serve.token.replay"),
+            "{trace}"
+        );
     }
 
     #[test]

@@ -11,6 +11,8 @@
 //! what makes batched serving bitwise identical to running each session
 //! alone through `Gpt::generate_cached`.
 
+use std::time::Instant;
+
 use crate::nn::{sample_token, KvCache};
 use crate::rng::Rng;
 
@@ -108,6 +110,12 @@ pub struct Session {
     note: Option<String>,
     deadline_ms: Option<u64>,
     admitted_at_ms: Option<u64>,
+    /// Wall-clock submission stamp, taken by the engine only when
+    /// telemetry is enabled (`None` otherwise — the disabled path reads
+    /// no clocks). Telemetry deliberately uses the wall clock, not the
+    /// engine's injectable deadline clock: recorded latencies must never
+    /// consume ticks a deadline test counts.
+    submitted_at: Option<Instant>,
     /// Set by [`Session::finish`]: the session is done regardless of how
     /// many tokens it has produced (deadline truncation, shedding).
     forced_done: bool,
@@ -136,6 +144,7 @@ impl Session {
             note: None,
             deadline_ms: req.deadline_ms,
             admitted_at_ms: None,
+            submitted_at: None,
             forced_done: false,
             kv: None,
         }
@@ -167,6 +176,7 @@ impl Session {
             note: Some(reason),
             deadline_ms: None,
             admitted_at_ms: None,
+            submitted_at: None,
             forced_done: true,
             kv: None,
         }
@@ -224,6 +234,19 @@ impl Session {
     /// measured from this point.
     pub(crate) fn set_admitted_at(&mut self, now_ms: u64) {
         self.admitted_at_ms = Some(now_ms);
+    }
+
+    /// Wall-clock submission stamp (telemetry runs only).
+    pub(crate) fn submitted_at(&self) -> Option<Instant> {
+        self.submitted_at
+    }
+
+    /// Stamp the wall-clock submission time. Called by the engine at
+    /// [`submit`](crate::serve::ServeEngine::submit) when telemetry is
+    /// enabled — queue-wait and time-to-first-token are measured from
+    /// here.
+    pub(crate) fn stamp_submitted(&mut self, at: Instant) {
+        self.submitted_at = Some(at);
     }
 
     /// Is the session past its deadline at engine time `now_ms`? Never

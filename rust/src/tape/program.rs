@@ -476,6 +476,16 @@ impl<P> ProgramCache<P> {
         self.evictions
     }
 
+    /// One-call `(hits, misses, evictions)` snapshot — the telemetry
+    /// export hook: the serve engine folds these lifetime counters into
+    /// its `--metrics-json` snapshot (`serve.cache.*`) and classifies
+    /// each token's trace span as record vs. replay by the miss-count
+    /// delta across the advance. Counters survive [`ProgramCache::clear`]
+    /// (heal keeps lifetime totals) and are never reset by compaction.
+    pub fn counters(&self) -> (u64, u64, u64) {
+        (self.hits, self.misses, self.evictions)
+    }
+
     /// Iterate over the live `(key, payload)` pairs in storage order —
     /// the observability hook for compaction policies (e.g. summing
     /// `Recording::node_count` of the live programs to compute the dead

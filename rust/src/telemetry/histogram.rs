@@ -1,0 +1,335 @@
+//! Fixed-bucket log₂-scale latency histograms.
+//!
+//! A [`Histogram`] is a flat array of `BUCKET_COUNT` power-of-two
+//! buckets: bucket 0 holds the value `0`, bucket `i ≥ 1` holds values in
+//! `[2^(i−1), 2^i)`, and anything at or above `2^(BUCKET_COUNT−2)` lands
+//! in the last bucket. The storage is a fixed inline array — construction
+//! is the only allocation a histogram ever performs (and it is a stack
+//! write, not a heap one), so [`Histogram::record`] is safe on the
+//! zero-steady-state-allocation hot paths (serving token loop, training
+//! step loop).
+//!
+//! Values are unitless `u64`s; latency users record nanoseconds
+//! ([`Histogram::record_ns`] / [`Histogram::record_secs`]), distribution
+//! users (batch sizes) record plain magnitudes. Negative or non-finite
+//! second inputs clamp to zero — the first bucket — rather than panic:
+//! telemetry must never take down the run it observes.
+//!
+//! ## Sharding and deterministic merges
+//!
+//! Hot loops that fan out over lanes give every lane its **own**
+//! histogram (no atomics, no sharing) and merge the shards with
+//! [`Histogram::merge_from`] in **fixed lane order** when a snapshot is
+//! taken. Bucket counts are sums of `u64`s, so the merged *counts* are
+//! independent of merge order; keeping the order fixed anyway makes the
+//! whole reporting path — including any future non-commutative summary —
+//! deterministic by construction. Iteration ([`Histogram::buckets`]) is
+//! always in ascending bucket order.
+
+/// Number of log₂ buckets. Bucket `BUCKET_COUNT − 1` is the overflow
+/// bucket: with 40 buckets the last finite boundary is `2^38` ns ≈ 275 s,
+/// far beyond any per-token or per-step latency this runtime produces.
+pub const BUCKET_COUNT: usize = 40;
+
+/// A preallocated log₂-bucket histogram with an allocation-free
+/// [`record`](Histogram::record) and a deterministic fixed-order
+/// [`merge_from`](Histogram::merge_from). See the module docs.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    counts: [u64; BUCKET_COUNT],
+    count: u64,
+    sum: u64,
+    min: u64,
+    max: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    /// An empty histogram. The bucket array lives inline — no heap.
+    pub const fn new() -> Histogram {
+        Histogram {
+            counts: [0; BUCKET_COUNT],
+            count: 0,
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+
+    /// Bucket index for a value: 0 for `v == 0`, otherwise
+    /// `1 + ⌊log₂ v⌋`, clamped to the overflow bucket.
+    #[inline]
+    fn bucket_of(v: u64) -> usize {
+        if v == 0 {
+            0
+        } else {
+            let idx = (u64::BITS - v.leading_zeros()) as usize;
+            idx.min(BUCKET_COUNT - 1)
+        }
+    }
+
+    /// Inclusive upper edge of bucket `i` (0 for the zero bucket, and
+    /// `u64::MAX` for the overflow bucket).
+    #[inline]
+    pub fn bucket_upper(i: usize) -> u64 {
+        if i == 0 {
+            0
+        } else if i >= BUCKET_COUNT - 1 {
+            u64::MAX
+        } else {
+            (1u64 << i) - 1
+        }
+    }
+
+    /// Record one value. No allocation, no branch beyond the clamp — safe
+    /// on zero-steady-state-allocation hot paths.
+    #[inline]
+    pub fn record(&mut self, v: u64) {
+        self.counts[Self::bucket_of(v)] += 1;
+        self.count += 1;
+        self.sum = self.sum.saturating_add(v);
+        if v < self.min {
+            self.min = v;
+        }
+        if v > self.max {
+            self.max = v;
+        }
+    }
+
+    /// [`Histogram::record`] for a nanosecond latency.
+    #[inline]
+    pub fn record_ns(&mut self, ns: u64) {
+        self.record(ns);
+    }
+
+    /// Record a latency given in seconds. Negative, NaN, or infinite
+    /// inputs clamp: anything `≤ 0` or non-finite lands in the first
+    /// bucket (0 ns); durations beyond the last finite boundary land in
+    /// the overflow bucket.
+    #[inline]
+    pub fn record_secs(&mut self, secs: f64) {
+        let ns = if secs.is_finite() && secs > 0.0 {
+            let ns = secs * 1e9;
+            if ns >= u64::MAX as f64 {
+                u64::MAX
+            } else {
+                ns as u64
+            }
+        } else {
+            0
+        };
+        self.record(ns);
+    }
+
+    /// Total number of recorded values.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Saturating sum of recorded values.
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+
+    /// Smallest recorded value (0 when empty).
+    pub fn min(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    /// Largest recorded value (0 when empty).
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Mean of recorded values, rounded down (0 when empty).
+    pub fn mean(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.sum / self.count
+        }
+    }
+
+    /// Fold another shard into this one. Pure bucket-count addition:
+    /// *counts* are independent of merge order; call in fixed lane order
+    /// anyway so every derived report is deterministic by construction.
+    pub fn merge_from(&mut self, other: &Histogram) {
+        for (dst, src) in self.counts.iter_mut().zip(&other.counts) {
+            *dst += *src;
+        }
+        self.count += other.count;
+        self.sum = self.sum.saturating_add(other.sum);
+        if other.count > 0 {
+            if other.min < self.min {
+                self.min = other.min;
+            }
+            if other.max > self.max {
+                self.max = other.max;
+            }
+        }
+    }
+
+    /// Estimated `q`-quantile (`q ∈ [0, 1]`): the upper edge of the
+    /// bucket containing the exact quantile, clamped to the observed
+    /// maximum — so the estimate is always within one bucket boundary of
+    /// the exact order statistic. Returns 0 for an empty histogram.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        // Rank of the quantile order statistic, in [1, count].
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Self::bucket_upper(i).min(self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Iterate `(inclusive upper edge, count)` over the **non-empty**
+    /// buckets, in fixed ascending bucket order.
+    pub fn buckets(&self) -> impl Iterator<Item = (u64, u64)> + '_ {
+        self.counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| (Self::bucket_upper(i), c))
+    }
+
+    /// Condensed summary (count, min/mean/max, p50/p90/p99) for report
+    /// structs like `ServeStats`.
+    pub fn summary(&self) -> HistogramSummary {
+        HistogramSummary {
+            count: self.count(),
+            min: self.min(),
+            mean: self.mean(),
+            max: self.max(),
+            p50: self.quantile(0.50),
+            p90: self.quantile(0.90),
+            p99: self.quantile(0.99),
+        }
+    }
+
+    /// Append this histogram as a JSON object to `out` (the
+    /// `burtorch.metrics.v1` histogram schema: summary fields plus the
+    /// sparse `[upper_edge, count]` bucket list in ascending order).
+    pub fn append_json(&self, out: &mut String) {
+        let s = self.summary();
+        out.push_str(&format!(
+            "{{\"count\":{},\"min\":{},\"mean\":{},\"max\":{},\"p50\":{},\"p90\":{},\"p99\":{},\"buckets\":[",
+            s.count, s.min, s.mean, s.max, s.p50, s.p90, s.p99
+        ));
+        let mut first = true;
+        for (hi, c) in self.buckets() {
+            if !first {
+                out.push(',');
+            }
+            first = false;
+            out.push_str(&format!("[{hi},{c}]"));
+        }
+        out.push_str("]}");
+    }
+}
+
+/// Condensed histogram summary, embedded in report structs
+/// (`ServeStats`) and stderr stats lines. Units are whatever the source
+/// histogram recorded (nanoseconds for the latency histograms).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct HistogramSummary {
+    /// Number of recorded values.
+    pub count: u64,
+    /// Smallest recorded value.
+    pub min: u64,
+    /// Mean (rounded down).
+    pub mean: u64,
+    /// Largest recorded value.
+    pub max: u64,
+    /// Median estimate (within one bucket boundary of exact).
+    pub p50: u64,
+    /// 90th-percentile estimate.
+    pub p90: u64,
+    /// 99th-percentile estimate.
+    pub p99: u64,
+}
+
+impl HistogramSummary {
+    /// Milliseconds view of a nanosecond-valued field, for stderr lines.
+    pub fn ms(v: u64) -> f64 {
+        v as f64 / 1e6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_edges_are_powers_of_two() {
+        assert_eq!(Histogram::bucket_of(0), 0);
+        assert_eq!(Histogram::bucket_of(1), 1);
+        assert_eq!(Histogram::bucket_of(2), 2);
+        assert_eq!(Histogram::bucket_of(3), 2);
+        assert_eq!(Histogram::bucket_of(4), 3);
+        assert_eq!(Histogram::bucket_of(u64::MAX), BUCKET_COUNT - 1);
+        assert_eq!(Histogram::bucket_upper(0), 0);
+        assert_eq!(Histogram::bucket_upper(1), 1);
+        assert_eq!(Histogram::bucket_upper(3), 7);
+        assert_eq!(Histogram::bucket_upper(BUCKET_COUNT - 1), u64::MAX);
+    }
+
+    #[test]
+    fn record_tracks_count_sum_min_max() {
+        let mut h = Histogram::new();
+        assert_eq!(h.min(), 0);
+        for v in [5u64, 1, 1000, 0] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.sum(), 1006);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 1000);
+        assert_eq!(h.mean(), 251);
+    }
+
+    #[test]
+    fn quantile_of_uniform_stream_is_within_one_bucket() {
+        let mut h = Histogram::new();
+        for v in 1..=1000u64 {
+            h.record(v);
+        }
+        // Exact p50 is 500; the estimate must be the upper edge of 500's
+        // bucket (511) at most, and at least 500's lower edge (256).
+        let p50 = h.quantile(0.5);
+        assert!((256..=511).contains(&p50), "p50 = {p50}");
+        let p99 = h.quantile(0.99);
+        assert!((512..=1000).contains(&p99), "p99 = {p99}");
+        assert_eq!(h.quantile(1.0), 1000); // clamped to observed max
+    }
+
+    #[test]
+    fn json_shape_is_stable() {
+        let mut h = Histogram::new();
+        h.record(3);
+        h.record(3);
+        let mut out = String::new();
+        h.append_json(&mut out);
+        assert_eq!(
+            out,
+            "{\"count\":2,\"min\":3,\"mean\":3,\"max\":3,\"p50\":3,\
+             \"p90\":3,\"p99\":3,\"buckets\":[[3,2]]}"
+        );
+    }
+}

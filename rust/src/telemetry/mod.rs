@@ -1,0 +1,123 @@
+//! Zero-overhead telemetry: counters, latency histograms, and Chrome
+//! trace spans — proven bitwise-inert.
+//!
+//! Three primitives, each in its own module:
+//!
+//! - [`Histogram`] ([`histogram`]): preallocated fixed-bucket log₂-scale
+//!   latency histograms with an allocation-free `record()`; hot loops
+//!   shard one instance per lane and merge in fixed lane order so
+//!   reported aggregates are deterministic.
+//! - [`Registry`] ([`registry`]): named monotonic counters, gauges, and
+//!   histograms behind `Copy` ids; `to_json()` emits the stable
+//!   `burtorch.metrics.v1` snapshot (the `--metrics-json` payload,
+//!   shared with the bench emitters' JSON style).
+//! - [`Tracer`] ([`trace`]): scoped spans and instant markers buffered
+//!   as Chrome trace events; `to_json()` loads directly into
+//!   `chrome://tracing` (the `--trace` payload).
+//!
+//! ## The two guarantees
+//!
+//! **Bitwise-inert when on.** Instrumentation only *reads* clocks and
+//! *writes* side buffers; no recorded value ever feeds back into tape
+//! values, RNG streams, batch order, reduction shape, or scheduling
+//! decisions. A fully instrumented run (metrics + trace) is therefore
+//! bitwise identical to an uninstrumented one — for any thread count,
+//! exec mode, and decode mode. `tests/telemetry.rs` asserts exactly
+//! this matrix.
+//!
+//! **Zero-cost when off.** Disabled telemetry is an `Option` that is
+//! `None`: no instruments are constructed, no clocks are read, and the
+//! steady-state token/step loops perform zero additional allocations —
+//! the enabled path allocates only at construction (preallocated
+//! buckets, bounded trace buffers), never per record. Failures on the
+//! reporting path (an unwritable `--metrics-json` file) degrade to a
+//! warning; observability never takes down the run it observes.
+//!
+//! ## Example
+//!
+//! Instruments are registered once at startup (the only allocations),
+//! then driven by `Copy` ids from the hot loop:
+//!
+//! ```
+//! use burtorch::telemetry::Registry;
+//!
+//! let mut reg = Registry::new();
+//! let tokens = reg.counter("serve.tokens");
+//! let latency = reg.histogram("serve.token.ns");
+//!
+//! // Hot loop: no allocation, no hashing — ids are indices.
+//! reg.add(tokens, 3);
+//! reg.record(latency, 1_200);
+//! reg.record(latency, 2_800);
+//!
+//! assert_eq!(reg.counter_value(tokens), 3);
+//! assert_eq!(reg.hist(latency).count(), 2);
+//!
+//! // The stable `burtorch.metrics.v1` snapshot (`--metrics-json`):
+//! // one object, names sorted, counters as plain integers.
+//! let json = reg.to_json();
+//! assert!(json.starts_with("{\"schema\":\"burtorch.metrics.v1\""));
+//! assert!(json.contains("\"serve.tokens\":3"));
+//! ```
+
+pub mod histogram;
+pub mod registry;
+pub mod trace;
+
+pub use histogram::{Histogram, HistogramSummary, BUCKET_COUNT};
+pub use registry::{CounterId, GaugeId, HistId, Registry};
+pub use trace::{SpanStart, Tracer};
+
+/// Where a run's telemetry goes: `None` fields disable that output.
+/// Carried by `TrainerOptions`; the serving CLI maps the same knobs onto
+/// `ServeOptions::{metrics, trace}` and writes the engine's snapshots
+/// itself.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct TelemetryConfig {
+    /// Write the end-of-run `burtorch.metrics.v1` snapshot here
+    /// (`--metrics-json <path>`).
+    pub metrics_json: Option<String>,
+    /// Write the Chrome trace-event document here (`--trace <path>`).
+    pub trace: Option<String>,
+}
+
+impl TelemetryConfig {
+    /// Is any output enabled?
+    pub fn enabled(&self) -> bool {
+        self.metrics_json.is_some() || self.trace.is_some()
+    }
+
+    /// Is the metrics snapshot enabled?
+    pub fn metrics_on(&self) -> bool {
+        self.metrics_json.is_some()
+    }
+
+    /// Is tracing enabled?
+    pub fn trace_on(&self) -> bool {
+        self.trace.is_some()
+    }
+}
+
+/// Best-effort telemetry file write: reports failure on stderr instead
+/// of panicking (telemetry must never take down the run it observes).
+pub fn write_output(path: &str, what: &str, content: &str) {
+    if let Err(e) = std::fs::write(path, content) {
+        eprintln!("warning: could not write {what} to '{path}': {e}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_flags_follow_the_paths() {
+        let off = TelemetryConfig::default();
+        assert!(!off.enabled() && !off.metrics_on() && !off.trace_on());
+        let on = TelemetryConfig {
+            metrics_json: Some("m.json".into()),
+            trace: None,
+        };
+        assert!(on.enabled() && on.metrics_on() && !on.trace_on());
+    }
+}

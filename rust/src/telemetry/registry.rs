@@ -1,0 +1,240 @@
+//! A registry of named metrics: monotonic counters, last-value gauges,
+//! and log₂-bucket latency [`Histogram`]s.
+//!
+//! Hot paths register their instruments **once** (at construction /
+//! warmup), keep the returned `Copy` ids, and then mutate through the
+//! ids — a direct indexed store, no name lookup, no hashing, no
+//! allocation. The end-of-run [`Registry::to_json`] snapshot emits the
+//! stable `burtorch.metrics.v1` schema (the same hand-rolled JSON style
+//! as the bench emitters in [`crate::bench`]), with every section sorted
+//! by metric name so snapshots diff cleanly across runs.
+//!
+//! Names are `&'static str` by design: metric names are part of the
+//! schema, not runtime data, and static names keep registration
+//! allocation-free too (the registry only allocates its three vectors).
+
+use super::histogram::Histogram;
+
+/// Handle to a monotonic counter in a [`Registry`].
+#[derive(Clone, Copy, Debug)]
+pub struct CounterId(usize);
+
+/// Handle to a gauge in a [`Registry`].
+#[derive(Clone, Copy, Debug)]
+pub struct GaugeId(usize);
+
+/// Handle to a histogram in a [`Registry`].
+#[derive(Clone, Copy, Debug)]
+pub struct HistId(usize);
+
+#[derive(Clone, Copy, Debug, Default)]
+struct GaugeState {
+    last: i64,
+    max: i64,
+}
+
+/// Named metric store. See the module docs for the id-based hot-path
+/// discipline and the snapshot schema.
+///
+/// # Examples
+///
+/// ```
+/// use burtorch::telemetry::Registry;
+///
+/// let mut reg = Registry::new();
+/// // Register once (warmup), mutate through the Copy ids (hot path).
+/// let tokens = reg.counter("serve.tokens");
+/// let depth = reg.gauge("serve.queue.depth");
+/// let lat = reg.histogram("serve.token.ns");
+/// for ns in [120_000u64, 95_000, 2_400_000] {
+///     reg.add(tokens, 1);
+///     reg.record(lat, ns);
+/// }
+/// reg.set_gauge(depth, 7);
+/// assert_eq!(reg.counter_value(tokens), 3);
+/// assert_eq!(reg.hist(lat).count(), 3);
+/// let json = reg.to_json();
+/// assert!(json.starts_with("{\"schema\":\"burtorch.metrics.v1\""));
+/// assert!(json.contains("\"serve.tokens\":3"));
+/// ```
+#[derive(Clone, Debug, Default)]
+pub struct Registry {
+    counters: Vec<(&'static str, u64)>,
+    gauges: Vec<(&'static str, GaugeState)>,
+    hists: Vec<(&'static str, Histogram)>,
+}
+
+impl Registry {
+    /// An empty registry.
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Register (or find) the counter `name`. Idempotent: the same name
+    /// always yields the same id.
+    pub fn counter(&mut self, name: &'static str) -> CounterId {
+        if let Some(i) = self.counters.iter().position(|(n, _)| *n == name) {
+            return CounterId(i);
+        }
+        self.counters.push((name, 0));
+        CounterId(self.counters.len() - 1)
+    }
+
+    /// Register (or find) the gauge `name`.
+    pub fn gauge(&mut self, name: &'static str) -> GaugeId {
+        if let Some(i) = self.gauges.iter().position(|(n, _)| *n == name) {
+            return GaugeId(i);
+        }
+        self.gauges.push((name, GaugeState::default()));
+        GaugeId(self.gauges.len() - 1)
+    }
+
+    /// Register (or find) the histogram `name`.
+    pub fn histogram(&mut self, name: &'static str) -> HistId {
+        if let Some(i) = self.hists.iter().position(|(n, _)| *n == name) {
+            return HistId(i);
+        }
+        self.hists.push((name, Histogram::new()));
+        HistId(self.hists.len() - 1)
+    }
+
+    /// Increment a counter. Allocation-free.
+    #[inline]
+    pub fn add(&mut self, id: CounterId, n: u64) {
+        self.counters[id.0].1 += n;
+    }
+
+    /// Current value of a counter.
+    pub fn counter_value(&self, id: CounterId) -> u64 {
+        self.counters[id.0].1
+    }
+
+    /// Set a gauge's current value (tracks the running max too).
+    /// Allocation-free.
+    #[inline]
+    pub fn set_gauge(&mut self, id: GaugeId, v: i64) {
+        let g = &mut self.gauges[id.0].1;
+        g.last = v;
+        if v > g.max {
+            g.max = v;
+        }
+    }
+
+    /// Record a value into a histogram. Allocation-free.
+    #[inline]
+    pub fn record(&mut self, id: HistId, v: u64) {
+        self.hists[id.0].1.record(v);
+    }
+
+    /// Shared access to a histogram (summaries, quantiles).
+    pub fn hist(&self, id: HistId) -> &Histogram {
+        &self.hists[id.0].1
+    }
+
+    /// Fold a sharded histogram (e.g. one lane's private instance) into
+    /// the named histogram. Call in **fixed lane order** so the merged
+    /// aggregate is deterministic by construction.
+    pub fn merge_histogram(&mut self, name: &'static str, shard: &Histogram) {
+        let id = self.histogram(name);
+        self.hists[id.0].1.merge_from(shard);
+    }
+
+    /// Snapshot as `burtorch.metrics.v1` JSON: one object with `schema`,
+    /// `counters` (name → value), `gauges` (name → `{last, max}`), and
+    /// `histograms` (name → histogram object), each section sorted by
+    /// name. Stable across runs up to the recorded values themselves.
+    pub fn to_json(&self) -> String {
+        let mut out = String::with_capacity(256);
+        out.push_str("{\"schema\":\"burtorch.metrics.v1\",\"counters\":{");
+        let mut counters: Vec<_> = self.counters.iter().collect();
+        counters.sort_by_key(|(n, _)| *n);
+        for (i, (name, v)) in counters.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("\"{}\":{}", crate::bench::json_escape(name), v));
+        }
+        out.push_str("},\"gauges\":{");
+        let mut gauges: Vec<_> = self.gauges.iter().collect();
+        gauges.sort_by_key(|(n, _)| *n);
+        for (i, (name, g)) in gauges.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "\"{}\":{{\"last\":{},\"max\":{}}}",
+                crate::bench::json_escape(name),
+                g.last,
+                g.max
+            ));
+        }
+        out.push_str("},\"histograms\":{");
+        let mut hists: Vec<_> = self.hists.iter().collect();
+        hists.sort_by_key(|(n, _)| *n);
+        for (i, (name, h)) in hists.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("\"{}\":", crate::bench::json_escape(name)));
+            h.append_json(&mut out);
+        }
+        out.push_str("}}");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registration_is_idempotent() {
+        let mut reg = Registry::new();
+        let a = reg.counter("x");
+        let b = reg.counter("x");
+        reg.add(a, 2);
+        reg.add(b, 3);
+        assert_eq!(reg.counter_value(a), 5);
+        let h1 = reg.histogram("h");
+        let h2 = reg.histogram("h");
+        reg.record(h1, 1);
+        reg.record(h2, 1);
+        assert_eq!(reg.hist(h1).count(), 2);
+    }
+
+    #[test]
+    fn gauge_tracks_last_and_max() {
+        let mut reg = Registry::new();
+        let g = reg.gauge("depth");
+        reg.set_gauge(g, 5);
+        reg.set_gauge(g, 2);
+        let json = reg.to_json();
+        assert!(json.contains("\"depth\":{\"last\":2,\"max\":5}"), "{json}");
+    }
+
+    #[test]
+    fn sections_sort_by_name() {
+        let mut reg = Registry::new();
+        reg.counter("b");
+        reg.counter("a");
+        let json = reg.to_json();
+        let ia = json.find("\"a\":").unwrap();
+        let ib = json.find("\"b\":").unwrap();
+        assert!(ia < ib);
+    }
+
+    #[test]
+    fn merge_histogram_folds_shards() {
+        let mut reg = Registry::new();
+        let mut shard_a = Histogram::new();
+        let mut shard_b = Histogram::new();
+        shard_a.record(10);
+        shard_b.record(20);
+        shard_b.record(30);
+        reg.merge_histogram("lat", &shard_a);
+        reg.merge_histogram("lat", &shard_b);
+        let id = reg.histogram("lat");
+        assert_eq!(reg.hist(id).count(), 3);
+        assert_eq!(reg.hist(id).max(), 30);
+    }
+}

@@ -1,0 +1,277 @@
+//! Chrome trace-event emission: scoped spans and instants that load
+//! directly into `chrome://tracing` / Perfetto.
+//!
+//! A [`Tracer`] buffers [complete events] (`"ph":"X"`, a name + start +
+//! duration) and instant events (`"ph":"i"`) against a fixed epoch, and
+//! serializes them with [`Tracer::to_json`] as a `{"traceEvents":[…]}`
+//! document. Timestamps are microseconds since the epoch with nanosecond
+//! fraction, the unit Chrome's trace viewer expects.
+//!
+//! Threading follows the same sharding discipline as the histograms:
+//! each lane/worker owns its **own** `Tracer` (constructed with the
+//! shared epoch via [`Tracer::with_epoch`] and that lane's `tid`), and
+//! the shards are merged into one document in fixed lane order at
+//! snapshot time ([`Tracer::merge`]). No locks, no atomics, nothing on a
+//! hot path but a clock read and a `Vec` push into a preallocated
+//! buffer.
+//!
+//! The event buffer is bounded ([`Tracer::MAX_EVENTS`]): a runaway loop
+//! drops events past the cap (counted in [`Tracer::dropped`]) instead of
+//! exhausting memory — tracing must never take down the run it observes.
+//!
+//! [complete events]:
+//!     https://docs.google.com/document/d/1CvAClvFfyA5R-PhYUmn5OOQtYMH4h6I0nSsKchNAySU
+
+use std::time::Instant;
+
+/// Clock capture for an open span: taken with [`Tracer::begin`] (a
+/// `&self` clock read, so it composes with closures that still hold the
+/// tracer mutably elsewhere) and closed with [`Tracer::end`].
+#[derive(Clone, Copy, Debug)]
+pub struct SpanStart(Instant);
+
+impl SpanStart {
+    /// Wrap an externally captured clock read — for call sites that take
+    /// one `Instant::now()` and feed both a histogram and a span.
+    pub fn at(t: Instant) -> SpanStart {
+        SpanStart(t)
+    }
+}
+
+#[derive(Clone, Debug)]
+struct TraceEvent {
+    name: &'static str,
+    cat: &'static str,
+    /// `b'X'` (complete) or `b'i'` (instant).
+    ph: u8,
+    ts_ns: u64,
+    dur_ns: u64,
+    tid: u32,
+}
+
+/// Buffered Chrome trace-event writer. See the module docs.
+#[derive(Clone, Debug)]
+pub struct Tracer {
+    epoch: Instant,
+    tid: u32,
+    events: Vec<TraceEvent>,
+    dropped: u64,
+}
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Tracer::new()
+    }
+}
+
+impl Tracer {
+    /// Hard cap on buffered events per tracer; pushes past it are
+    /// dropped and counted instead of growing without bound.
+    pub const MAX_EVENTS: usize = 1 << 20;
+
+    /// A tracer with its own epoch (`tid` 0).
+    pub fn new() -> Tracer {
+        Tracer::with_epoch(Instant::now(), 0)
+    }
+
+    /// A tracer shard against a shared `epoch`, tagged with `tid` (the
+    /// lane/worker index in the emitted events).
+    pub fn with_epoch(epoch: Instant, tid: u32) -> Tracer {
+        Tracer {
+            epoch,
+            tid,
+            events: Vec::with_capacity(1024),
+            dropped: 0,
+        }
+    }
+
+    /// The epoch all timestamps are relative to — hand this to
+    /// [`Tracer::with_epoch`] when building per-lane shards.
+    pub fn epoch(&self) -> Instant {
+        self.epoch
+    }
+
+    /// Number of buffered events.
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// No events buffered yet?
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Events dropped at the [`Tracer::MAX_EVENTS`] cap.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Nanoseconds from the epoch to `t` (0 if `t` predates the epoch).
+    #[inline]
+    fn ns_since_epoch(&self, t: Instant) -> u64 {
+        t.saturating_duration_since(self.epoch).as_nanos() as u64
+    }
+
+    /// Open a span: captures the clock, borrows nothing mutably.
+    #[inline]
+    pub fn begin(&self) -> SpanStart {
+        SpanStart(Instant::now())
+    }
+
+    /// Close a span opened with [`Tracer::begin`], emitting a complete
+    /// event from its start to now.
+    #[inline]
+    pub fn end(&mut self, name: &'static str, cat: &'static str, start: SpanStart) {
+        let ts = self.ns_since_epoch(start.0);
+        let dur = start.0.elapsed().as_nanos() as u64;
+        self.push(TraceEvent {
+            name,
+            cat,
+            ph: b'X',
+            ts_ns: ts,
+            dur_ns: dur,
+            tid: self.tid,
+        });
+    }
+
+    /// Emit a complete event with an externally measured placement —
+    /// for phases whose timing was captured elsewhere (e.g. the gradient
+    /// engine's compute/reduce split reported through `StepStats`).
+    pub fn complete_at(&mut self, name: &'static str, cat: &'static str, ts_ns: u64, dur_ns: u64) {
+        self.push(TraceEvent {
+            name,
+            cat,
+            ph: b'X',
+            ts_ns,
+            dur_ns,
+            tid: self.tid,
+        });
+    }
+
+    /// Nanosecond offset of `start` from the epoch — the `ts_ns` to pass
+    /// to [`Tracer::complete_at`] for events derived from that start.
+    pub fn offset_ns(&self, start: SpanStart) -> u64 {
+        self.ns_since_epoch(start.0)
+    }
+
+    /// Emit an instant event (a zero-duration marker: quarantines,
+    /// compactions, checkpoints).
+    pub fn instant(&mut self, name: &'static str, cat: &'static str) {
+        let ts = self.ns_since_epoch(Instant::now());
+        self.push(TraceEvent {
+            name,
+            cat,
+            ph: b'i',
+            ts_ns: ts,
+            dur_ns: 0,
+            tid: self.tid,
+        });
+    }
+
+    /// Run `f` inside a scoped span — the span closes (and the event is
+    /// emitted) when `f` returns, unwinding included on the happy path
+    /// of RAII-free code. Convenience over [`Tracer::begin`]/
+    /// [`Tracer::end`] for straight-line phases.
+    pub fn scoped<R>(&mut self, name: &'static str, cat: &'static str, f: impl FnOnce() -> R) -> R {
+        let start = self.begin();
+        let r = f();
+        self.end(name, cat, start);
+        r
+    }
+
+    /// Append another tracer's events (a lane shard) to this one,
+    /// keeping the shard's `tid` tags. Call in fixed lane order.
+    pub fn merge(&mut self, other: &Tracer) {
+        for ev in &other.events {
+            self.push(ev.clone());
+        }
+        self.dropped += other.dropped;
+    }
+
+    #[inline]
+    fn push(&mut self, ev: TraceEvent) {
+        if self.events.len() >= Self::MAX_EVENTS {
+            self.dropped += 1;
+            return;
+        }
+        self.events.push(ev);
+    }
+
+    /// Serialize as a Chrome trace-event JSON document:
+    /// `{"traceEvents":[…],"displayTimeUnit":"ms"}`. Complete events
+    /// carry `ts`/`dur` in microseconds (fractional, nanosecond
+    /// precision); instants use scope `"t"` (thread).
+    pub fn to_json(&self) -> String {
+        let mut out = String::with_capacity(64 + self.events.len() * 96);
+        out.push_str("{\"traceEvents\":[");
+        for (i, ev) in self.events.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let ts_us = ev.ts_ns / 1000;
+            let ts_frac = ev.ts_ns % 1000;
+            out.push_str(&format!(
+                "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"{}\",\"pid\":0,\"tid\":{},\"ts\":{}.{:03}",
+                crate::bench::json_escape(ev.name),
+                crate::bench::json_escape(ev.cat),
+                ev.ph as char,
+                ev.tid,
+                ts_us,
+                ts_frac
+            ));
+            match ev.ph {
+                b'X' => {
+                    let dur_us = ev.dur_ns / 1000;
+                    let dur_frac = ev.dur_ns % 1000;
+                    out.push_str(&format!(",\"dur\":{dur_us}.{dur_frac:03}"));
+                }
+                _ => out.push_str(",\"s\":\"t\""),
+            }
+            out.push('}');
+        }
+        out.push_str("]}");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_and_instants_serialize_as_trace_events() {
+        let mut tr = Tracer::new();
+        let v = tr.scoped("work", "test", || 41 + 1);
+        assert_eq!(v, 42);
+        tr.instant("marker", "test");
+        assert_eq!(tr.len(), 2);
+        let json = tr.to_json();
+        assert!(json.starts_with("{\"traceEvents\":["), "{json}");
+        assert!(json.ends_with("]}"), "{json}");
+        assert!(json.contains("\"name\":\"work\""), "{json}");
+        assert!(json.contains("\"ph\":\"X\""), "{json}");
+        assert!(json.contains("\"dur\":"), "{json}");
+        assert!(json.contains("\"ph\":\"i\""), "{json}");
+        assert!(json.contains("\"s\":\"t\""), "{json}");
+    }
+
+    #[test]
+    fn merge_appends_shards_with_their_tids() {
+        let mut main = Tracer::new();
+        let mut lane = Tracer::with_epoch(main.epoch(), 3);
+        lane.instant("compaction", "serve");
+        main.merge(&lane);
+        assert_eq!(main.len(), 1);
+        assert!(main.to_json().contains("\"tid\":3"));
+    }
+
+    #[test]
+    fn event_cap_drops_instead_of_growing() {
+        let mut tr = Tracer::new();
+        for _ in 0..Tracer::MAX_EVENTS + 5 {
+            tr.complete_at("e", "t", 0, 0);
+        }
+        assert_eq!(tr.len(), Tracer::MAX_EVENTS);
+        assert_eq!(tr.dropped(), 5);
+    }
+}

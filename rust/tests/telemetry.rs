@@ -1,0 +1,643 @@
+//! The telemetry layer's headline contracts (ISSUE 10 acceptance
+//! criteria):
+//!
+//! 1. **Bitwise-inert when on.** A fully instrumented run (metrics +
+//!    trace) is bitwise identical to an uninstrumented one — training
+//!    across threads {1, 2, 4} × exec {eager, replay}, serving across
+//!    lanes {1, 2, 4} × decode {full, incremental}.
+//! 2. **Zero-cost when off.** The disabled path is an `Option` that is
+//!    `None`: no instruments exist, and the record seam performs zero
+//!    allocations after warmup (counted by a real `#[global_allocator]`
+//!    hook, per thread so parallel tests cannot pollute the window).
+//!    The *enabled* record paths are allocation-free too — construction
+//!    preallocates, `record()` never touches the heap.
+//! 3. **Deterministic aggregates.** Merged counter values are identical
+//!    across lane counts, and emitted `--metrics-json` / `--trace`
+//!    documents are well-formed JSON (checked by a real parser below),
+//!    the trace in Chrome trace-event shape.
+//!
+//! Plus the `Histogram` edge-case coverage (satellite): zero/negative
+//! clamp, overflow bucket, merge order-independence, quantile-within-
+//! one-bucket.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::collections::BTreeMap;
+
+use burtorch::coordinator::{ExecMode, Trainer, TrainerOptions};
+use burtorch::data::names_dataset;
+use burtorch::nn::{CharMlp, CharMlpConfig, Gpt, GptConfig};
+use burtorch::rng::Rng;
+use burtorch::serve::{DecodeMode, Request, ServeEngine, ServeOptions, ServeStats};
+use burtorch::tape::Tape;
+use burtorch::telemetry::{Histogram, Registry, TelemetryConfig, Tracer};
+
+// ---------------------------------------------------------------------------
+// Counting allocator: per-thread allocation counter over the system
+// allocator. Thread-local so concurrently running tests in this binary
+// cannot pollute another test's measurement window.
+// ---------------------------------------------------------------------------
+
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+struct CountingAlloc;
+
+// SAFETY: defers all allocation to `System`; only bumps a thread-local
+// counter (never allocating) on the way through.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static COUNTING_ALLOC: CountingAlloc = CountingAlloc;
+
+/// Allocations performed by *this thread* so far.
+fn thread_allocs() -> u64 {
+    ALLOCS.with(|c| c.get())
+}
+
+// ---------------------------------------------------------------------------
+// A real (minimal) JSON parser: validates the full grammar so "is valid
+// JSON" means parsed, not pattern-matched. No serde — the test proves
+// the hand-rolled emitters produce documents any consumer can load.
+// ---------------------------------------------------------------------------
+
+struct JsonParser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> JsonParser<'a> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn eat(&mut self, c: u8) -> Result<(), String> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(format!("expected '{}' at byte {}", c as char, self.i))
+        }
+    }
+
+    fn value(&mut self) -> Result<(), String> {
+        self.ws();
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => self.string(),
+            Some(b't') => self.literal(b"true"),
+            Some(b'f') => self.literal(b"false"),
+            Some(b'n') => self.literal(b"null"),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            other => Err(format!("unexpected {other:?} at byte {}", self.i)),
+        }
+    }
+
+    fn literal(&mut self, lit: &[u8]) -> Result<(), String> {
+        if self.b[self.i..].starts_with(lit) {
+            self.i += lit.len();
+            Ok(())
+        } else {
+            Err(format!("bad literal at byte {}", self.i))
+        }
+    }
+
+    fn object(&mut self) -> Result<(), String> {
+        self.eat(b'{')?;
+        self.ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(());
+        }
+        loop {
+            self.ws();
+            self.string()?;
+            self.ws();
+            self.eat(b':')?;
+            self.value()?;
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(());
+                }
+                other => return Err(format!("expected ',' or '}}', got {other:?}")),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<(), String> {
+        self.eat(b'[')?;
+        self.ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(());
+        }
+        loop {
+            self.value()?;
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(());
+                }
+                other => return Err(format!("expected ',' or ']', got {other:?}")),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<(), String> {
+        self.eat(b'"')?;
+        while let Some(c) = self.peek() {
+            self.i += 1;
+            match c {
+                b'"' => return Ok(()),
+                b'\\' => {
+                    // Escape: consume the escaped byte (incl. \uXXXX).
+                    match self.peek() {
+                        Some(b'u') => {
+                            self.i += 1;
+                            for _ in 0..4 {
+                                let h = self.peek().ok_or("short \\u escape")?;
+                                if !h.is_ascii_hexdigit() {
+                                    return Err(format!("bad \\u escape at byte {}", self.i));
+                                }
+                                self.i += 1;
+                            }
+                        }
+                        Some(_) => self.i += 1,
+                        None => return Err("dangling escape".into()),
+                    }
+                }
+                c if c < 0x20 => return Err(format!("raw control byte {c:#x} in string")),
+                _ => {}
+            }
+        }
+        Err("unterminated string".into())
+    }
+
+    fn number(&mut self) -> Result<(), String> {
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
+        let digits = |p: &mut Self| -> Result<(), String> {
+            let start = p.i;
+            while p.peek().is_some_and(|c| c.is_ascii_digit()) {
+                p.i += 1;
+            }
+            if p.i == start {
+                Err(format!("expected digits at byte {}", p.i))
+            } else {
+                Ok(())
+            }
+        };
+        digits(self)?;
+        if self.peek() == Some(b'.') {
+            self.i += 1;
+            digits(self)?;
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.i += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.i += 1;
+            }
+            digits(self)?;
+        }
+        Ok(())
+    }
+}
+
+/// Parse `s` as one complete JSON document; panic (with context) if the
+/// grammar rejects it or bytes trail the document.
+fn assert_valid_json(s: &str, what: &str) {
+    let mut p = JsonParser { b: s.as_bytes(), i: 0 };
+    if let Err(e) = p.value() {
+        panic!("{what}: invalid JSON: {e}\n{s}");
+    }
+    p.ws();
+    assert_eq!(p.i, s.len(), "{what}: trailing bytes after JSON document");
+}
+
+// ---------------------------------------------------------------------------
+// Shared harnesses
+// ---------------------------------------------------------------------------
+
+fn tiny_cfg() -> GptConfig {
+    GptConfig {
+        n_layer: 1,
+        d_model: 8,
+        n_head: 2,
+        ..GptConfig::paper()
+    }
+}
+
+fn tiny_gpt(seed: u64) -> (Tape<f32>, Gpt) {
+    let mut tape = Tape::<f32>::new();
+    let mut rng = Rng::new(seed);
+    let model = Gpt::new(&mut tape, tiny_cfg(), &mut rng);
+    (tape, model)
+}
+
+fn mixed_requests() -> Vec<(u64, Vec<u32>, usize, f64, u64)> {
+    vec![
+        (1, vec![1, 2, 3], 10, 0.8, 101),
+        (2, vec![7], 12, 1.0, 202),
+        (3, vec![4, 5, 6, 7, 8, 9, 10, 11, 12], 8, 0.6, 303),
+        (4, vec![2, 3], 10, 0.9, 404),
+        (5, vec![1, 1, 1, 1, 1], 6, 1.2, 505),
+    ]
+}
+
+/// Serve the mixed workload under `opts`; return per-session outputs,
+/// stats, and the (optional) telemetry documents.
+#[allow(clippy::type_complexity)]
+fn serve_all(
+    opts: ServeOptions,
+) -> (
+    BTreeMap<u64, Vec<u32>>,
+    ServeStats,
+    Option<String>,
+    Option<String>,
+) {
+    let (tape, model) = tiny_gpt(2024);
+    let mut engine = ServeEngine::new(tape, model, opts);
+    for (id, prompt, n, temp, seed) in mixed_requests() {
+        engine.submit(Request {
+            id,
+            prompt,
+            max_new_tokens: n,
+            temperature: temp,
+            seed,
+            deadline_ms: None,
+        });
+    }
+    let done = engine.run_to_completion();
+    let outputs = done.into_iter().map(|s| (s.id(), s.output().to_vec())).collect();
+    (outputs, engine.stats(), engine.metrics_json(), engine.trace_json())
+}
+
+/// Train the tiny char MLP; return `(loss-curve bits, parameter bits)`
+/// — the full trajectory fingerprint a bitwise-inert claim must match.
+fn train_fingerprint(
+    threads: usize,
+    exec: ExecMode,
+    telemetry: TelemetryConfig,
+) -> (Vec<(usize, u64)>, Vec<u32>) {
+    let ds = names_dataset(120, 16, 9);
+    let mut tape = Tape::<f32>::new();
+    let mut rng = Rng::new(8);
+    let model = CharMlp::new(&mut tape, CharMlpConfig::paper(4), &mut rng);
+    let trainer = Trainer::new(TrainerOptions {
+        steps: 6,
+        batch: 8,
+        lr: 0.2,
+        log_every: 1,
+        threads,
+        exec,
+        telemetry,
+        ..Default::default()
+    });
+    let report = trainer.train_char_mlp(&mut tape, &model, &ds.examples);
+    let curve = report
+        .loss_curve
+        .iter()
+        .map(|&(s, l)| (s, l.to_bits()))
+        .collect();
+    let params = model
+        .params
+        .iter()
+        .map(|p| tape.value(p).to_bits())
+        .collect();
+    (curve, params)
+}
+
+// ---------------------------------------------------------------------------
+// 1. Bitwise-inert when on
+// ---------------------------------------------------------------------------
+
+#[test]
+fn instrumented_training_is_bitwise_identical_across_threads_and_exec() {
+    let dir = std::env::temp_dir().join("burtorch_telemetry_train_matrix");
+    std::fs::create_dir_all(&dir).unwrap();
+    for threads in [1usize, 2, 4] {
+        for exec in [ExecMode::Eager, ExecMode::Replay] {
+            let plain = train_fingerprint(threads, exec, TelemetryConfig::default());
+            let metrics = dir.join(format!("m_{threads}_{exec}.json"));
+            let trace = dir.join(format!("t_{threads}_{exec}.json"));
+            let on = TelemetryConfig {
+                metrics_json: Some(metrics.to_string_lossy().into_owned()),
+                trace: Some(trace.to_string_lossy().into_owned()),
+            };
+            let instrumented = train_fingerprint(threads, exec, on);
+            assert_eq!(
+                plain, instrumented,
+                "threads={threads} exec={exec}: telemetry changed the trajectory"
+            );
+            // The outputs landed and hold real per-step data.
+            let m = std::fs::read_to_string(&metrics).unwrap();
+            assert_valid_json(&m, "train metrics");
+            assert!(m.contains("\"train.steps\":6"), "{m}");
+            let t = std::fs::read_to_string(&trace).unwrap();
+            assert_valid_json(&t, "train trace");
+            assert!(t.contains("\"name\":\"train.step\""), "{t}");
+        }
+    }
+}
+
+#[test]
+fn instrumented_serving_is_bitwise_identical_across_lanes_and_decode() {
+    for decode in [DecodeMode::Full, DecodeMode::Incremental] {
+        for lanes in [1usize, 2, 4] {
+            let base = ServeOptions {
+                lanes,
+                decode,
+                ..ServeOptions::default()
+            };
+            let (plain, _, no_metrics, no_trace) = serve_all(base);
+            assert!(no_metrics.is_none() && no_trace.is_none());
+            let (instrumented, stats, metrics, trace) = serve_all(ServeOptions {
+                metrics: true,
+                trace: true,
+                ..base
+            });
+            assert_eq!(
+                plain, instrumented,
+                "lanes={lanes} decode={decode:?}: telemetry changed the tokens"
+            );
+            // The latency shards merged across every lane: one sample per
+            // generated token, TTFT once per completed session.
+            let lat = stats.token_latency.expect("metrics on");
+            assert_eq!(lat.count, stats.tokens, "lanes={lanes} decode={decode:?}");
+            assert_eq!(
+                stats.ttft.expect("metrics on").count,
+                stats.completed,
+                "lanes={lanes} decode={decode:?}"
+            );
+            assert!(metrics.is_some() && trace.is_some());
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2. Zero-cost when off
+// ---------------------------------------------------------------------------
+
+#[test]
+fn disabled_path_performs_zero_allocations_after_warmup() {
+    // The disabled path *is* `Option::<_>::None` — the exact shape the
+    // engine's per-lane shard and the trainer's instruments take when no
+    // output is configured. Drive the seam a steady-state loop would.
+    let disabled_hist: Option<Histogram> = None;
+    let disabled_reg: Option<Registry> = None;
+    let disabled_tracer: Option<Tracer> = None;
+
+    // Warmup: touch the loop once so any lazy thread state exists.
+    let mut sink = 0u64;
+    if let Some(h) = &disabled_hist {
+        sink += h.count();
+    }
+
+    let before = thread_allocs();
+    for i in 0..100_000u64 {
+        if let Some(_h) = &disabled_hist {
+            sink += i;
+        }
+        if let Some(_r) = &disabled_reg {
+            sink += 1;
+        }
+        if let Some(_t) = &disabled_tracer {
+            sink += 1;
+        }
+    }
+    let window = thread_allocs() - before;
+    assert_eq!(window, 0, "disabled telemetry allocated (sink {sink})");
+
+    // And at the engine seam: telemetry off constructs nothing — there
+    // is no registry, no tracer, no shard to even consult.
+    let (_, stats, metrics, trace) = serve_all(ServeOptions::default());
+    assert!(metrics.is_none(), "metrics off must emit nothing");
+    assert!(trace.is_none(), "trace off must emit nothing");
+    assert!(stats.token_latency.is_none() && stats.ttft.is_none());
+    assert!(stats.queue_wait.is_none() && stats.batch_size.is_none());
+}
+
+#[test]
+fn enabled_record_paths_are_allocation_free_after_warmup() {
+    // Construction allocates (preallocated buckets, bounded buffers) —
+    // that is the warmup. After it, record()/add()/set_gauge()/span
+    // pushes within the trace buffer's capacity must never touch the
+    // heap: this is the "allocation-free record() on the hot path"
+    // guarantee the per-token loop depends on.
+    let mut hist = Histogram::new();
+    let mut shard = Histogram::new();
+    let mut reg = Registry::new();
+    let c = reg.counter("hot.counter");
+    let g = reg.gauge("hot.gauge");
+    let h = reg.histogram("hot.hist");
+    let mut tracer = Tracer::new();
+    // Warmup records so every branch has run once.
+    hist.record(1);
+    shard.record(2);
+    reg.add(c, 1);
+    reg.set_gauge(g, 1);
+    reg.record(h, 1);
+    let span = tracer.begin();
+    tracer.end("warm", "test", span);
+
+    let before = thread_allocs();
+    for i in 0..50_000u64 {
+        hist.record(i);
+        shard.record(i * 3);
+    }
+    hist.merge_from(&shard);
+    for i in 0..1_000u64 {
+        reg.add(c, 1);
+        reg.set_gauge(g, i as i64);
+        reg.record(h, i);
+    }
+    // 500 events stay well inside the tracer's preallocated buffer.
+    for _ in 0..250 {
+        let span = tracer.begin();
+        tracer.end("hot.span", "test", span);
+        tracer.instant("hot.instant", "test");
+    }
+    let window = thread_allocs() - before;
+    assert_eq!(window, 0, "enabled record paths must not allocate");
+    assert_eq!(hist.count(), 100_002);
+    assert_eq!(tracer.len(), 501);
+}
+
+// ---------------------------------------------------------------------------
+// 3. Deterministic aggregates + valid emitted documents
+// ---------------------------------------------------------------------------
+
+#[test]
+fn merged_counters_are_deterministic_across_lane_counts() {
+    let mut reference: Option<(u64, u64, Vec<String>)> = None;
+    for lanes in [1usize, 2, 4] {
+        let (_, stats, metrics, _) = serve_all(ServeOptions {
+            lanes,
+            metrics: true,
+            ..ServeOptions::default()
+        });
+        let metrics = metrics.expect("metrics on");
+        // Counter *values* must not depend on how work was sharded: pull
+        // the count-valued facts out of the snapshot and compare.
+        let count_lines: Vec<String> = [
+            format!("\"serve.tokens\":{}", stats.tokens),
+            format!("\"serve.completed\":{}", stats.completed),
+            format!("\"serve.shed\":{}", stats.shed),
+            format!("\"serve.quarantines\":{}", stats.quarantines),
+        ]
+        .into_iter()
+        .collect();
+        for line in &count_lines {
+            assert!(metrics.contains(line.as_str()), "lanes={lanes}: missing {line} in {metrics}");
+        }
+        let lat = stats.token_latency.expect("metrics on");
+        match &reference {
+            None => reference = Some((stats.tokens, lat.count, count_lines)),
+            Some((tokens, lat_count, lines)) => {
+                assert_eq!(*tokens, stats.tokens, "lanes={lanes}: token total diverged");
+                assert_eq!(*lat_count, lat.count, "lanes={lanes}: merged histogram count diverged");
+                assert_eq!(lines, &count_lines, "lanes={lanes}: counter values diverged");
+            }
+        }
+    }
+}
+
+#[test]
+fn emitted_documents_are_valid_json_and_chrome_trace_shaped() {
+    let (_, stats, metrics, trace) = serve_all(ServeOptions {
+        lanes: 2,
+        metrics: true,
+        trace: true,
+        ..ServeOptions::default()
+    });
+    let metrics = metrics.expect("metrics on");
+    assert_valid_json(&metrics, "serve metrics");
+    assert!(metrics.starts_with("{\"schema\":\"burtorch.metrics.v1\""), "{metrics}");
+    for name in [
+        "\"serve.tokens\":",
+        "\"serve.steps\":",
+        "\"serve.queue.wait.ns\":",
+        "\"serve.token.ns\":",
+        "\"serve.ttft.ns\":",
+        "\"serve.batch.size\":",
+        "\"serve.cache.hits\":",
+        "\"serve.cache.misses\":",
+    ] {
+        assert!(metrics.contains(name), "metrics missing {name}: {metrics}");
+    }
+
+    let trace = trace.expect("trace on");
+    assert_valid_json(&trace, "serve trace");
+    assert!(trace.starts_with("{\"traceEvents\":["), "{trace}");
+    // Chrome trace-event shape: every event carries the required keys,
+    // spans are complete events with a duration, markers are instants.
+    assert!(trace.contains("\"ph\":\"X\""), "{trace}");
+    assert!(trace.contains("\"pid\":0"), "{trace}");
+    assert!(trace.contains("\"tid\":"), "{trace}");
+    assert!(trace.contains("\"dur\":"), "{trace}");
+    assert!(trace.contains("\"name\":\"serve.tick\""), "{trace}");
+    // Every generated token left a span — record (first visit of a
+    // shape) or replay (every later one).
+    let spans = trace.matches("\"name\":\"serve.token.").count() as u64;
+    assert_eq!(spans, stats.tokens, "one token span per generated token");
+}
+
+// ---------------------------------------------------------------------------
+// 4. Histogram edge cases (satellite)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn histogram_clamps_zero_negative_and_overflow_durations() {
+    let mut h = Histogram::new();
+    // Zero, negative, NaN, and -inf all clamp to the first bucket.
+    h.record(0);
+    h.record_secs(-1.5);
+    h.record_secs(0.0);
+    h.record_secs(f64::NAN);
+    h.record_secs(f64::NEG_INFINITY);
+    let buckets: Vec<(u64, u64)> = h.buckets().collect();
+    assert_eq!(buckets, vec![(0, 5)], "all clamped values share the zero bucket");
+    assert_eq!((h.min(), h.max()), (0, 0));
+
+    // Overflow durations land in the last (unbounded) bucket.
+    h.record(u64::MAX);
+    h.record_secs(f64::INFINITY.min(1e300)); // finite but ≫ u64::MAX ns
+    let last = h.buckets().last().unwrap();
+    assert_eq!(last.0, u64::MAX, "overflow bucket upper edge");
+    assert_eq!(last.1, 2, "both overflow durations counted");
+    assert_eq!(h.count(), 7);
+}
+
+#[test]
+fn histogram_merge_is_order_independent_in_counts_fixed_order_in_iteration() {
+    let mut a = Histogram::new();
+    let mut b = Histogram::new();
+    for v in [1u64, 5, 9, 1000, 65_536] {
+        a.record(v);
+    }
+    for v in [0u64, 3, 120, 1_000_000, u64::MAX] {
+        b.record(v);
+    }
+    let mut ab = Histogram::new();
+    ab.merge_from(&a);
+    ab.merge_from(&b);
+    let mut ba = Histogram::new();
+    ba.merge_from(&b);
+    ba.merge_from(&a);
+    // Counts, extremes, and every bucket are merge-order independent…
+    assert_eq!(ab.summary(), ba.summary());
+    let buckets_ab: Vec<(u64, u64)> = ab.buckets().collect();
+    let buckets_ba: Vec<(u64, u64)> = ba.buckets().collect();
+    assert_eq!(buckets_ab, buckets_ba);
+    // …and iteration order is fixed ascending regardless of insertion.
+    assert!(buckets_ab.windows(2).all(|w| w[0].0 < w[1].0));
+}
+
+#[test]
+fn histogram_quantiles_are_within_one_bucket_of_exact() {
+    let mut h = Histogram::new();
+    for v in 1..=1000u64 {
+        h.record(v);
+    }
+    for q in [0.01, 0.25, 0.50, 0.90, 0.99, 1.0] {
+        let exact = ((q * 1000.0).ceil() as u64).clamp(1, 1000);
+        let est = h.quantile(q);
+        // The estimate is the upper edge of the exact value's bucket,
+        // clamped to the max: never below the exact order statistic,
+        // never more than one power-of-two bucket above it.
+        assert!(
+            est >= exact && est < exact * 2,
+            "q={q}: estimate {est} not within one bucket of exact {exact}"
+        );
+    }
+}
